@@ -1,0 +1,61 @@
+//! Ablation — bin-packing heuristic of Algorithm 1 (§II.E.1).
+//!
+//! The paper argues Worst-Fit balances workload across homogeneous devices
+//! while First/Best/Next-Fit "attempt to fill the first devices and keep
+//! the last devices empty". This bench packs IMN12 / CIF36 with each
+//! heuristic and compares device balance and the throughput of the
+//! resulting allocation.
+//!
+//! ```bash
+//! cargo bench --bench ablation_fit
+//! ```
+
+#[path = "common/mod.rs"]
+mod common;
+
+use ensemble_serve::alloc::worstfit::{pack, FitHeuristic};
+use ensemble_serve::benchkit::harness::Table;
+use ensemble_serve::device::DeviceSet;
+use ensemble_serve::model::{ensemble, EnsembleId};
+
+fn main() {
+    common::init_logging();
+    println!("=== ablation: packing heuristic of Algorithm 1 ===\n");
+
+    for (id, gpus) in [(EnsembleId::Imn12, 6), (EnsembleId::Imn12, 8),
+                       (EnsembleId::Cif36, 6), (EnsembleId::Cif36, 8)] {
+        let e = ensemble(id);
+        let devices = DeviceSet::hgx(gpus);
+        println!("--- {} on {} GPUs (+1 CPU) ---", id.name(), gpus);
+        let mut t = Table::new(vec![
+            "heuristic", "fits", "devices used", "max/device", "img/s (engine)",
+        ]);
+        for h in FitHeuristic::ALL {
+            match pack(&e, &devices, 8, h) {
+                Err(_) => t.row(vec![h.name().into(), "no".to_string(),
+                                     "-".into(), "-".into(), "-".into()]),
+                Ok(a) => {
+                    let used = (0..devices.len())
+                        .filter(|&d| !a.device_workers(d).is_empty())
+                        .count();
+                    let max_load = (0..devices.len())
+                        .map(|d| a.device_workers(d).len())
+                        .max()
+                        .unwrap_or(0);
+                    let s = common::measure_engine(&a, &e, gpus);
+                    t.row(vec![
+                        h.name().into(),
+                        "yes".to_string(),
+                        used.to_string(),
+                        max_load.to_string(),
+                        format!("{s:.0}"),
+                    ]);
+                }
+            }
+        }
+        t.print();
+        println!();
+    }
+    println!("(expected shape: worst-fit spreads over more devices with lower max \
+              load and at least as good throughput)");
+}

@@ -1,0 +1,119 @@
+//! Ablation — the decision space (equations 1 and 2) and the fidelity of
+//! the analytic bench used inside the greedy loop.
+//!
+//! 1. prints the eq. 1 / eq. 2 counts for the paper's example (8 DNNs,
+//!    4 GPUs + 1 CPU: ~1.3e31 matrices, 232–240 neighbors);
+//! 2. compares the analytic throughput estimator against the real
+//!    engine-in-the-loop bench over a sample of random valid matrices —
+//!    the greedy only needs the *ranking* to agree;
+//! 3. sweeps `max_neighs` to show the speed/quality trade-off.
+//!
+//! ```bash
+//! cargo bench --bench ablation_neighbors
+//! ```
+
+#[path = "common/mod.rs"]
+mod common;
+
+use ensemble_serve::alloc::greedy::GreedyConfig;
+use ensemble_serve::alloc::neighbors::{total_matrices, total_neighs_upper};
+use ensemble_serve::alloc::worst_fit_decreasing;
+use ensemble_serve::alloc::BATCH_VALUES;
+use ensemble_serve::alloc::matrix::AllocationMatrix;
+use ensemble_serve::benchkit::harness::Table;
+use ensemble_serve::device::DeviceSet;
+use ensemble_serve::model::{ensemble, EnsembleId};
+use ensemble_serve::optimizer::analytic::estimate_throughput;
+use ensemble_serve::util::prng::Prng;
+
+fn main() {
+    common::init_logging();
+
+    // --- (1) the combinatorics of §II.E.2
+    println!("=== decision space (equations 1 and 2) ===\n");
+    let mut t = Table::new(vec!["models", "devices", "total matrices", "neighbors <="]);
+    for (m, d) in [(8usize, 5usize), (4, 5), (12, 17), (36, 17)] {
+        t.row(vec![
+            m.to_string(),
+            d.to_string(),
+            format!("{:.1e}", total_matrices(d, m, BATCH_VALUES.len())),
+            total_neighs_upper(d, m, BATCH_VALUES.len()).to_string(),
+        ]);
+    }
+    t.print();
+    println!("(paper example: 8 DNNs, 4 GPUs + 1 CPU -> ~1.3e31 matrices, 232-240 neighbors)\n");
+
+    // --- (2) analytic estimator vs engine bench: rank agreement
+    println!("=== analytic bench vs engine bench (rank fidelity) ===\n");
+    let e = ensemble(EnsembleId::Imn4);
+    let gpus = 4;
+    let devices = DeviceSet::hgx(gpus);
+    let samples = if common::fast_mode() { 6 } else { 14 };
+    let mut rng = Prng::new(99);
+    let mut pairs: Vec<(f64, f64)> = Vec::new();
+
+    let base = worst_fit_decreasing(&e, &devices, 8).unwrap();
+    let mut candidates: Vec<AllocationMatrix> = vec![base.clone()];
+    while candidates.len() < samples {
+        // random single-element perturbations of the WFD matrix
+        let mut a = candidates[rng.range(0, candidates.len())].clone();
+        let d = rng.range(0, a.n_devices());
+        let m = rng.range(0, a.n_models());
+        let b = *rng.choice(&BATCH_VALUES);
+        a.set(d, m, b);
+        if a.all_models_placed() && estimate_throughput(&a, &e, &devices) > 0.0 {
+            candidates.push(a);
+        }
+    }
+    for a in &candidates {
+        let est = estimate_throughput(a, &e, &devices);
+        let eng = common::measure_engine(a, &e, gpus);
+        pairs.push((est, eng));
+    }
+    let mut t = Table::new(vec!["matrix", "analytic img/s", "engine img/s", "ratio"]);
+    for (i, (est, eng)) in pairs.iter().enumerate() {
+        t.row(vec![
+            i.to_string(),
+            format!("{est:.0}"),
+            format!("{eng:.0}"),
+            format!("{:.2}", eng / est.max(1e-9)),
+        ]);
+    }
+    t.print();
+    println!("rank correlation (Spearman): {:.3}\n", spearman(&pairs));
+
+    // --- (3) max_neighs sweep
+    println!("=== max_neighs sweep (IMN12 on 8 GPUs, analytic objective) ===\n");
+    let e12 = ensemble(EnsembleId::Imn12);
+    let d8 = DeviceSet::hgx(8);
+    let mut t = Table::new(vec!["max_neighs", "bench evals", "final img/s (analytic)"]);
+    let budgets: &[usize] = if common::fast_mode() { &[10, 50] } else { &[10, 25, 50, 100, 200] };
+    for &mn in budgets {
+        let cfg = GreedyConfig { max_neighs: mn, max_iter: 10, seed: 5, ..Default::default() };
+        let (_, rep) = common::optimize_analytic(&e12, &d8, &cfg).expect("fits");
+        t.row(vec![
+            mn.to_string(),
+            rep.bench_count.to_string(),
+            format!("{:.0}", rep.best_speed),
+        ]);
+    }
+    t.print();
+    println!("\n(more neighbors per iteration -> better optima at linear bench cost)");
+}
+
+fn spearman(pairs: &[(f64, f64)]) -> f64 {
+    let n = pairs.len();
+    let rank = |vals: Vec<f64>| -> Vec<f64> {
+        let mut idx: Vec<usize> = (0..vals.len()).collect();
+        idx.sort_by(|&a, &b| vals[a].partial_cmp(&vals[b]).unwrap());
+        let mut r = vec![0.0; vals.len()];
+        for (rank_pos, &i) in idx.iter().enumerate() {
+            r[i] = rank_pos as f64;
+        }
+        r
+    };
+    let ra = rank(pairs.iter().map(|p| p.0).collect());
+    let rb = rank(pairs.iter().map(|p| p.1).collect());
+    let d2: f64 = ra.iter().zip(&rb).map(|(a, b)| (a - b).powi(2)).sum();
+    1.0 - 6.0 * d2 / (n as f64 * (n as f64 * n as f64 - 1.0))
+}

@@ -1,0 +1,76 @@
+//! Ablation — segment size (§III: "we evaluate multiple segment sizes and
+//! observe that smaller values reduce the granularity of the workload and
+//! improve its distribution between processes"; the paper fixes N = 128
+//! and notes it "should generally be >= the maximum batch size").
+//!
+//! ```bash
+//! cargo bench --bench ablation_segment
+//! ```
+
+#[path = "common/mod.rs"]
+mod common;
+
+use ensemble_serve::alloc::matrix::AllocationMatrix;
+use ensemble_serve::benchkit::harness::Table;
+use ensemble_serve::benchkit::{bench, BenchOptions};
+use ensemble_serve::device::DeviceSet;
+use ensemble_serve::engine::EngineOptions;
+use ensemble_serve::exec::sim::SimExecutor;
+use ensemble_serve::model::{ensemble, EnsembleId};
+
+fn main() {
+    common::init_logging();
+    let e = ensemble(EnsembleId::Imn1);
+    let gpus = 4;
+    // ResNet152 data-parallel over 4 GPUs at batch 64: segment size governs
+    // how evenly the 4 workers share the calibration workload
+    let mut a = AllocationMatrix::zeroed(DeviceSet::hgx(gpus).len(), e.len());
+    for g in 0..gpus {
+        a.set(g, 0, 64);
+    }
+
+    println!("=== ablation: segment size N (IMN1 x4 data-parallel workers) ===\n");
+    let sizes: &[usize] = if common::fast_mode() {
+        &[64, 128, 512]
+    } else {
+        &[32, 64, 128, 256, 512, 1024]
+    };
+
+    let results: Vec<(usize, f64)> = sizes
+        .iter()
+        .map(|&n| {
+            let opts = BenchOptions {
+                nb_images: 4096,
+                warmup: 1,
+                repeats: 1,
+                time_scale: common::TIME_SCALE,
+                engine: EngineOptions { segment_size: n, ..EngineOptions::default() },
+            };
+            let s = bench(
+                &a,
+                &e,
+                SimExecutor::new(DeviceSet::hgx(gpus), common::TIME_SCALE),
+                &opts,
+            );
+            (n, s)
+        })
+        .collect();
+
+    let base = results
+        .iter()
+        .find(|(n, _)| *n == 128)
+        .map(|(_, s)| *s)
+        .unwrap_or_else(|| results[0].1);
+
+    let mut t = Table::new(vec!["segment", "img/s", "vs N=128"]);
+    for (n, s) in &results {
+        t.row(vec![
+            n.to_string(),
+            format!("{s:.0}"),
+            format!("{:+.1} %", 100.0 * (s / base - 1.0)),
+        ]);
+    }
+    t.print();
+    println!("\n(expected shape: large segments starve data-parallel workers at the \
+              tail; tiny segments pay per-message overhead. Paper default N=128)");
+}

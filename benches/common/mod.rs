@@ -1,0 +1,113 @@
+//! Shared helpers for the paper-reproduction bench targets.
+//!
+//! Methodology (see DESIGN.md experiment index):
+//! * **Algorithm 2 exploration** runs against the *analytic* throughput
+//!   estimator (`optimizer::analytic`) — milliseconds per evaluation, so
+//!   the paper's full budget (max_neighs=100 × max_iter=10) is practical
+//!   on this host. The paper spent ~40 s/eval on real hardware.
+//! * **Reported throughputs** re-measure the chosen matrices on the real
+//!   threaded engine over the calibrated V100 simulator
+//!   (`benchkit::bench`, time scale [`TIME_SCALE`]), so queues, workers
+//!   and the accumulator are all on the measured path.
+//! * `ES_BENCH_FAST=1` shrinks budgets for smoke runs.
+
+#![allow(dead_code)]
+
+use std::sync::Arc;
+
+use ensemble_serve::alloc::greedy::{bounded_greedy, GreedyConfig, GreedyReport};
+use ensemble_serve::alloc::matrix::AllocationMatrix;
+use ensemble_serve::alloc::worst_fit_decreasing;
+use ensemble_serve::benchkit::{bench, BenchOptions};
+use ensemble_serve::device::DeviceSet;
+use ensemble_serve::engine::EngineOptions;
+use ensemble_serve::exec::sim::SimExecutor;
+use ensemble_serve::model::Ensemble;
+use ensemble_serve::optimizer::analytic::estimate_throughput;
+
+/// Sim time compression for engine measurements. 16x keeps even batch-8
+/// predict calls (>= 3 ms scaled) far above this 1-core host's per-call
+/// thread-handoff overhead (~0.3 ms), so measured throughputs track the
+/// paper-scale model within a few percent.
+pub const TIME_SCALE: f64 = 16.0;
+
+pub fn fast_mode() -> bool {
+    std::env::var("ES_BENCH_FAST").map(|v| v == "1").unwrap_or(false)
+}
+
+pub fn init_logging() {
+    if std::env::var("ES_LOG").is_err() {
+        std::env::set_var("ES_LOG", "error");
+    }
+    ensemble_serve::util::logging::init();
+}
+
+/// Paper greedy budget (shrunk under ES_BENCH_FAST).
+pub fn greedy_cfg(seed: u64) -> GreedyConfig {
+    if fast_mode() {
+        GreedyConfig { max_iter: 3, max_neighs: 20, seed, ..Default::default() }
+    } else {
+        GreedyConfig { max_iter: 10, max_neighs: 100, seed, ..Default::default() }
+    }
+}
+
+/// Algorithm 1 + Algorithm 2 (analytic-backed), as the paper's A1/A2.
+/// Returns None when Algorithm 1 cannot fit the ensemble (Table I's `-`).
+pub fn optimize_analytic(
+    ensemble: &Ensemble,
+    devices: &DeviceSet,
+    cfg: &GreedyConfig,
+) -> Option<(AllocationMatrix, GreedyReport)> {
+    let a1 = worst_fit_decreasing(ensemble, devices, 8).ok()?;
+    let report = bounded_greedy(&a1, cfg, |a| estimate_throughput(a, ensemble, devices));
+    Some((a1, report))
+}
+
+/// Calibration size that keeps every data-parallel group fed: enough
+/// segments for >= 4 rounds across the *widest* model column (co-located
+/// workers of different models all see every segment anyway). Min 1024,
+/// the paper's §III size.
+pub fn calib_images_for(matrix: &AllocationMatrix, segment: usize) -> usize {
+    let widest = (0..matrix.n_models())
+        .map(|m| matrix.model_workers(m).len())
+        .max()
+        .unwrap_or(1);
+    (widest * segment * 4).max(1024)
+}
+
+/// Measure a matrix on the real engine over the V100 simulator.
+/// Returns paper-scale img/s (0.0 = infeasible).
+pub fn measure_engine(matrix: &AllocationMatrix, ensemble: &Ensemble, gpus: usize) -> f64 {
+    let opts = BenchOptions {
+        nb_images: calib_images_for(matrix, 128),
+        warmup: if fast_mode() { 0 } else { 1 },
+        repeats: 1,
+        time_scale: TIME_SCALE,
+        engine: EngineOptions::default(),
+    };
+    bench(
+        matrix,
+        ensemble,
+        SimExecutor::new(DeviceSet::hgx(gpus), TIME_SCALE),
+        &opts,
+    )
+}
+
+/// Median over `n` engine measurements (Table I reports the median of 3).
+pub fn measure_engine_median(
+    matrix: &AllocationMatrix,
+    ensemble: &Ensemble,
+    gpus: usize,
+    n: usize,
+) -> f64 {
+    let runs: Vec<f64> = (0..n).map(|_| measure_engine(matrix, ensemble, gpus)).collect();
+    ensemble_serve::util::stats::median(&runs)
+}
+
+/// One fresh sim executor factory (memory ledgers reset per bench build).
+pub fn sim_factory(gpus: usize) -> impl Fn() -> Arc<dyn ensemble_serve::exec::Executor> {
+    move || {
+        SimExecutor::new(DeviceSet::hgx(gpus), TIME_SCALE)
+            as Arc<dyn ensemble_serve::exec::Executor>
+    }
+}

@@ -1,0 +1,161 @@
+//! Hot-path micro-benchmarks of the L3 engine — the §Perf instrument.
+//!
+//! Measures the pieces on the request path in isolation:
+//! FIFO send/recv, shared-store access, segment fan-out, accumulator
+//! `Y += P/M` folding, and a fake-backend end-to-end request (pure engine,
+//! no model compute — the §IV.A denominator).
+//!
+//! ```bash
+//! cargo bench --bench engine_hotpath
+//! ```
+
+#[path = "common/mod.rs"]
+mod common;
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use ensemble_serve::alloc::matrix::AllocationMatrix;
+use ensemble_serve::benchkit::harness::{report, time_runs};
+use ensemble_serve::device::DeviceSet;
+use ensemble_serve::engine::combine::{Average, CombineRule};
+use ensemble_serve::engine::queue::Fifo;
+use ensemble_serve::engine::store::SharedStore;
+use ensemble_serve::engine::{EngineOptions, InferenceSystem};
+use ensemble_serve::exec::fake::FakeExecutor;
+use ensemble_serve::model::{ensemble, EnsembleId};
+
+fn main() {
+    common::init_logging();
+    println!("=== engine hot-path micro-benchmarks ===\n");
+
+    // --- FIFO throughput (1 producer, 1 consumer)
+    {
+        let n = 200_000u64;
+        let secs = time_runs(1, 5, || {
+            let q: Fifo<u64> = Fifo::unbounded();
+            let q2 = q.clone();
+            let h = std::thread::spawn(move || {
+                let mut sum = 0u64;
+                while let Some(v) = q2.recv() {
+                    sum += v;
+                }
+                sum
+            });
+            for i in 0..n {
+                q.send(i).unwrap();
+            }
+            q.close();
+            h.join().unwrap();
+        });
+        let s = report("fifo: 200k msgs 1p/1c", &secs);
+        println!("  -> {:.2} M msg/s", n as f64 / s.median / 1e6);
+    }
+
+    // --- shared store insert/get/remove
+    {
+        let store = SharedStore::new();
+        let x = vec![0.0f32; 128 * 1728];
+        let secs = time_runs(1, 5, || {
+            for _ in 0..1000 {
+                let id = store.insert(x.clone(), 128, 1728);
+                let d = store.get(id).unwrap();
+                std::hint::black_box(d.rows(0, 1));
+                store.remove(id);
+            }
+        });
+        let s = report("store: 1k insert+get+remove (128x1728 imgs)", &secs);
+        println!("  -> {:.1} µs/request", s.median * 1e6 / 1000.0);
+    }
+
+    // --- accumulator folding: Y += P / M over one segment
+    {
+        let rule = Average;
+        let classes = 100;
+        let rows = 128;
+        let mut y = vec![0.0f32; rows * classes];
+        let p = vec![0.01f32; rows * classes];
+        let iters = 2000;
+        let secs = time_runs(1, 5, || {
+            for _ in 0..iters {
+                rule.accumulate(&mut y, &p, 0, 12, classes);
+            }
+            std::hint::black_box(&y);
+        });
+        let s = report("combine: 2k x (128x100) average folds", &secs);
+        let bytes = (rows * classes * 4 * 2) as f64 * iters as f64;
+        println!("  -> {:.2} GB/s effective", bytes / s.median / 1e9);
+    }
+
+    // --- batcher-style row copy
+    {
+        let x = vec![0.37f32; 1024 * 1728];
+        let secs = time_runs(1, 5, || {
+            for seg in 0..8 {
+                let lo = seg * 128 * 1728;
+                let chunk = &x[lo..lo + 128 * 1728];
+                std::hint::black_box(chunk.to_vec());
+            }
+        });
+        let s = report("batcher: copy 1024x1728 imgs in 8 segments", &secs);
+        println!("  -> {:.2} GB/s", (x.len() * 4) as f64 / s.median / 1e9);
+    }
+
+    // --- fake end-to-end: the §IV.A engine-only request
+    {
+        let e = ensemble(EnsembleId::Imn12);
+        let gpus = 16;
+        let devices = DeviceSet::hgx(gpus);
+        let mut a = AllocationMatrix::zeroed(devices.len(), e.len());
+        for m in 0..e.len() {
+            a.set(m % gpus, m, 8);
+        }
+        let sys = InferenceSystem::build(
+            &a,
+            &e,
+            Arc::new(FakeExecutor::new(devices)),
+            EngineOptions::default(),
+        )
+        .unwrap();
+        let elems = e.members[0].input_elems_per_image();
+        let x = vec![0.5f32; 1024 * elems];
+        let secs = time_runs(1, 5, || {
+            sys.predict(x.clone(), 1024).unwrap();
+        });
+        let s = report("e2e fake: 1024 imgs x 12 models (12 workers)", &secs);
+        println!("  -> {:.3} s/request (paper fake system: 0.035 s on 22 workers)",
+                 s.median);
+    }
+
+    // --- end-to-end latency of a small request (fake)
+    {
+        let e = ensemble(EnsembleId::Imn4);
+        let devices = DeviceSet::hgx(2);
+        let mut a = AllocationMatrix::zeroed(devices.len(), e.len());
+        for m in 0..e.len() {
+            a.set(m % 2, m, 8);
+        }
+        let sys = InferenceSystem::build(
+            &a,
+            &e,
+            Arc::new(FakeExecutor::new(devices)),
+            EngineOptions::default(),
+        )
+        .unwrap();
+        let elems = e.members[0].input_elems_per_image();
+        let x = vec![0.5f32; 8 * elems];
+        // latency distribution over 200 single-segment requests
+        let mut lats = Vec::new();
+        for _ in 0..200 {
+            let t = Instant::now();
+            sys.predict(x.clone(), 8).unwrap();
+            lats.push(t.elapsed().as_secs_f64() * 1000.0);
+        }
+        println!(
+            "e2e fake small request: p50 {:.3} ms  p95 {:.3} ms  min {:.3} ms",
+            ensemble_serve::util::stats::median(&lats),
+            ensemble_serve::util::stats::percentile(&lats, 95.0),
+            ensemble_serve::util::stats::min(&lats),
+        );
+    }
+}

@@ -1,0 +1,84 @@
+//! §IV.A — overhead of the inference system.
+//!
+//! The paper replaces every DNN call with a fake zero prediction and
+//! measures the remaining pipeline time: 0.035 s for IMN12 on 16 GPUs
+//! (22 workers) vs 2.528 s with real predictions over 1024 images — at
+//! most 2 % of total inference time.
+//!
+//! Here the same experiment runs **unscaled** (time_scale = 1): the fake
+//! backend measures the pure engine (queues + batching + accumulation)
+//! and the sim backend sleeps the real V100 latencies.
+//!
+//! ```bash
+//! cargo bench --bench overhead
+//! ```
+
+#[path = "common/mod.rs"]
+mod common;
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use ensemble_serve::alloc::greedy::GreedyConfig;
+use ensemble_serve::benchkit::calibration_data;
+use ensemble_serve::device::DeviceSet;
+use ensemble_serve::engine::{EngineOptions, InferenceSystem};
+use ensemble_serve::exec::fake::FakeExecutor;
+use ensemble_serve::exec::sim::SimExecutor;
+use ensemble_serve::model::{ensemble, EnsembleId};
+
+fn main() {
+    common::init_logging();
+    let e = ensemble(EnsembleId::Imn12);
+    let gpus = 16;
+    let devices = DeviceSet::hgx(gpus);
+
+    // A2-style matrix for IMN12@16 (the paper's produced 22 workers)
+    let cfg = GreedyConfig { ..common::greedy_cfg(1) };
+    let (_, rep) = common::optimize_analytic(&e, &devices, &cfg).expect("fits");
+    let matrix = rep.best;
+    println!("=== §IV.A overhead: IMN12 on 16 GPUs, {} workers ===\n", matrix.worker_count());
+
+    let nb_images = 1024;
+    let elems = e.members[0].input_elems_per_image();
+    let x = calibration_data(nb_images, elems, 0xFA4E);
+
+    // --- fake predictions: pure engine overhead, unscaled
+    let fake = InferenceSystem::build(
+        &matrix,
+        &e,
+        Arc::new(FakeExecutor::new(DeviceSet::hgx(gpus))),
+        EngineOptions::default(),
+    )
+    .expect("fake build");
+    // warmup
+    fake.predict(x.clone(), nb_images).unwrap();
+    let runs: Vec<f64> = (0..5)
+        .map(|_| {
+            let t = Instant::now();
+            fake.predict(x.clone(), nb_images).unwrap();
+            t.elapsed().as_secs_f64()
+        })
+        .collect();
+    let fake_s = ensemble_serve::util::stats::median(&runs);
+    drop(fake);
+
+    // --- real (simulated V100 latencies), unscaled: time_scale 1.0
+    let sim = InferenceSystem::build(
+        &matrix,
+        &e,
+        SimExecutor::new(DeviceSet::hgx(gpus), 1.0),
+        EngineOptions::default(),
+    )
+    .expect("sim build");
+    let t = Instant::now();
+    sim.predict(x.clone(), nb_images).unwrap();
+    let real_s = t.elapsed().as_secs_f64();
+    drop(sim);
+
+    println!("fake-prediction system : {fake_s:.3} s for {nb_images} images (paper: 0.035 s)");
+    println!("full inference (sim 1x): {real_s:.3} s (paper: 2.528 s, throughput 405 img/s)");
+    println!("overhead               : {:.2} % of total (paper: <= 2 %)",
+             100.0 * fake_s / real_s);
+    println!("throughput             : {:.0} img/s", nb_images as f64 / real_s);
+}

@@ -1,0 +1,58 @@
+//! §IV.B — weak scaling of a single model: "the ResNet152 model alone gets
+//! a Weak Scaling Efficiency of 87 % with 16 GPUs" (IMN1 column of
+//! Table I: 136 -> 1897 img/s from 1 to 16 GPUs).
+//!
+//! ```bash
+//! cargo bench --bench scaling
+//! ```
+
+#[path = "common/mod.rs"]
+mod common;
+
+use ensemble_serve::benchkit::harness::Table;
+use ensemble_serve::device::DeviceSet;
+use ensemble_serve::model::{ensemble, EnsembleId};
+
+fn main() {
+    common::init_logging();
+    let e = ensemble(EnsembleId::Imn1);
+    let gpu_counts: &[usize] = if common::fast_mode() {
+        &[1, 2, 4, 8]
+    } else {
+        &[1, 2, 3, 4, 6, 8, 12, 16]
+    };
+
+    println!("=== weak scaling of IMN1 (ResNet152) — paper: 87 % WSE at 16 GPUs ===\n");
+    let mut t = Table::new(vec!["#G", "A2 img/s", "speedup", "WSE %", "paper A2"]);
+    let paper: &[(usize, f64)] = &[
+        (1, 136.0), (2, 270.0), (3, 394.0), (4, 539.0), (5, 617.0),
+        (6, 722.0), (8, 974.0), (12, 1436.0), (16, 1897.0),
+    ];
+
+    let mut base = 0.0;
+    for &g in gpu_counts {
+        let devices = DeviceSet::hgx(g);
+        let cfg = common::greedy_cfg(1);
+        let (_, rep) = common::optimize_analytic(&e, &devices, &cfg).expect("IMN1 fits");
+        let s = common::measure_engine(&rep.best, &e, g);
+        if g == 1 {
+            base = s;
+        }
+        let speedup = s / base.max(1e-9);
+        let wse = 100.0 * speedup / g as f64;
+        let paper_val = paper
+            .iter()
+            .find(|(pg, _)| *pg == g)
+            .map(|(_, v)| format!("{v:.0}"))
+            .unwrap_or_else(|| "-".into());
+        t.row(vec![
+            g.to_string(),
+            format!("{s:.0}"),
+            format!("{speedup:.2}x"),
+            format!("{wse:.0}"),
+            paper_val,
+        ]);
+    }
+    t.print();
+    println!("\n(WSE = speedup / #GPUs; A2 matrices from the bounded greedy, engine-measured)");
+}

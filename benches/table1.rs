@@ -1,0 +1,77 @@
+//! Table I — throughput (img/s) of the five ensembles over 1..16 GPUs
+//! (+1 CPU), A1 = worst-fit-decreasing alone, A2 = A1 + bounded greedy.
+//! `-` marks out-of-memory, exactly like the paper.
+//!
+//! A2 is the median over three greedy seeds (the paper: "because A2 is a
+//! stochastic algorithm, each run was performed 3 times and the median
+//! value is reported"); throughputs are measured on the real engine over
+//! the calibrated V100 simulator.
+//!
+//! ```bash
+//! cargo bench --bench table1            # full (several minutes)
+//! ES_BENCH_FAST=1 cargo bench --bench table1
+//! ```
+
+#[path = "common/mod.rs"]
+mod common;
+
+use ensemble_serve::alloc::worst_fit_decreasing;
+use ensemble_serve::benchkit::harness::{fmt_throughput, Table};
+use ensemble_serve::device::DeviceSet;
+use ensemble_serve::model::{ensemble, EnsembleId};
+use ensemble_serve::util::stats;
+
+fn main() {
+    common::init_logging();
+    let gpu_counts: &[usize] = if common::fast_mode() {
+        &[1, 2, 4, 8]
+    } else {
+        &[1, 2, 3, 4, 5, 6, 8, 12, 16]
+    };
+    let seeds: &[u64] = if common::fast_mode() { &[1] } else { &[1, 2, 3] };
+
+    println!("=== Table I: ensemble throughput, A1 (WFD) vs A2 (WFD + bounded greedy) ===");
+    println!("paper reference rows for comparison are in EXPERIMENTS.md\n");
+
+    let mut headers = vec!["#G".to_string()];
+    for id in EnsembleId::ALL {
+        headers.push(format!("{}-A1", id.name()));
+        headers.push(format!("{}-A2", id.name()));
+    }
+    let mut table = Table::new(headers);
+
+    let t0 = std::time::Instant::now();
+    for &g in gpu_counts {
+        let mut row = vec![g.to_string()];
+        for id in EnsembleId::ALL {
+            let e = ensemble(id);
+            let devices = DeviceSet::hgx(g);
+            match worst_fit_decreasing(&e, &devices, 8) {
+                Err(_) => {
+                    row.push("-".into()); // OOM, the paper's '-'
+                    row.push("-".into());
+                }
+                Ok(a1) => {
+                    let s1 = common::measure_engine(&a1, &e, g);
+                    row.push(fmt_throughput(s1));
+                    // A2: median over greedy seeds
+                    let mut speeds = Vec::new();
+                    for &seed in seeds {
+                        let cfg = common::greedy_cfg(seed);
+                        if let Some((_, rep)) = common::optimize_analytic(&e, &devices, &cfg) {
+                            speeds.push(common::measure_engine(&rep.best, &e, g));
+                        }
+                    }
+                    row.push(fmt_throughput(stats::median(&speeds)));
+                }
+            }
+        }
+        table.row(row);
+        eprintln!("[table1] row {g} GPUs done ({:.0}s elapsed)", t0.elapsed().as_secs_f64());
+    }
+
+    println!();
+    table.print();
+    println!("\n(A2 = median of {} greedy seeds; engine-measured at time scale {}x)",
+             seeds.len(), common::TIME_SCALE);
+}

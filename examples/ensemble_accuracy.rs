@@ -1,0 +1,90 @@
+//! Combination rules on a real ensemble: run the same images through the
+//! IMN4 tiny stand-ins (PJRT) under averaging, weighted averaging and
+//! majority voting, and show how the rules disagree (§II.C.2: "other
+//! combination rules can be easily implemented").
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example ensemble_accuracy
+//! ```
+
+use std::sync::Arc;
+
+use ensemble_serve::alloc::worst_fit_decreasing;
+use ensemble_serve::device::DeviceSet;
+use ensemble_serve::engine::combine::{Average, MajorityVote, WeightedAverage};
+use ensemble_serve::engine::{CombineRule, EngineOptions, InferenceSystem};
+use ensemble_serve::exec::pjrt::PjrtExecutor;
+use ensemble_serve::model::{ensemble, EnsembleId, Manifest};
+use ensemble_serve::util::prng::Prng;
+
+fn run_rule(
+    rule: Arc<dyn CombineRule>,
+    x: &[f32],
+    n: usize,
+) -> anyhow::Result<Vec<usize>> {
+    let ens = ensemble(EnsembleId::Imn4);
+    let devices = DeviceSet::hgx(2);
+    let matrix = worst_fit_decreasing(&ens, &devices, 8)?;
+    let manifest = Arc::new(Manifest::load(Manifest::default_dir())?);
+    let executor = PjrtExecutor::new(devices, manifest);
+    let name = rule.name();
+    let system = InferenceSystem::build(
+        &matrix,
+        &ens,
+        executor,
+        EngineOptions { combine: rule, ..EngineOptions::default() },
+    )?;
+    let y = system.predict(x.to_vec(), n)?;
+    let classes = y.len() / n;
+    let tops: Vec<usize> = y
+        .chunks(classes)
+        .map(|row| {
+            row.iter()
+                .enumerate()
+                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .map(|(i, _)| i)
+                .unwrap()
+        })
+        .collect();
+    println!("rule {name:<18} -> first tops {:?}", &tops[..8.min(tops.len())]);
+    Ok(tops)
+}
+
+fn main() -> anyhow::Result<()> {
+    ensemble_serve::util::logging::init();
+
+    let manifest = Manifest::load(Manifest::default_dir())?;
+    let elems = manifest.model("resnet50_t")?.input_elems_per_image();
+    let n = 16;
+    let mut rng = Prng::new(2024);
+    let x: Vec<f32> = (0..n * elems).map(|_| rng.gaussian() as f32).collect();
+
+    let avg = run_rule(Arc::new(Average), &x, n)?;
+    let weighted = run_rule(
+        Arc::new(WeightedAverage::new(vec![0.4, 0.3, 0.2, 0.1])),
+        &x,
+        n,
+    )?;
+    let vote = run_rule(Arc::new(MajorityVote), &x, n)?;
+
+    let agree = |a: &[usize], b: &[usize]| {
+        a.iter().zip(b).filter(|(x, y)| x == y).count() as f64 / a.len() as f64
+    };
+    println!("\nagreement with plain averaging:");
+    println!("  weighted-average : {:.0}%", 100.0 * agree(&avg, &weighted));
+    println!("  majority-vote    : {:.0}%", 100.0 * agree(&avg, &vote));
+    println!(
+        "\n(the random-weight stand-ins each collapse onto a favourite class, so \
+         voting — which counts heads — can diverge from averaging — which sums \
+         confidence mass; on trained members the rules largely agree)"
+    );
+
+    // structural sanity: deterministic, in-range tops from every rule
+    for tops in [&avg, &weighted, &vote] {
+        anyhow::ensure!(tops.len() == n);
+        anyhow::ensure!(tops.iter().all(|&t| t < 100), "top-1 out of range");
+    }
+    anyhow::ensure!(agree(&avg, &avg) == 1.0);
+    println!("\nensemble_accuracy OK");
+    Ok(())
+}

@@ -1,0 +1,90 @@
+//! Walkthrough of the allocation-matrix optimizer on the paper's hardest
+//! flexibility case: 12 heavy ImageNet DNNs into 4 GPUs (+1 CPU).
+//!
+//! ```bash
+//! cargo run --release --example optimize_allocation
+//! ```
+//!
+//! Runs Algorithm 1 (worst-fit-decreasing) to fit IMN12 in memory, then a
+//! budgeted Algorithm 2 (bounded greedy over the engine-in-the-loop
+//! benchmark on the calibrated V100 simulator) and prints how the matrix
+//! and its throughput evolve.
+
+use ensemble_serve::alloc::greedy::GreedyConfig;
+use ensemble_serve::alloc::worst_fit_decreasing;
+use ensemble_serve::benchkit::BenchOptions;
+use ensemble_serve::device::DeviceSet;
+use ensemble_serve::engine::EngineOptions;
+use ensemble_serve::exec::sim::SimExecutor;
+use ensemble_serve::model::{ensemble, EnsembleId};
+use ensemble_serve::optimizer::{optimize, OptimizerConfig};
+
+fn main() -> anyhow::Result<()> {
+    // greedy probes memory-infeasible matrices on purpose; keep the log
+    // quiet unless the user overrides ES_LOG
+    if std::env::var("ES_LOG").is_err() {
+        std::env::set_var("ES_LOG", "error");
+    }
+    ensemble_serve::util::logging::init();
+
+    let ens = ensemble(EnsembleId::Imn12);
+    let devices = DeviceSet::hgx(4);
+    let dev_names: Vec<String> = devices.iter().map(|d| d.name.clone()).collect();
+    let model_names: Vec<String> = ens.members.iter().map(|m| m.name.clone()).collect();
+
+    println!("== the flexibility case of §IV.B: {} into 4 GPUs + 1 CPU ==\n", ens.name);
+    for m in &ens.members {
+        println!("  {:<12} {:>6.1}M params {:>5.1} GFLOPs  worker@8 {:>6.0} MB",
+                 m.name, m.params_m, m.gflops, m.worker_mem_mb(8));
+    }
+
+    // Algorithm 1
+    let a1 = worst_fit_decreasing(&ens, &devices, 8)?;
+    println!("\nAlgorithm 1 — worst-fit-decreasing (all batches 8):");
+    println!("{}", a1.render(&dev_names, &model_names));
+
+    // Algorithm 2 with a demo budget (the paper's full budget is
+    // max_neighs=100 x max_iter=10 ~ 12h of benches; see benches/table1.rs)
+    let time_scale = 512.0;
+    let cfg = OptimizerConfig {
+        greedy: GreedyConfig { max_iter: 4, max_neighs: 24, seed: 1, ..Default::default() },
+        bench: BenchOptions {
+            nb_images: 512,
+            warmup: 0,
+            repeats: 1,
+            time_scale,
+            engine: EngineOptions::default(),
+        },
+        cache: None,
+        ..Default::default()
+    };
+    let t0 = std::time::Instant::now();
+    let out = optimize(&ens, &devices, &|| SimExecutor::new(DeviceSet::hgx(4), time_scale), &cfg)?;
+    println!(
+        "Algorithm 2 — bounded greedy ({} bench evals in {:.1}s wall):",
+        out.report.as_ref().unwrap().bench_count,
+        t0.elapsed().as_secs_f64()
+    );
+    println!("{}", out.a2.render(&dev_names, &model_names));
+
+    println!("throughput: A1 {:>6.0} img/s  ->  A2 {:>6.0} img/s ({:.2}x)",
+             out.a1_speed, out.a2_speed, out.a2_speed / out.a1_speed.max(1e-9));
+    if let Some(r) = &out.report {
+        println!("\ngreedy trace (accepted moves):");
+        for (it, speed) in &r.trace {
+            println!("  iter {it:>2}: {speed:>7.0} img/s");
+        }
+        println!("visit rate max_neighs/total_neighs = {:.3}", r.visit_rate);
+    }
+
+    // the paper's qualitative observations hold:
+    let cpu = devices.len() - 1;
+    let colocated: usize = (0..devices.len())
+        .map(|d| out.a2.device_workers(d).len().saturating_sub(1))
+        .sum();
+    println!("\nobservations: {} co-located worker pairs; CPU hosts {} workers",
+             colocated, out.a2.device_workers(cpu).len());
+
+    println!("\noptimize_allocation OK");
+    Ok(())
+}

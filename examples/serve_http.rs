@@ -1,0 +1,137 @@
+//! End-to-end serving driver (the repo's E2E validation, recorded in
+//! EXPERIMENTS.md): load a real small ensemble (PJRT CPU execution of the
+//! AOT artifacts), expose the REST API, fire batched requests from
+//! concurrent HTTP clients, and report latency/throughput.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example serve_http
+//! ```
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use ensemble_serve::alloc::worst_fit_decreasing;
+use ensemble_serve::device::DeviceSet;
+use ensemble_serve::engine::{EngineOptions, InferenceSystem};
+use ensemble_serve::exec::pjrt::PjrtExecutor;
+use ensemble_serve::model::{ensemble, EnsembleId, Manifest};
+use ensemble_serve::server::http::http_request;
+use ensemble_serve::server::ApiServer;
+use ensemble_serve::util::json::Json;
+use ensemble_serve::util::prng::Prng;
+use ensemble_serve::util::stats;
+
+fn main() -> anyhow::Result<()> {
+    ensemble_serve::util::logging::init();
+
+    let ens = ensemble(EnsembleId::Imn4);
+    let devices = DeviceSet::hgx(2);
+    let matrix = worst_fit_decreasing(&ens, &devices, 8)?;
+    let manifest = Arc::new(Manifest::load(Manifest::default_dir())?);
+    let elems = manifest.model("resnet50_t")?.input_elems_per_image();
+    let executor = PjrtExecutor::new(devices, manifest);
+
+    let t0 = Instant::now();
+    let system = Arc::new(InferenceSystem::build(
+        &matrix,
+        &ens,
+        executor,
+        EngineOptions { segment_size: 32, ..EngineOptions::default() },
+    )?);
+    let api = ApiServer::start(Arc::clone(&system), "127.0.0.1:0", 8)?;
+    println!(
+        "serving {} ({} workers) on http://{} after {:.2}s startup",
+        ens.name,
+        system.worker_count(),
+        api.addr(),
+        t0.elapsed().as_secs_f64()
+    );
+
+    // health check
+    let (code, body) = http_request(api.addr(), "GET", "/v1/health", "", b"")?;
+    anyhow::ensure!(code == 200, "health: {code}");
+    println!("health: {}", String::from_utf8_lossy(&body));
+
+    // workload: 2 concurrent clients x 4 requests x 8 images (binary
+    // body). Modest on purpose: the tiny models run REAL interpret-mode
+    // Pallas compute on one CPU core (~0.4 s per ensemble-image).
+    let clients = 2;
+    let reqs = 4;
+    let imgs = 8usize;
+    let addr = api.addr();
+
+    let t1 = Instant::now();
+    let latencies: Vec<f64> = std::thread::scope(|s| {
+        let handles: Vec<_> = (0..clients)
+            .map(|c| {
+                s.spawn(move || {
+                    let mut rng = Prng::new(c as u64 + 1);
+                    let mut lat = Vec::new();
+                    let mut body = Vec::with_capacity(imgs * elems * 4);
+                    for _ in 0..imgs * elems {
+                        body.extend_from_slice(&(rng.gaussian() as f32).to_le_bytes());
+                    }
+                    for _ in 0..reqs {
+                        let t = Instant::now();
+                        let (code, resp) = binary_predict(addr, &body, imgs).unwrap();
+                        assert_eq!(code, 200, "{}", String::from_utf8_lossy(&resp));
+                        lat.push(t.elapsed().as_secs_f64() * 1000.0);
+                    }
+                    lat
+                })
+            })
+            .collect();
+        handles.into_iter().flat_map(|h| h.join().unwrap()).collect()
+    });
+    let wall = t1.elapsed().as_secs_f64();
+
+    let total_reqs = (clients * reqs) as f64;
+    let total_imgs = total_reqs * imgs as f64;
+    println!("\n=== E2E serving results (real PJRT compute, {clients} clients) ===");
+    println!("requests     : {total_reqs:.0} ({imgs} images each)");
+    println!("wall time    : {wall:.2} s");
+    println!("throughput   : {:.1} img/s  ({:.2} req/s)", total_imgs / wall, total_reqs / wall);
+    println!("latency mean : {:.1} ms", stats::mean(&latencies));
+    println!("latency p50  : {:.1} ms", stats::median(&latencies));
+    println!("latency p95  : {:.1} ms", stats::percentile(&latencies, 95.0));
+    println!("latency max  : {:.1} ms", stats::max(&latencies));
+
+    // engine stats over the API
+    let (code, body) = http_request(addr, "GET", "/v1/stats", "", b"")?;
+    anyhow::ensure!(code == 200);
+    let jstats = Json::parse(std::str::from_utf8(&body)?).map_err(|e| anyhow::anyhow!("{e}"))?;
+    println!("\nengine stats: {}", jstats);
+
+    println!("\nserve_http OK");
+    Ok(())
+}
+
+fn binary_predict(
+    addr: std::net::SocketAddr,
+    body: &[u8],
+    n: usize,
+) -> anyhow::Result<(u16, Vec<u8>)> {
+    use std::io::{Read, Write};
+    let mut stream = std::net::TcpStream::connect(addr)?;
+    stream.set_nodelay(true)?;
+    let head = format!(
+        "POST /v1/predict HTTP/1.1\r\nhost: x\r\ncontent-type: application/octet-stream\r\n\
+         x-num-images: {n}\r\ncontent-length: {}\r\nconnection: close\r\n\r\n",
+        body.len()
+    );
+    stream.write_all(head.as_bytes())?;
+    stream.write_all(body)?;
+    let mut resp = Vec::new();
+    stream.read_to_end(&mut resp)?;
+    let text_end = resp
+        .windows(4)
+        .position(|w| w == b"\r\n\r\n")
+        .ok_or_else(|| anyhow::anyhow!("bad response"))?;
+    let status: u16 = std::str::from_utf8(&resp[..text_end])?
+        .lines()
+        .next()
+        .and_then(|l| l.split_whitespace().nth(1))
+        .and_then(|s| s.parse().ok())
+        .ok_or_else(|| anyhow::anyhow!("bad status line"))?;
+    Ok((status, resp[text_end + 4..].to_vec()))
+}

@@ -1,0 +1,134 @@
+"""AOT compile path: lower every (model, batch) pair to HLO text + manifest.
+
+Run once by `make artifacts`; python never appears on the request path.
+
+Interchange format is HLO *text*, not a serialized HloModuleProto: jax>=0.5
+emits protos with 64-bit instruction ids which the rust `xla` crate's
+xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Weights are baked into the HLO as constants (deterministic per model name),
+so each artifact is a pure function f(x: f32[B,H,W,C]) -> f32[B,classes].
+Golden inputs/outputs for batch 8 let the rust runtime verify numerics.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from .model import TinyConfig, flops_per_image, forward, init_params, param_count
+from .registry import ALL_STANDINS, BATCH_SIZES, ENSEMBLES
+
+GOLDEN_BATCH = 8
+GOLDEN_SEED = 1234
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (return_tuple=True: the rust
+    side unwraps with to_tuple1).
+
+    `print_large_constants=True` is load-bearing: the default printer elides
+    big arrays as `constant({...})`, which the text parser silently turns
+    into zeros — the baked model weights would vanish.
+    """
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text(print_large_constants=True)
+
+
+def lower_model(cfg: TinyConfig, params: dict, batch: int) -> str:
+    spec = jax.ShapeDtypeStruct((batch, cfg.img_size, cfg.img_size, cfg.in_ch),
+                                jnp.float32)
+
+    def fn(x):
+        return (forward(params, x, cfg),)
+
+    return to_hlo_text(jax.jit(fn).lower(spec))
+
+
+def golden_input(cfg: TinyConfig) -> np.ndarray:
+    x = jax.random.normal(
+        jax.random.PRNGKey(GOLDEN_SEED),
+        (GOLDEN_BATCH, cfg.img_size, cfg.img_size, cfg.in_ch),
+        jnp.float32,
+    )
+    return np.asarray(x)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--models", nargs="*", default=None,
+                    help="subset of model names (default: all)")
+    ap.add_argument("--batches", nargs="*", type=int, default=None)
+    args = ap.parse_args()
+
+    out_dir = os.path.abspath(args.out_dir)
+    golden_dir = os.path.join(out_dir, "golden")
+    os.makedirs(golden_dir, exist_ok=True)
+
+    batches = args.batches or BATCH_SIZES
+    configs = [c for c in ALL_STANDINS
+               if args.models is None or c.name in args.models]
+
+    manifest = {
+        "format": "hlo-text-v1",
+        "batch_sizes": batches,
+        "golden_batch": GOLDEN_BATCH,
+        "ensembles": ENSEMBLES,
+        "models": [],
+    }
+
+    t_start = time.time()
+    for cfg in configs:
+        params = init_params(cfg)
+        t0 = time.time()
+        artifacts = {}
+        for b in batches:
+            text = lower_model(cfg, params, b)
+            fname = f"{cfg.name}_b{b}.hlo.txt"
+            with open(os.path.join(out_dir, fname), "w") as f:
+                f.write(text)
+            artifacts[str(b)] = fname
+
+        # golden pair (batch 8, the pallas path == what the HLO encodes)
+        gx = golden_input(cfg)
+        gy = np.asarray(forward(params, jnp.asarray(gx), cfg))
+        gin = f"golden/{cfg.name}_input_b{GOLDEN_BATCH}.f32"
+        gout = f"golden/{cfg.name}_output_b{GOLDEN_BATCH}.f32"
+        gx.astype("<f4").tofile(os.path.join(out_dir, gin))
+        gy.astype("<f4").tofile(os.path.join(out_dir, gout))
+
+        manifest["models"].append({
+            "name": cfg.name,
+            "paper_name": cfg.paper_name,
+            "params": param_count(params),
+            "classes": cfg.classes,
+            "img_size": cfg.img_size,
+            "in_ch": cfg.in_ch,
+            "tiny_flops_per_image": flops_per_image(cfg),
+            "artifacts": artifacts,
+            "golden_input": gin,
+            "golden_output": gout,
+        })
+        print(f"[aot] {cfg.name:<18} batches={batches} "
+              f"params={param_count(params):>7} ({time.time()-t0:.1f}s)")
+
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1, sort_keys=True)
+    print(f"[aot] wrote {len(configs)} models x {len(batches)} batches "
+          f"to {out_dir} in {time.time()-t_start:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,132 @@
+"""L1 — Pallas tiled matmul kernel (the ensemble members' compute hot-spot).
+
+Every ensemble member is a CNN; after im2col its convolutions (and its dense
+head) reduce to GEMM, so this kernel is the single hot-spot the whole model
+zoo funnels through (see DESIGN.md §Hardware-Adaptation).
+
+TPU mapping (vs the paper's cuDNN/V100 path):
+  * the grid is (M/bm, N/bn, K/bk) with K innermost, so each (bm, bn) output
+    tile stays resident in VMEM while the K reduction streams (bm, bk) and
+    (bk, bn) input tiles HBM->VMEM — the BlockSpec-expressed analogue of
+    threadblock shared-memory staging;
+  * block sizes default to multiples of 128 to line up with the 128x128 MXU
+    systolic array, and accumulation is f32 (`preferred_element_type`) even
+    for bf16 inputs;
+  * double-buffering of the streamed tiles is done by the Pallas/Mosaic
+    pipeliner, driven by the index maps below.
+
+Lowered with `interpret=True`: the CPU PJRT plugin cannot execute Mosaic
+custom-calls, so the kernel is specialized to plain HLO ops that the rust
+runtime (xla crate) runs as-is. Real-TPU utilization is *estimated* from the
+VMEM footprint of these block shapes in EXPERIMENTS.md §Perf.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# MXU-shaped defaults; clipped (and the operands zero-padded) when the
+# problem is smaller than one tile.
+DEFAULT_BM = 128
+DEFAULT_BN = 128
+DEFAULT_BK = 128
+
+
+def _matmul_kernel(x_ref, w_ref, o_ref):
+    """One (bm, bn) output tile; K is the innermost grid dim.
+
+    The output BlockSpec index map ignores the K coordinate, so the same
+    VMEM tile is revisited across the K loop and we can accumulate into it.
+    """
+    @pl.when(pl.program_id(2) == 0)
+    def _zero():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        x_ref[...], w_ref[...], preferred_element_type=jnp.float32
+    )
+
+
+def _round_up(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+@functools.partial(
+    jax.jit, static_argnames=("bm", "bn", "bk", "interpret")
+)
+def matmul(
+    x: jax.Array,
+    w: jax.Array,
+    *,
+    bm: int = DEFAULT_BM,
+    bn: int = DEFAULT_BN,
+    bk: int = DEFAULT_BK,
+    interpret: bool = True,
+) -> jax.Array:
+    """Tiled Pallas matmul: (M, K) @ (K, N) -> (M, N) in f32.
+
+    Operands are zero-padded up to block multiples (zero rows/cols do not
+    change the product), the kernel runs on the padded shapes, and the
+    result is sliced back. Block sizes are clipped to the padded problem so
+    tiny shapes (unit tests, small dense heads) still work.
+    """
+    if x.ndim != 2 or w.ndim != 2:
+        raise ValueError(f"matmul expects rank-2 operands, got {x.shape} @ {w.shape}")
+    m, k = x.shape
+    k2, n = w.shape
+    if k != k2:
+        raise ValueError(f"contraction mismatch: {x.shape} @ {w.shape}")
+
+    bm = min(bm, _round_up(m, 8))
+    bn = min(bn, _round_up(n, 8))
+    bk = min(bk, _round_up(k, 8))
+
+    mp, kp, np_ = _round_up(m, bm), _round_up(k, bk), _round_up(n, bn)
+    xp = jnp.pad(x, ((0, mp - m), (0, kp - k)))
+    wp = jnp.pad(w, ((0, kp - k), (0, np_ - n)))
+
+    grid = (mp // bm, np_ // bn, kp // bk)
+    out = pl.pallas_call(
+        _matmul_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+        interpret=interpret,
+    )(xp, wp)
+    return out[:m, :n]
+
+
+def matmul_bias_act(
+    x: jax.Array,
+    w: jax.Array,
+    b: jax.Array | None = None,
+    *,
+    act: str = "none",
+    **kw,
+) -> jax.Array:
+    """matmul + bias + activation — the fused epilogue used by model.py."""
+    y = matmul(x, w, **kw)
+    if b is not None:
+        y = y + b
+    if act == "relu":
+        y = jnp.maximum(y, 0.0)
+    elif act != "none":
+        raise ValueError(f"unknown activation {act!r}")
+    return y
+
+
+def vmem_bytes(bm: int = DEFAULT_BM, bn: int = DEFAULT_BN, bk: int = DEFAULT_BK,
+               dtype_bytes: int = 4) -> int:
+    """Estimated VMEM working set of one grid step (x tile + w tile + out tile),
+    x2 for the pipeliner's double buffering of the streamed inputs."""
+    stream = (bm * bk + bk * bn) * dtype_bytes * 2
+    resident = bm * bn * 4  # f32 accumulator tile
+    return stream + resident

@@ -1,0 +1,63 @@
+"""Pure-jnp oracles for the Pallas kernels and the model forward.
+
+This file is the CORE correctness signal: python/tests compares every kernel
+and the full model forward against these reference implementations; nothing
+here uses Pallas.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def matmul_ref(x: jax.Array, w: jax.Array) -> jax.Array:
+    """f32-accumulating reference matmul."""
+    return jnp.dot(
+        x.astype(jnp.float32), w.astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    )
+
+
+def im2col(x: jax.Array, kh: int, kw: int, stride: int, padding: str) -> jax.Array:
+    """NHWC image -> (N, Ho, Wo, C*kh*kw) patches.
+
+    Channel ordering follows `jax.lax.conv_general_dilated_patches`
+    (feature-major: C * kh * kw), which model.py matches when reshaping
+    weights — keep the two in sync.
+    """
+    patches = jax.lax.conv_general_dilated_patches(
+        x,
+        filter_shape=(kh, kw),
+        window_strides=(stride, stride),
+        padding=padding,
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+    return patches
+
+
+def conv2d_ref(x: jax.Array, w: jax.Array, stride: int = 1,
+               padding: str = "SAME") -> jax.Array:
+    """Reference NHWC conv2d with HWIO weights, f32 accumulation."""
+    return jax.lax.conv_general_dilated(
+        x.astype(jnp.float32),
+        w.astype(jnp.float32),
+        window_strides=(stride, stride),
+        padding=padding,
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        preferred_element_type=jnp.float32,
+    )
+
+
+def scale_shift_ref(x: jax.Array, scale: jax.Array, shift: jax.Array) -> jax.Array:
+    """Inference-mode batchnorm folded to an affine per-channel op."""
+    return x * scale + shift
+
+
+def global_avg_pool_ref(x: jax.Array) -> jax.Array:
+    """NHWC -> NC global average pool."""
+    return jnp.mean(x, axis=(1, 2))
+
+
+def softmax_ref(x: jax.Array) -> jax.Array:
+    return jax.nn.softmax(x, axis=-1)

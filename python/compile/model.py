@@ -1,0 +1,207 @@
+"""L2 — JAX forward pass of the ensemble member CNNs.
+
+The paper serves heterogeneous image classifiers (ResNet / VGG / DenseNet /
+Inception families). Here each member is an instance of one parameterized
+residual CNN family whose depth/width knobs reproduce the *relative* cost
+and size ordering of the paper's models (the absolute scale is shrunk so
+dozens of (model x batch) artifacts AOT-compile quickly and run on the CPU
+PJRT client — see DESIGN.md §Substitutions).
+
+Every convolution is lowered to im2col + the L1 Pallas matmul kernel, and
+the dense head uses the same kernel, so the whole forward funnels through
+the Pallas hot-spot. BatchNorm is inference-mode and folded into a
+per-channel affine. Weights are deterministic from the model name, so the
+rust side can check golden outputs.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.matmul import matmul, matmul_bias_act
+from .kernels.ref import (
+    conv2d_ref,
+    global_avg_pool_ref,
+    im2col,
+    matmul_ref,
+    scale_shift_ref,
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class TinyConfig:
+    """Architecture knobs for one ensemble member stand-in."""
+
+    name: str                      # artifact name, e.g. "resnet50_t"
+    paper_name: str                # the architecture it stands in for
+    stem_width: int = 8            # channels after the stem conv
+    stage_blocks: Sequence[int] = (1, 1)   # residual blocks per stage
+    width_mult: float = 1.0        # channel multiplier per config
+    residual: bool = True          # False -> plain VGG-style stack
+    classes: int = 100
+    img_size: int = 32
+    in_ch: int = 3
+
+    def stage_widths(self) -> list[int]:
+        w = []
+        c = self.stem_width
+        for _ in self.stage_blocks:
+            w.append(max(4, int(round(c * self.width_mult))))
+            c *= 2
+        return w
+
+
+# ---------------------------------------------------------------------------
+# parameters
+
+
+def init_params(cfg: TinyConfig, seed: int | None = None) -> dict:
+    """Deterministic weights: seed derives from the model name unless given."""
+    if seed is None:
+        seed = abs(hash(cfg.name)) % (2**31)
+        # hash() is salted per-process; use a stable fold instead
+        seed = sum((i + 1) * ord(ch) for i, ch in enumerate(cfg.name)) % (2**31)
+    key = jax.random.PRNGKey(seed)
+
+    params: dict = {}
+
+    def conv_w(key, kh, kw, cin, cout):
+        fan_in = kh * kw * cin
+        return jax.random.normal(key, (kh, kw, cin, cout), jnp.float32) * (
+            2.0 / fan_in
+        ) ** 0.5
+
+    def affine(key, c):
+        k1, k2 = jax.random.split(key)
+        scale = 1.0 + 0.1 * jax.random.normal(k1, (c,), jnp.float32)
+        shift = 0.1 * jax.random.normal(k2, (c,), jnp.float32)
+        return scale, shift
+
+    key, k = jax.random.split(key)
+    params["stem_w"] = conv_w(k, 3, 3, cfg.in_ch, cfg.stem_width)
+    key, k = jax.random.split(key)
+    params["stem_bn"] = affine(k, cfg.stem_width)
+
+    cin = cfg.stem_width
+    for si, (nblocks, cout) in enumerate(zip(cfg.stage_blocks, cfg.stage_widths())):
+        for bi in range(nblocks):
+            pre = f"s{si}b{bi}_"
+            stride_in = cin if bi > 0 else cin  # kept for clarity
+            key, k1, k2, k3, k4, k5 = jax.random.split(key, 6)
+            params[pre + "w1"] = conv_w(k1, 3, 3, cin, cout)
+            params[pre + "bn1"] = affine(k2, cout)
+            params[pre + "w2"] = conv_w(k3, 3, 3, cout, cout)
+            params[pre + "bn2"] = affine(k4, cout)
+            if cfg.residual and cin != cout:
+                params[pre + "proj"] = conv_w(k5, 1, 1, cin, cout)
+            cin = cout
+
+    key, k1, k2 = jax.random.split(key, 3)
+    params["head_w"] = jax.random.normal(
+        k1, (cin, cfg.classes), jnp.float32
+    ) * (1.0 / cin) ** 0.5
+    params["head_b"] = 0.01 * jax.random.normal(k2, (cfg.classes,), jnp.float32)
+    return params
+
+
+def param_count(params: dict) -> int:
+    n = 0
+    for v in jax.tree_util.tree_leaves(params):
+        n += int(v.size)
+    return n
+
+
+# ---------------------------------------------------------------------------
+# forward (Pallas path)
+
+
+def _conv_pallas(x: jax.Array, w: jax.Array, stride: int = 1,
+                 interpret: bool = True) -> jax.Array:
+    """NHWC conv via im2col + the L1 Pallas matmul.
+
+    `conv_general_dilated_patches` emits feature-major patches (C*kh*kw), so
+    the HWIO weight is transposed to (C, kh, kw, O) before flattening to
+    match that contraction order.
+    """
+    kh, kw, cin, cout = w.shape
+    patches = im2col(x, kh, kw, stride, "SAME")       # (N, Ho, Wo, C*kh*kw)
+    n, ho, wo, pdim = patches.shape
+    cols = patches.reshape(n * ho * wo, pdim)
+    wmat = jnp.transpose(w, (2, 0, 1, 3)).reshape(pdim, cout)
+    y = matmul(cols, wmat, interpret=interpret)
+    return y.reshape(n, ho, wo, cout)
+
+
+def forward(params: dict, x: jax.Array, cfg: TinyConfig,
+            interpret: bool = True) -> jax.Array:
+    """Forward pass -> class probabilities (N, classes), Pallas hot path."""
+    conv = lambda x, w, s=1: _conv_pallas(x, w, s, interpret=interpret)
+    return _forward_generic(params, x, cfg, conv,
+                            lambda a, b: matmul(a, b, interpret=interpret))
+
+
+def forward_ref(params: dict, x: jax.Array, cfg: TinyConfig) -> jax.Array:
+    """Oracle forward: identical math through jax.lax convolutions."""
+    conv = lambda x, w, s=1: conv2d_ref(x, w, s, "SAME")
+    return _forward_generic(params, x, cfg, conv, matmul_ref)
+
+
+def _forward_generic(params, x, cfg: TinyConfig, conv, mm) -> jax.Array:
+    relu = lambda t: jnp.maximum(t, 0.0)
+
+    h = conv(x, params["stem_w"], 1)
+    h = relu(scale_shift_ref(h, *params["stem_bn"]))
+
+    cin = cfg.stem_width
+    for si, (nblocks, cout) in enumerate(zip(cfg.stage_blocks, cfg.stage_widths())):
+        for bi in range(nblocks):
+            pre = f"s{si}b{bi}_"
+            stride = 2 if (bi == 0 and si > 0) else 1
+            y = conv(h, params[pre + "w1"], stride)
+            y = relu(scale_shift_ref(y, *params[pre + "bn1"]))
+            y = conv(y, params[pre + "w2"], 1)
+            y = scale_shift_ref(y, *params[pre + "bn2"])
+            if cfg.residual:
+                sc = h
+                if stride != 1:
+                    sc = sc[:, ::stride, ::stride, :]
+                if pre + "proj" in params:
+                    sc = conv(sc, params[pre + "proj"], 1)
+                elif sc.shape[-1] != y.shape[-1]:
+                    pad = y.shape[-1] - sc.shape[-1]
+                    sc = jnp.pad(sc, ((0, 0),) * 3 + ((0, pad),))
+                y = y + sc
+            h = relu(y)
+            cin = cout
+
+    pooled = global_avg_pool_ref(h)                    # (N, C)
+    logits = mm(pooled, params["head_w"]) + params["head_b"]
+    return jax.nn.softmax(logits, axis=-1)
+
+
+def flops_per_image(cfg: TinyConfig) -> int:
+    """Analytic MAC*2 count of one image through the tiny stand-in."""
+    f = 0
+    hw = cfg.img_size * cfg.img_size
+
+    def conv_flops(hw, kh, kw, cin, cout):
+        return 2 * hw * kh * kw * cin * cout
+
+    f += conv_flops(hw, 3, 3, cfg.in_ch, cfg.stem_width)
+    cin = cfg.stem_width
+    cur_hw = hw
+    for si, (nblocks, cout) in enumerate(zip(cfg.stage_blocks, cfg.stage_widths())):
+        for bi in range(nblocks):
+            if bi == 0 and si > 0:
+                cur_hw //= 4
+            f += conv_flops(cur_hw, 3, 3, cin, cout)
+            f += conv_flops(cur_hw, 3, 3, cout, cout)
+            if cfg.residual and cin != cout:
+                f += conv_flops(cur_hw, 1, 1, cin, cout)
+            cin = cout
+    f += 2 * cin * cfg.classes
+    return f

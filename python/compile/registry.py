@@ -1,0 +1,66 @@
+"""Registry of tiny stand-in configs for the paper's ensemble members.
+
+The paper's ensembles (§III):
+  IMN1  = {ResNet152}
+  IMN4  = {ResNet50, ResNet101, DenseNet121, VGG19}
+  IMN12 = IMN1 + IMN4 + {ResNet18, ResNet34, ResNeXt50, InceptionV3,
+                         Xception, VGG16, MobileNetV2}
+  FOS14 = 14 AutoML ResNet skeletons (10..132 layers, width x0.5..x3)
+  CIF36 = 36 AutoML ResNet skeletons on CIFAR100
+
+Each member gets a TinyConfig whose (depth, width) knobs preserve the
+relative cost/size ordering of the real architectures. Real artifacts (HLO)
+are compiled for the IMN members plus a small sample of FOS/CIF skeletons;
+the 16-GPU sweeps use the analytic zoo on the rust side (DESIGN.md
+§Substitutions).
+"""
+
+from __future__ import annotations
+
+from .model import TinyConfig
+
+BATCH_SIZES = [8, 16, 32, 64, 128]
+
+# classes=100 everywhere so ensemble members combine (paper: CIFAR100 /
+# ImageNet heads differ, but the combination rule only needs equal C).
+_C = dict(classes=100, img_size=32, in_ch=3)
+
+IMN_STANDINS: list[TinyConfig] = [
+    TinyConfig("resnet18_t", "ResNet18", stem_width=8, stage_blocks=(1, 1), **_C),
+    TinyConfig("resnet34_t", "ResNet34", stem_width=8, stage_blocks=(2, 2), **_C),
+    TinyConfig("resnet50_t", "ResNet50", stem_width=12, stage_blocks=(2, 2), **_C),
+    TinyConfig("resnet101_t", "ResNet101", stem_width=12, stage_blocks=(3, 3), **_C),
+    TinyConfig("resnet152_t", "ResNet152", stem_width=12, stage_blocks=(4, 4), **_C),
+    TinyConfig("resnext50_t", "ResNeXt50", stem_width=14, stage_blocks=(2, 2), **_C),
+    TinyConfig("densenet121_t", "DenseNet121", stem_width=10, stage_blocks=(3, 2), **_C),
+    TinyConfig("vgg16_t", "VGG16", stem_width=12, stage_blocks=(2, 2),
+               residual=False, **_C),
+    TinyConfig("vgg19_t", "VGG19", stem_width=12, stage_blocks=(2, 3),
+               residual=False, **_C),
+    TinyConfig("inceptionv3_t", "InceptionV3", stem_width=12, stage_blocks=(2, 2),
+               width_mult=1.25, **_C),
+    TinyConfig("xception_t", "Xception", stem_width=12, stage_blocks=(3, 2),
+               width_mult=1.25, **_C),
+    TinyConfig("mobilenetv2_t", "MobileNetV2", stem_width=6, stage_blocks=(1, 1), **_C),
+]
+
+# Two AutoML-skeleton representatives (FOS14/CIF36 members are generated on
+# the rust side from the same seeded recipe; these two get real artifacts so
+# the skeleton family is exercised end-to-end too).
+SKELETON_STANDINS: list[TinyConfig] = [
+    TinyConfig("skeleton_small_t", "AutoML-skeleton-d10-w0.5",
+               stem_width=8, stage_blocks=(1, 1), width_mult=0.5, **_C),
+    TinyConfig("skeleton_large_t", "AutoML-skeleton-d132-w3",
+               stem_width=8, stage_blocks=(4, 4), width_mult=3.0, **_C),
+]
+
+ALL_STANDINS: list[TinyConfig] = IMN_STANDINS + SKELETON_STANDINS
+
+BY_NAME: dict[str, TinyConfig] = {c.name: c for c in ALL_STANDINS}
+
+# Ensemble -> member artifact names (tiny stand-ins).
+ENSEMBLES: dict[str, list[str]] = {
+    "IMN1": ["resnet152_t"],
+    "IMN4": ["resnet50_t", "resnet101_t", "densenet121_t", "vgg19_t"],
+    "IMN12": [c.name for c in IMN_STANDINS],
+}

@@ -1,0 +1,104 @@
+"""L1 kernel correctness: Pallas matmul vs pure-jnp oracle.
+
+hypothesis sweeps shapes/dtypes; assert_allclose against ref.py is the core
+correctness signal for everything the model funnels through the kernel.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.matmul import matmul, matmul_bias_act, vmem_bytes
+from compile.kernels.ref import matmul_ref
+
+dims = st.integers(min_value=1, max_value=160)
+
+
+def _rand(key, shape, dtype):
+    x = jax.random.normal(key, shape, jnp.float32)
+    return x.astype(dtype)
+
+
+@settings(max_examples=40, deadline=None)
+@given(m=dims, k=dims, n=dims, seed=st.integers(0, 2**31 - 1))
+def test_matmul_matches_ref_f32(m, k, n, seed):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+    x = _rand(k1, (m, k), jnp.float32)
+    w = _rand(k2, (k, n), jnp.float32)
+    got = matmul(x, w)
+    want = matmul_ref(x, w)
+    assert got.shape == (m, n)
+    assert got.dtype == jnp.float32
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+@settings(max_examples=15, deadline=None)
+@given(m=dims, k=dims, n=dims, seed=st.integers(0, 2**31 - 1))
+def test_matmul_matches_ref_bf16_inputs(m, k, n, seed):
+    """bf16 inputs, f32 accumulation — the MXU-style mixed-precision path."""
+    k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+    x = _rand(k1, (m, k), jnp.bfloat16)
+    w = _rand(k2, (k, n), jnp.bfloat16)
+    got = matmul(x, w)
+    want = matmul_ref(x, w)
+    assert got.dtype == jnp.float32
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-2, atol=2e-2)
+
+
+@pytest.mark.parametrize("blocks", [(8, 8, 8), (16, 32, 8), (128, 128, 128),
+                                    (64, 128, 32)])
+def test_block_shape_invariance(blocks):
+    """The result must not depend on the chosen tiling."""
+    bm, bn, bk = blocks
+    k1, k2 = jax.random.split(jax.random.PRNGKey(7))
+    x = _rand(k1, (100, 70), jnp.float32)
+    w = _rand(k2, (70, 130), jnp.float32)
+    got = matmul(x, w, bm=bm, bn=bn, bk=bk)
+    want = matmul_ref(x, w)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_zero_and_identity():
+    eye = jnp.eye(64, dtype=jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(3), (64, 64), jnp.float32)
+    np.testing.assert_allclose(np.asarray(matmul(x, eye)), np.asarray(x),
+                               rtol=1e-6, atol=1e-6)
+    z = jnp.zeros((32, 16), jnp.float32)
+    out = matmul(z, jnp.ones((16, 8), jnp.float32))
+    assert float(jnp.abs(out).max()) == 0.0
+
+
+def test_rank_and_contraction_errors():
+    with pytest.raises(ValueError):
+        matmul(jnp.zeros((2, 3, 4)), jnp.zeros((4, 5)))
+    with pytest.raises(ValueError):
+        matmul(jnp.zeros((2, 3)), jnp.zeros((4, 5)))
+
+
+@pytest.mark.parametrize("act", ["none", "relu"])
+def test_bias_act_epilogue(act):
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(11), 3)
+    x = _rand(k1, (33, 20), jnp.float32)
+    w = _rand(k2, (20, 9), jnp.float32)
+    b = _rand(k3, (9,), jnp.float32)
+    got = matmul_bias_act(x, w, b, act=act)
+    want = matmul_ref(x, w) + b
+    if act == "relu":
+        want = jnp.maximum(want, 0.0)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_bad_activation_rejected():
+    with pytest.raises(ValueError):
+        matmul_bias_act(jnp.zeros((2, 2)), jnp.zeros((2, 2)), act="gelu?")
+
+
+def test_vmem_estimate_within_core_budget():
+    """Default MXU tiles must fit a 16 MB VMEM core budget with headroom."""
+    assert vmem_bytes() < 16 * 1024 * 1024 / 4

@@ -1,0 +1,123 @@
+"""L2 model correctness: Pallas-path forward vs pure-jnp oracle forward."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.model import (
+    TinyConfig,
+    flops_per_image,
+    forward,
+    forward_ref,
+    init_params,
+    param_count,
+)
+from compile.registry import ALL_STANDINS, BY_NAME, ENSEMBLES, IMN_STANDINS
+
+
+@pytest.mark.parametrize("name", [c.name for c in IMN_STANDINS])
+def test_forward_matches_ref(name):
+    cfg = BY_NAME[name]
+    params = init_params(cfg)
+    x = jax.random.normal(jax.random.PRNGKey(0), (4, cfg.img_size,
+                                                  cfg.img_size, cfg.in_ch))
+    got = forward(params, x, cfg)
+    want = forward_ref(params, x, cfg)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-5)
+
+
+@pytest.mark.parametrize("batch", [1, 3, 8])
+def test_forward_is_row_independent(batch):
+    """Prediction of image i must not depend on the other images in the
+    batch — the engine relies on this when re-batching segments."""
+    cfg = BY_NAME["resnet18_t"]
+    params = init_params(cfg)
+    x = jax.random.normal(jax.random.PRNGKey(5), (batch, 32, 32, 3))
+    full = np.asarray(forward(params, x, cfg))
+    for i in range(batch):
+        one = np.asarray(forward(params, x[i:i + 1], cfg))
+        np.testing.assert_allclose(full[i:i + 1], one, rtol=1e-4, atol=1e-5)
+
+
+def test_outputs_are_probabilities():
+    cfg = BY_NAME["vgg16_t"]
+    params = init_params(cfg)
+    x = jax.random.normal(jax.random.PRNGKey(2), (8, 32, 32, 3))
+    y = np.asarray(forward(params, x, cfg))
+    assert y.shape == (8, cfg.classes)
+    assert (y >= 0).all()
+    np.testing.assert_allclose(y.sum(axis=-1), np.ones(8), rtol=1e-5)
+
+
+def test_params_deterministic_per_name():
+    cfg = BY_NAME["resnet50_t"]
+    a = init_params(cfg)
+    b = init_params(cfg)
+    for ka, va in a.items():
+        vb = b[ka]
+        if isinstance(va, tuple):
+            for x, y in zip(va, vb):
+                np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+        else:
+            np.testing.assert_array_equal(np.asarray(va), np.asarray(vb))
+
+
+def test_models_differ():
+    """Two member architectures must give different predictions (the whole
+    point of an ensemble)."""
+    x = jax.random.normal(jax.random.PRNGKey(4), (2, 32, 32, 3))
+    cfg_a, cfg_b = BY_NAME["resnet18_t"], BY_NAME["resnet34_t"]
+    ya = np.asarray(forward(init_params(cfg_a), x, cfg_a))
+    yb = np.asarray(forward(init_params(cfg_b), x, cfg_b))
+    assert np.abs(ya - yb).max() > 1e-4
+
+
+def test_cost_ordering_preserved():
+    """Stand-in FLOPs must preserve the paper's family cost ordering."""
+    f = {c.name: flops_per_image(c) for c in ALL_STANDINS}
+    assert f["resnet18_t"] < f["resnet34_t"] < f["resnet50_t"] \
+        < f["resnet101_t"] < f["resnet152_t"]
+    assert f["mobilenetv2_t"] < f["resnet18_t"]
+    assert f["vgg16_t"] < f["vgg19_t"]
+    assert f["skeleton_small_t"] < f["skeleton_large_t"]
+
+
+def test_param_count_matches_shapes():
+    cfg = BY_NAME["mobilenetv2_t"]
+    p = init_params(cfg)
+    manual = 0
+    for v in jax.tree_util.tree_leaves(p):
+        manual += int(np.prod(v.shape))
+    assert manual == param_count(p)
+
+
+@settings(max_examples=8, deadline=None)
+@given(stem=st.integers(4, 12), b0=st.integers(1, 2), b1=st.integers(1, 2),
+       residual=st.booleans(), batch=st.integers(1, 4))
+def test_forward_matches_ref_random_configs(stem, b0, b1, residual, batch):
+    cfg = TinyConfig(name=f"hyp_{stem}_{b0}{b1}{int(residual)}",
+                     paper_name="hyp", stem_width=stem,
+                     stage_blocks=(b0, b1), residual=residual,
+                     classes=17, img_size=16, in_ch=3)
+    params = init_params(cfg)
+    x = jax.random.normal(jax.random.PRNGKey(batch), (batch, 16, 16, 3))
+    got = forward(params, x, cfg)
+    want = forward_ref(params, x, cfg)
+    assert got.shape == (batch, 17)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-4, atol=2e-5)
+
+
+def test_ensembles_reference_known_models():
+    for ens, members in ENSEMBLES.items():
+        assert members, ens
+        for m in members:
+            assert m in BY_NAME, (ens, m)
+    assert len(ENSEMBLES["IMN1"]) == 1
+    assert len(ENSEMBLES["IMN4"]) == 4
+    assert len(ENSEMBLES["IMN12"]) == 12
+    assert set(ENSEMBLES["IMN1"]) <= set(ENSEMBLES["IMN12"])
+    assert set(ENSEMBLES["IMN4"]) <= set(ENSEMBLES["IMN12"])

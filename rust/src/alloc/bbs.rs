@@ -1,0 +1,145 @@
+//! The "Best Batch Strategy" (BBS) baseline of Table III (§I.A, §IV.C).
+//!
+//! The commonly-used strategy (e.g. Triton's model-analyzer batch scan):
+//! dedicate one GPU per model and scan each model's batch size in
+//! isolation, keeping the per-model optimum. Requires as many GPUs as
+//! models — "a major limitation that requires small ensembles or large
+//! hardware investment".
+
+use anyhow::bail;
+
+use crate::alloc::matrix::AllocationMatrix;
+use crate::alloc::memory::fit_mem;
+use crate::device::DeviceSet;
+use crate::model::Ensemble;
+
+/// Result of the BBS scan.
+#[derive(Debug, Clone)]
+pub struct BbsReport {
+    pub matrix: AllocationMatrix,
+    /// Per-model chosen batch.
+    pub batches: Vec<u32>,
+    /// bench() evaluations consumed: M models × B batch values.
+    pub bench_count: usize,
+}
+
+/// Run BBS: model `m` goes on GPU `m`; for each model, bench every batch
+/// value of the single-worker matrix and keep the best. `bench` receives
+/// the full candidate matrix (with only that model placed) and returns the
+/// throughput of that single model (0.0 = does not fit).
+pub fn best_batch_strategy(
+    ensemble: &Ensemble,
+    devices: &DeviceSet,
+    batch_values: &[u32],
+    mut bench: impl FnMut(&AllocationMatrix) -> f64,
+) -> anyhow::Result<BbsReport> {
+    let gpus: Vec<usize> = (0..devices.len()).filter(|&d| devices[d].is_gpu()).collect();
+    if gpus.len() < ensemble.len() {
+        bail!(
+            "BBS needs one GPU per model: {} models but {} GPUs",
+            ensemble.len(),
+            gpus.len()
+        );
+    }
+
+    let nd = devices.len();
+    let nm = ensemble.len();
+    let mut final_matrix = AllocationMatrix::zeroed(nd, nm);
+    let mut batches = Vec::with_capacity(nm);
+    let mut bench_count = 0;
+
+    for m in 0..nm {
+        let gpu = gpus[m];
+        let mut best_b = 0u32;
+        let mut best_speed = f64::NEG_INFINITY;
+        for &b in batch_values {
+            let mut candidate = AllocationMatrix::zeroed(nd, nm);
+            candidate.set(gpu, m, b);
+            // memory-infeasible scans score 0 like the paper's bench()
+            let speed = if fit_single(&candidate, ensemble, devices, gpu) {
+                bench(&candidate)
+            } else {
+                0.0
+            };
+            bench_count += 1;
+            if speed > best_speed {
+                best_speed = speed;
+                best_b = b;
+            }
+        }
+        if best_b == 0 {
+            bail!("model {} fits no batch value on GPU{gpu}", ensemble.members[m].name);
+        }
+        final_matrix.set(gpu, m, best_b);
+        batches.push(best_b);
+    }
+
+    debug_assert!(final_matrix.all_models_placed());
+    debug_assert!(fit_mem(&final_matrix, ensemble, devices));
+    Ok(BbsReport { matrix: final_matrix, batches, bench_count })
+}
+
+fn fit_single(a: &AllocationMatrix, e: &Ensemble, d: &DeviceSet, device: usize) -> bool {
+    crate::alloc::memory::device_remaining_mb(a, e, d, device) >= 0.0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::{ensemble, EnsembleId};
+
+    /// Toy bench rewarding larger batches but OOM above 64 for model 0.
+    fn toy(e: &Ensemble) -> impl FnMut(&AllocationMatrix) -> f64 + '_ {
+        move |a: &AllocationMatrix| {
+            let p = &a.placements()[0];
+            if p.model == 0 && p.batch > 64 {
+                0.0
+            } else {
+                p.batch as f64 * (1.0 + p.model as f64) * e.len() as f64
+            }
+        }
+    }
+
+    #[test]
+    fn one_gpu_per_model_diagonal() {
+        let e = ensemble(EnsembleId::Imn4);
+        let d = DeviceSet::hgx(4);
+        let r = best_batch_strategy(&e, &d, &crate::alloc::BATCH_VALUES, toy(&e)).unwrap();
+        assert_eq!(r.matrix.worker_count(), 4);
+        for m in 0..4 {
+            let w = r.matrix.model_workers(m);
+            assert_eq!(w.len(), 1);
+            assert_eq!(w[0].device, m, "model {m} on GPU {m}");
+        }
+        // bench budget = M * B, the paper's "#bench" column
+        assert_eq!(r.bench_count, 4 * 5);
+    }
+
+    #[test]
+    fn picks_best_batch_under_constraint() {
+        let e = ensemble(EnsembleId::Imn4);
+        let d = DeviceSet::hgx(4);
+        let r = best_batch_strategy(&e, &d, &crate::alloc::BATCH_VALUES, toy(&e)).unwrap();
+        assert_eq!(r.batches[0], 64, "model 0 capped by toy OOM");
+        assert_eq!(r.batches[1], 128);
+    }
+
+    #[test]
+    fn refuses_insufficient_gpus() {
+        let e = ensemble(EnsembleId::Imn12);
+        let d = DeviceSet::hgx(4);
+        assert!(best_batch_strategy(&e, &d, &crate::alloc::BATCH_VALUES, |_| 1.0).is_err());
+    }
+
+    #[test]
+    fn cpu_never_used() {
+        let e = ensemble(EnsembleId::Imn1);
+        let d = DeviceSet::hgx(1); // GPU0 + CPU
+        let r = best_batch_strategy(&e, &d, &crate::alloc::BATCH_VALUES, |a| {
+            a.placements()[0].batch as f64
+        })
+        .unwrap();
+        let cpu = d.len() - 1;
+        assert!(r.matrix.device_workers(cpu).is_empty());
+    }
+}

@@ -1,0 +1,140 @@
+//! Persistent best-matrix cache (§II.E: "the best matrix is cached to
+//! avoid recomputing it again when the server will be restarted").
+//!
+//! Keyed by a fingerprint of (ensemble members + their stats, device set,
+//! optimizer knobs); stored as one JSON file per key under a cache dir.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::Context;
+use sha2::{Digest, Sha256};
+
+use crate::alloc::greedy::GreedyConfig;
+use crate::alloc::matrix::AllocationMatrix;
+use crate::device::DeviceSet;
+use crate::model::Ensemble;
+use crate::util::json::Json;
+
+/// File-backed matrix cache.
+#[derive(Debug, Clone)]
+pub struct MatrixCache {
+    dir: PathBuf,
+}
+
+/// Fingerprint of everything that determines the optimal matrix.
+pub fn cache_fingerprint(ensemble: &Ensemble, devices: &DeviceSet,
+                         cfg: &GreedyConfig) -> String {
+    let mut h = Sha256::new();
+    h.update(b"ensemble-serve-v1\0");
+    for m in &ensemble.members {
+        h.update(m.name.as_bytes());
+        h.update(format!("|{}|{}|{:?}|{}\0", m.params_m, m.gflops, m.scale, m.classes));
+    }
+    for d in devices.iter() {
+        h.update(format!("{}|{:?}|{}|{}\0", d.name, d.kind, d.mem_mb, d.eff_gflops));
+    }
+    h.update(format!(
+        "iter={}|neighs={}|batches={:?}|seed={}\0",
+        cfg.max_iter, cfg.max_neighs, cfg.batch_values, cfg.seed
+    ));
+    let digest = h.finalize();
+    digest.iter().map(|b| format!("{b:02x}")).collect::<String>()[..32].to_string()
+}
+
+impl MatrixCache {
+    pub fn new(dir: impl AsRef<Path>) -> MatrixCache {
+        MatrixCache { dir: dir.as_ref().to_path_buf() }
+    }
+
+    /// Default location: `$ES_CACHE_DIR` or `.escache/`.
+    pub fn default_cache() -> MatrixCache {
+        let dir = std::env::var("ES_CACHE_DIR")
+            .map(PathBuf::from)
+            .unwrap_or_else(|_| PathBuf::from(".escache"));
+        MatrixCache::new(dir)
+    }
+
+    fn path(&self, key: &str) -> PathBuf {
+        self.dir.join(format!("{key}.json"))
+    }
+
+    /// Look up a cached matrix (+ its recorded speed).
+    pub fn get(&self, key: &str) -> Option<(AllocationMatrix, f64)> {
+        let text = std::fs::read_to_string(self.path(key)).ok()?;
+        let j = Json::parse(&text).ok()?;
+        let m = AllocationMatrix::from_json(j.get("matrix")?).ok()?;
+        let speed = j.get("speed")?.as_f64()?;
+        Some((m, speed))
+    }
+
+    /// Store a matrix under the key (atomic-ish: write temp + rename).
+    pub fn put(&self, key: &str, matrix: &AllocationMatrix, speed: f64)
+        -> anyhow::Result<()> {
+        std::fs::create_dir_all(&self.dir)
+            .with_context(|| format!("creating {}", self.dir.display()))?;
+        let doc = Json::from_pairs([
+            ("matrix", matrix.to_json()),
+            ("speed", Json::Num(speed)),
+        ]);
+        let tmp = self.path(&format!("{key}.tmp"));
+        std::fs::write(&tmp, doc.to_string())?;
+        std::fs::rename(&tmp, self.path(key))?;
+        Ok(())
+    }
+
+    pub fn invalidate(&self, key: &str) {
+        let _ = std::fs::remove_file(self.path(key));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::{ensemble, EnsembleId};
+
+    fn tmpdir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("es-cache-test-{tag}-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        d
+    }
+
+    #[test]
+    fn roundtrip() {
+        let cache = MatrixCache::new(tmpdir("rt"));
+        let mut m = AllocationMatrix::zeroed(3, 2);
+        m.set(0, 0, 8);
+        m.set(1, 1, 64);
+        assert!(cache.get("k").is_none());
+        cache.put("k", &m, 123.5).unwrap();
+        let (got, speed) = cache.get("k").unwrap();
+        assert_eq!(got, m);
+        assert_eq!(speed, 123.5);
+        cache.invalidate("k");
+        assert!(cache.get("k").is_none());
+    }
+
+    #[test]
+    fn fingerprint_sensitivity() {
+        let e4 = ensemble(EnsembleId::Imn4);
+        let e12 = ensemble(EnsembleId::Imn12);
+        let d4 = DeviceSet::hgx(4);
+        let d8 = DeviceSet::hgx(8);
+        let cfg = GreedyConfig::default();
+        let base = cache_fingerprint(&e4, &d4, &cfg);
+        assert_ne!(base, cache_fingerprint(&e12, &d4, &cfg), "ensemble");
+        assert_ne!(base, cache_fingerprint(&e4, &d8, &cfg), "devices");
+        let cfg2 = GreedyConfig { max_neighs: 7, ..GreedyConfig::default() };
+        assert_ne!(base, cache_fingerprint(&e4, &d4, &cfg2), "knobs");
+        // stable across calls
+        assert_eq!(base, cache_fingerprint(&e4, &d4, &cfg));
+    }
+
+    #[test]
+    fn corrupt_cache_treated_as_miss() {
+        let dir = tmpdir("corrupt");
+        let cache = MatrixCache::new(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("bad.json"), "{not json").unwrap();
+        assert!(cache.get("bad").is_none());
+    }
+}

@@ -1,0 +1,288 @@
+//! Algorithm 2 — bounded greedy optimization (§II.E.2).
+//!
+//! Starting from Algorithm 1's matrix, each iteration benchmarks at most
+//! `max_neighs` randomly drawn neighbors and moves to the best one if it
+//! *strictly* improves the current throughput; otherwise the search stops
+//! (local maximum / plateau). At most `max_iter` iterations. The worst
+//! case returns a matrix at least as good as the starting one.
+
+use crate::alloc::matrix::AllocationMatrix;
+use crate::alloc::neighbors::{neighborhood, sample_neighborhood, total_neighs_upper};
+use crate::util::prng::Prng;
+
+/// Knobs of Algorithm 2 (§III: max_neighs=100, max_iter=10 in the paper;
+/// and "when D - M > max_iter, max_iter is replaced with D - M").
+#[derive(Debug, Clone)]
+pub struct GreedyConfig {
+    pub max_iter: usize,
+    pub max_neighs: usize,
+    pub batch_values: Vec<u32>,
+    pub seed: u64,
+    /// Apply the paper's `max_iter = max(max_iter, D - M)` rule.
+    pub devices_minus_models_rule: bool,
+}
+
+impl Default for GreedyConfig {
+    fn default() -> Self {
+        GreedyConfig {
+            max_iter: 10,
+            max_neighs: 100,
+            batch_values: crate::alloc::BATCH_VALUES.to_vec(),
+            seed: 0,
+            devices_minus_models_rule: true,
+        }
+    }
+}
+
+/// Outcome of a greedy run, including the exploration trace used by the
+/// stability analysis (§IV.B) and Table III's #bench column.
+#[derive(Debug, Clone)]
+pub struct GreedyReport {
+    pub best: AllocationMatrix,
+    pub best_speed: f64,
+    pub start_speed: f64,
+    pub iterations: usize,
+    /// Number of bench() evaluations consumed.
+    pub bench_count: usize,
+    /// (iteration, best-so-far speed) after each accepted move.
+    pub trace: Vec<(usize, f64)>,
+    /// max_neighs / total_neighs — the visited-rate volatility indicator.
+    pub visit_rate: f64,
+    pub stopped_at_local_max: bool,
+}
+
+/// Run Algorithm 2. `bench` maps a matrix to the throughput to maximize
+/// (img/s), returning 0.0 when a DNN instance does not fit in memory.
+pub fn bounded_greedy(
+    start: &AllocationMatrix,
+    cfg: &GreedyConfig,
+    mut bench: impl FnMut(&AllocationMatrix) -> f64,
+) -> GreedyReport {
+    let mut rng = Prng::new(cfg.seed);
+    let mut a = start.clone();
+    let mut a_speed = bench(&a);
+    let start_speed = a_speed;
+    let mut bench_count = 1;
+    let mut trace = vec![(0usize, a_speed)];
+
+    let max_iter = if cfg.devices_minus_models_rule {
+        let d = a.n_devices();
+        let m = a.n_models();
+        if d > m && d - m > cfg.max_iter {
+            d - m
+        } else {
+            cfg.max_iter
+        }
+    } else {
+        cfg.max_iter
+    };
+
+    let upper = total_neighs_upper(a.n_devices(), a.n_models(), cfg.batch_values.len());
+    let visit_rate = cfg.max_neighs as f64 / upper as f64;
+
+    let mut iterations = 0;
+    let mut stopped_at_local_max = false;
+    while iterations < max_iter {
+        let neighs = sample_neighborhood(&a, &cfg.batch_values, cfg.max_neighs, &mut rng);
+        let mut best_a: Option<AllocationMatrix> = None;
+        let mut best_speed = f64::NEG_INFINITY;
+        for n in neighs {
+            let s = bench(&n);
+            bench_count += 1;
+            if s > best_speed {
+                best_speed = s;
+                best_a = Some(n);
+            }
+        }
+        match best_a {
+            Some(n) if best_speed > a_speed => {
+                a = n;
+                a_speed = best_speed;
+                iterations += 1;
+                trace.push((iterations, a_speed));
+            }
+            _ => {
+                // "if we do not improve strictly, the algorithm is stopped"
+                stopped_at_local_max = true;
+                break;
+            }
+        }
+    }
+
+    GreedyReport {
+        best: a,
+        best_speed: a_speed,
+        start_speed,
+        iterations,
+        bench_count,
+        trace,
+        visit_rate,
+        stopped_at_local_max,
+    }
+}
+
+/// Exhaustive variant (visit the whole neighborhood each iteration) — used
+/// by tests and small-problem ablations where `max_neighs >= total_neighs`.
+pub fn full_greedy(
+    start: &AllocationMatrix,
+    batch_values: &[u32],
+    max_iter: usize,
+    mut bench: impl FnMut(&AllocationMatrix) -> f64,
+) -> GreedyReport {
+    let mut a = start.clone();
+    let mut a_speed = bench(&a);
+    let start_speed = a_speed;
+    let mut bench_count = 1;
+    let mut trace = vec![(0usize, a_speed)];
+    let mut iterations = 0;
+    let mut stopped = false;
+    while iterations < max_iter {
+        let mut best_a = None;
+        let mut best_speed = f64::NEG_INFINITY;
+        for n in neighborhood(&a, batch_values) {
+            let s = bench(&n);
+            bench_count += 1;
+            if s > best_speed {
+                best_speed = s;
+                best_a = Some(n);
+            }
+        }
+        match best_a {
+            Some(n) if best_speed > a_speed => {
+                a = n;
+                a_speed = best_speed;
+                iterations += 1;
+                trace.push((iterations, a_speed));
+            }
+            _ => {
+                stopped = true;
+                break;
+            }
+        }
+    }
+    GreedyReport {
+        best: a,
+        best_speed: a_speed,
+        start_speed,
+        iterations,
+        bench_count,
+        trace,
+        visit_rate: 1.0,
+        stopped_at_local_max: stopped,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn start_2x2() -> AllocationMatrix {
+        let mut a = AllocationMatrix::zeroed(2, 2);
+        a.set(0, 0, 8);
+        a.set(0, 1, 8);
+        a
+    }
+
+    /// Toy objective: reward batch 64 on device 1, penalize co-location.
+    fn toy_bench(a: &AllocationMatrix) -> f64 {
+        let mut s = 0.0;
+        for p in a.placements() {
+            s += if p.batch == 64 { 10.0 } else { 1.0 };
+            s += p.device as f64; // prefer device 1
+        }
+        let colo = (0..a.n_devices())
+            .map(|d| a.device_workers(d).len().saturating_sub(1))
+            .sum::<usize>();
+        s - 3.0 * colo as f64
+    }
+
+    #[test]
+    fn never_worse_than_start() {
+        let start = start_2x2();
+        let cfg = GreedyConfig { seed: 7, ..Default::default() };
+        let r = bounded_greedy(&start, &cfg, toy_bench);
+        assert!(r.best_speed >= r.start_speed);
+        assert!(r.best.all_models_placed());
+    }
+
+    #[test]
+    fn improves_toward_toy_optimum() {
+        let start = start_2x2();
+        let r = full_greedy(&start, &crate::alloc::BATCH_VALUES, 20, toy_bench);
+        // optimum splits the two models across devices at batch 64
+        assert!(r.best_speed > toy_bench(&start));
+        let p = r.best.placements();
+        assert!(p.iter().any(|p| p.batch == 64));
+    }
+
+    #[test]
+    fn stops_on_plateau() {
+        let start = start_2x2();
+        let cfg = GreedyConfig { seed: 1, ..Default::default() };
+        let r = bounded_greedy(&start, &cfg, |_| 5.0); // flat objective
+        assert_eq!(r.iterations, 0);
+        assert!(r.stopped_at_local_max);
+        assert_eq!(r.best, start);
+    }
+
+    #[test]
+    fn respects_max_iter() {
+        let start = start_2x2();
+        let cfg = GreedyConfig { max_iter: 3, devices_minus_models_rule: false,
+                                 ..Default::default() };
+        // strictly increasing objective: always improves, runs max_iter
+        let mut calls = 0usize;
+        let r = bounded_greedy(&start, &cfg, |_| {
+            calls += 1;
+            calls as f64
+        });
+        assert_eq!(r.iterations, 3);
+    }
+
+    #[test]
+    fn devices_minus_models_rule() {
+        // 16 devices, 1 model: paper forces max_iter to D - M = 15 so the
+        // single model has a chance to spread over all devices.
+        let mut start = AllocationMatrix::zeroed(16, 1);
+        start.set(0, 0, 8);
+        let cfg = GreedyConfig { max_iter: 10, seed: 3, ..Default::default() };
+        let mut calls = 0usize;
+        let r = bounded_greedy(&start, &cfg, |a| {
+            calls += 1;
+            // reward worker count: keeps improving for > 10 iterations
+            a.worker_count() as f64 + calls as f64 * 1e-9
+        });
+        assert!(r.iterations > 10, "iterations={}", r.iterations);
+    }
+
+    #[test]
+    fn infeasible_matrices_scored_zero_are_avoided() {
+        let start = start_2x2();
+        let cfg = GreedyConfig { seed: 5, ..Default::default() };
+        // matrices with any batch > 8 are "OOM" (bench -> 0)
+        let r = bounded_greedy(&start, &cfg, |a| {
+            if a.placements().iter().any(|p| p.batch > 8) {
+                0.0
+            } else {
+                a.worker_count() as f64
+            }
+        });
+        assert!(r.best.placements().iter().all(|p| p.batch <= 8));
+    }
+
+    #[test]
+    fn bench_count_reported() {
+        let start = start_2x2();
+        let cfg = GreedyConfig { max_neighs: 6, max_iter: 2,
+                                 devices_minus_models_rule: false,
+                                 ..Default::default() };
+        let mut calls = 0usize;
+        let r = bounded_greedy(&start, &cfg, |_| {
+            calls += 1;
+            calls as f64
+        });
+        assert_eq!(r.bench_count, calls);
+        // 1 (start) + <=6 per iteration * (2 accepted + possibly final)
+        assert!(r.bench_count >= 1 + 6 * 2);
+    }
+}

@@ -1,0 +1,281 @@
+//! The allocation matrix data structure (§II.B).
+//!
+//! Rows are devices, columns are models. Entry 0 = no worker; a non-zero
+//! entry is the batch size of one worker (a DNN instance). Several
+//! non-zeros in a row = co-localization; several non-zeros in a column =
+//! data-parallel instances of the same model. Rows may be all-zero (an
+//! unused device) but a column of zeros is illicit: every model of the
+//! ensemble must be served.
+
+use std::fmt;
+
+use crate::util::json::Json;
+
+/// devices × models matrix of batch sizes (0 = no worker).
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct AllocationMatrix {
+    n_devices: usize,
+    n_models: usize,
+    /// Row-major `[device][model]`.
+    a: Vec<u32>,
+}
+
+/// One placed worker, extracted from the matrix.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Placement {
+    pub device: usize,
+    pub model: usize,
+    pub batch: u32,
+}
+
+impl AllocationMatrix {
+    /// The all-zero matrix (Algorithm 2's notation for "start empty").
+    pub fn zeroed(n_devices: usize, n_models: usize) -> AllocationMatrix {
+        AllocationMatrix { n_devices, n_models, a: vec![0; n_devices * n_models] }
+    }
+
+    pub fn n_devices(&self) -> usize {
+        self.n_devices
+    }
+
+    pub fn n_models(&self) -> usize {
+        self.n_models
+    }
+
+    #[inline]
+    pub fn get(&self, device: usize, model: usize) -> u32 {
+        self.a[device * self.n_models + model]
+    }
+
+    #[inline]
+    pub fn set(&mut self, device: usize, model: usize, batch: u32) {
+        self.a[device * self.n_models + model] = batch;
+    }
+
+    /// Non-zero entries as (device, model, batch) workers, row-major order
+    /// — this is the worker-pool construction order.
+    pub fn placements(&self) -> Vec<Placement> {
+        let mut out = Vec::new();
+        for d in 0..self.n_devices {
+            for m in 0..self.n_models {
+                let b = self.get(d, m);
+                if b != 0 {
+                    out.push(Placement { device: d, model: m, batch: b });
+                }
+            }
+        }
+        out
+    }
+
+    pub fn worker_count(&self) -> usize {
+        self.a.iter().filter(|&&b| b != 0).count()
+    }
+
+    /// Workers of one model (its data-parallel group).
+    pub fn model_workers(&self, model: usize) -> Vec<Placement> {
+        (0..self.n_devices)
+            .filter_map(|d| {
+                let b = self.get(d, model);
+                (b != 0).then_some(Placement { device: d, model, batch: b })
+            })
+            .collect()
+    }
+
+    /// Workers co-localized on one device.
+    pub fn device_workers(&self, device: usize) -> Vec<Placement> {
+        (0..self.n_models)
+            .filter_map(|m| {
+                let b = self.get(device, m);
+                (b != 0).then_some(Placement { device, model: m, batch: b })
+            })
+            .collect()
+    }
+
+    /// Validity (§II.B): every model must have at least one worker ("it is
+    /// illicit to have a column with only zero values"). All-zero rows are
+    /// fine (unused devices).
+    pub fn all_models_placed(&self) -> bool {
+        (0..self.n_models).all(|m| (0..self.n_devices).any(|d| self.get(d, m) != 0))
+    }
+
+    /// Models with no worker (for error reporting).
+    pub fn unplaced_models(&self) -> Vec<usize> {
+        (0..self.n_models)
+            .filter(|&m| (0..self.n_devices).all(|d| self.get(d, m) == 0))
+            .collect()
+    }
+
+    /// Entries differing from `other` (Algorithm 2's neighborhood relation
+    /// is `hamming_distance == 1`).
+    pub fn hamming_distance(&self, other: &AllocationMatrix) -> usize {
+        assert_eq!(self.a.len(), other.a.len(), "shape mismatch");
+        self.a.iter().zip(&other.a).filter(|(x, y)| x != y).count()
+    }
+
+    /// Stable content key for caching.
+    pub fn cache_key(&self) -> String {
+        let mut s = format!("{}x{}:", self.n_devices, self.n_models);
+        for (i, v) in self.a.iter().enumerate() {
+            if i > 0 {
+                s.push(',');
+            }
+            s.push_str(&v.to_string());
+        }
+        s
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::from_pairs([
+            ("devices", Json::Num(self.n_devices as f64)),
+            ("models", Json::Num(self.n_models as f64)),
+            (
+                "rows",
+                Json::Arr(
+                    (0..self.n_devices)
+                        .map(|d| {
+                            Json::Arr(
+                                (0..self.n_models)
+                                    .map(|m| Json::Num(self.get(d, m) as f64))
+                                    .collect(),
+                            )
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> anyhow::Result<AllocationMatrix> {
+        use anyhow::Context;
+        let nd = j.get("devices").and_then(Json::as_usize).context("devices")?;
+        let nm = j.get("models").and_then(Json::as_usize).context("models")?;
+        let rows = j.get("rows").and_then(Json::as_arr).context("rows")?;
+        anyhow::ensure!(rows.len() == nd, "row count mismatch");
+        let mut m = AllocationMatrix::zeroed(nd, nm);
+        for (d, row) in rows.iter().enumerate() {
+            let row = row.as_arr().context("row")?;
+            anyhow::ensure!(row.len() == nm, "column count mismatch");
+            for (mi, v) in row.iter().enumerate() {
+                m.set(d, mi, v.as_usize().context("cell")? as u32);
+            }
+        }
+        Ok(m)
+    }
+
+    /// Pretty table like the paper's Table II.
+    pub fn render(&self, device_names: &[String], model_names: &[String]) -> String {
+        let mut out = String::new();
+        let w = model_names.iter().map(|n| n.len()).max().unwrap_or(4).max(5);
+        let dw = device_names.iter().map(|n| n.len()).max().unwrap_or(4).max(4);
+        out.push_str(&format!("{:<dw$}", ""));
+        for n in model_names {
+            out.push_str(&format!(" {:>w$}", n));
+        }
+        out.push('\n');
+        for d in 0..self.n_devices {
+            out.push_str(&format!("{:<dw$}", device_names.get(d).map(String::as_str).unwrap_or("?")));
+            for m in 0..self.n_models {
+                out.push_str(&format!(" {:>w$}", self.get(d, m)));
+            }
+            out.push('\n');
+        }
+        out
+    }
+}
+
+impl fmt::Display for AllocationMatrix {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        for d in 0..self.n_devices {
+            for m in 0..self.n_models {
+                if m > 0 {
+                    write!(f, " ")?;
+                }
+                write!(f, "{:>3}", self.get(d, m))?;
+            }
+            writeln!(f)?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zeroed_is_invalid_until_all_columns_filled() {
+        let mut a = AllocationMatrix::zeroed(3, 2);
+        assert!(!a.all_models_placed());
+        assert_eq!(a.unplaced_models(), vec![0, 1]);
+        a.set(0, 0, 8);
+        assert!(!a.all_models_placed());
+        a.set(2, 1, 16);
+        assert!(a.all_models_placed());
+        assert!(a.unplaced_models().is_empty());
+    }
+
+    #[test]
+    fn placements_row_major() {
+        let mut a = AllocationMatrix::zeroed(2, 2);
+        a.set(0, 1, 8);
+        a.set(1, 0, 16);
+        a.set(1, 1, 32);
+        let p = a.placements();
+        assert_eq!(p.len(), 3);
+        assert_eq!((p[0].device, p[0].model, p[0].batch), (0, 1, 8));
+        assert_eq!((p[1].device, p[1].model, p[1].batch), (1, 0, 16));
+        assert_eq!(a.worker_count(), 3);
+    }
+
+    #[test]
+    fn data_parallel_and_colocalization_views() {
+        // the paper's fig. 1 toy example: B data-parallel on J and K,
+        // A and B co-localized on J
+        let mut a = AllocationMatrix::zeroed(3, 2); // devices I,J,K x models A,B
+        a.set(1, 0, 8); // A1 on J
+        a.set(1, 1, 8); // B1 on J
+        a.set(2, 1, 16); // B2 on K
+        assert_eq!(a.model_workers(1).len(), 2, "B is data-parallel");
+        assert_eq!(a.device_workers(1).len(), 2, "J co-localizes A1+B1");
+        assert_eq!(a.device_workers(0).len(), 0, "I unused");
+        assert!(a.all_models_placed());
+    }
+
+    #[test]
+    fn hamming() {
+        let mut a = AllocationMatrix::zeroed(2, 2);
+        a.set(0, 0, 8);
+        let mut b = a.clone();
+        assert_eq!(a.hamming_distance(&b), 0);
+        b.set(0, 0, 16);
+        assert_eq!(a.hamming_distance(&b), 1);
+        b.set(1, 1, 8);
+        assert_eq!(a.hamming_distance(&b), 2);
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let mut a = AllocationMatrix::zeroed(2, 3);
+        a.set(0, 0, 8);
+        a.set(1, 2, 128);
+        let j = a.to_json();
+        let b = AllocationMatrix::from_json(&j).unwrap();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn cache_key_distinguishes() {
+        let mut a = AllocationMatrix::zeroed(2, 2);
+        let b = a.clone();
+        a.set(0, 0, 8);
+        assert_ne!(a.cache_key(), b.cache_key());
+    }
+
+    #[test]
+    fn render_contains_names() {
+        let mut a = AllocationMatrix::zeroed(2, 1);
+        a.set(0, 0, 64);
+        let s = a.render(&["GPU0".into(), "CPU".into()], &["ResNet50".into()]);
+        assert!(s.contains("GPU0") && s.contains("ResNet50") && s.contains("64"));
+    }
+}

@@ -1,0 +1,100 @@
+//! Memory feasibility: the paper's `fit_mem` predicate plus per-device
+//! accounting used by the executors and the optimizer.
+
+use crate::alloc::matrix::AllocationMatrix;
+use crate::device::DeviceSet;
+use crate::model::Ensemble;
+
+/// Memory used on `device` by the workers the matrix places there, MB.
+pub fn device_usage_mb(a: &AllocationMatrix, ensemble: &Ensemble, device: usize) -> f64 {
+    (0..a.n_models())
+        .map(|m| {
+            let b = a.get(device, m);
+            if b == 0 {
+                0.0
+            } else {
+                ensemble.members[m].worker_mem_mb(b as usize)
+            }
+        })
+        .sum()
+}
+
+/// Remaining memory on `device` under allocation `a`, MB (can be negative
+/// for infeasible matrices).
+pub fn device_remaining_mb(
+    a: &AllocationMatrix,
+    ensemble: &Ensemble,
+    devices: &DeviceSet,
+    device: usize,
+) -> f64 {
+    devices[device].mem_mb as f64 - device_usage_mb(a, ensemble, device)
+}
+
+/// The paper's `fit_mem`: is the allocation feasible in terms of memory
+/// availability on every device?
+pub fn fit_mem(a: &AllocationMatrix, ensemble: &Ensemble, devices: &DeviceSet) -> bool {
+    assert_eq!(a.n_devices(), devices.len(), "matrix/device shape");
+    assert_eq!(a.n_models(), ensemble.len(), "matrix/ensemble shape");
+    (0..a.n_devices()).all(|d| device_remaining_mb(a, ensemble, devices, d) >= 0.0)
+}
+
+/// Total footprint of the whole allocation, MB.
+pub fn total_usage_mb(a: &AllocationMatrix, ensemble: &Ensemble) -> f64 {
+    (0..a.n_devices())
+        .map(|d| device_usage_mb(a, ensemble, d))
+        .sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::{ensemble, EnsembleId};
+
+    #[test]
+    fn empty_matrix_fits() {
+        let e = ensemble(EnsembleId::Imn4);
+        let d = DeviceSet::hgx(2);
+        let a = AllocationMatrix::zeroed(d.len(), e.len());
+        assert!(fit_mem(&a, &e, &d));
+        assert_eq!(total_usage_mb(&a, &e), 0.0);
+    }
+
+    #[test]
+    fn usage_accumulates_per_device() {
+        let e = ensemble(EnsembleId::Imn4);
+        let d = DeviceSet::hgx(2);
+        let mut a = AllocationMatrix::zeroed(d.len(), e.len());
+        a.set(0, 0, 8);
+        let one = device_usage_mb(&a, &e, 0);
+        assert!(one > 0.0);
+        a.set(0, 1, 8);
+        let two = device_usage_mb(&a, &e, 0);
+        assert!(two > one);
+        assert_eq!(device_usage_mb(&a, &e, 1), 0.0);
+        assert!((total_usage_mb(&a, &e) - two).abs() < 1e-9);
+    }
+
+    #[test]
+    fn overload_detected() {
+        let e = ensemble(EnsembleId::Imn4);
+        let d = DeviceSet::hgx(1);
+        let mut a = AllocationMatrix::zeroed(d.len(), e.len());
+        // all four IMN members on one 16 GB V100 must not fit (Table I '-')
+        for m in 0..e.len() {
+            a.set(0, m, 8);
+        }
+        assert!(!fit_mem(&a, &e, &d));
+        assert!(device_remaining_mb(&a, &e, &d, 0) < 0.0);
+    }
+
+    #[test]
+    fn bigger_batch_uses_more() {
+        let e = ensemble(EnsembleId::Imn1);
+        let d = DeviceSet::hgx(1);
+        let mut a8 = AllocationMatrix::zeroed(d.len(), e.len());
+        a8.set(0, 0, 8);
+        let mut a128 = AllocationMatrix::zeroed(d.len(), e.len());
+        a128.set(0, 0, 128);
+        assert!(total_usage_mb(&a128, &e) > total_usage_mb(&a8, &e));
+    }
+}

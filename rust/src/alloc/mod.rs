@@ -1,0 +1,35 @@
+//! The allocation matrix and its optimizer — the paper's first two
+//! contributions.
+//!
+//! * [`matrix`] — the `devices × models` allocation matrix (§II.B):
+//!   `A[d][m] = 0` means no worker, any other value is the batch size of a
+//!   worker running an instance of model `m` on device `d`.
+//! * [`memory`] — `fit_mem` and per-device memory accounting.
+//! * [`worstfit`] — Algorithm 1: Worst-Fit-Decreasing with GPU priority
+//!   (plus First/Best/Next-Fit comparators for the ablation bench).
+//! * [`neighbors`] — the single-element-change neighborhood and the
+//!   equation 1/2 counting functions.
+//! * [`greedy`] — Algorithm 2: bounded greedy optimization.
+//! * [`bbs`] — the "Best Batch Strategy" baseline of Table III.
+//! * [`cache`] — persistent best-matrix cache (§II.E: "the best matrix is
+//!   cached to avoid recomputing it when the server restarts").
+
+pub mod matrix;
+pub mod memory;
+pub mod worstfit;
+pub mod neighbors;
+pub mod greedy;
+pub mod bbs;
+pub mod cache;
+
+pub use bbs::best_batch_strategy;
+pub use greedy::{bounded_greedy, GreedyConfig, GreedyReport};
+pub use matrix::AllocationMatrix;
+pub use memory::fit_mem;
+pub use worstfit::{worst_fit_decreasing, FitHeuristic};
+
+/// The paper's possible batch-size values (§III): {8, 16, 32, 64, 128}.
+pub const BATCH_VALUES: [u32; 5] = [8, 16, 32, 64, 128];
+
+/// Default (minimum) batch used by Algorithm 1 when first fitting models.
+pub const DEFAULT_BATCH: u32 = 8;

@@ -1,0 +1,159 @@
+//! The neighborhood relation of Algorithm 2 and the decision-space
+//! counting of equations 1 and 2 (§II.E.2).
+//!
+//! Two matrices are neighbors iff both are valid (no zero column) and they
+//! differ in exactly one element. The element can change to any batch
+//! value in B, or to 0 (removing a worker) — giving the `(B+1) * (D*M) - F`
+//! neighbor count of equation 2, where F counts forbidden matrices (those
+//! that would zero a column, plus the unchanged matrix itself per cell).
+
+use crate::alloc::matrix::AllocationMatrix;
+use crate::util::prng::Prng;
+
+/// Equation 1: `((B+1)^D - 1)^M` — total valid matrices (as f64: the paper
+/// itself quotes 1.3e31, far beyond u64).
+pub fn total_matrices(n_devices: usize, n_models: usize, n_batch_values: usize) -> f64 {
+    let col = ((n_batch_values + 1) as f64).powi(n_devices as i32) - 1.0;
+    col.powi(n_models as i32)
+}
+
+/// Equation 2 upper bound: `(B+1) * (D*M)` (before subtracting F).
+pub fn total_neighs_upper(n_devices: usize, n_models: usize, n_batch_values: usize) -> usize {
+    (n_batch_values + 1) * n_devices * n_models
+}
+
+/// Enumerate all neighbors of `a` (valid matrices at Hamming distance 1).
+pub fn neighborhood(a: &AllocationMatrix, batch_values: &[u32]) -> Vec<AllocationMatrix> {
+    let mut out = Vec::new();
+    for d in 0..a.n_devices() {
+        for m in 0..a.n_models() {
+            let cur = a.get(d, m);
+            // set to every batch value != current
+            for &b in batch_values {
+                if b != cur {
+                    let mut n = a.clone();
+                    n.set(d, m, b);
+                    out.push(n);
+                }
+            }
+            // remove the worker, unless that zeroes the column
+            if cur != 0 {
+                let mut n = a.clone();
+                n.set(d, m, 0);
+                if n.all_models_placed() {
+                    out.push(n);
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Draw at most `max_neighs` distinct neighbors uniformly (line 8–9 of
+/// Algorithm 2). Enumerating then sampling keeps the draw exactly uniform
+/// over the *valid* neighborhood.
+pub fn sample_neighborhood(
+    a: &AllocationMatrix,
+    batch_values: &[u32],
+    max_neighs: usize,
+    rng: &mut Prng,
+) -> Vec<AllocationMatrix> {
+    let mut all = neighborhood(a, batch_values);
+    if all.len() <= max_neighs {
+        return all;
+    }
+    let idx = rng.sample_indices(all.len(), max_neighs);
+    let mut picked: Vec<AllocationMatrix> = Vec::with_capacity(max_neighs);
+    // take by index without cloning twice: sort desc and swap_remove
+    let mut idx = idx;
+    idx.sort_unstable_by(|x, y| y.cmp(x));
+    for i in idx {
+        picked.push(all.swap_remove(i));
+    }
+    picked
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::alloc::BATCH_VALUES;
+
+    fn valid_2x2() -> AllocationMatrix {
+        let mut a = AllocationMatrix::zeroed(2, 2);
+        a.set(0, 0, 8);
+        a.set(1, 1, 16);
+        a
+    }
+
+    #[test]
+    fn equation1_paper_example() {
+        // "8 DNNs, 4 GPUs and 1 CPU: total approx 1.3e31"
+        let t = total_matrices(5, 8, 5);
+        assert!((1.0e31..2.0e31).contains(&t), "t={t:e}");
+    }
+
+    #[test]
+    fn equation2_paper_example() {
+        // "between 232 and 240 neighbors at each iteration"
+        let upper = total_neighs_upper(5, 8, 5);
+        assert_eq!(upper, 240);
+    }
+
+    #[test]
+    fn neighbors_are_valid_and_distance_one() {
+        let a = valid_2x2();
+        let ns = neighborhood(&a, &BATCH_VALUES);
+        assert!(!ns.is_empty());
+        for n in &ns {
+            assert_eq!(a.hamming_distance(n), 1);
+            assert!(n.all_models_placed());
+        }
+        // all distinct
+        let mut keys: Vec<String> = ns.iter().map(|n| n.cache_key()).collect();
+        keys.sort();
+        keys.dedup();
+        assert_eq!(keys.len(), ns.len());
+    }
+
+    #[test]
+    fn neighbor_count_bounds() {
+        let a = valid_2x2();
+        let ns = neighborhood(&a, &BATCH_VALUES);
+        let upper = total_neighs_upper(2, 2, BATCH_VALUES.len());
+        assert!(ns.len() < upper);
+        // exact F here: each of the 4 cells contributes 5 set-moves minus
+        // 1 if it already holds a batch value, plus a remove-move when
+        // allowed. cells (0,0) and (1,1): 4 set + 0 remove (would zero the
+        // column). cells (0,1),(1,0): 5 set + 0 remove (already 0).
+        assert_eq!(ns.len(), 4 + 4 + 5 + 5);
+    }
+
+    #[test]
+    fn removal_kept_when_column_stays_covered() {
+        let mut a = valid_2x2();
+        a.set(1, 0, 32); // model 0 now data-parallel on both devices
+        let ns = neighborhood(&a, &BATCH_VALUES);
+        // some neighbor must remove one of model 0's two workers
+        assert!(ns.iter().any(|n| n.worker_count() == a.worker_count() - 1));
+    }
+
+    #[test]
+    fn sampling_uniform_subset() {
+        let a = valid_2x2();
+        let mut rng = Prng::new(1);
+        let all = neighborhood(&a, &BATCH_VALUES);
+        let s = sample_neighborhood(&a, &BATCH_VALUES, 5, &mut rng);
+        assert_eq!(s.len(), 5);
+        for n in &s {
+            assert!(all.contains(n));
+        }
+        // distinct draws
+        let mut keys: Vec<String> = s.iter().map(|n| n.cache_key()).collect();
+        keys.sort();
+        keys.dedup();
+        assert_eq!(keys.len(), 5);
+        // asking for more than exists returns everything
+        let s = sample_neighborhood(&a, &BATCH_VALUES, 10_000, &mut rng);
+        assert_eq!(s.len(), all.len());
+    }
+}

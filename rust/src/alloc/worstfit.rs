@@ -1,0 +1,256 @@
+//! Algorithm 1 — Worst-Fit-Decreasing with priority to GPUs (§II.E.1).
+//!
+//! Bin-packing of DNNs (objects) into devices (bins) at the minimum batch
+//! size. Models are sorted by decreasing memory footprint; each is placed
+//! on the device with the most remaining memory, trying GPUs first and
+//! falling back to the CPU side only when no GPU fits — "the CPUs start to
+//! be used only when no more space is available on the GPUs".
+//!
+//! First-Fit/Best-Fit/Next-Fit variants are provided for the ablation
+//! bench: the paper argues Worst-Fit balances load across homogeneous
+//! devices while the others pile models onto the first bins.
+
+use thiserror::Error;
+
+use crate::alloc::matrix::AllocationMatrix;
+use crate::alloc::memory::device_remaining_mb;
+use crate::device::{DeviceKind, DeviceSet};
+use crate::model::Ensemble;
+
+/// Placement failure: no device can take the model.
+#[derive(Debug, Error)]
+#[error("no device has enough memory for model '{model}' ({mem_mb:.0} MB needed at batch {batch})")]
+pub struct OutOfMemory {
+    pub model: String,
+    pub mem_mb: f64,
+    pub batch: u32,
+}
+
+/// Bin-selection heuristic for the packing ablation.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FitHeuristic {
+    /// The paper's choice: most remaining memory first.
+    WorstFit,
+    /// Lowest-index device that fits.
+    FirstFit,
+    /// Least remaining memory that still fits.
+    BestFit,
+    /// The device used last, else advance (classic Next-Fit).
+    NextFit,
+}
+
+impl FitHeuristic {
+    pub const ALL: [FitHeuristic; 4] = [
+        FitHeuristic::WorstFit,
+        FitHeuristic::FirstFit,
+        FitHeuristic::BestFit,
+        FitHeuristic::NextFit,
+    ];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            FitHeuristic::WorstFit => "worst-fit",
+            FitHeuristic::FirstFit => "first-fit",
+            FitHeuristic::BestFit => "best-fit",
+            FitHeuristic::NextFit => "next-fit",
+        }
+    }
+}
+
+/// Algorithm 1 with the paper's parameters.
+pub fn worst_fit_decreasing(
+    ensemble: &Ensemble,
+    devices: &DeviceSet,
+    default_batch: u32,
+) -> Result<AllocationMatrix, OutOfMemory> {
+    pack(ensemble, devices, default_batch, FitHeuristic::WorstFit)
+}
+
+/// Generalized Algorithm 1 (heuristic selectable for the ablation).
+pub fn pack(
+    ensemble: &Ensemble,
+    devices: &DeviceSet,
+    default_batch: u32,
+    heuristic: FitHeuristic,
+) -> Result<AllocationMatrix, OutOfMemory> {
+    let mut a = AllocationMatrix::zeroed(devices.len(), ensemble.len());
+
+    // "M sorted in desc. order of memory size"
+    let mut order: Vec<usize> = (0..ensemble.len()).collect();
+    order.sort_by(|&x, &y| {
+        let mx = ensemble.members[x].worker_mem_mb(default_batch as usize);
+        let my = ensemble.members[y].worker_mem_mb(default_batch as usize);
+        my.partial_cmp(&mx).unwrap()
+    });
+
+    // Next-Fit cursor per kind
+    let mut next_cursor: [usize; 2] = [0, 0];
+
+    for m in order {
+        let need = ensemble.members[m].worker_mem_mb(default_batch as usize);
+        // GPU side first, CPU side only if no GPU fits
+        let placed = [DeviceKind::Gpu, DeviceKind::Cpu].iter().any(|&kind| {
+            match choose_device(&a, ensemble, devices, kind, need, heuristic,
+                                &mut next_cursor) {
+                Some(d) => {
+                    a.set(d, m, default_batch);
+                    true
+                }
+                None => false,
+            }
+        });
+        if !placed {
+            return Err(OutOfMemory {
+                model: ensemble.members[m].name.clone(),
+                mem_mb: need,
+                batch: default_batch,
+            });
+        }
+    }
+    debug_assert!(a.all_models_placed());
+    Ok(a)
+}
+
+/// `more_remaining_memory` generalized over the heuristic: returns the
+/// chosen device of `kind` that can still take `need` MB, or None.
+fn choose_device(
+    a: &AllocationMatrix,
+    ensemble: &Ensemble,
+    devices: &DeviceSet,
+    kind: DeviceKind,
+    need: f64,
+    heuristic: FitHeuristic,
+    next_cursor: &mut [usize; 2],
+) -> Option<usize> {
+    let candidates: Vec<(usize, f64)> = (0..devices.len())
+        .filter(|&d| devices[d].kind == kind)
+        .map(|d| (d, device_remaining_mb(a, ensemble, devices, d)))
+        .filter(|&(_, rem)| rem >= need)
+        .collect();
+    if candidates.is_empty() {
+        return None;
+    }
+    let ci = kind as usize; // Cpu=0, Gpu=1 order irrelevant, just distinct
+    match heuristic {
+        FitHeuristic::WorstFit => candidates
+            .iter()
+            .max_by(|x, y| x.1.partial_cmp(&y.1).unwrap())
+            .map(|&(d, _)| d),
+        FitHeuristic::FirstFit => candidates.first().map(|&(d, _)| d),
+        FitHeuristic::BestFit => candidates
+            .iter()
+            .min_by(|x, y| x.1.partial_cmp(&y.1).unwrap())
+            .map(|&(d, _)| d),
+        FitHeuristic::NextFit => {
+            // continue from the cursor, wrapping once
+            let pos = candidates
+                .iter()
+                .position(|&(d, _)| d >= next_cursor[ci])
+                .unwrap_or(0);
+            let (d, _) = candidates[pos];
+            next_cursor[ci] = d;
+            Some(d)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::alloc::memory::fit_mem;
+    use crate::model::{ensemble, EnsembleId};
+
+    #[test]
+    fn imn1_fits_one_gpu() {
+        let e = ensemble(EnsembleId::Imn1);
+        let a = worst_fit_decreasing(&e, &DeviceSet::hgx(1), 8).unwrap();
+        assert!(a.all_models_placed());
+        assert_eq!(a.worker_count(), 1);
+        // placed on the GPU, not the CPU
+        assert_eq!(a.placements()[0].device, 0);
+    }
+
+    #[test]
+    fn table1_oom_pattern() {
+        // The '-' cells of Table I: ensembles that must NOT fit, and the
+        // first GPU count where each must fit.
+        let cases: [(EnsembleId, usize, usize); 4] = [
+            (EnsembleId::Imn4, 1, 2),
+            (EnsembleId::Imn12, 3, 4),
+            (EnsembleId::Fos14, 1, 2),
+            (EnsembleId::Cif36, 4, 5),
+        ];
+        for (id, fail_g, ok_g) in cases {
+            let e = ensemble(id);
+            assert!(
+                worst_fit_decreasing(&e, &DeviceSet::hgx(fail_g), 8).is_err(),
+                "{} should OOM on {} GPUs", e.name, fail_g
+            );
+            let a = worst_fit_decreasing(&e, &DeviceSet::hgx(ok_g), 8)
+                .unwrap_or_else(|err| panic!("{} on {} GPUs: {err}", e.name, ok_g));
+            assert!(a.all_models_placed());
+            assert!(fit_mem(&a, &e, &DeviceSet::hgx(ok_g)));
+        }
+    }
+
+    #[test]
+    fn gpu_priority() {
+        // With plenty of GPUs, the CPU must stay empty (§II.E.1).
+        let e = ensemble(EnsembleId::Imn12);
+        let d = DeviceSet::hgx(12);
+        let a = worst_fit_decreasing(&e, &d, 8).unwrap();
+        let cpu = d.len() - 1;
+        assert_eq!(a.device_workers(cpu).len(), 0, "CPU must be empty");
+    }
+
+    #[test]
+    fn worst_fit_balances_devices() {
+        // 12 models over 12 GPUs: worst-fit spreads one per device.
+        let e = ensemble(EnsembleId::Imn12);
+        let d = DeviceSet::hgx(12);
+        let a = worst_fit_decreasing(&e, &d, 8).unwrap();
+        for g in 0..12 {
+            assert_eq!(a.device_workers(g).len(), 1, "GPU{g}");
+        }
+    }
+
+    #[test]
+    fn first_fit_piles_up() {
+        // First-fit uses fewer devices than worst-fit on the same input —
+        // the imbalance the paper's §II.E.1 warns about.
+        let e = ensemble(EnsembleId::Cif36);
+        let d = DeviceSet::hgx(8);
+        let wf = pack(&e, &d, 8, FitHeuristic::WorstFit).unwrap();
+        let ff = pack(&e, &d, 8, FitHeuristic::FirstFit).unwrap();
+        let used = |a: &AllocationMatrix| {
+            (0..d.len()).filter(|&g| !a.device_workers(g).is_empty()).count()
+        };
+        assert!(used(&ff) <= used(&wf));
+        let loads = |a: &AllocationMatrix| {
+            (0..d.len()).map(|g| a.device_workers(g).len()).max().unwrap()
+        };
+        assert!(loads(&ff) >= loads(&wf), "first-fit max load >= worst-fit");
+    }
+
+    #[test]
+    fn all_heuristics_produce_valid_or_oom() {
+        for h in FitHeuristic::ALL {
+            for g in [2usize, 4, 8] {
+                let e = ensemble(EnsembleId::Imn4);
+                let d = DeviceSet::hgx(g);
+                if let Ok(a) = pack(&e, &d, 8, h) {
+                    assert!(a.all_models_placed(), "{} g={g}", h.name());
+                    assert!(fit_mem(&a, &e, &d), "{} g={g}", h.name());
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn oom_error_names_model() {
+        let e = ensemble(EnsembleId::Imn12);
+        let err = worst_fit_decreasing(&e, &DeviceSet::hgx(1), 8).unwrap_err();
+        assert!(!err.model.is_empty());
+        assert!(err.mem_mb > 0.0);
+    }
+}

@@ -1,0 +1,136 @@
+//! Micro/bench harness used by the `cargo bench` targets (criterion is not
+//! reachable offline): warmup + repeated timing + summary line, plus a
+//! paper-style table printer.
+
+use std::time::Instant;
+
+use crate::util::stats::{self, Summary};
+
+/// Time `f` for `reps` measured runs after `warmup` unmeasured ones.
+/// Returns per-run seconds.
+pub fn time_runs(warmup: usize, reps: usize, mut f: impl FnMut()) -> Vec<f64> {
+    for _ in 0..warmup {
+        f();
+    }
+    (0..reps.max(1))
+        .map(|_| {
+            let t = Instant::now();
+            f();
+            t.elapsed().as_secs_f64()
+        })
+        .collect()
+}
+
+/// Print one bench result line (median ± rsd).
+pub fn report(name: &str, secs: &[f64]) -> Summary {
+    let s = Summary::of(secs);
+    println!(
+        "{name:<44} median {:>10.4}s  mean {:>10.4}s  rsd {:>5.1}%  (n={})",
+        s.median, s.mean, s.rsd_pct, s.n
+    );
+    s
+}
+
+/// Fixed-width table printer for the paper-style result tables.
+pub struct Table {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new<S: Into<String>>(headers: Vec<S>) -> Table {
+        Table { headers: headers.into_iter().map(Into::into).collect(), rows: Vec::new() }
+    }
+
+    pub fn row<S: Into<String>>(&mut self, cells: Vec<S>) {
+        let cells: Vec<String> = cells.into_iter().map(Into::into).collect();
+        assert_eq!(cells.len(), self.headers.len(), "column count");
+        self.rows.push(cells);
+    }
+
+    pub fn render(&self) -> String {
+        let ncol = self.headers.len();
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        let line = |out: &mut String, cells: &[String]| {
+            for i in 0..ncol {
+                if i > 0 {
+                    out.push_str("  ");
+                }
+                out.push_str(&format!("{:>w$}", cells[i], w = widths[i]));
+            }
+            out.push('\n');
+        };
+        line(&mut out, &self.headers);
+        out.push_str(&format!("{}\n", "-".repeat(widths.iter().sum::<usize>() + 2 * (ncol - 1))));
+        for row in &self.rows {
+            line(&mut out, row);
+        }
+        out
+    }
+
+    pub fn print(&self) {
+        print!("{}", self.render());
+    }
+}
+
+/// Format a throughput cell like Table I ("-" for OOM).
+pub fn fmt_throughput(s: f64) -> String {
+    if s <= 0.0 {
+        "-".to_string()
+    } else {
+        format!("{:.0}", s)
+    }
+}
+
+/// Relative standard deviation of repeated evaluations of `f`.
+pub fn rsd_of(reps: usize, mut f: impl FnMut() -> f64) -> f64 {
+    let vals: Vec<f64> = (0..reps).map(|_| f()).collect();
+    stats::rsd(&vals)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn time_runs_counts() {
+        let mut calls = 0;
+        let secs = time_runs(2, 3, || calls += 1);
+        assert_eq!(calls, 5);
+        assert_eq!(secs.len(), 3);
+        assert!(secs.iter().all(|&s| s >= 0.0));
+    }
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new(vec!["#G", "IMN1-A1", "IMN1-A2"]);
+        t.row(vec!["1", "106", "136"]);
+        t.row(vec!["16", "106", "1897"]);
+        let s = t.render();
+        assert!(s.contains("IMN1-A2"));
+        assert!(s.contains("1897"));
+        let lines: Vec<&str> = s.lines().collect();
+        assert_eq!(lines.len(), 4);
+        assert_eq!(lines[0].len(), lines[2].len(), "aligned");
+    }
+
+    #[test]
+    fn throughput_formatting() {
+        assert_eq!(fmt_throughput(0.0), "-");
+        assert_eq!(fmt_throughput(-1.0), "-");
+        assert_eq!(fmt_throughput(105.7), "106");
+    }
+
+    #[test]
+    #[should_panic]
+    fn table_rejects_ragged_rows() {
+        let mut t = Table::new(vec!["a", "b"]);
+        t.row(vec!["only-one"]);
+    }
+}

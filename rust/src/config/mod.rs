@@ -1,0 +1,192 @@
+//! Typed deployment configuration (JSON file → [`ServerConfig`]).
+//!
+//! The engineer describes the ensemble, the devices to use (§II.A: "the
+//! engineer does not want to give all available devices"), the compute
+//! backend, and the optimizer/engine knobs. `ensemble-serve optimize|serve
+//! --config cfg.json` consumes this.
+
+use std::path::Path;
+
+use anyhow::{bail, Context};
+
+use crate::alloc::greedy::GreedyConfig;
+use crate::device::DeviceSet;
+use crate::engine::EngineOptions;
+use crate::model::{ensemble, EnsembleId};
+use crate::util::json::Json;
+
+/// Which compute backend serves the workers.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Backend {
+    /// Real PJRT CPU execution of the AOT artifacts.
+    Pjrt,
+    /// Calibrated V100 simulator (paper-scale experiments).
+    Sim,
+    /// Zero-output instant backend (overhead measurements).
+    Fake,
+}
+
+impl Backend {
+    pub fn parse(s: &str) -> anyhow::Result<Backend> {
+        match s.to_ascii_lowercase().as_str() {
+            "pjrt" => Ok(Backend::Pjrt),
+            "sim" => Ok(Backend::Sim),
+            "fake" => Ok(Backend::Fake),
+            other => bail!("unknown backend '{other}' (pjrt|sim|fake)"),
+        }
+    }
+}
+
+/// Full deployment configuration.
+#[derive(Debug, Clone)]
+pub struct ServerConfig {
+    pub ensemble: EnsembleId,
+    pub gpus: usize,
+    pub backend: Backend,
+    /// Sim time scale (ignored by other backends).
+    pub time_scale: f64,
+    pub segment_size: usize,
+    pub listen: String,
+    pub http_threads: usize,
+    pub greedy: GreedyConfig,
+    pub default_batch: u32,
+    pub calib_images: usize,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        ServerConfig {
+            ensemble: EnsembleId::Imn4,
+            gpus: 4,
+            backend: Backend::Sim,
+            time_scale: 256.0,
+            segment_size: 128,
+            listen: "127.0.0.1:8372".to_string(),
+            http_threads: 8,
+            greedy: GreedyConfig::default(),
+            default_batch: crate::alloc::DEFAULT_BATCH,
+            calib_images: 1024,
+        }
+    }
+}
+
+impl ServerConfig {
+    /// Parse from a JSON document; absent fields keep defaults.
+    pub fn from_json(doc: &Json) -> anyhow::Result<ServerConfig> {
+        let mut cfg = ServerConfig::default();
+        if let Some(v) = doc.get("ensemble").and_then(Json::as_str) {
+            cfg.ensemble = EnsembleId::parse(v)
+                .with_context(|| format!("unknown ensemble '{v}'"))?;
+        }
+        if let Some(v) = doc.get("gpus").and_then(Json::as_usize) {
+            cfg.gpus = v;
+        }
+        if let Some(v) = doc.get("backend").and_then(Json::as_str) {
+            cfg.backend = Backend::parse(v)?;
+        }
+        if let Some(v) = doc.get("time_scale").and_then(Json::as_f64) {
+            anyhow::ensure!(v > 0.0, "time_scale must be positive");
+            cfg.time_scale = v;
+        }
+        if let Some(v) = doc.get("segment_size").and_then(Json::as_usize) {
+            anyhow::ensure!(v > 0, "segment_size must be positive");
+            cfg.segment_size = v;
+        }
+        if let Some(v) = doc.get("listen").and_then(Json::as_str) {
+            cfg.listen = v.to_string();
+        }
+        if let Some(v) = doc.get("http_threads").and_then(Json::as_usize) {
+            cfg.http_threads = v.max(1);
+        }
+        if let Some(v) = doc.get("max_iter").and_then(Json::as_usize) {
+            cfg.greedy.max_iter = v;
+        }
+        if let Some(v) = doc.get("max_neighs").and_then(Json::as_usize) {
+            cfg.greedy.max_neighs = v;
+        }
+        if let Some(v) = doc.get("seed").and_then(Json::as_i64) {
+            cfg.greedy.seed = v as u64;
+        }
+        if let Some(arr) = doc.get("batch_values").and_then(Json::as_arr) {
+            let vals: Vec<u32> = arr.iter().filter_map(|v| v.as_usize()).map(|v| v as u32).collect();
+            anyhow::ensure!(!vals.is_empty(), "batch_values empty");
+            cfg.greedy.batch_values = vals;
+        }
+        if let Some(v) = doc.get("default_batch").and_then(Json::as_usize) {
+            cfg.default_batch = v as u32;
+        }
+        if let Some(v) = doc.get("calib_images").and_then(Json::as_usize) {
+            cfg.calib_images = v;
+        }
+        Ok(cfg)
+    }
+
+    pub fn from_file(path: impl AsRef<Path>) -> anyhow::Result<ServerConfig> {
+        let text = std::fs::read_to_string(path.as_ref())
+            .with_context(|| format!("reading {}", path.as_ref().display()))?;
+        let doc = Json::parse(&text).map_err(|e| anyhow::anyhow!("config: {e}"))?;
+        Self::from_json(&doc)
+    }
+
+    pub fn devices(&self) -> DeviceSet {
+        DeviceSet::hgx(self.gpus)
+    }
+
+    pub fn ensemble_def(&self) -> crate::model::Ensemble {
+        ensemble(self.ensemble)
+    }
+
+    pub fn engine_options(&self) -> EngineOptions {
+        EngineOptions { segment_size: self.segment_size, ..EngineOptions::default() }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_when_empty() {
+        let cfg = ServerConfig::from_json(&Json::parse("{}").unwrap()).unwrap();
+        assert_eq!(cfg.ensemble, EnsembleId::Imn4);
+        assert_eq!(cfg.gpus, 4);
+        assert_eq!(cfg.greedy.max_neighs, 100);
+    }
+
+    #[test]
+    fn full_parse() {
+        let doc = Json::parse(
+            r#"{"ensemble":"IMN12","gpus":16,"backend":"fake","segment_size":64,
+                "max_iter":5,"max_neighs":40,"batch_values":[8,16],"seed":7,
+                "default_batch":16,"calib_images":256,"listen":"0.0.0.0:9000"}"#,
+        )
+        .unwrap();
+        let cfg = ServerConfig::from_json(&doc).unwrap();
+        assert_eq!(cfg.ensemble, EnsembleId::Imn12);
+        assert_eq!(cfg.gpus, 16);
+        assert_eq!(cfg.backend, Backend::Fake);
+        assert_eq!(cfg.segment_size, 64);
+        assert_eq!(cfg.greedy.max_iter, 5);
+        assert_eq!(cfg.greedy.max_neighs, 40);
+        assert_eq!(cfg.greedy.batch_values, vec![8, 16]);
+        assert_eq!(cfg.greedy.seed, 7);
+        assert_eq!(cfg.default_batch, 16);
+        assert_eq!(cfg.calib_images, 256);
+        assert_eq!(cfg.listen, "0.0.0.0:9000");
+        assert_eq!(cfg.devices().len(), 17);
+    }
+
+    #[test]
+    fn rejects_bad_values() {
+        for bad in [
+            r#"{"ensemble":"IMN99"}"#,
+            r#"{"backend":"cuda"}"#,
+            r#"{"time_scale":0}"#,
+            r#"{"segment_size":0}"#,
+            r#"{"batch_values":[]}"#,
+        ] {
+            let doc = Json::parse(bad).unwrap();
+            assert!(ServerConfig::from_json(&doc).is_err(), "{bad}");
+        }
+    }
+}

@@ -1,0 +1,194 @@
+//! Device model: the heterogeneous device set the ensemble is allocated to.
+//!
+//! The paper's testbed is an HGX node with 16 Tesla V100 (16 GB) GPUs plus
+//! host CPUs; the engineer hands the optimizer the subset of devices the
+//! ensemble may use (§II.A). Devices here carry the *paper-scale* memory
+//! capacity and an effective-throughput model used by the simulated
+//! executor (DESIGN.md §Substitutions); the PJRT backend maps every device
+//! onto the host CPU but keeps the same topology.
+
+use std::fmt;
+
+/// CPU or GPU — Algorithm 1 gives GPUs strict priority (§II.E.1).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum DeviceKind {
+    Cpu,
+    Gpu,
+}
+
+impl fmt::Display for DeviceKind {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            DeviceKind::Cpu => write!(f, "CPU"),
+            DeviceKind::Gpu => write!(f, "GPU"),
+        }
+    }
+}
+
+/// One device the allocation matrix can place workers on.
+#[derive(Debug, Clone)]
+pub struct DeviceSpec {
+    pub name: String,
+    pub kind: DeviceKind,
+    /// Memory budget available to DNN workers, MB. For the CPU "device"
+    /// this is the pinned host budget the serving process may use for
+    /// model workers (small: the host also owns queues + shared store).
+    pub mem_mb: u64,
+    /// Effective sustained GFLOP/s for CNN inference at batch saturation
+    /// (not peak datasheet FLOPs).
+    pub eff_gflops: f64,
+    /// Fixed per-predict-call overhead (kernel launch, framework), ms.
+    pub overhead_ms: f64,
+    /// Batch half-saturation constant: efficiency(b) = b / (b + half).
+    pub batch_half: f64,
+}
+
+impl DeviceSpec {
+    /// Tesla V100-SXM2 16 GB as calibrated against Table I (see zoo.rs
+    /// tests): ~1750 effective GFLOP/s on CNN inference.
+    pub fn v100(index: usize) -> DeviceSpec {
+        DeviceSpec {
+            name: format!("GPU{index}"),
+            kind: DeviceKind::Gpu,
+            mem_mb: 16 * 1024,
+            eff_gflops: 1750.0,
+            overhead_ms: 1.5,
+            batch_half: 3.2,
+        }
+    }
+
+    /// Host CPU worker budget. An order of magnitude slower than a V100
+    /// (§II.E.1) and with a small pinned memory budget — which is what
+    /// makes the paper's `-` OOM cells possible at all: with an unbounded
+    /// host budget every ensemble would "fit".
+    pub fn host_cpu() -> DeviceSpec {
+        DeviceSpec {
+            name: "CPU".to_string(),
+            kind: DeviceKind::Cpu,
+            mem_mb: 3 * 1024,
+            eff_gflops: 110.0,
+            overhead_ms: 3.0,
+            batch_half: 1.0,
+        }
+    }
+
+    /// Batch-efficiency curve in (0, 1): small batches underfill the
+    /// device's cores, larger batches amortize (§I.A, §II.B.1).
+    pub fn batch_efficiency(&self, batch: usize) -> f64 {
+        let b = batch as f64;
+        b / (b + self.batch_half)
+    }
+
+    /// Latency of one predict call of `batch` images of `gflops_per_image`
+    /// cost, in milliseconds (paper-scale).
+    pub fn predict_latency_ms(&self, gflops_per_image: f64, batch: usize) -> f64 {
+        let eff = self.eff_gflops * self.batch_efficiency(batch);
+        self.overhead_ms + 1000.0 * (batch as f64) * gflops_per_image / eff
+    }
+
+    pub fn is_gpu(&self) -> bool {
+        self.kind == DeviceKind::Gpu
+    }
+}
+
+/// The device set handed to the allocation optimizer. Index order is the
+/// row order of the allocation matrix.
+#[derive(Debug, Clone)]
+pub struct DeviceSet {
+    pub devices: Vec<DeviceSpec>,
+}
+
+impl DeviceSet {
+    pub fn new(devices: Vec<DeviceSpec>) -> DeviceSet {
+        DeviceSet { devices }
+    }
+
+    /// The paper's benchmark topology: `n_gpus` V100s + 1 host CPU
+    /// (Table I column headers: "#G GPUs (+1 CPU)").
+    pub fn hgx(n_gpus: usize) -> DeviceSet {
+        let mut devices: Vec<DeviceSpec> = (0..n_gpus).map(DeviceSpec::v100).collect();
+        devices.push(DeviceSpec::host_cpu());
+        DeviceSet { devices }
+    }
+
+    /// GPU-only variant (used by the BBS baseline which dedicates one GPU
+    /// per model and never touches the CPU).
+    pub fn gpus_only(n_gpus: usize) -> DeviceSet {
+        DeviceSet { devices: (0..n_gpus).map(DeviceSpec::v100).collect() }
+    }
+
+    pub fn len(&self) -> usize {
+        self.devices.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.devices.is_empty()
+    }
+
+    pub fn gpu_count(&self) -> usize {
+        self.devices.iter().filter(|d| d.is_gpu()).count()
+    }
+
+    pub fn iter(&self) -> std::slice::Iter<'_, DeviceSpec> {
+        self.devices.iter()
+    }
+}
+
+impl std::ops::Index<usize> for DeviceSet {
+    type Output = DeviceSpec;
+    fn index(&self, i: usize) -> &DeviceSpec {
+        &self.devices[i]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hgx_topology() {
+        let d = DeviceSet::hgx(4);
+        assert_eq!(d.len(), 5);
+        assert_eq!(d.gpu_count(), 4);
+        assert_eq!(d[4].kind, DeviceKind::Cpu);
+        assert_eq!(d[0].name, "GPU0");
+    }
+
+    #[test]
+    fn batch_efficiency_monotone() {
+        let g = DeviceSpec::v100(0);
+        let mut last = 0.0;
+        for b in [1, 8, 16, 32, 64, 128] {
+            let e = g.batch_efficiency(b);
+            assert!(e > last && e < 1.0, "b={b} e={e}");
+            last = e;
+        }
+    }
+
+    #[test]
+    fn throughput_improves_with_batch_then_saturates() {
+        let g = DeviceSpec::v100(0);
+        let thr = |b: usize| 1000.0 * b as f64 / g.predict_latency_ms(11.6, b);
+        assert!(thr(128) > thr(8));
+        // saturation: going 64 -> 128 gains less than 8 -> 16
+        assert!(thr(128) / thr(64) < thr(16) / thr(8));
+    }
+
+    #[test]
+    fn resnet152_v100_calibration() {
+        // Table I IMN1: ~106 img/s at the default batch 8, ~136+ optimized.
+        let g = DeviceSpec::v100(0);
+        let thr8 = 1000.0 * 8.0 / g.predict_latency_ms(11.6, 8);
+        let thr128 = 1000.0 * 128.0 / g.predict_latency_ms(11.6, 128);
+        assert!((90.0..125.0).contains(&thr8), "thr8={thr8}");
+        assert!((130.0..175.0).contains(&thr128), "thr128={thr128}");
+    }
+
+    #[test]
+    fn cpu_order_of_magnitude_slower() {
+        let g = DeviceSpec::v100(0);
+        let c = DeviceSpec::host_cpu();
+        let ratio = c.predict_latency_ms(4.1, 8) / g.predict_latency_ms(4.1, 8);
+        assert!(ratio > 8.0, "CPU/GPU latency ratio {ratio}");
+    }
+}

@@ -1,0 +1,243 @@
+//! The prediction accumulator (§II.C.2): one thread combining `{s, m, P}`
+//! messages into the ensemble output, request by request, and handling the
+//! worker control messages.
+
+use std::collections::HashMap;
+use std::sync::mpsc::SyncSender;
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+use crate::engine::combine::CombineRule;
+use crate::engine::messages::AccMsg;
+use crate::engine::queue::Fifo;
+use crate::engine::segments;
+use crate::engine::store::SharedStore;
+use crate::metrics::EngineMetrics;
+
+/// Registration of an in-flight request with the accumulator. Sent over a
+/// dedicated FIFO *before* its segments are broadcast, so the accumulator
+/// always knows a request before the first prediction arrives.
+pub struct Registration {
+    pub req: u64,
+    pub nb_images: usize,
+    pub classes: usize,
+    /// Expected `{s, m, P}` messages: segment_count × n_models.
+    pub expected_msgs: usize,
+    /// Completion channel handed back to the caller of `predict`.
+    pub done: SyncSender<Vec<f32>>,
+}
+
+struct Pending {
+    y: Vec<f32>,
+    remaining: usize,
+    classes: usize,
+    done: SyncSender<Vec<f32>>,
+}
+
+/// Startup rendezvous: build() waits here for all workers to report
+/// ready (paper: all workers sent {-2, None, None}) or the first error.
+#[derive(Default)]
+pub struct StartupState {
+    inner: Mutex<StartupInner>,
+    cond: Condvar,
+}
+
+#[derive(Default)]
+struct StartupInner {
+    ready: usize,
+    error: Option<String>,
+}
+
+impl StartupState {
+    pub fn new() -> Arc<StartupState> {
+        Arc::new(StartupState::default())
+    }
+
+    /// Block until `n` workers are ready or any reported an error.
+    pub fn wait_ready(&self, n: usize) -> Result<(), String> {
+        let mut g = self.inner.lock().unwrap();
+        loop {
+            if let Some(e) = &g.error {
+                return Err(e.clone());
+            }
+            if g.ready >= n {
+                return Ok(());
+            }
+            g = self.cond.wait(g).unwrap();
+        }
+    }
+
+    fn mark_ready(&self) {
+        self.inner.lock().unwrap().ready += 1;
+        self.cond.notify_all();
+    }
+
+    fn mark_error(&self, e: String) {
+        let mut g = self.inner.lock().unwrap();
+        if g.error.is_none() {
+            g.error = Some(e);
+        }
+        drop(g);
+        self.cond.notify_all();
+    }
+
+    /// First error seen, if any (used for runtime monitoring too).
+    pub fn error(&self) -> Option<String> {
+        self.inner.lock().unwrap().error.clone()
+    }
+
+    /// Workers that reported ready so far.
+    pub fn ready_count(&self) -> usize {
+        self.inner.lock().unwrap().ready
+    }
+}
+
+/// Spawn the accumulator thread.
+///
+/// It consumes two FIFOs: `reg` (request registrations, from `predict`)
+/// and `acc` (prediction + control messages, from the workers). Draining
+/// `reg` first on each loop guarantees registrations precede predictions
+/// of the same request, because `predict` enqueues the registration before
+/// broadcasting any segment id.
+pub fn spawn(
+    reg: Fifo<Registration>,
+    acc: Fifo<AccMsg>,
+    rule: Arc<dyn CombineRule>,
+    n_models: usize,
+    segment_size: usize,
+    store: Arc<SharedStore>,
+    startup: Arc<StartupState>,
+    metrics: Arc<EngineMetrics>,
+) -> JoinHandle<()> {
+    std::thread::Builder::new()
+        .name("accumulator".into())
+        .spawn(move || {
+            let mut pending: HashMap<u64, Pending> = HashMap::new();
+            while let Some(msg) = acc.recv() {
+                // fold in any registrations that arrived meanwhile
+                while let Some(r) = reg.try_recv() {
+                    pending.insert(
+                        r.req,
+                        Pending {
+                            y: vec![0.0; r.nb_images * r.classes],
+                            remaining: r.expected_msgs,
+                            classes: r.classes,
+                            done: r.done,
+                        },
+                    );
+                }
+                match msg {
+                    AccMsg::WorkerReady { .. } => startup.mark_ready(),
+                    AccMsg::WorkerError { worker, error } => {
+                        // routine during Benchmark Mode: Algorithm 2
+                        // probes infeasible matrices on purpose
+                        log::warn!("worker {worker} failed: {error}");
+                        startup.mark_error(format!("worker {worker}: {error}"));
+                    }
+                    AccMsg::Pred(p) => {
+                        let Some(entry) = pending.get_mut(&p.req) else {
+                            log::warn!("prediction for unknown request {}", p.req);
+                            continue;
+                        };
+                        let c = entry.classes;
+                        let lo = segments::start(p.seg, segment_size);
+                        let span = &mut entry.y[lo * c..lo * c + p.n_rows * c];
+                        // the paper's Y[start(s):end(s)] += P / M
+                        rule.accumulate(span, &p.preds, p.model, n_models, c);
+                        entry.remaining -= 1;
+                        if entry.remaining == 0 {
+                            let mut done = pending.remove(&p.req).unwrap();
+                            rule.finalize(&mut done.y, n_models, c);
+                            store.remove(p.req);
+                            metrics
+                                .requests_completed
+                                .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                            // receiver may have given up (timeout): ignore
+                            let _ = done.done.send(done.y);
+                        }
+                    }
+                }
+            }
+            // shutdown: drop pending (their done channels close, callers
+            // observe an error instead of a hang)
+        })
+        .expect("spawn accumulator")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::combine::Average;
+    use crate::engine::messages::PredMsg;
+    use std::sync::mpsc::sync_channel;
+
+    fn setup(n_models: usize, seg: usize)
+        -> (Fifo<Registration>, Fifo<AccMsg>, Arc<SharedStore>, Arc<StartupState>, JoinHandle<()>) {
+        let reg = Fifo::unbounded();
+        let acc = Fifo::unbounded();
+        let store = SharedStore::new();
+        let startup = StartupState::new();
+        let h = spawn(
+            reg.clone(),
+            acc.clone(),
+            Arc::new(Average),
+            n_models,
+            seg,
+            Arc::clone(&store),
+            Arc::clone(&startup),
+            Arc::new(EngineMetrics::default()),
+        );
+        (reg, acc, store, startup, h)
+    }
+
+    #[test]
+    fn combines_two_models_two_segments() {
+        let (reg, acc, store, _st, h) = setup(2, 2);
+        let req = store.insert(vec![0.0; 3 * 4], 3, 4); // 3 images
+        let (tx, rx) = sync_channel(1);
+        reg.send(Registration { req, nb_images: 3, classes: 2, expected_msgs: 4, done: tx })
+            .unwrap();
+        // model 0: seg 0 (rows 0..2), seg 1 (row 2)
+        let p = |seg, model, preds: Vec<f32>, n_rows| {
+            AccMsg::Pred(PredMsg { req, seg, model, worker: 0, preds, n_rows })
+        };
+        acc.send(p(0, 0, vec![1.0, 0.0, 0.0, 1.0], 2)).unwrap();
+        acc.send(p(1, 1, vec![0.0, 1.0], 1)).unwrap();
+        acc.send(p(0, 1, vec![0.0, 1.0, 1.0, 0.0], 2)).unwrap();
+        acc.send(p(1, 0, vec![1.0, 0.0], 1)).unwrap();
+        let y = rx.recv().unwrap();
+        assert_eq!(y, vec![0.5, 0.5, 0.5, 0.5, 0.5, 0.5]);
+        assert!(store.get(req).is_none(), "input freed on completion");
+        acc.close();
+        h.join().unwrap();
+    }
+
+    #[test]
+    fn startup_ready_and_error() {
+        let (_reg, acc, _store, st, h) = setup(1, 128);
+        acc.send(AccMsg::WorkerReady { worker: 0 }).unwrap();
+        acc.send(AccMsg::WorkerReady { worker: 1 }).unwrap();
+        st.wait_ready(2).unwrap();
+        acc.send(AccMsg::WorkerError { worker: 2, error: "OOM".into() }).unwrap();
+        // a waiter for more workers now sees the error
+        assert!(st.wait_ready(3).is_err());
+        assert!(st.error().unwrap().contains("OOM"));
+        acc.close();
+        h.join().unwrap();
+    }
+
+    #[test]
+    fn shutdown_drops_pending_requests() {
+        let (reg, acc, store, _st, h) = setup(1, 128);
+        let req = store.insert(vec![0.0; 4], 1, 4);
+        let (tx, rx) = sync_channel(1);
+        reg.send(Registration { req, nb_images: 1, classes: 2, expected_msgs: 1, done: tx })
+            .unwrap();
+        // deliver nothing; shut down. One dummy message makes the
+        // accumulator fold in the registration first.
+        acc.send(AccMsg::WorkerReady { worker: 0 }).unwrap();
+        acc.close();
+        h.join().unwrap();
+        assert!(rx.recv().is_err(), "done channel closed, not hung");
+    }
+}

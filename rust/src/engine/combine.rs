@@ -1,0 +1,177 @@
+//! Combination rules (§II.C.2).
+//!
+//! The averaging rule is the paper's `Y[start(s):end(s)] += P / M`; other
+//! rules plug in through the same message-at-a-time interface ("any
+//! combination rule must be developed keeping in mind that predictions
+//! come into messages, asynchronously").
+
+/// How the accumulator folds per-model prediction segments into the
+/// ensemble output. `accumulate` is called once per {s, m, P} message on
+/// the `y` rows of that segment; `finalize` once per segment when all M
+/// models reported.
+pub trait CombineRule: Send + Sync + 'static {
+    /// Fold one model's predictions (`n_rows × classes`) into `y`.
+    /// `weight_idx` is the model's column (for weighted rules).
+    fn accumulate(&self, y: &mut [f32], p: &[f32], weight_idx: usize,
+                  n_models: usize, classes: usize);
+
+    /// Post-process the segment's rows once complete.
+    fn finalize(&self, _y: &mut [f32], _n_models: usize, _classes: usize) {}
+
+    fn name(&self) -> &'static str;
+}
+
+/// The paper's rule: `Y += P / M`.
+pub struct Average;
+
+impl CombineRule for Average {
+    fn accumulate(&self, y: &mut [f32], p: &[f32], _idx: usize,
+                  n_models: usize, _classes: usize) {
+        let inv = 1.0 / n_models as f32;
+        for (yi, pi) in y.iter_mut().zip(p) {
+            *yi += pi * inv;
+        }
+    }
+
+    fn name(&self) -> &'static str {
+        "average"
+    }
+}
+
+/// Weighted averaging: `Y += w_m * P / Σw`.
+pub struct WeightedAverage {
+    weights: Vec<f32>,
+    total: f32,
+}
+
+impl WeightedAverage {
+    pub fn new(weights: Vec<f32>) -> WeightedAverage {
+        assert!(!weights.is_empty());
+        assert!(weights.iter().all(|&w| w >= 0.0));
+        let total: f32 = weights.iter().sum();
+        assert!(total > 0.0);
+        WeightedAverage { weights, total }
+    }
+}
+
+impl CombineRule for WeightedAverage {
+    fn accumulate(&self, y: &mut [f32], p: &[f32], idx: usize,
+                  _n_models: usize, _classes: usize) {
+        let w = self.weights[idx] / self.total;
+        for (yi, pi) in y.iter_mut().zip(p) {
+            *yi += pi * w;
+        }
+    }
+
+    fn name(&self) -> &'static str {
+        "weighted-average"
+    }
+}
+
+/// Majority voting: each model votes for its argmax class; `finalize`
+/// normalizes vote counts into a distribution over classes.
+pub struct MajorityVote;
+
+impl CombineRule for MajorityVote {
+    fn accumulate(&self, y: &mut [f32], p: &[f32], _idx: usize,
+                  _n_models: usize, classes: usize) {
+        for (yrow, prow) in y.chunks_mut(classes).zip(p.chunks(classes)) {
+            let argmax = prow
+                .iter()
+                .enumerate()
+                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .map(|(i, _)| i)
+                .unwrap_or(0);
+            yrow[argmax] += 1.0;
+        }
+    }
+
+    fn finalize(&self, y: &mut [f32], n_models: usize, _classes: usize) {
+        let inv = 1.0 / n_models as f32;
+        for v in y {
+            *v *= inv;
+        }
+    }
+
+    fn name(&self) -> &'static str {
+        "majority-vote"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const C: usize = 3;
+
+    #[test]
+    fn average_matches_paper_formula() {
+        let rule = Average;
+        let mut y = vec![0.0; 2 * C];
+        let p1 = vec![0.9, 0.1, 0.0, 0.2, 0.3, 0.5];
+        let p2 = vec![0.5, 0.5, 0.0, 0.0, 0.6, 0.4];
+        rule.accumulate(&mut y, &p1, 0, 2, C);
+        rule.accumulate(&mut y, &p2, 1, 2, C);
+        rule.finalize(&mut y, 2, C);
+        for (i, want) in [0.7, 0.3, 0.0, 0.1, 0.45, 0.45].iter().enumerate() {
+            assert!((y[i] - want).abs() < 1e-6, "i={i}");
+        }
+    }
+
+    #[test]
+    fn average_order_independent() {
+        let rule = Average;
+        let p1 = vec![0.9, 0.1, 0.0];
+        let p2 = vec![0.2, 0.3, 0.5];
+        let mut a = vec![0.0; C];
+        rule.accumulate(&mut a, &p1, 0, 2, C);
+        rule.accumulate(&mut a, &p2, 1, 2, C);
+        let mut b = vec![0.0; C];
+        rule.accumulate(&mut b, &p2, 1, 2, C);
+        rule.accumulate(&mut b, &p1, 0, 2, C);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn weighted_average() {
+        let rule = WeightedAverage::new(vec![3.0, 1.0]);
+        let mut y = vec![0.0; C];
+        rule.accumulate(&mut y, &[1.0, 0.0, 0.0], 0, 2, C);
+        rule.accumulate(&mut y, &[0.0, 1.0, 0.0], 1, 2, C);
+        rule.finalize(&mut y, 2, C);
+        assert!((y[0] - 0.75).abs() < 1e-6);
+        assert!((y[1] - 0.25).abs() < 1e-6);
+    }
+
+    #[test]
+    #[should_panic]
+    fn weighted_rejects_zero_total() {
+        let _ = WeightedAverage::new(vec![0.0, 0.0]);
+    }
+
+    #[test]
+    fn majority_vote() {
+        let rule = MajorityVote;
+        let mut y = vec![0.0; C];
+        // three voters: classes 2, 2, 0
+        rule.accumulate(&mut y, &[0.1, 0.2, 0.7], 0, 3, C);
+        rule.accumulate(&mut y, &[0.0, 0.4, 0.6], 1, 3, C);
+        rule.accumulate(&mut y, &[0.8, 0.1, 0.1], 2, 3, C);
+        rule.finalize(&mut y, 3, C);
+        assert!((y[2] - 2.0 / 3.0).abs() < 1e-6);
+        assert!((y[0] - 1.0 / 3.0).abs() < 1e-6);
+        assert_eq!(y[1], 0.0);
+    }
+
+    #[test]
+    fn probability_rows_stay_normalized() {
+        // average of probability rows is a probability row
+        let rule = Average;
+        let mut y = vec![0.0; C];
+        rule.accumulate(&mut y, &[0.2, 0.3, 0.5], 0, 2, C);
+        rule.accumulate(&mut y, &[0.6, 0.2, 0.2], 1, 2, C);
+        rule.finalize(&mut y, 2, C);
+        let sum: f32 = y.iter().sum();
+        assert!((sum - 1.0).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,63 @@
+//! Message types flowing through the FIFO queues.
+//!
+//! The paper encodes control in sentinel ids ({-1, None, None} = a device
+//! cannot host its DNN, {-2, None, None} = worker ready, s = -1 on the
+//! input queue = shut down). Rust enums carry the same protocol with types
+//! instead of sentinels; the mapping is noted on each variant.
+
+/// Payload of a model's input FIFO (broadcaster → workers).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum WorkerMsg {
+    /// A segment id to predict (paper: `s >= 0`). `req` scopes the segment
+    /// to one client request in the shared store.
+    Segment { req: u64, seg: usize },
+    // Shutdown (paper: s = -1) is signalled by closing the FIFO: queued
+    // segments drain first, exactly like a -1 posted after real ids.
+}
+
+/// One segment of predictions from a worker (paper: the triplet {s, m, P}).
+#[derive(Debug, Clone)]
+pub struct PredMsg {
+    pub req: u64,
+    /// Segment id `s`.
+    pub seg: usize,
+    /// Model identifier `m` (matrix column).
+    pub model: usize,
+    /// Worker id (diagnostics; the accumulator only needs `m`).
+    pub worker: usize,
+    /// Prediction matrix `P`, `n_rows × classes`, row-major.
+    pub preds: Vec<f32>,
+    pub n_rows: usize,
+}
+
+/// Payload of the prediction FIFO (workers → accumulator).
+#[derive(Debug)]
+pub enum AccMsg {
+    /// A segment of predictions.
+    Pred(PredMsg),
+    /// Paper: `{-2, None, None}` — the worker loaded its DNN and serves.
+    WorkerReady { worker: usize },
+    /// Paper: `{-1, None, None}` — a device has not enough memory to load
+    /// or initialize a DNN; triggers the shutdown of the whole system.
+    WorkerError { worker: usize, error: String },
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pred_msg_shape() {
+        let m = PredMsg { req: 1, seg: 2, model: 3, worker: 4,
+                          preds: vec![0.5; 6], n_rows: 2 };
+        assert_eq!(m.preds.len() / m.n_rows, 3, "3 classes");
+    }
+
+    #[test]
+    fn worker_msg_eq() {
+        assert_eq!(WorkerMsg::Segment { req: 1, seg: 0 },
+                   WorkerMsg::Segment { req: 1, seg: 0 });
+        assert_ne!(WorkerMsg::Segment { req: 1, seg: 0 },
+                   WorkerMsg::Segment { req: 1, seg: 1 });
+    }
+}

@@ -1,0 +1,39 @@
+//! The asynchronous inference system — the paper's third contribution
+//! (§II.C/II.D, figures 1 and 2).
+//!
+//! Topology (one request = one batch of images from a client):
+//!
+//! ```text
+//!               ┌────────────────────────────────────────────────┐
+//! predict(X) ──►│ segment ids broadcaster (thread)               │
+//!               │   X into shared store; segment ids into every  │
+//!               │   model's input FIFO                           │
+//!               └──────┬─────────────────────────┬───────────────┘
+//!                      ▼ model-m FIFO            ▼ model-m' FIFO
+//!            ┌─ worker (d,m,batch) ─┐   ┌─ worker (d',m',b') ─┐  ...
+//!            │ batcher ─► predictor │   │  (3 threads each,   │
+//!            │        ─► pred sender│   │   per fig. 2)       │
+//!            └──────────┬───────────┘   └──────────┬──────────┘
+//!                       ▼  prediction FIFO {s, m, P}
+//!               ┌────────────────────────────────────────────────┐
+//!               │ prediction accumulator (thread):               │
+//!               │   Y[start(s)..end(s)] += P / M  → client       │
+//!               └────────────────────────────────────────────────┘
+//! ```
+//!
+//! Control messages follow the paper: a worker that cannot load its DNN
+//! reports the equivalent of `{-1, None, None}` (shutting the system
+//! down); each worker reports `{-2, None, None}` when ready, and
+//! [`system::InferenceSystem::build`] returns only once all workers did.
+
+pub mod queue;
+pub mod segments;
+pub mod messages;
+pub mod store;
+pub mod combine;
+pub mod worker;
+pub mod accumulator;
+pub mod system;
+
+pub use combine::CombineRule;
+pub use system::{EngineOptions, InferenceSystem};

@@ -1,0 +1,260 @@
+//! Thread-safe FIFO queues — the paper's inter-process communication
+//! substrate ("implemented with the Queue class" of python
+//! multiprocessing; here: Mutex<VecDeque> + Condvar).
+//!
+//! Unlike std::sync::mpsc these support *multiple consumers*: the
+//! data-parallel workers of one model all pull segment ids from the same
+//! input FIFO (§II.B.2), which is exactly MPMC work-stealing.
+
+use std::collections::VecDeque;
+use std::sync::{Arc, Condvar, Mutex};
+
+struct Inner<T> {
+    q: Mutex<State<T>>,
+    not_empty: Condvar,
+    not_full: Condvar,
+}
+
+struct State<T> {
+    items: VecDeque<T>,
+    closed: bool,
+    capacity: Option<usize>,
+}
+
+/// MPMC FIFO channel with optional bounded capacity (backpressure between
+/// the batcher → predictor → sender stages).
+pub struct Fifo<T> {
+    inner: Arc<Inner<T>>,
+}
+
+impl<T> Clone for Fifo<T> {
+    fn clone(&self) -> Self {
+        Fifo { inner: Arc::clone(&self.inner) }
+    }
+}
+
+/// Error: the channel was closed.
+#[derive(Debug, PartialEq, Eq)]
+pub struct Closed;
+
+impl<T> Fifo<T> {
+    /// Unbounded FIFO.
+    pub fn unbounded() -> Fifo<T> {
+        Self::with_capacity(None)
+    }
+
+    /// Bounded FIFO: `send` blocks while full.
+    pub fn bounded(capacity: usize) -> Fifo<T> {
+        assert!(capacity > 0);
+        Self::with_capacity(Some(capacity))
+    }
+
+    fn with_capacity(capacity: Option<usize>) -> Fifo<T> {
+        Fifo {
+            inner: Arc::new(Inner {
+                q: Mutex::new(State { items: VecDeque::new(), closed: false, capacity }),
+                not_empty: Condvar::new(),
+                not_full: Condvar::new(),
+            }),
+        }
+    }
+
+    /// Blocking send; fails once the channel is closed.
+    pub fn send(&self, item: T) -> Result<(), Closed> {
+        let mut st = self.inner.q.lock().unwrap();
+        loop {
+            if st.closed {
+                return Err(Closed);
+            }
+            match st.capacity {
+                Some(cap) if st.items.len() >= cap => {
+                    st = self.inner.not_full.wait(st).unwrap();
+                }
+                _ => break,
+            }
+        }
+        st.items.push_back(item);
+        drop(st);
+        self.inner.not_empty.notify_one();
+        Ok(())
+    }
+
+    /// Blocking receive; `None` once closed *and* drained.
+    pub fn recv(&self) -> Option<T> {
+        let mut st = self.inner.q.lock().unwrap();
+        loop {
+            if let Some(item) = st.items.pop_front() {
+                drop(st);
+                self.inner.not_full.notify_one();
+                return Some(item);
+            }
+            if st.closed {
+                return None;
+            }
+            st = self.inner.not_empty.wait(st).unwrap();
+        }
+    }
+
+    /// Send a whole batch under one lock acquisition (broadcast fan-out
+    /// hot path). Only valid for unbounded FIFOs (capacity would need
+    /// piecewise blocking).
+    pub fn send_all<I: IntoIterator<Item = T>>(&self, items: I) -> Result<usize, Closed> {
+        let mut st = self.inner.q.lock().unwrap();
+        if st.closed {
+            return Err(Closed);
+        }
+        assert!(st.capacity.is_none(), "send_all requires an unbounded FIFO");
+        let before = st.items.len();
+        st.items.extend(items);
+        let added = st.items.len() - before;
+        drop(st);
+        self.inner.not_empty.notify_all();
+        Ok(added)
+    }
+
+    /// Non-blocking receive.
+    pub fn try_recv(&self) -> Option<T> {
+        let mut st = self.inner.q.lock().unwrap();
+        let item = st.items.pop_front();
+        if item.is_some() {
+            drop(st);
+            self.inner.not_full.notify_one();
+        }
+        item
+    }
+
+    /// Close: wakes all blocked senders/receivers. Queued items stay
+    /// receivable (drain semantics, like the paper's shutdown id -1 after
+    /// the queued work).
+    pub fn close(&self) {
+        let mut st = self.inner.q.lock().unwrap();
+        st.closed = true;
+        drop(st);
+        self.inner.not_empty.notify_all();
+        self.inner.not_full.notify_all();
+    }
+
+    pub fn is_closed(&self) -> bool {
+        self.inner.q.lock().unwrap().closed
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.q.lock().unwrap().items.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::thread;
+    use std::time::Duration;
+
+    #[test]
+    fn fifo_order() {
+        let q = Fifo::unbounded();
+        for i in 0..10 {
+            q.send(i).unwrap();
+        }
+        for i in 0..10 {
+            assert_eq!(q.recv(), Some(i));
+        }
+        assert_eq!(q.try_recv(), None);
+    }
+
+    #[test]
+    fn close_drains_then_none() {
+        let q = Fifo::unbounded();
+        q.send(1).unwrap();
+        q.send(2).unwrap();
+        q.close();
+        assert_eq!(q.send(3), Err(Closed));
+        assert_eq!(q.recv(), Some(1));
+        assert_eq!(q.recv(), Some(2));
+        assert_eq!(q.recv(), None);
+    }
+
+    #[test]
+    fn multiple_consumers_partition_work() {
+        let q = Fifo::unbounded();
+        let n = 1000;
+        for i in 0..n {
+            q.send(i).unwrap();
+        }
+        q.close();
+        let mut handles = Vec::new();
+        for _ in 0..4 {
+            let q = q.clone();
+            handles.push(thread::spawn(move || {
+                let mut got = Vec::new();
+                while let Some(v) = q.recv() {
+                    got.push(v);
+                }
+                got
+            }));
+        }
+        let mut all: Vec<i32> = handles.into_iter().flat_map(|h| h.join().unwrap()).collect();
+        all.sort();
+        assert_eq!(all, (0..n).collect::<Vec<_>>(), "each item consumed once");
+    }
+
+    #[test]
+    fn bounded_blocks_until_recv() {
+        let q = Fifo::bounded(2);
+        q.send(1).unwrap();
+        q.send(2).unwrap();
+        let q2 = q.clone();
+        let h = thread::spawn(move || {
+            q2.send(3).unwrap(); // blocks until a slot frees
+            "sent"
+        });
+        thread::sleep(Duration::from_millis(50));
+        assert_eq!(q.len(), 2, "third send still blocked");
+        assert_eq!(q.recv(), Some(1));
+        assert_eq!(h.join().unwrap(), "sent");
+        assert_eq!(q.recv(), Some(2));
+        assert_eq!(q.recv(), Some(3));
+    }
+
+    #[test]
+    fn close_unblocks_blocked_sender() {
+        let q = Fifo::bounded(1);
+        q.send(0).unwrap();
+        let q2 = q.clone();
+        let h = thread::spawn(move || q2.send(1));
+        thread::sleep(Duration::from_millis(30));
+        q.close();
+        assert_eq!(h.join().unwrap(), Err(Closed));
+    }
+
+    #[test]
+    fn send_all_batches_under_one_lock() {
+        let q = Fifo::unbounded();
+        assert_eq!(q.send_all(0..5), Ok(5));
+        for i in 0..5 {
+            assert_eq!(q.recv(), Some(i));
+        }
+        q.close();
+        assert_eq!(q.send_all(0..3), Err(Closed));
+    }
+
+    #[test]
+    #[should_panic]
+    fn send_all_rejected_on_bounded() {
+        let q = Fifo::bounded(1);
+        let _ = q.send_all(0..3);
+    }
+
+    #[test]
+    fn recv_blocks_until_send() {
+        let q: Fifo<u32> = Fifo::unbounded();
+        let q2 = q.clone();
+        let h = thread::spawn(move || q2.recv());
+        thread::sleep(Duration::from_millis(30));
+        q.send(7).unwrap();
+        assert_eq!(h.join().unwrap(), Some(7));
+    }
+}

@@ -1,0 +1,76 @@
+//! Segment arithmetic (§II.C.1).
+//!
+//! "All segments contain N samples, except the last segment which contains
+//! the information of the remaining samples. After getting a segment
+//! identifier s ≥ 0, a worker knows he is responsible to predict the
+//! images from start(s) = s*N to end(s) = min((s+1)*N, nb_images)."
+
+/// Number of segments covering `nb_images` at segment size `n`.
+pub fn segment_count(nb_images: usize, n: usize) -> usize {
+    assert!(n > 0, "segment size must be positive");
+    nb_images.div_ceil(n)
+}
+
+/// First image of segment `s`.
+pub fn start(s: usize, n: usize) -> usize {
+    s * n
+}
+
+/// One-past-last image of segment `s`.
+pub fn end(s: usize, n: usize, nb_images: usize) -> usize {
+    ((s + 1) * n).min(nb_images)
+}
+
+/// Images in segment `s`.
+pub fn len(s: usize, n: usize, nb_images: usize) -> usize {
+    end(s, n, nb_images).saturating_sub(start(s, n))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_example() {
+        // "300 images with N=128 are represented as 3 segments, two of
+        // size 128 and one of size 44"
+        assert_eq!(segment_count(300, 128), 3);
+        assert_eq!(len(0, 128, 300), 128);
+        assert_eq!(len(1, 128, 300), 128);
+        assert_eq!(len(2, 128, 300), 44);
+        assert_eq!(start(2, 128), 256);
+        assert_eq!(end(2, 128, 300), 300);
+    }
+
+    #[test]
+    fn exact_multiple() {
+        assert_eq!(segment_count(256, 128), 2);
+        assert_eq!(len(1, 128, 256), 128);
+    }
+
+    #[test]
+    fn fewer_images_than_segment() {
+        assert_eq!(segment_count(5, 128), 1);
+        assert_eq!(len(0, 128, 5), 5);
+    }
+
+    #[test]
+    fn zero_images() {
+        assert_eq!(segment_count(0, 128), 0);
+    }
+
+    #[test]
+    fn segments_partition_exactly() {
+        for nb in [1usize, 7, 127, 128, 129, 1000, 1024] {
+            for n in [1usize, 3, 64, 128] {
+                let k = segment_count(nb, n);
+                let total: usize = (0..k).map(|s| len(s, n, nb)).sum();
+                assert_eq!(total, nb, "nb={nb} n={n}");
+                // contiguity
+                for s in 1..k {
+                    assert_eq!(end(s - 1, n, nb), start(s, n));
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,116 @@
+//! The shared input store (§II.C.1): "the X shared memory, a heavy buffer
+//! of data readable by all the workers", held in RAM.
+//!
+//! Workers receive only segment *ids* over the queues and slice the rows
+//! they need from here — avoiding heavy messages through the FIFOs.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, RwLock};
+
+/// One client request's input batch.
+#[derive(Debug)]
+pub struct RequestData {
+    /// Flattened row-major samples (`nb_images × elems_per_image`).
+    pub x: Vec<f32>,
+    pub nb_images: usize,
+    pub elems_per_image: usize,
+}
+
+impl RequestData {
+    /// Rows `[lo, hi)` as a contiguous slice.
+    pub fn rows(&self, lo: usize, hi: usize) -> &[f32] {
+        &self.x[lo * self.elems_per_image..hi * self.elems_per_image]
+    }
+}
+
+/// Registry of in-flight requests, keyed by request id.
+pub struct SharedStore {
+    next_id: AtomicU64,
+    reqs: RwLock<HashMap<u64, Arc<RequestData>>>,
+}
+
+impl SharedStore {
+    pub fn new() -> Arc<SharedStore> {
+        Arc::new(SharedStore {
+            next_id: AtomicU64::new(1),
+            reqs: RwLock::new(HashMap::new()),
+        })
+    }
+
+    /// Insert a request's input, returning its id.
+    pub fn insert(&self, x: Vec<f32>, nb_images: usize, elems_per_image: usize) -> u64 {
+        debug_assert_eq!(x.len(), nb_images * elems_per_image);
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        let data = Arc::new(RequestData { x, nb_images, elems_per_image });
+        self.reqs.write().unwrap().insert(id, data);
+        id
+    }
+
+    /// Shared handle to a request's data (workers hold it only while
+    /// batching a segment).
+    pub fn get(&self, req: u64) -> Option<Arc<RequestData>> {
+        self.reqs.read().unwrap().get(&req).cloned()
+    }
+
+    /// Drop a completed request's input.
+    pub fn remove(&self, req: u64) {
+        self.reqs.write().unwrap().remove(&req);
+    }
+
+    pub fn len(&self) -> usize {
+        self.reqs.read().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn insert_get_remove() {
+        let s = SharedStore::new();
+        let id = s.insert(vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0], 3, 2);
+        let d = s.get(id).unwrap();
+        assert_eq!(d.nb_images, 3);
+        assert_eq!(d.rows(1, 3), &[3.0, 4.0, 5.0, 6.0]);
+        s.remove(id);
+        assert!(s.get(id).is_none());
+        assert!(s.is_empty());
+    }
+
+    #[test]
+    fn ids_unique_and_concurrent() {
+        let s = SharedStore::new();
+        let ids: Vec<u64> = std::thread::scope(|sc| {
+            let hs: Vec<_> = (0..8)
+                .map(|i| {
+                    let s = &s;
+                    sc.spawn(move || s.insert(vec![i as f32; 4], 2, 2))
+                })
+                .collect();
+            hs.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+        let mut sorted = ids.clone();
+        sorted.sort();
+        sorted.dedup();
+        assert_eq!(sorted.len(), 8);
+        assert_eq!(s.len(), 8);
+    }
+
+    #[test]
+    fn data_shared_not_copied() {
+        let s = SharedStore::new();
+        let id = s.insert(vec![0.0; 1000], 10, 100);
+        let a = s.get(id).unwrap();
+        let b = s.get(id).unwrap();
+        assert!(Arc::ptr_eq(&a, &b));
+        // removal while a handle is alive keeps the data valid
+        s.remove(id);
+        assert_eq!(a.nb_images, 10);
+    }
+}

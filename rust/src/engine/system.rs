@@ -1,0 +1,452 @@
+//! The inference system: `f(X, A) -> {Y, S}` (§II.C).
+//!
+//! [`InferenceSystem::build`] instantiates the worker pool described by an
+//! allocation matrix, waits for every worker's ready message and serves
+//! [`InferenceSystem::predict`] calls until dropped. "Benchmark Mode"
+//! (measuring S on calibration data) lives in `benchkit::bench` on top of
+//! the same engine.
+
+use std::sync::atomic::Ordering;
+use std::sync::mpsc::sync_channel;
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use anyhow::{bail, Context};
+
+use crate::alloc::matrix::AllocationMatrix;
+use crate::engine::accumulator::{self, Registration, StartupState};
+use crate::engine::combine::{Average, CombineRule};
+use crate::engine::messages::{AccMsg, WorkerMsg};
+use crate::engine::queue::Fifo;
+use crate::engine::segments;
+use crate::engine::store::SharedStore;
+use crate::engine::worker::{self, WorkerHandle, WorkerSpec};
+use crate::exec::Executor;
+use crate::metrics::EngineMetrics;
+use crate::model::Ensemble;
+
+/// Engine knobs (paper §III defaults).
+#[derive(Clone)]
+pub struct EngineOptions {
+    /// Segment size N (paper: 128, "equal to or greater than the maximum
+    /// batch size").
+    pub segment_size: usize,
+    /// Bounded capacity of the intra-worker stage FIFOs.
+    pub stage_capacity: usize,
+    /// Startup timeout waiting for worker ready messages.
+    pub startup_timeout: Duration,
+    /// Combination rule (paper default: averaging).
+    pub combine: Arc<dyn CombineRule>,
+}
+
+impl Default for EngineOptions {
+    fn default() -> Self {
+        EngineOptions {
+            segment_size: 128,
+            stage_capacity: 4,
+            startup_timeout: Duration::from_secs(120),
+            combine: Arc::new(Average),
+        }
+    }
+}
+
+struct BroadcastJob {
+    req: u64,
+    nb_images: usize,
+}
+
+/// A deployed ensemble: worker pool + broadcaster + accumulator.
+pub struct InferenceSystem {
+    ensemble: Ensemble,
+    matrix: AllocationMatrix,
+    opts: EngineOptions,
+    store: Arc<SharedStore>,
+    metrics: Arc<EngineMetrics>,
+    startup: Arc<StartupState>,
+    // channels
+    broadcast: Fifo<BroadcastJob>,
+    reg: Fifo<Registration>,
+    model_inputs: Vec<Fifo<WorkerMsg>>,
+    acc_q: Fifo<AccMsg>,
+    // threads
+    workers: Vec<WorkerHandle>,
+    broadcaster: Option<JoinHandle<()>>,
+    accumulator: Option<JoinHandle<()>>,
+}
+
+impl InferenceSystem {
+    /// Instantiate the worker pool for `matrix` and wait until every
+    /// worker reported ready. A worker load failure (the paper's
+    /// `{-1, None, None}`) tears the system down and returns the error.
+    pub fn build(
+        matrix: &AllocationMatrix,
+        ensemble: &Ensemble,
+        executor: Arc<dyn Executor>,
+        opts: EngineOptions,
+    ) -> anyhow::Result<InferenceSystem> {
+        if !matrix.all_models_placed() {
+            bail!("invalid allocation matrix: models {:?} have no worker",
+                  matrix.unplaced_models());
+        }
+        if matrix.n_models() != ensemble.len() {
+            bail!("matrix has {} model columns, ensemble {}", matrix.n_models(), ensemble.len());
+        }
+        if matrix.n_devices() != executor.devices().len() {
+            bail!("matrix has {} device rows, executor {}", matrix.n_devices(),
+                  executor.devices().len());
+        }
+
+        let store = SharedStore::new();
+        let metrics = Arc::new(EngineMetrics::default());
+        let startup = StartupState::new();
+
+        let model_inputs: Vec<Fifo<WorkerMsg>> =
+            (0..ensemble.len()).map(|_| Fifo::unbounded()).collect();
+        let acc_q: Fifo<AccMsg> = Fifo::unbounded();
+        let reg: Fifo<Registration> = Fifo::unbounded();
+
+        // accumulator
+        let accumulator = accumulator::spawn(
+            reg.clone(),
+            acc_q.clone(),
+            Arc::clone(&opts.combine),
+            ensemble.len(),
+            opts.segment_size,
+            Arc::clone(&store),
+            Arc::clone(&startup),
+            Arc::clone(&metrics),
+        );
+
+        // worker pool
+        let placements = matrix.placements();
+        let mut workers = Vec::with_capacity(placements.len());
+        for (id, p) in placements.iter().enumerate() {
+            let spec = WorkerSpec {
+                id,
+                device: p.device,
+                model_idx: p.model,
+                model: ensemble.members[p.model].clone(),
+                batch: p.batch as usize,
+                segment_size: opts.segment_size,
+            };
+            workers.push(worker::spawn(
+                spec,
+                Arc::clone(&executor),
+                model_inputs[p.model].clone(),
+                Arc::clone(&store),
+                acc_q.clone(),
+                opts.stage_capacity,
+                Arc::clone(&metrics),
+            ));
+        }
+
+        // broadcaster
+        let broadcast: Fifo<BroadcastJob> = Fifo::unbounded();
+        let broadcaster = {
+            let broadcast = broadcast.clone();
+            let inputs = model_inputs.clone();
+            let seg = opts.segment_size;
+            let metrics = Arc::clone(&metrics);
+            std::thread::Builder::new()
+                .name("broadcaster".into())
+                .spawn(move || {
+                    while let Some(job) = broadcast.recv() {
+                        let k = segments::segment_count(job.nb_images, seg);
+                        for q in &inputs {
+                            // one lock + wakeup per model queue (§Perf)
+                            let batch = (0..k)
+                                .map(|s| WorkerMsg::Segment { req: job.req, seg: s });
+                            if q.send_all(batch).is_err() {
+                                return;
+                            }
+                        }
+                        metrics
+                            .segments_broadcast
+                            .fetch_add((k * inputs.len()) as u64, Ordering::Relaxed);
+                    }
+                })
+                .expect("spawn broadcaster")
+        };
+
+        let system = InferenceSystem {
+            ensemble: ensemble.clone(),
+            matrix: matrix.clone(),
+            opts,
+            store,
+            metrics,
+            startup: Arc::clone(&startup),
+            broadcast,
+            reg,
+            model_inputs,
+            acc_q,
+            workers,
+            broadcaster: Some(broadcaster),
+            accumulator: Some(accumulator),
+        };
+
+        // wait for the full worker pool to be ready (paper: all workers
+        // sent {-2, None, None})
+        let deadline = std::time::Instant::now() + system.opts.startup_timeout;
+        let n = system.workers.len();
+        loop {
+            match system.startup_poll(n) {
+                Some(Ok(())) => break,
+                Some(Err(e)) => {
+                    let err = anyhow::anyhow!("worker startup failed: {e}");
+                    drop(system); // full teardown
+                    return Err(err);
+                }
+                None => {
+                    if std::time::Instant::now() > deadline {
+                        drop(system);
+                        bail!("startup timed out");
+                    }
+                    std::thread::sleep(Duration::from_millis(1));
+                }
+            }
+        }
+        Ok(system)
+    }
+
+    fn startup_poll(&self, n: usize) -> Option<Result<(), String>> {
+        if let Some(e) = self.startup.error() {
+            return Some(Err(e));
+        }
+        if self.startup.ready_count() >= n {
+            return Some(Ok(()));
+        }
+        None
+    }
+
+    /// The ensemble prediction: blocks until every model predicted every
+    /// image and the combination rule folded them (Deploy Mode).
+    pub fn predict(&self, x: Vec<f32>, nb_images: usize) -> anyhow::Result<Vec<f32>> {
+        let classes = self.ensemble.classes();
+        if nb_images == 0 {
+            return Ok(Vec::new());
+        }
+        if x.len() % nb_images != 0 {
+            bail!("input length {} not divisible by {nb_images} images", x.len());
+        }
+        if let Some(e) = self.startup.error() {
+            bail!("inference system is down: {e}");
+        }
+        let elems = x.len() / nb_images;
+        self.metrics.requests.fetch_add(1, Ordering::Relaxed);
+        self.metrics.images_in.fetch_add(nb_images as u64, Ordering::Relaxed);
+
+        let req = self.store.insert(x, nb_images, elems);
+        let k = segments::segment_count(nb_images, self.opts.segment_size);
+        let (tx, rx) = sync_channel(1);
+        self.reg
+            .send(Registration {
+                req,
+                nb_images,
+                classes,
+                expected_msgs: k * self.ensemble.len(),
+                done: tx,
+            })
+            .ok()
+            .context("system shutting down (registration queue closed)")?;
+        self.broadcast
+            .send(BroadcastJob { req, nb_images })
+            .ok()
+            .context("system shutting down (broadcast queue closed)")?;
+
+        rx.recv().map_err(|_| {
+            let detail = self
+                .startup
+                .error()
+                .unwrap_or_else(|| "accumulator stopped".to_string());
+            anyhow::anyhow!("prediction aborted: {detail}")
+        })
+    }
+
+    pub fn worker_count(&self) -> usize {
+        self.workers.len()
+    }
+
+    pub fn matrix(&self) -> &AllocationMatrix {
+        &self.matrix
+    }
+
+    pub fn ensemble(&self) -> &Ensemble {
+        &self.ensemble
+    }
+
+    pub fn metrics(&self) -> &EngineMetrics {
+        &self.metrics
+    }
+
+    pub fn options(&self) -> &EngineOptions {
+        &self.opts
+    }
+}
+
+impl Drop for InferenceSystem {
+    fn drop(&mut self) {
+        // shutdown order per the paper: stop broadcasting, let workers
+        // drain (s = -1 semantics = closed queues), then the accumulator.
+        self.broadcast.close();
+        if let Some(b) = self.broadcaster.take() {
+            let _ = b.join();
+        }
+        for q in &self.model_inputs {
+            q.close();
+        }
+        for w in self.workers.drain(..) {
+            w.join();
+        }
+        self.acc_q.close();
+        self.reg.close();
+        if let Some(a) = self.accumulator.take() {
+            let _ = a.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::DeviceSet;
+    use crate::exec::fake::FakeExecutor;
+    use crate::exec::sim::SimExecutor;
+    use crate::model::{ensemble, EnsembleId};
+
+    /// Spread members one per GPU (never the CPU: ImageNet members exceed
+    /// its pinned budget by design — see zoo.rs).
+    fn small_matrix(e: &Ensemble, d: &DeviceSet, batch: u32) -> AllocationMatrix {
+        let gpus = d.gpu_count();
+        let mut a = AllocationMatrix::zeroed(d.len(), e.len());
+        for m in 0..e.len() {
+            a.set(m % gpus, m, batch);
+        }
+        a
+    }
+
+    fn input_for(e: &Ensemble, n: usize) -> Vec<f32> {
+        vec![0.1; n * e.members[0].input_elems_per_image()]
+    }
+
+    #[test]
+    fn fake_end_to_end_zeros() {
+        let e = ensemble(EnsembleId::Imn4);
+        let d = DeviceSet::hgx(2);
+        let a = small_matrix(&e, &d, 8);
+        let ex = Arc::new(FakeExecutor::new(d));
+        let sys = InferenceSystem::build(&a, &e, ex, EngineOptions::default()).unwrap();
+        assert_eq!(sys.worker_count(), 4);
+        let y = sys.predict(input_for(&e, 300), 300).unwrap();
+        assert_eq!(y.len(), 300 * e.classes());
+        assert!(y.iter().all(|&v| v == 0.0));
+        // paper example: 300 images, N=128 -> 3 segments x 4 models
+        assert_eq!(sys.metrics().segments_broadcast.load(Ordering::Relaxed), 12);
+        assert_eq!(sys.metrics().requests_completed.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn sim_end_to_end_uniform_average() {
+        let e = ensemble(EnsembleId::Imn4);
+        let d = DeviceSet::hgx(4);
+        let a = small_matrix(&e, &d, 8);
+        let ex = SimExecutor::new(d, 50_000.0);
+        let sys = InferenceSystem::build(&a, &e, ex, EngineOptions::default()).unwrap();
+        let y = sys.predict(input_for(&e, 40), 40).unwrap();
+        let c = e.classes();
+        assert_eq!(y.len(), 40 * c);
+        // all sim members emit uniform rows; the average stays uniform
+        for v in &y {
+            assert!((v - 1.0 / c as f32).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn oom_worker_fails_build() {
+        let e = ensemble(EnsembleId::Imn12);
+        let d = DeviceSet::hgx(1);
+        // all 12 models on one V100: impossible
+        let mut a = AllocationMatrix::zeroed(d.len(), e.len());
+        for m in 0..e.len() {
+            a.set(0, m, 8);
+        }
+        let ex = SimExecutor::new(d, 50_000.0);
+        let err = InferenceSystem::build(&a, &e, ex, EngineOptions::default());
+        assert!(err.is_err());
+        let msg = format!("{:#}", err.err().unwrap());
+        assert!(msg.contains("OOM") || msg.contains("startup failed"), "{msg}");
+    }
+
+    #[test]
+    fn data_parallel_and_colocated_matrix() {
+        // fig. 1 toy: model B data-parallel over two devices, A co-located
+        let e = ensemble(EnsembleId::Imn4);
+        let d = DeviceSet::hgx(2);
+        let mut a = AllocationMatrix::zeroed(d.len(), e.len());
+        a.set(0, 0, 8);
+        a.set(0, 1, 8);
+        a.set(1, 1, 16);
+        a.set(0, 2, 8);
+        a.set(1, 3, 8);
+        let ex = SimExecutor::new(d, 50_000.0);
+        let sys = InferenceSystem::build(&a, &e, ex, EngineOptions::default()).unwrap();
+        assert_eq!(sys.worker_count(), 5);
+        let y = sys.predict(input_for(&e, 260), 260).unwrap();
+        assert_eq!(y.len(), 260 * e.classes());
+    }
+
+    #[test]
+    fn multiple_sequential_requests() {
+        let e = ensemble(EnsembleId::Imn1);
+        let d = DeviceSet::hgx(1);
+        let a = small_matrix(&e, &d, 32);
+        let ex = SimExecutor::new(d, 50_000.0);
+        let sys = InferenceSystem::build(&a, &e, ex, EngineOptions::default()).unwrap();
+        for n in [1usize, 7, 128, 300] {
+            let y = sys.predict(input_for(&e, n), n).unwrap();
+            assert_eq!(y.len(), n * e.classes());
+        }
+        assert_eq!(sys.metrics().requests_completed.load(Ordering::Relaxed), 4);
+    }
+
+    #[test]
+    fn concurrent_requests() {
+        let e = ensemble(EnsembleId::Imn4);
+        let d = DeviceSet::hgx(2);
+        let a = small_matrix(&e, &d, 8);
+        let ex = SimExecutor::new(d, 50_000.0);
+        let sys = Arc::new(
+            InferenceSystem::build(&a, &e, ex, EngineOptions::default()).unwrap(),
+        );
+        std::thread::scope(|s| {
+            for _ in 0..4 {
+                let sys = Arc::clone(&sys);
+                let e = &e;
+                s.spawn(move || {
+                    let y = sys.predict(input_for(e, 50), 50).unwrap();
+                    assert_eq!(y.len(), 50 * e.classes());
+                });
+            }
+        });
+        assert_eq!(sys.metrics().requests_completed.load(Ordering::Relaxed), 4);
+    }
+
+    #[test]
+    fn zero_images_fast_path() {
+        let e = ensemble(EnsembleId::Imn1);
+        let d = DeviceSet::hgx(1);
+        let a = small_matrix(&e, &d, 8);
+        let ex = Arc::new(FakeExecutor::new(d));
+        let sys = InferenceSystem::build(&a, &e, ex, EngineOptions::default()).unwrap();
+        assert!(sys.predict(Vec::new(), 0).unwrap().is_empty());
+    }
+
+    #[test]
+    fn invalid_matrix_rejected() {
+        let e = ensemble(EnsembleId::Imn4);
+        let d = DeviceSet::hgx(2);
+        let a = AllocationMatrix::zeroed(d.len(), e.len()); // nothing placed
+        let ex = Arc::new(FakeExecutor::new(d));
+        assert!(InferenceSystem::build(&a, &e, ex, EngineOptions::default()).is_err());
+    }
+}

@@ -1,0 +1,267 @@
+//! The worker — figure 2's anatomy, three asynchronous threads connected
+//! by bounded FIFOs:
+//!
+//! * **batcher** — waits for segment ids on the model's input FIFO, slices
+//!   the segment's rows from the shared store and splits them into batches
+//!   of the worker's batch size (from the allocation matrix);
+//! * **predictor** — loads the DNN onto its device once (reporting ready /
+//!   out-of-memory to the accumulator), then predicts batch after batch;
+//! * **prediction sender** — reassembles batches into segments of
+//!   predictions and puts the `{s, m, P}` triplet on the prediction FIFO.
+//!
+//! The bounded stage queues give pipelining with backpressure: the batcher
+//! may prepare the next batch while the predictor computes and the sender
+//! assembles — the paper's "to be performant it contains 3 asynchronous
+//! threads".
+
+use std::sync::Arc;
+use std::thread::JoinHandle;
+
+use crate::engine::messages::{AccMsg, PredMsg, WorkerMsg};
+use crate::engine::queue::Fifo;
+use crate::engine::segments;
+use crate::engine::store::{RequestData, SharedStore};
+use crate::exec::Executor;
+use crate::metrics::EngineMetrics;
+use crate::model::ModelSpec;
+
+/// Static description of one worker (one non-zero matrix cell).
+#[derive(Debug, Clone)]
+pub struct WorkerSpec {
+    pub id: usize,
+    pub device: usize,
+    /// Matrix column.
+    pub model_idx: usize,
+    pub model: ModelSpec,
+    pub batch: usize,
+    /// Engine-wide segment size (the broadcaster uses the same value).
+    pub segment_size: usize,
+}
+
+/// One batch of rows on its way to the predictor. Rows are NOT copied:
+/// the job carries a handle to the request's shared store entry plus the
+/// row range (§Perf: the per-batch `rows.to_vec()` copy was the engine's
+/// top hot-spot — 85 MB per 1024-image IMN12 request).
+struct BatchJob {
+    req: u64,
+    seg: usize,
+    chunk: usize,
+    n_chunks: usize,
+    /// Row range [lo, hi) within the request.
+    lo: usize,
+    hi: usize,
+    data: Arc<RequestData>,
+}
+
+/// One predicted batch on its way to the sender.
+struct PredBatch {
+    req: u64,
+    seg: usize,
+    chunk: usize,
+    n_chunks: usize,
+    n_rows: usize,
+    preds: Vec<f32>,
+}
+
+/// Join handles of a spawned worker.
+pub struct WorkerHandle {
+    pub spec: WorkerSpec,
+    threads: Vec<JoinHandle<()>>,
+}
+
+impl WorkerHandle {
+    pub fn join(self) {
+        for t in self.threads {
+            let _ = t.join();
+        }
+    }
+}
+
+/// Spawn the worker's three threads.
+///
+/// `input` is the model's shared segment-id FIFO (data-parallel workers of
+/// one model compete on it); `acc` is the global prediction FIFO.
+pub fn spawn(
+    spec: WorkerSpec,
+    executor: Arc<dyn Executor>,
+    input: Fifo<WorkerMsg>,
+    store: Arc<SharedStore>,
+    acc: Fifo<AccMsg>,
+    stage_capacity: usize,
+    metrics: Arc<EngineMetrics>,
+) -> WorkerHandle {
+    let to_pred: Fifo<BatchJob> = Fifo::bounded(stage_capacity);
+    let to_send: Fifo<PredBatch> = Fifo::bounded(stage_capacity);
+
+    let batcher = {
+        let spec = spec.clone();
+        let to_pred = to_pred.clone();
+        let metrics = Arc::clone(&metrics);
+        std::thread::Builder::new()
+            .name(format!("batcher-{}", spec.id))
+            .spawn(move || batcher_loop(&spec, &input, &store, &to_pred, &metrics))
+            .expect("spawn batcher")
+    };
+
+    let predictor = {
+        let spec = spec.clone();
+        let to_pred = to_pred.clone();
+        let to_send = to_send.clone();
+        let acc = acc.clone();
+        let metrics = Arc::clone(&metrics);
+        std::thread::Builder::new()
+            .name(format!("predictor-{}", spec.id))
+            .spawn(move || predictor_loop(&spec, executor, &to_pred, &to_send, &acc, &metrics))
+            .expect("spawn predictor")
+    };
+
+    let sender = {
+        let spec = spec.clone();
+        std::thread::Builder::new()
+            .name(format!("sender-{}", spec.id))
+            .spawn(move || sender_loop(&spec, &to_send, &acc, &metrics))
+            .expect("spawn sender")
+    };
+
+    WorkerHandle { spec, threads: vec![batcher, predictor, sender] }
+}
+
+fn batcher_loop(
+    spec: &WorkerSpec,
+    input: &Fifo<WorkerMsg>,
+    store: &SharedStore,
+    to_pred: &Fifo<BatchJob>,
+    _metrics: &EngineMetrics,
+) {
+    while let Some(WorkerMsg::Segment { req, seg }) = input.recv() {
+        let Some(data) = store.get(req) else {
+            // request was torn down mid-flight (shutdown); skip
+            continue;
+        };
+        let lo = segments::start(seg, spec.segment_size);
+        let hi = segments::end(seg, spec.segment_size, data.nb_images);
+        let n = hi - lo;
+        if n == 0 {
+            continue;
+        }
+        let n_chunks = n.div_ceil(spec.batch);
+        for c in 0..n_chunks {
+            let clo = lo + c * spec.batch;
+            let chi = (clo + spec.batch).min(hi);
+            let job = BatchJob {
+                req,
+                seg,
+                chunk: c,
+                n_chunks,
+                lo: clo,
+                hi: chi,
+                data: Arc::clone(&data),
+            };
+            if to_pred.send(job).is_err() {
+                return; // predictor gone (load failure / shutdown)
+            }
+        }
+    }
+    to_pred.close();
+}
+
+fn predictor_loop(
+    spec: &WorkerSpec,
+    executor: Arc<dyn Executor>,
+    to_pred: &Fifo<BatchJob>,
+    to_send: &Fifo<PredBatch>,
+    acc: &Fifo<AccMsg>,
+    metrics: &EngineMetrics,
+) {
+    // "the predictor persists the DNN into the device memory"
+    let mut instance = match executor.load(&spec.model, spec.device, spec.batch) {
+        Ok(inst) => {
+            // paper: {-2, None, None} — ready to serve
+            let _ = acc.send(AccMsg::WorkerReady { worker: spec.id });
+            inst
+        }
+        Err(e) => {
+            // paper: {-1, None, None} — triggers system shutdown
+            metrics.worker_errors.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+            let _ = acc.send(AccMsg::WorkerError { worker: spec.id, error: format!("{e:#}") });
+            to_pred.close(); // unblock + stop the batcher
+            to_send.close();
+            return;
+        }
+    };
+
+    while let Some(job) = to_pred.recv() {
+        let rows = job.data.rows(job.lo, job.hi);
+        match instance.predict(rows, job.hi - job.lo) {
+            Ok(preds) => {
+                metrics.batches_predicted.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                let out = PredBatch {
+                    req: job.req,
+                    seg: job.seg,
+                    chunk: job.chunk,
+                    n_chunks: job.n_chunks,
+                    n_rows: job.hi - job.lo,
+                    preds,
+                };
+                if to_send.send(out).is_err() {
+                    break;
+                }
+            }
+            Err(e) => {
+                metrics.worker_errors.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                let _ = acc.send(AccMsg::WorkerError { worker: spec.id, error: format!("{e:#}") });
+                break;
+            }
+        }
+    }
+    to_send.close();
+}
+
+fn sender_loop(
+    spec: &WorkerSpec,
+    to_send: &Fifo<PredBatch>,
+    acc: &Fifo<AccMsg>,
+    metrics: &EngineMetrics,
+) {
+    // chunks of one segment arrive in order (the batcher emits them
+    // sequentially and the stage FIFOs preserve order)
+    let mut cur: Option<PredMsg> = None;
+    let mut chunks_seen = 0usize;
+    let mut chunks_expected = 0usize;
+
+    while let Some(pb) = to_send.recv() {
+        if cur.is_none() {
+            chunks_expected = pb.n_chunks;
+            chunks_seen = 0;
+            // reserve the whole segment's prediction matrix up front:
+            // avoids per-chunk reallocation on the hot path (§Perf)
+            let per_chunk = pb.preds.len();
+            cur = Some(PredMsg {
+                req: pb.req,
+                seg: pb.seg,
+                model: spec.model_idx,
+                worker: spec.id,
+                preds: Vec::with_capacity(per_chunk * pb.n_chunks),
+                n_rows: 0,
+            });
+        }
+        let msg = cur.as_mut().unwrap();
+        debug_assert_eq!(msg.req, pb.req, "chunks of segments must not interleave");
+        debug_assert_eq!(msg.seg, pb.seg);
+        debug_assert_eq!(pb.chunk, chunks_seen, "in-order chunks");
+        msg.preds.extend_from_slice(&pb.preds);
+        msg.n_rows += pb.n_rows;
+        chunks_seen += 1;
+
+        if chunks_seen == chunks_expected {
+            let done = cur.take().unwrap();
+            metrics.pred_messages.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+            metrics
+                .images_predicted
+                .fetch_add(done.n_rows as u64, std::sync::atomic::Ordering::Relaxed);
+            if acc.send(AccMsg::Pred(done)).is_err() {
+                return;
+            }
+        }
+    }
+}

@@ -1,0 +1,74 @@
+//! Fake executor for the §IV.A overhead experiment: "we temporarily
+//! replace all the DNN calls with a fake prediction containing only zero
+//! values". Everything else (queues, segments, accumulator) runs exactly
+//! as in production, so the measured time is the inference-system
+//! overhead alone.
+
+use crate::device::DeviceSet;
+use crate::model::ModelSpec;
+
+use super::{Executor, ModelInstance};
+
+/// Zero-latency, zero-output backend.
+pub struct FakeExecutor {
+    devices: DeviceSet,
+}
+
+impl FakeExecutor {
+    pub fn new(devices: DeviceSet) -> FakeExecutor {
+        FakeExecutor { devices }
+    }
+}
+
+struct FakeInstance {
+    classes: usize,
+    elems: usize,
+}
+
+impl ModelInstance for FakeInstance {
+    fn predict(&mut self, _input: &[f32], n_rows: usize) -> anyhow::Result<Vec<f32>> {
+        Ok(vec![0.0; n_rows * self.classes])
+    }
+
+    fn classes(&self) -> usize {
+        self.classes
+    }
+
+    fn input_elems(&self) -> usize {
+        self.elems
+    }
+}
+
+impl Executor for FakeExecutor {
+    fn load(
+        &self,
+        model: &ModelSpec,
+        _device: usize,
+        _batch: usize,
+    ) -> anyhow::Result<Box<dyn ModelInstance>> {
+        Ok(Box::new(FakeInstance {
+            classes: model.classes,
+            elems: model.input_elems_per_image(),
+        }))
+    }
+
+    fn devices(&self) -> &DeviceSet {
+        &self.devices
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::zoo;
+
+    #[test]
+    fn returns_zeros() {
+        let ex = FakeExecutor::new(DeviceSet::hgx(1));
+        let m = zoo::by_name("ResNet50").unwrap();
+        let mut inst = ex.load(&m, 0, 8).unwrap();
+        let out = inst.predict(&vec![1.0; 3 * m.input_elems_per_image()], 3).unwrap();
+        assert_eq!(out.len(), 3 * m.classes);
+        assert!(out.iter().all(|&v| v == 0.0));
+    }
+}

@@ -1,0 +1,52 @@
+//! Compute backends behind the worker pool.
+//!
+//! The *predictor* thread of each worker owns one [`ModelInstance`]
+//! ("the predictor persists the DNN into the device memory", §II.D).
+//! Instances are created **on the worker thread** by an [`Executor`]
+//! factory — required by the PJRT backend, whose client handles are
+//! `Rc`-based and must not cross threads — and never move afterwards.
+//!
+//! Backends:
+//! * [`pjrt`] — real compute: loads the AOT HLO-text artifacts and runs
+//!   them on the PJRT CPU client (numerics verified against goldens).
+//! * [`sim`] — the calibrated V100/HGX simulator used for the paper-scale
+//!   experiments (Table I/III sweeps) — see DESIGN.md §Substitutions.
+//! * [`fake`] — zero-output instant predictions for the §IV.A overhead
+//!   measurement.
+
+pub mod fake;
+pub mod pjrt;
+pub mod sim;
+
+use crate::device::DeviceSet;
+use crate::model::ModelSpec;
+
+/// One loaded DNN instance pinned to a device (one matrix cell).
+/// Deliberately NOT `Send`: lives and dies on its worker thread.
+pub trait ModelInstance {
+    /// Predict `n_rows` samples (flattened row-major `n_rows × elems`).
+    /// Returns `n_rows × classes` probabilities.
+    fn predict(&mut self, input: &[f32], n_rows: usize) -> anyhow::Result<Vec<f32>>;
+
+    /// Output vector length per sample.
+    fn classes(&self) -> usize;
+
+    /// Expected input elements per sample.
+    fn input_elems(&self) -> usize;
+}
+
+/// Thread-safe factory handing instances to worker threads.
+pub trait Executor: Send + Sync {
+    /// Load `model` onto device index `device` with worker batch `batch`.
+    /// Fails (the paper's `{-1, None, None}` message) when the device
+    /// cannot host the instance.
+    fn load(
+        &self,
+        model: &ModelSpec,
+        device: usize,
+        batch: usize,
+    ) -> anyhow::Result<Box<dyn ModelInstance>>;
+
+    /// The device topology this executor serves.
+    fn devices(&self) -> &DeviceSet;
+}

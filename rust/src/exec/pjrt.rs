@@ -1,0 +1,209 @@
+//! Real-compute backend: PJRT CPU client over the AOT HLO-text artifacts.
+//!
+//! Mirrors the paper's TensorFlow "load pb + predict" inference framework
+//! (§I.A): `load` parses the model's HLO text for the worker's batch size,
+//! compiles it on a thread-local PJRT CPU client, and `predict` feeds
+//! literals through the compiled executable. Each worker thread owns its
+//! client + executable (the `xla` crate handles are `Rc`-based), which
+//! also matches the paper's one-process-per-worker design.
+//!
+//! Interchange is HLO *text*: jax >= 0.5 serialized protos carry 64-bit
+//! instruction ids that xla_extension 0.5.1 rejects; the text parser
+//! reassigns ids (see python/compile/aot.py and DESIGN.md).
+
+use std::sync::Arc;
+
+use anyhow::{bail, Context};
+
+use crate::device::DeviceSet;
+use crate::model::{Manifest, ModelSpec};
+
+use super::{Executor, ModelInstance};
+
+/// Executor backed by the artifacts manifest + PJRT CPU.
+pub struct PjrtExecutor {
+    devices: DeviceSet,
+    manifest: Arc<Manifest>,
+}
+
+impl PjrtExecutor {
+    pub fn new(devices: DeviceSet, manifest: Arc<Manifest>) -> Arc<PjrtExecutor> {
+        Arc::new(PjrtExecutor { devices, manifest })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+}
+
+struct PjrtInstance {
+    /// Keep the client alive as long as the executable.
+    _client: xla::PjRtClient,
+    exe: xla::PjRtLoadedExecutable,
+    /// Batch the artifact was compiled for (inputs are padded up to it).
+    artifact_batch: usize,
+    img: usize,
+    in_ch: usize,
+    classes: usize,
+}
+
+impl ModelInstance for PjrtInstance {
+    fn predict(&mut self, input: &[f32], n_rows: usize) -> anyhow::Result<Vec<f32>> {
+        if n_rows == 0 {
+            return Ok(Vec::new());
+        }
+        let elems = self.input_elems();
+        if input.len() != n_rows * elems {
+            bail!("pjrt predict: input len {} != {n_rows} x {elems}", input.len());
+        }
+        if n_rows > self.artifact_batch {
+            bail!("pjrt predict: {n_rows} rows > artifact batch {}", self.artifact_batch);
+        }
+
+        // zero-pad up to the compiled batch
+        let padded_len = self.artifact_batch * elems;
+        let literal = if input.len() == padded_len {
+            xla::Literal::vec1(input)
+        } else {
+            let mut padded = vec![0.0f32; padded_len];
+            padded[..input.len()].copy_from_slice(input);
+            xla::Literal::vec1(&padded)
+        };
+        let literal = literal
+            .reshape(&[self.artifact_batch as i64, self.img as i64,
+                       self.img as i64, self.in_ch as i64])
+            .context("reshaping input literal")?;
+
+        let result = self.exe.execute::<xla::Literal>(&[literal])?;
+        let out = result[0][0]
+            .to_literal_sync()?
+            .to_tuple1()
+            .context("unwrapping 1-tuple output")?;
+        let mut v = out.to_vec::<f32>()?;
+        v.truncate(n_rows * self.classes);
+        Ok(v)
+    }
+
+    fn classes(&self) -> usize {
+        self.classes
+    }
+
+    fn input_elems(&self) -> usize {
+        self.img * self.img * self.in_ch
+    }
+}
+
+impl Executor for PjrtExecutor {
+    fn load(
+        &self,
+        model: &ModelSpec,
+        _device: usize,
+        batch: usize,
+    ) -> anyhow::Result<Box<dyn ModelInstance>> {
+        let artifact_name = model
+            .artifact
+            .as_deref()
+            .with_context(|| format!("model {} has no AOT artifact", model.name))?;
+        let mm = self.manifest.model(artifact_name)?;
+        let (artifact_batch, file) = mm
+            .best_batch_artifact(batch)
+            .with_context(|| format!("no artifact for {} batch {batch}", mm.name))?;
+        let path = self.manifest.artifact_path(file);
+
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("artifact path utf-8")?,
+        )
+        .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client.compile(&comp).context("PJRT compile")?;
+
+        Ok(Box::new(PjrtInstance {
+            _client: client,
+            exe,
+            artifact_batch,
+            img: mm.img_size,
+            in_ch: mm.in_ch,
+            classes: mm.classes,
+        }))
+    }
+
+    fn devices(&self) -> &DeviceSet {
+        &self.devices
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::zoo;
+    use std::path::PathBuf;
+
+    fn manifest() -> Option<Arc<Manifest>> {
+        let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        dir.join("manifest.json")
+            .exists()
+            .then(|| Arc::new(Manifest::load(dir).unwrap()))
+    }
+
+    #[test]
+    fn golden_roundtrip_resnet18() {
+        let Some(man) = manifest() else {
+            eprintln!("skipped: run `make artifacts`");
+            return;
+        };
+        let mm = man.model("resnet18_t").unwrap().clone();
+        let gi = man.read_f32(&mm.golden_input).unwrap();
+        let want = man.read_f32(&mm.golden_output).unwrap();
+
+        let ex = PjrtExecutor::new(DeviceSet::hgx(1), Arc::clone(&man));
+        let spec = zoo::by_name("ResNet18").unwrap();
+        let mut inst = ex.load(&spec, 0, 8).unwrap();
+        assert_eq!(inst.classes(), mm.classes);
+        let got = inst.predict(&gi, man.golden_batch).unwrap();
+        assert_eq!(got.len(), want.len());
+        for (i, (a, b)) in got.iter().zip(&want).enumerate() {
+            assert!((a - b).abs() < 1e-4, "idx {i}: {a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn partial_batch_padding() {
+        let Some(man) = manifest() else { return };
+        let mm = man.model("mobilenetv2_t").unwrap().clone();
+        let gi = man.read_f32(&mm.golden_input).unwrap();
+        let want = man.read_f32(&mm.golden_output).unwrap();
+        let elems = mm.input_elems_per_image();
+
+        let ex = PjrtExecutor::new(DeviceSet::hgx(1), Arc::clone(&man));
+        let spec = zoo::by_name("MobileNetV2").unwrap();
+        let mut inst = ex.load(&spec, 0, 8).unwrap();
+        // predict only the first 3 golden rows
+        let got = inst.predict(&gi[..3 * elems], 3).unwrap();
+        assert_eq!(got.len(), 3 * mm.classes);
+        for (a, b) in got.iter().zip(&want[..3 * mm.classes]) {
+            assert!((a - b).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn batch_fallback_picks_floor_artifact() {
+        let Some(man) = manifest() else { return };
+        let ex = PjrtExecutor::new(DeviceSet::hgx(1), Arc::clone(&man));
+        let spec = zoo::by_name("ResNet18").unwrap();
+        // batch 48 is not compiled; loader must fall back to 32
+        let inst = ex.load(&spec, 0, 48);
+        assert!(inst.is_ok());
+    }
+
+    #[test]
+    fn missing_artifact_fails() {
+        let Some(man) = manifest() else { return };
+        let ex = PjrtExecutor::new(DeviceSet::hgx(1), man);
+        let mut spec = zoo::by_name("ResNet18").unwrap();
+        spec.artifact = None;
+        assert!(ex.load(&spec, 0, 8).is_err());
+        spec.artifact = Some("not_compiled_t".into());
+        assert!(ex.load(&spec, 0, 8).is_err());
+    }
+}

@@ -1,0 +1,311 @@
+//! Calibrated simulator of the paper's HGX/V100 testbed.
+//!
+//! Every device is a memory ledger plus a **virtual busy timeline**: a
+//! predict call reserves `[start, start+latency/time_scale)` on its
+//! device's timeline (start = max(now, device busy-until)) and the worker
+//! thread sleeps until that *absolute* deadline. Consequences:
+//!
+//! * co-localization contention, data-parallel speedup and batch-size
+//!   efficiency all emerge from the shared timeline, exactly like a busy
+//!   GPU queue;
+//! * scheduler wakeup overshoot does NOT accumulate — the next call's
+//!   start is taken from the device timeline, not from when the thread
+//!   happened to wake (important on small hosts: this box has 1 core);
+//! * the engine around the executor (segments, FIFOs, accumulator) is the
+//!   *real* production code, not a model of it.
+//!
+//! Throughputs measured on a sim-backed engine are divided by
+//! `time_scale` to read at paper scale (see `benchkit`).
+
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::bail;
+
+use crate::device::DeviceSet;
+use crate::model::ModelSpec;
+
+use super::{Executor, ModelInstance};
+
+/// Per-device simulated state.
+struct DeviceState {
+    /// MB already reserved by loaded instances.
+    used_mb: Mutex<f64>,
+    /// Scaled-seconds-since-t0 until which the device is busy.
+    busy_until: Mutex<f64>,
+}
+
+/// Simulated executor over the analytic zoo latency/memory model.
+pub struct SimExecutor {
+    devices: DeviceSet,
+    state: Vec<Arc<DeviceState>>,
+    /// Real sleep = paper latency / time_scale. 1.0 = real time.
+    time_scale: f64,
+    /// Anchor of the scaled timeline.
+    t0: Instant,
+}
+
+impl SimExecutor {
+    pub fn new(devices: DeviceSet, time_scale: f64) -> Arc<SimExecutor> {
+        assert!(time_scale > 0.0);
+        let state = devices
+            .iter()
+            .map(|_| {
+                Arc::new(DeviceState {
+                    used_mb: Mutex::new(0.0),
+                    busy_until: Mutex::new(0.0),
+                })
+            })
+            .collect();
+        Arc::new(SimExecutor { devices, state, time_scale, t0: Instant::now() })
+    }
+
+    pub fn time_scale(&self) -> f64 {
+        self.time_scale
+    }
+
+    /// Memory currently reserved on a device (MB) — test/diagnostics hook.
+    pub fn device_used_mb(&self, device: usize) -> f64 {
+        *self.state[device].used_mb.lock().unwrap()
+    }
+
+    /// Busy timeline of a device in scaled seconds (diagnostics).
+    pub fn device_busy_until(&self, device: usize) -> f64 {
+        *self.state[device].busy_until.lock().unwrap()
+    }
+}
+
+/// RAII memory reservation: released when the instance drops.
+struct Reservation {
+    state: Arc<DeviceState>,
+    mb: f64,
+}
+
+impl Drop for Reservation {
+    fn drop(&mut self) {
+        *self.state.used_mb.lock().unwrap() -= self.mb;
+    }
+}
+
+struct SimInstance {
+    state: Arc<DeviceState>,
+    _reservation: Reservation,
+    /// Device parameters for the latency model.
+    dev: crate::device::DeviceSpec,
+    gflops: f64,
+    t0: Instant,
+    time_scale: f64,
+    classes: usize,
+    elems: usize,
+    batch: usize,
+}
+
+impl ModelInstance for SimInstance {
+    fn predict(&mut self, input: &[f32], n_rows: usize) -> anyhow::Result<Vec<f32>> {
+        if n_rows == 0 {
+            return Ok(Vec::new());
+        }
+        if input.len() != n_rows * self.elems {
+            bail!("sim predict: input len {} != {n_rows} x {}", input.len(), self.elems);
+        }
+        let rows = n_rows.min(self.batch);
+        // the device's calibrated latency model (overhead + compute at the
+        // batch-efficiency of the actual rows in this call)
+        let paper_ms = self.dev.predict_latency_ms(self.gflops, rows);
+        let lat_scaled = paper_ms / 1000.0 / self.time_scale;
+
+        // Reserve [start, end) on the device timeline. The reservation is
+        // made against the timeline (not against when this thread happens
+        // to run), so scheduler wakeup overshoot cannot stretch the
+        // simulated schedule.
+        let end = {
+            let mut bu = self.state.busy_until.lock().unwrap();
+            let now = self.t0.elapsed().as_secs_f64();
+            let start = now.max(*bu);
+            *bu = start + lat_scaled;
+            *bu
+        };
+        // Sleep to (deadline - lookahead): the lookahead window absorbs the
+        // OS sleep overshoot (~0.2-1.2 ms/wakeup on this loaded 1-core
+        // host) that would otherwise accumulate per call. The worker runs
+        // at most ~half a call ahead of its device timeline — the same
+        // bounded lead a depth-1 hardware queue gives a real GPU worker.
+        let lookahead = 0.004 + 0.5 * lat_scaled;
+        let wake = end - lookahead;
+        loop {
+            let now = self.t0.elapsed().as_secs_f64();
+            if now >= wake {
+                break;
+            }
+            std::thread::sleep(Duration::from_secs_f64((wake - now).min(0.05)));
+        }
+
+        // uniform pseudo-probabilities keep the combination rule exact
+        Ok(vec![1.0 / self.classes as f32; n_rows * self.classes])
+    }
+
+    fn classes(&self) -> usize {
+        self.classes
+    }
+
+    fn input_elems(&self) -> usize {
+        self.elems
+    }
+}
+
+impl Executor for SimExecutor {
+    fn load(
+        &self,
+        model: &ModelSpec,
+        device: usize,
+        batch: usize,
+    ) -> anyhow::Result<Box<dyn ModelInstance>> {
+        let spec = &self.devices[device];
+        let need = model.worker_mem_mb(batch);
+        let state = Arc::clone(&self.state[device]);
+        {
+            let mut used = state.used_mb.lock().unwrap();
+            if *used + need > spec.mem_mb as f64 {
+                bail!(
+                    "OOM on {}: {:.0} MB needed, {:.0}/{} MB used (model {})",
+                    spec.name, need, *used, spec.mem_mb, model.name
+                );
+            }
+            *used += need;
+        }
+        let reservation = Reservation { state: Arc::clone(&state), mb: need };
+
+        Ok(Box::new(SimInstance {
+            state,
+            _reservation: reservation,
+            dev: spec.clone(),
+            // architecture efficiency scales effective FLOP/s (zoo.rs)
+            gflops: model.gflops / model.eff_factor,
+            t0: self.t0,
+            time_scale: self.time_scale,
+            classes: model.classes,
+            elems: model.input_elems_per_image(),
+            batch,
+        }))
+    }
+
+    fn devices(&self) -> &DeviceSet {
+        &self.devices
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::zoo;
+
+    #[test]
+    fn memory_reserved_and_released() {
+        let ex = SimExecutor::new(DeviceSet::hgx(1), 1000.0);
+        let m = zoo::by_name("ResNet50").unwrap();
+        assert_eq!(ex.device_used_mb(0), 0.0);
+        let inst = ex.load(&m, 0, 8).unwrap();
+        assert!((ex.device_used_mb(0) - m.worker_mem_mb(8)).abs() < 1e-9);
+        drop(inst);
+        assert_eq!(ex.device_used_mb(0), 0.0);
+    }
+
+    #[test]
+    fn oom_when_device_full() {
+        let ex = SimExecutor::new(DeviceSet::hgx(1), 1000.0);
+        let vgg = zoo::by_name("VGG19").unwrap();
+        let _a = ex.load(&vgg, 0, 8).unwrap();
+        let _b = ex.load(&vgg, 0, 8).unwrap();
+        // third VGG19 (~7 GB each) cannot fit a 16 GB V100
+        match ex.load(&vgg, 0, 8) {
+            Ok(_) => panic!("expected OOM, used={}", ex.device_used_mb(0)),
+            Err(e) => assert!(format!("{e:#}").contains("OOM")),
+        }
+    }
+
+    #[test]
+    fn predict_advances_device_timeline() {
+        let ex = SimExecutor::new(DeviceSet::hgx(1), 100.0);
+        let m = zoo::by_name("ResNet152").unwrap();
+        let mut inst = ex.load(&m, 0, 8).unwrap();
+        let x = vec![0.0f32; 8 * m.input_elems_per_image()];
+        // first call anchors the timeline (start = now, load-dependent);
+        // the second, issued back-to-back within the lookahead window,
+        // must extend the timeline by EXACTLY one latency.
+        let out = inst.predict(&x, 8).unwrap();
+        assert_eq!(out.len(), 8 * m.classes);
+        let before = ex.device_busy_until(0);
+        inst.predict(&x, 8).unwrap();
+        let after = ex.device_busy_until(0);
+        let paper_s = m.predict_latency_ms(&ex.devices()[0], 8) / 1000.0;
+        let want = paper_s / 100.0;
+        // exact when the worker stays ahead of the timeline; allow jitter
+        // for the case where a loaded host delays the second call
+        assert!((after - before) >= want * 0.999, "delta {}", after - before);
+        assert!((after - before) <= want + 0.05, "delta {}", after - before);
+    }
+
+    #[test]
+    fn colocated_instances_serialize() {
+        let ex = SimExecutor::new(DeviceSet::hgx(1), 50.0);
+        let m = zoo::by_name("ResNet50").unwrap();
+        let x = vec![0.0f32; 8 * m.input_elems_per_image()];
+        let paper_s = m.predict_latency_ms(&ex.devices()[0], 8) / 1000.0;
+
+        std::thread::scope(|s| {
+            for _ in 0..2 {
+                let exr = &ex;
+                let xr = &x;
+                let mr = &m;
+                s.spawn(move || {
+                    let mut inst = exr.load(mr, 0, 8).unwrap();
+                    inst.predict(xr, 8).unwrap();
+                });
+            }
+        });
+        // two calls back to back on the shared timeline
+        let busy = ex.device_busy_until(0);
+        let want = 2.0 * paper_s / 50.0;
+        assert!((busy - want).abs() < want * 0.25, "busy={busy} want={want}");
+    }
+
+    #[test]
+    fn independent_devices_overlap() {
+        let ex = SimExecutor::new(DeviceSet::hgx(2), 50.0);
+        let m = zoo::by_name("ResNet152").unwrap();
+        let x = vec![0.0f32; 8 * m.input_elems_per_image()];
+        let t = Instant::now();
+        std::thread::scope(|s| {
+            for d in 0..2 {
+                let exr = &ex;
+                let xr = &x;
+                let mr = &m;
+                s.spawn(move || {
+                    let mut inst = exr.load(mr, d, 8).unwrap();
+                    inst.predict(xr, 8).unwrap();
+                });
+            }
+        });
+        let real = t.elapsed().as_secs_f64();
+        let one = m.predict_latency_ms(&ex.devices()[0], 8) / 1000.0 / 50.0;
+        assert!(real < one * 1.8, "parallel devices: {real}s vs one call {one}s");
+    }
+
+    #[test]
+    fn probabilities_sum_to_one() {
+        let ex = SimExecutor::new(DeviceSet::hgx(1), 10000.0);
+        let m = zoo::by_name("MobileNetV2").unwrap();
+        let mut inst = ex.load(&m, 0, 8).unwrap();
+        let out = inst.predict(&vec![0.0; 2 * m.input_elems_per_image()], 2).unwrap();
+        let row: f32 = out[..m.classes].iter().sum();
+        assert!((row - 1.0).abs() < 1e-3);
+    }
+
+    #[test]
+    fn rejects_bad_input_len() {
+        let ex = SimExecutor::new(DeviceSet::hgx(1), 1000.0);
+        let m = zoo::by_name("ResNet18").unwrap();
+        let mut inst = ex.load(&m, 0, 8).unwrap();
+        assert!(inst.predict(&[0.0; 7], 2).is_err());
+    }
+}

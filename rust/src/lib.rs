@@ -1,0 +1,39 @@
+//! # ensemble-serve
+//!
+//! Reproduction of *"An efficient and flexible inference system for serving
+//! heterogeneous ensembles of deep neural networks"* (Pochelu, Petiton,
+//! Conche — IEEE BigData 2021).
+//!
+//! The crate is the L3 coordinator of a three-layer stack:
+//!
+//! * **L1/L2 (build-time python)** — each ensemble member is a JAX CNN whose
+//!   convolutions funnel through a Pallas tiled-matmul kernel; `make
+//!   artifacts` AOT-lowers every (model, batch) pair to HLO text under
+//!   `artifacts/`.
+//! * **L3 (this crate)** — everything the paper contributes: the
+//!   [`alloc::AllocationMatrix`] formalism, the allocation-matrix optimizer
+//!   ([`alloc::worstfit`] Algorithm 1 + [`alloc::greedy`] Algorithm 2), and
+//!   the asynchronous inference system ([`engine`]) with its segment-ids
+//!   broadcaster, worker pool and prediction accumulator; plus the REST
+//!   front-end ([`server`]) and the benchmark harness ([`benchkit`]).
+//!
+//! Compute backends ([`exec`]): real PJRT-CPU execution of the AOT
+//! artifacts for end-to-end numerics, a calibrated simulator of the paper's
+//! 16×V100 HGX testbed for the scale experiments, and a fake (zeros)
+//! backend for the §IV.A overhead measurement.
+
+pub mod util;
+pub mod config;
+pub mod device;
+pub mod model;
+pub mod alloc;
+pub mod exec;
+pub mod engine;
+pub mod benchkit;
+pub mod optimizer;
+pub mod server;
+pub mod workload;
+pub mod metrics;
+
+/// Crate-wide result type.
+pub type Result<T> = anyhow::Result<T>;

@@ -1,0 +1,200 @@
+//! `ensemble-serve` — CLI entrypoint.
+//!
+//! Subcommands:
+//! * `optimize` — run Algorithm 1 + Algorithm 2 for an ensemble/device set
+//!   and print the A1/A2 matrices and throughputs.
+//! * `serve`    — deploy the inference system (WFD allocation) and expose
+//!   the REST API.
+//! * `bench`    — benchmark one allocation (WFD default) on calibration
+//!   data and print the throughput.
+//! * `inspect`  — print an ensemble's members and their paper-scale stats.
+
+use std::sync::Arc;
+
+use ensemble_serve::alloc::cache::MatrixCache;
+use ensemble_serve::alloc::worst_fit_decreasing;
+use ensemble_serve::benchkit::{bench, BenchOptions};
+use ensemble_serve::config::{Backend, ServerConfig};
+use ensemble_serve::engine::InferenceSystem;
+use ensemble_serve::exec::fake::FakeExecutor;
+use ensemble_serve::exec::pjrt::PjrtExecutor;
+use ensemble_serve::exec::sim::SimExecutor;
+use ensemble_serve::exec::Executor;
+use ensemble_serve::model::Manifest;
+use ensemble_serve::optimizer::{optimize, OptimizerConfig};
+use ensemble_serve::server::ApiServer;
+use ensemble_serve::util::cli::Cli;
+
+fn cli() -> Cli {
+    Cli::new("ensemble-serve", "inference system for heterogeneous DNN ensembles")
+        .opt("config", None, "path to a JSON config file")
+        .opt("ensemble", None, "IMN1|IMN4|IMN12|FOS14|CIF36")
+        .opt("gpus", None, "number of simulated V100s (+1 CPU)")
+        .opt("backend", None, "sim|pjrt|fake")
+        .opt("time-scale", None, "sim time compression factor")
+        .opt("segment-size", None, "segment size N")
+        .opt("max-iter", None, "greedy max iterations")
+        .opt("max-neighs", None, "greedy max neighbors per iteration")
+        .opt("calib-images", None, "calibration samples for bench")
+        .opt("seed", None, "greedy sampling seed")
+        .opt("listen", None, "serve: bind address")
+        .flag("no-cache", "optimize: ignore the matrix cache")
+        .flag("help", "print help")
+}
+
+fn main() {
+    ensemble_serve::util::logging::init();
+    let cli = cli();
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let args = match cli.parse(&argv) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e}\n\n{}", cli.help_text());
+            std::process::exit(2);
+        }
+    };
+    if args.has_flag("help") || args.positional.is_empty() {
+        println!("usage: ensemble-serve <optimize|serve|bench|inspect> [options]\n");
+        println!("{}", cli.help_text());
+        return;
+    }
+
+    if let Err(e) = run(&args) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn config_from(args: &ensemble_serve::util::cli::Args) -> anyhow::Result<ServerConfig> {
+    let mut cfg = match args.get("config") {
+        Some(path) => ServerConfig::from_file(path)?,
+        None => ServerConfig::default(),
+    };
+    // CLI flags override the file
+    if let Some(v) = args.get("ensemble") {
+        cfg.ensemble = ensemble_serve::model::EnsembleId::parse(v)
+            .ok_or_else(|| anyhow::anyhow!("unknown ensemble {v}"))?;
+    }
+    if let Some(v) = args.get_usize("gpus")? {
+        cfg.gpus = v;
+    }
+    if let Some(v) = args.get("backend") {
+        cfg.backend = Backend::parse(v)?;
+    }
+    if let Some(v) = args.get_f64("time-scale")? {
+        cfg.time_scale = v;
+    }
+    if let Some(v) = args.get_usize("segment-size")? {
+        cfg.segment_size = v;
+    }
+    if let Some(v) = args.get_usize("max-iter")? {
+        cfg.greedy.max_iter = v;
+    }
+    if let Some(v) = args.get_usize("max-neighs")? {
+        cfg.greedy.max_neighs = v;
+    }
+    if let Some(v) = args.get_usize("calib-images")? {
+        cfg.calib_images = v;
+    }
+    if let Some(v) = args.get_u64("seed")? {
+        cfg.greedy.seed = v;
+    }
+    if let Some(v) = args.get("listen") {
+        cfg.listen = v.to_string();
+    }
+    Ok(cfg)
+}
+
+fn make_executor(cfg: &ServerConfig) -> anyhow::Result<Arc<dyn Executor>> {
+    Ok(match cfg.backend {
+        Backend::Sim => SimExecutor::new(cfg.devices(), cfg.time_scale),
+        Backend::Fake => Arc::new(FakeExecutor::new(cfg.devices())),
+        Backend::Pjrt => {
+            let manifest = Arc::new(Manifest::load(Manifest::default_dir())?);
+            PjrtExecutor::new(cfg.devices(), manifest)
+        }
+    })
+}
+
+fn bench_options(cfg: &ServerConfig) -> BenchOptions {
+    BenchOptions {
+        nb_images: cfg.calib_images,
+        warmup: 0,
+        repeats: 1,
+        time_scale: if cfg.backend == Backend::Sim { cfg.time_scale } else { 1.0 },
+        engine: cfg.engine_options(),
+    }
+}
+
+fn run(args: &ensemble_serve::util::cli::Args) -> anyhow::Result<()> {
+    let cfg = config_from(args)?;
+    let ensemble = cfg.ensemble_def();
+    let devices = cfg.devices();
+    let device_names: Vec<String> = devices.iter().map(|d| d.name.clone()).collect();
+    let model_names: Vec<String> = ensemble.members.iter().map(|m| m.name.clone()).collect();
+
+    match args.positional[0].as_str() {
+        "inspect" => {
+            println!("ensemble {} ({} members):", ensemble.name, ensemble.len());
+            for m in &ensemble.members {
+                println!(
+                    "  {:<14} {:>7.1} M params  {:>6.2} GFLOPs  mem@8 {:>8.0} MB  mem@128 {:>8.0} MB",
+                    m.name, m.params_m, m.gflops, m.worker_mem_mb(8), m.worker_mem_mb(128)
+                );
+            }
+            println!("devices: {} GPUs + 1 CPU", devices.gpu_count());
+        }
+        "bench" => {
+            let a = worst_fit_decreasing(&ensemble, &devices, cfg.default_batch)?;
+            println!("A1 (worst-fit-decreasing):\n{}", a.render(&device_names, &model_names));
+            let s = bench(&a, &ensemble, make_executor(&cfg)?, &bench_options(&cfg));
+            println!("throughput: {s:.0} img/s");
+        }
+        "optimize" => {
+            let ocfg = OptimizerConfig {
+                greedy: cfg.greedy.clone(),
+                bench: bench_options(&cfg),
+                cache: if args.has_flag("no-cache") {
+                    None
+                } else {
+                    Some(MatrixCache::default_cache())
+                },
+                ..Default::default()
+            };
+            let out = optimize(&ensemble, &devices, &|| make_executor(&cfg).unwrap(), &ocfg)?;
+            println!("A1 (worst-fit-decreasing)  -> {:>8.0} img/s", out.a1_speed);
+            println!("{}", out.a1.render(&device_names, &model_names));
+            println!(
+                "A2 (bounded greedy{})       -> {:>8.0} img/s",
+                if out.from_cache { ", cached" } else { "" },
+                out.a2_speed
+            );
+            println!("{}", out.a2.render(&device_names, &model_names));
+            if let Some(r) = &out.report {
+                println!(
+                    "greedy: {} iterations, {} bench evals, visit rate {:.2}",
+                    r.iterations, r.bench_count, r.visit_rate
+                );
+            }
+        }
+        "serve" => {
+            let executor = make_executor(&cfg)?;
+            let a = worst_fit_decreasing(&ensemble, &devices, cfg.default_batch)?;
+            log::info!("deploying {} with {} workers", ensemble.name, a.worker_count());
+            let system = Arc::new(InferenceSystem::build(
+                &a,
+                &ensemble,
+                executor,
+                cfg.engine_options(),
+            )?);
+            let api = ApiServer::start(system, &cfg.listen, cfg.http_threads)?;
+            println!("serving {} on http://{}", ensemble.name, api.addr());
+            println!("  POST /v1/predict   GET /v1/health  /v1/stats  /v1/matrix");
+            loop {
+                std::thread::sleep(std::time::Duration::from_secs(3600));
+            }
+        }
+        other => anyhow::bail!("unknown command '{other}' (optimize|serve|bench|inspect)"),
+    }
+    Ok(())
+}

@@ -1,0 +1,143 @@
+//! Lightweight runtime metrics: atomic counters + a fixed-bucket latency
+//! histogram. Exposed by `GET /v1/stats` and used by the benches.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Duration;
+
+/// Engine-wide counters (all monotonically increasing).
+#[derive(Debug, Default)]
+pub struct EngineMetrics {
+    pub requests: AtomicU64,
+    pub images_in: AtomicU64,
+    pub segments_broadcast: AtomicU64,
+    pub batches_predicted: AtomicU64,
+    pub pred_messages: AtomicU64,
+    pub images_predicted: AtomicU64, // images × models
+    pub requests_completed: AtomicU64,
+    pub worker_errors: AtomicU64,
+}
+
+impl EngineMetrics {
+    pub fn snapshot(&self) -> Vec<(&'static str, u64)> {
+        let g = |a: &AtomicU64| a.load(Ordering::Relaxed);
+        vec![
+            ("requests", g(&self.requests)),
+            ("images_in", g(&self.images_in)),
+            ("segments_broadcast", g(&self.segments_broadcast)),
+            ("batches_predicted", g(&self.batches_predicted)),
+            ("pred_messages", g(&self.pred_messages)),
+            ("images_predicted", g(&self.images_predicted)),
+            ("requests_completed", g(&self.requests_completed)),
+            ("worker_errors", g(&self.worker_errors)),
+        ]
+    }
+}
+
+/// Log-bucketed latency histogram (µs buckets), lock-free recording.
+#[derive(Debug)]
+pub struct LatencyHistogram {
+    /// Bucket upper bounds in µs.
+    bounds: Vec<u64>,
+    counts: Vec<AtomicU64>,
+    total_us: AtomicU64,
+    n: AtomicU64,
+}
+
+impl Default for LatencyHistogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl LatencyHistogram {
+    pub fn new() -> LatencyHistogram {
+        // 100µs .. ~100s, x2 per bucket
+        let mut bounds = Vec::new();
+        let mut b = 100u64;
+        while b <= 100_000_000 {
+            bounds.push(b);
+            b *= 2;
+        }
+        let counts = (0..=bounds.len()).map(|_| AtomicU64::new(0)).collect();
+        LatencyHistogram { bounds, counts, total_us: AtomicU64::new(0), n: AtomicU64::new(0) }
+    }
+
+    pub fn record(&self, d: Duration) {
+        let us = d.as_micros() as u64;
+        let idx = self.bounds.partition_point(|&b| b < us);
+        self.counts[idx].fetch_add(1, Ordering::Relaxed);
+        self.total_us.fetch_add(us, Ordering::Relaxed);
+        self.n.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n.load(Ordering::Relaxed)
+    }
+
+    pub fn mean_ms(&self) -> f64 {
+        let n = self.count();
+        if n == 0 {
+            return 0.0;
+        }
+        self.total_us.load(Ordering::Relaxed) as f64 / n as f64 / 1000.0
+    }
+
+    /// Approximate quantile (upper bound of the bucket holding it).
+    pub fn quantile_ms(&self, q: f64) -> f64 {
+        let n = self.count();
+        if n == 0 {
+            return 0.0;
+        }
+        let target = (q * n as f64).ceil() as u64;
+        let mut acc = 0u64;
+        for (i, c) in self.counts.iter().enumerate() {
+            acc += c.load(Ordering::Relaxed);
+            if acc >= target {
+                let bound = self.bounds.get(i).copied().unwrap_or(u64::MAX / 2);
+                return bound as f64 / 1000.0;
+            }
+        }
+        *self.bounds.last().unwrap() as f64 / 1000.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_snapshot() {
+        let m = EngineMetrics::default();
+        m.requests.fetch_add(3, Ordering::Relaxed);
+        let snap = m.snapshot();
+        assert_eq!(snap.iter().find(|(k, _)| *k == "requests").unwrap().1, 3);
+    }
+
+    #[test]
+    fn histogram_mean_and_quantiles() {
+        let h = LatencyHistogram::new();
+        for ms in [1u64, 2, 3, 4, 100] {
+            h.record(Duration::from_millis(ms));
+        }
+        assert_eq!(h.count(), 5);
+        assert!((h.mean_ms() - 22.0).abs() < 1.0, "{}", h.mean_ms());
+        assert!(h.quantile_ms(0.5) >= 2.0 && h.quantile_ms(0.5) <= 4.1);
+        assert!(h.quantile_ms(1.0) >= 100.0);
+    }
+
+    #[test]
+    fn histogram_concurrent_records() {
+        let h = std::sync::Arc::new(LatencyHistogram::new());
+        std::thread::scope(|s| {
+            for _ in 0..4 {
+                let h = std::sync::Arc::clone(&h);
+                s.spawn(move || {
+                    for _ in 0..1000 {
+                        h.record(Duration::from_micros(500));
+                    }
+                });
+            }
+        });
+        assert_eq!(h.count(), 4000);
+    }
+}

@@ -1,0 +1,162 @@
+//! The five benchmark ensembles of §III: IMN1, IMN4, IMN12, FOS14, CIF36.
+
+use super::zoo::{self, ModelSpec};
+
+/// Identifier of one of the paper's benchmark ensembles.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum EnsembleId {
+    Imn1,
+    Imn4,
+    Imn12,
+    Fos14,
+    Cif36,
+}
+
+impl EnsembleId {
+    pub const ALL: [EnsembleId; 5] = [
+        EnsembleId::Imn1,
+        EnsembleId::Imn4,
+        EnsembleId::Imn12,
+        EnsembleId::Fos14,
+        EnsembleId::Cif36,
+    ];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            EnsembleId::Imn1 => "IMN1",
+            EnsembleId::Imn4 => "IMN4",
+            EnsembleId::Imn12 => "IMN12",
+            EnsembleId::Fos14 => "FOS14",
+            EnsembleId::Cif36 => "CIF36",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<EnsembleId> {
+        Self::ALL.into_iter().find(|e| e.name().eq_ignore_ascii_case(s))
+    }
+}
+
+/// An ensemble: the ordered list of member models (matrix column order).
+#[derive(Debug, Clone)]
+pub struct Ensemble {
+    pub name: String,
+    pub members: Vec<ModelSpec>,
+}
+
+impl Ensemble {
+    pub fn len(&self) -> usize {
+        self.members.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.members.is_empty()
+    }
+
+    /// Output length all members must share for the combination rule.
+    pub fn classes(&self) -> usize {
+        self.members.first().map(|m| m.classes).unwrap_or(0)
+    }
+
+    pub fn custom(name: &str, members: Vec<ModelSpec>) -> Ensemble {
+        assert!(!members.is_empty(), "ensemble needs at least one member");
+        let c = members[0].classes;
+        assert!(members.iter().all(|m| m.classes == c),
+                "all members must share the output length");
+        Ensemble { name: name.to_string(), members }
+    }
+}
+
+fn named(names: &[&str]) -> Vec<ModelSpec> {
+    names
+        .iter()
+        .map(|n| zoo::by_name(n).unwrap_or_else(|| panic!("unknown model {n}")))
+        .collect()
+}
+
+/// Build one of the paper's five benchmark ensembles (§III).
+pub fn ensemble(id: EnsembleId) -> Ensemble {
+    match id {
+        EnsembleId::Imn1 => Ensemble::custom("IMN1", named(&["ResNet152"])),
+        EnsembleId::Imn4 => Ensemble::custom(
+            "IMN4",
+            named(&["ResNet50", "ResNet101", "DenseNet121", "VGG19"]),
+        ),
+        EnsembleId::Imn12 => {
+            // "IMN12 contains all DNNs from IMN1 and IMN4 plus {...}"
+            Ensemble::custom(
+                "IMN12",
+                named(&[
+                    "ResNet152", "ResNet50", "ResNet101", "DenseNet121", "VGG19",
+                    "ResNet18", "ResNet34", "ResNeXt50", "InceptionV3",
+                    "Xception", "VGG16", "MobileNetV2",
+                ]),
+            )
+        }
+        EnsembleId::Fos14 => Ensemble::custom(
+            "FOS14",
+            zoo::automl_skeletons("fos", 14, zoo::FOS_FAMILY, 14),
+        ),
+        EnsembleId::Cif36 => Ensemble::custom(
+            "CIF36",
+            zoo::automl_skeletons("cif", 36, zoo::CIF_FAMILY, 36),
+        ),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sizes_match_paper() {
+        assert_eq!(ensemble(EnsembleId::Imn1).len(), 1);
+        assert_eq!(ensemble(EnsembleId::Imn4).len(), 4);
+        assert_eq!(ensemble(EnsembleId::Imn12).len(), 12);
+        assert_eq!(ensemble(EnsembleId::Fos14).len(), 14);
+        assert_eq!(ensemble(EnsembleId::Cif36).len(), 36);
+    }
+
+    #[test]
+    fn imn12_superset() {
+        let imn12: Vec<String> = ensemble(EnsembleId::Imn12)
+            .members
+            .iter()
+            .map(|m| m.name.clone())
+            .collect();
+        for sub in [EnsembleId::Imn1, EnsembleId::Imn4] {
+            for m in ensemble(sub).members {
+                assert!(imn12.contains(&m.name), "{} missing", m.name);
+            }
+        }
+    }
+
+    #[test]
+    fn member_names_unique() {
+        for id in EnsembleId::ALL {
+            let e = ensemble(id);
+            let mut names: Vec<_> = e.members.iter().map(|m| &m.name).collect();
+            names.sort();
+            names.dedup();
+            assert_eq!(names.len(), e.len(), "{}", e.name);
+        }
+    }
+
+    #[test]
+    fn parse_roundtrip() {
+        for id in EnsembleId::ALL {
+            assert_eq!(EnsembleId::parse(id.name()), Some(id));
+        }
+        assert_eq!(EnsembleId::parse("imn4"), Some(EnsembleId::Imn4));
+        assert_eq!(EnsembleId::parse("nope"), None);
+    }
+
+    #[test]
+    #[should_panic]
+    fn mixed_classes_rejected() {
+        let mut members = named(&["ResNet50"]);
+        let mut odd = zoo::by_name("ResNet18").unwrap();
+        odd.classes = 91;
+        members.push(odd);
+        let _ = Ensemble::custom("bad", members);
+    }
+}

@@ -1,0 +1,225 @@
+//! Reader for `artifacts/manifest.json` — the contract between the python
+//! AOT compile path and the rust runtime.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context};
+
+use crate::util::json::Json;
+
+/// One AOT-compiled tiny stand-in model.
+#[derive(Debug, Clone)]
+pub struct ManifestModel {
+    pub name: String,
+    pub paper_name: String,
+    pub params: u64,
+    pub classes: usize,
+    pub img_size: usize,
+    pub in_ch: usize,
+    pub tiny_flops_per_image: u64,
+    /// batch size -> HLO text file (relative to the artifacts dir).
+    pub artifacts: BTreeMap<usize, String>,
+    pub golden_input: String,
+    pub golden_output: String,
+}
+
+impl ManifestModel {
+    pub fn input_elems_per_image(&self) -> usize {
+        self.img_size * self.img_size * self.in_ch
+    }
+
+    /// Largest compiled batch size <= `want`, falling back to the smallest
+    /// artifact (the engine re-batches segments to the chosen size).
+    pub fn best_batch_artifact(&self, want: usize) -> Option<(usize, &str)> {
+        self.artifacts
+            .range(..=want)
+            .next_back()
+            .or_else(|| self.artifacts.iter().next())
+            .map(|(b, f)| (*b, f.as_str()))
+    }
+}
+
+/// Parsed artifacts/manifest.json plus its directory.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub batch_sizes: Vec<usize>,
+    pub golden_batch: usize,
+    pub models: BTreeMap<String, ManifestModel>,
+    /// ensemble name -> member artifact names (tiny stand-in ensembles).
+    pub ensembles: BTreeMap<String, Vec<String>>,
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: impl AsRef<Path>) -> anyhow::Result<Manifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let root = Json::parse(&text).context("parsing manifest.json")?;
+
+        if root.get("format").and_then(Json::as_str) != Some("hlo-text-v1") {
+            bail!("unsupported manifest format");
+        }
+
+        let batch_sizes: Vec<usize> = root
+            .get("batch_sizes")
+            .and_then(Json::as_arr)
+            .context("manifest: batch_sizes")?
+            .iter()
+            .filter_map(Json::as_usize)
+            .collect();
+
+        let golden_batch = root
+            .get("golden_batch")
+            .and_then(Json::as_usize)
+            .context("manifest: golden_batch")?;
+
+        let mut models = BTreeMap::new();
+        for m in root.get("models").and_then(Json::as_arr).context("models")? {
+            let name = m.get("name").and_then(Json::as_str).context("model name")?;
+            let mut artifacts = BTreeMap::new();
+            for (b, f) in m.get("artifacts").and_then(Json::as_obj).context("artifacts")? {
+                let batch: usize = b.parse().context("artifact batch key")?;
+                artifacts.insert(batch, f.as_str().context("artifact file")?.to_string());
+            }
+            let get_str = |k: &str| -> anyhow::Result<String> {
+                Ok(m.get(k).and_then(Json::as_str).with_context(|| format!("model {k}"))?.to_string())
+            };
+            let get_usize = |k: &str| -> anyhow::Result<usize> {
+                m.get(k).and_then(Json::as_usize).with_context(|| format!("model {k}"))
+            };
+            models.insert(
+                name.to_string(),
+                ManifestModel {
+                    name: name.to_string(),
+                    paper_name: get_str("paper_name")?,
+                    params: get_usize("params")? as u64,
+                    classes: get_usize("classes")?,
+                    img_size: get_usize("img_size")?,
+                    in_ch: get_usize("in_ch")?,
+                    tiny_flops_per_image: get_usize("tiny_flops_per_image")? as u64,
+                    artifacts,
+                    golden_input: get_str("golden_input")?,
+                    golden_output: get_str("golden_output")?,
+                },
+            );
+        }
+
+        let mut ensembles = BTreeMap::new();
+        if let Some(obj) = root.get("ensembles").and_then(Json::as_obj) {
+            for (ens, arr) in obj {
+                let members: Vec<String> = arr
+                    .as_arr()
+                    .context("ensemble members")?
+                    .iter()
+                    .filter_map(Json::as_str)
+                    .map(str::to_string)
+                    .collect();
+                ensembles.insert(ens.clone(), members);
+            }
+        }
+
+        Ok(Manifest { dir, batch_sizes, golden_batch, models, ensembles })
+    }
+
+    /// Default artifacts dir: `$ES_ARTIFACTS` or `./artifacts`.
+    pub fn default_dir() -> PathBuf {
+        std::env::var("ES_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|_| PathBuf::from("artifacts"))
+    }
+
+    pub fn model(&self, name: &str) -> anyhow::Result<&ManifestModel> {
+        self.models
+            .get(name)
+            .with_context(|| format!("model {name} not in manifest"))
+    }
+
+    pub fn artifact_path(&self, file: &str) -> PathBuf {
+        self.dir.join(file)
+    }
+
+    /// Read a little-endian f32 binary file (golden inputs/outputs).
+    pub fn read_f32(&self, file: &str) -> anyhow::Result<Vec<f32>> {
+        let bytes = std::fs::read(self.artifact_path(file))
+            .with_context(|| format!("reading {file}"))?;
+        if bytes.len() % 4 != 0 {
+            bail!("{file}: length {} not a multiple of 4", bytes.len());
+        }
+        Ok(bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_dir() -> Option<PathBuf> {
+        let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        dir.join("manifest.json").exists().then_some(dir)
+    }
+
+    #[test]
+    fn loads_built_manifest() {
+        let Some(dir) = artifacts_dir() else {
+            eprintln!("skipped: run `make artifacts` first");
+            return;
+        };
+        let m = Manifest::load(&dir).unwrap();
+        assert!(m.models.contains_key("resnet152_t"));
+        assert_eq!(m.batch_sizes, vec![8, 16, 32, 64, 128]);
+        let r = m.model("resnet50_t").unwrap();
+        assert_eq!(r.paper_name, "ResNet50");
+        assert_eq!(r.classes, 100);
+        // every artifact file exists
+        for f in r.artifacts.values() {
+            assert!(m.artifact_path(f).exists(), "{f}");
+        }
+        // ensembles wired
+        assert_eq!(m.ensembles["IMN4"].len(), 4);
+    }
+
+    #[test]
+    fn best_batch_artifact_picks_floor() {
+        let mut artifacts = BTreeMap::new();
+        for b in [8usize, 16, 32] {
+            artifacts.insert(b, format!("m_b{b}.hlo.txt"));
+        }
+        let mm = ManifestModel {
+            name: "m".into(),
+            paper_name: "M".into(),
+            params: 1,
+            classes: 10,
+            img_size: 8,
+            in_ch: 3,
+            tiny_flops_per_image: 1,
+            artifacts,
+            golden_input: "gi".into(),
+            golden_output: "go".into(),
+        };
+        assert_eq!(mm.best_batch_artifact(32), Some((32, "m_b32.hlo.txt")));
+        assert_eq!(mm.best_batch_artifact(20), Some((16, "m_b16.hlo.txt")));
+        assert_eq!(mm.best_batch_artifact(4), Some((8, "m_b8.hlo.txt")));
+        assert_eq!(mm.best_batch_artifact(999), Some((32, "m_b32.hlo.txt")));
+    }
+
+    #[test]
+    fn golden_files_readable() {
+        let Some(dir) = artifacts_dir() else { return };
+        let m = Manifest::load(&dir).unwrap();
+        let r = m.model("resnet18_t").unwrap();
+        let gi = m.read_f32(&r.golden_input).unwrap();
+        let go = m.read_f32(&r.golden_output).unwrap();
+        assert_eq!(gi.len(), m.golden_batch * r.input_elems_per_image());
+        assert_eq!(go.len(), m.golden_batch * r.classes);
+        // probability rows
+        let sum: f32 = go[..r.classes].iter().sum();
+        assert!((sum - 1.0).abs() < 1e-3, "sum={sum}");
+    }
+}

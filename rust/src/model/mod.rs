@@ -1,0 +1,11 @@
+//! Model registry: paper-scale architecture statistics ([`zoo`]), the five
+//! benchmark ensembles ([`ensembles`]) and the AOT artifact manifest
+//! ([`manifest`]) for the tiny PJRT stand-ins.
+
+pub mod zoo;
+pub mod ensembles;
+pub mod manifest;
+
+pub use ensembles::{ensemble, Ensemble, EnsembleId};
+pub use manifest::Manifest;
+pub use zoo::ModelSpec;

@@ -1,0 +1,239 @@
+//! Closed-form throughput estimator — the fast `bench` alternative.
+//!
+//! The ensemble's steady-state throughput is the largest rate T (img/s)
+//! such that every model can predict T img/s through its data-parallel
+//! workers without any device exceeding unit utilization. Formally a
+//! small LP; solved here by bisection on T with an iterative
+//! load-balancing feasibility check (exact when models don't share
+//! devices, a tight approximation under co-location).
+//!
+//! Used for large parameter sweeps and as a cross-check of the
+//! engine-in-the-loop bench (see `benches/ablation_neighbors.rs`).
+
+use crate::alloc::matrix::AllocationMatrix;
+use crate::alloc::memory::fit_mem;
+use crate::device::DeviceSet;
+use crate::model::Ensemble;
+
+/// Per-image device-seconds of one worker (latency of a full batch divided
+/// by the batch size).
+fn per_image_cost(
+    ensemble: &Ensemble,
+    devices: &DeviceSet,
+    model: usize,
+    device: usize,
+    batch: u32,
+) -> f64 {
+    let lat_ms = ensemble.members[model].predict_latency_ms(&devices[device], batch as usize);
+    lat_ms / 1000.0 / batch as f64
+}
+
+/// Estimated ensemble throughput (img/s) of an allocation matrix; 0.0 when
+/// the matrix is invalid or memory-infeasible (same contract as
+/// `benchkit::bench`).
+pub fn estimate_throughput(
+    a: &AllocationMatrix,
+    ensemble: &Ensemble,
+    devices: &DeviceSet,
+) -> f64 {
+    if !a.all_models_placed() || !fit_mem(a, ensemble, devices) {
+        return 0.0;
+    }
+
+    // workers as (model, device, per-image cost)
+    let workers: Vec<(usize, usize, f64)> = a
+        .placements()
+        .iter()
+        .map(|p| (p.model, p.device, per_image_cost(ensemble, devices, p.model, p.device, p.batch)))
+        .collect();
+
+    // upper bound: every device fully devoted to the cheapest worker
+    let t_hi: f64 = {
+        // sum over models of best-case rate, capped by total capacity
+        let mut per_model_best = vec![0.0f64; a.n_models()];
+        for &(m, _, c) in &workers {
+            per_model_best[m] += 1.0 / c;
+        }
+        per_model_best
+            .iter()
+            .cloned()
+            .fold(f64::INFINITY, f64::min)
+    };
+    if !t_hi.is_finite() || t_hi <= 0.0 {
+        return 0.0;
+    }
+
+    // bisection on T
+    let mut lo = 0.0f64;
+    let mut hi = t_hi;
+    for _ in 0..40 {
+        let mid = 0.5 * (lo + hi);
+        if feasible(a, &workers, mid) {
+            lo = mid;
+        } else {
+            hi = mid;
+        }
+    }
+    lo
+}
+
+/// Can every model deliver rate `t` without overloading a device?
+/// Iterative proportional assignment: start with each model splitting its
+/// demand across its workers inversely to cost, then repeatedly shift
+/// demand away from overloaded devices.
+fn feasible(a: &AllocationMatrix, workers: &[(usize, usize, f64)], t: f64) -> bool {
+    let n_dev = a.n_devices();
+    let n_models = a.n_models();
+
+    // per model: indices of its workers
+    let mut by_model: Vec<Vec<usize>> = vec![Vec::new(); n_models];
+    for (i, &(m, _, _)) in workers.iter().enumerate() {
+        by_model[m].push(i);
+    }
+
+    // x[i] = rate assigned to worker i
+    let mut x = vec![0.0f64; workers.len()];
+    for idxs in &by_model {
+        let denom: f64 = idxs.iter().map(|&i| 1.0 / workers[i].2).sum();
+        for &i in idxs {
+            x[i] = t * (1.0 / workers[i].2) / denom;
+        }
+    }
+
+    for _ in 0..60 {
+        // device loads
+        let mut load = vec![0.0f64; n_dev];
+        for (i, &(_, d, c)) in workers.iter().enumerate() {
+            load[d] += x[i] * c;
+        }
+        let max_load = load.iter().cloned().fold(0.0, f64::max);
+        if max_load <= 1.0 + 1e-9 {
+            return true;
+        }
+        // move demand from overloaded devices to underloaded peers
+        for m in 0..n_models {
+            let idxs = &by_model[m];
+            if idxs.len() < 2 {
+                continue;
+            }
+            // weight workers by remaining capacity of their device
+            let mut weights: Vec<f64> = idxs
+                .iter()
+                .map(|&i| {
+                    let d = workers[i].1;
+                    (2.0 - load[d]).max(0.05) / workers[i].2
+                })
+                .collect();
+            let wsum: f64 = weights.iter().sum();
+            for w in &mut weights {
+                *w /= wsum;
+            }
+            for (k, &i) in idxs.iter().enumerate() {
+                x[i] = t * weights[k];
+            }
+        }
+        // single-worker models can't rebalance; if such a worker alone
+        // overloads its device, infeasible immediately
+        for (i, &(m, d, c)) in workers.iter().enumerate() {
+            if by_model[m].len() == 1 && x[i] * c > 1.0 + 1e-9 {
+                let _ = d;
+                return false;
+            }
+        }
+    }
+
+    // final check after the last rebalance
+    let mut load = vec![0.0f64; n_dev];
+    for (i, &(_, d, c)) in workers.iter().enumerate() {
+        load[d] += x[i] * c;
+    }
+    load.iter().all(|&l| l <= 1.0 + 1e-6)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::{ensemble, EnsembleId};
+
+    #[test]
+    fn invalid_or_oom_scores_zero() {
+        let e = ensemble(EnsembleId::Imn4);
+        let d = DeviceSet::hgx(2);
+        let empty = AllocationMatrix::zeroed(d.len(), e.len());
+        assert_eq!(estimate_throughput(&empty, &e, &d), 0.0);
+
+        let mut over = AllocationMatrix::zeroed(2, e.len()); // 1 GPU + CPU
+        for m in 0..e.len() {
+            over.set(0, m, 8);
+        }
+        let d1 = DeviceSet::hgx(1);
+        assert_eq!(estimate_throughput(&over, &e, &d1), 0.0);
+    }
+
+    #[test]
+    fn single_model_single_gpu_matches_formula() {
+        let e = ensemble(EnsembleId::Imn1);
+        let d = DeviceSet::hgx(1);
+        let mut a = AllocationMatrix::zeroed(d.len(), e.len());
+        a.set(0, 0, 8);
+        let t = estimate_throughput(&a, &e, &d);
+        let lat = e.members[0].predict_latency_ms(&d[0], 8) / 1000.0;
+        let want = 8.0 / lat;
+        assert!((t - want).abs() / want < 0.02, "t={t} want={want}");
+        // ballpark of Table I IMN1 A1 = 106
+        assert!((90.0..125.0).contains(&t), "t={t}");
+    }
+
+    #[test]
+    fn data_parallel_doubles() {
+        let e = ensemble(EnsembleId::Imn1);
+        let d = DeviceSet::hgx(2);
+        let mut a1 = AllocationMatrix::zeroed(d.len(), e.len());
+        a1.set(0, 0, 64);
+        let mut a2 = a1.clone();
+        a2.set(1, 0, 64);
+        let t1 = estimate_throughput(&a1, &e, &d);
+        let t2 = estimate_throughput(&a2, &e, &d);
+        assert!((t2 / t1 - 2.0).abs() < 0.05, "t1={t1} t2={t2}");
+    }
+
+    #[test]
+    fn colocalization_splits_capacity() {
+        let e = ensemble(EnsembleId::Imn4);
+        let d = DeviceSet::hgx(4);
+        // all four members on one GPU (fits? VGG19+R101+R50+D121 ~20GB: no)
+        // use two GPUs with two members each instead
+        let mut a = AllocationMatrix::zeroed(d.len(), e.len());
+        a.set(0, 0, 8);
+        a.set(0, 1, 8);
+        a.set(1, 2, 8);
+        a.set(1, 3, 8);
+        let t_shared = estimate_throughput(&a, &e, &d);
+        // spread over four GPUs: strictly better
+        let mut b = AllocationMatrix::zeroed(d.len(), e.len());
+        for m in 0..4 {
+            b.set(m, m, 8);
+        }
+        let t_spread = estimate_throughput(&b, &e, &d);
+        // VGG19 alone bounds both allocations, so the gain is modest but
+        // must be strictly positive
+        assert!(t_spread > t_shared * 1.05, "spread={t_spread} shared={t_shared}");
+    }
+
+    #[test]
+    fn ensemble_rate_is_bottleneck_bound() {
+        // the slowest member bounds the ensemble
+        let e = ensemble(EnsembleId::Imn4);
+        let d = DeviceSet::hgx(4);
+        let mut a = AllocationMatrix::zeroed(d.len(), e.len());
+        for m in 0..4 {
+            a.set(m, m, 64);
+        }
+        let t = estimate_throughput(&a, &e, &d);
+        for m in 0..4 {
+            let lat = e.members[m].predict_latency_ms(&d[m], 64) / 1000.0;
+            let solo = 64.0 / lat;
+            assert!(t <= solo * 1.01, "model {m}: t={t} solo={solo}");
+        }
+    }
+}

@@ -1,0 +1,185 @@
+//! The allocation-matrix optimizer pipeline (§II.E): Algorithm 1
+//! (worst-fit-decreasing) to *fit*, then Algorithm 2 (bounded greedy) to
+//! *speed up*, with the best-matrix cache in front.
+//!
+//! [`analytic`] provides a fast closed-form throughput estimator used as
+//! an alternative `bench` for large sweeps (and compared against the real
+//! engine in the `ablation_neighbors` bench).
+
+pub mod analytic;
+
+use std::sync::Arc;
+
+use crate::alloc::cache::{cache_fingerprint, MatrixCache};
+use crate::alloc::greedy::{bounded_greedy, GreedyConfig, GreedyReport};
+use crate::alloc::matrix::AllocationMatrix;
+use crate::alloc::worstfit::worst_fit_decreasing;
+use crate::benchkit::{bench, BenchOptions};
+use crate::device::DeviceSet;
+use crate::exec::Executor;
+use crate::model::Ensemble;
+
+/// Optimizer configuration.
+#[derive(Clone)]
+pub struct OptimizerConfig {
+    pub greedy: GreedyConfig,
+    /// Algorithm 1's default (minimum) batch size.
+    pub default_batch: u32,
+    pub bench: BenchOptions,
+    /// Consult/update the persistent matrix cache.
+    pub cache: Option<MatrixCache>,
+}
+
+impl Default for OptimizerConfig {
+    fn default() -> Self {
+        OptimizerConfig {
+            greedy: GreedyConfig::default(),
+            default_batch: crate::alloc::DEFAULT_BATCH,
+            bench: BenchOptions::default(),
+            cache: None,
+        }
+    }
+}
+
+/// Outcome of the full pipeline.
+#[derive(Debug)]
+pub struct Optimized {
+    /// Algorithm 1's matrix (the paper's A1 column).
+    pub a1: AllocationMatrix,
+    /// Throughput of A1.
+    pub a1_speed: f64,
+    /// Algorithm 2's matrix (the paper's A2 column).
+    pub a2: AllocationMatrix,
+    pub a2_speed: f64,
+    /// Greedy exploration report (None when served from cache).
+    pub report: Option<GreedyReport>,
+    pub from_cache: bool,
+}
+
+/// Run the full optimizer with the engine-in-the-loop benchmark.
+/// `make_exec` builds a fresh executor per evaluation (each bench build
+/// loads instances; simulated device memory must start empty).
+pub fn optimize(
+    ensemble: &Ensemble,
+    devices: &DeviceSet,
+    make_exec: &dyn Fn() -> Arc<dyn Executor>,
+    cfg: &OptimizerConfig,
+) -> anyhow::Result<Optimized> {
+    optimize_with(ensemble, devices, cfg, |a| bench(a, ensemble, make_exec(), &cfg.bench))
+}
+
+/// Run the pipeline with an arbitrary bench function (e.g. the analytic
+/// estimator, or a counting wrapper in tests).
+pub fn optimize_with(
+    ensemble: &Ensemble,
+    devices: &DeviceSet,
+    cfg: &OptimizerConfig,
+    mut bench_fn: impl FnMut(&AllocationMatrix) -> f64,
+) -> anyhow::Result<Optimized> {
+    // Algorithm 1
+    let a1 = worst_fit_decreasing(ensemble, devices, cfg.default_batch)?;
+    let a1_speed = bench_fn(&a1);
+
+    // cache?
+    let key = cfg
+        .cache
+        .as_ref()
+        .map(|_| cache_fingerprint(ensemble, devices, &cfg.greedy));
+    if let (Some(cache), Some(key)) = (&cfg.cache, &key) {
+        if let Some((a2, a2_speed)) = cache.get(key) {
+            if a2.n_devices() == devices.len() && a2.n_models() == ensemble.len() {
+                return Ok(Optimized { a1, a1_speed, a2, a2_speed, report: None, from_cache: true });
+            }
+        }
+    }
+
+    // Algorithm 2
+    let report = bounded_greedy(&a1, &cfg.greedy, &mut bench_fn);
+    let a2 = report.best.clone();
+    let a2_speed = report.best_speed;
+
+    if let (Some(cache), Some(key)) = (&cfg.cache, &key) {
+        cache.put(key, &a2, a2_speed)?;
+    }
+
+    Ok(Optimized { a1, a1_speed, a2, a2_speed, report: Some(report), from_cache: false })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::{ensemble, EnsembleId};
+
+    /// Cheap deterministic objective for pipeline tests: prefer batch 64,
+    /// spread over devices; 0 when infeasible by memory.
+    fn toy_bench(e: &Ensemble, d: &DeviceSet) -> impl FnMut(&AllocationMatrix) -> f64 {
+        let e = e.clone();
+        let d = d.clone();
+        move |a: &AllocationMatrix| {
+            if !crate::alloc::memory::fit_mem(a, &e, &d) {
+                return 0.0;
+            }
+            let mut s = 0.0;
+            for p in a.placements() {
+                s += (p.batch as f64).sqrt();
+            }
+            s
+        }
+    }
+
+    #[test]
+    fn a2_at_least_a1() {
+        let e = ensemble(EnsembleId::Imn4);
+        let d = DeviceSet::hgx(4);
+        let cfg = OptimizerConfig {
+            greedy: GreedyConfig { max_iter: 4, max_neighs: 30, ..Default::default() },
+            ..Default::default()
+        };
+        let mut f = toy_bench(&e, &d);
+        let out = optimize_with(&e, &d, &cfg, &mut f).unwrap();
+        assert!(out.a2_speed >= out.a1_speed);
+        assert!(out.a2.all_models_placed());
+        assert!(!out.from_cache);
+        assert!(out.report.is_some());
+    }
+
+    #[test]
+    fn oom_propagates() {
+        let e = ensemble(EnsembleId::Imn12);
+        let d = DeviceSet::hgx(1);
+        let cfg = OptimizerConfig::default();
+        let r = optimize_with(&e, &d, &cfg, |_| 1.0);
+        assert!(r.is_err(), "12 heavy models cannot fit 1 GPU");
+    }
+
+    #[test]
+    fn cache_roundtrip() {
+        let dir = std::env::temp_dir()
+            .join(format!("es-opt-cache-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let e = ensemble(EnsembleId::Imn4);
+        let d = DeviceSet::hgx(4);
+        let cfg = OptimizerConfig {
+            greedy: GreedyConfig { max_iter: 2, max_neighs: 10, ..Default::default() },
+            cache: Some(MatrixCache::new(&dir)),
+            ..Default::default()
+        };
+        let mut calls = 0usize;
+        let out1 = optimize_with(&e, &d, &cfg, |a| {
+            calls += 1;
+            toy_bench(&e, &d)(a)
+        })
+        .unwrap();
+        assert!(!out1.from_cache);
+        let calls_first = calls;
+        let out2 = optimize_with(&e, &d, &cfg, |a| {
+            calls += 1;
+            toy_bench(&e, &d)(a)
+        })
+        .unwrap();
+        assert!(out2.from_cache);
+        assert_eq!(out2.a2, out1.a2);
+        // second run only benched A1 (the cached A2 skipped the greedy)
+        assert_eq!(calls, calls_first + 1);
+    }
+}

@@ -1,0 +1,312 @@
+//! The prediction REST API on top of [`super::http`].
+//!
+//! Routes:
+//! * `POST /v1/predict` — body is either JSON `{"images": [[f32...]...]}`
+//!   or raw little-endian f32 (`application/octet-stream`) with the image
+//!   count in the `x-num-images` header. Responds in kind.
+//! * `GET /v1/health` — readiness probe.
+//! * `GET /v1/stats` — engine metrics + request latency summary.
+//! * `GET /v1/matrix` — the allocation matrix serving the ensemble.
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use crate::engine::InferenceSystem;
+use crate::metrics::LatencyHistogram;
+use crate::server::cache::{request_key, PredictionCache};
+use crate::server::http::{Handler, HttpServer, Request, Response};
+use crate::util::json::Json;
+
+/// A deployed HTTP API around an inference system.
+pub struct ApiServer {
+    http: HttpServer,
+    state: Arc<ApiState>,
+}
+
+struct ApiState {
+    system: Arc<InferenceSystem>,
+    latency: LatencyHistogram,
+    /// Optional redundant-request cache (§I.B).
+    cache: Option<PredictionCache>,
+}
+
+impl ApiServer {
+    pub fn start(system: Arc<InferenceSystem>, addr: &str, threads: usize)
+        -> anyhow::Result<ApiServer> {
+        Self::start_opts(system, addr, threads, None)
+    }
+
+    /// Start with a prediction cache of `cache_capacity` entries.
+    pub fn start_cached(system: Arc<InferenceSystem>, addr: &str, threads: usize,
+                        cache_capacity: usize) -> anyhow::Result<ApiServer> {
+        Self::start_opts(system, addr, threads, Some(PredictionCache::new(cache_capacity)))
+    }
+
+    fn start_opts(system: Arc<InferenceSystem>, addr: &str, threads: usize,
+                  cache: Option<PredictionCache>) -> anyhow::Result<ApiServer> {
+        let state = Arc::new(ApiState { system, latency: LatencyHistogram::new(), cache });
+        let h_state = Arc::clone(&state);
+        let handler: Handler = Arc::new(move |req: &Request| route(&h_state, req));
+        let http = HttpServer::start(addr, threads, handler)?;
+        Ok(ApiServer { http, state })
+    }
+
+    pub fn addr(&self) -> std::net::SocketAddr {
+        self.http.addr()
+    }
+
+    pub fn system(&self) -> &InferenceSystem {
+        &self.state.system
+    }
+}
+
+fn route(state: &ApiState, req: &Request) -> Response {
+    match (req.method.as_str(), req.path.as_str()) {
+        ("POST", "/v1/predict") => predict(state, req),
+        ("GET", "/v1/health") => health(state),
+        ("GET", "/v1/stats") => stats(state),
+        ("GET", "/v1/matrix") => matrix(state),
+        ("POST", _) | ("GET", _) => Response::text(404, "unknown route"),
+        _ => Response::text(405, "method not allowed"),
+    }
+}
+
+fn health(state: &ApiState) -> Response {
+    let body = Json::from_pairs([
+        ("status", Json::Str("ok".into())),
+        ("workers", Json::Num(state.system.worker_count() as f64)),
+        ("ensemble", Json::Str(state.system.ensemble().name.clone())),
+    ]);
+    Response::json(200, body.to_string())
+}
+
+fn stats(state: &ApiState) -> Response {
+    let mut fields: Vec<(&'static str, Json)> = state
+        .system
+        .metrics()
+        .snapshot()
+        .into_iter()
+        .map(|(k, v)| (k, Json::Num(v as f64)))
+        .collect();
+    fields.push(("latency_mean_ms", Json::Num(state.latency.mean_ms())));
+    fields.push(("latency_p95_ms", Json::Num(state.latency.quantile_ms(0.95))));
+    if let Some(cache) = &state.cache {
+        fields.push(("cache_entries", Json::Num(cache.len() as f64)));
+        fields.push(("cache_hit_rate", Json::Num(cache.hit_rate())));
+    }
+    Response::json(200, Json::from_pairs(fields).to_string())
+}
+
+fn matrix(state: &ApiState) -> Response {
+    Response::json(200, state.system.matrix().to_json().to_string())
+}
+
+fn predict(state: &ApiState, req: &Request) -> Response {
+    let t0 = Instant::now();
+    let binary = req
+        .headers
+        .get("content-type")
+        .map(|c| c.starts_with("application/octet-stream"))
+        .unwrap_or(false);
+
+    let (x, n) = if binary {
+        let Some(n) = req
+            .headers
+            .get("x-num-images")
+            .and_then(|v| v.parse::<usize>().ok())
+        else {
+            return Response::text(400, "binary body needs x-num-images header");
+        };
+        if req.body.len() % 4 != 0 {
+            return Response::text(400, "binary body length not a multiple of 4");
+        }
+        let x: Vec<f32> = req
+            .body
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect();
+        (x, n)
+    } else {
+        match parse_json_images(&req.body) {
+            Ok(pair) => pair,
+            Err(e) => return Response::text(400, &format!("bad request: {e}")),
+        }
+    };
+
+    if n == 0 || x.is_empty() || x.len() % n != 0 {
+        return Response::text(400, "image count does not divide payload");
+    }
+
+    // redundant-request cache (§I.B)
+    let key = state.cache.as_ref().map(|c| request_key(&x, n));
+    if let (Some(cache), Some(k)) = (&state.cache, &key) {
+        if let Some(y) = cache.get(k) {
+            state.latency.record(t0.elapsed());
+            return encode_predictions(y, n, binary);
+        }
+    }
+
+    match state.system.predict(x, n) {
+        Ok(y) => {
+            state.latency.record(t0.elapsed());
+            if let (Some(cache), Some(k)) = (&state.cache, key) {
+                cache.put(k, y.clone());
+            }
+            encode_predictions(y, n, binary)
+        }
+        Err(e) => Response::text(503, &format!("prediction failed: {e:#}")),
+    }
+}
+
+fn encode_predictions(y: Vec<f32>, n: usize, binary: bool) -> Response {
+    if binary {
+        let mut bytes = Vec::with_capacity(y.len() * 4);
+        for v in &y {
+            bytes.extend_from_slice(&v.to_le_bytes());
+        }
+        Response::binary(bytes)
+    } else {
+        let classes = y.len() / n;
+        let rows: Vec<Json> = y
+            .chunks(classes)
+            .map(|r| Json::Arr(r.iter().map(|&v| Json::Num(v as f64)).collect()))
+            .collect();
+        Response::json(
+            200,
+            Json::from_pairs([("predictions", Json::Arr(rows))]).to_string(),
+        )
+    }
+}
+
+fn parse_json_images(body: &[u8]) -> anyhow::Result<(Vec<f32>, usize)> {
+    let text = std::str::from_utf8(body)?;
+    let doc = Json::parse(text).map_err(|e| anyhow::anyhow!("{e}"))?;
+    let images = doc
+        .get("images")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| anyhow::anyhow!("missing images array"))?;
+    let n = images.len();
+    let mut x = Vec::new();
+    let mut row_len = None;
+    for img in images {
+        let row = img
+            .as_arr()
+            .ok_or_else(|| anyhow::anyhow!("image must be an array"))?;
+        if let Some(l) = row_len {
+            anyhow::ensure!(row.len() == l, "ragged image rows");
+        } else {
+            row_len = Some(row.len());
+        }
+        for v in row {
+            x.push(v.as_f64().ok_or_else(|| anyhow::anyhow!("non-numeric pixel"))? as f32);
+        }
+    }
+    Ok((x, n))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::alloc::matrix::AllocationMatrix;
+    use crate::device::DeviceSet;
+    use crate::engine::EngineOptions;
+    use crate::exec::fake::FakeExecutor;
+    use crate::model::{ensemble, EnsembleId};
+    use crate::server::http::http_request;
+
+    fn api() -> ApiServer {
+        let e = ensemble(EnsembleId::Imn4);
+        let d = DeviceSet::hgx(2);
+        let mut a = AllocationMatrix::zeroed(d.len(), e.len());
+        for m in 0..e.len() {
+            a.set(m % 2, m, 8);
+        }
+        let sys = Arc::new(
+            InferenceSystem::build(
+                &a,
+                &e,
+                Arc::new(FakeExecutor::new(d)),
+                EngineOptions::default(),
+            )
+            .unwrap(),
+        );
+        ApiServer::start(sys, "127.0.0.1:0", 2).unwrap()
+    }
+
+    #[test]
+    fn health_and_stats() {
+        let srv = api();
+        let (code, body) = http_request(srv.addr(), "GET", "/v1/health", "", b"").unwrap();
+        assert_eq!(code, 200);
+        let j = Json::parse(std::str::from_utf8(&body).unwrap()).unwrap();
+        assert_eq!(j.get("status").unwrap().as_str(), Some("ok"));
+        assert_eq!(j.get("workers").unwrap().as_usize(), Some(4));
+
+        let (code, body) = http_request(srv.addr(), "GET", "/v1/stats", "", b"").unwrap();
+        assert_eq!(code, 200);
+        let j = Json::parse(std::str::from_utf8(&body).unwrap()).unwrap();
+        assert!(j.get("requests").is_some());
+    }
+
+    #[test]
+    fn predict_json() {
+        let srv = api();
+        let elems = srv.system().ensemble().members[0].input_elems_per_image();
+        // two tiny "images" (fake backend ignores contents but checks shape)
+        let row = format!("[{}]", vec!["0.5"; elems].join(","));
+        let body = format!("{{\"images\":[{row},{row}]}}");
+        let (code, resp) =
+            http_request(srv.addr(), "POST", "/v1/predict", "application/json",
+                         body.as_bytes())
+                .unwrap();
+        assert_eq!(code, 200, "{}", String::from_utf8_lossy(&resp));
+        let j = Json::parse(std::str::from_utf8(&resp).unwrap()).unwrap();
+        let preds = j.get("predictions").unwrap().as_arr().unwrap();
+        assert_eq!(preds.len(), 2);
+    }
+
+    #[test]
+    fn predict_binary() {
+        let srv = api();
+        let elems = srv.system().ensemble().members[0].input_elems_per_image();
+        let n = 3usize;
+        let mut body = Vec::new();
+        for _ in 0..n * elems {
+            body.extend_from_slice(&0.25f32.to_le_bytes());
+        }
+        // raw binary path needs the count header — use a custom request
+        let mut stream = std::net::TcpStream::connect(srv.addr()).unwrap();
+        use std::io::{Read, Write};
+        let head = format!(
+            "POST /v1/predict HTTP/1.1\r\nhost: x\r\ncontent-type: application/octet-stream\r\n\
+             x-num-images: {n}\r\ncontent-length: {}\r\nconnection: close\r\n\r\n",
+            body.len()
+        );
+        stream.write_all(head.as_bytes()).unwrap();
+        stream.write_all(&body).unwrap();
+        let mut resp = Vec::new();
+        stream.read_to_end(&mut resp).unwrap();
+        let text = String::from_utf8_lossy(&resp);
+        assert!(text.starts_with("HTTP/1.1 200"), "{text}");
+        // body is n * classes f32 = all zeros from the fake backend
+        let classes = srv.system().ensemble().classes();
+        let body_start = resp.windows(4).position(|w| w == b"\r\n\r\n").unwrap() + 4;
+        assert_eq!(resp.len() - body_start, n * classes * 4);
+    }
+
+    #[test]
+    fn bad_requests_rejected() {
+        let srv = api();
+        let cases: Vec<(&str, &str, Vec<u8>)> = vec![
+            ("application/json", "/v1/predict", b"{not json".to_vec()),
+            ("application/json", "/v1/predict", b"{\"images\":[[1],[1,2]]}".to_vec()),
+            ("application/octet-stream", "/v1/predict", vec![0u8; 6]),
+        ];
+        for (ct, path, body) in cases {
+            let (code, _) = http_request(srv.addr(), "POST", path, ct, &body).unwrap();
+            assert_eq!(code, 400, "case {ct}");
+        }
+        let (code, _) = http_request(srv.addr(), "GET", "/v2/none", "", b"").unwrap();
+        assert_eq!(code, 404);
+    }
+}

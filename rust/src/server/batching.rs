@@ -1,0 +1,264 @@
+//! Adaptive batching (§I.B / §II.A).
+//!
+//! "When the amount of requests is low and irregular, adaptative batching
+//! allows triggering prediction before the buffered batch is full to
+//! improve the latency. […] The buffer waiting request is now defined by
+//! the size of segments, not the batch size of the individual DNNs."
+//!
+//! Small client requests are coalesced into one engine request: the
+//! buffer flushes when it reaches `max_images` (one segment's worth) or
+//! when the oldest buffered request has waited `max_delay` — whichever
+//! comes first. Each client gets back exactly its own rows.
+
+use std::sync::mpsc::SyncSender;
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::engine::InferenceSystem;
+
+/// One buffered client request.
+struct PendingReq {
+    x: Vec<f32>,
+    nb_images: usize,
+    done: SyncSender<anyhow::Result<Vec<f32>>>,
+}
+
+struct BufferState {
+    queue: Vec<PendingReq>,
+    images: usize,
+    oldest: Option<Instant>,
+    closed: bool,
+}
+
+/// Request coalescer in front of an [`InferenceSystem`].
+pub struct AdaptiveBatcher {
+    system: Arc<InferenceSystem>,
+    state: Mutex<BufferState>,
+    kick: Condvar,
+    /// Flush threshold in images (default: the engine's segment size).
+    pub max_images: usize,
+    /// Max time the oldest request may wait before a flush.
+    pub max_delay: Duration,
+}
+
+impl AdaptiveBatcher {
+    /// Wrap `system`; flush at `max_images` buffered images or after
+    /// `max_delay`, whichever comes first. Spawns one flusher thread,
+    /// stopped when the returned handle is dropped.
+    pub fn start(
+        system: Arc<InferenceSystem>,
+        max_images: usize,
+        max_delay: Duration,
+    ) -> Arc<AdaptiveBatcher> {
+        assert!(max_images > 0);
+        let b = Arc::new(AdaptiveBatcher {
+            system,
+            state: Mutex::new(BufferState {
+                queue: Vec::new(),
+                images: 0,
+                oldest: None,
+                closed: false,
+            }),
+            kick: Condvar::new(),
+            max_images,
+            max_delay,
+        });
+        let flusher = Arc::clone(&b);
+        std::thread::Builder::new()
+            .name("adaptive-batcher".into())
+            .spawn(move || flusher.run())
+            .expect("spawn adaptive batcher");
+        b
+    }
+
+    /// Enqueue a client request and wait for its rows of the coalesced
+    /// prediction.
+    pub fn predict(&self, x: Vec<f32>, nb_images: usize) -> anyhow::Result<Vec<f32>> {
+        anyhow::ensure!(nb_images > 0, "empty request");
+        anyhow::ensure!(x.len() % nb_images == 0, "ragged request");
+        let (tx, rx) = std::sync::mpsc::sync_channel(1);
+        {
+            let mut st = self.state.lock().unwrap();
+            anyhow::ensure!(!st.closed, "batcher shut down");
+            st.images += nb_images;
+            if st.oldest.is_none() {
+                st.oldest = Some(Instant::now());
+            }
+            st.queue.push(PendingReq { x, nb_images, done: tx });
+            self.kick.notify_all();
+        }
+        rx.recv().map_err(|_| anyhow::anyhow!("batcher dropped request"))?
+    }
+
+    /// Stop the flusher (buffered requests are flushed first).
+    pub fn shutdown(&self) {
+        let mut st = self.state.lock().unwrap();
+        st.closed = true;
+        self.kick.notify_all();
+    }
+
+    fn run(&self) {
+        loop {
+            let batch: Vec<PendingReq> = {
+                let mut st = self.state.lock().unwrap();
+                loop {
+                    if st.images >= self.max_images
+                        || (st.closed && !st.queue.is_empty())
+                    {
+                        break;
+                    }
+                    if st.closed {
+                        return;
+                    }
+                    match st.oldest {
+                        Some(t0) => {
+                            let elapsed = t0.elapsed();
+                            if elapsed >= self.max_delay && !st.queue.is_empty() {
+                                break;
+                            }
+                            let (g, _) = self
+                                .kick
+                                .wait_timeout(st, self.max_delay - elapsed)
+                                .unwrap();
+                            st = g;
+                        }
+                        None => {
+                            st = self.kick.wait(st).unwrap();
+                        }
+                    }
+                }
+                st.images = 0;
+                st.oldest = None;
+                std::mem::take(&mut st.queue)
+            };
+            if batch.is_empty() {
+                continue;
+            }
+            self.flush(batch);
+        }
+    }
+
+    fn flush(&self, batch: Vec<PendingReq>) {
+        // concatenate rows (all requests must share the row length)
+        let elems = batch[0].x.len() / batch[0].nb_images;
+        let total: usize = batch.iter().map(|r| r.nb_images).sum();
+        let mut x = Vec::with_capacity(total * elems);
+        let mut ok = true;
+        for r in &batch {
+            if r.x.len() / r.nb_images != elems {
+                ok = false;
+                break;
+            }
+            x.extend_from_slice(&r.x);
+        }
+        if !ok {
+            for r in batch {
+                let _ = r.done.send(Err(anyhow::anyhow!(
+                    "coalesced requests disagree on image size"
+                )));
+            }
+            return;
+        }
+
+        match self.system.predict(x, total) {
+            Ok(y) => {
+                let classes = y.len() / total;
+                let mut offset = 0;
+                for r in batch {
+                    let span = y[offset * classes..(offset + r.nb_images) * classes].to_vec();
+                    offset += r.nb_images;
+                    let _ = r.done.send(Ok(span));
+                }
+            }
+            Err(e) => {
+                let msg = format!("{e:#}");
+                for r in batch {
+                    let _ = r.done.send(Err(anyhow::anyhow!(msg.clone())));
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::alloc::matrix::AllocationMatrix;
+    use crate::device::DeviceSet;
+    use crate::engine::EngineOptions;
+    use crate::exec::fake::FakeExecutor;
+    use crate::model::{ensemble, EnsembleId};
+
+    fn system() -> Arc<InferenceSystem> {
+        let e = ensemble(EnsembleId::Imn4);
+        let d = DeviceSet::hgx(2);
+        let mut a = AllocationMatrix::zeroed(d.len(), e.len());
+        for m in 0..e.len() {
+            a.set(m % 2, m, 8);
+        }
+        Arc::new(
+            InferenceSystem::build(&a, &e, Arc::new(FakeExecutor::new(d)),
+                                   EngineOptions::default())
+                .unwrap(),
+        )
+    }
+
+    #[test]
+    fn coalesces_and_splits_correctly() {
+        let sys = system();
+        let elems = sys.ensemble().members[0].input_elems_per_image();
+        let classes = sys.ensemble().classes();
+        let b = AdaptiveBatcher::start(Arc::clone(&sys), 64, Duration::from_millis(20));
+        // several concurrent small requests of different sizes
+        std::thread::scope(|s| {
+            for n in [1usize, 3, 5, 2] {
+                let b = &b;
+                s.spawn(move || {
+                    let y = b.predict(vec![0.0; n * elems], n).unwrap();
+                    assert_eq!(y.len(), n * classes);
+                });
+            }
+        });
+        // coalescing happened: fewer engine requests than client requests
+        let reqs = sys.metrics().requests.load(std::sync::atomic::Ordering::Relaxed);
+        assert!(reqs < 4, "engine saw {reqs} requests for 4 clients");
+        b.shutdown();
+    }
+
+    #[test]
+    fn deadline_flushes_partial_buffer() {
+        let sys = system();
+        let elems = sys.ensemble().members[0].input_elems_per_image();
+        let b = AdaptiveBatcher::start(Arc::clone(&sys), 1_000_000,
+                                       Duration::from_millis(15));
+        let t = Instant::now();
+        let y = b.predict(vec![0.0; 2 * elems], 2).unwrap();
+        assert_eq!(y.len(), 2 * sys.ensemble().classes());
+        let waited = t.elapsed();
+        assert!(waited >= Duration::from_millis(10), "flushed too early: {waited:?}");
+        assert!(waited < Duration::from_secs(2), "deadline ignored");
+        b.shutdown();
+    }
+
+    #[test]
+    fn size_threshold_flushes_immediately() {
+        let sys = system();
+        let elems = sys.ensemble().members[0].input_elems_per_image();
+        // threshold 4 images, long deadline: a 4-image request must not wait
+        let b = AdaptiveBatcher::start(Arc::clone(&sys), 4, Duration::from_secs(30));
+        let t = Instant::now();
+        let y = b.predict(vec![0.0; 4 * elems], 4).unwrap();
+        assert_eq!(y.len(), 4 * sys.ensemble().classes());
+        assert!(t.elapsed() < Duration::from_secs(5));
+        b.shutdown();
+    }
+
+    #[test]
+    fn rejects_bad_requests() {
+        let sys = system();
+        let b = AdaptiveBatcher::start(sys, 8, Duration::from_millis(5));
+        assert!(b.predict(vec![0.0; 10], 0).is_err());
+        assert!(b.predict(vec![0.0; 10], 3).is_err());
+        b.shutdown();
+    }
+}

@@ -1,0 +1,162 @@
+//! Prediction cache (§I.B): "to improve performance under redundant
+//! requests, caching allows avoiding recomputing similar requests".
+//!
+//! An LRU keyed by the content hash of the request payload. Entries store
+//! the full ensemble output; hits skip the engine entirely.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use sha2::{Digest, Sha256};
+
+/// Content key of a request (payload + image count).
+pub fn request_key(x: &[f32], nb_images: usize) -> [u8; 32] {
+    let mut h = Sha256::new();
+    h.update((nb_images as u64).to_le_bytes());
+    // hash raw f32 bytes
+    let bytes = unsafe {
+        std::slice::from_raw_parts(x.as_ptr().cast::<u8>(), std::mem::size_of_val(x))
+    };
+    h.update(bytes);
+    h.finalize().into()
+}
+
+struct Entry {
+    y: Vec<f32>,
+    /// LRU tick of the last access.
+    last_used: u64,
+}
+
+/// Bounded LRU prediction cache (thread-safe).
+pub struct PredictionCache {
+    map: Mutex<HashMap<[u8; 32], Entry>>,
+    capacity: usize,
+    tick: AtomicU64,
+    pub hits: AtomicU64,
+    pub misses: AtomicU64,
+}
+
+impl PredictionCache {
+    pub fn new(capacity: usize) -> PredictionCache {
+        assert!(capacity > 0);
+        PredictionCache {
+            map: Mutex::new(HashMap::with_capacity(capacity)),
+            capacity,
+            tick: AtomicU64::new(0),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+        }
+    }
+
+    pub fn get(&self, key: &[u8; 32]) -> Option<Vec<f32>> {
+        let mut map = self.map.lock().unwrap();
+        match map.get_mut(key) {
+            Some(e) => {
+                e.last_used = self.tick.fetch_add(1, Ordering::Relaxed);
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                Some(e.y.clone())
+            }
+            None => {
+                self.misses.fetch_add(1, Ordering::Relaxed);
+                None
+            }
+        }
+    }
+
+    pub fn put(&self, key: [u8; 32], y: Vec<f32>) {
+        let mut map = self.map.lock().unwrap();
+        if map.len() >= self.capacity && !map.contains_key(&key) {
+            // evict the least-recently-used entry
+            if let Some(oldest) = map
+                .iter()
+                .min_by_key(|(_, e)| e.last_used)
+                .map(|(k, _)| *k)
+            {
+                map.remove(&oldest);
+            }
+        }
+        let tick = self.tick.fetch_add(1, Ordering::Relaxed);
+        map.insert(key, Entry { y, last_used: tick });
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn hit_rate(&self) -> f64 {
+        let h = self.hits.load(Ordering::Relaxed) as f64;
+        let m = self.misses.load(Ordering::Relaxed) as f64;
+        if h + m == 0.0 {
+            0.0
+        } else {
+            h / (h + m)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn key_sensitivity() {
+        let a = request_key(&[1.0, 2.0, 3.0], 1);
+        assert_eq!(a, request_key(&[1.0, 2.0, 3.0], 1));
+        assert_ne!(a, request_key(&[1.0, 2.0, 3.1], 1));
+        assert_ne!(a, request_key(&[1.0, 2.0, 3.0], 3));
+    }
+
+    #[test]
+    fn hit_and_miss() {
+        let c = PredictionCache::new(4);
+        let k = request_key(&[0.5; 8], 2);
+        assert!(c.get(&k).is_none());
+        c.put(k, vec![1.0, 2.0]);
+        assert_eq!(c.get(&k), Some(vec![1.0, 2.0]));
+        assert_eq!(c.hits.load(Ordering::Relaxed), 1);
+        assert_eq!(c.misses.load(Ordering::Relaxed), 1);
+        assert!((c.hit_rate() - 0.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn lru_eviction() {
+        let c = PredictionCache::new(2);
+        let k1 = request_key(&[1.0], 1);
+        let k2 = request_key(&[2.0], 1);
+        let k3 = request_key(&[3.0], 1);
+        c.put(k1, vec![1.0]);
+        c.put(k2, vec![2.0]);
+        // touch k1 so k2 becomes LRU
+        assert!(c.get(&k1).is_some());
+        c.put(k3, vec![3.0]);
+        assert_eq!(c.len(), 2);
+        assert!(c.get(&k1).is_some(), "recently used survived");
+        assert!(c.get(&k2).is_none(), "LRU evicted");
+        assert!(c.get(&k3).is_some());
+    }
+
+    #[test]
+    fn concurrent_access() {
+        let c = std::sync::Arc::new(PredictionCache::new(64));
+        std::thread::scope(|s| {
+            for t in 0..4 {
+                let c = std::sync::Arc::clone(&c);
+                s.spawn(move || {
+                    for i in 0..200 {
+                        let k = request_key(&[(i % 32) as f32, t as f32], 1);
+                        if c.get(&k).is_none() {
+                            c.put(k, vec![i as f32]);
+                        }
+                    }
+                });
+            }
+        });
+        assert!(c.len() <= 64);
+        assert!(c.hits.load(Ordering::Relaxed) > 0);
+    }
+}

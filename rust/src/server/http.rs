@@ -1,0 +1,329 @@
+//! Minimal HTTP/1.1 server over std::net (hyper is not reachable
+//! offline). Enough of the protocol for a JSON/binary prediction API:
+//! request line + headers + Content-Length bodies, keep-alive, and a
+//! thread pool bounding handler concurrency.
+
+use std::collections::BTreeMap;
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use anyhow::{bail, Context};
+
+use crate::util::threadpool::ThreadPool;
+
+/// A parsed HTTP request.
+#[derive(Debug)]
+pub struct Request {
+    pub method: String,
+    pub path: String,
+    pub headers: BTreeMap<String, String>,
+    pub body: Vec<u8>,
+}
+
+/// A response under construction.
+#[derive(Debug)]
+pub struct Response {
+    pub status: u16,
+    pub content_type: &'static str,
+    pub body: Vec<u8>,
+}
+
+impl Response {
+    pub fn json(status: u16, body: String) -> Response {
+        Response { status, content_type: "application/json", body: body.into_bytes() }
+    }
+
+    pub fn binary(body: Vec<u8>) -> Response {
+        Response { status: 200, content_type: "application/octet-stream", body }
+    }
+
+    pub fn text(status: u16, body: &str) -> Response {
+        Response { status, content_type: "text/plain", body: body.as_bytes().to_vec() }
+    }
+
+    fn status_line(&self) -> &'static str {
+        match self.status {
+            200 => "200 OK",
+            400 => "400 Bad Request",
+            404 => "404 Not Found",
+            405 => "405 Method Not Allowed",
+            413 => "413 Payload Too Large",
+            500 => "500 Internal Server Error",
+            503 => "503 Service Unavailable",
+            _ => "500 Internal Server Error",
+        }
+    }
+}
+
+/// Request handler: pure function of the request.
+pub type Handler = Arc<dyn Fn(&Request) -> Response + Send + Sync>;
+
+/// The server: a listener + handler pool.
+pub struct HttpServer {
+    addr: std::net::SocketAddr,
+    stop: Arc<AtomicBool>,
+    accept_thread: Option<std::thread::JoinHandle<()>>,
+}
+
+/// Cap request bodies (1024 images × 12288 floats ≈ 50 MB).
+const MAX_BODY: usize = 256 * 1024 * 1024;
+
+impl HttpServer {
+    /// Bind `addr` (e.g. "127.0.0.1:0") and serve `handler` on `threads`
+    /// pool threads until dropped.
+    pub fn start(addr: &str, threads: usize, handler: Handler) -> anyhow::Result<HttpServer> {
+        let listener = TcpListener::bind(addr).with_context(|| format!("binding {addr}"))?;
+        let local = listener.local_addr()?;
+        listener.set_nonblocking(true)?;
+        let stop = Arc::new(AtomicBool::new(false));
+
+        let accept_thread = {
+            let stop = Arc::clone(&stop);
+            std::thread::Builder::new()
+                .name("http-accept".into())
+                .spawn(move || {
+                    let pool = ThreadPool::new(threads, "http");
+                    while !stop.load(Ordering::Relaxed) {
+                        match listener.accept() {
+                            Ok((stream, _)) => {
+                                let handler = Arc::clone(&handler);
+                                pool.execute(move || {
+                                    let _ = serve_connection(stream, handler);
+                                });
+                            }
+                            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                                std::thread::sleep(Duration::from_millis(2));
+                            }
+                            Err(_) => break,
+                        }
+                    }
+                    // pool drop joins handlers
+                })
+                .expect("spawn http-accept")
+        };
+
+        Ok(HttpServer { addr: local, stop, accept_thread: Some(accept_thread) })
+    }
+
+    pub fn addr(&self) -> std::net::SocketAddr {
+        self.addr
+    }
+}
+
+impl Drop for HttpServer {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(t) = self.accept_thread.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+fn serve_connection(stream: TcpStream, handler: Handler) -> anyhow::Result<()> {
+    stream.set_read_timeout(Some(Duration::from_secs(30)))?;
+    stream.set_nodelay(true)?;
+    let mut reader = BufReader::new(stream.try_clone()?);
+    let mut stream = stream;
+
+    loop {
+        let req = match read_request(&mut reader) {
+            Ok(Some(r)) => r,
+            Ok(None) => return Ok(()), // clean close
+            Err(e) => {
+                let resp = Response::text(400, &format!("bad request: {e}"));
+                let _ = write_response(&mut stream, &resp, false);
+                return Ok(());
+            }
+        };
+        let keep_alive = req
+            .headers
+            .get("connection")
+            .map(|v| !v.eq_ignore_ascii_case("close"))
+            .unwrap_or(true);
+        let resp = handler(&req);
+        write_response(&mut stream, &resp, keep_alive)?;
+        if !keep_alive {
+            return Ok(());
+        }
+    }
+}
+
+fn read_request(reader: &mut BufReader<TcpStream>) -> anyhow::Result<Option<Request>> {
+    let mut line = String::new();
+    if reader.read_line(&mut line)? == 0 {
+        return Ok(None);
+    }
+    let mut parts = line.split_whitespace();
+    let method = parts.next().context("missing method")?.to_string();
+    let path = parts.next().context("missing path")?.to_string();
+    let version = parts.next().context("missing version")?;
+    if !version.starts_with("HTTP/1.") {
+        bail!("unsupported version {version}");
+    }
+
+    let mut headers = BTreeMap::new();
+    loop {
+        let mut h = String::new();
+        reader.read_line(&mut h)?;
+        let h = h.trim_end();
+        if h.is_empty() {
+            break;
+        }
+        if let Some((k, v)) = h.split_once(':') {
+            headers.insert(k.trim().to_ascii_lowercase(), v.trim().to_string());
+        }
+    }
+
+    let len: usize = headers
+        .get("content-length")
+        .map(|v| v.parse())
+        .transpose()
+        .context("bad content-length")?
+        .unwrap_or(0);
+    if len > MAX_BODY {
+        bail!("body too large: {len}");
+    }
+    let mut body = vec![0u8; len];
+    reader.read_exact(&mut body)?;
+    Ok(Some(Request { method, path, headers, body }))
+}
+
+fn write_response(stream: &mut TcpStream, resp: &Response, keep_alive: bool) -> anyhow::Result<()> {
+    let head = format!(
+        "HTTP/1.1 {}\r\ncontent-type: {}\r\ncontent-length: {}\r\nconnection: {}\r\n\r\n",
+        resp.status_line(),
+        resp.content_type,
+        resp.body.len(),
+        if keep_alive { "keep-alive" } else { "close" },
+    );
+    stream.write_all(head.as_bytes())?;
+    stream.write_all(&resp.body)?;
+    stream.flush()?;
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// tiny blocking client (tests, examples, benches)
+
+/// Minimal HTTP client for exercising the server in-process.
+pub fn http_request(
+    addr: std::net::SocketAddr,
+    method: &str,
+    path: &str,
+    content_type: &str,
+    body: &[u8],
+) -> anyhow::Result<(u16, Vec<u8>)> {
+    let mut stream = TcpStream::connect(addr)?;
+    stream.set_nodelay(true)?;
+    let head = format!(
+        "{method} {path} HTTP/1.1\r\nhost: localhost\r\ncontent-type: {content_type}\r\n\
+         content-length: {}\r\nconnection: close\r\n\r\n",
+        body.len()
+    );
+    stream.write_all(head.as_bytes())?;
+    stream.write_all(body)?;
+    stream.flush()?;
+
+    let mut reader = BufReader::new(stream);
+    let mut status_line = String::new();
+    reader.read_line(&mut status_line)?;
+    let status: u16 = status_line
+        .split_whitespace()
+        .nth(1)
+        .context("bad status line")?
+        .parse()?;
+    let mut len = 0usize;
+    loop {
+        let mut h = String::new();
+        reader.read_line(&mut h)?;
+        let h = h.trim_end();
+        if h.is_empty() {
+            break;
+        }
+        if let Some((k, v)) = h.split_once(':') {
+            if k.trim().eq_ignore_ascii_case("content-length") {
+                len = v.trim().parse()?;
+            }
+        }
+    }
+    let mut body = vec![0u8; len];
+    reader.read_exact(&mut body)?;
+    Ok((status, body))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn echo_server() -> HttpServer {
+        let handler: Handler = Arc::new(|req: &Request| match req.path.as_str() {
+            "/echo" => Response::binary(req.body.clone()),
+            "/hello" => Response::json(200, "{\"hi\":true}".into()),
+            _ => Response::text(404, "nope"),
+        });
+        HttpServer::start("127.0.0.1:0", 2, handler).unwrap()
+    }
+
+    #[test]
+    fn get_and_post_roundtrip() {
+        let srv = echo_server();
+        let (code, body) = http_request(srv.addr(), "GET", "/hello", "text/plain", b"").unwrap();
+        assert_eq!(code, 200);
+        assert_eq!(body, b"{\"hi\":true}");
+
+        let payload = vec![1u8, 2, 3, 4, 5];
+        let (code, body) =
+            http_request(srv.addr(), "POST", "/echo", "application/octet-stream", &payload)
+                .unwrap();
+        assert_eq!(code, 200);
+        assert_eq!(body, payload);
+    }
+
+    #[test]
+    fn not_found() {
+        let srv = echo_server();
+        let (code, _) = http_request(srv.addr(), "GET", "/missing", "text/plain", b"").unwrap();
+        assert_eq!(code, 404);
+    }
+
+    #[test]
+    fn concurrent_clients() {
+        let srv = echo_server();
+        let addr = srv.addr();
+        std::thread::scope(|s| {
+            for i in 0..8 {
+                s.spawn(move || {
+                    let body = vec![i as u8; 1000];
+                    let (code, got) =
+                        http_request(addr, "POST", "/echo", "application/octet-stream", &body)
+                            .unwrap();
+                    assert_eq!(code, 200);
+                    assert_eq!(got, body);
+                });
+            }
+        });
+    }
+
+    #[test]
+    fn server_stops_on_drop() {
+        let addr = {
+            let srv = echo_server();
+            srv.addr()
+        };
+        // after drop, connections must fail (maybe after kernel backlog
+        // drains — retry a few times)
+        std::thread::sleep(Duration::from_millis(50));
+        let mut refused = false;
+        for _ in 0..10 {
+            if http_request(addr, "GET", "/hello", "text/plain", b"").is_err() {
+                refused = true;
+                break;
+            }
+            std::thread::sleep(Duration::from_millis(20));
+        }
+        assert!(refused, "server kept answering after drop");
+    }
+}

@@ -1,0 +1,14 @@
+//! REST front-end: the inference-server layer wrapping the inference
+//! system (§I.B / §II.A — "it implements the usual inference server
+//! features such as an HTTP/HTTPS wrapper and adaptative batching").
+
+pub mod http;
+pub mod api;
+pub mod batching;
+pub mod cache;
+pub mod selection;
+
+pub use api::ApiServer;
+pub use batching::AdaptiveBatcher;
+pub use cache::PredictionCache;
+pub use selection::SystemRegistry;

@@ -1,0 +1,131 @@
+//! Ensemble selection (§I.B): "ensemble selection allows the client
+//! application to choose the model which will answer among multiple
+//! applications, or the same application with different trade-offs
+//! between accuracy and speed".
+//!
+//! A registry of named deployed systems; clients select one per request
+//! (`x-ensemble` header / path suffix in the API layer).
+
+use std::collections::BTreeMap;
+use std::sync::{Arc, RwLock};
+
+use crate::engine::InferenceSystem;
+
+/// Thread-safe name → deployed-system registry.
+#[derive(Default)]
+pub struct SystemRegistry {
+    systems: RwLock<BTreeMap<String, Arc<InferenceSystem>>>,
+    default: RwLock<Option<String>>,
+}
+
+impl SystemRegistry {
+    pub fn new() -> Arc<SystemRegistry> {
+        Arc::new(SystemRegistry::default())
+    }
+
+    /// Register a deployed system; the first one becomes the default.
+    pub fn register(&self, name: &str, system: Arc<InferenceSystem>) {
+        let mut map = self.systems.write().unwrap();
+        map.insert(name.to_string(), system);
+        let mut def = self.default.write().unwrap();
+        if def.is_none() {
+            *def = Some(name.to_string());
+        }
+    }
+
+    /// Remove a system (e.g. to re-deploy with a new matrix).
+    pub fn deregister(&self, name: &str) -> Option<Arc<InferenceSystem>> {
+        let removed = self.systems.write().unwrap().remove(name);
+        let mut def = self.default.write().unwrap();
+        if def.as_deref() == Some(name) {
+            *def = self.systems.read().unwrap().keys().next().cloned();
+        }
+        removed
+    }
+
+    /// Resolve a client's selection; `None` selects the default.
+    pub fn select(&self, name: Option<&str>) -> Option<Arc<InferenceSystem>> {
+        let map = self.systems.read().unwrap();
+        match name {
+            Some(n) => map.get(n).cloned(),
+            None => {
+                let def = self.default.read().unwrap();
+                def.as_ref().and_then(|n| map.get(n).cloned())
+            }
+        }
+    }
+
+    pub fn names(&self) -> Vec<String> {
+        self.systems.read().unwrap().keys().cloned().collect()
+    }
+
+    pub fn len(&self) -> usize {
+        self.systems.read().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::alloc::matrix::AllocationMatrix;
+    use crate::device::DeviceSet;
+    use crate::engine::EngineOptions;
+    use crate::exec::fake::FakeExecutor;
+    use crate::model::{ensemble, EnsembleId};
+
+    fn system(id: EnsembleId, gpus: usize) -> Arc<InferenceSystem> {
+        let e = ensemble(id);
+        let d = DeviceSet::hgx(gpus);
+        let mut a = AllocationMatrix::zeroed(d.len(), e.len());
+        for m in 0..e.len() {
+            a.set(m % gpus, m, 8);
+        }
+        Arc::new(
+            InferenceSystem::build(&a, &e, Arc::new(FakeExecutor::new(d)),
+                                   EngineOptions::default())
+                .unwrap(),
+        )
+    }
+
+    #[test]
+    fn register_select_default() {
+        let reg = SystemRegistry::new();
+        assert!(reg.select(None).is_none());
+        reg.register("fast", system(EnsembleId::Imn1, 1));
+        reg.register("accurate", system(EnsembleId::Imn4, 2));
+        assert_eq!(reg.len(), 2);
+        // default = first registered
+        assert_eq!(reg.select(None).unwrap().ensemble().name, "IMN1");
+        assert_eq!(reg.select(Some("accurate")).unwrap().ensemble().name, "IMN4");
+        assert!(reg.select(Some("nope")).is_none());
+        assert_eq!(reg.names(), vec!["accurate".to_string(), "fast".to_string()]);
+    }
+
+    #[test]
+    fn deregister_moves_default() {
+        let reg = SystemRegistry::new();
+        reg.register("a", system(EnsembleId::Imn1, 1));
+        reg.register("b", system(EnsembleId::Imn4, 2));
+        assert!(reg.deregister("a").is_some());
+        // default falls over to a remaining system
+        assert_eq!(reg.select(None).unwrap().ensemble().name, "IMN4");
+        assert!(reg.deregister("zzz").is_none());
+    }
+
+    #[test]
+    fn selected_systems_serve() {
+        let reg = SystemRegistry::new();
+        reg.register("fast", system(EnsembleId::Imn1, 1));
+        reg.register("accurate", system(EnsembleId::Imn4, 2));
+        for (name, classes) in [("fast", 100), ("accurate", 100)] {
+            let sys = reg.select(Some(name)).unwrap();
+            let elems = sys.ensemble().members[0].input_elems_per_image();
+            let y = sys.predict(vec![0.0; 2 * elems], 2).unwrap();
+            assert_eq!(y.len(), 2 * classes);
+        }
+    }
+}

@@ -1,0 +1,219 @@
+//! Tiny CLI argument parser (clap is not reachable offline).
+//!
+//! Supports `--flag`, `--key value`, `--key=value` and positional
+//! arguments, with typed accessors and a generated `--help` text.
+
+use std::collections::BTreeMap;
+
+/// Declarative option spec used for help text and validation.
+#[derive(Debug, Clone)]
+pub struct OptSpec {
+    pub name: &'static str,
+    pub help: &'static str,
+    pub takes_value: bool,
+    pub default: Option<&'static str>,
+}
+
+/// Parsed command line.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    opts: BTreeMap<String, String>,
+    flags: Vec<String>,
+    pub positional: Vec<String>,
+}
+
+#[derive(Debug, thiserror::Error)]
+pub enum CliError {
+    #[error("unknown option --{0}")]
+    Unknown(String),
+    #[error("option --{0} requires a value")]
+    MissingValue(String),
+    #[error("invalid value for --{0}: {1}")]
+    Invalid(String, String),
+}
+
+/// A small command-line parser bound to a spec table.
+pub struct Cli {
+    pub bin: &'static str,
+    pub about: &'static str,
+    pub specs: Vec<OptSpec>,
+}
+
+impl Cli {
+    pub fn new(bin: &'static str, about: &'static str) -> Self {
+        Cli { bin, about, specs: Vec::new() }
+    }
+
+    pub fn flag(mut self, name: &'static str, help: &'static str) -> Self {
+        self.specs.push(OptSpec { name, help, takes_value: false, default: None });
+        self
+    }
+
+    pub fn opt(mut self, name: &'static str, default: Option<&'static str>,
+               help: &'static str) -> Self {
+        self.specs.push(OptSpec { name, help, takes_value: true, default });
+        self
+    }
+
+    pub fn help_text(&self) -> String {
+        let mut s = format!("{} — {}\n\nOptions:\n", self.bin, self.about);
+        for spec in &self.specs {
+            let mut line = format!("  --{}", spec.name);
+            if spec.takes_value {
+                line.push_str(" <value>");
+            }
+            if let Some(d) = spec.default {
+                line.push_str(&format!(" (default: {})", d));
+            }
+            s.push_str(&format!("{:<40} {}\n", line, spec.help));
+        }
+        s
+    }
+
+    /// Parse an iterator of raw args (without argv[0]).
+    pub fn parse<I, S>(&self, raw: I) -> Result<Args, CliError>
+    where
+        I: IntoIterator<Item = S>,
+        S: AsRef<str>,
+    {
+        let mut out = Args::default();
+        // seed defaults
+        for spec in &self.specs {
+            if let Some(d) = spec.default {
+                out.opts.insert(spec.name.to_string(), d.to_string());
+            }
+        }
+        let raw: Vec<String> = raw.into_iter().map(|s| s.as_ref().to_string()).collect();
+        let mut i = 0;
+        while i < raw.len() {
+            let a = &raw[i];
+            if let Some(body) = a.strip_prefix("--") {
+                let (name, inline_val) = match body.split_once('=') {
+                    Some((n, v)) => (n.to_string(), Some(v.to_string())),
+                    None => (body.to_string(), None),
+                };
+                let spec = self
+                    .specs
+                    .iter()
+                    .find(|s| s.name == name)
+                    .ok_or_else(|| CliError::Unknown(name.clone()))?;
+                if spec.takes_value {
+                    let val = match inline_val {
+                        Some(v) => v,
+                        None => {
+                            i += 1;
+                            raw.get(i)
+                                .cloned()
+                                .ok_or_else(|| CliError::MissingValue(name.clone()))?
+                        }
+                    };
+                    out.opts.insert(name, val);
+                } else {
+                    if inline_val.is_some() {
+                        return Err(CliError::Invalid(name, "flag takes no value".into()));
+                    }
+                    out.flags.push(name);
+                }
+            } else {
+                out.positional.push(a.clone());
+            }
+            i += 1;
+        }
+        Ok(out)
+    }
+}
+
+impl Args {
+    pub fn has_flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.opts.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_usize(&self, name: &str) -> Result<Option<usize>, CliError> {
+        self.typed(name, |s| s.parse::<usize>().ok())
+    }
+
+    pub fn get_u64(&self, name: &str) -> Result<Option<u64>, CliError> {
+        self.typed(name, |s| s.parse::<u64>().ok())
+    }
+
+    pub fn get_f64(&self, name: &str) -> Result<Option<f64>, CliError> {
+        self.typed(name, |s| s.parse::<f64>().ok())
+    }
+
+    /// Comma-separated list of usizes, e.g. `--gpus 1,2,4,8`.
+    pub fn get_usize_list(&self, name: &str) -> Result<Option<Vec<usize>>, CliError> {
+        self.typed(name, |s| {
+            s.split(',')
+                .map(|p| p.trim().parse::<usize>().ok())
+                .collect::<Option<Vec<_>>>()
+        })
+    }
+
+    fn typed<T>(&self, name: &str, f: impl Fn(&str) -> Option<T>)
+        -> Result<Option<T>, CliError> {
+        match self.get(name) {
+            None => Ok(None),
+            Some(s) => f(s)
+                .map(Some)
+                .ok_or_else(|| CliError::Invalid(name.to_string(), s.to_string())),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cli() -> Cli {
+        Cli::new("t", "test")
+            .flag("verbose", "chatty")
+            .opt("gpus", Some("4"), "gpu count")
+            .opt("name", None, "a name")
+    }
+
+    #[test]
+    fn defaults_and_overrides() {
+        let a = cli().parse(Vec::<String>::new()).unwrap();
+        assert_eq!(a.get_usize("gpus").unwrap(), Some(4));
+        assert_eq!(a.get("name"), None);
+
+        let a = cli().parse(["--gpus", "8", "--name=x"]).unwrap();
+        assert_eq!(a.get_usize("gpus").unwrap(), Some(8));
+        assert_eq!(a.get("name"), Some("x"));
+    }
+
+    #[test]
+    fn flags_and_positional() {
+        let a = cli().parse(["serve", "--verbose", "extra"]).unwrap();
+        assert!(a.has_flag("verbose"));
+        assert_eq!(a.positional, vec!["serve", "extra"]);
+    }
+
+    #[test]
+    fn errors() {
+        assert!(matches!(cli().parse(["--nope"]), Err(CliError::Unknown(_))));
+        assert!(matches!(cli().parse(["--name"]), Err(CliError::MissingValue(_))));
+        assert!(matches!(
+            cli().parse(["--gpus", "abc"]).unwrap().get_usize("gpus"),
+            Err(CliError::Invalid(..))
+        ));
+        assert!(matches!(cli().parse(["--verbose=1"]), Err(CliError::Invalid(..))));
+    }
+
+    #[test]
+    fn usize_list() {
+        let a = cli().parse(["--name", "1, 2,4"]).unwrap();
+        assert_eq!(a.get_usize_list("name").unwrap(), Some(vec![1, 2, 4]));
+    }
+
+    #[test]
+    fn help_mentions_options() {
+        let h = cli().help_text();
+        assert!(h.contains("--gpus"));
+        assert!(h.contains("default: 4"));
+    }
+}

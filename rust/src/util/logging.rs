@@ -1,0 +1,70 @@
+//! Minimal `log` backend: level filtering from `ES_LOG` env, stderr output
+//! with elapsed-time stamps.
+
+use std::io::Write;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Instant;
+
+use once_cell::sync::OnceCell;
+
+struct StderrLogger {
+    start: Instant,
+}
+
+static LOGGER: OnceCell<StderrLogger> = OnceCell::new();
+static DROPPED: AtomicU64 = AtomicU64::new(0);
+
+impl log::Log for StderrLogger {
+    fn enabled(&self, metadata: &log::Metadata) -> bool {
+        metadata.level() <= log::max_level()
+    }
+
+    fn log(&self, record: &log::Record) {
+        if !self.enabled(record.metadata()) {
+            return;
+        }
+        let elapsed = self.start.elapsed();
+        let line = format!(
+            "[{:>9.3}s {:<5} {}] {}\n",
+            elapsed.as_secs_f64(),
+            record.level(),
+            record.target(),
+            record.args()
+        );
+        // never panic from the logger
+        if std::io::stderr().write_all(line.as_bytes()).is_err() {
+            DROPPED.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    fn flush(&self) {
+        let _ = std::io::stderr().flush();
+    }
+}
+
+/// Install the logger once. Level comes from `ES_LOG` (error|warn|info|
+/// debug|trace), default `info`. Safe to call multiple times.
+pub fn init() {
+    let logger = LOGGER.get_or_init(|| StderrLogger { start: Instant::now() });
+    let level = match std::env::var("ES_LOG").as_deref() {
+        Ok("error") => log::LevelFilter::Error,
+        Ok("warn") => log::LevelFilter::Warn,
+        Ok("debug") => log::LevelFilter::Debug,
+        Ok("trace") => log::LevelFilter::Trace,
+        Ok("off") => log::LevelFilter::Off,
+        _ => log::LevelFilter::Info,
+    };
+    // set_logger fails when called twice — fine, level still updated
+    let _ = log::set_logger(logger);
+    log::set_max_level(level);
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn init_is_idempotent() {
+        super::init();
+        super::init();
+        log::info!("logging smoke test");
+    }
+}

@@ -1,0 +1,14 @@
+//! Self-built substrates.
+//!
+//! Only the `xla` dependency closure is reachable offline, so the small
+//! utility crates a project would normally pull from crates.io (JSON,
+//! CLI parsing, PRNG, stats, thread pool, property testing) are
+//! implemented here, each with its own tests.
+
+pub mod json;
+pub mod prng;
+pub mod stats;
+pub mod cli;
+pub mod threadpool;
+pub mod quick;
+pub mod logging;

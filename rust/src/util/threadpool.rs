@@ -1,0 +1,114 @@
+//! Fixed-size thread pool over an mpsc job channel.
+//!
+//! Used by the HTTP server to bound connection-handling concurrency. The
+//! inference engine itself does NOT use this pool — its workers are
+//! dedicated long-lived threads per the paper's design (fig. 1/2).
+
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+use std::thread;
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+/// A fixed pool of worker threads consuming jobs from a shared queue.
+pub struct ThreadPool {
+    tx: Option<mpsc::Sender<Job>>,
+    handles: Vec<thread::JoinHandle<()>>,
+}
+
+impl ThreadPool {
+    /// Spawn `n` worker threads (n >= 1).
+    pub fn new(n: usize, name: &str) -> ThreadPool {
+        assert!(n > 0, "thread pool needs at least one thread");
+        let (tx, rx) = mpsc::channel::<Job>();
+        let rx = Arc::new(Mutex::new(rx));
+        let mut handles = Vec::with_capacity(n);
+        for i in 0..n {
+            let rx = Arc::clone(&rx);
+            let handle = thread::Builder::new()
+                .name(format!("{name}-{i}"))
+                .spawn(move || loop {
+                    // take the next job; hold the lock only for recv
+                    let job = { rx.lock().unwrap().recv() };
+                    match job {
+                        Ok(job) => job(),
+                        Err(_) => break, // sender dropped -> shutdown
+                    }
+                })
+                .expect("spawn pool thread");
+            handles.push(handle);
+        }
+        ThreadPool { tx: Some(tx), handles }
+    }
+
+    /// Queue a job. Panics if the pool was already shut down.
+    pub fn execute<F: FnOnce() + Send + 'static>(&self, f: F) {
+        self.tx
+            .as_ref()
+            .expect("pool shut down")
+            .send(Box::new(f))
+            .expect("pool workers gone");
+    }
+
+    pub fn size(&self) -> usize {
+        self.handles.len()
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        // closing the channel stops the workers after draining queued jobs
+        drop(self.tx.take());
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    use std::time::Duration;
+
+    #[test]
+    fn executes_all_jobs() {
+        let pool = ThreadPool::new(4, "t");
+        let counter = Arc::new(AtomicUsize::new(0));
+        for _ in 0..100 {
+            let c = Arc::clone(&counter);
+            pool.execute(move || {
+                c.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        drop(pool); // join
+        assert_eq!(counter.load(Ordering::SeqCst), 100);
+    }
+
+    #[test]
+    fn jobs_run_concurrently() {
+        let pool = ThreadPool::new(4, "t");
+        let gate = Arc::new(std::sync::Barrier::new(4));
+        let done = Arc::new(AtomicUsize::new(0));
+        for _ in 0..4 {
+            let g = Arc::clone(&gate);
+            let d = Arc::clone(&done);
+            pool.execute(move || {
+                // deadlocks unless all four run at once
+                g.wait();
+                d.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        let start = std::time::Instant::now();
+        while done.load(Ordering::SeqCst) < 4 {
+            assert!(start.elapsed() < Duration::from_secs(5), "deadlock");
+            thread::yield_now();
+        }
+    }
+
+    #[test]
+    #[should_panic]
+    fn zero_threads_rejected() {
+        let _ = ThreadPool::new(0, "t");
+    }
+}

@@ -1,0 +1,143 @@
+//! Request workload generators for the serving benches and examples.
+//!
+//! * [`closed_loop`] — N client threads, each firing its next request as
+//!   soon as the previous one returns (throughput-oriented, like the
+//!   paper's offline benchmarks).
+//! * [`poisson_arrivals`] — open-loop arrival schedule with exponential
+//!   inter-arrival times (latency-oriented serving experiments).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use crate::engine::InferenceSystem;
+use crate::metrics::LatencyHistogram;
+use crate::util::prng::Prng;
+
+/// Result of a workload run.
+#[derive(Debug)]
+pub struct WorkloadReport {
+    pub requests: u64,
+    pub images: u64,
+    pub elapsed: Duration,
+    pub failed: u64,
+    pub latency: Arc<LatencyHistogram>,
+}
+
+impl WorkloadReport {
+    pub fn throughput_img_s(&self) -> f64 {
+        self.images as f64 / self.elapsed.as_secs_f64()
+    }
+
+    pub fn throughput_req_s(&self) -> f64 {
+        self.requests as f64 / self.elapsed.as_secs_f64()
+    }
+}
+
+/// Closed-loop workload: `clients` threads each issue `reqs_per_client`
+/// requests of `images_per_req` images back to back.
+pub fn closed_loop(
+    system: &InferenceSystem,
+    clients: usize,
+    reqs_per_client: usize,
+    images_per_req: usize,
+    seed: u64,
+) -> WorkloadReport {
+    let elems = system.ensemble().members[0].input_elems_per_image();
+    let latency = Arc::new(LatencyHistogram::new());
+    let done = AtomicU64::new(0);
+    let images = AtomicU64::new(0);
+    let failed = AtomicU64::new(0);
+
+    let t0 = Instant::now();
+    std::thread::scope(|s| {
+        for c in 0..clients {
+            let latency = Arc::clone(&latency);
+            let done = &done;
+            let images = &images;
+            let failed = &failed;
+            let sys = &system;
+            s.spawn(move || {
+                let mut rng = Prng::new(seed ^ (c as u64) << 32);
+                let x: Vec<f32> = (0..images_per_req * elems)
+                    .map(|_| rng.f64() as f32)
+                    .collect();
+                for _ in 0..reqs_per_client {
+                    let t = Instant::now();
+                    match sys.predict(x.clone(), images_per_req) {
+                        Ok(_) => {
+                            latency.record(t.elapsed());
+                            done.fetch_add(1, Ordering::Relaxed);
+                            images.fetch_add(images_per_req as u64, Ordering::Relaxed);
+                        }
+                        Err(_) => {
+                            failed.fetch_add(1, Ordering::Relaxed);
+                        }
+                    }
+                }
+            });
+        }
+    });
+
+    WorkloadReport {
+        requests: done.load(Ordering::Relaxed),
+        images: images.load(Ordering::Relaxed),
+        elapsed: t0.elapsed(),
+        failed: failed.load(Ordering::Relaxed),
+        latency,
+    }
+}
+
+/// Open-loop Poisson arrival offsets (seconds from start) for `n` requests
+/// at `rate` req/s.
+pub fn poisson_arrivals(n: usize, rate: f64, seed: u64) -> Vec<f64> {
+    let mut rng = Prng::new(seed);
+    let mut t = 0.0;
+    (0..n)
+        .map(|_| {
+            t += rng.exponential(rate);
+            t
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::alloc::matrix::AllocationMatrix;
+    use crate::device::DeviceSet;
+    use crate::engine::EngineOptions;
+    use crate::exec::fake::FakeExecutor;
+    use crate::model::{ensemble, EnsembleId};
+
+    #[test]
+    fn closed_loop_counts() {
+        let e = ensemble(EnsembleId::Imn4);
+        let d = DeviceSet::hgx(2);
+        let mut a = AllocationMatrix::zeroed(d.len(), e.len());
+        for m in 0..e.len() {
+            a.set(m % 2, m, 8);
+        }
+        let sys = InferenceSystem::build(
+            &a,
+            &e,
+            std::sync::Arc::new(FakeExecutor::new(d)),
+            EngineOptions::default(),
+        )
+        .unwrap();
+        let r = closed_loop(&sys, 3, 4, 16, 42);
+        assert_eq!(r.requests, 12);
+        assert_eq!(r.images, 12 * 16);
+        assert_eq!(r.failed, 0);
+        assert!(r.throughput_img_s() > 0.0);
+        assert_eq!(r.latency.count(), 12);
+    }
+
+    #[test]
+    fn poisson_schedule_monotone_and_rate() {
+        let arr = poisson_arrivals(20_000, 50.0, 7);
+        assert!(arr.windows(2).all(|w| w[1] >= w[0]));
+        let mean_gap = arr.last().unwrap() / arr.len() as f64;
+        assert!((mean_gap - 0.02).abs() < 0.002, "gap={mean_gap}");
+    }
+}

@@ -1,0 +1,285 @@
+//! Integration tests of the inference system across modules: combination
+//! correctness with crafted executors, failure injection (the paper's
+//! {-1, None, None} path), segment partitioning under random sizes, and
+//! concurrent request handling.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+
+use ensemble_serve::alloc::matrix::AllocationMatrix;
+use ensemble_serve::device::DeviceSet;
+use ensemble_serve::engine::combine::{Average, MajorityVote};
+use ensemble_serve::engine::{EngineOptions, InferenceSystem};
+use ensemble_serve::exec::{Executor, ModelInstance};
+use ensemble_serve::model::zoo;
+use ensemble_serve::model::Ensemble;
+use ensemble_serve::util::quick::{check, Gen};
+
+/// Test executor whose model m predicts `base + m` for every class except
+/// class m, which gets the rest of the probability mass — deterministic,
+/// model-distinguishable outputs for combination checks.
+struct CraftedExecutor {
+    devices: DeviceSet,
+    loads: AtomicUsize,
+}
+
+struct CraftedInstance {
+    model_idx_hint: usize,
+    classes: usize,
+    elems: usize,
+}
+
+impl ModelInstance for CraftedInstance {
+    fn predict(&mut self, _input: &[f32], n_rows: usize) -> anyhow::Result<Vec<f32>> {
+        let c = self.classes;
+        let mut out = vec![0.0f32; n_rows * c];
+        for r in 0..n_rows {
+            // one-hot on the model's favourite class
+            out[r * c + (self.model_idx_hint % c)] = 1.0;
+        }
+        Ok(out)
+    }
+
+    fn classes(&self) -> usize {
+        self.classes
+    }
+
+    fn input_elems(&self) -> usize {
+        self.elems
+    }
+}
+
+impl Executor for CraftedExecutor {
+    fn load(&self, model: &ensemble_serve::model::ModelSpec, _d: usize, _b: usize)
+        -> anyhow::Result<Box<dyn ModelInstance>> {
+        self.loads.fetch_add(1, Ordering::SeqCst);
+        // model name suffix carries its index: "m<k>"
+        let idx: usize = model.name.trim_start_matches('m').parse().unwrap_or(0);
+        Ok(Box::new(CraftedInstance {
+            model_idx_hint: idx,
+            classes: model.classes,
+            elems: model.input_elems_per_image(),
+        }))
+    }
+
+    fn devices(&self) -> &DeviceSet {
+        &self.devices
+    }
+}
+
+fn crafted_ensemble(n: usize) -> Ensemble {
+    let members = (0..n)
+        .map(|i| {
+            let mut m = zoo::by_name("MobileNetV2").unwrap();
+            m.name = format!("m{i}");
+            m.classes = 8;
+            m
+        })
+        .collect();
+    Ensemble::custom("crafted", members)
+}
+
+fn diag_matrix(n_dev: usize, n_models: usize, batch: u32) -> AllocationMatrix {
+    let mut a = AllocationMatrix::zeroed(n_dev, n_models);
+    for m in 0..n_models {
+        a.set(m % n_dev.saturating_sub(1).max(1), m, batch);
+    }
+    a
+}
+
+#[test]
+fn average_of_one_hot_models_is_exact() {
+    let e = crafted_ensemble(4);
+    let d = DeviceSet::hgx(2);
+    let a = diag_matrix(d.len(), 4, 8);
+    let ex = Arc::new(CraftedExecutor { devices: d, loads: AtomicUsize::new(0) });
+    let sys = InferenceSystem::build(&a, &e, ex, EngineOptions::default()).unwrap();
+    let n = 19; // odd: exercises a partial tail batch
+    let elems = e.members[0].input_elems_per_image();
+    let y = sys.predict(vec![0.0; n * elems], n).unwrap();
+    let c = 8;
+    assert_eq!(y.len(), n * c);
+    // each of models 0..3 put mass 1 on class m -> average 0.25 each
+    for r in 0..n {
+        for cls in 0..c {
+            let want = if cls < 4 { 0.25 } else { 0.0 };
+            assert!((y[r * c + cls] - want).abs() < 1e-6, "row {r} class {cls}");
+        }
+    }
+}
+
+#[test]
+fn majority_vote_counts_heads() {
+    let e = crafted_ensemble(3);
+    let d = DeviceSet::hgx(2);
+    let a = diag_matrix(d.len(), 3, 8);
+    let ex = Arc::new(CraftedExecutor { devices: d, loads: AtomicUsize::new(0) });
+    let sys = InferenceSystem::build(
+        &a,
+        &e,
+        ex,
+        EngineOptions { combine: Arc::new(MajorityVote), ..EngineOptions::default() },
+    )
+    .unwrap();
+    let elems = e.members[0].input_elems_per_image();
+    let y = sys.predict(vec![0.0; 5 * elems], 5).unwrap();
+    let c = 8;
+    for r in 0..5 {
+        // models 0,1,2 vote for classes 0,1,2 -> 1/3 each
+        for cls in 0..3 {
+            assert!((y[r * c + cls] - 1.0 / 3.0).abs() < 1e-6);
+        }
+        assert_eq!(y[r * c + 3], 0.0);
+    }
+}
+
+#[test]
+fn data_parallel_workers_all_load() {
+    let e = crafted_ensemble(2);
+    let d = DeviceSet::hgx(3);
+    let mut a = AllocationMatrix::zeroed(d.len(), 2);
+    a.set(0, 0, 8);
+    a.set(1, 0, 16); // model 0 data-parallel
+    a.set(2, 1, 8);
+    let ex = Arc::new(CraftedExecutor { devices: d, loads: AtomicUsize::new(0) });
+    let loads_ref = Arc::clone(&ex);
+    let sys = InferenceSystem::build(&a, &e, ex, EngineOptions::default()).unwrap();
+    assert_eq!(sys.worker_count(), 3);
+    assert_eq!(loads_ref.loads.load(Ordering::SeqCst), 3);
+    let elems = e.members[0].input_elems_per_image();
+    // several segments so both data-parallel workers participate
+    let y = sys.predict(vec![0.0; 600 * elems], 600).unwrap();
+    assert_eq!(y.len(), 600 * 8);
+    // average of models 0 and 1: 0.5 on classes 0 and 1
+    assert!((y[0] - 0.5).abs() < 1e-6);
+    assert!((y[1] - 0.5).abs() < 1e-6);
+}
+
+/// Failure injection: an executor that fails loads on a given device.
+struct FailingExecutor {
+    devices: DeviceSet,
+    fail_device: usize,
+}
+
+impl Executor for FailingExecutor {
+    fn load(&self, model: &ensemble_serve::model::ModelSpec, d: usize, _b: usize)
+        -> anyhow::Result<Box<dyn ModelInstance>> {
+        if d == self.fail_device {
+            anyhow::bail!("OOM injected on device {d}");
+        }
+        Ok(Box::new(CraftedInstance {
+            model_idx_hint: 0,
+            classes: model.classes,
+            elems: model.input_elems_per_image(),
+        }))
+    }
+
+    fn devices(&self) -> &DeviceSet {
+        &self.devices
+    }
+}
+
+#[test]
+fn load_failure_tears_down_cleanly() {
+    let e = crafted_ensemble(3);
+    let d = DeviceSet::hgx(2);
+    let mut a = AllocationMatrix::zeroed(d.len(), 3);
+    a.set(0, 0, 8);
+    a.set(1, 1, 8);
+    a.set(2, 2, 8); // device 2 (CPU row) will fail
+    let ex = Arc::new(FailingExecutor { devices: d, fail_device: 2 });
+    let err = InferenceSystem::build(&a, &e, ex, EngineOptions::default());
+    assert!(err.is_err());
+    assert!(format!("{:#}", err.err().unwrap()).contains("OOM injected"));
+    // (teardown happens in drop; reaching here without hanging is the test)
+}
+
+#[test]
+fn segment_partition_property() {
+    // any (nb_images, segment size) pair must produce a complete, exact
+    // output through the full engine
+    check("engine partition", 12, |g: &mut Gen| {
+        let seg = [16, 32, 64, 128][g.usize_in(0, 3)];
+        let n = g.usize_in(1, 300);
+        let e = crafted_ensemble(2);
+        let d = DeviceSet::hgx(2);
+        let a = diag_matrix(d.len(), 2, 8);
+        let ex = Arc::new(CraftedExecutor {
+            devices: d,
+            loads: AtomicUsize::new(0),
+        });
+        let sys = InferenceSystem::build(
+            &a,
+            &e,
+            ex,
+            EngineOptions { segment_size: seg, ..EngineOptions::default() },
+        )
+        .unwrap();
+        let elems = e.members[0].input_elems_per_image();
+        let y = sys.predict(vec![0.0; n * elems], n).unwrap();
+        assert_eq!(y.len(), n * 8);
+        for r in 0..n {
+            assert!((y[r * 8] - 0.5).abs() < 1e-6, "row {r} seg {seg} n {n}");
+            assert!((y[r * 8 + 1] - 0.5).abs() < 1e-6);
+        }
+    });
+}
+
+#[test]
+fn interleaved_concurrent_requests_do_not_mix() {
+    let e = crafted_ensemble(2);
+    let d = DeviceSet::hgx(2);
+    let a = diag_matrix(d.len(), 2, 8);
+    let ex = Arc::new(CraftedExecutor { devices: d, loads: AtomicUsize::new(0) });
+    let sys = Arc::new(InferenceSystem::build(&a, &e, ex, EngineOptions::default()).unwrap());
+    let elems = e.members[0].input_elems_per_image();
+    std::thread::scope(|s| {
+        for t in 0..6 {
+            let sys = Arc::clone(&sys);
+            s.spawn(move || {
+                let n = 40 + t * 17;
+                let y = sys.predict(vec![0.0; n * elems], n).unwrap();
+                assert_eq!(y.len(), n * 8, "thread {t}");
+                for r in 0..n {
+                    assert!((y[r * 8] - 0.5).abs() < 1e-6, "thread {t} row {r}");
+                }
+            });
+        }
+    });
+    assert_eq!(
+        sys.metrics().requests_completed.load(Ordering::Relaxed),
+        6
+    );
+}
+
+#[test]
+fn cpu_spill_serves_small_members() {
+    // CIF-class skeleton members CAN fit the host CPU budget (zoo.rs);
+    // the engine must serve a matrix that spills one member to the CPU
+    // row, mirroring the paper's large-count ensembles.
+    use ensemble_serve::exec::sim::SimExecutor;
+    use ensemble_serve::model::zoo::{automl_skeletons, CIF_FAMILY};
+    let members = automl_skeletons("spill", 3, CIF_FAMILY, 7);
+    let e = Ensemble::custom("spill", members);
+    let d = DeviceSet::hgx(1); // GPU0 + CPU
+    let mut a = AllocationMatrix::zeroed(d.len(), 3);
+    a.set(0, 0, 8);
+    a.set(0, 1, 8);
+    a.set(1, 2, 8); // CPU row
+    // ensure the CPU member actually fits its budget; otherwise re-pick
+    assert!(
+        e.members[2].worker_mem_mb(8) <= d[1].mem_mb as f64,
+        "seed produced an oversized member: {}",
+        e.members[2].worker_mem_mb(8)
+    );
+    let sys = InferenceSystem::build(
+        &a,
+        &e,
+        SimExecutor::new(d, 20_000.0),
+        EngineOptions::default(),
+    )
+    .unwrap();
+    let elems = e.members[0].input_elems_per_image();
+    let y = sys.predict(vec![0.0; 50 * elems], 50).unwrap();
+    assert_eq!(y.len(), 50 * e.classes());
+}

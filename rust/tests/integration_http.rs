@@ -1,0 +1,144 @@
+//! Integration of the REST layer over a deployed (fake-backend) system.
+
+use std::sync::Arc;
+
+use ensemble_serve::alloc::matrix::AllocationMatrix;
+use ensemble_serve::device::DeviceSet;
+use ensemble_serve::engine::{EngineOptions, InferenceSystem};
+use ensemble_serve::exec::fake::FakeExecutor;
+use ensemble_serve::model::{ensemble, EnsembleId};
+use ensemble_serve::server::http::http_request;
+use ensemble_serve::server::ApiServer;
+use ensemble_serve::util::json::Json;
+
+fn deploy() -> ApiServer {
+    let e = ensemble(EnsembleId::Imn4);
+    let d = DeviceSet::hgx(2);
+    let mut a = AllocationMatrix::zeroed(d.len(), e.len());
+    for m in 0..e.len() {
+        a.set(m % 2, m, 8);
+    }
+    let sys = Arc::new(
+        InferenceSystem::build(&a, &e, Arc::new(FakeExecutor::new(d)),
+                               EngineOptions::default())
+            .unwrap(),
+    );
+    ApiServer::start(sys, "127.0.0.1:0", 4).unwrap()
+}
+
+#[test]
+fn full_api_surface() {
+    let api = deploy();
+    let addr = api.addr();
+
+    // health
+    let (code, body) = http_request(addr, "GET", "/v1/health", "", b"").unwrap();
+    assert_eq!(code, 200);
+    let j = Json::parse(std::str::from_utf8(&body).unwrap()).unwrap();
+    assert_eq!(j.get("ensemble").unwrap().as_str(), Some("IMN4"));
+
+    // matrix
+    let (code, body) = http_request(addr, "GET", "/v1/matrix", "", b"").unwrap();
+    assert_eq!(code, 200);
+    let j = Json::parse(std::str::from_utf8(&body).unwrap()).unwrap();
+    assert_eq!(j.get("models").unwrap().as_usize(), Some(4));
+
+    // predict (JSON)
+    let elems = api.system().ensemble().members[0].input_elems_per_image();
+    let row = format!("[{}]", vec!["0.1"; elems].join(","));
+    let body = format!("{{\"images\":[{row}]}}");
+    let (code, resp) =
+        http_request(addr, "POST", "/v1/predict", "application/json", body.as_bytes())
+            .unwrap();
+    assert_eq!(code, 200, "{}", String::from_utf8_lossy(&resp));
+
+    // stats reflect the work
+    let (code, body) = http_request(addr, "GET", "/v1/stats", "", b"").unwrap();
+    assert_eq!(code, 200);
+    let j = Json::parse(std::str::from_utf8(&body).unwrap()).unwrap();
+    assert_eq!(j.get("requests_completed").unwrap().as_usize(), Some(1));
+    assert!(j.get("latency_mean_ms").unwrap().as_f64().unwrap() >= 0.0);
+}
+
+#[test]
+fn concurrent_http_predictions() {
+    let api = deploy();
+    let addr = api.addr();
+    let elems = api.system().ensemble().members[0].input_elems_per_image();
+    std::thread::scope(|s| {
+        for i in 0..6 {
+            s.spawn(move || {
+                let n = 2 + i % 3;
+                let mut body = Vec::new();
+                for _ in 0..n * elems {
+                    body.extend_from_slice(&0.5f32.to_le_bytes());
+                }
+                // binary predict with the count header
+                use std::io::{Read, Write};
+                let mut stream = std::net::TcpStream::connect(addr).unwrap();
+                let head = format!(
+                    "POST /v1/predict HTTP/1.1\r\nhost: x\r\n\
+                     content-type: application/octet-stream\r\nx-num-images: {n}\r\n\
+                     content-length: {}\r\nconnection: close\r\n\r\n",
+                    body.len()
+                );
+                stream.write_all(head.as_bytes()).unwrap();
+                stream.write_all(&body).unwrap();
+                let mut resp = Vec::new();
+                stream.read_to_end(&mut resp).unwrap();
+                assert!(resp.starts_with(b"HTTP/1.1 200"), "client {i}");
+            });
+        }
+    });
+}
+
+#[test]
+fn malformed_requests_do_not_crash_server() {
+    let api = deploy();
+    let addr = api.addr();
+    for bad in [
+        &b"{oops"[..],
+        &b"{\"images\": 42}"[..],
+        &b"{\"images\": [[1,2],[1]]}"[..],
+        &b"{\"images\": []}"[..],
+    ] {
+        let (code, _) =
+            http_request(addr, "POST", "/v1/predict", "application/json", bad).unwrap();
+        assert_eq!(code, 400);
+    }
+    // server still healthy afterwards
+    let (code, _) = http_request(addr, "GET", "/v1/health", "", b"").unwrap();
+    assert_eq!(code, 200);
+}
+
+#[test]
+fn cached_api_serves_redundant_requests_fast() {
+    let e = ensemble(EnsembleId::Imn4);
+    let d = DeviceSet::hgx(2);
+    let mut a = AllocationMatrix::zeroed(d.len(), e.len());
+    for m in 0..e.len() {
+        a.set(m % 2, m, 8);
+    }
+    let sys = Arc::new(
+        InferenceSystem::build(&a, &e, Arc::new(FakeExecutor::new(d)),
+                               EngineOptions::default())
+            .unwrap(),
+    );
+    let api = ensemble_serve::server::ApiServer::start_cached(sys, "127.0.0.1:0", 2, 16)
+        .unwrap();
+    let elems = api.system().ensemble().members[0].input_elems_per_image();
+    let row = format!("[{}]", vec!["0.25"; elems].join(","));
+    let body = format!("{{\"images\":[{row}]}}");
+    // same request twice: second must be a cache hit
+    for _ in 0..2 {
+        let (code, _) = http_request(api.addr(), "POST", "/v1/predict",
+                                     "application/json", body.as_bytes()).unwrap();
+        assert_eq!(code, 200);
+    }
+    let (_, stats) = http_request(api.addr(), "GET", "/v1/stats", "", b"").unwrap();
+    let j = Json::parse(std::str::from_utf8(&stats).unwrap()).unwrap();
+    assert_eq!(j.get("cache_entries").unwrap().as_usize(), Some(1));
+    assert!(j.get("cache_hit_rate").unwrap().as_f64().unwrap() > 0.4);
+    // the engine only ever saw ONE request
+    assert_eq!(j.get("requests").unwrap().as_usize(), Some(1));
+}

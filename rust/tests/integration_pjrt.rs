@@ -1,0 +1,119 @@
+//! End-to-end numerics through the FULL engine on the real PJRT backend:
+//! the ensemble output must equal the average of the member models'
+//! individual outputs (verified against the python-produced goldens).
+//!
+//! Skipped when `make artifacts` has not been run.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use ensemble_serve::alloc::matrix::AllocationMatrix;
+use ensemble_serve::device::DeviceSet;
+use ensemble_serve::engine::{EngineOptions, InferenceSystem};
+use ensemble_serve::exec::pjrt::PjrtExecutor;
+use ensemble_serve::model::{zoo, Ensemble, Manifest};
+
+fn manifest() -> Option<Arc<Manifest>> {
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    dir.join("manifest.json")
+        .exists()
+        .then(|| Arc::new(Manifest::load(dir).unwrap()))
+}
+
+fn single_model_output(man: &Arc<Manifest>, name: &str, x: &[f32], n: usize) -> Vec<f32> {
+    let spec = zoo::imagenet_zoo()
+        .into_iter()
+        .find(|m| m.artifact.as_deref() == Some(name))
+        .unwrap();
+    let e = Ensemble::custom("single", vec![spec]);
+    let d = DeviceSet::hgx(1);
+    let mut a = AllocationMatrix::zeroed(d.len(), 1);
+    a.set(0, 0, 8);
+    let sys = InferenceSystem::build(
+        &a,
+        &e,
+        PjrtExecutor::new(d, Arc::clone(man)),
+        EngineOptions::default(),
+    )
+    .unwrap();
+    sys.predict(x.to_vec(), n).unwrap()
+}
+
+#[test]
+fn engine_single_model_matches_golden() {
+    let Some(man) = manifest() else {
+        eprintln!("skipped: run `make artifacts`");
+        return;
+    };
+    let mm = man.model("resnet34_t").unwrap().clone();
+    let gx = man.read_f32(&mm.golden_input).unwrap();
+    let want = man.read_f32(&mm.golden_output).unwrap();
+    let got = single_model_output(&man, "resnet34_t", &gx, man.golden_batch);
+    assert_eq!(got.len(), want.len());
+    for (i, (a, b)) in got.iter().zip(&want).enumerate() {
+        assert!((a - b).abs() < 1e-4, "idx {i}: {a} vs {b}");
+    }
+}
+
+#[test]
+fn engine_ensemble_average_equals_member_mean() {
+    let Some(man) = manifest() else { return };
+    // two members; feed resnet18's golden input to both
+    let mm = man.model("resnet18_t").unwrap().clone();
+    let gx = man.read_f32(&mm.golden_input).unwrap();
+    let n = man.golden_batch;
+
+    let y18 = single_model_output(&man, "resnet18_t", &gx, n);
+    let y34 = single_model_output(&man, "resnet34_t", &gx, n);
+
+    let members: Vec<_> = zoo::imagenet_zoo()
+        .into_iter()
+        .filter(|m| matches!(m.artifact.as_deref(), Some("resnet18_t" | "resnet34_t")))
+        .collect();
+    let e = Ensemble::custom("pair", members);
+    let d = DeviceSet::hgx(2);
+    let mut a = AllocationMatrix::zeroed(d.len(), 2);
+    a.set(0, 0, 8);
+    a.set(1, 1, 8);
+    let sys = InferenceSystem::build(
+        &a,
+        &e,
+        PjrtExecutor::new(d, Arc::clone(&man)),
+        EngineOptions::default(),
+    )
+    .unwrap();
+    let y = sys.predict(gx.clone(), n).unwrap();
+
+    assert_eq!(y.len(), y18.len());
+    for i in 0..y.len() {
+        let want = 0.5 * (y18[i] + y34[i]);
+        assert!((y[i] - want).abs() < 1e-5, "idx {i}: {} vs {want}", y[i]);
+    }
+}
+
+#[test]
+fn engine_rebatches_segments_to_worker_batch() {
+    // worker batch 8 with requests larger than one artifact batch: the
+    // batcher must split and the outputs must still match the goldens
+    let Some(man) = manifest() else { return };
+    let mm = man.model("mobilenetv2_t").unwrap().clone();
+    let gx = man.read_f32(&mm.golden_input).unwrap();
+    let want = man.read_f32(&mm.golden_output).unwrap();
+    let elems = mm.input_elems_per_image();
+    let n = man.golden_batch;
+
+    // duplicate the golden batch 3x -> 24 images through batch-8 workers
+    let mut x3 = Vec::with_capacity(3 * gx.len());
+    for _ in 0..3 {
+        x3.extend_from_slice(&gx);
+    }
+    let got = single_model_output(&man, "mobilenetv2_t", &x3, 3 * n);
+    assert_eq!(got.len(), 3 * want.len());
+    for rep in 0..3 {
+        for i in 0..want.len() {
+            let g = got[rep * want.len() + i];
+            assert!((g - want[i]).abs() < 1e-4, "rep {rep} idx {i}");
+        }
+    }
+    let _ = elems;
+}

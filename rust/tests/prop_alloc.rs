@@ -1,0 +1,189 @@
+//! Property-based tests of the allocation layer (util::quick mini
+//! framework): invariants of the matrix, Algorithm 1 packing, the
+//! neighborhood relation and Algorithm 2's never-worse guarantee under
+//! randomized inputs.
+
+use ensemble_serve::alloc::greedy::{bounded_greedy, GreedyConfig};
+use ensemble_serve::alloc::matrix::AllocationMatrix;
+use ensemble_serve::alloc::memory::fit_mem;
+use ensemble_serve::alloc::neighbors::{neighborhood, sample_neighborhood, total_neighs_upper};
+use ensemble_serve::alloc::worstfit::{pack, FitHeuristic};
+use ensemble_serve::alloc::BATCH_VALUES;
+use ensemble_serve::device::DeviceSet;
+use ensemble_serve::model::zoo::{automl_skeletons, SkeletonFamily, CIF_FAMILY};
+use ensemble_serve::model::Ensemble;
+use ensemble_serve::util::prng::Prng;
+use ensemble_serve::util::quick::{check, Gen};
+
+/// Random ensemble of CIFAR-class skeletons (small enough to pack).
+fn random_ensemble(g: &mut Gen) -> Ensemble {
+    let n = g.usize_in(1, 12);
+    let fam = SkeletonFamily { ..CIF_FAMILY };
+    Ensemble::custom("prop", automl_skeletons("p", n, fam, g.u64()))
+}
+
+/// A random valid matrix: every model placed at least once.
+fn random_valid_matrix(g: &mut Gen, n_dev: usize, n_models: usize) -> AllocationMatrix {
+    let mut a = AllocationMatrix::zeroed(n_dev, n_models);
+    for m in 0..n_models {
+        let d = g.usize_in(0, n_dev - 1);
+        a.set(d, m, *g.pick(&BATCH_VALUES));
+    }
+    // sprinkle extra workers
+    for _ in 0..g.usize_in(0, n_dev * n_models / 2) {
+        let d = g.usize_in(0, n_dev - 1);
+        let m = g.usize_in(0, n_models - 1);
+        a.set(d, m, *g.pick(&BATCH_VALUES));
+    }
+    a
+}
+
+#[test]
+fn wfd_output_is_valid_and_fits() {
+    check("wfd valid+fits", 60, |g| {
+        let e = random_ensemble(g);
+        let gpus = g.usize_in(1, 8);
+        let d = DeviceSet::hgx(gpus);
+        match pack(&e, &d, 8, FitHeuristic::WorstFit) {
+            Ok(a) => {
+                assert!(a.all_models_placed());
+                assert!(fit_mem(&a, &e, &d));
+                // Algorithm 1 places exactly one worker per model
+                assert_eq!(a.worker_count(), e.len());
+            }
+            Err(_) => {
+                // if worst-fit fails, the total footprint must genuinely
+                // exceed capacity under a one-worker-per-model packing on
+                // at least one bound: every device must be unable to hold
+                // the LARGEST unplaced model... weaker check: total need
+                // exceeds no single trivially-fitting arrangement exists
+                // (spot check: all models on the largest device fails)
+                let mut all_on_one = AllocationMatrix::zeroed(d.len(), e.len());
+                for m in 0..e.len() {
+                    all_on_one.set(0, m, 8);
+                }
+                assert!(!fit_mem(&all_on_one, &e, &d),
+                        "WFD failed but everything fits on GPU0");
+            }
+        }
+    });
+}
+
+#[test]
+fn all_heuristics_agree_on_feasibility_of_easy_cases() {
+    check("heuristics easy cases", 40, |g| {
+        let e = random_ensemble(g);
+        // plenty of devices: every heuristic must succeed
+        let d = DeviceSet::hgx(e.len().max(2) * 2);
+        for h in FitHeuristic::ALL {
+            let a = pack(&e, &d, 8, h)
+                .unwrap_or_else(|err| panic!("{} failed: {err}", h.name()));
+            assert!(fit_mem(&a, &e, &d), "{}", h.name());
+        }
+    });
+}
+
+#[test]
+fn neighbors_are_valid_distance_one_and_unique() {
+    check("neighborhood", 50, |g| {
+        let n_dev = g.usize_in(2, 5);
+        let n_models = g.usize_in(1, 4);
+        let a = random_valid_matrix(g, n_dev, n_models);
+        let ns = neighborhood(&a, &BATCH_VALUES);
+        let upper = total_neighs_upper(n_dev, n_models, BATCH_VALUES.len());
+        assert!(ns.len() < upper, "{} !< {upper}", ns.len());
+        let mut keys = Vec::new();
+        for n in &ns {
+            assert_eq!(a.hamming_distance(n), 1);
+            assert!(n.all_models_placed());
+            keys.push(n.cache_key());
+        }
+        keys.sort();
+        keys.dedup();
+        assert_eq!(keys.len(), ns.len(), "duplicates in neighborhood");
+    });
+}
+
+#[test]
+fn sampled_neighborhood_is_subset_without_replacement() {
+    check("neighbor sampling", 40, |g| {
+        let a = random_valid_matrix(g, 3, 3);
+        let all = neighborhood(&a, &BATCH_VALUES);
+        let k = g.usize_in(1, all.len());
+        let mut rng = Prng::new(g.u64());
+        let s = sample_neighborhood(&a, &BATCH_VALUES, k, &mut rng);
+        assert_eq!(s.len(), k.min(all.len()));
+        let mut keys: Vec<String> = s.iter().map(|m| m.cache_key()).collect();
+        keys.sort();
+        keys.dedup();
+        assert_eq!(keys.len(), s.len(), "sampled with replacement");
+        for m in &s {
+            assert!(all.contains(m));
+        }
+    });
+}
+
+#[test]
+fn greedy_never_worse_and_always_valid() {
+    check("greedy never-worse", 30, |g| {
+        let n_dev = g.usize_in(2, 4);
+        let n_models = g.usize_in(1, 3);
+        let start = random_valid_matrix(g, n_dev, n_models);
+        // random deterministic objective keyed by content hash
+        let salt = g.u64();
+        let objective = |a: &AllocationMatrix| {
+            let mut h = salt;
+            for p in a.placements() {
+                h = h
+                    .wrapping_mul(0x100000001B3)
+                    .wrapping_add((p.device * 31 + p.model * 7 + p.batch as usize) as u64);
+            }
+            (h % 10_000) as f64
+        };
+        let cfg = GreedyConfig {
+            max_iter: 4,
+            max_neighs: 12,
+            seed: g.u64(),
+            ..Default::default()
+        };
+        let rep = bounded_greedy(&start, &cfg, objective);
+        assert!(rep.best_speed >= rep.start_speed, "worse than start");
+        assert!(rep.best.all_models_placed());
+        // the trace is monotonically increasing
+        for w in rep.trace.windows(2) {
+            assert!(w[1].1 >= w[0].1, "trace decreased");
+        }
+        assert_eq!(rep.best_speed, objective(&rep.best), "speed matches matrix");
+    });
+}
+
+#[test]
+fn matrix_json_roundtrip_random() {
+    check("matrix json roundtrip", 60, |g| {
+        let nd = g.usize_in(1, 6);
+        let nm = g.usize_in(1, 6);
+        let a = random_valid_matrix(g, nd, nm);
+        let b = AllocationMatrix::from_json(&a.to_json()).unwrap();
+        assert_eq!(a, b);
+        assert_eq!(a.cache_key(), b.cache_key());
+    });
+}
+
+#[test]
+fn placements_reconstruct_matrix() {
+    check("placements roundtrip", 50, |g| {
+        let nd = g.usize_in(1, 5);
+        let nm = g.usize_in(1, 5);
+        let a = random_valid_matrix(g, nd, nm);
+        let mut b = AllocationMatrix::zeroed(a.n_devices(), a.n_models());
+        for p in a.placements() {
+            b.set(p.device, p.model, p.batch);
+        }
+        assert_eq!(a, b);
+        // column/row views are consistent with placements
+        let total: usize = (0..a.n_models()).map(|m| a.model_workers(m).len()).sum();
+        assert_eq!(total, a.worker_count());
+        let total: usize = (0..a.n_devices()).map(|d| a.device_workers(d).len()).sum();
+        assert_eq!(total, a.worker_count());
+    });
+}
