@@ -10,7 +10,7 @@
 //! bench: the paper argues Worst-Fit balances load across homogeneous
 //! devices while the others pile models onto the first bins.
 
-use thiserror::Error;
+use std::fmt;
 
 use crate::alloc::matrix::AllocationMatrix;
 use crate::alloc::memory::device_remaining_mb;
@@ -18,13 +18,24 @@ use crate::device::{DeviceKind, DeviceSet};
 use crate::model::Ensemble;
 
 /// Placement failure: no device can take the model.
-#[derive(Debug, Error)]
-#[error("no device has enough memory for model '{model}' ({mem_mb:.0} MB needed at batch {batch})")]
+#[derive(Debug)]
 pub struct OutOfMemory {
     pub model: String,
     pub mem_mb: f64,
     pub batch: u32,
 }
+
+impl fmt::Display for OutOfMemory {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "no device has enough memory for model '{}' ({:.0} MB needed at batch {})",
+            self.model, self.mem_mb, self.batch
+        )
+    }
+}
+
+impl std::error::Error for OutOfMemory {}
 
 /// Bin-selection heuristic for the packing ablation.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]

@@ -51,6 +51,10 @@ pub struct ServerConfig {
     pub greedy: GreedyConfig,
     pub default_batch: u32,
     pub calib_images: usize,
+    /// serve: run the autoscaling controller (live reconfiguration).
+    pub reconfig: bool,
+    /// Controller p99 latency objective, ms.
+    pub p99_slo_ms: f64,
 }
 
 impl Default for ServerConfig {
@@ -66,6 +70,8 @@ impl Default for ServerConfig {
             greedy: GreedyConfig::default(),
             default_batch: crate::alloc::DEFAULT_BATCH,
             calib_images: 1024,
+            reconfig: false,
+            p99_slo_ms: 500.0,
         }
     }
 }
@@ -118,6 +124,13 @@ impl ServerConfig {
         if let Some(v) = doc.get("calib_images").and_then(Json::as_usize) {
             cfg.calib_images = v;
         }
+        if let Some(v) = doc.get("reconfig").and_then(Json::as_bool) {
+            cfg.reconfig = v;
+        }
+        if let Some(v) = doc.get("p99_slo_ms").and_then(Json::as_f64) {
+            anyhow::ensure!(v > 0.0, "p99_slo_ms must be positive");
+            cfg.p99_slo_ms = v;
+        }
         Ok(cfg)
     }
 
@@ -158,7 +171,8 @@ mod tests {
         let doc = Json::parse(
             r#"{"ensemble":"IMN12","gpus":16,"backend":"fake","segment_size":64,
                 "max_iter":5,"max_neighs":40,"batch_values":[8,16],"seed":7,
-                "default_batch":16,"calib_images":256,"listen":"0.0.0.0:9000"}"#,
+                "default_batch":16,"calib_images":256,"listen":"0.0.0.0:9000",
+                "reconfig":true,"p99_slo_ms":120.5}"#,
         )
         .unwrap();
         let cfg = ServerConfig::from_json(&doc).unwrap();
@@ -174,6 +188,8 @@ mod tests {
         assert_eq!(cfg.calib_images, 256);
         assert_eq!(cfg.listen, "0.0.0.0:9000");
         assert_eq!(cfg.devices().len(), 17);
+        assert!(cfg.reconfig);
+        assert_eq!(cfg.p99_slo_ms, 120.5);
     }
 
     #[test]
@@ -184,6 +200,7 @@ mod tests {
             r#"{"time_scale":0}"#,
             r#"{"segment_size":0}"#,
             r#"{"batch_values":[]}"#,
+            r#"{"p99_slo_ms":0}"#,
         ] {
             let doc = Json::parse(bad).unwrap();
             assert!(ServerConfig::from_json(&doc).is_err(), "{bad}");

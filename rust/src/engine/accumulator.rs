@@ -133,6 +133,24 @@ pub fn spawn(
                         // probes infeasible matrices on purpose
                         log::warn!("worker {worker} failed: {error}");
                         startup.mark_error(format!("worker {worker}: {error}"));
+                        // The pool is going down: no registration can
+                        // complete anymore. Closing `reg` fails future
+                        // predict() sends fast; draining pending AND the
+                        // already-queued registrations (which may have
+                        // raced the error past predict's startup check)
+                        // closes their done channels, turning blocked
+                        // recv()s into "prediction aborted" instead of a
+                        // permanent hang that would also pin the
+                        // generation's in-flight count forever.
+                        reg.close();
+                        for (req, p) in pending.drain() {
+                            store.remove(req);
+                            drop(p.done);
+                        }
+                        while let Some(r) = reg.try_recv() {
+                            store.remove(r.req);
+                            drop(r.done);
+                        }
                     }
                     AccMsg::Pred(p) => {
                         let Some(entry) = pending.get_mut(&p.req) else {
@@ -222,6 +240,24 @@ mod tests {
         // a waiter for more workers now sees the error
         assert!(st.wait_ready(3).is_err());
         assert!(st.error().unwrap().contains("OOM"));
+        acc.close();
+        h.join().unwrap();
+    }
+
+    #[test]
+    fn worker_error_aborts_pending_requests() {
+        let (reg, acc, store, st, h) = setup(1, 128);
+        let req = store.insert(vec![0.0; 4], 1, 4);
+        let (tx, rx) = sync_channel(1);
+        reg.send(Registration { req, nb_images: 1, classes: 2, expected_msgs: 1, done: tx })
+            .unwrap();
+        // fold in the registration, then kill the worker pool
+        acc.send(AccMsg::WorkerReady { worker: 0 }).unwrap();
+        acc.send(AccMsg::WorkerError { worker: 0, error: "device fault".into() }).unwrap();
+        // the caller is unblocked with a closed channel, not hung
+        assert!(rx.recv().is_err());
+        assert!(store.get(req).is_none(), "aborted request's input freed");
+        assert!(st.error().unwrap().contains("device fault"));
         acc.close();
         h.join().unwrap();
     }

@@ -1,0 +1,333 @@
+//! One worker-pool *generation*: the deployable unit behind
+//! [`super::system::InferenceSystem`].
+//!
+//! A generation owns everything an allocation matrix instantiates — the
+//! worker pool, the segment-ids broadcaster, the prediction accumulator
+//! and the FIFOs wiring them — plus an in-flight request counter. The
+//! inference system routes `predict` calls to its *active* generation;
+//! live reconfiguration (see [`crate::reconfig`]) builds the next
+//! generation in the background, atomically swaps it in, drains this one
+//! and tears it down. Keeping the whole pipeline per-generation is what
+//! makes the swap safe: an old request keeps its own broadcaster,
+//! workers and accumulator until the answer is delivered, so requests
+//! are never dropped or answered twice.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::sync_channel;
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use anyhow::{bail, Context};
+
+use crate::alloc::matrix::AllocationMatrix;
+use crate::engine::accumulator::{self, Registration, StartupState};
+use crate::engine::messages::{AccMsg, WorkerMsg};
+use crate::engine::queue::Fifo;
+use crate::engine::segments;
+use crate::engine::store::SharedStore;
+use crate::engine::system::EngineOptions;
+use crate::engine::worker::{self, WorkerHandle, WorkerSpec};
+use crate::exec::Executor;
+use crate::metrics::EngineMetrics;
+use crate::model::Ensemble;
+
+struct BroadcastJob {
+    req: u64,
+    nb_images: usize,
+}
+
+/// A fully wired worker pool serving one allocation matrix.
+pub struct Generation {
+    id: u64,
+    matrix: AllocationMatrix,
+    ensemble: Ensemble,
+    segment_size: usize,
+    store: Arc<SharedStore>,
+    startup: Arc<StartupState>,
+    // channels
+    broadcast: Fifo<BroadcastJob>,
+    reg: Fifo<Registration>,
+    model_inputs: Vec<Fifo<WorkerMsg>>,
+    acc_q: Fifo<AccMsg>,
+    // threads (Mutex-held so `teardown` works through `&self`: dead-
+    // generation recovery frees the pool's devices while the generation
+    // is still routed — see `InferenceSystem::reconfigure`)
+    workers: Mutex<Vec<WorkerHandle>>,
+    broadcaster: Mutex<Option<JoinHandle<()>>>,
+    accumulator: Mutex<Option<JoinHandle<()>>>,
+    /// `predict` calls currently inside this generation.
+    in_flight: AtomicU64,
+    metrics: Arc<EngineMetrics>,
+}
+
+/// Decrements the generation's in-flight counter on scope exit, success
+/// or error.
+struct InFlightGuard<'a>(&'a AtomicU64);
+
+impl Drop for InFlightGuard<'_> {
+    fn drop(&mut self) {
+        self.0.fetch_sub(1, Ordering::AcqRel);
+    }
+}
+
+impl Generation {
+    /// Instantiate the worker pool for `matrix` and wait until every
+    /// worker reported ready. A worker load failure (the paper's
+    /// `{-1, None, None}`) tears the pool down and returns the error.
+    pub fn build(
+        id: u64,
+        matrix: &AllocationMatrix,
+        ensemble: &Ensemble,
+        executor: Arc<dyn Executor>,
+        opts: &EngineOptions,
+        metrics: Arc<EngineMetrics>,
+    ) -> anyhow::Result<Generation> {
+        if !matrix.all_models_placed() {
+            bail!("invalid allocation matrix: models {:?} have no worker",
+                  matrix.unplaced_models());
+        }
+        if matrix.n_models() != ensemble.len() {
+            bail!("matrix has {} model columns, ensemble {}", matrix.n_models(), ensemble.len());
+        }
+        if matrix.n_devices() != executor.devices().len() {
+            bail!("matrix has {} device rows, executor {}", matrix.n_devices(),
+                  executor.devices().len());
+        }
+
+        let store = SharedStore::new();
+        let startup = StartupState::new();
+
+        let model_inputs: Vec<Fifo<WorkerMsg>> =
+            (0..ensemble.len()).map(|_| Fifo::unbounded()).collect();
+        let acc_q: Fifo<AccMsg> = Fifo::unbounded();
+        let reg: Fifo<Registration> = Fifo::unbounded();
+
+        // accumulator
+        let accumulator = accumulator::spawn(
+            reg.clone(),
+            acc_q.clone(),
+            Arc::clone(&opts.combine),
+            ensemble.len(),
+            opts.segment_size,
+            Arc::clone(&store),
+            Arc::clone(&startup),
+            Arc::clone(&metrics),
+        );
+
+        // worker pool
+        let placements = matrix.placements();
+        let mut workers = Vec::with_capacity(placements.len());
+        for (wid, p) in placements.iter().enumerate() {
+            let spec = WorkerSpec {
+                id: wid,
+                device: p.device,
+                model_idx: p.model,
+                model: ensemble.members[p.model].clone(),
+                batch: p.batch as usize,
+                segment_size: opts.segment_size,
+            };
+            workers.push(worker::spawn(
+                spec,
+                Arc::clone(&executor),
+                model_inputs[p.model].clone(),
+                Arc::clone(&store),
+                acc_q.clone(),
+                opts.stage_capacity,
+                Arc::clone(&metrics),
+            ));
+        }
+
+        // broadcaster
+        let broadcast: Fifo<BroadcastJob> = Fifo::unbounded();
+        let broadcaster = {
+            let broadcast = broadcast.clone();
+            let inputs = model_inputs.clone();
+            let seg = opts.segment_size;
+            let metrics = Arc::clone(&metrics);
+            std::thread::Builder::new()
+                .name(format!("broadcaster-g{id}"))
+                .spawn(move || {
+                    while let Some(job) = broadcast.recv() {
+                        let k = segments::segment_count(job.nb_images, seg);
+                        for q in &inputs {
+                            // one lock + wakeup per model queue (§Perf)
+                            let batch = (0..k)
+                                .map(|s| WorkerMsg::Segment { req: job.req, seg: s });
+                            if q.send_all(batch).is_err() {
+                                return;
+                            }
+                        }
+                        metrics
+                            .segments_broadcast
+                            .fetch_add((k * inputs.len()) as u64, Ordering::Relaxed);
+                    }
+                })
+                .expect("spawn broadcaster")
+        };
+
+        let n = workers.len();
+        let generation = Generation {
+            id,
+            matrix: matrix.clone(),
+            ensemble: ensemble.clone(),
+            segment_size: opts.segment_size,
+            store,
+            startup: Arc::clone(&startup),
+            broadcast,
+            reg,
+            model_inputs,
+            acc_q,
+            workers: Mutex::new(workers),
+            broadcaster: Mutex::new(Some(broadcaster)),
+            accumulator: Mutex::new(Some(accumulator)),
+            in_flight: AtomicU64::new(0),
+            metrics,
+        };
+
+        // wait for the full worker pool to be ready (paper: all workers
+        // sent {-2, None, None})
+        let deadline = std::time::Instant::now() + opts.startup_timeout;
+        loop {
+            match generation.startup_poll(n) {
+                Some(Ok(())) => break,
+                Some(Err(e)) => {
+                    let err = anyhow::anyhow!("worker startup failed: {e}");
+                    drop(generation); // full teardown
+                    return Err(err);
+                }
+                None => {
+                    if std::time::Instant::now() > deadline {
+                        drop(generation);
+                        bail!("startup timed out");
+                    }
+                    std::thread::sleep(Duration::from_millis(1));
+                }
+            }
+        }
+        Ok(generation)
+    }
+
+    fn startup_poll(&self, n: usize) -> Option<Result<(), String>> {
+        if let Some(e) = self.startup.error() {
+            return Some(Err(e));
+        }
+        if self.startup.ready_count() >= n {
+            return Some(Ok(()));
+        }
+        None
+    }
+
+    /// The ensemble prediction through this generation's pool: blocks
+    /// until every model predicted every image and the combination rule
+    /// folded them.
+    pub fn predict(&self, x: Vec<f32>, nb_images: usize) -> anyhow::Result<Vec<f32>> {
+        let classes = self.ensemble.classes();
+        if nb_images == 0 {
+            return Ok(Vec::new());
+        }
+        if x.len() % nb_images != 0 {
+            bail!("input length {} not divisible by {nb_images} images", x.len());
+        }
+        if let Some(e) = self.startup.error() {
+            bail!("inference system is down: {e}");
+        }
+        self.in_flight.fetch_add(1, Ordering::AcqRel);
+        let _guard = InFlightGuard(&self.in_flight);
+
+        let elems = x.len() / nb_images;
+        self.metrics.requests.fetch_add(1, Ordering::Relaxed);
+        self.metrics.images_in.fetch_add(nb_images as u64, Ordering::Relaxed);
+
+        let req = self.store.insert(x, nb_images, elems);
+        let k = segments::segment_count(nb_images, self.segment_size);
+        let (tx, rx) = sync_channel(1);
+        let registration = Registration {
+            req,
+            nb_images,
+            classes,
+            expected_msgs: k * self.ensemble.len(),
+            done: tx,
+        };
+        if self.reg.send(registration).is_err() {
+            // nobody else knows this request yet: free its input buffer
+            self.store.remove(req);
+            bail!("system shutting down (registration queue closed)");
+        }
+        // past this point the accumulator owns the entry: if the
+        // broadcast queue is closed (pool death), the WorkerError drain
+        // or teardown removes it and closes `done`
+        self.broadcast
+            .send(BroadcastJob { req, nb_images })
+            .ok()
+            .context("system shutting down (broadcast queue closed)")?;
+
+        rx.recv().map_err(|_| {
+            let detail = self
+                .startup
+                .error()
+                .unwrap_or_else(|| "accumulator stopped".to_string());
+            anyhow::anyhow!("prediction aborted: {detail}")
+        })
+    }
+
+    pub fn id(&self) -> u64 {
+        self.id
+    }
+
+    pub fn matrix(&self) -> &AllocationMatrix {
+        &self.matrix
+    }
+
+    pub fn worker_count(&self) -> usize {
+        self.workers.lock().unwrap().len()
+    }
+
+    /// `predict` calls currently routed through this generation.
+    pub fn in_flight(&self) -> u64 {
+        self.in_flight.load(Ordering::Acquire)
+    }
+
+    /// First worker error seen, if any.
+    pub fn startup_error(&self) -> Option<String> {
+        self.startup.error()
+    }
+}
+
+impl Generation {
+    /// Stop and join the whole pool, releasing every model instance
+    /// (and so the pool's device memory). Idempotent and callable while
+    /// the generation is still routed: a predict racing a teardown
+    /// observes closed queues and errors out cleanly. Used by dead-
+    /// generation recovery to free the devices *before* the replacement
+    /// is built; also the Drop path.
+    pub fn teardown(&self) {
+        // shutdown order per the paper: stop broadcasting, let workers
+        // drain (s = -1 semantics = closed queues), then the accumulator.
+        self.broadcast.close();
+        let broadcaster = self.broadcaster.lock().unwrap().take();
+        if let Some(b) = broadcaster {
+            let _ = b.join();
+        }
+        for q in &self.model_inputs {
+            q.close();
+        }
+        let workers: Vec<WorkerHandle> =
+            self.workers.lock().unwrap().drain(..).collect();
+        for w in workers {
+            w.join();
+        }
+        self.acc_q.close();
+        self.reg.close();
+        let accumulator = self.accumulator.lock().unwrap().take();
+        if let Some(a) = accumulator {
+            let _ = a.join();
+        }
+    }
+}
+
+impl Drop for Generation {
+    fn drop(&mut self) {
+        self.teardown();
+    }
+}

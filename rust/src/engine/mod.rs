@@ -33,7 +33,9 @@ pub mod store;
 pub mod combine;
 pub mod worker;
 pub mod accumulator;
+pub mod generation;
 pub mod system;
 
 pub use combine::CombineRule;
-pub use system::{EngineOptions, InferenceSystem};
+pub use generation::Generation;
+pub use system::{EngineOptions, InferenceSystem, SwapReport};

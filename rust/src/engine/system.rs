@@ -1,27 +1,34 @@
-//! The inference system: `f(X, A) -> {Y, S}` (§II.C).
+//! The inference system: `f(X, A) -> {Y, S}` (§II.C), made *generational*
+//! for live reconfiguration.
 //!
-//! [`InferenceSystem::build`] instantiates the worker pool described by an
-//! allocation matrix, waits for every worker's ready message and serves
+//! [`InferenceSystem::build`] instantiates generation 1 of the worker
+//! pool described by an allocation matrix and serves
 //! [`InferenceSystem::predict`] calls until dropped. "Benchmark Mode"
 //! (measuring S on calibration data) lives in `benchkit::bench` on top of
 //! the same engine.
+//!
+//! [`InferenceSystem::reconfigure`] hot-swaps the ensemble onto a new
+//! allocation matrix without dropping or double-answering a request:
+//!
+//! 1. **build** — the new generation's workers are spawned and waited
+//!    ready in the background while the old generation keeps serving;
+//!    a build failure (e.g. OOM) leaves the old generation untouched;
+//! 2. **switch** — the active-generation pointer is swapped atomically:
+//!    every `predict` call entering after the swap routes to the new
+//!    pool;
+//! 3. **drain** — calls that entered before the swap still hold the old
+//!    generation (its own broadcaster/workers/accumulator), which is
+//!    only torn down once its in-flight count reaches zero.
 
-use std::sync::atomic::Ordering;
-use std::sync::mpsc::sync_channel;
-use std::sync::Arc;
-use std::thread::JoinHandle;
-use std::time::Duration;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, RwLock};
+use std::time::{Duration, Instant};
 
-use anyhow::{bail, Context};
+use anyhow::bail;
 
 use crate::alloc::matrix::AllocationMatrix;
-use crate::engine::accumulator::{self, Registration, StartupState};
 use crate::engine::combine::{Average, CombineRule};
-use crate::engine::messages::{AccMsg, WorkerMsg};
-use crate::engine::queue::Fifo;
-use crate::engine::segments;
-use crate::engine::store::SharedStore;
-use crate::engine::worker::{self, WorkerHandle, WorkerSpec};
+use crate::engine::generation::Generation;
 use crate::exec::Executor;
 use crate::metrics::EngineMetrics;
 use crate::model::Ensemble;
@@ -36,6 +43,13 @@ pub struct EngineOptions {
     pub stage_capacity: usize,
     /// Startup timeout waiting for worker ready messages.
     pub startup_timeout: Duration,
+    /// Synchronous grace for the old generation's in-flight requests
+    /// after a live swap. Deliberately short: `reconfigure` holds the
+    /// reconfig lock while draining, so a long wait would freeze the
+    /// whole control plane behind one slow request — stragglers are
+    /// instead parked in the lingering list and reclaimed by a later
+    /// sweep once they finish.
+    pub drain_timeout: Duration,
     /// Combination rule (paper default: averaging).
     pub combine: Arc<dyn CombineRule>,
 }
@@ -46,229 +60,258 @@ impl Default for EngineOptions {
             segment_size: 128,
             stage_capacity: 4,
             startup_timeout: Duration::from_secs(120),
+            drain_timeout: Duration::from_secs(5),
             combine: Arc::new(Average),
         }
     }
 }
 
-struct BroadcastJob {
-    req: u64,
-    nb_images: usize,
+/// Outcome of one live reconfiguration.
+#[derive(Debug, Clone)]
+pub struct SwapReport {
+    pub from_generation: u64,
+    pub to_generation: u64,
+    /// Requests still inside the old generation at the switch instant.
+    pub in_flight_at_swap: u64,
+    /// Wall time to build + ready the new generation.
+    pub build: Duration,
+    /// Wall time draining the old generation.
+    pub drain: Duration,
+    /// False when `drain_timeout` elapsed first; the old pool is then
+    /// parked in the system's lingering list — still pinning its device
+    /// memory — until a sweep (controller tick, a later `reconfigure`,
+    /// or system drop) finds its last caller gone and tears it down.
+    pub drain_complete: bool,
 }
 
-/// A deployed ensemble: worker pool + broadcaster + accumulator.
+/// A deployed ensemble: a chain of worker-pool generations, exactly one
+/// active at any instant.
 pub struct InferenceSystem {
     ensemble: Ensemble,
-    matrix: AllocationMatrix,
     opts: EngineOptions,
-    store: Arc<SharedStore>,
+    executor: Arc<dyn Executor>,
     metrics: Arc<EngineMetrics>,
-    startup: Arc<StartupState>,
-    // channels
-    broadcast: Fifo<BroadcastJob>,
-    reg: Fifo<Registration>,
-    model_inputs: Vec<Fifo<WorkerMsg>>,
-    acc_q: Fifo<AccMsg>,
-    // threads
-    workers: Vec<WorkerHandle>,
-    broadcaster: Option<JoinHandle<()>>,
-    accumulator: Option<JoinHandle<()>>,
+    active: RwLock<Arc<Generation>>,
+    /// Old generations whose drain timed out: still holding device
+    /// memory until their last in-flight caller finishes. Swept on each
+    /// `reconfigure`/`resident_matrices` call.
+    lingering: Mutex<Vec<Arc<Generation>>>,
+    /// Next generation id, committed only by a successful swap — so
+    /// `swap_count` is derived as `next_generation - 2` (ids start at 2
+    /// for the first swap) instead of being tracked separately.
+    next_generation: AtomicU64,
+    /// Serializes concurrent `reconfigure` calls.
+    reconfig_lock: Mutex<()>,
 }
 
 impl InferenceSystem {
-    /// Instantiate the worker pool for `matrix` and wait until every
-    /// worker reported ready. A worker load failure (the paper's
-    /// `{-1, None, None}`) tears the system down and returns the error.
+    /// Instantiate the worker pool for `matrix` (generation 1) and wait
+    /// until every worker reported ready. A worker load failure (the
+    /// paper's `{-1, None, None}`) tears the system down and returns the
+    /// error.
     pub fn build(
         matrix: &AllocationMatrix,
         ensemble: &Ensemble,
         executor: Arc<dyn Executor>,
         opts: EngineOptions,
     ) -> anyhow::Result<InferenceSystem> {
-        if !matrix.all_models_placed() {
-            bail!("invalid allocation matrix: models {:?} have no worker",
-                  matrix.unplaced_models());
-        }
-        if matrix.n_models() != ensemble.len() {
-            bail!("matrix has {} model columns, ensemble {}", matrix.n_models(), ensemble.len());
-        }
-        if matrix.n_devices() != executor.devices().len() {
-            bail!("matrix has {} device rows, executor {}", matrix.n_devices(),
-                  executor.devices().len());
-        }
-
-        let store = SharedStore::new();
-        let metrics = Arc::new(EngineMetrics::default());
-        let startup = StartupState::new();
-
-        let model_inputs: Vec<Fifo<WorkerMsg>> =
-            (0..ensemble.len()).map(|_| Fifo::unbounded()).collect();
-        let acc_q: Fifo<AccMsg> = Fifo::unbounded();
-        let reg: Fifo<Registration> = Fifo::unbounded();
-
-        // accumulator
-        let accumulator = accumulator::spawn(
-            reg.clone(),
-            acc_q.clone(),
-            Arc::clone(&opts.combine),
-            ensemble.len(),
-            opts.segment_size,
-            Arc::clone(&store),
-            Arc::clone(&startup),
+        let metrics = Arc::new(EngineMetrics::with_devices(executor.devices().len()));
+        let generation = Generation::build(
+            1,
+            matrix,
+            ensemble,
+            Arc::clone(&executor),
+            &opts,
             Arc::clone(&metrics),
-        );
-
-        // worker pool
-        let placements = matrix.placements();
-        let mut workers = Vec::with_capacity(placements.len());
-        for (id, p) in placements.iter().enumerate() {
-            let spec = WorkerSpec {
-                id,
-                device: p.device,
-                model_idx: p.model,
-                model: ensemble.members[p.model].clone(),
-                batch: p.batch as usize,
-                segment_size: opts.segment_size,
-            };
-            workers.push(worker::spawn(
-                spec,
-                Arc::clone(&executor),
-                model_inputs[p.model].clone(),
-                Arc::clone(&store),
-                acc_q.clone(),
-                opts.stage_capacity,
-                Arc::clone(&metrics),
-            ));
-        }
-
-        // broadcaster
-        let broadcast: Fifo<BroadcastJob> = Fifo::unbounded();
-        let broadcaster = {
-            let broadcast = broadcast.clone();
-            let inputs = model_inputs.clone();
-            let seg = opts.segment_size;
-            let metrics = Arc::clone(&metrics);
-            std::thread::Builder::new()
-                .name("broadcaster".into())
-                .spawn(move || {
-                    while let Some(job) = broadcast.recv() {
-                        let k = segments::segment_count(job.nb_images, seg);
-                        for q in &inputs {
-                            // one lock + wakeup per model queue (§Perf)
-                            let batch = (0..k)
-                                .map(|s| WorkerMsg::Segment { req: job.req, seg: s });
-                            if q.send_all(batch).is_err() {
-                                return;
-                            }
-                        }
-                        metrics
-                            .segments_broadcast
-                            .fetch_add((k * inputs.len()) as u64, Ordering::Relaxed);
-                    }
-                })
-                .expect("spawn broadcaster")
-        };
-
-        let system = InferenceSystem {
+        )?;
+        metrics.generation.store(1, Ordering::Relaxed);
+        Ok(InferenceSystem {
             ensemble: ensemble.clone(),
-            matrix: matrix.clone(),
             opts,
-            store,
+            executor,
             metrics,
-            startup: Arc::clone(&startup),
-            broadcast,
-            reg,
-            model_inputs,
-            acc_q,
-            workers,
-            broadcaster: Some(broadcaster),
-            accumulator: Some(accumulator),
-        };
-
-        // wait for the full worker pool to be ready (paper: all workers
-        // sent {-2, None, None})
-        let deadline = std::time::Instant::now() + system.opts.startup_timeout;
-        let n = system.workers.len();
-        loop {
-            match system.startup_poll(n) {
-                Some(Ok(())) => break,
-                Some(Err(e)) => {
-                    let err = anyhow::anyhow!("worker startup failed: {e}");
-                    drop(system); // full teardown
-                    return Err(err);
-                }
-                None => {
-                    if std::time::Instant::now() > deadline {
-                        drop(system);
-                        bail!("startup timed out");
-                    }
-                    std::thread::sleep(Duration::from_millis(1));
-                }
-            }
-        }
-        Ok(system)
-    }
-
-    fn startup_poll(&self, n: usize) -> Option<Result<(), String>> {
-        if let Some(e) = self.startup.error() {
-            return Some(Err(e));
-        }
-        if self.startup.ready_count() >= n {
-            return Some(Ok(()));
-        }
-        None
+            active: RwLock::new(Arc::new(generation)),
+            lingering: Mutex::new(Vec::new()),
+            next_generation: AtomicU64::new(2),
+            reconfig_lock: Mutex::new(()),
+        })
     }
 
     /// The ensemble prediction: blocks until every model predicted every
     /// image and the combination rule folded them (Deploy Mode).
     pub fn predict(&self, x: Vec<f32>, nb_images: usize) -> anyhow::Result<Vec<f32>> {
-        let classes = self.ensemble.classes();
-        if nb_images == 0 {
-            return Ok(Vec::new());
+        let t0 = Instant::now();
+        // Hold the read lock only long enough to pin the generation: the
+        // swap's write lock is never blocked behind a prediction.
+        let generation = Arc::clone(&self.active.read().unwrap());
+        let y = generation.predict(x, nb_images)?;
+        if nb_images > 0 {
+            self.metrics.request_latency.record(t0.elapsed());
         }
-        if x.len() % nb_images != 0 {
-            bail!("input length {} not divisible by {nb_images} images", x.len());
-        }
-        if let Some(e) = self.startup.error() {
-            bail!("inference system is down: {e}");
-        }
-        let elems = x.len() / nb_images;
-        self.metrics.requests.fetch_add(1, Ordering::Relaxed);
-        self.metrics.images_in.fetch_add(nb_images as u64, Ordering::Relaxed);
+        Ok(y)
+    }
 
-        let req = self.store.insert(x, nb_images, elems);
-        let k = segments::segment_count(nb_images, self.opts.segment_size);
-        let (tx, rx) = sync_channel(1);
-        self.reg
-            .send(Registration {
-                req,
-                nb_images,
-                classes,
-                expected_msgs: k * self.ensemble.len(),
-                done: tx,
-            })
-            .ok()
-            .context("system shutting down (registration queue closed)")?;
-        self.broadcast
-            .send(BroadcastJob { req, nb_images })
-            .ok()
-            .context("system shutting down (broadcast queue closed)")?;
+    /// Live-swap the ensemble onto `matrix`: build the new worker
+    /// generation in the background, switch the routing atomically, then
+    /// drain and tear down the old generation. In-flight requests
+    /// complete exactly once on the generation they entered.
+    ///
+    /// On build failure (e.g. the new matrix does not fit next to the
+    /// still-loaded old generation) the old generation keeps serving and
+    /// the error is returned.
+    pub fn reconfigure(&self, matrix: &AllocationMatrix) -> anyhow::Result<SwapReport> {
+        let _serialize = self.reconfig_lock.lock().unwrap();
+        self.sweep_lingering();
 
-        rx.recv().map_err(|_| {
-            let detail = self
-                .startup
-                .error()
-                .unwrap_or_else(|| "accumulator stopped".to_string());
-            anyhow::anyhow!("prediction aborted: {detail}")
+        // An identical matrix is a no-op — unless the active generation
+        // is dead (worker error): then the same matrix rebuilt as a
+        // fresh generation is exactly the recovery the caller wants.
+        let recovering = self.active_error().is_some();
+        if *matrix == self.matrix() && !recovering {
+            bail!("reconfigure: new matrix is identical to the active one");
+        }
+        if recovering {
+            // the dead pool serves nothing (every predict errors fast,
+            // and its in-flight requests were aborted with the worker
+            // error), so zero-downtime build-beside does not apply:
+            // free its model instances FIRST, or a large ensemble could
+            // never rebuild next to its own phantom footprint
+            self.active.read().unwrap().teardown();
+        }
+
+        // the id is committed only on a successful build (we're under
+        // reconfig_lock): failed attempts must not leave gaps that read
+        // as phantom swaps when diffing `generation` against `swaps`
+        let id = self.next_generation.load(Ordering::SeqCst);
+        let t_build = Instant::now();
+        let fresh = Arc::new(Generation::build(
+            id,
+            matrix,
+            &self.ensemble,
+            Arc::clone(&self.executor),
+            &self.opts,
+            Arc::clone(&self.metrics),
+        )?);
+        self.next_generation.store(id + 1, Ordering::SeqCst);
+        let build = t_build.elapsed();
+
+        // switch: one pointer swap under the write lock
+        let old = {
+            let mut active = self.active.write().unwrap();
+            std::mem::replace(&mut *active, fresh)
+        };
+        self.metrics.generation.store(id, Ordering::Relaxed);
+
+        // drain: predictions that pinned the old generation before the
+        // swap still hold clones of its Arc and sit in its in-flight
+        // count. Once both reach zero the teardown (thread joins) runs
+        // here; on timeout the generation is parked in `lingering` and
+        // reclaimed by a later sweep.
+        let from_generation = old.id();
+        let in_flight_at_swap = old.in_flight();
+        let t_drain = Instant::now();
+        let deadline = t_drain + self.opts.drain_timeout;
+        let mut drain_complete = true;
+        while Arc::strong_count(&old) > 1 || old.in_flight() > 0 {
+            if Instant::now() > deadline {
+                drain_complete = false;
+                log::warn!(
+                    "generation {from_generation} drain timed out with {} in flight",
+                    old.in_flight()
+                );
+                break;
+            }
+            std::thread::sleep(Duration::from_micros(200));
+        }
+        if drain_complete {
+            drop(old); // teardown here (we hold the last Arc)
+        } else {
+            // keep the stuck generation visible: it still pins device
+            // memory, and planners must budget around it until its last
+            // caller lets go
+            self.lingering.lock().unwrap().push(old);
+        }
+        log::info!(
+            "reconfigured generation {from_generation} -> {id} \
+             (build {:.1} ms, drain {:.1} ms)",
+            build.as_secs_f64() * 1e3,
+            t_drain.elapsed().as_secs_f64() * 1e3,
+        );
+
+        Ok(SwapReport {
+            from_generation,
+            to_generation: id,
+            in_flight_at_swap,
+            build,
+            drain: t_drain.elapsed(),
+            drain_complete,
         })
     }
 
     pub fn worker_count(&self) -> usize {
-        self.workers.len()
+        self.active.read().unwrap().worker_count()
     }
 
-    pub fn matrix(&self) -> &AllocationMatrix {
-        &self.matrix
+    /// The allocation matrix of the active generation.
+    pub fn matrix(&self) -> AllocationMatrix {
+        self.active.read().unwrap().matrix().clone()
+    }
+
+    /// Drop lingering generations whose last caller has finished,
+    /// returning how many are still pinned. Called from `reconfigure`
+    /// and `resident_matrices`; long-running deployments should also
+    /// call it periodically (the reconfig controller does, every tick)
+    /// so a timed-out drain is reclaimed promptly once its stuck caller
+    /// lets go, not only at the next swap.
+    pub fn sweep_lingering(&self) -> usize {
+        let mut lingering = self.lingering.lock().unwrap();
+        lingering.retain(|g| Arc::strong_count(g) > 1 || g.in_flight() > 0);
+        lingering.len()
+    }
+
+    /// Allocations of timed-out drains still held by stuck callers.
+    pub fn lingering_matrices(&self) -> Vec<AllocationMatrix> {
+        self.sweep_lingering();
+        self.lingering
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|g| g.matrix().clone())
+            .collect()
+    }
+
+    /// Every allocation currently pinning device memory: the active
+    /// generation plus any timed-out drains still held by stuck callers.
+    /// Planners must fit a new generation next to ALL of these — except
+    /// when recovering a dead generation, whose pool `reconfigure`
+    /// frees before building (use [`Self::lingering_matrices`] then).
+    pub fn resident_matrices(&self) -> Vec<AllocationMatrix> {
+        let mut out = vec![self.matrix()];
+        out.extend(self.lingering_matrices());
+        out
+    }
+
+    /// Id of the active generation (1 until the first live swap).
+    pub fn generation(&self) -> u64 {
+        self.active.read().unwrap().id()
+    }
+
+    /// Completed live swaps (derived: ids are committed only by
+    /// successful swaps, starting at 2).
+    pub fn swap_count(&self) -> u64 {
+        self.next_generation.load(Ordering::SeqCst) - 2
+    }
+
+    /// Requests currently in flight in the active generation.
+    pub fn in_flight(&self) -> u64 {
+        self.active.read().unwrap().in_flight()
+    }
+
+    /// First worker error of the active generation, if any: the
+    /// generation no longer serves and needs a rebuild (the controller
+    /// force-replans on this, same matrix allowed).
+    pub fn active_error(&self) -> Option<String> {
+        self.active.read().unwrap().startup_error()
     }
 
     pub fn ensemble(&self) -> &Ensemble {
@@ -279,30 +322,18 @@ impl InferenceSystem {
         &self.metrics
     }
 
+    /// Shared handle to the metrics (monitors outlive borrows).
+    pub fn metrics_arc(&self) -> Arc<EngineMetrics> {
+        Arc::clone(&self.metrics)
+    }
+
     pub fn options(&self) -> &EngineOptions {
         &self.opts
     }
-}
 
-impl Drop for InferenceSystem {
-    fn drop(&mut self) {
-        // shutdown order per the paper: stop broadcasting, let workers
-        // drain (s = -1 semantics = closed queues), then the accumulator.
-        self.broadcast.close();
-        if let Some(b) = self.broadcaster.take() {
-            let _ = b.join();
-        }
-        for q in &self.model_inputs {
-            q.close();
-        }
-        for w in self.workers.drain(..) {
-            w.join();
-        }
-        self.acc_q.close();
-        self.reg.close();
-        if let Some(a) = self.accumulator.take() {
-            let _ = a.join();
-        }
+    /// The device topology the executor serves (matrix row order).
+    pub fn devices(&self) -> &crate::device::DeviceSet {
+        self.executor.devices()
     }
 }
 
@@ -343,6 +374,7 @@ mod tests {
         // paper example: 300 images, N=128 -> 3 segments x 4 models
         assert_eq!(sys.metrics().segments_broadcast.load(Ordering::Relaxed), 12);
         assert_eq!(sys.metrics().requests_completed.load(Ordering::Relaxed), 1);
+        assert_eq!(sys.generation(), 1);
     }
 
     #[test]
@@ -407,6 +439,8 @@ mod tests {
             assert_eq!(y.len(), n * e.classes());
         }
         assert_eq!(sys.metrics().requests_completed.load(Ordering::Relaxed), 4);
+        // engine-level latency histogram sees every request
+        assert_eq!(sys.metrics().request_latency.count(), 4);
     }
 
     #[test]
@@ -448,5 +482,187 @@ mod tests {
         let a = AllocationMatrix::zeroed(d.len(), e.len()); // nothing placed
         let ex = Arc::new(FakeExecutor::new(d));
         assert!(InferenceSystem::build(&a, &e, ex, EngineOptions::default()).is_err());
+    }
+
+    // --- live reconfiguration ---
+
+    #[test]
+    fn reconfigure_swaps_matrix_and_generation() {
+        let e = ensemble(EnsembleId::Imn4);
+        let d = DeviceSet::hgx(2);
+        let a = small_matrix(&e, &d, 8);
+        let ex = Arc::new(FakeExecutor::new(d.clone()));
+        let sys = InferenceSystem::build(&a, &e, ex, EngineOptions::default()).unwrap();
+        assert_eq!((sys.generation(), sys.worker_count()), (1, 4));
+
+        // new matrix: model 0 data-parallel over both GPUs
+        let mut b = a.clone();
+        b.set(1, 0, 16);
+        let report = sys.reconfigure(&b).unwrap();
+        assert_eq!(report.from_generation, 1);
+        assert_eq!(report.to_generation, 2);
+        assert!(report.drain_complete);
+        assert_eq!(sys.generation(), 2);
+        assert_eq!(sys.swap_count(), 1);
+        assert_eq!(sys.worker_count(), 5);
+        assert_eq!(sys.matrix(), b);
+        assert_eq!(sys.metrics().snapshot().iter()
+                       .find(|(k, _)| *k == "generation").unwrap().1, 2);
+
+        // the new pool serves
+        let y = sys.predict(input_for(&e, 10), 10).unwrap();
+        assert_eq!(y.len(), 10 * e.classes());
+    }
+
+    #[test]
+    fn reconfigure_rejects_identical_and_invalid_matrices() {
+        let e = ensemble(EnsembleId::Imn4);
+        let d = DeviceSet::hgx(2);
+        let a = small_matrix(&e, &d, 8);
+        let ex = Arc::new(FakeExecutor::new(d.clone()));
+        let sys = InferenceSystem::build(&a, &e, ex, EngineOptions::default()).unwrap();
+        assert!(sys.reconfigure(&a).is_err(), "identical matrix");
+        let empty = AllocationMatrix::zeroed(d.len(), e.len());
+        assert!(sys.reconfigure(&empty).is_err(), "no placements");
+        // old generation untouched by the failures
+        assert_eq!(sys.generation(), 1);
+        assert!(sys.predict(input_for(&e, 3), 3).is_ok());
+    }
+
+    #[test]
+    fn failed_rebuild_keeps_old_generation_serving() {
+        let e = ensemble(EnsembleId::Imn1);
+        let d = DeviceSet::hgx(1);
+        let a = small_matrix(&e, &d, 8);
+        let ex = SimExecutor::new(d.clone(), 50_000.0);
+        let sys = InferenceSystem::build(&a, &e, ex, EngineOptions::default()).unwrap();
+        // a matrix on the CPU row only cannot load (ResNet152 exceeds the
+        // 3 GB pinned host budget) -> the background build fails and the
+        // old generation keeps serving
+        let mut cpu_only = AllocationMatrix::zeroed(d.len(), e.len());
+        cpu_only.set(d.len() - 1, 0, 8);
+        assert!(sys.reconfigure(&cpu_only).is_err(), "CPU cannot host ResNet152");
+        assert_eq!(sys.generation(), 1);
+        assert!(sys.predict(input_for(&e, 2), 2).is_ok());
+    }
+
+    /// Backend whose predicts fail while `broken` is set — a runtime
+    /// device fault that kills a generation's workers after a healthy
+    /// startup.
+    struct FlakyExecutor {
+        devices: DeviceSet,
+        broken: Arc<std::sync::atomic::AtomicBool>,
+    }
+
+    struct FlakyInstance {
+        classes: usize,
+        elems: usize,
+        broken: Arc<std::sync::atomic::AtomicBool>,
+    }
+
+    impl crate::exec::ModelInstance for FlakyInstance {
+        fn predict(&mut self, _input: &[f32], n_rows: usize) -> anyhow::Result<Vec<f32>> {
+            if self.broken.load(Ordering::Relaxed) {
+                anyhow::bail!("simulated device fault");
+            }
+            Ok(vec![0.0; n_rows * self.classes])
+        }
+
+        fn classes(&self) -> usize {
+            self.classes
+        }
+
+        fn input_elems(&self) -> usize {
+            self.elems
+        }
+    }
+
+    impl Executor for FlakyExecutor {
+        fn load(
+            &self,
+            model: &crate::model::ModelSpec,
+            _device: usize,
+            _batch: usize,
+        ) -> anyhow::Result<Box<dyn crate::exec::ModelInstance>> {
+            Ok(Box::new(FlakyInstance {
+                classes: model.classes,
+                elems: model.input_elems_per_image(),
+                broken: Arc::clone(&self.broken),
+            }))
+        }
+
+        fn devices(&self) -> &crate::device::DeviceSet {
+            &self.devices
+        }
+    }
+
+    #[test]
+    fn dead_generation_rebuilds_in_place_with_same_matrix() {
+        let e = ensemble(EnsembleId::Imn1);
+        let d = DeviceSet::hgx(1);
+        let a = small_matrix(&e, &d, 8);
+        let broken = Arc::new(std::sync::atomic::AtomicBool::new(false));
+        let ex = Arc::new(FlakyExecutor { devices: d.clone(), broken: Arc::clone(&broken) });
+        let sys = InferenceSystem::build(&a, &e, ex, EngineOptions::default()).unwrap();
+        assert!(sys.predict(input_for(&e, 4), 4).is_ok());
+
+        // runtime fault: the in-flight request errors (not hangs) and
+        // the generation is marked dead
+        broken.store(true, Ordering::Relaxed);
+        assert!(sys.predict(input_for(&e, 4), 4).is_err());
+        assert!(sys.active_error().is_some());
+        assert!(sys.predict(input_for(&e, 4), 4).is_err(), "dead pool rejects fast");
+
+        // recovery: the SAME matrix rebuilt as a fresh generation
+        broken.store(false, Ordering::Relaxed);
+        let report = sys.reconfigure(&a).unwrap();
+        assert_eq!(report.to_generation, 2);
+        assert!(sys.active_error().is_none());
+        let y = sys.predict(input_for(&e, 4), 4).unwrap();
+        assert_eq!(y.len(), 4 * e.classes());
+    }
+
+    #[test]
+    fn swap_mid_flight_completes_every_request_exactly_once() {
+        // Imn1 keeps the two generations memory-co-resident on the sim
+        // ledger: old = ResNet152@8 on GPU0 (~5.5 GB), new adds GPU0@8 +
+        // GPU1@16 — every device stays under the 16 GB V100 budget.
+        let e = ensemble(EnsembleId::Imn1);
+        let d = DeviceSet::hgx(2);
+        let a = small_matrix(&e, &d, 8);
+        let ex = SimExecutor::new(d.clone(), 20_000.0);
+        let sys = Arc::new(
+            InferenceSystem::build(&a, &e, ex, EngineOptions::default()).unwrap(),
+        );
+        let n_clients = 4;
+        let reqs_per_client = 6;
+        std::thread::scope(|s| {
+            for c in 0..n_clients {
+                let sys = Arc::clone(&sys);
+                let e = &e;
+                s.spawn(move || {
+                    for r in 0..reqs_per_client {
+                        let n = 20 + (c + r) % 7;
+                        let y = sys.predict(input_for(e, n), n).unwrap();
+                        assert_eq!(y.len(), n * e.classes());
+                    }
+                });
+            }
+            // swap while clients are firing: go data-parallel
+            let swapper = Arc::clone(&sys);
+            let mut b = a.clone();
+            b.set(1, 0, 16);
+            s.spawn(move || {
+                std::thread::sleep(Duration::from_millis(5));
+                let report = swapper.reconfigure(&b).unwrap();
+                assert!(report.drain_complete, "old generation drained");
+            });
+        });
+        let done = sys.metrics().requests_completed.load(Ordering::Relaxed);
+        let issued = sys.metrics().requests.load(Ordering::Relaxed);
+        assert_eq!(issued, (n_clients * reqs_per_client) as u64);
+        assert_eq!(done, issued, "every request answered exactly once");
+        assert_eq!(sys.generation(), 2);
+        assert_eq!(sys.in_flight(), 0);
     }
 }

@@ -192,7 +192,10 @@ fn predictor_loop(
 
     while let Some(job) = to_pred.recv() {
         let rows = job.data.rows(job.lo, job.hi);
-        match instance.predict(rows, job.hi - job.lo) {
+        let t0 = std::time::Instant::now();
+        let result = instance.predict(rows, job.hi - job.lo);
+        metrics.record_device_busy(spec.device, t0.elapsed());
+        match result {
             Ok(preds) => {
                 metrics.batches_predicted.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
                 let out = PredBatch {
@@ -210,6 +213,9 @@ fn predictor_loop(
             Err(e) => {
                 metrics.worker_errors.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
                 let _ = acc.send(AccMsg::WorkerError { worker: spec.id, error: format!("{e:#}") });
+                // stop + unblock the batcher: it may be parked on a full
+                // stage FIFO, which would otherwise hang teardown's join
+                to_pred.close();
                 break;
             }
         }

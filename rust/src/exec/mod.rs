@@ -15,6 +15,13 @@
 //!   measurement.
 
 pub mod fake;
+/// Real PJRT backend, gated: the `xla` crate binding xla_extension is not
+/// available in every build environment. Without the `pjrt` feature an
+/// API-compatible stub is compiled that fails at `load` time.
+#[cfg(feature = "pjrt")]
+pub mod pjrt;
+#[cfg(not(feature = "pjrt"))]
+#[path = "pjrt_stub.rs"]
 pub mod pjrt;
 pub mod sim;
 

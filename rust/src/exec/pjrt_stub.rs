@@ -1,0 +1,50 @@
+//! Stub PJRT backend, compiled when the `pjrt` feature is off.
+//!
+//! Mirrors the public surface of [`pjrt.rs`](./pjrt.rs) — `PjrtExecutor::new`
+//! plus the [`Executor`] impl — so the CLI, tests and examples build without
+//! the `xla` crate. Loading any model instance fails with a clear message;
+//! callers that gate on artifact presence (integration_pjrt) simply skip.
+
+use std::sync::Arc;
+
+use anyhow::bail;
+
+use crate::device::DeviceSet;
+use crate::model::{Manifest, ModelSpec};
+
+use super::{Executor, ModelInstance};
+
+/// API-compatible placeholder for the real PJRT executor.
+pub struct PjrtExecutor {
+    devices: DeviceSet,
+    manifest: Arc<Manifest>,
+}
+
+impl PjrtExecutor {
+    pub fn new(devices: DeviceSet, manifest: Arc<Manifest>) -> Arc<PjrtExecutor> {
+        Arc::new(PjrtExecutor { devices, manifest })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+}
+
+impl Executor for PjrtExecutor {
+    fn load(
+        &self,
+        model: &ModelSpec,
+        _device: usize,
+        _batch: usize,
+    ) -> anyhow::Result<Box<dyn ModelInstance>> {
+        bail!(
+            "PJRT backend not compiled in (model {}): rebuild with `--features pjrt` \
+             and the vendored xla crate, or use the sim/fake backend",
+            model.name
+        );
+    }
+
+    fn devices(&self) -> &DeviceSet {
+        &self.devices
+    }
+}

@@ -21,6 +21,24 @@
 //! artifacts for end-to-end numerics, a calibrated simulator of the paper's
 //! 16×V100 HGX testbed for the scale experiments, and a fake (zeros)
 //! backend for the §IV.A overhead measurement.
+//!
+//! ## Runtime reconfiguration
+//!
+//! Beyond the paper: the engine is *generational*. An
+//! [`engine::InferenceSystem`] routes predictions through its active
+//! worker-pool generation ([`engine::generation::Generation`]) and can
+//! hot-swap the ensemble onto a new allocation matrix at runtime
+//! ([`engine::InferenceSystem::reconfigure`]): the next generation is
+//! built and readied in the background, the routing pointer is switched
+//! atomically, and the old generation is drained of its in-flight
+//! requests before teardown — no request is dropped or answered twice.
+//! The [`reconfig`] subsystem closes the loop: a sliding-window load
+//! monitor over [`metrics::EngineMetrics`], an SLO/utilization/failure
+//! policy, a re-entrant planner (worst-fit + bounded greedy scored by
+//! the analytic estimator, no engine in the loop) and a background
+//! controller. The server exposes it as `POST /v1/reconfigure` and
+//! `GET /v1/reconfig/status`, next to Prometheus metrics at
+//! `GET /v1/metrics`.
 
 pub mod util;
 pub mod config;
@@ -31,6 +49,7 @@ pub mod exec;
 pub mod engine;
 pub mod benchkit;
 pub mod optimizer;
+pub mod reconfig;
 pub mod server;
 pub mod workload;
 pub mod metrics;

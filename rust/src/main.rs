@@ -22,6 +22,7 @@ use ensemble_serve::exec::sim::SimExecutor;
 use ensemble_serve::exec::Executor;
 use ensemble_serve::model::Manifest;
 use ensemble_serve::optimizer::{optimize, OptimizerConfig};
+use ensemble_serve::reconfig::{PlannerConfig, PolicyConfig, ReconfigController, ReconfigOptions};
 use ensemble_serve::server::ApiServer;
 use ensemble_serve::util::cli::Cli;
 
@@ -38,6 +39,8 @@ fn cli() -> Cli {
         .opt("calib-images", None, "calibration samples for bench")
         .opt("seed", None, "greedy sampling seed")
         .opt("listen", None, "serve: bind address")
+        .opt("p99-slo-ms", None, "serve: reconfig controller p99 objective (ms)")
+        .flag("reconfig", "serve: enable the live-reconfiguration controller")
         .flag("no-cache", "optimize: ignore the matrix cache")
         .flag("help", "print help")
 }
@@ -101,6 +104,13 @@ fn config_from(args: &ensemble_serve::util::cli::Args) -> anyhow::Result<ServerC
     }
     if let Some(v) = args.get("listen") {
         cfg.listen = v.to_string();
+    }
+    if args.has_flag("reconfig") {
+        cfg.reconfig = true;
+    }
+    if let Some(v) = args.get_f64("p99-slo-ms")? {
+        anyhow::ensure!(v > 0.0, "p99-slo-ms must be positive");
+        cfg.p99_slo_ms = v;
     }
     Ok(cfg)
 }
@@ -187,9 +197,31 @@ fn run(args: &ensemble_serve::util::cli::Args) -> anyhow::Result<()> {
                 executor,
                 cfg.engine_options(),
             )?);
-            let api = ApiServer::start(system, &cfg.listen, cfg.http_threads)?;
+            let api = if cfg.reconfig {
+                let opts = ReconfigOptions {
+                    policy: PolicyConfig {
+                        p99_slo_ms: cfg.p99_slo_ms,
+                        ..PolicyConfig::default()
+                    },
+                    planner: PlannerConfig {
+                        default_batch: cfg.default_batch,
+                        ..PlannerConfig::default()
+                    },
+                    ..ReconfigOptions::default()
+                };
+                let controller = ReconfigController::start(Arc::clone(&system), opts);
+                log::info!("reconfiguration controller running (p99 SLO {} ms)",
+                           cfg.p99_slo_ms);
+                ApiServer::start_with_controller(system, &cfg.listen, cfg.http_threads,
+                                                 controller)?
+            } else {
+                ApiServer::start(system, &cfg.listen, cfg.http_threads)?
+            };
             println!("serving {} on http://{}", ensemble.name, api.addr());
-            println!("  POST /v1/predict   GET /v1/health  /v1/stats  /v1/matrix");
+            println!("  POST /v1/predict   GET /v1/health  /v1/stats  /v1/metrics  /v1/matrix");
+            if cfg.reconfig {
+                println!("  POST /v1/reconfigure   GET /v1/reconfig/status");
+            }
             loop {
                 std::thread::sleep(std::time::Duration::from_secs(3600));
             }

@@ -1,10 +1,14 @@
 //! Lightweight runtime metrics: atomic counters + a fixed-bucket latency
-//! histogram. Exposed by `GET /v1/stats` and used by the benches.
+//! histogram. Exposed by `GET /v1/stats` (JSON) and `GET /v1/metrics`
+//! (Prometheus text exposition), and used by the benches and the
+//! [`crate::reconfig`] load monitor (which diffs histogram snapshots to
+//! compute sliding-window rates and quantiles).
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::time::Duration;
 
-/// Engine-wide counters (all monotonically increasing).
+/// Engine-wide counters. All monotonically increasing and shared across
+/// worker-pool generations (a live swap must not reset observability).
 #[derive(Debug, Default)]
 pub struct EngineMetrics {
     pub requests: AtomicU64,
@@ -15,9 +19,26 @@ pub struct EngineMetrics {
     pub images_predicted: AtomicU64, // images × models
     pub requests_completed: AtomicU64,
     pub worker_errors: AtomicU64,
+    /// Worker-pool generation currently serving (starts at 1, bumped by
+    /// each live reconfiguration).
+    pub generation: AtomicU64,
+    /// End-to-end `predict` latency, engine-level (the server keeps its
+    /// own HTTP-inclusive histogram on top).
+    pub request_latency: LatencyHistogram,
+    /// Cumulative busy time per device index, µs (predict-call wall time
+    /// recorded by each worker's predictor thread).
+    device_busy_us: Vec<AtomicU64>,
 }
 
 impl EngineMetrics {
+    /// Metrics with per-device busy gauges for `n_devices` devices.
+    pub fn with_devices(n_devices: usize) -> EngineMetrics {
+        EngineMetrics {
+            device_busy_us: (0..n_devices).map(|_| AtomicU64::new(0)).collect(),
+            ..EngineMetrics::default()
+        }
+    }
+
     pub fn snapshot(&self) -> Vec<(&'static str, u64)> {
         let g = |a: &AtomicU64| a.load(Ordering::Relaxed);
         vec![
@@ -29,8 +50,47 @@ impl EngineMetrics {
             ("images_predicted", g(&self.images_predicted)),
             ("requests_completed", g(&self.requests_completed)),
             ("worker_errors", g(&self.worker_errors)),
+            ("generation", g(&self.generation)),
         ]
     }
+
+    /// Record `busy` of predict-call wall time against a device. No-op
+    /// for device indices without a gauge (metrics built via `default`).
+    pub fn record_device_busy(&self, device: usize, busy: Duration) {
+        if let Some(g) = self.device_busy_us.get(device) {
+            g.fetch_add(busy.as_micros() as u64, Ordering::Relaxed);
+        }
+    }
+
+    /// Cumulative per-device busy time in µs.
+    pub fn device_busy_us(&self) -> Vec<u64> {
+        self.device_busy_us.iter().map(|g| g.load(Ordering::Relaxed)).collect()
+    }
+
+    pub fn device_count(&self) -> usize {
+        self.device_busy_us.len()
+    }
+}
+
+/// Quantile over histogram bucket counts (shared by the cumulative
+/// histogram and the reconfig monitor's windowed deltas): upper bound of
+/// the bucket holding the q-th sample, in ms. `counts.len()` must be
+/// `bounds.len() + 1` (last bucket is the overflow bucket).
+pub fn quantile_ms_from_counts(bounds: &[u64], counts: &[u64], q: f64) -> f64 {
+    let n: u64 = counts.iter().sum();
+    if n == 0 {
+        return 0.0;
+    }
+    let target = (q * n as f64).ceil().max(1.0) as u64;
+    let mut acc = 0u64;
+    for (i, c) in counts.iter().enumerate() {
+        acc += c;
+        if acc >= target {
+            let bound = bounds.get(i).copied().unwrap_or(u64::MAX / 2);
+            return bound as f64 / 1000.0;
+        }
+    }
+    *bounds.last().unwrap_or(&0) as f64 / 1000.0
 }
 
 /// Log-bucketed latency histogram (µs buckets), lock-free recording.
@@ -74,6 +134,24 @@ impl LatencyHistogram {
         self.n.load(Ordering::Relaxed)
     }
 
+    /// Sum of all recorded latencies, µs.
+    pub fn total_us(&self) -> u64 {
+        self.total_us.load(Ordering::Relaxed)
+    }
+
+    /// Bucket upper bounds, µs (the last physical bucket is the implicit
+    /// overflow bucket above the final bound).
+    pub fn bounds(&self) -> &[u64] {
+        &self.bounds
+    }
+
+    /// Point-in-time copy of the bucket counts (`bounds().len() + 1`
+    /// entries). Two copies taken at different times can be subtracted for
+    /// windowed quantiles — counts are monotonically increasing.
+    pub fn bucket_counts(&self) -> Vec<u64> {
+        self.counts.iter().map(|c| c.load(Ordering::Relaxed)).collect()
+    }
+
     pub fn mean_ms(&self) -> f64 {
         let n = self.count();
         if n == 0 {
@@ -84,20 +162,7 @@ impl LatencyHistogram {
 
     /// Approximate quantile (upper bound of the bucket holding it).
     pub fn quantile_ms(&self, q: f64) -> f64 {
-        let n = self.count();
-        if n == 0 {
-            return 0.0;
-        }
-        let target = (q * n as f64).ceil() as u64;
-        let mut acc = 0u64;
-        for (i, c) in self.counts.iter().enumerate() {
-            acc += c.load(Ordering::Relaxed);
-            if acc >= target {
-                let bound = self.bounds.get(i).copied().unwrap_or(u64::MAX / 2);
-                return bound as f64 / 1000.0;
-            }
-        }
-        *self.bounds.last().unwrap() as f64 / 1000.0
+        quantile_ms_from_counts(&self.bounds, &self.bucket_counts(), q)
     }
 }
 
@@ -139,5 +204,38 @@ mod tests {
             }
         });
         assert_eq!(h.count(), 4000);
+    }
+
+    #[test]
+    fn windowed_quantile_from_count_deltas() {
+        let h = LatencyHistogram::new();
+        for _ in 0..100 {
+            h.record(Duration::from_millis(1));
+        }
+        let before = h.bucket_counts();
+        for _ in 0..50 {
+            h.record(Duration::from_millis(64));
+        }
+        let after = h.bucket_counts();
+        let delta: Vec<u64> = after.iter().zip(&before).map(|(a, b)| a - b).collect();
+        // the window contains only the 64 ms records
+        let p50 = quantile_ms_from_counts(h.bounds(), &delta, 0.5);
+        assert!(p50 >= 64.0 && p50 <= 140.0, "p50={p50}");
+        // the cumulative histogram is still dominated by the 1 ms records
+        assert!(h.quantile_ms(0.5) <= 2.1);
+    }
+
+    #[test]
+    fn device_busy_gauges() {
+        let m = EngineMetrics::with_devices(2);
+        m.record_device_busy(0, Duration::from_micros(300));
+        m.record_device_busy(1, Duration::from_micros(700));
+        m.record_device_busy(9, Duration::from_micros(999)); // out of range: ignored
+        assert_eq!(m.device_busy_us(), vec![300, 700]);
+        assert_eq!(m.device_count(), 2);
+        // default metrics have no gauges and ignore records
+        let d = EngineMetrics::default();
+        d.record_device_busy(0, Duration::from_micros(1));
+        assert!(d.device_busy_us().is_empty());
     }
 }

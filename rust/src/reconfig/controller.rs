@@ -1,0 +1,563 @@
+//! The autoscaling controller: monitor → policy → planner → live swap.
+//!
+//! [`ReconfigController::start`] spawns a background loop that samples
+//! the engine's metrics every `poll_interval`, evaluates the
+//! [`policy`](crate::reconfig::policy), and on a `Replan` decision runs
+//! the [`planner`](crate::reconfig::planner) and hot-swaps the system
+//! onto the candidate matrix (hysteresis: voluntary swaps must beat the
+//! active allocation's analytic score by `min_predicted_gain`).
+//!
+//! Every step is also callable synchronously — [`tick`](ReconfigController::tick)
+//! for one control iteration, [`reconfigure_now`](ReconfigController::reconfigure_now)
+//! for an operator-forced replan (the `POST /v1/reconfigure` admin
+//! route) — which keeps the control loop deterministic under test.
+
+use std::collections::BTreeSet;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::ensure;
+
+use crate::engine::{InferenceSystem, SwapReport};
+use crate::reconfig::monitor::{LoadMonitor, LoadSnapshot};
+use crate::reconfig::planner::{self, PlannerConfig};
+use crate::reconfig::policy::{self, Decision, PolicyConfig};
+use crate::util::json::Json;
+
+/// Controller knobs.
+#[derive(Debug, Clone)]
+pub struct ReconfigOptions {
+    /// Control-loop period.
+    pub poll_interval: Duration,
+    /// Sliding window the load monitor diffs over.
+    pub window: Duration,
+    /// Minimum gap between *forced* (device-failure) replan attempts.
+    /// Shorter than the voluntary cooldown — failures deserve fast
+    /// retries — but nonzero, so an infeasible failure replan does not
+    /// re-run the planner on every poll tick.
+    pub failure_backoff: Duration,
+    pub policy: PolicyConfig,
+    pub planner: PlannerConfig,
+}
+
+impl Default for ReconfigOptions {
+    fn default() -> Self {
+        ReconfigOptions {
+            poll_interval: Duration::from_millis(250),
+            window: Duration::from_secs(5),
+            failure_backoff: Duration::from_secs(2),
+            policy: PolicyConfig::default(),
+            planner: PlannerConfig::default(),
+        }
+    }
+}
+
+struct CtrlState {
+    failed: BTreeSet<usize>,
+    last_decision: String,
+    last_swap: Option<SwapReport>,
+    last_swap_at: Option<Instant>,
+    /// Last planner invocation (adopted or not): voluntary replans back
+    /// off by the policy cooldown after a rejected/failed attempt too —
+    /// a sustained SLO breach on an already-optimal allocation must not
+    /// re-run the planner on every poll tick.
+    last_replan_at: Option<Instant>,
+    /// Planner invocations (adopted or not).
+    replans: u64,
+}
+
+/// Point-in-time controller status (`GET /v1/reconfig/status`).
+#[derive(Debug, Clone)]
+pub struct StatusReport {
+    pub generation: u64,
+    pub swaps: u64,
+    pub replans: u64,
+    pub failed_devices: Vec<usize>,
+    pub last_decision: String,
+    pub last_swap: Option<SwapReport>,
+    pub window: Option<LoadSnapshot>,
+}
+
+/// The one JSON shape of a [`SwapReport`], shared by the
+/// `POST /v1/reconfigure` response and `GET /v1/reconfig/status`.
+pub fn swap_report_json(r: &SwapReport) -> Json {
+    Json::from_pairs([
+        ("from_generation", Json::Num(r.from_generation as f64)),
+        ("to_generation", Json::Num(r.to_generation as f64)),
+        ("in_flight_at_swap", Json::Num(r.in_flight_at_swap as f64)),
+        ("build_ms", Json::Num(r.build.as_secs_f64() * 1e3)),
+        ("drain_ms", Json::Num(r.drain.as_secs_f64() * 1e3)),
+        ("drain_complete", Json::Bool(r.drain_complete)),
+    ])
+}
+
+impl StatusReport {
+    pub fn to_json(&self) -> Json {
+        let swap = match &self.last_swap {
+            None => Json::Null,
+            Some(r) => swap_report_json(r),
+        };
+        let window = match &self.window {
+            None => Json::Null,
+            Some(w) => Json::from_pairs([
+                ("span_s", Json::Num(w.span.as_secs_f64())),
+                ("completed", Json::Num(w.completed as f64)),
+                ("req_rate", Json::Num(w.req_rate)),
+                ("img_rate", Json::Num(w.img_rate)),
+                ("mean_ms", Json::Num(w.mean_ms)),
+                ("p50_ms", Json::Num(w.p50_ms)),
+                ("p99_ms", Json::Num(w.p99_ms)),
+                (
+                    "device_util",
+                    Json::Arr(w.device_util.iter().map(|&u| Json::Num(u)).collect()),
+                ),
+            ]),
+        };
+        Json::from_pairs([
+            ("generation", Json::Num(self.generation as f64)),
+            ("swaps", Json::Num(self.swaps as f64)),
+            ("replans", Json::Num(self.replans as f64)),
+            (
+                "failed_devices",
+                Json::Arr(self.failed_devices.iter().map(|&d| Json::Num(d as f64)).collect()),
+            ),
+            ("last_decision", Json::Str(self.last_decision.clone())),
+            ("last_swap", swap),
+            ("window", window),
+        ])
+    }
+}
+
+/// The runtime controller. Cheap to share (`Arc`); stops and joins its
+/// loop thread on drop.
+pub struct ReconfigController {
+    system: Arc<InferenceSystem>,
+    monitor: LoadMonitor,
+    opts: ReconfigOptions,
+    state: Mutex<CtrlState>,
+    /// Makes plan → compare-with-active → swap atomic across the loop
+    /// thread and admin requests: without it, two replans computing the
+    /// same candidate race into the engine's identical-matrix rejection
+    /// and one reports a spurious failure.
+    replan_lock: Mutex<()>,
+    stop: Arc<AtomicBool>,
+    thread: Mutex<Option<JoinHandle<()>>>,
+}
+
+impl ReconfigController {
+    /// Start the control loop over a deployed system.
+    pub fn start(system: Arc<InferenceSystem>, opts: ReconfigOptions) -> Arc<ReconfigController> {
+        let ctrl = Arc::new(ReconfigController {
+            monitor: LoadMonitor::new(system.metrics_arc(), opts.window),
+            system,
+            opts,
+            state: Mutex::new(CtrlState {
+                failed: BTreeSet::new(),
+                last_decision: "starting".into(),
+                last_swap: None,
+                last_swap_at: None,
+                last_replan_at: None,
+                replans: 0,
+            }),
+            replan_lock: Mutex::new(()),
+            stop: Arc::new(AtomicBool::new(false)),
+            thread: Mutex::new(None),
+        });
+
+        // The loop holds only a Weak: dropping the last external Arc
+        // ends the loop even without an explicit stop.
+        let weak = Arc::downgrade(&ctrl);
+        let stop = Arc::clone(&ctrl.stop);
+        let poll = ctrl.opts.poll_interval;
+        let handle = std::thread::Builder::new()
+            .name("reconfig-controller".into())
+            .spawn(move || loop {
+                let mut slept = Duration::ZERO;
+                while slept < poll {
+                    if stop.load(Ordering::Relaxed) {
+                        return;
+                    }
+                    let step = (poll - slept).min(Duration::from_millis(25));
+                    std::thread::sleep(step);
+                    slept += step;
+                }
+                let Some(ctrl) = weak.upgrade() else { return };
+                ctrl.tick();
+            })
+            .expect("spawn reconfig-controller");
+        *ctrl.thread.lock().unwrap() = Some(handle);
+        ctrl
+    }
+
+    /// Windowed load with per-device utilization normalized into an
+    /// average per-worker busy fraction in [0, ~1] — the scale the
+    /// policy's `high_util`/`imbalance_spread` thresholds are written
+    /// against. Raw gauges sum overlapping wall time across co-located
+    /// workers (including those of lingering drain-timed-out
+    /// generations, which still record into the same shared metrics),
+    /// so the divisor counts both. The same view backs `tick` and
+    /// `status`, keeping what the operator reads on the scale the
+    /// decision used.
+    fn normalized_snapshot(&self) -> Option<LoadSnapshot> {
+        let active = self.system.matrix();
+        let lingering = self.system.lingering_matrices();
+        self.monitor.snapshot().map(|mut s| {
+            for (d, u) in s.device_util.iter_mut().enumerate() {
+                let workers = active.device_workers(d).len()
+                    + lingering.iter().map(|m| m.device_workers(d).len()).sum::<usize>();
+                if workers > 1 {
+                    *u /= workers as f64;
+                }
+            }
+            s
+        })
+    }
+
+    /// One control iteration: sample, decide, maybe replan + swap.
+    pub fn tick(&self) {
+        // reclaim drain-timed-out generations whose stuck caller has
+        // since finished (frees their threads + device memory)
+        self.system.sweep_lingering();
+        self.monitor.sample();
+        let active = self.system.matrix();
+        let snapshot = self.normalized_snapshot();
+        let gpu_mask: Vec<bool> = self.system.devices().iter().map(|d| d.is_gpu()).collect();
+
+        let (failed, since_swap) = {
+            let st = self.state.lock().unwrap();
+            (
+                st.failed.iter().copied().collect::<Vec<usize>>(),
+                st.last_swap_at.map(|t| t.elapsed()),
+            )
+        };
+        let active_uses_failed =
+            failed.iter().any(|&d| !active.device_workers(d).is_empty());
+
+        // A dead generation (runtime worker error) is invisible to the
+        // policy — completions just stop, which reads as "thin traffic".
+        // Check for it directly and force a rebuild (the engine accepts
+        // an identical matrix for this case).
+        let decision = if let Some(err) = self.system.active_error() {
+            Decision::Replan { reason: format!("generation error: {err}"), force: true }
+        } else {
+            policy::decide(
+                &self.opts.policy,
+                snapshot.as_ref(),
+                &gpu_mask,
+                self.system.in_flight(),
+                active_uses_failed,
+                since_swap,
+            )
+        };
+        match decision {
+            Decision::Hold(why) => {
+                self.state.lock().unwrap().last_decision = format!("hold: {why}");
+            }
+            Decision::Replan { reason, force } => {
+                // back off after ANY recent attempt, not just completed
+                // swaps: the planner is cheap but not free, and the
+                // trigger may persist on an allocation the planner
+                // cannot improve. Forced (failure) replans retry on a
+                // much shorter leash than voluntary ones.
+                let backoff = if force {
+                    self.opts.failure_backoff
+                } else {
+                    self.opts.policy.cooldown
+                };
+                let recently_tried = self
+                    .state
+                    .lock()
+                    .unwrap()
+                    .last_replan_at
+                    .is_some_and(|t| t.elapsed() < backoff);
+                if recently_tried {
+                    self.state.lock().unwrap().last_decision =
+                        format!("hold: replan backoff ({reason})");
+                    return;
+                }
+                match self.replan(&reason, force) {
+                    Ok(_) => {}
+                    Err(e) => {
+                        self.state.lock().unwrap().last_decision =
+                            format!("replan ({reason}) failed: {e:#}");
+                    }
+                }
+            }
+        }
+    }
+
+    /// Operator-forced replan (admin endpoint): plans on the surviving
+    /// devices and swaps unless the plan reproduces the active matrix.
+    pub fn reconfigure_now(&self, reason: &str) -> anyhow::Result<Option<SwapReport>> {
+        self.replan(reason, true)
+    }
+
+    fn replan(&self, reason: &str, force: bool) -> anyhow::Result<Option<SwapReport>> {
+        let _serialize = self.replan_lock.lock().unwrap();
+        let failed: Vec<usize> = {
+            let mut st = self.state.lock().unwrap();
+            st.replans += 1;
+            st.last_replan_at = Some(Instant::now());
+            st.failed.iter().copied().collect()
+        };
+        let devices = self.system.devices();
+        let ensemble = self.system.ensemble();
+        let active = self.system.matrix();
+        // plan within the memory every resident generation leaves free
+        // (the active one plus timed-out drains still pinned by stuck
+        // callers): the swap builds the new pool before draining. A
+        // DEAD active generation is excluded — reconfigure frees its
+        // pool before building, so budgeting its phantom footprint
+        // would wedge recovery for any ensemble over half a device.
+        let resident = if self.system.active_error().is_some() {
+            self.system.lingering_matrices()
+        } else {
+            self.system.resident_matrices()
+        };
+        let plan = planner::plan(ensemble, devices, &failed, &resident, &self.opts.planner)?;
+
+        // A reproduced matrix is normally a no-op — but when forced and
+        // the active generation is dead, deploying the SAME matrix as a
+        // fresh generation is the recovery path.
+        if plan.matrix == active && !(force && self.system.active_error().is_some()) {
+            self.state.lock().unwrap().last_decision =
+                format!("hold: planner reproduced the active matrix ({reason})");
+            return Ok(None);
+        }
+        if !force {
+            let base = planner::score(&active, ensemble, devices);
+            let gain = if base > 0.0 { plan.predicted_img_s / base } else { f64::INFINITY };
+            if gain < self.opts.policy.min_predicted_gain {
+                self.state.lock().unwrap().last_decision = format!(
+                    "hold: predicted gain {gain:.2}x below {:.2}x ({reason})",
+                    self.opts.policy.min_predicted_gain
+                );
+                return Ok(None);
+            }
+        }
+
+        let report = self.system.reconfigure(&plan.matrix)?;
+        // the window now describes the PREVIOUS generation (other
+        // worker counts, other latencies): start fresh
+        self.monitor.reset();
+        let mut st = self.state.lock().unwrap();
+        st.last_decision = format!(
+            "swapped generation {} -> {} ({reason}; predicted {:.0} img/s)",
+            report.from_generation, report.to_generation, plan.predicted_img_s
+        );
+        st.last_swap = Some(report.clone());
+        st.last_swap_at = Some(Instant::now());
+        Ok(Some(report))
+    }
+
+    /// All-or-nothing device marking: BOTH indices are validated against
+    /// the topology before either mark applies, and both apply under one
+    /// state-lock scope — a rejected request never half-mutates the
+    /// failure set, and a concurrent `status` never observes a
+    /// half-applied pair.
+    /// Returns the human-readable notes it recorded (one per mark) so
+    /// the admin route reports exactly what `last_decision` says.
+    pub fn mark_devices(
+        &self,
+        fail: Option<usize>,
+        recover: Option<usize>,
+    ) -> anyhow::Result<Vec<String>> {
+        let n = self.system.devices().len();
+        for d in [fail, recover].into_iter().flatten() {
+            ensure!(d < n, "device {d} out of range (topology has {n})");
+        }
+        let mut st = self.state.lock().unwrap();
+        let mut notes = Vec::new();
+        if let Some(d) = fail {
+            st.failed.insert(d);
+            notes.push(format!("device {d} marked failed"));
+        }
+        if let Some(d) = recover {
+            st.failed.remove(&d);
+            notes.push(format!("device {d} marked recovered"));
+        }
+        if !notes.is_empty() {
+            st.last_decision = notes.join("; ");
+        }
+        Ok(notes)
+    }
+
+    /// Mark a device failed: excluded from planning, and an allocation
+    /// still using it triggers a forced replan on the next tick.
+    pub fn mark_device_failed(&self, device: usize) -> anyhow::Result<()> {
+        self.mark_devices(Some(device), None).map(|_| ())
+    }
+
+    /// Return a device to the planning pool.
+    pub fn mark_device_recovered(&self, device: usize) -> anyhow::Result<()> {
+        self.mark_devices(None, Some(device)).map(|_| ())
+    }
+
+    pub fn failed_devices(&self) -> Vec<usize> {
+        self.state.lock().unwrap().failed.iter().copied().collect()
+    }
+
+    pub fn system(&self) -> &Arc<InferenceSystem> {
+        &self.system
+    }
+
+    pub fn status(&self) -> StatusReport {
+        let st = self.state.lock().unwrap();
+        StatusReport {
+            generation: self.system.generation(),
+            swaps: self.system.swap_count(),
+            replans: st.replans,
+            failed_devices: st.failed.iter().copied().collect(),
+            last_decision: st.last_decision.clone(),
+            last_swap: st.last_swap.clone(),
+            window: self.normalized_snapshot(),
+        }
+    }
+
+    /// Stop the loop thread (also done on drop).
+    pub fn stop(&self) {
+        self.stop.store(true, Ordering::Relaxed);
+        let handle = self.thread.lock().unwrap().take();
+        if let Some(t) = handle {
+            // Drop can run ON the loop thread: it upgrades its Weak for
+            // the duration of a tick, and if the last external Arc went
+            // away meanwhile, releasing that upgrade destroys the
+            // controller from inside the loop. Joining ourselves would
+            // deadlock the thread forever — detach instead; the loop
+            // exits on its next Weak upgrade (now dead) or stop check.
+            if t.thread().id() == std::thread::current().id() {
+                return;
+            }
+            let _ = t.join();
+        }
+    }
+}
+
+impl Drop for ReconfigController {
+    fn drop(&mut self) {
+        self.stop();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::alloc::matrix::AllocationMatrix;
+    use crate::device::DeviceSet;
+    use crate::engine::EngineOptions;
+    use crate::exec::fake::FakeExecutor;
+    use crate::model::{ensemble, EnsembleId, Ensemble};
+
+    /// One heavy model pinned to a single GPU of a 2-GPU node — a
+    /// deliberately under-provisioned start the planner will beat.
+    fn bad_system() -> (Arc<InferenceSystem>, Ensemble) {
+        let e = ensemble(EnsembleId::Imn1);
+        let d = DeviceSet::hgx(2);
+        let mut a = AllocationMatrix::zeroed(d.len(), e.len());
+        a.set(0, 0, 8);
+        let sys = Arc::new(
+            InferenceSystem::build(&a, &e, Arc::new(FakeExecutor::new(d)),
+                                   EngineOptions::default())
+                .unwrap(),
+        );
+        (sys, e)
+    }
+
+    fn test_opts() -> ReconfigOptions {
+        ReconfigOptions {
+            poll_interval: Duration::from_millis(10),
+            window: Duration::from_millis(500),
+            failure_backoff: Duration::from_millis(50),
+            policy: PolicyConfig {
+                p99_slo_ms: 0.01, // any traffic breaches: forces a replan
+                min_window_requests: 5,
+                cooldown: Duration::from_secs(30),
+                ..PolicyConfig::default()
+            },
+            planner: PlannerConfig {
+                greedy: crate::alloc::greedy::GreedyConfig {
+                    max_iter: 4,
+                    max_neighs: 16,
+                    ..Default::default()
+                },
+                ..PlannerConfig::default()
+            },
+        }
+    }
+
+    #[test]
+    fn slo_breach_drives_a_swap_and_cooldown_holds_after() {
+        let (sys, e) = bad_system();
+        let ctrl = ReconfigController::start(Arc::clone(&sys), test_opts());
+        ctrl.stop(); // deterministic: drive ticks by hand
+        let x = vec![0.1; 4 * e.members[0].input_elems_per_image()];
+        for _ in 0..20 {
+            sys.predict(x.clone(), 4).unwrap();
+            std::thread::sleep(Duration::from_millis(1));
+            ctrl.tick();
+            if sys.generation() > 1 {
+                break;
+            }
+        }
+        assert_eq!(sys.generation(), 2, "status: {}", ctrl.status().last_decision);
+        assert_eq!(sys.swap_count(), 1);
+        // the plan spread the model over both GPUs
+        assert!(sys.worker_count() >= 2);
+        // cooldown: further breaching ticks do not churn
+        for _ in 0..5 {
+            sys.predict(x.clone(), 4).unwrap();
+            ctrl.tick();
+        }
+        assert_eq!(sys.swap_count(), 1);
+        let status = ctrl.status();
+        assert_eq!(status.generation, 2);
+        assert!(status.last_swap.is_some());
+        assert!(status.replans >= 1);
+        let j = status.to_json();
+        assert_eq!(j.get("generation").and_then(Json::as_usize), Some(2));
+        assert!(j.get("last_swap").unwrap().get("to_generation").is_some());
+    }
+
+    #[test]
+    fn device_failure_replans_onto_survivors() {
+        let (sys, e) = bad_system();
+        let ctrl = ReconfigController::start(Arc::clone(&sys), test_opts());
+        ctrl.stop();
+        assert!(ctrl.mark_device_failed(9).is_err(), "out of range");
+        ctrl.mark_device_failed(0).unwrap();
+        assert_eq!(ctrl.failed_devices(), vec![0]);
+        // active matrix uses device 0 -> forced replan, bypassing both
+        // cooldown and the gain gate
+        ctrl.tick();
+        assert_eq!(sys.generation(), 2, "status: {}", ctrl.status().last_decision);
+        let m = sys.matrix();
+        assert!(m.device_workers(0).is_empty(), "failed device still used:\n{m}");
+        assert!(m.all_models_placed());
+        // traffic still flows
+        let x = vec![0.1; 2 * e.members[0].input_elems_per_image()];
+        assert_eq!(sys.predict(x, 2).unwrap().len(), 2 * e.classes());
+        // recovery: device allowed again; forced replan may use it
+        ctrl.mark_device_recovered(0).unwrap();
+        let swapped = ctrl.reconfigure_now("operator rebalance").unwrap();
+        assert!(swapped.is_some());
+        assert!(!sys.matrix().device_workers(0).is_empty());
+    }
+
+    #[test]
+    fn background_loop_runs_and_stops() {
+        let (sys, e) = bad_system();
+        let mut opts = test_opts();
+        opts.poll_interval = Duration::from_millis(5);
+        let ctrl = ReconfigController::start(Arc::clone(&sys), opts);
+        let x = vec![0.1; 2 * e.members[0].input_elems_per_image()];
+        let deadline = Instant::now() + Duration::from_secs(10);
+        while sys.generation() == 1 && Instant::now() < deadline {
+            let _ = sys.predict(x.clone(), 2);
+            std::thread::sleep(Duration::from_millis(2));
+        }
+        assert!(sys.generation() >= 2, "loop never swapped: {}", ctrl.status().last_decision);
+        drop(ctrl); // joins the loop thread
+    }
+}

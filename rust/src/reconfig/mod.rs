@@ -1,0 +1,43 @@
+//! Live reconfiguration: re-allocate and hot-swap the ensemble under
+//! changing load.
+//!
+//! The paper's allocation pipeline (worst-fit Algorithm 1 + bounded
+//! greedy Algorithm 2) is cheap enough to re-run online; this subsystem
+//! closes the loop at runtime:
+//!
+//! ```text
+//!   EngineMetrics ──► LoadMonitor ──► Policy ──► Planner ──► live swap
+//!   (counters,        (sliding-       (SLO /     (worst-fit  (generational
+//!    histogram,        window rates,   util /     + greedy    InferenceSystem
+//!    device gauges)    p99, util)      failure)   + analytic)  ::reconfigure)
+//! ```
+//!
+//! * [`monitor::LoadMonitor`] — samples the engine's monotonic counters
+//!   and latency-histogram buckets into a sliding window, yielding
+//!   request/image rates, windowed p50/p99 and per-device utilization.
+//! * [`policy`] — decides *when* the current allocation is under- or
+//!   over-provisioned: windowed p99 above the SLO, device-utilization
+//!   imbalance, or a device marked failed.
+//! * [`planner`] — decides *what* to run instead: re-runs the worst-fit
+//!   + bounded-greedy pipeline scored by the closed-form analytic
+//!   estimator (no engine in the loop) over the surviving devices.
+//! * [`controller::ReconfigController`] — the background loop wiring the
+//!   three together and invoking
+//!   [`InferenceSystem::reconfigure`](crate::engine::InferenceSystem::reconfigure)
+//!   for the actual drain-and-switch.
+//!
+//! The swap protocol itself lives in the engine
+//! ([`crate::engine::generation`]): build the new worker generation in
+//! the background, atomically switch the routing, drain the old
+//! generation's in-flight requests, tear it down — no request is dropped
+//! or answered twice.
+
+pub mod controller;
+pub mod monitor;
+pub mod planner;
+pub mod policy;
+
+pub use controller::{ReconfigController, ReconfigOptions, StatusReport};
+pub use monitor::{LoadMonitor, LoadSnapshot};
+pub use planner::{plan, Plan, PlannerConfig};
+pub use policy::{decide, Decision, PolicyConfig};

@@ -1,0 +1,241 @@
+//! Sliding-window load monitor over [`EngineMetrics`].
+//!
+//! The engine only keeps monotonic counters and cumulative histogram
+//! buckets (cheap, lock-free). The monitor turns them into *windowed*
+//! signals by keeping a small deque of counter snapshots and diffing the
+//! newest against the oldest inside the window: request/image rates,
+//! windowed latency quantiles (bucket-count deltas share the cumulative
+//! histogram's bounds) and per-device busy fractions.
+
+use std::collections::VecDeque;
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::metrics::{quantile_ms_from_counts, EngineMetrics};
+
+struct Sample {
+    t: Instant,
+    completed: u64,
+    images_in: u64,
+    latency_counts: Vec<u64>,
+    latency_total_us: u64,
+    latency_n: u64,
+    device_busy_us: Vec<u64>,
+}
+
+/// Windowed view of the engine's load.
+#[derive(Debug, Clone)]
+pub struct LoadSnapshot {
+    /// Actual span between the window's edge samples.
+    pub span: Duration,
+    /// Requests completed inside the window.
+    pub completed: u64,
+    pub req_rate: f64,
+    pub img_rate: f64,
+    pub mean_ms: f64,
+    pub p50_ms: f64,
+    pub p99_ms: f64,
+    /// Per device index: predict-call wall time recorded by ALL of the
+    /// device's workers over the window, divided by the window span.
+    /// Co-located workers overlap (their calls serialize on the device
+    /// but each measures its own wall time including queue wait), so
+    /// the raw value can exceed 1. Callers that know the allocation
+    /// normalize per worker before thresholding — the controller
+    /// divides by the device's worker count (see
+    /// `ReconfigController::tick`).
+    pub device_util: Vec<f64>,
+}
+
+impl LoadSnapshot {
+    pub fn max_util(&self) -> f64 {
+        self.device_util.iter().cloned().fold(0.0, f64::max)
+    }
+
+    fn masked(&self, mask: &[bool]) -> impl Iterator<Item = f64> + '_ {
+        self.device_util
+            .iter()
+            .zip(mask)
+            .filter_map(|(&u, &m)| m.then_some(u))
+    }
+
+    /// Highest utilization among the devices selected by `mask`
+    /// (callers typically mask to GPUs: a busy CPU row is not
+    /// hot-device evidence).
+    pub fn masked_max(&self, mask: &[bool]) -> f64 {
+        self.masked(mask).fold(0.0, f64::max)
+    }
+
+    /// Spread (max − min) of utilization across the devices selected by
+    /// `mask` (callers typically mask to GPUs: an idle CPU row is not an
+    /// imbalance signal).
+    pub fn util_spread(&self, mask: &[bool]) -> f64 {
+        let utils: Vec<f64> = self.masked(mask).collect();
+        if utils.is_empty() {
+            return 0.0;
+        }
+        let max = utils.iter().cloned().fold(f64::MIN, f64::max);
+        let min = utils.iter().cloned().fold(f64::MAX, f64::min);
+        max - min
+    }
+}
+
+/// Sliding-window sampler over the engine's metrics.
+pub struct LoadMonitor {
+    metrics: Arc<EngineMetrics>,
+    window: Duration,
+    samples: Mutex<VecDeque<Sample>>,
+}
+
+impl LoadMonitor {
+    pub fn new(metrics: Arc<EngineMetrics>, window: Duration) -> LoadMonitor {
+        assert!(window > Duration::ZERO);
+        LoadMonitor { metrics, window, samples: Mutex::new(VecDeque::new()) }
+    }
+
+    pub fn window(&self) -> Duration {
+        self.window
+    }
+
+    /// Forget all samples. Called after a live swap: the window's busy
+    /// time and latencies were recorded by the previous generation
+    /// (different worker counts per device), so diffing across the swap
+    /// would mis-normalize utilization and judge the new allocation on
+    /// the old one's latencies.
+    pub fn reset(&self) {
+        self.samples.lock().unwrap().clear();
+    }
+
+    /// Take a counter snapshot now and prune samples older than the
+    /// window (the oldest in-window sample becomes the diff baseline).
+    pub fn sample(&self) {
+        let m = &self.metrics;
+        let s = Sample {
+            t: Instant::now(),
+            completed: m.requests_completed.load(std::sync::atomic::Ordering::Relaxed),
+            images_in: m.images_in.load(std::sync::atomic::Ordering::Relaxed),
+            latency_counts: m.request_latency.bucket_counts(),
+            latency_total_us: m.request_latency.total_us(),
+            latency_n: m.request_latency.count(),
+            device_busy_us: m.device_busy_us(),
+        };
+        let mut q = self.samples.lock().unwrap();
+        let cutoff = s.t.checked_sub(self.window);
+        q.push_back(s);
+        if let Some(cutoff) = cutoff {
+            while q.len() > 2 && q[1].t <= cutoff {
+                q.pop_front();
+            }
+        }
+    }
+
+    /// Diff the window's edge samples. `None` until two samples with a
+    /// measurable time span exist.
+    pub fn snapshot(&self) -> Option<LoadSnapshot> {
+        let q = self.samples.lock().unwrap();
+        let (first, last) = (q.front()?, q.back()?);
+        let span = last.t.duration_since(first.t);
+        if span < Duration::from_micros(100) {
+            return None;
+        }
+        let secs = span.as_secs_f64();
+        let completed = last.completed - first.completed;
+        let images = last.images_in - first.images_in;
+
+        let delta_counts: Vec<u64> = last
+            .latency_counts
+            .iter()
+            .zip(&first.latency_counts)
+            .map(|(a, b)| a - b)
+            .collect();
+        let bounds = self.metrics.request_latency.bounds();
+        let dn = last.latency_n - first.latency_n;
+        let mean_ms = if dn == 0 {
+            0.0
+        } else {
+            (last.latency_total_us - first.latency_total_us) as f64 / dn as f64 / 1000.0
+        };
+
+        let device_util: Vec<f64> = last
+            .device_busy_us
+            .iter()
+            .zip(&first.device_busy_us)
+            .map(|(a, b)| (a - b) as f64 / 1e6 / secs)
+            .collect();
+
+        Some(LoadSnapshot {
+            span,
+            completed,
+            req_rate: completed as f64 / secs,
+            img_rate: images as f64 / secs,
+            mean_ms,
+            p50_ms: quantile_ms_from_counts(bounds, &delta_counts, 0.50),
+            p99_ms: quantile_ms_from_counts(bounds, &delta_counts, 0.99),
+            device_util,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::Ordering;
+
+    #[test]
+    fn needs_two_spaced_samples() {
+        let m = Arc::new(EngineMetrics::with_devices(2));
+        let mon = LoadMonitor::new(Arc::clone(&m), Duration::from_secs(1));
+        assert!(mon.snapshot().is_none());
+        mon.sample();
+        assert!(mon.snapshot().is_none(), "single sample has no span");
+    }
+
+    #[test]
+    fn windowed_rates_and_quantiles() {
+        let m = Arc::new(EngineMetrics::with_devices(2));
+        let mon = LoadMonitor::new(Arc::clone(&m), Duration::from_secs(5));
+        mon.sample();
+        // simulate 40 completed requests at ~2 ms, one device busy
+        for _ in 0..40 {
+            m.requests_completed.fetch_add(1, Ordering::Relaxed);
+            m.images_in.fetch_add(16, Ordering::Relaxed);
+            m.request_latency.record(Duration::from_millis(2));
+        }
+        m.record_device_busy(0, Duration::from_millis(30));
+        std::thread::sleep(Duration::from_millis(60));
+        mon.sample();
+        let s = mon.snapshot().expect("two spaced samples");
+        assert_eq!(s.completed, 40);
+        // span is >=60ms but unbounded above on a loaded host: only
+        // sanity-check the rates
+        assert!(s.req_rate > 10.0, "req_rate={}", s.req_rate);
+        assert!((s.img_rate / s.req_rate - 16.0).abs() < 0.5);
+        assert!(s.p50_ms >= 2.0 && s.p50_ms <= 4.2, "p50={}", s.p50_ms);
+        assert!(s.p99_ms >= s.p50_ms);
+        assert!(s.mean_ms > 1.0 && s.mean_ms < 3.0, "mean={}", s.mean_ms);
+        // ~30ms busy over the span: util in (0, 1)
+        assert!(s.device_util[0] > 0.005 && s.device_util[0] < 1.0,
+                "util={:?}", s.device_util);
+        assert!(s.device_util[1] == 0.0);
+        assert!(s.max_util() >= s.device_util[0]);
+        assert!(s.util_spread(&[true, true]) > 0.0);
+        assert_eq!(s.util_spread(&[false, false]), 0.0);
+        assert_eq!(s.masked_max(&[false, true]), 0.0, "device 0 masked out");
+        assert!((s.masked_max(&[true, true]) - s.device_util[0]).abs() < 1e-12);
+    }
+
+    #[test]
+    fn old_samples_pruned_to_window() {
+        let m = Arc::new(EngineMetrics::with_devices(1));
+        let mon = LoadMonitor::new(Arc::clone(&m), Duration::from_millis(50));
+        mon.sample();
+        std::thread::sleep(Duration::from_millis(80));
+        // this burst must not be attributed to the stale baseline forever
+        m.requests_completed.fetch_add(10, Ordering::Relaxed);
+        mon.sample();
+        std::thread::sleep(Duration::from_millis(20));
+        mon.sample();
+        let s = mon.snapshot().unwrap();
+        // span is bounded by ~window once pruning kicks in
+        assert!(s.span <= Duration::from_millis(200), "span={:?}", s.span);
+    }
+}

@@ -1,0 +1,193 @@
+//! Re-entrant allocation planning: *what* to run instead.
+//!
+//! Re-runs the paper's pipeline — worst-fit-decreasing (Algorithm 1)
+//! then bounded greedy (Algorithm 2) — restricted to the surviving
+//! devices and scored by the closed-form analytic throughput estimator,
+//! so a candidate matrix is produced **without touching the engine**
+//! (the engine-in-the-loop bench of the offline optimizer would compete
+//! with live traffic for the very devices being re-planned). The search
+//! budget defaults below the offline one: an online replan must finish
+//! in milliseconds, and the analytic scores are smooth enough that a
+//! smaller neighborhood sample converges.
+//!
+//! **Co-residency:** a zero-downtime swap builds the new generation
+//! *next to* the allocations still holding device memory (the live
+//! generation, plus any timed-out drains). The `resident` matrices
+//! shrink each device's budget by their workers' footprints before
+//! planning; the returned matrix is then guaranteed buildable without
+//! draining first.
+
+use anyhow::ensure;
+
+use crate::alloc::greedy::{bounded_greedy, GreedyConfig};
+use crate::alloc::matrix::AllocationMatrix;
+use crate::alloc::memory::device_usage_mb;
+use crate::alloc::worstfit::worst_fit_decreasing;
+use crate::device::DeviceSet;
+use crate::model::Ensemble;
+use crate::optimizer::analytic::estimate_throughput;
+
+/// Online planning knobs.
+#[derive(Debug, Clone)]
+pub struct PlannerConfig {
+    /// Algorithm 1's default (minimum) batch size.
+    pub default_batch: u32,
+    /// Algorithm 2 budget (smaller than the offline §III defaults).
+    pub greedy: GreedyConfig,
+}
+
+impl Default for PlannerConfig {
+    fn default() -> Self {
+        PlannerConfig {
+            default_batch: crate::alloc::DEFAULT_BATCH,
+            greedy: GreedyConfig { max_iter: 6, max_neighs: 32, ..GreedyConfig::default() },
+        }
+    }
+}
+
+/// A candidate allocation over the full device set.
+#[derive(Debug, Clone)]
+pub struct Plan {
+    /// Matrix in the *full* device row indexing (failed-device rows all
+    /// zero) — directly deployable against the running executor.
+    pub matrix: AllocationMatrix,
+    /// Analytic throughput estimate, img/s.
+    pub predicted_img_s: f64,
+    /// Device indices the plan may use.
+    pub survivors: Vec<usize>,
+}
+
+/// Plan an allocation of `ensemble` onto `devices` minus `failed`.
+///
+/// `resident` lists every allocation currently holding device memory
+/// (the live generation, plus any timed-out drains still pinned by
+/// stuck callers): their per-device footprints are subtracted from the
+/// budgets so the plan can be built alongside all of them
+/// (build-then-drain).
+pub fn plan(
+    ensemble: &Ensemble,
+    devices: &DeviceSet,
+    failed: &[usize],
+    resident: &[AllocationMatrix],
+    cfg: &PlannerConfig,
+) -> anyhow::Result<Plan> {
+    let survivors: Vec<usize> =
+        (0..devices.len()).filter(|d| !failed.contains(d)).collect();
+    ensure!(!survivors.is_empty(), "all {} devices marked failed", devices.len());
+
+    let sub = DeviceSet::new(
+        survivors
+            .iter()
+            .map(|&d| {
+                let mut spec = devices[d].clone();
+                let used: f64 =
+                    resident.iter().map(|r| device_usage_mb(r, ensemble, d)).sum();
+                spec.mem_mb = spec.mem_mb.saturating_sub(used.ceil() as u64);
+                spec
+            })
+            .collect(),
+    );
+    let a1 = worst_fit_decreasing(ensemble, &sub, cfg.default_batch)?;
+    let report = bounded_greedy(&a1, &cfg.greedy, |m| estimate_throughput(m, ensemble, &sub));
+
+    // expand the survivor-row matrix back to full device indexing
+    let mut matrix = AllocationMatrix::zeroed(devices.len(), ensemble.len());
+    for (sub_row, &full_row) in survivors.iter().enumerate() {
+        for m in 0..ensemble.len() {
+            matrix.set(full_row, m, report.best.get(sub_row, m));
+        }
+    }
+    Ok(Plan { matrix, predicted_img_s: report.best_speed, survivors })
+}
+
+/// Analytic score of an existing full-indexed matrix (the controller's
+/// hysteresis baseline).
+pub fn score(matrix: &AllocationMatrix, ensemble: &Ensemble, devices: &DeviceSet) -> f64 {
+    estimate_throughput(matrix, ensemble, devices)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::{ensemble, EnsembleId};
+
+    #[test]
+    fn plans_full_device_set() {
+        let e = ensemble(EnsembleId::Imn4);
+        let d = DeviceSet::hgx(4);
+        let p = plan(&e, &d, &[], &[], &PlannerConfig::default()).unwrap();
+        assert!(p.matrix.all_models_placed());
+        assert_eq!(p.matrix.n_devices(), d.len());
+        assert!(p.predicted_img_s > 0.0);
+        assert_eq!(p.survivors, vec![0, 1, 2, 3, 4]);
+        // deployable score matches the sub-set score
+        let full_score = score(&p.matrix, &e, &d);
+        assert!((full_score - p.predicted_img_s).abs() / p.predicted_img_s < 0.02,
+                "full={} sub={}", full_score, p.predicted_img_s);
+    }
+
+    #[test]
+    fn failed_device_left_empty() {
+        let e = ensemble(EnsembleId::Imn4);
+        let d = DeviceSet::hgx(4);
+        let p = plan(&e, &d, &[0, 2], &[], &PlannerConfig::default()).unwrap();
+        assert!(p.matrix.all_models_placed());
+        assert!(p.matrix.device_workers(0).is_empty(), "failed device 0 used");
+        assert!(p.matrix.device_workers(2).is_empty(), "failed device 2 used");
+        assert_eq!(p.survivors, vec![1, 3, 4]);
+        assert!(p.predicted_img_s > 0.0);
+    }
+
+    #[test]
+    fn greedy_beats_or_matches_single_gpu_plan() {
+        // one heavy model, four GPUs: the planner must exploit data
+        // parallelism beyond the single worker Algorithm 1 starts with
+        let e = ensemble(EnsembleId::Imn1);
+        let d = DeviceSet::hgx(4);
+        let p = plan(&e, &d, &[], &[], &PlannerConfig::default()).unwrap();
+        let mut single = AllocationMatrix::zeroed(d.len(), 1);
+        single.set(0, 0, 8);
+        let s1 = score(&single, &e, &d);
+        assert!(p.predicted_img_s > s1 * 1.5,
+                "planned {} vs single-worker {}", p.predicted_img_s, s1);
+    }
+
+    #[test]
+    fn all_devices_failed_errors() {
+        let e = ensemble(EnsembleId::Imn1);
+        let d = DeviceSet::hgx(1);
+        assert!(plan(&e, &d, &[0, 1], &[], &PlannerConfig::default()).is_err());
+    }
+
+    #[test]
+    fn infeasible_survivors_error() {
+        // 12 heavy models cannot fit the CPU alone
+        let e = ensemble(EnsembleId::Imn12);
+        let d = DeviceSet::hgx(1);
+        assert!(plan(&e, &d, &[0], &[], &PlannerConfig::default()).is_err());
+    }
+
+    #[test]
+    fn resident_generation_shrinks_the_budget() {
+        use crate::alloc::memory::{device_usage_mb, fit_mem};
+        let e = ensemble(EnsembleId::Imn1);
+        let d = DeviceSet::hgx(1); // one 16 GB V100 (+ CPU)
+        // live generation: one ResNet152 worker at batch 8 (~5.5 GB)
+        let mut resident = AllocationMatrix::zeroed(d.len(), e.len());
+        resident.set(0, 0, 8);
+        let p = plan(&e, &d, &[], std::slice::from_ref(&resident), &PlannerConfig::default())
+            .unwrap();
+        // the plan must fit NEXT TO the resident workers on every device
+        for dev in 0..d.len() {
+            let both = device_usage_mb(&p.matrix, &e, dev) + device_usage_mb(&resident, &e, dev);
+            assert!(both <= d[dev].mem_mb as f64,
+                    "device {dev}: {both:.0} MB with resident > {} MB", d[dev].mem_mb);
+        }
+        assert!(fit_mem(&p.matrix, &e, &d));
+        // without the resident constraint the planner may spend the
+        // whole device (a strictly larger feasible region)
+        let free = plan(&e, &d, &[], &[], &PlannerConfig::default()).unwrap();
+        assert!(free.predicted_img_s >= p.predicted_img_s * 0.999,
+                "free {} < co-resident {}", free.predicted_img_s, p.predicted_img_s);
+    }
+}

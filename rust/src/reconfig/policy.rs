@@ -1,0 +1,272 @@
+//! Reconfiguration policy: *when* to re-plan the allocation.
+//!
+//! Pure decision logic over a [`LoadSnapshot`] — no clocks, no engine
+//! handles — so every rule is unit-testable. The controller feeds it the
+//! windowed signals plus the failure/cooldown context and acts on the
+//! returned [`Decision`].
+
+use std::time::Duration;
+
+use crate::reconfig::monitor::LoadSnapshot;
+
+/// Thresholds driving the replan decision.
+#[derive(Debug, Clone)]
+pub struct PolicyConfig {
+    /// Windowed p99 latency objective, ms.
+    pub p99_slo_ms: f64,
+    /// Completed-request floor for the SLO-breach signal. Deliberately
+    /// small: under overload, completions are scarce *because* the
+    /// allocation is failing — a saturated-but-slow system must still
+    /// trigger scaling.
+    pub min_slo_samples: u64,
+    /// Completed-request floor for the voluntary rebalancing signal
+    /// (utilization imbalance): rebalancing a near-idle system is churn.
+    pub min_window_requests: u64,
+    /// In-flight requests beyond this trigger a replan regardless of the
+    /// window: latency quantiles only see COMPLETED requests, so an
+    /// allocation slow enough to complete almost nothing would starve
+    /// every latency-based gate while its queue grows without bound.
+    pub max_backlog: u64,
+    /// A device busier than this marks the allocation hot...
+    pub high_util: f64,
+    /// ...and a max−min utilization spread (over GPUs) beyond this marks
+    /// it imbalanced.
+    pub imbalance_spread: f64,
+    /// Minimum time between voluntary swaps (failure replans bypass it).
+    pub cooldown: Duration,
+    /// Voluntary swaps require the planner's predicted throughput to
+    /// beat the current allocation's by this factor (hysteresis against
+    /// swap churn). Enforced by the controller, carried here so one
+    /// config object describes the whole policy.
+    pub min_predicted_gain: f64,
+}
+
+impl Default for PolicyConfig {
+    fn default() -> Self {
+        PolicyConfig {
+            p99_slo_ms: 500.0,
+            min_slo_samples: 5,
+            min_window_requests: 20,
+            max_backlog: 64,
+            high_util: 0.85,
+            imbalance_spread: 0.5,
+            cooldown: Duration::from_secs(10),
+            min_predicted_gain: 1.05,
+        }
+    }
+}
+
+/// Outcome of one policy evaluation.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Decision {
+    /// Keep the current allocation; the string says why.
+    Hold(String),
+    /// Run the planner. `force` skips the predicted-gain gate (device
+    /// failure: any feasible allocation on the survivors beats a broken
+    /// one).
+    Replan { reason: String, force: bool },
+}
+
+/// Evaluate the policy.
+///
+/// * `snapshot` — windowed load, `None` while the monitor warms up.
+/// * `gpu_mask` — per-device-index GPU flag (imbalance ignores the CPU).
+/// * `in_flight` — requests currently inside the active generation.
+/// * `active_uses_failed_device` — the serving matrix places workers on
+///   a device marked failed.
+/// * `since_last_swap` — elapsed since the last completed swap, `None`
+///   if never swapped.
+pub fn decide(
+    cfg: &PolicyConfig,
+    snapshot: Option<&LoadSnapshot>,
+    gpu_mask: &[bool],
+    in_flight: u64,
+    active_uses_failed_device: bool,
+    since_last_swap: Option<Duration>,
+) -> Decision {
+    if active_uses_failed_device {
+        return Decision::Replan {
+            reason: "active allocation uses a failed device".into(),
+            force: true,
+        };
+    }
+    if let Some(t) = since_last_swap {
+        if t < cfg.cooldown {
+            return Decision::Hold(format!(
+                "cooldown: {:.1}s of {:.1}s since last swap",
+                t.as_secs_f64(),
+                cfg.cooldown.as_secs_f64()
+            ));
+        }
+    }
+    // backlog overload: an SLO-independent signal that needs no window —
+    // requests piling up inside the engine mean the allocation cannot
+    // keep pace, even if none of them has completed yet
+    if in_flight > cfg.max_backlog {
+        return Decision::Replan {
+            reason: format!(
+                "backlog: {in_flight} requests in flight (> {})",
+                cfg.max_backlog
+            ),
+            force: false,
+        };
+    }
+    let Some(s) = snapshot else {
+        return Decision::Hold("monitor warming up".into());
+    };
+    // SLO breach: gated only by a small sample floor — under overload,
+    // completions are scarce precisely because the allocation is
+    // failing, and holding on "thin traffic" would starve the scaler
+    // in the exact situation it exists for.
+    if s.completed >= cfg.min_slo_samples && s.p99_ms > cfg.p99_slo_ms {
+        return Decision::Replan {
+            reason: format!("windowed p99 {:.1} ms above SLO {:.1} ms", s.p99_ms, cfg.p99_slo_ms),
+            force: false,
+        };
+    }
+    if s.completed < cfg.min_window_requests {
+        return Decision::Hold(format!(
+            "thin traffic: {} requests in window (< {})",
+            s.completed, cfg.min_window_requests
+        ));
+    }
+    // both halves of the imbalance gate look at GPUs only: a busy CPU
+    // row is neither hot-device evidence nor an imbalance signal
+    let spread = s.util_spread(gpu_mask);
+    let gpu_max = s.masked_max(gpu_mask);
+    if gpu_max > cfg.high_util && spread > cfg.imbalance_spread {
+        return Decision::Replan {
+            reason: format!(
+                "device utilization imbalance: spread {spread:.2} at max GPU util {gpu_max:.2}"
+            ),
+            force: false,
+        };
+    }
+    Decision::Hold(format!(
+        "within SLO: p99 {:.1} ms, max util {:.2}",
+        s.p99_ms,
+        s.max_util()
+    ))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn snap(completed: u64, p99: f64, utils: Vec<f64>) -> LoadSnapshot {
+        LoadSnapshot {
+            span: Duration::from_secs(1),
+            completed,
+            req_rate: completed as f64,
+            img_rate: completed as f64 * 8.0,
+            mean_ms: p99 / 2.0,
+            p50_ms: p99 / 2.0,
+            p99_ms: p99,
+            device_util: utils,
+        }
+    }
+
+    fn is_replan(d: &Decision) -> bool {
+        matches!(d, Decision::Replan { .. })
+    }
+
+    #[test]
+    fn failure_forces_replan_over_everything() {
+        let cfg = PolicyConfig::default();
+        let d = decide(&cfg, None, &[true], 0, true, Some(Duration::ZERO));
+        match d {
+            Decision::Replan { force, .. } => assert!(force),
+            other => panic!("expected forced replan, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn cooldown_holds_voluntary_replans() {
+        let cfg = PolicyConfig::default();
+        let s = snap(100, 10_000.0, vec![1.0, 0.0]);
+        let d = decide(&cfg, Some(&s), &[true, true], 0, false, Some(Duration::from_secs(1)));
+        assert!(matches!(d, Decision::Hold(_)), "{d:?}");
+        // cooldown elapsed: the SLO breach fires
+        let d = decide(&cfg, Some(&s), &[true, true], 0, false, Some(Duration::from_secs(60)));
+        assert!(is_replan(&d), "{d:?}");
+    }
+
+    #[test]
+    fn warming_up_and_thin_traffic_hold() {
+        let cfg = PolicyConfig::default();
+        assert!(matches!(decide(&cfg, None, &[true], 0, false, None), Decision::Hold(_)));
+        let s = snap(3, 10_000.0, vec![1.0]);
+        assert!(matches!(decide(&cfg, Some(&s), &[true], 0, false, None), Decision::Hold(_)));
+    }
+
+    #[test]
+    fn slo_breach_replans() {
+        let cfg = PolicyConfig { p99_slo_ms: 100.0, ..Default::default() };
+        let s = snap(50, 250.0, vec![0.5, 0.5]);
+        let d = decide(&cfg, Some(&s), &[true, true], 0, false, None);
+        match d {
+            Decision::Replan { reason, force } => {
+                assert!(!force);
+                assert!(reason.contains("p99"), "{reason}");
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn backlog_overload_replans_even_without_completions() {
+        let cfg = PolicyConfig::default();
+        // nothing completes (so no window quantiles), but the queue
+        // inside the engine is huge: scale anyway
+        let d = decide(&cfg, None, &[true], 1000, false, None);
+        assert!(is_replan(&d), "{d:?}");
+        // a modest in-flight count is not a signal
+        let d = decide(&cfg, None, &[true], 3, false, None);
+        assert!(matches!(d, Decision::Hold(_)), "{d:?}");
+    }
+
+    #[test]
+    fn overload_with_scarce_completions_still_replans() {
+        let cfg = PolicyConfig { p99_slo_ms: 100.0, ..Default::default() };
+        // saturated-but-slow: completions scarce BECAUSE the allocation
+        // is failing — the breach must still fire below
+        // min_window_requests
+        let s = snap(6, 5_000.0, vec![1.0, 0.0]);
+        let d = decide(&cfg, Some(&s), &[true, true], 0, false, None);
+        assert!(is_replan(&d), "{d:?}");
+        // a near-empty window (below the sample floor) still holds
+        let s = snap(2, 5_000.0, vec![1.0, 0.0]);
+        let d = decide(&cfg, Some(&s), &[true, true], 0, false, None);
+        assert!(matches!(d, Decision::Hold(_)), "{d:?}");
+    }
+
+    #[test]
+    fn imbalance_replans_only_when_hot() {
+        let cfg = PolicyConfig { p99_slo_ms: 1e9, ..Default::default() };
+        // imbalanced AND hot
+        let s = snap(50, 1.0, vec![0.95, 0.05, 0.0]);
+        let d = decide(&cfg, Some(&s), &[true, true, false], 0, false, None);
+        assert!(is_replan(&d), "{d:?}");
+        // imbalanced but cold: hold
+        let s = snap(50, 1.0, vec![0.4, 0.0, 0.0]);
+        let d = decide(&cfg, Some(&s), &[true, true, false], 0, false, None);
+        assert!(matches!(d, Decision::Hold(_)), "{d:?}");
+        // the idle CPU row is not an imbalance signal
+        let s = snap(50, 1.0, vec![0.9, 0.9, 0.0]);
+        let d = decide(&cfg, Some(&s), &[true, true, false], 0, false, None);
+        assert!(matches!(d, Decision::Hold(_)), "{d:?}");
+        // and a BUSY CPU row is not hot-device evidence either: GPUs
+        // imbalanced but cold must hold even at CPU util 0.95
+        let s = snap(50, 1.0, vec![0.6, 0.05, 0.95]);
+        let d = decide(&cfg, Some(&s), &[true, true, false], 0, false, None);
+        assert!(matches!(d, Decision::Hold(_)), "{d:?}");
+    }
+
+    #[test]
+    fn healthy_system_holds() {
+        let cfg = PolicyConfig::default();
+        let s = snap(500, 20.0, vec![0.6, 0.55, 0.1]);
+        let d = decide(&cfg, Some(&s), &[true, true, false], 0, false, None);
+        assert!(matches!(d, Decision::Hold(_)), "{d:?}");
+    }
+}

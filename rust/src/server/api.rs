@@ -5,14 +5,21 @@
 //!   or raw little-endian f32 (`application/octet-stream`) with the image
 //!   count in the `x-num-images` header. Responds in kind.
 //! * `GET /v1/health` — readiness probe.
-//! * `GET /v1/stats` — engine metrics + request latency summary.
+//! * `GET /v1/stats` — engine metrics + request latency summary (JSON).
+//! * `GET /v1/metrics` — the same in Prometheus text exposition format.
 //! * `GET /v1/matrix` — the allocation matrix serving the ensemble.
+//! * `POST /v1/reconfigure` — admin: force a replan/hot-swap; body may
+//!   carry `{"fail_device": d}`, `{"recover_device": d}` and/or
+//!   `{"reason": "..."}`. Requires a [`ReconfigController`].
+//! * `GET /v1/reconfig/status` — controller status: generation, swaps,
+//!   failed devices, last decision, windowed load.
 
 use std::sync::Arc;
 use std::time::Instant;
 
 use crate::engine::InferenceSystem;
 use crate::metrics::LatencyHistogram;
+use crate::reconfig::ReconfigController;
 use crate::server::cache::{request_key, PredictionCache};
 use crate::server::http::{Handler, HttpServer, Request, Response};
 use crate::util::json::Json;
@@ -28,23 +35,40 @@ struct ApiState {
     latency: LatencyHistogram,
     /// Optional redundant-request cache (§I.B).
     cache: Option<PredictionCache>,
+    /// Optional autoscaling controller (admin routes).
+    controller: Option<Arc<ReconfigController>>,
 }
 
 impl ApiServer {
     pub fn start(system: Arc<InferenceSystem>, addr: &str, threads: usize)
         -> anyhow::Result<ApiServer> {
-        Self::start_opts(system, addr, threads, None)
+        Self::start_opts(system, addr, threads, None, None)
     }
 
     /// Start with a prediction cache of `cache_capacity` entries.
     pub fn start_cached(system: Arc<InferenceSystem>, addr: &str, threads: usize,
                         cache_capacity: usize) -> anyhow::Result<ApiServer> {
-        Self::start_opts(system, addr, threads, Some(PredictionCache::new(cache_capacity)))
+        Self::start_opts(system, addr, threads, Some(PredictionCache::new(cache_capacity)),
+                         None)
+    }
+
+    /// Start with the live-reconfiguration admin routes wired to a
+    /// running controller.
+    pub fn start_with_controller(system: Arc<InferenceSystem>, addr: &str, threads: usize,
+                                 controller: Arc<ReconfigController>)
+        -> anyhow::Result<ApiServer> {
+        Self::start_opts(system, addr, threads, None, Some(controller))
     }
 
     fn start_opts(system: Arc<InferenceSystem>, addr: &str, threads: usize,
-                  cache: Option<PredictionCache>) -> anyhow::Result<ApiServer> {
-        let state = Arc::new(ApiState { system, latency: LatencyHistogram::new(), cache });
+                  cache: Option<PredictionCache>,
+                  controller: Option<Arc<ReconfigController>>) -> anyhow::Result<ApiServer> {
+        let state = Arc::new(ApiState {
+            system,
+            latency: LatencyHistogram::new(),
+            cache,
+            controller,
+        });
         let h_state = Arc::clone(&state);
         let handler: Handler = Arc::new(move |req: &Request| route(&h_state, req));
         let http = HttpServer::start(addr, threads, handler)?;
@@ -65,7 +89,10 @@ fn route(state: &ApiState, req: &Request) -> Response {
         ("POST", "/v1/predict") => predict(state, req),
         ("GET", "/v1/health") => health(state),
         ("GET", "/v1/stats") => stats(state),
+        ("GET", "/v1/metrics") => prometheus(state),
         ("GET", "/v1/matrix") => matrix(state),
+        ("POST", "/v1/reconfigure") => reconfigure(state, req),
+        ("GET", "/v1/reconfig/status") => reconfig_status(state),
         ("POST", _) | ("GET", _) => Response::text(404, "unknown route"),
         _ => Response::text(405, "method not allowed"),
     }
@@ -90,15 +117,171 @@ fn stats(state: &ApiState) -> Response {
         .collect();
     fields.push(("latency_mean_ms", Json::Num(state.latency.mean_ms())));
     fields.push(("latency_p95_ms", Json::Num(state.latency.quantile_ms(0.95))));
+    fields.push(("swaps", Json::Num(state.system.swap_count() as f64)));
     if let Some(cache) = &state.cache {
         fields.push(("cache_entries", Json::Num(cache.len() as f64)));
         fields.push(("cache_hit_rate", Json::Num(cache.hit_rate())));
     }
+    fields.push((
+        "device_busy_us",
+        Json::Arr(
+            state
+                .system
+                .metrics()
+                .device_busy_us()
+                .into_iter()
+                .map(|u| Json::Num(u as f64))
+                .collect(),
+        ),
+    ));
     Response::json(200, Json::from_pairs(fields).to_string())
+}
+
+/// Prometheus text exposition (v0.0.4) of the engine counters, the
+/// per-device busy gauges and both latency histograms.
+fn prometheus(state: &ApiState) -> Response {
+    let m = state.system.metrics();
+    let mut out = String::new();
+    for (k, v) in m.snapshot() {
+        // prometheus convention: counters carry the _total suffix,
+        // gauges do not
+        if k == "generation" {
+            out.push_str(&format!(
+                "# TYPE ensemble_serve_{k} gauge\nensemble_serve_{k} {v}\n"
+            ));
+        } else {
+            out.push_str(&format!(
+                "# TYPE ensemble_serve_{k}_total counter\nensemble_serve_{k}_total {v}\n"
+            ));
+        }
+    }
+    out.push_str("# TYPE ensemble_serve_device_busy_seconds_total counter\n");
+    for (d, us) in m.device_busy_us().iter().enumerate() {
+        out.push_str(&format!(
+            "ensemble_serve_device_busy_seconds_total{{device=\"{d}\"}} {}\n",
+            *us as f64 / 1e6
+        ));
+    }
+    write_histogram(&mut out, "ensemble_serve_predict_latency_seconds", &m.request_latency);
+    write_histogram(&mut out, "ensemble_serve_http_latency_seconds", &state.latency);
+    Response { status: 200, content_type: "text/plain; version=0.0.4", body: out.into_bytes() }
+}
+
+fn write_histogram(out: &mut String, name: &str, h: &LatencyHistogram) {
+    out.push_str(&format!("# TYPE {name} histogram\n"));
+    // +Inf and _count must come from the SAME snapshot as the finite
+    // buckets: mixing in h.count() (a separate atomic) under concurrent
+    // recording can emit a non-monotone histogram.
+    let counts = h.bucket_counts();
+    let total: u64 = counts.iter().sum();
+    let mut cum = 0u64;
+    for (bound_us, count) in h.bounds().iter().zip(&counts) {
+        cum += count;
+        out.push_str(&format!(
+            "{name}_bucket{{le=\"{}\"}} {cum}\n",
+            *bound_us as f64 / 1e6
+        ));
+    }
+    out.push_str(&format!("{name}_bucket{{le=\"+Inf\"}} {total}\n"));
+    out.push_str(&format!("{name}_sum {}\n", h.total_us() as f64 / 1e6));
+    out.push_str(&format!("{name}_count {total}\n"));
 }
 
 fn matrix(state: &ApiState) -> Response {
     Response::json(200, state.system.matrix().to_json().to_string())
+}
+
+/// Strict device-index argument: present-but-malformed (string,
+/// negative, fractional) is an error, not an absent key — a typo'd
+/// failure report must not silently turn into a plain forced swap.
+fn device_arg(doc: &Json, key: &str) -> Result<Option<usize>, String> {
+    match doc.get(key) {
+        None => Ok(None),
+        Some(v) => match v.as_f64() {
+            Some(f) if f >= 0.0 && f.fract() == 0.0 => Ok(Some(f as usize)),
+            _ => Err(format!("{key} must be a non-negative integer")),
+        },
+    }
+}
+
+fn reconfigure(state: &ApiState, req: &Request) -> Response {
+    let Some(ctrl) = &state.controller else {
+        return Response::text(404, "no reconfiguration controller running");
+    };
+    let mut reason = "operator request".to_string();
+    if !req.body.is_empty() {
+        let doc = match std::str::from_utf8(&req.body)
+            .map_err(|e| e.to_string())
+            .and_then(|t| Json::parse(t).map_err(|e| e.to_string()))
+        {
+            Ok(doc) => doc,
+            Err(e) => return Response::text(400, &format!("bad request: {e}")),
+        };
+        // strict schema: a non-object body or a typo'd key would
+        // otherwise read as "no arguments" and degrade a device-failure
+        // report into a plain forced swap
+        let Some(obj) = doc.as_obj() else {
+            return Response::text(400, "bad request: body must be a JSON object");
+        };
+        for key in obj.keys() {
+            if !["fail_device", "recover_device", "reason"].contains(&key.as_str()) {
+                return Response::text(400, &format!("bad request: unknown field '{key}'"));
+            }
+        }
+        // validate the WHOLE body before applying any of it: a partial
+        // apply (fail_device marked, then 400 on a later field) would
+        // leave the controller force-replanning off a device from a
+        // request the operator saw rejected
+        let fail = match device_arg(&doc, "fail_device") {
+            Ok(v) => v,
+            Err(e) => return Response::text(400, &format!("bad request: {e}")),
+        };
+        let recover = match device_arg(&doc, "recover_device") {
+            Ok(v) => v,
+            Err(e) => return Response::text(400, &format!("bad request: {e}")),
+        };
+        let custom_reason = match doc.get("reason") {
+            None => None,
+            Some(Json::Str(r)) => Some(r.clone()),
+            Some(_) => return Response::text(400, "bad request: reason must be a string"),
+        };
+        let mut actions = match ctrl.mark_devices(fail, recover) {
+            Ok(notes) => notes,
+            Err(e) => return Response::text(400, &format!("bad request: {e}")),
+        };
+        if let Some(r) = custom_reason {
+            actions.push(r);
+        }
+        if !actions.is_empty() {
+            reason = actions.join("; ");
+        }
+    }
+    match ctrl.reconfigure_now(&reason) {
+        Ok(Some(r)) => {
+            let mut fields = match crate::reconfig::controller::swap_report_json(&r) {
+                Json::Obj(map) => map,
+                _ => Default::default(),
+            };
+            fields.insert("swapped".to_string(), Json::Bool(true));
+            Response::json(200, Json::Obj(fields).to_string())
+        }
+        Ok(None) => Response::json(
+            200,
+            Json::from_pairs([
+                ("swapped", Json::Bool(false)),
+                ("decision", Json::Str(ctrl.status().last_decision)),
+            ])
+            .to_string(),
+        ),
+        Err(e) => Response::text(503, &format!("reconfiguration failed: {e:#}")),
+    }
+}
+
+fn reconfig_status(state: &ApiState) -> Response {
+    match &state.controller {
+        Some(ctrl) => Response::json(200, ctrl.status().to_json().to_string()),
+        None => Response::text(404, "no reconfiguration controller running"),
+    }
 }
 
 fn predict(state: &ApiState, req: &Request) -> Response {
@@ -292,6 +475,112 @@ mod tests {
         let classes = srv.system().ensemble().classes();
         let body_start = resp.windows(4).position(|w| w == b"\r\n\r\n").unwrap() + 4;
         assert_eq!(resp.len() - body_start, n * classes * 4);
+    }
+
+    #[test]
+    fn prometheus_exposition() {
+        let srv = api();
+        let elems = srv.system().ensemble().members[0].input_elems_per_image();
+        let row = format!("[{}]", vec!["0.5"; elems].join(","));
+        let body = format!("{{\"images\":[{row}]}}");
+        let (code, _) = http_request(srv.addr(), "POST", "/v1/predict",
+                                     "application/json", body.as_bytes())
+            .unwrap();
+        assert_eq!(code, 200);
+        let (code, body) = http_request(srv.addr(), "GET", "/v1/metrics", "", b"").unwrap();
+        assert_eq!(code, 200);
+        let text = String::from_utf8(body).unwrap();
+        assert!(text.contains("# TYPE ensemble_serve_requests_total counter"), "{text}");
+        assert!(text.contains("ensemble_serve_requests_total 1"), "{text}");
+        assert!(text.contains("# TYPE ensemble_serve_generation gauge"), "{text}");
+        assert!(text.contains("ensemble_serve_device_busy_seconds_total{device=\"0\"}"),
+                "{text}");
+        assert!(text.contains("ensemble_serve_predict_latency_seconds_bucket{le=\"+Inf\"} 1"),
+                "{text}");
+        assert!(text.contains("ensemble_serve_predict_latency_seconds_count 1"), "{text}");
+    }
+
+    #[test]
+    fn reconfig_routes_require_controller() {
+        let srv = api();
+        let (code, _) = http_request(srv.addr(), "GET", "/v1/reconfig/status", "", b"").unwrap();
+        assert_eq!(code, 404);
+        let (code, _) = http_request(srv.addr(), "POST", "/v1/reconfigure",
+                                     "application/json", b"{}")
+            .unwrap();
+        assert_eq!(code, 404);
+    }
+
+    #[test]
+    fn reconfigure_and_status_with_controller() {
+        use crate::reconfig::{ReconfigController, ReconfigOptions};
+        // deliberately lopsided start: everything piled on GPU0 of 4 (the
+        // fake backend ignores memory, but the co-residency planner does
+        // not — GPUs 1-3 leave room to build the next generation)
+        let e = ensemble(EnsembleId::Imn4);
+        let d = DeviceSet::hgx(4);
+        let mut a = AllocationMatrix::zeroed(d.len(), e.len());
+        for m in 0..e.len() {
+            a.set(0, m, 8);
+        }
+        let sys = Arc::new(
+            InferenceSystem::build(&a, &e, Arc::new(FakeExecutor::new(d)),
+                                   EngineOptions::default())
+                .unwrap(),
+        );
+        let ctrl = ReconfigController::start(Arc::clone(&sys), ReconfigOptions::default());
+        ctrl.stop(); // admin-only in this test: no background ticks
+        let srv = ApiServer::start_with_controller(sys, "127.0.0.1:0", 2, ctrl).unwrap();
+
+        let (code, body) = http_request(srv.addr(), "GET", "/v1/reconfig/status", "", b"")
+            .unwrap();
+        assert_eq!(code, 200);
+        let j = Json::parse(std::str::from_utf8(&body).unwrap()).unwrap();
+        assert_eq!(j.get("generation").and_then(Json::as_usize), Some(1));
+
+        // operator-forced replan: the planner spreads over both GPUs
+        let (code, body) = http_request(srv.addr(), "POST", "/v1/reconfigure",
+                                        "application/json", b"{\"reason\":\"test\"}")
+            .unwrap();
+        assert_eq!(code, 200, "{}", String::from_utf8_lossy(&body));
+        let j = Json::parse(std::str::from_utf8(&body).unwrap()).unwrap();
+        assert_eq!(j.get("swapped").and_then(Json::as_bool), Some(true), "{j:?}");
+        assert_eq!(j.get("to_generation").and_then(Json::as_usize), Some(2));
+        assert_eq!(srv.system().generation(), 2);
+
+        // stats carries the generation counter
+        let (_, body) = http_request(srv.addr(), "GET", "/v1/stats", "", b"").unwrap();
+        let j = Json::parse(std::str::from_utf8(&body).unwrap()).unwrap();
+        assert_eq!(j.get("generation").and_then(Json::as_usize), Some(2));
+        assert_eq!(j.get("swaps").and_then(Json::as_usize), Some(1));
+
+        // invalid device index is a client error
+        let (code, _) = http_request(srv.addr(), "POST", "/v1/reconfigure",
+                                     "application/json", b"{\"fail_device\": 99}")
+            .unwrap();
+        assert_eq!(code, 400);
+        // malformed device values must NOT degrade into a plain forced
+        // swap: present-but-bad is rejected
+        for bad in [&b"{\"fail_device\": \"3\"}"[..], b"{\"fail_device\": 1.7}",
+                    b"{\"recover_device\": -1}", b"\"fail_device: 3\"",
+                    b"{\"fail_devise\": 3}", b"[3]", b"{\"reason\": 123}"] {
+            let (code, _) = http_request(srv.addr(), "POST", "/v1/reconfigure",
+                                         "application/json", bad)
+                .unwrap();
+            assert_eq!(code, 400, "{}", String::from_utf8_lossy(bad));
+        }
+        // a partially valid body must not partially apply: the valid
+        // fail_device is NOT marked when a later field is malformed
+        let (code, _) = http_request(srv.addr(), "POST", "/v1/reconfigure",
+                                     "application/json",
+                                     b"{\"fail_device\": 1, \"recover_device\": \"oops\"}")
+            .unwrap();
+        assert_eq!(code, 400);
+        let (_, body) =
+            http_request(srv.addr(), "GET", "/v1/reconfig/status", "", b"").unwrap();
+        let j = Json::parse(std::str::from_utf8(&body).unwrap()).unwrap();
+        assert_eq!(j.get("failed_devices").unwrap().as_arr().unwrap().len(), 0,
+                   "rejected request partially applied");
     }
 
     #[test]

@@ -261,4 +261,112 @@ mod tests {
         assert!(b.predict(vec![0.0; 10], 3).is_err());
         b.shutdown();
     }
+
+    /// Backend echoing each row's first pixel into every class slot —
+    /// makes the coalesced rows distinguishable per client, which the
+    /// zero-output fake and the uniform sim cannot do.
+    mod echo {
+        use crate::device::DeviceSet;
+        use crate::exec::{Executor, ModelInstance};
+        use crate::model::ModelSpec;
+
+        pub struct EchoExecutor {
+            pub devices: DeviceSet,
+        }
+
+        struct EchoInstance {
+            classes: usize,
+            elems: usize,
+        }
+
+        impl ModelInstance for EchoInstance {
+            fn predict(&mut self, input: &[f32], n_rows: usize) -> anyhow::Result<Vec<f32>> {
+                let mut out = Vec::with_capacity(n_rows * self.classes);
+                for r in 0..n_rows {
+                    out.extend(std::iter::repeat(input[r * self.elems]).take(self.classes));
+                }
+                Ok(out)
+            }
+
+            fn classes(&self) -> usize {
+                self.classes
+            }
+
+            fn input_elems(&self) -> usize {
+                self.elems
+            }
+        }
+
+        impl Executor for EchoExecutor {
+            fn load(
+                &self,
+                model: &ModelSpec,
+                _device: usize,
+                _batch: usize,
+            ) -> anyhow::Result<Box<dyn ModelInstance>> {
+                Ok(Box::new(EchoInstance {
+                    classes: model.classes,
+                    elems: model.input_elems_per_image(),
+                }))
+            }
+
+            fn devices(&self) -> &DeviceSet {
+                &self.devices
+            }
+        }
+    }
+
+    /// The §I.B adaptive-batching contract under the deadline path: two
+    /// sub-`max_images` clients are coalesced into ONE engine request
+    /// flushed by `max_delay` (not by size), and each client gets back
+    /// exactly its own rows.
+    #[test]
+    fn deadline_flush_maps_rows_back_to_clients() {
+        let e = ensemble(EnsembleId::Imn1);
+        let d = DeviceSet::hgx(1);
+        let mut a = AllocationMatrix::zeroed(d.len(), e.len());
+        a.set(0, 0, 8);
+        let sys = Arc::new(
+            InferenceSystem::build(
+                &a,
+                &e,
+                Arc::new(echo::EchoExecutor { devices: DeviceSet::hgx(1) }),
+                EngineOptions::default(),
+            )
+            .unwrap(),
+        );
+        let elems = e.members[0].input_elems_per_image();
+        let classes = e.classes();
+        // size threshold unreachable: only the deadline can flush. The
+        // window is generous so both scoped threads enqueue inside it
+        // even on a loaded CI host (flushing the first client alone
+        // would flake the one-request assertion below).
+        let b = AdaptiveBatcher::start(Arc::clone(&sys), 1_000_000,
+                                       Duration::from_millis(400));
+        let t0 = Instant::now();
+        std::thread::scope(|s| {
+            for (value, n_images) in [(1.0f32, 2usize), (2.0f32, 3usize)] {
+                let b = &b;
+                s.spawn(move || {
+                    let y = b.predict(vec![value; n_images * elems], n_images).unwrap();
+                    assert_eq!(y.len(), n_images * classes);
+                    // every returned row carries this client's value
+                    for (i, v) in y.iter().enumerate() {
+                        assert_eq!(*v, value, "row slot {i} of client {value}");
+                    }
+                });
+            }
+        });
+        let waited = t0.elapsed();
+        assert!(waited >= Duration::from_millis(200),
+                "flushed before the deadline: {waited:?}");
+        // both clients rode ONE deadline-flushed engine request
+        let reqs = sys.metrics().requests.load(std::sync::atomic::Ordering::Relaxed);
+        assert_eq!(reqs, 1, "expected one coalesced engine request, saw {reqs}");
+        assert_eq!(
+            sys.metrics().images_in.load(std::sync::atomic::Ordering::Relaxed),
+            5
+        );
+        b.shutdown();
+    }
 }

@@ -22,15 +22,24 @@ pub struct Args {
     pub positional: Vec<String>,
 }
 
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum CliError {
-    #[error("unknown option --{0}")]
     Unknown(String),
-    #[error("option --{0} requires a value")]
     MissingValue(String),
-    #[error("invalid value for --{0}: {1}")]
     Invalid(String, String),
 }
+
+impl std::fmt::Display for CliError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            CliError::Unknown(o) => write!(f, "unknown option --{o}"),
+            CliError::MissingValue(o) => write!(f, "option --{o} requires a value"),
+            CliError::Invalid(o, v) => write!(f, "invalid value for --{o}: {v}"),
+        }
+    }
+}
+
+impl std::error::Error for CliError {}
 
 /// A small command-line parser bound to a spec table.
 pub struct Cli {

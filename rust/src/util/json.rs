@@ -148,12 +148,19 @@ fn write_escaped(s: &str, out: &mut String) {
 }
 
 /// Parse failure with byte offset.
-#[derive(Debug, Clone, PartialEq, Eq, thiserror::Error)]
-#[error("json error at byte {pos}: {msg}")]
+#[derive(Debug, Clone, PartialEq, Eq)]
 pub struct JsonError {
     pub pos: usize,
     pub msg: String,
 }
+
+impl fmt::Display for JsonError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "json error at byte {}: {}", self.pos, self.msg)
+    }
+}
+
+impl std::error::Error for JsonError {}
 
 struct Parser<'a> {
     b: &'a [u8],

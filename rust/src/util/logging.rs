@@ -3,15 +3,14 @@
 
 use std::io::Write;
 use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::OnceLock;
 use std::time::Instant;
-
-use once_cell::sync::OnceCell;
 
 struct StderrLogger {
     start: Instant,
 }
 
-static LOGGER: OnceCell<StderrLogger> = OnceCell::new();
+static LOGGER: OnceLock<StderrLogger> = OnceLock::new();
 static DROPPED: AtomicU64 = AtomicU64::new(0);
 
 impl log::Log for StderrLogger {

@@ -5,6 +5,11 @@
 //!   paper's offline benchmarks).
 //! * [`poisson_arrivals`] — open-loop arrival schedule with exponential
 //!   inter-arrival times (latency-oriented serving experiments).
+//! * [`step_arrivals`] / [`diurnal_arrivals`] — *time-varying* open-loop
+//!   schedules (traffic steps, sinusoidal day/night cycles) used to
+//!   exercise the live-reconfiguration controller under load shifts.
+//! * [`open_loop`] — driver firing requests at a schedule's offsets
+//!   regardless of completion times (each request on its own thread).
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
@@ -101,6 +106,130 @@ pub fn poisson_arrivals(n: usize, rate: f64, seed: u64) -> Vec<f64> {
         .collect()
 }
 
+/// Bursty step-profile arrivals: each `(duration_s, rate_req_s)` phase
+/// emits Poisson arrivals at its own rate (0 = silence). Offsets are
+/// seconds from start, strictly covering the concatenated phases.
+pub fn step_arrivals(phases: &[(f64, f64)], seed: u64) -> Vec<f64> {
+    let mut rng = Prng::new(seed);
+    let mut out = Vec::new();
+    let mut phase_start = 0.0;
+    for &(duration, rate) in phases {
+        assert!(
+            duration >= 0.0 && rate >= 0.0 && duration.is_finite() && rate.is_finite(),
+            "phase ({duration}, {rate}) must be non-negative and finite"
+        );
+        let end = phase_start + duration;
+        if rate > 0.0 {
+            let mut t = phase_start;
+            loop {
+                t += rng.exponential(rate);
+                if t >= end {
+                    break;
+                }
+                out.push(t);
+            }
+        }
+        phase_start = end;
+    }
+    out
+}
+
+/// Diurnal arrivals: a non-homogeneous Poisson process at
+/// `rate(t) = base + amplitude · sin(2πt / period_s)` (clamped at 0),
+/// sampled by thinning against the peak rate. Models the day/night
+/// traffic cycle the autoscaling controller must ride.
+pub fn diurnal_arrivals(
+    duration_s: f64,
+    base: f64,
+    amplitude: f64,
+    period_s: f64,
+    seed: u64,
+) -> Vec<f64> {
+    assert!(
+        base > 0.0
+            && period_s > 0.0
+            && duration_s >= 0.0
+            && base.is_finite()
+            && period_s.is_finite()
+            && duration_s.is_finite()
+            && amplitude.is_finite(),
+        "diurnal parameters must be finite (base/period positive)"
+    );
+    let peak = base + amplitude.abs();
+    let mut rng = Prng::new(seed);
+    let mut t = 0.0;
+    let mut out = Vec::new();
+    loop {
+        t += rng.exponential(peak);
+        if t >= duration_s {
+            break;
+        }
+        let rate = (base + amplitude * (std::f64::consts::TAU * t / period_s).sin()).max(0.0);
+        if rng.f64() < rate / peak {
+            out.push(t);
+        }
+    }
+    out
+}
+
+/// Open-loop driver: fire one request per arrival offset, on schedule,
+/// regardless of completion times (each request runs on its own thread,
+/// so a slow system accumulates concurrency instead of throttling the
+/// arrival process — the honest serving-latency measurement).
+pub fn open_loop(
+    system: &InferenceSystem,
+    arrivals: &[f64],
+    images_per_req: usize,
+    seed: u64,
+) -> WorkloadReport {
+    let elems = system.ensemble().members[0].input_elems_per_image();
+    let latency = Arc::new(LatencyHistogram::new());
+    let done = AtomicU64::new(0);
+    let images = AtomicU64::new(0);
+    let failed = AtomicU64::new(0);
+
+    let t0 = Instant::now();
+    std::thread::scope(|s| {
+        for (i, &at) in arrivals.iter().enumerate() {
+            let target = t0 + Duration::from_secs_f64(at.max(0.0));
+            let now = Instant::now();
+            if target > now {
+                std::thread::sleep(target - now);
+            }
+            let latency = Arc::clone(&latency);
+            let done = &done;
+            let images = &images;
+            let failed = &failed;
+            let sys = &system;
+            s.spawn(move || {
+                let mut rng = Prng::new(seed ^ (i as u64).wrapping_mul(0x9E37_79B9));
+                let x: Vec<f32> = (0..images_per_req * elems)
+                    .map(|_| rng.f64() as f32)
+                    .collect();
+                let t = Instant::now();
+                match sys.predict(x, images_per_req) {
+                    Ok(_) => {
+                        latency.record(t.elapsed());
+                        done.fetch_add(1, Ordering::Relaxed);
+                        images.fetch_add(images_per_req as u64, Ordering::Relaxed);
+                    }
+                    Err(_) => {
+                        failed.fetch_add(1, Ordering::Relaxed);
+                    }
+                }
+            });
+        }
+    });
+
+    WorkloadReport {
+        requests: done.load(Ordering::Relaxed),
+        images: images.load(Ordering::Relaxed),
+        elapsed: t0.elapsed(),
+        failed: failed.load(Ordering::Relaxed),
+        latency,
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -139,5 +268,63 @@ mod tests {
         assert!(arr.windows(2).all(|w| w[1] >= w[0]));
         let mean_gap = arr.last().unwrap() / arr.len() as f64;
         assert!((mean_gap - 0.02).abs() < 0.002, "gap={mean_gap}");
+    }
+
+    #[test]
+    fn step_arrivals_follow_each_phase_rate() {
+        let phases = [(50.0, 20.0), (50.0, 200.0), (10.0, 0.0)];
+        let arr = step_arrivals(&phases, 11);
+        assert!(arr.windows(2).all(|w| w[1] >= w[0]), "monotone");
+        assert!(arr.iter().all(|&t| t < 100.0), "nothing in the silent phase");
+        let n_low = arr.iter().filter(|&&t| t < 50.0).count() as f64;
+        let n_high = arr.len() as f64 - n_low;
+        assert!((n_low / 50.0 - 20.0).abs() < 3.0, "low-phase rate {}", n_low / 50.0);
+        assert!((n_high / 50.0 - 200.0).abs() < 12.0, "high-phase rate {}", n_high / 50.0);
+    }
+
+    #[test]
+    fn diurnal_arrivals_peak_and_trough() {
+        let (base, amp, period) = (100.0, 80.0, 10.0);
+        let arr = diurnal_arrivals(2.0 * period, base, amp, period, 3);
+        assert!(arr.windows(2).all(|w| w[1] >= w[0]));
+        // mean over whole periods ≈ base (sin integrates to zero)
+        let mean_rate = arr.len() as f64 / (2.0 * period);
+        assert!((mean_rate - base).abs() < base * 0.12, "mean rate {mean_rate}");
+        // peak quarter (around t = period/4) vs trough quarter (3/4)
+        let in_window = |center: f64| {
+            arr.iter()
+                .filter(|&&t| {
+                    let phase = t % period;
+                    (phase - center).abs() < period / 8.0
+                })
+                .count() as f64
+        };
+        let peak = in_window(period / 4.0);
+        let trough = in_window(3.0 * period / 4.0);
+        assert!(peak > 2.0 * trough, "peak {peak} vs trough {trough}");
+    }
+
+    #[test]
+    fn open_loop_fires_every_arrival() {
+        let e = ensemble(EnsembleId::Imn1);
+        let d = DeviceSet::hgx(1);
+        let mut a = AllocationMatrix::zeroed(d.len(), e.len());
+        a.set(0, 0, 8);
+        let sys = InferenceSystem::build(
+            &a,
+            &e,
+            std::sync::Arc::new(FakeExecutor::new(d)),
+            EngineOptions::default(),
+        )
+        .unwrap();
+        let arrivals = step_arrivals(&[(0.15, 100.0)], 5);
+        assert!(!arrivals.is_empty());
+        let r = open_loop(&sys, &arrivals, 4, 42);
+        assert_eq!(r.requests as usize, arrivals.len());
+        assert_eq!(r.images as usize, 4 * arrivals.len());
+        assert_eq!(r.failed, 0);
+        assert_eq!(r.latency.count() as usize, arrivals.len());
+        // the schedule paces the run: elapsed covers the last offset
+        assert!(r.elapsed.as_secs_f64() >= *arrivals.last().unwrap());
     }
 }
