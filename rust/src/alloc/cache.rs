@@ -7,12 +7,12 @@
 use std::path::{Path, PathBuf};
 
 use anyhow::Context;
-use sha2::{Digest, Sha256};
 
 use crate::alloc::greedy::GreedyConfig;
 use crate::alloc::matrix::AllocationMatrix;
 use crate::device::DeviceSet;
 use crate::model::Ensemble;
+use crate::util::hash::Fnv128;
 use crate::util::json::Json;
 
 /// File-backed matrix cache.
@@ -24,21 +24,22 @@ pub struct MatrixCache {
 /// Fingerprint of everything that determines the optimal matrix.
 pub fn cache_fingerprint(ensemble: &Ensemble, devices: &DeviceSet,
                          cfg: &GreedyConfig) -> String {
-    let mut h = Sha256::new();
-    h.update(b"ensemble-serve-v1\0");
+    // version bump: v1 keys were sha256-truncated; same 32-hex width,
+    // different digest family, so stale v1 files can never alias
+    let mut h = Fnv128::new();
+    h.update(b"ensemble-serve-v2\0");
     for m in &ensemble.members {
         h.update(m.name.as_bytes());
-        h.update(format!("|{}|{}|{:?}|{}\0", m.params_m, m.gflops, m.scale, m.classes));
+        h.update(format!("|{}|{}|{:?}|{}\0", m.params_m, m.gflops, m.scale, m.classes).as_bytes());
     }
     for d in devices.iter() {
-        h.update(format!("{}|{:?}|{}|{}\0", d.name, d.kind, d.mem_mb, d.eff_gflops));
+        h.update(format!("{}|{:?}|{}|{}\0", d.name, d.kind, d.mem_mb, d.eff_gflops).as_bytes());
     }
     h.update(format!(
         "iter={}|neighs={}|batches={:?}|seed={}\0",
         cfg.max_iter, cfg.max_neighs, cfg.batch_values, cfg.seed
-    ));
-    let digest = h.finalize();
-    digest.iter().map(|b| format!("{b:02x}")).collect::<String>()[..32].to_string()
+    ).as_bytes());
+    h.hex()
 }
 
 impl MatrixCache {

@@ -41,6 +41,11 @@ impl Backend {
 #[derive(Debug, Clone)]
 pub struct ServerConfig {
     pub ensemble: EnsembleId,
+    /// Multi-tenant serving: the ensembles co-located on one device set
+    /// (`serve --ensembles IMN1,IMN4`). Empty = single-tenant
+    /// deployment of `ensemble`. Each is registered under its own name
+    /// and selected per request via the `x-ensemble` header.
+    pub ensembles: Vec<EnsembleId>,
     pub gpus: usize,
     pub backend: Backend,
     /// Sim time scale (ignored by other backends).
@@ -61,6 +66,7 @@ impl Default for ServerConfig {
     fn default() -> Self {
         ServerConfig {
             ensemble: EnsembleId::Imn4,
+            ensembles: Vec::new(),
             gpus: 4,
             backend: Backend::Sim,
             time_scale: 256.0,
@@ -83,6 +89,20 @@ impl ServerConfig {
         if let Some(v) = doc.get("ensemble").and_then(Json::as_str) {
             cfg.ensemble = EnsembleId::parse(v)
                 .with_context(|| format!("unknown ensemble '{v}'"))?;
+        }
+        if let Some(arr) = doc.get("ensembles").and_then(Json::as_arr) {
+            let mut ids = Vec::new();
+            for v in arr {
+                let name = v.as_str().context("ensembles entries must be strings")?;
+                let id = EnsembleId::parse(name)
+                    .with_context(|| format!("unknown ensemble '{name}'"))?;
+                // a duplicate would deploy two full copies and then
+                // silently shadow one in the registry
+                anyhow::ensure!(!ids.contains(&id), "duplicate ensemble '{name}'");
+                ids.push(id);
+            }
+            anyhow::ensure!(!ids.is_empty(), "ensembles list empty");
+            cfg.ensembles = ids;
         }
         if let Some(v) = doc.get("gpus").and_then(Json::as_usize) {
             cfg.gpus = v;
@@ -193,9 +213,23 @@ mod tests {
     }
 
     #[test]
+    fn multi_tenant_list() {
+        let doc = Json::parse(r#"{"ensembles":["IMN1","imn4"]}"#).unwrap();
+        let cfg = ServerConfig::from_json(&doc).unwrap();
+        assert_eq!(cfg.ensembles, vec![EnsembleId::Imn1, EnsembleId::Imn4]);
+        // absent: single-tenant default
+        let cfg = ServerConfig::from_json(&Json::parse("{}").unwrap()).unwrap();
+        assert!(cfg.ensembles.is_empty());
+    }
+
+    #[test]
     fn rejects_bad_values() {
         for bad in [
             r#"{"ensemble":"IMN99"}"#,
+            r#"{"ensembles":["IMN1","NOPE"]}"#,
+            r#"{"ensembles":["IMN1","IMN1"]}"#,
+            r#"{"ensembles":[]}"#,
+            r#"{"ensembles":[42]}"#,
             r#"{"backend":"cuda"}"#,
             r#"{"time_scale":0}"#,
             r#"{"segment_size":0}"#,

@@ -39,6 +39,20 @@
 //! controller. The server exposes it as `POST /v1/reconfigure` and
 //! `GET /v1/reconfig/status`, next to Prometheus metrics at
 //! `GET /v1/metrics`.
+//!
+//! ## Multi-tenant serving
+//!
+//! Several ensembles can share one device set: a
+//! [`server::SystemRegistry`] of named deployed systems dispatched per
+//! request on the `x-ensemble` header, a joint planner
+//! ([`reconfig::planner::plan_joint`]) packing every tenant's members
+//! into one allocation under a weighted max-min objective
+//! ([`optimizer::analytic::estimate_weighted_throughput`]) with
+//! per-tenant memory budgets, and a
+//! [`reconfig::MultiTenantController`] that arbitrates: a tenant
+//! breaching its SLO is re-planned *jointly* with boosted weight while
+//! idle tenants are discounted, stealing capacity from headroom
+//! instead of replanning in isolation. See DESIGN.md.
 
 pub mod util;
 pub mod config;

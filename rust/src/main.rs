@@ -22,14 +22,19 @@ use ensemble_serve::exec::sim::SimExecutor;
 use ensemble_serve::exec::Executor;
 use ensemble_serve::model::Manifest;
 use ensemble_serve::optimizer::{optimize, OptimizerConfig};
-use ensemble_serve::reconfig::{PlannerConfig, PolicyConfig, ReconfigController, ReconfigOptions};
-use ensemble_serve::server::ApiServer;
+use ensemble_serve::reconfig::{
+    plan_joint, MultiTenantController, MultiTenantOptions, PlannerConfig, PolicyConfig,
+    ReconfigController, ReconfigOptions, Tenant, TenantSpec,
+};
+use ensemble_serve::server::{ApiServer, SystemRegistry};
 use ensemble_serve::util::cli::Cli;
 
 fn cli() -> Cli {
     Cli::new("ensemble-serve", "inference system for heterogeneous DNN ensembles")
         .opt("config", None, "path to a JSON config file")
         .opt("ensemble", None, "IMN1|IMN4|IMN12|FOS14|CIF36")
+        .opt("ensembles", None, "serve: comma-separated tenant list (e.g. IMN1,IMN4) \
+sharing one device set; select per request via the x-ensemble header")
         .opt("gpus", None, "number of simulated V100s (+1 CPU)")
         .opt("backend", None, "sim|pjrt|fake")
         .opt("time-scale", None, "sim time compression factor")
@@ -77,6 +82,19 @@ fn config_from(args: &ensemble_serve::util::cli::Args) -> anyhow::Result<ServerC
     if let Some(v) = args.get("ensemble") {
         cfg.ensemble = ensemble_serve::model::EnsembleId::parse(v)
             .ok_or_else(|| anyhow::anyhow!("unknown ensemble {v}"))?;
+    }
+    if let Some(v) = args.get("ensembles") {
+        let mut ids = Vec::new();
+        for name in v.split(',').map(str::trim).filter(|s| !s.is_empty()) {
+            let id = ensemble_serve::model::EnsembleId::parse(name)
+                .ok_or_else(|| anyhow::anyhow!("unknown ensemble {name}"))?;
+            // a duplicate would deploy two full copies and then silently
+            // shadow one in the registry
+            anyhow::ensure!(!ids.contains(&id), "duplicate ensemble {name} in --ensembles");
+            ids.push(id);
+        }
+        anyhow::ensure!(!ids.is_empty(), "--ensembles needs at least one name");
+        cfg.ensembles = ids;
     }
     if let Some(v) = args.get_usize("gpus")? {
         cfg.gpus = v;
@@ -138,6 +156,13 @@ fn bench_options(cfg: &ServerConfig) -> BenchOptions {
 
 fn run(args: &ensemble_serve::util::cli::Args) -> anyhow::Result<()> {
     let cfg = config_from(args)?;
+    // a tenant list on optimize/bench/inspect would be silently ignored
+    // (they plan the single default ensemble) — refuse instead
+    anyhow::ensure!(
+        cfg.ensembles.is_empty() || args.positional[0] == "serve",
+        "--ensembles / config `ensembles` only applies to `serve` (got `{}`)",
+        args.positional[0]
+    );
     let ensemble = cfg.ensemble_def();
     let devices = cfg.devices();
     let device_names: Vec<String> = devices.iter().map(|d| d.name.clone()).collect();
@@ -187,7 +212,15 @@ fn run(args: &ensemble_serve::util::cli::Args) -> anyhow::Result<()> {
                 );
             }
         }
+        "serve" if cfg.ensembles.len() >= 2 => {
+            serve_multi_tenant(&cfg)?;
+        }
         "serve" => {
+            let ensemble = match cfg.ensembles.first() {
+                // `--ensembles X` with one name = single-tenant X
+                Some(&id) => ensemble_serve::model::ensemble(id),
+                None => ensemble,
+            };
             let executor = make_executor(&cfg)?;
             let a = worst_fit_decreasing(&ensemble, &devices, cfg.default_batch)?;
             log::info!("deploying {} with {} workers", ensemble.name, a.worker_count());
@@ -229,4 +262,78 @@ fn run(args: &ensemble_serve::util::cli::Args) -> anyhow::Result<()> {
         other => anyhow::bail!("unknown command '{other}' (optimize|serve|bench|inspect)"),
     }
     Ok(())
+}
+
+/// `serve --ensembles a,b[,c...]`: co-locate several ensembles on one
+/// device set. One shared executor (one memory ledger), a joint initial
+/// plan, one `InferenceSystem` per tenant registered under its ensemble
+/// name, and — with `--reconfig` — the multi-tenant arbitration
+/// controller re-planning all tenants jointly.
+fn serve_multi_tenant(cfg: &ServerConfig) -> anyhow::Result<()> {
+    let devices = cfg.devices();
+    let executor = make_executor(cfg)?;
+    let specs: Vec<TenantSpec> = cfg
+        .ensembles
+        .iter()
+        .map(|&id| TenantSpec::new(id.name(), ensemble_serve::model::ensemble(id)))
+        .collect();
+    let planner = PlannerConfig {
+        default_batch: cfg.default_batch,
+        greedy: cfg.greedy.clone(),
+    };
+    let plan = plan_joint(&specs, &devices, &[], &[], &planner)?;
+
+    let registry = SystemRegistry::new();
+    let mut tenants = Vec::new();
+    for (spec, matrix) in specs.iter().zip(&plan.matrices) {
+        log::info!(
+            "deploying tenant {} with {} workers",
+            spec.name,
+            matrix.worker_count()
+        );
+        let system = Arc::new(InferenceSystem::build(
+            matrix,
+            &spec.ensemble,
+            Arc::clone(&executor),
+            cfg.engine_options(),
+        )?);
+        registry.register(&spec.name, Arc::clone(&system));
+        tenants.push(Tenant::new(&spec.name, system));
+    }
+
+    let controller = if cfg.reconfig {
+        let opts = MultiTenantOptions {
+            policy: PolicyConfig { p99_slo_ms: cfg.p99_slo_ms, ..PolicyConfig::default() },
+            // deliberately NOT cfg.greedy: runtime replans use the
+            // smaller online search budget (PlannerConfig::default),
+            // same convention as the single-tenant controller — the
+            // offline knobs only shape the startup plan above
+            planner: PlannerConfig {
+                default_batch: cfg.default_batch,
+                ..PlannerConfig::default()
+            },
+            ..MultiTenantOptions::default()
+        };
+        let ctrl = MultiTenantController::start(tenants, opts)?;
+        log::info!(
+            "multi-tenant arbitration controller running (p99 SLO {} ms)",
+            cfg.p99_slo_ms
+        );
+        Some(ctrl)
+    } else {
+        None
+    };
+
+    let names = registry.names().join(", ");
+    let api = ApiServer::start_registry(registry, &cfg.listen, cfg.http_threads, None,
+                                        controller)?;
+    println!("serving tenants [{names}] on http://{}", api.addr());
+    println!("  POST /v1/predict (x-ensemble: <name>)   GET /v1/ensembles");
+    println!("  GET /v1/health  /v1/stats  /v1/metrics  /v1/matrix");
+    if cfg.reconfig {
+        println!("  POST /v1/reconfigure   GET /v1/reconfig/status");
+    }
+    loop {
+        std::thread::sleep(std::time::Duration::from_secs(3600));
+    }
 }

@@ -36,7 +36,29 @@ pub fn estimate_throughput(
     ensemble: &Ensemble,
     devices: &DeviceSet,
 ) -> f64 {
+    estimate_weighted_throughput(a, ensemble, devices, &vec![1.0; a.n_models()])
+}
+
+/// Weighted generalization for multi-tenant joint matrices: column `m`
+/// must sustain rate `demand[m] * T` (images/s) and the returned value
+/// is the largest feasible `T`. With `demand` all-ones this is exactly
+/// [`estimate_throughput`]; with a *joint* matrix whose columns
+/// concatenate several tenants' models and `demand[m]` = the owning
+/// tenant's weight, it is weighted max-min fairness under shared device
+/// capacity — tenant `i`'s predicted rate is `weight_i * T`. Returns
+/// 0.0 when the matrix is invalid, memory-infeasible, or any demand is
+/// non-positive.
+pub fn estimate_weighted_throughput(
+    a: &AllocationMatrix,
+    ensemble: &Ensemble,
+    devices: &DeviceSet,
+    demand: &[f64],
+) -> f64 {
+    assert_eq!(demand.len(), a.n_models(), "demand/matrix shape");
     if !a.all_models_placed() || !fit_mem(a, ensemble, devices) {
+        return 0.0;
+    }
+    if demand.iter().any(|&w| !(w > 0.0) || !w.is_finite()) {
         return 0.0;
     }
 
@@ -56,7 +78,8 @@ pub fn estimate_throughput(
         }
         per_model_best
             .iter()
-            .cloned()
+            .zip(demand)
+            .map(|(&cap, &w)| cap / w)
             .fold(f64::INFINITY, f64::min)
     };
     if !t_hi.is_finite() || t_hi <= 0.0 {
@@ -68,7 +91,7 @@ pub fn estimate_throughput(
     let mut hi = t_hi;
     for _ in 0..40 {
         let mid = 0.5 * (lo + hi);
-        if feasible(a, &workers, mid) {
+        if feasible(a, &workers, demand, mid) {
             lo = mid;
         } else {
             hi = mid;
@@ -77,11 +100,16 @@ pub fn estimate_throughput(
     lo
 }
 
-/// Can every model deliver rate `t` without overloading a device?
-/// Iterative proportional assignment: start with each model splitting its
-/// demand across its workers inversely to cost, then repeatedly shift
-/// demand away from overloaded devices.
-fn feasible(a: &AllocationMatrix, workers: &[(usize, usize, f64)], t: f64) -> bool {
+/// Can every model `m` deliver rate `demand[m] * t` without overloading
+/// a device? Iterative proportional assignment: start with each model
+/// splitting its demand across its workers inversely to cost, then
+/// repeatedly shift demand away from overloaded devices.
+fn feasible(
+    a: &AllocationMatrix,
+    workers: &[(usize, usize, f64)],
+    demand: &[f64],
+    t: f64,
+) -> bool {
     let n_dev = a.n_devices();
     let n_models = a.n_models();
 
@@ -93,10 +121,10 @@ fn feasible(a: &AllocationMatrix, workers: &[(usize, usize, f64)], t: f64) -> bo
 
     // x[i] = rate assigned to worker i
     let mut x = vec![0.0f64; workers.len()];
-    for idxs in &by_model {
+    for (m, idxs) in by_model.iter().enumerate() {
         let denom: f64 = idxs.iter().map(|&i| 1.0 / workers[i].2).sum();
         for &i in idxs {
-            x[i] = t * (1.0 / workers[i].2) / denom;
+            x[i] = demand[m] * t * (1.0 / workers[i].2) / denom;
         }
     }
 
@@ -129,7 +157,7 @@ fn feasible(a: &AllocationMatrix, workers: &[(usize, usize, f64)], t: f64) -> bo
                 *w /= wsum;
             }
             for (k, &i) in idxs.iter().enumerate() {
-                x[i] = t * weights[k];
+                x[i] = demand[m] * t * weights[k];
             }
         }
         // single-worker models can't rebalance; if such a worker alone
@@ -218,6 +246,61 @@ mod tests {
         // VGG19 alone bounds both allocations, so the gain is modest but
         // must be strictly positive
         assert!(t_spread > t_shared * 1.05, "spread={t_spread} shared={t_shared}");
+    }
+
+    #[test]
+    fn unit_demand_matches_unweighted() {
+        let e = ensemble(EnsembleId::Imn4);
+        let d = DeviceSet::hgx(4);
+        let mut a = AllocationMatrix::zeroed(d.len(), e.len());
+        for m in 0..4 {
+            a.set(m, m, 64);
+        }
+        let t = estimate_throughput(&a, &e, &d);
+        let tw = estimate_weighted_throughput(&a, &e, &d, &vec![1.0; e.len()]);
+        assert_eq!(t, tw);
+    }
+
+    /// Two tenants (one ResNet152 each) co-located on one V100, modeled
+    /// as a joint 2-column matrix: weighted max-min splits the device's
+    /// capacity by demand.
+    #[test]
+    fn weighted_demand_splits_shared_capacity() {
+        let e1 = ensemble(EnsembleId::Imn1);
+        let joint = Ensemble {
+            name: "joint".into(),
+            members: e1.members.iter().cloned().chain(e1.members.iter().cloned()).collect(),
+        };
+        let d = DeviceSet::hgx(1); // 2 × ~5.5 GB fits one 16 GB V100
+        let mut a = AllocationMatrix::zeroed(d.len(), 2);
+        a.set(0, 0, 8);
+        a.set(0, 1, 8);
+
+        let mut solo = AllocationMatrix::zeroed(d.len(), 1);
+        solo.set(0, 0, 8);
+        let t_solo = estimate_throughput(&solo, &e1, &d);
+        assert!(t_solo > 0.0);
+
+        // equal weights: each tenant sustains ~half the solo rate
+        let t_eq = estimate_weighted_throughput(&a, &joint, &d, &[1.0, 1.0]);
+        assert!((t_eq - t_solo / 2.0).abs() / t_solo < 0.05, "t_eq={t_eq} solo={t_solo}");
+
+        // 3:1 weights: total device-time 3T·c + T·c = 1 → T = solo/4,
+        // tenant A's rate 3T = 0.75·solo (capacity stolen from B)
+        let t_w = estimate_weighted_throughput(&a, &joint, &d, &[3.0, 1.0]);
+        assert!((t_w - t_solo / 4.0).abs() / t_solo < 0.05, "t_w={t_w} solo={t_solo}");
+        assert!(3.0 * t_w > 2.5 * t_eq, "boosted tenant rate {} vs equal {}", 3.0 * t_w, t_eq);
+    }
+
+    #[test]
+    fn degenerate_demand_scores_zero() {
+        let e = ensemble(EnsembleId::Imn1);
+        let d = DeviceSet::hgx(1);
+        let mut a = AllocationMatrix::zeroed(d.len(), 1);
+        a.set(0, 0, 8);
+        assert_eq!(estimate_weighted_throughput(&a, &e, &d, &[0.0]), 0.0);
+        assert_eq!(estimate_weighted_throughput(&a, &e, &d, &[-1.0]), 0.0);
+        assert_eq!(estimate_weighted_throughput(&a, &e, &d, &[f64::NAN]), 0.0);
     }
 
     #[test]

@@ -25,6 +25,11 @@
 //!   three together and invoking
 //!   [`InferenceSystem::reconfigure`](crate::engine::InferenceSystem::reconfigure)
 //!   for the actual drain-and-switch.
+//! * [`tenancy::MultiTenantController`] — the multi-tenant variant:
+//!   several ensembles on one `DeviceSet`, re-planned *jointly*
+//!   ([`planner::plan_joint`], weighted max-min objective) with
+//!   pressure-scaled weights so a breaching tenant steals capacity from
+//!   the tenant with the most headroom.
 //!
 //! The swap protocol itself lives in the engine
 //! ([`crate::engine::generation`]): build the new worker generation in
@@ -36,8 +41,10 @@ pub mod controller;
 pub mod monitor;
 pub mod planner;
 pub mod policy;
+pub mod tenancy;
 
 pub use controller::{ReconfigController, ReconfigOptions, StatusReport};
 pub use monitor::{LoadMonitor, LoadSnapshot};
-pub use planner::{plan, Plan, PlannerConfig};
+pub use planner::{plan, plan_joint, JointPlan, Plan, PlannerConfig, TenantSpec};
 pub use policy::{decide, Decision, PolicyConfig};
+pub use tenancy::{MultiTenantController, MultiTenantOptions, Tenant};

@@ -17,7 +17,7 @@
 //! planning; the returned matrix is then guaranteed buildable without
 //! draining first.
 
-use anyhow::ensure;
+use anyhow::{bail, ensure};
 
 use crate::alloc::greedy::{bounded_greedy, GreedyConfig};
 use crate::alloc::matrix::AllocationMatrix;
@@ -25,7 +25,7 @@ use crate::alloc::memory::device_usage_mb;
 use crate::alloc::worstfit::worst_fit_decreasing;
 use crate::device::DeviceSet;
 use crate::model::Ensemble;
-use crate::optimizer::analytic::estimate_throughput;
+use crate::optimizer::analytic::{estimate_throughput, estimate_weighted_throughput};
 
 /// Online planning knobs.
 #[derive(Debug, Clone)]
@@ -106,6 +106,233 @@ pub fn score(matrix: &AllocationMatrix, ensemble: &Ensemble, devices: &DeviceSet
     estimate_throughput(matrix, ensemble, devices)
 }
 
+// ---------------------------------------------------------------------------
+// Multi-tenant joint planning: several ensembles, one DeviceSet.
+
+/// One tenant of a joint (multi-ensemble) plan.
+#[derive(Debug, Clone)]
+pub struct TenantSpec {
+    /// Registry name the server dispatches `x-ensemble` on.
+    pub name: String,
+    pub ensemble: Ensemble,
+    /// Relative capacity share under contention. The joint objective is
+    /// weighted max-min: the planner maximizes `T` such that tenant `i`
+    /// sustains `weight_i · T` img/s, so doubling a weight roughly
+    /// doubles the tenant's share of every contended device.
+    pub weight: f64,
+    /// Optional cap on the tenant's total worker memory summed across
+    /// all devices, MB. `None` = bounded only by device capacity.
+    pub mem_budget_mb: Option<f64>,
+}
+
+impl TenantSpec {
+    pub fn new(name: &str, ensemble: Ensemble) -> TenantSpec {
+        TenantSpec { name: name.to_string(), ensemble, weight: 1.0, mem_budget_mb: None }
+    }
+}
+
+/// A joint allocation of N tenants over the full device set.
+#[derive(Debug, Clone)]
+pub struct JointPlan {
+    /// Per-tenant matrices in full device row indexing, same order as
+    /// the `tenants` slice handed to [`plan_joint`].
+    pub matrices: Vec<AllocationMatrix>,
+    /// Per-tenant analytic throughput estimate (`weight_i · T`), img/s.
+    pub predicted_img_s: Vec<f64>,
+    /// The shared max-min `T` (the joint objective value).
+    pub objective: f64,
+    pub survivors: Vec<usize>,
+}
+
+/// Column offsets of each tenant inside the joint (concatenated) matrix.
+fn column_offsets(tenants: &[TenantSpec]) -> Vec<usize> {
+    let mut offsets = Vec::with_capacity(tenants.len() + 1);
+    let mut acc = 0;
+    for t in tenants {
+        offsets.push(acc);
+        acc += t.ensemble.len();
+    }
+    offsets.push(acc);
+    offsets
+}
+
+/// All tenants' members as one "super ensemble" (column order = tenant
+/// order). Only the per-member stats are meaningful on it — class
+/// counts may differ across tenants, so it must never be deployed as a
+/// real ensemble; the allocation pipeline only reads member footprints
+/// and latencies.
+fn combined_ensemble(tenants: &[TenantSpec]) -> Ensemble {
+    Ensemble {
+        name: "joint".to_string(),
+        members: tenants.iter().flat_map(|t| t.ensemble.members.iter().cloned()).collect(),
+    }
+}
+
+/// Total worker memory of tenant `ti`'s columns in a joint matrix, MB.
+fn tenant_total_mb(
+    a: &AllocationMatrix,
+    combined: &Ensemble,
+    offsets: &[usize],
+    ti: usize,
+) -> f64 {
+    let mut sum = 0.0;
+    for d in 0..a.n_devices() {
+        for m in offsets[ti]..offsets[ti + 1] {
+            let b = a.get(d, m);
+            if b != 0 {
+                sum += combined.members[m].worker_mem_mb(b as usize);
+            }
+        }
+    }
+    sum
+}
+
+/// Stack per-tenant matrices (same device set, tenant column order)
+/// into one joint matrix.
+fn stack_matrices(
+    tenants: &[TenantSpec],
+    matrices: &[AllocationMatrix],
+    n_devices: usize,
+) -> AllocationMatrix {
+    let offsets = column_offsets(tenants);
+    let mut joint = AllocationMatrix::zeroed(n_devices, *offsets.last().unwrap());
+    for (ti, m) in matrices.iter().enumerate() {
+        for d in 0..n_devices {
+            for c in 0..m.n_models() {
+                joint.set(d, offsets[ti] + c, m.get(d, c));
+            }
+        }
+    }
+    joint
+}
+
+/// Analytic joint score (`T` of the weighted max-min objective) of the
+/// tenants' *current* matrices — the multi-tenant controller's
+/// hysteresis baseline.
+pub fn score_joint(
+    tenants: &[TenantSpec],
+    matrices: &[AllocationMatrix],
+    devices: &DeviceSet,
+) -> f64 {
+    assert_eq!(tenants.len(), matrices.len(), "tenant/matrix count");
+    let combined = combined_ensemble(tenants);
+    let joint = stack_matrices(tenants, matrices, devices.len());
+    let demand = demand_vector(tenants);
+    estimate_weighted_throughput(&joint, &combined, devices, &demand)
+}
+
+fn demand_vector(tenants: &[TenantSpec]) -> Vec<f64> {
+    tenants
+        .iter()
+        .flat_map(|t| std::iter::repeat(t.weight).take(t.ensemble.len()))
+        .collect()
+}
+
+/// Plan a *joint* allocation of `tenants` onto `devices` minus `failed`:
+/// Algorithm 1 packs the union of every tenant's members at the minimum
+/// batch, then Algorithm 2 optimizes the joint matrix under the
+/// weighted max-min objective. Memory is arbitrated three ways:
+///
+/// * device budgets are shrunk by every `resident` allocation (each
+///   paired with the ensemble it belongs to — live generations of all
+///   tenants plus timed-out drains), so every tenant's new generation
+///   can be built next to everything currently loaded;
+/// * a candidate exceeding any tenant's `mem_budget_mb` scores 0.0 and
+///   is never adopted;
+/// * the joint matrix shares per-device capacity across tenants, so
+///   `fit_mem` holds for the union, not just each tenant alone.
+pub fn plan_joint(
+    tenants: &[TenantSpec],
+    devices: &DeviceSet,
+    failed: &[usize],
+    resident: &[(Ensemble, AllocationMatrix)],
+    cfg: &PlannerConfig,
+) -> anyhow::Result<JointPlan> {
+    ensure!(!tenants.is_empty(), "no tenants to plan");
+    let mut names = std::collections::BTreeSet::new();
+    for t in tenants {
+        ensure!(
+            t.weight > 0.0 && t.weight.is_finite(),
+            "tenant '{}' weight {} must be positive",
+            t.name,
+            t.weight
+        );
+        ensure!(names.insert(t.name.as_str()), "duplicate tenant name '{}'", t.name);
+    }
+    let survivors: Vec<usize> =
+        (0..devices.len()).filter(|d| !failed.contains(d)).collect();
+    ensure!(!survivors.is_empty(), "all {} devices marked failed", devices.len());
+
+    let combined = combined_ensemble(tenants);
+    let offsets = column_offsets(tenants);
+    let demand = demand_vector(tenants);
+
+    let sub = DeviceSet::new(
+        survivors
+            .iter()
+            .map(|&d| {
+                let mut spec = devices[d].clone();
+                let used: f64 = resident
+                    .iter()
+                    .map(|(e, r)| device_usage_mb(r, e, d))
+                    .sum();
+                spec.mem_mb = spec.mem_mb.saturating_sub(used.ceil() as u64);
+                spec
+            })
+            .collect(),
+    );
+
+    let a1 = worst_fit_decreasing(&combined, &sub, cfg.default_batch)?;
+    // the min-batch packing is each tenant's smallest possible
+    // footprint: a budget below it can never be met
+    for (ti, t) in tenants.iter().enumerate() {
+        if let Some(budget) = t.mem_budget_mb {
+            let used = tenant_total_mb(&a1, &combined, &offsets, ti);
+            if used > budget {
+                bail!(
+                    "tenant '{}': minimum footprint {used:.0} MB exceeds its {budget:.0} MB budget",
+                    t.name
+                );
+            }
+        }
+    }
+
+    let over_budget = |m: &AllocationMatrix| {
+        tenants.iter().enumerate().any(|(ti, t)| {
+            t.mem_budget_mb
+                .is_some_and(|budget| tenant_total_mb(m, &combined, &offsets, ti) > budget)
+        })
+    };
+    let report = bounded_greedy(&a1, &cfg.greedy, |m| {
+        if over_budget(m) {
+            0.0
+        } else {
+            estimate_weighted_throughput(m, &combined, &sub, &demand)
+        }
+    });
+
+    // expand the survivor-row joint matrix back to full device indexing,
+    // split per tenant
+    let mut matrices: Vec<AllocationMatrix> = tenants
+        .iter()
+        .map(|t| AllocationMatrix::zeroed(devices.len(), t.ensemble.len()))
+        .collect();
+    for (sub_row, &full_row) in survivors.iter().enumerate() {
+        for (ti, t) in tenants.iter().enumerate() {
+            for c in 0..t.ensemble.len() {
+                matrices[ti].set(full_row, c, report.best.get(sub_row, offsets[ti] + c));
+            }
+        }
+    }
+    let predicted: Vec<f64> = tenants.iter().map(|t| t.weight * report.best_speed).collect();
+    Ok(JointPlan {
+        matrices,
+        predicted_img_s: predicted,
+        objective: report.best_speed,
+        survivors,
+    })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -165,6 +392,96 @@ mod tests {
         let e = ensemble(EnsembleId::Imn12);
         let d = DeviceSet::hgx(1);
         assert!(plan(&e, &d, &[0], &[], &PlannerConfig::default()).is_err());
+    }
+
+    #[test]
+    fn joint_plan_places_both_tenants_within_every_device() {
+        use crate::alloc::memory::device_usage_mb;
+        let tenants = vec![
+            TenantSpec::new("heavy", ensemble(EnsembleId::Imn1)),
+            TenantSpec::new("wide", ensemble(EnsembleId::Imn4)),
+        ];
+        let d = DeviceSet::hgx(4);
+        let p = plan_joint(&tenants, &d, &[], &[], &PlannerConfig::default()).unwrap();
+        assert_eq!(p.matrices.len(), 2);
+        for (ti, t) in tenants.iter().enumerate() {
+            assert!(p.matrices[ti].all_models_placed(), "tenant {}", t.name);
+            assert!(p.predicted_img_s[ti] > 0.0);
+        }
+        // the JOINT footprint fits every device, not each tenant alone
+        for dev in 0..d.len() {
+            let used: f64 = tenants
+                .iter()
+                .zip(&p.matrices)
+                .map(|(t, m)| device_usage_mb(m, &t.ensemble, dev))
+                .sum();
+            assert!(used <= d[dev].mem_mb as f64,
+                    "device {dev}: joint {used:.0} MB > {} MB", d[dev].mem_mb);
+        }
+        assert!(p.objective > 0.0);
+        // score_joint of the planned matrices reproduces the objective
+        let s = score_joint(&tenants, &p.matrices, &d);
+        assert!((s - p.objective).abs() / p.objective < 0.05, "s={s} obj={}", p.objective);
+    }
+
+    #[test]
+    fn weight_boost_steals_capacity() {
+        let mk = |wa: f64| {
+            let mut a = TenantSpec::new("a", ensemble(EnsembleId::Imn1));
+            a.weight = wa;
+            vec![a, TenantSpec::new("b", ensemble(EnsembleId::Imn1))]
+        };
+        let d = DeviceSet::hgx(2);
+        let cfg = PlannerConfig::default();
+        let eq = plan_joint(&mk(1.0), &d, &[], &[], &cfg).unwrap();
+        let boosted = plan_joint(&mk(4.0), &d, &[], &[], &cfg).unwrap();
+        // under a 4:1 weight, tenant a's predicted rate beats its
+        // equal-split rate at tenant b's expense
+        assert!(boosted.predicted_img_s[0] > eq.predicted_img_s[0] * 1.3,
+                "boosted {} vs equal {}", boosted.predicted_img_s[0], eq.predicted_img_s[0]);
+        assert!(boosted.predicted_img_s[1] < eq.predicted_img_s[1],
+                "idle tenant kept its share: {} vs {}",
+                boosted.predicted_img_s[1], eq.predicted_img_s[1]);
+    }
+
+    #[test]
+    fn tenant_memory_budget_enforced() {
+        use crate::alloc::memory::total_usage_mb;
+        let e = ensemble(EnsembleId::Imn1);
+        let min_mb = e.members[0].worker_mem_mb(8);
+        let mut capped = TenantSpec::new("capped", e.clone());
+        capped.mem_budget_mb = Some(min_mb * 1.1); // one min-batch worker, no growth
+        let tenants = vec![capped, TenantSpec::new("free", ensemble(EnsembleId::Imn1))];
+        let d = DeviceSet::hgx(4);
+        let p = plan_joint(&tenants, &d, &[], &[], &PlannerConfig::default()).unwrap();
+        let used = total_usage_mb(&p.matrices[0], &tenants[0].ensemble);
+        assert!(used <= min_mb * 1.1 + 1e-6, "budget breached: {used:.0} MB");
+        assert!(p.matrices[0].all_models_placed());
+
+        // a budget below the minimum footprint is rejected up front
+        let mut impossible = TenantSpec::new("impossible", e.clone());
+        impossible.mem_budget_mb = Some(min_mb * 0.5);
+        let err = plan_joint(&[impossible], &d, &[], &[], &PlannerConfig::default());
+        assert!(err.is_err());
+        assert!(format!("{:#}", err.err().unwrap()).contains("budget"));
+    }
+
+    #[test]
+    fn joint_plan_respects_resident_allocations() {
+        use crate::alloc::memory::device_usage_mb;
+        let e = ensemble(EnsembleId::Imn1);
+        let d = DeviceSet::hgx(1);
+        // a live single-tenant generation occupies ~5.5 GB of the V100
+        let mut live = AllocationMatrix::zeroed(d.len(), e.len());
+        live.set(0, 0, 8);
+        let tenants = vec![TenantSpec::new("a", e.clone())];
+        let resident = vec![(e.clone(), live.clone())];
+        let p = plan_joint(&tenants, &d, &[], &resident, &PlannerConfig::default()).unwrap();
+        for dev in 0..d.len() {
+            let both = device_usage_mb(&p.matrices[0], &e, dev) + device_usage_mb(&live, &e, dev);
+            assert!(both <= d[dev].mem_mb as f64,
+                    "device {dev}: {both:.0} MB with resident > {} MB", d[dev].mem_mb);
+        }
     }
 
     #[test]

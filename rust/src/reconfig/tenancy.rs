@@ -1,0 +1,669 @@
+//! Multi-tenant arbitration: several ensembles sharing one `DeviceSet`,
+//! one controller re-planning them *jointly*.
+//!
+//! Each tenant is an independently deployed [`InferenceSystem`] (its own
+//! generations, metrics and monitor) over a **shared** executor/device
+//! topology. The single-tenant [`ReconfigController`] replans its system
+//! in isolation; this controller instead arbitrates: when any tenant's
+//! policy fires (SLO breach, backlog, imbalance, device failure, dead
+//! generation), it re-runs the *joint* planner over every tenant at once
+//! with pressure-scaled weights —
+//!
+//! * the breaching tenant's weight is multiplied by `breach_boost`,
+//! * tenants with thin windowed traffic and an empty queue are
+//!   discounted by `idle_discount`,
+//!
+//! so the weighted max-min objective (see
+//! [`estimate_weighted_throughput`](crate::optimizer::analytic::estimate_weighted_throughput))
+//! moves device capacity from the tenant with the most headroom to the
+//! one that needs it, instead of replanning the loaded tenant inside a
+//! budget that still reserves the idle tenant's peak share. The
+//! resulting per-tenant matrices are hot-swapped sequentially; every
+//! new generation is planned to fit next to ALL tenants' resident
+//! allocations, so any swap order is memory-safe.
+//!
+//! [`ReconfigController`]: crate::reconfig::ReconfigController
+
+use std::collections::BTreeSet;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::ensure;
+
+use crate::alloc::matrix::AllocationMatrix;
+use crate::engine::{InferenceSystem, SwapReport};
+use crate::reconfig::monitor::{LoadMonitor, LoadSnapshot};
+use crate::reconfig::planner::{self, JointPlan, PlannerConfig, TenantSpec};
+use crate::reconfig::policy::{self, Decision, PolicyConfig};
+use crate::util::json::Json;
+
+/// One tenant under the controller's management.
+pub struct Tenant {
+    /// Registry name (the `x-ensemble` dispatch key).
+    pub name: String,
+    pub system: Arc<InferenceSystem>,
+    /// Base capacity share (scaled by runtime pressure at replan time).
+    pub weight: f64,
+    /// Optional cap on the tenant's total worker memory, MB.
+    pub mem_budget_mb: Option<f64>,
+}
+
+impl Tenant {
+    pub fn new(name: &str, system: Arc<InferenceSystem>) -> Tenant {
+        Tenant { name: name.to_string(), system, weight: 1.0, mem_budget_mb: None }
+    }
+}
+
+/// Controller knobs.
+#[derive(Debug, Clone)]
+pub struct MultiTenantOptions {
+    pub poll_interval: Duration,
+    pub window: Duration,
+    /// Backoff after forced (failure/dead-generation) replan attempts.
+    pub failure_backoff: Duration,
+    pub policy: PolicyConfig,
+    pub planner: PlannerConfig,
+    /// Weight multiplier for the tenant(s) whose policy fired.
+    pub breach_boost: f64,
+    /// Weight multiplier for tenants with thin windowed traffic and an
+    /// empty queue — their reserved share is what gets stolen.
+    pub idle_discount: f64,
+}
+
+impl Default for MultiTenantOptions {
+    fn default() -> Self {
+        MultiTenantOptions {
+            poll_interval: Duration::from_millis(250),
+            window: Duration::from_secs(5),
+            failure_backoff: Duration::from_secs(2),
+            policy: PolicyConfig::default(),
+            planner: PlannerConfig::default(),
+            breach_boost: 3.0,
+            idle_discount: 0.25,
+        }
+    }
+}
+
+struct TenantState {
+    name: String,
+    system: Arc<InferenceSystem>,
+    base_weight: f64,
+    mem_budget_mb: Option<f64>,
+    monitor: LoadMonitor,
+}
+
+struct MtState {
+    failed: BTreeSet<usize>,
+    last_decision: String,
+    last_replan_at: Option<Instant>,
+    last_swap_at: Option<Instant>,
+    replans: u64,
+    /// Completed joint replans that swapped at least one tenant.
+    joint_swaps: u64,
+    last_swaps: Vec<(String, SwapReport)>,
+}
+
+/// Point-in-time status of one tenant.
+#[derive(Debug, Clone)]
+pub struct TenantStatus {
+    pub name: String,
+    pub generation: u64,
+    pub swaps: u64,
+    pub in_flight: u64,
+    pub weight: f64,
+    pub window: Option<LoadSnapshot>,
+}
+
+/// The arbitrating controller. Cheap to share (`Arc`); stops and joins
+/// its loop thread on drop.
+pub struct MultiTenantController {
+    tenants: Vec<TenantState>,
+    opts: MultiTenantOptions,
+    state: Mutex<MtState>,
+    /// Serializes joint replans across the loop thread and admin calls.
+    replan_lock: Mutex<()>,
+    stop: Arc<AtomicBool>,
+    thread: Mutex<Option<JoinHandle<()>>>,
+}
+
+impl MultiTenantController {
+    /// Start the control loop over `tenants`. All systems must share one
+    /// device topology (they are built over one executor).
+    pub fn start(
+        tenants: Vec<Tenant>,
+        opts: MultiTenantOptions,
+    ) -> anyhow::Result<Arc<MultiTenantController>> {
+        ensure!(!tenants.is_empty(), "no tenants");
+        let n_dev = tenants[0].system.devices().len();
+        for t in &tenants {
+            ensure!(
+                t.system.devices().len() == n_dev,
+                "tenant '{}' runs on a different device topology",
+                t.name
+            );
+            ensure!(
+                t.weight > 0.0 && t.weight.is_finite(),
+                "tenant '{}' weight {} must be positive",
+                t.name,
+                t.weight
+            );
+        }
+        let mut names = BTreeSet::new();
+        for t in &tenants {
+            ensure!(names.insert(t.name.clone()), "duplicate tenant name '{}'", t.name);
+        }
+
+        let window = opts.window;
+        let ctrl = Arc::new(MultiTenantController {
+            tenants: tenants
+                .into_iter()
+                .map(|t| TenantState {
+                    monitor: LoadMonitor::new(t.system.metrics_arc(), window),
+                    name: t.name,
+                    system: t.system,
+                    base_weight: t.weight,
+                    mem_budget_mb: t.mem_budget_mb,
+                })
+                .collect(),
+            opts,
+            state: Mutex::new(MtState {
+                failed: BTreeSet::new(),
+                last_decision: "starting".into(),
+                last_replan_at: None,
+                last_swap_at: None,
+                replans: 0,
+                joint_swaps: 0,
+                last_swaps: Vec::new(),
+            }),
+            replan_lock: Mutex::new(()),
+            stop: Arc::new(AtomicBool::new(false)),
+            thread: Mutex::new(None),
+        });
+
+        let weak = Arc::downgrade(&ctrl);
+        let stop = Arc::clone(&ctrl.stop);
+        let poll = ctrl.opts.poll_interval;
+        let handle = std::thread::Builder::new()
+            .name("mt-controller".into())
+            .spawn(move || loop {
+                let mut slept = Duration::ZERO;
+                while slept < poll {
+                    if stop.load(Ordering::Relaxed) {
+                        return;
+                    }
+                    let step = (poll - slept).min(Duration::from_millis(25));
+                    std::thread::sleep(step);
+                    slept += step;
+                }
+                let Some(ctrl) = weak.upgrade() else { return };
+                ctrl.tick();
+            })
+            .expect("spawn mt-controller");
+        *ctrl.thread.lock().unwrap() = Some(handle);
+        Ok(ctrl)
+    }
+
+    /// Per-worker-normalized windowed load of one tenant (same scale as
+    /// the single-tenant controller; see `ReconfigController`).
+    fn normalized_snapshot(&self, t: &TenantState) -> Option<LoadSnapshot> {
+        let active = t.system.matrix();
+        let lingering = t.system.lingering_matrices();
+        t.monitor.snapshot().map(|mut s| {
+            for (d, u) in s.device_util.iter_mut().enumerate() {
+                let workers = active.device_workers(d).len()
+                    + lingering.iter().map(|m| m.device_workers(d).len()).sum::<usize>();
+                if workers > 1 {
+                    *u /= workers as f64;
+                }
+            }
+            s
+        })
+    }
+
+    /// Tenant is quiet enough that its reserved share can be stolen.
+    fn is_idle(&self, t: &TenantState, snapshot: Option<&LoadSnapshot>) -> bool {
+        t.system.in_flight() == 0
+            && snapshot
+                .map(|s| s.completed < self.opts.policy.min_window_requests)
+                .unwrap_or(true)
+    }
+
+    /// One control iteration: sample every tenant, evaluate the policy
+    /// per tenant, and on any replan signal run ONE joint replan with
+    /// pressure-scaled weights.
+    pub fn tick(&self) {
+        for t in &self.tenants {
+            t.system.sweep_lingering();
+            t.monitor.sample();
+        }
+        let (failed, since_swap) = {
+            let st = self.state.lock().unwrap();
+            (
+                st.failed.iter().copied().collect::<Vec<usize>>(),
+                st.last_swap_at.map(|i| i.elapsed()),
+            )
+        };
+
+        let snapshots: Vec<Option<LoadSnapshot>> =
+            self.tenants.iter().map(|t| self.normalized_snapshot(t)).collect();
+        let mut trigger: Option<(usize, String, bool)> = None;
+        for (i, t) in self.tenants.iter().enumerate() {
+            let gpu_mask: Vec<bool> = t.system.devices().iter().map(|d| d.is_gpu()).collect();
+            let active_uses_failed = failed
+                .iter()
+                .any(|&d| !t.system.matrix().device_workers(d).is_empty());
+            let decision = if let Some(err) = t.system.active_error() {
+                Decision::Replan { reason: format!("generation error: {err}"), force: true }
+            } else {
+                policy::decide(
+                    &self.opts.policy,
+                    snapshots[i].as_ref(),
+                    &gpu_mask,
+                    t.system.in_flight(),
+                    active_uses_failed,
+                    since_swap,
+                )
+            };
+            if let Decision::Replan { reason, force } = decision {
+                let reason = format!("tenant '{}': {reason}", t.name);
+                // a forced trigger outranks a voluntary one; otherwise
+                // first-come keeps the trigger
+                let keep_existing = match &trigger {
+                    Some((_, _, existing_force)) => *existing_force || !force,
+                    None => false,
+                };
+                if !keep_existing {
+                    trigger = Some((i, reason, force));
+                }
+            }
+        }
+
+        let Some((trigger_idx, reason, force)) = trigger else {
+            self.state.lock().unwrap().last_decision = "hold: every tenant within policy".into();
+            return;
+        };
+        let backoff = if force { self.opts.failure_backoff } else { self.opts.policy.cooldown };
+        let recently_tried = self
+            .state
+            .lock()
+            .unwrap()
+            .last_replan_at
+            .is_some_and(|i| i.elapsed() < backoff);
+        if recently_tried {
+            self.state.lock().unwrap().last_decision = format!("hold: replan backoff ({reason})");
+            return;
+        }
+
+        // pressure per tenant: boost the trigger, discount the idle
+        let pressures: Vec<f64> = self
+            .tenants
+            .iter()
+            .enumerate()
+            .map(|(i, t)| {
+                if i == trigger_idx {
+                    self.opts.breach_boost
+                } else if self.is_idle(t, snapshots[i].as_ref()) {
+                    self.opts.idle_discount
+                } else {
+                    1.0
+                }
+            })
+            .collect();
+        if let Err(e) = self.replan(&reason, force, &pressures) {
+            self.state.lock().unwrap().last_decision = format!("replan ({reason}) failed: {e:#}");
+        }
+    }
+
+    /// Operator-forced joint replan (admin endpoint): no pressure
+    /// scaling, no hysteresis gate.
+    pub fn reconfigure_now(
+        &self,
+        reason: &str,
+    ) -> anyhow::Result<Vec<(String, SwapReport)>> {
+        self.replan(reason, true, &vec![1.0; self.tenants.len()])
+    }
+
+    fn specs(&self, pressures: &[f64]) -> Vec<TenantSpec> {
+        self.tenants
+            .iter()
+            .zip(pressures)
+            .map(|(t, &p)| TenantSpec {
+                name: t.name.clone(),
+                ensemble: t.system.ensemble().clone(),
+                weight: t.base_weight * p,
+                mem_budget_mb: t.mem_budget_mb,
+            })
+            .collect()
+    }
+
+    fn replan(
+        &self,
+        reason: &str,
+        force: bool,
+        pressures: &[f64],
+    ) -> anyhow::Result<Vec<(String, SwapReport)>> {
+        let _serialize = self.replan_lock.lock().unwrap();
+        let failed: Vec<usize> = {
+            let mut st = self.state.lock().unwrap();
+            st.replans += 1;
+            st.last_replan_at = Some(Instant::now());
+            st.failed.iter().copied().collect()
+        };
+        let devices = self.tenants[0].system.devices();
+        let specs = self.specs(pressures);
+
+        // every allocation pinning device memory right now: the live
+        // generation of every tenant (minus dead ones — reconfigure
+        // frees a dead pool before rebuilding) plus timed-out drains
+        let mut resident = Vec::new();
+        for t in &self.tenants {
+            let e = t.system.ensemble().clone();
+            let mats = if t.system.active_error().is_some() {
+                t.system.lingering_matrices()
+            } else {
+                t.system.resident_matrices()
+            };
+            resident.extend(mats.into_iter().map(|m| (e.clone(), m)));
+        }
+        let plan: JointPlan =
+            planner::plan_joint(&specs, devices, &failed, &resident, &self.opts.planner)?;
+
+        let current: Vec<AllocationMatrix> =
+            self.tenants.iter().map(|t| t.system.matrix()).collect();
+        let changed: Vec<usize> = (0..self.tenants.len())
+            .filter(|&i| {
+                plan.matrices[i] != current[i]
+                    || self.tenants[i].system.active_error().is_some()
+            })
+            .collect();
+        if changed.is_empty() {
+            self.state.lock().unwrap().last_decision =
+                format!("hold: planner reproduced every active matrix ({reason})");
+            return Ok(Vec::new());
+        }
+        if !force {
+            let base = planner::score_joint(&specs, &current, devices);
+            let gain = if base > 0.0 { plan.objective / base } else { f64::INFINITY };
+            if gain < self.opts.policy.min_predicted_gain {
+                self.state.lock().unwrap().last_decision = format!(
+                    "hold: predicted joint gain {gain:.2}x below {:.2}x ({reason})",
+                    self.opts.policy.min_predicted_gain
+                );
+                return Ok(Vec::new());
+            }
+        }
+
+        // sequential hot-swaps; the plan fits next to every resident
+        // allocation, so order does not matter for memory
+        let mut swaps = Vec::new();
+        let mut errors = Vec::new();
+        for &i in &changed {
+            let t = &self.tenants[i];
+            match t.system.reconfigure(&plan.matrices[i]) {
+                Ok(report) => {
+                    t.monitor.reset();
+                    swaps.push((t.name.clone(), report));
+                }
+                Err(e) => errors.push(format!("tenant '{}': {e:#}", t.name)),
+            }
+        }
+        let mut st = self.state.lock().unwrap();
+        if swaps.is_empty() {
+            let msg = errors.join("; ");
+            st.last_decision = format!("joint replan ({reason}) swapped nothing: {msg}");
+            drop(st);
+            anyhow::bail!("joint replan swapped nothing: {msg}");
+        }
+        st.joint_swaps += 1;
+        st.last_swap_at = Some(Instant::now());
+        let swapped_names: Vec<&str> = swaps.iter().map(|(n, _)| n.as_str()).collect();
+        st.last_decision = if errors.is_empty() {
+            format!(
+                "joint replan ({reason}): swapped [{}] at objective {:.0}",
+                swapped_names.join(", "),
+                plan.objective
+            )
+        } else {
+            format!(
+                "joint replan ({reason}): swapped [{}], failed: {}",
+                swapped_names.join(", "),
+                errors.join("; ")
+            )
+        };
+        st.last_swaps = swaps.clone();
+        Ok(swaps)
+    }
+
+    /// All-or-nothing device marking (see the single-tenant controller).
+    pub fn mark_devices(
+        &self,
+        fail: Option<usize>,
+        recover: Option<usize>,
+    ) -> anyhow::Result<Vec<String>> {
+        let n = self.tenants[0].system.devices().len();
+        for d in [fail, recover].into_iter().flatten() {
+            ensure!(d < n, "device {d} out of range (topology has {n})");
+        }
+        let mut st = self.state.lock().unwrap();
+        let mut notes = Vec::new();
+        if let Some(d) = fail {
+            st.failed.insert(d);
+            notes.push(format!("device {d} marked failed"));
+        }
+        if let Some(d) = recover {
+            st.failed.remove(&d);
+            notes.push(format!("device {d} marked recovered"));
+        }
+        if !notes.is_empty() {
+            st.last_decision = notes.join("; ");
+        }
+        Ok(notes)
+    }
+
+    pub fn failed_devices(&self) -> Vec<usize> {
+        self.state.lock().unwrap().failed.iter().copied().collect()
+    }
+
+    pub fn tenant_names(&self) -> Vec<String> {
+        self.tenants.iter().map(|t| t.name.clone()).collect()
+    }
+
+    pub fn tenant_statuses(&self) -> Vec<TenantStatus> {
+        self.tenants
+            .iter()
+            .map(|t| TenantStatus {
+                name: t.name.clone(),
+                generation: t.system.generation(),
+                swaps: t.system.swap_count(),
+                in_flight: t.system.in_flight(),
+                weight: t.base_weight,
+                window: self.normalized_snapshot(t),
+            })
+            .collect()
+    }
+
+    /// Status document for `GET /v1/reconfig/status` in multi-tenant
+    /// deployments.
+    pub fn status_json(&self) -> Json {
+        let st = self.state.lock().unwrap();
+        let tenants: Vec<Json> = self
+            .tenant_statuses()
+            .into_iter()
+            .map(|t| {
+                let window = match &t.window {
+                    None => Json::Null,
+                    Some(w) => Json::from_pairs([
+                        ("completed", Json::Num(w.completed as f64)),
+                        ("req_rate", Json::Num(w.req_rate)),
+                        ("p99_ms", Json::Num(w.p99_ms)),
+                    ]),
+                };
+                Json::from_pairs([
+                    ("name", Json::Str(t.name)),
+                    ("generation", Json::Num(t.generation as f64)),
+                    ("swaps", Json::Num(t.swaps as f64)),
+                    ("in_flight", Json::Num(t.in_flight as f64)),
+                    ("weight", Json::Num(t.weight)),
+                    ("window", window),
+                ])
+            })
+            .collect();
+        let last_swaps: Vec<Json> = st
+            .last_swaps
+            .iter()
+            .map(|(name, r)| {
+                Json::from_pairs([
+                    ("tenant", Json::Str(name.clone())),
+                    ("from_generation", Json::Num(r.from_generation as f64)),
+                    ("to_generation", Json::Num(r.to_generation as f64)),
+                    ("drain_complete", Json::Bool(r.drain_complete)),
+                ])
+            })
+            .collect();
+        Json::from_pairs([
+            ("tenants", Json::Arr(tenants)),
+            ("replans", Json::Num(st.replans as f64)),
+            ("joint_swaps", Json::Num(st.joint_swaps as f64)),
+            ("last_swaps", Json::Arr(last_swaps)),
+            (
+                "failed_devices",
+                Json::Arr(st.failed.iter().map(|&d| Json::Num(d as f64)).collect()),
+            ),
+            ("last_decision", Json::Str(st.last_decision.clone())),
+        ])
+    }
+
+    pub fn last_decision(&self) -> String {
+        self.state.lock().unwrap().last_decision.clone()
+    }
+
+    /// Stop the loop thread (also done on drop).
+    pub fn stop(&self) {
+        self.stop.store(true, Ordering::Relaxed);
+        let handle = self.thread.lock().unwrap().take();
+        if let Some(t) = handle {
+            // see ReconfigController::stop: never join from the loop
+            // thread itself (Weak-upgrade drop can land Drop there)
+            if t.thread().id() == std::thread::current().id() {
+                return;
+            }
+            let _ = t.join();
+        }
+    }
+}
+
+impl Drop for MultiTenantController {
+    fn drop(&mut self) {
+        self.stop();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::alloc::matrix::AllocationMatrix;
+    use crate::device::DeviceSet;
+    use crate::engine::EngineOptions;
+    use crate::exec::sim::SimExecutor;
+    use crate::model::{ensemble, EnsembleId};
+
+    fn build(
+        matrix: &AllocationMatrix,
+        id: EnsembleId,
+        ex: Arc<SimExecutor>,
+    ) -> Arc<InferenceSystem> {
+        Arc::new(
+            InferenceSystem::build(matrix, &ensemble(id), ex, EngineOptions::default())
+                .unwrap(),
+        )
+    }
+
+    fn test_opts() -> MultiTenantOptions {
+        MultiTenantOptions {
+            poll_interval: Duration::from_millis(10),
+            window: Duration::from_millis(500),
+            failure_backoff: Duration::from_millis(50),
+            policy: PolicyConfig {
+                p99_slo_ms: 0.01, // any completed traffic breaches
+                min_window_requests: 5,
+                cooldown: Duration::from_secs(30),
+                ..PolicyConfig::default()
+            },
+            planner: PlannerConfig {
+                greedy: crate::alloc::greedy::GreedyConfig {
+                    max_iter: 4,
+                    max_neighs: 24,
+                    ..Default::default()
+                },
+                ..PlannerConfig::default()
+            },
+            ..MultiTenantOptions::default()
+        }
+    }
+
+    #[test]
+    fn rejects_duplicate_names_and_bad_weights() {
+        let d = DeviceSet::hgx(2);
+        let ex = SimExecutor::new(d.clone(), 50_000.0);
+        let mut a = AllocationMatrix::zeroed(d.len(), 1);
+        a.set(0, 0, 8);
+        let s1 = build(&a, EnsembleId::Imn1, Arc::clone(&ex));
+        let s2 = build(&a, EnsembleId::Imn1, Arc::clone(&ex));
+        let dup = MultiTenantController::start(
+            vec![Tenant::new("a", s1), Tenant::new("a", s2)],
+            test_opts(),
+        );
+        assert!(dup.is_err());
+
+        // fresh executor: the duplicate-name systems above may still
+        // hold their ledger reservations
+        let ex2 = SimExecutor::new(d.clone(), 50_000.0);
+        let s3 = build(&a, EnsembleId::Imn1, ex2);
+        let mut bad = Tenant::new("w", s3);
+        bad.weight = 0.0;
+        assert!(MultiTenantController::start(vec![bad], test_opts()).is_err());
+    }
+
+    #[test]
+    fn breach_on_one_tenant_triggers_a_joint_swap() {
+        // tenant A: one heavy worker pinned on GPU0 of 3; tenant B: idle
+        // on GPU1. A's SLO breach must drive a joint replan.
+        let d = DeviceSet::hgx(3);
+        let ex = SimExecutor::new(d.clone(), 50_000.0);
+        let e = ensemble(EnsembleId::Imn1);
+        let mut ma = AllocationMatrix::zeroed(d.len(), 1);
+        ma.set(0, 0, 8);
+        let mut mb = AllocationMatrix::zeroed(d.len(), 1);
+        mb.set(1, 0, 8);
+        let sys_a = build(&ma, EnsembleId::Imn1, Arc::clone(&ex));
+        let sys_b = build(&mb, EnsembleId::Imn1, Arc::clone(&ex));
+        let ctrl = MultiTenantController::start(
+            vec![
+                Tenant::new("a", Arc::clone(&sys_a)),
+                Tenant::new("b", Arc::clone(&sys_b)),
+            ],
+            test_opts(),
+        )
+        .unwrap();
+        ctrl.stop(); // deterministic: drive ticks by hand
+
+        let x = vec![0.1; 4 * e.members[0].input_elems_per_image()];
+        for _ in 0..30 {
+            sys_a.predict(x.clone(), 4).unwrap();
+            std::thread::sleep(Duration::from_millis(1));
+            ctrl.tick();
+            if sys_a.generation() > 1 {
+                break;
+            }
+        }
+        assert!(sys_a.generation() >= 2, "no joint swap: {}", ctrl.last_decision());
+        // both tenants still serve after the joint swap
+        assert!(sys_a.predict(x.clone(), 4).is_ok());
+        assert!(sys_b.predict(x, 4).is_ok());
+        let j = ctrl.status_json();
+        assert!(j.get("joint_swaps").and_then(Json::as_usize).unwrap() >= 1);
+        assert_eq!(j.get("tenants").unwrap().as_arr().unwrap().len(), 2);
+    }
+}

@@ -1,55 +1,93 @@
 //! The prediction REST API on top of [`super::http`].
 //!
+//! Every tenant-scoped route dispatches on the `x-ensemble` request
+//! header through the [`SystemRegistry`] (§I.B ensemble selection):
+//! absent header = the default (first-registered) ensemble, unknown
+//! name = `404`. Single-tenant deployments are the one-entry special
+//! case of the same path.
+//!
 //! Routes:
 //! * `POST /v1/predict` — body is either JSON `{"images": [[f32...]...]}`
 //!   or raw little-endian f32 (`application/octet-stream`) with the image
 //!   count in the `x-num-images` header. Responds in kind.
-//! * `GET /v1/health` — readiness probe.
-//! * `GET /v1/stats` — engine metrics + request latency summary (JSON).
+//! * `GET /v1/health` — readiness probe (selected tenant + tenant count).
+//! * `GET /v1/stats` — selected tenant's engine metrics + request
+//!   latency summary (JSON).
 //! * `GET /v1/metrics` — the same in Prometheus text exposition format.
-//! * `GET /v1/matrix` — the allocation matrix serving the ensemble.
-//! * `POST /v1/reconfigure` — admin: force a replan/hot-swap; body may
+//! * `GET /v1/matrix` — the allocation matrix serving the selected
+//!   ensemble.
+//! * `GET /v1/ensembles` — registered tenants with per-tenant stats.
+//! * `POST /v1/reconfigure` — admin: force a replan/hot-swap (joint
+//!   across all tenants under a multi-tenant controller); body may
 //!   carry `{"fail_device": d}`, `{"recover_device": d}` and/or
-//!   `{"reason": "..."}`. Requires a [`ReconfigController`].
+//!   `{"reason": "..."}`. Requires a controller.
 //! * `GET /v1/reconfig/status` — controller status: generation, swaps,
-//!   failed devices, last decision, windowed load.
+//!   failed devices, last decision, windowed load (per tenant under a
+//!   multi-tenant controller).
 
-use std::sync::Arc;
+use std::collections::BTreeMap;
+use std::sync::{Arc, RwLock};
 use std::time::Instant;
 
 use crate::engine::InferenceSystem;
 use crate::metrics::LatencyHistogram;
-use crate::reconfig::ReconfigController;
+use crate::reconfig::{MultiTenantController, ReconfigController};
 use crate::server::cache::{request_key, PredictionCache};
 use crate::server::http::{Handler, HttpServer, Request, Response};
+use crate::server::selection::SystemRegistry;
 use crate::util::json::Json;
 
-/// A deployed HTTP API around an inference system.
+/// A deployed HTTP API around a registry of inference systems.
 pub struct ApiServer {
     http: HttpServer,
     state: Arc<ApiState>,
 }
 
+/// Which reconfiguration control plane backs the admin routes.
+enum AdminController {
+    None,
+    /// Single-tenant autoscaler.
+    Single(Arc<ReconfigController>),
+    /// Multi-tenant arbiter (joint replans).
+    Multi(Arc<MultiTenantController>),
+}
+
 struct ApiState {
-    system: Arc<InferenceSystem>,
-    latency: LatencyHistogram,
-    /// Optional redundant-request cache (§I.B).
+    registry: Arc<SystemRegistry>,
+    /// Per-tenant HTTP-inclusive latency histograms, created on first
+    /// use (tenants can be registered after the server starts).
+    latencies: RwLock<BTreeMap<String, Arc<LatencyHistogram>>>,
+    /// Optional redundant-request cache (§I.B), shared across tenants —
+    /// keys are tenant-scoped (see [`request_key`]).
     cache: Option<PredictionCache>,
-    /// Optional autoscaling controller (admin routes).
-    controller: Option<Arc<ReconfigController>>,
+    /// Optional reconfiguration controller (admin routes).
+    controller: AdminController,
+}
+
+impl ApiState {
+    fn tenant_latency(&self, name: &str) -> Arc<LatencyHistogram> {
+        if let Some(h) = self.latencies.read().unwrap().get(name) {
+            return Arc::clone(h);
+        }
+        let mut map = self.latencies.write().unwrap();
+        Arc::clone(
+            map.entry(name.to_string())
+                .or_insert_with(|| Arc::new(LatencyHistogram::new())),
+        )
+    }
 }
 
 impl ApiServer {
     pub fn start(system: Arc<InferenceSystem>, addr: &str, threads: usize)
         -> anyhow::Result<ApiServer> {
-        Self::start_opts(system, addr, threads, None, None)
+        Self::start_opts(Self::singleton(system), addr, threads, None, AdminController::None)
     }
 
     /// Start with a prediction cache of `cache_capacity` entries.
     pub fn start_cached(system: Arc<InferenceSystem>, addr: &str, threads: usize,
                         cache_capacity: usize) -> anyhow::Result<ApiServer> {
-        Self::start_opts(system, addr, threads, Some(PredictionCache::new(cache_capacity)),
-                         None)
+        Self::start_opts(Self::singleton(system), addr, threads,
+                         Some(PredictionCache::new(cache_capacity)), AdminController::None)
     }
 
     /// Start with the live-reconfiguration admin routes wired to a
@@ -57,15 +95,40 @@ impl ApiServer {
     pub fn start_with_controller(system: Arc<InferenceSystem>, addr: &str, threads: usize,
                                  controller: Arc<ReconfigController>)
         -> anyhow::Result<ApiServer> {
-        Self::start_opts(system, addr, threads, None, Some(controller))
+        Self::start_opts(Self::singleton(system), addr, threads, None,
+                         AdminController::Single(controller))
     }
 
-    fn start_opts(system: Arc<InferenceSystem>, addr: &str, threads: usize,
+    /// Start over a (possibly multi-tenant) registry; `x-ensemble`
+    /// selects the serving system per request. `controller` wires the
+    /// admin routes to a multi-tenant arbiter, `cache_capacity` enables
+    /// the shared tenant-scoped prediction cache.
+    pub fn start_registry(registry: Arc<SystemRegistry>, addr: &str, threads: usize,
+                          cache_capacity: Option<usize>,
+                          controller: Option<Arc<MultiTenantController>>)
+        -> anyhow::Result<ApiServer> {
+        anyhow::ensure!(!registry.is_empty(), "registry has no systems");
+        let admin = match controller {
+            Some(c) => AdminController::Multi(c),
+            None => AdminController::None,
+        };
+        Self::start_opts(registry, addr, threads,
+                         cache_capacity.map(PredictionCache::new), admin)
+    }
+
+    fn singleton(system: Arc<InferenceSystem>) -> Arc<SystemRegistry> {
+        let registry = SystemRegistry::new();
+        let name = system.ensemble().name.clone();
+        registry.register(&name, system);
+        registry
+    }
+
+    fn start_opts(registry: Arc<SystemRegistry>, addr: &str, threads: usize,
                   cache: Option<PredictionCache>,
-                  controller: Option<Arc<ReconfigController>>) -> anyhow::Result<ApiServer> {
+                  controller: AdminController) -> anyhow::Result<ApiServer> {
         let state = Arc::new(ApiState {
-            system,
-            latency: LatencyHistogram::new(),
+            registry,
+            latencies: RwLock::new(BTreeMap::new()),
             cache,
             controller,
         });
@@ -79,18 +142,39 @@ impl ApiServer {
         self.http.addr()
     }
 
-    pub fn system(&self) -> &InferenceSystem {
-        &self.state.system
+    /// The default (first-registered) system.
+    pub fn system(&self) -> Arc<InferenceSystem> {
+        self.state.registry.select(None).expect("registry has no systems")
+    }
+
+    pub fn registry(&self) -> &Arc<SystemRegistry> {
+        &self.state.registry
+    }
+}
+
+/// Resolve the serving tenant from the `x-ensemble` header.
+fn select_tenant(
+    state: &ApiState,
+    req: &Request,
+) -> Result<(String, Arc<InferenceSystem>), Response> {
+    let name = req.headers.get("x-ensemble").map(String::as_str);
+    match state.registry.select_named(name) {
+        Some(pair) => Ok(pair),
+        None => match name {
+            Some(n) => Err(Response::text(404, &format!("unknown ensemble '{n}'"))),
+            None => Err(Response::text(503, "no ensembles registered")),
+        },
     }
 }
 
 fn route(state: &ApiState, req: &Request) -> Response {
     match (req.method.as_str(), req.path.as_str()) {
         ("POST", "/v1/predict") => predict(state, req),
-        ("GET", "/v1/health") => health(state),
-        ("GET", "/v1/stats") => stats(state),
-        ("GET", "/v1/metrics") => prometheus(state),
-        ("GET", "/v1/matrix") => matrix(state),
+        ("GET", "/v1/health") => health(state, req),
+        ("GET", "/v1/stats") => stats(state, req),
+        ("GET", "/v1/metrics") => prometheus(state, req),
+        ("GET", "/v1/matrix") => matrix(state, req),
+        ("GET", "/v1/ensembles") => ensembles(state),
         ("POST", "/v1/reconfigure") => reconfigure(state, req),
         ("GET", "/v1/reconfig/status") => reconfig_status(state),
         ("POST", _) | ("GET", _) => Response::text(404, "unknown route"),
@@ -98,26 +182,36 @@ fn route(state: &ApiState, req: &Request) -> Response {
     }
 }
 
-fn health(state: &ApiState) -> Response {
+fn health(state: &ApiState, req: &Request) -> Response {
+    let (name, system) = match select_tenant(state, req) {
+        Ok(pair) => pair,
+        Err(resp) => return resp,
+    };
     let body = Json::from_pairs([
         ("status", Json::Str("ok".into())),
-        ("workers", Json::Num(state.system.worker_count() as f64)),
-        ("ensemble", Json::Str(state.system.ensemble().name.clone())),
+        ("workers", Json::Num(system.worker_count() as f64)),
+        ("ensemble", Json::Str(system.ensemble().name.clone())),
+        ("tenant", Json::Str(name)),
+        ("tenants", Json::Num(state.registry.len() as f64)),
     ]);
     Response::json(200, body.to_string())
 }
 
-fn stats(state: &ApiState) -> Response {
-    let mut fields: Vec<(&'static str, Json)> = state
-        .system
+fn stats(state: &ApiState, req: &Request) -> Response {
+    let (name, system) = match select_tenant(state, req) {
+        Ok(pair) => pair,
+        Err(resp) => return resp,
+    };
+    let latency = state.tenant_latency(&name);
+    let mut fields: Vec<(&'static str, Json)> = system
         .metrics()
         .snapshot()
         .into_iter()
         .map(|(k, v)| (k, Json::Num(v as f64)))
         .collect();
-    fields.push(("latency_mean_ms", Json::Num(state.latency.mean_ms())));
-    fields.push(("latency_p95_ms", Json::Num(state.latency.quantile_ms(0.95))));
-    fields.push(("swaps", Json::Num(state.system.swap_count() as f64)));
+    fields.push(("latency_mean_ms", Json::Num(latency.mean_ms())));
+    fields.push(("latency_p95_ms", Json::Num(latency.quantile_ms(0.95))));
+    fields.push(("swaps", Json::Num(system.swap_count() as f64)));
     if let Some(cache) = &state.cache {
         fields.push(("cache_entries", Json::Num(cache.len() as f64)));
         fields.push(("cache_hit_rate", Json::Num(cache.hit_rate())));
@@ -125,8 +219,7 @@ fn stats(state: &ApiState) -> Response {
     fields.push((
         "device_busy_us",
         Json::Arr(
-            state
-                .system
+            system
                 .metrics()
                 .device_busy_us()
                 .into_iter()
@@ -134,61 +227,173 @@ fn stats(state: &ApiState) -> Response {
                 .collect(),
         ),
     ));
+    fields.push(("tenant", Json::Str(name)));
     Response::json(200, Json::from_pairs(fields).to_string())
 }
 
-/// Prometheus text exposition (v0.0.4) of the engine counters, the
+/// Registered tenants with per-tenant summary stats.
+fn ensembles(state: &ApiState) -> Response {
+    let names = state.registry.names();
+    let rows: Vec<Json> = names
+        .iter()
+        .filter_map(|n| state.registry.select_named(Some(n.as_str())))
+        .map(|(name, sys)| {
+            let latency = state.tenant_latency(&name);
+            let m = sys.metrics();
+            Json::from_pairs([
+                ("name", Json::Str(name.clone())),
+                ("ensemble", Json::Str(sys.ensemble().name.clone())),
+                ("models", Json::Num(sys.ensemble().len() as f64)),
+                ("workers", Json::Num(sys.worker_count() as f64)),
+                ("generation", Json::Num(sys.generation() as f64)),
+                (
+                    "requests",
+                    Json::Num(m.requests.load(std::sync::atomic::Ordering::Relaxed) as f64),
+                ),
+                ("latency_p95_ms", Json::Num(latency.quantile_ms(0.95))),
+            ])
+        })
+        .collect();
+    let default = match state.registry.default_name() {
+        Some(n) => Json::Str(n),
+        None => Json::Null,
+    };
+    Response::json(
+        200,
+        Json::from_pairs([("default", default), ("ensembles", Json::Arr(rows))]).to_string(),
+    )
+}
+
+/// Prometheus text exposition (v0.0.4) of the engine counters,
 /// per-device busy gauges and both latency histograms.
-fn prometheus(state: &ApiState) -> Response {
-    let m = state.system.metrics();
+///
+/// Single-tenant deployments (or an explicit `x-ensemble` header) get
+/// the unlabeled legacy format for that one tenant. A multi-tenant
+/// deployment scraped WITHOUT a header — what a standard Prometheus
+/// scrape config sends — exports EVERY tenant with a `tenant="..."`
+/// label (`# TYPE` emitted once per metric name), so no tenant is
+/// invisible to dashboards.
+fn prometheus(state: &ApiState, req: &Request) -> Response {
+    let explicit = req.headers.contains_key("x-ensemble");
+    if explicit || state.registry.len() <= 1 {
+        let (name, system) = match select_tenant(state, req) {
+            Ok(pair) => pair,
+            Err(resp) => return resp,
+        };
+        let out = tenant_exposition(&[(name, system)], &|n| state.tenant_latency(n), false);
+        return Response {
+            status: 200,
+            content_type: "text/plain; version=0.0.4",
+            body: out.into_bytes(),
+        };
+    }
+    let tenants: Vec<(String, Arc<InferenceSystem>)> = state
+        .registry
+        .names()
+        .iter()
+        .filter_map(|n| state.registry.select_named(Some(n.as_str())))
+        .collect();
+    let out = tenant_exposition(&tenants, &|n| state.tenant_latency(n), true);
+    Response { status: 200, content_type: "text/plain; version=0.0.4", body: out.into_bytes() }
+}
+
+/// Render the exposition for `tenants`; `labeled` adds `tenant="..."`
+/// to every sample (multi-tenant scrape), otherwise the legacy
+/// unlabeled single-tenant format is preserved byte-for-byte.
+fn tenant_exposition(
+    tenants: &[(String, Arc<InferenceSystem>)],
+    latency_of: &dyn Fn(&str) -> Arc<LatencyHistogram>,
+    labeled: bool,
+) -> String {
     let mut out = String::new();
-    for (k, v) in m.snapshot() {
+    if tenants.is_empty() {
+        // every tenant deregistered at runtime: an empty exposition
+        return out;
+    }
+    let snapshots: Vec<Vec<(&'static str, u64)>> =
+        tenants.iter().map(|(_, s)| s.metrics().snapshot()).collect();
+    let label = |name: &str| {
+        if labeled { format!("{{tenant=\"{name}\"}}") } else { String::new() }
+    };
+    // counters/gauges: every system exposes the same key set in the
+    // same order, so index j addresses one metric across tenants
+    for j in 0..snapshots[0].len() {
+        let k = snapshots[0][j].0;
         // prometheus convention: counters carry the _total suffix,
         // gauges do not
-        if k == "generation" {
+        let (suffix, kind) = if k == "generation" { ("", "gauge") } else { ("_total", "counter") };
+        out.push_str(&format!("# TYPE ensemble_serve_{k}{suffix} {kind}\n"));
+        for ((name, _), snap) in tenants.iter().zip(&snapshots) {
             out.push_str(&format!(
-                "# TYPE ensemble_serve_{k} gauge\nensemble_serve_{k} {v}\n"
-            ));
-        } else {
-            out.push_str(&format!(
-                "# TYPE ensemble_serve_{k}_total counter\nensemble_serve_{k}_total {v}\n"
+                "ensemble_serve_{k}{suffix}{} {}\n",
+                label(name),
+                snap[j].1
             ));
         }
     }
     out.push_str("# TYPE ensemble_serve_device_busy_seconds_total counter\n");
-    for (d, us) in m.device_busy_us().iter().enumerate() {
-        out.push_str(&format!(
-            "ensemble_serve_device_busy_seconds_total{{device=\"{d}\"}} {}\n",
-            *us as f64 / 1e6
-        ));
+    for (name, system) in tenants {
+        let tenant_label = if labeled { format!(",tenant=\"{name}\"") } else { String::new() };
+        for (d, us) in system.metrics().device_busy_us().iter().enumerate() {
+            out.push_str(&format!(
+                "ensemble_serve_device_busy_seconds_total{{device=\"{d}\"{tenant_label}}} {}\n",
+                *us as f64 / 1e6
+            ));
+        }
     }
-    write_histogram(&mut out, "ensemble_serve_predict_latency_seconds", &m.request_latency);
-    write_histogram(&mut out, "ensemble_serve_http_latency_seconds", &state.latency);
-    Response { status: 200, content_type: "text/plain; version=0.0.4", body: out.into_bytes() }
+    for (metric, engine_side) in [
+        ("ensemble_serve_predict_latency_seconds", true),
+        ("ensemble_serve_http_latency_seconds", false),
+    ] {
+        out.push_str(&format!("# TYPE {metric} histogram\n"));
+        for (name, system) in tenants {
+            let tenant_label = if labeled { format!("tenant=\"{name}\"") } else { String::new() };
+            if engine_side {
+                write_histogram(&mut out, metric, &system.metrics().request_latency,
+                                &tenant_label);
+            } else {
+                write_histogram(&mut out, metric, &latency_of(name), &tenant_label);
+            }
+        }
+    }
+    out
 }
 
-fn write_histogram(out: &mut String, name: &str, h: &LatencyHistogram) {
-    out.push_str(&format!("# TYPE {name} histogram\n"));
+/// Append one tenant's histogram series (no `# TYPE` line — the caller
+/// emits it once per metric name). `labels` is either empty or a
+/// `key="value"` list WITHOUT braces.
+fn write_histogram(out: &mut String, name: &str, h: &LatencyHistogram, labels: &str) {
     // +Inf and _count must come from the SAME snapshot as the finite
     // buckets: mixing in h.count() (a separate atomic) under concurrent
     // recording can emit a non-monotone histogram.
     let counts = h.bucket_counts();
     let total: u64 = counts.iter().sum();
+    let plain = if labels.is_empty() { String::new() } else { format!("{{{labels}}}") };
+    let with_le = |le: &str| {
+        if labels.is_empty() {
+            format!("{{le=\"{le}\"}}")
+        } else {
+            format!("{{le=\"{le}\",{labels}}}")
+        }
+    };
     let mut cum = 0u64;
     for (bound_us, count) in h.bounds().iter().zip(&counts) {
         cum += count;
         out.push_str(&format!(
-            "{name}_bucket{{le=\"{}\"}} {cum}\n",
-            *bound_us as f64 / 1e6
+            "{name}_bucket{} {cum}\n",
+            with_le(&format!("{}", *bound_us as f64 / 1e6))
         ));
     }
-    out.push_str(&format!("{name}_bucket{{le=\"+Inf\"}} {total}\n"));
-    out.push_str(&format!("{name}_sum {}\n", h.total_us() as f64 / 1e6));
-    out.push_str(&format!("{name}_count {total}\n"));
+    out.push_str(&format!("{name}_bucket{} {total}\n", with_le("+Inf")));
+    out.push_str(&format!("{name}_sum{plain} {}\n", h.total_us() as f64 / 1e6));
+    out.push_str(&format!("{name}_count{plain} {total}\n"));
 }
 
-fn matrix(state: &ApiState) -> Response {
-    Response::json(200, state.system.matrix().to_json().to_string())
+fn matrix(state: &ApiState, req: &Request) -> Response {
+    match select_tenant(state, req) {
+        Ok((_, system)) => Response::json(200, system.matrix().to_json().to_string()),
+        Err(resp) => resp,
+    }
 }
 
 /// Strict device-index argument: present-but-malformed (string,
@@ -204,88 +409,155 @@ fn device_arg(doc: &Json, key: &str) -> Result<Option<usize>, String> {
     }
 }
 
-fn reconfigure(state: &ApiState, req: &Request) -> Response {
-    let Some(ctrl) = &state.controller else {
-        return Response::text(404, "no reconfiguration controller running");
+/// Parsed, validated `POST /v1/reconfigure` body.
+struct ReconfigureArgs {
+    fail: Option<usize>,
+    recover: Option<usize>,
+    reason: Option<String>,
+}
+
+fn parse_reconfigure_body(body: &[u8]) -> Result<ReconfigureArgs, Response> {
+    if body.is_empty() {
+        return Ok(ReconfigureArgs { fail: None, recover: None, reason: None });
+    }
+    let doc = match std::str::from_utf8(body)
+        .map_err(|e| e.to_string())
+        .and_then(|t| Json::parse(t).map_err(|e| e.to_string()))
+    {
+        Ok(doc) => doc,
+        Err(e) => return Err(Response::text(400, &format!("bad request: {e}"))),
     };
-    let mut reason = "operator request".to_string();
-    if !req.body.is_empty() {
-        let doc = match std::str::from_utf8(&req.body)
-            .map_err(|e| e.to_string())
-            .and_then(|t| Json::parse(t).map_err(|e| e.to_string()))
-        {
-            Ok(doc) => doc,
-            Err(e) => return Response::text(400, &format!("bad request: {e}")),
-        };
-        // strict schema: a non-object body or a typo'd key would
-        // otherwise read as "no arguments" and degrade a device-failure
-        // report into a plain forced swap
-        let Some(obj) = doc.as_obj() else {
-            return Response::text(400, "bad request: body must be a JSON object");
-        };
-        for key in obj.keys() {
-            if !["fail_device", "recover_device", "reason"].contains(&key.as_str()) {
-                return Response::text(400, &format!("bad request: unknown field '{key}'"));
-            }
-        }
-        // validate the WHOLE body before applying any of it: a partial
-        // apply (fail_device marked, then 400 on a later field) would
-        // leave the controller force-replanning off a device from a
-        // request the operator saw rejected
-        let fail = match device_arg(&doc, "fail_device") {
-            Ok(v) => v,
-            Err(e) => return Response::text(400, &format!("bad request: {e}")),
-        };
-        let recover = match device_arg(&doc, "recover_device") {
-            Ok(v) => v,
-            Err(e) => return Response::text(400, &format!("bad request: {e}")),
-        };
-        let custom_reason = match doc.get("reason") {
-            None => None,
-            Some(Json::Str(r)) => Some(r.clone()),
-            Some(_) => return Response::text(400, "bad request: reason must be a string"),
-        };
-        let mut actions = match ctrl.mark_devices(fail, recover) {
-            Ok(notes) => notes,
-            Err(e) => return Response::text(400, &format!("bad request: {e}")),
-        };
-        if let Some(r) = custom_reason {
-            actions.push(r);
-        }
-        if !actions.is_empty() {
-            reason = actions.join("; ");
+    // strict schema: a non-object body or a typo'd key would otherwise
+    // read as "no arguments" and degrade a device-failure report into a
+    // plain forced swap
+    let Some(obj) = doc.as_obj() else {
+        return Err(Response::text(400, "bad request: body must be a JSON object"));
+    };
+    for key in obj.keys() {
+        if !["fail_device", "recover_device", "reason"].contains(&key.as_str()) {
+            return Err(Response::text(400, &format!("bad request: unknown field '{key}'")));
         }
     }
-    match ctrl.reconfigure_now(&reason) {
-        Ok(Some(r)) => {
-            let mut fields = match crate::reconfig::controller::swap_report_json(&r) {
-                Json::Obj(map) => map,
-                _ => Default::default(),
-            };
-            fields.insert("swapped".to_string(), Json::Bool(true));
-            Response::json(200, Json::Obj(fields).to_string())
+    // validate the WHOLE body before applying any of it: a partial
+    // apply (fail_device marked, then 400 on a later field) would leave
+    // the controller force-replanning off a device from a request the
+    // operator saw rejected
+    let fail = match device_arg(&doc, "fail_device") {
+        Ok(v) => v,
+        Err(e) => return Err(Response::text(400, &format!("bad request: {e}"))),
+    };
+    let recover = match device_arg(&doc, "recover_device") {
+        Ok(v) => v,
+        Err(e) => return Err(Response::text(400, &format!("bad request: {e}"))),
+    };
+    let reason = match doc.get("reason") {
+        None => None,
+        Some(Json::Str(r)) => Some(r.clone()),
+        Some(_) => return Err(Response::text(400, "bad request: reason must be a string")),
+    };
+    Ok(ReconfigureArgs { fail, recover, reason })
+}
+
+/// Fold the device marks' notes and the client's custom reason into the
+/// one reason string the controller logs; `Err` is the 400 response.
+fn assemble_reason(
+    mark_result: anyhow::Result<Vec<String>>,
+    custom: Option<String>,
+) -> Result<String, Response> {
+    let mut actions = match mark_result {
+        Ok(notes) => notes,
+        Err(e) => return Err(Response::text(400, &format!("bad request: {e}"))),
+    };
+    actions.extend(custom);
+    Ok(if actions.is_empty() {
+        "operator request".to_string()
+    } else {
+        actions.join("; ")
+    })
+}
+
+fn reconfigure(state: &ApiState, req: &Request) -> Response {
+    let args = match parse_reconfigure_body(&req.body) {
+        Ok(args) => args,
+        Err(resp) => return resp,
+    };
+    match &state.controller {
+        AdminController::None => Response::text(404, "no reconfiguration controller running"),
+        AdminController::Single(ctrl) => {
+            let reason =
+                match assemble_reason(ctrl.mark_devices(args.fail, args.recover), args.reason) {
+                    Ok(r) => r,
+                    Err(resp) => return resp,
+                };
+            match ctrl.reconfigure_now(&reason) {
+                Ok(Some(r)) => {
+                    let mut fields = match crate::reconfig::controller::swap_report_json(&r) {
+                        Json::Obj(map) => map,
+                        _ => Default::default(),
+                    };
+                    fields.insert("swapped".to_string(), Json::Bool(true));
+                    Response::json(200, Json::Obj(fields).to_string())
+                }
+                Ok(None) => Response::json(
+                    200,
+                    Json::from_pairs([
+                        ("swapped", Json::Bool(false)),
+                        ("decision", Json::Str(ctrl.status().last_decision)),
+                    ])
+                    .to_string(),
+                ),
+                Err(e) => Response::text(503, &format!("reconfiguration failed: {e:#}")),
+            }
         }
-        Ok(None) => Response::json(
-            200,
-            Json::from_pairs([
-                ("swapped", Json::Bool(false)),
-                ("decision", Json::Str(ctrl.status().last_decision)),
-            ])
-            .to_string(),
-        ),
-        Err(e) => Response::text(503, &format!("reconfiguration failed: {e:#}")),
+        AdminController::Multi(ctrl) => {
+            let reason =
+                match assemble_reason(ctrl.mark_devices(args.fail, args.recover), args.reason) {
+                    Ok(r) => r,
+                    Err(resp) => return resp,
+                };
+            match ctrl.reconfigure_now(&reason) {
+                Ok(swaps) => {
+                    let tenants: Vec<Json> = swaps
+                        .iter()
+                        .map(|(name, r)| {
+                            Json::from_pairs([
+                                ("tenant", Json::Str(name.clone())),
+                                ("to_generation", Json::Num(r.to_generation as f64)),
+                                ("drain_complete", Json::Bool(r.drain_complete)),
+                            ])
+                        })
+                        .collect();
+                    Response::json(
+                        200,
+                        Json::from_pairs([
+                            ("swapped", Json::Bool(!swaps.is_empty())),
+                            ("tenants", Json::Arr(tenants)),
+                            ("decision", Json::Str(ctrl.last_decision())),
+                        ])
+                        .to_string(),
+                    )
+                }
+                Err(e) => Response::text(503, &format!("reconfiguration failed: {e:#}")),
+            }
+        }
     }
 }
 
 fn reconfig_status(state: &ApiState) -> Response {
     match &state.controller {
-        Some(ctrl) => Response::json(200, ctrl.status().to_json().to_string()),
-        None => Response::text(404, "no reconfiguration controller running"),
+        AdminController::Single(ctrl) => Response::json(200, ctrl.status().to_json().to_string()),
+        AdminController::Multi(ctrl) => Response::json(200, ctrl.status_json().to_string()),
+        AdminController::None => Response::text(404, "no reconfiguration controller running"),
     }
 }
 
 fn predict(state: &ApiState, req: &Request) -> Response {
     let t0 = Instant::now();
+    let (tenant, system) = match select_tenant(state, req) {
+        Ok(pair) => pair,
+        Err(resp) => return resp,
+    };
+    let latency = state.tenant_latency(&tenant);
     let binary = req
         .headers
         .get("content-type")
@@ -320,20 +592,21 @@ fn predict(state: &ApiState, req: &Request) -> Response {
         return Response::text(400, "image count does not divide payload");
     }
 
-    // redundant-request cache (§I.B)
-    let key = state.cache.as_ref().map(|c| request_key(&x, n));
+    // redundant-request cache (§I.B), scoped by serving tenant (both in
+    // the digest and in the ownership check on the entry)
+    let key = state.cache.as_ref().map(|_| request_key(&tenant, &x, n));
     if let (Some(cache), Some(k)) = (&state.cache, &key) {
-        if let Some(y) = cache.get(k) {
-            state.latency.record(t0.elapsed());
+        if let Some(y) = cache.get(&tenant, k) {
+            latency.record(t0.elapsed());
             return encode_predictions(y, n, binary);
         }
     }
 
-    match state.system.predict(x, n) {
+    match system.predict(x, n) {
         Ok(y) => {
-            state.latency.record(t0.elapsed());
+            latency.record(t0.elapsed());
             if let (Some(cache), Some(k)) = (&state.cache, key) {
-                cache.put(k, y.clone());
+                cache.put(&tenant, k, y.clone());
             }
             encode_predictions(y, n, binary)
         }
@@ -424,11 +697,49 @@ mod tests {
         let j = Json::parse(std::str::from_utf8(&body).unwrap()).unwrap();
         assert_eq!(j.get("status").unwrap().as_str(), Some("ok"));
         assert_eq!(j.get("workers").unwrap().as_usize(), Some(4));
+        assert_eq!(j.get("tenants").unwrap().as_usize(), Some(1));
 
         let (code, body) = http_request(srv.addr(), "GET", "/v1/stats", "", b"").unwrap();
         assert_eq!(code, 200);
         let j = Json::parse(std::str::from_utf8(&body).unwrap()).unwrap();
         assert!(j.get("requests").is_some());
+        assert_eq!(j.get("tenant").unwrap().as_str(), Some("IMN4"));
+    }
+
+    #[test]
+    fn ensembles_listing() {
+        let srv = api();
+        let (code, body) = http_request(srv.addr(), "GET", "/v1/ensembles", "", b"").unwrap();
+        assert_eq!(code, 200);
+        let j = Json::parse(std::str::from_utf8(&body).unwrap()).unwrap();
+        assert_eq!(j.get("default").unwrap().as_str(), Some("IMN4"));
+        let rows = j.get("ensembles").unwrap().as_arr().unwrap();
+        assert_eq!(rows.len(), 1);
+        assert_eq!(rows[0].get("name").unwrap().as_str(), Some("IMN4"));
+        assert_eq!(rows[0].get("models").unwrap().as_usize(), Some(4));
+    }
+
+    #[test]
+    fn unknown_ensemble_is_404() {
+        let srv = api();
+        let elems = srv.system().ensemble().members[0].input_elems_per_image();
+        let row = format!("[{}]", vec!["0.5"; elems].join(","));
+        let body = format!("{{\"images\":[{row}]}}");
+        // raw request with an x-ensemble header naming a missing tenant
+        use std::io::{Read, Write};
+        let mut stream = std::net::TcpStream::connect(srv.addr()).unwrap();
+        let head = format!(
+            "POST /v1/predict HTTP/1.1\r\nhost: x\r\ncontent-type: application/json\r\n\
+             x-ensemble: nope\r\ncontent-length: {}\r\nconnection: close\r\n\r\n",
+            body.len()
+        );
+        stream.write_all(head.as_bytes()).unwrap();
+        stream.write_all(body.as_bytes()).unwrap();
+        let mut resp = Vec::new();
+        stream.read_to_end(&mut resp).unwrap();
+        let text = String::from_utf8_lossy(&resp);
+        assert!(text.starts_with("HTTP/1.1 404"), "{text}");
+        assert!(text.contains("unknown ensemble"), "{text}");
     }
 
     #[test]

@@ -1,28 +1,71 @@
 //! Prediction cache (§I.B): "to improve performance under redundant
 //! requests, caching allows avoiding recomputing similar requests".
 //!
-//! An LRU keyed by the content hash of the request payload. Entries store
-//! the full ensemble output; hits skip the engine entirely.
+//! An LRU keyed by the content hash of (serving tenant, request
+//! payload). Entries store the full ensemble output; hits skip the
+//! engine entirely. The tenant name is part of the key because one
+//! cache may sit in front of several registered ensembles: the same
+//! pixels sent to tenant "fast" and tenant "accurate" are different
+//! requests with different answers.
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Mutex;
+use std::sync::{Mutex, OnceLock};
 
-use sha2::{Digest, Sha256};
+use crate::util::hash::Fnv128;
 
-/// Content key of a request (payload + image count).
-pub fn request_key(x: &[f32], nb_images: usize) -> [u8; 32] {
-    let mut h = Sha256::new();
-    h.update((nb_images as u64).to_le_bytes());
+/// Per-process salt folded into every request key. FNV-1a is
+/// invertible, so without a secret a client controlling raw payload
+/// bytes could CRAFT digest collisions offline (poisoning a popular
+/// entry within its own tenant — the entry-ownership check only stops
+/// cross-tenant leaks). Keys live only in this process's in-memory
+/// cache, so a per-process salt costs nothing and keeps the collision
+/// search blind. Entropy: wall clock nanos, pid, and an ASLR-dependent
+/// stack address — not cryptographic, but unknowable to a remote
+/// client.
+fn process_salt() -> &'static [u8; 16] {
+    static SALT: OnceLock<[u8; 16]> = OnceLock::new();
+    SALT.get_or_init(|| {
+        let t = std::time::SystemTime::now()
+            .duration_since(std::time::UNIX_EPOCH)
+            .unwrap_or_default();
+        let mut h = Fnv128::new();
+        h.update(&t.as_nanos().to_le_bytes());
+        h.update(&std::process::id().to_le_bytes());
+        let stack_probe = &t as *const _ as usize;
+        h.update(&stack_probe.to_le_bytes());
+        h.digest()
+    })
+}
+
+/// Content key of a request: (salt, tenant, image count, payload).
+///
+/// `tenant` is the registry name of the ensemble answering the request
+/// (use `""` for a single-tenant deployment — any constant works as
+/// long as it is consistent). Fields are length-prefixed, so no
+/// (tenant, payload) pair can alias another by concatenation. Keys are
+/// salted per process (see [`process_salt`]) and must never be
+/// persisted.
+pub fn request_key(tenant: &str, x: &[f32], nb_images: usize) -> [u8; 16] {
+    let mut h = Fnv128::new();
+    h.update(process_salt());
+    h.update_field(tenant.as_bytes());
+    h.update((nb_images as u64).to_le_bytes().as_slice());
     // hash raw f32 bytes
     let bytes = unsafe {
         std::slice::from_raw_parts(x.as_ptr().cast::<u8>(), std::mem::size_of_val(x))
     };
     h.update(bytes);
-    h.finalize().into()
+    h.digest()
 }
 
 struct Entry {
+    /// Owning tenant, verified on every hit. FNV-1a is invertible, so
+    /// a tenant controlling raw payload bytes could CRAFT a digest
+    /// collision with another tenant's entry; checking ownership
+    /// demotes such a collision to a plain miss/overwrite — it can
+    /// never serve tenant A's cached output to tenant B.
+    tenant: String,
     y: Vec<f32>,
     /// LRU tick of the last access.
     last_used: u64,
@@ -30,7 +73,7 @@ struct Entry {
 
 /// Bounded LRU prediction cache (thread-safe).
 pub struct PredictionCache {
-    map: Mutex<HashMap<[u8; 32], Entry>>,
+    map: Mutex<HashMap<[u8; 16], Entry>>,
     capacity: usize,
     tick: AtomicU64,
     pub hits: AtomicU64,
@@ -49,22 +92,22 @@ impl PredictionCache {
         }
     }
 
-    pub fn get(&self, key: &[u8; 32]) -> Option<Vec<f32>> {
+    pub fn get(&self, tenant: &str, key: &[u8; 16]) -> Option<Vec<f32>> {
         let mut map = self.map.lock().unwrap();
         match map.get_mut(key) {
-            Some(e) => {
+            Some(e) if e.tenant == tenant => {
                 e.last_used = self.tick.fetch_add(1, Ordering::Relaxed);
                 self.hits.fetch_add(1, Ordering::Relaxed);
                 Some(e.y.clone())
             }
-            None => {
+            _ => {
                 self.misses.fetch_add(1, Ordering::Relaxed);
                 None
             }
         }
     }
 
-    pub fn put(&self, key: [u8; 32], y: Vec<f32>) {
+    pub fn put(&self, tenant: &str, key: [u8; 16], y: Vec<f32>) {
         let mut map = self.map.lock().unwrap();
         if map.len() >= self.capacity && !map.contains_key(&key) {
             // evict the least-recently-used entry
@@ -77,7 +120,7 @@ impl PredictionCache {
             }
         }
         let tick = self.tick.fetch_add(1, Ordering::Relaxed);
-        map.insert(key, Entry { y, last_used: tick });
+        map.insert(key, Entry { tenant: tenant.to_string(), y, last_used: tick });
     }
 
     pub fn len(&self) -> usize {
@@ -105,19 +148,52 @@ mod tests {
 
     #[test]
     fn key_sensitivity() {
-        let a = request_key(&[1.0, 2.0, 3.0], 1);
-        assert_eq!(a, request_key(&[1.0, 2.0, 3.0], 1));
-        assert_ne!(a, request_key(&[1.0, 2.0, 3.1], 1));
-        assert_ne!(a, request_key(&[1.0, 2.0, 3.0], 3));
+        let a = request_key("", &[1.0, 2.0, 3.0], 1);
+        assert_eq!(a, request_key("", &[1.0, 2.0, 3.0], 1));
+        assert_ne!(a, request_key("", &[1.0, 2.0, 3.1], 1));
+        assert_ne!(a, request_key("", &[1.0, 2.0, 3.0], 3));
+    }
+
+    #[test]
+    fn no_cross_tenant_collision() {
+        // identical payload, different serving ensemble: MUST be
+        // different cache entries, or tenant B reads tenant A's output
+        let x = [0.25f32; 32];
+        let a = request_key("fast", &x, 4);
+        let b = request_key("accurate", &x, 4);
+        assert_ne!(a, b, "tenants share a cache line");
+        // tenant/payload boundary cannot alias by concatenation either
+        assert_ne!(request_key("ab", &x, 4), request_key("a", &x, 4));
+
+        let c = PredictionCache::new(8);
+        c.put("fast", a, vec![1.0]);
+        c.put("accurate", b, vec![2.0]);
+        assert_eq!(c.get("fast", &a), Some(vec![1.0]));
+        assert_eq!(c.get("accurate", &b), Some(vec![2.0]));
+    }
+
+    #[test]
+    fn crafted_digest_collision_cannot_cross_tenants() {
+        // FNV-1a is invertible, so assume an adversary FOUND a payload
+        // whose digest equals another tenant's entry. Ownership is
+        // checked on get: the collision is a miss (and a put merely
+        // overwrites), never tenant A's bytes served to tenant B.
+        let c = PredictionCache::new(8);
+        let k = request_key("victim", &[1.0, 2.0], 1);
+        c.put("victim", k, vec![42.0]);
+        assert_eq!(c.get("attacker", &k), None, "cross-tenant hit");
+        // attacker overwrites the slot: victim now misses, recomputes
+        c.put("attacker", k, vec![666.0]);
+        assert_eq!(c.get("victim", &k), None, "served poisoned entry");
     }
 
     #[test]
     fn hit_and_miss() {
         let c = PredictionCache::new(4);
-        let k = request_key(&[0.5; 8], 2);
-        assert!(c.get(&k).is_none());
-        c.put(k, vec![1.0, 2.0]);
-        assert_eq!(c.get(&k), Some(vec![1.0, 2.0]));
+        let k = request_key("", &[0.5; 8], 2);
+        assert!(c.get("", &k).is_none());
+        c.put("", k, vec![1.0, 2.0]);
+        assert_eq!(c.get("", &k), Some(vec![1.0, 2.0]));
         assert_eq!(c.hits.load(Ordering::Relaxed), 1);
         assert_eq!(c.misses.load(Ordering::Relaxed), 1);
         assert!((c.hit_rate() - 0.5).abs() < 1e-9);
@@ -126,18 +202,18 @@ mod tests {
     #[test]
     fn lru_eviction() {
         let c = PredictionCache::new(2);
-        let k1 = request_key(&[1.0], 1);
-        let k2 = request_key(&[2.0], 1);
-        let k3 = request_key(&[3.0], 1);
-        c.put(k1, vec![1.0]);
-        c.put(k2, vec![2.0]);
+        let k1 = request_key("", &[1.0], 1);
+        let k2 = request_key("", &[2.0], 1);
+        let k3 = request_key("", &[3.0], 1);
+        c.put("", k1, vec![1.0]);
+        c.put("", k2, vec![2.0]);
         // touch k1 so k2 becomes LRU
-        assert!(c.get(&k1).is_some());
-        c.put(k3, vec![3.0]);
+        assert!(c.get("", &k1).is_some());
+        c.put("", k3, vec![3.0]);
         assert_eq!(c.len(), 2);
-        assert!(c.get(&k1).is_some(), "recently used survived");
-        assert!(c.get(&k2).is_none(), "LRU evicted");
-        assert!(c.get(&k3).is_some());
+        assert!(c.get("", &k1).is_some(), "recently used survived");
+        assert!(c.get("", &k2).is_none(), "LRU evicted");
+        assert!(c.get("", &k3).is_some());
     }
 
     #[test]
@@ -148,9 +224,9 @@ mod tests {
                 let c = std::sync::Arc::clone(&c);
                 s.spawn(move || {
                     for i in 0..200 {
-                        let k = request_key(&[(i % 32) as f32, t as f32], 1);
-                        if c.get(&k).is_none() {
-                            c.put(k, vec![i as f32]);
+                        let k = request_key("", &[(i % 32) as f32, t as f32], 1);
+                        if c.get("", &k).is_none() {
+                            c.put("", k, vec![i as f32]);
                         }
                     }
                 });

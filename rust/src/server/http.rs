@@ -10,7 +10,7 @@ use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
 use std::time::Duration;
 
-use anyhow::{bail, Context};
+use anyhow::Context;
 
 use crate::util::threadpool::ThreadPool;
 
@@ -51,6 +51,7 @@ impl Response {
             404 => "404 Not Found",
             405 => "405 Method Not Allowed",
             413 => "413 Payload Too Large",
+            431 => "431 Request Header Fields Too Large",
             500 => "500 Internal Server Error",
             503 => "503 Service Unavailable",
             _ => "500 Internal Server Error",
@@ -68,8 +69,48 @@ pub struct HttpServer {
     accept_thread: Option<std::thread::JoinHandle<()>>,
 }
 
-/// Cap request bodies (1024 images × 12288 floats ≈ 50 MB).
-const MAX_BODY: usize = 256 * 1024 * 1024;
+/// Cap request bodies. The largest legitimate payload is ~50 MB (1024
+/// images × 12288 floats); 64 MiB leaves headroom without letting one
+/// request claim unbounded memory. Over-limit requests get `413` and
+/// the connection is closed (the unread body makes it unusable).
+const MAX_BODY: usize = 64 * 1024 * 1024;
+
+/// Read the body in bounded chunks: the buffer grows with bytes that
+/// actually arrived, so a lying `content-length` cannot pre-allocate
+/// `MAX_BODY` up front.
+const BODY_CHUNK: usize = 64 * 1024;
+
+/// Cap on the request line and each header line. Without it a peer
+/// streaming newline-free bytes grows `read_line`'s String unboundedly
+/// — the body cap alone does not close the OOM hole.
+const MAX_LINE: usize = 8 * 1024;
+
+/// Cap on the number of header lines (each also bounded by
+/// [`MAX_LINE`]), bounding total header memory per connection.
+const MAX_HEADERS: usize = 128;
+
+/// Why a request could not be parsed — drives the status code.
+enum ReadError {
+    /// Declared `content-length` above [`MAX_BODY`] → `413`.
+    TooLarge(usize),
+    /// Request line or header block above [`MAX_LINE`]/[`MAX_HEADERS`]
+    /// → `431`.
+    HeadersTooLarge,
+    /// Anything else (syntax, IO, truncated body) → `400`.
+    Malformed(anyhow::Error),
+}
+
+impl From<anyhow::Error> for ReadError {
+    fn from(e: anyhow::Error) -> ReadError {
+        ReadError::Malformed(e)
+    }
+}
+
+impl From<std::io::Error> for ReadError {
+    fn from(e: std::io::Error) -> ReadError {
+        ReadError::Malformed(e.into())
+    }
+}
 
 impl HttpServer {
     /// Bind `addr` (e.g. "127.0.0.1:0") and serve `handler` on `threads`
@@ -132,7 +173,25 @@ fn serve_connection(stream: TcpStream, handler: Handler) -> anyhow::Result<()> {
         let req = match read_request(&mut reader) {
             Ok(Some(r)) => r,
             Ok(None) => return Ok(()), // clean close
-            Err(e) => {
+            Err(ReadError::TooLarge(len)) => {
+                // body not read: close after responding, the stream
+                // still carries the oversized payload
+                let resp = Response::text(
+                    413,
+                    &format!("payload too large: {len} bytes (limit {MAX_BODY})"),
+                );
+                let _ = write_response(&mut stream, &resp, false);
+                return Ok(());
+            }
+            Err(ReadError::HeadersTooLarge) => {
+                let resp = Response::text(
+                    431,
+                    &format!("request line or headers too large (line limit {MAX_LINE})"),
+                );
+                let _ = write_response(&mut stream, &resp, false);
+                return Ok(());
+            }
+            Err(ReadError::Malformed(e)) => {
                 let resp = Response::text(400, &format!("bad request: {e}"));
                 let _ = write_response(&mut stream, &resp, false);
                 return Ok(());
@@ -151,9 +210,24 @@ fn serve_connection(stream: TcpStream, handler: Handler) -> anyhow::Result<()> {
     }
 }
 
-fn read_request(reader: &mut BufReader<TcpStream>) -> anyhow::Result<Option<Request>> {
+/// `read_line` bounded to [`MAX_LINE`] bytes: a newline-free stream
+/// errs with [`ReadError::HeadersTooLarge`] instead of growing the
+/// buffer without bound. The reader keeps its position for the bytes
+/// actually consumed.
+fn read_line_bounded(
+    reader: &mut BufReader<TcpStream>,
+    line: &mut String,
+) -> Result<usize, ReadError> {
+    let n = reader.by_ref().take(MAX_LINE as u64).read_line(line)?;
+    if n == MAX_LINE && !line.ends_with('\n') {
+        return Err(ReadError::HeadersTooLarge);
+    }
+    Ok(n)
+}
+
+fn read_request(reader: &mut BufReader<TcpStream>) -> Result<Option<Request>, ReadError> {
     let mut line = String::new();
-    if reader.read_line(&mut line)? == 0 {
+    if read_line_bounded(reader, &mut line)? == 0 {
         return Ok(None);
     }
     let mut parts = line.split_whitespace();
@@ -161,20 +235,27 @@ fn read_request(reader: &mut BufReader<TcpStream>) -> anyhow::Result<Option<Requ
     let path = parts.next().context("missing path")?.to_string();
     let version = parts.next().context("missing version")?;
     if !version.starts_with("HTTP/1.") {
-        bail!("unsupported version {version}");
+        return Err(anyhow::anyhow!("unsupported version {version}").into());
     }
 
     let mut headers = BTreeMap::new();
-    loop {
+    // count LINES, not map entries: colon-free junk lines are skipped
+    // below and must not extend the header block indefinitely
+    let mut block_terminated = false;
+    for _ in 0..MAX_HEADERS {
         let mut h = String::new();
-        reader.read_line(&mut h)?;
+        read_line_bounded(reader, &mut h)?;
         let h = h.trim_end();
         if h.is_empty() {
+            block_terminated = true;
             break;
         }
         if let Some((k, v)) = h.split_once(':') {
             headers.insert(k.trim().to_ascii_lowercase(), v.trim().to_string());
         }
+    }
+    if !block_terminated {
+        return Err(ReadError::HeadersTooLarge);
     }
 
     let len: usize = headers
@@ -184,10 +265,16 @@ fn read_request(reader: &mut BufReader<TcpStream>) -> anyhow::Result<Option<Requ
         .context("bad content-length")?
         .unwrap_or(0);
     if len > MAX_BODY {
-        bail!("body too large: {len}");
+        return Err(ReadError::TooLarge(len));
     }
-    let mut body = vec![0u8; len];
-    reader.read_exact(&mut body)?;
+    // chunked read: allocation tracks received bytes, not the header
+    let mut body = Vec::with_capacity(len.min(BODY_CHUNK));
+    while body.len() < len {
+        let take = (len - body.len()).min(BODY_CHUNK);
+        let start = body.len();
+        body.resize(start + take, 0);
+        reader.read_exact(&mut body[start..])?;
+    }
     Ok(Some(Request { method, path, headers, body }))
 }
 
@@ -305,6 +392,76 @@ mod tests {
                 });
             }
         });
+    }
+
+    #[test]
+    fn oversized_body_rejected_with_413() {
+        let srv = echo_server();
+        // claim a 1 GiB body but send none: the server must answer 413
+        // from the headers alone, without allocating or reading the body
+        let mut stream = TcpStream::connect(srv.addr()).unwrap();
+        let head = format!(
+            "POST /echo HTTP/1.1\r\nhost: x\r\ncontent-type: application/octet-stream\r\n\
+             content-length: {}\r\n\r\n",
+            1usize << 30
+        );
+        stream.write_all(head.as_bytes()).unwrap();
+        let mut resp = Vec::new();
+        let mut reader = BufReader::new(stream);
+        reader.read_to_end(&mut resp).unwrap();
+        let text = String::from_utf8_lossy(&resp);
+        assert!(text.starts_with("HTTP/1.1 413"), "{text}");
+        assert!(text.contains("connection: close"), "{text}");
+        // the server survives and keeps serving
+        let (code, _) = http_request(srv.addr(), "GET", "/hello", "text/plain", b"").unwrap();
+        assert_eq!(code, 200);
+    }
+
+    #[test]
+    fn unbounded_header_stream_rejected_with_431() {
+        let srv = echo_server();
+        // a newline-free request line: the server must cut the read at
+        // MAX_LINE and answer 431 instead of buffering forever
+        let mut stream = TcpStream::connect(srv.addr()).unwrap();
+        // the server may respond+close mid-write: ignore write errors
+        let _ = stream.write_all(&vec![b'A'; MAX_LINE + 100]);
+        let mut resp = Vec::new();
+        let mut reader = BufReader::new(stream);
+        reader.read_to_end(&mut resp).unwrap();
+        assert!(String::from_utf8_lossy(&resp).starts_with("HTTP/1.1 431"),
+                "{}", String::from_utf8_lossy(&resp));
+
+        // an endless stream of (colon-free) header lines is cut at
+        // MAX_HEADERS
+        let mut stream = TcpStream::connect(srv.addr()).unwrap();
+        let _ = stream.write_all(b"GET /hello HTTP/1.1\r\n");
+        for _ in 0..MAX_HEADERS + 10 {
+            let _ = stream.write_all(b"junk line without separator\r\n");
+        }
+        let mut resp = Vec::new();
+        let mut reader = BufReader::new(stream);
+        reader.read_to_end(&mut resp).unwrap();
+        assert!(String::from_utf8_lossy(&resp).starts_with("HTTP/1.1 431"),
+                "{}", String::from_utf8_lossy(&resp));
+
+        // server healthy afterwards
+        let (code, _) = http_request(srv.addr(), "GET", "/hello", "text/plain", b"").unwrap();
+        assert_eq!(code, 200);
+    }
+
+    #[test]
+    fn lying_content_length_is_a_client_error_not_a_hang() {
+        let srv = echo_server();
+        // in-limit content-length, but the peer sends fewer bytes and
+        // closes: read_exact fails -> connection dropped, server healthy
+        {
+            let mut stream = TcpStream::connect(srv.addr()).unwrap();
+            stream
+                .write_all(b"POST /echo HTTP/1.1\r\nhost: x\r\ncontent-length: 1000\r\n\r\nshort")
+                .unwrap();
+        } // close without the remaining 995 bytes
+        let (code, _) = http_request(srv.addr(), "GET", "/hello", "text/plain", b"").unwrap();
+        assert_eq!(code, 200);
     }
 
     #[test]

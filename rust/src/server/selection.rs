@@ -3,8 +3,13 @@
 //! applications, or the same application with different trade-offs
 //! between accuracy and speed".
 //!
-//! A registry of named deployed systems; clients select one per request
-//! (`x-ensemble` header / path suffix in the API layer).
+//! A registry of named deployed systems. The API layer
+//! ([`ApiServer`](crate::server::ApiServer)) dispatches every
+//! tenant-scoped route (`POST /v1/predict`, `GET /v1/stats`,
+//! `/v1/matrix`, `/v1/metrics`, `/v1/health`) on the request's
+//! `x-ensemble` header through [`SystemRegistry::select_named`]; an
+//! absent header selects the default (first-registered) system, and
+//! `GET /v1/ensembles` lists the registered names.
 
 use std::collections::BTreeMap;
 use std::sync::{Arc, RwLock};
@@ -45,14 +50,27 @@ impl SystemRegistry {
 
     /// Resolve a client's selection; `None` selects the default.
     pub fn select(&self, name: Option<&str>) -> Option<Arc<InferenceSystem>> {
+        self.select_named(name).map(|(_, sys)| sys)
+    }
+
+    /// Resolve a client's selection to (canonical name, system); `None`
+    /// selects the default. The name is what per-tenant stats and cache
+    /// keys are scoped by.
+    pub fn select_named(&self, name: Option<&str>) -> Option<(String, Arc<InferenceSystem>)> {
         let map = self.systems.read().unwrap();
         match name {
-            Some(n) => map.get(n).cloned(),
+            Some(n) => map.get(n).map(|s| (n.to_string(), Arc::clone(s))),
             None => {
                 let def = self.default.read().unwrap();
-                def.as_ref().and_then(|n| map.get(n).cloned())
+                def.as_ref()
+                    .and_then(|n| map.get(n).map(|s| (n.clone(), Arc::clone(s))))
             }
         }
+    }
+
+    /// Name of the current default system, if any.
+    pub fn default_name(&self) -> Option<String> {
+        self.default.read().unwrap().clone()
     }
 
     pub fn names(&self) -> Vec<String> {
@@ -100,8 +118,12 @@ mod tests {
         assert_eq!(reg.len(), 2);
         // default = first registered
         assert_eq!(reg.select(None).unwrap().ensemble().name, "IMN1");
+        assert_eq!(reg.default_name(), Some("fast".to_string()));
+        let (name, sys) = reg.select_named(None).unwrap();
+        assert_eq!((name.as_str(), sys.ensemble().name.as_str()), ("fast", "IMN1"));
         assert_eq!(reg.select(Some("accurate")).unwrap().ensemble().name, "IMN4");
         assert!(reg.select(Some("nope")).is_none());
+        assert!(reg.select_named(Some("nope")).is_none());
         assert_eq!(reg.names(), vec!["accurate".to_string(), "fast".to_string()]);
     }
 

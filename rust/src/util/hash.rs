@@ -1,0 +1,134 @@
+//! Hand-rolled 128-bit FNV-1a — the content hash behind the prediction
+//! and matrix caches.
+//!
+//! The no-unvendorable-deps policy (`[dependencies]` = anyhow + log
+//! only) rules out `sha2`; cache keys need collision resistance against
+//! *accidental* collisions, not an adversary, so FNV-1a at 128 bits is
+//! the right tool: two multiplies per byte, no tables, and a 2⁻⁶⁴
+//! birthday bound at any realistic cache population. Digests are 16
+//! bytes (32 hex chars) — the same stable width the sha256-truncated
+//! cache-file keys used, so on-disk key formats are unchanged in shape.
+
+/// FNV-1a 128-bit offset basis.
+const OFFSET: u128 = 0x6c62272e07bb014262b821756295c58d;
+/// FNV-1a 128-bit prime (2^88 + 2^8 + 0x3b).
+const PRIME: u128 = 0x0000000001000000000000000000013b;
+
+/// Streaming FNV-1a 128 hasher.
+#[derive(Debug, Clone)]
+pub struct Fnv128 {
+    state: u128,
+}
+
+impl Default for Fnv128 {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Fnv128 {
+    pub fn new() -> Fnv128 {
+        Fnv128 { state: OFFSET }
+    }
+
+    /// Absorb bytes (order-sensitive, streaming-equivalent to one call).
+    pub fn update(&mut self, bytes: &[u8]) {
+        let mut h = self.state;
+        for &b in bytes {
+            h ^= b as u128;
+            h = h.wrapping_mul(PRIME);
+        }
+        self.state = h;
+    }
+
+    /// Absorb a length-prefixed field: `update(a); update(b)` and
+    /// `update(ab)` otherwise produce the same digest, which would let
+    /// two different field sequences collide by construction.
+    pub fn update_field(&mut self, bytes: &[u8]) {
+        self.update(&(bytes.len() as u64).to_le_bytes());
+        self.update(bytes);
+    }
+
+    /// Finish: the 16-byte digest (big-endian state).
+    pub fn digest(&self) -> [u8; 16] {
+        self.state.to_be_bytes()
+    }
+
+    /// Finish as fixed-width (32 char) lowercase hex.
+    pub fn hex(&self) -> String {
+        self.digest().iter().map(|b| format!("{b:02x}")).collect()
+    }
+}
+
+/// One-shot convenience.
+pub fn fnv128(bytes: &[u8]) -> [u8; 16] {
+    let mut h = Fnv128::new();
+    h.update(bytes);
+    h.digest()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn known_vectors() {
+        // FNV-1a 128 reference values.
+        let empty = Fnv128::new();
+        assert_eq!(empty.hex(), "6c62272e07bb014262b821756295c58d");
+        let mut a = Fnv128::new();
+        a.update(b"a");
+        assert_eq!(a.hex(), "d228cb696f1a8caf78912b704e4a8964");
+    }
+
+    #[test]
+    fn streaming_matches_one_shot() {
+        let mut s = Fnv128::new();
+        s.update(b"hello ");
+        s.update(b"world");
+        assert_eq!(s.digest(), fnv128(b"hello world"));
+    }
+
+    #[test]
+    fn field_prefix_breaks_concatenation_ambiguity() {
+        let mut ab_c = Fnv128::new();
+        ab_c.update_field(b"ab");
+        ab_c.update_field(b"c");
+        let mut a_bc = Fnv128::new();
+        a_bc.update_field(b"a");
+        a_bc.update_field(b"bc");
+        assert_ne!(ab_c.digest(), a_bc.digest());
+    }
+
+    #[test]
+    fn hex_is_stable_width() {
+        for input in [&b""[..], b"x", b"\x00\x00\x00", b"longer input with spaces"] {
+            let mut h = Fnv128::new();
+            h.update(input);
+            let hex = h.hex();
+            assert_eq!(hex.len(), 32);
+            assert!(hex.chars().all(|c| c.is_ascii_hexdigit()));
+        }
+    }
+
+    #[test]
+    fn sensitivity() {
+        assert_ne!(fnv128(b"abc"), fnv128(b"abd"));
+        assert_ne!(fnv128(b"abc"), fnv128(b"ab"));
+        assert_ne!(fnv128(b"\x00"), fnv128(b"\x00\x00"));
+    }
+
+    #[test]
+    fn spread_over_buckets() {
+        // sanity against degenerate clustering: 4k sequential keys land
+        // in >1000 of 4096 buckets (uniform expectation ~2580)
+        let mut buckets = vec![false; 4096];
+        for i in 0..4096u32 {
+            let d = fnv128(&i.to_le_bytes());
+            let idx = (u16::from_be_bytes([d[14], d[15]]) & 0x0fff) as usize;
+            buckets[idx] = true;
+        }
+        let hit = buckets.iter().filter(|&&b| b).count();
+        assert!(hit > 1000, "only {hit} buckets hit");
+    }
+}

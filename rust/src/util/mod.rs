@@ -5,6 +5,7 @@
 //! CLI parsing, PRNG, stats, thread pool, property testing) are
 //! implemented here, each with its own tests.
 
+pub mod hash;
 pub mod json;
 pub mod prng;
 pub mod stats;

@@ -8,6 +8,8 @@
 //! * [`step_arrivals`] / [`diurnal_arrivals`] — *time-varying* open-loop
 //!   schedules (traffic steps, sinusoidal day/night cycles) used to
 //!   exercise the live-reconfiguration controller under load shifts.
+//! * [`mixed_arrivals`] — per-tenant Poisson processes merged into one
+//!   tenant-tagged schedule (multi-tenant arbitration experiments).
 //! * [`open_loop`] — driver firing requests at a schedule's offsets
 //!   regardless of completion times (each request on its own thread).
 
@@ -131,6 +133,35 @@ pub fn step_arrivals(phases: &[(f64, f64)], seed: u64) -> Vec<f64> {
         }
         phase_start = end;
     }
+    out
+}
+
+/// Mixed multi-tenant arrivals: one independent Poisson process per
+/// tenant (`rates[i]` req/s for tenant index `i`, 0 = silent tenant),
+/// merged into a single time-sorted schedule of `(offset_s, tenant)`
+/// pairs. This is the front-door shape the multi-tenant controller
+/// arbitrates: e.g. `rates = &[50.0, 2.0]` is a loaded tenant 0 sharing
+/// the device set with a near-idle tenant 1.
+pub fn mixed_arrivals(duration_s: f64, rates: &[f64], seed: u64) -> Vec<(f64, usize)> {
+    assert!(duration_s >= 0.0 && duration_s.is_finite(), "bad duration {duration_s}");
+    let mut out = Vec::new();
+    for (tenant, &rate) in rates.iter().enumerate() {
+        assert!(rate >= 0.0 && rate.is_finite(), "tenant {tenant} rate {rate}");
+        if rate == 0.0 {
+            continue;
+        }
+        // distinct stream per tenant: schedules stay independent
+        let mut rng = Prng::new(seed ^ (tenant as u64 + 1).wrapping_mul(0x9E37_79B9_7F4A_7C15));
+        let mut t = 0.0;
+        loop {
+            t += rng.exponential(rate);
+            if t >= duration_s {
+                break;
+            }
+            out.push((t, tenant));
+        }
+    }
+    out.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
     out
 }
 
@@ -280,6 +311,19 @@ mod tests {
         let n_high = arr.len() as f64 - n_low;
         assert!((n_low / 50.0 - 20.0).abs() < 3.0, "low-phase rate {}", n_low / 50.0);
         assert!((n_high / 50.0 - 200.0).abs() < 12.0, "high-phase rate {}", n_high / 50.0);
+    }
+
+    #[test]
+    fn mixed_arrivals_per_tenant_rates() {
+        let arr = mixed_arrivals(100.0, &[40.0, 4.0, 0.0], 13);
+        assert!(arr.windows(2).all(|w| w[1].0 >= w[0].0), "time-sorted");
+        assert!(arr.iter().all(|&(t, _)| t < 100.0));
+        let count = |ti: usize| arr.iter().filter(|&&(_, t)| t == ti).count() as f64;
+        assert!((count(0) / 100.0 - 40.0).abs() < 4.0, "tenant 0 rate {}", count(0) / 100.0);
+        assert!((count(1) / 100.0 - 4.0).abs() < 1.5, "tenant 1 rate {}", count(1) / 100.0);
+        assert_eq!(count(2), 0.0, "silent tenant emitted arrivals");
+        // independent streams: same seed, different tenant offsets
+        assert!(!arr.is_empty());
     }
 
     #[test]

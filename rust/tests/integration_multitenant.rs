@@ -1,0 +1,282 @@
+//! Multi-tenant serving end-to-end: two ensembles co-located on one
+//! `DeviceSet` (one shared sim executor = one memory ledger).
+//!
+//! 1. registry-dispatched HTTP: concurrent clients select their tenant
+//!    via the `x-ensemble` header and get that tenant's outputs (the
+//!    two ensembles have different class counts, so cross-tenant mixups
+//!    are detectable), with per-tenant stats and a shared
+//!    tenant-scoped prediction cache that never leaks across tenants;
+//! 2. arbitration: a forced SLO breach on tenant A (idle tenant B)
+//!    drives the multi-tenant controller to a *joint* replan that grows
+//!    A onto B's devices while both tenants' footprints keep fitting
+//!    every device (asserted via `device_usage_mb`).
+
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::sync::Arc;
+use std::time::Duration;
+
+use ensemble_serve::alloc::matrix::AllocationMatrix;
+use ensemble_serve::alloc::memory::device_usage_mb;
+use ensemble_serve::device::DeviceSet;
+use ensemble_serve::engine::{EngineOptions, InferenceSystem};
+use ensemble_serve::exec::sim::SimExecutor;
+use ensemble_serve::model::{ensemble, Ensemble, EnsembleId};
+use ensemble_serve::reconfig::{
+    plan_joint, MultiTenantController, MultiTenantOptions, PlannerConfig, PolicyConfig,
+    Tenant, TenantSpec,
+};
+use ensemble_serve::server::http::http_request;
+use ensemble_serve::server::{ApiServer, SystemRegistry};
+use ensemble_serve::util::json::Json;
+
+/// `http_request` with an `x-ensemble` header.
+fn tenant_request(
+    addr: std::net::SocketAddr,
+    method: &str,
+    path: &str,
+    tenant: &str,
+    body: &[u8],
+) -> (u16, Vec<u8>) {
+    let mut stream = TcpStream::connect(addr).unwrap();
+    let head = format!(
+        "{method} {path} HTTP/1.1\r\nhost: x\r\ncontent-type: application/json\r\n\
+         x-ensemble: {tenant}\r\ncontent-length: {}\r\nconnection: close\r\n\r\n",
+        body.len()
+    );
+    stream.write_all(head.as_bytes()).unwrap();
+    stream.write_all(body).unwrap();
+    let mut resp = Vec::new();
+    stream.read_to_end(&mut resp).unwrap();
+    let text = String::from_utf8_lossy(&resp);
+    let code: u16 = text
+        .split_whitespace()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or_else(|| panic!("bad response: {text}"));
+    let body_start = resp.windows(4).position(|w| w == b"\r\n\r\n").unwrap() + 4;
+    (code, resp[body_start..].to_vec())
+}
+
+fn json_predict_body(e: &Ensemble, n: usize) -> String {
+    let elems = e.members[0].input_elems_per_image();
+    let row = format!("[{}]", vec!["0.5"; elems].join(","));
+    format!("{{\"images\":[{}]}}", vec![row; n].join(","))
+}
+
+#[test]
+fn two_tenants_serve_concurrently_via_header_dispatch() {
+    let d = DeviceSet::hgx(4);
+    let ex = SimExecutor::new(d.clone(), 50_000.0);
+    // different class counts (100 vs 91): outputs are distinguishable
+    let specs = vec![
+        TenantSpec::new("imn", ensemble(EnsembleId::Imn4)),
+        TenantSpec::new("fos", ensemble(EnsembleId::Fos14)),
+    ];
+    let plan = plan_joint(&specs, &d, &[], &[], &PlannerConfig::default()).unwrap();
+    let registry = SystemRegistry::new();
+    for (spec, matrix) in specs.iter().zip(&plan.matrices) {
+        let sys = Arc::new(
+            InferenceSystem::build(matrix, &spec.ensemble, Arc::clone(&ex),
+                                   EngineOptions::default())
+                .unwrap(),
+        );
+        registry.register(&spec.name, sys);
+    }
+    // shared prediction cache: keys must be tenant-scoped
+    let api = ApiServer::start_registry(registry, "127.0.0.1:0", 4, Some(32), None).unwrap();
+    let addr = api.addr();
+
+    let classes = [("imn", 100usize, 3usize), ("fos", 91usize, 2usize)];
+    std::thread::scope(|s| {
+        for &(tenant, n_classes, n_reqs) in &classes {
+            let specs = &specs;
+            s.spawn(move || {
+                let e = &specs
+                    .iter()
+                    .find(|t| t.name == tenant)
+                    .unwrap()
+                    .ensemble;
+                let body = json_predict_body(e, 1);
+                for _ in 0..n_reqs {
+                    let (code, resp) =
+                        tenant_request(addr, "POST", "/v1/predict", tenant, body.as_bytes());
+                    assert_eq!(code, 200, "{tenant}: {}", String::from_utf8_lossy(&resp));
+                    let j = Json::parse(std::str::from_utf8(&resp).unwrap()).unwrap();
+                    let rows = j.get("predictions").unwrap().as_arr().unwrap();
+                    assert_eq!(rows.len(), 1);
+                    let row = rows[0].as_arr().unwrap();
+                    // the sim backend emits uniform 1/classes rows: both
+                    // the length and the values identify the tenant
+                    assert_eq!(row.len(), n_classes, "{tenant} got another tenant's output");
+                    let v = row[0].as_f64().unwrap();
+                    assert!((v - 1.0 / n_classes as f64).abs() < 1e-4, "{tenant}: {v}");
+                }
+            });
+        }
+    });
+
+    // per-tenant stats through the shared cache: each tenant repeated
+    // one identical payload, so its engine saw EXACTLY one request (the
+    // rest were cache hits). If cache keys were not tenant-scoped, the
+    // second tenant's first request would hit the first tenant's entry
+    // and its engine would have seen ZERO requests (and the output
+    // length above would have been the other tenant's class count).
+    for &(tenant, _, _) in &classes {
+        let (code, body) = tenant_request(addr, "GET", "/v1/stats", tenant, b"");
+        assert_eq!(code, 200);
+        let j = Json::parse(std::str::from_utf8(&body).unwrap()).unwrap();
+        assert_eq!(j.get("tenant").unwrap().as_str(), Some(tenant));
+        assert_eq!(j.get("requests").unwrap().as_usize(), Some(1),
+                   "{tenant}: engine bypassed by a cross-tenant cache hit \
+                    or cache ineffective");
+    }
+
+    // the same payload cached once PER TENANT: 2 entries, 5 requests
+    // total -> 3 hits
+    let (_, body) = http_request(addr, "GET", "/v1/stats", "", b"").unwrap();
+    let j = Json::parse(std::str::from_utf8(&body).unwrap()).unwrap();
+    assert_eq!(j.get("cache_entries").unwrap().as_usize(), Some(2),
+               "expected one cache entry per tenant");
+    assert!(j.get("cache_hit_rate").unwrap().as_f64().unwrap() > 0.5);
+
+    // multi-tenant Prometheus scrape (no header, as a scrape config
+    // sends): EVERY tenant exported with a tenant label, TYPE once
+    let (code, body) = http_request(addr, "GET", "/v1/metrics", "", b"").unwrap();
+    assert_eq!(code, 200);
+    let text = String::from_utf8(body).unwrap();
+    assert!(text.contains("ensemble_serve_requests_total{tenant=\"imn\"} 1"), "{text}");
+    assert!(text.contains("ensemble_serve_requests_total{tenant=\"fos\"} 1"), "{text}");
+    assert_eq!(text.matches("# TYPE ensemble_serve_requests_total counter").count(), 1);
+    assert!(text.contains(
+        "ensemble_serve_predict_latency_seconds_bucket{le=\"+Inf\",tenant=\"fos\"}"
+    ), "{text}");
+    // an explicit header selects one tenant in the legacy unlabeled shape
+    let (code, body) = tenant_request(addr, "GET", "/v1/metrics", "imn", b"");
+    assert_eq!(code, 200);
+    let text = String::from_utf8(body).unwrap();
+    assert!(text.contains("ensemble_serve_requests_total 1"), "{text}");
+
+    // /v1/ensembles lists both tenants with the default first-registered
+    let (code, body) = http_request(addr, "GET", "/v1/ensembles", "", b"").unwrap();
+    assert_eq!(code, 200);
+    let j = Json::parse(std::str::from_utf8(&body).unwrap()).unwrap();
+    assert_eq!(j.get("default").unwrap().as_str(), Some("imn"));
+    let rows = j.get("ensembles").unwrap().as_arr().unwrap();
+    assert_eq!(rows.len(), 2);
+    let names: Vec<&str> = rows.iter().filter_map(|r| r.get("name")?.as_str()).collect();
+    assert_eq!(names, vec!["fos", "imn"]);
+
+    // unknown tenant: 404, not the default tenant's answer
+    let (code, _) = tenant_request(addr, "GET", "/v1/stats", "nope", b"");
+    assert_eq!(code, 404);
+}
+
+#[test]
+fn slo_breach_on_one_tenant_steals_capacity_from_idle_tenant() {
+    // tenant A pinned to GPU0, idle tenant B alone on GPU1, GPU2 free
+    let d = DeviceSet::hgx(3);
+    let ex = SimExecutor::new(d.clone(), 50_000.0);
+    let e = ensemble(EnsembleId::Imn1);
+    let mut ma = AllocationMatrix::zeroed(d.len(), e.len());
+    ma.set(0, 0, 8);
+    let mut mb = AllocationMatrix::zeroed(d.len(), e.len());
+    mb.set(1, 0, 8);
+    let sys_a = Arc::new(
+        InferenceSystem::build(&ma, &e, Arc::clone(&ex), EngineOptions::default()).unwrap(),
+    );
+    let sys_b = Arc::new(
+        InferenceSystem::build(&mb, &e, Arc::clone(&ex), EngineOptions::default()).unwrap(),
+    );
+    let opts = MultiTenantOptions {
+        poll_interval: Duration::from_millis(10),
+        window: Duration::from_millis(500),
+        failure_backoff: Duration::from_millis(50),
+        policy: PolicyConfig {
+            p99_slo_ms: 0.01, // any completed traffic on A breaches
+            min_window_requests: 5,
+            cooldown: Duration::from_secs(60),
+            ..PolicyConfig::default()
+        },
+        ..MultiTenantOptions::default()
+    };
+    let ctrl = MultiTenantController::start(
+        vec![
+            Tenant::new("a", Arc::clone(&sys_a)),
+            Tenant::new("b", Arc::clone(&sys_b)),
+        ],
+        opts,
+    )
+    .unwrap();
+    ctrl.stop(); // deterministic: drive ticks by hand
+    let registry = SystemRegistry::new();
+    registry.register("a", Arc::clone(&sys_a));
+    registry.register("b", Arc::clone(&sys_b));
+    let api = ApiServer::start_registry(registry, "127.0.0.1:0", 2, None,
+                                        Some(Arc::clone(&ctrl)))
+        .unwrap();
+
+    // traffic on A only; B stays idle
+    let x = vec![0.1; 4 * e.members[0].input_elems_per_image()];
+    for _ in 0..30 {
+        sys_a.predict(x.clone(), 4).unwrap();
+        std::thread::sleep(Duration::from_millis(1));
+        ctrl.tick();
+        if sys_a.generation() > 1 {
+            break;
+        }
+    }
+    assert!(sys_a.generation() >= 2, "no joint swap: {}", ctrl.last_decision());
+
+    let ma_after = sys_a.matrix();
+    let mb_after = sys_b.matrix();
+    assert!(ma_after.all_models_placed() && mb_after.all_models_placed());
+
+    // A grew beyond its single pinned worker; B (idle, discounted) did
+    // not grow — the stolen capacity went to A
+    assert!(ma_after.model_workers(0).len() >= 2,
+            "A did not scale out:\n{ma_after}");
+    assert!(mb_after.model_workers(0).len() <= mb.model_workers(0).len(),
+            "idle B grew during A's breach:\n{mb_after}");
+    // A now runs on a device it did not own before (capacity taken
+    // from B's or the free GPU)
+    let a_devices: Vec<usize> = (0..d.len())
+        .filter(|&dev| !ma_after.device_workers(dev).is_empty())
+        .collect();
+    assert!(a_devices.len() >= 2, "A still confined: {a_devices:?}");
+
+    // acceptance: the JOINT footprint fits on every device
+    for dev in 0..d.len() {
+        let used = device_usage_mb(&ma_after, &e, dev) + device_usage_mb(&mb_after, &e, dev);
+        assert!(used <= d[dev].mem_mb as f64,
+                "device {dev}: joint {used:.0} MB > {} MB", d[dev].mem_mb);
+    }
+
+    // both tenants still answer after the joint swap
+    assert!(sys_a.predict(x.clone(), 4).is_ok());
+    assert!(sys_b.predict(x, 4).is_ok());
+
+    // the admin surface reports the multi-tenant shape
+    let (code, body) = http_request(api.addr(), "GET", "/v1/reconfig/status", "", b"").unwrap();
+    assert_eq!(code, 200);
+    let j = Json::parse(std::str::from_utf8(&body).unwrap()).unwrap();
+    assert!(j.get("joint_swaps").and_then(Json::as_usize).unwrap() >= 1, "{j:?}");
+    let tenants = j.get("tenants").unwrap().as_arr().unwrap();
+    assert_eq!(tenants.len(), 2);
+    let gen_a = tenants
+        .iter()
+        .find(|t| t.get("name").and_then(Json::as_str) == Some("a"))
+        .unwrap()
+        .get("generation")
+        .and_then(Json::as_usize)
+        .unwrap();
+    assert!(gen_a >= 2);
+
+    // operator-forced joint replan still answers over HTTP
+    let (code, body) = http_request(api.addr(), "POST", "/v1/reconfigure",
+                                    "application/json", b"{\"reason\":\"drill\"}")
+        .unwrap();
+    assert_eq!(code, 200, "{}", String::from_utf8_lossy(&body));
+    let j = Json::parse(std::str::from_utf8(&body).unwrap()).unwrap();
+    assert!(j.get("swapped").and_then(Json::as_bool).is_some());
+}
