@@ -1,0 +1,220 @@
+//! Device-failure chaos bench: kill random simulated devices
+//! mid-workload and measure recovery time and the SLO-violation window.
+//!
+//! A chaos wrapper around the calibrated V100 simulator fails every
+//! predict on "dead" devices, which kills the serving generation's
+//! workers at runtime (the real failure mode: healthy startup, then a
+//! device drops). The reconfiguration controller must (a) detect the
+//! dead generation, (b) replan onto the survivors (the device is also
+//! reported failed, as a monitoring stack would), and (c) hot-swap —
+//! while a closed-loop workload hammers the system and counts the
+//! requests that failed in the outage window.
+//!
+//! ```bash
+//! cargo bench --bench chaos_devices
+//! ```
+
+#[path = "common/mod.rs"]
+mod common;
+
+use std::collections::BTreeSet;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use ensemble_serve::alloc::worst_fit_decreasing;
+use ensemble_serve::benchkit::harness::Table;
+use ensemble_serve::device::DeviceSet;
+use ensemble_serve::engine::{EngineOptions, InferenceSystem};
+use ensemble_serve::exec::sim::SimExecutor;
+use ensemble_serve::exec::{Executor, ModelInstance};
+use ensemble_serve::metrics::LatencyHistogram;
+use ensemble_serve::model::{ensemble, EnsembleId, ModelSpec};
+use ensemble_serve::reconfig::{PolicyConfig, ReconfigController, ReconfigOptions};
+use ensemble_serve::util::prng::Prng;
+
+/// Sim executor wrapper that fails every predict on a dead device.
+struct ChaosExecutor {
+    inner: Arc<SimExecutor>,
+    dead: Arc<Mutex<BTreeSet<usize>>>,
+}
+
+struct ChaosInstance {
+    inner: Box<dyn ModelInstance>,
+    device: usize,
+    dead: Arc<Mutex<BTreeSet<usize>>>,
+}
+
+impl ModelInstance for ChaosInstance {
+    fn predict(&mut self, input: &[f32], n_rows: usize) -> anyhow::Result<Vec<f32>> {
+        if self.dead.lock().unwrap().contains(&self.device) {
+            anyhow::bail!("chaos: device {} is dead", self.device);
+        }
+        self.inner.predict(input, n_rows)
+    }
+
+    fn classes(&self) -> usize {
+        self.inner.classes()
+    }
+
+    fn input_elems(&self) -> usize {
+        self.inner.input_elems()
+    }
+}
+
+impl Executor for ChaosExecutor {
+    fn load(&self, model: &ModelSpec, device: usize, batch: usize)
+        -> anyhow::Result<Box<dyn ModelInstance>> {
+        if self.dead.lock().unwrap().contains(&device) {
+            anyhow::bail!("chaos: device {device} is dead");
+        }
+        Ok(Box::new(ChaosInstance {
+            inner: self.inner.load(model, device, batch)?,
+            device,
+            dead: Arc::clone(&self.dead),
+        }))
+    }
+
+    fn devices(&self) -> &DeviceSet {
+        self.inner.devices()
+    }
+}
+
+fn main() {
+    common::init_logging();
+    let gpus = 4;
+    let e = ensemble(EnsembleId::Imn4);
+    let d = DeviceSet::hgx(gpus);
+    let scale = common::TIME_SCALE;
+    let dead = Arc::new(Mutex::new(BTreeSet::new()));
+    let ex = Arc::new(ChaosExecutor {
+        inner: SimExecutor::new(d.clone(), scale),
+        dead: Arc::clone(&dead),
+    });
+
+    let a = worst_fit_decreasing(&e, &d, 8).expect("IMN4 fits 4 GPUs");
+    let system = Arc::new(
+        InferenceSystem::build(&a, &e, ex, EngineOptions::default()).expect("build"),
+    );
+    let ctrl = ReconfigController::start(Arc::clone(&system), ReconfigOptions {
+        poll_interval: Duration::from_millis(25),
+        window: Duration::from_secs(2),
+        failure_backoff: Duration::from_millis(100),
+        policy: PolicyConfig {
+            // latency policy quiet: this bench isolates failure handling
+            p99_slo_ms: 1e9,
+            cooldown: Duration::from_secs(3600),
+            ..PolicyConfig::default()
+        },
+        ..ReconfigOptions::default()
+    });
+
+    // closed-loop workload: clients fire continuously, counting failures
+    let stop = Arc::new(AtomicBool::new(false));
+    let ok = Arc::new(AtomicU64::new(0));
+    let failed = Arc::new(AtomicU64::new(0));
+    let latency = Arc::new(LatencyHistogram::new());
+    let n_clients = 2;
+    let images = 64usize;
+    let elems = e.members[0].input_elems_per_image();
+    let mut clients = Vec::new();
+    for c in 0..n_clients {
+        let system = Arc::clone(&system);
+        let stop = Arc::clone(&stop);
+        let ok = Arc::clone(&ok);
+        let failed = Arc::clone(&failed);
+        let latency = Arc::clone(&latency);
+        clients.push(std::thread::spawn(move || {
+            let mut rng = Prng::new(0xC11A05 ^ c as u64);
+            let x: Vec<f32> = (0..images * elems).map(|_| rng.f64() as f32).collect();
+            while !stop.load(Ordering::Relaxed) {
+                let t = Instant::now();
+                match system.predict(x.clone(), images) {
+                    Ok(_) => {
+                        latency.record(t.elapsed());
+                        ok.fetch_add(1, Ordering::Relaxed);
+                    }
+                    Err(_) => {
+                        failed.fetch_add(1, Ordering::Relaxed);
+                        // dead pools reject fast: don't melt the CPU
+                        std::thread::sleep(Duration::from_millis(5));
+                    }
+                }
+            }
+        }));
+    }
+
+    // let the system reach steady state
+    std::thread::sleep(Duration::from_millis(1500));
+    let kills = if common::fast_mode() { 2 } else { 3 };
+    let mut rng = Prng::new(0xDEAD_DEV);
+    let mut table = Table::new(vec![
+        "kill", "device", "recovery ms", "failed reqs", "generation",
+    ]);
+    println!("=== device-failure chaos: {kills} kills, IMN4 on {gpus} GPUs ===\n");
+
+    for k in 0..kills {
+        // kill a random GPU the active allocation actually uses
+        let active = system.matrix();
+        let used: Vec<usize> = (0..gpus)
+            .filter(|&g| !active.device_workers(g).is_empty())
+            .collect();
+        let victim = used[rng.below(used.len() as u64) as usize];
+        let failed_before = failed.load(Ordering::Relaxed);
+        let t_kill = Instant::now();
+        dead.lock().unwrap().insert(victim);
+        ctrl.mark_device_failed(victim).expect("in range");
+
+        // recovered = matrix excludes the victim AND the pool is healthy
+        let deadline = t_kill + Duration::from_secs(30);
+        let recovery_ms = loop {
+            let m = system.matrix();
+            if m.device_workers(victim).is_empty() && system.active_error().is_none() {
+                break t_kill.elapsed().as_secs_f64() * 1e3;
+            }
+            if Instant::now() > deadline {
+                break f64::NAN;
+            }
+            std::thread::sleep(Duration::from_millis(5));
+        };
+        // settle: confirm traffic flows on the survivors
+        std::thread::sleep(Duration::from_millis(500));
+        let failed_during = failed.load(Ordering::Relaxed) - failed_before;
+        table.row(vec![
+            (k + 1).to_string(),
+            format!("GPU{victim}"),
+            if recovery_ms.is_nan() {
+                "TIMEOUT".to_string()
+            } else {
+                format!("{recovery_ms:.0}")
+            },
+            failed_during.to_string(),
+            system.generation().to_string(),
+        ]);
+
+        // revive for the next round and let the controller rebalance
+        dead.lock().unwrap().remove(&victim);
+        ctrl.mark_device_recovered(victim).expect("in range");
+        let _ = ctrl.reconfigure_now("chaos bench: device revived");
+        std::thread::sleep(Duration::from_millis(500));
+    }
+
+    stop.store(true, Ordering::Relaxed);
+    for c in clients {
+        let _ = c.join();
+    }
+    table.print();
+    println!(
+        "\nworkload: {} ok, {} failed; p50 {:.0} ms, p99 {:.0} ms (scaled engine time)",
+        ok.load(Ordering::Relaxed),
+        failed.load(Ordering::Relaxed),
+        latency.quantile_ms(0.50),
+        latency.quantile_ms(0.99),
+    );
+    println!(
+        "controller: {} swaps, last decision: {}",
+        system.swap_count(),
+        ctrl.status().last_decision
+    );
+    ctrl.stop();
+}

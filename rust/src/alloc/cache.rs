@@ -10,6 +10,7 @@ use anyhow::Context;
 
 use crate::alloc::greedy::GreedyConfig;
 use crate::alloc::matrix::AllocationMatrix;
+use crate::cost::CostModel;
 use crate::device::DeviceSet;
 use crate::model::Ensemble;
 use crate::util::hash::Fnv128;
@@ -22,15 +23,21 @@ pub struct MatrixCache {
 }
 
 /// Fingerprint of everything that determines the optimal matrix.
+///
+/// v3 over v2: folds each member's `eff_factor` (two ensembles
+/// differing only in GPU efficiency used to alias to one cached
+/// matrix) and the active cost model's name + content digest, so
+/// online calibration — which changes what "optimal" means —
+/// invalidates matrices cached under stale costs. Same 32-hex width
+/// and digest family; the version tag keeps v1/v2 files from aliasing.
 pub fn cache_fingerprint(ensemble: &Ensemble, devices: &DeviceSet,
-                         cfg: &GreedyConfig) -> String {
-    // version bump: v1 keys were sha256-truncated; same 32-hex width,
-    // different digest family, so stale v1 files can never alias
+                         cfg: &GreedyConfig, cost: &dyn CostModel) -> String {
     let mut h = Fnv128::new();
-    h.update(b"ensemble-serve-v2\0");
+    h.update(b"ensemble-serve-v3\0");
     for m in &ensemble.members {
         h.update(m.name.as_bytes());
-        h.update(format!("|{}|{}|{:?}|{}\0", m.params_m, m.gflops, m.scale, m.classes).as_bytes());
+        h.update(format!("|{}|{}|{}|{:?}|{}\0",
+                         m.params_m, m.gflops, m.eff_factor, m.scale, m.classes).as_bytes());
     }
     for d in devices.iter() {
         h.update(format!("{}|{:?}|{}|{}\0", d.name, d.kind, d.mem_mb, d.eff_gflops).as_bytes());
@@ -39,6 +46,7 @@ pub fn cache_fingerprint(ensemble: &Ensemble, devices: &DeviceSet,
         "iter={}|neighs={}|batches={:?}|seed={}\0",
         cfg.max_iter, cfg.max_neighs, cfg.batch_values, cfg.seed
     ).as_bytes());
+    h.update(format!("cost={}|{}\0", cost.name(), cost.digest()).as_bytes());
     h.hex()
 }
 
@@ -116,18 +124,55 @@ mod tests {
 
     #[test]
     fn fingerprint_sensitivity() {
+        use crate::cost::AnalyticCost;
         let e4 = ensemble(EnsembleId::Imn4);
         let e12 = ensemble(EnsembleId::Imn12);
         let d4 = DeviceSet::hgx(4);
         let d8 = DeviceSet::hgx(8);
         let cfg = GreedyConfig::default();
-        let base = cache_fingerprint(&e4, &d4, &cfg);
-        assert_ne!(base, cache_fingerprint(&e12, &d4, &cfg), "ensemble");
-        assert_ne!(base, cache_fingerprint(&e4, &d8, &cfg), "devices");
+        let c = AnalyticCost;
+        let base = cache_fingerprint(&e4, &d4, &cfg, &c);
+        assert_ne!(base, cache_fingerprint(&e12, &d4, &cfg, &c), "ensemble");
+        assert_ne!(base, cache_fingerprint(&e4, &d8, &cfg, &c), "devices");
         let cfg2 = GreedyConfig { max_neighs: 7, ..GreedyConfig::default() };
-        assert_ne!(base, cache_fingerprint(&e4, &d4, &cfg2), "knobs");
+        assert_ne!(base, cache_fingerprint(&e4, &d4, &cfg2, &c), "knobs");
         // stable across calls
-        assert_eq!(base, cache_fingerprint(&e4, &d4, &cfg));
+        assert_eq!(base, cache_fingerprint(&e4, &d4, &cfg, &c));
+    }
+
+    #[test]
+    fn fingerprint_folds_eff_factor() {
+        use crate::cost::AnalyticCost;
+        let e = ensemble(EnsembleId::Imn4);
+        let mut skewed = e.clone();
+        skewed.members[0].eff_factor *= 2.0;
+        let d = DeviceSet::hgx(4);
+        let cfg = GreedyConfig::default();
+        assert_ne!(
+            cache_fingerprint(&e, &d, &cfg, &AnalyticCost),
+            cache_fingerprint(&skewed, &d, &cfg, &AnalyticCost),
+            "GPU-efficiency change must not alias to the same cached matrix"
+        );
+    }
+
+    #[test]
+    fn fingerprint_tracks_cost_model_and_calibration() {
+        use crate::cost::{AnalyticCost, ProfileStore, ProfiledCost};
+        use std::sync::Arc;
+        let e = ensemble(EnsembleId::Imn4);
+        let d = DeviceSet::hgx(4);
+        let cfg = GreedyConfig::default();
+        let store = Arc::new(ProfileStore::new());
+        let profiled = ProfiledCost::new(Arc::clone(&store));
+        let analytic_fp = cache_fingerprint(&e, &d, &cfg, &AnalyticCost);
+        let empty_fp = cache_fingerprint(&e, &d, &cfg, &profiled);
+        assert_ne!(analytic_fp, empty_fp, "cost-model identity");
+        store.record("ResNet50", &d[0].class_key(), 8, 31.0, None, 3);
+        let recorded_fp = cache_fingerprint(&e, &d, &cfg, &profiled);
+        assert_ne!(empty_fp, recorded_fp, "profile record must invalidate");
+        store.observe("ResNet50", &d[0].class_key(), 8, 40.0, 1, 0.5);
+        assert_ne!(recorded_fp, cache_fingerprint(&e, &d, &cfg, &profiled),
+                   "online calibration must invalidate");
     }
 
     #[test]

@@ -1,11 +1,20 @@
 //! Memory feasibility: the paper's `fit_mem` predicate plus per-device
 //! accounting used by the executors and the optimizer.
+//!
+//! Every predicate comes in two forms: the historical one (analytic zoo
+//! footprints — kept verbatim so every pre-cost-model call site behaves
+//! bit-for-bit identically) and a `_with` form taking the
+//! [`CostModel`](crate::cost::CostModel) that the threaded allocation
+//! stack (optimizer, online planner, multi-tenant arbiter) scores
+//! candidates with.
 
 use crate::alloc::matrix::AllocationMatrix;
+use crate::cost::{AnalyticCost, CostModel};
 use crate::device::DeviceSet;
 use crate::model::Ensemble;
 
-/// Memory used on `device` by the workers the matrix places there, MB.
+/// Memory used on `device` by the workers the matrix places there, MB
+/// (analytic footprints).
 pub fn device_usage_mb(a: &AllocationMatrix, ensemble: &Ensemble, device: usize) -> f64 {
     (0..a.n_models())
         .map(|m| {
@@ -19,6 +28,26 @@ pub fn device_usage_mb(a: &AllocationMatrix, ensemble: &Ensemble, device: usize)
         .sum()
 }
 
+/// [`device_usage_mb`] under an explicit cost model.
+pub fn device_usage_mb_with(
+    a: &AllocationMatrix,
+    ensemble: &Ensemble,
+    devices: &DeviceSet,
+    device: usize,
+    cost: &dyn CostModel,
+) -> f64 {
+    (0..a.n_models())
+        .map(|m| {
+            let b = a.get(device, m);
+            if b == 0 {
+                0.0
+            } else {
+                cost.worker_mem_mb(&ensemble.members[m], &devices[device], b as usize)
+            }
+        })
+        .sum()
+}
+
 /// Remaining memory on `device` under allocation `a`, MB (can be negative
 /// for infeasible matrices).
 pub fn device_remaining_mb(
@@ -27,21 +56,55 @@ pub fn device_remaining_mb(
     devices: &DeviceSet,
     device: usize,
 ) -> f64 {
-    devices[device].mem_mb as f64 - device_usage_mb(a, ensemble, device)
+    device_remaining_mb_with(a, ensemble, devices, device, &AnalyticCost)
+}
+
+/// [`device_remaining_mb`] under an explicit cost model.
+pub fn device_remaining_mb_with(
+    a: &AllocationMatrix,
+    ensemble: &Ensemble,
+    devices: &DeviceSet,
+    device: usize,
+    cost: &dyn CostModel,
+) -> f64 {
+    devices[device].mem_mb as f64
+        - device_usage_mb_with(a, ensemble, devices, device, cost)
 }
 
 /// The paper's `fit_mem`: is the allocation feasible in terms of memory
 /// availability on every device?
 pub fn fit_mem(a: &AllocationMatrix, ensemble: &Ensemble, devices: &DeviceSet) -> bool {
-    assert_eq!(a.n_devices(), devices.len(), "matrix/device shape");
-    assert_eq!(a.n_models(), ensemble.len(), "matrix/ensemble shape");
-    (0..a.n_devices()).all(|d| device_remaining_mb(a, ensemble, devices, d) >= 0.0)
+    fit_mem_with(a, ensemble, devices, &AnalyticCost)
 }
 
-/// Total footprint of the whole allocation, MB.
+/// [`fit_mem`] under an explicit cost model.
+pub fn fit_mem_with(
+    a: &AllocationMatrix,
+    ensemble: &Ensemble,
+    devices: &DeviceSet,
+    cost: &dyn CostModel,
+) -> bool {
+    assert_eq!(a.n_devices(), devices.len(), "matrix/device shape");
+    assert_eq!(a.n_models(), ensemble.len(), "matrix/ensemble shape");
+    (0..a.n_devices()).all(|d| device_remaining_mb_with(a, ensemble, devices, d, cost) >= 0.0)
+}
+
+/// Total footprint of the whole allocation, MB (analytic footprints).
 pub fn total_usage_mb(a: &AllocationMatrix, ensemble: &Ensemble) -> f64 {
     (0..a.n_devices())
         .map(|d| device_usage_mb(a, ensemble, d))
+        .sum()
+}
+
+/// [`total_usage_mb`] under an explicit cost model.
+pub fn total_usage_mb_with(
+    a: &AllocationMatrix,
+    ensemble: &Ensemble,
+    devices: &DeviceSet,
+    cost: &dyn CostModel,
+) -> f64 {
+    (0..a.n_devices())
+        .map(|d| device_usage_mb_with(a, ensemble, devices, d, cost))
         .sum()
 }
 
@@ -96,5 +159,40 @@ mod tests {
         let mut a128 = AllocationMatrix::zeroed(d.len(), e.len());
         a128.set(0, 0, 128);
         assert!(total_usage_mb(&a128, &e) > total_usage_mb(&a8, &e));
+    }
+
+    #[test]
+    fn analytic_cost_variants_agree_with_plain_forms() {
+        let e = ensemble(EnsembleId::Imn4);
+        let d = DeviceSet::hgx(2);
+        let mut a = AllocationMatrix::zeroed(d.len(), e.len());
+        a.set(0, 0, 8);
+        a.set(1, 1, 64);
+        let c = AnalyticCost;
+        for dev in 0..d.len() {
+            assert_eq!(device_usage_mb(&a, &e, dev),
+                       device_usage_mb_with(&a, &e, &d, dev, &c));
+            assert_eq!(device_remaining_mb(&a, &e, &d, dev),
+                       device_remaining_mb_with(&a, &e, &d, dev, &c));
+        }
+        assert_eq!(fit_mem(&a, &e, &d), fit_mem_with(&a, &e, &d, &c));
+        assert_eq!(total_usage_mb(&a, &e), total_usage_mb_with(&a, &e, &d, &c));
+    }
+
+    #[test]
+    fn profiled_memory_changes_feasibility() {
+        use crate::cost::{ProfileStore, ProfiledCost};
+        use std::sync::Arc;
+        let e = ensemble(EnsembleId::Imn1);
+        let d = DeviceSet::hgx(1);
+        let mut a = AllocationMatrix::zeroed(d.len(), e.len());
+        a.set(0, 0, 8);
+        assert!(fit_mem(&a, &e, &d), "analytic: ResNet152@8 fits a V100");
+        // a measured footprint claiming the worker needs 20 GB flips it
+        let store = Arc::new(ProfileStore::new());
+        store.record(&e.members[0].name, &d[0].class_key(), 8, 75.0,
+                     Some(20.0 * 1024.0), 3);
+        let profiled = ProfiledCost::new(store);
+        assert!(!fit_mem_with(&a, &e, &d, &profiled));
     }
 }

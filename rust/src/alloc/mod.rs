@@ -26,7 +26,7 @@ pub use bbs::best_batch_strategy;
 pub use greedy::{bounded_greedy, GreedyConfig, GreedyReport};
 pub use matrix::AllocationMatrix;
 pub use memory::fit_mem;
-pub use worstfit::{worst_fit_decreasing, FitHeuristic};
+pub use worstfit::{worst_fit_decreasing, worst_fit_decreasing_with, FitHeuristic};
 
 /// The paper's possible batch-size values (§III): {8, 16, 32, 64, 128}.
 pub const BATCH_VALUES: [u32; 5] = [8, 16, 32, 64, 128];

@@ -13,9 +13,10 @@
 use std::fmt;
 
 use crate::alloc::matrix::AllocationMatrix;
-use crate::alloc::memory::device_remaining_mb;
+use crate::alloc::memory::device_remaining_mb_with;
+use crate::cost::{AnalyticCost, CostModel};
 use crate::device::{DeviceKind, DeviceSet};
-use crate::model::Ensemble;
+use crate::model::{Ensemble, ModelSpec};
 
 /// Placement failure: no device can take the model.
 #[derive(Debug)]
@@ -68,13 +69,23 @@ impl FitHeuristic {
     }
 }
 
-/// Algorithm 1 with the paper's parameters.
+/// Algorithm 1 with the paper's parameters (analytic footprints).
 pub fn worst_fit_decreasing(
     ensemble: &Ensemble,
     devices: &DeviceSet,
     default_batch: u32,
 ) -> Result<AllocationMatrix, OutOfMemory> {
     pack(ensemble, devices, default_batch, FitHeuristic::WorstFit)
+}
+
+/// [`worst_fit_decreasing`] under an explicit cost model.
+pub fn worst_fit_decreasing_with(
+    ensemble: &Ensemble,
+    devices: &DeviceSet,
+    default_batch: u32,
+    cost: &dyn CostModel,
+) -> Result<AllocationMatrix, OutOfMemory> {
+    pack_with(ensemble, devices, default_batch, FitHeuristic::WorstFit, cost)
 }
 
 /// Generalized Algorithm 1 (heuristic selectable for the ablation).
@@ -84,13 +95,36 @@ pub fn pack(
     default_batch: u32,
     heuristic: FitHeuristic,
 ) -> Result<AllocationMatrix, OutOfMemory> {
+    pack_with(ensemble, devices, default_batch, heuristic, &AnalyticCost)
+}
+
+/// [`pack`] under an explicit cost model. Footprints may be
+/// device-dependent under a measured model, so the decreasing sort key
+/// is each model's *largest* footprint across devices (ties and the
+/// analytic case — where footprints are device-independent — reproduce
+/// the historical order exactly) and fit checks are per candidate
+/// device.
+pub fn pack_with(
+    ensemble: &Ensemble,
+    devices: &DeviceSet,
+    default_batch: u32,
+    heuristic: FitHeuristic,
+    cost: &dyn CostModel,
+) -> Result<AllocationMatrix, OutOfMemory> {
     let mut a = AllocationMatrix::zeroed(devices.len(), ensemble.len());
+
+    let worst_need = |m: &ModelSpec| {
+        devices
+            .iter()
+            .map(|d| cost.worker_mem_mb(m, d, default_batch as usize))
+            .fold(0.0f64, f64::max)
+    };
 
     // "M sorted in desc. order of memory size"
     let mut order: Vec<usize> = (0..ensemble.len()).collect();
     order.sort_by(|&x, &y| {
-        let mx = ensemble.members[x].worker_mem_mb(default_batch as usize);
-        let my = ensemble.members[y].worker_mem_mb(default_batch as usize);
+        let mx = worst_need(&ensemble.members[x]);
+        let my = worst_need(&ensemble.members[y]);
         my.partial_cmp(&mx).unwrap()
     });
 
@@ -98,11 +132,10 @@ pub fn pack(
     let mut next_cursor: [usize; 2] = [0, 0];
 
     for m in order {
-        let need = ensemble.members[m].worker_mem_mb(default_batch as usize);
         // GPU side first, CPU side only if no GPU fits
         let placed = [DeviceKind::Gpu, DeviceKind::Cpu].iter().any(|&kind| {
-            match choose_device(&a, ensemble, devices, kind, need, heuristic,
-                                &mut next_cursor) {
+            match choose_device(&a, ensemble, devices, kind, m, default_batch,
+                                heuristic, cost, &mut next_cursor) {
                 Some(d) => {
                     a.set(d, m, default_batch);
                     true
@@ -113,7 +146,7 @@ pub fn pack(
         if !placed {
             return Err(OutOfMemory {
                 model: ensemble.members[m].name.clone(),
-                mem_mb: need,
+                mem_mb: worst_need(&ensemble.members[m]),
                 batch: default_batch,
             });
         }
@@ -123,20 +156,26 @@ pub fn pack(
 }
 
 /// `more_remaining_memory` generalized over the heuristic: returns the
-/// chosen device of `kind` that can still take `need` MB, or None.
+/// chosen device of `kind` that can still take model `m` at `batch`,
+/// or None.
+#[allow(clippy::too_many_arguments)]
 fn choose_device(
     a: &AllocationMatrix,
     ensemble: &Ensemble,
     devices: &DeviceSet,
     kind: DeviceKind,
-    need: f64,
+    m: usize,
+    batch: u32,
     heuristic: FitHeuristic,
+    cost: &dyn CostModel,
     next_cursor: &mut [usize; 2],
 ) -> Option<usize> {
     let candidates: Vec<(usize, f64)> = (0..devices.len())
         .filter(|&d| devices[d].kind == kind)
-        .map(|d| (d, device_remaining_mb(a, ensemble, devices, d)))
-        .filter(|&(_, rem)| rem >= need)
+        .map(|d| (d, device_remaining_mb_with(a, ensemble, devices, d, cost)))
+        .filter(|&(d, rem)| {
+            rem >= cost.worker_mem_mb(&ensemble.members[m], &devices[d], batch as usize)
+        })
         .collect();
     if candidates.is_empty() {
         return None;
@@ -255,6 +294,38 @@ mod tests {
                 }
             }
         }
+    }
+
+    #[test]
+    fn analytic_cost_pack_is_identical() {
+        // the cost-model threading must not perturb Algorithm 1's output
+        for id in [EnsembleId::Imn4, EnsembleId::Imn12, EnsembleId::Cif36] {
+            let e = ensemble(id);
+            for g in [4usize, 8] {
+                let d = DeviceSet::hgx(g);
+                for h in FitHeuristic::ALL {
+                    let plain = pack(&e, &d, 8, h).ok();
+                    let with = pack_with(&e, &d, 8, h, &AnalyticCost).ok();
+                    assert_eq!(plain, with, "{} g={g}", h.name());
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn profiled_footprints_steer_the_packing() {
+        use crate::cost::{ProfileStore, ProfiledCost};
+        use std::sync::Arc;
+        let e = ensemble(EnsembleId::Imn1);
+        let d = DeviceSet::hgx(1);
+        // measured: ResNet152 needs more than one V100 at batch 8
+        let store = Arc::new(ProfileStore::new());
+        store.record(&e.members[0].name, &d[0].class_key(), 8, 75.0,
+                     Some(17.0 * 1024.0), 3);
+        let profiled = ProfiledCost::new(store);
+        assert!(worst_fit_decreasing(&e, &d, 8).is_ok(), "analytic fits");
+        assert!(worst_fit_decreasing_with(&e, &d, 8, &profiled).is_err(),
+                "measured footprint must OOM the packing");
     }
 
     #[test]

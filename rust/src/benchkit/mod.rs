@@ -8,6 +8,9 @@
 //! numbers read at paper scale (V100 img/s).
 
 pub mod harness;
+pub mod profile;
+
+pub use profile::{profile_ensemble, ProfileOptions};
 
 use std::sync::Arc;
 use std::time::Instant;

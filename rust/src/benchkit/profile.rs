@@ -1,0 +1,254 @@
+//! Offline profiler: measure every (model, device-class, batch) cell
+//! through the [`Executor`] and persist the samples as a
+//! [`ProfileStore`].
+//!
+//! This is the paper's benchmark mode pointed at *single workers*
+//! instead of whole allocations (and the analogue of the per-device
+//! profiling pass of the companion workflow paper, arXiv 2208.14046):
+//! one instance is loaded per cell and predicts repeatedly on
+//! calibration data until a wall-time floor accumulates
+//! ([`ProfileOptions::min_measure`]); the cell takes the median of the
+//! *second half* of the calls — rescaled by the simulator's
+//! `time_scale` where applicable. The floor + tail-median combination
+//! makes the measurement robust to backends with deferred pacing (the
+//! sim's lookahead lead swallows early calls at high compression) and
+//! a cell whose calls never accumulate real wall time is dropped
+//! rather than recorded as noise. Homogeneous devices are deduplicated
+//! by
+//! [`DeviceSpec::class_key`](crate::device::DeviceSpec::class_key):
+//! profiling GPU0 of an HGX node covers all sixteen V100s.
+//!
+//! Cells the executor cannot load (OOM, missing artifact) are simply
+//! absent — [`ProfiledCost`](crate::cost::ProfiledCost) falls back to
+//! the analytic formulas there.
+//!
+//! Memory cells: the sim/fake executors have no queryable allocator, so
+//! the profiler records the analytic footprint next to the measured
+//! latency (a real PJRT backend would ask its allocator). The value of
+//! the profile is the *latency* column; memory stays analytic-shaped
+//! either way.
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use crate::benchkit::calibration_data;
+use crate::cost::ProfileStore;
+use crate::exec::Executor;
+use crate::model::Ensemble;
+use crate::util::stats;
+
+/// Knobs of one profiling run.
+#[derive(Debug, Clone)]
+pub struct ProfileOptions {
+    /// Batch sizes to measure per (model, device-class) — typically the
+    /// optimizer's batch grid.
+    pub batches: Vec<u32>,
+    /// Unmeasured warmup predicts per cell.
+    pub warmup: usize,
+    /// Minimum measured predicts per cell.
+    pub reps: usize,
+    /// Keep measuring a cell until at least this much wall time has
+    /// accumulated (bounded by `max_calls`). Backends with deferred
+    /// pacing — the sim executor lets a worker run up to its lookahead
+    /// window (~4 ms) ahead of the device timeline, so at a high time
+    /// scale the first dozens of calls return without sleeping at all
+    /// — need many calls before per-call walls reflect the real
+    /// latency; the estimate below medians the *second half* of the
+    /// calls, by which point pacing has kicked in.
+    pub min_measure: Duration,
+    /// Hard cap on measured predicts per cell.
+    pub max_calls: usize,
+    /// Rescale measured wall time to paper scale (the sim executor
+    /// compresses time by its `time_scale`; 1.0 for real backends).
+    pub time_scale: f64,
+    pub seed: u64,
+}
+
+impl Default for ProfileOptions {
+    fn default() -> Self {
+        ProfileOptions {
+            batches: crate::alloc::BATCH_VALUES.to_vec(),
+            warmup: 1,
+            reps: 3,
+            min_measure: Duration::from_millis(80),
+            max_calls: 2048,
+            time_scale: 1.0,
+            seed: 0x9_80F1_1E,
+        }
+    }
+}
+
+/// Measure every (member, device-class, batch) cell of `ensemble` on
+/// `executor`. Unloadable cells are skipped (analytic fallback);
+/// returns the populated store and never fails as a whole.
+pub fn profile_ensemble(
+    ensemble: &Ensemble,
+    executor: Arc<dyn Executor>,
+    opts: &ProfileOptions,
+) -> ProfileStore {
+    let store = ProfileStore::new();
+    let devices = executor.devices();
+
+    // one representative device index per class
+    let mut classes: BTreeMap<String, usize> = BTreeMap::new();
+    for (d, spec) in devices.iter().enumerate() {
+        classes.entry(spec.class_key()).or_insert(d);
+    }
+
+    for member in &ensemble.members {
+        let elems = member.input_elems_per_image();
+        for (class, &dev) in &classes {
+            for &batch in &opts.batches {
+                let mut instance = match executor.load(member, dev, batch as usize) {
+                    Ok(i) => i,
+                    Err(e) => {
+                        log::debug!(
+                            "profile: skipping {}/{class}/b{batch}: {e:#}",
+                            member.name
+                        );
+                        continue;
+                    }
+                };
+                let x = calibration_data(batch as usize, elems, opts.seed);
+                let mut ok = true;
+                for _ in 0..opts.warmup {
+                    if instance.predict(&x, batch as usize).is_err() {
+                        ok = false;
+                        break;
+                    }
+                }
+                // measure until the wall-time floor (or the call cap):
+                // under deferred pacing the early calls are swallowed by
+                // the backend's lookahead lead, so keep calling and
+                // estimate from the second half only
+                let min_calls = opts.reps.max(1);
+                let max_calls = opts.max_calls.max(min_calls);
+                let mut runs: Vec<f64> = Vec::with_capacity(min_calls);
+                let mut total = Duration::ZERO;
+                while ok
+                    && runs.len() < max_calls
+                    && (runs.len() < min_calls || total < opts.min_measure)
+                {
+                    let t = Instant::now();
+                    match instance.predict(&x, batch as usize) {
+                        Ok(_) => {
+                            let dt = t.elapsed();
+                            total += dt;
+                            runs.push(dt.as_secs_f64());
+                        }
+                        Err(_) => ok = false,
+                    }
+                }
+                if !ok || runs.is_empty() {
+                    continue;
+                }
+                // the cap was hit while the backend barely slept at all:
+                // every call stayed inside the pacing lead (or the
+                // backend is an instant stub) and the walls are noise —
+                // better an absent cell (analytic fallback) than a
+                // garbage one steering the planner
+                if runs.len() >= max_calls && total < opts.min_measure / 4 {
+                    log::warn!(
+                        "profile: {}/{class}/b{batch}: {} calls accumulated only \
+                         {:.1} ms wall — measurement swallowed by backend pacing \
+                         (time scale too aggressive?); cell dropped",
+                        member.name, runs.len(), total.as_secs_f64() * 1e3
+                    );
+                    continue;
+                }
+                let tail = &runs[runs.len() / 2..];
+                let latency_ms = stats::median(tail) * 1000.0 * opts.time_scale;
+                if !(latency_ms.is_finite() && latency_ms > 0.0) {
+                    log::warn!(
+                        "profile: {}/{class}/b{batch} measured {latency_ms} ms — \
+                         dropped (time scale too aggressive for this backend?)",
+                        member.name
+                    );
+                    continue;
+                }
+                store.record(
+                    &member.name,
+                    class,
+                    batch,
+                    latency_ms,
+                    Some(member.worker_mem_mb(batch as usize)),
+                    tail.len() as u64,
+                );
+            }
+        }
+    }
+    store
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cost::{CostModel, ProfiledCost};
+    use crate::device::DeviceSet;
+    use crate::exec::sim::SimExecutor;
+    use crate::model::{ensemble, EnsembleId};
+
+    fn opts(scale: f64) -> ProfileOptions {
+        ProfileOptions {
+            batches: vec![8, 64],
+            warmup: 1,
+            reps: 3,
+            time_scale: scale,
+            ..ProfileOptions::default()
+        }
+    }
+
+    #[test]
+    fn sim_profile_matches_the_calibrated_model() {
+        // the sim executor IS the analytic model, so profiling it must
+        // reproduce the zoo latencies within sleep jitter. The sim's
+        // lookahead window swallows early calls; the wall-time floor +
+        // second-half median are what make this measurement honest.
+        let e = ensemble(EnsembleId::Imn1);
+        let d = DeviceSet::hgx(1);
+        let scale = 16.0;
+        let ex = SimExecutor::new(d.clone(), scale);
+        let store = profile_ensemble(&e, ex, &opts(scale));
+        // 1 GPU class + 1 CPU class; ResNet152 fits neither CPU batch,
+        // so: 2 GPU cells only
+        assert_eq!(store.len(), 2, "cells: {:?}", store.cells());
+        let cell = store
+            .get(&e.members[0].name, &d[0].class_key(), 8)
+            .expect("GPU batch-8 cell");
+        let want = e.members[0].predict_latency_ms(&d[0], 8);
+        let err = (cell.latency_ms - want).abs() / want;
+        assert!(err < 0.4, "measured {} vs analytic {want}", cell.latency_ms);
+        assert_eq!(cell.mem_mb, Some(e.members[0].worker_mem_mb(8)));
+    }
+
+    #[test]
+    fn unloadable_cells_fall_back_to_analytic() {
+        let e = ensemble(EnsembleId::Imn1);
+        let d = DeviceSet::hgx(1);
+        let ex = SimExecutor::new(d.clone(), 500.0);
+        let store = profile_ensemble(&e, ex, &opts(500.0));
+        let cpu = &d[d.len() - 1];
+        assert!(store.get(&e.members[0].name, &cpu.class_key(), 8).is_none(),
+                "ResNet152 cannot load on the 3 GB CPU budget");
+        let cost = ProfiledCost::new(Arc::new(store));
+        assert_eq!(cost.latency_ms(&e.members[0], cpu, 8),
+                   e.members[0].predict_latency_ms(cpu, 8));
+    }
+
+    #[test]
+    fn homogeneous_gpus_profile_once() {
+        let e = ensemble(EnsembleId::Imn1);
+        let d = DeviceSet::hgx(4);
+        let ex = SimExecutor::new(d.clone(), 500.0);
+        let store = profile_ensemble(&e, ex, &ProfileOptions {
+            batches: vec![8],
+            warmup: 0,
+            reps: 1,
+            time_scale: 500.0,
+            ..ProfileOptions::default()
+        });
+        // 4 V100s share one class: exactly one GPU cell (CPU can't load)
+        assert_eq!(store.len(), 1);
+    }
+}

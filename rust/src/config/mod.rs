@@ -60,6 +60,15 @@ pub struct ServerConfig {
     pub reconfig: bool,
     /// Controller p99 latency objective, ms.
     pub p99_slo_ms: f64,
+    /// Path to a measured profile store (JSON, written by the `profile`
+    /// subcommand). Set: the allocation stack plans on
+    /// [`ProfiledCost`](crate::cost::ProfiledCost) instead of the
+    /// analytic formulas, `serve` exposes `GET /v1/profiles`, and the
+    /// reconfiguration controllers calibrate the store online.
+    pub profiles: Option<String>,
+    /// EWMA weight of one drained observation batch during online
+    /// calibration, in (0, 1].
+    pub calibration_alpha: f64,
 }
 
 impl Default for ServerConfig {
@@ -78,6 +87,8 @@ impl Default for ServerConfig {
             calib_images: 1024,
             reconfig: false,
             p99_slo_ms: 500.0,
+            profiles: None,
+            calibration_alpha: 0.25,
         }
     }
 }
@@ -151,6 +162,14 @@ impl ServerConfig {
             anyhow::ensure!(v > 0.0, "p99_slo_ms must be positive");
             cfg.p99_slo_ms = v;
         }
+        if let Some(v) = doc.get("profiles").and_then(Json::as_str) {
+            anyhow::ensure!(!v.is_empty(), "profiles path empty");
+            cfg.profiles = Some(v.to_string());
+        }
+        if let Some(v) = doc.get("calibration_alpha").and_then(Json::as_f64) {
+            anyhow::ensure!(v > 0.0 && v <= 1.0, "calibration_alpha must be in (0, 1]");
+            cfg.calibration_alpha = v;
+        }
         Ok(cfg)
     }
 
@@ -192,7 +211,8 @@ mod tests {
             r#"{"ensemble":"IMN12","gpus":16,"backend":"fake","segment_size":64,
                 "max_iter":5,"max_neighs":40,"batch_values":[8,16],"seed":7,
                 "default_batch":16,"calib_images":256,"listen":"0.0.0.0:9000",
-                "reconfig":true,"p99_slo_ms":120.5}"#,
+                "reconfig":true,"p99_slo_ms":120.5,
+                "profiles":"profiles.json","calibration_alpha":0.5}"#,
         )
         .unwrap();
         let cfg = ServerConfig::from_json(&doc).unwrap();
@@ -210,6 +230,8 @@ mod tests {
         assert_eq!(cfg.devices().len(), 17);
         assert!(cfg.reconfig);
         assert_eq!(cfg.p99_slo_ms, 120.5);
+        assert_eq!(cfg.profiles.as_deref(), Some("profiles.json"));
+        assert_eq!(cfg.calibration_alpha, 0.5);
     }
 
     #[test]
@@ -235,6 +257,9 @@ mod tests {
             r#"{"segment_size":0}"#,
             r#"{"batch_values":[]}"#,
             r#"{"p99_slo_ms":0}"#,
+            r#"{"profiles":""}"#,
+            r#"{"calibration_alpha":0}"#,
+            r#"{"calibration_alpha":1.5}"#,
         ] {
             let doc = Json::parse(bad).unwrap();
             assert!(ServerConfig::from_json(&doc).is_err(), "{bad}");

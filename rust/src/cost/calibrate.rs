@@ -1,0 +1,160 @@
+//! Online calibration: fold the engine's observed batch latencies back
+//! into the [`ProfileStore`].
+//!
+//! Every worker's predictor thread already times each predict call (the
+//! device-busy gauges); [`crate::metrics::EngineMetrics`] additionally
+//! aggregates those timings per (model column, device, batch-rows) into
+//! a drainable observation buffer. The reconfiguration controllers
+//! drain it every tick through a [`Calibrator`], which maps matrix
+//! coordinates back to (model name, device class) and EWMA-folds the
+//! observed mean latencies into the shared store — so the next replan's
+//! [`ProfiledCost`] scores candidates with what the hardware actually
+//! did, not what the zoo predicted ("No DNN Left Behind", arXiv
+//! 1901.06887: multi-tenant placement must react to observed costs).
+//!
+//! Observed wall time includes the contention the worker actually
+//! experienced (queue wait on a co-located device); the EWMA smooths
+//! transient spikes while tracking genuine drift (a slower backend, a
+//! throttling device, an interfering co-tenant).
+//!
+//! Sim-backend caveat: the simulator lets a worker run up to its
+//! lookahead window (~4 ms) ahead of the device timeline, so at very
+//! high time compression an idle-then-bursty worker's first calls
+//! return without sleeping and their walls under-read the modeled
+//! latency. Under sustained load the pacing dominates and observations
+//! converge; when calibrating against the sim, prefer modest time
+//! scales (≤ ~64) or sustained traffic. Real backends (time_scale
+//! 1.0) have no such artifact.
+//!
+//! [`ProfiledCost`]: crate::cost::ProfiledCost
+
+use std::sync::Arc;
+
+use crate::cost::profile::ProfileStore;
+use crate::device::DeviceSet;
+use crate::metrics::BatchObservation;
+use crate::model::Ensemble;
+
+/// Folds drained [`BatchObservation`]s into a [`ProfileStore`].
+#[derive(Debug, Clone)]
+pub struct Calibrator {
+    pub store: Arc<ProfileStore>,
+    /// EWMA weight of one drained observation batch (its mean latency).
+    pub alpha: f64,
+    /// Rescales observed wall latencies to paper scale: the simulated
+    /// executor compresses time by its `time_scale`, so observations
+    /// must be multiplied back before they can sit next to paper-scale
+    /// analytic values. 1.0 for real backends.
+    pub time_scale: f64,
+}
+
+impl Calibrator {
+    pub fn new(store: Arc<ProfileStore>) -> Calibrator {
+        Calibrator { store, alpha: 0.25, time_scale: 1.0 }
+    }
+
+    pub fn with_alpha(mut self, alpha: f64) -> Calibrator {
+        assert!((0.0..=1.0).contains(&alpha), "alpha {alpha} outside [0, 1]");
+        self.alpha = alpha;
+        self
+    }
+
+    pub fn with_time_scale(mut self, time_scale: f64) -> Calibrator {
+        assert!(time_scale > 0.0, "time_scale {time_scale} must be positive");
+        self.time_scale = time_scale;
+        self
+    }
+
+    /// Fold `observations` (drained from one system's metrics) into the
+    /// store. `ensemble`/`devices` resolve matrix coordinates to the
+    /// store's (model name, device class) keys; out-of-range
+    /// coordinates are skipped (a racing hot-swap can leave stragglers
+    /// from an old shape). Returns the number of cells updated.
+    pub fn fold(&self, ensemble: &Ensemble, devices: &DeviceSet,
+                observations: &[BatchObservation]) -> usize {
+        let mut updated = 0;
+        for obs in observations {
+            if obs.count == 0 || obs.batch == 0 {
+                continue;
+            }
+            let Some(member) = ensemble.members.get(obs.model) else { continue };
+            if obs.device >= devices.len() {
+                continue;
+            }
+            let mean_ms =
+                obs.total_us as f64 / obs.count as f64 / 1000.0 * self.time_scale;
+            if !(mean_ms.is_finite() && mean_ms > 0.0) {
+                continue;
+            }
+            self.store.observe(
+                &member.name,
+                &devices[obs.device].class_key(),
+                obs.batch,
+                mean_ms,
+                obs.count,
+                self.alpha,
+            );
+            updated += 1;
+        }
+        updated
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::{ensemble, EnsembleId};
+
+    fn obs(model: usize, device: usize, batch: u32, total_us: u64, count: u64)
+        -> BatchObservation {
+        BatchObservation { model, device, batch, total_us, count }
+    }
+
+    #[test]
+    fn fold_maps_coordinates_and_rescales() {
+        let e = ensemble(EnsembleId::Imn4);
+        let d = DeviceSet::hgx(2);
+        let store = Arc::new(ProfileStore::new());
+        let cal = Calibrator::new(Arc::clone(&store)).with_time_scale(100.0);
+        // 4 batches of 8 rows on GPU0 for model 1, 500 µs each observed
+        let n = cal.fold(&e, &d, &[obs(1, 0, 8, 2000, 4)]);
+        assert_eq!(n, 1);
+        let cell = store
+            .get(&e.members[1].name, &d[0].class_key(), 8)
+            .expect("cell created");
+        // mean 0.5 ms scaled ×100 = 50 ms paper scale
+        assert!((cell.latency_ms - 50.0).abs() < 1e-9, "{}", cell.latency_ms);
+        assert_eq!(cell.samples, 4);
+    }
+
+    #[test]
+    fn fold_skips_garbage_coordinates() {
+        let e = ensemble(EnsembleId::Imn1);
+        let d = DeviceSet::hgx(1);
+        let store = Arc::new(ProfileStore::new());
+        let cal = Calibrator::new(Arc::clone(&store));
+        let n = cal.fold(&e, &d, &[
+            obs(99, 0, 8, 1000, 1),  // model out of range
+            obs(0, 99, 8, 1000, 1),  // device out of range
+            obs(0, 0, 8, 1000, 0),   // empty aggregate
+        ]);
+        assert_eq!(n, 0);
+        assert!(store.is_empty());
+    }
+
+    #[test]
+    fn repeated_folds_ewma_toward_observed() {
+        let e = ensemble(EnsembleId::Imn1);
+        let d = DeviceSet::hgx(1);
+        let store = Arc::new(ProfileStore::new());
+        store.record(&e.members[0].name, &d[0].class_key(), 8, 100.0, None, 1);
+        let cal = Calibrator::new(Arc::clone(&store)).with_alpha(0.5);
+        // observed steady 10 ms per batch: EWMA converges toward 10
+        for _ in 0..8 {
+            cal.fold(&e, &d, &[obs(0, 0, 8, 10_000, 1)]);
+        }
+        let cell = store.get(&e.members[0].name, &d[0].class_key(), 8).unwrap();
+        assert!(cell.latency_ms < 12.0, "EWMA stuck at {}", cell.latency_ms);
+        assert!(cell.latency_ms >= 10.0);
+    }
+}

@@ -1,0 +1,264 @@
+//! The cost-model substrate under the allocation stack.
+//!
+//! Every allocation decision in this system — Algorithm 1's bin packing,
+//! Algorithm 2's greedy scoring, `fit_mem`, the online planner, the
+//! multi-tenant arbiter — ultimately asks two questions about a
+//! hypothetical worker: *how long is one predict call of `batch` images
+//! of `model` on `device`* and *how much device memory does it pin*.
+//! Historically those answers came straight from the hardcoded analytic
+//! formulas in [`crate::model::zoo`], which are calibrated against the
+//! paper's V100 testbed and can be arbitrarily wrong on any other
+//! backend or device. The [`CostModel`] trait makes the answer source
+//! explicit and swappable:
+//!
+//! * [`AnalyticCost`] — the zoo formulas, bit-for-bit (the default;
+//!   every entry point that does not take a cost model uses it, so
+//!   pre-refactor behavior is preserved exactly);
+//! * [`ProfiledCost`] — a [`ProfileStore`] of *measured* per
+//!   (model, device-class, batch) samples, filled offline by the
+//!   profiler ([`crate::benchkit::profile_ensemble`] / the `profile`
+//!   CLI subcommand) and online by the calibration loop
+//!   ([`Calibrator`]) that folds the engine's observed batch latencies
+//!   back in (EWMA). Lookups interpolate log-linearly between profiled
+//!   batch sizes and fall back to the analytic formulas for unprofiled
+//!   cells, so a partially profiled zoo degrades gracefully instead of
+//!   refusing to plan.
+//!
+//! A cost model also exposes a [`digest`](CostModel::digest) folded
+//! into the matrix-cache fingerprint: recalibration invalidates cached
+//! optimal matrices computed under stale costs.
+
+pub mod calibrate;
+pub mod profile;
+
+use std::sync::Arc;
+
+use crate::device::DeviceSpec;
+use crate::model::ModelSpec;
+
+pub use calibrate::Calibrator;
+pub use profile::{
+    analytic_latency_for, LatencyLookup, ProfileCell, ProfileKey, ProfileSource,
+    ProfileStore,
+};
+
+/// Source of per-worker latency and memory estimates — the substrate
+/// every allocation-stack layer scores candidates with.
+pub trait CostModel: Send + Sync + std::fmt::Debug {
+    /// Latency of one predict call of `batch` images, milliseconds
+    /// (paper scale).
+    fn latency_ms(&self, model: &ModelSpec, device: &DeviceSpec, batch: usize) -> f64;
+
+    /// Device memory pinned by one worker of `model` at `batch`, MB.
+    fn worker_mem_mb(&self, model: &ModelSpec, device: &DeviceSpec, batch: usize) -> f64;
+
+    /// Short implementation name ("analytic" / "profiled").
+    fn name(&self) -> &'static str;
+
+    /// Content digest: must change whenever the model could answer
+    /// differently. Folded into the matrix-cache fingerprint so
+    /// calibration invalidates cached matrices planned on stale costs.
+    fn digest(&self) -> String;
+}
+
+/// The default shared analytic cost model.
+pub fn analytic() -> Arc<dyn CostModel> {
+    Arc::new(AnalyticCost)
+}
+
+/// The zoo's closed-form latency/memory formulas (see
+/// [`crate::model::zoo`] for the calibration story). Behavior-identical
+/// to the direct `ModelSpec` calls every layer used before the cost
+/// model existed.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct AnalyticCost;
+
+impl CostModel for AnalyticCost {
+    fn latency_ms(&self, model: &ModelSpec, device: &DeviceSpec, batch: usize) -> f64 {
+        model.predict_latency_ms(device, batch)
+    }
+
+    fn worker_mem_mb(&self, model: &ModelSpec, _device: &DeviceSpec, batch: usize) -> f64 {
+        model.worker_mem_mb(batch)
+    }
+
+    fn name(&self) -> &'static str {
+        "analytic"
+    }
+
+    fn digest(&self) -> String {
+        // the formulas are part of the binary; the zoo stats are already
+        // folded into the cache fingerprint separately
+        "analytic-v1".to_string()
+    }
+}
+
+/// Measured costs: a [`ProfileStore`] of per (model, device-class,
+/// batch) samples with log-linear batch interpolation and analytic
+/// fallback for unprofiled cells.
+///
+/// Perf note: each lookup formats the device's class key and builds
+/// string-keyed range bounds (a handful of small allocations). That is
+/// deliberate — the consumers are planners evaluating at most a few
+/// thousand cells per replan tick (a millisecond-scale cost against a
+/// 250 ms control period), and keeping the store string-keyed keeps
+/// profiles portable across processes and device sets. Interning
+/// model/class ids would only pay off if a cost model ever lands on
+/// the per-request path, which it must not.
+#[derive(Debug, Clone)]
+pub struct ProfiledCost {
+    store: Arc<ProfileStore>,
+    fallback: AnalyticCost,
+}
+
+impl ProfiledCost {
+    pub fn new(store: Arc<ProfileStore>) -> ProfiledCost {
+        ProfiledCost { store, fallback: AnalyticCost }
+    }
+
+    pub fn store(&self) -> &Arc<ProfileStore> {
+        &self.store
+    }
+
+    /// Measured latency for the cell, if resolvable from profiles alone:
+    /// exact hit, or log-linear interpolation between the two profiled
+    /// batch sizes bracketing `batch`. `None` = fall back to analytic
+    /// (including outside the profiled range: extrapolation would trust
+    /// the measurements beyond their support).
+    fn profiled_latency_ms(&self, model: &str, class: &str, batch: usize) -> Option<f64> {
+        if batch == 0 || batch > u32::MAX as usize {
+            return None;
+        }
+        match self.store.lookup_latency(model, class, batch as u32) {
+            LatencyLookup::Exact(l) => Some(l),
+            LatencyLookup::Bracket { b0, l0, b1, l1 } => {
+                Some(log_linear(b0 as f64, l0, b1 as f64, l1, batch as f64))
+            }
+            LatencyLookup::Miss => None,
+        }
+    }
+}
+
+/// Log-linear interpolation: `ln L` linear in `ln b` between the two
+/// profiled endpoints. Latency-vs-batch curves are near power laws
+/// (overhead-dominated at small batches, linear at saturation), so the
+/// log-log line tracks them far better than a linear one and is exact
+/// at both endpoints; the result always lies between the endpoint
+/// latencies (monotone along the segment).
+fn log_linear(b0: f64, l0: f64, b1: f64, l1: f64, b: f64) -> f64 {
+    debug_assert!(b0 < b && b < b1);
+    if l0 <= 0.0 || l1 <= 0.0 {
+        // degenerate measurements: fall back to linear interpolation
+        let t = (b - b0) / (b1 - b0);
+        return l0 + t * (l1 - l0);
+    }
+    let t = (b.ln() - b0.ln()) / (b1.ln() - b0.ln());
+    (l0.ln() + t * (l1.ln() - l0.ln())).exp()
+}
+
+impl CostModel for ProfiledCost {
+    fn latency_ms(&self, model: &ModelSpec, device: &DeviceSpec, batch: usize) -> f64 {
+        self.profiled_latency_ms(&model.name, &device.class_key(), batch)
+            .unwrap_or_else(|| self.fallback.latency_ms(model, device, batch))
+    }
+
+    fn worker_mem_mb(&self, model: &ModelSpec, device: &DeviceSpec, batch: usize) -> f64 {
+        // memory is only trusted at exactly profiled cells (activation
+        // footprints are linear in batch, but a measured cell may carry
+        // allocator overheads interpolation would smear)
+        self.store
+            .get(&model.name, &device.class_key(), batch as u32)
+            .and_then(|c| c.mem_mb)
+            .unwrap_or_else(|| self.fallback.worker_mem_mb(model, device, batch))
+    }
+
+    fn name(&self) -> &'static str {
+        "profiled"
+    }
+
+    fn digest(&self) -> String {
+        self.store.digest()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::DeviceSet;
+    use crate::model::zoo;
+
+    fn gpu() -> DeviceSpec {
+        DeviceSpec::v100(0)
+    }
+
+    #[test]
+    fn analytic_matches_zoo_formulas_exactly() {
+        let m = zoo::by_name("ResNet152").unwrap();
+        let d = gpu();
+        let c = AnalyticCost;
+        for b in [1usize, 8, 64, 128] {
+            assert_eq!(c.latency_ms(&m, &d, b), m.predict_latency_ms(&d, b));
+            assert_eq!(c.worker_mem_mb(&m, &d, b), m.worker_mem_mb(b));
+        }
+    }
+
+    #[test]
+    fn profiled_exact_hit_and_fallback() {
+        let m = zoo::by_name("ResNet50").unwrap();
+        let d = gpu();
+        let store = Arc::new(ProfileStore::new());
+        store.record(&m.name, &d.class_key(), 8, 42.0, Some(6000.0), 3);
+        let c = ProfiledCost::new(Arc::clone(&store));
+        assert_eq!(c.latency_ms(&m, &d, 8), 42.0);
+        assert_eq!(c.worker_mem_mb(&m, &d, 8), 6000.0);
+        // unprofiled batch outside the (single-point) range: analytic
+        assert_eq!(c.latency_ms(&m, &d, 64), m.predict_latency_ms(&d, 64));
+        // unprofiled model: analytic
+        let other = zoo::by_name("VGG19").unwrap();
+        assert_eq!(c.latency_ms(&other, &d, 8), other.predict_latency_ms(&d, 8));
+        // unprofiled device class: analytic
+        let cpu = DeviceSpec::host_cpu();
+        assert_eq!(c.latency_ms(&m, &cpu, 8), m.predict_latency_ms(&cpu, 8));
+    }
+
+    #[test]
+    fn profiled_interpolates_log_linearly_between_batches() {
+        let m = zoo::by_name("ResNet50").unwrap();
+        let d = gpu();
+        let store = Arc::new(ProfileStore::new());
+        store.record(&m.name, &d.class_key(), 8, 10.0, None, 3);
+        store.record(&m.name, &d.class_key(), 128, 80.0, None, 3);
+        let c = ProfiledCost::new(store);
+        let l8 = c.latency_ms(&m, &d, 8);
+        let l32 = c.latency_ms(&m, &d, 32);
+        let l128 = c.latency_ms(&m, &d, 128);
+        assert_eq!(l8, 10.0);
+        assert_eq!(l128, 80.0);
+        assert!(l8 < l32 && l32 < l128, "not monotone: {l8} {l32} {l128}");
+        // log-linear: at the geometric midpoint of batches (32 = sqrt(8·128))
+        // the latency is the geometric mean of the endpoints
+        let want = (10.0f64 * 80.0).sqrt();
+        assert!((l32 - want).abs() < 1e-9, "l32={l32} want={want}");
+    }
+
+    #[test]
+    fn digest_tracks_store_content() {
+        let store = Arc::new(ProfileStore::new());
+        let c = ProfiledCost::new(Arc::clone(&store));
+        let d0 = c.digest();
+        store.record("ResNet50", "gpu", 8, 10.0, None, 1);
+        let d1 = c.digest();
+        assert_ne!(d0, d1, "record must change the digest");
+        store.observe("ResNet50", "gpu", 8, 20.0, 1, 0.5);
+        assert_ne!(d1, c.digest(), "EWMA update must change the digest");
+        assert_ne!(c.digest(), AnalyticCost.digest());
+    }
+
+    #[test]
+    fn device_classes_share_profiles_across_indices() {
+        // all V100s of the HGX node share one class key; the CPU differs
+        let d = DeviceSet::hgx(4);
+        assert_eq!(d[0].class_key(), d[3].class_key());
+        assert_ne!(d[0].class_key(), d[4].class_key());
+    }
+}

@@ -1,0 +1,572 @@
+//! The profile store: measured (model, device-class, batch) cells.
+//!
+//! One cell is the measured latency (and optionally memory) of one
+//! predict call of `batch` images of `model` on one device *class* —
+//! profiling GPU0 of a homogeneous node covers every V100 sibling
+//! (cf. the per-device-class profiling of the companion workflow paper,
+//! arXiv 2208.14046). Cells come from two paths:
+//!
+//! * [`record`](ProfileStore::record) — authoritative offline samples
+//!   from the profiler (`benchkit::profile_ensemble`);
+//! * [`observe`](ProfileStore::observe) — online EWMA folds of the live
+//!   engine's observed batch latencies (see [`crate::cost::Calibrator`]).
+//!
+//! The store is shared (`Arc`) between a [`ProfiledCost`] scoring
+//! replans and the calibration loop mutating it; a version counter and
+//! content digest let cache fingerprints invalidate on any change.
+//!
+//! [`ProfiledCost`]: crate::cost::ProfiledCost
+
+use std::path::Path;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::RwLock;
+use std::time::{SystemTime, UNIX_EPOCH};
+
+use anyhow::Context;
+use std::collections::BTreeMap;
+
+use crate::util::hash::Fnv128;
+use crate::util::json::Json;
+
+/// Identity of one profiled cell.
+#[derive(Debug, Clone, PartialEq, Eq, PartialOrd, Ord)]
+pub struct ProfileKey {
+    pub model: String,
+    /// [`crate::device::DeviceSpec::class_key`] of the device.
+    pub device_class: String,
+    pub batch: u32,
+}
+
+/// Where a cell's current value came from.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ProfileSource {
+    /// Offline profiler measurement.
+    Offline,
+    /// Updated by the online calibration loop (EWMA over live batches).
+    Online,
+}
+
+impl ProfileSource {
+    pub fn name(&self) -> &'static str {
+        match self {
+            ProfileSource::Offline => "offline",
+            ProfileSource::Online => "online",
+        }
+    }
+}
+
+/// One measured cell.
+#[derive(Debug, Clone)]
+pub struct ProfileCell {
+    /// Measured latency of one predict call, ms (paper scale).
+    pub latency_ms: f64,
+    /// Measured worker footprint, MB (None: profiler could not measure
+    /// memory on this backend — the cost model falls back to analytic).
+    pub mem_mb: Option<f64>,
+    /// Observations folded into this cell.
+    pub samples: u64,
+    pub source: ProfileSource,
+    /// Unix seconds of the last update (staleness reporting).
+    pub updated_unix_s: u64,
+}
+
+/// Unix seconds now (0 on a pre-epoch clock) — the time base of cell
+/// staleness, shared with the `/v1/profiles` report.
+pub(crate) fn unix_now_s() -> u64 {
+    SystemTime::now()
+        .duration_since(UNIX_EPOCH)
+        .map(|d| d.as_secs())
+        .unwrap_or(0)
+}
+
+/// Outcome of [`ProfileStore::lookup_latency`] for one coordinate.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum LatencyLookup {
+    /// The exact cell is profiled.
+    Exact(f64),
+    /// `batch` falls strictly between two profiled batches.
+    Bracket { b0: u32, l0: f64, b1: u32, l1: f64 },
+    /// Nothing profiled at or around this coordinate.
+    Miss,
+}
+
+/// Analytic reference latency for a profiled cell's coordinates, when
+/// `ensemble` knows the model and `devices` has a device of the cell's
+/// class (positive values only) — the shared basis of the
+/// measured-vs-analytic delta reported by both the `profile` CLI table
+/// and `GET /v1/profiles`.
+pub fn analytic_latency_for(
+    ensemble: &crate::model::Ensemble,
+    devices: &crate::device::DeviceSet,
+    key: &ProfileKey,
+) -> Option<f64> {
+    let m = ensemble.members.iter().find(|m| m.name == key.model)?;
+    let d = devices.iter().find(|d| d.class_key() == key.device_class)?;
+    let l = m.predict_latency_ms(d, key.batch as usize);
+    (l > 0.0).then_some(l)
+}
+
+/// Thread-safe store of measured cost cells.
+#[derive(Debug, Default)]
+pub struct ProfileStore {
+    cells: RwLock<BTreeMap<(String, String, u32), ProfileCell>>,
+    /// Bumped on every mutation; cheap staleness signal for callers that
+    /// do not want to hash the content.
+    version: AtomicU64,
+}
+
+impl ProfileStore {
+    pub fn new() -> ProfileStore {
+        ProfileStore::default()
+    }
+
+    pub fn len(&self) -> usize {
+        self.cells.read().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Mutation counter (monotonic within this process).
+    pub fn version(&self) -> u64 {
+        self.version.load(Ordering::Relaxed)
+    }
+
+    /// Content digest over every cell — changes iff a lookup could
+    /// answer differently. Used as the [`CostModel::digest`]
+    /// contribution of [`ProfiledCost`].
+    ///
+    /// [`CostModel::digest`]: crate::cost::CostModel::digest
+    /// [`ProfiledCost`]: crate::cost::ProfiledCost
+    pub fn digest(&self) -> String {
+        let cells = self.cells.read().unwrap();
+        let mut h = Fnv128::new();
+        h.update(b"profile-store-v1\0");
+        for ((model, class, batch), c) in cells.iter() {
+            h.update_field(model.as_bytes());
+            h.update_field(class.as_bytes());
+            h.update(&batch.to_le_bytes());
+            h.update(&c.latency_ms.to_bits().to_le_bytes());
+            // presence tag, not a sentinel value: mem None and any
+            // numeric mem must never alias to the same digest
+            match c.mem_mb {
+                Some(m) => {
+                    h.update(&[1]);
+                    h.update(&m.to_bits().to_le_bytes());
+                }
+                None => h.update(&[0]),
+            }
+        }
+        h.hex()
+    }
+
+    /// Install an offline measurement, replacing any previous value of
+    /// the cell. Contract (asserted): `batch` positive — a batch-0 cell
+    /// would feed `ln 0` into the log-linear interpolation — and
+    /// latency/memory finite and positive, because a NaN score is
+    /// silently adopted by the greedy and a negative footprint makes
+    /// every allocation "fit".
+    pub fn record(&self, model: &str, device_class: &str, batch: u32, latency_ms: f64,
+                  mem_mb: Option<f64>, samples: u64) {
+        assert!(batch > 0, "profile cell batch must be positive");
+        assert!(latency_ms.is_finite() && latency_ms > 0.0,
+                "profile cell latency {latency_ms} must be finite and positive");
+        if let Some(m) = mem_mb {
+            assert!(m.is_finite() && m > 0.0,
+                    "profile cell mem {m} must be finite and positive");
+        }
+        let mut cells = self.cells.write().unwrap();
+        cells.insert(
+            (model.to_string(), device_class.to_string(), batch),
+            ProfileCell {
+                latency_ms,
+                mem_mb,
+                samples,
+                source: ProfileSource::Offline,
+                updated_unix_s: unix_now_s(),
+            },
+        );
+        drop(cells);
+        self.version.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Fold a live observation into the cell:
+    /// `latency ← (1 − α)·latency + α·observed` (a fresh cell takes the
+    /// observation as-is). `count` live batches back the observation
+    /// (its mean); they accumulate into `samples`.
+    pub fn observe(&self, model: &str, device_class: &str, batch: u32, observed_ms: f64,
+                   count: u64, alpha: f64) {
+        assert!((0.0..=1.0).contains(&alpha), "alpha {alpha} outside [0, 1]");
+        assert!(batch > 0, "profile cell batch must be positive");
+        assert!(observed_ms.is_finite() && observed_ms > 0.0,
+                "observed latency {observed_ms} must be finite and positive");
+        let mut cells = self.cells.write().unwrap();
+        let key = (model.to_string(), device_class.to_string(), batch);
+        match cells.get_mut(&key) {
+            Some(cell) => {
+                cell.latency_ms = (1.0 - alpha) * cell.latency_ms + alpha * observed_ms;
+                cell.samples += count;
+                cell.source = ProfileSource::Online;
+                cell.updated_unix_s = unix_now_s();
+            }
+            None => {
+                cells.insert(key, ProfileCell {
+                    latency_ms: observed_ms,
+                    mem_mb: None,
+                    samples: count,
+                    source: ProfileSource::Online,
+                    updated_unix_s: unix_now_s(),
+                });
+            }
+        }
+        drop(cells);
+        self.version.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// The cell, if profiled.
+    pub fn get(&self, model: &str, device_class: &str, batch: u32) -> Option<ProfileCell> {
+        self.cells
+            .read()
+            .unwrap()
+            .get(&(model.to_string(), device_class.to_string(), batch))
+            .cloned()
+    }
+
+    /// Resolve one latency coordinate in a single pass under the read
+    /// lock, without cloning cells — this is [`ProfiledCost`]'s hot
+    /// lookup, called per placement per candidate matrix during a
+    /// replan's greedy search.
+    ///
+    /// [`ProfiledCost`]: crate::cost::ProfiledCost
+    pub fn lookup_latency(&self, model: &str, device_class: &str, batch: u32)
+        -> LatencyLookup {
+        let cells = self.cells.read().unwrap();
+        let lo = (model.to_string(), device_class.to_string(), 0u32);
+        let hi = (model.to_string(), device_class.to_string(), u32::MAX);
+        let mut below: Option<(u32, f64)> = None;
+        for ((_, _, b), c) in cells.range(lo..=hi) {
+            if *b == batch {
+                return LatencyLookup::Exact(c.latency_ms);
+            }
+            if *b < batch {
+                below = Some((*b, c.latency_ms));
+            } else {
+                return match below {
+                    Some((b0, l0)) => {
+                        LatencyLookup::Bracket { b0, l0, b1: *b, l1: c.latency_ms }
+                    }
+                    None => LatencyLookup::Miss,
+                };
+            }
+        }
+        LatencyLookup::Miss
+    }
+
+    /// Every profiled batch of one (model, device-class), sorted by
+    /// batch — the interpolation support of [`ProfiledCost`].
+    ///
+    /// [`ProfiledCost`]: crate::cost::ProfiledCost
+    pub fn batches_for(&self, model: &str, device_class: &str) -> Vec<(u32, ProfileCell)> {
+        let cells = self.cells.read().unwrap();
+        cells
+            .range(
+                (model.to_string(), device_class.to_string(), 0)
+                    ..=(model.to_string(), device_class.to_string(), u32::MAX),
+            )
+            .map(|((_, _, b), c)| (*b, c.clone()))
+            .collect()
+    }
+
+    /// Every cell (key order), for reporting (`GET /v1/profiles`).
+    pub fn cells(&self) -> Vec<(ProfileKey, ProfileCell)> {
+        self.cells
+            .read()
+            .unwrap()
+            .iter()
+            .map(|((m, d, b), c)| {
+                (ProfileKey { model: m.clone(), device_class: d.clone(), batch: *b }, c.clone())
+            })
+            .collect()
+    }
+
+    /// Age of the *oldest* cell, seconds — the store-wide staleness
+    /// bound an operator cares about.
+    pub fn max_age_s(&self) -> Option<u64> {
+        let now = unix_now_s();
+        self.cells
+            .read()
+            .unwrap()
+            .values()
+            .map(|c| now.saturating_sub(c.updated_unix_s))
+            .max()
+    }
+
+    // -- persistence ------------------------------------------------------
+
+    pub fn to_json(&self) -> Json {
+        let rows: Vec<Json> = self
+            .cells()
+            .into_iter()
+            .map(|(k, c)| {
+                let mem = match c.mem_mb {
+                    Some(m) => Json::Num(m),
+                    None => Json::Null,
+                };
+                Json::from_pairs([
+                    ("model", Json::Str(k.model)),
+                    ("device_class", Json::Str(k.device_class)),
+                    ("batch", Json::Num(k.batch as f64)),
+                    ("latency_ms", Json::Num(c.latency_ms)),
+                    ("mem_mb", mem),
+                    ("samples", Json::Num(c.samples as f64)),
+                    ("source", Json::Str(c.source.name().to_string())),
+                    ("updated_unix_s", Json::Num(c.updated_unix_s as f64)),
+                ])
+            })
+            .collect();
+        Json::from_pairs([
+            ("format", Json::Str("ensemble-serve-profiles-v1".to_string())),
+            ("cells", Json::Arr(rows)),
+        ])
+    }
+
+    pub fn from_json(doc: &Json) -> anyhow::Result<ProfileStore> {
+        let format = doc.get("format").and_then(Json::as_str).unwrap_or("");
+        anyhow::ensure!(
+            format == "ensemble-serve-profiles-v1",
+            "unknown profile format '{format}'"
+        );
+        let rows = doc
+            .get("cells")
+            .and_then(Json::as_arr)
+            .context("profiles: missing cells array")?;
+        let store = ProfileStore::new();
+        {
+            let mut cells = store.cells.write().unwrap();
+            for row in rows {
+                let model = row.get("model").and_then(Json::as_str)
+                    .context("cell missing model")?;
+                let class = row.get("device_class").and_then(Json::as_str)
+                    .context("cell missing device_class")?;
+                let batch_raw = row.get("batch").and_then(Json::as_usize)
+                    .context("cell missing batch")?;
+                // batch 0 would put ln(0) into the interpolation (NaN
+                // scores silently adopted by the greedy); oversized
+                // values would truncate via `as u32`
+                anyhow::ensure!(
+                    (1..=u32::MAX as usize).contains(&batch_raw),
+                    "cell {model}/{class}: bad batch {batch_raw}"
+                );
+                let batch = batch_raw as u32;
+                let latency_ms = row.get("latency_ms").and_then(Json::as_f64)
+                    .context("cell missing latency_ms")?;
+                anyhow::ensure!(
+                    latency_ms.is_finite() && latency_ms > 0.0,
+                    "cell {model}/{class}/{batch}: bad latency {latency_ms}"
+                );
+                let mem_mb = row.get("mem_mb").and_then(Json::as_f64);
+                if let Some(m) = mem_mb {
+                    // a corrupt footprint would silently break every
+                    // fit_mem check downstream: negative memory makes
+                    // everything "fit", NaN makes nothing fit
+                    anyhow::ensure!(
+                        m.is_finite() && m > 0.0,
+                        "cell {model}/{class}/{batch}: bad mem_mb {m}"
+                    );
+                }
+                let samples = row.get("samples").and_then(Json::as_usize).unwrap_or(1) as u64;
+                let source = match row.get("source").and_then(Json::as_str) {
+                    Some("online") => ProfileSource::Online,
+                    _ => ProfileSource::Offline,
+                };
+                let updated = row
+                    .get("updated_unix_s")
+                    .and_then(Json::as_usize)
+                    .map(|v| v as u64)
+                    .unwrap_or_else(unix_now_s);
+                cells.insert(
+                    (model.to_string(), class.to_string(), batch),
+                    ProfileCell { latency_ms, mem_mb, samples, source,
+                                  updated_unix_s: updated },
+                );
+            }
+        }
+        store.version.fetch_add(1, Ordering::Relaxed);
+        Ok(store)
+    }
+
+    pub fn save(&self, path: impl AsRef<Path>) -> anyhow::Result<()> {
+        let path = path.as_ref();
+        if let Some(dir) = path.parent() {
+            if !dir.as_os_str().is_empty() {
+                std::fs::create_dir_all(dir)
+                    .with_context(|| format!("creating {}", dir.display()))?;
+            }
+        }
+        std::fs::write(path, self.to_json().to_string())
+            .with_context(|| format!("writing {}", path.display()))
+    }
+
+    pub fn load(path: impl AsRef<Path>) -> anyhow::Result<ProfileStore> {
+        let path = path.as_ref();
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let doc = Json::parse(&text)
+            .map_err(|e| anyhow::anyhow!("profiles {}: {e}", path.display()))?;
+        Self::from_json(&doc).with_context(|| format!("parsing {}", path.display()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn record_get_and_batches_sorted() {
+        let s = ProfileStore::new();
+        assert!(s.is_empty());
+        s.record("m", "gpu", 64, 40.0, Some(7000.0), 3);
+        s.record("m", "gpu", 8, 10.0, None, 3);
+        s.record("m", "cpu", 8, 99.0, None, 3);
+        s.record("other", "gpu", 8, 5.0, None, 3);
+        assert_eq!(s.len(), 4);
+        let b = s.batches_for("m", "gpu");
+        assert_eq!(b.iter().map(|(b, _)| *b).collect::<Vec<_>>(), vec![8, 64]);
+        assert_eq!(s.get("m", "gpu", 64).unwrap().mem_mb, Some(7000.0));
+        assert!(s.get("m", "gpu", 32).is_none());
+        assert!(s.get("nope", "gpu", 8).is_none());
+    }
+
+    #[test]
+    fn observe_ewma_folds_and_flips_source() {
+        let s = ProfileStore::new();
+        s.record("m", "gpu", 8, 100.0, None, 5);
+        assert_eq!(s.get("m", "gpu", 8).unwrap().source, ProfileSource::Offline);
+        s.observe("m", "gpu", 8, 200.0, 10, 0.25);
+        let c = s.get("m", "gpu", 8).unwrap();
+        assert!((c.latency_ms - 125.0).abs() < 1e-9, "{}", c.latency_ms);
+        assert_eq!(c.samples, 15);
+        assert_eq!(c.source, ProfileSource::Online);
+        // a fresh cell takes the observation as-is
+        s.observe("m", "gpu", 16, 50.0, 2, 0.25);
+        assert_eq!(s.get("m", "gpu", 16).unwrap().latency_ms, 50.0);
+    }
+
+    #[test]
+    fn version_and_digest_advance_on_every_mutation() {
+        let s = ProfileStore::new();
+        let (v0, d0) = (s.version(), s.digest());
+        s.record("m", "gpu", 8, 10.0, None, 1);
+        let (v1, d1) = (s.version(), s.digest());
+        assert!(v1 > v0);
+        assert_ne!(d1, d0);
+        s.observe("m", "gpu", 8, 12.0, 1, 0.5);
+        assert!(s.version() > v1);
+        assert_ne!(s.digest(), d1);
+        // read-only calls don't bump
+        let v = s.version();
+        let _ = s.batches_for("m", "gpu");
+        let _ = s.cells();
+        assert_eq!(s.version(), v);
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let s = ProfileStore::new();
+        s.record("ResNet50", "GPU-1750gf", 8, 31.5, Some(6100.0), 3);
+        s.observe("ResNet50", "GPU-1750gf", 64, 120.0, 7, 0.5);
+        let doc = s.to_json();
+        let back = ProfileStore::from_json(&doc).unwrap();
+        assert_eq!(back.len(), 2);
+        let c = back.get("ResNet50", "GPU-1750gf", 8).unwrap();
+        assert_eq!(c.latency_ms, 31.5);
+        assert_eq!(c.mem_mb, Some(6100.0));
+        assert_eq!(c.source, ProfileSource::Offline);
+        let c = back.get("ResNet50", "GPU-1750gf", 64).unwrap();
+        assert_eq!(c.source, ProfileSource::Online);
+        assert_eq!(c.mem_mb, None);
+        // the digest is content-addressed: identical cells, identical digest
+        assert_eq!(back.digest(), s.digest());
+    }
+
+    #[test]
+    fn save_load_file_and_rejects_garbage() {
+        let dir = std::env::temp_dir()
+            .join(format!("es-profile-test-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let path = dir.join("p.json");
+        let s = ProfileStore::new();
+        s.record("m", "gpu", 8, 10.0, None, 1);
+        s.save(&path).unwrap();
+        let back = ProfileStore::load(&path).unwrap();
+        assert_eq!(back.len(), 1);
+        std::fs::write(&path, "{\"format\":\"nope\"}").unwrap();
+        assert!(ProfileStore::load(&path).is_err());
+        std::fs::write(&path, "not json").unwrap();
+        assert!(ProfileStore::load(&path).is_err());
+        let bad = r#"{"format":"ensemble-serve-profiles-v1",
+                      "cells":[{"model":"m","device_class":"g","batch":8,
+                                "latency_ms":-1}]}"#;
+        std::fs::write(&path, bad).unwrap();
+        assert!(ProfileStore::load(&path).is_err(), "negative latency accepted");
+        let bad_mem = r#"{"format":"ensemble-serve-profiles-v1",
+                          "cells":[{"model":"m","device_class":"g","batch":8,
+                                    "latency_ms":5,"mem_mb":-4096}]}"#;
+        std::fs::write(&path, bad_mem).unwrap();
+        assert!(ProfileStore::load(&path).is_err(), "negative mem_mb accepted");
+        let bad_batch = r#"{"format":"ensemble-serve-profiles-v1",
+                            "cells":[{"model":"m","device_class":"g","batch":0,
+                                      "latency_ms":5}]}"#;
+        std::fs::write(&path, bad_batch).unwrap();
+        assert!(ProfileStore::load(&path).is_err(),
+                "batch 0 accepted (would NaN the interpolation)");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn lookup_latency_exact_bracket_miss() {
+        let s = ProfileStore::new();
+        s.record("m", "gpu", 8, 10.0, None, 1);
+        s.record("m", "gpu", 64, 40.0, None, 1);
+        assert_eq!(s.lookup_latency("m", "gpu", 8), LatencyLookup::Exact(10.0));
+        assert_eq!(
+            s.lookup_latency("m", "gpu", 16),
+            LatencyLookup::Bracket { b0: 8, l0: 10.0, b1: 64, l1: 40.0 }
+        );
+        assert_eq!(s.lookup_latency("m", "gpu", 4), LatencyLookup::Miss);
+        assert_eq!(s.lookup_latency("m", "gpu", 128), LatencyLookup::Miss);
+        assert_eq!(s.lookup_latency("m", "cpu", 8), LatencyLookup::Miss);
+        assert_eq!(s.lookup_latency("x", "gpu", 8), LatencyLookup::Miss);
+    }
+
+    #[test]
+    fn mem_presence_changes_the_digest() {
+        // Some(-1.0) could never load, but the digest must still not
+        // alias None with ANY numeric footprint
+        let a = ProfileStore::new();
+        a.record("m", "gpu", 8, 10.0, None, 1);
+        let b = ProfileStore::new();
+        b.record("m", "gpu", 8, 10.0, Some(4096.0), 1);
+        assert_ne!(a.digest(), b.digest());
+    }
+
+    #[test]
+    fn analytic_reference_resolves_known_cells_only() {
+        use crate::device::DeviceSet;
+        use crate::model::{ensemble, EnsembleId};
+        let e = ensemble(EnsembleId::Imn1);
+        let d = DeviceSet::hgx(1);
+        let known = ProfileKey {
+            model: e.members[0].name.clone(),
+            device_class: d[0].class_key(),
+            batch: 8,
+        };
+        let want = e.members[0].predict_latency_ms(&d[0], 8);
+        assert_eq!(analytic_latency_for(&e, &d, &known), Some(want));
+        let foreign_model = ProfileKey { model: "Nope".into(), ..known.clone() };
+        assert_eq!(analytic_latency_for(&e, &d, &foreign_model), None);
+        let foreign_class = ProfileKey { device_class: "T4-ish".into(), ..known };
+        assert_eq!(analytic_latency_for(&e, &d, &foreign_class), None);
+    }
+}

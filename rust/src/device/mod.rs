@@ -89,6 +89,20 @@ impl DeviceSpec {
     pub fn is_gpu(&self) -> bool {
         self.kind == DeviceKind::Gpu
     }
+
+    /// Performance-class key of the device — the profile-store
+    /// coordinate ([`crate::cost`]): devices with identical latency
+    /// parameters share measured profiles (profiling GPU0 of a
+    /// homogeneous node covers all its siblings). Deliberately excludes
+    /// the per-instance `name` and the `mem_mb` budget: planners hand
+    /// around specs with *shrunk* memory budgets (co-residency), and a
+    /// shrunk budget must not orphan the class's profiles.
+    pub fn class_key(&self) -> String {
+        format!(
+            "{}-{:.0}gf-{:.2}oh-{:.2}bh",
+            self.kind, self.eff_gflops, self.overhead_ms, self.batch_half
+        )
+    }
 }
 
 /// The device set handed to the allocation optimizer. Index order is the
@@ -182,6 +196,18 @@ mod tests {
         let thr128 = 1000.0 * 128.0 / g.predict_latency_ms(11.6, 128);
         assert!((90.0..125.0).contains(&thr8), "thr8={thr8}");
         assert!((130.0..175.0).contains(&thr128), "thr128={thr128}");
+    }
+
+    #[test]
+    fn class_key_ignores_index_and_budget() {
+        let a = DeviceSpec::v100(0);
+        let mut b = DeviceSpec::v100(7);
+        b.mem_mb = 9_000; // co-residency-shrunk budget
+        assert_eq!(a.class_key(), b.class_key());
+        assert_ne!(a.class_key(), DeviceSpec::host_cpu().class_key());
+        let mut t4ish = DeviceSpec::v100(0);
+        t4ish.eff_gflops = 800.0;
+        assert_ne!(a.class_key(), t4ish.class_key());
     }
 
     #[test]

@@ -194,10 +194,18 @@ fn predictor_loop(
         let rows = job.data.rows(job.lo, job.hi);
         let t0 = std::time::Instant::now();
         let result = instance.predict(rows, job.hi - job.lo);
-        metrics.record_device_busy(spec.device, t0.elapsed());
+        let elapsed = t0.elapsed();
+        metrics.record_device_busy(spec.device, elapsed);
         match result {
             Ok(preds) => {
                 metrics.batches_predicted.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                // online-calibration feed: what this batch actually cost
+                metrics.record_batch_latency(
+                    spec.model_idx,
+                    spec.device,
+                    (job.hi - job.lo) as u32,
+                    elapsed,
+                );
                 let out = PredBatch {
                     req: job.req,
                     seg: job.seg,

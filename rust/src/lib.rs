@@ -42,6 +42,21 @@
 //!
 //! ## Multi-tenant serving
 //!
+//! ## Measured cost model
+//!
+//! All of the above ranks candidate allocations by per-worker latency
+//! and memory estimates. The [`cost`] subsystem makes the estimate
+//! source explicit: a [`cost::CostModel`] trait with the zoo's analytic
+//! formulas as the behavior-preserving default ([`cost::AnalyticCost`])
+//! and a measured alternative ([`cost::ProfiledCost`]) backed by a
+//! [`cost::ProfileStore`] of per (model, device-class, batch) samples —
+//! filled offline by [`benchkit::profile_ensemble`] (the `profile` CLI
+//! subcommand) and *online* by [`cost::Calibrator`], which folds the
+//! engine's observed batch latencies back in (EWMA) on every controller
+//! tick, so replans score candidates with what the hardware actually
+//! did. The server reports measured-vs-analytic deltas and calibration
+//! staleness at `GET /v1/profiles`.
+//!
 //! Several ensembles can share one device set: a
 //! [`server::SystemRegistry`] of named deployed systems dispatched per
 //! request on the `x-ensemble` header, a joint planner
@@ -58,6 +73,7 @@ pub mod util;
 pub mod config;
 pub mod device;
 pub mod model;
+pub mod cost;
 pub mod alloc;
 pub mod exec;
 pub mod engine;

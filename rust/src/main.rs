@@ -8,13 +8,17 @@
 //! * `bench`    — benchmark one allocation (WFD default) on calibration
 //!   data and print the throughput.
 //! * `inspect`  — print an ensemble's members and their paper-scale stats.
+//! * `profile`  — measure every (model, device-class, batch) cell through
+//!   the executor and write a profile store (`--out`); `--profiles FILE`
+//!   then makes `optimize`/`bench`/`serve` plan on the measured costs.
 
 use std::sync::Arc;
 
 use ensemble_serve::alloc::cache::MatrixCache;
-use ensemble_serve::alloc::worst_fit_decreasing;
-use ensemble_serve::benchkit::{bench, BenchOptions};
+use ensemble_serve::alloc::worst_fit_decreasing_with;
+use ensemble_serve::benchkit::{bench, profile_ensemble, BenchOptions, ProfileOptions};
 use ensemble_serve::config::{Backend, ServerConfig};
+use ensemble_serve::cost::{Calibrator, CostModel, ProfileStore, ProfiledCost};
 use ensemble_serve::engine::InferenceSystem;
 use ensemble_serve::exec::fake::FakeExecutor;
 use ensemble_serve::exec::pjrt::PjrtExecutor;
@@ -45,6 +49,11 @@ sharing one device set; select per request via the x-ensemble header")
         .opt("seed", None, "greedy sampling seed")
         .opt("listen", None, "serve: bind address")
         .opt("p99-slo-ms", None, "serve: reconfig controller p99 objective (ms)")
+        .opt("profiles", None, "measured profile store (JSON): plan on profiled \
+costs; serve exposes /v1/profiles and calibrates online")
+        .opt("out", None, "profile: output path (default profiles.json)")
+        .opt("batches", None, "profile: comma-separated batch sizes (default 8,16,32,64,128)")
+        .opt("reps", None, "profile: measured predicts per cell (default 3)")
         .flag("reconfig", "serve: enable the live-reconfiguration controller")
         .flag("no-cache", "optimize: ignore the matrix cache")
         .flag("help", "print help")
@@ -62,7 +71,7 @@ fn main() {
         }
     };
     if args.has_flag("help") || args.positional.is_empty() {
-        println!("usage: ensemble-serve <optimize|serve|bench|inspect> [options]\n");
+        println!("usage: ensemble-serve <optimize|serve|bench|inspect|profile> [options]\n");
         println!("{}", cli.help_text());
         return;
     }
@@ -130,7 +139,31 @@ fn config_from(args: &ensemble_serve::util::cli::Args) -> anyhow::Result<ServerC
         anyhow::ensure!(v > 0.0, "p99-slo-ms must be positive");
         cfg.p99_slo_ms = v;
     }
+    if let Some(v) = args.get("profiles") {
+        cfg.profiles = Some(v.to_string());
+    }
     Ok(cfg)
+}
+
+/// Resolve the deployment's cost model: the profiled store when
+/// `--profiles` / config `profiles` names one, the analytic formulas
+/// otherwise.
+fn cost_model_from(cfg: &ServerConfig)
+    -> anyhow::Result<(Arc<dyn CostModel>, Option<Arc<ProfileStore>>)> {
+    match &cfg.profiles {
+        Some(path) => {
+            let store = Arc::new(ProfileStore::load(path)?);
+            log::info!("profiled cost model: {} cells from {path}", store.len());
+            Ok((Arc::new(ProfiledCost::new(Arc::clone(&store))), Some(store)))
+        }
+        None => Ok((ensemble_serve::cost::analytic(), None)),
+    }
+}
+
+/// Observed wall latencies reach the profile store at paper scale: the
+/// sim backend compresses time, real backends run 1:1.
+fn calibration_time_scale(cfg: &ServerConfig) -> f64 {
+    if cfg.backend == Backend::Sim { cfg.time_scale } else { 1.0 }
 }
 
 fn make_executor(cfg: &ServerConfig) -> anyhow::Result<Arc<dyn Executor>> {
@@ -179,13 +212,70 @@ fn run(args: &ensemble_serve::util::cli::Args) -> anyhow::Result<()> {
             }
             println!("devices: {} GPUs + 1 CPU", devices.gpu_count());
         }
+        "profile" => {
+            let batches: Vec<u32> = match args.get("batches") {
+                Some(list) => {
+                    let mut out = Vec::new();
+                    for tok in list.split(',').map(str::trim).filter(|s| !s.is_empty()) {
+                        let b = tok.parse::<u32>().map_err(|_| {
+                            anyhow::anyhow!("bad batch '{tok}' in --batches")
+                        })?;
+                        anyhow::ensure!(b > 0, "--batches values must be positive");
+                        out.push(b);
+                    }
+                    anyhow::ensure!(!out.is_empty(), "--batches needs at least one value");
+                    out
+                }
+                None => ensemble_serve::alloc::BATCH_VALUES.to_vec(),
+            };
+            let reps = args.get_usize("reps")?.unwrap_or(3).max(1);
+            let out_path = args.get("out").unwrap_or("profiles.json");
+            let popts = ProfileOptions {
+                batches,
+                reps,
+                time_scale: calibration_time_scale(&cfg),
+                ..ProfileOptions::default()
+            };
+            println!(
+                "profiling {} ({} members) on {} devices, batches {:?}, {reps} reps/cell",
+                ensemble.name, ensemble.len(), devices.len(), popts.batches
+            );
+            let store = profile_ensemble(&ensemble, make_executor(&cfg)?, &popts);
+            let mut t = ensemble_serve::benchkit::harness::Table::new(vec![
+                "model", "device class", "batch", "measured ms", "analytic ms", "delta %",
+            ]);
+            for (key, cell) in store.cells() {
+                let analytic =
+                    ensemble_serve::cost::analytic_latency_for(&ensemble, &devices, &key);
+                let (a_txt, d_txt) = match analytic {
+                    Some(a) => (
+                        format!("{a:.1}"),
+                        format!("{:+.1}", (cell.latency_ms - a) / a * 100.0),
+                    ),
+                    None => ("-".to_string(), "-".to_string()),
+                };
+                t.row(vec![
+                    key.model,
+                    key.device_class,
+                    key.batch.to_string(),
+                    format!("{:.1}", cell.latency_ms),
+                    a_txt,
+                    d_txt,
+                ]);
+            }
+            t.print();
+            store.save(out_path)?;
+            println!("{} cells -> {out_path}", store.len());
+        }
         "bench" => {
-            let a = worst_fit_decreasing(&ensemble, &devices, cfg.default_batch)?;
+            let (cost, _) = cost_model_from(&cfg)?;
+            let a = worst_fit_decreasing_with(&ensemble, &devices, cfg.default_batch, &*cost)?;
             println!("A1 (worst-fit-decreasing):\n{}", a.render(&device_names, &model_names));
             let s = bench(&a, &ensemble, make_executor(&cfg)?, &bench_options(&cfg));
             println!("throughput: {s:.0} img/s");
         }
         "optimize" => {
+            let (cost, _) = cost_model_from(&cfg)?;
             let ocfg = OptimizerConfig {
                 greedy: cfg.greedy.clone(),
                 bench: bench_options(&cfg),
@@ -194,6 +284,7 @@ fn run(args: &ensemble_serve::util::cli::Args) -> anyhow::Result<()> {
                 } else {
                     Some(MatrixCache::default_cache())
                 },
+                cost,
                 ..Default::default()
             };
             let out = optimize(&ensemble, &devices, &|| make_executor(&cfg).unwrap(), &ocfg)?;
@@ -221,8 +312,9 @@ fn run(args: &ensemble_serve::util::cli::Args) -> anyhow::Result<()> {
                 Some(&id) => ensemble_serve::model::ensemble(id),
                 None => ensemble,
             };
+            let (cost, profile_store) = cost_model_from(&cfg)?;
             let executor = make_executor(&cfg)?;
-            let a = worst_fit_decreasing(&ensemble, &devices, cfg.default_batch)?;
+            let a = worst_fit_decreasing_with(&ensemble, &devices, cfg.default_batch, &*cost)?;
             log::info!("deploying {} with {} workers", ensemble.name, a.worker_count());
             let system = Arc::new(InferenceSystem::build(
                 &a,
@@ -230,7 +322,12 @@ fn run(args: &ensemble_serve::util::cli::Args) -> anyhow::Result<()> {
                 executor,
                 cfg.engine_options(),
             )?);
-            let api = if cfg.reconfig {
+            let controller = if cfg.reconfig {
+                let calibration = profile_store.as_ref().map(|store| {
+                    Calibrator::new(Arc::clone(store))
+                        .with_alpha(cfg.calibration_alpha)
+                        .with_time_scale(calibration_time_scale(&cfg))
+                });
                 let opts = ReconfigOptions {
                     policy: PolicyConfig {
                         p99_slo_ms: cfg.p99_slo_ms,
@@ -238,28 +335,38 @@ fn run(args: &ensemble_serve::util::cli::Args) -> anyhow::Result<()> {
                     },
                     planner: PlannerConfig {
                         default_batch: cfg.default_batch,
+                        cost: Arc::clone(&cost),
                         ..PlannerConfig::default()
                     },
+                    calibration,
                     ..ReconfigOptions::default()
                 };
                 let controller = ReconfigController::start(Arc::clone(&system), opts);
-                log::info!("reconfiguration controller running (p99 SLO {} ms)",
-                           cfg.p99_slo_ms);
-                ApiServer::start_with_controller(system, &cfg.listen, cfg.http_threads,
-                                                 controller)?
+                log::info!(
+                    "reconfiguration controller running (p99 SLO {} ms, {} costs{})",
+                    cfg.p99_slo_ms,
+                    cost.name(),
+                    if profile_store.is_some() { ", online calibration" } else { "" },
+                );
+                Some(controller)
             } else {
-                ApiServer::start(system, &cfg.listen, cfg.http_threads)?
+                None
             };
+            let api = ApiServer::start_single(system, &cfg.listen, cfg.http_threads,
+                                              controller, profile_store.clone())?;
             println!("serving {} on http://{}", ensemble.name, api.addr());
             println!("  POST /v1/predict   GET /v1/health  /v1/stats  /v1/metrics  /v1/matrix");
             if cfg.reconfig {
                 println!("  POST /v1/reconfigure   GET /v1/reconfig/status");
             }
+            if profile_store.is_some() {
+                println!("  GET /v1/profiles");
+            }
             loop {
                 std::thread::sleep(std::time::Duration::from_secs(3600));
             }
         }
-        other => anyhow::bail!("unknown command '{other}' (optimize|serve|bench|inspect)"),
+        other => anyhow::bail!("unknown command '{other}' (optimize|serve|bench|inspect|profile)"),
     }
     Ok(())
 }
@@ -271,6 +378,7 @@ fn run(args: &ensemble_serve::util::cli::Args) -> anyhow::Result<()> {
 /// controller re-planning all tenants jointly.
 fn serve_multi_tenant(cfg: &ServerConfig) -> anyhow::Result<()> {
     let devices = cfg.devices();
+    let (cost, profile_store) = cost_model_from(cfg)?;
     let executor = make_executor(cfg)?;
     let specs: Vec<TenantSpec> = cfg
         .ensembles
@@ -280,6 +388,7 @@ fn serve_multi_tenant(cfg: &ServerConfig) -> anyhow::Result<()> {
     let planner = PlannerConfig {
         default_batch: cfg.default_batch,
         greedy: cfg.greedy.clone(),
+        cost: Arc::clone(&cost),
     };
     let plan = plan_joint(&specs, &devices, &[], &[], &planner)?;
 
@@ -302,6 +411,11 @@ fn serve_multi_tenant(cfg: &ServerConfig) -> anyhow::Result<()> {
     }
 
     let controller = if cfg.reconfig {
+        let calibration = profile_store.as_ref().map(|store| {
+            Calibrator::new(Arc::clone(store))
+                .with_alpha(cfg.calibration_alpha)
+                .with_time_scale(calibration_time_scale(cfg))
+        });
         let opts = MultiTenantOptions {
             policy: PolicyConfig { p99_slo_ms: cfg.p99_slo_ms, ..PolicyConfig::default() },
             // deliberately NOT cfg.greedy: runtime replans use the
@@ -310,14 +424,17 @@ fn serve_multi_tenant(cfg: &ServerConfig) -> anyhow::Result<()> {
             // offline knobs only shape the startup plan above
             planner: PlannerConfig {
                 default_batch: cfg.default_batch,
+                cost: Arc::clone(&cost),
                 ..PlannerConfig::default()
             },
+            calibration,
             ..MultiTenantOptions::default()
         };
         let ctrl = MultiTenantController::start(tenants, opts)?;
         log::info!(
-            "multi-tenant arbitration controller running (p99 SLO {} ms)",
-            cfg.p99_slo_ms
+            "multi-tenant arbitration controller running (p99 SLO {} ms, {} costs)",
+            cfg.p99_slo_ms,
+            cost.name(),
         );
         Some(ctrl)
     } else {
@@ -326,12 +443,15 @@ fn serve_multi_tenant(cfg: &ServerConfig) -> anyhow::Result<()> {
 
     let names = registry.names().join(", ");
     let api = ApiServer::start_registry(registry, &cfg.listen, cfg.http_threads, None,
-                                        controller)?;
+                                        controller, profile_store.clone())?;
     println!("serving tenants [{names}] on http://{}", api.addr());
     println!("  POST /v1/predict (x-ensemble: <name>)   GET /v1/ensembles");
     println!("  GET /v1/health  /v1/stats  /v1/metrics  /v1/matrix");
     if cfg.reconfig {
         println!("  POST /v1/reconfigure   GET /v1/reconfig/status");
+    }
+    if profile_store.is_some() {
+        println!("  GET /v1/profiles");
     }
     loop {
         std::thread::sleep(std::time::Duration::from_secs(3600));

@@ -4,8 +4,26 @@
 //! [`crate::reconfig`] load monitor (which diffs histogram snapshots to
 //! compute sliding-window rates and quantiles).
 
+use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
 use std::time::Duration;
+
+/// One drained per-(model, device, batch) latency aggregate — the raw
+/// material of online cost calibration ([`crate::cost::Calibrator`]).
+/// `model` is the allocation-matrix column, `device` the matrix row,
+/// `batch` the actual row count of the timed predict calls (a
+/// trailing partial chunk aggregates under its own batch value).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct BatchObservation {
+    pub model: usize,
+    pub device: usize,
+    pub batch: u32,
+    /// Summed predict wall time of the aggregated calls, µs.
+    pub total_us: u64,
+    /// Number of predict calls aggregated.
+    pub count: u64,
+}
 
 /// Engine-wide counters. All monotonically increasing and shared across
 /// worker-pool generations (a live swap must not reset observability).
@@ -28,6 +46,12 @@ pub struct EngineMetrics {
     /// Cumulative busy time per device index, µs (predict-call wall time
     /// recorded by each worker's predictor thread).
     device_busy_us: Vec<AtomicU64>,
+    /// Per-(model, device, batch) latency aggregates since the last
+    /// drain — the online-calibration feed. Keyed by matrix
+    /// coordinates so the hot path allocates nothing; the calibrator
+    /// resolves names. The predictor takes this mutex once per batch
+    /// (milliseconds of compute), so contention is negligible.
+    batch_obs: Mutex<BTreeMap<(usize, usize, u32), (u64, u64)>>,
 }
 
 impl EngineMetrics {
@@ -65,6 +89,31 @@ impl EngineMetrics {
     /// Cumulative per-device busy time in µs.
     pub fn device_busy_us(&self) -> Vec<u64> {
         self.device_busy_us.iter().map(|g| g.load(Ordering::Relaxed)).collect()
+    }
+
+    /// Aggregate one timed predict call into the calibration feed.
+    pub fn record_batch_latency(&self, model: usize, device: usize, batch: u32,
+                                elapsed: Duration) {
+        let mut obs = self.batch_obs.lock().unwrap();
+        let slot = obs.entry((model, device, batch)).or_insert((0, 0));
+        slot.0 += elapsed.as_micros() as u64;
+        slot.1 += 1;
+    }
+
+    /// Take (and clear) every batch-latency aggregate recorded since
+    /// the last drain. The calibrator calls this once per control tick.
+    pub fn drain_batch_observations(&self) -> Vec<BatchObservation> {
+        let drained = std::mem::take(&mut *self.batch_obs.lock().unwrap());
+        drained
+            .into_iter()
+            .map(|((model, device, batch), (total_us, count))| BatchObservation {
+                model,
+                device,
+                batch,
+                total_us,
+                count,
+            })
+            .collect()
     }
 
     pub fn device_count(&self) -> usize {
@@ -223,6 +272,23 @@ mod tests {
         assert!(p50 >= 64.0 && p50 <= 140.0, "p50={p50}");
         // the cumulative histogram is still dominated by the 1 ms records
         assert!(h.quantile_ms(0.5) <= 2.1);
+    }
+
+    #[test]
+    fn batch_observations_aggregate_and_drain() {
+        let m = EngineMetrics::with_devices(2);
+        m.record_batch_latency(0, 1, 8, Duration::from_micros(300));
+        m.record_batch_latency(0, 1, 8, Duration::from_micros(500));
+        m.record_batch_latency(2, 0, 64, Duration::from_micros(1000));
+        let mut obs = m.drain_batch_observations();
+        obs.sort_by_key(|o| (o.model, o.device, o.batch));
+        assert_eq!(obs.len(), 2);
+        assert_eq!(obs[0], BatchObservation { model: 0, device: 1, batch: 8,
+                                              total_us: 800, count: 2 });
+        assert_eq!(obs[1], BatchObservation { model: 2, device: 0, batch: 64,
+                                              total_us: 1000, count: 1 });
+        // drained: the buffer restarts empty
+        assert!(m.drain_batch_observations().is_empty());
     }
 
     #[test]

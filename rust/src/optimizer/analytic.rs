@@ -1,4 +1,4 @@
-//! Closed-form throughput estimator — the fast `bench` alternative.
+//! Closed-form throughput estimator over a pluggable cost model.
 //!
 //! The ensemble's steady-state throughput is the largest rate T (img/s)
 //! such that every model can predict T img/s through its data-parallel
@@ -7,11 +7,20 @@
 //! load-balancing feasibility check (exact when models don't share
 //! devices, a tight approximation under co-location).
 //!
-//! Used for large parameter sweeps and as a cross-check of the
-//! engine-in-the-loop bench (see `benches/ablation_neighbors.rs`).
+//! Per-worker costs come from a [`CostModel`]: the historical
+//! entry points ([`estimate_throughput`],
+//! [`estimate_weighted_throughput`]) evaluate the analytic zoo
+//! formulas bit-for-bit as before; the `_with` forms take the caller's
+//! model — the online planner and multi-tenant arbiter pass their
+//! (possibly measured/calibrated) [`crate::cost::ProfiledCost`].
+//!
+//! Used for large parameter sweeps, as the online replan objective, and
+//! as a cross-check of the engine-in-the-loop bench (see
+//! `benches/ablation_neighbors.rs`).
 
 use crate::alloc::matrix::AllocationMatrix;
-use crate::alloc::memory::fit_mem;
+use crate::alloc::memory::fit_mem_with;
+use crate::cost::{AnalyticCost, CostModel};
 use crate::device::DeviceSet;
 use crate::model::Ensemble;
 
@@ -23,20 +32,31 @@ fn per_image_cost(
     model: usize,
     device: usize,
     batch: u32,
+    cost: &dyn CostModel,
 ) -> f64 {
-    let lat_ms = ensemble.members[model].predict_latency_ms(&devices[device], batch as usize);
+    let lat_ms = cost.latency_ms(&ensemble.members[model], &devices[device], batch as usize);
     lat_ms / 1000.0 / batch as f64
 }
 
 /// Estimated ensemble throughput (img/s) of an allocation matrix; 0.0 when
 /// the matrix is invalid or memory-infeasible (same contract as
-/// `benchkit::bench`).
+/// `benchkit::bench`). Analytic costs.
 pub fn estimate_throughput(
     a: &AllocationMatrix,
     ensemble: &Ensemble,
     devices: &DeviceSet,
 ) -> f64 {
-    estimate_weighted_throughput(a, ensemble, devices, &vec![1.0; a.n_models()])
+    estimate_throughput_with(a, ensemble, devices, &AnalyticCost)
+}
+
+/// [`estimate_throughput`] under an explicit cost model.
+pub fn estimate_throughput_with(
+    a: &AllocationMatrix,
+    ensemble: &Ensemble,
+    devices: &DeviceSet,
+    cost: &dyn CostModel,
+) -> f64 {
+    estimate_weighted_throughput_with(a, ensemble, devices, &vec![1.0; a.n_models()], cost)
 }
 
 /// Weighted generalization for multi-tenant joint matrices: column `m`
@@ -54,8 +74,20 @@ pub fn estimate_weighted_throughput(
     devices: &DeviceSet,
     demand: &[f64],
 ) -> f64 {
+    estimate_weighted_throughput_with(a, ensemble, devices, demand, &AnalyticCost)
+}
+
+/// [`estimate_weighted_throughput`] under an explicit cost model (both
+/// the memory-feasibility gate and the per-image costs use it).
+pub fn estimate_weighted_throughput_with(
+    a: &AllocationMatrix,
+    ensemble: &Ensemble,
+    devices: &DeviceSet,
+    demand: &[f64],
+    cost: &dyn CostModel,
+) -> f64 {
     assert_eq!(demand.len(), a.n_models(), "demand/matrix shape");
-    if !a.all_models_placed() || !fit_mem(a, ensemble, devices) {
+    if !a.all_models_placed() || !fit_mem_with(a, ensemble, devices, cost) {
         return 0.0;
     }
     if demand.iter().any(|&w| !(w > 0.0) || !w.is_finite()) {
@@ -66,7 +98,10 @@ pub fn estimate_weighted_throughput(
     let workers: Vec<(usize, usize, f64)> = a
         .placements()
         .iter()
-        .map(|p| (p.model, p.device, per_image_cost(ensemble, devices, p.model, p.device, p.batch)))
+        .map(|p| {
+            (p.model, p.device,
+             per_image_cost(ensemble, devices, p.model, p.device, p.batch, cost))
+        })
         .collect();
 
     // upper bound: every device fully devoted to the cheapest worker
@@ -301,6 +336,44 @@ mod tests {
         assert_eq!(estimate_weighted_throughput(&a, &e, &d, &[0.0]), 0.0);
         assert_eq!(estimate_weighted_throughput(&a, &e, &d, &[-1.0]), 0.0);
         assert_eq!(estimate_weighted_throughput(&a, &e, &d, &[f64::NAN]), 0.0);
+    }
+
+    #[test]
+    fn analytic_cost_variant_is_identical() {
+        let e = ensemble(EnsembleId::Imn4);
+        let d = DeviceSet::hgx(4);
+        let mut a = AllocationMatrix::zeroed(d.len(), e.len());
+        for m in 0..4 {
+            a.set(m, m, 8 + 8 * m as u32);
+        }
+        assert_eq!(
+            estimate_throughput(&a, &e, &d),
+            estimate_throughput_with(&a, &e, &d, &AnalyticCost)
+        );
+        let w = [2.0, 1.0, 1.0, 0.5];
+        assert_eq!(
+            estimate_weighted_throughput(&a, &e, &d, &w),
+            estimate_weighted_throughput_with(&a, &e, &d, &w, &AnalyticCost)
+        );
+    }
+
+    #[test]
+    fn measured_latencies_move_the_estimate() {
+        use crate::cost::{ProfileStore, ProfiledCost};
+        use std::sync::Arc;
+        let e = ensemble(EnsembleId::Imn1);
+        let d = DeviceSet::hgx(1);
+        let mut a = AllocationMatrix::zeroed(d.len(), e.len());
+        a.set(0, 0, 8);
+        let analytic = estimate_throughput(&a, &e, &d);
+        // measured: the device does a batch of 8 in 16 ms (analytic ~75 ms)
+        let store = Arc::new(ProfileStore::new());
+        store.record(&e.members[0].name, &d[0].class_key(), 8, 16.0, None, 3);
+        let profiled = ProfiledCost::new(store);
+        let measured = estimate_throughput_with(&a, &e, &d, &profiled);
+        let want = 8.0 / 0.016;
+        assert!((measured - want).abs() / want < 0.02, "measured={measured} want={want}");
+        assert!(measured > analytic * 2.0, "measured={measured} analytic={analytic}");
     }
 
     #[test]

@@ -2,9 +2,26 @@
 //! (worst-fit-decreasing) to *fit*, then Algorithm 2 (bounded greedy) to
 //! *speed up*, with the best-matrix cache in front.
 //!
-//! [`analytic`] provides a fast closed-form throughput estimator used as
-//! an alternative `bench` for large sweeps (and compared against the real
-//! engine in the `ablation_neighbors` bench).
+//! Every stage runs on the cost-model substrate ([`crate::cost`]):
+//! [`OptimizerConfig::cost`] supplies the per-worker latency/memory
+//! estimates that Algorithm 1 packs with and that the cache fingerprint
+//! folds in (calibration invalidates cached matrices). The default is
+//! [`AnalyticCost`](crate::cost::AnalyticCost) — the zoo formulas,
+//! bit-for-bit the pre-cost-model behavior; pass a
+//! [`ProfiledCost`](crate::cost::ProfiledCost) to plan on measured
+//! profiles instead.
+//!
+//! Two scoring paths feed Algorithm 2:
+//!
+//! * [`optimize`] — the engine-in-the-loop benchmark (`benchkit::bench`
+//!   over a real executor), the paper's Benchmark Mode; the configured
+//!   cost model shapes only the A1 packing and the cache key here, the
+//!   scores themselves are measured end to end;
+//! * [`optimize_with`] — any closed-form bench function, typically
+//!   [`analytic::estimate_throughput_with`] partially applied to a cost
+//!   model. This is what the online replanner
+//!   ([`crate::reconfig::planner`]) and the large offline sweeps use —
+//!   milliseconds per evaluation instead of an engine build.
 
 pub mod analytic;
 
@@ -13,8 +30,9 @@ use std::sync::Arc;
 use crate::alloc::cache::{cache_fingerprint, MatrixCache};
 use crate::alloc::greedy::{bounded_greedy, GreedyConfig, GreedyReport};
 use crate::alloc::matrix::AllocationMatrix;
-use crate::alloc::worstfit::worst_fit_decreasing;
+use crate::alloc::worstfit::worst_fit_decreasing_with;
 use crate::benchkit::{bench, BenchOptions};
+use crate::cost::CostModel;
 use crate::device::DeviceSet;
 use crate::exec::Executor;
 use crate::model::Ensemble;
@@ -28,6 +46,9 @@ pub struct OptimizerConfig {
     pub bench: BenchOptions,
     /// Consult/update the persistent matrix cache.
     pub cache: Option<MatrixCache>,
+    /// Cost substrate for Algorithm 1's packing and the cache
+    /// fingerprint (default: the analytic zoo formulas).
+    pub cost: Arc<dyn CostModel>,
 }
 
 impl Default for OptimizerConfig {
@@ -37,6 +58,7 @@ impl Default for OptimizerConfig {
             default_batch: crate::alloc::DEFAULT_BATCH,
             bench: BenchOptions::default(),
             cache: None,
+            cost: crate::cost::analytic(),
         }
     }
 }
@@ -77,14 +99,14 @@ pub fn optimize_with(
     mut bench_fn: impl FnMut(&AllocationMatrix) -> f64,
 ) -> anyhow::Result<Optimized> {
     // Algorithm 1
-    let a1 = worst_fit_decreasing(ensemble, devices, cfg.default_batch)?;
+    let a1 = worst_fit_decreasing_with(ensemble, devices, cfg.default_batch, &*cfg.cost)?;
     let a1_speed = bench_fn(&a1);
 
     // cache?
     let key = cfg
         .cache
         .as_ref()
-        .map(|_| cache_fingerprint(ensemble, devices, &cfg.greedy));
+        .map(|_| cache_fingerprint(ensemble, devices, &cfg.greedy, &*cfg.cost));
     if let (Some(cache), Some(key)) = (&cfg.cache, &key) {
         if let Some((a2, a2_speed)) = cache.get(key) {
             if a2.n_devices() == devices.len() && a2.n_models() == ensemble.len() {

@@ -40,6 +40,13 @@ pub struct ReconfigOptions {
     pub failure_backoff: Duration,
     pub policy: PolicyConfig,
     pub planner: PlannerConfig,
+    /// Online cost calibration: every tick drains the engine's observed
+    /// batch latencies and EWMA-folds them into this calibrator's
+    /// profile store. Point `planner.cost` at a
+    /// [`ProfiledCost`](crate::cost::ProfiledCost) over the same store
+    /// and replans score candidates with what the hardware actually
+    /// did. `None` (default): no calibration.
+    pub calibration: Option<crate::cost::Calibrator>,
 }
 
 impl Default for ReconfigOptions {
@@ -50,6 +57,7 @@ impl Default for ReconfigOptions {
             failure_backoff: Duration::from_secs(2),
             policy: PolicyConfig::default(),
             planner: PlannerConfig::default(),
+            calibration: None,
         }
     }
 }
@@ -220,6 +228,15 @@ impl ReconfigController {
         // reclaim drain-timed-out generations whose stuck caller has
         // since finished (frees their threads + device memory)
         self.system.sweep_lingering();
+        // fold the window's observed batch latencies into the profile
+        // store BEFORE any replan this tick: a decision made now scores
+        // with everything observed up to now
+        if let Some(cal) = &self.opts.calibration {
+            let obs = self.system.metrics().drain_batch_observations();
+            if !obs.is_empty() {
+                cal.fold(self.system.ensemble(), self.system.devices(), &obs);
+            }
+        }
         self.monitor.sample();
         let active = self.system.matrix();
         let snapshot = self.normalized_snapshot();
@@ -327,7 +344,7 @@ impl ReconfigController {
             return Ok(None);
         }
         if !force {
-            let base = planner::score(&active, ensemble, devices);
+            let base = planner::score(&active, ensemble, devices, &*self.opts.planner.cost);
             let gain = if base > 0.0 { plan.predicted_img_s / base } else { f64::INFINITY };
             if gain < self.opts.policy.min_predicted_gain {
                 self.state.lock().unwrap().last_decision = format!(
@@ -484,6 +501,7 @@ mod tests {
                 },
                 ..PlannerConfig::default()
             },
+            ..ReconfigOptions::default()
         }
     }
 

@@ -17,15 +17,20 @@
 //! planning; the returned matrix is then guaranteed buildable without
 //! draining first.
 
+use std::sync::Arc;
+
 use anyhow::{bail, ensure};
 
 use crate::alloc::greedy::{bounded_greedy, GreedyConfig};
 use crate::alloc::matrix::AllocationMatrix;
-use crate::alloc::memory::device_usage_mb;
-use crate::alloc::worstfit::worst_fit_decreasing;
+use crate::alloc::memory::device_usage_mb_with;
+use crate::alloc::worstfit::worst_fit_decreasing_with;
+use crate::cost::CostModel;
 use crate::device::DeviceSet;
 use crate::model::Ensemble;
-use crate::optimizer::analytic::{estimate_throughput, estimate_weighted_throughput};
+use crate::optimizer::analytic::{
+    estimate_throughput_with, estimate_weighted_throughput_with,
+};
 
 /// Online planning knobs.
 #[derive(Debug, Clone)]
@@ -34,6 +39,12 @@ pub struct PlannerConfig {
     pub default_batch: u32,
     /// Algorithm 2 budget (smaller than the offline §III defaults).
     pub greedy: GreedyConfig,
+    /// Cost substrate every planning step scores with: packing,
+    /// co-residency budgeting and the analytic objective. Default: the
+    /// analytic zoo formulas; the controllers pass a
+    /// [`ProfiledCost`](crate::cost::ProfiledCost) here to replan on
+    /// measured (and online-calibrated) costs.
+    pub cost: Arc<dyn CostModel>,
 }
 
 impl Default for PlannerConfig {
@@ -41,6 +52,7 @@ impl Default for PlannerConfig {
         PlannerConfig {
             default_batch: crate::alloc::DEFAULT_BATCH,
             greedy: GreedyConfig { max_iter: 6, max_neighs: 32, ..GreedyConfig::default() },
+            cost: crate::cost::analytic(),
         }
     }
 }
@@ -75,20 +87,25 @@ pub fn plan(
         (0..devices.len()).filter(|d| !failed.contains(d)).collect();
     ensure!(!survivors.is_empty(), "all {} devices marked failed", devices.len());
 
+    let cost = &*cfg.cost;
     let sub = DeviceSet::new(
         survivors
             .iter()
             .map(|&d| {
                 let mut spec = devices[d].clone();
-                let used: f64 =
-                    resident.iter().map(|r| device_usage_mb(r, ensemble, d)).sum();
+                let used: f64 = resident
+                    .iter()
+                    .map(|r| device_usage_mb_with(r, ensemble, devices, d, cost))
+                    .sum();
                 spec.mem_mb = spec.mem_mb.saturating_sub(used.ceil() as u64);
                 spec
             })
             .collect(),
     );
-    let a1 = worst_fit_decreasing(ensemble, &sub, cfg.default_batch)?;
-    let report = bounded_greedy(&a1, &cfg.greedy, |m| estimate_throughput(m, ensemble, &sub));
+    let a1 = worst_fit_decreasing_with(ensemble, &sub, cfg.default_batch, cost)?;
+    let report = bounded_greedy(&a1, &cfg.greedy, |m| {
+        estimate_throughput_with(m, ensemble, &sub, cost)
+    });
 
     // expand the survivor-row matrix back to full device indexing
     let mut matrix = AllocationMatrix::zeroed(devices.len(), ensemble.len());
@@ -100,10 +117,15 @@ pub fn plan(
     Ok(Plan { matrix, predicted_img_s: report.best_speed, survivors })
 }
 
-/// Analytic score of an existing full-indexed matrix (the controller's
-/// hysteresis baseline).
-pub fn score(matrix: &AllocationMatrix, ensemble: &Ensemble, devices: &DeviceSet) -> f64 {
-    estimate_throughput(matrix, ensemble, devices)
+/// Closed-form score of an existing full-indexed matrix under `cost`
+/// (the controller's hysteresis baseline).
+pub fn score(
+    matrix: &AllocationMatrix,
+    ensemble: &Ensemble,
+    devices: &DeviceSet,
+    cost: &dyn CostModel,
+) -> f64 {
+    estimate_throughput_with(matrix, ensemble, devices, cost)
 }
 
 // ---------------------------------------------------------------------------
@@ -172,15 +194,17 @@ fn combined_ensemble(tenants: &[TenantSpec]) -> Ensemble {
 fn tenant_total_mb(
     a: &AllocationMatrix,
     combined: &Ensemble,
+    devices: &DeviceSet,
     offsets: &[usize],
     ti: usize,
+    cost: &dyn CostModel,
 ) -> f64 {
     let mut sum = 0.0;
     for d in 0..a.n_devices() {
         for m in offsets[ti]..offsets[ti + 1] {
             let b = a.get(d, m);
             if b != 0 {
-                sum += combined.members[m].worker_mem_mb(b as usize);
+                sum += cost.worker_mem_mb(&combined.members[m], &devices[d], b as usize);
             }
         }
     }
@@ -206,19 +230,20 @@ fn stack_matrices(
     joint
 }
 
-/// Analytic joint score (`T` of the weighted max-min objective) of the
-/// tenants' *current* matrices — the multi-tenant controller's
-/// hysteresis baseline.
+/// Closed-form joint score (`T` of the weighted max-min objective) of
+/// the tenants' *current* matrices under `cost` — the multi-tenant
+/// controller's hysteresis baseline.
 pub fn score_joint(
     tenants: &[TenantSpec],
     matrices: &[AllocationMatrix],
     devices: &DeviceSet,
+    cost: &dyn CostModel,
 ) -> f64 {
     assert_eq!(tenants.len(), matrices.len(), "tenant/matrix count");
     let combined = combined_ensemble(tenants);
     let joint = stack_matrices(tenants, matrices, devices.len());
     let demand = demand_vector(tenants);
-    estimate_weighted_throughput(&joint, &combined, devices, &demand)
+    estimate_weighted_throughput_with(&joint, &combined, devices, &demand, cost)
 }
 
 fn demand_vector(tenants: &[TenantSpec]) -> Vec<f64> {
@@ -263,6 +288,7 @@ pub fn plan_joint(
         (0..devices.len()).filter(|d| !failed.contains(d)).collect();
     ensure!(!survivors.is_empty(), "all {} devices marked failed", devices.len());
 
+    let cost = &*cfg.cost;
     let combined = combined_ensemble(tenants);
     let offsets = column_offsets(tenants);
     let demand = demand_vector(tenants);
@@ -274,7 +300,7 @@ pub fn plan_joint(
                 let mut spec = devices[d].clone();
                 let used: f64 = resident
                     .iter()
-                    .map(|(e, r)| device_usage_mb(r, e, d))
+                    .map(|(e, r)| device_usage_mb_with(r, e, devices, d, cost))
                     .sum();
                 spec.mem_mb = spec.mem_mb.saturating_sub(used.ceil() as u64);
                 spec
@@ -282,12 +308,12 @@ pub fn plan_joint(
             .collect(),
     );
 
-    let a1 = worst_fit_decreasing(&combined, &sub, cfg.default_batch)?;
+    let a1 = worst_fit_decreasing_with(&combined, &sub, cfg.default_batch, cost)?;
     // the min-batch packing is each tenant's smallest possible
     // footprint: a budget below it can never be met
     for (ti, t) in tenants.iter().enumerate() {
         if let Some(budget) = t.mem_budget_mb {
-            let used = tenant_total_mb(&a1, &combined, &offsets, ti);
+            let used = tenant_total_mb(&a1, &combined, &sub, &offsets, ti, cost);
             if used > budget {
                 bail!(
                     "tenant '{}': minimum footprint {used:.0} MB exceeds its {budget:.0} MB budget",
@@ -299,15 +325,16 @@ pub fn plan_joint(
 
     let over_budget = |m: &AllocationMatrix| {
         tenants.iter().enumerate().any(|(ti, t)| {
-            t.mem_budget_mb
-                .is_some_and(|budget| tenant_total_mb(m, &combined, &offsets, ti) > budget)
+            t.mem_budget_mb.is_some_and(|budget| {
+                tenant_total_mb(m, &combined, &sub, &offsets, ti, cost) > budget
+            })
         })
     };
     let report = bounded_greedy(&a1, &cfg.greedy, |m| {
         if over_budget(m) {
             0.0
         } else {
-            estimate_weighted_throughput(m, &combined, &sub, &demand)
+            estimate_weighted_throughput_with(m, &combined, &sub, &demand, cost)
         }
     });
 
@@ -348,7 +375,7 @@ mod tests {
         assert!(p.predicted_img_s > 0.0);
         assert_eq!(p.survivors, vec![0, 1, 2, 3, 4]);
         // deployable score matches the sub-set score
-        let full_score = score(&p.matrix, &e, &d);
+        let full_score = score(&p.matrix, &e, &d, &crate::cost::AnalyticCost);
         assert!((full_score - p.predicted_img_s).abs() / p.predicted_img_s < 0.02,
                 "full={} sub={}", full_score, p.predicted_img_s);
     }
@@ -374,9 +401,48 @@ mod tests {
         let p = plan(&e, &d, &[], &[], &PlannerConfig::default()).unwrap();
         let mut single = AllocationMatrix::zeroed(d.len(), 1);
         single.set(0, 0, 8);
-        let s1 = score(&single, &e, &d);
+        let s1 = score(&single, &e, &d, &crate::cost::AnalyticCost);
         assert!(p.predicted_img_s > s1 * 1.5,
                 "planned {} vs single-worker {}", p.predicted_img_s, s1);
+    }
+
+    #[test]
+    fn skewed_profiles_change_the_planned_matrix() {
+        use crate::cost::{ProfileStore, ProfiledCost};
+        use std::sync::Arc;
+        // analytic: larger batches amortize overhead, so the greedy
+        // grows batches past the minimum
+        let e = ensemble(EnsembleId::Imn1);
+        let d = DeviceSet::hgx(2);
+        let cfg = PlannerConfig::default();
+        let analytic_plan = plan(&e, &d, &[], &[], &cfg).unwrap();
+        let max_batch = |m: &AllocationMatrix| {
+            m.placements().iter().map(|p| p.batch).max().unwrap_or(0)
+        };
+        assert!(max_batch(&analytic_plan.matrix) > 8,
+                "analytic plan stayed at the minimum batch:\n{}", analytic_plan.matrix);
+
+        // measured: this device class collapses past batch 8 (say,
+        // thermal throttling the analytic model knows nothing about)
+        let store = Arc::new(ProfileStore::new());
+        let class = d[0].class_key();
+        let name = &e.members[0].name;
+        store.record(name, &class, 8, 20.0, None, 3);
+        for (b, ms) in [(16u32, 1000.0), (32, 2500.0), (64, 6000.0), (128, 15000.0)] {
+            store.record(name, &class, b, ms, None, 3);
+        }
+        let profiled: Arc<dyn crate::cost::CostModel> =
+            Arc::new(ProfiledCost::new(store));
+        let pcfg = PlannerConfig { cost: Arc::clone(&profiled), ..PlannerConfig::default() };
+        let profiled_plan = plan(&e, &d, &[], &[], &pcfg).unwrap();
+        assert_eq!(max_batch(&profiled_plan.matrix), 8,
+                   "measured collapse must keep batches at 8:\n{}", profiled_plan.matrix);
+        // and under measured costs the profiled plan scores at least as
+        // well as the analytically-chosen matrix
+        let s_profiled = score(&profiled_plan.matrix, &e, &d, &*profiled);
+        let s_analytic_matrix = score(&analytic_plan.matrix, &e, &d, &*profiled);
+        assert!(s_profiled >= s_analytic_matrix,
+                "profiled plan {s_profiled} worse than analytic matrix {s_analytic_matrix}");
     }
 
     #[test]
@@ -420,7 +486,7 @@ mod tests {
         }
         assert!(p.objective > 0.0);
         // score_joint of the planned matrices reproduces the objective
-        let s = score_joint(&tenants, &p.matrices, &d);
+        let s = score_joint(&tenants, &p.matrices, &d, &crate::cost::AnalyticCost);
         assert!((s - p.objective).abs() / p.objective < 0.05, "s={s} obj={}", p.objective);
     }
 

@@ -9,7 +9,7 @@
 //! generation), it re-runs the *joint* planner over every tenant at once
 //! with pressure-scaled weights —
 //!
-//! * the breaching tenant's weight is multiplied by `breach_boost`,
+//! * each breaching tenant's weight is multiplied by `breach_boost`,
 //! * tenants with thin windowed traffic and an empty queue are
 //!   discounted by `idle_discount`,
 //!
@@ -70,6 +70,13 @@ pub struct MultiTenantOptions {
     /// Weight multiplier for tenants with thin windowed traffic and an
     /// empty queue — their reserved share is what gets stolen.
     pub idle_discount: f64,
+    /// Online cost calibration over ONE shared profile store: every
+    /// tick drains each tenant's observed batch latencies and folds
+    /// them in, so joint replans (point `planner.cost` at a
+    /// [`ProfiledCost`](crate::cost::ProfiledCost) over the same
+    /// store) score with observed, not assumed, costs — including the
+    /// cross-tenant contention each worker actually experienced.
+    pub calibration: Option<crate::cost::Calibrator>,
 }
 
 impl Default for MultiTenantOptions {
@@ -82,6 +89,7 @@ impl Default for MultiTenantOptions {
             planner: PlannerConfig::default(),
             breach_boost: 3.0,
             idle_discount: 0.25,
+            calibration: None,
         }
     }
 }
@@ -236,6 +244,14 @@ impl MultiTenantController {
     pub fn tick(&self) {
         for t in &self.tenants {
             t.system.sweep_lingering();
+            // fold every tenant's observed batch latencies into the
+            // shared profile store before any decision this tick
+            if let Some(cal) = &self.opts.calibration {
+                let obs = t.system.metrics().drain_batch_observations();
+                if !obs.is_empty() {
+                    cal.fold(t.system.ensemble(), t.system.devices(), &obs);
+                }
+            }
             t.monitor.sample();
         }
         let (failed, since_swap) = {
@@ -249,6 +265,11 @@ impl MultiTenantController {
         let snapshots: Vec<Option<LoadSnapshot>> =
             self.tenants.iter().map(|t| self.normalized_snapshot(t)).collect();
         let mut trigger: Option<(usize, String, bool)> = None;
+        // every tenant whose policy fired this tick gets the boost —
+        // two simultaneous breachers must not have the second starved
+        // by the replan cooldown after a replan that only favored the
+        // first
+        let mut fired = vec![false; self.tenants.len()];
         for (i, t) in self.tenants.iter().enumerate() {
             let gpu_mask: Vec<bool> = t.system.devices().iter().map(|d| d.is_gpu()).collect();
             let active_uses_failed = failed
@@ -267,9 +288,10 @@ impl MultiTenantController {
                 )
             };
             if let Decision::Replan { reason, force } = decision {
+                fired[i] = true;
                 let reason = format!("tenant '{}': {reason}", t.name);
                 // a forced trigger outranks a voluntary one; otherwise
-                // first-come keeps the trigger
+                // first-come keeps the reported trigger
                 let keep_existing = match &trigger {
                     Some((_, _, existing_force)) => *existing_force || !force,
                     None => false,
@@ -280,7 +302,7 @@ impl MultiTenantController {
             }
         }
 
-        let Some((trigger_idx, reason, force)) = trigger else {
+        let Some((_, reason, force)) = trigger else {
             self.state.lock().unwrap().last_decision = "hold: every tenant within policy".into();
             return;
         };
@@ -296,13 +318,13 @@ impl MultiTenantController {
             return;
         }
 
-        // pressure per tenant: boost the trigger, discount the idle
+        // pressure per tenant: boost every breacher, discount the idle
         let pressures: Vec<f64> = self
             .tenants
             .iter()
             .enumerate()
             .map(|(i, t)| {
-                if i == trigger_idx {
+                if fired[i] {
                     self.opts.breach_boost
                 } else if self.is_idle(t, snapshots[i].as_ref()) {
                     self.opts.idle_discount
@@ -384,7 +406,8 @@ impl MultiTenantController {
             return Ok(Vec::new());
         }
         if !force {
-            let base = planner::score_joint(&specs, &current, devices);
+            let base =
+                planner::score_joint(&specs, &current, devices, &*self.opts.planner.cost);
             let gain = if base > 0.0 { plan.objective / base } else { f64::INFINITY };
             if gain < self.opts.policy.min_predicted_gain {
                 self.state.lock().unwrap().last_decision = format!(

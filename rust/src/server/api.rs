@@ -24,11 +24,18 @@
 //! * `GET /v1/reconfig/status` — controller status: generation, swaps,
 //!   failed devices, last decision, windowed load (per tenant under a
 //!   multi-tenant controller).
+//! * `GET /v1/profiles` — the measured cost-model cells: per
+//!   (model, device-class, batch) measured latency next to the
+//!   analytic prediction (delta %), sample counts, source
+//!   (offline profiler vs online calibration) and staleness (age of
+//!   each cell's last update). Requires a profile store
+//!   (`serve --profiles`).
 
 use std::collections::BTreeMap;
 use std::sync::{Arc, RwLock};
 use std::time::Instant;
 
+use crate::cost::ProfileStore;
 use crate::engine::InferenceSystem;
 use crate::metrics::LatencyHistogram;
 use crate::reconfig::{MultiTenantController, ReconfigController};
@@ -62,6 +69,10 @@ struct ApiState {
     cache: Option<PredictionCache>,
     /// Optional reconfiguration controller (admin routes).
     controller: AdminController,
+    /// Optional measured cost profiles (`GET /v1/profiles`). Shared
+    /// with the cost model scoring replans and with the calibration
+    /// loop mutating it.
+    profiles: Option<Arc<ProfileStore>>,
 }
 
 impl ApiState {
@@ -80,32 +91,40 @@ impl ApiState {
 impl ApiServer {
     pub fn start(system: Arc<InferenceSystem>, addr: &str, threads: usize)
         -> anyhow::Result<ApiServer> {
-        Self::start_opts(Self::singleton(system), addr, threads, None, AdminController::None)
+        Self::start_opts(Self::singleton(system), addr, threads, None,
+                         AdminController::None, None)
     }
 
     /// Start with a prediction cache of `cache_capacity` entries.
     pub fn start_cached(system: Arc<InferenceSystem>, addr: &str, threads: usize,
                         cache_capacity: usize) -> anyhow::Result<ApiServer> {
         Self::start_opts(Self::singleton(system), addr, threads,
-                         Some(PredictionCache::new(cache_capacity)), AdminController::None)
+                         Some(PredictionCache::new(cache_capacity)),
+                         AdminController::None, None)
     }
 
-    /// Start with the live-reconfiguration admin routes wired to a
-    /// running controller.
-    pub fn start_with_controller(system: Arc<InferenceSystem>, addr: &str, threads: usize,
-                                 controller: Arc<ReconfigController>)
+    /// The general single-tenant entry point: optional controller
+    /// (admin routes) and optional profile store (`GET /v1/profiles`).
+    pub fn start_single(system: Arc<InferenceSystem>, addr: &str, threads: usize,
+                        controller: Option<Arc<ReconfigController>>,
+                        profiles: Option<Arc<ProfileStore>>)
         -> anyhow::Result<ApiServer> {
-        Self::start_opts(Self::singleton(system), addr, threads, None,
-                         AdminController::Single(controller))
+        let admin = match controller {
+            Some(c) => AdminController::Single(c),
+            None => AdminController::None,
+        };
+        Self::start_opts(Self::singleton(system), addr, threads, None, admin, profiles)
     }
 
     /// Start over a (possibly multi-tenant) registry; `x-ensemble`
     /// selects the serving system per request. `controller` wires the
     /// admin routes to a multi-tenant arbiter, `cache_capacity` enables
-    /// the shared tenant-scoped prediction cache.
+    /// the shared tenant-scoped prediction cache, `profiles` the
+    /// measured cost-model report.
     pub fn start_registry(registry: Arc<SystemRegistry>, addr: &str, threads: usize,
                           cache_capacity: Option<usize>,
-                          controller: Option<Arc<MultiTenantController>>)
+                          controller: Option<Arc<MultiTenantController>>,
+                          profiles: Option<Arc<ProfileStore>>)
         -> anyhow::Result<ApiServer> {
         anyhow::ensure!(!registry.is_empty(), "registry has no systems");
         let admin = match controller {
@@ -113,7 +132,7 @@ impl ApiServer {
             None => AdminController::None,
         };
         Self::start_opts(registry, addr, threads,
-                         cache_capacity.map(PredictionCache::new), admin)
+                         cache_capacity.map(PredictionCache::new), admin, profiles)
     }
 
     fn singleton(system: Arc<InferenceSystem>) -> Arc<SystemRegistry> {
@@ -125,12 +144,14 @@ impl ApiServer {
 
     fn start_opts(registry: Arc<SystemRegistry>, addr: &str, threads: usize,
                   cache: Option<PredictionCache>,
-                  controller: AdminController) -> anyhow::Result<ApiServer> {
+                  controller: AdminController,
+                  profiles: Option<Arc<ProfileStore>>) -> anyhow::Result<ApiServer> {
         let state = Arc::new(ApiState {
             registry,
             latencies: RwLock::new(BTreeMap::new()),
             cache,
             controller,
+            profiles,
         });
         let h_state = Arc::clone(&state);
         let handler: Handler = Arc::new(move |req: &Request| route(&h_state, req));
@@ -175,6 +196,7 @@ fn route(state: &ApiState, req: &Request) -> Response {
         ("GET", "/v1/metrics") => prometheus(state, req),
         ("GET", "/v1/matrix") => matrix(state, req),
         ("GET", "/v1/ensembles") => ensembles(state),
+        ("GET", "/v1/profiles") => profiles_report(state, req),
         ("POST", "/v1/reconfigure") => reconfigure(state, req),
         ("GET", "/v1/reconfig/status") => reconfig_status(state),
         ("POST", _) | ("GET", _) => Response::text(404, "unknown route"),
@@ -387,6 +409,69 @@ fn write_histogram(out: &mut String, name: &str, h: &LatencyHistogram, labels: &
     out.push_str(&format!("{name}_bucket{} {total}\n", with_le("+Inf")));
     out.push_str(&format!("{name}_sum{plain} {}\n", h.total_us() as f64 / 1e6));
     out.push_str(&format!("{name}_count{plain} {total}\n"));
+}
+
+/// The measured cost-model cells, each next to what the analytic
+/// formulas would have predicted — so an operator can see at a glance
+/// where the hardware diverges from the zoo and how stale each
+/// calibration cell is. The selected tenant (x-ensemble) resolves the
+/// analytic comparison; cells whose model/device-class the tenant does
+/// not know carry a null analytic column.
+fn profiles_report(state: &ApiState, req: &Request) -> Response {
+    let Some(store) = &state.profiles else {
+        return Response::text(404, "no profile store configured (serve --profiles)");
+    };
+    let (_, system) = match select_tenant(state, req) {
+        Ok(pair) => pair,
+        Err(resp) => return resp,
+    };
+    let ensemble = system.ensemble();
+    let devices = system.devices();
+    let now = crate::cost::profile::unix_now_s();
+    let cells: Vec<Json> = store
+        .cells()
+        .into_iter()
+        .map(|(key, cell)| {
+            let (analytic, delta_pct) =
+                match crate::cost::analytic_latency_for(ensemble, devices, &key) {
+                    Some(a) => (
+                        Json::Num(a),
+                        Json::Num((cell.latency_ms - a) / a * 100.0),
+                    ),
+                    None => (Json::Null, Json::Null),
+                };
+            let mem = match cell.mem_mb {
+                Some(m) => Json::Num(m),
+                None => Json::Null,
+            };
+            Json::from_pairs([
+                ("model", Json::Str(key.model)),
+                ("device_class", Json::Str(key.device_class)),
+                ("batch", Json::Num(key.batch as f64)),
+                ("measured_ms", Json::Num(cell.latency_ms)),
+                ("analytic_ms", analytic),
+                ("delta_pct", delta_pct),
+                ("mem_mb", mem),
+                ("samples", Json::Num(cell.samples as f64)),
+                ("source", Json::Str(cell.source.name().to_string())),
+                ("age_s", Json::Num(now.saturating_sub(cell.updated_unix_s) as f64)),
+            ])
+        })
+        .collect();
+    let max_age = match store.max_age_s() {
+        Some(a) => Json::Num(a as f64),
+        None => Json::Null,
+    };
+    Response::json(
+        200,
+        Json::from_pairs([
+            ("cost_model", Json::Str("profiled".to_string())),
+            ("version", Json::Num(store.version() as f64)),
+            ("cells", Json::Arr(cells)),
+            ("max_age_s", max_age),
+        ])
+        .to_string(),
+    )
 }
 
 fn matrix(state: &ApiState, req: &Request) -> Response {
@@ -812,6 +897,56 @@ mod tests {
     }
 
     #[test]
+    fn profiles_route_reports_deltas_and_staleness() {
+        use crate::cost::ProfileStore;
+        // no store configured: 404
+        let srv = api();
+        let (code, _) = http_request(srv.addr(), "GET", "/v1/profiles", "", b"").unwrap();
+        assert_eq!(code, 404);
+
+        // store with one measured cell: measured vs analytic delta
+        let e = ensemble(EnsembleId::Imn4);
+        let d = DeviceSet::hgx(2);
+        let mut a = AllocationMatrix::zeroed(d.len(), e.len());
+        for m in 0..e.len() {
+            a.set(m % 2, m, 8);
+        }
+        let sys = Arc::new(
+            InferenceSystem::build(&a, &e, Arc::new(FakeExecutor::new(d.clone())),
+                                   EngineOptions::default())
+                .unwrap(),
+        );
+        let store = Arc::new(ProfileStore::new());
+        let analytic = e.members[0].predict_latency_ms(&d[0], 8);
+        store.record(&e.members[0].name, &d[0].class_key(), 8, analytic * 2.0, None, 3);
+        store.record("NotInThisEnsemble", &d[0].class_key(), 8, 5.0, None, 1);
+        let srv =
+            ApiServer::start_single(sys, "127.0.0.1:0", 2, None, Some(store)).unwrap();
+        let (code, body) = http_request(srv.addr(), "GET", "/v1/profiles", "", b"").unwrap();
+        assert_eq!(code, 200);
+        let j = Json::parse(std::str::from_utf8(&body).unwrap()).unwrap();
+        assert_eq!(j.get("cost_model").unwrap().as_str(), Some("profiled"));
+        let cells = j.get("cells").unwrap().as_arr().unwrap();
+        assert_eq!(cells.len(), 2);
+        let measured = cells
+            .iter()
+            .find(|c| c.get("model").unwrap().as_str() == Some(e.members[0].name.as_str()))
+            .unwrap();
+        // measured 2× analytic: delta reads +100 %
+        let delta = measured.get("delta_pct").unwrap().as_f64().unwrap();
+        assert!((delta - 100.0).abs() < 1.0, "delta={delta}");
+        assert!(measured.get("age_s").unwrap().as_f64().unwrap() < 60.0);
+        assert_eq!(measured.get("source").unwrap().as_str(), Some("offline"));
+        // unknown model: analytic column is null
+        let foreign = cells
+            .iter()
+            .find(|c| c.get("model").unwrap().as_str() == Some("NotInThisEnsemble"))
+            .unwrap();
+        assert_eq!(foreign.get("analytic_ms"), Some(&Json::Null));
+        assert!(j.get("max_age_s").unwrap().as_f64().is_some());
+    }
+
+    #[test]
     fn reconfig_routes_require_controller() {
         let srv = api();
         let (code, _) = http_request(srv.addr(), "GET", "/v1/reconfig/status", "", b"").unwrap();
@@ -841,7 +976,7 @@ mod tests {
         );
         let ctrl = ReconfigController::start(Arc::clone(&sys), ReconfigOptions::default());
         ctrl.stop(); // admin-only in this test: no background ticks
-        let srv = ApiServer::start_with_controller(sys, "127.0.0.1:0", 2, ctrl).unwrap();
+        let srv = ApiServer::start_single(sys, "127.0.0.1:0", 2, Some(ctrl), None).unwrap();
 
         let (code, body) = http_request(srv.addr(), "GET", "/v1/reconfig/status", "", b"")
             .unwrap();

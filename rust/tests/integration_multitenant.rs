@@ -84,7 +84,8 @@ fn two_tenants_serve_concurrently_via_header_dispatch() {
         registry.register(&spec.name, sys);
     }
     // shared prediction cache: keys must be tenant-scoped
-    let api = ApiServer::start_registry(registry, "127.0.0.1:0", 4, Some(32), None).unwrap();
+    let api =
+        ApiServer::start_registry(registry, "127.0.0.1:0", 4, Some(32), None, None).unwrap();
     let addr = api.addr();
 
     let classes = [("imn", 100usize, 3usize), ("fos", 91usize, 2usize)];
@@ -213,7 +214,7 @@ fn slo_breach_on_one_tenant_steals_capacity_from_idle_tenant() {
     registry.register("a", Arc::clone(&sys_a));
     registry.register("b", Arc::clone(&sys_b));
     let api = ApiServer::start_registry(registry, "127.0.0.1:0", 2, None,
-                                        Some(Arc::clone(&ctrl)))
+                                        Some(Arc::clone(&ctrl)), None)
         .unwrap();
 
     // traffic on A only; B stays idle

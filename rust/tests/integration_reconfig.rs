@@ -43,6 +43,7 @@ fn reactive_opts() -> ReconfigOptions {
             greedy: GreedyConfig { max_iter: 3, max_neighs: 12, ..GreedyConfig::default() },
             ..PlannerConfig::default()
         },
+        ..ReconfigOptions::default()
     }
 }
 
@@ -59,9 +60,9 @@ fn throughput_shift_triggers_live_swap_mid_workload() {
         InferenceSystem::build(&a, &e, ex, EngineOptions::default()).unwrap(),
     );
     let ctrl = ReconfigController::start(Arc::clone(&sys), reactive_opts());
-    let api =
-        ApiServer::start_with_controller(Arc::clone(&sys), "127.0.0.1:0", 2, Arc::clone(&ctrl))
-            .unwrap();
+    let api = ApiServer::start_single(Arc::clone(&sys), "127.0.0.1:0", 2,
+                                      Some(Arc::clone(&ctrl)), None)
+        .unwrap();
 
     // sustained open traffic until the controller reacts (bounded)
     let deadline = Instant::now() + Duration::from_secs(60);

@@ -1,0 +1,141 @@
+//! Property-based tests of the cost-model substrate (util::quick mini
+//! framework): interpolation invariants of `ProfiledCost`, analytic
+//! fallback, and cache-fingerprint sensitivity to profile updates.
+
+use std::sync::Arc;
+
+use ensemble_serve::alloc::cache::cache_fingerprint;
+use ensemble_serve::alloc::greedy::GreedyConfig;
+use ensemble_serve::cost::{AnalyticCost, CostModel, ProfileStore, ProfiledCost};
+use ensemble_serve::device::{DeviceSet, DeviceSpec};
+use ensemble_serve::model::zoo::imagenet_zoo;
+use ensemble_serve::model::{ensemble, EnsembleId};
+use ensemble_serve::util::quick::{check, Gen};
+
+/// A random zoo member.
+fn random_model(g: &mut Gen) -> ensemble_serve::model::ModelSpec {
+    let zoo = imagenet_zoo();
+    zoo[g.usize_in(0, zoo.len() - 1)].clone()
+}
+
+/// Random strictly increasing batches with random positive latencies.
+fn random_profile(g: &mut Gen) -> Vec<(u32, f64)> {
+    let n = g.usize_in(2, 6);
+    let mut batch = 1u32 + g.usize_in(0, 7) as u32;
+    let mut out = Vec::with_capacity(n);
+    for _ in 0..n {
+        let latency = 0.1 + 500.0 * g.f64_unit();
+        out.push((batch, latency));
+        batch += 1 + g.usize_in(0, 40) as u32;
+    }
+    out
+}
+
+#[test]
+fn interpolation_exact_at_profiled_points_and_monotone_between() {
+    check("profiled interpolation", 60, |g| {
+        let m = random_model(g);
+        let dev = DeviceSpec::v100(0);
+        let store = Arc::new(ProfileStore::new());
+        // monotone increasing latencies: batch-latency curves the
+        // monotonicity property is stated over
+        let mut samples = random_profile(g);
+        let mut acc = 0.0;
+        for (_, l) in samples.iter_mut() {
+            acc += *l;
+            *l = acc;
+        }
+        for &(b, l) in &samples {
+            store.record(&m.name, &dev.class_key(), b, l, None, 1);
+        }
+        let cost = ProfiledCost::new(store);
+
+        // exact agreement at every profiled point
+        for &(b, l) in &samples {
+            assert_eq!(cost.latency_ms(&m, &dev, b as usize), l, "batch {b}");
+        }
+
+        // between consecutive samples: monotone non-decreasing in batch
+        // and bounded by the endpoint latencies
+        for w in samples.windows(2) {
+            let (b0, l0) = w[0];
+            let (b1, l1) = w[1];
+            let mut prev = l0;
+            for b in b0..=b1 {
+                let l = cost.latency_ms(&m, &dev, b as usize);
+                assert!(l >= prev - 1e-9,
+                        "latency decreased at batch {b}: {l} < {prev} ({b0}..{b1})");
+                assert!(l >= l0 - 1e-9 && l <= l1 + 1e-9,
+                        "batch {b}: {l} outside [{l0}, {l1}]");
+                prev = l;
+            }
+        }
+    });
+}
+
+#[test]
+fn unprofiled_cells_fall_back_to_analytic_exactly() {
+    check("analytic fallback", 60, |g| {
+        let m = random_model(g);
+        let other = {
+            // a different member than m
+            let zoo = imagenet_zoo();
+            zoo.into_iter().find(|x| x.name != m.name).unwrap()
+        };
+        let dev = DeviceSpec::v100(0);
+        let cpu = DeviceSpec::host_cpu();
+        let store = Arc::new(ProfileStore::new());
+        let samples = random_profile(g);
+        for &(b, l) in &samples {
+            store.record(&m.name, &dev.class_key(), b, l, None, 1);
+        }
+        let cost = ProfiledCost::new(store);
+
+        let batch = 1 + g.usize_in(0, 200);
+        // unprofiled model: analytic, bit-for-bit
+        assert_eq!(cost.latency_ms(&other, &dev, batch),
+                   other.predict_latency_ms(&dev, batch));
+        assert_eq!(cost.worker_mem_mb(&other, &dev, batch), other.worker_mem_mb(batch));
+        // unprofiled device class: analytic
+        assert_eq!(cost.latency_ms(&m, &cpu, batch), m.predict_latency_ms(&cpu, batch));
+        // outside the profiled batch range: analytic (no extrapolation)
+        let below = samples.first().unwrap().0;
+        let above = samples.last().unwrap().0;
+        if below > 1 {
+            let b = g.usize_in(1, below as usize - 1);
+            assert_eq!(cost.latency_ms(&m, &dev, b), m.predict_latency_ms(&dev, b));
+        }
+        let b = above as usize + 1 + g.usize_in(0, 100);
+        assert_eq!(cost.latency_ms(&m, &dev, b), m.predict_latency_ms(&dev, b));
+        // memory at a non-profiled batch: analytic
+        assert_eq!(cost.worker_mem_mb(&m, &dev, b), m.worker_mem_mb(b));
+    });
+}
+
+#[test]
+fn any_profile_update_changes_the_cache_fingerprint() {
+    check("fingerprint sensitivity", 40, |g| {
+        let e = ensemble(EnsembleId::Imn4);
+        let d = DeviceSet::hgx(2);
+        let cfg = GreedyConfig::default();
+        let store = Arc::new(ProfileStore::new());
+        let cost = ProfiledCost::new(Arc::clone(&store));
+        let mut last = cache_fingerprint(&e, &d, &cfg, &cost);
+        assert_ne!(last, cache_fingerprint(&e, &d, &cfg, &AnalyticCost));
+        for _ in 0..g.usize_in(1, 6) {
+            let m = &e.members[g.usize_in(0, e.len() - 1)].name;
+            let batch = 1 + g.usize_in(0, 128) as u32;
+            let latency = 0.1 + 300.0 * g.f64_unit();
+            if g.bool() {
+                store.record(m, &d[0].class_key(), batch, latency, None, 1);
+            } else {
+                store.observe(m, &d[0].class_key(), batch, latency, 1, 0.5);
+            }
+            let fp = cache_fingerprint(&e, &d, &cfg, &cost);
+            assert_ne!(fp, last, "update did not invalidate the fingerprint");
+            // deterministic: unchanged store, unchanged fingerprint
+            assert_eq!(fp, cache_fingerprint(&e, &d, &cfg, &cost));
+            last = fp;
+        }
+    });
+}
