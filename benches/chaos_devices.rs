@@ -25,7 +25,7 @@ use std::time::{Duration, Instant};
 use ensemble_serve::alloc::worst_fit_decreasing;
 use ensemble_serve::benchkit::harness::Table;
 use ensemble_serve::device::DeviceSet;
-use ensemble_serve::engine::{EngineOptions, InferenceSystem};
+use ensemble_serve::engine::{EngineOptions, InferenceSystem, SwapStrategy};
 use ensemble_serve::exec::sim::SimExecutor;
 use ensemble_serve::exec::{Executor, ModelInstance};
 use ensemble_serve::metrics::LatencyHistogram;
@@ -197,6 +197,41 @@ fn main() {
         ctrl.mark_device_recovered(victim).expect("in range");
         let _ = ctrl.reconfigure_now("chaos bench: device revived");
         std::thread::sleep(Duration::from_millis(500));
+    }
+
+    // --- drain-then-build kill case -----------------------------------
+    // Mark a used device failed and FORCE the staged swap: the plan is
+    // budgeted as if the live generation were drained (it is), so this
+    // measures the unavailability gap the fallback trades for
+    // feasibility — while the closed-loop clients keep firing (parked
+    // requests must replay, not fail).
+    {
+        let active = system.matrix();
+        let used: Vec<usize> = (0..gpus)
+            .filter(|&g| !active.device_workers(g).is_empty())
+            .collect();
+        let victim = used[rng.below(used.len() as u64) as usize];
+        ctrl.mark_device_failed(victim).expect("in range");
+        let failed_before = failed.load(Ordering::Relaxed);
+        match ctrl.reconfigure_now_with(
+            "chaos: drain-then-build rebalance off a failed device",
+            SwapStrategy::DrainThenBuild,
+        ) {
+            Ok(Some(r)) => println!(
+                "\ndrain-then-build kill: GPU{victim}, gen {} -> {}, gap {:.0} ms, \
+                 {} parked, {} failed during",
+                r.from_generation,
+                r.to_generation,
+                r.gap.map(|g| g.as_secs_f64() * 1e3).unwrap_or(0.0),
+                r.parked,
+                failed.load(Ordering::Relaxed) - failed_before,
+            ),
+            Ok(None) => println!("\ndrain-then-build kill: planner reproduced the matrix"),
+            Err(e) => println!("\ndrain-then-build kill failed: {e:#}"),
+        }
+        ctrl.mark_device_recovered(victim).expect("in range");
+        let _ = ctrl.reconfigure_now("chaos bench: device restored");
+        std::thread::sleep(Duration::from_millis(300));
     }
 
     stop.store(true, Ordering::Relaxed);

@@ -69,6 +69,10 @@ pub struct ServerConfig {
     /// EWMA weight of one drained observation batch during online
     /// calibration, in (0, 1].
     pub calibration_alpha: f64,
+    /// Ignore calibration cells older than this many seconds (fall back
+    /// to the analytic formulas for them) instead of trusting stale
+    /// measurements forever. `None` (default) = no age limit.
+    pub max_cell_age_s: Option<u64>,
 }
 
 impl Default for ServerConfig {
@@ -89,6 +93,7 @@ impl Default for ServerConfig {
             p99_slo_ms: 500.0,
             profiles: None,
             calibration_alpha: 0.25,
+            max_cell_age_s: None,
         }
     }
 }
@@ -170,6 +175,10 @@ impl ServerConfig {
             anyhow::ensure!(v > 0.0 && v <= 1.0, "calibration_alpha must be in (0, 1]");
             cfg.calibration_alpha = v;
         }
+        if let Some(v) = doc.get("max_cell_age_s").and_then(Json::as_usize) {
+            anyhow::ensure!(v > 0, "max_cell_age_s must be positive");
+            cfg.max_cell_age_s = Some(v as u64);
+        }
         Ok(cfg)
     }
 
@@ -212,7 +221,8 @@ mod tests {
                 "max_iter":5,"max_neighs":40,"batch_values":[8,16],"seed":7,
                 "default_batch":16,"calib_images":256,"listen":"0.0.0.0:9000",
                 "reconfig":true,"p99_slo_ms":120.5,
-                "profiles":"profiles.json","calibration_alpha":0.5}"#,
+                "profiles":"profiles.json","calibration_alpha":0.5,
+                "max_cell_age_s":900}"#,
         )
         .unwrap();
         let cfg = ServerConfig::from_json(&doc).unwrap();
@@ -232,6 +242,7 @@ mod tests {
         assert_eq!(cfg.p99_slo_ms, 120.5);
         assert_eq!(cfg.profiles.as_deref(), Some("profiles.json"));
         assert_eq!(cfg.calibration_alpha, 0.5);
+        assert_eq!(cfg.max_cell_age_s, Some(900));
     }
 
     #[test]
@@ -260,6 +271,7 @@ mod tests {
             r#"{"profiles":""}"#,
             r#"{"calibration_alpha":0}"#,
             r#"{"calibration_alpha":1.5}"#,
+            r#"{"max_cell_age_s":0}"#,
         ] {
             let doc = Json::parse(bad).unwrap();
             assert!(ServerConfig::from_json(&doc).is_err(), "{bad}");

@@ -165,9 +165,11 @@ impl CostModel for ProfiledCost {
     fn worker_mem_mb(&self, model: &ModelSpec, device: &DeviceSpec, batch: usize) -> f64 {
         // memory is only trusted at exactly profiled cells (activation
         // footprints are linear in batch, but a measured cell may carry
-        // allocator overheads interpolation would smear)
+        // allocator overheads interpolation would smear) — and only
+        // while the cell is younger than the store's max_cell_age_s
         self.store
             .get(&model.name, &device.class_key(), batch as u32)
+            .filter(|c| self.store.cell_fresh(c))
             .and_then(|c| c.mem_mb)
             .unwrap_or_else(|| self.fallback.worker_mem_mb(model, device, batch))
     }
@@ -239,6 +241,31 @@ mod tests {
         // the latency is the geometric mean of the endpoints
         let want = (10.0f64 * 80.0).sqrt();
         assert!((l32 - want).abs() < 1e-9, "l32={l32} want={want}");
+    }
+
+    #[test]
+    fn stale_cells_answer_analytic() {
+        use crate::util::json::Json;
+        let m = zoo::by_name("ResNet50").unwrap();
+        let d = gpu();
+        let doc = Json::parse(&format!(
+            r#"{{"format":"ensemble-serve-profiles-v1",
+                 "cells":[{{"model":"{}","device_class":"{}","batch":8,
+                            "latency_ms":42.0,"mem_mb":6000.0,
+                            "updated_unix_s":1000}}]}}"#,
+            m.name,
+            d.class_key()
+        ))
+        .unwrap();
+        let store = Arc::new(ProfileStore::from_json(&doc).unwrap());
+        let c = ProfiledCost::new(Arc::clone(&store));
+        // trusted without a limit
+        assert_eq!(c.latency_ms(&m, &d, 8), 42.0);
+        assert_eq!(c.worker_mem_mb(&m, &d, 8), 6000.0);
+        // under a limit, both latency AND memory fall back to analytic
+        store.set_max_cell_age_s(Some(600));
+        assert_eq!(c.latency_ms(&m, &d, 8), m.predict_latency_ms(&d, 8));
+        assert_eq!(c.worker_mem_mb(&m, &d, 8), m.worker_mem_mb(8));
     }
 
     #[test]

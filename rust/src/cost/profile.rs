@@ -107,17 +107,57 @@ pub fn analytic_latency_for(
 }
 
 /// Thread-safe store of measured cost cells.
-#[derive(Debug, Default)]
+#[derive(Debug)]
 pub struct ProfileStore {
     cells: RwLock<BTreeMap<(String, String, u32), ProfileCell>>,
     /// Bumped on every mutation; cheap staleness signal for callers that
     /// do not want to hash the content.
     version: AtomicU64,
+    /// Cells older than this many seconds are ignored by the latency
+    /// and memory lookups (analytic fallback) instead of being trusted
+    /// forever — a calibration measured under last week's co-location
+    /// pattern says little about today's. `u64::MAX` = no limit (the
+    /// default). Online re-calibration (`observe`) refreshes a cell's
+    /// timestamp, so actively serving deployments never age out.
+    max_cell_age_s: AtomicU64,
+}
+
+impl Default for ProfileStore {
+    fn default() -> ProfileStore {
+        ProfileStore {
+            cells: RwLock::new(BTreeMap::new()),
+            version: AtomicU64::new(0),
+            max_cell_age_s: AtomicU64::new(u64::MAX),
+        }
+    }
 }
 
 impl ProfileStore {
     pub fn new() -> ProfileStore {
         ProfileStore::default()
+    }
+
+    /// Age limit for trusted cells; `None` removes the limit.
+    pub fn set_max_cell_age_s(&self, limit: Option<u64>) {
+        self.max_cell_age_s
+            .store(limit.unwrap_or(u64::MAX), Ordering::Relaxed);
+    }
+
+    /// The configured age limit, if any.
+    pub fn cell_age_limit_s(&self) -> Option<u64> {
+        match self.max_cell_age_s.load(Ordering::Relaxed) {
+            u64::MAX => None,
+            v => Some(v),
+        }
+    }
+
+    /// Is the cell young enough to be trusted under the configured age
+    /// limit? (Always true without a limit.)
+    pub fn cell_fresh(&self, cell: &ProfileCell) -> bool {
+        match self.cell_age_limit_s() {
+            None => true,
+            Some(limit) => unix_now_s().saturating_sub(cell.updated_unix_s) <= limit,
+        }
     }
 
     pub fn len(&self) -> usize {
@@ -236,16 +276,26 @@ impl ProfileStore {
     /// Resolve one latency coordinate in a single pass under the read
     /// lock, without cloning cells — this is [`ProfiledCost`]'s hot
     /// lookup, called per placement per candidate matrix during a
-    /// replan's greedy search.
+    /// replan's greedy search. Cells older than the configured
+    /// `max_cell_age_s` are skipped as if absent — neither an exact hit
+    /// nor an interpolation endpoint — so stale calibration degrades to
+    /// the analytic fallback instead of being trusted forever.
     ///
     /// [`ProfiledCost`]: crate::cost::ProfiledCost
     pub fn lookup_latency(&self, model: &str, device_class: &str, batch: u32)
         -> LatencyLookup {
+        let stale_before = match self.cell_age_limit_s() {
+            None => 0, // unix time 0: nothing is stale
+            Some(limit) => unix_now_s().saturating_sub(limit),
+        };
         let cells = self.cells.read().unwrap();
         let lo = (model.to_string(), device_class.to_string(), 0u32);
         let hi = (model.to_string(), device_class.to_string(), u32::MAX);
         let mut below: Option<(u32, f64)> = None;
         for ((_, _, b), c) in cells.range(lo..=hi) {
+            if c.updated_unix_s < stale_before {
+                continue;
+            }
             if *b == batch {
                 return LatencyLookup::Exact(c.latency_ms);
             }
@@ -538,6 +588,45 @@ mod tests {
         assert_eq!(s.lookup_latency("m", "gpu", 128), LatencyLookup::Miss);
         assert_eq!(s.lookup_latency("m", "cpu", 8), LatencyLookup::Miss);
         assert_eq!(s.lookup_latency("x", "gpu", 8), LatencyLookup::Miss);
+    }
+
+    #[test]
+    fn stale_cells_fall_back_to_analytic() {
+        // load a store whose cell was measured at unix second 1000 —
+        // ancient under any realistic limit
+        let doc = Json::parse(
+            r#"{"format":"ensemble-serve-profiles-v1",
+                "cells":[{"model":"m","device_class":"g","batch":8,
+                          "latency_ms":42.0,"updated_unix_s":1000},
+                         {"model":"m","device_class":"g","batch":64,
+                          "latency_ms":99.0,"updated_unix_s":1000}]}"#,
+        )
+        .unwrap();
+        let s = ProfileStore::from_json(&doc).unwrap();
+        // no limit: trusted forever (the old behavior)
+        assert_eq!(s.cell_age_limit_s(), None);
+        assert_eq!(s.lookup_latency("m", "g", 8), LatencyLookup::Exact(42.0));
+
+        // with a limit, the ancient cells vanish from every lookup
+        // shape: exact hit AND interpolation endpoints
+        s.set_max_cell_age_s(Some(3600));
+        assert_eq!(s.cell_age_limit_s(), Some(3600));
+        assert_eq!(s.lookup_latency("m", "g", 8), LatencyLookup::Miss);
+        assert_eq!(s.lookup_latency("m", "g", 16), LatencyLookup::Miss);
+        assert!(!s.cell_fresh(&s.get("m", "g", 8).unwrap()));
+
+        // a fresh observation revives the cell
+        s.observe("m", "g", 8, 50.0, 1, 1.0);
+        assert_eq!(s.lookup_latency("m", "g", 8), LatencyLookup::Exact(50.0));
+        assert!(s.cell_fresh(&s.get("m", "g", 8).unwrap()));
+        // ...but not its stale neighbor: the bracket endpoint stays out
+        assert_eq!(s.lookup_latency("m", "g", 16), LatencyLookup::Miss);
+
+        // freshly recorded cells are trusted under the limit
+        let f = ProfileStore::new();
+        f.set_max_cell_age_s(Some(3600));
+        f.record("m", "g", 8, 10.0, None, 1);
+        assert_eq!(f.lookup_latency("m", "g", 8), LatencyLookup::Exact(10.0));
     }
 
     #[test]

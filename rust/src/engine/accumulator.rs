@@ -72,6 +72,13 @@ impl StartupState {
         self.cond.notify_all();
     }
 
+    /// Force an error onto the rendezvous from outside the accumulator
+    /// (engine-internal: the drain-then-build rollback-failure path
+    /// marks the still-routed generation dead through this).
+    pub(crate) fn force_error(&self, e: String) {
+        self.mark_error(e);
+    }
+
     fn mark_error(&self, e: String) {
         let mut g = self.inner.lock().unwrap();
         if g.error.is_none() {

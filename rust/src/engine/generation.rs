@@ -83,17 +83,7 @@ impl Generation {
         opts: &EngineOptions,
         metrics: Arc<EngineMetrics>,
     ) -> anyhow::Result<Generation> {
-        if !matrix.all_models_placed() {
-            bail!("invalid allocation matrix: models {:?} have no worker",
-                  matrix.unplaced_models());
-        }
-        if matrix.n_models() != ensemble.len() {
-            bail!("matrix has {} model columns, ensemble {}", matrix.n_models(), ensemble.len());
-        }
-        if matrix.n_devices() != executor.devices().len() {
-            bail!("matrix has {} device rows, executor {}", matrix.n_devices(),
-                  executor.devices().len());
-        }
+        Self::validate(matrix, ensemble, &*executor)?;
 
         let store = SharedStore::new();
         let startup = StartupState::new();
@@ -206,6 +196,37 @@ impl Generation {
             }
         }
         Ok(generation)
+    }
+
+    /// Structural checks a matrix must pass before any build is
+    /// attempted. Shared with the engine's swap paths, so neither a
+    /// recovery teardown nor a drain-then-build unavailability gap is
+    /// ever paid for a matrix that could never build.
+    pub(crate) fn validate(
+        matrix: &AllocationMatrix,
+        ensemble: &Ensemble,
+        executor: &dyn Executor,
+    ) -> anyhow::Result<()> {
+        if !matrix.all_models_placed() {
+            bail!("invalid allocation matrix: models {:?} have no worker",
+                  matrix.unplaced_models());
+        }
+        if matrix.n_models() != ensemble.len() {
+            bail!("matrix has {} model columns, ensemble {}", matrix.n_models(), ensemble.len());
+        }
+        if matrix.n_devices() != executor.devices().len() {
+            bail!("matrix has {} device rows, executor {}", matrix.n_devices(),
+                  executor.devices().len());
+        }
+        Ok(())
+    }
+
+    /// Mark this generation dead (same surface a worker error uses):
+    /// `predict` fails fast and `startup_error` reports it. Used by the
+    /// drain-then-build rollback-failure path so the controllers' dead-
+    /// generation recovery fires on the next tick.
+    pub(crate) fn mark_failed(&self, msg: &str) {
+        self.startup.force_error(msg.to_string());
     }
 
     fn startup_poll(&self, n: usize) -> Option<Result<(), String>> {

@@ -38,4 +38,4 @@ pub mod system;
 
 pub use combine::CombineRule;
 pub use generation::Generation;
-pub use system::{EngineOptions, InferenceSystem, SwapReport};
+pub use system::{EngineOptions, InferenceSystem, SwapReport, SwapStrategy};

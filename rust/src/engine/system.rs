@@ -8,25 +8,44 @@
 //! the same engine.
 //!
 //! [`InferenceSystem::reconfigure`] hot-swaps the ensemble onto a new
-//! allocation matrix without dropping or double-answering a request:
+//! allocation matrix without dropping or double-answering a request.
+//! Two transition mechanics exist, selected by [`SwapStrategy`]:
 //!
-//! 1. **build** — the new generation's workers are spawned and waited
-//!    ready in the background while the old generation keeps serving;
-//!    a build failure (e.g. OOM) leaves the old generation untouched;
-//! 2. **switch** — the active-generation pointer is swapped atomically:
-//!    every `predict` call entering after the swap routes to the new
-//!    pool;
-//! 3. **drain** — calls that entered before the swap still hold the old
-//!    generation (its own broadcaster/workers/accumulator), which is
-//!    only torn down once its in-flight count reaches zero.
+//! * **Side-by-side** (zero downtime; needs room for both generations):
+//!   1. **build** — the new generation's workers are spawned and waited
+//!      ready in the background while the old generation keeps serving;
+//!      a build failure (e.g. OOM) leaves the old generation untouched;
+//!   2. **switch** — the active-generation pointer is swapped atomically:
+//!      every `predict` call entering after the swap routes to the new
+//!      pool;
+//!   3. **drain** — calls that entered before the swap still hold the old
+//!      generation (its own broadcaster/workers/accumulator), which is
+//!      only torn down once its in-flight count reaches zero.
+//! * **Drain-then-build** (bounded unavailability; fits where
+//!   side-by-side cannot — the paper's "ensemble nearly fills the
+//!   hardware" regime): intake is gated, so incoming `predict` calls
+//!   park in a bounded pending queue; the live generation drains and is
+//!   torn down; the new generation builds in the freed memory; the
+//!   parked calls replay against it. A build failure **rolls back** by
+//!   rebuilding the old matrix in place, so the system never ends up
+//!   empty; the unavailability window is recorded in the [`SwapReport`]
+//!   and the engine metrics (`swap_gap_us`, `drain_swaps`,
+//!   `requests_parked`).
+//!
+//! [`SwapStrategy::Auto`] (the default) prefers side-by-side and falls
+//! back to drain-then-build only when the side-by-side build fails AND
+//! the new matrix fits the devices alone (analytic footprints — exact
+//! against the sim ledger, a heuristic on real backends).
 
-use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Arc, Mutex, RwLock};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex, RwLock};
+use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
 use anyhow::bail;
 
 use crate::alloc::matrix::AllocationMatrix;
+use crate::alloc::memory::device_usage_mb;
 use crate::engine::combine::{Average, CombineRule};
 use crate::engine::generation::Generation;
 use crate::exec::Executor;
@@ -50,6 +69,19 @@ pub struct EngineOptions {
     /// instead parked in the lingering list and reclaimed by a later
     /// sweep once they finish.
     pub drain_timeout: Duration,
+    /// Max `predict` calls parked at the intake gate during a
+    /// drain-then-build gap; callers beyond it are rejected instead of
+    /// queued (bounded memory during the outage).
+    pub park_capacity: usize,
+    /// How long a drain-then-build swap waits for the live generation's
+    /// in-flight requests to finish before aborting the swap (the old
+    /// generation keeps serving). Unlike `drain_timeout`, expiry here
+    /// must NOT tear anything down: the requests are still live.
+    pub quiesce_timeout: Duration,
+    /// Period of the engine-internal lingering sweeper: drain-timed-out
+    /// generations are reclaimed even when no controller is ticking
+    /// (`serve` without `--reconfig`).
+    pub sweep_interval: Duration,
     /// Combination rule (paper default: averaging).
     pub combine: Arc<dyn CombineRule>,
 }
@@ -61,7 +93,47 @@ impl Default for EngineOptions {
             stage_capacity: 4,
             startup_timeout: Duration::from_secs(120),
             drain_timeout: Duration::from_secs(5),
+            park_capacity: 256,
+            quiesce_timeout: Duration::from_secs(10),
+            sweep_interval: Duration::from_secs(3),
             combine: Arc::new(Average),
+        }
+    }
+}
+
+/// How [`InferenceSystem::reconfigure_with`] transitions between
+/// worker-pool generations.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SwapStrategy {
+    /// Prefer the zero-downtime side-by-side swap; fall back to
+    /// drain-then-build when the side-by-side build fails and the new
+    /// matrix fits the devices alone.
+    Auto,
+    /// Build the new generation next to the live one (zero downtime).
+    /// Fails when the devices cannot host both generations at once.
+    SideBySide,
+    /// Gate intake, drain and tear down the live generation, build the
+    /// replacement in the freed memory, replay the parked requests.
+    /// Bounded unavailability; a build failure rolls back to the old
+    /// matrix.
+    DrainThenBuild,
+}
+
+impl SwapStrategy {
+    pub fn name(&self) -> &'static str {
+        match self {
+            SwapStrategy::Auto => "auto",
+            SwapStrategy::SideBySide => "side_by_side",
+            SwapStrategy::DrainThenBuild => "drain_then_build",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<SwapStrategy> {
+        match s {
+            "auto" => Some(SwapStrategy::Auto),
+            "side_by_side" => Some(SwapStrategy::SideBySide),
+            "drain_then_build" => Some(SwapStrategy::DrainThenBuild),
+            _ => None,
         }
     }
 }
@@ -71,7 +143,8 @@ impl Default for EngineOptions {
 pub struct SwapReport {
     pub from_generation: u64,
     pub to_generation: u64,
-    /// Requests still inside the old generation at the switch instant.
+    /// Requests still inside the old generation at the switch instant
+    /// (side-by-side) or at the quiesce start (drain-then-build).
     pub in_flight_at_swap: u64,
     /// Wall time to build + ready the new generation.
     pub build: Duration,
@@ -79,9 +152,93 @@ pub struct SwapReport {
     pub drain: Duration,
     /// False when `drain_timeout` elapsed first; the old pool is then
     /// parked in the system's lingering list — still pinning its device
-    /// memory — until a sweep (controller tick, a later `reconfigure`,
-    /// or system drop) finds its last caller gone and tears it down.
+    /// memory — until a sweep (controller tick, the engine's periodic
+    /// sweeper, a later `reconfigure`, `/v1/stats`, or system drop)
+    /// finds its last caller gone and tears it down. Always true for
+    /// drain-then-build, which quiesces fully before tearing down.
     pub drain_complete: bool,
+    /// The mechanics that performed this swap: `SideBySide` (including
+    /// dead-generation recovery, which frees the dead pool first) or
+    /// `DrainThenBuild`. Never `Auto` — the report records what ran.
+    pub strategy: SwapStrategy,
+    /// Unavailability window of a drain-then-build swap (intake gated:
+    /// quiesce + teardown + build). `None` for side-by-side swaps,
+    /// which are zero-downtime.
+    pub gap: Option<Duration>,
+    /// Requests parked at the intake gate during the gap and replayed
+    /// against the new generation.
+    pub parked: u64,
+}
+
+/// Intake gate: closed during a drain-then-build gap, parking incoming
+/// `predict` calls on the condvar until the replacement generation is
+/// routed (or the swap aborts and the old generation resumes).
+struct IntakeGate {
+    state: Mutex<GateState>,
+    cv: Condvar,
+}
+
+#[derive(Default)]
+struct GateState {
+    closed: bool,
+    parked: u64,
+}
+
+impl IntakeGate {
+    fn new() -> IntakeGate {
+        IntakeGate { state: Mutex::new(GateState::default()), cv: Condvar::new() }
+    }
+
+    fn close(&self) {
+        self.state.lock().unwrap().closed = true;
+    }
+
+    /// Reopen the gate; returns how many parked callers are released.
+    fn open(&self) -> u64 {
+        let mut st = self.state.lock().unwrap();
+        st.closed = false;
+        let parked = st.parked;
+        self.cv.notify_all();
+        parked
+    }
+
+    fn is_closed(&self) -> bool {
+        self.state.lock().unwrap().closed
+    }
+}
+
+/// Old generations whose drain timed out: still holding device memory
+/// until their last in-flight caller finishes. Shared (`Arc`) with the
+/// engine's background sweeper thread.
+struct Lingering {
+    list: Mutex<Vec<Arc<Generation>>>,
+    metrics: Arc<EngineMetrics>,
+}
+
+impl Lingering {
+    fn new(metrics: Arc<EngineMetrics>) -> Lingering {
+        Lingering { list: Mutex::new(Vec::new()), metrics }
+    }
+
+    /// Drop generations whose last caller has finished; returns how many
+    /// are still pinned, mirrored into the `lingering_generations` gauge.
+    fn sweep(&self) -> usize {
+        let mut list = self.list.lock().unwrap();
+        list.retain(|g| Arc::strong_count(g) > 1 || g.in_flight() > 0);
+        let n = list.len();
+        self.metrics.lingering_generations.store(n as u64, Ordering::Relaxed);
+        n
+    }
+
+    fn push(&self, g: Arc<Generation>) {
+        let mut list = self.list.lock().unwrap();
+        list.push(g);
+        self.metrics.lingering_generations.store(list.len() as u64, Ordering::Relaxed);
+    }
+
+    fn matrices(&self) -> Vec<AllocationMatrix> {
+        self.list.lock().unwrap().iter().map(|g| g.matrix().clone()).collect()
+    }
 }
 
 /// A deployed ensemble: a chain of worker-pool generations, exactly one
@@ -92,16 +249,20 @@ pub struct InferenceSystem {
     executor: Arc<dyn Executor>,
     metrics: Arc<EngineMetrics>,
     active: RwLock<Arc<Generation>>,
-    /// Old generations whose drain timed out: still holding device
-    /// memory until their last in-flight caller finishes. Swept on each
-    /// `reconfigure`/`resident_matrices` call.
-    lingering: Mutex<Vec<Arc<Generation>>>,
+    /// Drain-timed-out generations; see [`Lingering`]. Swept on each
+    /// `reconfigure`/`resident_matrices`/`sweep_lingering` call and by
+    /// the engine's periodic sweeper thread.
+    lingering: Arc<Lingering>,
+    /// Intake gate for drain-then-build swaps (open in steady state).
+    gate: IntakeGate,
     /// Next generation id, committed only by a successful swap — so
     /// `swap_count` is derived as `next_generation - 2` (ids start at 2
     /// for the first swap) instead of being tracked separately.
     next_generation: AtomicU64,
     /// Serializes concurrent `reconfigure` calls.
     reconfig_lock: Mutex<()>,
+    sweeper_stop: Arc<AtomicBool>,
+    sweeper: Mutex<Option<JoinHandle<()>>>,
 }
 
 impl InferenceSystem {
@@ -125,25 +286,100 @@ impl InferenceSystem {
             Arc::clone(&metrics),
         )?;
         metrics.generation.store(1, Ordering::Relaxed);
+        let lingering = Arc::new(Lingering::new(Arc::clone(&metrics)));
+        let sweeper_stop = Arc::new(AtomicBool::new(false));
+        // Periodic reclaim of drain-timed-out generations: a deployment
+        // without any controller ticking (plain `serve`) must not pin a
+        // stuck drain's device memory until the next manual swap. The
+        // thread holds only a Weak — dropping the system ends it.
+        let sweeper = {
+            let weak = Arc::downgrade(&lingering);
+            let stop = Arc::clone(&sweeper_stop);
+            let interval = opts.sweep_interval;
+            std::thread::Builder::new()
+                .name("lingering-sweeper".into())
+                .spawn(move || loop {
+                    let mut slept = Duration::ZERO;
+                    while slept < interval {
+                        if stop.load(Ordering::Relaxed) {
+                            return;
+                        }
+                        let step = (interval - slept).min(Duration::from_millis(25));
+                        std::thread::sleep(step);
+                        slept += step;
+                    }
+                    match weak.upgrade() {
+                        None => return,
+                        Some(lingering) => {
+                            lingering.sweep();
+                        }
+                    }
+                })
+                .expect("spawn lingering-sweeper")
+        };
         Ok(InferenceSystem {
             ensemble: ensemble.clone(),
             opts,
             executor,
             metrics,
             active: RwLock::new(Arc::new(generation)),
-            lingering: Mutex::new(Vec::new()),
+            lingering,
+            gate: IntakeGate::new(),
             next_generation: AtomicU64::new(2),
             reconfig_lock: Mutex::new(()),
+            sweeper_stop,
+            sweeper: Mutex::new(Some(sweeper)),
         })
+    }
+
+    /// Admission: pin the serving generation. During a drain-then-build
+    /// gap the call parks here (bounded by `park_capacity`) and is
+    /// replayed against whatever generation is routed when the gate
+    /// reopens. The pin happens while still holding the gate lock, so a
+    /// `close()` that wins the lock afterwards can never observe a
+    /// quiesced pool before this caller's Arc clone is visible.
+    fn admit(&self) -> anyhow::Result<Arc<Generation>> {
+        let mut st = self.gate.state.lock().unwrap();
+        if st.closed {
+            if st.parked >= self.opts.park_capacity as u64 {
+                bail!(
+                    "reconfiguration in progress and the pending queue is full \
+                     ({} requests parked)",
+                    st.parked
+                );
+            }
+            st.parked += 1;
+            self.metrics.requests_parked.fetch_add(1, Ordering::Relaxed);
+            // every drain-then-build path reopens the gate (success,
+            // abort, rollback, even rollback failure), so this deadline
+            // only guards against a wedged control plane: quiesce + a
+            // build + a rollback build
+            let deadline = Instant::now()
+                + self.opts.quiesce_timeout
+                + self.opts.startup_timeout
+                + self.opts.startup_timeout;
+            while st.closed {
+                let now = Instant::now();
+                if now >= deadline {
+                    st.parked -= 1;
+                    bail!("reconfiguration gap outlasted the park deadline");
+                }
+                let (guard, _) = self.gate.cv.wait_timeout(st, deadline - now).unwrap();
+                st = guard;
+            }
+            st.parked -= 1;
+        }
+        Ok(Arc::clone(&self.active.read().unwrap()))
     }
 
     /// The ensemble prediction: blocks until every model predicted every
     /// image and the combination rule folded them (Deploy Mode).
     pub fn predict(&self, x: Vec<f32>, nb_images: usize) -> anyhow::Result<Vec<f32>> {
         let t0 = Instant::now();
-        // Hold the read lock only long enough to pin the generation: the
-        // swap's write lock is never blocked behind a prediction.
-        let generation = Arc::clone(&self.active.read().unwrap());
+        // Admission holds the gate lock only long enough to pin the
+        // generation: the swap's write lock is never blocked behind a
+        // prediction.
+        let generation = self.admit()?;
         let y = generation.predict(x, nb_images)?;
         if nb_images > 0 {
             self.metrics.request_latency.record(t0.elapsed());
@@ -151,17 +387,35 @@ impl InferenceSystem {
         Ok(y)
     }
 
-    /// Live-swap the ensemble onto `matrix`: build the new worker
-    /// generation in the background, switch the routing atomically, then
-    /// drain and tear down the old generation. In-flight requests
-    /// complete exactly once on the generation they entered.
-    ///
-    /// On build failure (e.g. the new matrix does not fit next to the
-    /// still-loaded old generation) the old generation keeps serving and
-    /// the error is returned.
+    /// Live-swap the ensemble onto `matrix` with [`SwapStrategy::Auto`]:
+    /// zero-downtime side-by-side when the devices can host both
+    /// generations, the staged drain-then-build fallback when they
+    /// cannot. In-flight requests complete exactly once on the
+    /// generation they entered; parked requests replay on the new one.
     pub fn reconfigure(&self, matrix: &AllocationMatrix) -> anyhow::Result<SwapReport> {
+        self.reconfigure_with(matrix, SwapStrategy::Auto)
+    }
+
+    /// [`Self::reconfigure`] with an explicit [`SwapStrategy`].
+    ///
+    /// On build failure the system always keeps serving something: a
+    /// side-by-side failure leaves the old generation untouched; a
+    /// drain-then-build failure rolls back by rebuilding the old matrix
+    /// in the freed memory (only a failed rollback — executor broken —
+    /// leaves the system down, marked dead for controller recovery).
+    pub fn reconfigure_with(
+        &self,
+        matrix: &AllocationMatrix,
+        strategy: SwapStrategy,
+    ) -> anyhow::Result<SwapReport> {
         let _serialize = self.reconfig_lock.lock().unwrap();
         self.sweep_lingering();
+
+        // structural garbage (unplaced models, wrong shape) must be
+        // rejected up front: neither a recovery teardown nor a
+        // drain-then-build gap may be paid for a matrix that could
+        // never build
+        Generation::validate(matrix, &self.ensemble, &*self.executor)?;
 
         // An identical matrix is a no-op — unless the active generation
         // is dead (worker error): then the same matrix rebuilt as a
@@ -177,8 +431,57 @@ impl InferenceSystem {
             // free its model instances FIRST, or a large ensemble could
             // never rebuild next to its own phantom footprint
             self.active.read().unwrap().teardown();
+            return self.build_and_switch(matrix);
         }
 
+        match strategy {
+            SwapStrategy::SideBySide => self.build_and_switch(matrix),
+            SwapStrategy::DrainThenBuild => self.drain_then_build(matrix),
+            SwapStrategy::Auto => match self.build_and_switch(matrix) {
+                Ok(report) => Ok(report),
+                Err(side_err) => {
+                    if !self.fits_alone(matrix) {
+                        return Err(side_err.context(
+                            "side-by-side build failed and the matrix does not fit \
+                             the devices alone — not attempting drain-then-build",
+                        ));
+                    }
+                    log::warn!(
+                        "side-by-side build failed ({side_err:#}); \
+                         falling back to drain-then-build"
+                    );
+                    self.drain_then_build(matrix).map_err(|gap_err| {
+                        gap_err.context(format!(
+                            "after side-by-side build failed: {side_err:#}"
+                        ))
+                    })
+                }
+            },
+        }
+    }
+
+    /// Would `matrix` fit the devices with only the lingering
+    /// allocations (not the live generation) resident? Analytic
+    /// footprints: exact against the sim ledger, a heuristic on real
+    /// backends — the drain-then-build rollback covers a wrong "yes".
+    fn fits_alone(&self, matrix: &AllocationMatrix) -> bool {
+        let devices = self.executor.devices();
+        let lingering = self.lingering.matrices();
+        (0..devices.len()).all(|d| {
+            let used = device_usage_mb(matrix, &self.ensemble, d)
+                + lingering
+                    .iter()
+                    .map(|m| device_usage_mb(m, &self.ensemble, d))
+                    .sum::<f64>();
+            used <= devices[d].mem_mb as f64
+        })
+    }
+
+    /// The zero-downtime path: build the new generation next to the live
+    /// one, switch the routing atomically, drain and tear down the old
+    /// generation (also the dead-generation recovery path, after the
+    /// dead pool was freed).
+    fn build_and_switch(&self, matrix: &AllocationMatrix) -> anyhow::Result<SwapReport> {
         // the id is committed only on a successful build (we're under
         // reconfig_lock): failed attempts must not leave gaps that read
         // as phantom swaps when diffing `generation` against `swaps`
@@ -229,7 +532,7 @@ impl InferenceSystem {
             // keep the stuck generation visible: it still pins device
             // memory, and planners must budget around it until its last
             // caller lets go
-            self.lingering.lock().unwrap().push(old);
+            self.lingering.push(old);
         }
         log::info!(
             "reconfigured generation {from_generation} -> {id} \
@@ -245,7 +548,159 @@ impl InferenceSystem {
             build,
             drain: t_drain.elapsed(),
             drain_complete,
+            strategy: SwapStrategy::SideBySide,
+            gap: None,
+            parked: 0,
         })
+    }
+
+    /// The staged path: gate intake, drain the live generation fully,
+    /// tear it down, build the replacement in the freed memory, replay
+    /// the parked requests. Rolls back to the old matrix on build
+    /// failure.
+    fn drain_then_build(&self, matrix: &AllocationMatrix) -> anyhow::Result<SwapReport> {
+        let id = self.next_generation.load(Ordering::SeqCst);
+        let old = Arc::clone(&self.active.read().unwrap());
+        let from_generation = old.id();
+        let in_flight_at_swap = old.in_flight();
+
+        let t_gap = Instant::now();
+        self.gate.close();
+        // quiesce: with the gate closed no new call can pin the old
+        // generation, so its Arc count falls to the floor of 2 (the
+        // active slot + our clone) and its in-flight count to 0
+        let deadline = Instant::now() + self.opts.quiesce_timeout;
+        while Arc::strong_count(&old) > 2 || old.in_flight() > 0 {
+            if Instant::now() > deadline {
+                let parked = self.gate.open();
+                bail!(
+                    "drain-then-build aborted: {} requests still inside generation \
+                     {from_generation} after {:.1}s ({parked} parked requests \
+                     replayed to it)",
+                    old.in_flight(),
+                    self.opts.quiesce_timeout.as_secs_f64()
+                );
+            }
+            std::thread::sleep(Duration::from_micros(200));
+        }
+        let drain = t_gap.elapsed();
+
+        // teardown frees the old pool's device memory; the torn-down
+        // generation stays routed (intake is gated, nothing can enter
+        // it) until the replacement — or the rollback — swaps in
+        old.teardown();
+        let t_build = Instant::now();
+        let built = Generation::build(
+            id,
+            matrix,
+            &self.ensemble,
+            Arc::clone(&self.executor),
+            &self.opts,
+            Arc::clone(&self.metrics),
+        );
+        match built {
+            Ok(fresh) => {
+                self.next_generation.store(id + 1, Ordering::SeqCst);
+                *self.active.write().unwrap() = Arc::new(fresh);
+                self.metrics.generation.store(id, Ordering::Relaxed);
+                let build = t_build.elapsed();
+                let parked = self.gate.open();
+                let gap = t_gap.elapsed();
+                self.metrics.drain_swaps.fetch_add(1, Ordering::Relaxed);
+                self.metrics
+                    .swap_gap_us
+                    .fetch_add(gap.as_micros() as u64, Ordering::Relaxed);
+                log::info!(
+                    "drain-then-build reconfigured generation {from_generation} -> {id} \
+                     (quiesce {:.1} ms, build {:.1} ms, gap {:.1} ms, {parked} parked)",
+                    drain.as_secs_f64() * 1e3,
+                    build.as_secs_f64() * 1e3,
+                    gap.as_secs_f64() * 1e3,
+                );
+                Ok(SwapReport {
+                    from_generation,
+                    to_generation: id,
+                    in_flight_at_swap,
+                    build,
+                    drain,
+                    drain_complete: true,
+                    strategy: SwapStrategy::DrainThenBuild,
+                    gap: Some(gap),
+                    parked,
+                })
+            }
+            Err(build_err) => self.rollback(old, id, t_gap, build_err),
+        }
+    }
+
+    /// Drain-then-build build failure: rebuild the OLD matrix in the
+    /// freed memory so the system never ends up empty. Returns the
+    /// build error (with rollback context) either way.
+    fn rollback(
+        &self,
+        old: Arc<Generation>,
+        id: u64,
+        t_gap: Instant,
+        build_err: anyhow::Error,
+    ) -> anyhow::Result<SwapReport> {
+        let rollback = Generation::build(
+            id,
+            old.matrix(),
+            &self.ensemble,
+            Arc::clone(&self.executor),
+            &self.opts,
+            Arc::clone(&self.metrics),
+        );
+        match rollback {
+            Ok(fresh) => {
+                self.next_generation.store(id + 1, Ordering::SeqCst);
+                *self.active.write().unwrap() = Arc::new(fresh);
+                self.metrics.generation.store(id, Ordering::Relaxed);
+                self.metrics.swap_rollbacks.fetch_add(1, Ordering::Relaxed);
+                let parked = self.gate.open();
+                let gap = t_gap.elapsed();
+                self.metrics
+                    .swap_gap_us
+                    .fetch_add(gap.as_micros() as u64, Ordering::Relaxed);
+                log::warn!(
+                    "drain-then-build build failed ({build_err:#}); rolled back to \
+                     the previous matrix as generation {id} (gap {:.1} ms, \
+                     {parked} parked requests replayed)",
+                    gap.as_secs_f64() * 1e3,
+                );
+                Err(build_err.context(format!(
+                    "drain-then-build: new generation failed to build; rolled back \
+                     to the previous matrix as generation {id}"
+                )))
+            }
+            Err(rollback_err) => {
+                // catastrophic (executor broken): nothing can serve.
+                // Mark the still-routed, torn-down generation dead so
+                // predicts fail fast and the controller's dead-
+                // generation recovery fires, then release the parked
+                // callers into that fast failure instead of hanging.
+                old.mark_failed(&format!(
+                    "drain-then-build rollback failed: {rollback_err:#}"
+                ));
+                let parked = self.gate.open();
+                let gap = t_gap.elapsed();
+                self.metrics
+                    .swap_gap_us
+                    .fetch_add(gap.as_micros() as u64, Ordering::Relaxed);
+                Err(anyhow::anyhow!(
+                    "drain-then-build: build failed ({build_err:#}) AND the rollback \
+                     failed ({rollback_err:#}); the system is down until a forced \
+                     replan rebuilds it ({parked} parked requests failing fast)"
+                ))
+            }
+        }
+    }
+
+    /// True while a drain-then-build unavailability gap is in progress
+    /// (intake gated). Control planes use this to refuse stacking a
+    /// second outage onto the first (`ReconfigBusy` / HTTP 409).
+    pub fn swap_gap_in_progress(&self) -> bool {
+        self.gate.is_closed()
     }
 
     pub fn worker_count(&self) -> usize {
@@ -258,33 +713,29 @@ impl InferenceSystem {
     }
 
     /// Drop lingering generations whose last caller has finished,
-    /// returning how many are still pinned. Called from `reconfigure`
-    /// and `resident_matrices`; long-running deployments should also
-    /// call it periodically (the reconfig controller does, every tick)
-    /// so a timed-out drain is reclaimed promptly once its stuck caller
-    /// lets go, not only at the next swap.
+    /// returning how many are still pinned (also exported as the
+    /// `lingering_generations` gauge). Called from `reconfigure`,
+    /// `resident_matrices`, the `/v1/stats` route, the controllers'
+    /// ticks, and the engine's own periodic sweeper thread — so a
+    /// timed-out drain is reclaimed promptly even in a deployment with
+    /// no controller at all.
     pub fn sweep_lingering(&self) -> usize {
-        let mut lingering = self.lingering.lock().unwrap();
-        lingering.retain(|g| Arc::strong_count(g) > 1 || g.in_flight() > 0);
-        lingering.len()
+        self.lingering.sweep()
     }
 
     /// Allocations of timed-out drains still held by stuck callers.
     pub fn lingering_matrices(&self) -> Vec<AllocationMatrix> {
-        self.sweep_lingering();
-        self.lingering
-            .lock()
-            .unwrap()
-            .iter()
-            .map(|g| g.matrix().clone())
-            .collect()
+        self.lingering.sweep();
+        self.lingering.matrices()
     }
 
     /// Every allocation currently pinning device memory: the active
     /// generation plus any timed-out drains still held by stuck callers.
     /// Planners must fit a new generation next to ALL of these — except
     /// when recovering a dead generation, whose pool `reconfigure`
-    /// frees before building (use [`Self::lingering_matrices`] then).
+    /// frees before building (use [`Self::lingering_matrices`] then),
+    /// or when planning a drain-then-build swap, which frees the active
+    /// generation first (again [`Self::lingering_matrices`]).
     pub fn resident_matrices(&self) -> Vec<AllocationMatrix> {
         let mut out = vec![self.matrix()];
         out.extend(self.lingering_matrices());
@@ -297,7 +748,8 @@ impl InferenceSystem {
     }
 
     /// Completed live swaps (derived: ids are committed only by
-    /// successful swaps, starting at 2).
+    /// successful swaps — including drain-then-build rollbacks, which
+    /// deploy a fresh generation of the old matrix — starting at 2).
     pub fn swap_count(&self) -> u64 {
         self.next_generation.load(Ordering::SeqCst) - 2
     }
@@ -334,6 +786,15 @@ impl InferenceSystem {
     /// The device topology the executor serves (matrix row order).
     pub fn devices(&self) -> &crate::device::DeviceSet {
         self.executor.devices()
+    }
+}
+
+impl Drop for InferenceSystem {
+    fn drop(&mut self) {
+        self.sweeper_stop.store(true, Ordering::Relaxed);
+        if let Some(t) = self.sweeper.lock().unwrap().take() {
+            let _ = t.join();
+        }
     }
 }
 
@@ -502,6 +963,8 @@ mod tests {
         assert_eq!(report.from_generation, 1);
         assert_eq!(report.to_generation, 2);
         assert!(report.drain_complete);
+        assert_eq!(report.strategy, SwapStrategy::SideBySide);
+        assert!(report.gap.is_none());
         assert_eq!(sys.generation(), 2);
         assert_eq!(sys.swap_count(), 1);
         assert_eq!(sys.worker_count(), 5);
@@ -524,7 +987,8 @@ mod tests {
         assert!(sys.reconfigure(&a).is_err(), "identical matrix");
         let empty = AllocationMatrix::zeroed(d.len(), e.len());
         assert!(sys.reconfigure(&empty).is_err(), "no placements");
-        // old generation untouched by the failures
+        // old generation untouched by the failures (structural garbage
+        // never pays a drain-then-build gap)
         assert_eq!(sys.generation(), 1);
         assert!(sys.predict(input_for(&e, 3), 3).is_ok());
     }
@@ -537,8 +1001,9 @@ mod tests {
         let ex = SimExecutor::new(d.clone(), 50_000.0);
         let sys = InferenceSystem::build(&a, &e, ex, EngineOptions::default()).unwrap();
         // a matrix on the CPU row only cannot load (ResNet152 exceeds the
-        // 3 GB pinned host budget) -> the background build fails and the
-        // old generation keeps serving
+        // 3 GB pinned host budget) -> the background build fails, and the
+        // Auto fallback refuses the gap too (the matrix does not fit the
+        // devices even alone), so the old generation keeps serving
         let mut cpu_only = AllocationMatrix::zeroed(d.len(), e.len());
         cpu_only.set(d.len() - 1, 0, 8);
         assert!(sys.reconfigure(&cpu_only).is_err(), "CPU cannot host ResNet152");
@@ -664,5 +1129,176 @@ mod tests {
         assert_eq!(done, issued, "every request answered exactly once");
         assert_eq!(sys.generation(), 2);
         assert_eq!(sys.in_flight(), 0);
+    }
+
+    // --- drain-then-build ---
+
+    /// Tight-memory fixture: ResNet152@64 fills ~10.7 GB of the 16 GB
+    /// V100 on the sim ledger; the target @32 needs ~7.8 GB, so the two
+    /// generations cannot co-reside but either fits alone.
+    fn tight_pair(e: &Ensemble, d: &DeviceSet) -> (AllocationMatrix, AllocationMatrix) {
+        let mut a = AllocationMatrix::zeroed(d.len(), e.len());
+        a.set(0, 0, 64);
+        let mut b = AllocationMatrix::zeroed(d.len(), e.len());
+        b.set(0, 0, 32);
+        (a, b)
+    }
+
+    #[test]
+    fn auto_falls_back_to_drain_then_build_when_tight() {
+        let e = ensemble(EnsembleId::Imn1);
+        let d = DeviceSet::hgx(1);
+        let (a, b) = tight_pair(&e, &d);
+        let ex = SimExecutor::new(d.clone(), 20_000.0);
+        let sim = Arc::clone(&ex);
+        let sys = Arc::new(
+            InferenceSystem::build(&a, &e, ex, EngineOptions::default()).unwrap(),
+        );
+
+        // the pre-fallback behavior: a strictly side-by-side swap is
+        // refused and the old allocation keeps serving
+        assert!(
+            sys.reconfigure_with(&b, SwapStrategy::SideBySide).is_err(),
+            "two generations cannot co-reside on one V100"
+        );
+        assert_eq!(sys.generation(), 1);
+        assert!(sys.predict(input_for(&e, 2), 2).is_ok());
+
+        // clients fire across the staged swap: nothing dropped or doubled
+        let n_clients = 3;
+        let reqs_per_client = 6;
+        std::thread::scope(|s| {
+            for c in 0..n_clients {
+                let sys = Arc::clone(&sys);
+                let e = &e;
+                s.spawn(move || {
+                    for r in 0..reqs_per_client {
+                        let n = 10 + (c + r) % 5;
+                        let y = sys.predict(input_for(e, n), n).unwrap();
+                        assert_eq!(y.len(), n * e.classes());
+                    }
+                });
+            }
+            let swapper = Arc::clone(&sys);
+            let b = b.clone();
+            s.spawn(move || {
+                std::thread::sleep(Duration::from_millis(5));
+                let report = swapper.reconfigure_with(&b, SwapStrategy::Auto).unwrap();
+                assert_eq!(report.strategy, SwapStrategy::DrainThenBuild);
+                assert!(report.drain_complete, "quiesce must complete fully");
+                assert!(report.gap.is_some(), "gap must be recorded");
+            });
+        });
+        assert_eq!(sys.generation(), 2);
+        assert_eq!(sys.matrix(), b);
+        let m = sys.metrics();
+        assert_eq!(
+            m.requests.load(Ordering::Relaxed),
+            m.requests_completed.load(Ordering::Relaxed),
+            "a request was dropped or double-answered across the gap"
+        );
+        assert_eq!(m.requests.load(Ordering::Relaxed),
+                   1 + (n_clients * reqs_per_client) as u64);
+        assert_eq!(m.drain_swaps.load(Ordering::Relaxed), 1);
+        assert!(m.swap_gap_us.load(Ordering::Relaxed) > 0);
+        // the old generation's ledger reservation was freed in the gap
+        assert!(sim.device_used_mb(0) < 8_000.0, "{}", sim.device_used_mb(0));
+        assert_eq!(sys.in_flight(), 0);
+        assert!(!sys.swap_gap_in_progress());
+        assert!(sys.predict(input_for(&e, 4), 4).is_ok());
+    }
+
+    /// Executor wrapper whose `load` fails while `poisoned` is set — for
+    /// `poison_batch` only, or for every batch when it is `None`. A
+    /// deterministic build failure for the rollback paths (a rollback's
+    /// own loads, at the old batch size, can be left healthy).
+    struct PoisonLoadExecutor {
+        inner: Arc<SimExecutor>,
+        poison_batch: Option<usize>,
+        poisoned: Arc<std::sync::atomic::AtomicBool>,
+    }
+
+    impl Executor for PoisonLoadExecutor {
+        fn load(
+            &self,
+            model: &crate::model::ModelSpec,
+            device: usize,
+            batch: usize,
+        ) -> anyhow::Result<Box<dyn crate::exec::ModelInstance>> {
+            let poisons_this_batch = match self.poison_batch {
+                None => true,
+                Some(b) => b == batch,
+            };
+            if self.poisoned.load(Ordering::Relaxed) && poisons_this_batch {
+                anyhow::bail!("poisoned load (batch {batch})");
+            }
+            self.inner.load(model, device, batch)
+        }
+
+        fn devices(&self) -> &crate::device::DeviceSet {
+            self.inner.devices()
+        }
+    }
+
+    #[test]
+    fn drain_then_build_rolls_back_on_build_failure() {
+        let e = ensemble(EnsembleId::Imn1);
+        let d = DeviceSet::hgx(1);
+        let (a, b) = tight_pair(&e, &d);
+        let poisoned = Arc::new(std::sync::atomic::AtomicBool::new(false));
+        let ex = Arc::new(PoisonLoadExecutor {
+            inner: SimExecutor::new(d.clone(), 50_000.0),
+            poison_batch: Some(32),
+            poisoned: Arc::clone(&poisoned),
+        });
+        let sys = InferenceSystem::build(&a, &e, ex, EngineOptions::default()).unwrap();
+        assert!(sys.predict(input_for(&e, 3), 3).is_ok());
+
+        poisoned.store(true, Ordering::Relaxed);
+        let err = sys.reconfigure_with(&b, SwapStrategy::DrainThenBuild);
+        let msg = format!("{:#}", err.err().expect("build failure must error"));
+        assert!(msg.contains("rolled back"), "{msg}");
+        // the rollback generation serves the OLD matrix: never empty
+        assert_eq!(sys.generation(), 2);
+        assert_eq!(sys.matrix(), a);
+        assert!(sys.active_error().is_none());
+        assert!(!sys.swap_gap_in_progress());
+        assert!(sys.predict(input_for(&e, 3), 3).is_ok());
+        assert_eq!(sys.metrics().swap_rollbacks.load(Ordering::Relaxed), 1);
+        assert_eq!(sys.metrics().drain_swaps.load(Ordering::Relaxed), 0);
+        assert!(sys.metrics().swap_gap_us.load(Ordering::Relaxed) > 0,
+                "the failed gap still counts as unavailability");
+    }
+
+    #[test]
+    fn failed_rollback_marks_the_generation_dead_for_recovery() {
+        let e = ensemble(EnsembleId::Imn1);
+        let d = DeviceSet::hgx(1);
+        let (a, b) = tight_pair(&e, &d);
+        let poisoned = Arc::new(std::sync::atomic::AtomicBool::new(false));
+        let ex = Arc::new(PoisonLoadExecutor {
+            inner: SimExecutor::new(d.clone(), 50_000.0),
+            poison_batch: None, // every load fails: rollback too
+            poisoned: Arc::clone(&poisoned),
+        });
+        let sys = InferenceSystem::build(&a, &e, ex, EngineOptions::default()).unwrap();
+
+        poisoned.store(true, Ordering::Relaxed);
+        let err = sys.reconfigure_with(&b, SwapStrategy::DrainThenBuild);
+        let msg = format!("{:#}", err.err().expect("catastrophic path must error"));
+        assert!(msg.contains("rollback failed"), "{msg}");
+        // nothing serves, but the gate is open and the failure is typed
+        // as a dead generation so recovery machinery fires
+        assert!(!sys.swap_gap_in_progress(), "gate must reopen");
+        assert!(sys.active_error().is_some(), "must read as dead");
+        assert!(sys.predict(input_for(&e, 2), 2).is_err(), "fails fast, not hangs");
+
+        // recovery: heal the executor, rebuild (recovering accepts the
+        // same matrix; the dead pool was already torn down)
+        poisoned.store(false, Ordering::Relaxed);
+        let report = sys.reconfigure(&a).unwrap();
+        assert_eq!(report.to_generation, 2);
+        assert!(sys.active_error().is_none());
+        assert!(sys.predict(input_for(&e, 2), 2).is_ok());
     }
 }

@@ -17,10 +17,13 @@
 pub mod fake;
 /// Real PJRT backend, gated: the `xla` crate binding xla_extension is not
 /// available in every build environment. Without the `pjrt` feature an
-/// API-compatible stub is compiled that fails at `load` time.
-#[cfg(feature = "pjrt")]
+/// API-compatible stub is compiled that fails at `load` time. The
+/// `pjrt-stub` feature forces the stub even WITH `pjrt` enabled, so CI
+/// can exercise the feature-gated build (`--features pjrt,pjrt-stub`)
+/// without vendoring the xla crate.
+#[cfg(all(feature = "pjrt", not(feature = "pjrt-stub")))]
 pub mod pjrt;
-#[cfg(not(feature = "pjrt"))]
+#[cfg(any(not(feature = "pjrt"), feature = "pjrt-stub"))]
 #[path = "pjrt_stub.rs"]
 pub mod pjrt;
 pub mod sim;

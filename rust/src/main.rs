@@ -51,6 +51,8 @@ sharing one device set; select per request via the x-ensemble header")
         .opt("p99-slo-ms", None, "serve: reconfig controller p99 objective (ms)")
         .opt("profiles", None, "measured profile store (JSON): plan on profiled \
 costs; serve exposes /v1/profiles and calibrates online")
+        .opt("max-cell-age-s", None, "ignore profile cells older than SECONDS \
+(fall back to analytic for them); default: trust forever")
         .opt("out", None, "profile: output path (default profiles.json)")
         .opt("batches", None, "profile: comma-separated batch sizes (default 8,16,32,64,128)")
         .opt("reps", None, "profile: measured predicts per cell (default 3)")
@@ -142,6 +144,10 @@ fn config_from(args: &ensemble_serve::util::cli::Args) -> anyhow::Result<ServerC
     if let Some(v) = args.get("profiles") {
         cfg.profiles = Some(v.to_string());
     }
+    if let Some(v) = args.get_u64("max-cell-age-s")? {
+        anyhow::ensure!(v > 0, "max-cell-age-s must be positive");
+        cfg.max_cell_age_s = Some(v);
+    }
     Ok(cfg)
 }
 
@@ -153,10 +159,26 @@ fn cost_model_from(cfg: &ServerConfig)
     match &cfg.profiles {
         Some(path) => {
             let store = Arc::new(ProfileStore::load(path)?);
-            log::info!("profiled cost model: {} cells from {path}", store.len());
+            store.set_max_cell_age_s(cfg.max_cell_age_s);
+            match cfg.max_cell_age_s {
+                Some(age) => log::info!(
+                    "profiled cost model: {} cells from {path} (cells older than \
+                     {age}s fall back to analytic)",
+                    store.len()
+                ),
+                None => log::info!("profiled cost model: {} cells from {path}", store.len()),
+            }
             Ok((Arc::new(ProfiledCost::new(Arc::clone(&store))), Some(store)))
         }
-        None => Ok((ensemble_serve::cost::analytic(), None)),
+        None => {
+            // an age limit without a store would be a silent no-op: the
+            // operator believes a staleness guard is active — refuse
+            anyhow::ensure!(
+                cfg.max_cell_age_s.is_none(),
+                "max-cell-age-s only applies to a profiled cost model (set --profiles)"
+            );
+            Ok((ensemble_serve::cost::analytic(), None))
+        }
     }
 }
 

@@ -37,9 +37,23 @@ pub struct EngineMetrics {
     pub images_predicted: AtomicU64, // images × models
     pub requests_completed: AtomicU64,
     pub worker_errors: AtomicU64,
+    /// Completed drain-then-build swaps (the staged fallback that gates
+    /// intake when side-by-side build is infeasible).
+    pub drain_swaps: AtomicU64,
+    /// Drain-then-build build failures that rolled back to the old
+    /// matrix (the system kept serving the previous allocation).
+    pub swap_rollbacks: AtomicU64,
+    /// Cumulative intake-gated time across drain-then-build gaps, µs —
+    /// the engine's total unavailability window.
+    pub swap_gap_us: AtomicU64,
+    /// `predict` calls parked at the intake gate during gaps.
+    pub requests_parked: AtomicU64,
     /// Worker-pool generation currently serving (starts at 1, bumped by
     /// each live reconfiguration).
     pub generation: AtomicU64,
+    /// Drain-timed-out generations still pinning device memory (gauge,
+    /// refreshed by every lingering sweep).
+    pub lingering_generations: AtomicU64,
     /// End-to-end `predict` latency, engine-level (the server keeps its
     /// own HTTP-inclusive histogram on top).
     pub request_latency: LatencyHistogram,
@@ -74,7 +88,12 @@ impl EngineMetrics {
             ("images_predicted", g(&self.images_predicted)),
             ("requests_completed", g(&self.requests_completed)),
             ("worker_errors", g(&self.worker_errors)),
+            ("drain_swaps", g(&self.drain_swaps)),
+            ("swap_rollbacks", g(&self.swap_rollbacks)),
+            ("swap_gap_us", g(&self.swap_gap_us)),
+            ("requests_parked", g(&self.requests_parked)),
             ("generation", g(&self.generation)),
+            ("lingering_generations", g(&self.lingering_generations)),
         ]
     }
 

@@ -20,10 +20,11 @@ use std::time::{Duration, Instant};
 
 use anyhow::ensure;
 
-use crate::engine::{InferenceSystem, SwapReport};
+use crate::engine::{InferenceSystem, SwapReport, SwapStrategy};
 use crate::reconfig::monitor::{LoadMonitor, LoadSnapshot};
 use crate::reconfig::planner::{self, PlannerConfig};
 use crate::reconfig::policy::{self, Decision, PolicyConfig};
+use crate::reconfig::ReconfigBusy;
 use crate::util::json::Json;
 
 /// Controller knobs.
@@ -90,7 +91,19 @@ pub struct StatusReport {
 
 /// The one JSON shape of a [`SwapReport`], shared by the
 /// `POST /v1/reconfigure` response and `GET /v1/reconfig/status`.
+/// Milliseconds-or-null JSON of a swap's unavailability gap — shared by
+/// every route that renders a [`SwapReport`] (single-tenant status,
+/// multi-tenant status and the admin reconfigure responses), so the
+/// gap's unit and null-ness cannot drift between them.
+pub fn gap_ms_json(r: &SwapReport) -> Json {
+    match r.gap {
+        Some(g) => Json::Num(g.as_secs_f64() * 1e3),
+        None => Json::Null,
+    }
+}
+
 pub fn swap_report_json(r: &SwapReport) -> Json {
+    let gap = gap_ms_json(r);
     Json::from_pairs([
         ("from_generation", Json::Num(r.from_generation as f64)),
         ("to_generation", Json::Num(r.to_generation as f64)),
@@ -98,6 +111,9 @@ pub fn swap_report_json(r: &SwapReport) -> Json {
         ("build_ms", Json::Num(r.build.as_secs_f64() * 1e3)),
         ("drain_ms", Json::Num(r.drain.as_secs_f64() * 1e3)),
         ("drain_complete", Json::Bool(r.drain_complete)),
+        ("strategy", Json::Str(r.strategy.name().to_string())),
+        ("gap_ms", gap),
+        ("parked", Json::Num(r.parked as f64)),
     ])
 }
 
@@ -257,7 +273,11 @@ impl ReconfigController {
         // Check for it directly and force a rebuild (the engine accepts
         // an identical matrix for this case).
         let decision = if let Some(err) = self.system.active_error() {
-            Decision::Replan { reason: format!("generation error: {err}"), force: true }
+            Decision::Replan {
+                reason: format!("generation error: {err}"),
+                force: true,
+                allow_gap: true,
+            }
         } else {
             policy::decide(
                 &self.opts.policy,
@@ -272,7 +292,7 @@ impl ReconfigController {
             Decision::Hold(why) => {
                 self.state.lock().unwrap().last_decision = format!("hold: {why}");
             }
-            Decision::Replan { reason, force } => {
+            Decision::Replan { reason, force, allow_gap } => {
                 // back off after ANY recent attempt, not just completed
                 // swaps: the planner is cheap but not free, and the
                 // trigger may persist on an allocation the planner
@@ -294,7 +314,9 @@ impl ReconfigController {
                         format!("hold: replan backoff ({reason})");
                     return;
                 }
-                match self.replan(&reason, force) {
+                let strategy =
+                    if allow_gap { SwapStrategy::Auto } else { SwapStrategy::SideBySide };
+                match self.replan(&reason, force, strategy) {
                     Ok(_) => {}
                     Err(e) => {
                         self.state.lock().unwrap().last_decision =
@@ -307,11 +329,38 @@ impl ReconfigController {
 
     /// Operator-forced replan (admin endpoint): plans on the surviving
     /// devices and swaps unless the plan reproduces the active matrix.
+    /// Strategy defaults to [`SwapStrategy::Auto`] (side-by-side
+    /// preferred, drain-then-build fallback).
     pub fn reconfigure_now(&self, reason: &str) -> anyhow::Result<Option<SwapReport>> {
-        self.replan(reason, true)
+        self.reconfigure_now_with(reason, SwapStrategy::Auto)
     }
 
-    fn replan(&self, reason: &str, force: bool) -> anyhow::Result<Option<SwapReport>> {
+    /// [`Self::reconfigure_now`] with an explicit strategy. Refuses with
+    /// a typed [`ReconfigBusy`] (HTTP 409) while a drain-then-build gap
+    /// is in progress, instead of queueing behind the reconfig lock and
+    /// stacking a second outage onto the first.
+    pub fn reconfigure_now_with(
+        &self,
+        reason: &str,
+        strategy: SwapStrategy,
+    ) -> anyhow::Result<Option<SwapReport>> {
+        if self.system.swap_gap_in_progress() {
+            return Err(anyhow::Error::new(ReconfigBusy {
+                detail: format!(
+                    "a drain-then-build gap is in progress on generation {}",
+                    self.system.generation()
+                ),
+            }));
+        }
+        self.replan(reason, true, strategy)
+    }
+
+    fn replan(
+        &self,
+        reason: &str,
+        force: bool,
+        strategy: SwapStrategy,
+    ) -> anyhow::Result<Option<SwapReport>> {
         let _serialize = self.replan_lock.lock().unwrap();
         let failed: Vec<usize> = {
             let mut st = self.state.lock().unwrap();
@@ -322,23 +371,42 @@ impl ReconfigController {
         let devices = self.system.devices();
         let ensemble = self.system.ensemble();
         let active = self.system.matrix();
-        // plan within the memory every resident generation leaves free
-        // (the active one plus timed-out drains still pinned by stuck
-        // callers): the swap builds the new pool before draining. A
-        // DEAD active generation is excluded — reconfigure frees its
-        // pool before building, so budgeting its phantom footprint
+        let dead = self.system.active_error().is_some();
+        // co-residency split: a side-by-side swap must fit next to the
+        // live generation AND the timed-out drains still pinned by
+        // stuck callers; a drain-then-build swap frees the live
+        // generation first, so only the drains stay budgeted. A DEAD
+        // active generation is excluded from both — reconfigure frees
+        // its pool before building, so budgeting its phantom footprint
         // would wedge recovery for any ensemble over half a device.
-        let resident = if self.system.active_error().is_some() {
-            self.system.lingering_matrices()
-        } else {
-            self.system.resident_matrices()
-        };
-        let plan = planner::plan(ensemble, devices, &failed, &resident, &self.opts.planner)?;
+        let pinned = self.system.lingering_matrices();
+        let live = if dead { Vec::new() } else { vec![active.clone()] };
+        let mut staged =
+            planner::plan_staged(ensemble, devices, &failed, &live, &pinned,
+                                 &self.opts.planner, strategy)?;
+        // Tight-memory corner: when the co-residency budget only lets
+        // the planner re-derive the matrix already serving, the budget
+        // is the binding constraint — a drain-then-build plan may still
+        // improve. Only when the caller allowed a gap.
+        if staged.strategy == SwapStrategy::SideBySide
+            && strategy != SwapStrategy::SideBySide
+            && staged.plan.matrix == active
+        {
+            if let Ok(alt) = planner::plan_staged(ensemble, devices, &failed, &live,
+                                                  &pinned, &self.opts.planner,
+                                                  SwapStrategy::DrainThenBuild)
+            {
+                if alt.plan.matrix != active {
+                    staged = alt;
+                }
+            }
+        }
+        let plan = &staged.plan;
 
         // A reproduced matrix is normally a no-op — but when forced and
         // the active generation is dead, deploying the SAME matrix as a
         // fresh generation is the recovery path.
-        if plan.matrix == active && !(force && self.system.active_error().is_some()) {
+        if plan.matrix == active && !(force && dead) {
             self.state.lock().unwrap().last_decision =
                 format!("hold: planner reproduced the active matrix ({reason})");
             return Ok(None);
@@ -355,13 +423,26 @@ impl ReconfigController {
             }
         }
 
-        let report = self.system.reconfigure(&plan.matrix)?;
+        // the engine re-checks side-by-side feasibility for real (the
+        // planner's budget is model-based): when a gap was allowed,
+        // keep Auto so a plan classified side-by-side that still fails
+        // to build falls back instead of refusing
+        let engine_strategy = match staged.strategy {
+            SwapStrategy::DrainThenBuild => SwapStrategy::DrainThenBuild,
+            _ if strategy == SwapStrategy::SideBySide => SwapStrategy::SideBySide,
+            _ => SwapStrategy::Auto,
+        };
+        let report = self.system.reconfigure_with(&plan.matrix, engine_strategy)?;
         // the window now describes the PREVIOUS generation (other
         // worker counts, other latencies): start fresh
         self.monitor.reset();
+        let mode = match report.gap {
+            Some(g) => format!("drain_then_build, gap {:.1} ms", g.as_secs_f64() * 1e3),
+            None => report.strategy.name().to_string(),
+        };
         let mut st = self.state.lock().unwrap();
         st.last_decision = format!(
-            "swapped generation {} -> {} ({reason}; predicted {:.0} img/s)",
+            "swapped generation {} -> {} ({reason}; predicted {:.0} img/s, {mode})",
             report.from_generation, report.to_generation, plan.predicted_img_s
         );
         st.last_swap = Some(report.clone());
@@ -561,6 +642,53 @@ mod tests {
         let swapped = ctrl.reconfigure_now("operator rebalance").unwrap();
         assert!(swapped.is_some());
         assert!(!sys.matrix().device_workers(0).is_empty());
+    }
+
+    #[test]
+    fn tight_memory_forced_replan_takes_the_staged_path() {
+        use crate::exec::sim::SimExecutor;
+        // ResNet152@64 fills ~10.7 GB of the single 16 GB V100: at a
+        // minimum batch of 16 (~6.3 GB) no plan can co-reside, so the
+        // pre-fallback controller refused this swap forever
+        let e = ensemble(EnsembleId::Imn1);
+        let d = DeviceSet::hgx(1);
+        let mut a = AllocationMatrix::zeroed(d.len(), e.len());
+        a.set(0, 0, 64);
+        let ex = SimExecutor::new(d.clone(), 50_000.0);
+        let sys = Arc::new(
+            InferenceSystem::build(&a, &e, ex, EngineOptions::default()).unwrap(),
+        );
+        let mut opts = test_opts();
+        opts.planner.default_batch = 16;
+        // deterministic: adopt the Algorithm 1 packing (@16) verbatim
+        opts.planner.greedy = crate::alloc::greedy::GreedyConfig {
+            max_iter: 0,
+            devices_minus_models_rule: false,
+            ..Default::default()
+        };
+        let planner_cfg = opts.planner.clone();
+        let ctrl = ReconfigController::start(Arc::clone(&sys), opts);
+        ctrl.stop();
+
+        // the old behavior: a side-by-side-only plan is infeasible
+        assert!(
+            planner::plan(&e, sys.devices(), &[], &[sys.matrix()], &planner_cfg).is_err(),
+            "side-by-side co-residency should be infeasible in this fixture"
+        );
+
+        let report = ctrl
+            .reconfigure_now("tight-memory rebalance")
+            .unwrap()
+            .expect("Auto must complete the swap via drain-then-build");
+        assert_eq!(report.strategy, SwapStrategy::DrainThenBuild);
+        assert!(report.gap.is_some());
+        assert_eq!(sys.generation(), 2);
+        assert_eq!(sys.matrix().get(0, 0), 16, "A1 packing adopted:\n{}", sys.matrix());
+        let x = vec![0.1; 2 * e.members[0].input_elems_per_image()];
+        assert!(sys.predict(x, 2).is_ok());
+        let status = ctrl.status();
+        assert!(status.last_decision.contains("drain_then_build"),
+                "{}", status.last_decision);
     }
 
     #[test]

@@ -35,7 +35,15 @@
 //! ([`crate::engine::generation`]): build the new worker generation in
 //! the background, atomically switch the routing, drain the old
 //! generation's in-flight requests, tear it down — no request is dropped
-//! or answered twice.
+//! or answered twice. When the devices cannot host both generations at
+//! once (the paper's "ensemble nearly fills the hardware" regime), the
+//! planner classifies the replan as [`SwapStrategy::DrainThenBuild`]
+//! ([`planner::plan_staged`]) and the engine takes the staged path:
+//! park incoming requests, drain and free the live generation, build in
+//! the freed memory, replay — with rollback to the old matrix on build
+//! failure. The policy only allows that bounded unavailability for
+//! health triggers (SLO breach, backlog, failure), never for idle
+//! rebalances.
 
 pub mod controller;
 pub mod monitor;
@@ -44,7 +52,29 @@ pub mod policy;
 pub mod tenancy;
 
 pub use controller::{ReconfigController, ReconfigOptions, StatusReport};
+pub use crate::engine::SwapStrategy;
 pub use monitor::{LoadMonitor, LoadSnapshot};
-pub use planner::{plan, plan_joint, JointPlan, Plan, PlannerConfig, TenantSpec};
+pub use planner::{
+    plan, plan_joint, plan_staged, JointPlan, Plan, PlannerConfig, StagedPlan, TenantSpec,
+};
 pub use policy::{decide, Decision, PolicyConfig};
 pub use tenancy::{MultiTenantController, MultiTenantOptions, Tenant};
+
+/// Typed refusal of an operator-forced replan that arrives while a
+/// drain-then-build unavailability gap is in progress (`409 Conflict`
+/// on the admin route). Queueing the replan behind the reconfig lock
+/// would stack a second outage onto the gap the operator is already
+/// watching — the request is rejected instead; retry once
+/// `/v1/reconfig/status` shows the swap finished.
+#[derive(Debug, Clone)]
+pub struct ReconfigBusy {
+    pub detail: String,
+}
+
+impl std::fmt::Display for ReconfigBusy {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "reconfiguration busy: {}", self.detail)
+    }
+}
+
+impl std::error::Error for ReconfigBusy {}

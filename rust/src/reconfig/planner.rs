@@ -27,6 +27,7 @@ use crate::alloc::memory::device_usage_mb_with;
 use crate::alloc::worstfit::worst_fit_decreasing_with;
 use crate::cost::CostModel;
 use crate::device::DeviceSet;
+use crate::engine::SwapStrategy;
 use crate::model::Ensemble;
 use crate::optimizer::analytic::{
     estimate_throughput_with, estimate_weighted_throughput_with,
@@ -115,6 +116,69 @@ pub fn plan(
         }
     }
     Ok(Plan { matrix, predicted_img_s: report.best_speed, survivors })
+}
+
+/// A [`Plan`] plus the swap strategy it needs: `SideBySide` when the
+/// matrix was budgeted to fit next to the live generation(s),
+/// `DrainThenBuild` when it only fits after the live generation is
+/// drained and freed (never `Auto` — the field records the resolution).
+#[derive(Debug, Clone)]
+pub struct StagedPlan {
+    pub plan: Plan,
+    pub strategy: SwapStrategy,
+}
+
+/// [`plan`] with strategy classification (the drain-then-build swap
+/// path). `live` is the allocation(s) a side-by-side build must
+/// co-reside with (the healthy active generation; empty when it is
+/// dead); `pinned` the allocations that stay resident through EITHER
+/// strategy (timed-out drains still held by stuck callers).
+///
+/// * `SideBySide` — budget around `live` + `pinned`; fail if infeasible
+///   (the pre-drain-then-build behavior).
+/// * `DrainThenBuild` — budget around `pinned` only: the engine frees
+///   the live generation before building, so the plan may use its
+///   memory.
+/// * `Auto` — try side-by-side first; when the co-residency budget is
+///   infeasible, fall back to the drain-then-build budget. This is the
+///   planner-side half of the co-residency check: the returned strategy
+///   tells the caller which engine path the matrix needs.
+pub fn plan_staged(
+    ensemble: &Ensemble,
+    devices: &DeviceSet,
+    failed: &[usize],
+    live: &[AllocationMatrix],
+    pinned: &[AllocationMatrix],
+    cfg: &PlannerConfig,
+    strategy: SwapStrategy,
+) -> anyhow::Result<StagedPlan> {
+    let side_by_side = || -> anyhow::Result<StagedPlan> {
+        let resident: Vec<AllocationMatrix> =
+            live.iter().chain(pinned.iter()).cloned().collect();
+        Ok(StagedPlan {
+            plan: plan(ensemble, devices, failed, &resident, cfg)?,
+            strategy: SwapStrategy::SideBySide,
+        })
+    };
+    let drain_then_build = || -> anyhow::Result<StagedPlan> {
+        Ok(StagedPlan {
+            plan: plan(ensemble, devices, failed, pinned, cfg)?,
+            strategy: SwapStrategy::DrainThenBuild,
+        })
+    };
+    match strategy {
+        SwapStrategy::SideBySide => side_by_side(),
+        SwapStrategy::DrainThenBuild => drain_then_build(),
+        SwapStrategy::Auto => match side_by_side() {
+            Ok(staged) => Ok(staged),
+            Err(side_err) => drain_then_build().map_err(|e| {
+                e.context(format!(
+                    "infeasible even with the live generation drained \
+                     (side-by-side budget failed first: {side_err:#})"
+                ))
+            }),
+        },
+    }
 }
 
 /// Closed-form score of an existing full-indexed matrix under `cost`
@@ -458,6 +522,68 @@ mod tests {
         let e = ensemble(EnsembleId::Imn12);
         let d = DeviceSet::hgx(1);
         assert!(plan(&e, &d, &[0], &[], &PlannerConfig::default()).is_err());
+    }
+
+    #[test]
+    fn staged_plan_classifies_the_strategy_by_co_residency() {
+        // ResNet152@64 fills ~10.7 GB of the single 16 GB V100: a plan
+        // at min batch 16 (~6.3 GB) cannot co-reside, but fits alone
+        let e = ensemble(EnsembleId::Imn1);
+        let d = DeviceSet::hgx(1);
+        let mut live = AllocationMatrix::zeroed(d.len(), e.len());
+        live.set(0, 0, 64);
+        let cfg = PlannerConfig {
+            default_batch: 16,
+            // deterministic: adopt the Algorithm 1 packing verbatim
+            greedy: GreedyConfig {
+                max_iter: 0,
+                devices_minus_models_rule: false,
+                ..GreedyConfig::default()
+            },
+            ..PlannerConfig::default()
+        };
+        let live = vec![live];
+
+        // the pre-fallback behavior: side-by-side is refused outright
+        let side = plan_staged(&e, &d, &[], &live, &[], &cfg, SwapStrategy::SideBySide);
+        assert!(side.is_err(), "co-residency budget must be infeasible");
+
+        // Auto falls back and classifies the plan as drain-then-build
+        let staged = plan_staged(&e, &d, &[], &live, &[], &cfg, SwapStrategy::Auto).unwrap();
+        assert_eq!(staged.strategy, SwapStrategy::DrainThenBuild);
+        assert!(staged.plan.matrix.all_models_placed());
+        assert!(staged.plan.predicted_img_s > 0.0);
+        // the plan fits the device ALONE (only the drained budget)
+        assert!(crate::alloc::memory::fit_mem(&staged.plan.matrix, &e, &d));
+
+        // with co-residency room, Auto stays side-by-side
+        let d4 = DeviceSet::hgx(4);
+        let mut live4 = AllocationMatrix::zeroed(d4.len(), e.len());
+        live4.set(0, 0, 64);
+        let staged = plan_staged(&e, &d4, &[], &[live4], &[], &cfg, SwapStrategy::Auto)
+            .unwrap();
+        assert_eq!(staged.strategy, SwapStrategy::SideBySide);
+    }
+
+    #[test]
+    fn staged_plan_keeps_pinned_drains_budgeted_in_both_modes() {
+        // a timed-out drain (~5.5 GB) stays resident through either
+        // strategy: the drain-then-build budget must still subtract it
+        let e = ensemble(EnsembleId::Imn1);
+        let d = DeviceSet::hgx(1);
+        let mut pinned = AllocationMatrix::zeroed(d.len(), e.len());
+        pinned.set(0, 0, 8);
+        let cfg = PlannerConfig::default();
+        let staged = plan_staged(&e, &d, &[], &[], &[pinned.clone()], &cfg,
+                                 SwapStrategy::DrainThenBuild)
+            .unwrap();
+        use crate::alloc::memory::device_usage_mb;
+        for dev in 0..d.len() {
+            let both = device_usage_mb(&staged.plan.matrix, &e, dev)
+                + device_usage_mb(&pinned, &e, dev);
+            assert!(both <= d[dev].mem_mb as f64,
+                    "device {dev}: {both:.0} MB with pinned drain > {}", d[dev].mem_mb);
+        }
     }
 
     #[test]

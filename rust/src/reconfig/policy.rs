@@ -63,8 +63,13 @@ pub enum Decision {
     Hold(String),
     /// Run the planner. `force` skips the predicted-gain gate (device
     /// failure: any feasible allocation on the survivors beats a broken
-    /// one).
-    Replan { reason: String, force: bool },
+    /// one). `allow_gap` permits the drain-then-build fallback when the
+    /// new matrix cannot be built next to the live generation: true for
+    /// health triggers (failure, SLO breach, backlog) where the breach
+    /// outweighs a bounded unavailability gap, false for voluntary
+    /// rebalances (utilization imbalance) — a tidy-up must never take
+    /// the ensemble offline.
+    Replan { reason: String, force: bool, allow_gap: bool },
 }
 
 /// Evaluate the policy.
@@ -88,6 +93,7 @@ pub fn decide(
         return Decision::Replan {
             reason: "active allocation uses a failed device".into(),
             force: true,
+            allow_gap: true,
         };
     }
     if let Some(t) = since_last_swap {
@@ -109,6 +115,7 @@ pub fn decide(
                 cfg.max_backlog
             ),
             force: false,
+            allow_gap: true,
         };
     }
     let Some(s) = snapshot else {
@@ -122,6 +129,7 @@ pub fn decide(
         return Decision::Replan {
             reason: format!("windowed p99 {:.1} ms above SLO {:.1} ms", s.p99_ms, cfg.p99_slo_ms),
             force: false,
+            allow_gap: true,
         };
     }
     if s.completed < cfg.min_window_requests {
@@ -140,6 +148,7 @@ pub fn decide(
                 "device utilization imbalance: spread {spread:.2} at max GPU util {gpu_max:.2}"
             ),
             force: false,
+            allow_gap: false,
         };
     }
     Decision::Hold(format!(
@@ -175,7 +184,10 @@ mod tests {
         let cfg = PolicyConfig::default();
         let d = decide(&cfg, None, &[true], 0, true, Some(Duration::ZERO));
         match d {
-            Decision::Replan { force, .. } => assert!(force),
+            Decision::Replan { force, allow_gap, .. } => {
+                assert!(force);
+                assert!(allow_gap, "failure replans may pay a gap");
+            }
             other => panic!("expected forced replan, got {other:?}"),
         }
     }
@@ -205,8 +217,9 @@ mod tests {
         let s = snap(50, 250.0, vec![0.5, 0.5]);
         let d = decide(&cfg, Some(&s), &[true, true], 0, false, None);
         match d {
-            Decision::Replan { reason, force } => {
+            Decision::Replan { reason, force, allow_gap } => {
                 assert!(!force);
+                assert!(allow_gap, "an SLO breach outweighs a bounded gap");
                 assert!(reason.contains("p99"), "{reason}");
             }
             other => panic!("{other:?}"),
@@ -243,10 +256,15 @@ mod tests {
     #[test]
     fn imbalance_replans_only_when_hot() {
         let cfg = PolicyConfig { p99_slo_ms: 1e9, ..Default::default() };
-        // imbalanced AND hot
+        // imbalanced AND hot — but a rebalance must never pay a gap
         let s = snap(50, 1.0, vec![0.95, 0.05, 0.0]);
         let d = decide(&cfg, Some(&s), &[true, true, false], 0, false, None);
-        assert!(is_replan(&d), "{d:?}");
+        match &d {
+            Decision::Replan { allow_gap, .. } => {
+                assert!(!allow_gap, "idle rebalances must stay zero-downtime")
+            }
+            other => panic!("expected replan, got {other:?}"),
+        }
         // imbalanced but cold: hold
         let s = snap(50, 1.0, vec![0.4, 0.0, 0.0]);
         let d = decide(&cfg, Some(&s), &[true, true, false], 0, false, None);

@@ -33,10 +33,12 @@ use std::time::{Duration, Instant};
 use anyhow::ensure;
 
 use crate::alloc::matrix::AllocationMatrix;
-use crate::engine::{InferenceSystem, SwapReport};
+use crate::engine::{InferenceSystem, SwapReport, SwapStrategy};
+use crate::model::Ensemble;
 use crate::reconfig::monitor::{LoadMonitor, LoadSnapshot};
 use crate::reconfig::planner::{self, JointPlan, PlannerConfig, TenantSpec};
 use crate::reconfig::policy::{self, Decision, PolicyConfig};
+use crate::reconfig::ReconfigBusy;
 use crate::util::json::Json;
 
 /// One tenant under the controller's management.
@@ -270,13 +272,22 @@ impl MultiTenantController {
         // by the replan cooldown after a replan that only favored the
         // first
         let mut fired = vec![false; self.tenants.len()];
+        // OR'd across ALL fired tenants, not taken from the reported
+        // trigger: tenant A's imbalance rebalance (no gap) must not
+        // mask tenant B's SLO breach (gap allowed) just because A came
+        // first in iteration order
+        let mut gap_allowed = false;
         for (i, t) in self.tenants.iter().enumerate() {
             let gpu_mask: Vec<bool> = t.system.devices().iter().map(|d| d.is_gpu()).collect();
             let active_uses_failed = failed
                 .iter()
                 .any(|&d| !t.system.matrix().device_workers(d).is_empty());
             let decision = if let Some(err) = t.system.active_error() {
-                Decision::Replan { reason: format!("generation error: {err}"), force: true }
+                Decision::Replan {
+                    reason: format!("generation error: {err}"),
+                    force: true,
+                    allow_gap: true,
+                }
             } else {
                 policy::decide(
                     &self.opts.policy,
@@ -287,8 +298,9 @@ impl MultiTenantController {
                     since_swap,
                 )
             };
-            if let Decision::Replan { reason, force } = decision {
+            if let Decision::Replan { reason, force, allow_gap } = decision {
                 fired[i] = true;
+                gap_allowed |= allow_gap;
                 let reason = format!("tenant '{}': {reason}", t.name);
                 // a forced trigger outranks a voluntary one; otherwise
                 // first-come keeps the reported trigger
@@ -333,18 +345,43 @@ impl MultiTenantController {
                 }
             })
             .collect();
-        if let Err(e) = self.replan(&reason, force, &pressures) {
+        let strategy = if gap_allowed { SwapStrategy::Auto } else { SwapStrategy::SideBySide };
+        if let Err(e) = self.replan(&reason, force, &pressures, strategy) {
             self.state.lock().unwrap().last_decision = format!("replan ({reason}) failed: {e:#}");
         }
     }
 
     /// Operator-forced joint replan (admin endpoint): no pressure
-    /// scaling, no hysteresis gate.
+    /// scaling, no hysteresis gate. Strategy defaults to
+    /// [`SwapStrategy::Auto`] (side-by-side preferred, drain-then-build
+    /// fallback when the joint plan cannot co-reside).
     pub fn reconfigure_now(
         &self,
         reason: &str,
     ) -> anyhow::Result<Vec<(String, SwapReport)>> {
-        self.replan(reason, true, &vec![1.0; self.tenants.len()])
+        self.reconfigure_now_with(reason, SwapStrategy::Auto)
+    }
+
+    /// [`Self::reconfigure_now`] with an explicit strategy. Refuses with
+    /// a typed [`ReconfigBusy`] (HTTP 409) while any tenant is inside a
+    /// drain-then-build gap, instead of queueing behind the replan lock
+    /// and stacking a second outage onto the first.
+    pub fn reconfigure_now_with(
+        &self,
+        reason: &str,
+        strategy: SwapStrategy,
+    ) -> anyhow::Result<Vec<(String, SwapReport)>> {
+        for t in &self.tenants {
+            if t.system.swap_gap_in_progress() {
+                return Err(anyhow::Error::new(ReconfigBusy {
+                    detail: format!(
+                        "tenant '{}' is inside a drain-then-build gap",
+                        t.name
+                    ),
+                }));
+            }
+        }
+        self.replan(reason, true, &vec![1.0; self.tenants.len()], strategy)
     }
 
     fn specs(&self, pressures: &[f64]) -> Vec<TenantSpec> {
@@ -360,11 +397,31 @@ impl MultiTenantController {
             .collect()
     }
 
+    /// Every allocation pinning device memory right now. `with_live`
+    /// includes the healthy active generations (the side-by-side
+    /// budget); without it only dead pools' leftovers and timed-out
+    /// drains remain (the drain-then-build budget — each tenant's swap
+    /// frees its own live generation before building).
+    fn resident_allocations(&self, with_live: bool) -> Vec<(Ensemble, AllocationMatrix)> {
+        let mut resident = Vec::new();
+        for t in &self.tenants {
+            let e = t.system.ensemble().clone();
+            let mats = if !with_live || t.system.active_error().is_some() {
+                t.system.lingering_matrices()
+            } else {
+                t.system.resident_matrices()
+            };
+            resident.extend(mats.into_iter().map(|m| (e.clone(), m)));
+        }
+        resident
+    }
+
     fn replan(
         &self,
         reason: &str,
         force: bool,
         pressures: &[f64],
+        strategy: SwapStrategy,
     ) -> anyhow::Result<Vec<(String, SwapReport)>> {
         let _serialize = self.replan_lock.lock().unwrap();
         let failed: Vec<usize> = {
@@ -376,30 +433,72 @@ impl MultiTenantController {
         let devices = self.tenants[0].system.devices();
         let specs = self.specs(pressures);
 
-        // every allocation pinning device memory right now: the live
-        // generation of every tenant (minus dead ones — reconfigure
-        // frees a dead pool before rebuilding) plus timed-out drains
-        let mut resident = Vec::new();
-        for t in &self.tenants {
-            let e = t.system.ensemble().clone();
-            let mats = if t.system.active_error().is_some() {
-                t.system.lingering_matrices()
-            } else {
-                t.system.resident_matrices()
-            };
-            resident.extend(mats.into_iter().map(|m| (e.clone(), m)));
-        }
-        let plan: JointPlan =
-            planner::plan_joint(&specs, devices, &failed, &resident, &self.opts.planner)?;
+        // side-by-side joint budget first; when it is infeasible and a
+        // gap is allowed, re-plan with only the pinned allocations
+        // budgeted — each tenant's swap then drains-then-builds its own
+        // slice (engine Auto: tenants whose slice still fits beside
+        // their live generation swap with zero downtime)
+        let full = self.resident_allocations(true);
+        let (mut plan, mut gapped): (JointPlan, bool) = match strategy {
+            SwapStrategy::SideBySide => (
+                planner::plan_joint(&specs, devices, &failed, &full, &self.opts.planner)?,
+                false,
+            ),
+            SwapStrategy::DrainThenBuild => (
+                planner::plan_joint(&specs, devices, &failed,
+                                    &self.resident_allocations(false),
+                                    &self.opts.planner)?,
+                true,
+            ),
+            SwapStrategy::Auto => {
+                match planner::plan_joint(&specs, devices, &failed, &full,
+                                          &self.opts.planner) {
+                    Ok(p) => (p, false),
+                    Err(side_err) => {
+                        log::warn!(
+                            "joint side-by-side replan infeasible ({side_err:#}); \
+                             retrying with a drain-then-build budget"
+                        );
+                        let p = planner::plan_joint(&specs, devices, &failed,
+                                                    &self.resident_allocations(false),
+                                                    &self.opts.planner)
+                            .map_err(|e| e.context(format!(
+                                "infeasible even with live generations drained \
+                                 (side-by-side budget failed first: {side_err:#})"
+                            )))?;
+                        (p, true)
+                    }
+                }
+            }
+        };
 
         let current: Vec<AllocationMatrix> =
             self.tenants.iter().map(|t| t.system.matrix()).collect();
-        let changed: Vec<usize> = (0..self.tenants.len())
-            .filter(|&i| {
-                plan.matrices[i] != current[i]
-                    || self.tenants[i].system.active_error().is_some()
-            })
-            .collect();
+        let changed_of = |plan: &JointPlan| -> Vec<usize> {
+            (0..self.tenants.len())
+                .filter(|&i| {
+                    plan.matrices[i] != current[i]
+                        || self.tenants[i].system.active_error().is_some()
+                })
+                .collect()
+        };
+        let mut changed = changed_of(&plan);
+        // tight-memory corner: side-by-side feasible only by re-deriving
+        // every serving matrix — the co-residency budget is the binding
+        // constraint. Retry with the drained budget when a gap is allowed.
+        if changed.is_empty() && strategy == SwapStrategy::Auto {
+            if let Ok(alt) = planner::plan_joint(&specs, devices, &failed,
+                                                 &self.resident_allocations(false),
+                                                 &self.opts.planner)
+            {
+                let alt_changed = changed_of(&alt);
+                if !alt_changed.is_empty() {
+                    plan = alt;
+                    changed = alt_changed;
+                    gapped = true;
+                }
+            }
+        }
         if changed.is_empty() {
             self.state.lock().unwrap().last_decision =
                 format!("hold: planner reproduced every active matrix ({reason})");
@@ -418,13 +517,20 @@ impl MultiTenantController {
             }
         }
 
-        // sequential hot-swaps; the plan fits next to every resident
-        // allocation, so order does not matter for memory
+        // sequential hot-swaps. Side-by-side plans fit next to every
+        // resident allocation, so order does not matter for memory; a
+        // gapped plan is best-effort per tenant — engine Auto swaps
+        // zero-downtime where possible, drains-then-builds (with
+        // rollback) where not, and a tenant wedged by a sibling's
+        // not-yet-freed generation fails cleanly and is retried on a
+        // later tick once the sibling has swapped.
+        let tenant_strategy =
+            if gapped { SwapStrategy::Auto } else { SwapStrategy::SideBySide };
         let mut swaps = Vec::new();
         let mut errors = Vec::new();
         for &i in &changed {
             let t = &self.tenants[i];
-            match t.system.reconfigure(&plan.matrices[i]) {
+            match t.system.reconfigure_with(&plan.matrices[i], tenant_strategy) {
                 Ok(report) => {
                     t.monitor.reset();
                     swaps.push((t.name.clone(), report));
@@ -542,6 +648,8 @@ impl MultiTenantController {
                     ("from_generation", Json::Num(r.from_generation as f64)),
                     ("to_generation", Json::Num(r.to_generation as f64)),
                     ("drain_complete", Json::Bool(r.drain_complete)),
+                    ("strategy", Json::Str(r.strategy.name().to_string())),
+                    ("gap_ms", crate::reconfig::controller::gap_ms_json(r)),
                 ])
             })
             .collect();
@@ -647,6 +755,45 @@ mod tests {
         let mut bad = Tenant::new("w", s3);
         bad.weight = 0.0;
         assert!(MultiTenantController::start(vec![bad], test_opts()).is_err());
+    }
+
+    #[test]
+    fn tight_memory_forced_joint_replan_falls_back_to_drain() {
+        // one tenant whose generation fills most of the single V100:
+        // the joint side-by-side budget is infeasible at min batch 16,
+        // so the pre-fallback arbiter was stuck on the stale allocation
+        let d = DeviceSet::hgx(1);
+        let ex = SimExecutor::new(d.clone(), 50_000.0);
+        let mut a = AllocationMatrix::zeroed(d.len(), 1);
+        a.set(0, 0, 64);
+        let sys = build(&a, EnsembleId::Imn1, ex);
+        let mut opts = test_opts();
+        opts.planner.default_batch = 16;
+        // deterministic: adopt the Algorithm 1 packing (@16) verbatim
+        opts.planner.greedy = crate::alloc::greedy::GreedyConfig {
+            max_iter: 0,
+            devices_minus_models_rule: false,
+            ..Default::default()
+        };
+        let ctrl = MultiTenantController::start(
+            vec![Tenant::new("solo", Arc::clone(&sys))],
+            opts,
+        )
+        .unwrap();
+        ctrl.stop();
+
+        let swaps = ctrl.reconfigure_now("tight joint rebalance").unwrap();
+        assert_eq!(swaps.len(), 1, "status: {}", ctrl.last_decision());
+        assert_eq!(swaps[0].1.strategy, SwapStrategy::DrainThenBuild);
+        assert!(swaps[0].1.gap.is_some());
+        assert_eq!(sys.matrix().get(0, 0), 16, "A1 packing adopted:\n{}", sys.matrix());
+        let e = ensemble(EnsembleId::Imn1);
+        let x = vec![0.1; 2 * e.members[0].input_elems_per_image()];
+        assert!(sys.predict(x, 2).is_ok());
+        let j = ctrl.status_json();
+        let last = &j.get("last_swaps").unwrap().as_arr().unwrap()[0];
+        assert_eq!(last.get("strategy").unwrap().as_str(), Some("drain_then_build"));
+        assert!(last.get("gap_ms").unwrap().as_f64().unwrap() >= 0.0);
     }
 
     #[test]

@@ -19,11 +19,17 @@
 //! * `GET /v1/ensembles` — registered tenants with per-tenant stats.
 //! * `POST /v1/reconfigure` — admin: force a replan/hot-swap (joint
 //!   across all tenants under a multi-tenant controller); body may
-//!   carry `{"fail_device": d}`, `{"recover_device": d}` and/or
-//!   `{"reason": "..."}`. Requires a controller.
+//!   carry `{"fail_device": d}`, `{"recover_device": d}`,
+//!   `{"reason": "..."}` and/or `{"strategy":
+//!   "auto|side_by_side|drain_then_build"}` (default `auto`:
+//!   side-by-side preferred, drain-then-build fallback when the two
+//!   generations cannot co-reside). Answers `409 Conflict` while a
+//!   drain-then-build unavailability gap is already in progress.
+//!   Requires a controller.
 //! * `GET /v1/reconfig/status` — controller status: generation, swaps,
-//!   failed devices, last decision, windowed load (per tenant under a
-//!   multi-tenant controller).
+//!   failed devices, last decision, last swap (including its strategy,
+//!   unavailability `gap_ms` and parked-request count), windowed load
+//!   (per tenant under a multi-tenant controller).
 //! * `GET /v1/profiles` — the measured cost-model cells: per
 //!   (model, device-class, batch) measured latency next to the
 //!   analytic prediction (delta %), sample counts, source
@@ -36,9 +42,9 @@ use std::sync::{Arc, RwLock};
 use std::time::Instant;
 
 use crate::cost::ProfileStore;
-use crate::engine::InferenceSystem;
+use crate::engine::{InferenceSystem, SwapStrategy};
 use crate::metrics::LatencyHistogram;
-use crate::reconfig::{MultiTenantController, ReconfigController};
+use crate::reconfig::{MultiTenantController, ReconfigBusy, ReconfigController};
 use crate::server::cache::{request_key, PredictionCache};
 use crate::server::http::{Handler, HttpServer, Request, Response};
 use crate::server::selection::SystemRegistry;
@@ -224,6 +230,10 @@ fn stats(state: &ApiState, req: &Request) -> Response {
         Ok(pair) => pair,
         Err(resp) => return resp,
     };
+    // reclaim drain-timed-out generations even in deployments without a
+    // controller ticking — the stats scrape doubles as a sweep point
+    // (and refreshes the lingering_generations gauge this snapshot reads)
+    system.sweep_lingering();
     let latency = state.tenant_latency(&name);
     let mut fields: Vec<(&'static str, Json)> = system
         .metrics()
@@ -343,7 +353,11 @@ fn tenant_exposition(
         let k = snapshots[0][j].0;
         // prometheus convention: counters carry the _total suffix,
         // gauges do not
-        let (suffix, kind) = if k == "generation" { ("", "gauge") } else { ("_total", "counter") };
+        let (suffix, kind) = if k == "generation" || k == "lingering_generations" {
+            ("", "gauge")
+        } else {
+            ("_total", "counter")
+        };
         out.push_str(&format!("# TYPE ensemble_serve_{k}{suffix} {kind}\n"));
         for ((name, _), snap) in tenants.iter().zip(&snapshots) {
             out.push_str(&format!(
@@ -444,6 +458,10 @@ fn profiles_report(state: &ApiState, req: &Request) -> Response {
                 Some(m) => Json::Num(m),
                 None => Json::Null,
             };
+            // stale cells are no longer served to the planners (they
+            // fall back to analytic); flag them so the operator sees
+            // which measurements have aged out
+            let stale = !store.cell_fresh(&cell);
             Json::from_pairs([
                 ("model", Json::Str(key.model)),
                 ("device_class", Json::Str(key.device_class)),
@@ -455,10 +473,15 @@ fn profiles_report(state: &ApiState, req: &Request) -> Response {
                 ("samples", Json::Num(cell.samples as f64)),
                 ("source", Json::Str(cell.source.name().to_string())),
                 ("age_s", Json::Num(now.saturating_sub(cell.updated_unix_s) as f64)),
+                ("stale", Json::Bool(stale)),
             ])
         })
         .collect();
     let max_age = match store.max_age_s() {
+        Some(a) => Json::Num(a as f64),
+        None => Json::Null,
+    };
+    let age_limit = match store.cell_age_limit_s() {
         Some(a) => Json::Num(a as f64),
         None => Json::Null,
     };
@@ -469,6 +492,7 @@ fn profiles_report(state: &ApiState, req: &Request) -> Response {
             ("version", Json::Num(store.version() as f64)),
             ("cells", Json::Arr(cells)),
             ("max_age_s", max_age),
+            ("max_cell_age_s", age_limit),
         ])
         .to_string(),
     )
@@ -499,11 +523,21 @@ struct ReconfigureArgs {
     fail: Option<usize>,
     recover: Option<usize>,
     reason: Option<String>,
+    /// Swap mechanics: `auto` (default; side-by-side preferred,
+    /// drain-then-build fallback), `side_by_side` (refuse when the two
+    /// generations cannot co-reside) or `drain_then_build` (force the
+    /// staged swap).
+    strategy: SwapStrategy,
 }
 
 fn parse_reconfigure_body(body: &[u8]) -> Result<ReconfigureArgs, Response> {
     if body.is_empty() {
-        return Ok(ReconfigureArgs { fail: None, recover: None, reason: None });
+        return Ok(ReconfigureArgs {
+            fail: None,
+            recover: None,
+            reason: None,
+            strategy: SwapStrategy::Auto,
+        });
     }
     let doc = match std::str::from_utf8(body)
         .map_err(|e| e.to_string())
@@ -519,7 +553,7 @@ fn parse_reconfigure_body(body: &[u8]) -> Result<ReconfigureArgs, Response> {
         return Err(Response::text(400, "bad request: body must be a JSON object"));
     };
     for key in obj.keys() {
-        if !["fail_device", "recover_device", "reason"].contains(&key.as_str()) {
+        if !["fail_device", "recover_device", "reason", "strategy"].contains(&key.as_str()) {
             return Err(Response::text(400, &format!("bad request: unknown field '{key}'")));
         }
     }
@@ -540,7 +574,30 @@ fn parse_reconfigure_body(body: &[u8]) -> Result<ReconfigureArgs, Response> {
         Some(Json::Str(r)) => Some(r.clone()),
         Some(_) => return Err(Response::text(400, "bad request: reason must be a string")),
     };
-    Ok(ReconfigureArgs { fail, recover, reason })
+    let strategy = match doc.get("strategy") {
+        None => SwapStrategy::Auto,
+        Some(Json::Str(s)) => match SwapStrategy::parse(s) {
+            Some(s) => s,
+            None => {
+                return Err(Response::text(
+                    400,
+                    "bad request: strategy must be auto|side_by_side|drain_then_build",
+                ))
+            }
+        },
+        Some(_) => return Err(Response::text(400, "bad request: strategy must be a string")),
+    };
+    Ok(ReconfigureArgs { fail, recover, reason, strategy })
+}
+
+/// Map a replan failure: a typed [`ReconfigBusy`] (operator replan
+/// racing a drain-then-build gap) is `409 Conflict`, anything else is
+/// the 503 every transient control-plane failure gets.
+fn reconfigure_error(e: &anyhow::Error) -> Response {
+    match e.downcast_ref::<ReconfigBusy>() {
+        Some(busy) => Response::text(409, &busy.to_string()),
+        None => Response::text(503, &format!("reconfiguration failed: {e:#}")),
+    }
 }
 
 /// Fold the device marks' notes and the client's custom reason into the
@@ -574,7 +631,7 @@ fn reconfigure(state: &ApiState, req: &Request) -> Response {
                     Ok(r) => r,
                     Err(resp) => return resp,
                 };
-            match ctrl.reconfigure_now(&reason) {
+            match ctrl.reconfigure_now_with(&reason, args.strategy) {
                 Ok(Some(r)) => {
                     let mut fields = match crate::reconfig::controller::swap_report_json(&r) {
                         Json::Obj(map) => map,
@@ -591,7 +648,7 @@ fn reconfigure(state: &ApiState, req: &Request) -> Response {
                     ])
                     .to_string(),
                 ),
-                Err(e) => Response::text(503, &format!("reconfiguration failed: {e:#}")),
+                Err(e) => reconfigure_error(&e),
             }
         }
         AdminController::Multi(ctrl) => {
@@ -600,7 +657,7 @@ fn reconfigure(state: &ApiState, req: &Request) -> Response {
                     Ok(r) => r,
                     Err(resp) => return resp,
                 };
-            match ctrl.reconfigure_now(&reason) {
+            match ctrl.reconfigure_now_with(&reason, args.strategy) {
                 Ok(swaps) => {
                     let tenants: Vec<Json> = swaps
                         .iter()
@@ -609,6 +666,8 @@ fn reconfigure(state: &ApiState, req: &Request) -> Response {
                                 ("tenant", Json::Str(name.clone())),
                                 ("to_generation", Json::Num(r.to_generation as f64)),
                                 ("drain_complete", Json::Bool(r.drain_complete)),
+                                ("strategy", Json::Str(r.strategy.name().to_string())),
+                                ("gap_ms", crate::reconfig::controller::gap_ms_json(r)),
                             ])
                         })
                         .collect();
@@ -622,7 +681,7 @@ fn reconfigure(state: &ApiState, req: &Request) -> Response {
                         .to_string(),
                     )
                 }
-                Err(e) => Response::text(503, &format!("reconfiguration failed: {e:#}")),
+                Err(e) => reconfigure_error(&e),
             }
         }
     }
@@ -916,7 +975,18 @@ mod tests {
                                    EngineOptions::default())
                 .unwrap(),
         );
-        let store = Arc::new(ProfileStore::new());
+        // one ANCIENT calibration cell (unix second 1000) next to fresh
+        // ones: with an age limit set, it must surface as stale
+        let ancient = format!(
+            r#"{{"format":"ensemble-serve-profiles-v1",
+                 "cells":[{{"model":"{}","device_class":"{}","batch":64,
+                            "latency_ms":7.0,"updated_unix_s":1000}}]}}"#,
+            e.members[1].name,
+            d[0].class_key()
+        );
+        let store =
+            Arc::new(ProfileStore::from_json(&Json::parse(&ancient).unwrap()).unwrap());
+        store.set_max_cell_age_s(Some(3600));
         let analytic = e.members[0].predict_latency_ms(&d[0], 8);
         store.record(&e.members[0].name, &d[0].class_key(), 8, analytic * 2.0, None, 3);
         store.record("NotInThisEnsemble", &d[0].class_key(), 8, 5.0, None, 1);
@@ -927,7 +997,7 @@ mod tests {
         let j = Json::parse(std::str::from_utf8(&body).unwrap()).unwrap();
         assert_eq!(j.get("cost_model").unwrap().as_str(), Some("profiled"));
         let cells = j.get("cells").unwrap().as_arr().unwrap();
-        assert_eq!(cells.len(), 2);
+        assert_eq!(cells.len(), 3);
         let measured = cells
             .iter()
             .find(|c| c.get("model").unwrap().as_str() == Some(e.members[0].name.as_str()))
@@ -937,6 +1007,13 @@ mod tests {
         assert!((delta - 100.0).abs() < 1.0, "delta={delta}");
         assert!(measured.get("age_s").unwrap().as_f64().unwrap() < 60.0);
         assert_eq!(measured.get("source").unwrap().as_str(), Some("offline"));
+        assert_eq!(measured.get("stale"), Some(&Json::Bool(false)));
+        // the ancient cell is flagged stale (planners ignore it)
+        let old = cells
+            .iter()
+            .find(|c| c.get("model").unwrap().as_str() == Some(e.members[1].name.as_str()))
+            .unwrap();
+        assert_eq!(old.get("stale"), Some(&Json::Bool(true)));
         // unknown model: analytic column is null
         let foreign = cells
             .iter()
@@ -944,6 +1021,7 @@ mod tests {
             .unwrap();
         assert_eq!(foreign.get("analytic_ms"), Some(&Json::Null));
         assert!(j.get("max_age_s").unwrap().as_f64().is_some());
+        assert_eq!(j.get("max_cell_age_s").unwrap().as_f64(), Some(3600.0));
     }
 
     #[test]
@@ -1009,7 +1087,8 @@ mod tests {
         // swap: present-but-bad is rejected
         for bad in [&b"{\"fail_device\": \"3\"}"[..], b"{\"fail_device\": 1.7}",
                     b"{\"recover_device\": -1}", b"\"fail_device: 3\"",
-                    b"{\"fail_devise\": 3}", b"[3]", b"{\"reason\": 123}"] {
+                    b"{\"fail_devise\": 3}", b"[3]", b"{\"reason\": 123}",
+                    b"{\"strategy\": \"warp\"}", b"{\"strategy\": 3}"] {
             let (code, _) = http_request(srv.addr(), "POST", "/v1/reconfigure",
                                          "application/json", bad)
                 .unwrap();

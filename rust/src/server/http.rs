@@ -50,6 +50,7 @@ impl Response {
             400 => "400 Bad Request",
             404 => "404 Not Found",
             405 => "405 Method Not Allowed",
+            409 => "409 Conflict",
             413 => "413 Payload Too Large",
             431 => "431 Request Header Fields Too Large",
             500 => "500 Internal Server Error",

@@ -15,11 +15,13 @@ use std::time::{Duration, Instant};
 use ensemble_serve::alloc::greedy::GreedyConfig;
 use ensemble_serve::alloc::matrix::AllocationMatrix;
 use ensemble_serve::device::DeviceSet;
-use ensemble_serve::engine::{EngineOptions, InferenceSystem};
+use ensemble_serve::engine::{EngineOptions, InferenceSystem, SwapStrategy};
 use ensemble_serve::exec::sim::SimExecutor;
-use ensemble_serve::model::{ensemble, EnsembleId};
+use ensemble_serve::exec::{Executor, ModelInstance};
+use ensemble_serve::model::{ensemble, EnsembleId, ModelSpec};
 use ensemble_serve::reconfig::{
-    PlannerConfig, PolicyConfig, ReconfigController, ReconfigOptions,
+    planner, PlannerConfig, PolicyConfig, ReconfigBusy, ReconfigController,
+    ReconfigOptions,
 };
 use ensemble_serve::server::http::http_request;
 use ensemble_serve::server::ApiServer;
@@ -160,4 +162,257 @@ fn device_failure_replans_onto_survivors_without_restart() {
         m.requests.load(Ordering::Relaxed),
         m.requests_completed.load(Ordering::Relaxed)
     );
+}
+
+// ---------------------------------------------------------------------------
+// Drain-then-build: the paper's "ensemble nearly fills the hardware" regime.
+
+/// Tight-memory fixture: ResNet152@64 fills ~10.7 GB of the single
+/// 16 GB V100 on the sim ledger, so no replacement generation can be
+/// built next to it — the side-by-side protocol refuses every healthy
+/// swap here and only the staged drain-then-build path can proceed.
+fn tight_system(time_scale: f64) -> (Arc<InferenceSystem>, AllocationMatrix) {
+    let e = ensemble(EnsembleId::Imn1);
+    let d = DeviceSet::hgx(1);
+    let mut a = AllocationMatrix::zeroed(d.len(), e.len());
+    a.set(0, 0, 64);
+    let ex = SimExecutor::new(d, time_scale);
+    let sys = Arc::new(
+        InferenceSystem::build(&a, &e, ex, EngineOptions::default()).unwrap(),
+    );
+    (sys, a)
+}
+
+/// Planner knobs that make the fixture deterministic: min batch 16
+/// (~6.3 GB — cannot co-reside with the @64 generation) and no greedy
+/// exploration (the Algorithm 1 packing is adopted verbatim).
+fn tight_planner() -> PlannerConfig {
+    PlannerConfig {
+        default_batch: 16,
+        greedy: GreedyConfig {
+            max_iter: 0,
+            devices_minus_models_rule: false,
+            ..GreedyConfig::default()
+        },
+        ..PlannerConfig::default()
+    }
+}
+
+#[test]
+fn tight_memory_swap_completes_via_auto_drain_then_build() {
+    let e = ensemble(EnsembleId::Imn1);
+    let (sys, _a) = tight_system(20_000.0);
+    let mut opts = reactive_opts();
+    opts.planner = tight_planner();
+    let ctrl = ReconfigController::start(Arc::clone(&sys), opts);
+    ctrl.stop(); // deterministic: operator-driven
+    let api = ApiServer::start_single(Arc::clone(&sys), "127.0.0.1:0", 2,
+                                      Some(Arc::clone(&ctrl)), None)
+        .unwrap();
+
+    // the OLD behavior refused this swap: a side-by-side-only plan is
+    // infeasible next to the live generation...
+    assert!(
+        planner::plan(&e, sys.devices(), &[], &[sys.matrix()], &tight_planner()).is_err(),
+        "fixture broken: side-by-side co-residency should be infeasible"
+    );
+    // ...and the engine refuses the side-by-side build outright
+    let mut b = AllocationMatrix::zeroed(sys.devices().len(), e.len());
+    b.set(0, 0, 32);
+    assert!(sys.reconfigure_with(&b, SwapStrategy::SideBySide).is_err());
+    assert_eq!(sys.generation(), 1, "refused swap must leave the old generation");
+
+    // clients hammer the system across the staged swap: no request may
+    // be dropped or double-answered
+    let n_clients = 3;
+    let reqs_per_client = 8;
+    let report = std::thread::scope(|s| {
+        for c in 0..n_clients {
+            let sys = Arc::clone(&sys);
+            let e = &e;
+            s.spawn(move || {
+                let elems = e.members[0].input_elems_per_image();
+                for r in 0..reqs_per_client {
+                    let n = 8 + (c + r) % 5;
+                    let y = sys.predict(vec![0.1; n * elems], n).unwrap();
+                    assert_eq!(y.len(), n * e.classes());
+                }
+            });
+        }
+        std::thread::sleep(Duration::from_millis(3));
+        ctrl.reconfigure_now("tight-memory rebalance")
+            .unwrap()
+            .expect("Auto must complete the swap via drain-then-build")
+    });
+    assert_eq!(report.strategy, SwapStrategy::DrainThenBuild);
+    assert!(report.drain_complete);
+    let gap = report.gap.expect("unavailability window recorded");
+    assert!(gap > Duration::ZERO);
+    assert_eq!(sys.generation(), 2);
+    assert_eq!(sys.matrix().get(0, 0), 16, "A1 packing adopted:\n{}", sys.matrix());
+
+    let m = sys.metrics();
+    assert_eq!(
+        m.requests.load(Ordering::Relaxed),
+        m.requests_completed.load(Ordering::Relaxed),
+        "a request was dropped or double-answered across the gap"
+    );
+    assert_eq!(m.requests.load(Ordering::Relaxed),
+               (n_clients * reqs_per_client) as u64);
+    assert_eq!(sys.in_flight(), 0);
+
+    // the swap mode and gap surface on the HTTP control plane
+    let (code, body) =
+        http_request(api.addr(), "GET", "/v1/reconfig/status", "", b"").unwrap();
+    assert_eq!(code, 200);
+    let j = Json::parse(std::str::from_utf8(&body).unwrap()).unwrap();
+    let swap = j.get("last_swap").expect("last_swap present");
+    assert_eq!(swap.get("strategy").and_then(Json::as_str), Some("drain_then_build"));
+    assert!(swap.get("gap_ms").unwrap().as_f64().unwrap() > 0.0);
+    assert!(swap.get("parked").unwrap().as_f64().is_some());
+
+    // ...and in the Prometheus exposition
+    let (code, body) = http_request(api.addr(), "GET", "/v1/metrics", "", b"").unwrap();
+    assert_eq!(code, 200);
+    let text = String::from_utf8(body).unwrap();
+    assert!(text.contains("ensemble_serve_drain_swaps_total 1"), "{text}");
+    assert!(text.contains("ensemble_serve_swap_gap_us_total"), "{text}");
+    assert!(text.contains("# TYPE ensemble_serve_lingering_generations gauge"), "{text}");
+
+    // a bogus strategy on the admin route is a client error
+    let (code, _) = http_request(api.addr(), "POST", "/v1/reconfigure",
+                                 "application/json", b"{\"strategy\": \"warp\"}")
+        .unwrap();
+    assert_eq!(code, 400);
+    // an explicit side_by_side request now reproduces the active matrix
+    // (the planner's co-residency budget is honored) and holds
+    let (code, body) = http_request(api.addr(), "POST", "/v1/reconfigure",
+                                    "application/json",
+                                    b"{\"strategy\": \"side_by_side\"}")
+        .unwrap();
+    assert_eq!(code, 200, "{}", String::from_utf8_lossy(&body));
+
+    // traffic still flows on the new generation
+    let r = closed_loop(&sys, 2, 3, 8, 77);
+    assert_eq!(r.failed, 0);
+}
+
+/// Executor wrapper whose `load` fails for batch 16 while poisoned —
+/// the drain-then-build build fails mid-gap, and the rollback (at the
+/// old batch 64) must restore the old matrix.
+struct PoisonedLoads {
+    inner: Arc<SimExecutor>,
+    poisoned: std::sync::atomic::AtomicBool,
+}
+
+impl Executor for PoisonedLoads {
+    fn load(&self, model: &ModelSpec, device: usize, batch: usize)
+        -> anyhow::Result<Box<dyn ModelInstance>> {
+        if batch == 16 && self.poisoned.load(Ordering::Relaxed) {
+            anyhow::bail!("injected load failure at batch {batch}");
+        }
+        self.inner.load(model, device, batch)
+    }
+
+    fn devices(&self) -> &DeviceSet {
+        self.inner.devices()
+    }
+}
+
+#[test]
+fn drain_then_build_build_failure_rolls_back_the_old_matrix() {
+    let e = ensemble(EnsembleId::Imn1);
+    let d = DeviceSet::hgx(1);
+    let mut a = AllocationMatrix::zeroed(d.len(), e.len());
+    a.set(0, 0, 64);
+    let ex = Arc::new(PoisonedLoads {
+        inner: SimExecutor::new(d.clone(), 50_000.0),
+        poisoned: std::sync::atomic::AtomicBool::new(false),
+    });
+    let poison = Arc::clone(&ex);
+    let sys = InferenceSystem::build(&a, &e, ex, EngineOptions::default()).unwrap();
+    let elems = e.members[0].input_elems_per_image();
+    assert!(sys.predict(vec![0.1; 4 * elems], 4).is_ok());
+
+    poison.poisoned.store(true, Ordering::Relaxed);
+    let mut b = AllocationMatrix::zeroed(d.len(), e.len());
+    b.set(0, 0, 16);
+    let err = sys.reconfigure_with(&b, SwapStrategy::DrainThenBuild);
+    let msg = format!("{:#}", err.err().expect("poisoned build must fail"));
+    assert!(msg.contains("rolled back"), "{msg}");
+
+    // rollback restored the old matrix as a fresh generation: the
+    // system never ends up empty
+    assert_eq!(sys.matrix(), a, "rollback must restore the old matrix");
+    assert_eq!(sys.generation(), 2);
+    assert!(sys.active_error().is_none());
+    assert!(sys.predict(vec![0.1; 4 * elems], 4).is_ok());
+    assert_eq!(sys.metrics().swap_rollbacks.load(Ordering::Relaxed), 1);
+    assert_eq!(sys.metrics().drain_swaps.load(Ordering::Relaxed), 0);
+    assert!(sys.metrics().swap_gap_us.load(Ordering::Relaxed) > 0,
+            "the failed attempt's gap still counts as unavailability");
+}
+
+/// Executor wrapper that slows `load` down so the drain-then-build gap
+/// is wide enough to race an operator replan into.
+struct SlowLoads {
+    inner: Arc<SimExecutor>,
+    delay: Duration,
+}
+
+impl Executor for SlowLoads {
+    fn load(&self, model: &ModelSpec, device: usize, batch: usize)
+        -> anyhow::Result<Box<dyn ModelInstance>> {
+        std::thread::sleep(self.delay);
+        self.inner.load(model, device, batch)
+    }
+
+    fn devices(&self) -> &DeviceSet {
+        self.inner.devices()
+    }
+}
+
+#[test]
+fn operator_replan_during_a_drain_gap_is_a_typed_conflict() {
+    let e = ensemble(EnsembleId::Imn1);
+    let d = DeviceSet::hgx(1);
+    let mut a = AllocationMatrix::zeroed(d.len(), e.len());
+    a.set(0, 0, 64);
+    let ex = Arc::new(SlowLoads {
+        inner: SimExecutor::new(d.clone(), 50_000.0),
+        delay: Duration::from_millis(400),
+    });
+    let sys = Arc::new(
+        InferenceSystem::build(&a, &e, ex, EngineOptions::default()).unwrap(),
+    );
+    let mut opts = reactive_opts();
+    opts.planner = tight_planner();
+    let ctrl = ReconfigController::start(Arc::clone(&sys), opts);
+    ctrl.stop();
+
+    // a drain-then-build swap in a background thread opens the gap
+    let swapper = {
+        let sys = Arc::clone(&sys);
+        let mut b = AllocationMatrix::zeroed(d.len(), e.len());
+        b.set(0, 0, 32);
+        std::thread::spawn(move || sys.reconfigure_with(&b, SwapStrategy::DrainThenBuild))
+    };
+    let deadline = Instant::now() + Duration::from_secs(10);
+    while !sys.swap_gap_in_progress() && Instant::now() < deadline {
+        std::thread::sleep(Duration::from_millis(1));
+    }
+    assert!(sys.swap_gap_in_progress(), "gap never opened");
+
+    // the admin path refuses instead of queueing a second outage
+    let err = ctrl
+        .reconfigure_now("stacked operator replan")
+        .expect_err("must refuse while the gap is in progress");
+    assert!(err.downcast_ref::<ReconfigBusy>().is_some(), "untyped error: {err:#}");
+
+    swapper.join().unwrap().expect("the original swap completes");
+    assert_eq!(sys.generation(), 2);
+    assert!(!sys.swap_gap_in_progress());
+    // with the gap over, the admin path works again (plan reproduces
+    // the active matrix or swaps — either way, no busy error)
+    assert!(ctrl.reconfigure_now("post-gap replan").is_ok());
 }
