@@ -28,12 +28,24 @@ pub struct MatrixCache {
 /// differing only in GPU efficiency used to alias to one cached
 /// matrix) and the active cost model's name + content digest, so
 /// online calibration — which changes what "optimal" means —
-/// invalidates matrices cached under stale costs. Same 32-hex width
-/// and digest family; the version tag keeps v1/v2 files from aliasing.
+/// invalidates matrices cached under stale costs.
+///
+/// v4 over v3: folds the cost model's
+/// [`staleness_key`](CostModel::staleness_key) — the `max_cell_age_s`
+/// limit plus a coarse time bucket that advances once per limit
+/// period. The age check is temporal, not content: without this a
+/// cached offline matrix could outlive the calibration cells it
+/// trusted (the cells age out of every lookup, the fingerprint never
+/// moved). With it, the cached matrix expires together with the cells
+/// — at worst one bucket late. Timeless models (no limit) contribute
+/// an empty key, so their fingerprints stay stable across runs.
+///
+/// Same 32-hex width and digest family throughout; the version tag
+/// keeps older files from aliasing.
 pub fn cache_fingerprint(ensemble: &Ensemble, devices: &DeviceSet,
                          cfg: &GreedyConfig, cost: &dyn CostModel) -> String {
     let mut h = Fnv128::new();
-    h.update(b"ensemble-serve-v3\0");
+    h.update(b"ensemble-serve-v4\0");
     for m in &ensemble.members {
         h.update(m.name.as_bytes());
         h.update(format!("|{}|{}|{}|{:?}|{}\0",
@@ -47,6 +59,7 @@ pub fn cache_fingerprint(ensemble: &Ensemble, devices: &DeviceSet,
         cfg.max_iter, cfg.max_neighs, cfg.batch_values, cfg.seed
     ).as_bytes());
     h.update(format!("cost={}|{}\0", cost.name(), cost.digest()).as_bytes());
+    h.update(format!("stale={}\0", cost.staleness_key()).as_bytes());
     h.hex()
 }
 
@@ -173,6 +186,30 @@ mod tests {
         store.observe("ResNet50", &d[0].class_key(), 8, 40.0, 1, 0.5);
         assert_ne!(recorded_fp, cache_fingerprint(&e, &d, &cfg, &profiled),
                    "online calibration must invalidate");
+    }
+
+    #[test]
+    fn fingerprint_folds_the_staleness_window() {
+        use crate::cost::{ProfileStore, ProfiledCost};
+        use std::sync::Arc;
+        let e = ensemble(EnsembleId::Imn4);
+        let d = DeviceSet::hgx(4);
+        let cfg = GreedyConfig::default();
+        let store = Arc::new(ProfileStore::new());
+        store.record("ResNet50", &d[0].class_key(), 8, 31.0, None, 3);
+        let profiled = ProfiledCost::new(Arc::clone(&store));
+        let timeless = cache_fingerprint(&e, &d, &cfg, &profiled);
+        // stable while no age limit is set (offline optimize runs must
+        // keep hitting their cache)
+        assert_eq!(timeless, cache_fingerprint(&e, &d, &cfg, &profiled));
+        // an age limit changes the fingerprint: a matrix cached without
+        // the limit must not be trusted under it
+        store.set_max_cell_age_s(Some(900));
+        let limited = cache_fingerprint(&e, &d, &cfg, &profiled);
+        assert_ne!(timeless, limited, "age limit must invalidate");
+        // different limits bucket time differently: no aliasing
+        store.set_max_cell_age_s(Some(60));
+        assert_ne!(limited, cache_fingerprint(&e, &d, &cfg, &profiled));
     }
 
     #[test]

@@ -4,7 +4,7 @@
 //! Every predicate comes in two forms: the historical one (analytic zoo
 //! footprints — kept verbatim so every pre-cost-model call site behaves
 //! bit-for-bit identically) and a `_with` form taking the
-//! [`CostModel`](crate::cost::CostModel) that the threaded allocation
+//! [`CostModel`] that the threaded allocation
 //! stack (optimizer, online planner, multi-tenant arbiter) scores
 //! candidates with.
 

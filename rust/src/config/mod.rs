@@ -60,6 +60,12 @@ pub struct ServerConfig {
     pub reconfig: bool,
     /// Controller p99 latency objective, ms.
     pub p99_slo_ms: f64,
+    /// Predictive (trend-based) scaling: project load `forecast_horizon_s`
+    /// ahead and replan before a ramp breaches the SLO. `false` = the
+    /// purely reactive pre-forecast controller.
+    pub forecast: bool,
+    /// Forecast projection horizon, seconds.
+    pub forecast_horizon_s: f64,
     /// Path to a measured profile store (JSON, written by the `profile`
     /// subcommand). Set: the allocation stack plans on
     /// [`ProfiledCost`](crate::cost::ProfiledCost) instead of the
@@ -91,6 +97,8 @@ impl Default for ServerConfig {
             calib_images: 1024,
             reconfig: false,
             p99_slo_ms: 500.0,
+            forecast: true,
+            forecast_horizon_s: 30.0,
             profiles: None,
             calibration_alpha: 0.25,
             max_cell_age_s: None,
@@ -167,6 +175,19 @@ impl ServerConfig {
             anyhow::ensure!(v > 0.0, "p99_slo_ms must be positive");
             cfg.p99_slo_ms = v;
         }
+        if let Some(v) = doc.get("forecast").and_then(Json::as_bool) {
+            cfg.forecast = v;
+        }
+        if let Some(v) = doc.get("forecast_horizon_s").and_then(Json::as_f64) {
+            // the cap keeps Duration::from_secs_f64 total (it panics on
+            // huge floats) and anything beyond a day is past the
+            // diurnal period the linear trend is meaningful for
+            anyhow::ensure!(
+                v > 0.0 && v <= 86_400.0,
+                "forecast_horizon_s must be in (0, 86400]"
+            );
+            cfg.forecast_horizon_s = v;
+        }
         if let Some(v) = doc.get("profiles").and_then(Json::as_str) {
             anyhow::ensure!(!v.is_empty(), "profiles path empty");
             cfg.profiles = Some(v.to_string());
@@ -212,6 +233,8 @@ mod tests {
         assert_eq!(cfg.ensemble, EnsembleId::Imn4);
         assert_eq!(cfg.gpus, 4);
         assert_eq!(cfg.greedy.max_neighs, 100);
+        assert!(cfg.forecast, "predictive scaling defaults on");
+        assert_eq!(cfg.forecast_horizon_s, 30.0);
     }
 
     #[test]
@@ -221,6 +244,7 @@ mod tests {
                 "max_iter":5,"max_neighs":40,"batch_values":[8,16],"seed":7,
                 "default_batch":16,"calib_images":256,"listen":"0.0.0.0:9000",
                 "reconfig":true,"p99_slo_ms":120.5,
+                "forecast":false,"forecast_horizon_s":45.5,
                 "profiles":"profiles.json","calibration_alpha":0.5,
                 "max_cell_age_s":900}"#,
         )
@@ -240,6 +264,8 @@ mod tests {
         assert_eq!(cfg.devices().len(), 17);
         assert!(cfg.reconfig);
         assert_eq!(cfg.p99_slo_ms, 120.5);
+        assert!(!cfg.forecast);
+        assert_eq!(cfg.forecast_horizon_s, 45.5);
         assert_eq!(cfg.profiles.as_deref(), Some("profiles.json"));
         assert_eq!(cfg.calibration_alpha, 0.5);
         assert_eq!(cfg.max_cell_age_s, Some(900));
@@ -268,6 +294,9 @@ mod tests {
             r#"{"segment_size":0}"#,
             r#"{"batch_values":[]}"#,
             r#"{"p99_slo_ms":0}"#,
+            r#"{"forecast_horizon_s":0}"#,
+            r#"{"forecast_horizon_s":-5}"#,
+            r#"{"forecast_horizon_s":1e20}"#,
             r#"{"profiles":""}"#,
             r#"{"calibration_alpha":0}"#,
             r#"{"calibration_alpha":1.5}"#,

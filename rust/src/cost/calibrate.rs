@@ -98,6 +98,22 @@ impl Calibrator {
         }
         updated
     }
+
+    /// Fold one measured drain-then-build unavailability gap into the
+    /// store's per-matrix-size gap cells, keyed by the deployed matrix's
+    /// worker count. Deliberately NOT rescaled by `time_scale`: a
+    /// generation build (thread spawn + model loads) runs at wall speed
+    /// even under the simulator's compressed device timeline, and the
+    /// prediction is weighed against wall-clock arrival rates. Garbage
+    /// telemetry (zero workers, non-positive gap) is skipped, matching
+    /// [`fold`](Self::fold)'s tolerance for stragglers.
+    pub fn observe_gap(&self, workers: usize, gap: std::time::Duration) {
+        let gap_ms = gap.as_secs_f64() * 1e3;
+        if workers == 0 || workers > u32::MAX as usize || !gap_ms.is_finite() || gap_ms <= 0.0 {
+            return;
+        }
+        self.store.observe_gap(workers as u32, gap_ms, self.alpha);
+    }
 }
 
 #[cfg(test)]
@@ -140,6 +156,21 @@ mod tests {
         ]);
         assert_eq!(n, 0);
         assert!(store.is_empty());
+    }
+
+    #[test]
+    fn observe_gap_feeds_the_gap_cells_unscaled() {
+        use std::time::Duration;
+        let store = Arc::new(ProfileStore::new());
+        // time_scale must NOT rescale gaps: builds run at wall speed
+        let cal = Calibrator::new(Arc::clone(&store)).with_time_scale(100.0);
+        cal.observe_gap(3, Duration::from_millis(120));
+        assert_eq!(store.lookup_gap_ms(3), Some(120.0));
+        // garbage telemetry is skipped, not asserted on
+        cal.observe_gap(0, Duration::from_millis(50));
+        cal.observe_gap(3, Duration::ZERO);
+        assert_eq!(store.lookup_gap_ms(3), Some(120.0));
+        assert_eq!(store.gap_cells().len(), 1);
     }
 
     #[test]

@@ -59,6 +59,38 @@ pub trait CostModel: Send + Sync + std::fmt::Debug {
     /// differently. Folded into the matrix-cache fingerprint so
     /// calibration invalidates cached matrices planned on stale costs.
     fn digest(&self) -> String;
+
+    /// Predicted unavailability gap of a drain-then-build swap deploying
+    /// a matrix of `workers` workers, **wall** milliseconds (quiesce +
+    /// teardown + build; see `ProfileStore::gap_cells` for why gaps are
+    /// never paper-rescaled). The default is the coarse analytic guess
+    /// [`analytic_gap_ms`]; [`ProfiledCost`] answers from measured swap
+    /// telemetry once any staged swap has been observed. Feeds
+    /// `predicted_gap_ms` on staged plans and the policy's
+    /// breach-vs-gap expected-cost comparison.
+    fn staged_gap_ms(&self, workers: usize) -> f64 {
+        analytic_gap_ms(workers)
+    }
+
+    /// Temporal trust key, folded into the matrix-cache fingerprint
+    /// next to [`digest`](Self::digest). Empty for timeless models; a
+    /// [`ProfiledCost`] under a `max_cell_age_s` limit returns the
+    /// limit plus a coarse time bucket, so a cached offline matrix
+    /// cannot outlive the calibration cells it trusted (the
+    /// ROADMAP-flagged staleness hole).
+    fn staleness_key(&self) -> String {
+        String::new()
+    }
+}
+
+/// The cold-start analytic gap estimate: an affine guess in the worker
+/// count (per-worker model load dominates a build; quiesce and teardown
+/// add a near-constant floor). Deliberately coarse — it only needs the
+/// right order of magnitude until the first measured staged swap
+/// calibrates the store — and documented as a limitation in DESIGN
+/// §Forecasting.
+pub fn analytic_gap_ms(workers: usize) -> f64 {
+    25.0 + 15.0 * workers as f64
 }
 
 /// The default shared analytic cost model.
@@ -181,6 +213,28 @@ impl CostModel for ProfiledCost {
     fn digest(&self) -> String {
         self.store.digest()
     }
+
+    fn staged_gap_ms(&self, workers: usize) -> f64 {
+        if workers == 0 || workers > u32::MAX as usize {
+            return analytic_gap_ms(workers);
+        }
+        self.store
+            .lookup_gap_ms(workers as u32)
+            .unwrap_or_else(|| analytic_gap_ms(workers))
+    }
+
+    fn staleness_key(&self) -> String {
+        match self.store.cell_age_limit_s() {
+            None => String::new(),
+            // the coarse bucket advances once per age-limit period, so a
+            // cached matrix computed under this store expires together
+            // with the cells it trusted (at worst one limit late)
+            Some(limit) => {
+                let bucket = profile::unix_now_s() / limit.max(1);
+                format!("age<{limit}s@{bucket}")
+            }
+        }
+    }
 }
 
 #[cfg(test)]
@@ -266,6 +320,35 @@ mod tests {
         store.set_max_cell_age_s(Some(600));
         assert_eq!(c.latency_ms(&m, &d, 8), m.predict_latency_ms(&d, 8));
         assert_eq!(c.worker_mem_mb(&m, &d, 8), m.worker_mem_mb(8));
+    }
+
+    #[test]
+    fn staged_gap_prediction_calibrates_from_measured_swaps() {
+        let store = Arc::new(ProfileStore::new());
+        let c = ProfiledCost::new(Arc::clone(&store));
+        // cold start: the analytic guess, identical to the default impl
+        assert_eq!(c.staged_gap_ms(4), analytic_gap_ms(4));
+        assert_eq!(AnalyticCost.staged_gap_ms(4), analytic_gap_ms(4));
+        assert!(analytic_gap_ms(8) > analytic_gap_ms(1), "affine in workers");
+        // one measured staged swap: the prediction snaps to it
+        store.observe_gap(4, 180.0, 0.25);
+        assert_eq!(c.staged_gap_ms(4), 180.0);
+        // unmeasured sizes clamp to the nearest measurement
+        assert_eq!(c.staged_gap_ms(16), 180.0);
+    }
+
+    #[test]
+    fn staleness_key_buckets_only_under_an_age_limit() {
+        let store = Arc::new(ProfileStore::new());
+        let c = ProfiledCost::new(Arc::clone(&store));
+        assert_eq!(c.staleness_key(), "", "no limit: timeless key");
+        assert_eq!(AnalyticCost.staleness_key(), "");
+        store.set_max_cell_age_s(Some(600));
+        let k = c.staleness_key();
+        assert!(k.starts_with("age<600s@"), "{k}");
+        store.set_max_cell_age_s(Some(900));
+        assert!(c.staleness_key().starts_with("age<900s@"));
+        assert_ne!(c.staleness_key(), k, "different limits must not alias");
     }
 
     #[test]

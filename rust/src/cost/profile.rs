@@ -110,6 +110,18 @@ pub fn analytic_latency_for(
 #[derive(Debug)]
 pub struct ProfileStore {
     cells: RwLock<BTreeMap<(String, String, u32), ProfileCell>>,
+    /// Measured drain-then-build unavailability gaps, keyed by the
+    /// deployed matrix's worker count (the "matrix size" a build's wall
+    /// time scales with). Values are **wall** milliseconds — unlike the
+    /// latency cells they are NOT rescaled to paper scale, because a
+    /// generation build runs at real speed even under the simulator's
+    /// time compression, and the gap is weighed against wall-clock
+    /// arrival rates. Fed by the controllers' swap telemetry
+    /// ([`crate::cost::Calibrator::observe_gap`]); read by
+    /// [`CostModel::staged_gap_ms`] to predict the next gap.
+    ///
+    /// [`CostModel::staged_gap_ms`]: crate::cost::CostModel::staged_gap_ms
+    gap_cells: RwLock<BTreeMap<u32, ProfileCell>>,
     /// Bumped on every mutation; cheap staleness signal for callers that
     /// do not want to hash the content.
     version: AtomicU64,
@@ -126,6 +138,7 @@ impl Default for ProfileStore {
     fn default() -> ProfileStore {
         ProfileStore {
             cells: RwLock::new(BTreeMap::new()),
+            gap_cells: RwLock::new(BTreeMap::new()),
             version: AtomicU64::new(0),
             max_cell_age_s: AtomicU64::new(u64::MAX),
         }
@@ -198,6 +211,14 @@ impl ProfileStore {
                 None => h.update(&[0]),
             }
         }
+        // gap cells change what staged_gap_ms answers, which feeds the
+        // breach-vs-gap policy — they are content like everything else
+        let gaps = self.gap_cells.read().unwrap();
+        for (workers, c) in gaps.iter() {
+            h.update(b"gap\0");
+            h.update(&workers.to_le_bytes());
+            h.update(&c.latency_ms.to_bits().to_le_bytes());
+        }
         h.hex()
     }
 
@@ -262,6 +283,92 @@ impl ProfileStore {
         }
         drop(cells);
         self.version.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Fold one measured drain-then-build gap for a matrix of `workers`
+    /// workers into the store (EWMA like [`observe`](Self::observe);
+    /// a fresh cell takes the measurement as-is). Wall milliseconds —
+    /// see the `gap_cells` field docs for why they are never rescaled.
+    pub fn observe_gap(&self, workers: u32, gap_ms: f64, alpha: f64) {
+        assert!((0.0..=1.0).contains(&alpha), "alpha {alpha} outside [0, 1]");
+        assert!(workers > 0, "gap cell worker count must be positive");
+        assert!(gap_ms.is_finite() && gap_ms > 0.0,
+                "observed gap {gap_ms} must be finite and positive");
+        let mut gaps = self.gap_cells.write().unwrap();
+        match gaps.get_mut(&workers) {
+            Some(cell) => {
+                cell.latency_ms = (1.0 - alpha) * cell.latency_ms + alpha * gap_ms;
+                cell.samples += 1;
+                cell.source = ProfileSource::Online;
+                cell.updated_unix_s = unix_now_s();
+            }
+            None => {
+                gaps.insert(workers, ProfileCell {
+                    latency_ms: gap_ms,
+                    mem_mb: None,
+                    samples: 1,
+                    source: ProfileSource::Online,
+                    updated_unix_s: unix_now_s(),
+                });
+            }
+        }
+        drop(gaps);
+        self.version.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Predicted drain-then-build gap for a matrix of `workers` workers,
+    /// wall ms, from measured gaps alone: exact cell, log-linear
+    /// interpolation between the two bracketing worker counts, or the
+    /// nearest measured endpoint outside the profiled range (build time
+    /// is monotone-ish in worker count, so clamping beats refusing —
+    /// the caller falls back to the analytic guess only when NOTHING
+    /// has been measured). Cells older than `max_cell_age_s` are
+    /// skipped like every other lookup.
+    pub fn lookup_gap_ms(&self, workers: u32) -> Option<f64> {
+        let stale_before = match self.cell_age_limit_s() {
+            None => 0,
+            Some(limit) => unix_now_s().saturating_sub(limit),
+        };
+        let gaps = self.gap_cells.read().unwrap();
+        let mut below: Option<(u32, f64)> = None;
+        let mut above: Option<(u32, f64)> = None;
+        for (&w, c) in gaps.iter() {
+            if c.updated_unix_s < stale_before {
+                continue;
+            }
+            if w == workers {
+                return Some(c.latency_ms);
+            }
+            if w < workers {
+                below = Some((w, c.latency_ms));
+            } else {
+                above = Some((w, c.latency_ms));
+                break;
+            }
+        }
+        match (below, above) {
+            (Some((w0, g0)), Some((w1, g1))) => {
+                // every insertion path (observe_gap, from_json) rejects
+                // non-positive gaps, so the log-linear form is total
+                debug_assert!(g0 > 0.0 && g1 > 0.0);
+                let t = ((workers as f64).ln() - (w0 as f64).ln())
+                    / ((w1 as f64).ln() - (w0 as f64).ln());
+                Some((g0.ln() + t * (g1.ln() - g0.ln())).exp())
+            }
+            (Some((_, g)), None) | (None, Some((_, g))) => Some(g),
+            (None, None) => None,
+        }
+    }
+
+    /// Every measured gap cell, by worker count (reporting:
+    /// `GET /v1/profiles`).
+    pub fn gap_cells(&self) -> Vec<(u32, ProfileCell)> {
+        self.gap_cells
+            .read()
+            .unwrap()
+            .iter()
+            .map(|(w, c)| (*w, c.clone()))
+            .collect()
     }
 
     /// The cell, if profiled.
@@ -375,9 +482,22 @@ impl ProfileStore {
                 ])
             })
             .collect();
+        let gap_rows: Vec<Json> = self
+            .gap_cells()
+            .into_iter()
+            .map(|(workers, c)| {
+                Json::from_pairs([
+                    ("workers", Json::Num(workers as f64)),
+                    ("gap_ms", Json::Num(c.latency_ms)),
+                    ("samples", Json::Num(c.samples as f64)),
+                    ("updated_unix_s", Json::Num(c.updated_unix_s as f64)),
+                ])
+            })
+            .collect();
         Json::from_pairs([
             ("format", Json::Str("ensemble-serve-profiles-v1".to_string())),
             ("cells", Json::Arr(rows)),
+            ("gap_cells", Json::Arr(gap_rows)),
         ])
     }
 
@@ -440,6 +560,38 @@ impl ProfileStore {
                     ProfileCell { latency_ms, mem_mb, samples, source,
                                   updated_unix_s: updated },
                 );
+            }
+        }
+        // gap cells are optional: files written before the gap model
+        // existed load unchanged
+        if let Some(rows) = doc.get("gap_cells").and_then(Json::as_arr) {
+            let mut gaps = store.gap_cells.write().unwrap();
+            for row in rows {
+                let workers_raw = row.get("workers").and_then(Json::as_usize)
+                    .context("gap cell missing workers")?;
+                anyhow::ensure!(
+                    (1..=u32::MAX as usize).contains(&workers_raw),
+                    "gap cell: bad worker count {workers_raw}"
+                );
+                let gap_ms = row.get("gap_ms").and_then(Json::as_f64)
+                    .context("gap cell missing gap_ms")?;
+                anyhow::ensure!(
+                    gap_ms.is_finite() && gap_ms > 0.0,
+                    "gap cell @{workers_raw} workers: bad gap {gap_ms}"
+                );
+                let samples = row.get("samples").and_then(Json::as_usize).unwrap_or(1) as u64;
+                let updated = row
+                    .get("updated_unix_s")
+                    .and_then(Json::as_usize)
+                    .map(|v| v as u64)
+                    .unwrap_or_else(unix_now_s);
+                gaps.insert(workers_raw as u32, ProfileCell {
+                    latency_ms: gap_ms,
+                    mem_mb: None,
+                    samples,
+                    source: ProfileSource::Online,
+                    updated_unix_s: updated,
+                });
             }
         }
         store.version.fetch_add(1, Ordering::Relaxed);
@@ -627,6 +779,74 @@ mod tests {
         f.set_max_cell_age_s(Some(3600));
         f.record("m", "g", 8, 10.0, None, 1);
         assert_eq!(f.lookup_latency("m", "g", 8), LatencyLookup::Exact(10.0));
+    }
+
+    #[test]
+    fn gap_cells_observe_lookup_and_interpolate() {
+        let s = ProfileStore::new();
+        assert_eq!(s.lookup_gap_ms(4), None, "empty store predicts nothing");
+        s.observe_gap(2, 100.0, 0.25);
+        // a fresh cell takes the measurement as-is
+        assert_eq!(s.lookup_gap_ms(2), Some(100.0));
+        // outside the measured range: clamp to the nearest endpoint
+        assert_eq!(s.lookup_gap_ms(1), Some(100.0));
+        assert_eq!(s.lookup_gap_ms(64), Some(100.0));
+        s.observe_gap(8, 400.0, 0.25);
+        // log-linear between 2 and 8: the geometric midpoint (4) lands
+        // at the geometric mean of the endpoints
+        let mid = s.lookup_gap_ms(4).unwrap();
+        assert!((mid - (100.0f64 * 400.0).sqrt()).abs() < 1e-9, "mid={mid}");
+        // EWMA folds subsequent measurements
+        s.observe_gap(2, 200.0, 0.5);
+        assert_eq!(s.lookup_gap_ms(2), Some(150.0));
+        assert_eq!(s.gap_cells().len(), 2);
+    }
+
+    #[test]
+    fn gap_cells_change_digest_and_roundtrip() {
+        let s = ProfileStore::new();
+        s.record("m", "gpu", 8, 10.0, None, 1);
+        let d0 = s.digest();
+        let v0 = s.version();
+        s.observe_gap(3, 250.0, 0.25);
+        assert_ne!(s.digest(), d0, "gap cells are content: digest must move");
+        assert!(s.version() > v0);
+        let back = ProfileStore::from_json(&s.to_json()).unwrap();
+        assert_eq!(back.lookup_gap_ms(3), Some(250.0));
+        assert_eq!(back.digest(), s.digest());
+        // files without gap cells still load (pre-gap-model format)
+        let old = Json::parse(
+            r#"{"format":"ensemble-serve-profiles-v1","cells":[]}"#,
+        )
+        .unwrap();
+        assert!(ProfileStore::from_json(&old).unwrap().gap_cells().is_empty());
+        // garbage gap cells are rejected
+        for bad in [
+            r#"{"format":"ensemble-serve-profiles-v1","cells":[],
+                "gap_cells":[{"workers":0,"gap_ms":5}]}"#,
+            r#"{"format":"ensemble-serve-profiles-v1","cells":[],
+                "gap_cells":[{"workers":2,"gap_ms":-5}]}"#,
+            r#"{"format":"ensemble-serve-profiles-v1","cells":[],
+                "gap_cells":[{"workers":2}]}"#,
+        ] {
+            assert!(ProfileStore::from_json(&Json::parse(bad).unwrap()).is_err(), "{bad}");
+        }
+    }
+
+    #[test]
+    fn stale_gap_cells_are_skipped() {
+        let doc = Json::parse(
+            r#"{"format":"ensemble-serve-profiles-v1","cells":[],
+                "gap_cells":[{"workers":2,"gap_ms":80.0,"updated_unix_s":1000}]}"#,
+        )
+        .unwrap();
+        let s = ProfileStore::from_json(&doc).unwrap();
+        assert_eq!(s.lookup_gap_ms(2), Some(80.0), "no limit: trusted");
+        s.set_max_cell_age_s(Some(3600));
+        assert_eq!(s.lookup_gap_ms(2), None, "ancient gap cell must age out");
+        // a fresh observation revives it
+        s.observe_gap(2, 90.0, 1.0);
+        assert_eq!(s.lookup_gap_ms(2), Some(90.0));
     }
 
     #[test]

@@ -1,6 +1,6 @@
 //! Thread-safe FIFO queues — the paper's inter-process communication
 //! substrate ("implemented with the Queue class" of python
-//! multiprocessing; here: Mutex<VecDeque> + Condvar).
+//! multiprocessing; here: `Mutex<VecDeque>` + Condvar).
 //!
 //! Unlike std::sync::mpsc these support *multiple consumers*: the
 //! data-parallel workers of one model all pull segment ids from the same

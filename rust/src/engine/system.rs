@@ -168,6 +168,13 @@ pub struct SwapReport {
     /// Requests parked at the intake gate during the gap and replayed
     /// against the new generation.
     pub parked: u64,
+    /// What the control plane predicted the gap would be, wall ms —
+    /// filled in by the reconfiguration controllers from the staged
+    /// plan's [`predicted_gap_ms`](crate::reconfig::StagedPlan) so the
+    /// admin routes report predicted next to measured. Always `None`
+    /// as constructed by the engine (direct `reconfigure_with` callers
+    /// have no planner in the loop).
+    pub predicted_gap_ms: Option<f64>,
 }
 
 /// Intake gate: closed during a drain-then-build gap, parking incoming
@@ -551,6 +558,7 @@ impl InferenceSystem {
             strategy: SwapStrategy::SideBySide,
             gap: None,
             parked: 0,
+            predicted_gap_ms: None,
         })
     }
 
@@ -627,6 +635,7 @@ impl InferenceSystem {
                     strategy: SwapStrategy::DrainThenBuild,
                     gap: Some(gap),
                     parked,
+                    predicted_gap_ms: None,
                 })
             }
             Err(build_err) => self.rollback(old, id, t_gap, build_err),

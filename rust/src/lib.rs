@@ -40,7 +40,33 @@
 //! `GET /v1/reconfig/status`, next to Prometheus metrics at
 //! `GET /v1/metrics`.
 //!
+//! ## Predictive scaling
+//!
+//! The controllers do not just chase load — they anticipate it. A Holt
+//! (double-EWMA) trend estimator ([`reconfig::Forecaster`]) projects
+//! the windowed request rate and peak device utilization a configurable
+//! horizon ahead, so the policy replans *before* a diurnal ramp
+//! breaches the SLO. The drain-then-build tradeoff is priced, not
+//! gated: every staged plan predicts its unavailability gap
+//! (per-matrix-size gap cells in the [`cost::ProfileStore`], calibrated
+//! from measured swap telemetry, analytic fallback before the first
+//! staged swap), and a gap is paid only when the requests it parks
+//! undercut the expected cost of staying on the stale allocation.
+//!
 //! ## Multi-tenant serving
+//!
+//! Several ensembles can share one device set: a
+//! [`server::SystemRegistry`] of named deployed systems dispatched per
+//! request on the `x-ensemble` header, a joint planner
+//! ([`reconfig::planner::plan_joint`]) packing every tenant's members
+//! into one allocation under a weighted max-min objective
+//! ([`optimizer::analytic::estimate_weighted_throughput`]) with
+//! per-tenant memory budgets, and a
+//! [`reconfig::MultiTenantController`] that arbitrates: a tenant
+//! breaching its SLO — or forecast to breach it — is re-planned
+//! *jointly* with boosted weight while idle tenants are discounted,
+//! stealing capacity from headroom instead of replanning in isolation.
+//! See DESIGN.md.
 //!
 //! ## Measured cost model
 //!
@@ -56,18 +82,6 @@
 //! tick, so replans score candidates with what the hardware actually
 //! did. The server reports measured-vs-analytic deltas and calibration
 //! staleness at `GET /v1/profiles`.
-//!
-//! Several ensembles can share one device set: a
-//! [`server::SystemRegistry`] of named deployed systems dispatched per
-//! request on the `x-ensemble` header, a joint planner
-//! ([`reconfig::planner::plan_joint`]) packing every tenant's members
-//! into one allocation under a weighted max-min objective
-//! ([`optimizer::analytic::estimate_weighted_throughput`]) with
-//! per-tenant memory budgets, and a
-//! [`reconfig::MultiTenantController`] that arbitrates: a tenant
-//! breaching its SLO is re-planned *jointly* with boosted weight while
-//! idle tenants are discounted, stealing capacity from headroom
-//! instead of replanning in isolation. See DESIGN.md.
 
 pub mod util;
 pub mod config;

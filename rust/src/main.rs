@@ -27,8 +27,8 @@ use ensemble_serve::exec::Executor;
 use ensemble_serve::model::Manifest;
 use ensemble_serve::optimizer::{optimize, OptimizerConfig};
 use ensemble_serve::reconfig::{
-    plan_joint, MultiTenantController, MultiTenantOptions, PlannerConfig, PolicyConfig,
-    ReconfigController, ReconfigOptions, Tenant, TenantSpec,
+    plan_joint, ForecastConfig, MultiTenantController, MultiTenantOptions, PlannerConfig,
+    PolicyConfig, ReconfigController, ReconfigOptions, Tenant, TenantSpec,
 };
 use ensemble_serve::server::{ApiServer, SystemRegistry};
 use ensemble_serve::util::cli::Cli;
@@ -49,6 +49,8 @@ sharing one device set; select per request via the x-ensemble header")
         .opt("seed", None, "greedy sampling seed")
         .opt("listen", None, "serve: bind address")
         .opt("p99-slo-ms", None, "serve: reconfig controller p99 objective (ms)")
+        .opt("forecast-horizon-s", None, "serve: predictive-scaling projection \
+horizon in seconds (default 30)")
         .opt("profiles", None, "measured profile store (JSON): plan on profiled \
 costs; serve exposes /v1/profiles and calibrates online")
         .opt("max-cell-age-s", None, "ignore profile cells older than SECONDS \
@@ -57,6 +59,8 @@ costs; serve exposes /v1/profiles and calibrates online")
         .opt("batches", None, "profile: comma-separated batch sizes (default 8,16,32,64,128)")
         .opt("reps", None, "profile: measured predicts per cell (default 3)")
         .flag("reconfig", "serve: enable the live-reconfiguration controller")
+        .flag("no-forecast", "serve: disable predictive (trend-based) scaling — \
+the controller reacts to breaches only")
         .flag("no-cache", "optimize: ignore the matrix cache")
         .flag("help", "print help")
 }
@@ -141,6 +145,19 @@ fn config_from(args: &ensemble_serve::util::cli::Args) -> anyhow::Result<ServerC
         anyhow::ensure!(v > 0.0, "p99-slo-ms must be positive");
         cfg.p99_slo_ms = v;
     }
+    if args.has_flag("no-forecast") {
+        cfg.forecast = false;
+    }
+    // a horizon with forecasting off is allowed (it parks the tuning
+    // for a later re-enable), matching the config-file rule; the cap
+    // matches too (Duration::from_secs_f64 panics on huge floats)
+    if let Some(v) = args.get_f64("forecast-horizon-s")? {
+        anyhow::ensure!(
+            v > 0.0 && v <= 86_400.0,
+            "forecast-horizon-s must be in (0, 86400]"
+        );
+        cfg.forecast_horizon_s = v;
+    }
     if let Some(v) = args.get("profiles") {
         cfg.profiles = Some(v.to_string());
     }
@@ -186,6 +203,15 @@ fn cost_model_from(cfg: &ServerConfig)
 /// sim backend compresses time, real backends run 1:1.
 fn calibration_time_scale(cfg: &ServerConfig) -> f64 {
     if cfg.backend == Backend::Sim { cfg.time_scale } else { 1.0 }
+}
+
+/// Predictive-scaling knobs for both controllers.
+fn forecast_config_from(cfg: &ServerConfig) -> ForecastConfig {
+    ForecastConfig {
+        enabled: cfg.forecast,
+        horizon: std::time::Duration::from_secs_f64(cfg.forecast_horizon_s),
+        ..ForecastConfig::default()
+    }
 }
 
 fn make_executor(cfg: &ServerConfig) -> anyhow::Result<Arc<dyn Executor>> {
@@ -360,15 +386,21 @@ fn run(args: &ensemble_serve::util::cli::Args) -> anyhow::Result<()> {
                         cost: Arc::clone(&cost),
                         ..PlannerConfig::default()
                     },
+                    forecast: forecast_config_from(&cfg),
                     calibration,
                     ..ReconfigOptions::default()
                 };
                 let controller = ReconfigController::start(Arc::clone(&system), opts);
                 log::info!(
-                    "reconfiguration controller running (p99 SLO {} ms, {} costs{})",
+                    "reconfiguration controller running (p99 SLO {} ms, {} costs{}{})",
                     cfg.p99_slo_ms,
                     cost.name(),
                     if profile_store.is_some() { ", online calibration" } else { "" },
+                    if cfg.forecast {
+                        format!(", predictive scaling {:.0}s ahead", cfg.forecast_horizon_s)
+                    } else {
+                        ", reactive only".to_string()
+                    },
                 );
                 Some(controller)
             } else {
@@ -449,6 +481,7 @@ fn serve_multi_tenant(cfg: &ServerConfig) -> anyhow::Result<()> {
                 cost: Arc::clone(&cost),
                 ..PlannerConfig::default()
             },
+            forecast: forecast_config_from(cfg),
             calibration,
             ..MultiTenantOptions::default()
         };

@@ -51,6 +51,16 @@ pub struct EngineMetrics {
     /// Worker-pool generation currently serving (starts at 1, bumped by
     /// each live reconfiguration).
     pub generation: AtomicU64,
+    /// Projected request rate at the forecaster's horizon, in
+    /// milli-req/s (gauge; integer-only exposition keeps sub-req/s
+    /// trends visible). Updated by the reconfiguration controllers each
+    /// tick; 0 while the forecaster is cold or disabled.
+    pub forecast_req_rate_milli: AtomicU64,
+    /// Predicted unavailability gap of the most recent staged swap, µs
+    /// (gauge; 0 until a drain-then-build swap has been planned).
+    /// Scraped next to the measured `swap_gap_us` counter so operators
+    /// can compare predicted against actual.
+    pub predicted_gap_us: AtomicU64,
     /// Drain-timed-out generations still pinning device memory (gauge,
     /// refreshed by every lingering sweep).
     pub lingering_generations: AtomicU64,
@@ -94,6 +104,8 @@ impl EngineMetrics {
             ("requests_parked", g(&self.requests_parked)),
             ("generation", g(&self.generation)),
             ("lingering_generations", g(&self.lingering_generations)),
+            ("forecast_req_rate_milli", g(&self.forecast_req_rate_milli)),
+            ("predicted_gap_us", g(&self.predicted_gap_us)),
         ]
     }
 

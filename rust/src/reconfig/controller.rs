@@ -1,11 +1,17 @@
-//! The autoscaling controller: monitor → policy → planner → live swap.
+//! The autoscaling controller: monitor → forecast → policy → planner →
+//! live swap.
 //!
 //! [`ReconfigController::start`] spawns a background loop that samples
-//! the engine's metrics every `poll_interval`, evaluates the
-//! [`policy`](crate::reconfig::policy), and on a `Replan` decision runs
-//! the [`planner`](crate::reconfig::planner) and hot-swaps the system
-//! onto the candidate matrix (hysteresis: voluntary swaps must beat the
-//! active allocation's analytic score by `min_predicted_gain`).
+//! the engine's metrics every `poll_interval`, feeds the windowed
+//! signals through the [`forecast`](crate::reconfig::forecast) trend
+//! estimator, evaluates the [`policy`] (which
+//! can now replan *pre-emptively*, on the projected load), and on a
+//! `Replan` decision runs the [`planner`] and
+//! hot-swaps the system onto the candidate matrix (hysteresis:
+//! voluntary swaps must beat the active allocation's analytic score by
+//! `min_predicted_gain`; staged swaps must additionally win the
+//! breach-vs-gap expected-cost comparison priced by the plan's
+//! `predicted_gap_ms`).
 //!
 //! Every step is also callable synchronously — [`tick`](ReconfigController::tick)
 //! for one control iteration, [`reconfigure_now`](ReconfigController::reconfigure_now)
@@ -21,6 +27,7 @@ use std::time::{Duration, Instant};
 use anyhow::ensure;
 
 use crate::engine::{InferenceSystem, SwapReport, SwapStrategy};
+use crate::reconfig::forecast::{Forecast, ForecastConfig, Forecaster};
 use crate::reconfig::monitor::{LoadMonitor, LoadSnapshot};
 use crate::reconfig::planner::{self, PlannerConfig};
 use crate::reconfig::policy::{self, Decision, PolicyConfig};
@@ -41,12 +48,18 @@ pub struct ReconfigOptions {
     pub failure_backoff: Duration,
     pub policy: PolicyConfig,
     pub planner: PlannerConfig,
+    /// Trend forecasting over the monitor's windowed signals: the
+    /// predictive policy trigger replans *before* a diurnal ramp
+    /// breaches the SLO (disable for the purely reactive pre-forecast
+    /// behavior).
+    pub forecast: ForecastConfig,
     /// Online cost calibration: every tick drains the engine's observed
     /// batch latencies and EWMA-folds them into this calibrator's
-    /// profile store. Point `planner.cost` at a
+    /// profile store (and every staged swap's measured gap into the
+    /// per-matrix-size gap cells). Point `planner.cost` at a
     /// [`ProfiledCost`](crate::cost::ProfiledCost) over the same store
-    /// and replans score candidates with what the hardware actually
-    /// did. `None` (default): no calibration.
+    /// and replans score candidates — and predict gaps — with what the
+    /// hardware actually did. `None` (default): no calibration.
     pub calibration: Option<crate::cost::Calibrator>,
 }
 
@@ -58,6 +71,7 @@ impl Default for ReconfigOptions {
             failure_backoff: Duration::from_secs(2),
             policy: PolicyConfig::default(),
             planner: PlannerConfig::default(),
+            forecast: ForecastConfig::default(),
             calibration: None,
         }
     }
@@ -87,6 +101,9 @@ pub struct StatusReport {
     pub last_decision: String,
     pub last_swap: Option<SwapReport>,
     pub window: Option<LoadSnapshot>,
+    /// Trend projection at the forecast horizon (`None` while cold or
+    /// disabled).
+    pub forecast: Option<Forecast>,
 }
 
 /// The one JSON shape of a [`SwapReport`], shared by the
@@ -102,6 +119,16 @@ pub fn gap_ms_json(r: &SwapReport) -> Json {
     }
 }
 
+/// Milliseconds-or-null JSON of the control plane's gap prediction for
+/// a swap — rendered next to the measured `gap_ms` everywhere a
+/// [`SwapReport`] appears, so predicted-vs-actual is one glance.
+pub fn predicted_gap_ms_json(r: &SwapReport) -> Json {
+    match r.predicted_gap_ms {
+        Some(g) => Json::Num(g),
+        None => Json::Null,
+    }
+}
+
 pub fn swap_report_json(r: &SwapReport) -> Json {
     let gap = gap_ms_json(r);
     Json::from_pairs([
@@ -113,6 +140,7 @@ pub fn swap_report_json(r: &SwapReport) -> Json {
         ("drain_complete", Json::Bool(r.drain_complete)),
         ("strategy", Json::Str(r.strategy.name().to_string())),
         ("gap_ms", gap),
+        ("predicted_gap_ms", predicted_gap_ms_json(r)),
         ("parked", Json::Num(r.parked as f64)),
     ])
 }
@@ -139,6 +167,10 @@ impl StatusReport {
                 ),
             ]),
         };
+        let forecast = match &self.forecast {
+            None => Json::Null,
+            Some(f) => f.to_json(),
+        };
         Json::from_pairs([
             ("generation", Json::Num(self.generation as f64)),
             ("swaps", Json::Num(self.swaps as f64)),
@@ -150,6 +182,7 @@ impl StatusReport {
             ("last_decision", Json::Str(self.last_decision.clone())),
             ("last_swap", swap),
             ("window", window),
+            ("forecast", forecast),
         ])
     }
 }
@@ -159,6 +192,7 @@ impl StatusReport {
 pub struct ReconfigController {
     system: Arc<InferenceSystem>,
     monitor: LoadMonitor,
+    forecaster: Forecaster,
     opts: ReconfigOptions,
     state: Mutex<CtrlState>,
     /// Makes plan → compare-with-active → swap atomic across the loop
@@ -175,6 +209,7 @@ impl ReconfigController {
     pub fn start(system: Arc<InferenceSystem>, opts: ReconfigOptions) -> Arc<ReconfigController> {
         let ctrl = Arc::new(ReconfigController {
             monitor: LoadMonitor::new(system.metrics_arc(), opts.window),
+            forecaster: Forecaster::new(opts.forecast.clone()),
             system,
             opts,
             state: Mutex::new(CtrlState {
@@ -257,6 +292,18 @@ impl ReconfigController {
         let active = self.system.matrix();
         let snapshot = self.normalized_snapshot();
         let gpu_mask: Vec<bool> = self.system.devices().iter().map(|d| d.is_gpu()).collect();
+        // feed the trend estimator with the normalized window (GPU rows
+        // only, like every reactive utilization gate) and project
+        // ahead; the gauge exports the projection so dashboards see the
+        // ramp the controller is acting on
+        if let Some(s) = &snapshot {
+            self.forecaster.observe_snapshot(s, &gpu_mask);
+        }
+        let forecast = self.forecaster.forecast();
+        self.system.metrics().forecast_req_rate_milli.store(
+            forecast.as_ref().map(|f| (f.rate_ahead * 1e3) as u64).unwrap_or(0),
+            Ordering::Relaxed,
+        );
 
         let (failed, since_swap) = {
             let st = self.state.lock().unwrap();
@@ -276,23 +323,32 @@ impl ReconfigController {
             Decision::Replan {
                 reason: format!("generation error: {err}"),
                 force: true,
-                allow_gap: true,
+                breach_cost: f64::INFINITY,
             }
         } else {
             policy::decide(
                 &self.opts.policy,
                 snapshot.as_ref(),
+                forecast.as_ref(),
                 &gpu_mask,
                 self.system.in_flight(),
                 active_uses_failed,
                 since_swap,
             )
         };
+        // the rate a gap would park requests at: the smoothed current
+        // rate when forecasting, the raw windowed rate otherwise
+        let park_rate = forecast
+            .as_ref()
+            .map(|f| f.rate_now)
+            .or_else(|| snapshot.as_ref().map(|s| s.req_rate))
+            .unwrap_or(0.0);
+        let permits_gap = decision.gap_permitted();
         match decision {
             Decision::Hold(why) => {
                 self.state.lock().unwrap().last_decision = format!("hold: {why}");
             }
-            Decision::Replan { reason, force, allow_gap } => {
+            Decision::Replan { reason, force, breach_cost } => {
                 // back off after ANY recent attempt, not just completed
                 // swaps: the planner is cheap but not free, and the
                 // trigger may persist on an allocation the planner
@@ -314,9 +370,12 @@ impl ReconfigController {
                         format!("hold: replan backoff ({reason})");
                     return;
                 }
-                let strategy =
-                    if allow_gap { SwapStrategy::Auto } else { SwapStrategy::SideBySide };
-                match self.replan(&reason, force, strategy) {
+                let strategy = if permits_gap {
+                    SwapStrategy::Auto
+                } else {
+                    SwapStrategy::SideBySide
+                };
+                match self.replan(&reason, force, strategy, breach_cost, park_rate) {
                     Ok(_) => {}
                     Err(e) => {
                         self.state.lock().unwrap().last_decision =
@@ -352,14 +411,22 @@ impl ReconfigController {
                 ),
             }));
         }
-        self.replan(reason, true, strategy)
+        // operator-forced: any gap the strategy permits is accepted
+        self.replan(reason, true, strategy, f64::INFINITY, 0.0)
     }
 
+    /// `breach_cost`/`park_rate` price the drain-then-build tradeoff
+    /// (see [`policy`]): when the staged plan predicts a gap, the
+    /// expected requests parked during it (`predicted_gap_s ×
+    /// park_rate`) must not exceed the expected requests harmed by
+    /// staying on the stale matrix. Forced replans skip the comparison.
     fn replan(
         &self,
         reason: &str,
         force: bool,
         strategy: SwapStrategy,
+        breach_cost: f64,
+        park_rate: f64,
     ) -> anyhow::Result<Option<SwapReport>> {
         let _serialize = self.replan_lock.lock().unwrap();
         let failed: Vec<usize> = {
@@ -411,6 +478,24 @@ impl ReconfigController {
                 format!("hold: planner reproduced the active matrix ({reason})");
             return Ok(None);
         }
+        // What a gap would cost if this swap turns staged: the plan's
+        // own prediction, or — for a plan classified side-by-side that
+        // the engine's real feasibility check could still demote to
+        // drain-then-build under Auto — the same predictor over the
+        // plan's size. One number, so the pricing below and the
+        // report's predicted-vs-actual never disagree.
+        let predicted_gap_ms = staged
+            .predicted_gap_ms
+            .unwrap_or_else(|| self.opts.planner.cost.staged_gap_ms(plan.matrix.worker_count()));
+        // the engine re-checks side-by-side feasibility for real (the
+        // planner's budget is model-based): when a gap was allowed,
+        // keep Auto so a plan classified side-by-side that still fails
+        // to build falls back instead of refusing
+        let mut engine_strategy = match staged.strategy {
+            SwapStrategy::DrainThenBuild => SwapStrategy::DrainThenBuild,
+            _ if strategy == SwapStrategy::SideBySide => SwapStrategy::SideBySide,
+            _ => SwapStrategy::Auto,
+        };
         if !force {
             let base = planner::score(&active, ensemble, devices, &*self.opts.planner.cost);
             let gain = if base > 0.0 { plan.predicted_img_s / base } else { f64::INFINITY };
@@ -421,21 +506,52 @@ impl ReconfigController {
                 );
                 return Ok(None);
             }
+            // breach-vs-gap expected cost: pay the predicted gap only
+            // when the requests it parks are cheaper than the requests
+            // the stale matrix keeps harming. Applies to the engine's
+            // Auto fallback too — a gap the plan did not predict must
+            // not slip past the comparison — but there it only demotes
+            // to strict side-by-side (the zero-downtime path is still
+            // worth taking; only the fallback is priced out).
+            let gap_cost = predicted_gap_ms / 1e3 * park_rate;
+            if gap_cost > breach_cost {
+                if staged.strategy == SwapStrategy::DrainThenBuild {
+                    self.state.lock().unwrap().last_decision = format!(
+                        "hold: predicted gap {predicted_gap_ms:.0} ms would park \
+                         ~{gap_cost:.0} requests, above the breach cost \
+                         {breach_cost:.0} ({reason})"
+                    );
+                    return Ok(None);
+                }
+                engine_strategy = SwapStrategy::SideBySide;
+            }
+        }
+        if staged.strategy == SwapStrategy::DrainThenBuild {
+            self.system
+                .metrics()
+                .predicted_gap_us
+                .store((predicted_gap_ms * 1e3) as u64, Ordering::Relaxed);
         }
 
-        // the engine re-checks side-by-side feasibility for real (the
-        // planner's budget is model-based): when a gap was allowed,
-        // keep Auto so a plan classified side-by-side that still fails
-        // to build falls back instead of refusing
-        let engine_strategy = match staged.strategy {
-            SwapStrategy::DrainThenBuild => SwapStrategy::DrainThenBuild,
-            _ if strategy == SwapStrategy::SideBySide => SwapStrategy::SideBySide,
-            _ => SwapStrategy::Auto,
-        };
-        let report = self.system.reconfigure_with(&plan.matrix, engine_strategy)?;
+        let mut report = self.system.reconfigure_with(&plan.matrix, engine_strategy)?;
+        // attach the prediction and calibrate the gap model with what
+        // actually happened, so the NEXT staged swap predicts from
+        // measurement instead of the analytic guess
+        if report.gap.is_some() {
+            report.predicted_gap_ms = Some(predicted_gap_ms);
+            self.system
+                .metrics()
+                .predicted_gap_us
+                .store((predicted_gap_ms * 1e3) as u64, Ordering::Relaxed);
+        }
+        if let (Some(cal), Some(gap)) = (&self.opts.calibration, report.gap) {
+            cal.observe_gap(plan.matrix.worker_count(), gap);
+        }
         // the window now describes the PREVIOUS generation (other
-        // worker counts, other latencies): start fresh
+        // worker counts, other latencies): start fresh — the trend too,
+        // it was measured against the old allocation's capacity
         self.monitor.reset();
+        self.forecaster.reset();
         let mode = match report.gap {
             Some(g) => format!("drain_then_build, gap {:.1} ms", g.as_secs_f64() * 1e3),
             None => report.strategy.name().to_string(),
@@ -511,6 +627,7 @@ impl ReconfigController {
             last_decision: st.last_decision.clone(),
             last_swap: st.last_swap.clone(),
             window: self.normalized_snapshot(),
+            forecast: self.forecaster.forecast(),
         }
     }
 
@@ -568,6 +685,9 @@ mod tests {
             poll_interval: Duration::from_millis(10),
             window: Duration::from_millis(500),
             failure_backoff: Duration::from_millis(50),
+            // these tests pin the REACTIVE paths; the predictive trigger
+            // is covered by forecast.rs and integration_reconfig.rs
+            forecast: ForecastConfig { enabled: false, ..ForecastConfig::default() },
             policy: PolicyConfig {
                 p99_slo_ms: 0.01, // any traffic breaches: forces a replan
                 min_window_requests: 5,
@@ -682,6 +802,10 @@ mod tests {
             .expect("Auto must complete the swap via drain-then-build");
         assert_eq!(report.strategy, SwapStrategy::DrainThenBuild);
         assert!(report.gap.is_some());
+        // the staged plan's gap prediction rides along on the report
+        // (analytic guess here: nothing calibrated yet)
+        assert_eq!(report.predicted_gap_ms,
+                   Some(crate::cost::analytic_gap_ms(1)));
         assert_eq!(sys.generation(), 2);
         assert_eq!(sys.matrix().get(0, 0), 16, "A1 packing adopted:\n{}", sys.matrix());
         let x = vec![0.1; 2 * e.members[0].input_elems_per_image()];

@@ -1,0 +1,362 @@
+//! Trend forecasting over the load monitor's windowed signals.
+//!
+//! The reactive policy chases load: it replans only after the windowed
+//! p99 has already breached the SLO — by which time a diurnal ramp has
+//! been overloading the stale allocation for a full monitor window. The
+//! forecaster closes that lag with Holt's linear method (double
+//! exponential smoothing) over the monitor's request rate and peak
+//! normalized GPU utilization (CPU rows are masked out, exactly as the
+//! reactive policy's utilization gates mask them): each control tick
+//! feeds the newest [`LoadSnapshot`] in, and the
+//! policy asks for the projection `horizon` seconds ahead. When the
+//! projected utilization crosses the policy's `high_util` threshold
+//! *and* the trend is significant, the controller replans **before**
+//! the breach instead of after it (ROADMAP: "predictive (trend-based)
+//! scaling on top of the reactive policy").
+//!
+//! Holt with irregular sampling intervals (ticks are not exactly
+//! periodic): for an observation `y` arriving `dt` seconds after the
+//! previous one,
+//!
+//! ```text
+//!   level ← α·y + (1 − α)·(level + trend·dt)
+//!   trend ← β·(level − level_prev)/dt + (1 − β)·trend
+//! ```
+//!
+//! so `trend` is a per-second slope and the `h`-second-ahead projection
+//! is `level + trend·h`. Two guards keep flat or noisy load from
+//! triggering: a minimum sample count (cold start) and a minimum
+//! relative slope (`|trend·horizon|` must exceed `min_rel_slope` of the
+//! current level before the forecast is marked `rising`).
+
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+use crate::reconfig::monitor::LoadSnapshot;
+use crate::util::json::Json;
+
+/// Forecaster knobs.
+#[derive(Debug, Clone)]
+pub struct ForecastConfig {
+    /// Master switch: disabled = the policy is purely reactive (the
+    /// pre-forecast behavior).
+    pub enabled: bool,
+    /// Projection horizon: the policy acts on the state predicted this
+    /// far ahead. Should exceed the monitor window plus a swap's build
+    /// time, or the replan lands no earlier than the reactive one.
+    pub horizon: Duration,
+    /// Level smoothing weight α ∈ (0, 1].
+    pub alpha: f64,
+    /// Trend smoothing weight β ∈ (0, 1]. Deliberately smaller than α:
+    /// the slope must be stable evidence, not the last tick's jitter.
+    pub beta: f64,
+    /// Observations before any forecast is emitted (cold-start guard).
+    pub min_samples: usize,
+    /// Relative slope floor for the `rising` flag: the projected change
+    /// over the horizon must exceed this fraction of the current level,
+    /// so flat-but-noisy load never reads as a ramp.
+    pub min_rel_slope: f64,
+}
+
+impl Default for ForecastConfig {
+    fn default() -> Self {
+        ForecastConfig {
+            enabled: true,
+            horizon: Duration::from_secs(30),
+            alpha: 0.35,
+            beta: 0.15,
+            min_samples: 6,
+            min_rel_slope: 0.10,
+        }
+    }
+}
+
+/// One projected view of the load, `horizon` ahead of now.
+#[derive(Debug, Clone)]
+pub struct Forecast {
+    /// Smoothed current request rate, req/s.
+    pub rate_now: f64,
+    /// Projected request rate at the horizon, req/s (clamped ≥ 0).
+    pub rate_ahead: f64,
+    /// Smoothed current peak normalized GPU utilization (CPU rows
+    /// masked out, like every reactive utilization gate).
+    pub util_now: f64,
+    /// Projected peak GPU utilization at the horizon (clamped ≥ 0).
+    pub util_ahead: f64,
+    /// Request-rate slope, req/s per second.
+    pub rate_slope: f64,
+    /// Utilization slope, per second.
+    pub util_slope: f64,
+    /// Projection horizon the `*_ahead` values refer to.
+    pub horizon: Duration,
+    /// True when either signal's projected change over the horizon is
+    /// significant (≥ `min_rel_slope` of its level) AND positive — the
+    /// ramp evidence the predictive policy trigger requires.
+    pub rising: bool,
+}
+
+impl Forecast {
+    /// JSON shape shared by `GET /v1/reconfig/status` (single- and
+    /// multi-tenant), so operators read the same fields everywhere.
+    pub fn to_json(&self) -> Json {
+        Json::from_pairs([
+            ("rate_now", Json::Num(self.rate_now)),
+            ("rate_ahead", Json::Num(self.rate_ahead)),
+            ("util_now", Json::Num(self.util_now)),
+            ("util_ahead", Json::Num(self.util_ahead)),
+            ("rate_slope", Json::Num(self.rate_slope)),
+            ("util_slope", Json::Num(self.util_slope)),
+            ("horizon_s", Json::Num(self.horizon.as_secs_f64())),
+            ("rising", Json::Bool(self.rising)),
+        ])
+    }
+}
+
+/// Holt state of one signal.
+#[derive(Debug, Clone, Copy)]
+struct Holt {
+    level: f64,
+    /// Per-second slope.
+    trend: f64,
+}
+
+impl Holt {
+    fn observe(&mut self, y: f64, dt_s: f64, alpha: f64, beta: f64) {
+        let prev = self.level;
+        let drifted = self.level + self.trend * dt_s;
+        self.level = alpha * y + (1.0 - alpha) * drifted;
+        self.trend = beta * (self.level - prev) / dt_s + (1.0 - beta) * self.trend;
+    }
+
+    fn ahead(&self, h_s: f64) -> f64 {
+        (self.level + self.trend * h_s).max(0.0)
+    }
+}
+
+struct ForecastState {
+    rate: Holt,
+    util: Holt,
+    samples: usize,
+    last_at: Option<Instant>,
+}
+
+/// Trend estimator over the monitor's windowed signals. One per
+/// controller (per tenant in multi-tenant deployments); interior
+/// mutability so the controller can observe and forecast through
+/// `&self`, like the monitor it sits next to.
+pub struct Forecaster {
+    cfg: ForecastConfig,
+    state: Mutex<ForecastState>,
+}
+
+impl Forecaster {
+    pub fn new(cfg: ForecastConfig) -> Forecaster {
+        assert!(cfg.horizon > Duration::ZERO, "forecast horizon must be positive");
+        assert!((0.0..=1.0).contains(&cfg.alpha) && cfg.alpha > 0.0, "alpha in (0, 1]");
+        assert!((0.0..=1.0).contains(&cfg.beta) && cfg.beta > 0.0, "beta in (0, 1]");
+        Forecaster {
+            cfg,
+            state: Mutex::new(ForecastState {
+                rate: Holt { level: 0.0, trend: 0.0 },
+                util: Holt { level: 0.0, trend: 0.0 },
+                samples: 0,
+                last_at: None,
+            }),
+        }
+    }
+
+    pub fn config(&self) -> &ForecastConfig {
+        &self.cfg
+    }
+
+    /// Feed one windowed snapshot, stamped now. The controller calls
+    /// this once per tick, right after `LoadMonitor::sample`.
+    /// `gpu_mask` selects the devices whose peak utilization is
+    /// trended — the same mask every reactive utilization signal uses,
+    /// so a busy CPU row is no more a ramp signal here than it is
+    /// hot-device evidence there.
+    pub fn observe_snapshot(&self, snapshot: &LoadSnapshot, gpu_mask: &[bool]) {
+        let dt = {
+            let st = self.state.lock().unwrap();
+            st.last_at.map(|t| t.elapsed().as_secs_f64())
+        };
+        // first observation has no interval: seed the levels with dt=None
+        self.observe(dt, snapshot.req_rate, snapshot.masked_max(gpu_mask));
+    }
+
+    /// Testable core: `dt_s` is the seconds since the previous
+    /// observation (`None` for the first, which only seeds the levels).
+    pub fn observe(&self, dt_s: Option<f64>, req_rate: f64, max_util: f64) {
+        if !self.cfg.enabled {
+            return;
+        }
+        let mut st = self.state.lock().unwrap();
+        match dt_s {
+            // the first observation (or one with no measurable interval
+            // on a cold state) only seeds the levels
+            None | Some(_) if st.samples == 0 => {
+                st.rate = Holt { level: req_rate, trend: 0.0 };
+                st.util = Holt { level: max_util, trend: 0.0 };
+                st.samples = 1;
+            }
+            Some(dt) if dt > 1e-6 => {
+                st.rate.observe(req_rate, dt, self.cfg.alpha, self.cfg.beta);
+                st.util.observe(max_util, dt, self.cfg.alpha, self.cfg.beta);
+                st.samples += 1;
+            }
+            _ => {} // zero-interval duplicate: ignore
+        }
+        st.last_at = Some(Instant::now());
+    }
+
+    /// The projection at the configured horizon; `None` while disabled
+    /// or cold (fewer than `min_samples` observations).
+    pub fn forecast(&self) -> Option<Forecast> {
+        if !self.cfg.enabled {
+            return None;
+        }
+        let st = self.state.lock().unwrap();
+        if st.samples < self.cfg.min_samples {
+            return None;
+        }
+        let h = self.cfg.horizon.as_secs_f64();
+        let significant = |s: &Holt| {
+            let delta = s.trend * h;
+            delta > 0.0 && delta.abs() >= self.cfg.min_rel_slope * s.level.abs().max(1e-9)
+        };
+        Some(Forecast {
+            rate_now: st.rate.level.max(0.0),
+            rate_ahead: st.rate.ahead(h),
+            util_now: st.util.level.max(0.0),
+            util_ahead: st.util.ahead(h),
+            rate_slope: st.rate.trend,
+            util_slope: st.util.trend,
+            horizon: self.cfg.horizon,
+            rising: significant(&st.rate) || significant(&st.util),
+        })
+    }
+
+    /// Forget everything. Called after a live swap together with
+    /// `LoadMonitor::reset`: the trend was measured against the previous
+    /// allocation's capacity, so projecting it onto the new one would
+    /// re-trigger on stale evidence.
+    pub fn reset(&self) {
+        let mut st = self.state.lock().unwrap();
+        st.rate = Holt { level: 0.0, trend: 0.0 };
+        st.util = Holt { level: 0.0, trend: 0.0 };
+        st.samples = 0;
+        st.last_at = None;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg(horizon_s: u64) -> ForecastConfig {
+        ForecastConfig { horizon: Duration::from_secs(horizon_s), ..Default::default() }
+    }
+
+    /// Drive a deterministic series: `points[i]` observed 1 s apart.
+    fn drive(f: &Forecaster, rates: &[f64], utils: &[f64]) {
+        assert_eq!(rates.len(), utils.len());
+        for (i, (&r, &u)) in rates.iter().zip(utils).enumerate() {
+            let dt = if i == 0 { None } else { Some(1.0) };
+            f.observe(dt, r, u);
+        }
+    }
+
+    #[test]
+    fn cold_start_emits_nothing() {
+        let f = Forecaster::new(cfg(30));
+        assert!(f.forecast().is_none());
+        drive(&f, &[10.0, 10.0, 10.0], &[0.2, 0.2, 0.2]);
+        assert!(f.forecast().is_none(), "below min_samples");
+    }
+
+    #[test]
+    fn linear_ramp_is_detected_and_projected() {
+        let f = Forecaster::new(cfg(30));
+        // rate climbing 5 req/s each second, util 0.02/s from 0.3
+        let rates: Vec<f64> = (0..12).map(|i| 20.0 + 5.0 * i as f64).collect();
+        let utils: Vec<f64> = (0..12).map(|i| 0.30 + 0.02 * i as f64).collect();
+        drive(&f, &rates, &utils);
+        let fc = f.forecast().expect("warm");
+        assert!(fc.rising, "{fc:?}");
+        // slope converges toward the true 5 req/s²; the projection must
+        // land well above the current level
+        assert!(fc.rate_slope > 2.0, "slope={}", fc.rate_slope);
+        assert!(fc.rate_ahead > fc.rate_now * 1.5,
+                "ahead={} now={}", fc.rate_ahead, fc.rate_now);
+        // 30 s ahead at ~0.02/s crosses any high-util threshold
+        assert!(fc.util_ahead > 0.85, "util_ahead={}", fc.util_ahead);
+        assert!(fc.util_now < 0.6, "util_now={}", fc.util_now);
+    }
+
+    #[test]
+    fn flat_load_never_reads_as_rising() {
+        let f = Forecaster::new(cfg(30));
+        let rates = vec![50.0; 20];
+        let utils = vec![0.5; 20];
+        drive(&f, &rates, &utils);
+        let fc = f.forecast().unwrap();
+        assert!(!fc.rising, "{fc:?}");
+        assert!((fc.rate_ahead - 50.0).abs() < 1.0);
+        assert!((fc.util_ahead - 0.5).abs() < 0.02);
+    }
+
+    #[test]
+    fn noisy_flat_load_never_reads_as_rising() {
+        let f = Forecaster::new(cfg(30));
+        // deterministic ±10 % jitter around a flat 100 req/s
+        let jitter = [3.0, -7.0, 9.0, -4.0, 6.0, -9.0, 2.0, -5.0, 8.0, -3.0,
+                      5.0, -8.0, 4.0, -6.0, 7.0, -2.0];
+        let rates: Vec<f64> = jitter.iter().map(|j| 100.0 + j).collect();
+        let utils: Vec<f64> = jitter.iter().map(|j| 0.5 + j / 100.0).collect();
+        drive(&f, &rates, &utils);
+        let fc = f.forecast().unwrap();
+        assert!(!fc.rising, "noise triggered the ramp flag: {fc:?}");
+    }
+
+    #[test]
+    fn falling_load_is_not_rising() {
+        let f = Forecaster::new(cfg(30));
+        let rates: Vec<f64> = (0..12).map(|i| 200.0 - 10.0 * i as f64).collect();
+        let utils: Vec<f64> = (0..12).map(|i| 0.9 - 0.05 * i as f64).collect();
+        drive(&f, &rates, &utils);
+        let fc = f.forecast().unwrap();
+        assert!(!fc.rising, "{fc:?}");
+        assert!(fc.rate_ahead < fc.rate_now);
+        // projections clamp at zero instead of going negative
+        assert!(fc.util_ahead >= 0.0);
+    }
+
+    #[test]
+    fn reset_and_disable() {
+        let f = Forecaster::new(cfg(30));
+        let rates: Vec<f64> = (0..10).map(|i| 10.0 * i as f64).collect();
+        let utils = vec![0.5; 10];
+        drive(&f, &rates, &utils);
+        assert!(f.forecast().is_some());
+        f.reset();
+        assert!(f.forecast().is_none(), "reset must clear the window");
+
+        let off = Forecaster::new(ForecastConfig { enabled: false, ..cfg(30) });
+        drive(&off, &rates, &utils);
+        assert!(off.forecast().is_none(), "disabled forecaster must stay silent");
+    }
+
+    #[test]
+    fn forecast_json_shape() {
+        let f = Forecaster::new(cfg(10));
+        let rates: Vec<f64> = (0..8).map(|i| 10.0 + i as f64).collect();
+        let utils = vec![0.4; 8];
+        drive(&f, &rates, &utils);
+        let j = f.forecast().unwrap().to_json();
+        assert!(j.get("rate_now").unwrap().as_f64().is_some());
+        assert!(j.get("rate_ahead").unwrap().as_f64().is_some());
+        assert!(j.get("util_slope").unwrap().as_f64().is_some());
+        assert_eq!(j.get("horizon_s").unwrap().as_f64(), Some(10.0));
+        assert!(j.get("rising").unwrap().as_bool().is_some());
+    }
+}

@@ -6,18 +6,25 @@
 //! closes the loop at runtime:
 //!
 //! ```text
-//!   EngineMetrics ──► LoadMonitor ──► Policy ──► Planner ──► live swap
-//!   (counters,        (sliding-       (SLO /     (worst-fit  (generational
-//!    histogram,        window rates,   util /     + greedy    InferenceSystem
-//!    device gauges)    p99, util)      failure)   + analytic)  ::reconfigure)
+//!   EngineMetrics ─► LoadMonitor ─► Forecaster ─► Policy ─► Planner ─► live swap
+//!   (counters,       (sliding-      (Holt trend:  (SLO /    (worst-fit (generational
+//!    histogram,       window rates,  rate & util   util /    + greedy   InferenceSystem
+//!    device gauges)   p99, util)     N s ahead)    ramp)     + costs)    ::reconfigure)
 //! ```
 //!
 //! * [`monitor::LoadMonitor`] — samples the engine's monotonic counters
 //!   and latency-histogram buckets into a sliding window, yielding
 //!   request/image rates, windowed p50/p99 and per-device utilization.
+//! * [`forecast::Forecaster`] — Holt (double-EWMA) trend estimation over
+//!   the windowed rate and peak utilization, projected `horizon` seconds
+//!   ahead, so the policy can act on the diurnal ramp *before* it
+//!   breaches the SLO.
 //! * [`policy`] — decides *when* the current allocation is under- or
-//!   over-provisioned: windowed p99 above the SLO, device-utilization
-//!   imbalance, or a device marked failed.
+//!   over-provisioned: windowed p99 above the SLO, a forecast ramp
+//!   projected past the hot threshold, device-utilization imbalance, or
+//!   a device marked failed. Each replan decision prices the
+//!   drain-then-build tradeoff as an expected cost (`breach_cost`)
+//!   instead of the old boolean gap gate.
 //! * [`planner`] — decides *what* to run instead: re-runs the worst-fit
 //!   + bounded-greedy pipeline scored by the closed-form analytic
 //!   estimator (no engine in the loop) over the surviving devices.
@@ -41,11 +48,16 @@
 //! ([`planner::plan_staged`]) and the engine takes the staged path:
 //! park incoming requests, drain and free the live generation, build in
 //! the freed memory, replay — with rollback to the old matrix on build
-//! failure. The policy only allows that bounded unavailability for
-//! health triggers (SLO breach, backlog, failure), never for idle
-//! rebalances.
+//! failure. That bounded unavailability is priced, not gated: the
+//! staged plan predicts its gap ([`StagedPlan::predicted_gap_ms`] from
+//! measured swap telemetry in the [`cost`](crate::cost) store), and the
+//! controllers take it only when `predicted_gap × arrival rate` —
+//! requests parked — undercuts the decision's `breach_cost` — requests
+//! harmed by staying. Idle rebalances carry a zero breach cost and so
+//! never gap.
 
 pub mod controller;
+pub mod forecast;
 pub mod monitor;
 pub mod planner;
 pub mod policy;
@@ -53,6 +65,7 @@ pub mod tenancy;
 
 pub use controller::{ReconfigController, ReconfigOptions, StatusReport};
 pub use crate::engine::SwapStrategy;
+pub use forecast::{Forecast, ForecastConfig, Forecaster};
 pub use monitor::{LoadMonitor, LoadSnapshot};
 pub use planner::{
     plan, plan_joint, plan_staged, JointPlan, Plan, PlannerConfig, StagedPlan, TenantSpec,

@@ -126,6 +126,13 @@ pub fn plan(
 pub struct StagedPlan {
     pub plan: Plan,
     pub strategy: SwapStrategy,
+    /// Predicted unavailability gap of deploying this plan, wall ms —
+    /// [`CostModel::staged_gap_ms`] over the plan's worker count
+    /// (measured swap telemetry when calibrated, the analytic guess
+    /// otherwise). `None` for side-by-side plans, which are
+    /// zero-downtime. The controllers weigh this against the policy's
+    /// `breach_cost` before paying the gap.
+    pub predicted_gap_ms: Option<f64>,
 }
 
 /// [`plan`] with strategy classification (the drain-then-build swap
@@ -158,12 +165,16 @@ pub fn plan_staged(
         Ok(StagedPlan {
             plan: plan(ensemble, devices, failed, &resident, cfg)?,
             strategy: SwapStrategy::SideBySide,
+            predicted_gap_ms: None,
         })
     };
     let drain_then_build = || -> anyhow::Result<StagedPlan> {
+        let p = plan(ensemble, devices, failed, pinned, cfg)?;
+        let gap = cfg.cost.staged_gap_ms(p.matrix.worker_count());
         Ok(StagedPlan {
-            plan: plan(ensemble, devices, failed, pinned, cfg)?,
+            plan: p,
             strategy: SwapStrategy::DrainThenBuild,
+            predicted_gap_ms: Some(gap),
         })
     };
     match strategy {
@@ -553,6 +564,13 @@ mod tests {
         assert_eq!(staged.strategy, SwapStrategy::DrainThenBuild);
         assert!(staged.plan.matrix.all_models_placed());
         assert!(staged.plan.predicted_img_s > 0.0);
+        // a staged plan predicts its gap (analytic guess: nothing
+        // measured under this cost model)
+        let predicted = staged.predicted_gap_ms.expect("staged plans predict a gap");
+        assert_eq!(
+            predicted,
+            crate::cost::analytic_gap_ms(staged.plan.matrix.worker_count())
+        );
         // the plan fits the device ALONE (only the drained budget)
         assert!(crate::alloc::memory::fit_mem(&staged.plan.matrix, &e, &d));
 
@@ -563,6 +581,34 @@ mod tests {
         let staged = plan_staged(&e, &d4, &[], &[live4], &[], &cfg, SwapStrategy::Auto)
             .unwrap();
         assert_eq!(staged.strategy, SwapStrategy::SideBySide);
+        assert_eq!(staged.predicted_gap_ms, None, "zero-downtime plans predict no gap");
+    }
+
+    #[test]
+    fn staged_gap_prediction_uses_measured_swap_telemetry() {
+        use crate::cost::{ProfileStore, ProfiledCost};
+        // same tight fixture, but the store has SEEN a staged swap of a
+        // 1-worker matrix: the plan's prediction must be the measurement
+        let e = ensemble(EnsembleId::Imn1);
+        let d = DeviceSet::hgx(1);
+        let mut live = AllocationMatrix::zeroed(d.len(), e.len());
+        live.set(0, 0, 64);
+        let store = Arc::new(ProfileStore::new());
+        store.observe_gap(1, 321.0, 0.25);
+        let cfg = PlannerConfig {
+            default_batch: 16,
+            greedy: GreedyConfig {
+                max_iter: 0,
+                devices_minus_models_rule: false,
+                ..GreedyConfig::default()
+            },
+            cost: Arc::new(ProfiledCost::new(store)),
+        };
+        let staged = plan_staged(&e, &d, &[], &[live], &[], &cfg, SwapStrategy::Auto)
+            .unwrap();
+        assert_eq!(staged.strategy, SwapStrategy::DrainThenBuild);
+        assert_eq!(staged.plan.matrix.worker_count(), 1);
+        assert_eq!(staged.predicted_gap_ms, Some(321.0));
     }
 
     #[test]

@@ -1,12 +1,36 @@
 //! Reconfiguration policy: *when* to re-plan the allocation.
 //!
-//! Pure decision logic over a [`LoadSnapshot`] — no clocks, no engine
-//! handles — so every rule is unit-testable. The controller feeds it the
-//! windowed signals plus the failure/cooldown context and acts on the
-//! returned [`Decision`].
+//! Pure decision logic over a [`LoadSnapshot`] (and, new, a [`Forecast`]
+//! projected ahead of it) — no clocks, no engine handles — so every rule
+//! is unit-testable. The controller feeds it the windowed signals plus
+//! the failure/cooldown context and acts on the returned [`Decision`].
+//!
+//! ## The breach-vs-gap expected-cost model
+//!
+//! A drain-then-build swap buys a better allocation at the price of a
+//! bounded unavailability gap (requests parked at the intake gate).
+//! The old policy gated that tradeoff with a boolean `allow_gap`; this
+//! one prices both sides in the same unit — **requests harmed**:
+//!
+//! * each `Replan` decision carries `breach_cost`: the expected number
+//!   of SLO-breaching (or queue-delayed) requests over the policy
+//!   horizon if the replan is *deferred* — `f64::INFINITY` for device
+//!   failure and dead generations (nothing serves either way), `0.0`
+//!   for voluntary rebalances (a tidy-up must never take the ensemble
+//!   offline);
+//! * the controller prices the gap side after planning, when the staged
+//!   plan's `predicted_gap_ms` is known:
+//!   `gap_cost = predicted_gap_s × arrival rate` — the requests that
+//!   would park or be rejected during the outage;
+//! * the gap is taken iff `gap_cost ≤ breach_cost`.
+//!
+//! The per-trigger breach costs are deliberately coarse (documented
+//! inline and in DESIGN §Forecasting): they only need to be on the
+//! right side of a gap that is typically a few hundred milliseconds.
 
 use std::time::Duration;
 
+use crate::reconfig::forecast::Forecast;
 use crate::reconfig::monitor::LoadSnapshot;
 
 /// Thresholds driving the replan decision.
@@ -19,8 +43,10 @@ pub struct PolicyConfig {
     /// allocation is failing — a saturated-but-slow system must still
     /// trigger scaling.
     pub min_slo_samples: u64,
-    /// Completed-request floor for the voluntary rebalancing signal
-    /// (utilization imbalance): rebalancing a near-idle system is churn.
+    /// Completed-request floor for the voluntary rebalancing and
+    /// predictive signals (utilization imbalance, forecast ramps):
+    /// rebalancing a near-idle system is churn, and a trend fitted to a
+    /// near-empty window is noise.
     pub min_window_requests: u64,
     /// In-flight requests beyond this trigger a replan regardless of the
     /// window: latency quantiles only see COMPLETED requests, so an
@@ -57,24 +83,47 @@ impl Default for PolicyConfig {
 }
 
 /// Outcome of one policy evaluation.
-#[derive(Debug, Clone, PartialEq, Eq)]
+#[derive(Debug, Clone, PartialEq)]
 pub enum Decision {
     /// Keep the current allocation; the string says why.
     Hold(String),
     /// Run the planner. `force` skips the predicted-gain gate (device
     /// failure: any feasible allocation on the survivors beats a broken
-    /// one). `allow_gap` permits the drain-then-build fallback when the
-    /// new matrix cannot be built next to the live generation: true for
-    /// health triggers (failure, SLO breach, backlog) where the breach
-    /// outweighs a bounded unavailability gap, false for voluntary
-    /// rebalances (utilization imbalance) — a tidy-up must never take
-    /// the ensemble offline.
-    Replan { reason: String, force: bool, allow_gap: bool },
+    /// one). `breach_cost` prices the drain-then-build tradeoff (see
+    /// the module docs): the expected number of requests harmed over
+    /// the policy horizon if the replan is deferred. `0.0` forbids any
+    /// unavailability gap (voluntary rebalances), `f64::INFINITY`
+    /// accepts any gap (failure / dead generation); in between, the
+    /// controller compares it against `predicted_gap_s × arrival rate`
+    /// once the staged plan's gap prediction is known.
+    Replan { reason: String, force: bool, breach_cost: f64 },
+}
+
+impl Decision {
+    /// May this decision pay ANY unavailability gap? (The expected-cost
+    /// successor of the old boolean `allow_gap` gate: zero breach cost
+    /// means even a free gap buys nothing.)
+    pub fn gap_permitted(&self) -> bool {
+        matches!(self, Decision::Replan { breach_cost, .. } if *breach_cost > 0.0)
+    }
+}
+
+/// Expected SLO-breaching requests over `horizon` if a breached window
+/// stays on the stale allocation: at p99 > SLO at least 1 % of traffic
+/// breaches, scaled by the overshoot ratio (a p99 at 3× the SLO harms
+/// far more of the tail than one at 1.05×), capped at the full rate.
+fn slo_breach_cost(p99_ms: f64, slo_ms: f64, req_rate: f64, horizon: Duration) -> f64 {
+    let overshoot = (p99_ms / slo_ms).max(1.0);
+    let breach_frac = (0.01 * overshoot).min(1.0);
+    breach_frac * req_rate * horizon.as_secs_f64()
 }
 
 /// Evaluate the policy.
 ///
 /// * `snapshot` — windowed load, `None` while the monitor warms up.
+/// * `forecast` — trend projection over the window, `None` while the
+///   forecaster is cold or disabled (the policy is then purely
+///   reactive).
 /// * `gpu_mask` — per-device-index GPU flag (imbalance ignores the CPU).
 /// * `in_flight` — requests currently inside the active generation.
 /// * `active_uses_failed_device` — the serving matrix places workers on
@@ -84,6 +133,7 @@ pub enum Decision {
 pub fn decide(
     cfg: &PolicyConfig,
     snapshot: Option<&LoadSnapshot>,
+    forecast: Option<&Forecast>,
     gpu_mask: &[bool],
     in_flight: u64,
     active_uses_failed_device: bool,
@@ -93,7 +143,7 @@ pub fn decide(
         return Decision::Replan {
             reason: "active allocation uses a failed device".into(),
             force: true,
-            allow_gap: true,
+            breach_cost: f64::INFINITY,
         };
     }
     if let Some(t) = since_last_swap {
@@ -107,15 +157,18 @@ pub fn decide(
     }
     // backlog overload: an SLO-independent signal that needs no window —
     // requests piling up inside the engine mean the allocation cannot
-    // keep pace, even if none of them has completed yet
+    // keep pace, even if none of them has completed yet. Every queued
+    // request is already delayed, so the breach side of the gap
+    // tradeoff is at least the backlog itself.
     if in_flight > cfg.max_backlog {
+        let rate = snapshot.map(|s| s.req_rate).unwrap_or(0.0);
         return Decision::Replan {
             reason: format!(
                 "backlog: {in_flight} requests in flight (> {})",
                 cfg.max_backlog
             ),
             force: false,
-            allow_gap: true,
+            breach_cost: in_flight as f64 + rate * cfg.cooldown.as_secs_f64(),
         };
     }
     let Some(s) = snapshot else {
@@ -124,12 +177,14 @@ pub fn decide(
     // SLO breach: gated only by a small sample floor — under overload,
     // completions are scarce precisely because the allocation is
     // failing, and holding on "thin traffic" would starve the scaler
-    // in the exact situation it exists for.
+    // in the exact situation it exists for. The breach horizon is the
+    // cooldown: the soonest the policy would get another chance to act.
     if s.completed >= cfg.min_slo_samples && s.p99_ms > cfg.p99_slo_ms {
         return Decision::Replan {
             reason: format!("windowed p99 {:.1} ms above SLO {:.1} ms", s.p99_ms, cfg.p99_slo_ms),
             force: false,
-            allow_gap: true,
+            breach_cost: slo_breach_cost(s.p99_ms, cfg.p99_slo_ms, s.req_rate, cfg.cooldown)
+                .max(1.0),
         };
     }
     if s.completed < cfg.min_window_requests {
@@ -137,6 +192,30 @@ pub fn decide(
             "thin traffic: {} requests in window (< {})",
             s.completed, cfg.min_window_requests
         ));
+    }
+    // predictive trigger: the trend projects peak utilization past the
+    // hot threshold within the horizon — replan BEFORE the diurnal ramp
+    // turns into an SLO breach. Breach side of the tradeoff: the excess
+    // utilization fraction of the PROJECTED traffic over the horizon
+    // (coarse, but the gap it is weighed against is priced with the
+    // CURRENT rate, which is exactly the predictive advantage: the gap
+    // is cheap now and expensive after the ramp).
+    if let Some(f) = forecast {
+        if f.rising && f.util_ahead > cfg.high_util {
+            let excess = (f.util_ahead - cfg.high_util).clamp(0.05, 1.0);
+            return Decision::Replan {
+                reason: format!(
+                    "forecast: peak util {:.2} -> {:.2} in {:.0}s (rate {:.0} -> {:.0} req/s)",
+                    f.util_now,
+                    f.util_ahead,
+                    f.horizon.as_secs_f64(),
+                    f.rate_now,
+                    f.rate_ahead
+                ),
+                force: false,
+                breach_cost: (excess * f.rate_ahead * f.horizon.as_secs_f64()).max(1.0),
+            };
+        }
     }
     // both halves of the imbalance gate look at GPUs only: a busy CPU
     // row is neither hot-device evidence nor an imbalance signal
@@ -148,7 +227,8 @@ pub fn decide(
                 "device utilization imbalance: spread {spread:.2} at max GPU util {gpu_max:.2}"
             ),
             force: false,
-            allow_gap: false,
+            // a tidy-up must never take the ensemble offline
+            breach_cost: 0.0,
         };
     }
     Decision::Hold(format!(
@@ -175,6 +255,19 @@ mod tests {
         }
     }
 
+    fn ramp_forecast(util_ahead: f64, rate_ahead: f64) -> Forecast {
+        Forecast {
+            rate_now: rate_ahead / 2.0,
+            rate_ahead,
+            util_now: util_ahead / 2.0,
+            util_ahead,
+            rate_slope: rate_ahead / 60.0,
+            util_slope: util_ahead / 60.0,
+            horizon: Duration::from_secs(30),
+            rising: true,
+        }
+    }
+
     fn is_replan(d: &Decision) -> bool {
         matches!(d, Decision::Replan { .. })
     }
@@ -182,11 +275,11 @@ mod tests {
     #[test]
     fn failure_forces_replan_over_everything() {
         let cfg = PolicyConfig::default();
-        let d = decide(&cfg, None, &[true], 0, true, Some(Duration::ZERO));
+        let d = decide(&cfg, None, None, &[true], 0, true, Some(Duration::ZERO));
         match d {
-            Decision::Replan { force, allow_gap, .. } => {
+            Decision::Replan { force, breach_cost, .. } => {
                 assert!(force);
-                assert!(allow_gap, "failure replans may pay a gap");
+                assert!(breach_cost.is_infinite(), "failure replans accept any gap");
             }
             other => panic!("expected forced replan, got {other:?}"),
         }
@@ -196,34 +289,47 @@ mod tests {
     fn cooldown_holds_voluntary_replans() {
         let cfg = PolicyConfig::default();
         let s = snap(100, 10_000.0, vec![1.0, 0.0]);
-        let d = decide(&cfg, Some(&s), &[true, true], 0, false, Some(Duration::from_secs(1)));
+        let d = decide(&cfg, Some(&s), None, &[true, true], 0, false,
+                       Some(Duration::from_secs(1)));
         assert!(matches!(d, Decision::Hold(_)), "{d:?}");
         // cooldown elapsed: the SLO breach fires
-        let d = decide(&cfg, Some(&s), &[true, true], 0, false, Some(Duration::from_secs(60)));
+        let d = decide(&cfg, Some(&s), None, &[true, true], 0, false,
+                       Some(Duration::from_secs(60)));
         assert!(is_replan(&d), "{d:?}");
     }
 
     #[test]
     fn warming_up_and_thin_traffic_hold() {
         let cfg = PolicyConfig::default();
-        assert!(matches!(decide(&cfg, None, &[true], 0, false, None), Decision::Hold(_)));
+        assert!(matches!(decide(&cfg, None, None, &[true], 0, false, None),
+                         Decision::Hold(_)));
         let s = snap(3, 10_000.0, vec![1.0]);
-        assert!(matches!(decide(&cfg, Some(&s), &[true], 0, false, None), Decision::Hold(_)));
+        assert!(matches!(decide(&cfg, Some(&s), None, &[true], 0, false, None),
+                         Decision::Hold(_)));
     }
 
     #[test]
-    fn slo_breach_replans() {
+    fn slo_breach_replans_with_finite_breach_cost() {
         let cfg = PolicyConfig { p99_slo_ms: 100.0, ..Default::default() };
         let s = snap(50, 250.0, vec![0.5, 0.5]);
-        let d = decide(&cfg, Some(&s), &[true, true], 0, false, None);
+        let d = decide(&cfg, Some(&s), None, &[true, true], 0, false, None);
         match d {
-            Decision::Replan { reason, force, allow_gap } => {
+            Decision::Replan { reason, force, breach_cost } => {
                 assert!(!force);
-                assert!(allow_gap, "an SLO breach outweighs a bounded gap");
+                assert!(breach_cost > 0.0 && breach_cost.is_finite(),
+                        "an SLO breach prices a bounded gap: {breach_cost}");
                 assert!(reason.contains("p99"), "{reason}");
             }
             other => panic!("{other:?}"),
         }
+        // a worse overshoot prices a higher breach cost
+        let worse = snap(50, 2500.0, vec![0.5, 0.5]);
+        let cost_of = |s: &LoadSnapshot| match decide(&cfg, Some(s), None, &[true, true],
+                                                      0, false, None) {
+            Decision::Replan { breach_cost, .. } => breach_cost,
+            other => panic!("{other:?}"),
+        };
+        assert!(cost_of(&worse) > cost_of(&s), "overshoot must scale the breach cost");
     }
 
     #[test]
@@ -231,10 +337,15 @@ mod tests {
         let cfg = PolicyConfig::default();
         // nothing completes (so no window quantiles), but the queue
         // inside the engine is huge: scale anyway
-        let d = decide(&cfg, None, &[true], 1000, false, None);
-        assert!(is_replan(&d), "{d:?}");
+        let d = decide(&cfg, None, None, &[true], 1000, false, None);
+        match &d {
+            Decision::Replan { breach_cost, .. } => {
+                assert!(*breach_cost >= 1000.0, "queued requests are already harmed")
+            }
+            other => panic!("{other:?}"),
+        }
         // a modest in-flight count is not a signal
-        let d = decide(&cfg, None, &[true], 3, false, None);
+        let d = decide(&cfg, None, None, &[true], 3, false, None);
         assert!(matches!(d, Decision::Hold(_)), "{d:?}");
     }
 
@@ -245,12 +356,65 @@ mod tests {
         // is failing — the breach must still fire below
         // min_window_requests
         let s = snap(6, 5_000.0, vec![1.0, 0.0]);
-        let d = decide(&cfg, Some(&s), &[true, true], 0, false, None);
+        let d = decide(&cfg, Some(&s), None, &[true, true], 0, false, None);
         assert!(is_replan(&d), "{d:?}");
         // a near-empty window (below the sample floor) still holds
         let s = snap(2, 5_000.0, vec![1.0, 0.0]);
-        let d = decide(&cfg, Some(&s), &[true, true], 0, false, None);
+        let d = decide(&cfg, Some(&s), None, &[true, true], 0, false, None);
         assert!(matches!(d, Decision::Hold(_)), "{d:?}");
+    }
+
+    #[test]
+    fn forecast_ramp_replans_before_the_breach() {
+        let cfg = PolicyConfig::default();
+        // healthy window (p99 fine, util moderate) — the reactive policy
+        // holds — but the forecast projects util past high_util
+        let s = snap(100, 20.0, vec![0.5, 0.1]);
+        let reactive = decide(&cfg, Some(&s), None, &[true, true], 0, false, None);
+        assert!(matches!(reactive, Decision::Hold(_)), "{reactive:?}");
+        let f = ramp_forecast(1.2, 400.0);
+        let d = decide(&cfg, Some(&s), Some(&f), &[true, true], 0, false, None);
+        match &d {
+            Decision::Replan { reason, force, breach_cost } => {
+                assert!(reason.contains("forecast"), "{reason}");
+                assert!(!force, "predictive replans keep the hysteresis gate");
+                assert!(*breach_cost > 0.0 && breach_cost.is_finite(),
+                        "a predicted breach prices a bounded gap");
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn forecast_below_threshold_or_not_rising_holds() {
+        let cfg = PolicyConfig::default();
+        let s = snap(100, 20.0, vec![0.5, 0.1]);
+        // projection stays under high_util: hold
+        let mild = ramp_forecast(0.7, 200.0);
+        let d = decide(&cfg, Some(&s), Some(&mild), &[true, true], 0, false, None);
+        assert!(matches!(d, Decision::Hold(_)), "{d:?}");
+        // high projection but the trend is not significant: hold
+        let flat = Forecast { rising: false, ..ramp_forecast(1.2, 400.0) };
+        let d = decide(&cfg, Some(&s), Some(&flat), &[true, true], 0, false, None);
+        assert!(matches!(d, Decision::Hold(_)), "{d:?}");
+        // thin traffic starves the predictive trigger too (trend noise)
+        let thin = snap(3, 20.0, vec![0.5, 0.1]);
+        let f = ramp_forecast(1.2, 400.0);
+        let d = decide(&cfg, Some(&thin), Some(&f), &[true, true], 0, false, None);
+        assert!(matches!(d, Decision::Hold(_)), "{d:?}");
+    }
+
+    #[test]
+    fn reactive_breach_outranks_the_forecast() {
+        // when the window ALREADY breaches, the decision reports the
+        // breach (ground truth), not the projection
+        let cfg = PolicyConfig { p99_slo_ms: 100.0, ..Default::default() };
+        let s = snap(50, 400.0, vec![0.9, 0.9]);
+        let f = ramp_forecast(1.5, 500.0);
+        match decide(&cfg, Some(&s), Some(&f), &[true, true], 0, false, None) {
+            Decision::Replan { reason, .. } => assert!(reason.contains("p99"), "{reason}"),
+            other => panic!("{other:?}"),
+        }
     }
 
     #[test]
@@ -258,33 +422,43 @@ mod tests {
         let cfg = PolicyConfig { p99_slo_ms: 1e9, ..Default::default() };
         // imbalanced AND hot — but a rebalance must never pay a gap
         let s = snap(50, 1.0, vec![0.95, 0.05, 0.0]);
-        let d = decide(&cfg, Some(&s), &[true, true, false], 0, false, None);
+        let d = decide(&cfg, Some(&s), None, &[true, true, false], 0, false, None);
         match &d {
-            Decision::Replan { allow_gap, .. } => {
-                assert!(!allow_gap, "idle rebalances must stay zero-downtime")
+            Decision::Replan { breach_cost, .. } => {
+                assert_eq!(*breach_cost, 0.0, "idle rebalances must stay zero-downtime");
+                assert!(!d.gap_permitted());
             }
             other => panic!("expected replan, got {other:?}"),
         }
         // imbalanced but cold: hold
         let s = snap(50, 1.0, vec![0.4, 0.0, 0.0]);
-        let d = decide(&cfg, Some(&s), &[true, true, false], 0, false, None);
+        let d = decide(&cfg, Some(&s), None, &[true, true, false], 0, false, None);
         assert!(matches!(d, Decision::Hold(_)), "{d:?}");
         // the idle CPU row is not an imbalance signal
         let s = snap(50, 1.0, vec![0.9, 0.9, 0.0]);
-        let d = decide(&cfg, Some(&s), &[true, true, false], 0, false, None);
+        let d = decide(&cfg, Some(&s), None, &[true, true, false], 0, false, None);
         assert!(matches!(d, Decision::Hold(_)), "{d:?}");
         // and a BUSY CPU row is not hot-device evidence either: GPUs
         // imbalanced but cold must hold even at CPU util 0.95
         let s = snap(50, 1.0, vec![0.6, 0.05, 0.95]);
-        let d = decide(&cfg, Some(&s), &[true, true, false], 0, false, None);
+        let d = decide(&cfg, Some(&s), None, &[true, true, false], 0, false, None);
         assert!(matches!(d, Decision::Hold(_)), "{d:?}");
+    }
+
+    #[test]
+    fn gap_permitted_reflects_breach_cost() {
+        let slo = Decision::Replan { reason: "x".into(), force: false, breach_cost: 40.0 };
+        assert!(slo.gap_permitted());
+        let rebalance = Decision::Replan { reason: "x".into(), force: false, breach_cost: 0.0 };
+        assert!(!rebalance.gap_permitted());
+        assert!(!Decision::Hold("x".into()).gap_permitted());
     }
 
     #[test]
     fn healthy_system_holds() {
         let cfg = PolicyConfig::default();
         let s = snap(500, 20.0, vec![0.6, 0.55, 0.1]);
-        let d = decide(&cfg, Some(&s), &[true, true, false], 0, false, None);
+        let d = decide(&cfg, Some(&s), None, &[true, true, false], 0, false, None);
         assert!(matches!(d, Decision::Hold(_)), "{d:?}");
     }
 }

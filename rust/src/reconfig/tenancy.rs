@@ -10,8 +10,11 @@
 //! with pressure-scaled weights —
 //!
 //! * each breaching tenant's weight is multiplied by `breach_boost`,
+//! * each tenant whose per-tenant FORECAST projects its utilization
+//!   past the hot threshold gets `ramp_boost` — the joint replan
+//!   pre-positions capacity for the ramp before it breaches,
 //! * tenants with thin windowed traffic and an empty queue are
-//!   discounted by `idle_discount`,
+//!   discounted by `idle_discount` (never a ramping tenant),
 //!
 //! so the weighted max-min objective (see
 //! [`estimate_weighted_throughput`](crate::optimizer::analytic::estimate_weighted_throughput))
@@ -35,6 +38,7 @@ use anyhow::ensure;
 use crate::alloc::matrix::AllocationMatrix;
 use crate::engine::{InferenceSystem, SwapReport, SwapStrategy};
 use crate::model::Ensemble;
+use crate::reconfig::forecast::{Forecast, ForecastConfig, Forecaster};
 use crate::reconfig::monitor::{LoadMonitor, LoadSnapshot};
 use crate::reconfig::planner::{self, JointPlan, PlannerConfig, TenantSpec};
 use crate::reconfig::policy::{self, Decision, PolicyConfig};
@@ -69,9 +73,20 @@ pub struct MultiTenantOptions {
     pub planner: PlannerConfig,
     /// Weight multiplier for the tenant(s) whose policy fired.
     pub breach_boost: f64,
+    /// Weight multiplier for a tenant whose FORECAST projects its peak
+    /// utilization past the policy's `high_util` within the horizon,
+    /// even though its policy has not fired yet — the joint replan
+    /// triggered by a sibling then pre-positions capacity for the ramp
+    /// instead of re-carving it one breach later. Between 1.0 (no
+    /// anticipation) and `breach_boost` (a ramp is evidence, not yet a
+    /// breach).
+    pub ramp_boost: f64,
     /// Weight multiplier for tenants with thin windowed traffic and an
-    /// empty queue — their reserved share is what gets stolen.
+    /// empty queue — their reserved share is what gets stolen. Never
+    /// applied to a tenant whose forecast is ramping.
     pub idle_discount: f64,
+    /// Per-tenant trend forecasting (see the single-tenant controller).
+    pub forecast: ForecastConfig,
     /// Online cost calibration over ONE shared profile store: every
     /// tick drains each tenant's observed batch latencies and folds
     /// them in, so joint replans (point `planner.cost` at a
@@ -90,7 +105,9 @@ impl Default for MultiTenantOptions {
             policy: PolicyConfig::default(),
             planner: PlannerConfig::default(),
             breach_boost: 3.0,
+            ramp_boost: 1.5,
             idle_discount: 0.25,
+            forecast: ForecastConfig::default(),
             calibration: None,
         }
     }
@@ -102,6 +119,7 @@ struct TenantState {
     base_weight: f64,
     mem_budget_mb: Option<f64>,
     monitor: LoadMonitor,
+    forecaster: Forecaster,
 }
 
 struct MtState {
@@ -124,6 +142,9 @@ pub struct TenantStatus {
     pub in_flight: u64,
     pub weight: f64,
     pub window: Option<LoadSnapshot>,
+    /// Trend projection at the forecast horizon (`None` while cold or
+    /// disabled).
+    pub forecast: Option<Forecast>,
 }
 
 /// The arbitrating controller. Cheap to share (`Arc`); stops and joins
@@ -166,11 +187,13 @@ impl MultiTenantController {
         }
 
         let window = opts.window;
+        let forecast_cfg = opts.forecast.clone();
         let ctrl = Arc::new(MultiTenantController {
             tenants: tenants
                 .into_iter()
                 .map(|t| TenantState {
                     monitor: LoadMonitor::new(t.system.metrics_arc(), window),
+                    forecaster: Forecaster::new(forecast_cfg.clone()),
                     name: t.name,
                     system: t.system,
                     base_weight: t.weight,
@@ -266,16 +289,41 @@ impl MultiTenantController {
 
         let snapshots: Vec<Option<LoadSnapshot>> =
             self.tenants.iter().map(|t| self.normalized_snapshot(t)).collect();
+        // per-tenant trend projection (feeds the predictive trigger AND
+        // the joint replan weights below)
+        let forecasts: Vec<Option<Forecast>> = self
+            .tenants
+            .iter()
+            .zip(&snapshots)
+            .map(|(t, s)| {
+                if let Some(s) = s {
+                    // GPU rows only — a busy CPU row is no more a ramp
+                    // signal than it is hot-device evidence
+                    let gpu_mask: Vec<bool> =
+                        t.system.devices().iter().map(|d| d.is_gpu()).collect();
+                    t.forecaster.observe_snapshot(s, &gpu_mask);
+                }
+                let f = t.forecaster.forecast();
+                t.system.metrics().forecast_req_rate_milli.store(
+                    f.as_ref().map(|f| (f.rate_ahead * 1e3) as u64).unwrap_or(0),
+                    Ordering::Relaxed,
+                );
+                f
+            })
+            .collect();
         let mut trigger: Option<(usize, String, bool)> = None;
         // every tenant whose policy fired this tick gets the boost —
         // two simultaneous breachers must not have the second starved
         // by the replan cooldown after a replan that only favored the
         // first
         let mut fired = vec![false; self.tenants.len()];
-        // OR'd across ALL fired tenants, not taken from the reported
-        // trigger: tenant A's imbalance rebalance (no gap) must not
-        // mask tenant B's SLO breach (gap allowed) just because A came
-        // first in iteration order
+        // SUMMED across ALL fired tenants, not taken from the reported
+        // trigger: tenant A's imbalance rebalance (zero breach cost)
+        // must not mask tenant B's SLO breach just because A came first
+        // in iteration order — and two breachers justify a costlier gap
+        // than one. `gap_allowed` is the OR of the same per-decision
+        // predicate the single-tenant controller uses.
+        let mut breach_total = 0.0f64;
         let mut gap_allowed = false;
         for (i, t) in self.tenants.iter().enumerate() {
             let gpu_mask: Vec<bool> = t.system.devices().iter().map(|d| d.is_gpu()).collect();
@@ -286,21 +334,23 @@ impl MultiTenantController {
                 Decision::Replan {
                     reason: format!("generation error: {err}"),
                     force: true,
-                    allow_gap: true,
+                    breach_cost: f64::INFINITY,
                 }
             } else {
                 policy::decide(
                     &self.opts.policy,
                     snapshots[i].as_ref(),
+                    forecasts[i].as_ref(),
                     &gpu_mask,
                     t.system.in_flight(),
                     active_uses_failed,
                     since_swap,
                 )
             };
-            if let Decision::Replan { reason, force, allow_gap } = decision {
+            gap_allowed |= decision.gap_permitted();
+            if let Decision::Replan { reason, force, breach_cost } = decision {
                 fired[i] = true;
-                gap_allowed |= allow_gap;
+                breach_total += breach_cost;
                 let reason = format!("tenant '{}': {reason}", t.name);
                 // a forced trigger outranks a voluntary one; otherwise
                 // first-come keeps the reported trigger
@@ -330,7 +380,14 @@ impl MultiTenantController {
             return;
         }
 
-        // pressure per tenant: boost every breacher, discount the idle
+        // pressure per tenant: boost every breacher, pre-position for
+        // every forecast ramp, discount the idle (a ramping tenant is
+        // never "idle" — its thin window is the calm before the ramp)
+        let ramping = |i: usize| {
+            forecasts[i]
+                .as_ref()
+                .is_some_and(|f| f.rising && f.util_ahead > self.opts.policy.high_util)
+        };
         let pressures: Vec<f64> = self
             .tenants
             .iter()
@@ -338,6 +395,8 @@ impl MultiTenantController {
             .map(|(i, t)| {
                 if fired[i] {
                     self.opts.breach_boost
+                } else if ramping(i) {
+                    self.opts.ramp_boost
                 } else if self.is_idle(t, snapshots[i].as_ref()) {
                     self.opts.idle_discount
                 } else {
@@ -345,8 +404,21 @@ impl MultiTenantController {
                 }
             })
             .collect();
-        let strategy = if gap_allowed { SwapStrategy::Auto } else { SwapStrategy::SideBySide };
-        if let Err(e) = self.replan(&reason, force, &pressures, strategy) {
+        // the rate each tenant's gap would park requests at
+        let park_rates: Vec<f64> = (0..self.tenants.len())
+            .map(|i| {
+                forecasts[i]
+                    .as_ref()
+                    .map(|f| f.rate_now)
+                    .or_else(|| snapshots[i].as_ref().map(|s| s.req_rate))
+                    .unwrap_or(0.0)
+            })
+            .collect();
+        let strategy =
+            if gap_allowed { SwapStrategy::Auto } else { SwapStrategy::SideBySide };
+        if let Err(e) =
+            self.replan(&reason, force, &pressures, strategy, breach_total, &park_rates)
+        {
             self.state.lock().unwrap().last_decision = format!("replan ({reason}) failed: {e:#}");
         }
     }
@@ -381,7 +453,9 @@ impl MultiTenantController {
                 }));
             }
         }
-        self.replan(reason, true, &vec![1.0; self.tenants.len()], strategy)
+        // operator-forced: any gap the strategy permits is accepted
+        self.replan(reason, true, &vec![1.0; self.tenants.len()], strategy,
+                    f64::INFINITY, &vec![0.0; self.tenants.len()])
     }
 
     fn specs(&self, pressures: &[f64]) -> Vec<TenantSpec> {
@@ -416,12 +490,20 @@ impl MultiTenantController {
         resident
     }
 
+    /// `breach_total`/`park_rates` price the drain-then-build tradeoff
+    /// across the whole fleet: a gapped joint plan is adopted only when
+    /// the requests the per-tenant gaps would park (`Σ predicted_gap_s
+    /// × rate_i` over the tenants being swapped) stay below the summed
+    /// breach cost of every fired tenant. Forced replans skip the
+    /// comparison.
     fn replan(
         &self,
         reason: &str,
         force: bool,
         pressures: &[f64],
         strategy: SwapStrategy,
+        breach_total: f64,
+        park_rates: &[f64],
     ) -> anyhow::Result<Vec<(String, SwapReport)>> {
         let _serialize = self.replan_lock.lock().unwrap();
         let failed: Vec<usize> = {
@@ -517,6 +599,29 @@ impl MultiTenantController {
             }
         }
 
+        // breach-vs-gap expected cost over the whole fleet: each
+        // changed tenant's staged swap parks that tenant's traffic for
+        // its own predicted gap (per-matrix-size gap cells, analytic
+        // fallback). Only priced for voluntary replans — failures and
+        // operator requests accept any gap.
+        let cost_model = &*self.opts.planner.cost;
+        let predicted_gap_of = |i: usize| -> f64 {
+            cost_model.staged_gap_ms(plan.matrices[i].worker_count())
+        };
+        if gapped && !force {
+            let gap_cost: f64 = changed
+                .iter()
+                .map(|&i| predicted_gap_of(i) / 1e3 * park_rates.get(i).copied().unwrap_or(0.0))
+                .sum();
+            if gap_cost > breach_total {
+                self.state.lock().unwrap().last_decision = format!(
+                    "hold: predicted gaps would park ~{gap_cost:.0} requests, above \
+                     the joint breach cost {breach_total:.0} ({reason})"
+                );
+                return Ok(Vec::new());
+            }
+        }
+
         // sequential hot-swaps. Side-by-side plans fit next to every
         // resident allocation, so order does not matter for memory; a
         // gapped plan is best-effort per tenant — engine Auto swaps
@@ -531,8 +636,25 @@ impl MultiTenantController {
         for &i in &changed {
             let t = &self.tenants[i];
             match t.system.reconfigure_with(&plan.matrices[i], tenant_strategy) {
-                Ok(report) => {
+                Ok(mut report) => {
+                    if report.gap.is_some() {
+                        // attach the prediction and calibrate the gap
+                        // model with the measurement (shared store: one
+                        // tenant's staged swap teaches all of them)
+                        let predicted = predicted_gap_of(i);
+                        report.predicted_gap_ms = Some(predicted);
+                        t.system
+                            .metrics()
+                            .predicted_gap_us
+                            .store((predicted * 1e3) as u64, Ordering::Relaxed);
+                        if let (Some(cal), Some(gap)) =
+                            (&self.opts.calibration, report.gap)
+                        {
+                            cal.observe_gap(plan.matrices[i].worker_count(), gap);
+                        }
+                    }
                     t.monitor.reset();
+                    t.forecaster.reset();
                     swaps.push((t.name.clone(), report));
                 }
                 Err(e) => errors.push(format!("tenant '{}': {e:#}", t.name)),
@@ -609,6 +731,7 @@ impl MultiTenantController {
                 in_flight: t.system.in_flight(),
                 weight: t.base_weight,
                 window: self.normalized_snapshot(t),
+                forecast: t.forecaster.forecast(),
             })
             .collect()
     }
@@ -629,6 +752,10 @@ impl MultiTenantController {
                         ("p99_ms", Json::Num(w.p99_ms)),
                     ]),
                 };
+                let forecast = match &t.forecast {
+                    None => Json::Null,
+                    Some(f) => f.to_json(),
+                };
                 Json::from_pairs([
                     ("name", Json::Str(t.name)),
                     ("generation", Json::Num(t.generation as f64)),
@@ -636,6 +763,7 @@ impl MultiTenantController {
                     ("in_flight", Json::Num(t.in_flight as f64)),
                     ("weight", Json::Num(t.weight)),
                     ("window", window),
+                    ("forecast", forecast),
                 ])
             })
             .collect();
@@ -650,6 +778,10 @@ impl MultiTenantController {
                     ("drain_complete", Json::Bool(r.drain_complete)),
                     ("strategy", Json::Str(r.strategy.name().to_string())),
                     ("gap_ms", crate::reconfig::controller::gap_ms_json(r)),
+                    (
+                        "predicted_gap_ms",
+                        crate::reconfig::controller::predicted_gap_ms_json(r),
+                    ),
                 ])
             })
             .collect();
@@ -716,6 +848,9 @@ mod tests {
             poll_interval: Duration::from_millis(10),
             window: Duration::from_millis(500),
             failure_backoff: Duration::from_millis(50),
+            // these tests pin the REACTIVE paths; the predictive trigger
+            // is covered by forecast.rs and integration_reconfig.rs
+            forecast: ForecastConfig { enabled: false, ..ForecastConfig::default() },
             policy: PolicyConfig {
                 p99_slo_ms: 0.01, // any completed traffic breaches
                 min_window_requests: 5,
@@ -794,6 +929,10 @@ mod tests {
         let last = &j.get("last_swaps").unwrap().as_arr().unwrap()[0];
         assert_eq!(last.get("strategy").unwrap().as_str(), Some("drain_then_build"));
         assert!(last.get("gap_ms").unwrap().as_f64().unwrap() >= 0.0);
+        // predicted rides next to measured (analytic guess: nothing
+        // calibrated in this fixture)
+        assert_eq!(last.get("predicted_gap_ms").unwrap().as_f64(),
+                   Some(crate::cost::analytic_gap_ms(1)));
     }
 
     #[test]

@@ -28,14 +28,20 @@
 //!   Requires a controller.
 //! * `GET /v1/reconfig/status` — controller status: generation, swaps,
 //!   failed devices, last decision, last swap (including its strategy,
-//!   unavailability `gap_ms` and parked-request count), windowed load
-//!   (per tenant under a multi-tenant controller).
+//!   unavailability `gap_ms` with the control plane's `predicted_gap_ms`
+//!   next to it, and parked-request count), windowed load and the load
+//!   `forecast` (trend projection at the horizon) — per tenant under a
+//!   multi-tenant controller.
 //! * `GET /v1/profiles` — the measured cost-model cells: per
 //!   (model, device-class, batch) measured latency next to the
 //!   analytic prediction (delta %), sample counts, source
 //!   (offline profiler vs online calibration) and staleness (age of
-//!   each cell's last update). Requires a profile store
-//!   (`serve --profiles`).
+//!   each cell's last update); plus the per-matrix-size `gap_cells`
+//!   measured from staged-swap telemetry (the gap predictor's
+//!   support). Requires a profile store (`serve --profiles`).
+//!
+//! The complete request/response reference with JSON examples lives in
+//! `docs/API.md`.
 
 use std::collections::BTreeMap;
 use std::sync::{Arc, RwLock};
@@ -353,7 +359,13 @@ fn tenant_exposition(
         let k = snapshots[0][j].0;
         // prometheus convention: counters carry the _total suffix,
         // gauges do not
-        let (suffix, kind) = if k == "generation" || k == "lingering_generations" {
+        let gauges = [
+            "generation",
+            "lingering_generations",
+            "forecast_req_rate_milli",
+            "predicted_gap_us",
+        ];
+        let (suffix, kind) = if gauges.contains(&k) {
             ("", "gauge")
         } else {
             ("_total", "counter")
@@ -477,6 +489,22 @@ fn profiles_report(state: &ApiState, req: &Request) -> Response {
             ])
         })
         .collect();
+    // the per-matrix-size drain-then-build gap cells, measured from
+    // staged-swap telemetry: what the controllers' breach-vs-gap
+    // comparison will predict for the next staged swap
+    let gap_cells: Vec<Json> = store
+        .gap_cells()
+        .into_iter()
+        .map(|(workers, cell)| {
+            Json::from_pairs([
+                ("workers", Json::Num(workers as f64)),
+                ("gap_ms", Json::Num(cell.latency_ms)),
+                ("samples", Json::Num(cell.samples as f64)),
+                ("age_s", Json::Num(now.saturating_sub(cell.updated_unix_s) as f64)),
+                ("stale", Json::Bool(!store.cell_fresh(&cell))),
+            ])
+        })
+        .collect();
     let max_age = match store.max_age_s() {
         Some(a) => Json::Num(a as f64),
         None => Json::Null,
@@ -491,6 +519,7 @@ fn profiles_report(state: &ApiState, req: &Request) -> Response {
             ("cost_model", Json::Str("profiled".to_string())),
             ("version", Json::Num(store.version() as f64)),
             ("cells", Json::Arr(cells)),
+            ("gap_cells", Json::Arr(gap_cells)),
             ("max_age_s", max_age),
             ("max_cell_age_s", age_limit),
         ])
@@ -668,6 +697,10 @@ fn reconfigure(state: &ApiState, req: &Request) -> Response {
                                 ("drain_complete", Json::Bool(r.drain_complete)),
                                 ("strategy", Json::Str(r.strategy.name().to_string())),
                                 ("gap_ms", crate::reconfig::controller::gap_ms_json(r)),
+                                (
+                                    "predicted_gap_ms",
+                                    crate::reconfig::controller::predicted_gap_ms_json(r),
+                                ),
                             ])
                         })
                         .collect();
@@ -1061,6 +1094,8 @@ mod tests {
         assert_eq!(code, 200);
         let j = Json::parse(std::str::from_utf8(&body).unwrap()).unwrap();
         assert_eq!(j.get("generation").and_then(Json::as_usize), Some(1));
+        // the forecast field is always present (null while cold)
+        assert!(j.get("forecast").is_some());
 
         // operator-forced replan: the planner spreads over both GPUs
         let (code, body) = http_request(srv.addr(), "POST", "/v1/reconfigure",
