@@ -104,6 +104,26 @@ pub fn measure_engine_median(
     ensemble_serve::util::stats::median(&runs)
 }
 
+/// Merge `fields` into `BENCH_hotpath.json` at the repo root. Read,
+/// merge, rewrite — so the keys written by `engine_hotpath` survive a
+/// later `overhead` run and vice versa, and CI can upload one artifact.
+pub fn write_bench_json(fields: &[(&str, ensemble_serve::util::json::Json)]) {
+    use ensemble_serve::util::json::Json;
+    let path = "BENCH_hotpath.json";
+    let mut obj = std::fs::read_to_string(path)
+        .ok()
+        .and_then(|t| Json::parse(&t).ok())
+        .and_then(|j| j.as_obj().cloned())
+        .unwrap_or_default();
+    for (k, v) in fields {
+        obj.insert((*k).to_string(), v.clone());
+    }
+    match std::fs::write(path, Json::Obj(obj).to_string()) {
+        Ok(()) => println!("\nwrote {path}"),
+        Err(e) => eprintln!("warning: could not write {path}: {e}"),
+    }
+}
+
 /// One fresh sim executor factory (memory ledgers reset per bench build).
 pub fn sim_factory(gpus: usize) -> impl Fn() -> Arc<dyn ensemble_serve::exec::Executor> {
     move || {

@@ -24,6 +24,8 @@ use ensemble_serve::engine::store::SharedStore;
 use ensemble_serve::engine::{EngineOptions, InferenceSystem};
 use ensemble_serve::exec::fake::FakeExecutor;
 use ensemble_serve::model::{ensemble, EnsembleId};
+use ensemble_serve::obs::STAGE_NAMES;
+use ensemble_serve::util::json::Json;
 
 fn main() {
     common::init_logging();
@@ -119,12 +121,17 @@ fn main() {
         .unwrap();
         let elems = e.members[0].input_elems_per_image();
         let x = vec![0.5f32; 1024 * elems];
-        let secs = time_runs(1, 5, || {
+        let reps = if common::fast_mode() { 2 } else { 5 };
+        let secs = time_runs(1, reps, || {
             sys.predict(x.clone(), 1024).unwrap();
         });
         let s = report("e2e fake: 1024 imgs x 12 models (12 workers)", &secs);
         println!("  -> {:.3} s/request (paper fake system: 0.035 s on 22 workers)",
                  s.median);
+        common::write_bench_json(&[
+            ("e2e_1024_s", Json::Num(s.median)),
+            ("throughput_img_s", Json::Num(1024.0 / s.median)),
+        ]);
     }
 
     // --- end-to-end latency of a small request (fake)
@@ -145,17 +152,35 @@ fn main() {
         let elems = e.members[0].input_elems_per_image();
         let x = vec![0.5f32; 8 * elems];
         // latency distribution over 200 single-segment requests
+        let n = if common::fast_mode() { 50 } else { 200 };
         let mut lats = Vec::new();
-        for _ in 0..200 {
+        for _ in 0..n {
             let t = Instant::now();
             sys.predict(x.clone(), 8).unwrap();
             lats.push(t.elapsed().as_secs_f64() * 1000.0);
         }
+        let p50 = ensemble_serve::util::stats::median(&lats);
+        let p99 = ensemble_serve::util::stats::percentile(&lats, 99.0);
         println!(
-            "e2e fake small request: p50 {:.3} ms  p95 {:.3} ms  min {:.3} ms",
-            ensemble_serve::util::stats::median(&lats),
-            ensemble_serve::util::stats::percentile(&lats, 95.0),
+            "e2e fake small request: p50 {p50:.3} ms  p99 {p99:.3} ms  min {:.3} ms",
             ensemble_serve::util::stats::min(&lats),
         );
+        // where the time goes: the obs trace hub's per-stage medians
+        let trace = &sys.metrics().trace;
+        let mut stages = Vec::new();
+        for (name, h) in STAGE_NAMES.iter().zip(trace.stages().iter()) {
+            println!(
+                "  stage {:<13} p50 {:.4} ms  (n={})",
+                name,
+                h.quantile_ms(0.50),
+                h.count()
+            );
+            stages.push((*name, Json::Num(h.quantile_ms(0.50))));
+        }
+        common::write_bench_json(&[
+            ("small_req_p50_ms", Json::Num(p50)),
+            ("small_req_p99_ms", Json::Num(p99)),
+            ("stage_p50_ms", Json::from_pairs(stages)),
+        ]);
     }
 }

@@ -79,6 +79,13 @@ pub struct ServerConfig {
     /// to the analytic formulas for them) instead of trusting stale
     /// measurements forever. `None` (default) = no age limit.
     pub max_cell_age_s: Option<u64>,
+    /// serve: start with the per-event trace capture ring enabled
+    /// (`POST /v1/trace/capture` toggles it at runtime; the per-stage
+    /// histograms and the slow-trace ring are always on).
+    pub trace_capture: bool,
+    /// serve: periodically write the captured trace window as Chrome
+    /// trace-event JSON to this file (implies `trace_capture`).
+    pub trace_out: Option<String>,
 }
 
 impl Default for ServerConfig {
@@ -102,6 +109,8 @@ impl Default for ServerConfig {
             profiles: None,
             calibration_alpha: 0.25,
             max_cell_age_s: None,
+            trace_capture: false,
+            trace_out: None,
         }
     }
 }
@@ -200,6 +209,14 @@ impl ServerConfig {
             anyhow::ensure!(v > 0, "max_cell_age_s must be positive");
             cfg.max_cell_age_s = Some(v as u64);
         }
+        if let Some(v) = doc.get("trace_capture").and_then(Json::as_bool) {
+            cfg.trace_capture = v;
+        }
+        if let Some(v) = doc.get("trace_out").and_then(Json::as_str) {
+            anyhow::ensure!(!v.is_empty(), "trace_out path empty");
+            cfg.trace_out = Some(v.to_string());
+            cfg.trace_capture = true;
+        }
         Ok(cfg)
     }
 
@@ -235,6 +252,8 @@ mod tests {
         assert_eq!(cfg.greedy.max_neighs, 100);
         assert!(cfg.forecast, "predictive scaling defaults on");
         assert_eq!(cfg.forecast_horizon_s, 30.0);
+        assert!(!cfg.trace_capture, "event capture defaults off");
+        assert!(cfg.trace_out.is_none());
     }
 
     #[test]
@@ -246,7 +265,8 @@ mod tests {
                 "reconfig":true,"p99_slo_ms":120.5,
                 "forecast":false,"forecast_horizon_s":45.5,
                 "profiles":"profiles.json","calibration_alpha":0.5,
-                "max_cell_age_s":900}"#,
+                "max_cell_age_s":900,"trace_capture":true,
+                "trace_out":"trace.json"}"#,
         )
         .unwrap();
         let cfg = ServerConfig::from_json(&doc).unwrap();
@@ -269,6 +289,15 @@ mod tests {
         assert_eq!(cfg.profiles.as_deref(), Some("profiles.json"));
         assert_eq!(cfg.calibration_alpha, 0.5);
         assert_eq!(cfg.max_cell_age_s, Some(900));
+        assert!(cfg.trace_capture);
+        assert_eq!(cfg.trace_out.as_deref(), Some("trace.json"));
+    }
+
+    #[test]
+    fn trace_out_implies_capture() {
+        let doc = Json::parse(r#"{"trace_out":"t.json"}"#).unwrap();
+        let cfg = ServerConfig::from_json(&doc).unwrap();
+        assert!(cfg.trace_capture, "a trace file needs capture on");
     }
 
     #[test]
@@ -301,6 +330,7 @@ mod tests {
             r#"{"calibration_alpha":0}"#,
             r#"{"calibration_alpha":1.5}"#,
             r#"{"max_cell_age_s":0}"#,
+            r#"{"trace_out":""}"#,
         ] {
             let doc = Json::parse(bad).unwrap();
             assert!(ServerConfig::from_json(&doc).is_err(), "{bad}");

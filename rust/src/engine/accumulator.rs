@@ -13,6 +13,7 @@ use crate::engine::queue::Fifo;
 use crate::engine::segments;
 use crate::engine::store::SharedStore;
 use crate::metrics::EngineMetrics;
+use crate::obs::ReqSpans;
 
 /// Registration of an in-flight request with the accumulator. Sent over a
 /// dedicated FIFO *before* its segments are broadcast, so the accumulator
@@ -23,15 +24,20 @@ pub struct Registration {
     pub classes: usize,
     /// Expected `{s, m, P}` messages: segment_count × n_models.
     pub expected_msgs: usize,
-    /// Completion channel handed back to the caller of `predict`.
-    pub done: SyncSender<Vec<f32>>,
+    /// Trace id of the request ([`crate::obs::trace_id`]).
+    pub trace_id: u64,
+    /// Completion channel handed back to the caller of `predict`; the
+    /// accumulator returns the combined output together with the
+    /// request's aggregated pipeline spans.
+    pub done: SyncSender<(Vec<f32>, ReqSpans)>,
 }
 
 struct Pending {
     y: Vec<f32>,
     remaining: usize,
     classes: usize,
-    done: SyncSender<Vec<f32>>,
+    spans: ReqSpans,
+    done: SyncSender<(Vec<f32>, ReqSpans)>,
 }
 
 /// Startup rendezvous: build() waits here for all workers to report
@@ -129,6 +135,7 @@ pub fn spawn(
                             y: vec![0.0; r.nb_images * r.classes],
                             remaining: r.expected_msgs,
                             classes: r.classes,
+                            spans: ReqSpans { trace_id: r.trace_id, ..ReqSpans::default() },
                             done: r.done,
                         },
                     );
@@ -168,17 +175,34 @@ pub fn spawn(
                         let lo = segments::start(p.seg, segment_size);
                         let span = &mut entry.y[lo * c..lo * c + p.n_rows * c];
                         // the paper's Y[start(s):end(s)] += P / M
+                        let t_fold = metrics.trace.now_us();
                         rule.accumulate(span, &p.preds, p.model, n_models, c);
                         entry.remaining -= 1;
+                        // per request: seal/predict are the slowest
+                        // member message, combine sums the fold time
+                        entry.spans.seal_us = entry.spans.seal_us.max(p.seal_us);
+                        entry.spans.predict_us = entry.spans.predict_us.max(p.predict_us);
+                        entry.spans.combine_us +=
+                            metrics.trace.now_us().saturating_sub(t_fold);
                         if entry.remaining == 0 {
                             let mut done = pending.remove(&p.req).unwrap();
+                            let t_fin = metrics.trace.now_us();
                             rule.finalize(&mut done.y, n_models, c);
+                            let now = metrics.trace.now_us();
+                            done.spans.combine_us += now.saturating_sub(t_fin);
+                            done.spans.done_us = now;
                             store.remove(p.req);
                             metrics
                                 .requests_completed
                                 .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                            metrics.trace.push_span(
+                                crate::obs::Stage::Combine,
+                                done.spans.trace_id,
+                                now.saturating_sub(done.spans.combine_us),
+                                done.spans.combine_us,
+                            );
                             // receiver may have given up (timeout): ignore
-                            let _ = done.done.send(done.y);
+                            let _ = done.done.send((done.y, done.spans));
                         }
                     }
                 }
@@ -220,18 +244,23 @@ mod tests {
         let (reg, acc, store, _st, h) = setup(2, 2);
         let req = store.insert(vec![0.0; 3 * 4], 3, 4); // 3 images
         let (tx, rx) = sync_channel(1);
-        reg.send(Registration { req, nb_images: 3, classes: 2, expected_msgs: 4, done: tx })
+        reg.send(Registration { req, nb_images: 3, classes: 2, expected_msgs: 4,
+                                trace_id: crate::obs::trace_id(1, req), done: tx })
             .unwrap();
         // model 0: seg 0 (rows 0..2), seg 1 (row 2)
         let p = |seg, model, preds: Vec<f32>, n_rows| {
-            AccMsg::Pred(PredMsg { req, seg, model, worker: 0, preds, n_rows })
+            AccMsg::Pred(PredMsg { req, seg, model, worker: 0, preds, n_rows,
+                                   seal_us: 7, predict_us: 11 })
         };
         acc.send(p(0, 0, vec![1.0, 0.0, 0.0, 1.0], 2)).unwrap();
         acc.send(p(1, 1, vec![0.0, 1.0], 1)).unwrap();
         acc.send(p(0, 1, vec![0.0, 1.0, 1.0, 0.0], 2)).unwrap();
         acc.send(p(1, 0, vec![1.0, 0.0], 1)).unwrap();
-        let y = rx.recv().unwrap();
+        let (y, spans) = rx.recv().unwrap();
         assert_eq!(y, vec![0.5, 0.5, 0.5, 0.5, 0.5, 0.5]);
+        assert_eq!(spans.trace_id, crate::obs::trace_id(1, req));
+        assert_eq!(spans.seal_us, 7, "seal = slowest member message");
+        assert_eq!(spans.predict_us, 11);
         assert!(store.get(req).is_none(), "input freed on completion");
         acc.close();
         h.join().unwrap();
@@ -256,7 +285,8 @@ mod tests {
         let (reg, acc, store, st, h) = setup(1, 128);
         let req = store.insert(vec![0.0; 4], 1, 4);
         let (tx, rx) = sync_channel(1);
-        reg.send(Registration { req, nb_images: 1, classes: 2, expected_msgs: 1, done: tx })
+        reg.send(Registration { req, nb_images: 1, classes: 2, expected_msgs: 1,
+                                trace_id: 0, done: tx })
             .unwrap();
         // fold in the registration, then kill the worker pool
         acc.send(AccMsg::WorkerReady { worker: 0 }).unwrap();
@@ -274,7 +304,8 @@ mod tests {
         let (reg, acc, store, _st, h) = setup(1, 128);
         let req = store.insert(vec![0.0; 4], 1, 4);
         let (tx, rx) = sync_channel(1);
-        reg.send(Registration { req, nb_images: 1, classes: 2, expected_msgs: 1, done: tx })
+        reg.send(Registration { req, nb_images: 1, classes: 2, expected_msgs: 1,
+                                trace_id: 0, done: tx })
             .unwrap();
         // deliver nothing; shut down. One dummy message makes the
         // accumulator fold in the registration first.

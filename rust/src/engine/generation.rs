@@ -116,6 +116,7 @@ impl Generation {
                 model: ensemble.members[p.model].clone(),
                 batch: p.batch as usize,
                 segment_size: opts.segment_size,
+                generation: id,
             };
             workers.push(worker::spawn(
                 spec,
@@ -140,10 +141,16 @@ impl Generation {
                 .spawn(move || {
                     while let Some(job) = broadcast.recv() {
                         let k = segments::segment_count(job.nb_images, seg);
+                        // one stamp per request: the seal span of every
+                        // segment starts at its broadcast
+                        let t_bcast_us = metrics.trace.now_us();
                         for q in &inputs {
                             // one lock + wakeup per model queue (§Perf)
-                            let batch = (0..k)
-                                .map(|s| WorkerMsg::Segment { req: job.req, seg: s });
+                            let batch = (0..k).map(|s| WorkerMsg::Segment {
+                                req: job.req,
+                                seg: s,
+                                t_bcast_us,
+                            });
                             if q.send_all(batch).is_err() {
                                 return;
                             }
@@ -241,11 +248,16 @@ impl Generation {
 
     /// The ensemble prediction through this generation's pool: blocks
     /// until every model predicted every image and the combination rule
-    /// folded them.
-    pub fn predict(&self, x: Vec<f32>, nb_images: usize) -> anyhow::Result<Vec<f32>> {
+    /// folded them. Returns the combined output and the request's
+    /// aggregated pipeline spans ([`crate::obs::ReqSpans`]).
+    pub fn predict(
+        &self,
+        x: Vec<f32>,
+        nb_images: usize,
+    ) -> anyhow::Result<(Vec<f32>, crate::obs::ReqSpans)> {
         let classes = self.ensemble.classes();
         if nb_images == 0 {
-            return Ok(Vec::new());
+            return Ok((Vec::new(), crate::obs::ReqSpans::default()));
         }
         if x.len() % nb_images != 0 {
             bail!("input length {} not divisible by {nb_images} images", x.len());
@@ -268,6 +280,7 @@ impl Generation {
             nb_images,
             classes,
             expected_msgs: k * self.ensemble.len(),
+            trace_id: crate::obs::trace_id(self.id, req),
             done: tx,
         };
         if self.reg.send(registration).is_err() {
@@ -283,13 +296,16 @@ impl Generation {
             .ok()
             .context("system shutting down (broadcast queue closed)")?;
 
-        rx.recv().map_err(|_| {
+        let (y, mut spans) = rx.recv().map_err(|_| {
             let detail = self
                 .startup
                 .error()
                 .unwrap_or_else(|| "accumulator stopped".to_string());
             anyhow::anyhow!("prediction aborted: {detail}")
-        })
+        })?;
+        // reply span: combine finalized → this caller woke up
+        spans.reply_us = self.metrics.trace.now_us().saturating_sub(spans.done_us);
+        Ok((y, spans))
     }
 
     pub fn id(&self) -> u64 {

@@ -9,8 +9,10 @@
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub enum WorkerMsg {
     /// A segment id to predict (paper: `s >= 0`). `req` scopes the segment
-    /// to one client request in the shared store.
-    Segment { req: u64, seg: usize },
+    /// to one client request in the shared store. `t_bcast_us` is the
+    /// broadcast stamp (µs since the trace-hub epoch) from which the
+    /// batch-formation ("seal") span is measured.
+    Segment { req: u64, seg: usize, t_bcast_us: u64 },
     // Shutdown (paper: s = -1) is signalled by closing the FIFO: queued
     // segments drain first, exactly like a -1 posted after real ids.
 }
@@ -28,6 +30,11 @@ pub struct PredMsg {
     /// Prediction matrix `P`, `n_rows × classes`, row-major.
     pub preds: Vec<f32>,
     pub n_rows: usize,
+    /// Batch-formation span of this segment, µs (broadcast → last chunk
+    /// handed to the predictor).
+    pub seal_us: u64,
+    /// Predict span of this segment, µs (summed over its chunks).
+    pub predict_us: u64,
 }
 
 /// Payload of the prediction FIFO (workers → accumulator).
@@ -49,15 +56,16 @@ mod tests {
     #[test]
     fn pred_msg_shape() {
         let m = PredMsg { req: 1, seg: 2, model: 3, worker: 4,
-                          preds: vec![0.5; 6], n_rows: 2 };
+                          preds: vec![0.5; 6], n_rows: 2,
+                          seal_us: 10, predict_us: 20 };
         assert_eq!(m.preds.len() / m.n_rows, 3, "3 classes");
     }
 
     #[test]
     fn worker_msg_eq() {
-        assert_eq!(WorkerMsg::Segment { req: 1, seg: 0 },
-                   WorkerMsg::Segment { req: 1, seg: 0 });
-        assert_ne!(WorkerMsg::Segment { req: 1, seg: 0 },
-                   WorkerMsg::Segment { req: 1, seg: 1 });
+        assert_eq!(WorkerMsg::Segment { req: 1, seg: 0, t_bcast_us: 5 },
+                   WorkerMsg::Segment { req: 1, seg: 0, t_bcast_us: 5 });
+        assert_ne!(WorkerMsg::Segment { req: 1, seg: 0, t_bcast_us: 5 },
+                   WorkerMsg::Segment { req: 1, seg: 1, t_bcast_us: 5 });
     }
 }

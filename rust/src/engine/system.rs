@@ -383,13 +383,18 @@ impl InferenceSystem {
     /// image and the combination rule folded them (Deploy Mode).
     pub fn predict(&self, x: Vec<f32>, nb_images: usize) -> anyhow::Result<Vec<f32>> {
         let t0 = Instant::now();
+        let start_us = self.metrics.trace.now_us();
         // Admission holds the gate lock only long enough to pin the
         // generation: the swap's write lock is never blocked behind a
-        // prediction.
+        // prediction. During a drain-then-build gap the whole park wait
+        // lands in the request's gate_wait span.
         let generation = self.admit()?;
-        let y = generation.predict(x, nb_images)?;
+        let gate_us = self.metrics.trace.now_us().saturating_sub(start_us);
+        let (y, spans) = generation.predict(x, nb_images)?;
         if nb_images > 0 {
             self.metrics.request_latency.record(t0.elapsed());
+            let end_us = self.metrics.trace.now_us();
+            self.metrics.trace.complete(start_us, gate_us, &spans, end_us);
         }
         Ok(y)
     }
@@ -511,6 +516,8 @@ impl InferenceSystem {
             std::mem::replace(&mut *active, fresh)
         };
         self.metrics.generation.store(id, Ordering::Relaxed);
+        self.metrics.trace.instant(crate::obs::InstantKind::Swap, id);
+        self.metrics.trace.instant(crate::obs::InstantKind::Generation, id);
 
         // drain: predictions that pinned the old generation before the
         // swap still hold clones of its Arc and sit in its in-flight
@@ -618,6 +625,10 @@ impl InferenceSystem {
                 self.metrics
                     .swap_gap_us
                     .fetch_add(gap.as_micros() as u64, Ordering::Relaxed);
+                let trace = &self.metrics.trace;
+                trace.instant(crate::obs::InstantKind::Gap, gap.as_micros() as u64);
+                trace.instant(crate::obs::InstantKind::Swap, id);
+                trace.instant(crate::obs::InstantKind::Generation, id);
                 log::info!(
                     "drain-then-build reconfigured generation {from_generation} -> {id} \
                      (quiesce {:.1} ms, build {:.1} ms, gap {:.1} ms, {parked} parked)",
@@ -671,6 +682,9 @@ impl InferenceSystem {
                 self.metrics
                     .swap_gap_us
                     .fetch_add(gap.as_micros() as u64, Ordering::Relaxed);
+                let trace = &self.metrics.trace;
+                trace.instant(crate::obs::InstantKind::Gap, gap.as_micros() as u64);
+                trace.instant(crate::obs::InstantKind::Rollback, id);
                 log::warn!(
                     "drain-then-build build failed ({build_err:#}); rolled back to \
                      the previous matrix as generation {id} (gap {:.1} ms, \
@@ -696,6 +710,9 @@ impl InferenceSystem {
                 self.metrics
                     .swap_gap_us
                     .fetch_add(gap.as_micros() as u64, Ordering::Relaxed);
+                let trace = &self.metrics.trace;
+                trace.instant(crate::obs::InstantKind::Gap, gap.as_micros() as u64);
+                trace.instant(crate::obs::InstantKind::Rollback, id);
                 Err(anyhow::anyhow!(
                     "drain-then-build: build failed ({build_err:#}) AND the rollback \
                      failed ({rollback_err:#}); the system is down until a forced \

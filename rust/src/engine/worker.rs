@@ -36,6 +36,9 @@ pub struct WorkerSpec {
     pub batch: usize,
     /// Engine-wide segment size (the broadcaster uses the same value).
     pub segment_size: usize,
+    /// Generation id — the high half of every trace id this worker
+    /// stamps ([`crate::obs::trace_id`]).
+    pub generation: u64,
 }
 
 /// One batch of rows on its way to the predictor. Rows are NOT copied:
@@ -51,6 +54,8 @@ struct BatchJob {
     lo: usize,
     hi: usize,
     data: Arc<RequestData>,
+    /// Batch-formation span up to this chunk's hand-off, µs.
+    seal_us: u64,
 }
 
 /// One predicted batch on its way to the sender.
@@ -61,6 +66,8 @@ struct PredBatch {
     n_chunks: usize,
     n_rows: usize,
     preds: Vec<f32>,
+    seal_us: u64,
+    predict_us: u64,
 }
 
 /// Join handles of a spawned worker.
@@ -131,9 +138,9 @@ fn batcher_loop(
     input: &Fifo<WorkerMsg>,
     store: &SharedStore,
     to_pred: &Fifo<BatchJob>,
-    _metrics: &EngineMetrics,
+    metrics: &EngineMetrics,
 ) {
-    while let Some(WorkerMsg::Segment { req, seg }) = input.recv() {
+    while let Some(WorkerMsg::Segment { req, seg, t_bcast_us }) = input.recv() {
         let Some(data) = store.get(req) else {
             // request was torn down mid-flight (shutdown); skip
             continue;
@@ -156,11 +163,19 @@ fn batcher_loop(
                 lo: clo,
                 hi: chi,
                 data: Arc::clone(&data),
+                seal_us: metrics.trace.now_us().saturating_sub(t_bcast_us),
             };
             if to_pred.send(job).is_err() {
                 return; // predictor gone (load failure / shutdown)
             }
         }
+        // whole segment handed over: the formation span is complete
+        metrics.trace.push_span(
+            crate::obs::Stage::Seal,
+            crate::obs::trace_id(spec.generation, req),
+            t_bcast_us,
+            metrics.trace.now_us().saturating_sub(t_bcast_us),
+        );
     }
     to_pred.close();
 }
@@ -192,6 +207,7 @@ fn predictor_loop(
 
     while let Some(job) = to_pred.recv() {
         let rows = job.data.rows(job.lo, job.hi);
+        let t_start_us = metrics.trace.now_us();
         let t0 = std::time::Instant::now();
         let result = instance.predict(rows, job.hi - job.lo);
         let elapsed = t0.elapsed();
@@ -206,6 +222,15 @@ fn predictor_loop(
                     (job.hi - job.lo) as u32,
                     elapsed,
                 );
+                let predict_us = elapsed.as_micros() as u64;
+                metrics.trace.push_predict(
+                    crate::obs::trace_id(spec.generation, job.req),
+                    t_start_us,
+                    predict_us,
+                    spec.device,
+                    spec.model_idx,
+                    job.hi - job.lo,
+                );
                 let out = PredBatch {
                     req: job.req,
                     seg: job.seg,
@@ -213,6 +238,8 @@ fn predictor_loop(
                     n_chunks: job.n_chunks,
                     n_rows: job.hi - job.lo,
                     preds,
+                    seal_us: job.seal_us,
+                    predict_us,
                 };
                 if to_send.send(out).is_err() {
                     break;
@@ -257,6 +284,8 @@ fn sender_loop(
                 worker: spec.id,
                 preds: Vec::with_capacity(per_chunk * pb.n_chunks),
                 n_rows: 0,
+                seal_us: 0,
+                predict_us: 0,
             });
         }
         let msg = cur.as_mut().unwrap();
@@ -265,6 +294,10 @@ fn sender_loop(
         debug_assert_eq!(pb.chunk, chunks_seen, "in-order chunks");
         msg.preds.extend_from_slice(&pb.preds);
         msg.n_rows += pb.n_rows;
+        // segment spans: formation ends at the last chunk's hand-off
+        // (max), compute is the sum of its chunks' predict calls
+        msg.seal_us = msg.seal_us.max(pb.seal_us);
+        msg.predict_us += pb.predict_us;
         chunks_seen += 1;
 
         if chunks_seen == chunks_expected {

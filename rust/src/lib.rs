@@ -82,6 +82,19 @@
 //! tick, so replans score candidates with what the hardware actually
 //! did. The server reports measured-vs-analytic deltas and calibration
 //! staleness at `GET /v1/profiles`.
+//!
+//! ## Pipeline tracing
+//!
+//! Every request carries a trace id and stamps per-stage spans —
+//! intake-gate wait, batcher queue wait, batch formation, per-member
+//! predict, combine, reply — into an [`obs::TraceHub`] owned by the
+//! tenant's [`metrics::EngineMetrics`] (so traces, like counters,
+//! survive hot swaps). The hub feeds per-stage latency histograms
+//! (`GET /v1/stages`, Prometheus histograms on `GET /v1/metrics`), a
+//! bounded slow-trace ring (`GET /v1/trace/slow`) and a Chrome
+//! trace-event exporter (`GET /v1/trace/export`, `serve --trace-out`)
+//! whose output loads directly in `chrome://tracing` / Perfetto. See
+//! docs/OBSERVABILITY.md.
 
 pub mod util;
 pub mod config;
@@ -97,6 +110,7 @@ pub mod reconfig;
 pub mod server;
 pub mod workload;
 pub mod metrics;
+pub mod obs;
 
 /// Crate-wide result type.
 pub type Result<T> = anyhow::Result<T>;

@@ -55,10 +55,14 @@ horizon in seconds (default 30)")
 costs; serve exposes /v1/profiles and calibrates online")
         .opt("max-cell-age-s", None, "ignore profile cells older than SECONDS \
 (fall back to analytic for them); default: trust forever")
+        .opt("trace-out", None, "serve: periodically write the captured trace window \
+as Chrome trace-event JSON to FILE (implies --trace-capture)")
         .opt("out", None, "profile: output path (default profiles.json)")
         .opt("batches", None, "profile: comma-separated batch sizes (default 8,16,32,64,128)")
         .opt("reps", None, "profile: measured predicts per cell (default 3)")
         .flag("reconfig", "serve: enable the live-reconfiguration controller")
+        .flag("trace-capture", "serve: start with the per-event trace capture \
+ring enabled (POST /v1/trace/capture toggles it at runtime)")
         .flag("no-forecast", "serve: disable predictive (trend-based) scaling — \
 the controller reacts to breaches only")
         .flag("no-cache", "optimize: ignore the matrix cache")
@@ -164,6 +168,14 @@ fn config_from(args: &ensemble_serve::util::cli::Args) -> anyhow::Result<ServerC
     if let Some(v) = args.get_u64("max-cell-age-s")? {
         anyhow::ensure!(v > 0, "max-cell-age-s must be positive");
         cfg.max_cell_age_s = Some(v);
+    }
+    if args.has_flag("trace-capture") {
+        cfg.trace_capture = true;
+    }
+    if let Some(v) = args.get("trace-out") {
+        anyhow::ensure!(!v.is_empty(), "trace-out path empty");
+        cfg.trace_out = Some(v.to_string());
+        cfg.trace_capture = true;
     }
     Ok(cfg)
 }
@@ -370,6 +382,12 @@ fn run(args: &ensemble_serve::util::cli::Args) -> anyhow::Result<()> {
                 executor,
                 cfg.engine_options(),
             )?);
+            if cfg.trace_capture {
+                system.metrics().trace.set_capture(true);
+            }
+            if let Some(path) = &cfg.trace_out {
+                spawn_trace_writer(path.clone(), Arc::clone(&system));
+            }
             let controller = if cfg.reconfig {
                 let calibration = profile_store.as_ref().map(|store| {
                     Calibrator::new(Arc::clone(store))
@@ -410,6 +428,7 @@ fn run(args: &ensemble_serve::util::cli::Args) -> anyhow::Result<()> {
                                               controller, profile_store.clone())?;
             println!("serving {} on http://{}", ensemble.name, api.addr());
             println!("  POST /v1/predict   GET /v1/health  /v1/stats  /v1/metrics  /v1/matrix");
+            println!("  GET /v1/stages  /v1/trace/slow  /v1/trace/export   POST /v1/trace/capture");
             if cfg.reconfig {
                 println!("  POST /v1/reconfigure   GET /v1/reconfig/status");
             }
@@ -423,6 +442,27 @@ fn run(args: &ensemble_serve::util::cli::Args) -> anyhow::Result<()> {
         other => anyhow::bail!("unknown command '{other}' (optimize|serve|bench|inspect|profile)"),
     }
     Ok(())
+}
+
+/// Background writer for `serve --trace-out FILE`: every few seconds,
+/// dump the captured trace window as Chrome trace-event JSON. The
+/// write goes to a temp file first and renames into place, so a reader
+/// (or chrome://tracing) never loads a half-written document.
+fn spawn_trace_writer(path: String, system: Arc<InferenceSystem>) {
+    std::thread::Builder::new()
+        .name("trace-writer".into())
+        .spawn(move || loop {
+            std::thread::sleep(std::time::Duration::from_secs(5));
+            let json = system.metrics().trace.export_chrome();
+            let tmp = format!("{path}.tmp");
+            if std::fs::write(&tmp, &json)
+                .and_then(|()| std::fs::rename(&tmp, &path))
+                .is_err()
+            {
+                log::warn!("trace-writer: failed to write {path}");
+            }
+        })
+        .expect("spawn trace-writer");
 }
 
 /// `serve --ensembles a,b[,c...]`: co-locate several ensembles on one
@@ -460,8 +500,19 @@ fn serve_multi_tenant(cfg: &ServerConfig) -> anyhow::Result<()> {
             Arc::clone(&executor),
             cfg.engine_options(),
         )?);
+        if cfg.trace_capture {
+            system.metrics().trace.set_capture(true);
+        }
         registry.register(&spec.name, Arc::clone(&system));
         tenants.push(Tenant::new(&spec.name, system));
+    }
+    if let Some(path) = &cfg.trace_out {
+        // one trace hub per tenant: the exported file follows the
+        // default tenant; the others stay reachable via the API with
+        // an x-ensemble header
+        if let Some((_, sys)) = registry.select_named(None) {
+            spawn_trace_writer(path.clone(), sys);
+        }
     }
 
     let controller = if cfg.reconfig {
@@ -502,6 +553,7 @@ fn serve_multi_tenant(cfg: &ServerConfig) -> anyhow::Result<()> {
     println!("serving tenants [{names}] on http://{}", api.addr());
     println!("  POST /v1/predict (x-ensemble: <name>)   GET /v1/ensembles");
     println!("  GET /v1/health  /v1/stats  /v1/metrics  /v1/matrix");
+    println!("  GET /v1/stages  /v1/trace/slow  /v1/trace/export   POST /v1/trace/capture");
     if cfg.reconfig {
         println!("  POST /v1/reconfigure   GET /v1/reconfig/status");
     }

@@ -67,6 +67,11 @@ pub struct EngineMetrics {
     /// End-to-end `predict` latency, engine-level (the server keeps its
     /// own HTTP-inclusive histogram on top).
     pub request_latency: LatencyHistogram,
+    /// Pipeline tracing hub: per-stage histograms, the slow-trace ring
+    /// and the Chrome-exportable event ring ([`crate::obs`]). Lives
+    /// here so traces, like the counters, span every worker-pool
+    /// generation of a system.
+    pub trace: crate::obs::TraceHub,
     /// Cumulative busy time per device index, µs (predict-call wall time
     /// recorded by each worker's predictor thread).
     device_busy_us: Vec<AtomicU64>,
@@ -166,7 +171,13 @@ pub fn quantile_ms_from_counts(bounds: &[u64], counts: &[u64], q: f64) -> f64 {
     for (i, c) in counts.iter().enumerate() {
         acc += c;
         if acc >= target {
-            let bound = bounds.get(i).copied().unwrap_or(u64::MAX / 2);
+            // The overflow bucket has no upper bound of its own; clamp
+            // to 2× the last bound (one log-bucket beyond) instead of a
+            // nonsense ~9.2e12 ms sentinel.
+            let bound = bounds
+                .get(i)
+                .copied()
+                .unwrap_or_else(|| bounds.last().copied().unwrap_or(0).saturating_mul(2));
             return bound as f64 / 1000.0;
         }
     }
@@ -303,6 +314,20 @@ mod tests {
         assert!(p50 >= 64.0 && p50 <= 140.0, "p50={p50}");
         // the cumulative histogram is still dominated by the 1 ms records
         assert!(h.quantile_ms(0.5) <= 2.1);
+    }
+
+    #[test]
+    fn overflow_bucket_quantile_clamps_to_twice_last_bound() {
+        let h = LatencyHistogram::new();
+        // 200 s lands past the 100 s final bound, in the overflow bucket
+        h.record(Duration::from_secs(200));
+        let last_ms = *h.bounds().last().unwrap() as f64 / 1000.0;
+        let p50 = h.quantile_ms(0.5);
+        assert_eq!(p50, 2.0 * last_ms, "p50={p50}");
+        // direct counts variant: all mass in the overflow slot
+        let bounds = [100u64, 200];
+        let counts = [0u64, 0, 7];
+        assert_eq!(quantile_ms_from_counts(&bounds, &counts, 0.99), 0.4);
     }
 
     #[test]

@@ -1,0 +1,649 @@
+//! Pipeline tracing: per-stage spans, slow-trace capture and Chrome
+//! trace export.
+//!
+//! The engine is an asynchronous multi-thread pipeline (broadcast →
+//! batch → predict → combine → reply); one end-to-end latency number
+//! cannot say *where* a request's time goes. This module is the
+//! observability substrate under it: every request carries a trace id
+//! (`generation << 32 | request`), every pipeline stage stamps its span
+//! into a [`TraceHub`] owned by
+//! [`EngineMetrics`](crate::metrics::EngineMetrics) — so, like the
+//! counters, traces survive hot swaps — and three consumers read them:
+//!
+//! * per-stage log-bucketed
+//!   [`LatencyHistogram`](crate::metrics::LatencyHistogram)s, exported
+//!   as Prometheus histograms on `/v1/metrics` and as JSON on
+//!   `GET /v1/stages`;
+//! * a bounded slow-trace ring (the N slowest + M most recent complete
+//!   traces) behind `GET /v1/trace/slow`;
+//! * a Chrome trace-event JSON exporter (`GET /v1/trace/export`,
+//!   `serve --trace-out FILE`) whose output loads directly in
+//!   `chrome://tracing` / Perfetto, with one lane per pipeline stage
+//!   and one lane per device.
+//!
+//! Everything is compiled in unconditionally; the per-event capture
+//! ring is the only part with a runtime toggle ([`TraceHub::set_capture`],
+//! `POST /v1/trace/capture`). The hot path allocates nothing: stage
+//! stamps are `u64` timestamps threaded through the existing engine
+//! messages, events are `Copy` structs written into a preallocated
+//! ring, and with capture off a stamp costs one relaxed atomic load.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+use crate::metrics::LatencyHistogram;
+
+/// Number of traced pipeline stages (the length of [`STAGE_NAMES`]).
+pub const N_STAGES: usize = 6;
+
+/// Stage names, indexed by [`Stage`] discriminants.
+pub const STAGE_NAMES: [&str; N_STAGES] =
+    ["gate_wait", "batcher_wait", "seal", "predict", "combine", "reply"];
+
+/// One pipeline stage of a request's journey.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Stage {
+    /// Intake-gate wait: time parked at the gate during a
+    /// drain-then-build gap (0 when the gate is open).
+    GateWait = 0,
+    /// Server-side adaptive-batcher queue wait (0 when the engine is
+    /// called directly).
+    BatcherWait = 1,
+    /// Batch formation: broadcast of the segment id until the worker's
+    /// batcher handed the last chunk to its predictor.
+    Seal = 2,
+    /// Per-member model execution (per request: the slowest member
+    /// message).
+    Predict = 3,
+    /// Accumulator combine folds (per request: summed over messages).
+    Combine = 4,
+    /// Reply delivery: combine finalized until the caller woke up.
+    Reply = 5,
+}
+
+impl Stage {
+    /// Index into [`STAGE_NAMES`] / [`TraceHub::stages`].
+    pub fn index(self) -> usize {
+        self as usize
+    }
+
+    pub fn name(self) -> &'static str {
+        STAGE_NAMES[self.index()]
+    }
+}
+
+/// Control-plane moments marked as instant events (always recorded —
+/// they are rare — even with span capture off).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum InstantKind {
+    /// A generation swap completed (arg: the new generation id).
+    Swap,
+    /// A drain-then-build unavailability gap closed (arg: gap µs).
+    Gap,
+    /// A controller replan swapped the allocation (arg: new generation).
+    Replan,
+    /// The routed generation changed (arg: the new generation id).
+    Generation,
+    /// A drain-then-build build failure rolled back (arg: generation).
+    Rollback,
+}
+
+impl InstantKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            InstantKind::Swap => "swap",
+            InstantKind::Gap => "gap",
+            InstantKind::Replan => "replan",
+            InstantKind::Generation => "generation",
+            InstantKind::Rollback => "rollback",
+        }
+    }
+}
+
+/// What a captured [`TraceEvent`] describes.
+#[derive(Debug, Clone, Copy)]
+pub enum EventKind {
+    /// A duration span of one pipeline stage.
+    Span(Stage),
+    /// A control-plane instant ([`InstantKind`]); the event's `trace_id`
+    /// field carries the kind's argument instead of a trace id.
+    Instant(InstantKind),
+}
+
+/// Lane marker for events that are not tied to a device.
+pub const NO_LANE: u32 = u32::MAX;
+
+/// One captured event: plain old data, `Copy`, written into a
+/// preallocated ring (no allocation on the hot path).
+#[derive(Debug, Clone, Copy)]
+pub struct TraceEvent {
+    pub kind: EventKind,
+    /// Trace id (`generation << 32 | request`) for spans; the argument
+    /// value for instants.
+    pub trace_id: u64,
+    /// Start timestamp, µs since the hub epoch.
+    pub ts_us: u64,
+    /// Span duration, µs (0 for instants).
+    pub dur_us: u64,
+    /// Device row for predict spans, [`NO_LANE`] otherwise.
+    pub device: u32,
+    /// Matrix column for predict spans, [`NO_LANE`] otherwise.
+    pub model: u32,
+    /// Rows in the predicted batch (predict spans only).
+    pub rows: u32,
+}
+
+/// Per-request span aggregate assembled by the accumulator and handed
+/// back through the completion channel (one `Copy` struct per request —
+/// nothing allocated).
+#[derive(Debug, Default, Clone, Copy)]
+pub struct ReqSpans {
+    /// `generation << 32 | request`.
+    pub trace_id: u64,
+    /// Batch formation, µs (slowest segment across workers).
+    pub seal_us: u64,
+    /// Model execution, µs (slowest member message).
+    pub predict_us: u64,
+    /// Combine folds, µs (summed over the request's messages).
+    pub combine_us: u64,
+    /// Reply delivery, µs (set by `Generation::predict` on wakeup).
+    pub reply_us: u64,
+    /// Hub-epoch µs when the accumulator finalized the combine.
+    pub done_us: u64,
+}
+
+/// Digest of one completed request, kept in the slow-trace ring.
+#[derive(Debug, Default, Clone, Copy)]
+pub struct TraceSummary {
+    pub trace_id: u64,
+    /// Hub-epoch µs when the request entered `predict`.
+    pub start_us: u64,
+    /// End-to-end µs.
+    pub total_us: u64,
+    /// Per-stage µs, indexed like [`STAGE_NAMES`].
+    pub stages: [u64; N_STAGES],
+}
+
+impl TraceSummary {
+    /// Generation part of the trace id.
+    pub fn generation(&self) -> u64 {
+        self.trace_id >> 32
+    }
+
+    /// Request part of the trace id (generation-local).
+    pub fn request(&self) -> u64 {
+        self.trace_id & 0xffff_ffff
+    }
+}
+
+/// Event ring capacity: ~1 s of a busy pipeline; at 48 B/event the full
+/// ring is < 1 MB, preallocated on the first capture.
+const EVENT_CAP: usize = 16_384;
+/// Slowest complete traces kept.
+const SLOW_CAP: usize = 16;
+/// Most recent complete traces kept.
+const RECENT_CAP: usize = 64;
+
+/// Fixed-capacity overwrite-oldest ring of `Copy` items.
+#[derive(Debug)]
+struct Ring<T: Copy> {
+    buf: Vec<T>,
+    cap: usize,
+    /// Next write position once `buf` is full.
+    next: usize,
+    /// Items overwritten since creation.
+    dropped: u64,
+}
+
+impl<T: Copy> Ring<T> {
+    fn new(cap: usize) -> Ring<T> {
+        Ring { buf: Vec::new(), cap, next: 0, dropped: 0 }
+    }
+
+    fn push(&mut self, item: T) {
+        if self.buf.capacity() == 0 {
+            // one allocation at first use, never on the steady path
+            self.buf.reserve_exact(self.cap);
+        }
+        if self.buf.len() < self.cap {
+            self.buf.push(item);
+        } else {
+            self.buf[self.next] = item;
+            self.next = (self.next + 1) % self.cap;
+            self.dropped += 1;
+        }
+    }
+
+    /// Oldest-first snapshot.
+    fn snapshot(&self) -> Vec<T> {
+        let mut out = Vec::with_capacity(self.buf.len());
+        out.extend_from_slice(&self.buf[self.next..]);
+        out.extend_from_slice(&self.buf[..self.next]);
+        out
+    }
+
+    fn clear(&mut self) {
+        self.buf.clear();
+        self.next = 0;
+    }
+}
+
+#[derive(Debug)]
+struct SlowRing {
+    /// Sorted descending by `total_us`, at most [`SLOW_CAP`] entries.
+    slowest: Vec<TraceSummary>,
+    recent: Ring<TraceSummary>,
+}
+
+impl SlowRing {
+    fn new() -> SlowRing {
+        SlowRing { slowest: Vec::with_capacity(SLOW_CAP), recent: Ring::new(RECENT_CAP) }
+    }
+
+    fn note(&mut self, s: TraceSummary) {
+        self.recent.push(s);
+        if self.slowest.len() < SLOW_CAP {
+            self.slowest.push(s);
+        } else if s.total_us > self.slowest[SLOW_CAP - 1].total_us {
+            self.slowest[SLOW_CAP - 1] = s;
+        } else {
+            return;
+        }
+        self.slowest.sort_by(|a, b| b.total_us.cmp(&a.total_us));
+    }
+}
+
+/// The per-tenant tracing hub: stage histograms, the event capture ring
+/// and the slow-trace ring. Owned by
+/// [`EngineMetrics`](crate::metrics::EngineMetrics), so one hub spans
+/// every generation of a system and survives live reconfigurations.
+#[derive(Debug)]
+pub struct TraceHub {
+    epoch: Instant,
+    capture: AtomicBool,
+    stages: [LatencyHistogram; N_STAGES],
+    events: Mutex<Ring<TraceEvent>>,
+    slow: Mutex<SlowRing>,
+}
+
+impl Default for TraceHub {
+    fn default() -> Self {
+        TraceHub::new()
+    }
+}
+
+impl TraceHub {
+    pub fn new() -> TraceHub {
+        TraceHub {
+            epoch: Instant::now(),
+            capture: AtomicBool::new(false),
+            stages: std::array::from_fn(|_| LatencyHistogram::new()),
+            events: Mutex::new(Ring::new(EVENT_CAP)),
+            slow: Mutex::new(SlowRing::new()),
+        }
+    }
+
+    /// Microseconds since this hub was created — the timebase of every
+    /// stamp, shared by all generations of the owning system.
+    pub fn now_us(&self) -> u64 {
+        self.epoch.elapsed().as_micros() as u64
+    }
+
+    /// Is the per-event capture ring recording?
+    pub fn capture_enabled(&self) -> bool {
+        self.capture.load(Ordering::Relaxed)
+    }
+
+    /// Toggle the per-event capture ring at runtime. Stage histograms,
+    /// the slow-trace ring and instant events record regardless.
+    pub fn set_capture(&self, on: bool) {
+        self.capture.store(on, Ordering::Relaxed);
+    }
+
+    /// Drop every captured event (capture state unchanged).
+    pub fn clear_events(&self) {
+        self.events.lock().unwrap().clear();
+    }
+
+    /// Per-stage latency histograms, indexed like [`STAGE_NAMES`].
+    pub fn stages(&self) -> &[LatencyHistogram; N_STAGES] {
+        &self.stages
+    }
+
+    pub fn stage(&self, s: Stage) -> &LatencyHistogram {
+        &self.stages[s.index()]
+    }
+
+    /// Events overwritten because the capture ring was full.
+    pub fn events_dropped(&self) -> u64 {
+        self.events.lock().unwrap().dropped
+    }
+
+    /// Record a span into the capture ring (no-op with capture off).
+    pub fn push_span(&self, stage: Stage, trace_id: u64, ts_us: u64, dur_us: u64) {
+        if !self.capture_enabled() {
+            return;
+        }
+        self.events.lock().unwrap().push(TraceEvent {
+            kind: EventKind::Span(stage),
+            trace_id,
+            ts_us,
+            dur_us,
+            device: NO_LANE,
+            model: NO_LANE,
+            rows: 0,
+        });
+    }
+
+    /// Record a per-member predict span with its device/model lane
+    /// coordinates (no-op with capture off).
+    pub fn push_predict(
+        &self,
+        trace_id: u64,
+        ts_us: u64,
+        dur_us: u64,
+        device: usize,
+        model: usize,
+        rows: usize,
+    ) {
+        if !self.capture_enabled() {
+            return;
+        }
+        self.events.lock().unwrap().push(TraceEvent {
+            kind: EventKind::Span(Stage::Predict),
+            trace_id,
+            ts_us,
+            dur_us,
+            device: device as u32,
+            model: model as u32,
+            rows: rows as u32,
+        });
+    }
+
+    /// Mark a control-plane instant (swap, gap, replan, …). Always
+    /// recorded — these are rare and carry the reconfiguration story a
+    /// trace window needs to make sense.
+    pub fn instant(&self, kind: InstantKind, arg: u64) {
+        self.events.lock().unwrap().push(TraceEvent {
+            kind: EventKind::Instant(kind),
+            trace_id: arg,
+            ts_us: self.now_us(),
+            dur_us: 0,
+            device: NO_LANE,
+            model: NO_LANE,
+            rows: 0,
+        });
+    }
+
+    /// Record one adaptive-batcher queue wait (per client request).
+    pub fn record_batcher_wait(&self, enqueued_us: u64, dur_us: u64) {
+        self.stages[Stage::BatcherWait.index()].record(Duration::from_micros(dur_us));
+        self.push_span(Stage::BatcherWait, 0, enqueued_us, dur_us);
+    }
+
+    /// Fold one completed request into the stage histograms and the
+    /// slow-trace ring. `start_us`/`end_us` bound the whole `predict`
+    /// call; `gate_us` is the intake-gate wait measured by the system.
+    pub fn complete(&self, start_us: u64, gate_us: u64, spans: &ReqSpans, end_us: u64) {
+        let rec = |s: Stage, us: u64| self.stages[s.index()].record(Duration::from_micros(us));
+        rec(Stage::GateWait, gate_us);
+        rec(Stage::Seal, spans.seal_us);
+        rec(Stage::Predict, spans.predict_us);
+        rec(Stage::Combine, spans.combine_us);
+        rec(Stage::Reply, spans.reply_us);
+
+        let total_us = end_us.saturating_sub(start_us);
+        let mut stages = [0u64; N_STAGES];
+        stages[Stage::GateWait.index()] = gate_us;
+        stages[Stage::Seal.index()] = spans.seal_us;
+        stages[Stage::Predict.index()] = spans.predict_us;
+        stages[Stage::Combine.index()] = spans.combine_us;
+        stages[Stage::Reply.index()] = spans.reply_us;
+        self.slow.lock().unwrap().note(TraceSummary {
+            trace_id: spans.trace_id,
+            start_us,
+            total_us,
+            stages,
+        });
+
+        // the gate and reply spans have no other stamp point
+        self.push_span(Stage::GateWait, spans.trace_id, start_us, gate_us);
+        self.push_span(Stage::Reply, spans.trace_id, spans.done_us, spans.reply_us);
+    }
+
+    /// `(slowest, most recent)` complete traces; `slowest` descending by
+    /// total latency, `recent` oldest-first.
+    pub fn slow_traces(&self) -> (Vec<TraceSummary>, Vec<TraceSummary>) {
+        let g = self.slow.lock().unwrap();
+        (g.slowest.clone(), g.recent.snapshot())
+    }
+
+    /// Oldest-first snapshot of the capture ring.
+    pub fn events_snapshot(&self) -> Vec<TraceEvent> {
+        self.events.lock().unwrap().snapshot()
+    }
+
+    /// Render the capture ring as Chrome trace-event JSON (the
+    /// `{"traceEvents": […]}` object format): pid 1 holds one lane per
+    /// pipeline stage plus a control lane for instants, pid 2 one lane
+    /// per device carrying the per-member predict spans. Loads directly
+    /// in `chrome://tracing` or Perfetto.
+    pub fn export_chrome(&self) -> String {
+        use std::fmt::Write as _;
+        let events = self.events_snapshot();
+        let mut out = String::with_capacity(256 + events.len() * 160);
+        out.push_str("{\"traceEvents\":[");
+        out.push_str(
+            "{\"name\":\"process_name\",\"ph\":\"M\",\"pid\":1,\"tid\":0,\
+             \"args\":{\"name\":\"pipeline stages\"}},\
+             {\"name\":\"process_name\",\"ph\":\"M\",\"pid\":2,\"tid\":0,\
+             \"args\":{\"name\":\"devices\"}}",
+        );
+        for (i, name) in STAGE_NAMES.iter().enumerate() {
+            let _ = write!(
+                out,
+                ",{{\"name\":\"thread_name\",\"ph\":\"M\",\"pid\":1,\"tid\":{i},\
+                 \"args\":{{\"name\":\"stage: {name}\"}}}}"
+            );
+        }
+        let _ = write!(
+            out,
+            ",{{\"name\":\"thread_name\",\"ph\":\"M\",\"pid\":1,\"tid\":{N_STAGES},\
+             \"args\":{{\"name\":\"control\"}}}}"
+        );
+        let mut devices: Vec<u32> =
+            events.iter().filter(|e| e.device != NO_LANE).map(|e| e.device).collect();
+        devices.sort_unstable();
+        devices.dedup();
+        for d in &devices {
+            let _ = write!(
+                out,
+                ",{{\"name\":\"thread_name\",\"ph\":\"M\",\"pid\":2,\"tid\":{d},\
+                 \"args\":{{\"name\":\"device {d}\"}}}}"
+            );
+        }
+        for e in &events {
+            match e.kind {
+                EventKind::Span(stage) => {
+                    let name = stage.name();
+                    let tid = stage.index();
+                    let _ = write!(
+                        out,
+                        ",{{\"name\":\"{name}\",\"cat\":\"stage\",\"ph\":\"X\",\
+                         \"ts\":{},\"dur\":{},\"pid\":1,\"tid\":{tid},\
+                         \"args\":{{\"trace\":\"{:x}\"}}}}",
+                        e.ts_us, e.dur_us, e.trace_id
+                    );
+                    if e.device != NO_LANE {
+                        let _ = write!(
+                            out,
+                            ",{{\"name\":\"{name}\",\"cat\":\"device\",\"ph\":\"X\",\
+                             \"ts\":{},\"dur\":{},\"pid\":2,\"tid\":{},\
+                             \"args\":{{\"trace\":\"{:x}\",\"model\":{},\"rows\":{}}}}}",
+                            e.ts_us, e.dur_us, e.device, e.trace_id, e.model, e.rows
+                        );
+                    }
+                }
+                EventKind::Instant(kind) => {
+                    let _ = write!(
+                        out,
+                        ",{{\"name\":\"{}\",\"cat\":\"control\",\"ph\":\"i\",\"s\":\"g\",\
+                         \"ts\":{},\"pid\":1,\"tid\":{N_STAGES},\
+                         \"args\":{{\"arg\":{}}}}}",
+                        kind.name(),
+                        e.ts_us,
+                        e.trace_id
+                    );
+                }
+            }
+        }
+        out.push_str("]}");
+        out
+    }
+}
+
+/// Compose a trace id from a generation id and a generation-local
+/// request id.
+pub fn trace_id(generation: u64, req: u64) -> u64 {
+    (generation << 32) | (req & 0xffff_ffff)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json::Json;
+
+    #[test]
+    fn stage_indexing_matches_names() {
+        for (i, s) in [
+            Stage::GateWait,
+            Stage::BatcherWait,
+            Stage::Seal,
+            Stage::Predict,
+            Stage::Combine,
+            Stage::Reply,
+        ]
+        .into_iter()
+        .enumerate()
+        {
+            assert_eq!(s.index(), i);
+            assert_eq!(s.name(), STAGE_NAMES[i]);
+        }
+    }
+
+    #[test]
+    fn trace_id_packs_generation_and_request() {
+        let id = trace_id(3, 17);
+        assert_eq!(id >> 32, 3);
+        assert_eq!(id & 0xffff_ffff, 17);
+        let s = TraceSummary { trace_id: id, ..Default::default() };
+        assert_eq!(s.generation(), 3);
+        assert_eq!(s.request(), 17);
+    }
+
+    #[test]
+    fn ring_overwrites_oldest() {
+        let mut r: Ring<u64> = Ring::new(3);
+        for v in 0..5u64 {
+            r.push(v);
+        }
+        assert_eq!(r.snapshot(), vec![2, 3, 4]);
+        assert_eq!(r.dropped, 2);
+    }
+
+    #[test]
+    fn capture_toggle_gates_spans_but_not_instants() {
+        let hub = TraceHub::new();
+        hub.push_span(Stage::Predict, 1, 0, 10);
+        assert!(hub.events_snapshot().is_empty(), "capture defaults off");
+        hub.instant(InstantKind::Swap, 2);
+        assert_eq!(hub.events_snapshot().len(), 1, "instants always record");
+        hub.set_capture(true);
+        hub.push_span(Stage::Predict, 1, 0, 10);
+        assert_eq!(hub.events_snapshot().len(), 2);
+        hub.clear_events();
+        assert!(hub.events_snapshot().is_empty());
+    }
+
+    #[test]
+    fn complete_feeds_histograms_and_slow_ring() {
+        let hub = TraceHub::new();
+        let spans = ReqSpans {
+            trace_id: trace_id(1, 1),
+            seal_us: 100,
+            predict_us: 5_000,
+            combine_us: 200,
+            reply_us: 50,
+            done_us: 5_300,
+        };
+        hub.complete(0, 0, &spans, 5_400);
+        assert_eq!(hub.stage(Stage::Predict).count(), 1);
+        assert_eq!(hub.stage(Stage::Combine).count(), 1);
+        let (slowest, recent) = hub.slow_traces();
+        assert_eq!(slowest.len(), 1);
+        assert_eq!(recent.len(), 1);
+        assert_eq!(slowest[0].total_us, 5_400);
+        assert_eq!(slowest[0].stages[Stage::Predict.index()], 5_000);
+    }
+
+    #[test]
+    fn slow_ring_keeps_the_slowest() {
+        let hub = TraceHub::new();
+        for i in 0..100u64 {
+            let spans = ReqSpans { trace_id: trace_id(1, i), ..Default::default() };
+            // request i takes i µs: the slowest are the last ones
+            hub.complete(0, 0, &spans, i);
+        }
+        let (slowest, recent) = hub.slow_traces();
+        assert_eq!(slowest.len(), SLOW_CAP);
+        assert_eq!(slowest[0].total_us, 99);
+        assert!(slowest.windows(2).all(|w| w[0].total_us >= w[1].total_us));
+        assert!(slowest.iter().all(|s| s.total_us >= (100 - SLOW_CAP as u64)));
+        assert_eq!(recent.len(), RECENT_CAP);
+        assert_eq!(recent.last().unwrap().total_us, 99, "recent is oldest-first");
+    }
+
+    #[test]
+    fn chrome_export_is_valid_json_with_lanes() {
+        let hub = TraceHub::new();
+        hub.set_capture(true);
+        hub.push_predict(trace_id(1, 1), 10, 40, 2, 0, 8);
+        hub.push_span(Stage::Combine, trace_id(1, 1), 55, 5);
+        hub.instant(InstantKind::Replan, 2);
+        let text = hub.export_chrome();
+        let doc = Json::parse(&text).expect("valid JSON");
+        let events = doc.get("traceEvents").and_then(Json::as_arr).expect("traceEvents");
+        // metadata + 2 span renderings of the predict event (stage lane
+        // + device lane) + combine + instant
+        let spans: Vec<&Json> = events
+            .iter()
+            .filter(|e| e.get("ph").and_then(Json::as_str) == Some("X"))
+            .collect();
+        assert_eq!(spans.len(), 3);
+        assert!(events.iter().any(|e| {
+            e.get("ph").and_then(Json::as_str) == Some("M")
+                && e.get("args")
+                    .and_then(|a| a.get("name"))
+                    .and_then(Json::as_str)
+                    == Some("device 2")
+        }));
+        assert!(events
+            .iter()
+            .any(|e| e.get("ph").and_then(Json::as_str) == Some("i")));
+        for s in spans {
+            assert!(s.get("ts").and_then(Json::as_f64).is_some());
+            assert!(s.get("dur").and_then(Json::as_f64).is_some());
+            assert!(s.get("pid").and_then(Json::as_f64).is_some());
+            assert!(s.get("tid").and_then(Json::as_f64).is_some());
+        }
+    }
+
+    #[test]
+    fn batcher_wait_records_even_without_capture() {
+        let hub = TraceHub::new();
+        hub.record_batcher_wait(0, 1_000);
+        assert_eq!(hub.stage(Stage::BatcherWait).count(), 1);
+        assert!(hub.events_snapshot().is_empty(), "event gated on capture");
+    }
+}

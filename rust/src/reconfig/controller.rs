@@ -547,6 +547,10 @@ impl ReconfigController {
         if let (Some(cal), Some(gap)) = (&self.opts.calibration, report.gap) {
             cal.observe_gap(plan.matrix.worker_count(), gap);
         }
+        self.system
+            .metrics()
+            .trace
+            .instant(crate::obs::InstantKind::Replan, report.to_generation);
         // the window now describes the PREVIOUS generation (other
         // worker counts, other latencies): start fresh — the trend too,
         // it was measured against the old allocation's capacity

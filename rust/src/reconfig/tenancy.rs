@@ -655,6 +655,10 @@ impl MultiTenantController {
                     }
                     t.monitor.reset();
                     t.forecaster.reset();
+                    t.system
+                        .metrics()
+                        .trace
+                        .instant(crate::obs::InstantKind::Replan, report.to_generation);
                     swaps.push((t.name.clone(), report));
                 }
                 Err(e) => errors.push(format!("tenant '{}': {e:#}", t.name)),

@@ -32,6 +32,16 @@
 //!   next to it, and parked-request count), windowed load and the load
 //!   `forecast` (trend projection at the horizon) — per tenant under a
 //!   multi-tenant controller.
+//! * `GET /v1/stages` — per-stage latency breakdown (gate wait,
+//!   batcher wait, seal, predict, combine, reply) of the selected
+//!   tenant's pipeline, from the [`crate::obs`] trace hub.
+//! * `GET /v1/trace/slow` — the N slowest + M most recent complete
+//!   traces with their per-stage spans.
+//! * `GET /v1/trace/export` — the captured event window as Chrome
+//!   trace-event JSON (open in `chrome://tracing` / Perfetto).
+//! * `POST /v1/trace/capture` — toggle the per-event capture ring;
+//!   body `{"capture": true|false}` (absent = toggle) and optional
+//!   `{"clear": true}` to drop the captured window first.
 //! * `GET /v1/profiles` — the measured cost-model cells: per
 //!   (model, device-class, batch) measured latency next to the
 //!   analytic prediction (delta %), sample counts, source
@@ -208,6 +218,10 @@ fn route(state: &ApiState, req: &Request) -> Response {
         ("GET", "/v1/metrics") => prometheus(state, req),
         ("GET", "/v1/matrix") => matrix(state, req),
         ("GET", "/v1/ensembles") => ensembles(state),
+        ("GET", "/v1/stages") => stages(state, req),
+        ("GET", "/v1/trace/slow") => trace_slow(state, req),
+        ("GET", "/v1/trace/export") => trace_export(state, req),
+        ("POST", "/v1/trace/capture") => trace_capture(state, req),
         ("GET", "/v1/profiles") => profiles_report(state, req),
         ("POST", "/v1/reconfigure") => reconfigure(state, req),
         ("GET", "/v1/reconfig/status") => reconfig_status(state),
@@ -404,6 +418,20 @@ fn tenant_exposition(
             }
         }
     }
+    // per-pipeline-stage latency: one family, stage="..." label (plus
+    // tenant="..." in the multi-tenant scrape)
+    out.push_str("# TYPE ensemble_serve_stage_latency_seconds histogram\n");
+    for (name, system) in tenants {
+        let trace = &system.metrics().trace;
+        for (stage, h) in crate::obs::STAGE_NAMES.iter().zip(trace.stages().iter()) {
+            let labels = if labeled {
+                format!("stage=\"{stage}\",tenant=\"{name}\"")
+            } else {
+                format!("stage=\"{stage}\"")
+            };
+            write_histogram(&mut out, "ensemble_serve_stage_latency_seconds", h, &labels);
+        }
+    }
     out
 }
 
@@ -435,6 +463,128 @@ fn write_histogram(out: &mut String, name: &str, h: &LatencyHistogram, labels: &
     out.push_str(&format!("{name}_bucket{} {total}\n", with_le("+Inf")));
     out.push_str(&format!("{name}_sum{plain} {}\n", h.total_us() as f64 / 1e6));
     out.push_str(&format!("{name}_count{plain} {total}\n"));
+}
+
+/// Per-stage latency breakdown of the selected tenant's pipeline as
+/// JSON: count / mean / p50 / p95 / p99 per stage, plus the e2e
+/// request-latency median the stage medians should sum close to.
+fn stages(state: &ApiState, req: &Request) -> Response {
+    let (name, system) = match select_tenant(state, req) {
+        Ok(pair) => pair,
+        Err(resp) => return resp,
+    };
+    let trace = &system.metrics().trace;
+    let rows: Vec<Json> = crate::obs::STAGE_NAMES
+        .iter()
+        .zip(trace.stages().iter())
+        .map(|(stage, h)| {
+            Json::from_pairs([
+                ("stage", Json::Str((*stage).to_string())),
+                ("count", Json::Num(h.count() as f64)),
+                ("mean_ms", Json::Num(h.mean_ms())),
+                ("p50_ms", Json::Num(h.quantile_ms(0.50))),
+                ("p95_ms", Json::Num(h.quantile_ms(0.95))),
+                ("p99_ms", Json::Num(h.quantile_ms(0.99))),
+            ])
+        })
+        .collect();
+    let e2e = &system.metrics().request_latency;
+    let body = Json::from_pairs([
+        ("tenant", Json::Str(name)),
+        ("stages", Json::Arr(rows)),
+        ("e2e_p50_ms", Json::Num(e2e.quantile_ms(0.50))),
+        ("e2e_count", Json::Num(e2e.count() as f64)),
+        ("capture", Json::Bool(trace.capture_enabled())),
+        ("events_dropped", Json::Num(trace.events_dropped() as f64)),
+    ]);
+    Response::json(200, body.to_string())
+}
+
+fn trace_summary_json(s: &crate::obs::TraceSummary) -> Json {
+    let stages = crate::obs::STAGE_NAMES
+        .iter()
+        .zip(s.stages.iter())
+        .map(|(name, us)| ((*name), Json::Num(*us as f64 / 1e3)))
+        .collect::<Vec<_>>();
+    Json::from_pairs([
+        ("trace_id", Json::Str(format!("{:x}", s.trace_id))),
+        ("generation", Json::Num(s.generation() as f64)),
+        ("request", Json::Num(s.request() as f64)),
+        ("start_us", Json::Num(s.start_us as f64)),
+        ("total_ms", Json::Num(s.total_us as f64 / 1e3)),
+        ("stages_ms", Json::from_pairs(stages)),
+    ])
+}
+
+/// The N slowest plus M most recent complete traces, each with its
+/// per-stage span breakdown in milliseconds.
+fn trace_slow(state: &ApiState, req: &Request) -> Response {
+    let (name, system) = match select_tenant(state, req) {
+        Ok(pair) => pair,
+        Err(resp) => return resp,
+    };
+    let (slowest, recent) = system.metrics().trace.slow_traces();
+    let body = Json::from_pairs([
+        ("tenant", Json::Str(name)),
+        (
+            "slowest",
+            Json::Arr(slowest.iter().map(trace_summary_json).collect()),
+        ),
+        (
+            "recent",
+            Json::Arr(recent.iter().map(trace_summary_json).collect()),
+        ),
+    ]);
+    Response::json(200, body.to_string())
+}
+
+/// The captured event window as Chrome trace-event JSON — load the
+/// body directly in `chrome://tracing` or Perfetto.
+fn trace_export(state: &ApiState, req: &Request) -> Response {
+    let (_, system) = match select_tenant(state, req) {
+        Ok(pair) => pair,
+        Err(resp) => return resp,
+    };
+    Response::json(200, system.metrics().trace.export_chrome())
+}
+
+/// Toggle (or set) the per-event capture ring at runtime. Body is
+/// optional JSON: `{"capture": bool}` sets it, absent toggles;
+/// `{"clear": true}` drops the captured window first.
+fn trace_capture(state: &ApiState, req: &Request) -> Response {
+    let (name, system) = match select_tenant(state, req) {
+        Ok(pair) => pair,
+        Err(resp) => return resp,
+    };
+    let trace = &system.metrics().trace;
+    let mut capture: Option<bool> = None;
+    let mut clear = false;
+    if !req.body.is_empty() {
+        let text = match std::str::from_utf8(&req.body) {
+            Ok(t) => t,
+            Err(_) => return Response::text(400, "body is not utf-8"),
+        };
+        let parsed = match Json::parse(text) {
+            Ok(j) => j,
+            Err(e) => return Response::text(400, &format!("bad json: {e}")),
+        };
+        capture = parsed.get("capture").and_then(Json::as_bool);
+        clear = parsed
+            .get("clear")
+            .and_then(Json::as_bool)
+            .unwrap_or(false);
+    }
+    if clear {
+        trace.clear_events();
+    }
+    let next = capture.unwrap_or(!trace.capture_enabled());
+    trace.set_capture(next);
+    let body = Json::from_pairs([
+        ("tenant", Json::Str(name)),
+        ("capture", Json::Bool(next)),
+        ("cleared", Json::Bool(clear)),
+    ]);
+    Response::json(200, body.to_string())
 }
 
 /// The measured cost-model cells, each next to what the analytic
@@ -986,6 +1136,127 @@ mod tests {
         assert!(text.contains("ensemble_serve_predict_latency_seconds_bucket{le=\"+Inf\"} 1"),
                 "{text}");
         assert!(text.contains("ensemble_serve_predict_latency_seconds_count 1"), "{text}");
+    }
+
+    #[test]
+    fn exposition_histograms_are_monotone() {
+        let srv = api();
+        let elems = srv.system().ensemble().members[0].input_elems_per_image();
+        let row = format!("[{}]", vec!["0.5"; elems].join(","));
+        let body = format!("{{\"images\":[{row}]}}");
+        for _ in 0..3 {
+            let (code, _) = http_request(srv.addr(), "POST", "/v1/predict",
+                                         "application/json", body.as_bytes())
+                .unwrap();
+            assert_eq!(code, 200);
+        }
+        let (_, body) = http_request(srv.addr(), "GET", "/v1/metrics", "", b"").unwrap();
+        let text = String::from_utf8(body).unwrap();
+        assert!(text.contains("# TYPE ensemble_serve_stage_latency_seconds histogram"),
+                "{text}");
+        assert!(text.contains(
+            "ensemble_serve_stage_latency_seconds_bucket{le=\"+Inf\",stage=\"predict\"}"),
+                "{text}");
+        // every exported histogram must be a valid exposition: cumulative
+        // bucket counts non-decreasing in le-order, and the +Inf bucket
+        // equal to the _count sample of the same series
+        let mut prev: Option<u64> = None; // last cumulative value in the open run
+        let mut inf: Option<u64> = None; // +Inf count of the run just closed
+        let mut histograms = 0usize;
+        for line in text.lines() {
+            let value = || line.rsplit(' ').next().unwrap().parse::<u64>().unwrap();
+            if line.contains("_bucket{le=") {
+                let v = value();
+                if let Some(p) = prev {
+                    assert!(v >= p, "non-monotone histogram at: {line}");
+                }
+                prev = Some(v);
+                if line.contains("le=\"+Inf\"") {
+                    inf = Some(v);
+                    prev = None;
+                }
+            } else if !line.starts_with('#') && line.contains("_count") {
+                assert_eq!(value(), inf.expect("_count without buckets"), "{line}");
+                inf = None;
+                histograms += 1;
+            }
+        }
+        // e2e predict + http + six pipeline stages, single tenant
+        assert!(histograms >= 8, "expected >=8 histograms, saw {histograms}");
+    }
+
+    #[test]
+    fn stages_route_reports_breakdown() {
+        let srv = api();
+        let elems = srv.system().ensemble().members[0].input_elems_per_image();
+        let row = format!("[{}]", vec!["0.5"; elems].join(","));
+        let body = format!("{{\"images\":[{row}]}}");
+        let (code, _) = http_request(srv.addr(), "POST", "/v1/predict",
+                                     "application/json", body.as_bytes())
+            .unwrap();
+        assert_eq!(code, 200);
+        let (code, body) = http_request(srv.addr(), "GET", "/v1/stages", "", b"").unwrap();
+        assert_eq!(code, 200);
+        let j = Json::parse(std::str::from_utf8(&body).unwrap()).unwrap();
+        assert_eq!(j.get("tenant").unwrap().as_str(), Some("IMN4"));
+        assert_eq!(j.get("e2e_count").unwrap().as_usize(), Some(1));
+        let rows = j.get("stages").unwrap().as_arr().unwrap();
+        assert_eq!(rows.len(), crate::obs::N_STAGES);
+        let predict = rows
+            .iter()
+            .find(|r| r.get("stage").unwrap().as_str() == Some("predict"))
+            .unwrap();
+        assert_eq!(predict.get("count").unwrap().as_usize(), Some(1));
+        assert!(predict.get("p50_ms").unwrap().as_f64().unwrap() >= 0.0);
+    }
+
+    #[test]
+    fn trace_capture_export_and_slow() {
+        let srv = api();
+        // enable capture, then run one request through the pipeline
+        let (code, body) = http_request(srv.addr(), "POST", "/v1/trace/capture",
+                                        "application/json", b"{\"capture\":true}")
+            .unwrap();
+        assert_eq!(code, 200);
+        let j = Json::parse(std::str::from_utf8(&body).unwrap()).unwrap();
+        assert_eq!(j.get("capture"), Some(&Json::Bool(true)));
+
+        let elems = srv.system().ensemble().members[0].input_elems_per_image();
+        let row = format!("[{}]", vec!["0.5"; elems].join(","));
+        let req = format!("{{\"images\":[{row}]}}");
+        let (code, _) = http_request(srv.addr(), "POST", "/v1/predict",
+                                     "application/json", req.as_bytes())
+            .unwrap();
+        assert_eq!(code, 200);
+
+        // the slow ring saw the completed request
+        let (code, body) = http_request(srv.addr(), "GET", "/v1/trace/slow", "", b"").unwrap();
+        assert_eq!(code, 200);
+        let j = Json::parse(std::str::from_utf8(&body).unwrap()).unwrap();
+        assert_eq!(j.get("slowest").unwrap().as_arr().unwrap().len(), 1);
+        assert_eq!(j.get("recent").unwrap().as_arr().unwrap().len(), 1);
+
+        // the export window is valid Chrome trace-event JSON with spans
+        let (code, body) = http_request(srv.addr(), "GET", "/v1/trace/export", "", b"")
+            .unwrap();
+        assert_eq!(code, 200);
+        let j = Json::parse(std::str::from_utf8(&body).unwrap()).unwrap();
+        let events = j.get("traceEvents").unwrap().as_arr().unwrap();
+        assert!(
+            events.iter().any(|e| e.get("ph").and_then(Json::as_str) == Some("X")),
+            "no span events in export"
+        );
+
+        // explicit off + clear drops the captured window
+        let (code, body) = http_request(srv.addr(), "POST", "/v1/trace/capture",
+                                        "application/json",
+                                        b"{\"capture\":false,\"clear\":true}")
+            .unwrap();
+        assert_eq!(code, 200);
+        let j = Json::parse(std::str::from_utf8(&body).unwrap()).unwrap();
+        assert_eq!(j.get("capture"), Some(&Json::Bool(false)));
+        assert_eq!(j.get("cleared"), Some(&Json::Bool(true)));
+        assert!(!srv.system().metrics().trace.capture_enabled());
     }
 
     #[test]

@@ -20,6 +20,9 @@ use crate::engine::InferenceSystem;
 struct PendingReq {
     x: Vec<f32>,
     nb_images: usize,
+    /// Enqueue stamp (µs since the system trace hub's epoch) — the
+    /// start of this request's batcher-wait span.
+    t_enq_us: u64,
     done: SyncSender<anyhow::Result<Vec<f32>>>,
 }
 
@@ -77,6 +80,7 @@ impl AdaptiveBatcher {
         anyhow::ensure!(nb_images > 0, "empty request");
         anyhow::ensure!(x.len() % nb_images == 0, "ragged request");
         let (tx, rx) = std::sync::mpsc::sync_channel(1);
+        let t_enq_us = self.system.metrics().trace.now_us();
         {
             let mut st = self.state.lock().unwrap();
             anyhow::ensure!(!st.closed, "batcher shut down");
@@ -84,7 +88,7 @@ impl AdaptiveBatcher {
             if st.oldest.is_none() {
                 st.oldest = Some(Instant::now());
             }
-            st.queue.push(PendingReq { x, nb_images, done: tx });
+            st.queue.push(PendingReq { x, nb_images, t_enq_us, done: tx });
             self.kick.notify_all();
         }
         rx.recv().map_err(|_| anyhow::anyhow!("batcher dropped request"))?
@@ -139,6 +143,12 @@ impl AdaptiveBatcher {
     }
 
     fn flush(&self, batch: Vec<PendingReq>) {
+        // each client request's queue wait ends at this flush
+        let trace = &self.system.metrics().trace;
+        let now = trace.now_us();
+        for r in &batch {
+            trace.record_batcher_wait(r.t_enq_us, now.saturating_sub(r.t_enq_us));
+        }
         // concatenate rows (all requests must share the row length)
         let elems = batch[0].x.len() / batch[0].nb_images;
         let total: usize = batch.iter().map(|r| r.nb_images).sum();

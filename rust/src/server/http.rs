@@ -6,7 +6,7 @@
 use std::collections::BTreeMap;
 use std::io::{BufRead, BufReader, Read, Write};
 use std::net::{TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::Arc;
 use std::time::Duration;
 
@@ -62,6 +62,11 @@ impl Response {
 
 /// Request handler: pure function of the request.
 pub type Handler = Arc<dyn Fn(&Request) -> Response + Send + Sync>;
+
+/// Monotonic fallback id for requests arriving without an
+/// `x-request-id` header. Server-wide, so an id seen in a trace or a
+/// log line can be grepped across connections.
+static NEXT_REQUEST_ID: AtomicU64 = AtomicU64::new(1);
 
 /// The server: a listener + handler pool.
 pub struct HttpServer {
@@ -171,7 +176,7 @@ fn serve_connection(stream: TcpStream, handler: Handler) -> anyhow::Result<()> {
     let mut stream = stream;
 
     loop {
-        let req = match read_request(&mut reader) {
+        let mut req = match read_request(&mut reader) {
             Ok(Some(r)) => r,
             Ok(None) => return Ok(()), // clean close
             Err(ReadError::TooLarge(len)) => {
@@ -181,7 +186,7 @@ fn serve_connection(stream: TcpStream, handler: Handler) -> anyhow::Result<()> {
                     413,
                     &format!("payload too large: {len} bytes (limit {MAX_BODY})"),
                 );
-                let _ = write_response(&mut stream, &resp, false);
+                let _ = write_response(&mut stream, &resp, false, None);
                 return Ok(());
             }
             Err(ReadError::HeadersTooLarge) => {
@@ -189,22 +194,30 @@ fn serve_connection(stream: TcpStream, handler: Handler) -> anyhow::Result<()> {
                     431,
                     &format!("request line or headers too large (line limit {MAX_LINE})"),
                 );
-                let _ = write_response(&mut stream, &resp, false);
+                let _ = write_response(&mut stream, &resp, false, None);
                 return Ok(());
             }
             Err(ReadError::Malformed(e)) => {
                 let resp = Response::text(400, &format!("bad request: {e}"));
-                let _ = write_response(&mut stream, &resp, false);
+                let _ = write_response(&mut stream, &resp, false, None);
                 return Ok(());
             }
         };
+        // every request gets an id: a client-provided `x-request-id` is
+        // honored (and echoed back), otherwise one is minted here —
+        // handlers and traces can correlate on it
+        if !req.headers.contains_key("x-request-id") {
+            let id = NEXT_REQUEST_ID.fetch_add(1, Ordering::Relaxed);
+            req.headers.insert("x-request-id".into(), format!("req-{id}"));
+        }
+        let request_id = req.headers.get("x-request-id").cloned();
         let keep_alive = req
             .headers
             .get("connection")
             .map(|v| !v.eq_ignore_ascii_case("close"))
             .unwrap_or(true);
         let resp = handler(&req);
-        write_response(&mut stream, &resp, keep_alive)?;
+        write_response(&mut stream, &resp, keep_alive, request_id.as_deref())?;
         if !keep_alive {
             return Ok(());
         }
@@ -279,14 +292,27 @@ fn read_request(reader: &mut BufReader<TcpStream>) -> Result<Option<Request>, Re
     Ok(Some(Request { method, path, headers, body }))
 }
 
-fn write_response(stream: &mut TcpStream, resp: &Response, keep_alive: bool) -> anyhow::Result<()> {
-    let head = format!(
-        "HTTP/1.1 {}\r\ncontent-type: {}\r\ncontent-length: {}\r\nconnection: {}\r\n\r\n",
+fn write_response(
+    stream: &mut TcpStream,
+    resp: &Response,
+    keep_alive: bool,
+    request_id: Option<&str>,
+) -> anyhow::Result<()> {
+    let mut head = format!(
+        "HTTP/1.1 {}\r\ncontent-type: {}\r\ncontent-length: {}\r\nconnection: {}\r\n",
         resp.status_line(),
         resp.content_type,
         resp.body.len(),
         if keep_alive { "keep-alive" } else { "close" },
     );
+    if let Some(id) = request_id {
+        // header values come from the bounded line parser: no CR/LF can
+        // survive into `id`, so no header injection
+        head.push_str("x-request-id: ");
+        head.push_str(id);
+        head.push_str("\r\n");
+    }
+    head.push_str("\r\n");
     stream.write_all(head.as_bytes())?;
     stream.write_all(&resp.body)?;
     stream.flush()?;
@@ -463,6 +489,33 @@ mod tests {
         } // close without the remaining 995 bytes
         let (code, _) = http_request(srv.addr(), "GET", "/hello", "text/plain", b"").unwrap();
         assert_eq!(code, 200);
+    }
+
+    #[test]
+    fn responses_carry_request_ids() {
+        let srv = echo_server();
+        // no client id: the server mints one and echoes it
+        let mut stream = TcpStream::connect(srv.addr()).unwrap();
+        stream
+            .write_all(b"GET /hello HTTP/1.1\r\nhost: x\r\nconnection: close\r\n\r\n")
+            .unwrap();
+        let mut resp = Vec::new();
+        BufReader::new(stream).read_to_end(&mut resp).unwrap();
+        let text = String::from_utf8_lossy(&resp);
+        assert!(text.contains("x-request-id: req-"), "{text}");
+
+        // client-provided id is honored verbatim
+        let mut stream = TcpStream::connect(srv.addr()).unwrap();
+        stream
+            .write_all(
+                b"GET /hello HTTP/1.1\r\nhost: x\r\nx-request-id: abc-123\r\n\
+                  connection: close\r\n\r\n",
+            )
+            .unwrap();
+        let mut resp = Vec::new();
+        BufReader::new(stream).read_to_end(&mut resp).unwrap();
+        let text = String::from_utf8_lossy(&resp);
+        assert!(text.contains("x-request-id: abc-123"), "{text}");
     }
 
     #[test]

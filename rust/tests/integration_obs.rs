@@ -1,0 +1,226 @@
+//! Integration of the pipeline-tracing stack (`obs`) over deployed
+//! systems: the per-stage breakdown must account for the end-to-end
+//! latency, and the captured window must export as Chrome trace-event
+//! JSON that a viewer can load.
+
+use std::sync::Arc;
+
+use ensemble_serve::alloc::matrix::AllocationMatrix;
+use ensemble_serve::device::DeviceSet;
+use ensemble_serve::engine::{EngineOptions, InferenceSystem};
+use ensemble_serve::exec::fake::FakeExecutor;
+use ensemble_serve::exec::sim::SimExecutor;
+use ensemble_serve::model::{ensemble, EnsembleId};
+use ensemble_serve::server::http::http_request;
+use ensemble_serve::server::ApiServer;
+use ensemble_serve::util::json::Json;
+
+fn matrix_for(e: &ensemble_serve::model::Ensemble, devices: usize) -> AllocationMatrix {
+    let d = DeviceSet::hgx(devices);
+    let mut a = AllocationMatrix::zeroed(d.len(), e.len());
+    for m in 0..e.len() {
+        a.set(m % devices, m, 8);
+    }
+    a
+}
+
+/// §acceptance: the sum of the stage medians reported by `GET
+/// /v1/stages` accounts for >= 95 % of the end-to-end p50 on a
+/// sim-backend deployment. One member per GPU (no co-location, so no
+/// device-timeline serialization), and the time scale is chosen so the
+/// slowest member's predict runs ~18 ms — the middle of a ×2 histogram
+/// bucket — so bucket-bound quantiles on both sides stay comparable.
+#[test]
+fn stage_medians_account_for_e2e_p50() {
+    let e = ensemble(EnsembleId::Imn4);
+    let d = DeviceSet::hgx(4);
+    let slowest = e
+        .members
+        .iter()
+        .map(|m| m.predict_latency_ms(&d[0], 8))
+        .fold(0.0f64, f64::max);
+    let time_scale = slowest / 18.0;
+    let a = matrix_for(&e, 4);
+    let sys = Arc::new(
+        InferenceSystem::build(
+            &a,
+            &e,
+            SimExecutor::new(d, time_scale),
+            EngineOptions::default(),
+        )
+        .unwrap(),
+    );
+    let api = ApiServer::start(sys, "127.0.0.1:0", 2).unwrap();
+
+    let elems = api.system().ensemble().members[0].input_elems_per_image();
+    let row = format!("[{}]", vec!["0.5"; elems].join(","));
+    let body = format!(
+        "{{\"images\":[{}]}}",
+        vec![row.as_str(); 8].join(",")
+    );
+    for _ in 0..24 {
+        let (code, resp) = http_request(api.addr(), "POST", "/v1/predict",
+                                        "application/json", body.as_bytes())
+            .unwrap();
+        assert_eq!(code, 200, "{}", String::from_utf8_lossy(&resp));
+    }
+
+    let (code, body) = http_request(api.addr(), "GET", "/v1/stages", "", b"").unwrap();
+    assert_eq!(code, 200);
+    let j = Json::parse(std::str::from_utf8(&body).unwrap()).unwrap();
+    assert_eq!(j.get("e2e_count").unwrap().as_usize(), Some(24));
+    let e2e_p50 = j.get("e2e_p50_ms").unwrap().as_f64().unwrap();
+    assert!(e2e_p50 > 0.0);
+    let stages = j.get("stages").unwrap().as_arr().unwrap();
+    assert_eq!(stages.len(), ensemble_serve::obs::N_STAGES);
+    let sum: f64 = stages
+        .iter()
+        .map(|s| s.get("p50_ms").unwrap().as_f64().unwrap())
+        .sum();
+    assert!(
+        sum >= 0.95 * e2e_p50,
+        "stage medians {sum:.2} ms explain < 95 % of e2e p50 {e2e_p50:.2} ms: {j:?}"
+    );
+    // predict dominates this deployment by construction
+    let predict = stages
+        .iter()
+        .find(|s| s.get("stage").unwrap().as_str() == Some("predict"))
+        .unwrap();
+    let p = predict.get("p50_ms").unwrap().as_f64().unwrap();
+    assert!(p >= 0.5 * e2e_p50, "predict p50 {p:.2} ms vs e2e {e2e_p50:.2} ms");
+}
+
+/// Capture a window over the fake backend and check the Chrome
+/// trace-event document end to end: valid JSON, span events on the
+/// stage lanes, predict events mirrored onto a device lane, and the
+/// lane-naming metadata a viewer groups by.
+#[test]
+fn chrome_export_has_stage_and_device_lanes() {
+    let e = ensemble(EnsembleId::Imn4);
+    let a = matrix_for(&e, 2);
+    let sys = Arc::new(
+        InferenceSystem::build(
+            &a,
+            &e,
+            Arc::new(FakeExecutor::new(DeviceSet::hgx(2))),
+            EngineOptions::default(),
+        )
+        .unwrap(),
+    );
+    let api = ApiServer::start(sys, "127.0.0.1:0", 2).unwrap();
+
+    // enable capture over HTTP, then push traffic through
+    let (code, _) = http_request(api.addr(), "POST", "/v1/trace/capture",
+                                 "application/json", b"{\"capture\":true}")
+        .unwrap();
+    assert_eq!(code, 200);
+    let elems = api.system().ensemble().members[0].input_elems_per_image();
+    let row = format!("[{}]", vec!["0.5"; elems].join(","));
+    let body = format!("{{\"images\":[{row},{row}]}}");
+    for _ in 0..3 {
+        let (code, _) = http_request(api.addr(), "POST", "/v1/predict",
+                                     "application/json", body.as_bytes())
+            .unwrap();
+        assert_eq!(code, 200);
+    }
+
+    let (code, body) = http_request(api.addr(), "GET", "/v1/trace/export", "", b"").unwrap();
+    assert_eq!(code, 200);
+    let doc = Json::parse(std::str::from_utf8(&body).unwrap()).unwrap();
+    let events = doc.get("traceEvents").unwrap().as_arr().unwrap();
+    let spans: Vec<&Json> = events
+        .iter()
+        .filter(|ev| ev.get("ph").and_then(Json::as_str) == Some("X"))
+        .collect();
+    assert!(!spans.is_empty(), "no span events captured");
+    // every span carries a duration and a trace id argument
+    for s in &spans {
+        assert!(s.get("dur").is_some(), "{s:?}");
+        assert!(s.get("args").unwrap().get("trace").is_some(), "{s:?}");
+    }
+    // predict spans appear on the device process (pid 2) as well as the
+    // stage process (pid 1)
+    assert!(
+        spans.iter().any(|s| s.get("pid").unwrap().as_usize() == Some(2)),
+        "no device-lane predict span"
+    );
+    assert!(
+        spans.iter().any(|s| s.get("pid").unwrap().as_usize() == Some(1)),
+        "no stage-lane span"
+    );
+    // lane-naming metadata for the viewer
+    let metas: Vec<&Json> = events
+        .iter()
+        .filter(|ev| ev.get("ph").and_then(Json::as_str) == Some("M"))
+        .collect();
+    assert!(
+        metas.iter().any(|m| m.get("name").and_then(Json::as_str) == Some("process_name")),
+        "no process_name metadata"
+    );
+    assert!(
+        metas.iter().any(|m| m.get("name").and_then(Json::as_str) == Some("thread_name")),
+        "no thread_name metadata"
+    );
+}
+
+/// The slow-trace ring over HTTP: slowest and recent windows fill, the
+/// per-stage millisecond breakdown is present, and the capture toggle
+/// round-trips (histograms keep recording with capture off).
+#[test]
+fn slow_ring_and_capture_toggle() {
+    let e = ensemble(EnsembleId::Imn4);
+    let a = matrix_for(&e, 2);
+    let sys = Arc::new(
+        InferenceSystem::build(
+            &a,
+            &e,
+            Arc::new(FakeExecutor::new(DeviceSet::hgx(2))),
+            EngineOptions::default(),
+        )
+        .unwrap(),
+    );
+    let api = ApiServer::start(sys, "127.0.0.1:0", 2).unwrap();
+    let elems = api.system().ensemble().members[0].input_elems_per_image();
+    let row = format!("[{}]", vec!["0.5"; elems].join(","));
+    let body = format!("{{\"images\":[{row}]}}");
+    for _ in 0..5 {
+        let (code, _) = http_request(api.addr(), "POST", "/v1/predict",
+                                     "application/json", body.as_bytes())
+            .unwrap();
+        assert_eq!(code, 200);
+    }
+
+    let (code, body) = http_request(api.addr(), "GET", "/v1/trace/slow", "", b"").unwrap();
+    assert_eq!(code, 200);
+    let j = Json::parse(std::str::from_utf8(&body).unwrap()).unwrap();
+    let slowest = j.get("slowest").unwrap().as_arr().unwrap();
+    let recent = j.get("recent").unwrap().as_arr().unwrap();
+    assert_eq!(slowest.len(), 5);
+    assert_eq!(recent.len(), 5);
+    for t in slowest {
+        assert!(t.get("total_ms").unwrap().as_f64().unwrap() >= 0.0);
+        let stages = t.get("stages_ms").unwrap();
+        for name in ensemble_serve::obs::STAGE_NAMES {
+            assert!(stages.get(name).is_some(), "missing stage {name} in {t:?}");
+        }
+    }
+
+    // toggle without a body flips capture on, then off again
+    for expect in [true, false] {
+        let (code, body) = http_request(api.addr(), "POST", "/v1/trace/capture", "", b"")
+            .unwrap();
+        assert_eq!(code, 200);
+        let j = Json::parse(std::str::from_utf8(&body).unwrap()).unwrap();
+        assert_eq!(j.get("capture"), Some(&Json::Bool(expect)));
+    }
+    // histograms kept recording regardless of the event ring
+    let before = api.system().metrics().trace.stage(ensemble_serve::obs::Stage::Predict)
+        .count();
+    let (code, _) = http_request(api.addr(), "POST", "/v1/predict",
+                                 "application/json", body.as_bytes())
+        .unwrap();
+    assert_eq!(code, 200);
+    let after = api.system().metrics().trace.stage(ensemble_serve::obs::Stage::Predict)
+        .count();
+    assert_eq!(after, before + 1);
+}

@@ -633,3 +633,110 @@ fn operator_replan_during_a_drain_gap_is_a_typed_conflict() {
     // the active matrix or swaps — either way, no busy error)
     assert!(ctrl.reconfigure_now("post-gap replan").is_ok());
 }
+
+// ---------------------------------------------------------------------------
+// Observability across reconfiguration: the trace hub lives in
+// EngineMetrics, so stage histograms, the slow ring and the event
+// window must all survive generation swaps.
+
+#[test]
+fn tracing_survives_a_live_swap() {
+    use ensemble_serve::obs::Stage;
+
+    let e = ensemble(EnsembleId::Imn4);
+    let d = DeviceSet::hgx(4);
+    let mut a = AllocationMatrix::zeroed(d.len(), e.len());
+    for m in 0..e.len() {
+        a.set(m, m, 8);
+    }
+    let ex = SimExecutor::new(d.clone(), 20_000.0);
+    let sys = Arc::new(
+        InferenceSystem::build(&a, &e, ex, EngineOptions::default()).unwrap(),
+    );
+    let trace = &sys.metrics().trace;
+    trace.set_capture(true);
+
+    let elems = e.members[0].input_elems_per_image();
+    for _ in 0..4 {
+        sys.predict(vec![0.1; 8 * elems], 8).unwrap();
+    }
+    let predict_before = trace.stage(Stage::Predict).count();
+    assert_eq!(predict_before, 4);
+
+    // side-by-side live swap to a reshaped matrix
+    let mut b = AllocationMatrix::zeroed(d.len(), e.len());
+    for m in 0..e.len() {
+        b.set((m + 1) % 4, m, 8);
+    }
+    let report = sys.reconfigure_with(&b, SwapStrategy::SideBySide).unwrap();
+    assert_eq!(report.to_generation, 2);
+
+    for _ in 0..4 {
+        sys.predict(vec![0.1; 8 * elems], 8).unwrap();
+    }
+
+    // the histograms carried across the swap instead of resetting
+    assert_eq!(trace.stage(Stage::Predict).count(), predict_before + 4);
+    // the slow ring holds traces from BOTH generations
+    let (_, recent) = trace.slow_traces();
+    let gens: Vec<u64> = recent.iter().map(|t| t.generation()).collect();
+    assert!(gens.contains(&1), "no generation-1 traces: {gens:?}");
+    assert!(gens.contains(&2), "no generation-2 traces: {gens:?}");
+    // the swap left its instant marks in the exported window
+    let doc = trace.export_chrome();
+    assert!(doc.contains("\"name\":\"swap\""), "{doc}");
+    assert!(doc.contains("\"name\":\"generation\""), "{doc}");
+    let j = Json::parse(&doc).unwrap();
+    assert!(!j.get("traceEvents").unwrap().as_arr().unwrap().is_empty());
+}
+
+#[test]
+fn parked_requests_record_gate_wait_spans_across_the_gap() {
+    use ensemble_serve::obs::Stage;
+
+    let e = ensemble(EnsembleId::Imn1);
+    let (sys, _a) = tight_system(20_000.0);
+    let trace = &sys.metrics().trace;
+
+    let elems = e.members[0].input_elems_per_image();
+    sys.predict(vec![0.1; 8 * elems], 8).unwrap();
+    let gate_before = trace.stage(Stage::GateWait).count();
+
+    // clients keep arriving while the drain-then-build gap is open: the
+    // intake gate parks them and their wait lands in the gate_wait stage
+    let report = std::thread::scope(|s| {
+        for _ in 0..3 {
+            let sys = Arc::clone(&sys);
+            s.spawn(move || {
+                for _ in 0..6 {
+                    sys.predict(vec![0.1; 8 * elems], 8).unwrap();
+                }
+            });
+        }
+        std::thread::sleep(Duration::from_millis(2));
+        let mut b = AllocationMatrix::zeroed(sys.devices().len(), e.len());
+        b.set(0, 0, 16);
+        sys.reconfigure_with(&b, SwapStrategy::DrainThenBuild).unwrap()
+    });
+    assert_eq!(report.strategy, SwapStrategy::DrainThenBuild);
+    assert!(report.gap.is_some());
+    assert_eq!(sys.generation(), 2);
+
+    // every request (pre-gap, parked, post-gap) recorded a gate span
+    assert_eq!(trace.stage(Stage::GateWait).count(), gate_before + 18);
+    // parked requests actually waited: total_us sums measured waits
+    // (not bucket bounds), so any parked request shows up here
+    if report.parked > 0 {
+        let gap_ms = report.gap.unwrap().as_secs_f64() * 1e3;
+        assert!(
+            trace.stage(Stage::GateWait).total_us() > 0,
+            "parked {} requests across a {gap_ms:.1} ms gap but no \
+             gate_wait time was recorded",
+            report.parked
+        );
+    }
+    // the gap and swap left instant marks
+    let doc = trace.export_chrome();
+    assert!(doc.contains("\"name\":\"gap\""), "{doc}");
+    assert!(doc.contains("\"name\":\"swap\""), "{doc}");
+}
