@@ -18,8 +18,9 @@ use std::time::Instant;
 use ensemble_serve::alloc::matrix::AllocationMatrix;
 use ensemble_serve::benchkit::harness::{report, time_runs};
 use ensemble_serve::device::DeviceSet;
+use ensemble_serve::engine::arena::Rows;
 use ensemble_serve::engine::combine::{Average, CombineRule};
-use ensemble_serve::engine::queue::Fifo;
+use ensemble_serve::engine::queue::{Fifo, ShardedFifo};
 use ensemble_serve::engine::store::SharedStore;
 use ensemble_serve::engine::{EngineOptions, InferenceSystem};
 use ensemble_serve::exec::fake::FakeExecutor;
@@ -51,6 +52,49 @@ fn main() {
             h.join().unwrap();
         });
         let s = report("fifo: 200k msgs 1p/1c", &secs);
+        println!("  -> {:.2} M msg/s", n as f64 / s.median / 1e6);
+    }
+
+    // --- sharded FIFO throughput (4 producers, 4 consumers, 4 shards)
+    {
+        let per_producer = 50_000u64;
+        let threads = 4usize;
+        let secs = time_runs(1, 5, || {
+            let q: ShardedFifo<u64> = ShardedFifo::new(threads);
+            std::thread::scope(|s| {
+                let producers: Vec<_> = (0..threads)
+                    .map(|pid| {
+                        let q = q.clone();
+                        s.spawn(move || {
+                            for i in 0..per_producer {
+                                q.send_to(pid, i).unwrap();
+                            }
+                        })
+                    })
+                    .collect();
+                let consumers: Vec<_> = (0..threads)
+                    .map(|cid| {
+                        let q = q.clone();
+                        s.spawn(move || {
+                            let mut sum = 0u64;
+                            while let Some(v) = q.recv(cid) {
+                                sum += v;
+                            }
+                            sum
+                        })
+                    })
+                    .collect();
+                for p in producers {
+                    p.join().unwrap();
+                }
+                q.close(); // consumers drain the remainder, then see None
+                for c in consumers {
+                    std::hint::black_box(c.join().unwrap());
+                }
+            });
+        });
+        let n = per_producer * threads as u64;
+        let s = report("sharded fifo: 200k msgs 4p/4c/4sh", &secs);
         println!("  -> {:.2} M msg/s", n as f64 / s.median / 1e6);
     }
 
@@ -101,6 +145,19 @@ fn main() {
         });
         let s = report("batcher: copy 1024x1728 imgs in 8 segments", &secs);
         println!("  -> {:.2} GB/s", (x.len() * 4) as f64 / s.median / 1e9);
+
+        // the same fan-out as zero-copy arena views: O(1) per segment
+        let rows = Rows::from_vec(x);
+        let iters = 10_000;
+        let secs = time_runs(1, 5, || {
+            for _ in 0..iters {
+                for seg in 0..8 {
+                    std::hint::black_box(rows.slice(seg * 128 * 1728, 128 * 1728));
+                }
+            }
+        });
+        let s = report("batcher: 10k x 8-segment zero-copy Rows fan-out", &secs);
+        println!("  -> {:.1} ns/slice", s.median * 1e9 / (iters as f64 * 8.0));
     }
 
     // --- fake end-to-end: the §IV.A engine-only request
@@ -128,9 +185,18 @@ fn main() {
         let s = report("e2e fake: 1024 imgs x 12 models (12 workers)", &secs);
         println!("  -> {:.3} s/request (paper fake system: 0.035 s on 22 workers)",
                  s.median);
+        let ar = sys.arena_stats();
+        println!(
+            "  arena: {} fresh allocs, {} pool reuses ({:.0}% recycled)",
+            ar.allocs,
+            ar.reuses,
+            100.0 * ar.reuses as f64 / (ar.allocs + ar.reuses).max(1) as f64
+        );
         common::write_bench_json(&[
             ("e2e_1024_s", Json::Num(s.median)),
             ("throughput_img_s", Json::Num(1024.0 / s.median)),
+            ("arena_allocs", Json::Num(ar.allocs as f64)),
+            ("arena_reuses", Json::Num(ar.reuses as f64)),
         ]);
     }
 

@@ -7,9 +7,10 @@ use std::sync::mpsc::SyncSender;
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 
+use crate::engine::arena::{Arena, ArenaVec, Rows};
 use crate::engine::combine::CombineRule;
 use crate::engine::messages::AccMsg;
-use crate::engine::queue::Fifo;
+use crate::engine::queue::{Fifo, ShardedFifo};
 use crate::engine::segments;
 use crate::engine::store::SharedStore;
 use crate::metrics::EngineMetrics;
@@ -27,17 +28,20 @@ pub struct Registration {
     /// Trace id of the request ([`crate::obs::trace_id`]).
     pub trace_id: u64,
     /// Completion channel handed back to the caller of `predict`; the
-    /// accumulator returns the combined output together with the
-    /// request's aggregated pipeline spans.
-    pub done: SyncSender<(Vec<f32>, ReqSpans)>,
+    /// accumulator returns the combined output (a zero-copy [`Rows`]
+    /// view of an arena buffer) together with the request's aggregated
+    /// pipeline spans.
+    pub done: SyncSender<(Rows, ReqSpans)>,
 }
 
 struct Pending {
-    y: Vec<f32>,
+    /// The combined output, leased from the generation's arena; frozen
+    /// into [`Rows`] on completion.
+    y: ArenaVec,
     remaining: usize,
     classes: usize,
     spans: ReqSpans,
-    done: SyncSender<(Vec<f32>, ReqSpans)>,
+    done: SyncSender<(Rows, ReqSpans)>,
 }
 
 /// Startup rendezvous: build() waits here for all workers to report
@@ -107,32 +111,39 @@ impl StartupState {
 
 /// Spawn the accumulator thread.
 ///
-/// It consumes two FIFOs: `reg` (request registrations, from `predict`)
-/// and `acc` (prediction + control messages, from the workers). Draining
-/// `reg` first on each loop guarantees registrations precede predictions
-/// of the same request, because `predict` enqueues the registration before
-/// broadcasting any segment id.
+/// It consumes two queues: `reg` (request registrations, from `predict`)
+/// and `acc` (prediction + control messages, from the workers — sharded
+/// per producing worker, so senders never contend on one lock; the
+/// accumulator drains all shards via steal). Draining `reg` first on
+/// each loop guarantees registrations precede predictions of the same
+/// request, because `predict` enqueues the registration before
+/// broadcasting any segment id. Output buffers are leased from the
+/// generation's `arena` and handed to callers as frozen [`Rows`].
 pub fn spawn(
     reg: Fifo<Registration>,
-    acc: Fifo<AccMsg>,
+    acc: ShardedFifo<AccMsg>,
     rule: Arc<dyn CombineRule>,
     n_models: usize,
     segment_size: usize,
     store: Arc<SharedStore>,
     startup: Arc<StartupState>,
+    arena: Arc<Arena>,
     metrics: Arc<EngineMetrics>,
 ) -> JoinHandle<()> {
     std::thread::Builder::new()
         .name("accumulator".into())
         .spawn(move || {
             let mut pending: HashMap<u64, Pending> = HashMap::new();
-            while let Some(msg) = acc.recv() {
+            while let Some(msg) = acc.recv(0) {
                 // fold in any registrations that arrived meanwhile
                 while let Some(r) = reg.try_recv() {
+                    let n = r.nb_images * r.classes;
+                    let mut y = arena.take(n);
+                    y.resize(n, 0.0);
                     pending.insert(
                         r.req,
                         Pending {
-                            y: vec![0.0; r.nb_images * r.classes],
+                            y,
                             remaining: r.expected_msgs,
                             classes: r.classes,
                             spans: ReqSpans { trace_id: r.trace_id, ..ReqSpans::default() },
@@ -202,7 +213,7 @@ pub fn spawn(
                                 done.spans.combine_us,
                             );
                             // receiver may have given up (timeout): ignore
-                            let _ = done.done.send((done.y, done.spans));
+                            let _ = done.done.send((done.y.freeze(), done.spans));
                         }
                     }
                 }
@@ -221,9 +232,9 @@ mod tests {
     use std::sync::mpsc::sync_channel;
 
     fn setup(n_models: usize, seg: usize)
-        -> (Fifo<Registration>, Fifo<AccMsg>, Arc<SharedStore>, Arc<StartupState>, JoinHandle<()>) {
+        -> (Fifo<Registration>, ShardedFifo<AccMsg>, Arc<SharedStore>, Arc<StartupState>, JoinHandle<()>) {
         let reg = Fifo::unbounded();
-        let acc = Fifo::unbounded();
+        let acc = ShardedFifo::new(2);
         let store = SharedStore::new();
         let startup = StartupState::new();
         let h = spawn(
@@ -234,6 +245,7 @@ mod tests {
             seg,
             Arc::clone(&store),
             Arc::clone(&startup),
+            Arena::new(),
             Arc::new(EngineMetrics::default()),
         );
         (reg, acc, store, startup, h)
@@ -249,7 +261,7 @@ mod tests {
             .unwrap();
         // model 0: seg 0 (rows 0..2), seg 1 (row 2)
         let p = |seg, model, preds: Vec<f32>, n_rows| {
-            AccMsg::Pred(PredMsg { req, seg, model, worker: 0, preds, n_rows,
+            AccMsg::Pred(PredMsg { req, seg, model, worker: 0, preds: preds.into(), n_rows,
                                    seal_us: 7, predict_us: 11 })
         };
         acc.send(p(0, 0, vec![1.0, 0.0, 0.0, 1.0], 2)).unwrap();
@@ -257,7 +269,7 @@ mod tests {
         acc.send(p(0, 1, vec![0.0, 1.0, 1.0, 0.0], 2)).unwrap();
         acc.send(p(1, 0, vec![1.0, 0.0], 1)).unwrap();
         let (y, spans) = rx.recv().unwrap();
-        assert_eq!(y, vec![0.5, 0.5, 0.5, 0.5, 0.5, 0.5]);
+        assert_eq!(y.as_slice(), &[0.5, 0.5, 0.5, 0.5, 0.5, 0.5]);
         assert_eq!(spans.trace_id, crate::obs::trace_id(1, req));
         assert_eq!(spans.seal_us, 7, "seal = slowest member message");
         assert_eq!(spans.predict_us, 11);

@@ -1,0 +1,315 @@
+//! Per-generation buffer arena and the [`Rows`] view — the zero-copy
+//! backbone of the data plane (§II.B: "an efficient internal
+//! communication scheme to avoid overhead" between batching, prediction
+//! and combination).
+//!
+//! Every `f32` payload on the request path — client inputs in the shared
+//! store, per-segment prediction matrices in [`PredMsg`], the combined
+//! output handed back to `predict` — used to be an owned `Vec<f32>`,
+//! allocated fresh and copied at each hand-off. Now they are [`Rows`]:
+//! reference-counted slices into buffers leased from the generation's
+//! [`Arena`]. Fan-out (one request broadcast to every model's workers)
+//! and hand-off (worker → accumulator → caller) clone an `Arc` + two
+//! `usize`s instead of a prediction matrix.
+//!
+//! Ownership: the [`Generation`] holds the only strong `Arc<Arena>`;
+//! buffers keep a `Weak` back-reference. Dropping the generation (drain /
+//! teardown / swap) therefore reclaims the whole slab at once — leased
+//! buffers still in flight stay individually valid and are simply freed
+//! on their own drop instead of being pooled.
+//!
+//! [`PredMsg`]: crate::engine::messages::PredMsg
+//! [`Generation`]: crate::engine::generation::Generation
+
+use std::fmt;
+use std::ops::{Deref, DerefMut};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, Weak};
+
+/// Buffers kept for reuse per arena. Bounds worst-case idle memory to
+/// `cap × largest-buffer`; beyond it, returned buffers are freed.
+const DEFAULT_POOL_CAP: usize = 64;
+
+/// A recycling pool of `Vec<f32>` buffers. `take` prefers a pooled
+/// buffer whose capacity already fits (first fit), so steady-state
+/// serving reaches a fixed point where the hot path performs no heap
+/// allocation at all — the §Perf "reduced hot-path allocations" claim,
+/// measured by [`Arena::stats`] in `benches/engine_hotpath.rs`.
+pub struct Arena {
+    pool: Mutex<Vec<Vec<f32>>>,
+    pool_cap: usize,
+    allocs: AtomicU64,
+    reuses: AtomicU64,
+}
+
+/// Cumulative `(fresh allocations, pooled reuses)` of an arena.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ArenaStats {
+    pub allocs: u64,
+    pub reuses: u64,
+}
+
+impl Arena {
+    pub fn new() -> Arc<Arena> {
+        Self::with_pool_cap(DEFAULT_POOL_CAP)
+    }
+
+    pub fn with_pool_cap(pool_cap: usize) -> Arc<Arena> {
+        Arc::new(Arena {
+            pool: Mutex::new(Vec::new()),
+            pool_cap,
+            allocs: AtomicU64::new(0),
+            reuses: AtomicU64::new(0),
+        })
+    }
+
+    /// Lease an empty buffer with capacity >= `cap`. The buffer returns
+    /// to this arena's pool when the [`ArenaVec`] drops (unless the
+    /// arena itself is gone by then).
+    pub fn take(self: &Arc<Self>, cap: usize) -> ArenaVec {
+        let reused = {
+            let mut pool = self.pool.lock().unwrap();
+            let fit = pool.iter().position(|b| b.capacity() >= cap);
+            fit.map(|i| pool.swap_remove(i))
+        };
+        let buf = match reused {
+            Some(mut b) => {
+                self.reuses.fetch_add(1, Ordering::Relaxed);
+                b.clear();
+                b
+            }
+            None => {
+                self.allocs.fetch_add(1, Ordering::Relaxed);
+                Vec::with_capacity(cap)
+            }
+        };
+        ArenaVec { buf, home: Arc::downgrade(self) }
+    }
+
+    fn put_back(&self, buf: Vec<f32>) {
+        if buf.capacity() == 0 {
+            return;
+        }
+        let mut pool = self.pool.lock().unwrap();
+        if pool.len() < self.pool_cap {
+            pool.push(buf);
+        }
+    }
+
+    pub fn stats(&self) -> ArenaStats {
+        ArenaStats {
+            allocs: self.allocs.load(Ordering::Relaxed),
+            reuses: self.reuses.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Buffers currently idle in the pool.
+    pub fn pooled(&self) -> usize {
+        self.pool.lock().unwrap().len()
+    }
+}
+
+/// A mutable buffer leased from an [`Arena`]. Derefs to `Vec<f32>`, so
+/// the usual `resize`/`extend_from_slice` building patterns apply; on
+/// drop the backing storage returns to the arena's pool. [`freeze`]
+/// turns it into an immutable, cheaply cloneable [`Rows`] view.
+///
+/// [`freeze`]: ArenaVec::freeze
+pub struct ArenaVec {
+    buf: Vec<f32>,
+    home: Weak<Arena>,
+}
+
+impl ArenaVec {
+    /// Wrap a plain `Vec` not backed by any arena (it frees normally on
+    /// drop). Entry point for client-owned inputs.
+    pub fn detached(buf: Vec<f32>) -> ArenaVec {
+        ArenaVec { buf, home: Weak::new() }
+    }
+
+    /// Freeze into an immutable shareable view of the whole buffer.
+    pub fn freeze(self) -> Rows {
+        let len = self.buf.len();
+        Rows { buf: Arc::new(self), off: 0, len }
+    }
+}
+
+impl Deref for ArenaVec {
+    type Target = Vec<f32>;
+    fn deref(&self) -> &Vec<f32> {
+        &self.buf
+    }
+}
+
+impl DerefMut for ArenaVec {
+    fn deref_mut(&mut self) -> &mut Vec<f32> {
+        &mut self.buf
+    }
+}
+
+impl Drop for ArenaVec {
+    fn drop(&mut self) {
+        if let Some(arena) = self.home.upgrade() {
+            arena.put_back(std::mem::take(&mut self.buf));
+        }
+    }
+}
+
+impl fmt::Debug for ArenaVec {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "ArenaVec(len={}, cap={})", self.buf.len(), self.buf.capacity())
+    }
+}
+
+/// An immutable, reference-counted view of `f32` rows. Cloning and
+/// re-slicing are O(1); the backing buffer is freed (or returned to its
+/// arena) when the last view drops.
+pub struct Rows {
+    buf: Arc<ArenaVec>,
+    off: usize,
+    len: usize,
+}
+
+impl Clone for Rows {
+    fn clone(&self) -> Rows {
+        Rows { buf: Arc::clone(&self.buf), off: self.off, len: self.len }
+    }
+}
+
+impl Rows {
+    /// Adopt a plain `Vec` (no arena; zero-copy).
+    pub fn from_vec(v: Vec<f32>) -> Rows {
+        ArenaVec::detached(v).freeze()
+    }
+
+    pub fn as_slice(&self) -> &[f32] {
+        &self.buf.buf[self.off..self.off + self.len]
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Sub-view of `len` elements starting at `off` (relative to this
+    /// view). O(1): shares the backing buffer.
+    pub fn slice(&self, off: usize, len: usize) -> Rows {
+        assert!(off + len <= self.len, "slice {off}+{len} out of {}", self.len);
+        Rows { buf: Arc::clone(&self.buf), off: self.off + off, len }
+    }
+
+    /// Extract an owned `Vec`. Zero-copy when this is the last view of
+    /// the whole buffer (the buffer is *stolen* from its arena — the
+    /// final hand-off to a client); otherwise copies just this range.
+    pub fn into_vec(self) -> Vec<f32> {
+        if self.off == 0 && self.len == self.buf.buf.len() {
+            match Arc::try_unwrap(self.buf) {
+                Ok(mut owner) => return std::mem::take(&mut owner.buf),
+                Err(shared) => return shared.buf[..self.len].to_vec(),
+            }
+        }
+        self.buf.buf[self.off..self.off + self.len].to_vec()
+    }
+}
+
+impl Deref for Rows {
+    type Target = [f32];
+    fn deref(&self) -> &[f32] {
+        self.as_slice()
+    }
+}
+
+impl From<Vec<f32>> for Rows {
+    fn from(v: Vec<f32>) -> Rows {
+        Rows::from_vec(v)
+    }
+}
+
+impl fmt::Debug for Rows {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "Rows(off={}, len={})", self.off, self.len)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn take_freeze_slice_roundtrip() {
+        let arena = Arena::new();
+        let mut v = arena.take(6);
+        v.extend_from_slice(&[1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        let rows = v.freeze();
+        assert_eq!(rows.as_slice(), &[1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        let mid = rows.slice(2, 3);
+        assert_eq!(mid.as_slice(), &[3.0, 4.0, 5.0]);
+        let sub = mid.slice(1, 2);
+        assert_eq!(sub.as_slice(), &[4.0, 5.0]);
+        assert_eq!(&rows[..2], &[1.0, 2.0], "deref to slice");
+    }
+
+    #[test]
+    fn buffers_recycle_through_pool() {
+        let arena = Arena::with_pool_cap(4);
+        let first = arena.take(1024);
+        assert_eq!(arena.stats(), ArenaStats { allocs: 1, reuses: 0 });
+        drop(first);
+        assert_eq!(arena.pooled(), 1);
+        let again = arena.take(512); // first fit: the 1024-cap buffer
+        assert_eq!(arena.stats(), ArenaStats { allocs: 1, reuses: 1 });
+        assert!(again.capacity() >= 1024);
+        assert_eq!(arena.pooled(), 0);
+    }
+
+    #[test]
+    fn pool_cap_bounds_idle_memory() {
+        let arena = Arena::with_pool_cap(2);
+        let bufs: Vec<ArenaVec> = (0..5).map(|_| arena.take(8)).collect();
+        drop(bufs);
+        assert_eq!(arena.pooled(), 2, "excess buffers freed, not pooled");
+    }
+
+    #[test]
+    fn generation_drop_reclaims_wholesale() {
+        let arena = Arena::new();
+        let mut v = arena.take(4);
+        v.push(7.0);
+        let rows = v.freeze();
+        drop(arena); // the generation went away with views still live
+        assert_eq!(rows.as_slice(), &[7.0], "outstanding views stay valid");
+        drop(rows); // frees normally: the Weak back-reference is dead
+    }
+
+    #[test]
+    fn into_vec_steals_when_sole_owner() {
+        let arena = Arena::new();
+        let mut v = arena.take(3);
+        v.extend_from_slice(&[1.0, 2.0, 3.0]);
+        let rows = v.freeze();
+        let out = rows.into_vec();
+        assert_eq!(out, vec![1.0, 2.0, 3.0]);
+        // stolen, not recycled: the arena never saw the buffer back
+        assert_eq!(arena.pooled(), 0);
+    }
+
+    #[test]
+    fn into_vec_copies_when_shared_or_partial() {
+        let rows = Rows::from_vec(vec![1.0, 2.0, 3.0, 4.0]);
+        let tail = rows.slice(2, 2);
+        assert_eq!(tail.clone().into_vec(), vec![3.0, 4.0]);
+        assert_eq!(rows.clone().into_vec(), vec![1.0, 2.0, 3.0, 4.0]);
+        drop((rows, tail));
+    }
+
+    #[test]
+    fn detached_vecs_free_normally() {
+        let rows: Rows = vec![0.5; 10].into();
+        assert_eq!(rows.len(), 10);
+        assert!(!rows.is_empty());
+        drop(rows); // no arena involved; must not panic or leak pool state
+    }
+}

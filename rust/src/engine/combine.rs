@@ -21,16 +21,42 @@ pub trait CombineRule: Send + Sync + 'static {
     fn name(&self) -> &'static str;
 }
 
+/// Fixed chunk width of the vectorized fold. 8 f32 lanes = one AVX2
+/// register; the compiler maps narrower ISAs to two ops.
+const LANES: usize = 8;
+
+/// The shared fold kernel: `y[i] += p[i] * a` over fixed-width chunks
+/// with a scalar tail. `chunks_exact` gives the compiler provably
+/// uniform trip counts, so the inner loop autovectorizes without any
+/// per-element bounds checks or indirection (§Perf).
+///
+/// Bit-exact by construction: each element's operation — one multiply,
+/// one add, in the same order per element — is identical to the scalar
+/// `for (yi, pi) in y.iter_mut().zip(p)` loop it replaces; elements are
+/// independent, so chunking cannot reassociate anything.
+#[inline]
+fn axpy(y: &mut [f32], p: &[f32], a: f32) {
+    let n = y.len().min(p.len());
+    let split = n - n % LANES;
+    let (y_main, y_tail) = y[..n].split_at_mut(split);
+    let (p_main, p_tail) = p[..n].split_at(split);
+    for (yc, pc) in y_main.chunks_exact_mut(LANES).zip(p_main.chunks_exact(LANES)) {
+        for i in 0..LANES {
+            yc[i] += pc[i] * a;
+        }
+    }
+    for (yi, pi) in y_tail.iter_mut().zip(p_tail) {
+        *yi += *pi * a;
+    }
+}
+
 /// The paper's rule: `Y += P / M`.
 pub struct Average;
 
 impl CombineRule for Average {
     fn accumulate(&self, y: &mut [f32], p: &[f32], _idx: usize,
                   n_models: usize, _classes: usize) {
-        let inv = 1.0 / n_models as f32;
-        for (yi, pi) in y.iter_mut().zip(p) {
-            *yi += pi * inv;
-        }
+        axpy(y, p, 1.0 / n_models as f32);
     }
 
     fn name(&self) -> &'static str {
@@ -57,10 +83,7 @@ impl WeightedAverage {
 impl CombineRule for WeightedAverage {
     fn accumulate(&self, y: &mut [f32], p: &[f32], idx: usize,
                   _n_models: usize, _classes: usize) {
-        let w = self.weights[idx] / self.total;
-        for (yi, pi) in y.iter_mut().zip(p) {
-            *yi += pi * w;
-        }
+        axpy(y, p, self.weights[idx] / self.total);
     }
 
     fn name(&self) -> &'static str {
@@ -70,19 +93,33 @@ impl CombineRule for WeightedAverage {
 
 /// Majority voting: each model votes for its argmax class; `finalize`
 /// normalizes vote counts into a distribution over classes.
+///
+/// NaN scores are *abstentions*: a NaN class score is skipped in the
+/// argmax (a broken logit should not outrank real ones), and a row
+/// whose scores are all NaN casts no vote at all. Ties keep the
+/// pre-refactor `Iterator::max_by` semantics — the **last** maximal
+/// class wins — so non-NaN inputs are bit-identical to the old rule.
 pub struct MajorityVote;
 
 impl CombineRule for MajorityVote {
     fn accumulate(&self, y: &mut [f32], p: &[f32], _idx: usize,
                   _n_models: usize, classes: usize) {
         for (yrow, prow) in y.chunks_mut(classes).zip(p.chunks(classes)) {
-            let argmax = prow
-                .iter()
-                .enumerate()
-                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
-                .map(|(i, _)| i)
-                .unwrap_or(0);
-            yrow[argmax] += 1.0;
+            let mut best: Option<(usize, f32)> = None;
+            for (i, &v) in prow.iter().enumerate() {
+                if v.is_nan() {
+                    continue; // abstain on this class score
+                }
+                match best {
+                    // strictly worse: keep the incumbent; `>=` updates
+                    // on ties = last-max-wins, as `max_by` did
+                    Some((_, b)) if v < b => {}
+                    _ => best = Some((i, v)),
+                }
+            }
+            if let Some((argmax, _)) = best {
+                yrow[argmax] += 1.0;
+            }
         }
     }
 
@@ -161,6 +198,46 @@ mod tests {
         assert!((y[2] - 2.0 / 3.0).abs() < 1e-6);
         assert!((y[0] - 1.0 / 3.0).abs() < 1e-6);
         assert_eq!(y[1], 0.0);
+    }
+
+    #[test]
+    fn majority_vote_nan_abstains() {
+        let rule = MajorityVote;
+        let mut y = vec![0.0; C];
+        // NaN best score: the vote goes to the best *real* score
+        rule.accumulate(&mut y, &[0.1, f32::NAN, 0.3], 0, 3, C);
+        // all-NaN row: no vote cast, no panic
+        rule.accumulate(&mut y, &[f32::NAN, f32::NAN, f32::NAN], 1, 3, C);
+        // untouched voter
+        rule.accumulate(&mut y, &[0.9, 0.05, 0.05], 2, 3, C);
+        assert_eq!(y, vec![1.0, 0.0, 1.0], "one abstention, two votes");
+    }
+
+    #[test]
+    fn majority_vote_tie_keeps_last_max() {
+        // pre-refactor max_by returned the LAST maximal element on ties
+        let rule = MajorityVote;
+        let mut y = vec![0.0; C];
+        rule.accumulate(&mut y, &[0.5, 0.5, 0.2], 0, 1, C);
+        assert_eq!(y, vec![0.0, 1.0, 0.0], "tie broken toward the later class");
+    }
+
+    #[test]
+    fn axpy_chunked_matches_scalar_bitwise() {
+        // odd length exercises main chunks + tail; awkward values make
+        // rounding visible if the kernel ever reassociated
+        let n = LANES * 3 + 5;
+        let p: Vec<f32> = (0..n).map(|i| (i as f32 * 0.7).sin() / 3.0).collect();
+        let a = 1.0 / 7.0f32;
+        let mut y_chunked: Vec<f32> = (0..n).map(|i| (i as f32).cos()).collect();
+        let mut y_scalar = y_chunked.clone();
+        axpy(&mut y_chunked, &p, a);
+        for (yi, pi) in y_scalar.iter_mut().zip(&p) {
+            *yi += *pi * a;
+        }
+        for i in 0..n {
+            assert_eq!(y_chunked[i].to_bits(), y_scalar[i].to_bits(), "elem {i}");
+        }
     }
 
     #[test]

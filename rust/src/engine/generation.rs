@@ -22,8 +22,9 @@ use anyhow::{bail, Context};
 
 use crate::alloc::matrix::AllocationMatrix;
 use crate::engine::accumulator::{self, Registration, StartupState};
+use crate::engine::arena::{Arena, ArenaStats, Rows};
 use crate::engine::messages::{AccMsg, WorkerMsg};
-use crate::engine::queue::Fifo;
+use crate::engine::queue::{Fifo, ShardedFifo};
 use crate::engine::segments;
 use crate::engine::store::SharedStore;
 use crate::engine::system::EngineOptions;
@@ -45,11 +46,18 @@ pub struct Generation {
     segment_size: usize,
     store: Arc<SharedStore>,
     startup: Arc<StartupState>,
+    /// The generation's buffer pool: holder of the only strong handle,
+    /// so teardown reclaims the whole slab at once (leased buffers
+    /// still in flight free individually — see [`crate::engine::arena`]).
+    arena: Arc<Arena>,
     // channels
     broadcast: Fifo<BroadcastJob>,
     reg: Fifo<Registration>,
-    model_inputs: Vec<Fifo<WorkerMsg>>,
-    acc_q: Fifo<AccMsg>,
+    /// Per-model segment-id queues, sharded one lane per data-parallel
+    /// worker (steal-on-empty keeps the work-sharing semantics).
+    model_inputs: Vec<ShardedFifo<WorkerMsg>>,
+    /// Prediction queue, sharded one lane per producing worker.
+    acc_q: ShardedFifo<AccMsg>,
     // threads (Mutex-held so `teardown` works through `&self`: dead-
     // generation recovery frees the pool's devices while the generation
     // is still routed — see `InferenceSystem::reconfigure`)
@@ -87,10 +95,18 @@ impl Generation {
 
         let store = SharedStore::new();
         let startup = StartupState::new();
+        let arena = Arena::new();
 
-        let model_inputs: Vec<Fifo<WorkerMsg>> =
-            (0..ensemble.len()).map(|_| Fifo::unbounded()).collect();
-        let acc_q: Fifo<AccMsg> = Fifo::unbounded();
+        // one input lane per data-parallel worker of each model; one
+        // prediction lane per worker overall
+        let placements = matrix.placements();
+        let mut model_worker_counts = vec![0usize; ensemble.len()];
+        for p in &placements {
+            model_worker_counts[p.model] += 1;
+        }
+        let model_inputs: Vec<ShardedFifo<WorkerMsg>> =
+            model_worker_counts.iter().map(|&n| ShardedFifo::new(n)).collect();
+        let acc_q: ShardedFifo<AccMsg> = ShardedFifo::new(placements.len());
         let reg: Fifo<Registration> = Fifo::unbounded();
 
         // accumulator
@@ -102,12 +118,13 @@ impl Generation {
             opts.segment_size,
             Arc::clone(&store),
             Arc::clone(&startup),
+            Arc::clone(&arena),
             Arc::clone(&metrics),
         );
 
         // worker pool
-        let placements = matrix.placements();
         let mut workers = Vec::with_capacity(placements.len());
+        let mut next_home = vec![0usize; ensemble.len()];
         for (wid, p) in placements.iter().enumerate() {
             let spec = WorkerSpec {
                 id: wid,
@@ -118,12 +135,16 @@ impl Generation {
                 segment_size: opts.segment_size,
                 generation: id,
             };
+            let input_home = next_home[p.model];
+            next_home[p.model] += 1;
             workers.push(worker::spawn(
                 spec,
                 Arc::clone(&executor),
                 model_inputs[p.model].clone(),
+                input_home,
                 Arc::clone(&store),
                 acc_q.clone(),
+                Arc::clone(&arena),
                 opts.stage_capacity,
                 Arc::clone(&metrics),
             ));
@@ -171,6 +192,7 @@ impl Generation {
             segment_size: opts.segment_size,
             store,
             startup: Arc::clone(&startup),
+            arena,
             broadcast,
             reg,
             model_inputs,
@@ -252,12 +274,12 @@ impl Generation {
     /// aggregated pipeline spans ([`crate::obs::ReqSpans`]).
     pub fn predict(
         &self,
-        x: Vec<f32>,
+        x: Rows,
         nb_images: usize,
-    ) -> anyhow::Result<(Vec<f32>, crate::obs::ReqSpans)> {
+    ) -> anyhow::Result<(Rows, crate::obs::ReqSpans)> {
         let classes = self.ensemble.classes();
         if nb_images == 0 {
-            return Ok((Vec::new(), crate::obs::ReqSpans::default()));
+            return Ok((Rows::from_vec(Vec::new()), crate::obs::ReqSpans::default()));
         }
         if x.len() % nb_images != 0 {
             bail!("input length {} not divisible by {nb_images} images", x.len());
@@ -323,6 +345,11 @@ impl Generation {
     /// `predict` calls currently routed through this generation.
     pub fn in_flight(&self) -> u64 {
         self.in_flight.load(Ordering::Acquire)
+    }
+
+    /// Allocation/reuse counters of this generation's buffer arena.
+    pub fn arena_stats(&self) -> ArenaStats {
+        self.arena.stats()
     }
 
     /// First worker error seen, if any.

@@ -17,6 +17,8 @@ pub enum WorkerMsg {
     // segments drain first, exactly like a -1 posted after real ids.
 }
 
+use crate::engine::arena::Rows;
+
 /// One segment of predictions from a worker (paper: the triplet {s, m, P}).
 #[derive(Debug, Clone)]
 pub struct PredMsg {
@@ -27,8 +29,10 @@ pub struct PredMsg {
     pub model: usize,
     /// Worker id (diagnostics; the accumulator only needs `m`).
     pub worker: usize,
-    /// Prediction matrix `P`, `n_rows × classes`, row-major.
-    pub preds: Vec<f32>,
+    /// Prediction matrix `P`, `n_rows × classes`, row-major — a
+    /// zero-copy view into an arena buffer, so cloning the message (or
+    /// handing it through the prediction FIFO) never copies the matrix.
+    pub preds: Rows,
     pub n_rows: usize,
     /// Batch-formation span of this segment, µs (broadcast → last chunk
     /// handed to the predictor).
@@ -56,7 +60,7 @@ mod tests {
     #[test]
     fn pred_msg_shape() {
         let m = PredMsg { req: 1, seg: 2, model: 3, worker: 4,
-                          preds: vec![0.5; 6], n_rows: 2,
+                          preds: vec![0.5; 6].into(), n_rows: 2,
                           seal_us: 10, predict_us: 20 };
         assert_eq!(m.preds.len() / m.n_rows, 3, "3 classes");
     }

@@ -26,6 +26,7 @@
 //! down); each worker reports `{-2, None, None}` when ready, and
 //! [`system::InferenceSystem::build`] returns only once all workers did.
 
+pub mod arena;
 pub mod queue;
 pub mod segments;
 pub mod messages;
@@ -36,6 +37,7 @@ pub mod accumulator;
 pub mod generation;
 pub mod system;
 
+pub use arena::{Arena, ArenaStats, Rows};
 pub use combine::CombineRule;
 pub use generation::Generation;
 pub use system::{EngineOptions, InferenceSystem, SwapReport, SwapStrategy};

@@ -5,8 +5,20 @@
 //! Unlike std::sync::mpsc these support *multiple consumers*: the
 //! data-parallel workers of one model all pull segment ids from the same
 //! input FIFO (§II.B.2), which is exactly MPMC work-stealing.
+//!
+//! Two flavors share the send/recv/close drain contract:
+//!
+//! * [`Fifo`] — one `Mutex<VecDeque>` + condvars, with optional bounded
+//!   capacity. Used for the 1-producer/1-consumer stage queues inside a
+//!   worker (where backpressure matters) and the low-rate control
+//!   channels (registrations, broadcast jobs).
+//! * [`ShardedFifo`] — per-consumer shards with steal-on-empty and
+//!   batched wakeups. Used on the fan-out/fan-in hot paths
+//!   (broadcaster → workers, workers → accumulator), where a single
+//!   lock would serialize every data-parallel worker of a model.
 
 use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 
 struct Inner<T> {
@@ -95,21 +107,44 @@ impl<T> Fifo<T> {
         }
     }
 
-    /// Send a whole batch under one lock acquisition (broadcast fan-out
-    /// hot path). Only valid for unbounded FIFOs (capacity would need
-    /// piecewise blocking).
+    /// Send a whole batch, amortizing lock acquisitions (broadcast
+    /// fan-out hot path). On an unbounded FIFO every item goes in under
+    /// a single lock; on a bounded FIFO the batch is enqueued
+    /// *piecewise*, blocking whenever the queue is full — capacity is
+    /// honored item by item, never exceeded. If the channel closes
+    /// mid-batch, items already enqueued stay receivable (the drain
+    /// contract) and the remainder is dropped with `Err(Closed)`.
     pub fn send_all<I: IntoIterator<Item = T>>(&self, items: I) -> Result<usize, Closed> {
+        let mut items = items.into_iter();
+        let mut sent = 0usize;
         let mut st = self.inner.q.lock().unwrap();
-        if st.closed {
-            return Err(Closed);
+        for item in &mut items {
+            loop {
+                if st.closed {
+                    drop(st);
+                    if sent > 0 {
+                        self.inner.not_empty.notify_all();
+                    }
+                    return Err(Closed);
+                }
+                match st.capacity {
+                    Some(cap) if st.items.len() >= cap => {
+                        // let consumers at what's queued so far, then
+                        // wait for room
+                        self.inner.not_empty.notify_all();
+                        st = self.inner.not_full.wait(st).unwrap();
+                    }
+                    _ => break,
+                }
+            }
+            st.items.push_back(item);
+            sent += 1;
         }
-        assert!(st.capacity.is_none(), "send_all requires an unbounded FIFO");
-        let before = st.items.len();
-        st.items.extend(items);
-        let added = st.items.len() - before;
         drop(st);
-        self.inner.not_empty.notify_all();
-        Ok(added)
+        if sent > 0 {
+            self.inner.not_empty.notify_all();
+        }
+        Ok(sent)
     }
 
     /// Non-blocking receive.
@@ -140,6 +175,242 @@ impl<T> Fifo<T> {
 
     pub fn len(&self) -> usize {
         self.inner.q.lock().unwrap().items.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+// ---------------------------------------------------------------------
+// Sharded MPMC
+// ---------------------------------------------------------------------
+
+struct Shard<T> {
+    q: Mutex<VecDeque<T>>,
+}
+
+struct ShardedInner<T> {
+    shards: Box<[Shard<T>]>,
+    /// Set by `close` while holding *every* shard lock, so the store
+    /// happens-after all in-flight pushes (see `close` for the proof
+    /// obligations this discharges).
+    closed: AtomicBool,
+    /// Round-robin cursor for unpinned sends.
+    next: AtomicUsize,
+    /// Consumers with nothing visible park here; producers only take
+    /// this lock when `sleepers > 0`, so the uncontended fast path is
+    /// one shard lock + one atomic load.
+    sleep: Mutex<()>,
+    wake: Condvar,
+    sleepers: AtomicUsize,
+}
+
+/// Sharded MPMC FIFO: per-consumer input shards with steal-on-empty and
+/// batched wakeups. The low-contention replacement for [`Fifo`] on the
+/// two fan-in/fan-out hot paths (broadcaster → data-parallel workers,
+/// workers → accumulator), behind the same `send`/`recv`/`close` drain
+/// semantics the swap machinery depends on:
+///
+/// * `recv` returns `None` only once the queue is closed **and** every
+///   shard is drained;
+/// * a `send` that returned `Ok` is always receivable by the drain;
+/// * a `send` strictly after `close` returns `Err(Closed)`.
+///
+/// Always unbounded — backpressure stays on the *bounded* intra-worker
+/// stage [`Fifo`]s, which see exactly one producer and one consumer and
+/// gain nothing from sharding.
+pub struct ShardedFifo<T> {
+    inner: Arc<ShardedInner<T>>,
+}
+
+impl<T> Clone for ShardedFifo<T> {
+    fn clone(&self) -> Self {
+        ShardedFifo { inner: Arc::clone(&self.inner) }
+    }
+}
+
+impl<T> ShardedFifo<T> {
+    /// A queue with `n_shards` internal lanes (clamped to >= 1) —
+    /// typically one per consumer, passed to [`recv`](Self::recv) as
+    /// its `home`.
+    pub fn new(n_shards: usize) -> ShardedFifo<T> {
+        let shards: Vec<Shard<T>> = (0..n_shards.max(1))
+            .map(|_| Shard { q: Mutex::new(VecDeque::new()) })
+            .collect();
+        ShardedFifo {
+            inner: Arc::new(ShardedInner {
+                shards: shards.into_boxed_slice(),
+                closed: AtomicBool::new(false),
+                next: AtomicUsize::new(0),
+                sleep: Mutex::new(()),
+                wake: Condvar::new(),
+                sleepers: AtomicUsize::new(0),
+            }),
+        }
+    }
+
+    pub fn shard_count(&self) -> usize {
+        self.inner.shards.len()
+    }
+
+    /// Send to the next shard round-robin.
+    pub fn send(&self, item: T) -> Result<(), Closed> {
+        let s = self.inner.next.fetch_add(1, Ordering::Relaxed);
+        self.send_to(s, item)
+    }
+
+    /// Send to a pinned shard (`shard` taken modulo the shard count).
+    /// Producer-pinned sends keep per-producer FIFO order: two items a
+    /// producer pins to the same shard are received in send order.
+    pub fn send_to(&self, shard: usize, item: T) -> Result<(), Closed> {
+        let s = shard % self.inner.shards.len();
+        {
+            let mut q = self.inner.shards[s].q.lock().unwrap();
+            // under the shard lock: `close` serializes with us here, so
+            // a successful push strictly precedes the closed flag
+            if self.inner.closed.load(Ordering::SeqCst) {
+                return Err(Closed);
+            }
+            q.push_back(item);
+        }
+        self.wake_consumers(false);
+        Ok(())
+    }
+
+    /// Send a whole batch: items are bucketed round-robin across the
+    /// shards, each shard's lock is taken once, and sleeping consumers
+    /// are woken by a single sweep at the end (batched wakeups — the
+    /// broadcast fan-out path wakes a whole data-parallel group with
+    /// one notify instead of one per segment id).
+    pub fn send_all<I: IntoIterator<Item = T>>(&self, items: I) -> Result<usize, Closed> {
+        let items: Vec<T> = items.into_iter().collect();
+        if items.is_empty() {
+            return Ok(0);
+        }
+        let n = self.inner.shards.len();
+        let start = self.inner.next.fetch_add(items.len(), Ordering::Relaxed);
+        let mut buckets: Vec<Vec<T>> = (0..n).map(|_| Vec::new()).collect();
+        for (k, item) in items.into_iter().enumerate() {
+            buckets[(start.wrapping_add(k)) % n].push(item);
+        }
+        let mut sent = 0usize;
+        for (s, bucket) in buckets.into_iter().enumerate() {
+            if bucket.is_empty() {
+                continue;
+            }
+            let count = bucket.len();
+            {
+                let mut q = self.inner.shards[s].q.lock().unwrap();
+                if self.inner.closed.load(Ordering::SeqCst) {
+                    // already-enqueued items stay receivable; wake
+                    // consumers for them and report the abort
+                    if sent > 0 {
+                        drop(q);
+                        self.wake_consumers(true);
+                    }
+                    return Err(Closed);
+                }
+                q.extend(bucket);
+            }
+            sent += count;
+        }
+        self.wake_consumers(true);
+        Ok(sent)
+    }
+
+    /// Blocking receive: tries the consumer's `home` shard first, then
+    /// steals from the others; `None` once closed *and* fully drained.
+    pub fn recv(&self, home: usize) -> Option<T> {
+        loop {
+            if let Some(item) = self.steal_scan(home) {
+                return Some(item);
+            }
+            // Slow path. Register as a sleeper, then re-check under the
+            // sleep lock so a racing producer's wakeup cannot be lost:
+            // a producer that saw `sleepers == 0` pushed before our
+            // increment, which the re-scan below observes.
+            self.inner.sleepers.fetch_add(1, Ordering::SeqCst);
+            let guard = self.inner.sleep.lock().unwrap();
+            // Read `closed` BEFORE the conclusive scan: `close` sets it
+            // while holding every shard lock, so observing `true` here
+            // means every Ok-send already landed — an empty scan after
+            // this point is final, never a lost item.
+            let closed = self.inner.closed.load(Ordering::SeqCst);
+            if let Some(item) = self.steal_scan(home) {
+                drop(guard);
+                self.inner.sleepers.fetch_sub(1, Ordering::SeqCst);
+                return Some(item);
+            }
+            if closed {
+                drop(guard);
+                self.inner.sleepers.fetch_sub(1, Ordering::SeqCst);
+                return None;
+            }
+            let _woken = self.inner.wake.wait(guard).unwrap();
+            self.inner.sleepers.fetch_sub(1, Ordering::SeqCst);
+        }
+    }
+
+    /// Non-blocking receive (same home-then-steal order as `recv`).
+    pub fn try_recv(&self, home: usize) -> Option<T> {
+        self.steal_scan(home)
+    }
+
+    fn steal_scan(&self, home: usize) -> Option<T> {
+        let n = self.inner.shards.len();
+        for i in 0..n {
+            let idx = (home + i) % n;
+            let mut q = self.inner.shards[idx].q.lock().unwrap();
+            if let Some(item) = q.pop_front() {
+                return Some(item);
+            }
+        }
+        None
+    }
+
+    fn wake_consumers(&self, all: bool) {
+        if self.inner.sleepers.load(Ordering::SeqCst) > 0 {
+            // taking the sleep lock orders the notify after any
+            // consumer that is between its re-scan and its wait
+            let _g = self.inner.sleep.lock().unwrap();
+            if all {
+                self.inner.wake.notify_all();
+            } else {
+                self.inner.wake.notify_one();
+            }
+        }
+    }
+
+    /// Close: subsequent sends fail, queued items stay receivable.
+    ///
+    /// Acquires every shard lock before setting the flag. That makes
+    /// the flag store happen-after every in-flight `Ok` push: a
+    /// consumer that observes `closed == true` and *then* finds all
+    /// shards empty can safely conclude nothing is still in flight
+    /// (the close-drain contract `Fifo` gets for free from its single
+    /// lock). Idempotent.
+    pub fn close(&self) {
+        {
+            let _guards: Vec<_> = self
+                .inner
+                .shards
+                .iter()
+                .map(|s| s.q.lock().unwrap())
+                .collect();
+            self.inner.closed.store(true, Ordering::SeqCst);
+        }
+        let _g = self.inner.sleep.lock().unwrap();
+        self.inner.wake.notify_all();
+    }
+
+    pub fn is_closed(&self) -> bool {
+        self.inner.closed.load(Ordering::SeqCst)
+    }
+
+    /// Total queued items across shards (racy snapshot; diagnostics).
+    pub fn len(&self) -> usize {
+        self.inner.shards.iter().map(|s| s.q.lock().unwrap().len()).sum()
     }
 
     pub fn is_empty(&self) -> bool {
@@ -242,10 +513,33 @@ mod tests {
     }
 
     #[test]
-    #[should_panic]
-    fn send_all_rejected_on_bounded() {
-        let q = Fifo::bounded(1);
-        let _ = q.send_all(0..3);
+    fn send_all_piecewise_on_bounded() {
+        let q = Fifo::bounded(2);
+        let q2 = q.clone();
+        let h = thread::spawn(move || q2.send_all(0..10));
+        let mut got = Vec::new();
+        for _ in 0..10 {
+            got.push(q.recv().unwrap());
+        }
+        assert_eq!(h.join().unwrap(), Ok(10));
+        assert_eq!(got, (0..10).collect::<Vec<_>>(), "in order, none lost");
+    }
+
+    #[test]
+    fn send_all_close_mid_batch_keeps_enqueued() {
+        let q = Fifo::bounded(2);
+        let q2 = q.clone();
+        let h = thread::spawn(move || q2.send_all(0..10));
+        // capacity 2 fills, the sender blocks on item 2
+        while q.len() < 2 {
+            thread::yield_now();
+        }
+        q.close();
+        assert_eq!(h.join().unwrap(), Err(Closed), "remainder rejected");
+        // the two items that made it in drain normally
+        assert_eq!(q.recv(), Some(0));
+        assert_eq!(q.recv(), Some(1));
+        assert_eq!(q.recv(), None);
     }
 
     #[test]
@@ -256,5 +550,89 @@ mod tests {
         thread::sleep(Duration::from_millis(30));
         q.send(7).unwrap();
         assert_eq!(h.join().unwrap(), Some(7));
+    }
+
+    // --- ShardedFifo ---
+
+    #[test]
+    fn sharded_close_drains_then_none() {
+        let q = ShardedFifo::new(4);
+        for i in 0..10 {
+            q.send(i).unwrap();
+        }
+        q.close();
+        assert_eq!(q.send(99), Err(Closed));
+        let mut got: Vec<i32> = std::iter::from_fn(|| q.recv(0)).collect();
+        got.sort();
+        assert_eq!(got, (0..10).collect::<Vec<_>>());
+        assert_eq!(q.recv(0), None);
+    }
+
+    #[test]
+    fn sharded_home_shard_preferred() {
+        let q = ShardedFifo::new(2);
+        q.send_to(0, "a").unwrap();
+        q.send_to(1, "b").unwrap();
+        // each consumer drains its own lane first
+        assert_eq!(q.try_recv(1), Some("b"));
+        assert_eq!(q.try_recv(1), Some("a"), "then steals");
+        assert_eq!(q.try_recv(1), None);
+    }
+
+    #[test]
+    fn sharded_pinned_sends_keep_fifo_order() {
+        let q = ShardedFifo::new(3);
+        for i in 0..5 {
+            q.send_to(2, i).unwrap();
+        }
+        for i in 0..5 {
+            assert_eq!(q.recv(2), Some(i));
+        }
+    }
+
+    #[test]
+    fn sharded_steal_on_empty() {
+        let q = ShardedFifo::new(4);
+        q.send_to(3, 42).unwrap();
+        // a consumer homed elsewhere still finds it
+        assert_eq!(q.recv(0), Some(42));
+    }
+
+    #[test]
+    fn sharded_recv_blocks_until_send() {
+        let q: ShardedFifo<u32> = ShardedFifo::new(2);
+        let q2 = q.clone();
+        let h = thread::spawn(move || q2.recv(1));
+        thread::sleep(Duration::from_millis(30));
+        q.send(7).unwrap();
+        assert_eq!(h.join().unwrap(), Some(7));
+    }
+
+    #[test]
+    fn sharded_close_unblocks_parked_consumers() {
+        let q: ShardedFifo<u32> = ShardedFifo::new(2);
+        let hs: Vec<_> = (0..3)
+            .map(|i| {
+                let q = q.clone();
+                thread::spawn(move || q.recv(i))
+            })
+            .collect();
+        thread::sleep(Duration::from_millis(30));
+        q.close();
+        for h in hs {
+            assert_eq!(h.join().unwrap(), None);
+        }
+    }
+
+    #[test]
+    fn sharded_send_all_round_robins_and_wakes() {
+        let q = ShardedFifo::new(3);
+        assert_eq!(q.send_all(0..9), Ok(9));
+        assert_eq!(q.len(), 9);
+        let mut got: Vec<i32> = (0..9).map(|_| q.recv(0).unwrap()).collect();
+        got.sort();
+        assert_eq!(got, (0..9).collect::<Vec<_>>());
+        q.close();
+        assert_eq!(q.send_all(0..3), Err(Closed));
     }
 }

@@ -8,11 +8,15 @@ use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, RwLock};
 
+use crate::engine::arena::Rows;
+
 /// One client request's input batch.
 #[derive(Debug)]
 pub struct RequestData {
-    /// Flattened row-major samples (`nb_images × elems_per_image`).
-    pub x: Vec<f32>,
+    /// Flattened row-major samples (`nb_images × elems_per_image`) — a
+    /// zero-copy [`Rows`] view, so a coalesced batch shares its buffer
+    /// with the server-side batcher instead of being copied in.
+    pub x: Rows,
     pub nb_images: usize,
     pub elems_per_image: usize,
 }
@@ -38,8 +42,10 @@ impl SharedStore {
         })
     }
 
-    /// Insert a request's input, returning its id.
-    pub fn insert(&self, x: Vec<f32>, nb_images: usize, elems_per_image: usize) -> u64 {
+    /// Insert a request's input, returning its id. Accepts a plain
+    /// `Vec<f32>` (adopted zero-copy) or an existing [`Rows`] view.
+    pub fn insert(&self, x: impl Into<Rows>, nb_images: usize, elems_per_image: usize) -> u64 {
+        let x = x.into();
         debug_assert_eq!(x.len(), nb_images * elems_per_image);
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
         let data = Arc::new(RequestData { x, nb_images, elems_per_image });

@@ -382,6 +382,20 @@ impl InferenceSystem {
     /// The ensemble prediction: blocks until every model predicted every
     /// image and the combination rule folded them (Deploy Mode).
     pub fn predict(&self, x: Vec<f32>, nb_images: usize) -> anyhow::Result<Vec<f32>> {
+        self.predict_rows(crate::engine::arena::Rows::from_vec(x), nb_images)
+            .map(crate::engine::arena::Rows::into_vec)
+    }
+
+    /// [`Self::predict`] over zero-copy [`crate::engine::arena::Rows`]:
+    /// the input view is adopted without copying, and the output is a
+    /// view of the accumulator's arena buffer. The server-side batcher
+    /// uses this to slice one coalesced answer back to many clients
+    /// without materializing per-client vectors.
+    pub fn predict_rows(
+        &self,
+        x: crate::engine::arena::Rows,
+        nb_images: usize,
+    ) -> anyhow::Result<crate::engine::arena::Rows> {
         let t0 = Instant::now();
         let start_us = self.metrics.trace.now_us();
         // Admission holds the gate lock only long enough to pin the
@@ -397,6 +411,13 @@ impl InferenceSystem {
             self.metrics.trace.complete(start_us, gate_us, &spans, end_us);
         }
         Ok(y)
+    }
+
+    /// Allocation/reuse counters of the active generation's buffer
+    /// arena (the §Perf "no hot-path allocation at steady state"
+    /// evidence surfaced by `benches/engine_hotpath.rs`).
+    pub fn arena_stats(&self) -> crate::engine::arena::ArenaStats {
+        self.active.read().unwrap().arena_stats()
     }
 
     /// Live-swap the ensemble onto `matrix` with [`SwapStrategy::Auto`]:

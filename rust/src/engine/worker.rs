@@ -17,8 +17,9 @@
 use std::sync::Arc;
 use std::thread::JoinHandle;
 
+use crate::engine::arena::{Arena, ArenaVec, Rows};
 use crate::engine::messages::{AccMsg, PredMsg, WorkerMsg};
-use crate::engine::queue::Fifo;
+use crate::engine::queue::{Fifo, ShardedFifo};
 use crate::engine::segments;
 use crate::engine::store::{RequestData, SharedStore};
 use crate::exec::Executor;
@@ -86,14 +87,20 @@ impl WorkerHandle {
 
 /// Spawn the worker's three threads.
 ///
-/// `input` is the model's shared segment-id FIFO (data-parallel workers of
-/// one model compete on it); `acc` is the global prediction FIFO.
+/// `input` is the model's sharded segment-id queue (data-parallel
+/// workers of one model each own the shard `input_home` and steal from
+/// their siblings when idle); `acc` is the global prediction queue,
+/// sharded per worker — this worker pins its sends to shard `spec.id`,
+/// which keeps its ready/error/prediction messages in FIFO order.
+/// `arena` is the generation's buffer pool for segment assembly.
 pub fn spawn(
     spec: WorkerSpec,
     executor: Arc<dyn Executor>,
-    input: Fifo<WorkerMsg>,
+    input: ShardedFifo<WorkerMsg>,
+    input_home: usize,
     store: Arc<SharedStore>,
-    acc: Fifo<AccMsg>,
+    acc: ShardedFifo<AccMsg>,
+    arena: Arc<Arena>,
     stage_capacity: usize,
     metrics: Arc<EngineMetrics>,
 ) -> WorkerHandle {
@@ -106,7 +113,7 @@ pub fn spawn(
         let metrics = Arc::clone(&metrics);
         std::thread::Builder::new()
             .name(format!("batcher-{}", spec.id))
-            .spawn(move || batcher_loop(&spec, &input, &store, &to_pred, &metrics))
+            .spawn(move || batcher_loop(&spec, &input, input_home, &store, &to_pred, &metrics))
             .expect("spawn batcher")
     };
 
@@ -126,7 +133,7 @@ pub fn spawn(
         let spec = spec.clone();
         std::thread::Builder::new()
             .name(format!("sender-{}", spec.id))
-            .spawn(move || sender_loop(&spec, &to_send, &acc, &metrics))
+            .spawn(move || sender_loop(&spec, &to_send, &acc, &arena, &metrics))
             .expect("spawn sender")
     };
 
@@ -135,12 +142,13 @@ pub fn spawn(
 
 fn batcher_loop(
     spec: &WorkerSpec,
-    input: &Fifo<WorkerMsg>,
+    input: &ShardedFifo<WorkerMsg>,
+    input_home: usize,
     store: &SharedStore,
     to_pred: &Fifo<BatchJob>,
     metrics: &EngineMetrics,
 ) {
-    while let Some(WorkerMsg::Segment { req, seg, t_bcast_us }) = input.recv() {
+    while let Some(WorkerMsg::Segment { req, seg, t_bcast_us }) = input.recv(input_home) {
         let Some(data) = store.get(req) else {
             // request was torn down mid-flight (shutdown); skip
             continue;
@@ -185,20 +193,20 @@ fn predictor_loop(
     executor: Arc<dyn Executor>,
     to_pred: &Fifo<BatchJob>,
     to_send: &Fifo<PredBatch>,
-    acc: &Fifo<AccMsg>,
+    acc: &ShardedFifo<AccMsg>,
     metrics: &EngineMetrics,
 ) {
     // "the predictor persists the DNN into the device memory"
     let mut instance = match executor.load(&spec.model, spec.device, spec.batch) {
         Ok(inst) => {
             // paper: {-2, None, None} — ready to serve
-            let _ = acc.send(AccMsg::WorkerReady { worker: spec.id });
+            let _ = acc.send_to(spec.id, AccMsg::WorkerReady { worker: spec.id });
             inst
         }
         Err(e) => {
             // paper: {-1, None, None} — triggers system shutdown
             metrics.worker_errors.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
-            let _ = acc.send(AccMsg::WorkerError { worker: spec.id, error: format!("{e:#}") });
+            let _ = acc.send_to(spec.id, AccMsg::WorkerError { worker: spec.id, error: format!("{e:#}") });
             to_pred.close(); // unblock + stop the batcher
             to_send.close();
             return;
@@ -247,7 +255,8 @@ fn predictor_loop(
             }
             Err(e) => {
                 metrics.worker_errors.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
-                let _ = acc.send(AccMsg::WorkerError { worker: spec.id, error: format!("{e:#}") });
+                let _ = acc
+                    .send_to(spec.id, AccMsg::WorkerError { worker: spec.id, error: format!("{e:#}") });
                 // stop + unblock the batcher: it may be parked on a full
                 // stage FIFO, which would otherwise hang teardown's join
                 to_pred.close();
@@ -258,55 +267,93 @@ fn predictor_loop(
     to_send.close();
 }
 
+/// Partially assembled segment (multi-chunk path): chunk predictions
+/// accumulate into an arena buffer until the segment completes.
+struct SegAssembly {
+    req: u64,
+    seg: usize,
+    buf: ArenaVec,
+    n_rows: usize,
+    seal_us: u64,
+    predict_us: u64,
+    chunks_seen: usize,
+    chunks_expected: usize,
+}
+
 fn sender_loop(
     spec: &WorkerSpec,
     to_send: &Fifo<PredBatch>,
-    acc: &Fifo<AccMsg>,
+    acc: &ShardedFifo<AccMsg>,
+    arena: &Arc<Arena>,
     metrics: &EngineMetrics,
 ) {
+    let emit = |preds: Rows, pb_req: u64, pb_seg: usize, n_rows: usize,
+                seal_us: u64, predict_us: u64|
+     -> Result<(), ()> {
+        metrics.pred_messages.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        metrics
+            .images_predicted
+            .fetch_add(n_rows as u64, std::sync::atomic::Ordering::Relaxed);
+        let msg = PredMsg {
+            req: pb_req,
+            seg: pb_seg,
+            model: spec.model_idx,
+            worker: spec.id,
+            preds,
+            n_rows,
+            seal_us,
+            predict_us,
+        };
+        acc.send_to(spec.id, AccMsg::Pred(msg)).map_err(|_| ())
+    };
+
     // chunks of one segment arrive in order (the batcher emits them
     // sequentially and the stage FIFOs preserve order)
-    let mut cur: Option<PredMsg> = None;
-    let mut chunks_seen = 0usize;
-    let mut chunks_expected = 0usize;
+    let mut cur: Option<SegAssembly> = None;
 
     while let Some(pb) = to_send.recv() {
-        if cur.is_none() {
-            chunks_expected = pb.n_chunks;
-            chunks_seen = 0;
-            // reserve the whole segment's prediction matrix up front:
-            // avoids per-chunk reallocation on the hot path (§Perf)
-            let per_chunk = pb.preds.len();
-            cur = Some(PredMsg {
-                req: pb.req,
-                seg: pb.seg,
-                model: spec.model_idx,
-                worker: spec.id,
-                preds: Vec::with_capacity(per_chunk * pb.n_chunks),
-                n_rows: 0,
-                seal_us: 0,
-                predict_us: 0,
-            });
+        if pb.n_chunks == 1 {
+            // fast path: the executor's output buffer IS the segment —
+            // adopt it zero-copy instead of reassembling (§Perf: this
+            // is every segment of a batch >= segment_size worker)
+            debug_assert!(cur.is_none(), "chunks of segments must not interleave");
+            if emit(Rows::from_vec(pb.preds), pb.req, pb.seg, pb.n_rows,
+                    pb.seal_us, pb.predict_us)
+                .is_err()
+            {
+                return;
+            }
+            continue;
         }
-        let msg = cur.as_mut().unwrap();
-        debug_assert_eq!(msg.req, pb.req, "chunks of segments must not interleave");
-        debug_assert_eq!(msg.seg, pb.seg);
-        debug_assert_eq!(pb.chunk, chunks_seen, "in-order chunks");
-        msg.preds.extend_from_slice(&pb.preds);
-        msg.n_rows += pb.n_rows;
+        let asm = cur.get_or_insert_with(|| SegAssembly {
+            req: pb.req,
+            seg: pb.seg,
+            // one pooled buffer holds the whole segment's matrix:
+            // steady state performs no allocation here at all
+            buf: arena.take(pb.preds.len() * pb.n_chunks),
+            n_rows: 0,
+            seal_us: 0,
+            predict_us: 0,
+            chunks_seen: 0,
+            chunks_expected: pb.n_chunks,
+        });
+        debug_assert_eq!(asm.req, pb.req, "chunks of segments must not interleave");
+        debug_assert_eq!(asm.seg, pb.seg);
+        debug_assert_eq!(pb.chunk, asm.chunks_seen, "in-order chunks");
+        asm.buf.extend_from_slice(&pb.preds);
+        asm.n_rows += pb.n_rows;
         // segment spans: formation ends at the last chunk's hand-off
         // (max), compute is the sum of its chunks' predict calls
-        msg.seal_us = msg.seal_us.max(pb.seal_us);
-        msg.predict_us += pb.predict_us;
-        chunks_seen += 1;
+        asm.seal_us = asm.seal_us.max(pb.seal_us);
+        asm.predict_us += pb.predict_us;
+        asm.chunks_seen += 1;
 
-        if chunks_seen == chunks_expected {
+        if asm.chunks_seen == asm.chunks_expected {
             let done = cur.take().unwrap();
-            metrics.pred_messages.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
-            metrics
-                .images_predicted
-                .fetch_add(done.n_rows as u64, std::sync::atomic::Ordering::Relaxed);
-            if acc.send(AccMsg::Pred(done)).is_err() {
+            if emit(done.buf.freeze(), done.req, done.seg, done.n_rows,
+                    done.seal_us, done.predict_us)
+                .is_err()
+            {
                 return;
             }
         }

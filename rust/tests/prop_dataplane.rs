@@ -1,0 +1,326 @@
+//! Property tests of the zero-copy data plane (util::quick mini
+//! framework): the vectorized combine rules pinned bit-exact against
+//! scalar references, majority-vote NaN/tie semantics, arena view
+//! integrity, and MPMC stress of the sharded hand-off queue
+//! (exactly-once delivery, clean close-drain under churn).
+
+use std::collections::HashSet;
+use std::sync::Mutex;
+
+use ensemble_serve::engine::arena::Arena;
+use ensemble_serve::engine::combine::{Average, CombineRule, MajorityVote, WeightedAverage};
+use ensemble_serve::engine::queue::{Fifo, ShardedFifo};
+use ensemble_serve::util::quick::{check, Gen};
+
+/// Finite random f32 spanning several orders of magnitude (both signs).
+/// Finite on purpose: the bit-exact properties compare NaN-free
+/// arithmetic; NaN handling has its own dedicated property below.
+fn fin(g: &mut Gen) -> f32 {
+    let mag = 10f64.powi(g.usize_in(0, 6) as i32 - 3);
+    ((g.f64_unit() - 0.5) * 2.0 * mag) as f32
+}
+
+/// The pre-refactor scalar fold: `y[i] += p[i] * a`, one element at a
+/// time. The vectorized kernel must match this bit for bit.
+fn scalar_axpy(y: &mut [f32], p: &[f32], a: f32) {
+    for (yi, pi) in y.iter_mut().zip(p) {
+        *yi += *pi * a;
+    }
+}
+
+/// The pre-refactor majority-vote fold: `Iterator::max_by` with
+/// `partial_cmp().unwrap()` — last maximal class wins. Only valid on
+/// NaN-free rows (the old code panicked on NaN; see the NaN property).
+fn scalar_vote(y: &mut [f32], p: &[f32], classes: usize) {
+    for (yrow, prow) in y.chunks_mut(classes).zip(p.chunks(classes)) {
+        let (argmax, _) = prow
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .unwrap();
+        yrow[argmax] += 1.0;
+    }
+}
+
+fn assert_bits_eq(got: &[f32], want: &[f32], what: &str) {
+    assert_eq!(got.len(), want.len(), "{what}: length mismatch");
+    for (i, (a, b)) in got.iter().zip(want).enumerate() {
+        assert_eq!(
+            a.to_bits(),
+            b.to_bits(),
+            "{what}: element {i} diverged ({a} vs {b})"
+        );
+    }
+}
+
+#[test]
+fn average_bit_exact_vs_scalar() {
+    check("average bit-exact", 80, |g| {
+        let rows = g.usize_in(1, 24);
+        let classes = g.usize_in(1, 21); // hits LANES remainders 0..=7
+        let n_models = g.usize_in(1, 6);
+        let n = rows * classes;
+        let mut y_vec = vec![0.0f32; n];
+        let mut y_ref = y_vec.clone();
+        let rule = Average;
+        for idx in 0..n_models {
+            let p: Vec<f32> = (0..n).map(|_| fin(g)).collect();
+            rule.accumulate(&mut y_vec, &p, idx, n_models, classes);
+            scalar_axpy(&mut y_ref, &p, 1.0 / n_models as f32);
+        }
+        assert_bits_eq(&y_vec, &y_ref, "average");
+    });
+}
+
+#[test]
+fn weighted_average_bit_exact_vs_scalar() {
+    check("weighted average bit-exact", 80, |g| {
+        let rows = g.usize_in(1, 16);
+        let classes = g.usize_in(1, 19);
+        let n_models = g.usize_in(1, 5);
+        let n = rows * classes;
+        let mut weights: Vec<f32> = (0..n_models).map(|_| g.f64_unit() as f32).collect();
+        weights[0] += 1.0; // total strictly positive
+        let total: f32 = weights.iter().sum();
+        let rule = WeightedAverage::new(weights.clone());
+        let mut y_vec = vec![0.0f32; n];
+        let mut y_ref = y_vec.clone();
+        for (idx, w) in weights.iter().enumerate() {
+            let p: Vec<f32> = (0..n).map(|_| fin(g)).collect();
+            rule.accumulate(&mut y_vec, &p, idx, n_models, classes);
+            scalar_axpy(&mut y_ref, &p, w / total);
+        }
+        assert_bits_eq(&y_vec, &y_ref, "weighted average");
+    });
+}
+
+#[test]
+fn majority_vote_bit_exact_vs_scalar_on_finite_rows() {
+    check("majority vote bit-exact", 80, |g| {
+        let rows = g.usize_in(1, 16);
+        let classes = g.usize_in(1, 12);
+        let n_models = g.usize_in(1, 5);
+        let n = rows * classes;
+        let rule = MajorityVote;
+        let mut y_vec = vec![0.0f32; n];
+        let mut y_ref = y_vec.clone();
+        for idx in 0..n_models {
+            // duplicates are common with few distinct values → exercises
+            // the last-max-wins tie rule constantly
+            let p: Vec<f32> = (0..n)
+                .map(|_| [0.0f32, 0.25, 0.5, 0.5, 1.0][g.usize_in(0, 4)])
+                .collect();
+            rule.accumulate(&mut y_vec, &p, idx, n_models, classes);
+            scalar_vote(&mut y_ref, &p, classes);
+        }
+        rule.finalize(&mut y_vec, n_models, classes);
+        for v in &mut y_ref {
+            *v *= 1.0 / n_models as f32;
+        }
+        assert_bits_eq(&y_vec, &y_ref, "majority vote");
+    });
+}
+
+/// NaN scores abstain instead of panicking (the old `partial_cmp`
+/// unwrap aborted the accumulator): the vote goes to the max of the
+/// non-NaN scores, and an all-NaN row casts no vote.
+#[test]
+fn majority_vote_nan_abstains_never_panics() {
+    check("majority vote NaN", 80, |g| {
+        let rows = g.usize_in(1, 12);
+        let classes = g.usize_in(1, 8);
+        let rule = MajorityVote;
+        let mut y = vec![0.0f32; rows * classes];
+        let p: Vec<f32> = (0..rows * classes)
+            .map(|_| if g.bool() { f32::NAN } else { fin(g) })
+            .collect();
+        rule.accumulate(&mut y, &p, 0, 1, classes);
+        for (r, (yrow, prow)) in y.chunks(classes).zip(p.chunks(classes)).enumerate() {
+            let votes: f32 = yrow.iter().sum();
+            let expect = prow
+                .iter()
+                .enumerate()
+                .filter(|(_, v)| !v.is_nan())
+                .max_by(|a, b| a.1.total_cmp(b.1))
+                .map(|(i, _)| i);
+            match expect {
+                // some real score exists: exactly one vote, on a class
+                // holding the maximal non-NaN score
+                Some(_) => {
+                    assert_eq!(votes, 1.0, "row {r}: expected one vote");
+                    let winner = yrow.iter().position(|&v| v == 1.0).unwrap();
+                    let best = prow
+                        .iter()
+                        .filter(|v| !v.is_nan())
+                        .fold(f32::NEG_INFINITY, |a, &b| a.max(b));
+                    assert_eq!(
+                        prow[winner].to_bits(),
+                        best.to_bits(),
+                        "row {r}: vote went to a non-maximal class"
+                    );
+                }
+                // all-NaN row: abstain entirely
+                None => assert_eq!(votes, 0.0, "row {r}: all-NaN row must not vote"),
+            }
+        }
+    });
+}
+
+/// Arena-leased views survive pooling round-trips with their contents
+/// intact, and sub-slices address exactly the rows they claim.
+#[test]
+fn arena_views_preserve_contents_across_reuse() {
+    check("arena view integrity", 60, |g| {
+        let arena = Arena::new();
+        for _ in 0..g.usize_in(1, 6) {
+            let n = g.usize_in(1, 512);
+            let vals: Vec<f32> = (0..n).map(|_| fin(g)).collect();
+            let mut buf = arena.take(n);
+            buf.extend_from_slice(&vals);
+            let rows = buf.freeze();
+            assert_bits_eq(rows.as_slice(), &vals, "frozen view");
+            let off = g.usize_in(0, n - 1);
+            let len = g.usize_in(0, n - off);
+            assert_bits_eq(rows.slice(off, len).as_slice(), &vals[off..off + len], "sub-slice");
+            assert_bits_eq(&rows.clone().into_vec(), &vals, "into_vec");
+            // dropping the last view returns the buffer to the pool
+        }
+        let s = arena.stats();
+        assert!(s.allocs + s.reuses > 0);
+    });
+}
+
+/// MPMC exactly-once: every item sent by P producers is received by
+/// exactly one of C consumers, across shard counts, with home-shard
+/// pinning and stealing in play.
+#[test]
+fn sharded_fifo_exactly_once_under_contention() {
+    check("sharded exactly-once", 12, |g| {
+        let shards = g.usize_in(1, 4);
+        let producers = g.usize_in(1, 4);
+        let consumers = g.usize_in(1, 4);
+        let per_producer = g.usize_in(50, 400);
+        let q: ShardedFifo<u64> = ShardedFifo::new(shards);
+        let seen = Mutex::new(Vec::new());
+        std::thread::scope(|s| {
+            for pid in 0..producers {
+                let q = q.clone();
+                s.spawn(move || {
+                    for i in 0..per_producer {
+                        let item = ((pid as u64) << 32) | i as u64;
+                        // alternate pinned and round-robin sends
+                        let r = if i % 2 == 0 {
+                            q.send_to(pid % q.shard_count(), item)
+                        } else {
+                            q.send(item)
+                        };
+                        assert!(r.is_ok(), "send failed before close");
+                    }
+                });
+            }
+            for cid in 0..consumers {
+                let q = q.clone();
+                let seen = &seen;
+                s.spawn(move || {
+                    // publish per item: the main thread watches this
+                    // shared vec to know when the queue has drained
+                    while let Some(v) = q.recv(cid % q.shard_count()) {
+                        seen.lock().unwrap().push(v);
+                    }
+                });
+            }
+            // every send is acknowledged Ok, so the full count must
+            // eventually drain through the consumers; close only then,
+            // to unpark anyone still waiting
+            let expected = producers * per_producer;
+            while seen.lock().unwrap().len() < expected {
+                std::thread::yield_now();
+            }
+            q.close();
+        });
+        let got = seen.lock().unwrap();
+        assert_eq!(got.len(), producers * per_producer, "lost or duplicated items");
+        let distinct: HashSet<u64> = got.iter().copied().collect();
+        assert_eq!(distinct.len(), got.len(), "duplicate delivery");
+    });
+}
+
+/// Close-drain under churn: producers race `close()`; whatever they
+/// managed to send with `Ok` is exactly what the consumers drain —
+/// nothing lost, nothing invented, and every consumer unblocks.
+#[test]
+fn sharded_fifo_close_drains_exactly_the_acknowledged_items() {
+    check("sharded close-drain", 12, |g| {
+        let shards = g.usize_in(1, 4);
+        let producers = g.usize_in(2, 4);
+        let consumers = g.usize_in(1, 3);
+        let q: ShardedFifo<u64> = ShardedFifo::new(shards);
+        let sent = Mutex::new(Vec::new());
+        let got = Mutex::new(Vec::new());
+        std::thread::scope(|s| {
+            for pid in 0..producers {
+                let q = q.clone();
+                let sent = &sent;
+                s.spawn(move || {
+                    let mut mine = Vec::new();
+                    for i in 0..10_000u64 {
+                        let item = ((pid as u64) << 32) | i;
+                        match q.send(item) {
+                            Ok(()) => mine.push(item),
+                            Err(_) => break, // raced the close
+                        }
+                        if i % 64 == 0 {
+                            std::thread::yield_now();
+                        }
+                    }
+                    sent.lock().unwrap().extend(mine);
+                });
+            }
+            for cid in 0..consumers {
+                let q = q.clone();
+                let got = &got;
+                s.spawn(move || {
+                    let mut mine = Vec::new();
+                    while let Some(v) = q.recv(cid % q.shard_count()) {
+                        mine.push(v);
+                    }
+                    got.lock().unwrap().extend(mine);
+                });
+            }
+            // let the churn build, then slam the door mid-stream
+            for _ in 0..50 {
+                std::thread::yield_now();
+            }
+            q.close();
+        });
+        let mut sent = sent.lock().unwrap().clone();
+        let mut got = got.lock().unwrap().clone();
+        sent.sort_unstable();
+        got.sort_unstable();
+        assert_eq!(sent, got, "acknowledged sends and drained items disagree");
+    });
+}
+
+/// `Fifo::send_all` on a bounded queue delivers the whole batch in
+/// order, blocking piecewise instead of panicking (it used to assert
+/// the batch fits the capacity).
+#[test]
+fn bounded_send_all_delivers_in_order() {
+    check("bounded send_all", 20, |g| {
+        let cap = g.usize_in(1, 4);
+        let n = g.usize_in(0, 64);
+        let q: Fifo<usize> = Fifo::bounded(cap);
+        std::thread::scope(|s| {
+            let tx = q.clone();
+            s.spawn(move || {
+                assert_eq!(tx.send_all(0..n), Ok(n));
+                tx.close();
+            });
+            let mut expect = 0..n;
+            while let Some(v) = q.recv() {
+                assert_eq!(Some(v), expect.next(), "out of order");
+            }
+            assert_eq!(expect.next(), None, "batch truncated");
+        });
+    });
+}

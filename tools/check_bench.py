@@ -1,0 +1,117 @@
+#!/usr/bin/env python3
+"""Gate CI on the hot-path bench results.
+
+Usage:
+    check_bench.py --baseline <committed BENCH_hotpath.json copy> \
+                   --fresh <BENCH_hotpath.json written by the bench run>
+
+Two checks:
+
+1. Regression diff vs the committed baseline: throughput_img_s must not
+   drop, and small_req_p50_ms must not rise, by more than REGRESSION_PCT.
+   This gate is only *enforced* when the baseline carries
+   "baseline_measured": true — an estimated baseline (fresh clone, no
+   measured numbers yet) reports the diff but cannot fail the build on
+   it, because failing against a guess gates nothing real.
+
+2. tracing_overhead_pct < TRACING_BUDGET_PCT: the observability stack's
+   contract (docs/OBSERVABILITY.md) is enforced unconditionally — it
+   compares tracing-on vs tracing-off within the SAME run, so it needs
+   no trustworthy baseline.
+
+Exit code 0 = pass, 1 = gate violated, 2 = bad invocation/inputs.
+"""
+
+import argparse
+import json
+import sys
+
+REGRESSION_PCT = 15.0
+TRACING_BUDGET_PCT = 2.0
+
+# (key, direction): "higher" = bigger is better, "lower" = smaller is better
+GATED = [
+    ("throughput_img_s", "higher"),
+    ("small_req_p50_ms", "lower"),
+]
+
+# reported for trend visibility, never gated (p99 is too noisy on shared
+# CI runners; arena counters are workload-shape, not speed)
+REPORTED = ["e2e_1024_s", "small_req_p99_ms", "arena_allocs", "arena_reuses"]
+
+
+def load(path):
+    try:
+        with open(path) as f:
+            return json.load(f)
+    except (OSError, ValueError) as e:
+        print(f"error: cannot read {path}: {e}", file=sys.stderr)
+        sys.exit(2)
+
+
+def pct_change(old, new):
+    if old == 0:
+        return float("inf")
+    return 100.0 * (new - old) / old
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--baseline", required=True)
+    ap.add_argument("--fresh", required=True)
+    args = ap.parse_args()
+
+    base = load(args.baseline)
+    fresh = load(args.fresh)
+    measured = bool(base.get("baseline_measured", False))
+    failures = []
+
+    print(f"baseline: {args.baseline} (measured={measured})")
+    print(f"fresh:    {args.fresh}\n")
+
+    for key, direction in GATED:
+        if key not in base or key not in fresh:
+            print(f"  {key:<22} missing ({'baseline' if key not in base else 'fresh'}) — skipped")
+            continue
+        old, new = float(base[key]), float(fresh[key])
+        delta = pct_change(old, new)
+        worse = delta < -REGRESSION_PCT if direction == "higher" else delta > REGRESSION_PCT
+        verdict = "REGRESSION" if worse else "ok"
+        print(f"  {key:<22} {old:>12.4f} -> {new:>12.4f}  ({delta:+7.2f} %)  {verdict}")
+        if worse:
+            if measured:
+                failures.append(
+                    f"{key}: {delta:+.2f} % vs baseline (limit {REGRESSION_PCT} %)"
+                )
+            else:
+                print("    (advisory only: baseline is estimated, not measured)")
+
+    for key in REPORTED:
+        if key in base and key in fresh:
+            old, new = float(base[key]), float(fresh[key])
+            print(f"  {key:<22} {old:>12.4f} -> {new:>12.4f}  ({pct_change(old, new):+7.2f} %)  [not gated]")
+
+    if "tracing_overhead_pct" in fresh:
+        pct = float(fresh["tracing_overhead_pct"])
+        ok = pct < TRACING_BUDGET_PCT
+        print(f"\n  tracing_overhead_pct   {pct:+.3f} %  (budget < {TRACING_BUDGET_PCT} %)  "
+              f"{'ok' if ok else 'OVER BUDGET'}")
+        if not ok:
+            failures.append(
+                f"tracing_overhead_pct {pct:+.3f} % exceeds the {TRACING_BUDGET_PCT} % budget"
+            )
+    else:
+        print("\nerror: fresh results carry no tracing_overhead_pct — "
+              "did the overhead bench run?", file=sys.stderr)
+        sys.exit(2)
+
+    if failures:
+        print("\nFAIL:", file=sys.stderr)
+        for f in failures:
+            print(f"  - {f}", file=sys.stderr)
+        sys.exit(1)
+    print("\nall bench gates passed")
+
+
+if __name__ == "__main__":
+    main()
