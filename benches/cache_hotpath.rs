@@ -1,0 +1,170 @@
+//! Prediction-cache hot-path benchmarks — the PR's perf instrument.
+//!
+//! Three experiments, all against the real sharded cache (no engine in
+//! the hit-path timings, a fake-backend system behind the stampede):
+//!
+//! * **hit path** — p50/p99 of `request_key` + `get_or_compute` on a
+//!   warmed key over a 12288-float payload (a 64-image IMN-style
+//!   request). This is the whole client-visible cost of a hit.
+//! * **Zipf workload** — a redundant request stream (`workload::
+//!   zipf_ranks`, s = 1.1) over more distinct inputs than the cache
+//!   holds: reports the observed hit rate under LRU + byte-budget
+//!   eviction pressure.
+//! * **stampede** — K concurrent identical cold requests against a
+//!   fake-backend system: reports how many predictions actually reached
+//!   the engine (single-flight target: 1).
+//!
+//! Writes `cache_hit_p50_ms`, `cache_hit_p99_ms`, `cache_zipf_hit_rate`
+//! and `cache_stampede_engine_calls` into `BENCH_hotpath.json`
+//! (`tools/check_bench.py` gates the first and last once a baseline is
+//! measured).
+//!
+//! ```bash
+//! cargo bench --bench cache_hotpath
+//! ```
+
+#[path = "common/mod.rs"]
+mod common;
+
+use std::sync::atomic::Ordering;
+use std::sync::{Arc, Barrier};
+use std::time::Instant;
+
+use ensemble_serve::alloc::matrix::AllocationMatrix;
+use ensemble_serve::device::DeviceSet;
+use ensemble_serve::engine::arena::Rows;
+use ensemble_serve::engine::{EngineOptions, InferenceSystem};
+use ensemble_serve::exec::fake::FakeExecutor;
+use ensemble_serve::model::{ensemble, EnsembleId};
+use ensemble_serve::server::cache::{request_key, CacheConfig, Outcome, PredictionCache};
+use ensemble_serve::util::json::Json;
+use ensemble_serve::util::stats::percentile;
+use ensemble_serve::workload::zipf_ranks;
+
+fn main() {
+    common::init_logging();
+    println!("=== prediction-cache hot-path benchmarks ===\n");
+    let fast = common::fast_mode();
+
+    // --- hit path: request_key + get_or_compute on a warmed key
+    let (hit_p50_ms, hit_p99_ms) = {
+        let cache = PredictionCache::with_config(CacheConfig::with_entries(1024));
+        let fp = [7u8; 16];
+        let nb_images = 64usize;
+        let x: Vec<f32> = (0..12_288).map(|i| (i % 251) as f32 * 0.25).collect();
+        let y = Rows::from_vec(vec![0.125f32; nb_images * 100]);
+        cache.put("IMN4", request_key("IMN4", &fp, &x, nb_images), y);
+
+        let iters = if fast { 2_000 } else { 20_000 };
+        let mut samples = Vec::with_capacity(iters);
+        for _ in 0..iters {
+            let t0 = Instant::now();
+            let key = request_key("IMN4", &fp, &x, nb_images);
+            let (rows, outcome) = cache
+                .get_or_compute("IMN4", key, || panic!("warmed key must hit"))
+                .unwrap();
+            samples.push(t0.elapsed().as_secs_f64());
+            assert_eq!(outcome, Outcome::Hit);
+            std::hint::black_box(rows.as_slice()[0]);
+        }
+        let p50 = percentile(&samples, 50.0) * 1e3;
+        let p99 = percentile(&samples, 99.0) * 1e3;
+        println!(
+            "hit path (12288-float req, {iters} iters): p50 {:.4} ms  p99 {:.4} ms",
+            p50, p99
+        );
+        (p50, p99)
+    };
+
+    // --- Zipf redundant workload: hit rate under eviction pressure
+    let zipf_hit_rate = {
+        // 512 distinct inputs, cache holds 256: the hot head lives in
+        // cache, the tail churns the LRU
+        let distinct = 512usize;
+        let cache = PredictionCache::with_config(CacheConfig {
+            entries: 256,
+            mem_bytes: 64 * 1024 * 1024,
+            shards: 0,
+        });
+        let fp = [7u8; 16];
+        let nb_images = 4usize;
+        let elems = 768usize;
+        let n = if fast { 5_000 } else { 50_000 };
+        let ranks = zipf_ranks(n, distinct, 1.1, 0x5EED);
+        for &r in &ranks {
+            let x: Vec<f32> = (0..nb_images * elems).map(|i| (r * 31 + i) as f32).collect();
+            let key = request_key("IMN4", &fp, &x, nb_images);
+            let rank = r as f32;
+            cache
+                .get_or_compute("IMN4", key, || {
+                    Ok(Rows::from_vec(vec![rank; nb_images * 100]))
+                })
+                .unwrap();
+        }
+        let rate = cache.hit_rate();
+        println!(
+            "zipf workload ({n} reqs, {distinct} inputs, 256 entries): hit rate {:.3} \
+             ({} hits, {} misses, {} evicted)",
+            rate,
+            cache.hits(),
+            cache.misses(),
+            cache.evicted()
+        );
+        rate
+    };
+
+    // --- stampede: K identical cold requests, count engine predictions
+    let stampede_calls = {
+        let e = ensemble(EnsembleId::Imn4);
+        let d = DeviceSet::hgx(2);
+        let mut a = AllocationMatrix::zeroed(d.len(), e.len());
+        for m in 0..e.len() {
+            a.set(m % 2, m, 8);
+        }
+        let system = Arc::new(
+            InferenceSystem::build(&a, &e, Arc::new(FakeExecutor::new(d)),
+                                   EngineOptions::default())
+                .unwrap(),
+        );
+        let cache = Arc::new(PredictionCache::with_config(CacheConfig::with_entries(64)));
+        let fp = *system.serving_fingerprint();
+        let k_clients = 32usize;
+        let nb_images = 8usize;
+        let elems = e.members[0].input_elems_per_image();
+        let x: Vec<f32> = vec![0.5; nb_images * elems];
+        let key = request_key("IMN4", &fp, &x, nb_images);
+        let barrier = Barrier::new(k_clients);
+
+        std::thread::scope(|s| {
+            for _ in 0..k_clients {
+                let system = Arc::clone(&system);
+                let cache = &cache;
+                let barrier = &barrier;
+                let x = x.clone();
+                s.spawn(move || {
+                    barrier.wait();
+                    let (rows, _) = cache
+                        .get_or_compute("IMN4", key, move || {
+                            system.predict_rows(Rows::from_vec(x), nb_images)
+                        })
+                        .unwrap();
+                    std::hint::black_box(rows.len());
+                });
+            }
+        });
+        let engine_calls = system.metrics().requests.load(Ordering::Relaxed);
+        println!(
+            "stampede ({k_clients} concurrent identical cold requests): \
+             {engine_calls} engine call(s), {} coalesced",
+            cache.coalesced()
+        );
+        engine_calls
+    };
+
+    common::write_bench_json(&[
+        ("cache_hit_p50_ms", Json::Num(hit_p50_ms)),
+        ("cache_hit_p99_ms", Json::Num(hit_p99_ms)),
+        ("cache_zipf_hit_rate", Json::Num(zipf_hit_rate)),
+        ("cache_stampede_engine_calls", Json::Num(stampede_calls as f64)),
+    ]);
+}

@@ -46,11 +46,7 @@ pub fn cache_fingerprint(ensemble: &Ensemble, devices: &DeviceSet,
                          cfg: &GreedyConfig, cost: &dyn CostModel) -> String {
     let mut h = Fnv128::new();
     h.update(b"ensemble-serve-v4\0");
-    for m in &ensemble.members {
-        h.update(m.name.as_bytes());
-        h.update(format!("|{}|{}|{}|{:?}|{}\0",
-                         m.params_m, m.gflops, m.eff_factor, m.scale, m.classes).as_bytes());
-    }
+    fold_members(&mut h, ensemble);
     for d in devices.iter() {
         h.update(format!("{}|{:?}|{}|{}\0", d.name, d.kind, d.mem_mb, d.eff_gflops).as_bytes());
     }
@@ -61,6 +57,34 @@ pub fn cache_fingerprint(ensemble: &Ensemble, devices: &DeviceSet,
     h.update(format!("cost={}|{}\0", cost.name(), cost.digest()).as_bytes());
     h.update(format!("stale={}\0", cost.staleness_key()).as_bytes());
     h.hex()
+}
+
+/// Fold every member's identity + serving-relevant stats into `h`. The
+/// shared inner loop of [`cache_fingerprint`] and
+/// [`ensemble_fingerprint`]: both must move when what an ensemble *is*
+/// changes, so they move together.
+fn fold_members(h: &mut Fnv128, ensemble: &Ensemble) {
+    for m in &ensemble.members {
+        h.update(m.name.as_bytes());
+        h.update(format!("|{}|{}|{}|{:?}|{}\0",
+                         m.params_m, m.gflops, m.eff_factor, m.scale, m.classes).as_bytes());
+    }
+}
+
+/// Serving-semantics fingerprint of an ensemble: its name plus the
+/// member fold shared with [`cache_fingerprint`]. Two ensembles get the
+/// same fingerprint iff they produce the same outputs for the same
+/// inputs (same members, averaged the same way), which is exactly the
+/// invariant the prediction cache needs — folding this digest into
+/// every request key makes entries cached under an old ensemble
+/// definition unreachable after a reconfiguration, while a hot swap to
+/// a bit-identical replacement keeps the cache warm.
+pub fn ensemble_fingerprint(ensemble: &Ensemble) -> [u8; 16] {
+    let mut h = Fnv128::new();
+    h.update(b"ensemble-fp-v1\0");
+    h.update_field(ensemble.name.as_bytes());
+    fold_members(&mut h, ensemble);
+    h.digest()
 }
 
 impl MatrixCache {
@@ -210,6 +234,23 @@ mod tests {
         // different limits bucket time differently: no aliasing
         store.set_max_cell_age_s(Some(60));
         assert_ne!(limited, cache_fingerprint(&e, &d, &cfg, &profiled));
+    }
+
+    #[test]
+    fn ensemble_fingerprint_tracks_serving_semantics() {
+        let e4 = ensemble(EnsembleId::Imn4);
+        let e12 = ensemble(EnsembleId::Imn12);
+        let base = ensemble_fingerprint(&e4);
+        // stable for an unchanged definition (a bit-identical hot swap
+        // must keep the prediction cache warm)
+        assert_eq!(base, ensemble_fingerprint(&e4));
+        assert_ne!(base, ensemble_fingerprint(&e12), "membership");
+        let mut skewed = e4.clone();
+        skewed.members[0].eff_factor *= 2.0;
+        assert_ne!(base, ensemble_fingerprint(&skewed), "member stats");
+        let mut renamed = e4.clone();
+        renamed.name = "other".to_string();
+        assert_ne!(base, ensemble_fingerprint(&renamed), "ensemble name");
     }
 
     #[test]

@@ -79,6 +79,14 @@ pub struct ServerConfig {
     /// to the analytic formulas for them) instead of trusting stale
     /// measurements forever. `None` (default) = no age limit.
     pub max_cell_age_s: Option<u64>,
+    /// serve: prediction-cache entry capacity. `0` (default) disables
+    /// the cache entirely — predictions always hit the engine.
+    pub cache_entries: usize,
+    /// serve: prediction-cache byte budget, MiB (`--cache-mem-mb`).
+    /// Counts the backing arena buffers pinned by cached views; the
+    /// cache evicts LRU entries when either this or `cache_entries` is
+    /// exceeded. Ignored while `cache_entries` is 0.
+    pub cache_mem_mb: usize,
     /// serve: start with the per-event trace capture ring enabled
     /// (`POST /v1/trace/capture` toggles it at runtime; the per-stage
     /// histograms and the slow-trace ring are always on).
@@ -109,6 +117,8 @@ impl Default for ServerConfig {
             profiles: None,
             calibration_alpha: 0.25,
             max_cell_age_s: None,
+            cache_entries: 0,
+            cache_mem_mb: 256,
             trace_capture: false,
             trace_out: None,
         }
@@ -209,6 +219,13 @@ impl ServerConfig {
             anyhow::ensure!(v > 0, "max_cell_age_s must be positive");
             cfg.max_cell_age_s = Some(v as u64);
         }
+        if let Some(v) = doc.get("cache_entries").and_then(Json::as_usize) {
+            cfg.cache_entries = v;
+        }
+        if let Some(v) = doc.get("cache_mem_mb").and_then(Json::as_usize) {
+            anyhow::ensure!(v > 0, "cache_mem_mb must be positive");
+            cfg.cache_mem_mb = v;
+        }
         if let Some(v) = doc.get("trace_capture").and_then(Json::as_bool) {
             cfg.trace_capture = v;
         }
@@ -254,6 +271,8 @@ mod tests {
         assert_eq!(cfg.forecast_horizon_s, 30.0);
         assert!(!cfg.trace_capture, "event capture defaults off");
         assert!(cfg.trace_out.is_none());
+        assert_eq!(cfg.cache_entries, 0, "prediction cache defaults off");
+        assert_eq!(cfg.cache_mem_mb, 256);
     }
 
     #[test]
@@ -265,8 +284,8 @@ mod tests {
                 "reconfig":true,"p99_slo_ms":120.5,
                 "forecast":false,"forecast_horizon_s":45.5,
                 "profiles":"profiles.json","calibration_alpha":0.5,
-                "max_cell_age_s":900,"trace_capture":true,
-                "trace_out":"trace.json"}"#,
+                "max_cell_age_s":900,"cache_entries":2048,"cache_mem_mb":64,
+                "trace_capture":true,"trace_out":"trace.json"}"#,
         )
         .unwrap();
         let cfg = ServerConfig::from_json(&doc).unwrap();
@@ -289,6 +308,8 @@ mod tests {
         assert_eq!(cfg.profiles.as_deref(), Some("profiles.json"));
         assert_eq!(cfg.calibration_alpha, 0.5);
         assert_eq!(cfg.max_cell_age_s, Some(900));
+        assert_eq!(cfg.cache_entries, 2048);
+        assert_eq!(cfg.cache_mem_mb, 64);
         assert!(cfg.trace_capture);
         assert_eq!(cfg.trace_out.as_deref(), Some("trace.json"));
     }
@@ -330,6 +351,7 @@ mod tests {
             r#"{"calibration_alpha":0}"#,
             r#"{"calibration_alpha":1.5}"#,
             r#"{"max_cell_age_s":0}"#,
+            r#"{"cache_mem_mb":0}"#,
             r#"{"trace_out":""}"#,
         ] {
             let doc = Json::parse(bad).unwrap();

@@ -201,6 +201,21 @@ impl Rows {
         Rows { buf: Arc::clone(&self.buf), off: self.off + off, len }
     }
 
+    /// Bytes of backing storage this view keeps alive: the whole
+    /// buffer's *capacity*, not the slice length, because any live view
+    /// pins its entire buffer. This is the figure a byte-budget
+    /// accounting (the prediction cache's `cache_mem_mb`) must charge.
+    pub fn backing_bytes(&self) -> usize {
+        self.buf.buf.capacity() * std::mem::size_of::<f32>()
+    }
+
+    /// Do two views share the same backing buffer? O(1). This is the
+    /// zero-copy witness used by the cache tests: a cache hit must
+    /// alias the stored buffer, never copy it.
+    pub fn same_buffer(&self, other: &Rows) -> bool {
+        Arc::ptr_eq(&self.buf, &other.buf)
+    }
+
     /// Extract an owned `Vec`. Zero-copy when this is the last view of
     /// the whole buffer (the buffer is *stolen* from its arena — the
     /// final hand-off to a client); otherwise copies just this range.
@@ -303,6 +318,20 @@ mod tests {
         assert_eq!(tail.clone().into_vec(), vec![3.0, 4.0]);
         assert_eq!(rows.clone().into_vec(), vec![1.0, 2.0, 3.0, 4.0]);
         drop((rows, tail));
+    }
+
+    #[test]
+    fn backing_bytes_charge_the_whole_buffer() {
+        let mut v = Vec::with_capacity(16);
+        v.extend_from_slice(&[1.0f32, 2.0]);
+        let cap = v.capacity();
+        let rows = Rows::from_vec(v);
+        assert_eq!(rows.backing_bytes(), cap * 4);
+        // a sub-view pins the same buffer, so it charges the same
+        let sub = rows.slice(0, 1);
+        assert_eq!(sub.backing_bytes(), cap * 4);
+        assert!(sub.same_buffer(&rows));
+        assert!(!sub.same_buffer(&Rows::from_vec(vec![1.0])));
     }
 
     #[test]

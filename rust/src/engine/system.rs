@@ -252,6 +252,15 @@ impl Lingering {
 /// active at any instant.
 pub struct InferenceSystem {
     ensemble: Ensemble,
+    /// Serving-semantics fingerprint of `ensemble`
+    /// ([`crate::alloc::cache::ensemble_fingerprint`]), computed once at
+    /// build. The prediction cache folds it into every request key, so
+    /// a registry re-registration that changes what this tenant serves
+    /// can never surface a stale cached output. Reconfigurations keep
+    /// the same ensemble (and PR 7's data plane keeps outputs
+    /// bit-identical across swaps), so the fingerprint — deliberately —
+    /// does not fold the generation id: a hot swap keeps the cache warm.
+    fingerprint: [u8; 16],
     opts: EngineOptions,
     executor: Arc<dyn Executor>,
     metrics: Arc<EngineMetrics>,
@@ -326,6 +335,7 @@ impl InferenceSystem {
         };
         Ok(InferenceSystem {
             ensemble: ensemble.clone(),
+            fingerprint: crate::alloc::cache::ensemble_fingerprint(ensemble),
             opts,
             executor,
             metrics,
@@ -815,6 +825,12 @@ impl InferenceSystem {
 
     pub fn ensemble(&self) -> &Ensemble {
         &self.ensemble
+    }
+
+    /// Serving-semantics fingerprint folded into prediction-cache keys
+    /// (see the field docs on [`InferenceSystem`]).
+    pub fn serving_fingerprint(&self) -> &[u8; 16] {
+        &self.fingerprint
     }
 
     pub fn metrics(&self) -> &EngineMetrics {

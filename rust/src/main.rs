@@ -30,6 +30,7 @@ use ensemble_serve::reconfig::{
     plan_joint, ForecastConfig, MultiTenantController, MultiTenantOptions, PlannerConfig,
     PolicyConfig, ReconfigController, ReconfigOptions, Tenant, TenantSpec,
 };
+use ensemble_serve::server::cache::CacheConfig;
 use ensemble_serve::server::{ApiServer, SystemRegistry};
 use ensemble_serve::util::cli::Cli;
 
@@ -57,6 +58,10 @@ costs; serve exposes /v1/profiles and calibrates online")
 (fall back to analytic for them); default: trust forever")
         .opt("trace-out", None, "serve: periodically write the captured trace window \
 as Chrome trace-event JSON to FILE (implies --trace-capture)")
+        .opt("cache-entries", None, "serve: prediction-cache entry capacity \
+(0 = disabled, the default)")
+        .opt("cache-mem-mb", None, "serve: prediction-cache byte budget in MiB \
+(default 256; only meaningful with --cache-entries)")
         .opt("out", None, "profile: output path (default profiles.json)")
         .opt("batches", None, "profile: comma-separated batch sizes (default 8,16,32,64,128)")
         .opt("reps", None, "profile: measured predicts per cell (default 3)")
@@ -169,6 +174,13 @@ fn config_from(args: &ensemble_serve::util::cli::Args) -> anyhow::Result<ServerC
         anyhow::ensure!(v > 0, "max-cell-age-s must be positive");
         cfg.max_cell_age_s = Some(v);
     }
+    if let Some(v) = args.get_usize("cache-entries")? {
+        cfg.cache_entries = v;
+    }
+    if let Some(v) = args.get_usize("cache-mem-mb")? {
+        anyhow::ensure!(v > 0, "cache-mem-mb must be positive");
+        cfg.cache_mem_mb = v;
+    }
     if args.has_flag("trace-capture") {
         cfg.trace_capture = true;
     }
@@ -224,6 +236,23 @@ fn forecast_config_from(cfg: &ServerConfig) -> ForecastConfig {
         horizon: std::time::Duration::from_secs_f64(cfg.forecast_horizon_s),
         ..ForecastConfig::default()
     }
+}
+
+/// Prediction-cache knobs (`--cache-entries` / `--cache-mem-mb`); the
+/// cache is off unless an entry capacity is set.
+fn cache_config_from(cfg: &ServerConfig) -> Option<CacheConfig> {
+    (cfg.cache_entries > 0).then(|| {
+        log::info!(
+            "prediction cache: {} entries, {} MiB budget",
+            cfg.cache_entries,
+            cfg.cache_mem_mb
+        );
+        CacheConfig {
+            entries: cfg.cache_entries,
+            mem_bytes: cfg.cache_mem_mb * 1024 * 1024,
+            shards: 0,
+        }
+    })
 }
 
 fn make_executor(cfg: &ServerConfig) -> anyhow::Result<Arc<dyn Executor>> {
@@ -424,13 +453,17 @@ fn run(args: &ensemble_serve::util::cli::Args) -> anyhow::Result<()> {
             } else {
                 None
             };
+            let cache = cache_config_from(&cfg);
             let api = ApiServer::start_single(system, &cfg.listen, cfg.http_threads,
-                                              controller, profile_store.clone())?;
+                                              cache, controller, profile_store.clone())?;
             println!("serving {} on http://{}", ensemble.name, api.addr());
             println!("  POST /v1/predict   GET /v1/health  /v1/stats  /v1/metrics  /v1/matrix");
             println!("  GET /v1/stages  /v1/trace/slow  /v1/trace/export   POST /v1/trace/capture");
             if cfg.reconfig {
                 println!("  POST /v1/reconfigure   GET /v1/reconfig/status");
+            }
+            if cfg.cache_entries > 0 {
+                println!("  GET /v1/cache");
             }
             if profile_store.is_some() {
                 println!("  GET /v1/profiles");
@@ -548,7 +581,8 @@ fn serve_multi_tenant(cfg: &ServerConfig) -> anyhow::Result<()> {
     };
 
     let names = registry.names().join(", ");
-    let api = ApiServer::start_registry(registry, &cfg.listen, cfg.http_threads, None,
+    let cache = cache_config_from(cfg);
+    let api = ApiServer::start_registry(registry, &cfg.listen, cfg.http_threads, cache,
                                         controller, profile_store.clone())?;
     println!("serving tenants [{names}] on http://{}", api.addr());
     println!("  POST /v1/predict (x-ensemble: <name>)   GET /v1/ensembles");
@@ -556,6 +590,9 @@ fn serve_multi_tenant(cfg: &ServerConfig) -> anyhow::Result<()> {
     println!("  GET /v1/stages  /v1/trace/slow  /v1/trace/export   POST /v1/trace/capture");
     if cfg.reconfig {
         println!("  POST /v1/reconfigure   GET /v1/reconfig/status");
+    }
+    if cfg.cache_entries > 0 {
+        println!("  GET /v1/cache");
     }
     if profile_store.is_some() {
         println!("  GET /v1/profiles");

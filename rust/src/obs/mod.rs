@@ -35,11 +35,11 @@ use std::time::{Duration, Instant};
 use crate::metrics::LatencyHistogram;
 
 /// Number of traced pipeline stages (the length of [`STAGE_NAMES`]).
-pub const N_STAGES: usize = 6;
+pub const N_STAGES: usize = 7;
 
 /// Stage names, indexed by [`Stage`] discriminants.
 pub const STAGE_NAMES: [&str; N_STAGES] =
-    ["gate_wait", "batcher_wait", "seal", "predict", "combine", "reply"];
+    ["gate_wait", "batcher_wait", "seal", "predict", "combine", "reply", "cache"];
 
 /// One pipeline stage of a request's journey.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -60,6 +60,11 @@ pub enum Stage {
     Combine = 4,
     /// Reply delivery: combine finalized until the caller woke up.
     Reply = 5,
+    /// Prediction-cache front end: lookup on a hit, coalesced wait on
+    /// an attached miss, or the leader's cache bookkeeping (the engine
+    /// time itself is carved out by the caller). Appended after the
+    /// engine stages so existing discriminants stay stable.
+    Cache = 6,
 }
 
 impl Stage {
@@ -382,6 +387,15 @@ impl TraceHub {
         self.push_span(Stage::BatcherWait, 0, enqueued_us, dur_us);
     }
 
+    /// Record one prediction-cache front-end span (per client request,
+    /// cached deployments only): pure cache time — the hit lookup, the
+    /// coalesced wait, or the leader's bookkeeping with the engine call
+    /// subtracted out by the caller.
+    pub fn record_cache(&self, start_us: u64, dur_us: u64) {
+        self.stages[Stage::Cache.index()].record(Duration::from_micros(dur_us));
+        self.push_span(Stage::Cache, 0, start_us, dur_us);
+    }
+
     /// Fold one completed request into the stage histograms and the
     /// slow-trace ring. `start_us`/`end_us` bound the whole `predict`
     /// call; `gate_us` is the intake-gate wait measured by the system.
@@ -523,6 +537,7 @@ mod tests {
             Stage::Predict,
             Stage::Combine,
             Stage::Reply,
+            Stage::Cache,
         ]
         .into_iter()
         .enumerate()

@@ -33,8 +33,8 @@
 //!   `forecast` (trend projection at the horizon) — per tenant under a
 //!   multi-tenant controller.
 //! * `GET /v1/stages` — per-stage latency breakdown (gate wait,
-//!   batcher wait, seal, predict, combine, reply) of the selected
-//!   tenant's pipeline, from the [`crate::obs`] trace hub.
+//!   batcher wait, seal, predict, combine, reply, cache) of the
+//!   selected tenant's pipeline, from the [`crate::obs`] trace hub.
 //! * `GET /v1/trace/slow` — the N slowest + M most recent complete
 //!   traces with their per-stage spans.
 //! * `GET /v1/trace/export` — the captured event window as Chrome
@@ -42,6 +42,10 @@
 //! * `POST /v1/trace/capture` — toggle the per-event capture ring;
 //!   body `{"capture": true|false}` (absent = toggle) and optional
 //!   `{"clear": true}` to drop the captured window first.
+//! * `GET /v1/cache` — prediction-cache occupancy (entries, bytes,
+//!   shards, in-flight leaders) and per-tenant
+//!   hit/miss/coalesced/evicted counters. `404` when the deployment
+//!   runs without a cache.
 //! * `GET /v1/profiles` — the measured cost-model cells: per
 //!   (model, device-class, batch) measured latency next to the
 //!   analytic prediction (delta %), sample counts, source
@@ -55,13 +59,14 @@
 
 use std::collections::BTreeMap;
 use std::sync::{Arc, RwLock};
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use crate::cost::ProfileStore;
+use crate::engine::arena::Rows;
 use crate::engine::{InferenceSystem, SwapStrategy};
 use crate::metrics::LatencyHistogram;
 use crate::reconfig::{MultiTenantController, ReconfigBusy, ReconfigController};
-use crate::server::cache::{request_key, PredictionCache};
+use crate::server::cache::{request_key, CacheConfig, Outcome, PredictionCache, TenantSnapshot};
 use crate::server::http::{Handler, HttpServer, Request, Response};
 use crate::server::selection::SystemRegistry;
 use crate::util::json::Json;
@@ -117,7 +122,8 @@ impl ApiServer {
                          AdminController::None, None)
     }
 
-    /// Start with a prediction cache of `cache_capacity` entries.
+    /// Start with a prediction cache of `cache_capacity` entries (and
+    /// the default byte budget / sharding).
     pub fn start_cached(system: Arc<InferenceSystem>, addr: &str, threads: usize,
                         cache_capacity: usize) -> anyhow::Result<ApiServer> {
         Self::start_opts(Self::singleton(system), addr, threads,
@@ -125,9 +131,11 @@ impl ApiServer {
                          AdminController::None, None)
     }
 
-    /// The general single-tenant entry point: optional controller
-    /// (admin routes) and optional profile store (`GET /v1/profiles`).
+    /// The general single-tenant entry point: optional prediction
+    /// cache, optional controller (admin routes) and optional profile
+    /// store (`GET /v1/profiles`).
     pub fn start_single(system: Arc<InferenceSystem>, addr: &str, threads: usize,
+                        cache: Option<CacheConfig>,
                         controller: Option<Arc<ReconfigController>>,
                         profiles: Option<Arc<ProfileStore>>)
         -> anyhow::Result<ApiServer> {
@@ -135,16 +143,17 @@ impl ApiServer {
             Some(c) => AdminController::Single(c),
             None => AdminController::None,
         };
-        Self::start_opts(Self::singleton(system), addr, threads, None, admin, profiles)
+        Self::start_opts(Self::singleton(system), addr, threads,
+                         cache.map(PredictionCache::with_config), admin, profiles)
     }
 
     /// Start over a (possibly multi-tenant) registry; `x-ensemble`
     /// selects the serving system per request. `controller` wires the
-    /// admin routes to a multi-tenant arbiter, `cache_capacity` enables
-    /// the shared tenant-scoped prediction cache, `profiles` the
-    /// measured cost-model report.
+    /// admin routes to a multi-tenant arbiter, `cache` enables the
+    /// shared tenant-scoped prediction cache, `profiles` the measured
+    /// cost-model report.
     pub fn start_registry(registry: Arc<SystemRegistry>, addr: &str, threads: usize,
-                          cache_capacity: Option<usize>,
+                          cache: Option<CacheConfig>,
                           controller: Option<Arc<MultiTenantController>>,
                           profiles: Option<Arc<ProfileStore>>)
         -> anyhow::Result<ApiServer> {
@@ -154,7 +163,7 @@ impl ApiServer {
             None => AdminController::None,
         };
         Self::start_opts(registry, addr, threads,
-                         cache_capacity.map(PredictionCache::new), admin, profiles)
+                         cache.map(PredictionCache::with_config), admin, profiles)
     }
 
     fn singleton(system: Arc<InferenceSystem>) -> Arc<SystemRegistry> {
@@ -218,6 +227,7 @@ fn route(state: &ApiState, req: &Request) -> Response {
         ("GET", "/v1/metrics") => prometheus(state, req),
         ("GET", "/v1/matrix") => matrix(state, req),
         ("GET", "/v1/ensembles") => ensembles(state),
+        ("GET", "/v1/cache") => cache_report(state),
         ("GET", "/v1/stages") => stages(state, req),
         ("GET", "/v1/trace/slow") => trace_slow(state, req),
         ("GET", "/v1/trace/export") => trace_export(state, req),
@@ -266,7 +276,13 @@ fn stats(state: &ApiState, req: &Request) -> Response {
     fields.push(("swaps", Json::Num(system.swap_count() as f64)));
     if let Some(cache) = &state.cache {
         fields.push(("cache_entries", Json::Num(cache.len() as f64)));
+        fields.push(("cache_bytes", Json::Num(cache.bytes() as f64)));
         fields.push(("cache_hit_rate", Json::Num(cache.hit_rate())));
+        let t = cache.tenant_snapshot(&name);
+        fields.push(("cache_hits", Json::Num(t.hits as f64)));
+        fields.push(("cache_misses", Json::Num(t.misses as f64)));
+        fields.push(("cache_coalesced", Json::Num(t.coalesced as f64)));
+        fields.push(("cache_evicted", Json::Num(t.evicted as f64)));
     }
     fields.push((
         "device_busy_us",
@@ -316,6 +332,55 @@ fn ensembles(state: &ApiState) -> Response {
     )
 }
 
+/// Prediction-cache occupancy and effectiveness: global gauges,
+/// per-shard fill, and the per-tenant hit/miss/coalesced/evicted
+/// counters. `404` when the deployment runs without a cache.
+fn cache_report(state: &ApiState) -> Response {
+    let Some(cache) = &state.cache else {
+        return Response::text(404, "no prediction cache configured (serve --cache-entries)");
+    };
+    let shards: Vec<Json> = cache
+        .shard_sizes()
+        .into_iter()
+        .map(|(entries, bytes)| {
+            Json::from_pairs([
+                ("entries", Json::Num(entries as f64)),
+                ("bytes", Json::Num(bytes as f64)),
+            ])
+        })
+        .collect();
+    let tenants: Vec<Json> = cache
+        .tenant_stats()
+        .into_iter()
+        .map(|(tenant, t)| {
+            Json::from_pairs([
+                ("tenant", Json::Str(tenant)),
+                ("hits", Json::Num(t.hits as f64)),
+                ("misses", Json::Num(t.misses as f64)),
+                ("coalesced", Json::Num(t.coalesced as f64)),
+                ("evicted", Json::Num(t.evicted as f64)),
+                ("inserted", Json::Num(t.inserted as f64)),
+            ])
+        })
+        .collect();
+    let body = Json::from_pairs([
+        ("entries", Json::Num(cache.len() as f64)),
+        ("bytes", Json::Num(cache.bytes() as f64)),
+        ("capacity_entries", Json::Num(cache.capacity_entries() as f64)),
+        ("capacity_bytes", Json::Num(cache.capacity_bytes() as f64)),
+        ("hit_rate", Json::Num(cache.hit_rate())),
+        ("hits", Json::Num(cache.hits() as f64)),
+        ("misses", Json::Num(cache.misses() as f64)),
+        ("coalesced", Json::Num(cache.coalesced() as f64)),
+        ("evicted", Json::Num(cache.evicted() as f64)),
+        ("inserted", Json::Num(cache.inserted() as f64)),
+        ("in_flight", Json::Num(cache.in_flight() as f64)),
+        ("shards", Json::Arr(shards)),
+        ("tenants", Json::Arr(tenants)),
+    ]);
+    Response::json(200, body.to_string())
+}
+
 /// Prometheus text exposition (v0.0.4) of the engine counters,
 /// per-device busy gauges and both latency histograms.
 ///
@@ -332,7 +397,11 @@ fn prometheus(state: &ApiState, req: &Request) -> Response {
             Ok(pair) => pair,
             Err(resp) => return resp,
         };
-        let out = tenant_exposition(&[(name, system)], &|n| state.tenant_latency(n), false);
+        let mut out = tenant_exposition(&[(name.clone(), system)], &|n| state.tenant_latency(n),
+                                        false);
+        if let Some(cache) = &state.cache {
+            out.push_str(&cache_exposition(cache, Some(&name), false));
+        }
         return Response {
             status: 200,
             content_type: "text/plain; version=0.0.4",
@@ -345,8 +414,42 @@ fn prometheus(state: &ApiState, req: &Request) -> Response {
         .iter()
         .filter_map(|n| state.registry.select_named(Some(n.as_str())))
         .collect();
-    let out = tenant_exposition(&tenants, &|n| state.tenant_latency(n), true);
+    let mut out = tenant_exposition(&tenants, &|n| state.tenant_latency(n), true);
+    if let Some(cache) = &state.cache {
+        out.push_str(&cache_exposition(cache, None, true));
+    }
     Response { status: 200, content_type: "text/plain; version=0.0.4", body: out.into_bytes() }
+}
+
+/// Cache counters in exposition format. `only` restricts to one
+/// tenant's counters (single-tenant scrape, unlabeled legacy format);
+/// otherwise every tenant that touched the cache is exported with a
+/// `tenant="..."` label. Occupancy gauges are cache-global either way.
+fn cache_exposition(cache: &PredictionCache, only: Option<&str>, labeled: bool) -> String {
+    let mut out = String::new();
+    let counters: Vec<(String, TenantSnapshot)> = match only {
+        Some(name) => vec![(name.to_string(), cache.tenant_snapshot(name))],
+        None => cache.tenant_stats(),
+    };
+    let fields: [(&str, fn(&TenantSnapshot) -> u64); 5] = [
+        ("cache_hits", |t| t.hits),
+        ("cache_misses", |t| t.misses),
+        ("cache_coalesced", |t| t.coalesced),
+        ("cache_evicted", |t| t.evicted),
+        ("cache_inserted", |t| t.inserted),
+    ];
+    for (k, get) in fields {
+        out.push_str(&format!("# TYPE ensemble_serve_{k}_total counter\n"));
+        for (name, snap) in &counters {
+            let label = if labeled { format!("{{tenant=\"{name}\"}}") } else { String::new() };
+            out.push_str(&format!("ensemble_serve_{k}_total{label} {}\n", get(snap)));
+        }
+    }
+    out.push_str("# TYPE ensemble_serve_cache_entries gauge\n");
+    out.push_str(&format!("ensemble_serve_cache_entries {}\n", cache.len()));
+    out.push_str("# TYPE ensemble_serve_cache_bytes gauge\n");
+    out.push_str(&format!("ensemble_serve_cache_bytes {}\n", cache.bytes()));
+    out
 }
 
 /// Render the exposition for `tenants`; `labeled` adds `tenant="..."`
@@ -919,32 +1022,52 @@ fn predict(state: &ApiState, req: &Request) -> Response {
         return Response::text(400, "image count does not divide payload");
     }
 
-    // redundant-request cache (§I.B), scoped by serving tenant (both in
-    // the digest and in the ownership check on the entry)
-    let key = state.cache.as_ref().map(|_| request_key(&tenant, &x, n));
-    if let (Some(cache), Some(k)) = (&state.cache, &key) {
-        if let Some(y) = cache.get(&tenant, k) {
-            latency.record(t0.elapsed());
-            return encode_predictions(y, n, binary);
-        }
+    // redundant-request cache (§I.B): the serving tenant and the
+    // ensemble's serving fingerprint are both in the digest (and
+    // ownership is re-checked on the entry), so a hit can never cross
+    // tenants or survive a re-registration that changed the ensemble.
+    // Concurrent identical misses coalesce onto one engine call; the
+    // answer is a refcounted `Rows` stored and served without copies.
+    if let Some(cache) = &state.cache {
+        let key = request_key(&tenant, system.serving_fingerprint(), &x, n);
+        let trace_start = system.metrics().trace.now_us();
+        let sys = Arc::clone(&system);
+        let result =
+            cache.get_or_compute(&tenant, key, move || sys.predict_rows(Rows::from_vec(x), n));
+        return match result {
+            Ok((y, outcome)) => {
+                let compute = match outcome {
+                    Outcome::Computed { compute } => compute,
+                    Outcome::Hit | Outcome::Coalesced => Duration::ZERO,
+                };
+                let total = t0.elapsed();
+                // the cache span is pure front-end time: lookup for a
+                // hit, the parked wait for a coalesced request, and for
+                // the leader everything EXCEPT the engine call
+                let cache_us = total.saturating_sub(compute).as_micros() as u64;
+                system.metrics().trace.record_cache(trace_start, cache_us);
+                latency.record(total);
+                encode_predictions(&y, n, binary)
+            }
+            Err(e) => Response::text(503, &format!("prediction failed: {e:#}")),
+        };
     }
 
-    match system.predict(x, n) {
+    match system.predict_rows(Rows::from_vec(x), n) {
         Ok(y) => {
             latency.record(t0.elapsed());
-            if let (Some(cache), Some(k)) = (&state.cache, key) {
-                cache.put(&tenant, k, y.clone());
-            }
-            encode_predictions(y, n, binary)
+            encode_predictions(&y, n, binary)
         }
         Err(e) => Response::text(503, &format!("prediction failed: {e:#}")),
     }
 }
 
-fn encode_predictions(y: Vec<f32>, n: usize, binary: bool) -> Response {
+/// Serialize an answer straight from a borrowed slice — cache hits
+/// encode directly out of the stored `Rows` with no intermediate copy.
+fn encode_predictions(y: &[f32], n: usize, binary: bool) -> Response {
     if binary {
         let mut bytes = Vec::with_capacity(y.len() * 4);
-        for v in &y {
+        for v in y {
             bytes.extend_from_slice(&v.to_le_bytes());
         }
         Response::binary(bytes)
@@ -1181,7 +1304,7 @@ mod tests {
                 histograms += 1;
             }
         }
-        // e2e predict + http + six pipeline stages, single tenant
+        // e2e predict + http + seven pipeline stages, single tenant
         assert!(histograms >= 8, "expected >=8 histograms, saw {histograms}");
     }
 
@@ -1295,7 +1418,7 @@ mod tests {
         store.record(&e.members[0].name, &d[0].class_key(), 8, analytic * 2.0, None, 3);
         store.record("NotInThisEnsemble", &d[0].class_key(), 8, 5.0, None, 1);
         let srv =
-            ApiServer::start_single(sys, "127.0.0.1:0", 2, None, Some(store)).unwrap();
+            ApiServer::start_single(sys, "127.0.0.1:0", 2, None, None, Some(store)).unwrap();
         let (code, body) = http_request(srv.addr(), "GET", "/v1/profiles", "", b"").unwrap();
         assert_eq!(code, 200);
         let j = Json::parse(std::str::from_utf8(&body).unwrap()).unwrap();
@@ -1358,7 +1481,8 @@ mod tests {
         );
         let ctrl = ReconfigController::start(Arc::clone(&sys), ReconfigOptions::default());
         ctrl.stop(); // admin-only in this test: no background ticks
-        let srv = ApiServer::start_single(sys, "127.0.0.1:0", 2, Some(ctrl), None).unwrap();
+        let srv =
+            ApiServer::start_single(sys, "127.0.0.1:0", 2, None, Some(ctrl), None).unwrap();
 
         let (code, body) = http_request(srv.addr(), "GET", "/v1/reconfig/status", "", b"")
             .unwrap();
@@ -1412,6 +1536,75 @@ mod tests {
         let j = Json::parse(std::str::from_utf8(&body).unwrap()).unwrap();
         assert_eq!(j.get("failed_devices").unwrap().as_arr().unwrap().len(), 0,
                    "rejected request partially applied");
+    }
+
+    #[test]
+    fn cache_route_stats_and_metrics() {
+        // no cache configured: /v1/cache is 404, stats has no cache keys
+        let srv = api();
+        let (code, _) = http_request(srv.addr(), "GET", "/v1/cache", "", b"").unwrap();
+        assert_eq!(code, 404);
+
+        let e = ensemble(EnsembleId::Imn4);
+        let d = DeviceSet::hgx(2);
+        let mut a = AllocationMatrix::zeroed(d.len(), e.len());
+        for m in 0..e.len() {
+            a.set(m % 2, m, 8);
+        }
+        let sys = Arc::new(
+            InferenceSystem::build(&a, &e, Arc::new(FakeExecutor::new(d)),
+                                   EngineOptions::default())
+                .unwrap(),
+        );
+        let srv = ApiServer::start_cached(sys, "127.0.0.1:0", 2, 16).unwrap();
+        let elems = srv.system().ensemble().members[0].input_elems_per_image();
+        let row = format!("[{}]", vec!["0.5"; elems].join(","));
+        let body = format!("{{\"images\":[{row}]}}");
+        // identical request twice: one miss + one hit, bit-identical
+        let (code, first) = http_request(srv.addr(), "POST", "/v1/predict",
+                                         "application/json", body.as_bytes())
+            .unwrap();
+        assert_eq!(code, 200, "{}", String::from_utf8_lossy(&first));
+        let (code, second) = http_request(srv.addr(), "POST", "/v1/predict",
+                                          "application/json", body.as_bytes())
+            .unwrap();
+        assert_eq!(code, 200);
+        assert_eq!(first, second, "cache hit diverged from the engine's answer");
+
+        let (code, body) = http_request(srv.addr(), "GET", "/v1/cache", "", b"").unwrap();
+        assert_eq!(code, 200);
+        let j = Json::parse(std::str::from_utf8(&body).unwrap()).unwrap();
+        assert_eq!(j.get("entries").unwrap().as_usize(), Some(1));
+        assert_eq!(j.get("hits").unwrap().as_usize(), Some(1));
+        assert_eq!(j.get("misses").unwrap().as_usize(), Some(1));
+        assert!(j.get("bytes").unwrap().as_f64().unwrap() > 0.0);
+        let tenants = j.get("tenants").unwrap().as_arr().unwrap();
+        assert_eq!(tenants.len(), 1);
+        assert_eq!(tenants[0].get("tenant").unwrap().as_str(), Some("IMN4"));
+        assert_eq!(tenants[0].get("hits").unwrap().as_usize(), Some(1));
+
+        let (_, body) = http_request(srv.addr(), "GET", "/v1/stats", "", b"").unwrap();
+        let j = Json::parse(std::str::from_utf8(&body).unwrap()).unwrap();
+        assert_eq!(j.get("cache_hits").unwrap().as_usize(), Some(1));
+        assert_eq!(j.get("cache_misses").unwrap().as_usize(), Some(1));
+        assert_eq!(j.get("cache_coalesced").unwrap().as_usize(), Some(0));
+        assert!((j.get("cache_hit_rate").unwrap().as_f64().unwrap() - 0.5).abs() < 1e-9);
+
+        let (_, body) = http_request(srv.addr(), "GET", "/v1/metrics", "", b"").unwrap();
+        let text = String::from_utf8(body).unwrap();
+        assert!(text.contains("# TYPE ensemble_serve_cache_hits_total counter"), "{text}");
+        assert!(text.contains("ensemble_serve_cache_hits_total 1"), "{text}");
+        assert!(text.contains("ensemble_serve_cache_entries 1"), "{text}");
+
+        // the cache stage recorded both requests' front-end spans
+        let (_, body) = http_request(srv.addr(), "GET", "/v1/stages", "", b"").unwrap();
+        let j = Json::parse(std::str::from_utf8(&body).unwrap()).unwrap();
+        let rows = j.get("stages").unwrap().as_arr().unwrap();
+        let cache_row = rows
+            .iter()
+            .find(|r| r.get("stage").unwrap().as_str() == Some("cache"))
+            .unwrap();
+        assert_eq!(cache_row.get("count").unwrap().as_usize(), Some(2));
     }
 
     #[test]

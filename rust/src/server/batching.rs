@@ -40,7 +40,7 @@ const DEFAULT_MAX_INFLIGHT: usize = 4;
 
 /// One buffered client request.
 struct PendingReq {
-    x: Vec<f32>,
+    x: Rows,
     nb_images: usize,
     /// Enqueue stamp (µs since the system trace hub's epoch) — the
     /// start of this request's batcher-wait span.
@@ -116,8 +116,11 @@ impl AdaptiveBatcher {
     }
 
     /// [`Self::predict`] returning a zero-copy [`Rows`] slice of the
-    /// coalesced engine answer.
-    pub fn predict_rows(&self, x: Vec<f32>, nb_images: usize) -> anyhow::Result<Rows> {
+    /// coalesced engine answer. Accepts anything convertible to
+    /// [`Rows`], so input that is already arena-backed (e.g. a view the
+    /// prediction cache handed out) is adopted without a copy.
+    pub fn predict_rows(&self, x: impl Into<Rows>, nb_images: usize) -> anyhow::Result<Rows> {
+        let x: Rows = x.into();
         anyhow::ensure!(nb_images > 0, "empty request");
         anyhow::ensure!(x.len() % nb_images == 0, "ragged request");
         let (tx, rx) = std::sync::mpsc::sync_channel(1);
@@ -226,7 +229,7 @@ impl AdaptiveBatcher {
             .expect("spawn batch flush");
     }
 
-    fn flush(&self, mut batch: Vec<PendingReq>) {
+    fn flush(&self, batch: Vec<PendingReq>) {
         // each client request's queue wait ends at this flush
         let trace = &self.system.metrics().trace;
         let now = trace.now_us();
@@ -245,8 +248,9 @@ impl AdaptiveBatcher {
             return;
         }
         let x: Rows = if batch.len() == 1 {
-            // single request: adopt its buffer outright, no copy
-            Rows::from_vec(std::mem::take(&mut batch[0].x))
+            // single request: share its buffer outright (O(1) clone of
+            // an arena view), no copy
+            batch[0].x.clone()
         } else {
             // concatenate into a pooled arena buffer
             let mut buf = self.arena.take(total * elems);

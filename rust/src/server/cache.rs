@@ -1,17 +1,43 @@
 //! Prediction cache (§I.B): "to improve performance under redundant
 //! requests, caching allows avoiding recomputing similar requests".
 //!
-//! An LRU keyed by the content hash of (serving tenant, request
-//! payload). Entries store the full ensemble output; hits skip the
-//! engine entirely. The tenant name is part of the key because one
-//! cache may sit in front of several registered ensembles: the same
-//! pixels sent to tenant "fast" and tenant "accurate" are different
-//! requests with different answers.
+//! A sharded, zero-copy, stampede-proof front end over the engine:
+//!
+//! - **Sharding.** The key space is lock-striped into power-of-two
+//!   shards selected by the high bits of the request digest. Each shard
+//!   is an independent LRU with a slab-backed intrusive list — touch
+//!   and evict are O(1), never a full-map scan.
+//! - **Byte budget.** Capacity is dual: an entry cap *and* a byte
+//!   budget ([`CacheConfig::mem_bytes`], `--cache-mem-mb` on the CLI)
+//!   charged at the *backing-buffer* granularity ([`Rows::backing_bytes`]),
+//!   so a few huge ensemble outputs cannot blow process memory while
+//!   thousands of small ones still fit.
+//! - **Zero-copy values.** Entries store the refcounted [`Rows`] views
+//!   produced by the engine's arena data plane. A hit clones an
+//!   `Arc` + two `usize`s — no allocation, no `memcpy` — and the
+//!   engine's answer is inserted without copying out of the arena.
+//! - **Single-flight coalescing.** A per-shard in-flight table maps
+//!   digest → leader. Concurrent identical misses attach to the
+//!   leader's pending computation and all receive the *same* `Rows` on
+//!   completion; a leader failure (error or panic) wakes the waiters
+//!   with the error and leaves the key retryable. One engine call per
+//!   key burst — no thundering herd.
+//!
+//! The tenant name is part of the key because one cache may sit in
+//! front of several registered ensembles: the same pixels sent to
+//! tenant "fast" and tenant "accurate" are different requests with
+//! different answers. A serving fingerprint (derived from the ensemble
+//! content, see [`crate::alloc::cache::ensemble_fingerprint`]) is also
+//! folded in, so a hot swap that changes what an ensemble *is* can
+//! never serve a stale output — the old entries simply become
+//! unreachable and age out.
 
-use std::collections::HashMap;
+use std::collections::{BTreeMap, HashMap};
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Mutex, OnceLock};
+use std::sync::{Arc, Condvar, Mutex, OnceLock, RwLock};
+use std::time::{Duration, Instant};
 
+use crate::engine::arena::Rows;
 use crate::util::hash::Fnv128;
 
 /// Per-process salt folded into every request key. FNV-1a is
@@ -38,17 +64,23 @@ fn process_salt() -> &'static [u8; 16] {
     })
 }
 
-/// Content key of a request: (salt, tenant, image count, payload).
+/// Content key of a request: (salt, serving fingerprint, tenant, image
+/// count, payload).
 ///
 /// `tenant` is the registry name of the ensemble answering the request
 /// (use `""` for a single-tenant deployment — any constant works as
-/// long as it is consistent). Fields are length-prefixed, so no
-/// (tenant, payload) pair can alias another by concatenation. Keys are
-/// salted per process (see [`process_salt`]) and must never be
-/// persisted.
-pub fn request_key(tenant: &str, x: &[f32], nb_images: usize) -> [u8; 16] {
+/// long as it is consistent). `fingerprint` is the serving-semantics
+/// fingerprint of the ensemble answering the request
+/// ([`crate::engine::InferenceSystem::serving_fingerprint`]); folding
+/// it in makes every entry cached under an old ensemble definition
+/// unreachable after a reconfiguration that changes the ensemble.
+/// Fields are length-prefixed, so no (tenant, payload) pair can alias
+/// another by concatenation. Keys are salted per process (see
+/// [`process_salt`]) and must never be persisted.
+pub fn request_key(tenant: &str, fingerprint: &[u8; 16], x: &[f32], nb_images: usize) -> [u8; 16] {
     let mut h = Fnv128::new();
     h.update(process_salt());
+    h.update_field(fingerprint);
     h.update_field(tenant.as_bytes());
     h.update((nb_images as u64).to_le_bytes().as_slice());
     // hash raw f32 bytes
@@ -59,86 +91,645 @@ pub fn request_key(tenant: &str, x: &[f32], nb_images: usize) -> [u8; 16] {
     h.digest()
 }
 
-struct Entry {
+/// Sizing of a [`PredictionCache`]. `entries == 0` is rejected; use
+/// `Option<CacheConfig>` to express "no cache".
+#[derive(Debug, Clone, Copy)]
+pub struct CacheConfig {
+    /// Maximum live entries across all shards.
+    pub entries: usize,
+    /// Byte budget across all shards, charged per entry at the
+    /// backing-buffer capacity (a `Rows` view pins its whole buffer).
+    pub mem_bytes: usize,
+    /// Shard count; rounded to a power of two and clamped to 1..=16.
+    /// `0` picks automatically from `entries` (small caches stay
+    /// unsharded so global LRU order is exact).
+    pub shards: usize,
+}
+
+impl Default for CacheConfig {
+    fn default() -> CacheConfig {
+        CacheConfig { entries: 4096, mem_bytes: 256 * 1024 * 1024, shards: 0 }
+    }
+}
+
+impl CacheConfig {
+    /// Default byte budget and auto sharding, entry cap of `entries`.
+    pub fn with_entries(entries: usize) -> CacheConfig {
+        CacheConfig { entries, ..CacheConfig::default() }
+    }
+}
+
+/// Monotonic per-tenant counters, surfaced on `/v1/stats`, `/v1/cache`
+/// and `/v1/metrics`.
+#[derive(Default)]
+struct TenantCounters {
+    hits: AtomicU64,
+    misses: AtomicU64,
+    coalesced: AtomicU64,
+    evicted: AtomicU64,
+    inserted: AtomicU64,
+}
+
+/// Point-in-time copy of one tenant's cache counters.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct TenantSnapshot {
+    pub hits: u64,
+    pub misses: u64,
+    pub coalesced: u64,
+    pub evicted: u64,
+    pub inserted: u64,
+}
+
+impl TenantCounters {
+    fn snapshot(&self) -> TenantSnapshot {
+        TenantSnapshot {
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+            coalesced: self.coalesced.load(Ordering::Relaxed),
+            evicted: self.evicted.load(Ordering::Relaxed),
+            inserted: self.inserted.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// How [`PredictionCache::get_or_compute`] satisfied the request.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Outcome {
+    /// Served from a live cache entry — O(1), no engine call.
+    Hit,
+    /// Attached to another request's in-flight computation and received
+    /// the leader's `Rows` — no engine call from this request.
+    Coalesced,
+    /// This request was the leader: the supplied closure ran for
+    /// `compute` (callers subtract it to isolate pure cache time).
+    Computed {
+        /// Wall time spent inside the compute closure.
+        compute: Duration,
+    },
+}
+
+/// One pending computation: the leader runs, waiters park on the
+/// condvar, everyone receives the same result. The error arm carries a
+/// rendered message (`anyhow::Error` is not `Clone`).
+struct Flight {
+    /// Tenant that opened the flight. A different tenant whose request
+    /// crafts the same digest must NOT attach — it bypasses coalescing
+    /// and computes on its own (see [`PredictionCache::get_or_compute`]).
+    tenant: String,
+    state: Mutex<FlightState>,
+    cv: Condvar,
+}
+
+enum FlightState {
+    Pending,
+    Done(Result<Rows, String>),
+}
+
+impl Flight {
+    fn new(tenant: &str) -> Flight {
+        Flight {
+            tenant: tenant.to_string(),
+            state: Mutex::new(FlightState::Pending),
+            cv: Condvar::new(),
+        }
+    }
+
+    fn wait(&self) -> Result<Rows, String> {
+        let mut st = self.state.lock().unwrap();
+        loop {
+            match &*st {
+                FlightState::Done(r) => return r.clone(),
+                FlightState::Pending => st = self.cv.wait(st).unwrap(),
+            }
+        }
+    }
+
+    fn complete(&self, result: Result<Rows, String>) {
+        let mut st = self.state.lock().unwrap();
+        *st = FlightState::Done(result);
+        self.cv.notify_all();
+    }
+}
+
+/// Slab index marking "no node".
+const NIL: u32 = u32::MAX;
+
+struct Node {
+    key: [u8; 16],
     /// Owning tenant, verified on every hit. FNV-1a is invertible, so
     /// a tenant controlling raw payload bytes could CRAFT a digest
     /// collision with another tenant's entry; checking ownership
     /// demotes such a collision to a plain miss/overwrite — it can
     /// never serve tenant A's cached output to tenant B.
     tenant: String,
-    y: Vec<f32>,
-    /// LRU tick of the last access.
-    last_used: u64,
+    y: Rows,
+    bytes: usize,
+    prev: u32,
+    next: u32,
 }
 
-/// Bounded LRU prediction cache (thread-safe).
+/// One lock stripe: hash map for lookup, slab + intrusive doubly-linked
+/// list for O(1) LRU order, and the shard's slice of the in-flight
+/// table. `head` is most-recently-used, `tail` least.
+#[derive(Default)]
+struct Shard {
+    map: HashMap<[u8; 16], u32>,
+    slab: Vec<Option<Node>>,
+    free: Vec<u32>,
+    head: u32,
+    tail: u32,
+    bytes: usize,
+    flights: HashMap<[u8; 16], Arc<Flight>>,
+}
+
+impl Shard {
+    fn new() -> Shard {
+        Shard { head: NIL, tail: NIL, ..Shard::default() }
+    }
+
+    fn link(&self, i: u32) -> (u32, u32) {
+        let n = self.slab[i as usize].as_ref().expect("live node");
+        (n.prev, n.next)
+    }
+
+    fn set_prev(&mut self, i: u32, prev: u32) {
+        self.slab[i as usize].as_mut().expect("live node").prev = prev;
+    }
+
+    fn set_next(&mut self, i: u32, next: u32) {
+        self.slab[i as usize].as_mut().expect("live node").next = next;
+    }
+
+    fn unlink(&mut self, i: u32) {
+        let (prev, next) = self.link(i);
+        match prev {
+            NIL => self.head = next,
+            p => self.set_next(p, next),
+        }
+        match next {
+            NIL => self.tail = prev,
+            n => self.set_prev(n, prev),
+        }
+    }
+
+    fn push_front(&mut self, i: u32) {
+        self.set_prev(i, NIL);
+        self.set_next(i, self.head);
+        match self.head {
+            NIL => self.tail = i,
+            h => self.set_prev(h, i),
+        }
+        self.head = i;
+    }
+
+    fn touch(&mut self, i: u32) {
+        if self.head != i {
+            self.unlink(i);
+            self.push_front(i);
+        }
+    }
+
+    /// Move the node into a free slot and splice it as MRU. O(1).
+    fn alloc(&mut self, node: Node) -> u32 {
+        let i = match self.free.pop() {
+            Some(i) => {
+                self.slab[i as usize] = Some(node);
+                i
+            }
+            None => {
+                self.slab.push(Some(node));
+                (self.slab.len() - 1) as u32
+            }
+        };
+        self.push_front(i);
+        i
+    }
+
+    /// Drop the LRU entry, returning its node. O(1).
+    fn evict_tail(&mut self) -> Option<Node> {
+        let i = self.tail;
+        if i == NIL {
+            return None;
+        }
+        self.unlink(i);
+        let node = self.slab[i as usize].take().expect("live tail");
+        self.free.push(i);
+        self.map.remove(&node.key);
+        self.bytes -= node.bytes;
+        Some(node)
+    }
+}
+
+/// Sharded, byte-budgeted, single-flight LRU prediction cache
+/// (thread-safe). See the module docs for the design.
 pub struct PredictionCache {
-    map: Mutex<HashMap<[u8; 16], Entry>>,
-    capacity: usize,
-    tick: AtomicU64,
-    pub hits: AtomicU64,
-    pub misses: AtomicU64,
+    shards: Vec<Mutex<Shard>>,
+    shard_entry_cap: usize,
+    shard_byte_cap: usize,
+    entry_cap: usize,
+    byte_cap: usize,
+    tenants: RwLock<BTreeMap<String, Arc<TenantCounters>>>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+    coalesced: AtomicU64,
+    evicted: AtomicU64,
+    inserted: AtomicU64,
+}
+
+/// Leader fail-safe: if the compute closure panics (or the leader is
+/// otherwise torn down before settling), `Drop` removes the flight and
+/// wakes the waiters with an error instead of leaving them parked
+/// forever on a flight nobody will complete.
+struct FlightGuard<'a> {
+    cache: &'a PredictionCache,
+    shard: usize,
+    key: [u8; 16],
+    flight: Arc<Flight>,
+    settled: bool,
+}
+
+impl FlightGuard<'_> {
+    /// Publish the result: insert on success, remove the flight, wake
+    /// every waiter. Shard lock and flight-state lock are taken in
+    /// sequence, never nested.
+    fn settle(&mut self, result: Result<Rows, String>) {
+        self.settled = true;
+        {
+            let mut sh = self.cache.shards[self.shard].lock().unwrap();
+            sh.flights.remove(&self.key);
+            if let Ok(y) = &result {
+                self.cache.insert_locked(&mut sh, &self.flight.tenant, self.key, y.clone());
+            }
+        }
+        self.flight.complete(result);
+    }
+}
+
+impl Drop for FlightGuard<'_> {
+    fn drop(&mut self) {
+        if !self.settled {
+            self.settle(Err("cache leader abandoned (panic during compute)".to_string()));
+        }
+    }
+}
+
+enum Role {
+    Hit(Rows),
+    Waiter(Arc<Flight>),
+    Leader(Arc<Flight>),
+    /// Entry or flight under this digest belongs to ANOTHER tenant
+    /// (crafted collision): treat as a plain uncoalesced miss.
+    Bypass,
 }
 
 impl PredictionCache {
+    /// Entry-capped cache with the default byte budget and sharding.
     pub fn new(capacity: usize) -> PredictionCache {
-        assert!(capacity > 0);
+        PredictionCache::with_config(CacheConfig::with_entries(capacity))
+    }
+
+    pub fn with_config(cfg: CacheConfig) -> PredictionCache {
+        assert!(cfg.entries > 0, "cache entry capacity must be > 0");
+        assert!(cfg.mem_bytes > 0, "cache byte budget must be > 0");
+        let n = if cfg.shards == 0 {
+            // auto: stripe only when each shard still holds a useful
+            // number of entries, so tiny caches keep exact LRU order
+            let mut s = 16usize;
+            while s > 1 && cfg.entries / s < 8 {
+                s /= 2;
+            }
+            s
+        } else {
+            cfg.shards.next_power_of_two().clamp(1, 16)
+        };
         PredictionCache {
-            map: Mutex::new(HashMap::with_capacity(capacity)),
-            capacity,
-            tick: AtomicU64::new(0),
+            shards: (0..n).map(|_| Mutex::new(Shard::new())).collect(),
+            shard_entry_cap: cfg.entries.div_ceil(n).max(1),
+            shard_byte_cap: (cfg.mem_bytes / n).max(1),
+            entry_cap: cfg.entries,
+            byte_cap: cfg.mem_bytes,
+            tenants: RwLock::new(BTreeMap::new()),
             hits: AtomicU64::new(0),
             misses: AtomicU64::new(0),
+            coalesced: AtomicU64::new(0),
+            evicted: AtomicU64::new(0),
+            inserted: AtomicU64::new(0),
         }
     }
 
-    pub fn get(&self, tenant: &str, key: &[u8; 16]) -> Option<Vec<f32>> {
-        let mut map = self.map.lock().unwrap();
-        match map.get_mut(key) {
-            Some(e) if e.tenant == tenant => {
-                e.last_used = self.tick.fetch_add(1, Ordering::Relaxed);
+    /// Shard from the HIGH bits of the digest (the hasher's best-mixed
+    /// bits, and disjoint from whatever `HashMap` uses internally).
+    fn shard_index(&self, key: &[u8; 16]) -> usize {
+        (usize::from(key[0]) * self.shards.len()) >> 8
+    }
+
+    fn tenant_counters(&self, tenant: &str) -> Arc<TenantCounters> {
+        if let Some(tc) = self.tenants.read().unwrap().get(tenant) {
+            return Arc::clone(tc);
+        }
+        let mut w = self.tenants.write().unwrap();
+        Arc::clone(w.entry(tenant.to_string()).or_default())
+    }
+
+    /// Insert under the shard lock, then evict LRU entries until both
+    /// the entry cap and the byte budget hold again. An entry larger
+    /// than a whole shard's byte budget is not retained (it evicts
+    /// itself) — coalescing still collapses its stampedes.
+    fn insert_locked(&self, sh: &mut Shard, tenant: &str, key: [u8; 16], y: Rows) {
+        let bytes = y.backing_bytes();
+        if let Some(&i) = sh.map.get(&key) {
+            let node = sh.slab[i as usize].as_mut().expect("live node");
+            sh.bytes = sh.bytes - node.bytes + bytes;
+            node.tenant = tenant.to_string();
+            node.y = y;
+            node.bytes = bytes;
+            sh.touch(i);
+        } else {
+            let i = sh.alloc(Node {
+                key,
+                tenant: tenant.to_string(),
+                y,
+                bytes,
+                prev: NIL,
+                next: NIL,
+            });
+            sh.map.insert(key, i);
+            sh.bytes += bytes;
+            self.inserted.fetch_add(1, Ordering::Relaxed);
+            self.tenant_counters(tenant).inserted.fetch_add(1, Ordering::Relaxed);
+        }
+        while sh.map.len() > self.shard_entry_cap || sh.bytes > self.shard_byte_cap {
+            match sh.evict_tail() {
+                Some(node) => {
+                    self.evicted.fetch_add(1, Ordering::Relaxed);
+                    self.tenant_counters(&node.tenant).evicted.fetch_add(1, Ordering::Relaxed);
+                }
+                None => break,
+            }
+        }
+    }
+
+    /// O(1) lookup; a hit hands back a zero-copy view of the cached
+    /// output and refreshes its LRU position.
+    pub fn get(&self, tenant: &str, key: &[u8; 16]) -> Option<Rows> {
+        let si = self.shard_index(key);
+        let mut sh = self.shards[si].lock().unwrap();
+        if let Some(&i) = sh.map.get(key) {
+            if sh.slab[i as usize].as_ref().expect("live node").tenant == tenant {
+                sh.touch(i);
+                let y = sh.slab[i as usize].as_ref().expect("live node").y.clone();
+                drop(sh);
                 self.hits.fetch_add(1, Ordering::Relaxed);
-                Some(e.y.clone())
-            }
-            _ => {
-                self.misses.fetch_add(1, Ordering::Relaxed);
-                None
+                self.tenant_counters(tenant).hits.fetch_add(1, Ordering::Relaxed);
+                return Some(y);
             }
         }
+        drop(sh);
+        self.misses.fetch_add(1, Ordering::Relaxed);
+        self.tenant_counters(tenant).misses.fetch_add(1, Ordering::Relaxed);
+        None
     }
 
-    pub fn put(&self, tenant: &str, key: [u8; 16], y: Vec<f32>) {
-        let mut map = self.map.lock().unwrap();
-        if map.len() >= self.capacity && !map.contains_key(&key) {
-            // evict the least-recently-used entry
-            if let Some(oldest) = map
-                .iter()
-                .min_by_key(|(_, e)| e.last_used)
-                .map(|(k, _)| *k)
-            {
-                map.remove(&oldest);
+    /// Insert (or overwrite) an entry. The `Rows` is stored as-is —
+    /// zero-copy straight out of the engine's arena.
+    pub fn put(&self, tenant: &str, key: [u8; 16], y: Rows) {
+        let si = self.shard_index(&key);
+        let mut sh = self.shards[si].lock().unwrap();
+        self.insert_locked(&mut sh, tenant, key, y);
+    }
+
+    /// The single-flight front door: return a hit, attach to an
+    /// in-flight identical request, or lead the computation yourself.
+    ///
+    /// Exactly one `compute` runs per (key, burst) — concurrent callers
+    /// with the same key receive the leader's `Rows` (the same backing
+    /// buffer, see [`Rows::same_buffer`]). A leader error is propagated
+    /// to every waiter and the key stays retryable. A digest collision
+    /// with another tenant's entry or flight degrades to an ordinary
+    /// uncoalesced miss — tenants never share outputs, even under
+    /// crafted collisions.
+    pub fn get_or_compute(
+        &self,
+        tenant: &str,
+        key: [u8; 16],
+        compute: impl FnOnce() -> anyhow::Result<Rows>,
+    ) -> anyhow::Result<(Rows, Outcome)> {
+        let si = self.shard_index(&key);
+        let role = {
+            let mut sh = self.shards[si].lock().unwrap();
+            if let Some(&i) = sh.map.get(&key) {
+                if sh.slab[i as usize].as_ref().expect("live node").tenant == tenant {
+                    sh.touch(i);
+                    Role::Hit(sh.slab[i as usize].as_ref().expect("live node").y.clone())
+                } else {
+                    Role::Bypass
+                }
+            } else if let Some(f) = sh.flights.get(&key) {
+                if f.tenant == tenant {
+                    Role::Waiter(Arc::clone(f))
+                } else {
+                    Role::Bypass
+                }
+            } else {
+                let f = Arc::new(Flight::new(tenant));
+                sh.flights.insert(key, Arc::clone(&f));
+                Role::Leader(f)
+            }
+        };
+        match role {
+            Role::Hit(y) => {
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                self.tenant_counters(tenant).hits.fetch_add(1, Ordering::Relaxed);
+                Ok((y, Outcome::Hit))
+            }
+            Role::Waiter(f) => {
+                self.coalesced.fetch_add(1, Ordering::Relaxed);
+                self.tenant_counters(tenant).coalesced.fetch_add(1, Ordering::Relaxed);
+                match f.wait() {
+                    Ok(y) => Ok((y, Outcome::Coalesced)),
+                    Err(msg) => Err(anyhow::anyhow!("coalesced request failed: {msg}")),
+                }
+            }
+            Role::Bypass => {
+                self.misses.fetch_add(1, Ordering::Relaxed);
+                self.tenant_counters(tenant).misses.fetch_add(1, Ordering::Relaxed);
+                let t0 = Instant::now();
+                let y = compute()?;
+                let compute = t0.elapsed();
+                self.put(tenant, key, y.clone());
+                Ok((y, Outcome::Computed { compute }))
+            }
+            Role::Leader(flight) => {
+                self.misses.fetch_add(1, Ordering::Relaxed);
+                self.tenant_counters(tenant).misses.fetch_add(1, Ordering::Relaxed);
+                let mut guard =
+                    FlightGuard { cache: self, shard: si, key, flight, settled: false };
+                let t0 = Instant::now();
+                let result = compute();
+                let compute = t0.elapsed();
+                match result {
+                    Ok(y) => {
+                        guard.settle(Ok(y.clone()));
+                        Ok((y, Outcome::Computed { compute }))
+                    }
+                    Err(e) => {
+                        guard.settle(Err(format!("{e:#}")));
+                        Err(e)
+                    }
+                }
             }
         }
-        let tick = self.tick.fetch_add(1, Ordering::Relaxed);
-        map.insert(key, Entry { tenant: tenant.to_string(), y, last_used: tick });
     }
 
     pub fn len(&self) -> usize {
-        self.map.lock().unwrap().len()
+        self.shards.iter().map(|s| s.lock().unwrap().map.len()).sum()
     }
 
     pub fn is_empty(&self) -> bool {
         self.len() == 0
     }
 
+    /// Bytes of output buffers currently retained across all shards.
+    pub fn bytes(&self) -> usize {
+        self.shards.iter().map(|s| s.lock().unwrap().bytes).sum()
+    }
+
+    /// Requests currently being computed under single-flight leadership.
+    pub fn in_flight(&self) -> usize {
+        self.shards.iter().map(|s| s.lock().unwrap().flights.len()).sum()
+    }
+
+    pub fn shard_count(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// Per-shard `(entries, bytes)` occupancy, in shard order.
+    pub fn shard_sizes(&self) -> Vec<(usize, usize)> {
+        self.shards
+            .iter()
+            .map(|s| {
+                let sh = s.lock().unwrap();
+                (sh.map.len(), sh.bytes)
+            })
+            .collect()
+    }
+
+    pub fn capacity_entries(&self) -> usize {
+        self.entry_cap
+    }
+
+    pub fn capacity_bytes(&self) -> usize {
+        self.byte_cap
+    }
+
+    pub fn hits(&self) -> u64 {
+        self.hits.load(Ordering::Relaxed)
+    }
+
+    pub fn misses(&self) -> u64 {
+        self.misses.load(Ordering::Relaxed)
+    }
+
+    pub fn coalesced(&self) -> u64 {
+        self.coalesced.load(Ordering::Relaxed)
+    }
+
+    pub fn evicted(&self) -> u64 {
+        self.evicted.load(Ordering::Relaxed)
+    }
+
+    pub fn inserted(&self) -> u64 {
+        self.inserted.load(Ordering::Relaxed)
+    }
+
     pub fn hit_rate(&self) -> f64 {
-        let h = self.hits.load(Ordering::Relaxed) as f64;
-        let m = self.misses.load(Ordering::Relaxed) as f64;
+        let h = self.hits() as f64;
+        let m = self.misses() as f64;
         if h + m == 0.0 {
             0.0
         } else {
             h / (h + m)
         }
+    }
+
+    /// Counters for one tenant (zeros if the tenant never touched the
+    /// cache).
+    pub fn tenant_snapshot(&self, tenant: &str) -> TenantSnapshot {
+        self.tenants
+            .read()
+            .unwrap()
+            .get(tenant)
+            .map(|tc| tc.snapshot())
+            .unwrap_or_default()
+    }
+
+    /// All per-tenant counters, sorted by tenant name.
+    pub fn tenant_stats(&self) -> Vec<(String, TenantSnapshot)> {
+        self.tenants
+            .read()
+            .unwrap()
+            .iter()
+            .map(|(name, tc)| (name.clone(), tc.snapshot()))
+            .collect()
+    }
+
+    /// Structural audit used by the property tests: every shard's LRU
+    /// list, map, slab free list and byte gauge must agree exactly.
+    pub fn check_consistency(&self) -> Result<(), String> {
+        for (si, s) in self.shards.iter().enumerate() {
+            let sh = s.lock().unwrap();
+            let mut walked = 0usize;
+            let mut bytes = 0usize;
+            let mut i = sh.head;
+            let mut prev = NIL;
+            while i != NIL {
+                let node = sh.slab[i as usize]
+                    .as_ref()
+                    .ok_or_else(|| format!("shard {si}: list visits freed slot {i}"))?;
+                if node.prev != prev {
+                    return Err(format!("shard {si}: bad prev link at slot {i}"));
+                }
+                if sh.map.get(&node.key) != Some(&i) {
+                    return Err(format!("shard {si}: map does not point back to slot {i}"));
+                }
+                walked += 1;
+                bytes += node.bytes;
+                if walked > sh.slab.len() {
+                    return Err(format!("shard {si}: LRU list cycles"));
+                }
+                prev = i;
+                i = node.next;
+            }
+            if prev != sh.tail {
+                return Err(format!("shard {si}: tail {} != last walked {prev}", sh.tail));
+            }
+            if walked != sh.map.len() {
+                return Err(format!(
+                    "shard {si}: list length {walked} != map length {}",
+                    sh.map.len()
+                ));
+            }
+            if bytes != sh.bytes {
+                return Err(format!(
+                    "shard {si}: byte gauge {} != summed {bytes}",
+                    sh.bytes
+                ));
+            }
+            if walked + sh.free.len() != sh.slab.len() {
+                return Err(format!(
+                    "shard {si}: live {walked} + free {} != slab {}",
+                    sh.free.len(),
+                    sh.slab.len()
+                ));
+            }
+            if sh.map.len() > self.shard_entry_cap {
+                return Err(format!("shard {si}: over entry cap"));
+            }
+            if sh.bytes > self.shard_byte_cap {
+                return Err(format!("shard {si}: over byte budget"));
+            }
+        }
+        Ok(())
     }
 }
 
@@ -146,12 +737,21 @@ impl PredictionCache {
 mod tests {
     use super::*;
 
+    const FP: [u8; 16] = [7u8; 16];
+
+    fn rows(v: Vec<f32>) -> Rows {
+        Rows::from_vec(v)
+    }
+
     #[test]
     fn key_sensitivity() {
-        let a = request_key("", &[1.0, 2.0, 3.0], 1);
-        assert_eq!(a, request_key("", &[1.0, 2.0, 3.0], 1));
-        assert_ne!(a, request_key("", &[1.0, 2.0, 3.1], 1));
-        assert_ne!(a, request_key("", &[1.0, 2.0, 3.0], 3));
+        let a = request_key("", &FP, &[1.0, 2.0, 3.0], 1);
+        assert_eq!(a, request_key("", &FP, &[1.0, 2.0, 3.0], 1));
+        assert_ne!(a, request_key("", &FP, &[1.0, 2.0, 3.1], 1));
+        assert_ne!(a, request_key("", &FP, &[1.0, 2.0, 3.0], 3));
+        // a reconfigured ensemble (different serving fingerprint) can
+        // never alias entries cached under the old definition
+        assert_ne!(a, request_key("", &[8u8; 16], &[1.0, 2.0, 3.0], 1));
     }
 
     #[test]
@@ -159,17 +759,17 @@ mod tests {
         // identical payload, different serving ensemble: MUST be
         // different cache entries, or tenant B reads tenant A's output
         let x = [0.25f32; 32];
-        let a = request_key("fast", &x, 4);
-        let b = request_key("accurate", &x, 4);
+        let a = request_key("fast", &FP, &x, 4);
+        let b = request_key("accurate", &FP, &x, 4);
         assert_ne!(a, b, "tenants share a cache line");
         // tenant/payload boundary cannot alias by concatenation either
-        assert_ne!(request_key("ab", &x, 4), request_key("a", &x, 4));
+        assert_ne!(request_key("ab", &FP, &x, 4), request_key("a", &FP, &x, 4));
 
         let c = PredictionCache::new(8);
-        c.put("fast", a, vec![1.0]);
-        c.put("accurate", b, vec![2.0]);
-        assert_eq!(c.get("fast", &a), Some(vec![1.0]));
-        assert_eq!(c.get("accurate", &b), Some(vec![2.0]));
+        c.put("fast", a, rows(vec![1.0]));
+        c.put("accurate", b, rows(vec![2.0]));
+        assert_eq!(c.get("fast", &a).unwrap().as_slice(), &[1.0]);
+        assert_eq!(c.get("accurate", &b).unwrap().as_slice(), &[2.0]);
     }
 
     #[test]
@@ -179,60 +779,233 @@ mod tests {
         // checked on get: the collision is a miss (and a put merely
         // overwrites), never tenant A's bytes served to tenant B.
         let c = PredictionCache::new(8);
-        let k = request_key("victim", &[1.0, 2.0], 1);
-        c.put("victim", k, vec![42.0]);
-        assert_eq!(c.get("attacker", &k), None, "cross-tenant hit");
+        let k = request_key("victim", &FP, &[1.0, 2.0], 1);
+        c.put("victim", k, rows(vec![42.0]));
+        assert!(c.get("attacker", &k).is_none(), "cross-tenant hit");
         // attacker overwrites the slot: victim now misses, recomputes
-        c.put("attacker", k, vec![666.0]);
-        assert_eq!(c.get("victim", &k), None, "served poisoned entry");
+        c.put("attacker", k, rows(vec![666.0]));
+        assert!(c.get("victim", &k).is_none(), "served poisoned entry");
+        // and a crafted collision with an in-flight computation must
+        // not attach: the attacker computes on its own
+        let c = PredictionCache::new(8);
+        let k2 = request_key("victim", &FP, &[5.0], 1);
+        let (_, o) = c
+            .get_or_compute("victim", k2, || Ok(rows(vec![1.0])))
+            .unwrap();
+        assert!(matches!(o, Outcome::Computed { .. }));
+        let (y, o) = c
+            .get_or_compute("attacker", k2, || Ok(rows(vec![2.0])))
+            .unwrap();
+        assert!(matches!(o, Outcome::Computed { .. }), "attacker coalesced");
+        assert_eq!(y.as_slice(), &[2.0]);
     }
 
     #[test]
     fn hit_and_miss() {
         let c = PredictionCache::new(4);
-        let k = request_key("", &[0.5; 8], 2);
+        let k = request_key("", &FP, &[0.5; 8], 2);
         assert!(c.get("", &k).is_none());
-        c.put("", k, vec![1.0, 2.0]);
-        assert_eq!(c.get("", &k), Some(vec![1.0, 2.0]));
-        assert_eq!(c.hits.load(Ordering::Relaxed), 1);
-        assert_eq!(c.misses.load(Ordering::Relaxed), 1);
+        c.put("", k, rows(vec![1.0, 2.0]));
+        assert_eq!(c.get("", &k).unwrap().as_slice(), &[1.0, 2.0]);
+        assert_eq!(c.hits(), 1);
+        assert_eq!(c.misses(), 1);
         assert!((c.hit_rate() - 0.5).abs() < 1e-9);
+        let t = c.tenant_snapshot("");
+        assert_eq!((t.hits, t.misses, t.inserted), (1, 1, 1));
     }
 
     #[test]
     fn lru_eviction() {
+        // capacity 2 auto-selects a single shard, so global LRU order
+        // is exact
         let c = PredictionCache::new(2);
-        let k1 = request_key("", &[1.0], 1);
-        let k2 = request_key("", &[2.0], 1);
-        let k3 = request_key("", &[3.0], 1);
-        c.put("", k1, vec![1.0]);
-        c.put("", k2, vec![2.0]);
+        assert_eq!(c.shard_count(), 1);
+        let k1 = request_key("", &FP, &[1.0], 1);
+        let k2 = request_key("", &FP, &[2.0], 1);
+        let k3 = request_key("", &FP, &[3.0], 1);
+        c.put("", k1, rows(vec![1.0]));
+        c.put("", k2, rows(vec![2.0]));
         // touch k1 so k2 becomes LRU
         assert!(c.get("", &k1).is_some());
-        c.put("", k3, vec![3.0]);
+        c.put("", k3, rows(vec![3.0]));
         assert_eq!(c.len(), 2);
         assert!(c.get("", &k1).is_some(), "recently used survived");
         assert!(c.get("", &k2).is_none(), "LRU evicted");
         assert!(c.get("", &k3).is_some());
+        assert_eq!(c.evicted(), 1);
+        assert_eq!(c.inserted(), 3);
+        c.check_consistency().unwrap();
+    }
+
+    #[test]
+    fn byte_budget_evicts_independently_of_entry_cap() {
+        // plenty of entry headroom, tiny byte budget: eviction must
+        // trigger on bytes alone
+        let c = PredictionCache::with_config(CacheConfig {
+            entries: 64,
+            mem_bytes: 10 * 4 * 4, // ten 4-float buffers
+            shards: 1,
+        });
+        for i in 0..32 {
+            let k = request_key("", &FP, &[i as f32], 1);
+            c.put("", k, rows(vec![i as f32; 4]));
+        }
+        assert!(c.bytes() <= c.capacity_bytes(), "byte budget violated");
+        assert!(c.len() < 32, "nothing evicted under byte pressure");
+        assert_eq!(c.inserted(), 32);
+        assert_eq!(c.evicted() as usize, 32 - c.len());
+        c.check_consistency().unwrap();
+    }
+
+    #[test]
+    fn oversized_entry_is_not_retained_but_insert_accounts() {
+        let c = PredictionCache::with_config(CacheConfig {
+            entries: 8,
+            mem_bytes: 16, // 4 floats total
+            shards: 1,
+        });
+        let k = request_key("", &FP, &[1.0], 1);
+        c.put("", k, rows(vec![0.0; 100]));
+        assert_eq!(c.len(), 0, "oversized entry retained");
+        assert_eq!(c.inserted(), 1);
+        assert_eq!(c.evicted(), 1);
+        c.check_consistency().unwrap();
+    }
+
+    #[test]
+    fn zero_copy_hit_shares_the_stored_buffer() {
+        let c = PredictionCache::new(4);
+        let k = request_key("", &FP, &[9.0], 1);
+        let (first, _) = c
+            .get_or_compute("", k, || Ok(rows(vec![1.0, 2.0, 3.0])))
+            .unwrap();
+        let (hit, o) = c
+            .get_or_compute("", k, || panic!("must not recompute"))
+            .unwrap();
+        assert_eq!(o, Outcome::Hit);
+        assert_eq!(hit.as_slice(), first.as_slice(), "hit not bit-identical");
+        assert!(hit.same_buffer(&first), "hit copied instead of sharing");
+    }
+
+    #[test]
+    fn coalescing_runs_compute_exactly_once() {
+        use std::sync::atomic::AtomicUsize;
+        let c = Arc::new(PredictionCache::new(8));
+        let calls = Arc::new(AtomicUsize::new(0));
+        let k = request_key("", &FP, &[4.2], 1);
+        let n = 6usize;
+        let outs: Vec<(Rows, Outcome)> = std::thread::scope(|s| {
+            let handles: Vec<_> = (0..n)
+                .map(|_| {
+                    let c = Arc::clone(&c);
+                    let calls = Arc::clone(&calls);
+                    s.spawn(move || {
+                        c.get_or_compute("", k, || {
+                            calls.fetch_add(1, Ordering::SeqCst);
+                            // the entry is only inserted after compute
+                            // returns, so every other thread must end
+                            // up a waiter before we let go
+                            let t0 = Instant::now();
+                            while c.coalesced() < (n - 1) as u64 {
+                                assert!(t0.elapsed() < Duration::from_secs(10), "waiters lost");
+                                std::thread::yield_now();
+                            }
+                            Ok(rows(vec![1.0, 2.0]))
+                        })
+                        .unwrap()
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+        assert_eq!(calls.load(Ordering::SeqCst), 1, "stampede reached the engine");
+        let leader = outs.iter().find(|(_, o)| matches!(o, Outcome::Computed { .. })).unwrap();
+        for (y, _) in &outs {
+            assert_eq!(y.as_slice(), &[1.0, 2.0]);
+            assert!(y.same_buffer(&leader.0), "waiter got a copy, not the shared Rows");
+        }
+        assert_eq!(c.coalesced(), (n - 1) as u64);
+        assert_eq!(c.in_flight(), 0, "flight leaked");
+    }
+
+    #[test]
+    fn leader_error_wakes_waiters_and_key_stays_retryable() {
+        use std::sync::atomic::AtomicUsize;
+        let c = Arc::new(PredictionCache::new(8));
+        let calls = Arc::new(AtomicUsize::new(0));
+        let k = request_key("", &FP, &[13.0], 1);
+        let n = 4usize;
+        let errs: Vec<String> = std::thread::scope(|s| {
+            let handles: Vec<_> = (0..n)
+                .map(|_| {
+                    let c = Arc::clone(&c);
+                    let calls = Arc::clone(&calls);
+                    s.spawn(move || {
+                        let r = c.get_or_compute("", k, || {
+                            calls.fetch_add(1, Ordering::SeqCst);
+                            let t0 = Instant::now();
+                            while c.coalesced() < (n - 1) as u64 {
+                                assert!(t0.elapsed() < Duration::from_secs(10), "waiters lost");
+                                std::thread::yield_now();
+                            }
+                            Err(anyhow::anyhow!("backend down"))
+                        });
+                        format!("{:#}", r.unwrap_err())
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+        assert_eq!(calls.load(Ordering::SeqCst), 1);
+        for e in &errs {
+            assert!(e.contains("backend down"), "error not propagated: {e}");
+        }
+        assert_eq!(c.in_flight(), 0, "failed flight leaked");
+        // the failure was not cached: the next request recomputes
+        let (y, o) = c.get_or_compute("", k, || Ok(rows(vec![7.0]))).unwrap();
+        assert!(matches!(o, Outcome::Computed { .. }));
+        assert_eq!(y.as_slice(), &[7.0]);
+        assert_eq!(calls.load(Ordering::SeqCst), 1, "closure identity differs");
     }
 
     #[test]
     fn concurrent_access() {
-        let c = std::sync::Arc::new(PredictionCache::new(64));
+        let c = Arc::new(PredictionCache::new(64));
         std::thread::scope(|s| {
             for t in 0..4 {
-                let c = std::sync::Arc::clone(&c);
+                let c = Arc::clone(&c);
                 s.spawn(move || {
                     for i in 0..200 {
-                        let k = request_key("", &[(i % 32) as f32, t as f32], 1);
+                        let k = request_key("", &FP, &[(i % 32) as f32, t as f32], 1);
                         if c.get("", &k).is_none() {
-                            c.put("", k, vec![i as f32]);
+                            c.put("", k, rows(vec![i as f32]));
                         }
                     }
                 });
             }
         });
         assert!(c.len() <= 64);
-        assert!(c.hits.load(Ordering::Relaxed) > 0);
+        assert!(c.hits() > 0);
+        assert_eq!(c.inserted(), c.evicted() + c.len() as u64);
+        c.check_consistency().unwrap();
+    }
+
+    #[test]
+    fn sharding_spreads_and_respects_global_cap() {
+        let c = PredictionCache::with_config(CacheConfig {
+            entries: 256,
+            mem_bytes: 64 * 1024 * 1024,
+            shards: 16,
+        });
+        assert_eq!(c.shard_count(), 16);
+        for i in 0..1024u32 {
+            let k = request_key("", &FP, &[i as f32], 1);
+            c.put("", k, rows(vec![i as f32]));
+        }
+        assert!(c.len() <= c.capacity_entries() + c.shard_count());
+        let sizes = c.shard_sizes();
+        let occupied = sizes.iter().filter(|(n, _)| *n > 0).count();
+        assert!(occupied >= 8, "digest high bits barely stripe: {sizes:?}");
+        c.check_consistency().unwrap();
     }
 }

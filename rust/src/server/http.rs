@@ -4,7 +4,7 @@
 //! thread pool bounding handler concurrency.
 
 use std::collections::BTreeMap;
-use std::io::{BufRead, BufReader, Read, Write};
+use std::io::{BufRead, BufReader, IoSlice, Read, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::Arc;
@@ -136,6 +136,11 @@ impl HttpServer {
                     while !stop.load(Ordering::Relaxed) {
                         match listener.accept() {
                             Ok((stream, _)) => {
+                                // disable Nagle before the socket waits
+                                // in the pool queue: the very first
+                                // response must not sit behind a
+                                // delayed-ACK window either
+                                let _ = stream.set_nodelay(true);
                                 let handler = Arc::clone(&handler);
                                 pool.execute(move || {
                                     let _ = serve_connection(stream, handler);
@@ -170,8 +175,8 @@ impl Drop for HttpServer {
 }
 
 fn serve_connection(stream: TcpStream, handler: Handler) -> anyhow::Result<()> {
+    // TCP_NODELAY is set in the accept loop, before the socket queues
     stream.set_read_timeout(Some(Duration::from_secs(30)))?;
-    stream.set_nodelay(true)?;
     let mut reader = BufReader::new(stream.try_clone()?);
     let mut stream = stream;
 
@@ -313,9 +318,35 @@ fn write_response(
         head.push_str("\r\n");
     }
     head.push_str("\r\n");
-    stream.write_all(head.as_bytes())?;
-    stream.write_all(&resp.body)?;
+    // status line + headers + body in ONE vectored write: the common
+    // small response leaves in a single syscall (and a single TCP
+    // segment — with NODELAY set, two write_all calls could put the
+    // head and a tiny body on the wire as two packets)
+    write_all_vectored(stream, head.as_bytes(), &resp.body)?;
     stream.flush()?;
+    Ok(())
+}
+
+/// `write_all` over two buffers using `write_vectored`, resuming
+/// correctly across partial writes. (`IoSlice::advance_slices` would do
+/// this but is not stable at our MSRV.)
+fn write_all_vectored(stream: &mut TcpStream, head: &[u8], body: &[u8]) -> std::io::Result<()> {
+    let mut written = 0usize;
+    let total = head.len() + body.len();
+    while written < total {
+        let n = if written < head.len() {
+            stream.write_vectored(&[IoSlice::new(&head[written..]), IoSlice::new(body)])?
+        } else {
+            stream.write(&body[written - head.len()..])?
+        };
+        if n == 0 {
+            return Err(std::io::Error::new(
+                std::io::ErrorKind::WriteZero,
+                "failed to write whole response",
+            ));
+        }
+        written += n;
+    }
     Ok(())
 }
 

@@ -10,6 +10,8 @@
 //!   exercise the live-reconfiguration controller under load shifts.
 //! * [`mixed_arrivals`] — per-tenant Poisson processes merged into one
 //!   tenant-tagged schedule (multi-tenant arbitration experiments).
+//! * [`zipf_ranks`] — Zipf-skewed popularity ranks (redundant-request
+//!   workloads for the prediction cache).
 //! * [`open_loop`] — driver firing requests at a schedule's offsets
 //!   regardless of completion times (each request on its own thread).
 
@@ -203,6 +205,32 @@ pub fn diurnal_arrivals(
     out
 }
 
+/// Zipf-distributed rank sequence: `n` draws over ranks `0..k`, where
+/// rank `r` carries weight `1/(r+1)^s` (`s` ≈ 1 is the classic web-like
+/// popularity skew). Rank 0 is the hottest. The redundant-request
+/// workload for the prediction-cache benches: a handful of hot inputs
+/// dominate while a long tail keeps churning the LRU.
+pub fn zipf_ranks(n: usize, k: usize, s: f64, seed: u64) -> Vec<usize> {
+    assert!(k > 0, "zipf_ranks needs at least one rank");
+    assert!(s.is_finite() && s >= 0.0, "bad zipf exponent {s}");
+    // inverse-CDF table: cdf[r] = P(rank <= r), normalized
+    let mut cdf = Vec::with_capacity(k);
+    let mut acc = 0.0f64;
+    for r in 0..k {
+        acc += 1.0 / ((r + 1) as f64).powf(s);
+        cdf.push(acc);
+    }
+    let total = acc;
+    let mut rng = Prng::new(seed);
+    (0..n)
+        .map(|_| {
+            let u = rng.f64() * total;
+            // first rank whose cumulative weight covers u
+            cdf.partition_point(|&c| c < u).min(k - 1)
+        })
+        .collect()
+}
+
 /// Open-loop driver: fire one request per arrival offset, on schedule,
 /// regardless of completion times (each request runs on its own thread,
 /// so a slow system accumulates concurrency instead of throttling the
@@ -346,6 +374,21 @@ mod tests {
         let peak = in_window(period / 4.0);
         let trough = in_window(3.0 * period / 4.0);
         assert!(peak > 2.0 * trough, "peak {peak} vs trough {trough}");
+    }
+
+    #[test]
+    fn zipf_ranks_skew_and_bounds() {
+        let ranks = zipf_ranks(20_000, 64, 1.1, 9);
+        assert_eq!(ranks.len(), 20_000);
+        assert!(ranks.iter().all(|&r| r < 64), "rank out of range");
+        let count = |r: usize| ranks.iter().filter(|&&x| x == r).count();
+        // rank 0 dominates and the ordering is monotone-ish in rank
+        assert!(count(0) > count(1), "rank 0 not hottest");
+        assert!(count(0) > ranks.len() / 10, "no head skew");
+        assert!(count(0) > 8 * count(32), "tail as hot as head");
+        // deterministic per seed, different across seeds
+        assert_eq!(ranks, zipf_ranks(20_000, 64, 1.1, 9));
+        assert_ne!(ranks, zipf_ranks(20_000, 64, 1.1, 10));
     }
 
     #[test]

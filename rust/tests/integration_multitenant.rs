@@ -26,6 +26,7 @@ use ensemble_serve::reconfig::{
     plan_joint, MultiTenantController, MultiTenantOptions, PlannerConfig, PolicyConfig,
     Tenant, TenantSpec,
 };
+use ensemble_serve::server::cache::CacheConfig;
 use ensemble_serve::server::http::http_request;
 use ensemble_serve::server::{ApiServer, SystemRegistry};
 use ensemble_serve::util::json::Json;
@@ -84,8 +85,15 @@ fn two_tenants_serve_concurrently_via_header_dispatch() {
         registry.register(&spec.name, sys);
     }
     // shared prediction cache: keys must be tenant-scoped
-    let api =
-        ApiServer::start_registry(registry, "127.0.0.1:0", 4, Some(32), None, None).unwrap();
+    let api = ApiServer::start_registry(
+        registry,
+        "127.0.0.1:0",
+        4,
+        Some(CacheConfig::with_entries(32)),
+        None,
+        None,
+    )
+    .unwrap();
     let addr = api.addr();
 
     let classes = [("imn", 100usize, 3usize), ("fos", 91usize, 2usize)];

@@ -1,0 +1,262 @@
+//! Property tests of the sharded prediction cache (util::quick mini
+//! framework): exactly-once eviction accounting under concurrent LRU
+//! churn, single-flight coalescing (one engine call, every waiter gets
+//! the leader's buffer, leader errors propagate and stay retryable),
+//! and hit answers bit-identical to the miss that filled them.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Barrier};
+
+use ensemble_serve::engine::arena::Rows;
+use ensemble_serve::server::cache::{request_key, CacheConfig, Outcome, PredictionCache};
+use ensemble_serve::util::quick::check;
+
+const FP: [u8; 16] = [0x42; 16];
+
+/// A key from a small universe: collisions across threads are the
+/// point (shared LRU slots, racing inserts on the same digest).
+fn key(universe: usize, i: usize) -> [u8; 16] {
+    let mut k = [0u8; 16];
+    // spread the low bits into byte 0 too, so keys land on every shard
+    k[0] = (i.wrapping_mul(37) % 251) as u8;
+    k[1..9].copy_from_slice(&((i % universe) as u64).to_le_bytes());
+    k
+}
+
+fn rows(val: f32, len: usize) -> Rows {
+    Rows::from_vec(vec![val; len])
+}
+
+/// Exactly-once eviction accounting: after arbitrary concurrent churn
+/// (puts, gets, coalesced computes over a small key universe), every
+/// insert is accounted for exactly once — still resident or counted
+/// evicted, never both, never lost — per tenant and globally, and the
+/// intrusive-list audit finds no structural damage.
+#[test]
+fn eviction_accounting_exactly_once_under_churn() {
+    check("cache churn accounting", 24, |g| {
+        let cfg = CacheConfig {
+            entries: g.usize_in(1, 48),
+            mem_bytes: g.usize_in(64, 8192),
+            shards: [0usize, 1, 2, 4, 8][g.usize_in(0, 4)],
+        };
+        let cache = PredictionCache::with_config(cfg);
+        let universe = g.usize_in(1, 64);
+        let ops_per_thread = g.usize_in(10, 120);
+        let threads = g.usize_in(1, 4);
+        let seed = g.u64();
+
+        std::thread::scope(|s| {
+            for t in 0..threads {
+                let cache = &cache;
+                s.spawn(move || {
+                    let mut r = ensemble_serve::util::prng::Prng::new(
+                        seed ^ (t as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15),
+                    );
+                    for op in 0..ops_per_thread {
+                        let k = key(universe, r.range(0, universe));
+                        let tenant = ["IMN4", "IMN12"][r.range(0, 2)];
+                        match r.range(0, 3) {
+                            0 => cache.put(tenant, k, rows(op as f32, r.range(1, 33))),
+                            1 => {
+                                let _ = cache.get(tenant, &k);
+                            }
+                            _ => {
+                                let v = op as f32;
+                                let _ = cache
+                                    .get_or_compute(tenant, k, || Ok(rows(v, r.range(1, 33))));
+                            }
+                        }
+                    }
+                });
+            }
+        });
+
+        cache.check_consistency().unwrap_or_else(|e| panic!("corrupt cache: {e}"));
+        assert_eq!(
+            cache.inserted(),
+            cache.evicted() + cache.len() as u64,
+            "inserts lost or double-counted (inserted {}, evicted {}, resident {})",
+            cache.inserted(),
+            cache.evicted(),
+            cache.len()
+        );
+        // per-tenant attribution covers the global counters exactly
+        let stats = cache.tenant_stats();
+        let sum = |f: fn(&ensemble_serve::server::cache::TenantSnapshot) -> u64| {
+            stats.iter().map(|(_, t)| f(t)).sum::<u64>()
+        };
+        assert_eq!(sum(|t| t.inserted), cache.inserted());
+        assert_eq!(sum(|t| t.evicted), cache.evicted());
+        assert_eq!(sum(|t| t.hits), cache.hits());
+        assert_eq!(sum(|t| t.misses), cache.misses());
+        // capacity respected after quiescence (per-shard rounding can
+        // leave at most one extra entry per shard)
+        assert!(cache.len() <= cache.capacity_entries() + cache.shard_count());
+        assert!(cache.bytes() <= cache.capacity_bytes(), "byte budget exceeded");
+        assert_eq!(cache.in_flight(), 0, "leaked in-flight entries");
+    });
+}
+
+/// Single-flight: K concurrent identical requests on a cold key run the
+/// compute exactly once; every thread (leader and waiters alike) gets a
+/// slice of the same backing buffer with identical bits.
+#[test]
+fn coalescing_one_engine_call_shared_buffer() {
+    check("single-flight coalescing", 12, |g| {
+        let n = g.usize_in(2, 8);
+        let len = g.usize_in(1, 64);
+        let fill = g.f64_unit() as f32;
+        let cache = Arc::new(PredictionCache::with_config(CacheConfig::with_entries(16)));
+        let k = request_key("IMN4", &FP, &[fill], len);
+        let calls = AtomicU64::new(0);
+        let barrier = Barrier::new(n);
+
+        let results: Vec<Rows> = std::thread::scope(|s| {
+            let handles: Vec<_> = (0..n)
+                .map(|_| {
+                    let cache = &cache;
+                    let calls = &calls;
+                    let barrier = &barrier;
+                    s.spawn(move || {
+                        barrier.wait();
+                        let (y, _) = cache
+                            .get_or_compute("IMN4", k, || {
+                                calls.fetch_add(1, Ordering::SeqCst);
+                                // hold the flight open until everyone
+                                // else is either waiting on it or done:
+                                // entries only appear after compute
+                                // returns, so late threads MUST coalesce
+                                let t0 = std::time::Instant::now();
+                                while cache.coalesced() + cache.hits() < (n - 1) as u64 {
+                                    assert!(
+                                        t0.elapsed() < std::time::Duration::from_secs(10),
+                                        "stragglers never arrived"
+                                    );
+                                    std::thread::yield_now();
+                                }
+                                Ok(rows(fill, len))
+                            })
+                            .expect("compute cannot fail here");
+                        y
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+
+        assert_eq!(calls.load(Ordering::SeqCst), 1, "stampede reached the engine");
+        let leader = &results[0];
+        for y in &results {
+            assert_eq!(y.len(), len);
+            assert!(
+                y.as_slice()
+                    .iter()
+                    .zip(leader.as_slice())
+                    .all(|(a, b)| a.to_bits() == b.to_bits()),
+                "waiter diverged from leader"
+            );
+            assert!(y.same_buffer(leader), "waiter got a copy, not the shared buffer");
+        }
+        assert_eq!(cache.in_flight(), 0);
+        cache.check_consistency().unwrap_or_else(|e| panic!("corrupt cache: {e}"));
+    });
+}
+
+/// Leader failure: every waiter receives the error, nothing is cached,
+/// and the key is immediately retryable (the next call recomputes).
+#[test]
+fn leader_error_reaches_every_waiter_then_key_retries() {
+    check("single-flight leader error", 12, |g| {
+        let n = g.usize_in(2, 6);
+        let cache = Arc::new(PredictionCache::with_config(CacheConfig::with_entries(16)));
+        let k = request_key("IMN4", &FP, &[9.0], 4);
+        let calls = AtomicU64::new(0);
+        let barrier = Barrier::new(n);
+
+        let errors: Vec<String> = std::thread::scope(|s| {
+            let handles: Vec<_> = (0..n)
+                .map(|_| {
+                    let cache = &cache;
+                    let calls = &calls;
+                    let barrier = &barrier;
+                    s.spawn(move || {
+                        barrier.wait();
+                        let r = cache.get_or_compute("IMN4", k, || {
+                            calls.fetch_add(1, Ordering::SeqCst);
+                            let t0 = std::time::Instant::now();
+                            while cache.coalesced() + cache.misses() < n as u64 {
+                                assert!(
+                                    t0.elapsed() < std::time::Duration::from_secs(10),
+                                    "stragglers never arrived"
+                                );
+                                std::thread::yield_now();
+                            }
+                            Err(anyhow::anyhow!("backend down"))
+                        });
+                        match r {
+                            Ok(_) => panic!("leader error must propagate"),
+                            Err(e) => format!("{e:#}"),
+                        }
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+
+        for e in &errors {
+            assert!(e.contains("backend down"), "error lost its cause: {e}");
+        }
+        assert_eq!(cache.len(), 0, "a failed compute must not populate the cache");
+        assert_eq!(cache.in_flight(), 0, "dead flight left behind");
+        // the failed leader ran exactly once; the retry runs exactly once more
+        let before = calls.load(Ordering::SeqCst);
+        assert_eq!(before, 1, "error path ran compute {before} times");
+        let (y, outcome) = cache
+            .get_or_compute("IMN4", k, || {
+                calls.fetch_add(1, Ordering::SeqCst);
+                Ok(rows(1.5, 4))
+            })
+            .expect("retry must succeed");
+        assert!(matches!(outcome, Outcome::Computed { .. }));
+        assert_eq!(y.as_slice(), &[1.5; 4]);
+        assert_eq!(calls.load(Ordering::SeqCst), 2);
+    });
+}
+
+/// A hit is bit-identical to the miss that filled it, for arbitrary
+/// float payloads (including NaN and infinities — the cache must not
+/// reinterpret, renormalize, or copy-lossily).
+#[test]
+fn hit_bit_identical_to_miss() {
+    check("hit == miss bitwise", 48, |g| {
+        let cache = PredictionCache::with_config(CacheConfig::with_entries(8));
+        let len = g.usize_in(1, 96);
+        let mut y = Vec::with_capacity(len);
+        for _ in 0..len {
+            y.push(match g.usize_in(0, 9) {
+                0 => f32::NAN,
+                1 => f32::INFINITY,
+                2 => -0.0,
+                _ => (g.f64_unit() * 2e6 - 1e6) as f32,
+            });
+        }
+        let x: Vec<f32> = (0..g.usize_in(1, 16)).map(|_| g.f64_unit() as f32).collect();
+        let k = request_key("IMN4", &FP, &x, 1);
+
+        let stored = y.clone();
+        let (miss, o1) = cache
+            .get_or_compute("IMN4", k, move || Ok(Rows::from_vec(y)))
+            .unwrap();
+        assert!(matches!(o1, Outcome::Computed { .. }));
+        let (hit, o2) = cache
+            .get_or_compute("IMN4", k, || panic!("hit path must not recompute"))
+            .unwrap();
+        assert_eq!(o2, Outcome::Hit);
+        assert_eq!(hit.len(), stored.len());
+        for (i, (a, b)) in hit.as_slice().iter().zip(&stored).enumerate() {
+            assert_eq!(a.to_bits(), b.to_bits(), "element {i} diverged ({a} vs {b})");
+        }
+        assert!(hit.same_buffer(&miss), "hit re-materialized the answer");
+    });
+}

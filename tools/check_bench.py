@@ -33,11 +33,15 @@ TRACING_BUDGET_PCT = 2.0
 GATED = [
     ("throughput_img_s", "higher"),
     ("small_req_p50_ms", "lower"),
+    ("cache_hit_p50_ms", "lower"),
+    ("cache_stampede_engine_calls", "lower"),
 ]
 
 # reported for trend visibility, never gated (p99 is too noisy on shared
-# CI runners; arena counters are workload-shape, not speed)
-REPORTED = ["e2e_1024_s", "small_req_p99_ms", "arena_allocs", "arena_reuses"]
+# CI runners; arena counters are workload-shape, not speed; the zipf hit
+# rate is a workload property, not a latency)
+REPORTED = ["e2e_1024_s", "small_req_p99_ms", "arena_allocs", "arena_reuses",
+            "cache_hit_p99_ms", "cache_zipf_hit_rate"]
 
 
 def load(path):
