@@ -1,0 +1,188 @@
+//! Node-failure chaos bench: kill simulated cluster nodes mid-workload
+//! and measure how fast the router replans onto the survivors.
+//!
+//! The cluster mirror of `chaos_devices`: instead of failing one device
+//! inside one engine, a whole [`InProcNode`] is killed (every call fails
+//! like a partitioned host), which the scatter/gather router detects on
+//! the next predict, marks dead, and replans around — retrying the
+//! in-flight request so the closed-loop clients should see **zero**
+//! failures across the outage. Recovery time is kill → the installed
+//! plan excludes the victim.
+//!
+//! ```bash
+//! cargo bench --bench chaos_cluster
+//! ```
+
+#[path = "common/mod.rs"]
+mod common;
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use ensemble_serve::benchkit::harness::Table;
+use ensemble_serve::cluster::{ClusterRouter, ClusterSpec, InProcNode, InProcTransport, Transport};
+use ensemble_serve::engine::combine::Average;
+use ensemble_serve::metrics::LatencyHistogram;
+use ensemble_serve::model::{ensemble, EnsembleId};
+use ensemble_serve::reconfig::planner::PlannerConfig;
+use ensemble_serve::util::prng::Prng;
+
+fn main() {
+    common::init_logging();
+    let n_nodes = 3;
+    let gpus = 2;
+    let e = ensemble(EnsembleId::Imn12);
+    let cluster = ClusterSpec::sim(n_nodes, gpus);
+    let nodes: Vec<Arc<InProcNode>> = cluster
+        .nodes
+        .iter()
+        .map(|n| InProcNode::new(&n.name, n.devices.clone(), common::TIME_SCALE))
+        .collect();
+    let transports: Vec<Arc<dyn Transport>> = nodes
+        .iter()
+        .map(|n| InProcTransport::new(Arc::clone(n)) as Arc<dyn Transport>)
+        .collect();
+    let router = ClusterRouter::new(
+        e.clone(),
+        cluster,
+        transports,
+        Arc::new(Average),
+        PlannerConfig::default(),
+    )
+    .expect("IMN12 fits 3 × 2-GPU nodes");
+
+    // closed-loop workload: clients fire continuously; the router
+    // retries node losses internally, so failures here are real drops
+    let stop = Arc::new(AtomicBool::new(false));
+    let ok = Arc::new(AtomicU64::new(0));
+    let failed = Arc::new(AtomicU64::new(0));
+    let latency = Arc::new(LatencyHistogram::new());
+    let n_clients = 2;
+    let images = 32usize;
+    let elems = e.members[0].input_elems_per_image();
+    let mut clients = Vec::new();
+    for c in 0..n_clients {
+        let router = Arc::clone(&router);
+        let stop = Arc::clone(&stop);
+        let ok = Arc::clone(&ok);
+        let failed = Arc::clone(&failed);
+        let latency = Arc::clone(&latency);
+        clients.push(std::thread::spawn(move || {
+            let mut rng = Prng::new(0xC105_7E12 ^ c as u64);
+            let x: Vec<f32> = (0..images * elems).map(|_| rng.f64() as f32).collect();
+            while !stop.load(Ordering::Relaxed) {
+                let t = Instant::now();
+                match router.predict(x.clone(), images) {
+                    Ok(_) => {
+                        latency.record(t.elapsed());
+                        ok.fetch_add(1, Ordering::Relaxed);
+                    }
+                    Err(_) => {
+                        failed.fetch_add(1, Ordering::Relaxed);
+                        std::thread::sleep(Duration::from_millis(5));
+                    }
+                }
+            }
+        }));
+    }
+
+    // let every node reach steady state
+    std::thread::sleep(Duration::from_millis(1500));
+    let kills = if common::fast_mode() { 2 } else { 3 };
+    let mut rng = Prng::new(0xDEAD_0DE5);
+    let mut table = Table::new(vec![
+        "kill", "node", "recovery ms", "failed reqs", "replans",
+    ]);
+    println!(
+        "=== node-failure chaos: {kills} kills, {} on {n_nodes} × {gpus}-GPU nodes ===\n",
+        e.name
+    );
+
+    for k in 0..kills {
+        // kill a random node the active plan actually uses
+        let serving: Vec<usize> =
+            router.plan().nodes.iter().map(|np| np.node).collect();
+        let victim = serving[rng.below(serving.len() as u64) as usize];
+        let failed_before = failed.load(Ordering::Relaxed);
+        let t_kill = Instant::now();
+        nodes[victim].kill();
+
+        // recovered = the installed plan excludes the victim (the next
+        // predict that trips over the dead node drives the replan)
+        let deadline = t_kill + Duration::from_secs(30);
+        let recovery_ms = loop {
+            if !router.plan().survivors.contains(&victim) {
+                break t_kill.elapsed().as_secs_f64() * 1e3;
+            }
+            if Instant::now() > deadline {
+                break f64::NAN;
+            }
+            std::thread::sleep(Duration::from_millis(2));
+        };
+        // settle: confirm traffic flows on the survivors
+        std::thread::sleep(Duration::from_millis(500));
+        let failed_during = failed.load(Ordering::Relaxed) - failed_before;
+        table.row(vec![
+            (k + 1).to_string(),
+            nodes[victim].name().to_string(),
+            if recovery_ms.is_nan() {
+                "TIMEOUT".to_string()
+            } else {
+                format!("{recovery_ms:.0}")
+            },
+            failed_during.to_string(),
+            router.replans().to_string(),
+        ]);
+
+        // revive for the next round: the recovery replan redeploys onto
+        // the full topology
+        nodes[victim].revive();
+        router.mark_node_recovered(victim).expect("in range");
+        std::thread::sleep(Duration::from_millis(300));
+    }
+
+    // --- operator-initiated failover ----------------------------------
+    // Mark a serving node dead via the health path (no predict has to
+    // trip over it first): the replan is synchronous, so this measures
+    // the pure plan+deploy cost of moving its members.
+    {
+        let serving: Vec<usize> =
+            router.plan().nodes.iter().map(|np| np.node).collect();
+        let victim = serving[rng.below(serving.len() as u64) as usize];
+        let failed_before = failed.load(Ordering::Relaxed);
+        let t0 = Instant::now();
+        nodes[victim].kill();
+        match router.mark_node_dead(victim) {
+            Ok(()) => println!(
+                "\noperator failover: {} drained in {:.0} ms, {} failed during",
+                nodes[victim].name(),
+                t0.elapsed().as_secs_f64() * 1e3,
+                failed.load(Ordering::Relaxed) - failed_before,
+            ),
+            Err(e) => println!("\noperator failover failed: {e:#}"),
+        }
+        nodes[victim].revive();
+        router.mark_node_recovered(victim).expect("in range");
+        std::thread::sleep(Duration::from_millis(300));
+    }
+
+    stop.store(true, Ordering::Relaxed);
+    for c in clients {
+        let _ = c.join();
+    }
+    table.print();
+    println!(
+        "\nworkload: {} ok, {} failed; p50 {:.0} ms, p99 {:.0} ms (scaled engine time)",
+        ok.load(Ordering::Relaxed),
+        failed.load(Ordering::Relaxed),
+        latency.quantile_ms(0.50),
+        latency.quantile_ms(0.99),
+    );
+    println!(
+        "router: {} replans, {} requests, dead nodes at exit: {:?}",
+        router.replans(),
+        router.requests(),
+        router.dead_nodes(),
+    );
+}

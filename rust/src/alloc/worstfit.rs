@@ -155,6 +155,73 @@ pub fn pack_with(
     Ok(a)
 }
 
+/// Worst-Fit-Decreasing one level up: partition ensemble *members*
+/// across cluster *nodes* (bins = nodes, weights = worst-case worker
+/// footprints, capacities = each node's aggregate device memory).
+///
+/// Every member lands on exactly one node — the cluster plane's
+/// node-affinity invariant, which keeps a request's member predictions
+/// free of cross-node hops — and the heaviest members go first onto the
+/// node with the most aggregate headroom, mirroring Algorithm 1's
+/// balancing argument at node granularity. The aggregate-memory check
+/// is a *relaxation* (it ignores per-device fragmentation); the
+/// authoritative feasibility check is the per-node [`pack_with`] run by
+/// [`crate::reconfig::planner::plan_cluster`] afterwards.
+///
+/// Returns, per node (same order as `nodes`), the ascending global
+/// member indices assigned to it. Empty `nodes` or an unplaceable
+/// member fails with [`OutOfMemory`].
+pub fn partition_members(
+    ensemble: &Ensemble,
+    nodes: &[&DeviceSet],
+    default_batch: u32,
+    cost: &dyn CostModel,
+) -> Result<Vec<Vec<usize>>, OutOfMemory> {
+    let need: Vec<f64> = ensemble
+        .members
+        .iter()
+        .map(|m| {
+            nodes
+                .iter()
+                .flat_map(|n| n.iter())
+                .map(|d| cost.worker_mem_mb(m, d, default_batch as usize))
+                .fold(0.0f64, f64::max)
+        })
+        .collect();
+    let mut order: Vec<usize> = (0..ensemble.len()).collect();
+    order.sort_by(|&x, &y| need[y].partial_cmp(&need[x]).unwrap());
+
+    let mut free: Vec<f64> = nodes
+        .iter()
+        .map(|n| n.iter().map(|d| d.mem_mb as f64).sum())
+        .collect();
+    let mut assigned: Vec<Vec<usize>> = vec![Vec::new(); nodes.len()];
+    for m in order {
+        let best = free
+            .iter()
+            .enumerate()
+            .filter(|&(_, f)| *f >= need[m])
+            .max_by(|x, y| x.1.partial_cmp(y.1).unwrap());
+        match best {
+            Some((n, _)) => {
+                free[n] -= need[m];
+                assigned[n].push(m);
+            }
+            None => {
+                return Err(OutOfMemory {
+                    model: ensemble.members[m].name.clone(),
+                    mem_mb: need[m],
+                    batch: default_batch,
+                })
+            }
+        }
+    }
+    for members in &mut assigned {
+        members.sort_unstable();
+    }
+    Ok(assigned)
+}
+
 /// `more_remaining_memory` generalized over the heuristic: returns the
 /// chosen device of `kind` that can still take model `m` at `batch`,
 /// or None.
@@ -334,5 +401,52 @@ mod tests {
         let err = worst_fit_decreasing(&e, &DeviceSet::hgx(1), 8).unwrap_err();
         assert!(!err.model.is_empty());
         assert!(err.mem_mb > 0.0);
+    }
+
+    #[test]
+    fn partition_covers_every_member_once() {
+        let e = ensemble(EnsembleId::Imn12);
+        let (a, b, c) = (DeviceSet::hgx(2), DeviceSet::hgx(2), DeviceSet::hgx(2));
+        let nodes = [&a, &b, &c];
+        let parts = partition_members(&e, &nodes, 8, &AnalyticCost).unwrap();
+        assert_eq!(parts.len(), 3);
+        let mut seen = vec![0usize; e.len()];
+        for members in &parts {
+            assert!(!members.is_empty(), "worst-fit must use every node here");
+            assert!(members.windows(2).all(|w| w[0] < w[1]), "ascending");
+            for &m in members {
+                seen[m] += 1;
+            }
+        }
+        assert!(seen.iter().all(|&n| n == 1), "exactly-once: {seen:?}");
+    }
+
+    #[test]
+    fn partition_balances_aggregate_memory() {
+        // homogeneous members over homogeneous nodes → even split
+        let e = ensemble(EnsembleId::Imn12);
+        let (a, b, c) = (DeviceSet::hgx(4), DeviceSet::hgx(4), DeviceSet::hgx(4));
+        let parts = partition_members(&e, &[&a, &b, &c], 8, &AnalyticCost).unwrap();
+        let sizes: Vec<usize> = parts.iter().map(Vec::len).collect();
+        assert!(sizes.iter().max().unwrap() - sizes.iter().min().unwrap() <= 1,
+                "uneven split {sizes:?}");
+    }
+
+    #[test]
+    fn partition_skews_toward_bigger_nodes() {
+        let e = ensemble(EnsembleId::Cif36);
+        let big = DeviceSet::hgx(6);
+        let small = DeviceSet::hgx(1);
+        let parts = partition_members(&e, &[&small, &big], 8, &AnalyticCost).unwrap();
+        assert!(parts[1].len() > parts[0].len(),
+                "bigger node must take more members: {:?}",
+                parts.iter().map(Vec::len).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn partition_oom_when_nothing_fits() {
+        let e = ensemble(EnsembleId::Imn1);
+        let err = partition_members(&e, &[], 8, &AnalyticCost).unwrap_err();
+        assert!(!err.model.is_empty());
     }
 }

@@ -88,6 +88,9 @@ pub fn profile_ensemble(
     opts: &ProfileOptions,
 ) -> ProfileStore {
     let store = ProfileStore::new();
+    // measurements belong to this executor's backend class: a store
+    // profiled on the sim backend must never calibrate a pjrt serve
+    store.set_backend_class(executor.backend_class());
     let devices = executor.devices();
 
     // one representative device index per class

@@ -1,0 +1,259 @@
+//! In-process nodes: N simulated nodes in one binary.
+//!
+//! Each [`InProcNode`] owns its devices and runs a full
+//! [`InferenceSystem`] over its own [`SimExecutor`] — separate worker
+//! pools, arenas and device ledgers per node, exactly as separate
+//! processes would — while living in one test binary so the cluster
+//! plane is exercised hermetically (the ROADMAP's "simulated nodes in
+//! one test binary"). The [`InProcTransport`] adapter exposes a node
+//! through the [`Transport`] contract with zero-copy [`Rows`] hand-off
+//! in both directions, and a kill switch simulates node loss: a killed
+//! node fails every call like a partitioned host, without tearing down
+//! its threads (the "machine is gone", not "process exited cleanly").
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, RwLock};
+
+use anyhow::{bail, Context};
+
+use crate::cluster::transport::{NodeHealth, NodeStatus, Transport};
+use crate::cluster::{sub_ensemble, NodePlan};
+use crate::device::DeviceSet;
+use crate::engine::arena::Rows;
+use crate::engine::combine::Stacked;
+use crate::engine::system::{EngineOptions, InferenceSystem};
+use crate::exec::sim::SimExecutor;
+use crate::model::Ensemble;
+
+/// One simulated node: devices, an optional deployed engine, a kill
+/// switch.
+pub struct InProcNode {
+    name: String,
+    devices: DeviceSet,
+    time_scale: f64,
+    /// Engine-option template for deployed systems; the combine rule is
+    /// always overridden with [`Stacked`] (the node must preserve every
+    /// member for the router's fold).
+    opts: EngineOptions,
+    system: RwLock<Option<Arc<InferenceSystem>>>,
+    dead: AtomicBool,
+    requests: AtomicU64,
+}
+
+impl InProcNode {
+    pub fn new(name: &str, devices: DeviceSet, time_scale: f64) -> Arc<InProcNode> {
+        Self::with_options(name, devices, time_scale, EngineOptions::default())
+    }
+
+    pub fn with_options(
+        name: &str,
+        devices: DeviceSet,
+        time_scale: f64,
+        opts: EngineOptions,
+    ) -> Arc<InProcNode> {
+        Arc::new(InProcNode {
+            name: name.to_string(),
+            devices,
+            time_scale,
+            opts,
+            system: RwLock::new(None),
+            dead: AtomicBool::new(false),
+            requests: AtomicU64::new(0),
+        })
+    }
+
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    pub fn devices(&self) -> &DeviceSet {
+        &self.devices
+    }
+
+    /// Build the engine for `plan` and swap it in. The old engine (if
+    /// any) keeps serving until the new one is up; in-flight predicts
+    /// hold their own handle and complete on whichever engine they
+    /// entered — never dropped, never answered twice.
+    pub fn deploy(&self, ensemble: &Ensemble, plan: &NodePlan) -> anyhow::Result<()> {
+        if self.dead.load(Ordering::Acquire) {
+            bail!("node {} is dead", self.name);
+        }
+        let sub = sub_ensemble(ensemble, plan.node, &plan.members);
+        // a fresh executor per deployment: its device ledger accounts
+        // only the new pool, like a fresh process on the node would
+        let executor = SimExecutor::new(self.devices.clone(), self.time_scale);
+        let opts = EngineOptions { combine: Arc::new(Stacked), ..self.opts.clone() };
+        let system = InferenceSystem::build(&plan.matrix, &sub, executor, opts)
+            .with_context(|| format!("deploying onto node {}", self.name))?;
+        *self.system.write().unwrap() = Some(Arc::new(system));
+        Ok(())
+    }
+
+    /// Stacked per-member prediction through the deployed engine
+    /// (zero-copy: the input view is shared, the output is the
+    /// accumulator's arena buffer).
+    pub fn predict_rows(&self, x: &Rows, nb_images: usize) -> anyhow::Result<Rows> {
+        if self.dead.load(Ordering::Acquire) {
+            bail!("node {} is dead", self.name);
+        }
+        let system = self
+            .system
+            .read()
+            .unwrap()
+            .clone()
+            .with_context(|| format!("node {}: no plan deployed", self.name))?;
+        self.requests.fetch_add(1, Ordering::Relaxed);
+        system.predict_rows(x.clone(), nb_images)
+    }
+
+    /// Simulate node loss: every subsequent call fails like a
+    /// partitioned host. The engine threads stay up — a lost machine
+    /// does not get to shut down cleanly.
+    pub fn kill(&self) {
+        self.dead.store(true, Ordering::Release);
+    }
+
+    /// Bring a killed node back (chaos-bench recovery phase). The node
+    /// returns empty — the router must deploy a plan before it serves.
+    pub fn revive(&self) {
+        *self.system.write().unwrap() = None;
+        self.dead.store(false, Ordering::Release);
+    }
+
+    pub fn is_dead(&self) -> bool {
+        self.dead.load(Ordering::Acquire)
+    }
+
+    /// The deployed engine, when alive (router-side zero-copy access,
+    /// trace/metric export).
+    pub fn system(&self) -> Option<Arc<InferenceSystem>> {
+        if self.is_dead() {
+            return None;
+        }
+        self.system.read().unwrap().clone()
+    }
+
+    pub fn status(&self) -> NodeStatus {
+        let system = self.system.read().unwrap().clone();
+        NodeStatus {
+            name: self.name.clone(),
+            generation: system.as_ref().map(|s| s.generation()).unwrap_or(0),
+            in_flight: system.as_ref().map(|s| s.in_flight()).unwrap_or(0),
+            requests: self.requests.load(Ordering::Relaxed),
+            workers: system
+                .as_ref()
+                .map(|s| s.matrix().worker_count())
+                .unwrap_or(0),
+        }
+    }
+}
+
+/// [`Transport`] over an [`InProcNode`] in the same process.
+pub struct InProcTransport {
+    node: Arc<InProcNode>,
+}
+
+impl InProcTransport {
+    pub fn new(node: Arc<InProcNode>) -> Arc<InProcTransport> {
+        Arc::new(InProcTransport { node })
+    }
+
+    pub fn node(&self) -> &Arc<InProcNode> {
+        &self.node
+    }
+}
+
+impl Transport for InProcTransport {
+    fn name(&self) -> &str {
+        self.node.name()
+    }
+
+    fn deploy(&self, ensemble: &Ensemble, plan: &NodePlan) -> anyhow::Result<()> {
+        self.node.deploy(ensemble, plan)
+    }
+
+    fn predict(&self, x: &Rows, nb_images: usize) -> anyhow::Result<Rows> {
+        self.node.predict_rows(x, nb_images)
+    }
+
+    fn stats(&self) -> anyhow::Result<NodeStatus> {
+        if self.node.is_dead() {
+            bail!("node {} is dead", self.node.name());
+        }
+        Ok(self.node.status())
+    }
+
+    fn health(&self) -> NodeHealth {
+        if self.node.is_dead() {
+            NodeHealth::Dead("killed".to_string())
+        } else {
+            NodeHealth::Alive
+        }
+    }
+
+    fn local_system(&self) -> Option<Arc<InferenceSystem>> {
+        self.node.system()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::alloc::matrix::AllocationMatrix;
+    use crate::model::{ensemble, EnsembleId};
+
+    fn tiny_plan(e: &Ensemble) -> NodePlan {
+        // IMN4's members 0 and 2 on a 2-GPU node
+        let mut m = AllocationMatrix::zeroed(3, 2);
+        m.set(0, 0, 8);
+        m.set(1, 1, 8);
+        NodePlan { node: 0, members: vec![0, 2], matrix: m, predicted_img_s: 1.0 }
+    }
+
+    #[test]
+    fn deploy_predict_stacked_and_kill() {
+        let e = ensemble(EnsembleId::Imn4);
+        let node = InProcNode::new("n0", DeviceSet::hgx(2), 1024.0);
+        let plan = tiny_plan(&e);
+        node.deploy(&e, &plan).unwrap();
+
+        let elems = e.members[0].input_elems_per_image();
+        let x = Rows::from_vec(vec![0.1; 2 * elems]);
+        let y = node.predict_rows(&x, 2).unwrap();
+        // stacked width: rows × members × classes
+        assert_eq!(y.len(), 2 * 2 * e.classes());
+        // sim outputs are uniform: every member block is 1/classes
+        for v in y.as_slice() {
+            assert_eq!(*v, 1.0 / e.classes() as f32);
+        }
+        let st = node.status();
+        assert_eq!(st.workers, 2);
+        assert_eq!(st.requests, 1);
+        assert!(st.generation >= 1);
+
+        let t = InProcTransport::new(Arc::clone(&node));
+        assert_eq!(t.health(), NodeHealth::Alive);
+        assert!(t.local_system().is_some());
+
+        node.kill();
+        assert!(node.predict_rows(&x, 2).is_err());
+        assert!(node.deploy(&e, &plan).is_err());
+        assert_eq!(t.health(), NodeHealth::Dead("killed".to_string()));
+        assert!(t.local_system().is_none());
+        assert!(t.stats().is_err());
+
+        node.revive();
+        assert_eq!(t.health(), NodeHealth::Alive);
+        assert!(node.predict_rows(&x, 2).is_err(), "revived node starts empty");
+        node.deploy(&e, &plan).unwrap();
+        assert_eq!(node.predict_rows(&x, 2).unwrap().len(), 2 * 2 * e.classes());
+    }
+
+    #[test]
+    fn predict_without_plan_fails() {
+        let node = InProcNode::new("n0", DeviceSet::hgx(1), 1024.0);
+        let x = Rows::from_vec(vec![0.0; 4]);
+        let err = node.predict_rows(&x, 1).unwrap_err().to_string();
+        assert!(err.contains("no plan deployed"), "{err}");
+    }
+}

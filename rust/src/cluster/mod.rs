@@ -1,0 +1,353 @@
+//! The cluster execution plane: nodes, partitioned plans, transports
+//! and the scatter/gather router.
+//!
+//! The single-process engine serves "an ensemble of 12 heavy DNNs into
+//! 4 GPUs" (§III); the companion workflow paper (arXiv 2208.14046) runs
+//! the same ensembles across GPU *clusters*. This module generalizes
+//! "a set of devices" into "a set of nodes, each owning devices":
+//!
+//! * [`ClusterSpec`] — the topology: named nodes, each with its own
+//!   [`DeviceSet`]. [`ClusterSpec::flatten`] concatenates them into the
+//!   global device indexing the planner and the single-process engine
+//!   share, so a cluster plan and a flat plan describe the same matrix.
+//! * [`NodePlan`] / [`ClusterPlan`] — node-partitioned allocations
+//!   emitted by [`crate::reconfig::planner::plan_cluster`]: every member
+//!   is *node-affine* (all its workers on one node), so one node can
+//!   answer its members without cross-node traffic inside a request.
+//! * [`Transport`](transport::Transport) — the node wire contract
+//!   (deploy plan / predict batch / fetch stats / health), with an
+//!   in-process backend ([`inproc`]) for N-simulated-nodes-in-one-binary
+//!   tests and a length-prefixed TCP backend ([`tcp`]).
+//! * [`ClusterRouter`](router::ClusterRouter) — scatter/gathers
+//!   per-member predictions over the transports and runs the combine
+//!   rule at the router; node loss is a scaled-up device failure that
+//!   flows through the same replan path
+//!   ([`plan_cluster`](crate::reconfig::planner::plan_cluster) with the
+//!   dead nodes failed).
+//!
+//! Inside a node the engine runs the [`Stacked`] combine rule, so the
+//! node's answer carries every member's distribution; the router folds
+//! them in deterministic global member order with the deployment's real
+//! rule. Both sides use the same bit-exact accumulate kernels, so a
+//! cluster's answers are bit-identical to a single process serving the
+//! same flattened matrix.
+//!
+//! [`Stacked`]: crate::engine::combine::Stacked
+
+pub mod inproc;
+pub mod router;
+pub mod tcp;
+pub mod transport;
+
+use anyhow::ensure;
+
+use crate::alloc::matrix::AllocationMatrix;
+use crate::device::DeviceSet;
+use crate::model::Ensemble;
+
+pub use inproc::{InProcNode, InProcTransport};
+pub use router::ClusterRouter;
+pub use tcp::{NodeServer, TcpTransport};
+pub use transport::{NodeHealth, NodeStatus, Transport};
+
+/// One node of the cluster: a name and the devices it owns.
+#[derive(Debug, Clone)]
+pub struct NodeSpec {
+    pub name: String,
+    pub devices: DeviceSet,
+}
+
+/// The cluster topology. Node order is stable: it defines both the node
+/// indexing of [`ClusterPlan`] and the device-row order of
+/// [`flatten`](Self::flatten).
+#[derive(Debug, Clone)]
+pub struct ClusterSpec {
+    pub nodes: Vec<NodeSpec>,
+}
+
+impl ClusterSpec {
+    pub fn new(nodes: Vec<NodeSpec>) -> ClusterSpec {
+        ClusterSpec { nodes }
+    }
+
+    /// A homogeneous simulated cluster: `n_nodes` nodes of
+    /// `gpus_per_node` V100s (+1 host CPU each), named `node0..`.
+    pub fn sim(n_nodes: usize, gpus_per_node: usize) -> ClusterSpec {
+        ClusterSpec {
+            nodes: (0..n_nodes)
+                .map(|i| NodeSpec {
+                    name: format!("node{i}"),
+                    devices: DeviceSet::hgx(gpus_per_node),
+                })
+                .collect(),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.nodes.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.nodes.is_empty()
+    }
+
+    /// Total devices across all nodes (the row count of the global
+    /// matrix indexing).
+    pub fn total_devices(&self) -> usize {
+        self.nodes.iter().map(|n| n.devices.len()).sum()
+    }
+
+    /// First global device index of `node` under [`flatten`](Self::flatten).
+    pub fn device_offset(&self, node: usize) -> usize {
+        self.nodes[..node].iter().map(|n| n.devices.len()).sum()
+    }
+
+    /// The node owning global device index `device`.
+    pub fn node_of_device(&self, device: usize) -> Option<usize> {
+        let mut off = 0;
+        for (i, n) in self.nodes.iter().enumerate() {
+            off += n.devices.len();
+            if device < off {
+                return Some(i);
+            }
+        }
+        None
+    }
+
+    /// All global device indices of `node` — the rows a node loss
+    /// fails, when the failure is fed through the single-system
+    /// device-failure path (see the controllers' `mark_node`).
+    pub fn node_devices(&self, node: usize) -> std::ops::Range<usize> {
+        let off = self.device_offset(node);
+        off..off + self.nodes[node].devices.len()
+    }
+
+    /// Concatenate every node's devices into one flat [`DeviceSet`] in
+    /// node order — the indexing shared with the single-process engine,
+    /// which is what makes "cluster plan" and "flat plan" comparable
+    /// (and their outputs bit-identical).
+    pub fn flatten(&self) -> DeviceSet {
+        DeviceSet::new(
+            self.nodes
+                .iter()
+                .flat_map(|n| n.devices.iter().cloned())
+                .collect(),
+        )
+    }
+}
+
+/// One node's slice of a [`ClusterPlan`].
+#[derive(Debug, Clone)]
+pub struct NodePlan {
+    /// Node index into the [`ClusterSpec`].
+    pub node: usize,
+    /// Global member indices served by this node, ascending. The node's
+    /// stacked output carries member blocks in exactly this order.
+    pub members: Vec<usize>,
+    /// Node-local allocation: `node.devices × members.len()`, column
+    /// `j` = member `members[j]`.
+    pub matrix: AllocationMatrix,
+    /// Analytic throughput estimate of this node's sub-ensemble, img/s.
+    pub predicted_img_s: f64,
+}
+
+/// A node-partitioned allocation of one ensemble over a cluster.
+///
+/// Invariants (checked by [`validate`](Self::validate), established by
+/// [`plan_cluster`](crate::reconfig::planner::plan_cluster)):
+///
+/// 1. every ensemble member appears in exactly one node's `members`
+///    (node-affinity: all of a member's workers live on one node);
+/// 2. each node's `matrix` is a valid allocation of its sub-ensemble
+///    over its own devices (every member placed, local indexing);
+/// 3. `global` is the union of the node matrices re-indexed into the
+///    flattened device rows — deployable as-is on a single process
+///    spanning [`ClusterSpec::flatten`].
+#[derive(Debug, Clone)]
+pub struct ClusterPlan {
+    /// Per-node slices, ascending node index; nodes with no members
+    /// (failed or simply unused) carry no entry.
+    pub nodes: Vec<NodePlan>,
+    /// The same allocation in global (flattened) indexing:
+    /// `cluster.total_devices() × ensemble.len()`.
+    pub global: AllocationMatrix,
+    /// Node indices this plan may use (the non-failed ones at plan
+    /// time), mirroring [`crate::reconfig::planner::Plan::survivors`].
+    pub survivors: Vec<usize>,
+    /// Predicted ensemble throughput, img/s: the minimum over the node
+    /// sub-plans — an ensemble answer needs every member, so the
+    /// slowest node's member set bounds the rate.
+    pub predicted_img_s: f64,
+}
+
+impl ClusterPlan {
+    /// The node serving global member `member`, with the member's
+    /// position in that node's stacked output.
+    pub fn locate_member(&self, member: usize) -> Option<(usize, usize)> {
+        for np in &self.nodes {
+            if let Some(local) = np.members.iter().position(|&m| m == member) {
+                return Some((np.node, local));
+            }
+        }
+        None
+    }
+
+    /// Total deployed workers across the cluster.
+    pub fn worker_count(&self) -> usize {
+        self.nodes.iter().map(|np| np.matrix.worker_count()).sum()
+    }
+
+    /// Check the partitioned-plan invariants against `ensemble` and
+    /// `cluster` (see the type docs). Cheap; called by the router on
+    /// every plan it installs.
+    pub fn validate(&self, ensemble: &Ensemble, cluster: &ClusterSpec) -> anyhow::Result<()> {
+        let mut owner = vec![usize::MAX; ensemble.len()];
+        for np in &self.nodes {
+            ensure!(np.node < cluster.len(), "node index {} out of range", np.node);
+            ensure!(
+                np.matrix.n_devices() == cluster.nodes[np.node].devices.len(),
+                "node {} matrix has {} device rows, node owns {}",
+                np.node, np.matrix.n_devices(), cluster.nodes[np.node].devices.len()
+            );
+            ensure!(
+                np.matrix.n_models() == np.members.len(),
+                "node {} matrix has {} member columns for {} members",
+                np.node, np.matrix.n_models(), np.members.len()
+            );
+            ensure!(np.matrix.all_models_placed(),
+                    "node {} leaves members unplaced", np.node);
+            for &m in &np.members {
+                ensure!(m < ensemble.len(), "member index {m} out of range");
+                ensure!(owner[m] == usize::MAX,
+                        "member {m} assigned to nodes {} and {}", owner[m], np.node);
+                owner[m] = np.node;
+            }
+        }
+        ensure!(
+            owner.iter().all(|&o| o != usize::MAX),
+            "members {:?} assigned to no node",
+            owner.iter().enumerate().filter(|(_, &o)| o == usize::MAX)
+                 .map(|(m, _)| m).collect::<Vec<_>>()
+        );
+        // global must be exactly the union of the node matrices
+        ensure!(
+            self.global.n_devices() == cluster.total_devices()
+                && self.global.n_models() == ensemble.len(),
+            "global matrix is {}×{}, want {}×{}",
+            self.global.n_devices(), self.global.n_models(),
+            cluster.total_devices(), ensemble.len()
+        );
+        let mut want = AllocationMatrix::zeroed(cluster.total_devices(), ensemble.len());
+        for np in &self.nodes {
+            let off = cluster.device_offset(np.node);
+            for d in 0..np.matrix.n_devices() {
+                for (j, &m) in np.members.iter().enumerate() {
+                    want.set(off + d, m, np.matrix.get(d, j));
+                }
+            }
+        }
+        ensure!(
+            want.cache_key() == self.global.cache_key(),
+            "global matrix disagrees with the node partition"
+        );
+        Ok(())
+    }
+}
+
+/// The sub-ensemble a node serves: `members` (global indices, in
+/// [`NodePlan::members`] order) of `ensemble`, named deterministically
+/// so fingerprints agree across router and node.
+pub fn sub_ensemble(ensemble: &Ensemble, node: usize, members: &[usize]) -> Ensemble {
+    Ensemble::custom(
+        &format!("{}@n{node}", ensemble.name),
+        members.iter().map(|&m| ensemble.members[m].clone()).collect(),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::{ensemble, EnsembleId};
+
+    #[test]
+    fn flatten_and_device_indexing() {
+        let c = ClusterSpec::sim(3, 2);
+        assert_eq!(c.len(), 3);
+        assert_eq!(c.total_devices(), 9, "3 × (2 GPUs + 1 CPU)");
+        assert_eq!(c.device_offset(0), 0);
+        assert_eq!(c.device_offset(2), 6);
+        assert_eq!(c.node_of_device(0), Some(0));
+        assert_eq!(c.node_of_device(5), Some(1));
+        assert_eq!(c.node_of_device(8), Some(2));
+        assert_eq!(c.node_of_device(9), None);
+        assert_eq!(c.node_devices(1), 3..6);
+        let flat = c.flatten();
+        assert_eq!(flat.len(), 9);
+        assert_eq!(flat[0].class_key(), flat[3].class_key());
+        assert!(flat[2].class_key().contains("CPU") || !flat[2].is_gpu());
+    }
+
+    #[test]
+    fn sub_ensemble_takes_members_in_order() {
+        let e = ensemble(EnsembleId::Imn12);
+        let s = sub_ensemble(&e, 1, &[2, 5, 7]);
+        assert_eq!(s.len(), 3);
+        assert_eq!(s.members[0].name, e.members[2].name);
+        assert_eq!(s.members[2].name, e.members[7].name);
+        assert_eq!(s.classes(), e.classes());
+        assert_eq!(s.name, format!("{}@n1", e.name));
+    }
+
+    #[test]
+    fn validate_catches_broken_partitions() {
+        let e = ensemble(EnsembleId::Imn4);
+        let c = ClusterSpec::sim(2, 2);
+        // a hand-built valid partition: members 0,1 → node 0; 2,3 → node 1
+        let mut m0 = AllocationMatrix::zeroed(3, 2);
+        m0.set(0, 0, 8);
+        m0.set(1, 1, 8);
+        let mut m1 = AllocationMatrix::zeroed(3, 2);
+        m1.set(0, 0, 8);
+        m1.set(1, 1, 8);
+        let mut global = AllocationMatrix::zeroed(6, 4);
+        global.set(0, 0, 8);
+        global.set(1, 1, 8);
+        global.set(3, 2, 8);
+        global.set(4, 3, 8);
+        let plan = ClusterPlan {
+            nodes: vec![
+                NodePlan { node: 0, members: vec![0, 1], matrix: m0.clone(),
+                           predicted_img_s: 1.0 },
+                NodePlan { node: 1, members: vec![2, 3], matrix: m1.clone(),
+                           predicted_img_s: 1.0 },
+            ],
+            global: global.clone(),
+            survivors: vec![0, 1],
+            predicted_img_s: 1.0,
+        };
+        plan.validate(&e, &c).unwrap();
+        assert_eq!(plan.locate_member(2), Some((1, 0)));
+        assert_eq!(plan.locate_member(3), Some((1, 1)));
+        assert_eq!(plan.worker_count(), 4);
+
+        // duplicate assignment
+        let mut bad = plan.clone();
+        bad.nodes[1].members = vec![1, 3];
+        assert!(bad.validate(&e, &c).is_err(), "member on two nodes accepted");
+
+        // missing member
+        let mut bad = plan.clone();
+        bad.nodes[1].members = vec![2, 3];
+        bad.nodes[1].matrix = {
+            let mut m = AllocationMatrix::zeroed(3, 2);
+            m.set(0, 0, 8); // member 3 unplaced
+            m
+        };
+        assert!(bad.validate(&e, &c).is_err(), "unplaced member accepted");
+
+        // global out of sync with the partition
+        let mut bad = plan.clone();
+        bad.global.set(5, 3, 16);
+        assert!(bad.validate(&e, &c).is_err(), "stale global matrix accepted");
+    }
+}

@@ -1,0 +1,438 @@
+//! The router tier: scatter/gather over node transports, combine at
+//! the router, replan on node loss.
+//!
+//! A [`ClusterRouter`] owns one deployed [`ClusterPlan`] and a
+//! [`Transport`] per node. A predict scatters the input rows to every
+//! node carrying members (in parallel — nodes are independent), gathers
+//! the stacked per-member answers, and folds them with the deployment's
+//! *real* combine rule in deterministic global member order — the same
+//! accumulate/finalize kernels the single-process accumulator runs, so
+//! a cluster answer matches a flat engine on
+//! [`ClusterPlan::global`] (bit-identically whenever the rule's fold is
+//! order-insensitive for the produced values, which holds exactly on
+//! the simulator's uniform outputs the integration tests pin).
+//!
+//! **Node loss is a scaled-up device failure.** A failed node predict
+//! marks the node dead and drives the same replan path the
+//! single-system controllers use for a failed device —
+//! [`plan_cluster`] with the dead set — then retries the whole scatter.
+//! The router only answers after a *complete* gather, and every node
+//! keeps its old engine serving until a new deployment is built, so a
+//! request is never dropped and never answered twice: it either returns
+//! one fused answer or one error after the retry budget.
+//!
+//! **Plan/deploy serialization.** Predicts hold the plan's read lock
+//! across scatter+gather; replans deploy and swap under the write lock.
+//! A node therefore never changes sub-ensembles underneath an in-flight
+//! router predict, which is what lets the gather interpret each node's
+//! stacked buffer with the member list it scattered under. The width
+//! check on every gathered buffer stays as a defensive invariant.
+
+use std::collections::BTreeSet;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, RwLock};
+
+use anyhow::{bail, ensure, Context};
+
+use crate::cluster::transport::Transport;
+use crate::cluster::{ClusterPlan, ClusterSpec};
+use crate::engine::arena::Rows;
+use crate::engine::combine::CombineRule;
+use crate::engine::system::InferenceSystem;
+use crate::model::Ensemble;
+use crate::reconfig::planner::{plan_cluster, PlannerConfig};
+use crate::util::json::Json;
+
+/// Scatter attempts per predict: each retry follows a replan, so the
+/// budget bounds how many *successive* node losses one request absorbs.
+const MAX_ATTEMPTS: usize = 4;
+
+/// Scatter/gather router over a set of node transports.
+pub struct ClusterRouter {
+    ensemble: Ensemble,
+    cluster: ClusterSpec,
+    transports: Vec<Arc<dyn Transport>>,
+    /// The deployment's real combine rule, run at the router.
+    combine: Arc<dyn CombineRule>,
+    planner: PlannerConfig,
+    plan: RwLock<Arc<ClusterPlan>>,
+    dead: Mutex<BTreeSet<usize>>,
+    /// Serializes replan decisions (the plan write lock alone would let
+    /// two failing predicts replan back-to-back for the same death).
+    replan_lock: Mutex<()>,
+    replans: AtomicU64,
+    requests: AtomicU64,
+}
+
+impl ClusterRouter {
+    /// Plan `ensemble` over `cluster`, deploy to every node and return
+    /// a serving router. `transports[i]` must reach `cluster.nodes[i]`.
+    pub fn new(
+        ensemble: Ensemble,
+        cluster: ClusterSpec,
+        transports: Vec<Arc<dyn Transport>>,
+        combine: Arc<dyn CombineRule>,
+        planner: PlannerConfig,
+    ) -> anyhow::Result<Arc<ClusterRouter>> {
+        ensure!(
+            transports.len() == cluster.len(),
+            "{} transports for {} nodes",
+            transports.len(),
+            cluster.len()
+        );
+        ensure!(!cluster.is_empty(), "empty cluster");
+        let plan = plan_cluster(&ensemble, &cluster, &[], &planner)?;
+        for np in &plan.nodes {
+            transports[np.node]
+                .deploy(&ensemble, np)
+                .with_context(|| format!("initial deploy to node {}", np.node))?;
+        }
+        Ok(Arc::new(ClusterRouter {
+            ensemble,
+            cluster,
+            transports,
+            combine,
+            planner,
+            plan: RwLock::new(Arc::new(plan)),
+            dead: Mutex::new(BTreeSet::new()),
+            replan_lock: Mutex::new(()),
+            replans: AtomicU64::new(0),
+            requests: AtomicU64::new(0),
+        }))
+    }
+
+    /// Predict `nb_images` rows through the cluster: scatter to every
+    /// node in the plan, gather the stacked answers, fold with the
+    /// combine rule. On node failure: mark dead, replan onto survivors,
+    /// retry the whole scatter (at most [`MAX_ATTEMPTS`] times).
+    pub fn predict_rows(&self, x: Rows, nb_images: usize) -> anyhow::Result<Rows> {
+        self.requests.fetch_add(1, Ordering::Relaxed);
+        let c = self.ensemble.classes();
+        for attempt in 0..MAX_ATTEMPTS {
+            let mut newly_dead = Vec::new();
+            {
+                let plan = self.plan.read().unwrap();
+                // parallel scatter: nodes serve disjoint member sets
+                let outs: Vec<anyhow::Result<Rows>> = std::thread::scope(|s| {
+                    let handles: Vec<_> = plan
+                        .nodes
+                        .iter()
+                        .map(|np| {
+                            let t = Arc::clone(&self.transports[np.node]);
+                            let x = &x;
+                            s.spawn(move || t.predict(x, nb_images))
+                        })
+                        .collect();
+                    handles.into_iter().map(|h| h.join().unwrap()).collect()
+                });
+                for (np, out) in plan.nodes.iter().zip(&outs) {
+                    match out {
+                        Ok(rows) => ensure!(
+                            rows.len() == nb_images * np.members.len() * c,
+                            "node {} answered {} values, want {} — plan skew",
+                            np.node, rows.len(), nb_images * np.members.len() * c
+                        ),
+                        Err(e) => {
+                            log::warn!(
+                                "cluster: node {} failed predict (attempt {attempt}): {e:#}",
+                                np.node
+                            );
+                            newly_dead.push(np.node);
+                        }
+                    }
+                }
+                if newly_dead.is_empty() {
+                    let outs: Vec<Rows> =
+                        outs.into_iter().map(|r| r.unwrap()).collect();
+                    return Ok(self.fold(&plan, &outs, nb_images));
+                }
+            } // drop the read guard before replanning
+            self.mark_dead(&newly_dead);
+            self.replan()
+                .with_context(|| format!("replanning after losing {newly_dead:?}"))?;
+        }
+        bail!("cluster predict failed after {MAX_ATTEMPTS} attempts");
+    }
+
+    /// [`predict_rows`](Self::predict_rows) over an owned vector.
+    pub fn predict(&self, x: Vec<f32>, nb_images: usize) -> anyhow::Result<Vec<f32>> {
+        Ok(self.predict_rows(Rows::from_vec(x), nb_images)?.into_vec())
+    }
+
+    /// Fold the gathered stacked buffers with the real combine rule in
+    /// global member order. `outs[i]` pairs with `plan.nodes[i]`.
+    fn fold(&self, plan: &ClusterPlan, outs: &[Rows], nb: usize) -> Rows {
+        let c = self.ensemble.classes();
+        let m_total = self.ensemble.len();
+        let width = c * self.combine.output_multiplier(m_total);
+        let mut y = vec![0.0f32; nb * width];
+        let mut member = vec![0.0f32; nb * c];
+        for m in 0..m_total {
+            let (ni, j, k) = plan
+                .nodes
+                .iter()
+                .enumerate()
+                .find_map(|(ni, np)| {
+                    np.members
+                        .iter()
+                        .position(|&mm| mm == m)
+                        .map(|j| (ni, j, np.members.len()))
+                })
+                .expect("validated plan covers every member");
+            let out = outs[ni].as_slice();
+            // de-stride member m out of the node's nb × k × c buffer
+            for r in 0..nb {
+                let src = (r * k + j) * c;
+                member[r * c..(r + 1) * c].copy_from_slice(&out[src..src + c]);
+            }
+            self.combine.accumulate(&mut y, &member, m, m_total, width);
+        }
+        self.combine.finalize(&mut y, m_total, width);
+        Rows::from_vec(y)
+    }
+
+    fn mark_dead(&self, nodes: &[usize]) {
+        let mut dead = self.dead.lock().unwrap();
+        for &n in nodes {
+            dead.insert(n);
+        }
+    }
+
+    /// Mark a node failed without waiting for a predict to trip over it
+    /// (health-check loops, operator action).
+    pub fn mark_node_dead(&self, node: usize) -> anyhow::Result<()> {
+        ensure!(node < self.cluster.len(), "node {node} out of range");
+        self.mark_dead(&[node]);
+        self.replan()
+    }
+
+    /// Re-admit a recovered node and rebalance members back onto it.
+    /// The node must be reachable: the replan deploys to it.
+    pub fn mark_node_recovered(&self, node: usize) -> anyhow::Result<()> {
+        ensure!(node < self.cluster.len(), "node {node} out of range");
+        self.dead.lock().unwrap().remove(&node);
+        self.replan()
+    }
+
+    /// Replan onto the current survivor set and deploy: the node-level
+    /// mirror of the device-failure replan path. No-ops when the
+    /// installed plan already matches the survivor set (a concurrent
+    /// failing predict got here first).
+    fn replan(&self) -> anyhow::Result<()> {
+        let _g = self.replan_lock.lock().unwrap();
+        let dead: Vec<usize> = self.dead.lock().unwrap().iter().copied().collect();
+        let want: Vec<usize> =
+            (0..self.cluster.len()).filter(|n| !dead.contains(n)).collect();
+        if self.plan.read().unwrap().survivors == want {
+            return Ok(());
+        }
+        let plan = plan_cluster(&self.ensemble, &self.cluster, &dead, &self.planner)?;
+        // hold the write lock through the deploys: no node changes
+        // sub-ensembles underneath an in-flight scatter
+        let mut guard = self.plan.write().unwrap();
+        for np in &plan.nodes {
+            self.transports[np.node]
+                .deploy(&self.ensemble, np)
+                .with_context(|| format!("deploying replan to node {}", np.node))?;
+        }
+        *guard = Arc::new(plan);
+        self.replans.fetch_add(1, Ordering::Relaxed);
+        log::info!("cluster: replanned onto nodes {want:?}");
+        Ok(())
+    }
+
+    /// The installed plan.
+    pub fn plan(&self) -> Arc<ClusterPlan> {
+        self.plan.read().unwrap().clone()
+    }
+
+    /// Replans performed since start (node loss and recovery).
+    pub fn replans(&self) -> u64 {
+        self.replans.load(Ordering::Relaxed)
+    }
+
+    /// Predict calls accepted by the router.
+    pub fn requests(&self) -> u64 {
+        self.requests.load(Ordering::Relaxed)
+    }
+
+    /// Currently-dead node indices.
+    pub fn dead_nodes(&self) -> Vec<usize> {
+        self.dead.lock().unwrap().iter().copied().collect()
+    }
+
+    pub fn cluster(&self) -> &ClusterSpec {
+        &self.cluster
+    }
+
+    pub fn ensemble(&self) -> &Ensemble {
+        &self.ensemble
+    }
+
+    /// In-process node engines (node index, name, system) — the zero-
+    /// copy seam: lets the server export per-node trace lanes and
+    /// node-labeled metrics without a wire round-trip.
+    pub fn local_systems(&self) -> Vec<(usize, String, Arc<InferenceSystem>)> {
+        self.transports
+            .iter()
+            .enumerate()
+            .filter_map(|(i, t)| {
+                t.local_system().map(|s| (i, t.name().to_string(), s))
+            })
+            .collect()
+    }
+
+    /// Cluster status document (`GET /v1/cluster`).
+    pub fn status_json(&self) -> Json {
+        let plan = self.plan();
+        let dead = self.dead_nodes();
+        let nodes: Vec<Json> = (0..self.cluster.len())
+            .map(|n| {
+                let t = &self.transports[n];
+                let np = plan.nodes.iter().find(|np| np.node == n);
+                let mut pairs = vec![
+                    ("node", Json::Num(n as f64)),
+                    ("name", Json::Str(self.cluster.nodes[n].name.clone())),
+                    ("alive", Json::Bool(t.health().is_alive())),
+                    ("devices", Json::Num(self.cluster.nodes[n].devices.len() as f64)),
+                    (
+                        "members",
+                        Json::Arr(
+                            np.map(|np| {
+                                np.members.iter().map(|&m| Json::Num(m as f64)).collect()
+                            })
+                            .unwrap_or_default(),
+                        ),
+                    ),
+                ];
+                if let Ok(st) = t.stats() {
+                    pairs.push(("generation", Json::Num(st.generation as f64)));
+                    pairs.push(("in_flight", Json::Num(st.in_flight as f64)));
+                    pairs.push(("node_requests", Json::Num(st.requests as f64)));
+                    pairs.push(("workers", Json::Num(st.workers as f64)));
+                }
+                Json::from_pairs(pairs)
+            })
+            .collect();
+        Json::from_pairs([
+            ("ensemble", Json::Str(self.ensemble.name.clone())),
+            ("combine", Json::Str(self.combine.name().to_string())),
+            ("nodes", Json::Arr(nodes)),
+            ("dead", Json::Arr(dead.iter().map(|&n| Json::Num(n as f64)).collect())),
+            ("survivors", Json::Arr(
+                plan.survivors.iter().map(|&n| Json::Num(n as f64)).collect(),
+            )),
+            ("workers", Json::Num(plan.worker_count() as f64)),
+            ("predicted_img_s", Json::Num(plan.predicted_img_s)),
+            ("replans", Json::Num(self.replans() as f64)),
+            ("requests", Json::Num(self.requests() as f64)),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::inproc::{InProcNode, InProcTransport};
+    use crate::engine::combine::Average;
+    use crate::model::{ensemble, EnsembleId};
+
+    fn sim_router(
+        id: EnsembleId,
+        n_nodes: usize,
+        gpus: usize,
+    ) -> (Arc<ClusterRouter>, Vec<Arc<InProcNode>>) {
+        let e = ensemble(id);
+        let cluster = ClusterSpec::sim(n_nodes, gpus);
+        let nodes: Vec<Arc<InProcNode>> = cluster
+            .nodes
+            .iter()
+            .map(|n| InProcNode::new(&n.name, n.devices.clone(), 1024.0))
+            .collect();
+        let transports: Vec<Arc<dyn Transport>> = nodes
+            .iter()
+            .map(|n| InProcTransport::new(Arc::clone(n)) as Arc<dyn Transport>)
+            .collect();
+        let router = ClusterRouter::new(
+            e,
+            cluster,
+            transports,
+            Arc::new(Average),
+            PlannerConfig::default(),
+        )
+        .unwrap();
+        (router, nodes)
+    }
+
+    #[test]
+    fn scatter_gather_averages_across_nodes() {
+        let (router, _nodes) = sim_router(EnsembleId::Imn4, 2, 2);
+        let e = router.ensemble().clone();
+        let elems = e.members[0].input_elems_per_image();
+        let y = router.predict(vec![0.1; 3 * elems], 3).unwrap();
+        assert_eq!(y.len(), 3 * e.classes());
+        // sim members emit uniform rows; the average is uniform too
+        for v in &y {
+            assert_eq!(*v, 1.0 / e.classes() as f32);
+        }
+        assert_eq!(router.requests(), 1);
+        assert_eq!(router.replans(), 0);
+    }
+
+    #[test]
+    fn node_loss_replans_and_the_request_still_answers() {
+        let (router, nodes) = sim_router(EnsembleId::Imn4, 3, 2);
+        let e = router.ensemble().clone();
+        let before = router.plan();
+        assert_eq!(before.survivors, vec![0, 1, 2]);
+        // kill a node that actually serves members
+        let victim = before.nodes.last().unwrap().node;
+        nodes[victim].kill();
+
+        let elems = e.members[0].input_elems_per_image();
+        let y = router.predict(vec![0.2; 2 * elems], 2).unwrap();
+        assert_eq!(y.len(), 2 * e.classes());
+        for v in &y {
+            assert_eq!(*v, 1.0 / e.classes() as f32);
+        }
+        assert_eq!(router.replans(), 1, "one replan for one node loss");
+        let after = router.plan();
+        assert!(!after.survivors.contains(&victim));
+        assert!(after.nodes.iter().all(|np| np.node != victim));
+        assert_eq!(router.dead_nodes(), vec![victim]);
+
+        // recovery rebalances back
+        nodes[victim].revive();
+        router.mark_node_recovered(victim).unwrap();
+        assert_eq!(router.plan().survivors, vec![0, 1, 2]);
+        assert_eq!(router.replans(), 2);
+        router.predict(vec![0.2; elems], 1).unwrap();
+    }
+
+    #[test]
+    fn all_nodes_dead_is_an_error_not_a_hang() {
+        let (router, nodes) = sim_router(EnsembleId::Imn1, 2, 2);
+        for n in &nodes {
+            n.kill();
+        }
+        let e = router.ensemble().clone();
+        let elems = e.members[0].input_elems_per_image();
+        assert!(router.predict(vec![0.1; elems], 1).is_err());
+    }
+
+    #[test]
+    fn status_json_reports_topology() {
+        let (router, nodes) = sim_router(EnsembleId::Imn4, 2, 2);
+        let st = router.status_json();
+        assert_eq!(st.get("combine").and_then(Json::as_str), Some("average"));
+        let listed = st.get("nodes").and_then(Json::as_arr).unwrap();
+        assert_eq!(listed.len(), 2);
+        assert_eq!(listed[0].get("alive"), Some(&Json::Bool(true)));
+        nodes[1].kill();
+        let st = router.status_json();
+        let listed = st.get("nodes").and_then(Json::as_arr).unwrap();
+        assert_eq!(listed[1].get("alive"), Some(&Json::Bool(false)));
+        // parseable round-trip (the server serves this string)
+        Json::parse(&st.to_string()).unwrap();
+    }
+}

@@ -1,0 +1,406 @@
+//! Length-prefixed TCP transport: the cluster contract over a socket.
+//!
+//! Wire format, both directions:
+//!
+//! ```text
+//! request  = opcode:u8  len:u64le  payload[len]
+//! reply    = status:u8  len:u64le  payload[len]     status 0=ok 1=err
+//! ```
+//!
+//! Opcodes: `1` DEPLOY (JSON `{ensemble, node, members, matrix,
+//! predicted_img_s}` — the ensemble travels as its [`EnsembleId`] name,
+//! so both sides reconstruct the identical member list from the model
+//! zoo), `2` PREDICT (`nb_images:u64le` + raw f32-le rows; the reply
+//! payload is the stacked f32-le output), `3` STATS (JSON reply), `4`
+//! HEALTH (empty ok / err). An error reply carries the error string.
+//!
+//! [`NodeServer`] serves one [`InProcNode`] on a listener (the `node`
+//! CLI subcommand's core); [`TcpTransport`] is the router-side peer,
+//! one short-lived connection per request — crude but stateless, so a
+//! node restart needs no session recovery, and a connect failure is
+//! immediately a [`NodeHealth::Dead`] signal the router can act on.
+
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use anyhow::{bail, ensure, Context};
+
+use crate::alloc::matrix::AllocationMatrix;
+use crate::cluster::inproc::InProcNode;
+use crate::cluster::transport::{NodeHealth, NodeStatus, Transport};
+use crate::cluster::NodePlan;
+use crate::engine::arena::Rows;
+use crate::model::{ensemble, Ensemble, EnsembleId};
+use crate::util::json::Json;
+
+const OP_DEPLOY: u8 = 1;
+const OP_PREDICT: u8 = 2;
+const OP_STATS: u8 = 3;
+const OP_HEALTH: u8 = 4;
+const ST_OK: u8 = 0;
+
+/// Refuse frames past this size: a corrupt length prefix must not
+/// become an allocation bomb.
+const MAX_FRAME: u64 = 1 << 31;
+
+fn write_frame(s: &mut TcpStream, tag: u8, payload: &[u8]) -> anyhow::Result<()> {
+    s.write_all(&[tag])?;
+    s.write_all(&(payload.len() as u64).to_le_bytes())?;
+    s.write_all(payload)?;
+    s.flush()?;
+    Ok(())
+}
+
+/// Read one frame; `Ok(None)` on clean EOF before the first byte.
+fn read_frame(s: &mut TcpStream) -> anyhow::Result<Option<(u8, Vec<u8>)>> {
+    let mut tag = [0u8; 1];
+    match s.read_exact(&mut tag) {
+        Ok(()) => {}
+        Err(e) if e.kind() == std::io::ErrorKind::UnexpectedEof => return Ok(None),
+        Err(e) => return Err(e.into()),
+    }
+    let mut len = [0u8; 8];
+    s.read_exact(&mut len).context("frame length")?;
+    let len = u64::from_le_bytes(len);
+    ensure!(len <= MAX_FRAME, "frame of {len} bytes exceeds the {MAX_FRAME} cap");
+    let mut payload = vec![0u8; len as usize];
+    s.read_exact(&mut payload).context("frame payload")?;
+    Ok(Some((tag, payload)))
+}
+
+fn f32s_to_bytes(v: &[f32]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(v.len() * 4);
+    for x in v {
+        out.extend_from_slice(&x.to_le_bytes());
+    }
+    out
+}
+
+fn bytes_to_f32s(b: &[u8]) -> anyhow::Result<Vec<f32>> {
+    ensure!(b.len() % 4 == 0, "f32 payload of {} bytes", b.len());
+    Ok(b.chunks_exact(4)
+        .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+        .collect())
+}
+
+fn plan_to_json(ensemble_name: &str, plan: &NodePlan) -> Json {
+    Json::from_pairs([
+        ("ensemble", Json::Str(ensemble_name.to_string())),
+        ("node", Json::Num(plan.node as f64)),
+        (
+            "members",
+            Json::Arr(plan.members.iter().map(|&m| Json::Num(m as f64)).collect()),
+        ),
+        ("matrix", plan.matrix.to_json()),
+        ("predicted_img_s", Json::Num(plan.predicted_img_s)),
+    ])
+}
+
+fn plan_from_json(j: &Json) -> anyhow::Result<(Ensemble, NodePlan)> {
+    let name = j.get("ensemble").and_then(Json::as_str).context("ensemble")?;
+    let id = EnsembleId::parse(name)
+        .with_context(|| format!("unknown ensemble id '{name}'"))?;
+    let node = j.get("node").and_then(Json::as_usize).context("node")?;
+    let members: Vec<usize> = j
+        .get("members")
+        .and_then(Json::as_arr)
+        .context("members")?
+        .iter()
+        .map(|v| v.as_usize().context("member index"))
+        .collect::<anyhow::Result<_>>()?;
+    let matrix = AllocationMatrix::from_json(j.get("matrix").context("matrix")?)?;
+    let predicted_img_s =
+        j.get("predicted_img_s").and_then(Json::as_f64).unwrap_or(0.0);
+    Ok((ensemble(id), NodePlan { node, members, matrix, predicted_img_s }))
+}
+
+/// Serve one node's [`Transport`] contract on a TCP listener (the
+/// `node` subcommand's core). Accept loop + one thread per connection;
+/// [`stop`](Self::stop) (or drop) shuts the listener down.
+pub struct NodeServer {
+    node: Arc<InProcNode>,
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    accept: Option<std::thread::JoinHandle<()>>,
+}
+
+impl NodeServer {
+    /// Bind `bind` (e.g. `"127.0.0.1:0"`) and serve `node` until
+    /// stopped.
+    pub fn spawn(node: Arc<InProcNode>, bind: &str) -> anyhow::Result<NodeServer> {
+        let listener = TcpListener::bind(bind)
+            .with_context(|| format!("binding node server on {bind}"))?;
+        let addr = listener.local_addr()?;
+        listener.set_nonblocking(true)?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let accept = {
+            let node = Arc::clone(&node);
+            let stop = Arc::clone(&stop);
+            std::thread::Builder::new()
+                .name(format!("node-srv-{}", node.name()))
+                .spawn(move || {
+                    while !stop.load(Ordering::Acquire) {
+                        match listener.accept() {
+                            Ok((conn, _)) => {
+                                let node = Arc::clone(&node);
+                                let _ = conn.set_nonblocking(false);
+                                std::thread::spawn(move || serve_conn(&node, conn));
+                            }
+                            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                                std::thread::sleep(Duration::from_millis(5));
+                            }
+                            Err(e) => {
+                                log::warn!("node server accept: {e}");
+                                break;
+                            }
+                        }
+                    }
+                })?
+        };
+        log::info!("node '{}' serving on {addr}", node.name());
+        Ok(NodeServer { node, addr, stop, accept: Some(accept) })
+    }
+
+    /// The bound address (port resolved when binding `:0`).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    pub fn node(&self) -> &Arc<InProcNode> {
+        &self.node
+    }
+
+    /// Stop accepting and join the accept loop. In-flight connections
+    /// finish their current frame on their own threads.
+    pub fn stop(&mut self) {
+        self.stop.store(true, Ordering::Release);
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+    }
+
+    /// Block the calling thread until [`stop`](Self::stop) is invoked
+    /// from elsewhere (the `node` subcommand's foreground mode).
+    pub fn join(&mut self) {
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for NodeServer {
+    fn drop(&mut self) {
+        self.stop();
+    }
+}
+
+/// One connection: frames in, frames out, until EOF.
+fn serve_conn(node: &InProcNode, mut conn: TcpStream) {
+    loop {
+        let (op, payload) = match read_frame(&mut conn) {
+            Ok(Some(f)) => f,
+            Ok(None) => return,
+            Err(e) => {
+                log::warn!("node '{}': bad frame: {e:#}", node.name());
+                return;
+            }
+        };
+        let reply: anyhow::Result<Vec<u8>> = (|| match op {
+            OP_DEPLOY => {
+                let doc = Json::parse(std::str::from_utf8(&payload)?)?;
+                let (ens, plan) = plan_from_json(&doc)?;
+                node.deploy(&ens, &plan)?;
+                Ok(Vec::new())
+            }
+            OP_PREDICT => {
+                ensure!(payload.len() >= 8, "predict frame too short");
+                let nb = u64::from_le_bytes(payload[..8].try_into().unwrap()) as usize;
+                let x = Rows::from_vec(bytes_to_f32s(&payload[8..])?);
+                let y = node.predict_rows(&x, nb)?;
+                Ok(f32s_to_bytes(y.as_slice()))
+            }
+            OP_STATS => {
+                let st = node.status();
+                if node.is_dead() {
+                    bail!("node {} is dead", node.name());
+                }
+                Ok(Json::from_pairs([
+                    ("name", Json::Str(st.name)),
+                    ("generation", Json::Num(st.generation as f64)),
+                    ("in_flight", Json::Num(st.in_flight as f64)),
+                    ("requests", Json::Num(st.requests as f64)),
+                    ("workers", Json::Num(st.workers as f64)),
+                ])
+                .to_string()
+                .into_bytes())
+            }
+            OP_HEALTH => {
+                if node.is_dead() {
+                    bail!("node {} is dead", node.name());
+                }
+                Ok(Vec::new())
+            }
+            other => bail!("unknown opcode {other}"),
+        })();
+        let ok = match &reply {
+            Ok(body) => write_frame(&mut conn, ST_OK, body),
+            Err(e) => write_frame(&mut conn, 1, format!("{e:#}").as_bytes()),
+        };
+        if ok.is_err() {
+            return; // peer went away mid-reply
+        }
+    }
+}
+
+/// Router-side TCP peer of a [`NodeServer`]: one connection per
+/// request.
+pub struct TcpTransport {
+    name: String,
+    addr: String,
+    timeout: Duration,
+}
+
+impl TcpTransport {
+    pub fn new(name: &str, addr: &str) -> Arc<TcpTransport> {
+        Arc::new(TcpTransport {
+            name: name.to_string(),
+            addr: addr.to_string(),
+            timeout: Duration::from_secs(120),
+        })
+    }
+
+    fn call(&self, op: u8, payload: &[u8]) -> anyhow::Result<Vec<u8>> {
+        let mut conn = TcpStream::connect(&self.addr)
+            .with_context(|| format!("connecting node '{}' at {}", self.name, self.addr))?;
+        conn.set_read_timeout(Some(self.timeout))?;
+        conn.set_write_timeout(Some(self.timeout))?;
+        write_frame(&mut conn, op, payload)?;
+        let (status, body) = read_frame(&mut conn)?
+            .with_context(|| format!("node '{}' closed without replying", self.name))?;
+        if status != ST_OK {
+            bail!("node '{}': {}", self.name, String::from_utf8_lossy(&body));
+        }
+        Ok(body)
+    }
+}
+
+impl Transport for TcpTransport {
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn deploy(&self, ensemble: &Ensemble, plan: &NodePlan) -> anyhow::Result<()> {
+        ensure!(
+            EnsembleId::parse(&ensemble.name).is_some(),
+            "TCP deploy needs a stock ensemble id, got '{}'",
+            ensemble.name
+        );
+        let doc = plan_to_json(&ensemble.name, plan).to_string();
+        self.call(OP_DEPLOY, doc.as_bytes())?;
+        Ok(())
+    }
+
+    fn predict(&self, x: &Rows, nb_images: usize) -> anyhow::Result<Rows> {
+        let mut payload = Vec::with_capacity(8 + x.len() * 4);
+        payload.extend_from_slice(&(nb_images as u64).to_le_bytes());
+        payload.extend_from_slice(&f32s_to_bytes(x.as_slice()));
+        let body = self.call(OP_PREDICT, &payload)?;
+        Ok(Rows::from_vec(bytes_to_f32s(&body)?))
+    }
+
+    fn stats(&self) -> anyhow::Result<NodeStatus> {
+        let body = self.call(OP_STATS, &[])?;
+        let doc = Json::parse(std::str::from_utf8(&body)?)?;
+        Ok(NodeStatus {
+            name: doc.get("name").and_then(Json::as_str).unwrap_or("").to_string(),
+            generation: doc.get("generation").and_then(Json::as_i64).unwrap_or(0) as u64,
+            in_flight: doc.get("in_flight").and_then(Json::as_i64).unwrap_or(0) as u64,
+            requests: doc.get("requests").and_then(Json::as_i64).unwrap_or(0) as u64,
+            workers: doc.get("workers").and_then(Json::as_usize).unwrap_or(0),
+        })
+    }
+
+    fn health(&self) -> NodeHealth {
+        match self.call(OP_HEALTH, &[]) {
+            Ok(_) => NodeHealth::Alive,
+            Err(e) => NodeHealth::Dead(format!("{e:#}")),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::DeviceSet;
+    use crate::model::ensemble as mk_ensemble;
+
+    #[test]
+    fn plan_json_roundtrip() {
+        let mut m = AllocationMatrix::zeroed(3, 2);
+        m.set(0, 0, 8);
+        m.set(1, 1, 16);
+        let plan = NodePlan {
+            node: 1,
+            members: vec![0, 2],
+            matrix: m,
+            predicted_img_s: 42.5,
+        };
+        let doc = plan_to_json("IMN4", &plan).to_string();
+        let (ens, back) = plan_from_json(&Json::parse(&doc).unwrap()).unwrap();
+        assert_eq!(ens.name, "IMN4");
+        assert_eq!(back.node, 1);
+        assert_eq!(back.members, vec![0, 2]);
+        assert_eq!(back.matrix.get(1, 1), 16);
+        assert_eq!(back.predicted_img_s, 42.5);
+        // unknown id refused
+        let bad = doc.replace("IMN4", "NOPE");
+        assert!(plan_from_json(&Json::parse(&bad).unwrap()).is_err());
+    }
+
+    #[test]
+    fn tcp_roundtrip_deploy_predict_stats_health() {
+        let e = mk_ensemble(EnsembleId::Imn4);
+        let node = InProcNode::new("tcp0", DeviceSet::hgx(2), 1024.0);
+        let mut server = NodeServer::spawn(Arc::clone(&node), "127.0.0.1:0").unwrap();
+        let t = TcpTransport::new("tcp0", &server.addr().to_string());
+
+        assert_eq!(t.health(), NodeHealth::Alive);
+        // nothing deployed yet: predict errors but the wire survives
+        let elems = e.members[0].input_elems_per_image();
+        let x = Rows::from_vec(vec![0.1; 2 * elems]);
+        let err = t.predict(&x, 2).unwrap_err().to_string();
+        assert!(err.contains("no plan deployed"), "{err}");
+
+        let mut m = AllocationMatrix::zeroed(3, 2);
+        m.set(0, 0, 8);
+        m.set(1, 1, 8);
+        let plan = NodePlan {
+            node: 0,
+            members: vec![0, 2],
+            matrix: m,
+            predicted_img_s: 1.0,
+        };
+        t.deploy(&e, &plan).unwrap();
+        let y = t.predict(&x, 2).unwrap();
+        assert_eq!(y.len(), 2 * 2 * e.classes(), "stacked over the wire");
+        for v in y.as_slice() {
+            assert_eq!(*v, 1.0 / e.classes() as f32);
+        }
+        let st = t.stats().unwrap();
+        assert_eq!(st.name, "tcp0");
+        assert_eq!(st.workers, 2);
+        assert!(st.requests >= 1);
+
+        // node death propagates as an error / Dead health
+        node.kill();
+        assert!(t.predict(&x, 2).is_err());
+        assert!(matches!(t.health(), NodeHealth::Dead(_)));
+
+        server.stop();
+        // the listener is gone: health turns Dead via connect failure
+        assert!(matches!(t.health(), NodeHealth::Dead(_)));
+    }
+}

@@ -1,0 +1,84 @@
+//! The node wire contract: what a router can ask of a node.
+//!
+//! A [`Transport`] is the router's only handle on a node. Two backends
+//! implement it: [`crate::cluster::inproc`] (N simulated nodes in one
+//! process — the test and `serve --cluster` substrate) and
+//! [`crate::cluster::tcp`] (length-prefixed frames to a `node`
+//! subcommand process). The contract is deliberately small — send plan,
+//! predict batch, fetch stats, health — so a future RDMA or gRPC
+//! backend slots in without touching the router.
+
+use std::sync::Arc;
+
+use crate::cluster::NodePlan;
+use crate::engine::arena::Rows;
+use crate::engine::system::InferenceSystem;
+use crate::model::Ensemble;
+
+/// A node's liveness as the transport sees it.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum NodeHealth {
+    Alive,
+    /// Unreachable or refusing work; the string is the last error.
+    Dead(String),
+}
+
+impl NodeHealth {
+    pub fn is_alive(&self) -> bool {
+        matches!(self, NodeHealth::Alive)
+    }
+}
+
+/// Point-in-time node statistics (`fetch stats` of the contract).
+#[derive(Debug, Clone, Default)]
+pub struct NodeStatus {
+    pub name: String,
+    /// Engine generation serving on the node (0 = nothing deployed).
+    pub generation: u64,
+    /// Requests currently inside the node's engine.
+    pub in_flight: u64,
+    /// Predict calls the node answered over this transport.
+    pub requests: u64,
+    /// Deployed workers (matrix cells) on the node.
+    pub workers: usize,
+}
+
+/// The router→node contract: send plan / predict batch / fetch stats /
+/// health.
+///
+/// `predict` returns the node's **stacked** output: for `nb_images`
+/// rows and a deployed plan of `k` members with `c` classes each, a
+/// `nb_images × k × c` buffer where member block `j` of row `r` (the
+/// plan's `members[j]`, ascending global order) sits at
+/// `((r * k) + j) * c` — the layout the [`Stacked`] rule writes. The
+/// router folds these blocks with the deployment's real combine rule.
+///
+/// [`Stacked`]: crate::engine::combine::Stacked
+pub trait Transport: Send + Sync {
+    /// The node's name (diagnostics, status reports, metric labels).
+    fn name(&self) -> &str;
+
+    /// Install `plan` (a sub-ensemble of `ensemble`) on the node,
+    /// replacing whatever was deployed. The node keeps serving its old
+    /// plan until the new engine is up, so concurrent predicts are
+    /// answered throughout (against old or new — the router's
+    /// width check resolves the race).
+    fn deploy(&self, ensemble: &Ensemble, plan: &NodePlan) -> anyhow::Result<()>;
+
+    /// Predict `nb_images` rows through the node's deployed engine;
+    /// returns the stacked per-member output (see the trait docs).
+    fn predict(&self, x: &Rows, nb_images: usize) -> anyhow::Result<Rows>;
+
+    /// Point-in-time statistics.
+    fn stats(&self) -> anyhow::Result<NodeStatus>;
+
+    /// Cheap liveness probe (no engine round-trip required).
+    fn health(&self) -> NodeHealth;
+
+    /// The node's engine when it lives in this process: lets the router
+    /// reuse the zero-copy `Rows` plane and export the node's trace and
+    /// metrics lanes directly. Remote transports return `None`.
+    fn local_system(&self) -> Option<Arc<InferenceSystem>> {
+        None
+    }
+}

@@ -35,6 +35,17 @@ impl Backend {
             other => bail!("unknown backend '{other}' (pjrt|sim|fake)"),
         }
     }
+
+    /// The backend-class string this configuration's executor will
+    /// report ([`crate::exec::Executor::backend_class`]) — used to scope
+    /// the profile store before the executor exists.
+    pub fn class(&self) -> &'static str {
+        match self {
+            Backend::Pjrt => "pjrt",
+            Backend::Sim => "sim",
+            Backend::Fake => "fake",
+        }
+    }
 }
 
 /// Full deployment configuration.
@@ -94,6 +105,17 @@ pub struct ServerConfig {
     /// serve: periodically write the captured trace window as Chrome
     /// trace-event JSON to this file (implies `trace_capture`).
     pub trace_out: Option<String>,
+    /// serve: shard the ensemble across this many simulated in-process
+    /// nodes of `gpus` GPUs each behind a cluster router
+    /// (`serve --cluster N`). `0` (default) = the single-process
+    /// engine. Mutually exclusive with `ensembles` (the router serves
+    /// one ensemble) and ignored when `peers` is set.
+    pub cluster_nodes: usize,
+    /// serve: TCP node addresses (`host:port`, one per `node`
+    /// subcommand process) to route over instead of simulating nodes
+    /// in-process. Non-empty = cluster mode over
+    /// [`TcpTransport`](crate::cluster::TcpTransport).
+    pub peers: Vec<String>,
 }
 
 impl Default for ServerConfig {
@@ -121,6 +143,8 @@ impl Default for ServerConfig {
             cache_mem_mb: 256,
             trace_capture: false,
             trace_out: None,
+            cluster_nodes: 0,
+            peers: Vec::new(),
         }
     }
 }
@@ -234,6 +258,29 @@ impl ServerConfig {
             cfg.trace_out = Some(v.to_string());
             cfg.trace_capture = true;
         }
+        if let Some(v) = doc.get("cluster_nodes").and_then(Json::as_usize) {
+            cfg.cluster_nodes = v;
+        }
+        if let Some(arr) = doc.get("peers").and_then(Json::as_arr) {
+            let mut peers: Vec<String> = Vec::new();
+            for v in arr {
+                let addr = v.as_str().context("peers entries must be strings")?;
+                anyhow::ensure!(!addr.is_empty(), "peer address empty");
+                anyhow::ensure!(
+                    !peers.iter().any(|p| p == addr),
+                    "duplicate peer '{addr}'"
+                );
+                peers.push(addr.to_string());
+            }
+            anyhow::ensure!(!peers.is_empty(), "peers list empty");
+            cfg.peers = peers;
+        }
+        // the router serves exactly one ensemble; a tenant registry and
+        // a cluster plan cannot both own /v1/predict
+        anyhow::ensure!(
+            cfg.ensembles.is_empty() || (cfg.cluster_nodes == 0 && cfg.peers.is_empty()),
+            "cluster mode is single-ensemble: drop 'ensembles' or the cluster fields"
+        );
         Ok(cfg)
     }
 
@@ -246,6 +293,30 @@ impl ServerConfig {
 
     pub fn devices(&self) -> DeviceSet {
         DeviceSet::hgx(self.gpus)
+    }
+
+    /// The cluster topology, `None` for a single-process deployment.
+    /// `peers` set: one node per peer, named by its address; otherwise
+    /// `cluster_nodes` simulated nodes. Either way every node owns
+    /// `gpus` GPUs — the TCP wire carries no device inventory, so the
+    /// head plans on the homogeneous shape the `node` processes were
+    /// started with (`node --gpus` must match `--gpus` here).
+    pub fn cluster_spec(&self) -> Option<crate::cluster::ClusterSpec> {
+        if !self.peers.is_empty() {
+            return Some(crate::cluster::ClusterSpec::new(
+                self.peers
+                    .iter()
+                    .map(|addr| crate::cluster::NodeSpec {
+                        name: addr.clone(),
+                        devices: DeviceSet::hgx(self.gpus),
+                    })
+                    .collect(),
+            ));
+        }
+        if self.cluster_nodes == 0 {
+            return None;
+        }
+        Some(crate::cluster::ClusterSpec::sim(self.cluster_nodes, self.gpus))
     }
 
     pub fn ensemble_def(&self) -> crate::model::Ensemble {
@@ -332,6 +403,30 @@ mod tests {
     }
 
     #[test]
+    fn cluster_fields() {
+        let cfg = ServerConfig::from_json(&Json::parse("{}").unwrap()).unwrap();
+        assert_eq!(cfg.cluster_nodes, 0, "cluster mode defaults off");
+        assert!(cfg.peers.is_empty());
+        assert!(cfg.cluster_spec().is_none());
+
+        let doc = Json::parse(r#"{"cluster_nodes":3,"gpus":2}"#).unwrap();
+        let cfg = ServerConfig::from_json(&doc).unwrap();
+        let spec = cfg.cluster_spec().unwrap();
+        assert_eq!(spec.len(), 3);
+        assert_eq!(spec.nodes[0].devices.len(), 3, "2 GPUs + host CPU per node");
+
+        // peers win over cluster_nodes: one node per address
+        let doc = Json::parse(
+            r#"{"peers":["10.0.0.1:9001","10.0.0.2:9001"],"cluster_nodes":5,"gpus":4}"#,
+        )
+        .unwrap();
+        let cfg = ServerConfig::from_json(&doc).unwrap();
+        let spec = cfg.cluster_spec().unwrap();
+        assert_eq!(spec.len(), 2);
+        assert_eq!(spec.nodes[1].name, "10.0.0.2:9001");
+    }
+
+    #[test]
     fn rejects_bad_values() {
         for bad in [
             r#"{"ensemble":"IMN99"}"#,
@@ -353,6 +448,12 @@ mod tests {
             r#"{"max_cell_age_s":0}"#,
             r#"{"cache_mem_mb":0}"#,
             r#"{"trace_out":""}"#,
+            r#"{"peers":[]}"#,
+            r#"{"peers":[""]}"#,
+            r#"{"peers":["a:1","a:1"]}"#,
+            r#"{"peers":[42]}"#,
+            r#"{"ensembles":["IMN1","IMN4"],"cluster_nodes":2}"#,
+            r#"{"ensembles":["IMN1","IMN4"],"peers":["a:1"]}"#,
         ] {
             let doc = Json::parse(bad).unwrap();
             assert!(ServerConfig::from_json(&doc).is_err(), "{bad}");

@@ -107,9 +107,21 @@ pub fn analytic_latency_for(
 }
 
 /// Thread-safe store of measured cost cells.
+///
+/// Every cell — latency and gap alike — carries a **backend class**
+/// dimension (`"sim"`, `"pjrt"`, `"fake"`, …; `""` for legacy data):
+/// a 40 ms sim-backend measurement says nothing about the pjrt backend
+/// of the same device class, and a drain-then-build gap measured on
+/// stub workers must not price a real deployment's swaps. The store
+/// holds every backend's cells side by side (files survive backend
+/// switches) but all lookups and mutations are scoped to the current
+/// [`set_backend_class`](Self::set_backend_class) — one deployment, one
+/// scope — so heterogeneous backends can't cross-contaminate each
+/// other's calibration.
 #[derive(Debug)]
 pub struct ProfileStore {
-    cells: RwLock<BTreeMap<(String, String, u32), ProfileCell>>,
+    /// (backend class, model, device class, batch) → cell.
+    cells: RwLock<BTreeMap<(String, String, String, u32), ProfileCell>>,
     /// Measured drain-then-build unavailability gaps, keyed by the
     /// deployed matrix's worker count (the "matrix size" a build's wall
     /// time scales with). Values are **wall** milliseconds — unlike the
@@ -121,7 +133,15 @@ pub struct ProfileStore {
     /// [`CostModel::staged_gap_ms`] to predict the next gap.
     ///
     /// [`CostModel::staged_gap_ms`]: crate::cost::CostModel::staged_gap_ms
-    gap_cells: RwLock<BTreeMap<u32, ProfileCell>>,
+    ///
+    /// Keyed by (backend class, worker count): stub/sim builds are near
+    /// instant while real-backend builds page in gigabytes of weights.
+    gap_cells: RwLock<BTreeMap<(String, u32), ProfileCell>>,
+    /// The backend class every lookup and mutation is scoped to.
+    /// Deployment-wide (one executor, one backend), set once at startup
+    /// from [`crate::exec::Executor::backend_class`]; `""` matches cells
+    /// written before the backend dimension existed.
+    backend_class: RwLock<String>,
     /// Bumped on every mutation; cheap staleness signal for callers that
     /// do not want to hash the content.
     version: AtomicU64,
@@ -139,6 +159,7 @@ impl Default for ProfileStore {
         ProfileStore {
             cells: RwLock::new(BTreeMap::new()),
             gap_cells: RwLock::new(BTreeMap::new()),
+            backend_class: RwLock::new(String::new()),
             version: AtomicU64::new(0),
             max_cell_age_s: AtomicU64::new(u64::MAX),
         }
@@ -148,6 +169,31 @@ impl Default for ProfileStore {
 impl ProfileStore {
     pub fn new() -> ProfileStore {
         ProfileStore::default()
+    }
+
+    /// Scope every subsequent lookup and mutation to `class` (the
+    /// serving executor's [`crate::exec::Executor::backend_class`]).
+    /// Cells of other backends stay in the store — and in saved files —
+    /// but become invisible, so a profile file reused across backend
+    /// switches cannot contaminate the new deployment's calibration.
+    pub fn set_backend_class(&self, class: &str) {
+        let mut g = self.backend_class.write().unwrap();
+        if *g != class {
+            *g = class.to_string();
+            drop(g);
+            // lookups answer differently now: staleness signals must move
+            self.version.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    /// The backend class lookups are currently scoped to (`""` =
+    /// unscoped legacy cells).
+    pub fn backend_class(&self) -> String {
+        self.backend_class.read().unwrap().clone()
+    }
+
+    fn scope(&self) -> String {
+        self.backend_class.read().unwrap().clone()
     }
 
     /// Age limit for trusted cells; `None` removes the limit.
@@ -195,8 +241,11 @@ impl ProfileStore {
     pub fn digest(&self) -> String {
         let cells = self.cells.read().unwrap();
         let mut h = Fnv128::new();
-        h.update(b"profile-store-v1\0");
-        for ((model, class, batch), c) in cells.iter() {
+        // v2: the backend-class dimension joined every key; bumping the
+        // domain tag keeps pre-backend digests from aliasing new ones
+        h.update(b"profile-store-v2\0");
+        for ((backend, model, class, batch), c) in cells.iter() {
+            h.update_field(backend.as_bytes());
             h.update_field(model.as_bytes());
             h.update_field(class.as_bytes());
             h.update(&batch.to_le_bytes());
@@ -214,8 +263,9 @@ impl ProfileStore {
         // gap cells change what staged_gap_ms answers, which feeds the
         // breach-vs-gap policy — they are content like everything else
         let gaps = self.gap_cells.read().unwrap();
-        for (workers, c) in gaps.iter() {
+        for ((backend, workers), c) in gaps.iter() {
             h.update(b"gap\0");
+            h.update_field(backend.as_bytes());
             h.update(&workers.to_le_bytes());
             h.update(&c.latency_ms.to_bits().to_le_bytes());
         }
@@ -237,9 +287,10 @@ impl ProfileStore {
             assert!(m.is_finite() && m > 0.0,
                     "profile cell mem {m} must be finite and positive");
         }
+        let key = (self.scope(), model.to_string(), device_class.to_string(), batch);
         let mut cells = self.cells.write().unwrap();
         cells.insert(
-            (model.to_string(), device_class.to_string(), batch),
+            key,
             ProfileCell {
                 latency_ms,
                 mem_mb,
@@ -262,8 +313,8 @@ impl ProfileStore {
         assert!(batch > 0, "profile cell batch must be positive");
         assert!(observed_ms.is_finite() && observed_ms > 0.0,
                 "observed latency {observed_ms} must be finite and positive");
+        let key = (self.scope(), model.to_string(), device_class.to_string(), batch);
         let mut cells = self.cells.write().unwrap();
-        let key = (model.to_string(), device_class.to_string(), batch);
         match cells.get_mut(&key) {
             Some(cell) => {
                 cell.latency_ms = (1.0 - alpha) * cell.latency_ms + alpha * observed_ms;
@@ -294,8 +345,9 @@ impl ProfileStore {
         assert!(workers > 0, "gap cell worker count must be positive");
         assert!(gap_ms.is_finite() && gap_ms > 0.0,
                 "observed gap {gap_ms} must be finite and positive");
+        let key = (self.scope(), workers);
         let mut gaps = self.gap_cells.write().unwrap();
-        match gaps.get_mut(&workers) {
+        match gaps.get_mut(&key) {
             Some(cell) => {
                 cell.latency_ms = (1.0 - alpha) * cell.latency_ms + alpha * gap_ms;
                 cell.samples += 1;
@@ -303,7 +355,7 @@ impl ProfileStore {
                 cell.updated_unix_s = unix_now_s();
             }
             None => {
-                gaps.insert(workers, ProfileCell {
+                gaps.insert(key, ProfileCell {
                     latency_ms: gap_ms,
                     mem_mb: None,
                     samples: 1,
@@ -329,10 +381,12 @@ impl ProfileStore {
             None => 0,
             Some(limit) => unix_now_s().saturating_sub(limit),
         };
+        let scope = self.scope();
         let gaps = self.gap_cells.read().unwrap();
         let mut below: Option<(u32, f64)> = None;
         let mut above: Option<(u32, f64)> = None;
-        for (&w, c) in gaps.iter() {
+        for ((_, w), c) in gaps.range((scope.clone(), 0u32)..=(scope, u32::MAX)) {
+            let w = *w;
             if c.updated_unix_s < stale_before {
                 continue;
             }
@@ -360,24 +414,22 @@ impl ProfileStore {
         }
     }
 
-    /// Every measured gap cell, by worker count (reporting:
-    /// `GET /v1/profiles`).
+    /// Every measured gap cell *of the current backend scope*, by
+    /// worker count (reporting: `GET /v1/profiles`).
     pub fn gap_cells(&self) -> Vec<(u32, ProfileCell)> {
+        let scope = self.scope();
         self.gap_cells
             .read()
             .unwrap()
-            .iter()
-            .map(|(w, c)| (*w, c.clone()))
+            .range((scope.clone(), 0u32)..=(scope, u32::MAX))
+            .map(|((_, w), c)| (*w, c.clone()))
             .collect()
     }
 
-    /// The cell, if profiled.
+    /// The cell, if profiled under the current backend scope.
     pub fn get(&self, model: &str, device_class: &str, batch: u32) -> Option<ProfileCell> {
-        self.cells
-            .read()
-            .unwrap()
-            .get(&(model.to_string(), device_class.to_string(), batch))
-            .cloned()
+        let key = (self.scope(), model.to_string(), device_class.to_string(), batch);
+        self.cells.read().unwrap().get(&key).cloned()
     }
 
     /// Resolve one latency coordinate in a single pass under the read
@@ -395,11 +447,12 @@ impl ProfileStore {
             None => 0, // unix time 0: nothing is stale
             Some(limit) => unix_now_s().saturating_sub(limit),
         };
+        let scope = self.scope();
         let cells = self.cells.read().unwrap();
-        let lo = (model.to_string(), device_class.to_string(), 0u32);
-        let hi = (model.to_string(), device_class.to_string(), u32::MAX);
+        let lo = (scope.clone(), model.to_string(), device_class.to_string(), 0u32);
+        let hi = (scope, model.to_string(), device_class.to_string(), u32::MAX);
         let mut below: Option<(u32, f64)> = None;
-        for ((_, _, b), c) in cells.range(lo..=hi) {
+        for ((_, _, _, b), c) in cells.range(lo..=hi) {
             if c.updated_unix_s < stale_before {
                 continue;
             }
@@ -425,23 +478,27 @@ impl ProfileStore {
     ///
     /// [`ProfiledCost`]: crate::cost::ProfiledCost
     pub fn batches_for(&self, model: &str, device_class: &str) -> Vec<(u32, ProfileCell)> {
+        let scope = self.scope();
         let cells = self.cells.read().unwrap();
         cells
             .range(
-                (model.to_string(), device_class.to_string(), 0)
-                    ..=(model.to_string(), device_class.to_string(), u32::MAX),
+                (scope.clone(), model.to_string(), device_class.to_string(), 0)
+                    ..=(scope, model.to_string(), device_class.to_string(), u32::MAX),
             )
-            .map(|((_, _, b), c)| (*b, c.clone()))
+            .map(|((_, _, _, b), c)| (*b, c.clone()))
             .collect()
     }
 
-    /// Every cell (key order), for reporting (`GET /v1/profiles`).
+    /// Every cell of the current backend scope (key order), for
+    /// reporting (`GET /v1/profiles`).
     pub fn cells(&self) -> Vec<(ProfileKey, ProfileCell)> {
+        let scope = self.scope();
         self.cells
             .read()
             .unwrap()
             .iter()
-            .map(|((m, d, b), c)| {
+            .filter(|((s, _, _, _), _)| *s == scope)
+            .map(|((_, m, d, b), c)| {
                 (ProfileKey { model: m.clone(), device_class: d.clone(), batch: *b }, c.clone())
             })
             .collect()
@@ -462,18 +519,23 @@ impl ProfileStore {
     // -- persistence ------------------------------------------------------
 
     pub fn to_json(&self) -> Json {
+        // dump EVERY backend's cells, not just the current scope: a
+        // profile file must survive a backend switch round-trip
         let rows: Vec<Json> = self
-            .cells()
-            .into_iter()
-            .map(|(k, c)| {
+            .cells
+            .read()
+            .unwrap()
+            .iter()
+            .map(|((backend, model, class, batch), c)| {
                 let mem = match c.mem_mb {
                     Some(m) => Json::Num(m),
                     None => Json::Null,
                 };
                 Json::from_pairs([
-                    ("model", Json::Str(k.model)),
-                    ("device_class", Json::Str(k.device_class)),
-                    ("batch", Json::Num(k.batch as f64)),
+                    ("backend", Json::Str(backend.clone())),
+                    ("model", Json::Str(model.clone())),
+                    ("device_class", Json::Str(class.clone())),
+                    ("batch", Json::Num(*batch as f64)),
                     ("latency_ms", Json::Num(c.latency_ms)),
                     ("mem_mb", mem),
                     ("samples", Json::Num(c.samples as f64)),
@@ -483,11 +545,14 @@ impl ProfileStore {
             })
             .collect();
         let gap_rows: Vec<Json> = self
-            .gap_cells()
-            .into_iter()
-            .map(|(workers, c)| {
+            .gap_cells
+            .read()
+            .unwrap()
+            .iter()
+            .map(|((backend, workers), c)| {
                 Json::from_pairs([
-                    ("workers", Json::Num(workers as f64)),
+                    ("backend", Json::Str(backend.clone())),
+                    ("workers", Json::Num(*workers as f64)),
                     ("gap_ms", Json::Num(c.latency_ms)),
                     ("samples", Json::Num(c.samples as f64)),
                     ("updated_unix_s", Json::Num(c.updated_unix_s as f64)),
@@ -555,8 +620,11 @@ impl ProfileStore {
                     .and_then(Json::as_usize)
                     .map(|v| v as u64)
                     .unwrap_or_else(unix_now_s);
+                // pre-backend files carry no "backend" field: their
+                // cells load into the legacy "" scope
+                let backend = row.get("backend").and_then(Json::as_str).unwrap_or("");
                 cells.insert(
-                    (model.to_string(), class.to_string(), batch),
+                    (backend.to_string(), model.to_string(), class.to_string(), batch),
                     ProfileCell { latency_ms, mem_mb, samples, source,
                                   updated_unix_s: updated },
                 );
@@ -585,7 +653,8 @@ impl ProfileStore {
                     .and_then(Json::as_usize)
                     .map(|v| v as u64)
                     .unwrap_or_else(unix_now_s);
-                gaps.insert(workers_raw as u32, ProfileCell {
+                let backend = row.get("backend").and_then(Json::as_str).unwrap_or("");
+                gaps.insert((backend.to_string(), workers_raw as u32), ProfileCell {
                     latency_ms: gap_ms,
                     mem_mb: None,
                     samples,
@@ -858,6 +927,69 @@ mod tests {
         let b = ProfileStore::new();
         b.record("m", "gpu", 8, 10.0, Some(4096.0), 1);
         assert_ne!(a.digest(), b.digest());
+    }
+
+    #[test]
+    fn backend_scopes_do_not_cross_contaminate() {
+        let s = ProfileStore::new();
+        s.set_backend_class("sim");
+        s.record("m", "gpu", 8, 10.0, None, 1);
+        s.observe_gap(4, 180.0, 0.25);
+        // another backend's scope sees none of it: latency lookups miss
+        // (analytic fallback) and gap predictions stay unmeasured
+        s.set_backend_class("pjrt");
+        assert_eq!(s.get("m", "gpu", 8), None);
+        assert_eq!(s.lookup_latency("m", "gpu", 8), LatencyLookup::Miss);
+        assert_eq!(s.lookup_gap_ms(4), None);
+        assert!(s.batches_for("m", "gpu").is_empty());
+        assert!(s.cells().is_empty() && s.gap_cells().is_empty());
+        // same coordinates, different backend: cells coexist
+        s.record("m", "gpu", 8, 90.0, None, 1);
+        s.observe_gap(4, 2000.0, 0.25);
+        assert_eq!(s.lookup_gap_ms(4), Some(2000.0));
+        s.set_backend_class("sim");
+        assert_eq!(s.get("m", "gpu", 8).unwrap().latency_ms, 10.0);
+        assert_eq!(s.lookup_gap_ms(4), Some(180.0));
+        // and both survive a file round-trip
+        let back = ProfileStore::from_json(&s.to_json()).unwrap();
+        back.set_backend_class("pjrt");
+        assert_eq!(back.get("m", "gpu", 8).unwrap().latency_ms, 90.0);
+        back.set_backend_class("sim");
+        assert_eq!(back.get("m", "gpu", 8).unwrap().latency_ms, 10.0);
+        assert_eq!(back.digest(), s.digest());
+    }
+
+    #[test]
+    fn backend_dimension_never_aliases_in_the_digest() {
+        // identical numbers under different backends must not collide
+        let a = ProfileStore::new();
+        a.set_backend_class("sim");
+        a.record("m", "gpu", 8, 10.0, None, 1);
+        let b = ProfileStore::new();
+        b.set_backend_class("pjrt");
+        b.record("m", "gpu", 8, 10.0, None, 1);
+        assert_ne!(a.digest(), b.digest());
+        // gap cells too
+        let c = ProfileStore::new();
+        c.set_backend_class("sim");
+        c.observe_gap(2, 100.0, 0.25);
+        let d = ProfileStore::new();
+        d.set_backend_class("pjrt");
+        d.observe_gap(2, 100.0, 0.25);
+        assert_ne!(c.digest(), d.digest());
+        // switching scope alone bumps the version (lookups changed)
+        let v = a.version();
+        a.set_backend_class("fake");
+        assert!(a.version() > v);
+        a.set_backend_class("fake"); // no-op: same scope
+        // legacy "" scope keeps answering for pre-backend files
+        let legacy = ProfileStore::from_json(&Json::parse(
+            r#"{"format":"ensemble-serve-profiles-v1",
+                "cells":[{"model":"m","device_class":"g","batch":8,"latency_ms":7.0}],
+                "gap_cells":[{"workers":2,"gap_ms":55.0}]}"#,
+        ).unwrap()).unwrap();
+        assert_eq!(legacy.get("m", "g", 8).unwrap().latency_ms, 7.0);
+        assert_eq!(legacy.lookup_gap_ms(2), Some(55.0));
     }
 
     #[test]

@@ -18,6 +18,16 @@ pub trait CombineRule: Send + Sync + 'static {
     /// Post-process the segment's rows once complete.
     fn finalize(&self, _y: &mut [f32], _n_models: usize, _classes: usize) {}
 
+    /// How many class-widths of output this rule produces per row. The
+    /// engine sizes request buffers as `nb_images × classes × multiplier`
+    /// and the accumulator hands `accumulate` spans of that width.
+    /// Reducing rules (average, voting) keep the default of 1; the
+    /// cluster plane's [`Stacked`] rule returns `n_models` so every
+    /// member's distribution survives to the router.
+    fn output_multiplier(&self, _n_models: usize) -> usize {
+        1
+    }
+
     fn name(&self) -> &'static str;
 }
 
@@ -135,6 +145,39 @@ impl CombineRule for MajorityVote {
     }
 }
 
+/// No combination at all: every member's distribution is kept, row-
+/// interleaved, so a cluster router (or any caller) can fold members
+/// *across* engine boundaries with the real rule.
+///
+/// With `M` models and `C` classes the output row for image `r` is `M`
+/// consecutive `C`-wide blocks — member `m`'s distribution lands at
+/// `((r * M) + m) * C`. The accumulator hands `accumulate` a span that
+/// is `n_rows × M × C` wide (via [`CombineRule::output_multiplier`])
+/// while `p` is the member's plain `n_rows × C` block, so the copy is
+/// a strided scatter, bit-preserving by construction.
+pub struct Stacked;
+
+impl CombineRule for Stacked {
+    fn accumulate(&self, y: &mut [f32], p: &[f32], weight_idx: usize,
+                  n_models: usize, classes: usize) {
+        // `classes` arrives pre-multiplied (the registration's width);
+        // recover the per-member width.
+        let c = classes / n_models;
+        for (r, prow) in p.chunks_exact(c).enumerate() {
+            let dst = (r * n_models + weight_idx) * c;
+            y[dst..dst + c].copy_from_slice(prow);
+        }
+    }
+
+    fn output_multiplier(&self, n_models: usize) -> usize {
+        n_models
+    }
+
+    fn name(&self) -> &'static str {
+        "stacked"
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -220,6 +263,59 @@ mod tests {
         let mut y = vec![0.0; C];
         rule.accumulate(&mut y, &[0.5, 0.5, 0.2], 0, 1, C);
         assert_eq!(y, vec![0.0, 1.0, 0.0], "tie broken toward the later class");
+    }
+
+    #[test]
+    fn stacked_interleaves_members_bit_exactly() {
+        let rule = Stacked;
+        let m = 2;
+        assert_eq!(rule.output_multiplier(m), m);
+        // registration width = C * M; 2 rows
+        let mut y = vec![0.0; 2 * C * m];
+        let p0 = vec![0.9, 0.1, 0.0, 0.2, 0.3, 0.5]; // member 0, rows 0..2
+        let p1 = vec![0.5, 0.5, 0.0, 0.0, 0.6, 0.4]; // member 1, rows 0..2
+        rule.accumulate(&mut y, &p0, 0, m, C * m);
+        rule.accumulate(&mut y, &p1, 1, m, C * m);
+        rule.finalize(&mut y, m, C * m);
+        let want = [
+            0.9, 0.1, 0.0, 0.5, 0.5, 0.0, // row 0: member 0 then member 1
+            0.2, 0.3, 0.5, 0.0, 0.6, 0.4, // row 1
+        ];
+        for (i, w) in want.iter().enumerate() {
+            assert_eq!(y[i].to_bits(), w.to_bits(), "elem {i}");
+        }
+    }
+
+    #[test]
+    fn stacked_then_average_matches_direct_average() {
+        // folding the stacked blocks with Average reproduces the
+        // single-engine result bit for bit — the cluster router's
+        // correctness contract
+        let m = 2;
+        let p0 = vec![0.9, 0.1, 0.0];
+        let p1 = vec![0.5, 0.5, 0.0];
+        let mut direct = vec![0.0; C];
+        Average.accumulate(&mut direct, &p0, 0, m, C);
+        Average.accumulate(&mut direct, &p1, 1, m, C);
+        Average.finalize(&mut direct, m, C);
+        let mut stacked = vec![0.0; C * m];
+        Stacked.accumulate(&mut stacked, &p0, 0, m, C * m);
+        Stacked.accumulate(&mut stacked, &p1, 1, m, C * m);
+        let mut folded = vec![0.0; C];
+        for member in 0..m {
+            Average.accumulate(&mut folded, &stacked[member * C..(member + 1) * C],
+                               member, m, C);
+        }
+        Average.finalize(&mut folded, m, C);
+        for i in 0..C {
+            assert_eq!(folded[i].to_bits(), direct[i].to_bits(), "elem {i}");
+        }
+    }
+
+    #[test]
+    fn reducing_rules_keep_multiplier_one() {
+        assert_eq!(Average.output_multiplier(12), 1);
+        assert_eq!(MajorityVote.output_multiplier(12), 1);
     }
 
     #[test]

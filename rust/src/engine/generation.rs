@@ -44,6 +44,11 @@ pub struct Generation {
     matrix: AllocationMatrix,
     ensemble: Ensemble,
     segment_size: usize,
+    /// Output width per image = `ensemble.classes() × this`. 1 for
+    /// reducing rules; the cluster plane's `Stacked` rule keeps every
+    /// member, so its generations produce `M × classes` per row (see
+    /// [`crate::engine::combine::CombineRule::output_multiplier`]).
+    out_width_mult: usize,
     store: Arc<SharedStore>,
     startup: Arc<StartupState>,
     /// The generation's buffer pool: holder of the only strong handle,
@@ -190,6 +195,7 @@ impl Generation {
             matrix: matrix.clone(),
             ensemble: ensemble.clone(),
             segment_size: opts.segment_size,
+            out_width_mult: opts.combine.output_multiplier(ensemble.len()),
             store,
             startup: Arc::clone(&startup),
             arena,
@@ -277,7 +283,7 @@ impl Generation {
         x: Rows,
         nb_images: usize,
     ) -> anyhow::Result<(Rows, crate::obs::ReqSpans)> {
-        let classes = self.ensemble.classes();
+        let classes = self.ensemble.classes() * self.out_width_mult;
         if nb_images == 0 {
             return Ok((Rows::from_vec(Vec::new()), crate::obs::ReqSpans::default()));
         }

@@ -55,6 +55,10 @@ impl Executor for FakeExecutor {
     fn devices(&self) -> &DeviceSet {
         &self.devices
     }
+
+    fn backend_class(&self) -> &'static str {
+        "fake"
+    }
 }
 
 #[cfg(test)]

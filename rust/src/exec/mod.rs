@@ -59,4 +59,14 @@ pub trait Executor: Send + Sync {
 
     /// The device topology this executor serves.
     fn devices(&self) -> &DeviceSet;
+
+    /// Backend class this executor's measurements belong to (`"sim"`,
+    /// `"pjrt"`, `"fake"`, …). Scopes the profile store
+    /// ([`crate::cost::ProfileStore::set_backend_class`]) so latency and
+    /// swap-gap cells measured on one backend never calibrate another.
+    /// The default `""` matches the legacy unscoped cells, so ad-hoc
+    /// test executors keep their pre-backend-dimension behavior.
+    fn backend_class(&self) -> &'static str {
+        ""
+    }
 }

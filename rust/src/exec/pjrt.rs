@@ -131,6 +131,10 @@ impl Executor for PjrtExecutor {
     fn devices(&self) -> &DeviceSet {
         &self.devices
     }
+
+    fn backend_class(&self) -> &'static str {
+        "pjrt"
+    }
 }
 
 #[cfg(test)]

@@ -47,4 +47,8 @@ impl Executor for PjrtExecutor {
     fn devices(&self) -> &DeviceSet {
         &self.devices
     }
+
+    fn backend_class(&self) -> &'static str {
+        "pjrt"
+    }
 }

@@ -192,6 +192,10 @@ impl Executor for SimExecutor {
     fn devices(&self) -> &DeviceSet {
         &self.devices
     }
+
+    fn backend_class(&self) -> &'static str {
+        "sim"
+    }
 }
 
 #[cfg(test)]

@@ -104,6 +104,7 @@ pub mod cost;
 pub mod alloc;
 pub mod exec;
 pub mod engine;
+pub mod cluster;
 pub mod benchkit;
 pub mod optimizer;
 pub mod reconfig;

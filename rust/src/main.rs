@@ -11,6 +11,13 @@
 //! * `profile`  — measure every (model, device-class, batch) cell through
 //!   the executor and write a profile store (`--out`); `--profiles FILE`
 //!   then makes `optimize`/`bench`/`serve` plan on the measured costs.
+//! * `node`     — run one cluster node: a simulated device set behind the
+//!   length-prefixed TCP node protocol (deploy/predict/stats/health), for
+//!   a `serve --peers` head to route over.
+//!
+//! `serve --cluster N` shards the ensemble across N simulated in-process
+//! nodes behind the scatter/gather router; `serve --peers a:1,b:1` routes
+//! over `node` processes instead.
 
 use std::sync::Arc;
 
@@ -62,6 +69,11 @@ as Chrome trace-event JSON to FILE (implies --trace-capture)")
 (0 = disabled, the default)")
         .opt("cache-mem-mb", None, "serve: prediction-cache byte budget in MiB \
 (default 256; only meaningful with --cache-entries)")
+        .opt("cluster", None, "serve: shard the ensemble across N simulated \
+in-process nodes of --gpus GPUs each behind the cluster router (0 = off)")
+        .opt("peers", None, "serve: comma-separated node addresses (host:port, \
+one per `node` process) to route over instead of simulating nodes in-process")
+        .opt("node-name", None, "node: this node's name (default node0)")
         .opt("out", None, "profile: output path (default profiles.json)")
         .opt("batches", None, "profile: comma-separated batch sizes (default 8,16,32,64,128)")
         .opt("reps", None, "profile: measured predicts per cell (default 3)")
@@ -86,7 +98,7 @@ fn main() {
         }
     };
     if args.has_flag("help") || args.positional.is_empty() {
-        println!("usage: ensemble-serve <optimize|serve|bench|inspect|profile> [options]\n");
+        println!("usage: ensemble-serve <optimize|serve|bench|inspect|profile|node> [options]\n");
         println!("{}", cli.help_text());
         return;
     }
@@ -189,6 +201,26 @@ fn config_from(args: &ensemble_serve::util::cli::Args) -> anyhow::Result<ServerC
         cfg.trace_out = Some(v.to_string());
         cfg.trace_capture = true;
     }
+    if let Some(v) = args.get_usize("cluster")? {
+        cfg.cluster_nodes = v;
+    }
+    if let Some(v) = args.get("peers") {
+        let mut peers: Vec<String> = Vec::new();
+        for addr in v.split(',').map(str::trim).filter(|s| !s.is_empty()) {
+            anyhow::ensure!(
+                !peers.iter().any(|p| p == addr),
+                "duplicate peer {addr} in --peers"
+            );
+            peers.push(addr.to_string());
+        }
+        anyhow::ensure!(!peers.is_empty(), "--peers needs at least one address");
+        cfg.peers = peers;
+    }
+    // same rule the config file enforces, re-checked after CLI overrides
+    anyhow::ensure!(
+        cfg.ensembles.is_empty() || (cfg.cluster_nodes == 0 && cfg.peers.is_empty()),
+        "cluster mode is single-ensemble: drop --ensembles or --cluster/--peers"
+    );
     Ok(cfg)
 }
 
@@ -200,6 +232,9 @@ fn cost_model_from(cfg: &ServerConfig)
     match &cfg.profiles {
         Some(path) => {
             let store = Arc::new(ProfileStore::load(path)?);
+            // scope lookups/calibration to this deployment's backend:
+            // cells measured on another backend stay invisible
+            store.set_backend_class(cfg.backend.class());
             store.set_max_cell_age_s(cfg.max_cell_age_s);
             match cfg.max_cell_age_s {
                 Some(age) => log::info!(
@@ -283,6 +318,11 @@ fn run(args: &ensemble_serve::util::cli::Args) -> anyhow::Result<()> {
     anyhow::ensure!(
         cfg.ensembles.is_empty() || args.positional[0] == "serve",
         "--ensembles / config `ensembles` only applies to `serve` (got `{}`)",
+        args.positional[0]
+    );
+    anyhow::ensure!(
+        (cfg.cluster_nodes == 0 && cfg.peers.is_empty()) || args.positional[0] == "serve",
+        "--cluster / --peers only apply to `serve` (got `{}`)",
         args.positional[0]
     );
     let ensemble = cfg.ensemble_def();
@@ -392,6 +432,9 @@ fn run(args: &ensemble_serve::util::cli::Args) -> anyhow::Result<()> {
                 );
             }
         }
+        "serve" if cfg.cluster_spec().is_some() => {
+            serve_cluster(&cfg)?;
+        }
         "serve" if cfg.ensembles.len() >= 2 => {
             serve_multi_tenant(&cfg)?;
         }
@@ -472,9 +515,102 @@ fn run(args: &ensemble_serve::util::cli::Args) -> anyhow::Result<()> {
                 std::thread::sleep(std::time::Duration::from_secs(3600));
             }
         }
-        other => anyhow::bail!("unknown command '{other}' (optimize|serve|bench|inspect|profile)"),
+        "node" => {
+            use ensemble_serve::cluster::{InProcNode, NodeServer};
+            // the node plane hosts the calibrated simulator: the head
+            // plans against the same analytic/sim cost surface
+            anyhow::ensure!(
+                cfg.backend == Backend::Sim,
+                "node hosts the simulated device set (--backend sim)"
+            );
+            let name = args.get("node-name").unwrap_or("node0");
+            let node = InProcNode::with_options(
+                name,
+                cfg.devices(),
+                cfg.time_scale,
+                cfg.engine_options(),
+            );
+            let mut server = NodeServer::spawn(node, &cfg.listen)?;
+            println!(
+                "node '{name}' ({} GPUs + 1 CPU) on {} — length-prefixed TCP \
+                 (deploy/predict/stats/health); point a `serve --peers` head here",
+                cfg.gpus,
+                server.addr()
+            );
+            server.join();
+        }
+        other => anyhow::bail!(
+            "unknown command '{other}' (optimize|serve|bench|inspect|profile|node)"
+        ),
     }
     Ok(())
+}
+
+/// `serve --cluster N` / `serve --peers a:1,...`: shard the ensemble
+/// across nodes behind the scatter/gather router. In-process nodes wrap
+/// the simulated backend directly; TCP peers are `node` processes the
+/// head deploys to over the wire. The combine rule runs at the router,
+/// so answers are bit-identical to the single-process engine on the
+/// flattened device set.
+fn serve_cluster(cfg: &ServerConfig) -> anyhow::Result<()> {
+    use ensemble_serve::cluster::{
+        ClusterRouter, InProcNode, InProcTransport, TcpTransport, Transport,
+    };
+    let ensemble = cfg.ensemble_def();
+    let spec = cfg.cluster_spec().expect("caller checked cluster mode");
+    let (cost, _profiles) = cost_model_from(cfg)?;
+    let planner = PlannerConfig {
+        default_batch: cfg.default_batch,
+        greedy: cfg.greedy.clone(),
+        cost: Arc::clone(&cost),
+    };
+    let transports: Vec<Arc<dyn Transport>> = if cfg.peers.is_empty() {
+        anyhow::ensure!(
+            cfg.backend == Backend::Sim,
+            "--cluster simulates its nodes (--backend sim); use --peers for real processes"
+        );
+        spec.nodes
+            .iter()
+            .map(|n| {
+                let node = InProcNode::with_options(
+                    &n.name,
+                    n.devices.clone(),
+                    cfg.time_scale,
+                    cfg.engine_options(),
+                );
+                InProcTransport::new(node) as Arc<dyn Transport>
+            })
+            .collect()
+    } else {
+        cfg.peers
+            .iter()
+            .map(|addr| TcpTransport::new(addr, addr) as Arc<dyn Transport>)
+            .collect()
+    };
+    let combine = cfg.engine_options().combine;
+    let router = ClusterRouter::new(ensemble, spec, transports, combine, planner)?;
+    if cfg.trace_capture {
+        for (_, _, sys) in router.local_systems() {
+            sys.metrics().trace.set_capture(true);
+        }
+    }
+    if cfg.trace_out.is_some() {
+        log::warn!("--trace-out is single-process only; use GET /v1/trace/export");
+    }
+    let api = ApiServer::start_cluster(Arc::clone(&router), &cfg.listen, cfg.http_threads)?;
+    let plan = router.plan();
+    println!(
+        "serving {} across {} nodes ({} workers) on http://{}",
+        router.ensemble().name,
+        router.cluster().len(),
+        plan.worker_count(),
+        api.addr()
+    );
+    println!("  POST /v1/predict   GET /v1/health  /v1/cluster  /v1/metrics");
+    println!("  GET /v1/trace/export   POST /v1/trace/capture");
+    loop {
+        std::thread::sleep(std::time::Duration::from_secs(3600));
+    }
 }
 
 /// Background writer for `serve --trace-out FILE`: every few seconds,

@@ -444,26 +444,45 @@ impl TraceHub {
     /// per device carrying the per-member predict spans. Loads directly
     /// in `chrome://tracing` or Perfetto.
     pub fn export_chrome(&self) -> String {
+        let mut out = String::from("{\"traceEvents\":[");
+        let base = out.len();
+        self.export_chrome_events(&mut out, 1, "");
+        if out.as_bytes().get(base) == Some(&b',') {
+            out.remove(base);
+        }
+        out.push_str("]}");
+        out
+    }
+
+    /// Append this hub's lanes to an open trace-event array: pid `pid`
+    /// holds the stage + control lanes, pid `pid + 1` the device lanes,
+    /// both process names prefixed with `label` (e.g. `"node1: "`).
+    /// Every record is written with a leading comma — the caller owns
+    /// the array brackets and the first-element comma. This is the
+    /// composition point for cluster traces: one pid pair per node
+    /// merged into a single timeline ([`export_chrome_merged`]).
+    pub fn export_chrome_events(&self, out: &mut String, pid: u32, label: &str) {
         use std::fmt::Write as _;
         let events = self.events_snapshot();
-        let mut out = String::with_capacity(256 + events.len() * 160);
-        out.push_str("{\"traceEvents\":[");
-        out.push_str(
-            "{\"name\":\"process_name\",\"ph\":\"M\",\"pid\":1,\"tid\":0,\
-             \"args\":{\"name\":\"pipeline stages\"}},\
-             {\"name\":\"process_name\",\"ph\":\"M\",\"pid\":2,\"tid\":0,\
-             \"args\":{\"name\":\"devices\"}}",
+        out.reserve(256 + events.len() * 160);
+        let dpid = pid + 1;
+        let _ = write!(
+            out,
+            ",{{\"name\":\"process_name\",\"ph\":\"M\",\"pid\":{pid},\"tid\":0,\
+             \"args\":{{\"name\":\"{label}pipeline stages\"}}}},\
+             {{\"name\":\"process_name\",\"ph\":\"M\",\"pid\":{dpid},\"tid\":0,\
+             \"args\":{{\"name\":\"{label}devices\"}}}}"
         );
         for (i, name) in STAGE_NAMES.iter().enumerate() {
             let _ = write!(
                 out,
-                ",{{\"name\":\"thread_name\",\"ph\":\"M\",\"pid\":1,\"tid\":{i},\
+                ",{{\"name\":\"thread_name\",\"ph\":\"M\",\"pid\":{pid},\"tid\":{i},\
                  \"args\":{{\"name\":\"stage: {name}\"}}}}"
             );
         }
         let _ = write!(
             out,
-            ",{{\"name\":\"thread_name\",\"ph\":\"M\",\"pid\":1,\"tid\":{N_STAGES},\
+            ",{{\"name\":\"thread_name\",\"ph\":\"M\",\"pid\":{pid},\"tid\":{N_STAGES},\
              \"args\":{{\"name\":\"control\"}}}}"
         );
         let mut devices: Vec<u32> =
@@ -473,7 +492,7 @@ impl TraceHub {
         for d in &devices {
             let _ = write!(
                 out,
-                ",{{\"name\":\"thread_name\",\"ph\":\"M\",\"pid\":2,\"tid\":{d},\
+                ",{{\"name\":\"thread_name\",\"ph\":\"M\",\"pid\":{dpid},\"tid\":{d},\
                  \"args\":{{\"name\":\"device {d}\"}}}}"
             );
         }
@@ -485,7 +504,7 @@ impl TraceHub {
                     let _ = write!(
                         out,
                         ",{{\"name\":\"{name}\",\"cat\":\"stage\",\"ph\":\"X\",\
-                         \"ts\":{},\"dur\":{},\"pid\":1,\"tid\":{tid},\
+                         \"ts\":{},\"dur\":{},\"pid\":{pid},\"tid\":{tid},\
                          \"args\":{{\"trace\":\"{:x}\"}}}}",
                         e.ts_us, e.dur_us, e.trace_id
                     );
@@ -493,7 +512,7 @@ impl TraceHub {
                         let _ = write!(
                             out,
                             ",{{\"name\":\"{name}\",\"cat\":\"device\",\"ph\":\"X\",\
-                             \"ts\":{},\"dur\":{},\"pid\":2,\"tid\":{},\
+                             \"ts\":{},\"dur\":{},\"pid\":{dpid},\"tid\":{},\
                              \"args\":{{\"trace\":\"{:x}\",\"model\":{},\"rows\":{}}}}}",
                             e.ts_us, e.dur_us, e.device, e.trace_id, e.model, e.rows
                         );
@@ -503,7 +522,7 @@ impl TraceHub {
                     let _ = write!(
                         out,
                         ",{{\"name\":\"{}\",\"cat\":\"control\",\"ph\":\"i\",\"s\":\"g\",\
-                         \"ts\":{},\"pid\":1,\"tid\":{N_STAGES},\
+                         \"ts\":{},\"pid\":{pid},\"tid\":{N_STAGES},\
                          \"args\":{{\"arg\":{}}}}}",
                         kind.name(),
                         e.ts_us,
@@ -512,9 +531,25 @@ impl TraceHub {
                 }
             }
         }
-        out.push_str("]}");
-        out
     }
+}
+
+/// Merge several hubs' capture rings into one Chrome trace: each hub
+/// gets its own pid pair (stage lanes / device lanes) labeled with its
+/// node name, so a cluster's local nodes render as side-by-side lane
+/// groups on one timeline (timestamps share the process clock — the
+/// in-process transport's case).
+pub fn export_chrome_merged(nodes: &[(String, &TraceHub)]) -> String {
+    let mut out = String::from("{\"traceEvents\":[");
+    let base = out.len();
+    for (i, (name, hub)) in nodes.iter().enumerate() {
+        hub.export_chrome_events(&mut out, (1 + 2 * i) as u32, &format!("{name}: "));
+    }
+    if out.as_bytes().get(base) == Some(&b',') {
+        out.remove(base);
+    }
+    out.push_str("]}");
+    out
 }
 
 /// Compose a trace id from a generation id and a generation-local
@@ -652,6 +687,49 @@ mod tests {
             assert!(s.get("pid").and_then(Json::as_f64).is_some());
             assert!(s.get("tid").and_then(Json::as_f64).is_some());
         }
+    }
+
+    #[test]
+    fn chrome_merge_gives_each_node_its_own_pid_pair() {
+        let a = TraceHub::new();
+        let b = TraceHub::new();
+        for hub in [&a, &b] {
+            hub.set_capture(true);
+        }
+        a.push_predict(trace_id(1, 1), 10, 40, 0, 0, 8);
+        b.push_predict(trace_id(1, 1), 12, 38, 1, 2, 8);
+        let text =
+            export_chrome_merged(&[("node0".to_string(), &a), ("node1".to_string(), &b)]);
+        let doc = Json::parse(&text).expect("valid JSON");
+        let events = doc.get("traceEvents").and_then(Json::as_arr).expect("traceEvents");
+        // node0 owns pids 1/2, node1 pids 3/4, named by node
+        let process = |name: &str| {
+            events
+                .iter()
+                .find(|e| {
+                    e.get("name").and_then(Json::as_str) == Some("process_name")
+                        && e.get("args")
+                            .and_then(|x| x.get("name"))
+                            .and_then(Json::as_str)
+                            == Some(name)
+                })
+                .unwrap_or_else(|| panic!("no process {name}"))
+                .get("pid")
+                .and_then(Json::as_usize)
+                .unwrap()
+        };
+        assert_eq!(process("node0: pipeline stages"), 1);
+        assert_eq!(process("node0: devices"), 2);
+        assert_eq!(process("node1: pipeline stages"), 3);
+        assert_eq!(process("node1: devices"), 4);
+        // each node's predict span renders into its own pid pair
+        let span_pids: Vec<usize> = events
+            .iter()
+            .filter(|e| e.get("ph").and_then(Json::as_str) == Some("X"))
+            .filter_map(|e| e.get("pid").and_then(Json::as_usize))
+            .collect();
+        assert!(span_pids.contains(&1) && span_pids.contains(&2), "{span_pids:?}");
+        assert!(span_pids.contains(&3) && span_pids.contains(&4), "{span_pids:?}");
     }
 
     #[test]

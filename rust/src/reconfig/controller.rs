@@ -608,6 +608,49 @@ impl ReconfigController {
         self.mark_devices(Some(device), None).map(|_| ())
     }
 
+    /// Node loss as a scaled-up device failure: mark every device of
+    /// `node` (under `cluster`'s flattened indexing) failed — or
+    /// recovered — in one state-lock scope, so a concurrent tick sees
+    /// the whole node flip at once and replans exactly once. For flat
+    /// single-system deployments spanning
+    /// [`ClusterSpec::flatten`](crate::cluster::ClusterSpec::flatten);
+    /// the [`ClusterRouter`](crate::cluster::ClusterRouter) has its own
+    /// node-granular path.
+    pub fn mark_node(
+        &self,
+        cluster: &crate::cluster::ClusterSpec,
+        node: usize,
+        failed: bool,
+    ) -> anyhow::Result<Vec<String>> {
+        let n = self.system.devices().len();
+        ensure!(node < cluster.len(), "node {node} out of range ({})", cluster.len());
+        ensure!(
+            cluster.total_devices() == n,
+            "cluster spans {} devices, system has {n}",
+            cluster.total_devices()
+        );
+        let range = cluster.node_devices(node);
+        let mut st = self.state.lock().unwrap();
+        let mut notes = Vec::new();
+        for d in range {
+            if failed {
+                st.failed.insert(d);
+            } else {
+                st.failed.remove(&d);
+            }
+            notes.push(format!(
+                "device {d} marked {} (node {node})",
+                if failed { "failed" } else { "recovered" }
+            ));
+        }
+        st.last_decision = format!(
+            "node {node} marked {} ({} devices)",
+            if failed { "failed" } else { "recovered" },
+            notes.len()
+        );
+        Ok(notes)
+    }
+
     /// Return a device to the planning pool.
     pub fn mark_device_recovered(&self, device: usize) -> anyhow::Result<()> {
         self.mark_devices(None, Some(device)).map(|_| ())
@@ -766,6 +809,40 @@ mod tests {
         let swapped = ctrl.reconfigure_now("operator rebalance").unwrap();
         assert!(swapped.is_some());
         assert!(!sys.matrix().device_workers(0).is_empty());
+    }
+
+    #[test]
+    fn node_loss_is_a_scaled_up_device_failure() {
+        use crate::cluster::ClusterSpec;
+        // a flat system spanning a 2-node cluster's flattened devices
+        let cluster = ClusterSpec::sim(2, 2);
+        let e = ensemble(EnsembleId::Imn4);
+        let d = cluster.flatten();
+        let p = planner::plan(&e, &d, &[], &[], &PlannerConfig::default()).unwrap();
+        let sys = Arc::new(
+            InferenceSystem::build(&p.matrix, &e, Arc::new(FakeExecutor::new(d)),
+                                   EngineOptions::default())
+                .unwrap(),
+        );
+        let ctrl = ReconfigController::start(Arc::clone(&sys), test_opts());
+        ctrl.stop();
+        // topology mismatch refused
+        assert!(ctrl.mark_node(&ClusterSpec::sim(3, 2), 0, true).is_err());
+        assert!(ctrl.mark_node(&cluster, 2, true).is_err(), "node out of range");
+
+        let notes = ctrl.mark_node(&cluster, 0, true).unwrap();
+        assert_eq!(notes.len(), 3, "all 3 of node0's devices marked");
+        assert_eq!(ctrl.failed_devices(), vec![0, 1, 2]);
+        ctrl.tick(); // forced replan off the dead node
+        let m = sys.matrix();
+        for dev in cluster.node_devices(0) {
+            assert!(m.device_workers(dev).is_empty(),
+                    "dead node's device {dev} still used:\n{m}");
+        }
+        assert!(m.all_models_placed());
+
+        ctrl.mark_node(&cluster, 0, false).unwrap();
+        assert!(ctrl.failed_devices().is_empty());
     }
 
     #[test]

@@ -24,7 +24,8 @@ use anyhow::{bail, ensure};
 use crate::alloc::greedy::{bounded_greedy, GreedyConfig};
 use crate::alloc::matrix::AllocationMatrix;
 use crate::alloc::memory::device_usage_mb_with;
-use crate::alloc::worstfit::worst_fit_decreasing_with;
+use crate::alloc::worstfit::{partition_members, worst_fit_decreasing_with};
+use crate::cluster::{ClusterPlan, ClusterSpec, NodePlan};
 use crate::cost::CostModel;
 use crate::device::DeviceSet;
 use crate::engine::SwapStrategy;
@@ -190,6 +191,68 @@ pub fn plan_staged(
             }),
         },
     }
+}
+
+/// Plan `ensemble` across a cluster, minus `failed_nodes` — the node
+/// dimension of [`plan`]: node loss is a scaled-up device failure, so
+/// the signature and semantics mirror the flat planner with nodes in
+/// place of devices.
+///
+/// Two levels of the same algorithm: [`partition_members`] runs
+/// worst-fit-decreasing over *nodes* (bins = surviving nodes, weights =
+/// worst-case member footprints) to fix the node-affine member→node
+/// assignment, then each node's sub-ensemble goes through the full flat
+/// pipeline ([`plan`]: Algorithm 1 + bounded Algorithm 2) over that
+/// node's own devices. The per-node matrices are re-indexed into the
+/// flattened device rows to form [`ClusterPlan::global`], which a
+/// single process spanning [`ClusterSpec::flatten`] could deploy
+/// verbatim — the bit-identical reference the integration tests pin.
+pub fn plan_cluster(
+    ensemble: &Ensemble,
+    cluster: &ClusterSpec,
+    failed_nodes: &[usize],
+    cfg: &PlannerConfig,
+) -> anyhow::Result<ClusterPlan> {
+    let survivors: Vec<usize> =
+        (0..cluster.len()).filter(|n| !failed_nodes.contains(n)).collect();
+    ensure!(!survivors.is_empty(), "all {} nodes marked failed", cluster.len());
+
+    let bins: Vec<&DeviceSet> =
+        survivors.iter().map(|&n| &cluster.nodes[n].devices).collect();
+    let parts = partition_members(ensemble, &bins, cfg.default_batch, &*cfg.cost)
+        .map_err(|oom| anyhow::anyhow!(
+            "no surviving node can hold '{}' ({:.0} MB at batch {})",
+            oom.model, oom.mem_mb, oom.batch
+        ))?;
+
+    let mut nodes = Vec::new();
+    let mut global = AllocationMatrix::zeroed(cluster.total_devices(), ensemble.len());
+    let mut predicted = f64::INFINITY;
+    for (&node, members) in survivors.iter().zip(parts) {
+        if members.is_empty() {
+            continue; // more nodes than members: node idles
+        }
+        let sub = crate::cluster::sub_ensemble(ensemble, node, &members);
+        let p = plan(&sub, &cluster.nodes[node].devices, &[], &[], cfg)
+            .map_err(|e| e.context(format!("planning node {node}")))?;
+        let off = cluster.device_offset(node);
+        for d in 0..p.matrix.n_devices() {
+            for (j, &m) in members.iter().enumerate() {
+                global.set(off + d, m, p.matrix.get(d, j));
+            }
+        }
+        // the ensemble rate is bounded by its slowest member set
+        predicted = predicted.min(p.predicted_img_s);
+        nodes.push(NodePlan {
+            node,
+            members,
+            matrix: p.matrix,
+            predicted_img_s: p.predicted_img_s,
+        });
+    }
+    let out = ClusterPlan { nodes, global, survivors, predicted_img_s: predicted };
+    out.validate(ensemble, cluster)?;
+    Ok(out)
 }
 
 /// Closed-form score of an existing full-indexed matrix under `cost`
@@ -630,6 +693,60 @@ mod tests {
             assert!(both <= d[dev].mem_mb as f64,
                     "device {dev}: {both:.0} MB with pinned drain > {}", d[dev].mem_mb);
         }
+    }
+
+    #[test]
+    fn cluster_plan_partitions_and_validates() {
+        let e = ensemble(EnsembleId::Imn12);
+        let c = ClusterSpec::sim(3, 4);
+        let p = plan_cluster(&e, &c, &[], &PlannerConfig::default()).unwrap();
+        p.validate(&e, &c).unwrap();
+        assert_eq!(p.survivors, vec![0, 1, 2]);
+        assert_eq!(p.nodes.len(), 3, "12 members spread over all 3 nodes");
+        assert!(p.predicted_img_s > 0.0 && p.predicted_img_s.is_finite());
+        // the node minimum bounds the ensemble estimate
+        for np in &p.nodes {
+            assert!(np.predicted_img_s >= p.predicted_img_s);
+        }
+        // the global matrix is deployable flat: same pipeline invariants
+        assert!(p.global.all_models_placed());
+        assert!(crate::alloc::memory::fit_mem(&p.global, &e, &c.flatten()));
+    }
+
+    #[test]
+    fn cluster_plan_routes_around_failed_nodes() {
+        let e = ensemble(EnsembleId::Imn12);
+        let c = ClusterSpec::sim(3, 4);
+        let p = plan_cluster(&e, &c, &[1], &PlannerConfig::default()).unwrap();
+        p.validate(&e, &c).unwrap();
+        assert_eq!(p.survivors, vec![0, 2]);
+        assert!(p.nodes.iter().all(|np| np.node != 1), "dead node got members");
+        for d in c.node_devices(1) {
+            assert!(p.global.device_workers(d).is_empty(),
+                    "dead node's device {d} used");
+        }
+    }
+
+    #[test]
+    fn cluster_plan_fails_closed() {
+        let e = ensemble(EnsembleId::Imn12);
+        let c = ClusterSpec::sim(3, 4);
+        assert!(plan_cluster(&e, &c, &[0, 1, 2], &PlannerConfig::default()).is_err());
+        // survivors too small for the ensemble: per-node packing OOMs
+        let tiny = ClusterSpec::sim(3, 1);
+        assert!(plan_cluster(&e, &tiny, &[1, 2], &PlannerConfig::default()).is_err());
+    }
+
+    #[test]
+    fn cluster_plan_idles_surplus_nodes() {
+        // 1 member, 3 nodes: exactly one node gets a sub-plan, the plan
+        // still validates and the others stay empty
+        let e = ensemble(EnsembleId::Imn1);
+        let c = ClusterSpec::sim(3, 2);
+        let p = plan_cluster(&e, &c, &[], &PlannerConfig::default()).unwrap();
+        p.validate(&e, &c).unwrap();
+        assert_eq!(p.nodes.len(), 1);
+        assert_eq!(p.survivors.len(), 3);
     }
 
     #[test]

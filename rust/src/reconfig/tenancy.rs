@@ -717,6 +717,45 @@ impl MultiTenantController {
         Ok(notes)
     }
 
+    /// Node loss as a scaled-up device failure, multi-tenant flavor:
+    /// every device of `node` flips in one state-lock scope, so the
+    /// next tick replans all tenants jointly off (or back onto) the
+    /// node exactly once. Mirrors
+    /// [`ReconfigController::mark_node`](super::ReconfigController::mark_node).
+    pub fn mark_node(
+        &self,
+        cluster: &crate::cluster::ClusterSpec,
+        node: usize,
+        failed: bool,
+    ) -> anyhow::Result<Vec<String>> {
+        let n = self.tenants[0].system.devices().len();
+        ensure!(node < cluster.len(), "node {node} out of range ({})", cluster.len());
+        ensure!(
+            cluster.total_devices() == n,
+            "cluster spans {} devices, system has {n}",
+            cluster.total_devices()
+        );
+        let mut st = self.state.lock().unwrap();
+        let mut notes = Vec::new();
+        for d in cluster.node_devices(node) {
+            if failed {
+                st.failed.insert(d);
+            } else {
+                st.failed.remove(&d);
+            }
+            notes.push(format!(
+                "device {d} marked {} (node {node})",
+                if failed { "failed" } else { "recovered" }
+            ));
+        }
+        st.last_decision = format!(
+            "node {node} marked {} ({} devices)",
+            if failed { "failed" } else { "recovered" },
+            notes.len()
+        );
+        Ok(notes)
+    }
+
     pub fn failed_devices(&self) -> Vec<usize> {
         self.state.lock().unwrap().failed.iter().copied().collect()
     }
@@ -871,6 +910,27 @@ mod tests {
             },
             ..MultiTenantOptions::default()
         }
+    }
+
+    #[test]
+    fn mark_node_flips_the_whole_device_range() {
+        use crate::cluster::ClusterSpec;
+        let cluster = ClusterSpec::sim(2, 2);
+        let d = cluster.flatten();
+        let ex = SimExecutor::new(d.clone(), 50_000.0);
+        let mut a = AllocationMatrix::zeroed(d.len(), 1);
+        a.set(0, 0, 8);
+        let s = build(&a, EnsembleId::Imn1, ex);
+        let ctrl =
+            MultiTenantController::start(vec![Tenant::new("a", s)], test_opts()).unwrap();
+        ctrl.stop();
+        assert!(ctrl.mark_node(&ClusterSpec::sim(3, 2), 0, true).is_err());
+        assert!(ctrl.mark_node(&cluster, 5, true).is_err());
+        let notes = ctrl.mark_node(&cluster, 1, true).unwrap();
+        assert_eq!(notes.len(), 3);
+        assert_eq!(ctrl.failed_devices(), vec![3, 4, 5]);
+        ctrl.mark_node(&cluster, 1, false).unwrap();
+        assert!(ctrl.failed_devices().is_empty());
     }
 
     #[test]

@@ -53,6 +53,19 @@
 //!   each cell's last update); plus the per-matrix-size `gap_cells`
 //!   measured from staged-swap telemetry (the gap predictor's
 //!   support). Requires a profile store (`serve --profiles`).
+//! * `GET /v1/cluster` — cluster deployments only
+//!   ([`ApiServer::start_cluster`]): the router's topology report —
+//!   per-node liveness, member assignment and engine stats, the dead
+//!   set, survivors and replan/request counters. `404` when the
+//!   server fronts a single-process engine.
+//!
+//! Under a cluster router, `POST /v1/predict` scatter/gathers over the
+//! cluster transports instead of a local engine, `/v1/health` reports
+//! node liveness, `/v1/metrics` exports every local node's engine
+//! series with a `node="..."` label, and the trace routes
+//! capture/export one Chrome lane group per local node. Routes bound
+//! to the tenant registry (`/v1/stats`, `/v1/matrix`, …) answer
+//! `503`/`404` — per-node engine state lives under `/v1/cluster`.
 //!
 //! The complete request/response reference with JSON examples lives in
 //! `docs/API.md`.
@@ -61,6 +74,7 @@ use std::collections::BTreeMap;
 use std::sync::{Arc, RwLock};
 use std::time::{Duration, Instant};
 
+use crate::cluster::ClusterRouter;
 use crate::cost::ProfileStore;
 use crate::engine::arena::Rows;
 use crate::engine::{InferenceSystem, SwapStrategy};
@@ -100,6 +114,9 @@ struct ApiState {
     /// with the cost model scoring replans and with the calibration
     /// loop mutating it.
     profiles: Option<Arc<ProfileStore>>,
+    /// Cluster deployments: the scatter/gather router replaces the
+    /// local engine behind `/v1/predict` and adds `GET /v1/cluster`.
+    cluster: Option<Arc<ClusterRouter>>,
 }
 
 impl ApiState {
@@ -119,7 +136,7 @@ impl ApiServer {
     pub fn start(system: Arc<InferenceSystem>, addr: &str, threads: usize)
         -> anyhow::Result<ApiServer> {
         Self::start_opts(Self::singleton(system), addr, threads, None,
-                         AdminController::None, None)
+                         AdminController::None, None, None)
     }
 
     /// Start with a prediction cache of `cache_capacity` entries (and
@@ -128,7 +145,7 @@ impl ApiServer {
                         cache_capacity: usize) -> anyhow::Result<ApiServer> {
         Self::start_opts(Self::singleton(system), addr, threads,
                          Some(PredictionCache::new(cache_capacity)),
-                         AdminController::None, None)
+                         AdminController::None, None, None)
     }
 
     /// The general single-tenant entry point: optional prediction
@@ -144,7 +161,7 @@ impl ApiServer {
             None => AdminController::None,
         };
         Self::start_opts(Self::singleton(system), addr, threads,
-                         cache.map(PredictionCache::with_config), admin, profiles)
+                         cache.map(PredictionCache::with_config), admin, profiles, None)
     }
 
     /// Start over a (possibly multi-tenant) registry; `x-ensemble`
@@ -163,7 +180,19 @@ impl ApiServer {
             None => AdminController::None,
         };
         Self::start_opts(registry, addr, threads,
-                         cache.map(PredictionCache::with_config), admin, profiles)
+                         cache.map(PredictionCache::with_config), admin, profiles, None)
+    }
+
+    /// Serve a cluster deployment. `POST /v1/predict` scatter/gathers
+    /// over the router's transports (the combine rule runs at the
+    /// router), `GET /v1/cluster` reports the topology, `/v1/health`
+    /// the node liveness, and the metrics/trace routes export
+    /// node-labeled series merged across the router's local nodes.
+    /// Registry-bound tenant routes answer `503`/`404` here.
+    pub fn start_cluster(router: Arc<ClusterRouter>, addr: &str, threads: usize)
+        -> anyhow::Result<ApiServer> {
+        Self::start_opts(SystemRegistry::new(), addr, threads, None,
+                         AdminController::None, None, Some(router))
     }
 
     fn singleton(system: Arc<InferenceSystem>) -> Arc<SystemRegistry> {
@@ -176,13 +205,15 @@ impl ApiServer {
     fn start_opts(registry: Arc<SystemRegistry>, addr: &str, threads: usize,
                   cache: Option<PredictionCache>,
                   controller: AdminController,
-                  profiles: Option<Arc<ProfileStore>>) -> anyhow::Result<ApiServer> {
+                  profiles: Option<Arc<ProfileStore>>,
+                  cluster: Option<Arc<ClusterRouter>>) -> anyhow::Result<ApiServer> {
         let state = Arc::new(ApiState {
             registry,
             latencies: RwLock::new(BTreeMap::new()),
             cache,
             controller,
             profiles,
+            cluster,
         });
         let h_state = Arc::clone(&state);
         let handler: Handler = Arc::new(move |req: &Request| route(&h_state, req));
@@ -233,6 +264,7 @@ fn route(state: &ApiState, req: &Request) -> Response {
         ("GET", "/v1/trace/export") => trace_export(state, req),
         ("POST", "/v1/trace/capture") => trace_capture(state, req),
         ("GET", "/v1/profiles") => profiles_report(state, req),
+        ("GET", "/v1/cluster") => cluster_status(state),
         ("POST", "/v1/reconfigure") => reconfigure(state, req),
         ("GET", "/v1/reconfig/status") => reconfig_status(state),
         ("POST", _) | ("GET", _) => Response::text(404, "unknown route"),
@@ -241,6 +273,27 @@ fn route(state: &ApiState, req: &Request) -> Response {
 }
 
 fn health(state: &ApiState, req: &Request) -> Response {
+    if let Some(router) = &state.cluster {
+        // cluster liveness, not single-engine readiness: degraded (but
+        // still serving) while any node is in the dead set
+        let dead = router.dead_nodes();
+        let plan = router.plan();
+        let body = Json::from_pairs([
+            (
+                "status",
+                Json::Str(if dead.is_empty() { "ok" } else { "degraded" }.to_string()),
+            ),
+            ("ensemble", Json::Str(router.ensemble().name.clone())),
+            ("nodes", Json::Num(router.cluster().len() as f64)),
+            ("alive", Json::Num((router.cluster().len() - dead.len()) as f64)),
+            (
+                "dead",
+                Json::Arr(dead.into_iter().map(|n| Json::Num(n as f64)).collect()),
+            ),
+            ("workers", Json::Num(plan.worker_count() as f64)),
+        ]);
+        return Response::json(200, body.to_string());
+    }
     let (name, system) = match select_tenant(state, req) {
         Ok(pair) => pair,
         Err(resp) => return resp,
@@ -391,6 +444,33 @@ fn cache_report(state: &ApiState) -> Response {
 /// label (`# TYPE` emitted once per metric name), so no tenant is
 /// invisible to dashboards.
 fn prometheus(state: &ApiState, req: &Request) -> Response {
+    if let Some(router) = &state.cluster {
+        // every in-process node's engine series, node="..."-labeled (a
+        // TCP node exports its own /v1/metrics — scrape it directly)
+        let nodes: Vec<(String, Arc<InferenceSystem>)> = router
+            .local_systems()
+            .into_iter()
+            .map(|(_, name, sys)| (name, sys))
+            .collect();
+        let mut out = tenant_exposition(&nodes, &|n| state.tenant_latency(n), Some("node"));
+        out.push_str("# TYPE ensemble_serve_cluster_replans_total counter\n");
+        out.push_str(&format!("ensemble_serve_cluster_replans_total {}\n", router.replans()));
+        out.push_str("# TYPE ensemble_serve_cluster_requests_total counter\n");
+        out.push_str(&format!(
+            "ensemble_serve_cluster_requests_total {}\n",
+            router.requests()
+        ));
+        out.push_str("# TYPE ensemble_serve_cluster_nodes_dead gauge\n");
+        out.push_str(&format!(
+            "ensemble_serve_cluster_nodes_dead {}\n",
+            router.dead_nodes().len()
+        ));
+        return Response {
+            status: 200,
+            content_type: "text/plain; version=0.0.4",
+            body: out.into_bytes(),
+        };
+    }
     let explicit = req.headers.contains_key("x-ensemble");
     if explicit || state.registry.len() <= 1 {
         let (name, system) = match select_tenant(state, req) {
@@ -398,7 +478,7 @@ fn prometheus(state: &ApiState, req: &Request) -> Response {
             Err(resp) => return resp,
         };
         let mut out = tenant_exposition(&[(name.clone(), system)], &|n| state.tenant_latency(n),
-                                        false);
+                                        None);
         if let Some(cache) = &state.cache {
             out.push_str(&cache_exposition(cache, Some(&name), false));
         }
@@ -414,7 +494,7 @@ fn prometheus(state: &ApiState, req: &Request) -> Response {
         .iter()
         .filter_map(|n| state.registry.select_named(Some(n.as_str())))
         .collect();
-    let mut out = tenant_exposition(&tenants, &|n| state.tenant_latency(n), true);
+    let mut out = tenant_exposition(&tenants, &|n| state.tenant_latency(n), Some("tenant"));
     if let Some(cache) = &state.cache {
         out.push_str(&cache_exposition(cache, None, true));
     }
@@ -452,13 +532,14 @@ fn cache_exposition(cache: &PredictionCache, only: Option<&str>, labeled: bool) 
     out
 }
 
-/// Render the exposition for `tenants`; `labeled` adds `tenant="..."`
-/// to every sample (multi-tenant scrape), otherwise the legacy
-/// unlabeled single-tenant format is preserved byte-for-byte.
+/// Render the exposition for `tenants`; `label_key` adds
+/// `<key>="<name>"` to every sample (`tenant` for a multi-tenant
+/// scrape, `node` for a cluster's per-node lanes), `None` preserves
+/// the legacy unlabeled single-tenant format byte-for-byte.
 fn tenant_exposition(
     tenants: &[(String, Arc<InferenceSystem>)],
     latency_of: &dyn Fn(&str) -> Arc<LatencyHistogram>,
-    labeled: bool,
+    label_key: Option<&str>,
 ) -> String {
     let mut out = String::new();
     if tenants.is_empty() {
@@ -467,8 +548,9 @@ fn tenant_exposition(
     }
     let snapshots: Vec<Vec<(&'static str, u64)>> =
         tenants.iter().map(|(_, s)| s.metrics().snapshot()).collect();
-    let label = |name: &str| {
-        if labeled { format!("{{tenant=\"{name}\"}}") } else { String::new() }
+    let label = |name: &str| match label_key {
+        Some(k) => format!("{{{k}=\"{name}\"}}"),
+        None => String::new(),
     };
     // counters/gauges: every system exposes the same key set in the
     // same order, so index j addresses one metric across tenants
@@ -498,7 +580,10 @@ fn tenant_exposition(
     }
     out.push_str("# TYPE ensemble_serve_device_busy_seconds_total counter\n");
     for (name, system) in tenants {
-        let tenant_label = if labeled { format!(",tenant=\"{name}\"") } else { String::new() };
+        let tenant_label = match label_key {
+            Some(k) => format!(",{k}=\"{name}\""),
+            None => String::new(),
+        };
         for (d, us) in system.metrics().device_busy_us().iter().enumerate() {
             out.push_str(&format!(
                 "ensemble_serve_device_busy_seconds_total{{device=\"{d}\"{tenant_label}}} {}\n",
@@ -512,7 +597,10 @@ fn tenant_exposition(
     ] {
         out.push_str(&format!("# TYPE {metric} histogram\n"));
         for (name, system) in tenants {
-            let tenant_label = if labeled { format!("tenant=\"{name}\"") } else { String::new() };
+            let tenant_label = match label_key {
+                Some(k) => format!("{k}=\"{name}\""),
+                None => String::new(),
+            };
             if engine_side {
                 write_histogram(&mut out, metric, &system.metrics().request_latency,
                                 &tenant_label);
@@ -527,10 +615,9 @@ fn tenant_exposition(
     for (name, system) in tenants {
         let trace = &system.metrics().trace;
         for (stage, h) in crate::obs::STAGE_NAMES.iter().zip(trace.stages().iter()) {
-            let labels = if labeled {
-                format!("stage=\"{stage}\",tenant=\"{name}\"")
-            } else {
-                format!("stage=\"{stage}\"")
+            let labels = match label_key {
+                Some(k) => format!("stage=\"{stage}\",{k}=\"{name}\""),
+                None => format!("stage=\"{stage}\""),
             };
             write_histogram(&mut out, "ensemble_serve_stage_latency_seconds", h, &labels);
         }
@@ -642,8 +729,18 @@ fn trace_slow(state: &ApiState, req: &Request) -> Response {
 }
 
 /// The captured event window as Chrome trace-event JSON — load the
-/// body directly in `chrome://tracing` or Perfetto.
+/// body directly in `chrome://tracing` or Perfetto. Under a cluster
+/// router the local nodes' windows merge into one timeline with a
+/// pid pair (stage + device lanes) per node.
 fn trace_export(state: &ApiState, req: &Request) -> Response {
+    if let Some(router) = &state.cluster {
+        let systems = router.local_systems();
+        let hubs: Vec<(String, &crate::obs::TraceHub)> = systems
+            .iter()
+            .map(|(_, name, sys)| (name.clone(), &sys.metrics().trace))
+            .collect();
+        return Response::json(200, crate::obs::export_chrome_merged(&hubs));
+    }
     let (_, system) = match select_tenant(state, req) {
         Ok(pair) => pair,
         Err(resp) => return resp,
@@ -651,32 +748,59 @@ fn trace_export(state: &ApiState, req: &Request) -> Response {
     Response::json(200, system.metrics().trace.export_chrome())
 }
 
+/// Parse an optional capture-toggle body: `({"capture": bool}, clear)`.
+fn parse_capture_body(body: &[u8]) -> Result<(Option<bool>, bool), Response> {
+    if body.is_empty() {
+        return Ok((None, false));
+    }
+    let text = match std::str::from_utf8(body) {
+        Ok(t) => t,
+        Err(_) => return Err(Response::text(400, "body is not utf-8")),
+    };
+    let parsed = match Json::parse(text) {
+        Ok(j) => j,
+        Err(e) => return Err(Response::text(400, &format!("bad json: {e}"))),
+    };
+    Ok((
+        parsed.get("capture").and_then(Json::as_bool),
+        parsed.get("clear").and_then(Json::as_bool).unwrap_or(false),
+    ))
+}
+
 /// Toggle (or set) the per-event capture ring at runtime. Body is
 /// optional JSON: `{"capture": bool}` sets it, absent toggles;
-/// `{"clear": true}` drops the captured window first.
+/// `{"clear": true}` drops the captured window first. Under a cluster
+/// router the toggle fans out to every local node's ring (absent
+/// `capture` toggles off iff all nodes currently capture).
 fn trace_capture(state: &ApiState, req: &Request) -> Response {
+    let (capture, clear) = match parse_capture_body(&req.body) {
+        Ok(pair) => pair,
+        Err(resp) => return resp,
+    };
+    if let Some(router) = &state.cluster {
+        let systems = router.local_systems();
+        let all_on = !systems.is_empty()
+            && systems.iter().all(|(_, _, s)| s.metrics().trace.capture_enabled());
+        let next = capture.unwrap_or(!all_on);
+        for (_, _, sys) in &systems {
+            let trace = &sys.metrics().trace;
+            if clear {
+                trace.clear_events();
+            }
+            trace.set_capture(next);
+        }
+        let body = Json::from_pairs([
+            ("nodes", Json::Num(systems.len() as f64)),
+            ("capture", Json::Bool(next)),
+            ("cleared", Json::Bool(clear)),
+        ]);
+        return Response::json(200, body.to_string());
+    }
     let (name, system) = match select_tenant(state, req) {
         Ok(pair) => pair,
         Err(resp) => return resp,
     };
     let trace = &system.metrics().trace;
-    let mut capture: Option<bool> = None;
-    let mut clear = false;
-    if !req.body.is_empty() {
-        let text = match std::str::from_utf8(&req.body) {
-            Ok(t) => t,
-            Err(_) => return Response::text(400, "body is not utf-8"),
-        };
-        let parsed = match Json::parse(text) {
-            Ok(j) => j,
-            Err(e) => return Response::text(400, &format!("bad json: {e}")),
-        };
-        capture = parsed.get("capture").and_then(Json::as_bool);
-        clear = parsed
-            .get("clear")
-            .and_then(Json::as_bool)
-            .unwrap_or(false);
-    }
     if clear {
         trace.clear_events();
     }
@@ -981,13 +1105,20 @@ fn reconfig_status(state: &ApiState) -> Response {
     }
 }
 
-fn predict(state: &ApiState, req: &Request) -> Response {
-    let t0 = Instant::now();
-    let (tenant, system) = match select_tenant(state, req) {
-        Ok(pair) => pair,
-        Err(resp) => return resp,
-    };
-    let latency = state.tenant_latency(&tenant);
+/// The cluster router's topology report: per-node liveness, member
+/// assignment and engine stats, the dead set, survivors and the
+/// replan/request counters.
+fn cluster_status(state: &ApiState) -> Response {
+    match &state.cluster {
+        Some(router) => Response::json(200, router.status_json().to_string()),
+        None => Response::text(404, "no cluster router running (serve --cluster)"),
+    }
+}
+
+/// Decode a predict body — raw little-endian f32 with the image count
+/// in `x-num-images` (`application/octet-stream`) or JSON `{"images":
+/// [[f32...]...]}` — into `(pixels, n_images, binary)`.
+fn parse_predict_body(req: &Request) -> Result<(Vec<f32>, usize, bool), Response> {
     let binary = req
         .headers
         .get("content-type")
@@ -1000,10 +1131,10 @@ fn predict(state: &ApiState, req: &Request) -> Response {
             .get("x-num-images")
             .and_then(|v| v.parse::<usize>().ok())
         else {
-            return Response::text(400, "binary body needs x-num-images header");
+            return Err(Response::text(400, "binary body needs x-num-images header"));
         };
         if req.body.len() % 4 != 0 {
-            return Response::text(400, "binary body length not a multiple of 4");
+            return Err(Response::text(400, "binary body length not a multiple of 4"));
         }
         let x: Vec<f32> = req
             .body
@@ -1014,13 +1145,49 @@ fn predict(state: &ApiState, req: &Request) -> Response {
     } else {
         match parse_json_images(&req.body) {
             Ok(pair) => pair,
-            Err(e) => return Response::text(400, &format!("bad request: {e}")),
+            Err(e) => return Err(Response::text(400, &format!("bad request: {e}"))),
         }
     };
 
     if n == 0 || x.is_empty() || x.len() % n != 0 {
-        return Response::text(400, "image count does not divide payload");
+        return Err(Response::text(400, "image count does not divide payload"));
     }
+    Ok((x, n, binary))
+}
+
+/// Cluster predict: the router scatters the batch to every node
+/// holding members, folds the per-member answers with the deployment's
+/// combine rule, and replans around any node that failed mid-request.
+fn cluster_predict(state: &ApiState, router: &ClusterRouter, req: &Request) -> Response {
+    let t0 = Instant::now();
+    let (x, n, binary) = match parse_predict_body(req) {
+        Ok(parts) => parts,
+        Err(resp) => return resp,
+    };
+    let latency = state.tenant_latency(router.ensemble().name.as_str());
+    match router.predict(x, n) {
+        Ok(y) => {
+            latency.record(t0.elapsed());
+            encode_predictions(&y, n, binary)
+        }
+        Err(e) => Response::text(503, &format!("prediction failed: {e:#}")),
+    }
+}
+
+fn predict(state: &ApiState, req: &Request) -> Response {
+    if let Some(router) = &state.cluster {
+        return cluster_predict(state, router, req);
+    }
+    let t0 = Instant::now();
+    let (tenant, system) = match select_tenant(state, req) {
+        Ok(pair) => pair,
+        Err(resp) => return resp,
+    };
+    let latency = state.tenant_latency(&tenant);
+    let (x, n, binary) = match parse_predict_body(req) {
+        Ok(parts) => parts,
+        Err(resp) => return resp,
+    };
 
     // redundant-request cache (§I.B): the serving tenant and the
     // ensemble's serving fingerprint are both in the digest (and
@@ -1621,5 +1788,124 @@ mod tests {
         }
         let (code, _) = http_request(srv.addr(), "GET", "/v2/none", "", b"").unwrap();
         assert_eq!(code, 404);
+    }
+
+    /// A 2-node simulated cluster behind `start_cluster`, plus handles
+    /// to the nodes so tests can kill one.
+    fn cluster_api() -> (ApiServer, Vec<Arc<crate::cluster::InProcNode>>) {
+        use crate::cluster::{ClusterRouter, ClusterSpec, InProcNode, InProcTransport, Transport};
+        use crate::reconfig::planner::PlannerConfig;
+        let e = ensemble(EnsembleId::Imn4);
+        let cluster = ClusterSpec::sim(2, 2);
+        let nodes: Vec<Arc<InProcNode>> = cluster
+            .nodes
+            .iter()
+            .map(|n| InProcNode::new(&n.name, n.devices.clone(), 1024.0))
+            .collect();
+        let transports: Vec<Arc<dyn Transport>> = nodes
+            .iter()
+            .map(|n| InProcTransport::new(Arc::clone(n)) as Arc<dyn Transport>)
+            .collect();
+        let router = ClusterRouter::new(
+            e,
+            cluster,
+            transports,
+            Arc::new(crate::engine::combine::Average),
+            PlannerConfig::default(),
+        )
+        .unwrap();
+        let srv = ApiServer::start_cluster(router, "127.0.0.1:0", 2).unwrap();
+        (srv, nodes)
+    }
+
+    #[test]
+    fn cluster_predict_health_and_status() {
+        let (srv, nodes) = cluster_api();
+        let e = ensemble(EnsembleId::Imn4);
+        let elems = e.members[0].input_elems_per_image();
+        let row = format!("[{}]", vec!["0.5"; elems].join(","));
+        let body = format!("{{\"images\":[{row}]}}");
+
+        let (code, resp) = http_request(srv.addr(), "POST", "/v1/predict",
+                                        "application/json", body.as_bytes())
+            .unwrap();
+        assert_eq!(code, 200, "{}", String::from_utf8_lossy(&resp));
+        let j = Json::parse(std::str::from_utf8(&resp).unwrap()).unwrap();
+        let preds = j.get("predictions").unwrap().as_arr().unwrap();
+        assert_eq!(preds.len(), 1);
+        assert_eq!(preds[0].as_arr().unwrap().len(), e.classes());
+
+        let (code, body_h) = http_request(srv.addr(), "GET", "/v1/health", "", b"").unwrap();
+        assert_eq!(code, 200);
+        let j = Json::parse(std::str::from_utf8(&body_h).unwrap()).unwrap();
+        assert_eq!(j.get("status").unwrap().as_str(), Some("ok"));
+        assert_eq!(j.get("nodes").unwrap().as_usize(), Some(2));
+        assert_eq!(j.get("dead").unwrap().as_arr().unwrap().len(), 0);
+
+        let (code, body_c) = http_request(srv.addr(), "GET", "/v1/cluster", "", b"").unwrap();
+        assert_eq!(code, 200);
+        let j = Json::parse(std::str::from_utf8(&body_c).unwrap()).unwrap();
+        assert_eq!(j.get("nodes").unwrap().as_arr().unwrap().len(), 2);
+        assert_eq!(j.get("survivors").unwrap().as_arr().unwrap().len(), 2);
+
+        // tenant-registry routes have no engine to answer from here
+        let (code, _) = http_request(srv.addr(), "GET", "/v1/stats", "", b"").unwrap();
+        assert_eq!(code, 503);
+
+        // node loss: the request still answers, health degrades
+        nodes[1].kill();
+        let (code, resp) = http_request(srv.addr(), "POST", "/v1/predict",
+                                        "application/json", body.as_bytes())
+            .unwrap();
+        assert_eq!(code, 200, "{}", String::from_utf8_lossy(&resp));
+        let (_, body_h) = http_request(srv.addr(), "GET", "/v1/health", "", b"").unwrap();
+        let j = Json::parse(std::str::from_utf8(&body_h).unwrap()).unwrap();
+        assert_eq!(j.get("status").unwrap().as_str(), Some("degraded"));
+        assert_eq!(j.get("dead").unwrap().as_arr().unwrap().len(), 1);
+    }
+
+    #[test]
+    fn cluster_metrics_and_trace_are_node_labeled() {
+        let (srv, _nodes) = cluster_api();
+        let (code, body) = http_request(srv.addr(), "POST", "/v1/trace/capture",
+                                        "application/json", b"{\"capture\":true}")
+            .unwrap();
+        assert_eq!(code, 200);
+        let j = Json::parse(std::str::from_utf8(&body).unwrap()).unwrap();
+        assert_eq!(j.get("capture"), Some(&Json::Bool(true)));
+        assert_eq!(j.get("nodes").unwrap().as_usize(), Some(2));
+
+        let e = ensemble(EnsembleId::Imn4);
+        let elems = e.members[0].input_elems_per_image();
+        let row = format!("[{}]", vec!["0.5"; elems].join(","));
+        let body = format!("{{\"images\":[{row}]}}");
+        let (code, _) = http_request(srv.addr(), "POST", "/v1/predict",
+                                     "application/json", body.as_bytes())
+            .unwrap();
+        assert_eq!(code, 200);
+
+        let (code, body) = http_request(srv.addr(), "GET", "/v1/metrics", "", b"").unwrap();
+        assert_eq!(code, 200);
+        let text = String::from_utf8(body).unwrap();
+        assert!(text.contains("node=\"node0\""), "{text}");
+        assert!(text.contains("node=\"node1\""), "{text}");
+        assert!(text.contains("ensemble_serve_cluster_requests_total 1"), "{text}");
+        assert!(text.contains("ensemble_serve_cluster_nodes_dead 0"), "{text}");
+
+        let (code, body) = http_request(srv.addr(), "GET", "/v1/trace/export", "", b"").unwrap();
+        assert_eq!(code, 200);
+        let j = Json::parse(std::str::from_utf8(&body).unwrap()).unwrap();
+        let events = j.get("traceEvents").unwrap().as_arr().unwrap();
+        let process_names: Vec<&str> = events
+            .iter()
+            .filter(|e| e.get("name").and_then(Json::as_str) == Some("process_name"))
+            .filter_map(|e| e.get("args").and_then(|a| a.get("name")).and_then(Json::as_str))
+            .collect();
+        assert!(process_names.contains(&"node0: pipeline stages"), "{process_names:?}");
+        assert!(process_names.contains(&"node1: pipeline stages"), "{process_names:?}");
+        assert!(
+            events.iter().any(|e| e.get("ph").and_then(Json::as_str) == Some("X")),
+            "no spans captured across the cluster"
+        );
     }
 }

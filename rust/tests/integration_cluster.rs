@@ -1,0 +1,227 @@
+//! Integration of the cluster execution plane: an in-process cluster of
+//! simulated nodes must serve an ensemble **bit-identically** to the
+//! single-process engine on the same allocation matrix, and losing a
+//! node mid-workload must replan onto the survivors without dropping or
+//! double-answering a single request.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use ensemble_serve::cluster::{
+    ClusterRouter, ClusterSpec, InProcNode, InProcTransport, NodeServer, TcpTransport,
+    Transport,
+};
+use ensemble_serve::engine::combine::Average;
+use ensemble_serve::engine::{EngineOptions, InferenceSystem};
+use ensemble_serve::exec::sim::SimExecutor;
+use ensemble_serve::model::{ensemble, EnsembleId};
+use ensemble_serve::reconfig::planner::PlannerConfig;
+
+const TIME_SCALE: f64 = 1024.0;
+
+fn sim_cluster(
+    id: EnsembleId,
+    n_nodes: usize,
+    gpus: usize,
+) -> (Arc<ClusterRouter>, ClusterSpec, Vec<Arc<InProcNode>>) {
+    let e = ensemble(id);
+    let cluster = ClusterSpec::sim(n_nodes, gpus);
+    let nodes: Vec<Arc<InProcNode>> = cluster
+        .nodes
+        .iter()
+        .map(|n| InProcNode::new(&n.name, n.devices.clone(), TIME_SCALE))
+        .collect();
+    let transports: Vec<Arc<dyn Transport>> = nodes
+        .iter()
+        .map(|n| InProcTransport::new(Arc::clone(n)) as Arc<dyn Transport>)
+        .collect();
+    let router = ClusterRouter::new(
+        e,
+        cluster.clone(),
+        transports,
+        Arc::new(Average),
+        PlannerConfig::default(),
+    )
+    .unwrap();
+    (router, cluster, nodes)
+}
+
+/// §acceptance: a 3-node simulated cluster serving the 12-member
+/// ensemble answers bit-identically to one single-process engine
+/// deployed on the *same* allocation (the cluster plan's global matrix
+/// over the flattened device set, same executor class and time scale,
+/// same combine rule).
+#[test]
+fn twelve_members_over_three_nodes_match_the_flat_engine_bit_for_bit() {
+    let (router, cluster, _nodes) = sim_cluster(EnsembleId::Imn12, 3, 2);
+    let e = router.ensemble().clone();
+    let plan = router.plan();
+    plan.validate(&e, &cluster).unwrap();
+    assert!(
+        plan.nodes.len() >= 2,
+        "12 members over 3 × 2-GPU nodes must shard across nodes"
+    );
+    assert_eq!(plan.survivors, vec![0, 1, 2]);
+
+    // the flat reference: one engine over the concatenated devices,
+    // running the very matrix the cluster partitioned
+    let flat = InferenceSystem::build(
+        &plan.global,
+        &e,
+        SimExecutor::new(cluster.flatten(), TIME_SCALE),
+        EngineOptions::default(), // Average, same as the router fold
+    )
+    .unwrap();
+
+    let elems = e.members[0].input_elems_per_image();
+    let nb = 5;
+    let x: Vec<f32> = (0..nb * elems).map(|i| (i % 7) as f32 * 0.125).collect();
+    let y_cluster = router.predict(x.clone(), nb).unwrap();
+    let y_flat = flat.predict(x, nb).unwrap();
+    assert_eq!(y_cluster.len(), nb * e.classes());
+    assert_eq!(
+        y_cluster, y_flat,
+        "cluster scatter/gather answer must be bit-identical to the flat engine"
+    );
+    assert_eq!(router.replans(), 0, "healthy run must not replan");
+}
+
+/// §acceptance: kill one serving node while concurrent clients hammer
+/// the router. Every issued request is answered exactly once (no drops,
+/// no double answers, no errors), the router replans at least once, and
+/// the installed plan excludes the dead node.
+#[test]
+fn node_loss_mid_workload_drops_nothing_and_replans_onto_survivors() {
+    let (router, cluster, nodes) = sim_cluster(EnsembleId::Imn12, 3, 2);
+    let e = router.ensemble().clone();
+    let victim = router.plan().nodes.last().unwrap().node;
+
+    let n_clients = 4;
+    let per_client = 25u64;
+    let images = 4usize;
+    let elems = e.members[0].input_elems_per_image();
+    let classes = e.classes();
+    let answered = Arc::new(AtomicU64::new(0));
+    let errors = Arc::new(AtomicU64::new(0));
+    let bad_values = Arc::new(AtomicU64::new(0));
+
+    let clients: Vec<_> = (0..n_clients)
+        .map(|c| {
+            let router = Arc::clone(&router);
+            let answered = Arc::clone(&answered);
+            let errors = Arc::clone(&errors);
+            let bad_values = Arc::clone(&bad_values);
+            std::thread::spawn(move || {
+                let x = vec![0.25 + c as f32 * 0.1; images * elems];
+                for _ in 0..per_client {
+                    match router.predict(x.clone(), images) {
+                        Ok(y) => {
+                            answered.fetch_add(1, Ordering::Relaxed);
+                            // sim members emit uniform rows; any fold
+                            // disagreement shows up as a wrong value
+                            let want = 1.0 / classes as f32;
+                            if y.len() != images * classes
+                                || y.iter().any(|v| *v != want)
+                            {
+                                bad_values.fetch_add(1, Ordering::Relaxed);
+                            }
+                        }
+                        Err(_) => {
+                            errors.fetch_add(1, Ordering::Relaxed);
+                        }
+                    }
+                }
+            })
+        })
+        .collect();
+
+    // kill mid-workload: wait until traffic is demonstrably flowing,
+    // with plenty of requests still to go
+    let deadline = Instant::now() + Duration::from_secs(30);
+    while answered.load(Ordering::Relaxed) < 8 {
+        assert!(Instant::now() < deadline, "workload never started");
+        std::thread::sleep(Duration::from_millis(2));
+    }
+    nodes[victim].kill();
+
+    for c in clients {
+        c.join().unwrap();
+    }
+    let total = n_clients as u64 * per_client;
+    assert_eq!(
+        answered.load(Ordering::Relaxed),
+        total,
+        "every request must be answered exactly once across the node loss"
+    );
+    assert_eq!(errors.load(Ordering::Relaxed), 0, "no request may fail");
+    assert_eq!(bad_values.load(Ordering::Relaxed), 0, "no gather may misfold");
+    assert_eq!(router.requests(), total);
+
+    assert!(router.replans() >= 1, "node loss must trigger a replan");
+    assert_eq!(router.dead_nodes(), vec![victim]);
+    let after = router.plan();
+    after.validate(&e, &cluster).unwrap();
+    assert!(!after.survivors.contains(&victim));
+    assert!(after.nodes.iter().all(|np| np.node != victim));
+
+    // recovery: re-admit the node and the full topology serves again
+    nodes[victim].revive();
+    router.mark_node_recovered(victim).unwrap();
+    assert_eq!(router.plan().survivors, vec![0, 1, 2]);
+    let y = router.predict(vec![0.5; elems], 1).unwrap();
+    assert_eq!(y.len(), classes);
+}
+
+/// The TCP backend end-to-end: two node servers on loopback behind a
+/// router, a predict scatter/gathers over the wire, and stopping one
+/// server replans onto the survivor (which must then serve the whole
+/// ensemble alone).
+#[test]
+fn tcp_cluster_survives_losing_a_node_server() {
+    let e = ensemble(EnsembleId::Imn4);
+    let cluster = ClusterSpec::sim(2, 2);
+    let nodes: Vec<Arc<InProcNode>> = cluster
+        .nodes
+        .iter()
+        .map(|n| InProcNode::new(&n.name, n.devices.clone(), TIME_SCALE))
+        .collect();
+    let mut servers: Vec<NodeServer> = nodes
+        .iter()
+        .map(|n| NodeServer::spawn(Arc::clone(n), "127.0.0.1:0").unwrap())
+        .collect();
+    let transports: Vec<Arc<dyn Transport>> = servers
+        .iter()
+        .map(|s| {
+            TcpTransport::new(s.node().name(), &s.addr().to_string())
+                as Arc<dyn Transport>
+        })
+        .collect();
+    let router = ClusterRouter::new(
+        e.clone(),
+        cluster,
+        transports,
+        Arc::new(Average),
+        PlannerConfig::default(),
+    )
+    .unwrap();
+
+    let elems = e.members[0].input_elems_per_image();
+    let y = router.predict(vec![0.3; 2 * elems], 2).unwrap();
+    assert_eq!(y.len(), 2 * e.classes());
+    for v in &y {
+        assert_eq!(*v, 1.0 / e.classes() as f32);
+    }
+
+    // lose node 1's process: its socket goes away, the router replans
+    let victim = 1;
+    nodes[victim].kill();
+    servers[victim].stop();
+    let y = router.predict(vec![0.3; elems], 1).unwrap();
+    assert_eq!(y.len(), e.classes());
+    assert!(router.replans() >= 1);
+    let after = router.plan();
+    assert_eq!(after.survivors, vec![0]);
+    assert_eq!(after.nodes.len(), 1, "one node now serves all 4 members");
+    assert_eq!(after.nodes[0].members, vec![0, 1, 2, 3]);
+}
