@@ -1,0 +1,163 @@
+//! Cascade serving vs full-ensemble serving — the PR's perf instrument.
+//!
+//! One IMN4 deployment, three serving modes over the same spread matrix
+//! and the calibrated V100 simulator:
+//!
+//! * **full** — the plain engine runs all four members for every row
+//!   (the baseline every prior bench measures);
+//! * **gate** — a two-tier cascade whose tier-0 confidence clears the
+//!   reply gate (vote-agreement on the sim's deterministic outputs), so
+//!   every row is answered by the cheap tier: the cascade's best case;
+//! * **escalate** — the same cascade at threshold 0 (the always-escalate
+//!   sentinel): every row runs both tiers, so the gap to **full** is the
+//!   pure bookkeeping overhead of the gate + scatter/fold path.
+//!
+//! Reports p50 latency and throughput for each mode and writes
+//! `cascade_full_p50_ms`, `cascade_gate_p50_ms`,
+//! `cascade_escalate_p50_ms`, `cascade_full_img_s` and
+//! `cascade_gate_img_s` into `BENCH_hotpath.json`
+//! (`tools/check_bench.py` reports them as advisory).
+//!
+//! ```bash
+//! cargo bench --bench cascade
+//! ```
+
+#[path = "common/mod.rs"]
+mod common;
+
+use std::sync::atomic::Ordering;
+use std::time::Instant;
+
+use ensemble_serve::alloc::matrix::AllocationMatrix;
+use ensemble_serve::cascade::{CascadeSpec, CascadeSystem, ConfidencePolicy};
+use ensemble_serve::device::DeviceSet;
+use ensemble_serve::engine::{EngineOptions, InferenceSystem};
+use ensemble_serve::exec::sim::SimExecutor;
+use ensemble_serve::model::{ensemble, EnsembleId};
+use ensemble_serve::util::json::Json;
+use ensemble_serve::util::stats::percentile;
+
+/// p50 latency (ms) and throughput (img/s) of `iters` sequential
+/// requests of `nb` images against `predict`.
+fn measure(
+    iters: usize,
+    nb: usize,
+    elems: usize,
+    mut predict: impl FnMut(Vec<f32>, usize),
+) -> (f64, f64) {
+    let x = vec![0.5f32; nb * elems];
+    let mut samples = Vec::with_capacity(iters);
+    let t0 = Instant::now();
+    for _ in 0..iters {
+        let t = Instant::now();
+        predict(x.clone(), nb);
+        samples.push(t.elapsed().as_secs_f64());
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    (percentile(&samples, 50.0) * 1e3, (iters * nb) as f64 / wall)
+}
+
+fn main() {
+    common::init_logging();
+    println!("=== cascade vs full-ensemble serving ===\n");
+    let fast = common::fast_mode();
+    let iters = if fast { 12 } else { 60 };
+    let nb = 8usize;
+
+    let e = ensemble(EnsembleId::Imn4);
+    let d = DeviceSet::hgx(2);
+    let elems = e.members[0].input_elems_per_image();
+    let mut a = AllocationMatrix::zeroed(d.len(), e.len());
+    for m in 0..e.len() {
+        a.set(m % 2, m, 8);
+    }
+    // cheapest member alone in tier 0, the rest behind the gate
+    let tiers = vec![vec![0], vec![1, 2, 3]];
+
+    // --- full ensemble: the plain engine
+    let (full_p50_ms, full_img_s) = {
+        let sys = InferenceSystem::build(
+            &a,
+            &e,
+            SimExecutor::new(d.clone(), common::TIME_SCALE),
+            EngineOptions::default(),
+        )
+        .unwrap();
+        measure(iters, nb, elems, |x, n| {
+            std::hint::black_box(sys.predict(x, n).unwrap().len());
+        })
+    };
+    println!(
+        "full ensemble      ({iters} reqs x {nb} imgs): p50 {full_p50_ms:.2} ms  \
+         {full_img_s:.0} img/s"
+    );
+
+    // --- gate replies at tier 0: the sim's deterministic outputs give
+    // vote-agreement 1.0, so every row clears a 0.75 threshold
+    let (gate_p50_ms, gate_img_s) = {
+        let cascade = CascadeSystem::build(
+            &a,
+            &e,
+            SimExecutor::new(d.clone(), common::TIME_SCALE),
+            EngineOptions::default(),
+            CascadeSpec {
+                tiers: tiers.clone(),
+                policy: ConfidencePolicy::VoteAgreement,
+                threshold: 0.75,
+            },
+        )
+        .unwrap();
+        let r = measure(iters, nb, elems, |x, n| {
+            std::hint::black_box(cascade.predict(x, n).unwrap().len());
+        });
+        let replied_t0 = cascade.tier_stats()[0].replied.load(Ordering::Relaxed);
+        assert_eq!(
+            replied_t0,
+            (iters * nb) as u64,
+            "gate fixture broken: tier 0 must answer every row"
+        );
+        r
+    };
+    println!(
+        "cascade (gate t0)  ({iters} reqs x {nb} imgs): p50 {gate_p50_ms:.2} ms  \
+         {gate_img_s:.0} img/s"
+    );
+
+    // --- threshold 0: every row escalates through both tiers, so the
+    // delta against `full` is the cascade's bookkeeping overhead
+    let (esc_p50_ms, esc_img_s) = {
+        let cascade = CascadeSystem::build(
+            &a,
+            &e,
+            SimExecutor::new(d, common::TIME_SCALE),
+            EngineOptions::default(),
+            CascadeSpec {
+                tiers,
+                policy: ConfidencePolicy::VoteAgreement,
+                threshold: 0.0,
+            },
+        )
+        .unwrap();
+        measure(iters, nb, elems, |x, n| {
+            std::hint::black_box(cascade.predict(x, n).unwrap().len());
+        })
+    };
+    println!(
+        "cascade (escalate) ({iters} reqs x {nb} imgs): p50 {esc_p50_ms:.2} ms  \
+         {esc_img_s:.0} img/s"
+    );
+    println!(
+        "\ngate speedup over full: {:.2}x  (escalate-all overhead: {:+.1}%)",
+        full_p50_ms / gate_p50_ms.max(1e-9),
+        (esc_p50_ms / full_p50_ms.max(1e-9) - 1.0) * 100.0
+    );
+
+    common::write_bench_json(&[
+        ("cascade_full_p50_ms", Json::Num(full_p50_ms)),
+        ("cascade_gate_p50_ms", Json::Num(gate_p50_ms)),
+        ("cascade_escalate_p50_ms", Json::Num(esc_p50_ms)),
+        ("cascade_full_img_s", Json::Num(full_img_s)),
+        ("cascade_gate_img_s", Json::Num(gate_img_s)),
+    ]);
+    std::hint::black_box(esc_img_s);
+}

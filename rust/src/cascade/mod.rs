@@ -1,0 +1,766 @@
+//! Adaptive ensemble cascades: confidence-gated escalation through
+//! cost-ordered member tiers.
+//!
+//! The paper serves the *full* ensemble on every request. A cascade
+//! instead routes each request through the cheapest members first
+//! ([`CascadeSpec::by_cost`] orders members by measured per-image cost)
+//! and escalates a **row** to the next tier only when the combine
+//! rule's per-member outputs disagree — a per-row confidence gate
+//! ([`ConfidencePolicy`]) on the tier's stacked distributions.
+//! Confident rows reply immediately with the members seen so far;
+//! low-confidence rows re-enter the next tier's batcher. With the
+//! threshold at `0.0` the gate is disabled (every row escalates to the
+//! last tier), which makes the cascade's output identical to
+//! full-ensemble serving — the correctness contract
+//! `tests/prop_cascade.rs` pins.
+//!
+//! Mechanically, each tier is a full [`InferenceSystem`] over the
+//! tier's sub-ensemble, sharing one executor and serving the columns
+//! of the deployment matrix that belong to its members. Tiers run the
+//! bit-preserving [`Stacked`] rule so every member's distribution
+//! survives to the cascade, which scatters them into a per-request
+//! `rows × members × classes` buffer and folds each replying row with
+//! the *real* combine rule in global member order — the same
+//! subset-fold semantics the engine's degradation mask uses
+//! ([`InferenceSystem::set_active_members`]): `n_models` is the count
+//! of contributing members, `weight_idx` the global column.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+use anyhow::{bail, ensure, Context};
+
+use crate::alloc::matrix::AllocationMatrix;
+use crate::cost::CostModel;
+use crate::device::DeviceSet;
+use crate::engine::combine::{CombineRule, Stacked};
+use crate::engine::system::{EngineOptions, InferenceSystem};
+use crate::exec::Executor;
+use crate::model::Ensemble;
+use crate::util::json::Json;
+
+/// How a row's confidence is scored from the per-member distributions
+/// seen so far (the f32 member outputs are folded in f64 so the gate
+/// itself never adds rounding noise to the served output — confidence
+/// is a routing decision, not part of the answer).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ConfidencePolicy {
+    /// Top-1 minus top-2 probability of the mean distribution.
+    Margin,
+    /// `1 − H(mean)/ln(C)`: normalized-entropy confidence.
+    Entropy,
+    /// Fraction of seen members whose argmax agrees with the plurality
+    /// class. Degenerate (always 1.0) on single-member tiers — use
+    /// tiers of ≥ 2 members with this policy.
+    VoteAgreement,
+}
+
+impl ConfidencePolicy {
+    pub fn name(&self) -> &'static str {
+        match self {
+            ConfidencePolicy::Margin => "margin",
+            ConfidencePolicy::Entropy => "entropy",
+            ConfidencePolicy::VoteAgreement => "vote-agreement",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<ConfidencePolicy> {
+        match s {
+            "margin" => Some(ConfidencePolicy::Margin),
+            "entropy" => Some(ConfidencePolicy::Entropy),
+            "vote-agreement" | "vote_agreement" => Some(ConfidencePolicy::VoteAgreement),
+            _ => None,
+        }
+    }
+}
+
+/// Per-row confidence over the member distributions seen so far.
+///
+/// **NaN poisons the gate**: any NaN in any member row yields `NaN`,
+/// and [`gate_replies`] fails `NaN >= threshold`, so a broken member
+/// always escalates instead of silently replying garbage (the last
+/// tier replies regardless — there is nowhere left to escalate — but
+/// then the full ensemble, not a cheap prefix, stands behind the
+/// answer).
+pub fn confidence(policy: ConfidencePolicy, members: &[&[f32]]) -> f64 {
+    if members.is_empty() {
+        return f64::NAN;
+    }
+    if members.iter().any(|row| row.iter().any(|v| v.is_nan())) {
+        return f64::NAN;
+    }
+    let c = members[0].len();
+    if c == 0 || members.iter().any(|row| row.len() != c) {
+        return f64::NAN;
+    }
+    match policy {
+        ConfidencePolicy::Margin => {
+            let mean = mean_row(members, c);
+            let (mut top1, mut top2) = (f64::MIN, f64::MIN);
+            for &v in &mean {
+                if v > top1 {
+                    top2 = top1;
+                    top1 = v;
+                } else if v > top2 {
+                    top2 = v;
+                }
+            }
+            if c == 1 {
+                1.0
+            } else {
+                (top1 - top2).clamp(0.0, 1.0)
+            }
+        }
+        ConfidencePolicy::Entropy => {
+            if c == 1 {
+                return 1.0;
+            }
+            let mean = mean_row(members, c);
+            let total: f64 = mean.iter().map(|v| v.max(0.0)).sum();
+            if total <= 0.0 {
+                return 0.0;
+            }
+            let mut h = 0.0;
+            for &v in &mean {
+                let p = v.max(0.0) / total;
+                if p > 0.0 {
+                    h -= p * p.ln();
+                }
+            }
+            (1.0 - h / (c as f64).ln()).clamp(0.0, 1.0)
+        }
+        ConfidencePolicy::VoteAgreement => {
+            let mut votes = vec![0usize; c];
+            for row in members {
+                let mut best = 0usize;
+                for (i, &v) in row.iter().enumerate() {
+                    if v > row[best] {
+                        best = i;
+                    }
+                }
+                votes[best] += 1;
+            }
+            let plurality = votes.iter().copied().max().unwrap_or(0);
+            plurality as f64 / members.len() as f64
+        }
+    }
+}
+
+fn mean_row(members: &[&[f32]], c: usize) -> Vec<f64> {
+    let mut mean = vec![0.0f64; c];
+    for row in members {
+        for (m, &v) in mean.iter_mut().zip(row.iter()) {
+            *m += v as f64;
+        }
+    }
+    let inv = 1.0 / members.len() as f64;
+    for m in &mut mean {
+        *m *= inv;
+    }
+    mean
+}
+
+/// The reply gate: `threshold == 0.0` is the documented sentinel that
+/// disables early replies entirely (every row escalates), and a NaN
+/// confidence never replies — both fall out of this one comparison.
+pub fn gate_replies(threshold: f64, conf: f64) -> bool {
+    threshold > 0.0 && conf >= threshold
+}
+
+/// Member tiering + gate parameters of a cascade deployment.
+#[derive(Debug, Clone)]
+pub struct CascadeSpec {
+    /// Global member indices per tier, each sorted ascending; tiers are
+    /// disjoint and their union covers the ensemble. Tier 0 serves
+    /// first.
+    pub tiers: Vec<Vec<usize>>,
+    pub policy: ConfidencePolicy,
+    /// Reply when confidence ≥ threshold; `0.0` disables early replies.
+    pub threshold: f64,
+}
+
+impl CascadeSpec {
+    /// Tier the ensemble by measured (or analytic) per-image cost:
+    /// members are sorted cheapest-first on the first device at
+    /// `batch`, then split into `n_tiers` contiguous groups whose sizes
+    /// roughly double — small cheap tiers answer the easy traffic, the
+    /// expensive tail only runs for rows that escalate.
+    pub fn by_cost(
+        ensemble: &Ensemble,
+        devices: &DeviceSet,
+        cost: &dyn CostModel,
+        batch: usize,
+        n_tiers: usize,
+        policy: ConfidencePolicy,
+        threshold: f64,
+    ) -> anyhow::Result<CascadeSpec> {
+        let m = ensemble.len();
+        ensure!(n_tiers >= 1, "a cascade needs at least one tier");
+        ensure!(
+            n_tiers <= m,
+            "cannot split {m} members into {n_tiers} non-empty tiers"
+        );
+        ensure!(!devices.is_empty(), "no devices to cost members on");
+        let dev = &devices[0];
+        let b = batch.max(1);
+        let mut order: Vec<usize> = (0..m).collect();
+        let per_image = |i: usize| cost.latency_ms(&ensemble.members[i], dev, b) / b as f64;
+        order.sort_by(|&x, &y| {
+            per_image(x)
+                .partial_cmp(&per_image(y))
+                .unwrap_or(std::cmp::Ordering::Equal)
+                .then(x.cmp(&y))
+        });
+
+        // doubling sizes: tier t wants base·2^t members, the last tier
+        // takes whatever remains
+        let base = (m / ((1usize << n_tiers) - 1)).max(1);
+        let mut tiers = Vec::with_capacity(n_tiers);
+        let mut taken = 0usize;
+        for t in 0..n_tiers {
+            let remaining = m - taken;
+            let want = if t + 1 == n_tiers {
+                remaining
+            } else {
+                // leave at least one member per remaining tier
+                (base << t).min(remaining - (n_tiers - t - 1))
+            };
+            let mut tier: Vec<usize> = order[taken..taken + want].to_vec();
+            tier.sort_unstable();
+            tiers.push(tier);
+            taken += want;
+        }
+        let spec = CascadeSpec { tiers, policy, threshold };
+        spec.validate(m)?;
+        Ok(spec)
+    }
+
+    /// Structural checks: non-empty disjoint sorted tiers covering
+    /// exactly the ensemble's members.
+    pub fn validate(&self, n_members: usize) -> anyhow::Result<()> {
+        ensure!(!self.tiers.is_empty(), "cascade has no tiers");
+        ensure!(
+            self.threshold.is_finite() && (0.0..=1.0).contains(&self.threshold),
+            "confidence threshold {} outside [0, 1]",
+            self.threshold
+        );
+        let mut seen = vec![false; n_members];
+        for (t, tier) in self.tiers.iter().enumerate() {
+            ensure!(!tier.is_empty(), "tier {t} is empty");
+            ensure!(
+                tier.windows(2).all(|w| w[0] < w[1]),
+                "tier {t} is not strictly ascending: {tier:?}"
+            );
+            for &m in tier {
+                ensure!(m < n_members, "tier {t} member {m} out of range");
+                ensure!(!seen[m], "member {m} appears in more than one tier");
+                seen[m] = true;
+            }
+        }
+        ensure!(
+            seen.iter().all(|&s| s),
+            "tiers do not cover every ensemble member"
+        );
+        Ok(())
+    }
+}
+
+/// Per-tier serving counters (monotonic, exported by `/v1/cascade` and
+/// the Prometheus exposition).
+#[derive(Debug, Default)]
+pub struct TierStats {
+    /// Rows that entered this tier.
+    pub rows_in: AtomicU64,
+    /// Rows that replied from this tier (confidence passed the gate, or
+    /// last tier).
+    pub replied: AtomicU64,
+    /// Rows escalated to the next tier.
+    pub escalated: AtomicU64,
+    /// Escalations forced by a NaN confidence (broken member output) —
+    /// these never silently reply.
+    pub nan_escalations: AtomicU64,
+}
+
+/// A cascade deployment: one engine per tier over a shared executor,
+/// plus the confidence gate routing rows between them.
+pub struct CascadeSystem {
+    ensemble: Ensemble,
+    spec: CascadeSpec,
+    combine: Arc<dyn CombineRule>,
+    tiers: Vec<Arc<InferenceSystem>>,
+    stats: Vec<TierStats>,
+    requests: AtomicU64,
+}
+
+impl CascadeSystem {
+    /// Build one [`InferenceSystem`] per tier from the columns of
+    /// `matrix` that belong to the tier's members. The tier engines
+    /// partition the full matrix, so the cascade's device footprint is
+    /// exactly the full deployment's; `opts.combine` is the rule the
+    /// cascade folds replies with (tier engines internally run
+    /// [`Stacked`] to keep every member's distribution).
+    pub fn build(
+        matrix: &AllocationMatrix,
+        ensemble: &Ensemble,
+        executor: Arc<dyn Executor>,
+        opts: EngineOptions,
+        spec: CascadeSpec,
+    ) -> anyhow::Result<CascadeSystem> {
+        spec.validate(ensemble.len())?;
+        ensure!(
+            matrix.n_models() == ensemble.len(),
+            "matrix has {} model columns, ensemble {}",
+            matrix.n_models(),
+            ensemble.len()
+        );
+        let combine = Arc::clone(&opts.combine);
+        // the cascade folds member *subsets*: same symmetry contract as
+        // the engine's degradation mask
+        if (1..=ensemble.len()).any(|k| combine.output_multiplier(k) != 1) {
+            bail!(
+                "combine rule '{}' is not width-stable; a cascade cannot fold \
+                 partial member sets with it",
+                combine.name()
+            );
+        }
+        if combine.name() == "weighted-average" {
+            bail!(
+                "combine rule 'weighted-average' normalizes by the full \
+                 ensemble's weight sum; cascade prefixes would fold wrong"
+            );
+        }
+
+        let mut tiers = Vec::with_capacity(spec.tiers.len());
+        for (t, members) in spec.tiers.iter().enumerate() {
+            let sub = Ensemble::custom(
+                &format!("{}#t{t}", ensemble.name),
+                members.iter().map(|&m| ensemble.members[m].clone()).collect(),
+            );
+            let mut tier_matrix =
+                AllocationMatrix::zeroed(matrix.n_devices(), members.len());
+            for (j, &m) in members.iter().enumerate() {
+                for d in 0..matrix.n_devices() {
+                    let b = matrix.get(d, m);
+                    if b > 0 {
+                        tier_matrix.set(d, j, b);
+                    }
+                }
+            }
+            let tier_opts = EngineOptions {
+                combine: Arc::new(Stacked),
+                ..opts.clone()
+            };
+            let sys = InferenceSystem::build(
+                &tier_matrix,
+                &sub,
+                Arc::clone(&executor),
+                tier_opts,
+            )
+            .with_context(|| format!("building cascade tier {t} ({})", sub.name))?;
+            tiers.push(Arc::new(sys));
+        }
+        let stats = spec.tiers.iter().map(|_| TierStats::default()).collect();
+        Ok(CascadeSystem {
+            ensemble: ensemble.clone(),
+            spec,
+            combine,
+            tiers,
+            stats,
+            requests: AtomicU64::new(0),
+        })
+    }
+
+    /// The cascade prediction: every row starts in tier 0; rows whose
+    /// confidence passes the gate reply with the members seen so far
+    /// (folded with the real combine rule in global member order), the
+    /// rest re-enter the next tier's batcher. The last tier always
+    /// replies. Output shape matches full-ensemble serving:
+    /// `nb_images × classes`.
+    pub fn predict(&self, x: Vec<f32>, nb_images: usize) -> anyhow::Result<Vec<f32>> {
+        let c = self.ensemble.classes();
+        let m_total = self.ensemble.len();
+        if nb_images == 0 {
+            return Ok(Vec::new());
+        }
+        if x.len() % nb_images != 0 {
+            bail!("input length {} not divisible by {nb_images} images", x.len());
+        }
+        self.requests.fetch_add(1, Ordering::Relaxed);
+        let elems = x.len() / nb_images;
+
+        // stacked member distributions seen so far, global layout:
+        // member m of row r at (r·M + m)·C
+        let mut mem = vec![0.0f32; nb_images * m_total * c];
+        let mut out = vec![0.0f32; nb_images * c];
+        let mut pending: Vec<usize> = (0..nb_images).collect();
+        let mut seen: Vec<usize> = Vec::with_capacity(m_total);
+
+        for (t, tier) in self.tiers.iter().enumerate() {
+            let members = &self.spec.tiers[t];
+            let stats = &self.stats[t];
+            stats.rows_in.fetch_add(pending.len() as u64, Ordering::Relaxed);
+
+            // gather pending rows, run the tier (its own batcher and
+            // pipeline), scatter the stacked answers into `mem`
+            let mut xt = Vec::with_capacity(pending.len() * elems);
+            for &r in &pending {
+                xt.extend_from_slice(&x[r * elems..(r + 1) * elems]);
+            }
+            let tm = members.len();
+            let yt = tier
+                .predict(xt, pending.len())
+                .with_context(|| format!("cascade tier {t}"))?;
+            ensure!(
+                yt.len() == pending.len() * tm * c,
+                "tier {t} returned {} values, expected {}",
+                yt.len(),
+                pending.len() * tm * c
+            );
+            for (i, &r) in pending.iter().enumerate() {
+                for (j, &m) in members.iter().enumerate() {
+                    let src = (i * tm + j) * c;
+                    let dst = (r * m_total + m) * c;
+                    mem[dst..dst + c].copy_from_slice(&yt[src..src + c]);
+                }
+            }
+            // tiers are disjoint: the seen set is a sorted merge
+            seen.extend_from_slice(members);
+            seen.sort_unstable();
+
+            let last = t + 1 == self.tiers.len();
+            let mut escalate = Vec::new();
+            for &r in &pending {
+                let reply = if last {
+                    true
+                } else {
+                    let blocks: Vec<&[f32]> = seen
+                        .iter()
+                        .map(|&m| {
+                            let lo = (r * m_total + m) * c;
+                            &mem[lo..lo + c]
+                        })
+                        .collect();
+                    let conf = confidence(self.spec.policy, &blocks);
+                    if conf.is_nan() {
+                        stats.nan_escalations.fetch_add(1, Ordering::Relaxed);
+                    }
+                    gate_replies(self.spec.threshold, conf)
+                };
+                if reply {
+                    stats.replied.fetch_add(1, Ordering::Relaxed);
+                    let y_row = &mut out[r * c..(r + 1) * c];
+                    for &m in &seen {
+                        let lo = (r * m_total + m) * c;
+                        self.combine.accumulate(y_row, &mem[lo..lo + c], m, seen.len(), c);
+                    }
+                    self.combine.finalize(y_row, seen.len(), c);
+                } else {
+                    stats.escalated.fetch_add(1, Ordering::Relaxed);
+                    escalate.push(r);
+                }
+            }
+            pending = escalate;
+            if pending.is_empty() {
+                break;
+            }
+        }
+        debug_assert!(pending.is_empty(), "the last tier replies unconditionally");
+        Ok(out)
+    }
+
+    pub fn ensemble(&self) -> &Ensemble {
+        &self.ensemble
+    }
+
+    pub fn spec(&self) -> &CascadeSpec {
+        &self.spec
+    }
+
+    /// The per-tier engines (tier 0 first) — each a full
+    /// [`InferenceSystem`] with its own metrics, traces and generation
+    /// chain.
+    pub fn tier_systems(&self) -> &[Arc<InferenceSystem>] {
+        &self.tiers
+    }
+
+    pub fn tier_stats(&self) -> &[TierStats] {
+        &self.stats
+    }
+
+    pub fn requests(&self) -> u64 {
+        self.requests.load(Ordering::Relaxed)
+    }
+
+    /// The `/v1/cascade` document: gate parameters plus per-tier
+    /// membership, counters and engine state.
+    pub fn status_json(&self) -> Json {
+        let tiers: Vec<Json> = self
+            .spec
+            .tiers
+            .iter()
+            .zip(self.tiers.iter().zip(&self.stats))
+            .enumerate()
+            .map(|(t, (members, (sys, st)))| {
+                Json::from_pairs(vec![
+                    ("tier", Json::Num(t as f64)),
+                    (
+                        "members",
+                        Json::Arr(
+                            members.iter().map(|&m| Json::Num(m as f64)).collect(),
+                        ),
+                    ),
+                    (
+                        "member_names",
+                        Json::Arr(
+                            members
+                                .iter()
+                                .map(|&m| {
+                                    Json::Str(self.ensemble.members[m].name.clone())
+                                })
+                                .collect(),
+                        ),
+                    ),
+                    ("rows_in", Json::Num(st.rows_in.load(Ordering::Relaxed) as f64)),
+                    ("replied", Json::Num(st.replied.load(Ordering::Relaxed) as f64)),
+                    (
+                        "escalated",
+                        Json::Num(st.escalated.load(Ordering::Relaxed) as f64),
+                    ),
+                    (
+                        "nan_escalations",
+                        Json::Num(st.nan_escalations.load(Ordering::Relaxed) as f64),
+                    ),
+                    ("generation", Json::Num(sys.generation() as f64)),
+                    ("workers", Json::Num(sys.worker_count() as f64)),
+                    ("in_flight", Json::Num(sys.in_flight() as f64)),
+                ])
+            })
+            .collect();
+        Json::from_pairs(vec![
+            ("ensemble", Json::Str(self.ensemble.name.clone())),
+            ("policy", Json::Str(self.spec.policy.name().to_string())),
+            ("threshold", Json::Num(self.spec.threshold)),
+            ("combine", Json::Str(self.combine.name().to_string())),
+            ("requests", Json::Num(self.requests() as f64)),
+            ("tiers", Json::Arr(tiers)),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cost::AnalyticCost;
+    use crate::engine::combine::{Average, MajorityVote, WeightedAverage};
+    use crate::exec::fake::FakeExecutor;
+    use crate::exec::sim::SimExecutor;
+    use crate::model::{ensemble, EnsembleId};
+
+    fn spread_matrix(e: &Ensemble, d: &DeviceSet, batch: u32) -> AllocationMatrix {
+        let gpus = d.gpu_count();
+        let mut a = AllocationMatrix::zeroed(d.len(), e.len());
+        for m in 0..e.len() {
+            a.set(m % gpus, m, batch);
+        }
+        a
+    }
+
+    fn input_for(e: &Ensemble, n: usize) -> Vec<f32> {
+        vec![0.1; n * e.members[0].input_elems_per_image()]
+    }
+
+    #[test]
+    fn by_cost_tiers_cover_and_grow() {
+        let e = ensemble(EnsembleId::Imn12);
+        let d = DeviceSet::hgx(4);
+        let spec = CascadeSpec::by_cost(
+            &e, &d, &AnalyticCost, 16, 3, ConfidencePolicy::Margin, 0.6,
+        )
+        .unwrap();
+        assert_eq!(spec.tiers.len(), 3);
+        spec.validate(e.len()).unwrap();
+        assert!(
+            spec.tiers[0].len() <= spec.tiers[2].len(),
+            "earlier tiers must not out-size the tail: {:?}",
+            spec.tiers
+        );
+        // the first tier holds the cheapest member
+        let cheapest = (0..e.len())
+            .min_by(|&a, &b| {
+                e.members[a]
+                    .gflops
+                    .partial_cmp(&e.members[b].gflops)
+                    .unwrap()
+            })
+            .unwrap();
+        assert!(spec.tiers[0].contains(&cheapest));
+        // degenerate splits rejected
+        assert!(CascadeSpec::by_cost(
+            &e, &d, &AnalyticCost, 16, 13, ConfidencePolicy::Margin, 0.6
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn validate_rejects_gaps_overlaps_and_bad_thresholds() {
+        let ok = CascadeSpec {
+            tiers: vec![vec![1], vec![0, 2]],
+            policy: ConfidencePolicy::Margin,
+            threshold: 0.5,
+        };
+        ok.validate(3).unwrap();
+        let overlap = CascadeSpec { tiers: vec![vec![0], vec![0, 1]], ..ok.clone() };
+        assert!(overlap.validate(2).is_err());
+        let gap = CascadeSpec { tiers: vec![vec![0]], ..ok.clone() };
+        assert!(gap.validate(2).is_err());
+        let bad_thr = CascadeSpec { threshold: 1.5, ..ok.clone() };
+        assert!(bad_thr.validate(3).is_err());
+        let nan_thr = CascadeSpec { threshold: f64::NAN, ..ok };
+        assert!(nan_thr.validate(3).is_err());
+    }
+
+    #[test]
+    fn confidence_policies_and_nan_poisoning() {
+        let sharp: &[f32] = &[0.9, 0.05, 0.05];
+        let flat: &[f32] = &[0.34, 0.33, 0.33];
+        let m = |rows: &[&[f32]], p| confidence(p, rows);
+        assert!(m(&[sharp], ConfidencePolicy::Margin) > m(&[flat], ConfidencePolicy::Margin));
+        assert!(
+            m(&[sharp], ConfidencePolicy::Entropy) > m(&[flat], ConfidencePolicy::Entropy)
+        );
+        // vote agreement: 2/3 agree on class 0
+        let a: &[f32] = &[0.8, 0.1, 0.1];
+        let b: &[f32] = &[0.7, 0.2, 0.1];
+        let c: &[f32] = &[0.1, 0.8, 0.1];
+        let agree = confidence(ConfidencePolicy::VoteAgreement, &[a, b, c]);
+        assert!((agree - 2.0 / 3.0).abs() < 1e-9);
+        // NaN anywhere poisons every policy
+        let poisoned: &[f32] = &[0.5, f32::NAN, 0.5];
+        for p in [
+            ConfidencePolicy::Margin,
+            ConfidencePolicy::Entropy,
+            ConfidencePolicy::VoteAgreement,
+        ] {
+            assert!(confidence(p, &[sharp, poisoned]).is_nan(), "{}", p.name());
+        }
+        // and the gate never lets NaN through, at any threshold
+        assert!(!gate_replies(0.0, f64::NAN));
+        assert!(!gate_replies(0.5, f64::NAN));
+        assert!(!gate_replies(0.0, 1.0), "threshold 0 disables early replies");
+        assert!(gate_replies(0.5, 0.5));
+    }
+
+    #[test]
+    fn threshold_zero_matches_full_ensemble_bitwise() {
+        let e = ensemble(EnsembleId::Imn4);
+        let d = DeviceSet::hgx(2);
+        let a = spread_matrix(&e, &d, 8);
+        let ex = SimExecutor::new(d.clone(), 50_000.0);
+        let full = InferenceSystem::build(
+            &a,
+            &e,
+            Arc::clone(&ex) as Arc<dyn Executor>,
+            EngineOptions::default(),
+        )
+        .unwrap();
+        let spec = CascadeSpec {
+            tiers: vec![vec![0, 1], vec![2, 3]],
+            policy: ConfidencePolicy::Margin,
+            threshold: 0.0, // always escalate
+        };
+        let casc =
+            CascadeSystem::build(&a, &e, ex, EngineOptions::default(), spec).unwrap();
+        let n = 37;
+        let y_full = full.predict(input_for(&e, n), n).unwrap();
+        let y_casc = casc.predict(input_for(&e, n), n).unwrap();
+        assert_eq!(y_full.len(), y_casc.len());
+        for (i, (a, b)) in y_full.iter().zip(&y_casc).enumerate() {
+            assert_eq!(a.to_bits(), b.to_bits(), "elem {i}");
+        }
+        // every row escalated through tier 0 and replied at tier 1
+        let st = casc.tier_stats();
+        assert_eq!(st[0].escalated.load(Ordering::Relaxed), n as u64);
+        assert_eq!(st[0].replied.load(Ordering::Relaxed), 0);
+        assert_eq!(st[1].replied.load(Ordering::Relaxed), n as u64);
+    }
+
+    #[test]
+    fn confident_rows_reply_early_from_the_first_tier() {
+        // FakeExecutor emits all-zero rows: margin/entropy read them as
+        // maximally flat... so use vote-agreement, where a single-member
+        // tier trivially agrees with itself — every row replies at tier 0
+        let e = ensemble(EnsembleId::Imn4);
+        let d = DeviceSet::hgx(2);
+        let a = spread_matrix(&e, &d, 8);
+        let ex = Arc::new(FakeExecutor::new(d));
+        let spec = CascadeSpec {
+            tiers: vec![vec![0], vec![1, 2, 3]],
+            policy: ConfidencePolicy::VoteAgreement,
+            threshold: 0.9,
+        };
+        let casc =
+            CascadeSystem::build(&a, &e, ex, EngineOptions::default(), spec).unwrap();
+        let n = 20;
+        let y = casc.predict(input_for(&e, n), n).unwrap();
+        assert_eq!(y.len(), n * e.classes());
+        let st = casc.tier_stats();
+        assert_eq!(st[0].replied.load(Ordering::Relaxed), n as u64);
+        assert_eq!(st[0].escalated.load(Ordering::Relaxed), 0);
+        assert_eq!(st[1].rows_in.load(Ordering::Relaxed), 0, "tier 1 never ran");
+        // tier 1's engine saw no traffic at all
+        let m1 = casc.tier_systems()[1].metrics();
+        assert_eq!(m1.requests.load(Ordering::Relaxed), 0);
+    }
+
+    #[test]
+    fn build_rejects_asymmetric_combine_rules() {
+        let e = ensemble(EnsembleId::Imn4);
+        let d = DeviceSet::hgx(2);
+        let a = spread_matrix(&e, &d, 8);
+        let spec = CascadeSpec {
+            tiers: vec![vec![0, 1], vec![2, 3]],
+            policy: ConfidencePolicy::Margin,
+            threshold: 0.5,
+        };
+        for combine in [
+            Arc::new(Stacked) as Arc<dyn CombineRule>,
+            Arc::new(WeightedAverage::new(vec![1.0, 2.0, 3.0, 4.0])),
+        ] {
+            let opts = EngineOptions { combine, ..EngineOptions::default() };
+            let ex = Arc::new(FakeExecutor::new(d.clone()));
+            assert!(CascadeSystem::build(&a, &e, ex, opts, spec.clone()).is_err());
+        }
+        // the symmetric reducing rules both build
+        for combine in [
+            Arc::new(Average) as Arc<dyn CombineRule>,
+            Arc::new(MajorityVote),
+        ] {
+            let opts = EngineOptions { combine, ..EngineOptions::default() };
+            let ex = Arc::new(FakeExecutor::new(d.clone()));
+            CascadeSystem::build(&a, &e, ex, opts, spec.clone()).unwrap();
+        }
+    }
+
+    #[test]
+    fn status_json_reports_tiers_and_counters() {
+        let e = ensemble(EnsembleId::Imn4);
+        let d = DeviceSet::hgx(2);
+        let a = spread_matrix(&e, &d, 8);
+        let ex = Arc::new(FakeExecutor::new(d));
+        let spec = CascadeSpec {
+            tiers: vec![vec![0, 1], vec![2, 3]],
+            policy: ConfidencePolicy::Entropy,
+            threshold: 0.0,
+        };
+        let casc =
+            CascadeSystem::build(&a, &e, ex, EngineOptions::default(), spec).unwrap();
+        casc.predict(input_for(&e, 5), 5).unwrap();
+        let doc = casc.status_json();
+        assert_eq!(doc.get("policy").and_then(Json::as_str), Some("entropy"));
+        assert_eq!(doc.get("requests").and_then(Json::as_usize), Some(1));
+        let tiers = doc.get("tiers").and_then(Json::as_arr).unwrap();
+        assert_eq!(tiers.len(), 2);
+        assert_eq!(tiers[0].get("escalated").and_then(Json::as_usize), Some(5));
+        assert_eq!(tiers[1].get("replied").and_then(Json::as_usize), Some(5));
+    }
+}

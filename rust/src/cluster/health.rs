@@ -1,0 +1,173 @@
+//! Background cluster health checking: a sweep loop that probes every
+//! node's [`Transport::health`](crate::cluster::Transport::health) and
+//! drives [`ClusterRouter::health_sweep`], so a dead node is detected
+//! and replanned around within one `sweep_interval` instead of on the
+//! first predict unlucky enough to be scattered to it.
+//!
+//! The loop mirrors the reconfig controllers' thread discipline: it
+//! holds only a `Weak` on the router (dropping the last external `Arc`
+//! ends the loop even without an explicit stop), sleeps in 25 ms steps
+//! so `stop()` returns promptly, and joins on drop.
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, Weak};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use crate::cluster::router::ClusterRouter;
+
+/// The background sweep loop. Cheap to share (`Arc`); stops and joins
+/// its thread on drop.
+pub struct HealthChecker {
+    stop: Arc<AtomicBool>,
+    thread: Mutex<Option<JoinHandle<()>>>,
+    sweeps: Arc<AtomicU64>,
+    deaths: Arc<AtomicU64>,
+}
+
+impl HealthChecker {
+    /// Start probing `router`'s nodes every `sweep_interval`.
+    pub fn start(router: &Arc<ClusterRouter>, sweep_interval: Duration) -> Arc<HealthChecker> {
+        let stop = Arc::new(AtomicBool::new(false));
+        let sweeps = Arc::new(AtomicU64::new(0));
+        let deaths = Arc::new(AtomicU64::new(0));
+        let weak: Weak<ClusterRouter> = Arc::downgrade(router);
+        let thread = {
+            let stop = Arc::clone(&stop);
+            let sweeps = Arc::clone(&sweeps);
+            let deaths = Arc::clone(&deaths);
+            std::thread::Builder::new()
+                .name("cluster-health".into())
+                .spawn(move || loop {
+                    let mut slept = Duration::ZERO;
+                    while slept < sweep_interval {
+                        if stop.load(Ordering::Relaxed) {
+                            return;
+                        }
+                        let step =
+                            (sweep_interval - slept).min(Duration::from_millis(25));
+                        std::thread::sleep(step);
+                        slept += step;
+                    }
+                    let Some(router) = weak.upgrade() else { return };
+                    let newly = router.health_sweep();
+                    sweeps.fetch_add(1, Ordering::Relaxed);
+                    deaths.fetch_add(newly.len() as u64, Ordering::Relaxed);
+                })
+                .expect("spawn cluster-health")
+        };
+        Arc::new(HealthChecker {
+            stop,
+            thread: Mutex::new(Some(thread)),
+            sweeps,
+            deaths,
+        })
+    }
+
+    /// Completed sweeps since start.
+    pub fn sweeps(&self) -> u64 {
+        self.sweeps.load(Ordering::Relaxed)
+    }
+
+    /// Nodes the sweeps marked dead (monotonic; recoveries not counted).
+    pub fn deaths(&self) -> u64 {
+        self.deaths.load(Ordering::Relaxed)
+    }
+
+    /// Stop the sweep thread (also done on drop).
+    pub fn stop(&self) {
+        self.stop.store(true, Ordering::Relaxed);
+        let handle = self.thread.lock().unwrap().take();
+        if let Some(t) = handle {
+            if t.thread().id() == std::thread::current().id() {
+                return;
+            }
+            let _ = t.join();
+        }
+    }
+}
+
+impl Drop for HealthChecker {
+    fn drop(&mut self) {
+        self.stop();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Instant;
+
+    use crate::cluster::inproc::{InProcNode, InProcTransport};
+    use crate::cluster::{ClusterSpec, Transport};
+    use crate::engine::combine::Average;
+    use crate::model::{ensemble, EnsembleId};
+    use crate::reconfig::planner::PlannerConfig;
+
+    fn sim_router(n_nodes: usize) -> (Arc<ClusterRouter>, Vec<Arc<InProcNode>>) {
+        let e = ensemble(EnsembleId::Imn4);
+        let cluster = ClusterSpec::sim(n_nodes, 2);
+        let nodes: Vec<Arc<InProcNode>> = cluster
+            .nodes
+            .iter()
+            .map(|n| InProcNode::new(&n.name, n.devices.clone(), 1024.0))
+            .collect();
+        let transports: Vec<Arc<dyn Transport>> = nodes
+            .iter()
+            .map(|n| InProcTransport::new(Arc::clone(n)) as Arc<dyn Transport>)
+            .collect();
+        let router = ClusterRouter::new(
+            e,
+            cluster,
+            transports,
+            Arc::new(Average),
+            PlannerConfig::default(),
+        )
+        .unwrap();
+        (router, nodes)
+    }
+
+    #[test]
+    fn sweep_marks_a_killed_node_dead_and_replans() {
+        let (router, nodes) = sim_router(3);
+        assert_eq!(router.health_sweep(), Vec::<usize>::new(), "all healthy");
+        assert_eq!(router.replans(), 0);
+
+        nodes[2].kill();
+        assert_eq!(router.health_sweep(), vec![2]);
+        assert_eq!(router.dead_nodes(), vec![2]);
+        assert_eq!(router.replans(), 1, "sweep replans off the dead node");
+        assert!(router.plan().nodes.iter().all(|np| np.node != 2));
+        // idempotent: an already-dead node is not re-marked
+        assert_eq!(router.health_sweep(), Vec::<usize>::new());
+        assert_eq!(router.replans(), 1);
+
+        // traffic never touches the dead node, so no retry is spent
+        let e = router.ensemble().clone();
+        let elems = e.members[0].input_elems_per_image();
+        let y = router.predict(vec![0.1; 2 * elems], 2).unwrap();
+        assert_eq!(y.len(), 2 * e.classes());
+
+        nodes[2].revive();
+        router.mark_node_recovered(2).unwrap();
+        assert_eq!(router.dead_nodes(), Vec::<usize>::new());
+    }
+
+    #[test]
+    fn background_loop_detects_the_death() {
+        let (router, nodes) = sim_router(2);
+        let checker = HealthChecker::start(&router, Duration::from_millis(10));
+        nodes[1].kill();
+        let deadline = Instant::now() + Duration::from_secs(10);
+        while router.dead_nodes().is_empty() && Instant::now() < deadline {
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        assert_eq!(router.dead_nodes(), vec![1], "loop never marked the node");
+        assert!(checker.sweeps() >= 1);
+        assert_eq!(checker.deaths(), 1);
+        checker.stop();
+        let sweeps_after_stop = checker.sweeps();
+        std::thread::sleep(Duration::from_millis(40));
+        assert_eq!(checker.sweeps(), sweeps_after_stop, "loop kept sweeping");
+    }
+}

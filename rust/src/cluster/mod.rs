@@ -34,6 +34,7 @@
 //!
 //! [`Stacked`]: crate::engine::combine::Stacked
 
+pub mod health;
 pub mod inproc;
 pub mod router;
 pub mod tcp;
@@ -45,6 +46,7 @@ use crate::alloc::matrix::AllocationMatrix;
 use crate::device::DeviceSet;
 use crate::model::Ensemble;
 
+pub use health::HealthChecker;
 pub use inproc::{InProcNode, InProcTransport};
 pub use router::ClusterRouter;
 pub use tcp::{NodeServer, TcpTransport};

@@ -206,6 +206,33 @@ impl ClusterRouter {
         self.replan()
     }
 
+    /// One health sweep: probe every live node's transport and mark the
+    /// unresponsive ones dead — replanning onto the survivors — without
+    /// waiting for a predict to trip over them. Returns the nodes newly
+    /// marked this sweep. A failed replan (e.g. the last node just
+    /// died) still leaves the node marked, so predicts fail fast and a
+    /// later recovery replans cleanly.
+    pub fn health_sweep(&self) -> Vec<usize> {
+        let already: Vec<usize> = self.dead.lock().unwrap().iter().copied().collect();
+        let mut newly = Vec::new();
+        for (n, t) in self.transports.iter().enumerate() {
+            if already.contains(&n) {
+                continue;
+            }
+            if let crate::cluster::NodeHealth::Dead(err) = t.health() {
+                log::warn!(
+                    "cluster: node {n} ('{}') failed its health probe: {err}",
+                    t.name()
+                );
+                if let Err(e) = self.mark_node_dead(n) {
+                    log::warn!("cluster: replan after losing node {n} failed: {e:#}");
+                }
+                newly.push(n);
+            }
+        }
+        newly
+    }
+
     /// Re-admit a recovered node and rebalance members back onto it.
     /// The node must be reachable: the replan deploys to it.
     pub fn mark_node_recovered(&self, node: usize) -> anyhow::Result<()> {

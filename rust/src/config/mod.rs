@@ -116,6 +116,26 @@ pub struct ServerConfig {
     /// in-process. Non-empty = cluster mode over
     /// [`TcpTransport`](crate::cluster::TcpTransport).
     pub peers: Vec<String>,
+    /// serve: cascade serving (`serve --cascade N`) — split the
+    /// ensemble into this many cost-ordered tiers with confidence-gated
+    /// escalation ([`crate::cascade`]). `0` (default) = full-ensemble
+    /// serving. Mutually exclusive with `ensembles`, the cluster
+    /// fields, `reconfig` and the prediction cache.
+    pub cascade_tiers: usize,
+    /// Cascade confidence policy: `margin`, `entropy` or
+    /// `vote-agreement`.
+    pub cascade_policy: crate::cascade::ConfidencePolicy,
+    /// Cascade reply threshold in `[0, 1]`: rows whose confidence
+    /// reaches it reply without running later tiers. `0.0` disables
+    /// early replies (bit-identical to full-ensemble serving).
+    pub cascade_threshold: f64,
+    /// serve --reconfig: degrade-don't-breach — when overload persists
+    /// and a replan cannot help, step the engine down to a cheaper
+    /// Pareto member subset (warm swap, no serving gap) instead of
+    /// breaching the SLO; step back up when headroom returns.
+    pub degrade: bool,
+    /// Deepest degradation rung the ladder may take.
+    pub degrade_max_level: usize,
 }
 
 impl Default for ServerConfig {
@@ -145,6 +165,11 @@ impl Default for ServerConfig {
             trace_out: None,
             cluster_nodes: 0,
             peers: Vec::new(),
+            cascade_tiers: 0,
+            cascade_policy: crate::cascade::ConfidencePolicy::Margin,
+            cascade_threshold: 0.65,
+            degrade: false,
+            degrade_max_level: 2,
         }
     }
 }
@@ -275,13 +300,66 @@ impl ServerConfig {
             anyhow::ensure!(!peers.is_empty(), "peers list empty");
             cfg.peers = peers;
         }
+        if let Some(v) = doc.get("cascade_tiers").and_then(Json::as_usize) {
+            cfg.cascade_tiers = v;
+        }
+        if let Some(v) = doc.get("cascade_policy").and_then(Json::as_str) {
+            cfg.cascade_policy = crate::cascade::ConfidencePolicy::parse(v)
+                .with_context(|| {
+                    format!("unknown cascade_policy '{v}' (margin|entropy|vote-agreement)")
+                })?;
+        }
+        if let Some(v) = doc.get("cascade_threshold").and_then(Json::as_f64) {
+            anyhow::ensure!(
+                v.is_finite() && (0.0..=1.0).contains(&v),
+                "cascade_threshold must be in [0, 1]"
+            );
+            cfg.cascade_threshold = v;
+        }
+        if let Some(v) = doc.get("degrade").and_then(Json::as_bool) {
+            cfg.degrade = v;
+        }
+        if let Some(v) = doc.get("degrade_max_level").and_then(Json::as_usize) {
+            anyhow::ensure!(v > 0, "degrade_max_level must be positive");
+            cfg.degrade_max_level = v;
+        }
+        cfg.validate_modes()?;
+        Ok(cfg)
+    }
+
+    /// The mode exclusion rules, re-checkable after CLI overrides.
+    pub fn validate_modes(&self) -> anyhow::Result<()> {
         // the router serves exactly one ensemble; a tenant registry and
         // a cluster plan cannot both own /v1/predict
         anyhow::ensure!(
-            cfg.ensembles.is_empty() || (cfg.cluster_nodes == 0 && cfg.peers.is_empty()),
+            self.ensembles.is_empty() || (self.cluster_nodes == 0 && self.peers.is_empty()),
             "cluster mode is single-ensemble: drop 'ensembles' or the cluster fields"
         );
-        Ok(cfg)
+        // a cascade fronts its own tier engines: every other owner of
+        // /v1/predict (tenant registry, cluster router) or of the
+        // single engine (reconfig controller, prediction cache) would
+        // be silently ignored — refuse instead
+        if self.cascade_tiers > 0 {
+            anyhow::ensure!(
+                self.ensembles.is_empty() && self.cluster_nodes == 0 && self.peers.is_empty(),
+                "cascade mode is single-ensemble single-process: drop 'ensembles' \
+                 or the cluster fields"
+            );
+            anyhow::ensure!(
+                !self.reconfig,
+                "cascade mode has no reconfiguration controller yet: drop 'reconfig'"
+            );
+            anyhow::ensure!(
+                self.cache_entries == 0,
+                "cascade mode has no prediction cache: drop 'cache_entries'"
+            );
+        }
+        // the ladder is a controller feature
+        anyhow::ensure!(
+            !self.degrade || self.reconfig,
+            "'degrade' needs the reconfiguration controller (set 'reconfig')"
+        );
+        Ok(())
     }
 
     pub fn from_file(path: impl AsRef<Path>) -> anyhow::Result<ServerConfig> {
@@ -344,6 +422,31 @@ mod tests {
         assert!(cfg.trace_out.is_none());
         assert_eq!(cfg.cache_entries, 0, "prediction cache defaults off");
         assert_eq!(cfg.cache_mem_mb, 256);
+        assert_eq!(cfg.cascade_tiers, 0, "cascade defaults off");
+        assert_eq!(cfg.cascade_policy, crate::cascade::ConfidencePolicy::Margin);
+        assert_eq!(cfg.cascade_threshold, 0.65);
+        assert!(!cfg.degrade, "degradation ladder defaults off");
+        assert_eq!(cfg.degrade_max_level, 2);
+    }
+
+    #[test]
+    fn cascade_and_degrade_fields() {
+        let doc = Json::parse(
+            r#"{"cascade_tiers":2,"cascade_policy":"entropy","cascade_threshold":0.8}"#,
+        )
+        .unwrap();
+        let cfg = ServerConfig::from_json(&doc).unwrap();
+        assert_eq!(cfg.cascade_tiers, 2);
+        assert_eq!(cfg.cascade_policy, crate::cascade::ConfidencePolicy::Entropy);
+        assert_eq!(cfg.cascade_threshold, 0.8);
+
+        let doc = Json::parse(
+            r#"{"reconfig":true,"degrade":true,"degrade_max_level":3}"#,
+        )
+        .unwrap();
+        let cfg = ServerConfig::from_json(&doc).unwrap();
+        assert!(cfg.degrade);
+        assert_eq!(cfg.degrade_max_level, 3);
     }
 
     #[test]
@@ -454,6 +557,15 @@ mod tests {
             r#"{"peers":[42]}"#,
             r#"{"ensembles":["IMN1","IMN4"],"cluster_nodes":2}"#,
             r#"{"ensembles":["IMN1","IMN4"],"peers":["a:1"]}"#,
+            r#"{"cascade_policy":"softmax"}"#,
+            r#"{"cascade_threshold":1.5}"#,
+            r#"{"cascade_threshold":-0.1}"#,
+            r#"{"cascade_tiers":2,"ensembles":["IMN1","IMN4"]}"#,
+            r#"{"cascade_tiers":2,"cluster_nodes":2}"#,
+            r#"{"cascade_tiers":2,"reconfig":true}"#,
+            r#"{"cascade_tiers":2,"cache_entries":64}"#,
+            r#"{"degrade":true}"#,
+            r#"{"degrade_max_level":0}"#,
         ] {
             let doc = Json::parse(bad).unwrap();
             assert!(ServerConfig::from_json(&doc).is_err(), "{bad}");

@@ -23,8 +23,15 @@ pub struct Registration {
     pub req: u64,
     pub nb_images: usize,
     pub classes: usize,
-    /// Expected `{s, m, P}` messages: segment_count × n_models.
+    /// Expected `{s, m, P}` messages: segment_count × n_models (the
+    /// *contributing* members — `members.len()` for a masked request).
     pub expected_msgs: usize,
+    /// Contributing member columns of a degraded (masked) request,
+    /// sorted ascending; `None` = the full ensemble. The fold then uses
+    /// `members.len()` as its `n_models` so reducing rules normalize
+    /// over the members that actually report, while `weight_idx` stays
+    /// the global matrix column either way.
+    pub members: Option<Arc<Vec<usize>>>,
     /// Trace id of the request ([`crate::obs::trace_id`]).
     pub trace_id: u64,
     /// Completion channel handed back to the caller of `predict`; the
@@ -40,6 +47,9 @@ struct Pending {
     y: ArenaVec,
     remaining: usize,
     classes: usize,
+    /// `n_models` handed to the combine rule: the contributing member
+    /// count (subset size for masked requests, ensemble size otherwise).
+    fold_n: usize,
     spans: ReqSpans,
     done: SyncSender<(Rows, ReqSpans)>,
 }
@@ -140,12 +150,15 @@ pub fn spawn(
                     let n = r.nb_images * r.classes;
                     let mut y = arena.take(n);
                     y.resize(n, 0.0);
+                    let fold_n =
+                        r.members.as_ref().map_or(n_models, |m| m.len());
                     pending.insert(
                         r.req,
                         Pending {
                             y,
                             remaining: r.expected_msgs,
                             classes: r.classes,
+                            fold_n,
                             spans: ReqSpans { trace_id: r.trace_id, ..ReqSpans::default() },
                             done: r.done,
                         },
@@ -187,7 +200,7 @@ pub fn spawn(
                         let span = &mut entry.y[lo * c..lo * c + p.n_rows * c];
                         // the paper's Y[start(s):end(s)] += P / M
                         let t_fold = metrics.trace.now_us();
-                        rule.accumulate(span, &p.preds, p.model, n_models, c);
+                        rule.accumulate(span, &p.preds, p.model, entry.fold_n, c);
                         entry.remaining -= 1;
                         // per request: seal/predict are the slowest
                         // member message, combine sums the fold time
@@ -198,7 +211,7 @@ pub fn spawn(
                         if entry.remaining == 0 {
                             let mut done = pending.remove(&p.req).unwrap();
                             let t_fin = metrics.trace.now_us();
-                            rule.finalize(&mut done.y, n_models, c);
+                            rule.finalize(&mut done.y, done.fold_n, c);
                             let now = metrics.trace.now_us();
                             done.spans.combine_us += now.saturating_sub(t_fin);
                             done.spans.done_us = now;
@@ -257,6 +270,7 @@ mod tests {
         let req = store.insert(vec![0.0; 3 * 4], 3, 4); // 3 images
         let (tx, rx) = sync_channel(1);
         reg.send(Registration { req, nb_images: 3, classes: 2, expected_msgs: 4,
+                                members: None,
                                 trace_id: crate::obs::trace_id(1, req), done: tx })
             .unwrap();
         // model 0: seg 0 (rows 0..2), seg 1 (row 2)
@@ -274,6 +288,35 @@ mod tests {
         assert_eq!(spans.seal_us, 7, "seal = slowest member message");
         assert_eq!(spans.predict_us, 11);
         assert!(store.get(req).is_none(), "input freed on completion");
+        acc.close();
+        h.join().unwrap();
+    }
+
+    #[test]
+    fn masked_registration_folds_over_the_subset_only() {
+        // spawn-time n_models = 3, but the request is masked to members
+        // {0, 2}: the average must normalize by 2, not 3
+        let (reg, acc, store, _st, h) = setup(3, 128);
+        let req = store.insert(vec![0.0; 4], 1, 4);
+        let (tx, rx) = sync_channel(1);
+        reg.send(Registration {
+            req,
+            nb_images: 1,
+            classes: 2,
+            expected_msgs: 2,
+            members: Some(Arc::new(vec![0, 2])),
+            trace_id: 0,
+            done: tx,
+        })
+        .unwrap();
+        let p = |model, preds: Vec<f32>| {
+            AccMsg::Pred(PredMsg { req, seg: 0, model, worker: 0, preds: preds.into(),
+                                   n_rows: 1, seal_us: 0, predict_us: 0 })
+        };
+        acc.send(p(0, vec![1.0, 0.0])).unwrap();
+        acc.send(p(2, vec![0.0, 1.0])).unwrap();
+        let (y, _) = rx.recv().unwrap();
+        assert_eq!(y.as_slice(), &[0.5, 0.5]);
         acc.close();
         h.join().unwrap();
     }
@@ -298,7 +341,7 @@ mod tests {
         let req = store.insert(vec![0.0; 4], 1, 4);
         let (tx, rx) = sync_channel(1);
         reg.send(Registration { req, nb_images: 1, classes: 2, expected_msgs: 1,
-                                trace_id: 0, done: tx })
+                                members: None, trace_id: 0, done: tx })
             .unwrap();
         // fold in the registration, then kill the worker pool
         acc.send(AccMsg::WorkerReady { worker: 0 }).unwrap();
@@ -317,7 +360,7 @@ mod tests {
         let req = store.insert(vec![0.0; 4], 1, 4);
         let (tx, rx) = sync_channel(1);
         reg.send(Registration { req, nb_images: 1, classes: 2, expected_msgs: 1,
-                                trace_id: 0, done: tx })
+                                members: None, trace_id: 0, done: tx })
             .unwrap();
         // deliver nothing; shut down. One dummy message makes the
         // accumulator fold in the registration first.

@@ -36,6 +36,9 @@ use crate::model::Ensemble;
 struct BroadcastJob {
     req: u64,
     nb_images: usize,
+    /// Contributing member columns of a masked (degraded) request,
+    /// sorted ascending; `None` broadcasts to every model queue.
+    members: Option<Arc<Vec<usize>>>,
 }
 
 /// A fully wired worker pool serving one allocation matrix.
@@ -170,7 +173,17 @@ impl Generation {
                         // one stamp per request: the seal span of every
                         // segment starts at its broadcast
                         let t_bcast_us = metrics.trace.now_us();
-                        for q in &inputs {
+                        let mut sent_to = 0usize;
+                        for (m, q) in inputs.iter().enumerate() {
+                            // masked request: only the subset's queues
+                            // see segments — the other members' workers
+                            // stay loaded (warm) but idle
+                            if let Some(ms) = &job.members {
+                                if ms.binary_search(&m).is_err() {
+                                    continue;
+                                }
+                            }
+                            sent_to += 1;
                             // one lock + wakeup per model queue (§Perf)
                             let batch = (0..k).map(|s| WorkerMsg::Segment {
                                 req: job.req,
@@ -183,7 +196,7 @@ impl Generation {
                         }
                         metrics
                             .segments_broadcast
-                            .fetch_add((k * inputs.len()) as u64, Ordering::Relaxed);
+                            .fetch_add((k * sent_to) as u64, Ordering::Relaxed);
                     }
                 })
                 .expect("spawn broadcaster")
@@ -283,7 +296,40 @@ impl Generation {
         x: Rows,
         nb_images: usize,
     ) -> anyhow::Result<(Rows, crate::obs::ReqSpans)> {
+        self.predict_members(x, nb_images, None)
+    }
+
+    /// [`Self::predict`] restricted to a member subset: only the masked
+    /// members' queues receive segments, the accumulator expects (and
+    /// the combine rule normalizes over) exactly that many
+    /// contributions, and the rest of the pool idles warm. `members`
+    /// must be sorted ascending, deduplicated, non-empty and in range —
+    /// the serving-layer gate ([`super::system::InferenceSystem::
+    /// set_active_members`]) validates once so the per-request check
+    /// here stays cheap. Masking requires a width-stable reducing rule
+    /// (also enforced by that gate).
+    pub fn predict_members(
+        &self,
+        x: Rows,
+        nb_images: usize,
+        members: Option<Arc<Vec<usize>>>,
+    ) -> anyhow::Result<(Rows, crate::obs::ReqSpans)> {
         let classes = self.ensemble.classes() * self.out_width_mult;
+        let n_contributing = match &members {
+            None => self.ensemble.len(),
+            Some(ms) => {
+                if ms.is_empty()
+                    || !ms.windows(2).all(|w| w[0] < w[1])
+                    || *ms.last().unwrap() >= self.ensemble.len()
+                {
+                    bail!(
+                        "invalid member mask {ms:?} for an ensemble of {}",
+                        self.ensemble.len()
+                    );
+                }
+                ms.len()
+            }
+        };
         if nb_images == 0 {
             return Ok((Rows::from_vec(Vec::new()), crate::obs::ReqSpans::default()));
         }
@@ -307,7 +353,8 @@ impl Generation {
             req,
             nb_images,
             classes,
-            expected_msgs: k * self.ensemble.len(),
+            expected_msgs: k * n_contributing,
+            members: members.clone(),
             trace_id: crate::obs::trace_id(self.id, req),
             done: tx,
         };
@@ -320,7 +367,7 @@ impl Generation {
         // broadcast queue is closed (pool death), the WorkerError drain
         // or teardown removes it and closes `done`
         self.broadcast
-            .send(BroadcastJob { req, nb_images })
+            .send(BroadcastJob { req, nb_images, members })
             .ok()
             .context("system shutting down (broadcast queue closed)")?;
 

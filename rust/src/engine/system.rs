@@ -265,6 +265,12 @@ pub struct InferenceSystem {
     executor: Arc<dyn Executor>,
     metrics: Arc<EngineMetrics>,
     active: RwLock<Arc<Generation>>,
+    /// Serving mask of the degradation ladder: when set, `predict`
+    /// broadcasts only to these member columns (sorted ascending) and
+    /// the combine rule normalizes over them — the other members'
+    /// workers stay loaded and warm, so stepping back up is a pointer
+    /// store, not a swap. `None` = full ensemble (steady state).
+    active_members: RwLock<Option<Arc<Vec<usize>>>>,
     /// Drain-timed-out generations; see [`Lingering`]. Swept on each
     /// `reconfigure`/`resident_matrices`/`sweep_lingering` call and by
     /// the engine's periodic sweeper thread.
@@ -302,6 +308,7 @@ impl InferenceSystem {
             Arc::clone(&metrics),
         )?;
         metrics.generation.store(1, Ordering::Relaxed);
+        metrics.active_members.store(ensemble.len() as u64, Ordering::Relaxed);
         let lingering = Arc::new(Lingering::new(Arc::clone(&metrics)));
         let sweeper_stop = Arc::new(AtomicBool::new(false));
         // Periodic reclaim of drain-timed-out generations: a deployment
@@ -340,6 +347,7 @@ impl InferenceSystem {
             executor,
             metrics,
             active: RwLock::new(Arc::new(generation)),
+            active_members: RwLock::new(None),
             lingering,
             gate: IntakeGate::new(),
             next_generation: AtomicU64::new(2),
@@ -414,7 +422,11 @@ impl InferenceSystem {
         // lands in the request's gate_wait span.
         let generation = self.admit()?;
         let gate_us = self.metrics.trace.now_us().saturating_sub(start_us);
-        let (y, spans) = generation.predict(x, nb_images)?;
+        let members = self.active_members.read().unwrap().clone();
+        if members.is_some() && nb_images > 0 {
+            self.metrics.degraded_requests.fetch_add(1, Ordering::Relaxed);
+        }
+        let (y, spans) = generation.predict_members(x, nb_images, members)?;
         if nb_images > 0 {
             self.metrics.request_latency.record(t0.elapsed());
             let end_us = self.metrics.trace.now_us();
@@ -760,6 +772,70 @@ impl InferenceSystem {
         self.gate.is_closed()
     }
 
+    /// Degrade (or restore) serving to a member subset — the
+    /// controllers' "warm subset swap". With `Some(members)` every
+    /// subsequent `predict` broadcasts only to those columns of the
+    /// live matrix and the combine rule normalizes over them; the other
+    /// members' workers stay loaded but idle, so this takes effect
+    /// immediately, costs no build and no gap, and `None` restores full
+    /// serving just as instantly. In-flight requests keep the mask they
+    /// entered with, so nothing is dropped or double-answered.
+    ///
+    /// The mask must be a non-empty, strictly ascending, in-range
+    /// subset, and the combine rule must be width-stable and symmetric
+    /// in its members: rules that key per-member state off the ensemble
+    /// size (`stacked`'s output width, `weighted-average`'s Σw
+    /// normalization) are rejected — a masked fold would silently
+    /// change their semantics rather than degrade gracefully.
+    pub fn set_active_members(
+        &self,
+        members: Option<Vec<usize>>,
+    ) -> anyhow::Result<()> {
+        let n = self.ensemble.len();
+        let mask = match members {
+            None => None,
+            Some(ms) => {
+                if ms.is_empty() || !ms.windows(2).all(|w| w[0] < w[1]) {
+                    bail!("member mask must be non-empty and strictly ascending: {ms:?}");
+                }
+                if *ms.last().unwrap() >= n {
+                    bail!("member mask {ms:?} out of range for an ensemble of {n}");
+                }
+                let rule = &self.opts.combine;
+                if (1..=n).any(|k| rule.output_multiplier(k) != 1) {
+                    bail!(
+                        "combine rule '{}' is not width-stable; degraded serving \
+                         would change the output shape",
+                        rule.name()
+                    );
+                }
+                if rule.name() == "weighted-average" {
+                    bail!(
+                        "combine rule 'weighted-average' normalizes by the full \
+                         ensemble's weight sum; a member subset would fold wrong"
+                    );
+                }
+                if ms.len() == n {
+                    None // the full set: same as no mask
+                } else {
+                    Some(Arc::new(ms))
+                }
+            }
+        };
+        let active = mask.as_ref().map_or(n, |m| m.len());
+        *self.active_members.write().unwrap() = mask;
+        self.metrics.active_members.store(active as u64, Ordering::Relaxed);
+        self.metrics
+            .trace
+            .instant(crate::obs::InstantKind::Degrade, active as u64);
+        Ok(())
+    }
+
+    /// The serving member subset, if degraded (`None` = full ensemble).
+    pub fn active_members(&self) -> Option<Vec<usize>> {
+        self.active_members.read().unwrap().as_ref().map(|m| m.as_ref().clone())
+    }
+
     pub fn worker_count(&self) -> usize {
         self.active.read().unwrap().worker_count()
     }
@@ -1006,6 +1082,95 @@ mod tests {
         let a = AllocationMatrix::zeroed(d.len(), e.len()); // nothing placed
         let ex = Arc::new(FakeExecutor::new(d));
         assert!(InferenceSystem::build(&a, &e, ex, EngineOptions::default()).is_err());
+    }
+
+    // --- degraded (masked) serving ---
+
+    #[test]
+    fn member_mask_broadcasts_to_the_subset_only_and_restores() {
+        let e = ensemble(EnsembleId::Imn4);
+        let d = DeviceSet::hgx(2);
+        let a = small_matrix(&e, &d, 8);
+        let ex = Arc::new(FakeExecutor::new(d));
+        let sys = InferenceSystem::build(&a, &e, ex, EngineOptions::default()).unwrap();
+
+        // full ensemble: 300 images = 3 segments × 4 models
+        sys.predict(input_for(&e, 300), 300).unwrap();
+        let m = sys.metrics();
+        assert_eq!(m.segments_broadcast.load(Ordering::Relaxed), 12);
+        assert_eq!(m.active_members.load(Ordering::Relaxed), 4);
+
+        // degrade to {0, 2}: the same request costs 3 × 2 segments
+        sys.set_active_members(Some(vec![0, 2])).unwrap();
+        assert_eq!(sys.active_members(), Some(vec![0, 2]));
+        let y = sys.predict(input_for(&e, 300), 300).unwrap();
+        assert_eq!(y.len(), 300 * e.classes(), "output width unchanged");
+        assert_eq!(m.segments_broadcast.load(Ordering::Relaxed), 18);
+        assert_eq!(m.degraded_requests.load(Ordering::Relaxed), 1);
+        assert_eq!(m.active_members.load(Ordering::Relaxed), 2);
+
+        // restore: instant, no swap — the generation never changed
+        sys.set_active_members(None).unwrap();
+        assert_eq!(sys.active_members(), None);
+        sys.predict(input_for(&e, 300), 300).unwrap();
+        assert_eq!(m.segments_broadcast.load(Ordering::Relaxed), 30);
+        assert_eq!(m.degraded_requests.load(Ordering::Relaxed), 1);
+        assert_eq!(sys.generation(), 1, "masking is not a reconfiguration");
+    }
+
+    #[test]
+    fn member_mask_survives_a_live_swap() {
+        let e = ensemble(EnsembleId::Imn4);
+        let d = DeviceSet::hgx(2);
+        let a = small_matrix(&e, &d, 8);
+        let ex = Arc::new(FakeExecutor::new(d));
+        let sys = InferenceSystem::build(&a, &e, ex, EngineOptions::default()).unwrap();
+        sys.set_active_members(Some(vec![1, 3])).unwrap();
+        let mut b = a.clone();
+        b.set(1, 0, 16);
+        sys.reconfigure(&b).unwrap();
+        // 128 images = 1 segment × the 2 masked members
+        sys.predict(input_for(&e, 128), 128).unwrap();
+        assert_eq!(sys.metrics().segments_broadcast.load(Ordering::Relaxed), 2);
+        assert_eq!(sys.active_members(), Some(vec![1, 3]));
+    }
+
+    #[test]
+    fn member_mask_rejects_garbage_and_asymmetric_rules() {
+        let e = ensemble(EnsembleId::Imn4);
+        let d = DeviceSet::hgx(2);
+        let a = small_matrix(&e, &d, 8);
+        let ex = Arc::new(FakeExecutor::new(d.clone()));
+        let sys =
+            InferenceSystem::build(&a, &e, Arc::clone(&ex) as Arc<dyn Executor>,
+                                   EngineOptions::default())
+                .unwrap();
+        assert!(sys.set_active_members(Some(vec![])).is_err(), "empty");
+        assert!(sys.set_active_members(Some(vec![1, 1])).is_err(), "duplicate");
+        assert!(sys.set_active_members(Some(vec![2, 0])).is_err(), "unsorted");
+        assert!(sys.set_active_members(Some(vec![0, 9])).is_err(), "out of range");
+        // the full set is accepted and normalizes to "no mask"
+        sys.set_active_members(Some(vec![0, 1, 2, 3])).unwrap();
+        assert_eq!(sys.active_members(), None);
+
+        // width-changing (stacked) and weight-normalized rules refuse
+        for combine in [
+            Arc::new(crate::engine::combine::Stacked) as Arc<dyn CombineRule>,
+            Arc::new(crate::engine::combine::WeightedAverage::new(vec![
+                1.0, 2.0, 3.0, 4.0,
+            ])),
+        ] {
+            let opts = EngineOptions { combine, ..EngineOptions::default() };
+            let sys = InferenceSystem::build(
+                &a,
+                &e,
+                Arc::new(FakeExecutor::new(d.clone())),
+                opts,
+            )
+            .unwrap();
+            assert!(sys.set_active_members(Some(vec![0, 2])).is_err());
+            assert!(sys.set_active_members(None).is_ok(), "clearing always works");
+        }
     }
 
     // --- live reconfiguration ---

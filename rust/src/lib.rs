@@ -95,6 +95,22 @@
 //! trace-event exporter (`GET /v1/trace/export`, `serve --trace-out`)
 //! whose output loads directly in `chrome://tracing` / Perfetto. See
 //! docs/OBSERVABILITY.md.
+//!
+//! ## Adaptive cascades
+//!
+//! A [`cascade::CascadeSystem`] serves the same ensemble as a sequence
+//! of cost-ordered tiers: each row is answered by the cheapest tier
+//! whose per-row confidence ([`cascade::ConfidencePolicy`] — margin,
+//! entropy or vote agreement) clears the reply threshold, and only the
+//! hard rows escalate to the expensive members (`serve --cascade N`,
+//! `GET /v1/cascade`). Threshold 0 is the always-escalate sentinel and
+//! reproduces full-ensemble serving. The same accuracy/cost dial runs
+//! in reverse under overload: with `--reconfig --degrade` the
+//! controllers step a breaching deployment down a precomputed Pareto
+//! ladder of member subsets ([`reconfig::planner::plan_subsets`]) via
+//! a warm mask ([`engine::InferenceSystem::set_active_members`]) — no
+//! swap, no serving gap — and restore rung by rung once the window
+//! shows headroom. See DESIGN.md §Cascades.
 
 pub mod util;
 pub mod config;
@@ -104,6 +120,7 @@ pub mod cost;
 pub mod alloc;
 pub mod exec;
 pub mod engine;
+pub mod cascade;
 pub mod cluster;
 pub mod benchkit;
 pub mod optimizer;

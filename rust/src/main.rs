@@ -17,7 +17,11 @@
 //!
 //! `serve --cluster N` shards the ensemble across N simulated in-process
 //! nodes behind the scatter/gather router; `serve --peers a:1,b:1` routes
-//! over `node` processes instead.
+//! over `node` processes instead. `serve --cascade N` tiers the ensemble
+//! by per-image cost and escalates only low-confidence rows to the
+//! expensive tiers; `serve --reconfig --degrade` arms the controllers'
+//! degradation ladder (step down to a Pareto member subset under
+//! overload instead of breaching the SLO).
 
 use std::sync::Arc;
 
@@ -34,8 +38,8 @@ use ensemble_serve::exec::Executor;
 use ensemble_serve::model::Manifest;
 use ensemble_serve::optimizer::{optimize, OptimizerConfig};
 use ensemble_serve::reconfig::{
-    plan_joint, ForecastConfig, MultiTenantController, MultiTenantOptions, PlannerConfig,
-    PolicyConfig, ReconfigController, ReconfigOptions, Tenant, TenantSpec,
+    plan_joint, DegradeConfig, ForecastConfig, MultiTenantController, MultiTenantOptions,
+    PlannerConfig, PolicyConfig, ReconfigController, ReconfigOptions, Tenant, TenantSpec,
 };
 use ensemble_serve::server::cache::CacheConfig;
 use ensemble_serve::server::{ApiServer, SystemRegistry};
@@ -73,11 +77,22 @@ as Chrome trace-event JSON to FILE (implies --trace-capture)")
 in-process nodes of --gpus GPUs each behind the cluster router (0 = off)")
         .opt("peers", None, "serve: comma-separated node addresses (host:port, \
 one per `node` process) to route over instead of simulating nodes in-process")
+        .opt("cascade", None, "serve: cascade serving — split the ensemble into N \
+cost-ordered tiers with confidence-gated escalation (0 = off, the default)")
+        .opt("cascade-policy", None, "serve: cascade confidence policy \
+(margin|entropy|vote-agreement; default margin)")
+        .opt("cascade-threshold", None, "serve: cascade reply threshold in [0,1] \
+(default 0.65; 0 = always escalate, bit-identical to full-ensemble serving)")
+        .opt("degrade-max-level", None, "serve: deepest degradation rung the \
+controller's degrade ladder may take (default 2)")
         .opt("node-name", None, "node: this node's name (default node0)")
         .opt("out", None, "profile: output path (default profiles.json)")
         .opt("batches", None, "profile: comma-separated batch sizes (default 8,16,32,64,128)")
         .opt("reps", None, "profile: measured predicts per cell (default 3)")
         .flag("reconfig", "serve: enable the live-reconfiguration controller")
+        .flag("degrade", "serve: degrade-don't-breach — under persistent overload \
+the controller steps down to a cheaper Pareto member subset (warm swap, no gap) \
+instead of breaching the SLO; needs --reconfig")
         .flag("trace-capture", "serve: start with the per-event trace capture \
 ring enabled (POST /v1/trace/capture toggles it at runtime)")
         .flag("no-forecast", "serve: disable predictive (trend-based) scaling — \
@@ -216,11 +231,31 @@ fn config_from(args: &ensemble_serve::util::cli::Args) -> anyhow::Result<ServerC
         anyhow::ensure!(!peers.is_empty(), "--peers needs at least one address");
         cfg.peers = peers;
     }
-    // same rule the config file enforces, re-checked after CLI overrides
-    anyhow::ensure!(
-        cfg.ensembles.is_empty() || (cfg.cluster_nodes == 0 && cfg.peers.is_empty()),
-        "cluster mode is single-ensemble: drop --ensembles or --cluster/--peers"
-    );
+    if let Some(v) = args.get_usize("cascade")? {
+        cfg.cascade_tiers = v;
+    }
+    if let Some(v) = args.get("cascade-policy") {
+        cfg.cascade_policy = ensemble_serve::cascade::ConfidencePolicy::parse(v)
+            .ok_or_else(|| {
+                anyhow::anyhow!("unknown cascade policy '{v}' (margin|entropy|vote-agreement)")
+            })?;
+    }
+    if let Some(v) = args.get_f64("cascade-threshold")? {
+        anyhow::ensure!(
+            v.is_finite() && (0.0..=1.0).contains(&v),
+            "cascade-threshold must be in [0, 1]"
+        );
+        cfg.cascade_threshold = v;
+    }
+    if args.has_flag("degrade") {
+        cfg.degrade = true;
+    }
+    if let Some(v) = args.get_usize("degrade-max-level")? {
+        anyhow::ensure!(v > 0, "degrade-max-level must be positive");
+        cfg.degrade_max_level = v;
+    }
+    // same rules the config file enforces, re-checked after CLI overrides
+    cfg.validate_modes()?;
     Ok(cfg)
 }
 
@@ -323,6 +358,11 @@ fn run(args: &ensemble_serve::util::cli::Args) -> anyhow::Result<()> {
     anyhow::ensure!(
         (cfg.cluster_nodes == 0 && cfg.peers.is_empty()) || args.positional[0] == "serve",
         "--cluster / --peers only apply to `serve` (got `{}`)",
+        args.positional[0]
+    );
+    anyhow::ensure!(
+        cfg.cascade_tiers == 0 || args.positional[0] == "serve",
+        "--cascade only applies to `serve` (got `{}`)",
         args.positional[0]
     );
     let ensemble = cfg.ensemble_def();
@@ -435,6 +475,9 @@ fn run(args: &ensemble_serve::util::cli::Args) -> anyhow::Result<()> {
         "serve" if cfg.cluster_spec().is_some() => {
             serve_cluster(&cfg)?;
         }
+        "serve" if cfg.cascade_tiers > 0 => {
+            serve_cascade(&cfg)?;
+        }
         "serve" if cfg.ensembles.len() >= 2 => {
             serve_multi_tenant(&cfg)?;
         }
@@ -478,6 +521,11 @@ fn run(args: &ensemble_serve::util::cli::Args) -> anyhow::Result<()> {
                     },
                     forecast: forecast_config_from(&cfg),
                     calibration,
+                    degrade: DegradeConfig {
+                        enabled: cfg.degrade,
+                        max_level: cfg.degrade_max_level,
+                        ..DegradeConfig::default()
+                    },
                     ..ReconfigOptions::default()
                 };
                 let controller = ReconfigController::start(Arc::clone(&system), opts);
@@ -613,6 +661,63 @@ fn serve_cluster(cfg: &ServerConfig) -> anyhow::Result<()> {
     }
 }
 
+/// `serve --cascade N`: tier the ensemble by measured per-image cost
+/// and serve with confidence-gated escalation — cheap tiers answer the
+/// confident rows, expensive tiers only run for rows that escalate.
+/// `--cascade-threshold 0` disables early replies, making the output
+/// bit-identical to full-ensemble serving.
+fn serve_cascade(cfg: &ServerConfig) -> anyhow::Result<()> {
+    use ensemble_serve::cascade::{CascadeSpec, CascadeSystem};
+    let ensemble = cfg.ensemble_def();
+    let devices = cfg.devices();
+    let (cost, _profiles) = cost_model_from(cfg)?;
+    let spec = CascadeSpec::by_cost(
+        &ensemble,
+        &devices,
+        &*cost,
+        cfg.default_batch as usize,
+        cfg.cascade_tiers,
+        cfg.cascade_policy,
+        cfg.cascade_threshold,
+    )?;
+    let a = worst_fit_decreasing_with(&ensemble, &devices, cfg.default_batch, &*cost)?;
+    log::info!(
+        "deploying {} as a {}-tier cascade ({} policy, threshold {}) with {} workers",
+        ensemble.name,
+        spec.tiers.len(),
+        spec.policy.name(),
+        spec.threshold,
+        a.worker_count()
+    );
+    let cascade = Arc::new(CascadeSystem::build(
+        &a,
+        &ensemble,
+        make_executor(cfg)?,
+        cfg.engine_options(),
+        spec,
+    )?);
+    if cfg.trace_capture {
+        for sys in cascade.tier_systems() {
+            sys.metrics().trace.set_capture(true);
+        }
+    }
+    if cfg.trace_out.is_some() {
+        log::warn!("--trace-out is single-engine only; use GET /v1/trace/export per tier");
+    }
+    let api = ApiServer::start_cascade(Arc::clone(&cascade), &cfg.listen, cfg.http_threads)?;
+    println!(
+        "serving {} as a {}-tier cascade on http://{}",
+        cascade.ensemble().name,
+        cascade.tier_systems().len(),
+        api.addr()
+    );
+    println!("  POST /v1/predict   GET /v1/health  /v1/cascade  /v1/metrics  /v1/ensembles");
+    println!("  GET /v1/stats (x-ensemble: <name>#t<i>)  /v1/stages  /v1/trace/slow");
+    loop {
+        std::thread::sleep(std::time::Duration::from_secs(3600));
+    }
+}
+
 /// Background writer for `serve --trace-out FILE`: every few seconds,
 /// dump the captured trace window as Chrome trace-event JSON. The
 /// write goes to a temp file first and renames into place, so a reader
@@ -703,6 +808,11 @@ fn serve_multi_tenant(cfg: &ServerConfig) -> anyhow::Result<()> {
             },
             forecast: forecast_config_from(cfg),
             calibration,
+            degrade: DegradeConfig {
+                enabled: cfg.degrade,
+                max_level: cfg.degrade_max_level,
+                ..DegradeConfig::default()
+            },
             ..MultiTenantOptions::default()
         };
         let ctrl = MultiTenantController::start(tenants, opts)?;

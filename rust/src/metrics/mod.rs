@@ -64,6 +64,15 @@ pub struct EngineMetrics {
     /// Drain-timed-out generations still pinning device memory (gauge,
     /// refreshed by every lingering sweep).
     pub lingering_generations: AtomicU64,
+    /// `predict` calls answered by a degraded member subset (the
+    /// controllers' degradation ladder masked the ensemble down — see
+    /// [`crate::reconfig`]). A nonzero rate means the system is trading
+    /// accuracy for latency right now.
+    pub degraded_requests: AtomicU64,
+    /// Active members of the serving subset (gauge: the full ensemble
+    /// size when not degraded; 0 until the first predict of a built
+    /// system updates it is avoided by initializing at build).
+    pub active_members: AtomicU64,
     /// End-to-end `predict` latency, engine-level (the server keeps its
     /// own HTTP-inclusive histogram on top).
     pub request_latency: LatencyHistogram,
@@ -109,6 +118,8 @@ impl EngineMetrics {
             ("requests_parked", g(&self.requests_parked)),
             ("generation", g(&self.generation)),
             ("lingering_generations", g(&self.lingering_generations)),
+            ("degraded_requests", g(&self.degraded_requests)),
+            ("active_members", g(&self.active_members)),
             ("forecast_req_rate_milli", g(&self.forecast_req_rate_milli)),
             ("predicted_gap_us", g(&self.predicted_gap_us)),
         ]

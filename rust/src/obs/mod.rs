@@ -92,6 +92,11 @@ pub enum InstantKind {
     Generation,
     /// A drain-then-build build failure rolled back (arg: generation).
     Rollback,
+    /// The degradation ladder changed the active member subset (arg:
+    /// the number of members now serving). Emitted on both step-down
+    /// and step-up, so a trace window shows exactly when accuracy was
+    /// being traded for latency.
+    Degrade,
 }
 
 impl InstantKind {
@@ -102,6 +107,7 @@ impl InstantKind {
             InstantKind::Replan => "replan",
             InstantKind::Generation => "generation",
             InstantKind::Rollback => "rollback",
+            InstantKind::Degrade => "degrade",
         }
     }
 }

@@ -61,6 +61,8 @@ pub struct ReconfigOptions {
     /// and replans score candidates — and predict gaps — with what the
     /// hardware actually did. `None` (default): no calibration.
     pub calibration: Option<crate::cost::Calibrator>,
+    /// Degrade-don't-breach ladder (see [`DegradeConfig`]).
+    pub degrade: DegradeConfig,
 }
 
 impl Default for ReconfigOptions {
@@ -73,6 +75,49 @@ impl Default for ReconfigOptions {
             planner: PlannerConfig::default(),
             forecast: ForecastConfig::default(),
             calibration: None,
+            degrade: DegradeConfig::default(),
+        }
+    }
+}
+
+/// Degrade-don't-breach: when a breach persists and replanning cannot
+/// help — the planner reproduces the active matrix, or the only better
+/// plan needs a drain-then-build gap that would park more requests than
+/// the breach harms — the controller sheds *accuracy* instead of
+/// availability. It steps the engine down the Pareto ladder of member
+/// subsets ([`planner::plan_subsets`]) via
+/// [`InferenceSystem::set_active_members`]: a warm mask over the live
+/// matrix, so non-subset workers stay loaded and idle, no generation is
+/// built, no gap is taken, and in-flight requests finish under the mask
+/// they entered with. When headroom returns (windowed p99 under
+/// `headroom_ratio × SLO`), it steps back up one rung at a time;
+/// restoring the full set is just clearing the mask — instant.
+#[derive(Debug, Clone)]
+pub struct DegradeConfig {
+    /// Master switch; off by default (full-ensemble answers are the
+    /// paper's contract — shedding members is an explicit opt-in).
+    pub enabled: bool,
+    /// Deepest ladder rung the controller may step to (rung 0 = full
+    /// ensemble, each rung sheds one member). Also capped by the
+    /// ensemble size.
+    pub max_level: usize,
+    /// Step back up when windowed p99 falls below this fraction of the
+    /// policy's `p99_slo_ms` — strictly below 1.0 so restoring capacity
+    /// demand does not immediately re-trigger the breach that caused
+    /// the step-down.
+    pub headroom_ratio: f64,
+    /// Minimum time between ladder moves (either direction): the ladder
+    /// must not flap on one noisy window.
+    pub min_dwell: Duration,
+}
+
+impl Default for DegradeConfig {
+    fn default() -> Self {
+        DegradeConfig {
+            enabled: false,
+            max_level: 2,
+            headroom_ratio: 0.5,
+            min_dwell: Duration::from_secs(5),
         }
     }
 }
@@ -89,6 +134,12 @@ struct CtrlState {
     last_replan_at: Option<Instant>,
     /// Planner invocations (adopted or not).
     replans: u64,
+    /// Current degradation-ladder rung (0 = full ensemble).
+    degrade_level: usize,
+    /// Ladder moves taken, per direction (monotonic).
+    degrade_steps: u64,
+    restore_steps: u64,
+    last_ladder_move: Option<Instant>,
 }
 
 /// Point-in-time controller status (`GET /v1/reconfig/status`).
@@ -104,6 +155,14 @@ pub struct StatusReport {
     /// Trend projection at the forecast horizon (`None` while cold or
     /// disabled).
     pub forecast: Option<Forecast>,
+    /// Degradation-ladder rung currently applied (0 = full ensemble).
+    pub degrade_level: usize,
+    /// Ladder steps taken downwards (shed a member) / upwards
+    /// (restored one), monotonic.
+    pub degrade_steps: u64,
+    pub restore_steps: u64,
+    /// The engine's active member mask (`None` = full ensemble).
+    pub active_members: Option<Vec<usize>>,
 }
 
 /// The one JSON shape of a [`SwapReport`], shared by the
@@ -183,6 +242,23 @@ impl StatusReport {
             ("last_swap", swap),
             ("window", window),
             ("forecast", forecast),
+            (
+                "degrade",
+                Json::from_pairs([
+                    ("level", Json::Num(self.degrade_level as f64)),
+                    ("steps_down", Json::Num(self.degrade_steps as f64)),
+                    ("steps_up", Json::Num(self.restore_steps as f64)),
+                    (
+                        "active_members",
+                        match &self.active_members {
+                            None => Json::Null,
+                            Some(ms) => Json::Arr(
+                                ms.iter().map(|&m| Json::Num(m as f64)).collect(),
+                            ),
+                        },
+                    ),
+                ]),
+            ),
         ])
     }
 }
@@ -219,6 +295,10 @@ impl ReconfigController {
                 last_swap_at: None,
                 last_replan_at: None,
                 replans: 0,
+                degrade_level: 0,
+                degrade_steps: 0,
+                restore_steps: 0,
+                last_ladder_move: None,
             }),
             replan_lock: Mutex::new(()),
             stop: Arc::new(AtomicBool::new(false)),
@@ -347,6 +427,8 @@ impl ReconfigController {
         match decision {
             Decision::Hold(why) => {
                 self.state.lock().unwrap().last_decision = format!("hold: {why}");
+                // headroom returned: climb back up the degradation ladder
+                self.maybe_restore(snapshot.as_ref());
             }
             Decision::Replan { reason, force, breach_cost } => {
                 // back off after ANY recent attempt, not just completed
@@ -474,6 +556,11 @@ impl ReconfigController {
         // the active generation is dead, deploying the SAME matrix as a
         // fresh generation is the recovery path.
         if plan.matrix == active && !(force && dead) {
+            // replanning cannot help — the breach persists on the best
+            // matrix the devices support. Shed accuracy, not traffic.
+            if !force && breach_cost > 0.0 && self.try_degrade(reason) {
+                return Ok(None);
+            }
             self.state.lock().unwrap().last_decision =
                 format!("hold: planner reproduced the active matrix ({reason})");
             return Ok(None);
@@ -516,6 +603,11 @@ impl ReconfigController {
             let gap_cost = predicted_gap_ms / 1e3 * park_rate;
             if gap_cost > breach_cost {
                 if staged.strategy == SwapStrategy::DrainThenBuild {
+                    // the only better plan needs a gap pricier than the
+                    // breach: degrade in place instead of either outage
+                    if breach_cost > 0.0 && self.try_degrade(reason) {
+                        return Ok(None);
+                    }
                     self.state.lock().unwrap().last_decision = format!(
                         "hold: predicted gap {predicted_gap_ms:.0} ms would park \
                          ~{gap_cost:.0} requests, above the breach cost \
@@ -568,6 +660,124 @@ impl ReconfigController {
         st.last_swap = Some(report.clone());
         st.last_swap_at = Some(Instant::now());
         Ok(Some(report))
+    }
+
+    /// Step one rung down the degradation ladder: re-enumerate the
+    /// Pareto subsets on the current (possibly calibrated) costs, mask
+    /// the engine to the next-smaller rung, and record the move.
+    /// Returns `false` — leaving the caller's hold decision in place —
+    /// when degradation is disabled, dwelling, bottomed out, or the
+    /// combine rule cannot fold subsets.
+    fn try_degrade(&self, reason: &str) -> bool {
+        if !self.opts.degrade.enabled {
+            return false;
+        }
+        let (level, dwelling) = {
+            let st = self.state.lock().unwrap();
+            (
+                st.degrade_level,
+                st.last_ladder_move
+                    .is_some_and(|t| t.elapsed() < self.opts.degrade.min_dwell),
+            )
+        };
+        if dwelling {
+            return false;
+        }
+        let ensemble = self.system.ensemble();
+        let ladder = match planner::plan_subsets(
+            ensemble,
+            self.system.devices(),
+            &self.opts.planner,
+            None,
+        ) {
+            Ok(l) => l,
+            Err(e) => {
+                log::warn!("degradation ladder unavailable: {e:#}");
+                return false;
+            }
+        };
+        let next = (level + 1)
+            .min(self.opts.degrade.max_level)
+            .min(ladder.len().saturating_sub(1));
+        if next <= level {
+            return false; // bottomed out (or a one-member ensemble)
+        }
+        let rung = &ladder[next];
+        if let Err(e) = self.system.set_active_members(Some(rung.members.clone())) {
+            log::warn!("cannot degrade to {:?}: {e:#}", rung.members);
+            return false;
+        }
+        let mut st = self.state.lock().unwrap();
+        st.degrade_level = next;
+        st.degrade_steps += 1;
+        st.last_ladder_move = Some(Instant::now());
+        st.last_decision = format!(
+            "degraded: serving {}/{} members (ladder level {next}, \
+             accuracy proxy {:.3}; {reason})",
+            rung.members.len(),
+            ensemble.len(),
+            rung.accuracy_proxy
+        );
+        true
+    }
+
+    /// Step one rung back up when the window shows headroom: p99 below
+    /// `headroom_ratio × SLO` (an empty window — no traffic — counts as
+    /// headroom) and the dwell time elapsed. Reaching rung 0 clears the
+    /// mask entirely.
+    fn maybe_restore(&self, snapshot: Option<&LoadSnapshot>) {
+        if !self.opts.degrade.enabled {
+            return;
+        }
+        let (level, dwelling) = {
+            let st = self.state.lock().unwrap();
+            (
+                st.degrade_level,
+                st.last_ladder_move
+                    .is_some_and(|t| t.elapsed() < self.opts.degrade.min_dwell),
+            )
+        };
+        if level == 0 || dwelling {
+            return;
+        }
+        let p99 = snapshot.map(|s| s.p99_ms).unwrap_or(0.0);
+        if p99 > self.opts.degrade.headroom_ratio * self.opts.policy.p99_slo_ms {
+            return;
+        }
+        let next = level - 1;
+        let ensemble = self.system.ensemble();
+        let mask = if next == 0 {
+            None
+        } else {
+            match planner::plan_subsets(
+                ensemble,
+                self.system.devices(),
+                &self.opts.planner,
+                None,
+            ) {
+                Ok(ladder) => {
+                    Some(ladder[next.min(ladder.len() - 1)].members.clone())
+                }
+                Err(e) => {
+                    log::warn!("degradation ladder unavailable: {e:#}");
+                    return;
+                }
+            }
+        };
+        let describe = match &mask {
+            None => format!("full ensemble ({} members)", ensemble.len()),
+            Some(ms) => format!("{}/{} members", ms.len(), ensemble.len()),
+        };
+        if let Err(e) = self.system.set_active_members(mask) {
+            log::warn!("cannot restore to ladder level {next}: {e:#}");
+            return;
+        }
+        let mut st = self.state.lock().unwrap();
+        st.degrade_level = next;
+        st.restore_steps += 1;
+        st.last_ladder_move = Some(Instant::now());
+        st.last_decision =
+            format!("restored: serving {describe} (ladder level {next})");
     }
 
     /// All-or-nothing device marking: BOTH indices are validated against
@@ -675,6 +885,10 @@ impl ReconfigController {
             last_swap: st.last_swap.clone(),
             window: self.normalized_snapshot(),
             forecast: self.forecaster.forecast(),
+            degrade_level: st.degrade_level,
+            degrade_steps: st.degrade_steps,
+            restore_steps: st.restore_steps,
+            active_members: self.system.active_members(),
         }
     }
 
@@ -894,6 +1108,69 @@ mod tests {
         let status = ctrl.status();
         assert!(status.last_decision.contains("drain_then_build"),
                 "{}", status.last_decision);
+    }
+
+    #[test]
+    fn degradation_ladder_steps_down_and_restores() {
+        let e = ensemble(EnsembleId::Imn4);
+        let d = DeviceSet::hgx(2);
+        let p = planner::plan(&e, &d, &[], &[], &PlannerConfig::default()).unwrap();
+        let sys = Arc::new(
+            InferenceSystem::build(&p.matrix, &e, Arc::new(FakeExecutor::new(d)),
+                                   EngineOptions::default())
+                .unwrap(),
+        );
+        // without the opt-in the ladder never moves
+        let off = ReconfigController::start(Arc::clone(&sys), test_opts());
+        off.stop();
+        assert!(!off.try_degrade("unit: disabled"));
+        assert!(sys.active_members().is_none());
+        drop(off);
+
+        let mut opts = test_opts();
+        opts.degrade = DegradeConfig {
+            enabled: true,
+            max_level: 2,
+            headroom_ratio: 0.5,
+            min_dwell: Duration::ZERO,
+        };
+        let ctrl = ReconfigController::start(Arc::clone(&sys), opts);
+        ctrl.stop(); // drive the private ladder steps by hand
+
+        assert!(ctrl.try_degrade("unit: synthetic breach"));
+        let st = ctrl.status();
+        assert_eq!(st.degrade_level, 1);
+        assert_eq!(st.degrade_steps, 1);
+        let m1 = st.active_members.clone().unwrap();
+        assert_eq!(m1.len(), e.len() - 1);
+        assert!(st.last_decision.starts_with("degraded:"), "{}", st.last_decision);
+        // degraded serving still answers, full output width, same generation
+        let x = vec![0.1; 2 * e.members[0].input_elems_per_image()];
+        assert_eq!(sys.predict(x.clone(), 2).unwrap().len(), 2 * e.classes());
+        assert_eq!(sys.generation(), 1, "masking must not build a generation");
+
+        assert!(ctrl.try_degrade("unit: still breaching"));
+        let m2 = ctrl.status().active_members.unwrap();
+        assert_eq!(m2.len(), e.len() - 2);
+        assert!(m2.iter().all(|m| m1.contains(m)), "ladder rungs must nest");
+        // max_level caps the descent
+        assert!(!ctrl.try_degrade("unit: breaching harder"));
+        assert_eq!(ctrl.status().degrade_level, 2);
+
+        // empty window = headroom: one rung per restore, mask cleared at 0
+        ctrl.maybe_restore(None);
+        assert_eq!(ctrl.status().degrade_level, 1);
+        ctrl.maybe_restore(None);
+        let st = ctrl.status();
+        assert_eq!(st.degrade_level, 0);
+        assert_eq!(st.restore_steps, 2);
+        assert!(st.active_members.is_none(), "rung 0 clears the mask");
+        assert!(st.last_decision.starts_with("restored:"), "{}", st.last_decision);
+        let deg = st.to_json();
+        let deg = deg.get("degrade").unwrap();
+        assert_eq!(deg.get("steps_down").and_then(Json::as_usize), Some(2));
+        assert_eq!(deg.get("steps_up").and_then(Json::as_usize), Some(2));
+        assert!(matches!(deg.get("active_members"), Some(Json::Null)));
     }
 
     #[test]

@@ -63,12 +63,13 @@ pub mod planner;
 pub mod policy;
 pub mod tenancy;
 
-pub use controller::{ReconfigController, ReconfigOptions, StatusReport};
+pub use controller::{DegradeConfig, ReconfigController, ReconfigOptions, StatusReport};
 pub use crate::engine::SwapStrategy;
 pub use forecast::{Forecast, ForecastConfig, Forecaster};
 pub use monitor::{LoadMonitor, LoadSnapshot};
 pub use planner::{
-    plan, plan_joint, plan_staged, JointPlan, Plan, PlannerConfig, StagedPlan, TenantSpec,
+    plan, plan_joint, plan_staged, plan_subsets, JointPlan, Plan, PlannerConfig,
+    StagedPlan, SubsetPlan, TenantSpec,
 };
 pub use policy::{decide, Decision, PolicyConfig};
 pub use tenancy::{MultiTenantController, MultiTenantOptions, Tenant};

@@ -119,6 +119,118 @@ pub fn plan(
     Ok(Plan { matrix, predicted_img_s: report.best_speed, survivors })
 }
 
+/// One rung of the degradation ladder: a member subset with its
+/// analytic accuracy proxy and profiled per-image cost.
+#[derive(Debug, Clone)]
+pub struct SubsetPlan {
+    /// Global member indices, sorted ascending — directly usable as an
+    /// [`InferenceSystem::set_active_members`](crate::engine::InferenceSystem::set_active_members)
+    /// mask.
+    pub members: Vec<usize>,
+    /// Analytic ensemble-accuracy proxy in (0, 1): `1 − Π(1 − s_m)`
+    /// over per-member skill scores. A *ranking* signal, not a
+    /// calibrated accuracy — it only needs to order subsets so the
+    /// ladder degrades in the right direction.
+    pub accuracy_proxy: f64,
+    /// Summed per-image cost of the subset's members on the
+    /// representative device at the planner's default batch, ms.
+    pub cost_ms: f64,
+}
+
+/// Enumerate a Pareto frontier of ensemble member subsets trading the
+/// analytic accuracy proxy against profiled cost.
+///
+/// The frontier is built greedily: starting empty, repeatedly add the
+/// member with the best marginal accuracy-per-cost, and emit every
+/// prefix of that chain as a candidate. The chain is nested, so each
+/// candidate strictly dominates the next in accuracy and is strictly
+/// dominated in cost — every emitted subset is Pareto-optimal within
+/// the chain. Per-member skill is a saturating function of compute,
+/// `s_m = 1 − 0.5 / (1 + ln(1 + gflops))`: bigger members help more,
+/// with diminishing returns, which is all the ladder needs to order
+/// step-downs sensibly. Costs come from `cfg.cost` (profiled when the
+/// controller calibrates online) on `devices[0]` at the default batch.
+///
+/// Returns plans sorted by descending accuracy — index 0 is the full
+/// ensemble, the last entry the cheapest rung. With a
+/// `latency_budget_ms`, subsets whose cost exceeds the budget are
+/// dropped; if none fits, the single cheapest rung is kept so a
+/// degrade-don't-breach controller always has somewhere to step.
+pub fn plan_subsets(
+    ensemble: &Ensemble,
+    devices: &DeviceSet,
+    cfg: &PlannerConfig,
+    latency_budget_ms: Option<f64>,
+) -> anyhow::Result<Vec<SubsetPlan>> {
+    ensure!(!ensemble.members.is_empty(), "empty ensemble");
+    ensure!(!devices.is_empty(), "no devices to cost subsets on");
+    let dev = &devices[0];
+    let batch = (cfg.default_batch as usize).max(1);
+    let cost = &*cfg.cost;
+    let per_image: Vec<f64> = ensemble
+        .members
+        .iter()
+        .map(|m| cost.latency_ms(m, dev, batch) / batch as f64)
+        .collect();
+    let skill: Vec<f64> = ensemble
+        .members
+        .iter()
+        .map(|m| 1.0 - 0.5 / (1.0 + (1.0 + m.gflops.max(0.0)).ln()))
+        .collect();
+
+    // greedy chain: best marginal Δaccuracy / Δcost first
+    let mut remaining: Vec<usize> = (0..ensemble.len()).collect();
+    let mut chain: Vec<usize> = Vec::with_capacity(ensemble.len());
+    let mut err_prod = 1.0f64; // Π(1 − s_m) over the chain so far
+    let mut cost_sum = 0.0f64;
+    let mut plans = Vec::with_capacity(ensemble.len());
+    while !remaining.is_empty() {
+        let (pos, &next) = remaining
+            .iter()
+            .enumerate()
+            .max_by(|(_, &a), (_, &b)| {
+                let gain = |m: usize| err_prod * skill[m] / per_image[m].max(1e-9);
+                gain(a)
+                    .partial_cmp(&gain(b))
+                    .unwrap_or(std::cmp::Ordering::Equal)
+                    // deterministic tie-break: lower index wins
+                    .then(b.cmp(&a))
+            })
+            .unwrap();
+        remaining.swap_remove(pos);
+        chain.push(next);
+        err_prod *= 1.0 - skill[next];
+        cost_sum += per_image[next];
+        let mut members = chain.clone();
+        members.sort_unstable();
+        plans.push(SubsetPlan {
+            members,
+            accuracy_proxy: 1.0 - err_prod,
+            cost_ms: cost_sum,
+        });
+    }
+    // fullest first: the ladder's level 0 is full-ensemble serving
+    plans.reverse();
+
+    if let Some(budget) = latency_budget_ms {
+        ensure!(budget > 0.0, "latency budget must be positive, got {budget}");
+        let kept: Vec<SubsetPlan> =
+            plans.iter().filter(|p| p.cost_ms <= budget).cloned().collect();
+        if kept.is_empty() {
+            let cheapest = plans.pop().unwrap();
+            log::warn!(
+                "no member subset of {} fits the {budget:.1} ms budget; \
+                 keeping the cheapest rung ({:.1} ms)",
+                ensemble.name,
+                cheapest.cost_ms
+            );
+            return Ok(vec![cheapest]);
+        }
+        return Ok(kept);
+    }
+    Ok(plans)
+}
+
 /// A [`Plan`] plus the swap strategy it needs: `SideBySide` when the
 /// matrix was budgeted to fit next to the live generation(s),
 /// `DrainThenBuild` when it only fits after the live generation is
@@ -581,6 +693,50 @@ mod tests {
         let s_analytic_matrix = score(&analytic_plan.matrix, &e, &d, &*profiled);
         assert!(s_profiled >= s_analytic_matrix,
                 "profiled plan {s_profiled} worse than analytic matrix {s_analytic_matrix}");
+    }
+
+    #[test]
+    fn subset_ladder_is_nested_monotone_and_complete() {
+        let e = ensemble(EnsembleId::Imn12);
+        let d = DeviceSet::hgx(4);
+        let plans = plan_subsets(&e, &d, &PlannerConfig::default(), None).unwrap();
+        assert_eq!(plans.len(), e.len());
+        // index 0 is the full ensemble
+        assert_eq!(plans[0].members, (0..e.len()).collect::<Vec<_>>());
+        assert_eq!(plans.last().unwrap().members.len(), 1);
+        for w in plans.windows(2) {
+            // strictly shrinking, nested, cheaper and (weakly) less accurate
+            assert_eq!(w[0].members.len(), w[1].members.len() + 1);
+            assert!(w[1].members.iter().all(|m| w[0].members.contains(m)),
+                    "ladder rungs must be nested: {:?} vs {:?}",
+                    w[0].members, w[1].members);
+            assert!(w[0].cost_ms > w[1].cost_ms);
+            assert!(w[0].accuracy_proxy >= w[1].accuracy_proxy);
+        }
+        for p in &plans {
+            assert!(p.members.windows(2).all(|w| w[0] < w[1]), "unsorted mask");
+            assert!(p.accuracy_proxy > 0.0 && p.accuracy_proxy < 1.0);
+            assert!(p.cost_ms > 0.0);
+        }
+    }
+
+    #[test]
+    fn subset_budget_filters_but_never_empties() {
+        let e = ensemble(EnsembleId::Imn4);
+        let d = DeviceSet::hgx(2);
+        let cfg = PlannerConfig::default();
+        let all = plan_subsets(&e, &d, &cfg, None).unwrap();
+        // a budget between the cheapest and fullest rung drops the top
+        let mid = (all[0].cost_ms + all.last().unwrap().cost_ms) / 2.0;
+        let within = plan_subsets(&e, &d, &cfg, Some(mid)).unwrap();
+        assert!(!within.is_empty() && within.len() < all.len());
+        assert!(within.iter().all(|p| p.cost_ms <= mid));
+        // an impossible budget still yields the cheapest rung
+        let floor = plan_subsets(&e, &d, &cfg, Some(1e-6)).unwrap();
+        assert_eq!(floor.len(), 1);
+        assert_eq!(floor[0].members, all.last().unwrap().members);
+        // zero / negative budgets are rejected
+        assert!(plan_subsets(&e, &d, &cfg, Some(0.0)).is_err());
     }
 
     #[test]

@@ -38,6 +38,7 @@ use anyhow::ensure;
 use crate::alloc::matrix::AllocationMatrix;
 use crate::engine::{InferenceSystem, SwapReport, SwapStrategy};
 use crate::model::Ensemble;
+use crate::reconfig::controller::DegradeConfig;
 use crate::reconfig::forecast::{Forecast, ForecastConfig, Forecaster};
 use crate::reconfig::monitor::{LoadMonitor, LoadSnapshot};
 use crate::reconfig::planner::{self, JointPlan, PlannerConfig, TenantSpec};
@@ -94,6 +95,13 @@ pub struct MultiTenantOptions {
     /// store) score with observed, not assumed, costs — including the
     /// cross-tenant contention each worker actually experienced.
     pub calibration: Option<crate::cost::Calibrator>,
+    /// Degrade-don't-breach ladder, applied **per tenant** (see
+    /// [`DegradeConfig`]): when a tenant's breach persists and the joint
+    /// planner either reproduces every matrix or only offers a gap
+    /// pricier than the fleet's breach cost, the breaching tenants are
+    /// masked down their own subset ladders — siblings keep their full
+    /// ensembles.
+    pub degrade: DegradeConfig,
 }
 
 impl Default for MultiTenantOptions {
@@ -109,6 +117,7 @@ impl Default for MultiTenantOptions {
             idle_discount: 0.25,
             forecast: ForecastConfig::default(),
             calibration: None,
+            degrade: DegradeConfig::default(),
         }
     }
 }
@@ -131,6 +140,12 @@ struct MtState {
     /// Completed joint replans that swapped at least one tenant.
     joint_swaps: u64,
     last_swaps: Vec<(String, SwapReport)>,
+    /// Per-tenant degradation-ladder rung (0 = full ensemble) and the
+    /// tenant's last ladder move (dwell gate), indexed like `tenants`.
+    degrade_levels: Vec<usize>,
+    ladder_moves: Vec<Option<Instant>>,
+    degrade_steps: u64,
+    restore_steps: u64,
 }
 
 /// Point-in-time status of one tenant.
@@ -188,6 +203,7 @@ impl MultiTenantController {
 
         let window = opts.window;
         let forecast_cfg = opts.forecast.clone();
+        let n_tenants = tenants.len();
         let ctrl = Arc::new(MultiTenantController {
             tenants: tenants
                 .into_iter()
@@ -209,6 +225,10 @@ impl MultiTenantController {
                 replans: 0,
                 joint_swaps: 0,
                 last_swaps: Vec::new(),
+                degrade_levels: vec![0; n_tenants],
+                ladder_moves: vec![None; n_tenants],
+                degrade_steps: 0,
+                restore_steps: 0,
             }),
             replan_lock: Mutex::new(()),
             stop: Arc::new(AtomicBool::new(false)),
@@ -366,6 +386,8 @@ impl MultiTenantController {
 
         let Some((_, reason, force)) = trigger else {
             self.state.lock().unwrap().last_decision = "hold: every tenant within policy".into();
+            // headroom: climb degraded tenants back up their ladders
+            self.maybe_restore(&snapshots);
             return;
         };
         let backoff = if force { self.opts.failure_backoff } else { self.opts.policy.cooldown };
@@ -582,6 +604,11 @@ impl MultiTenantController {
             }
         }
         if changed.is_empty() {
+            // joint replanning cannot help: shed accuracy on the
+            // breaching tenants instead of letting them keep breaching
+            if !force && breach_total > 0.0 && self.try_degrade(pressures, reason) {
+                return Ok(Vec::new());
+            }
             self.state.lock().unwrap().last_decision =
                 format!("hold: planner reproduced every active matrix ({reason})");
             return Ok(Vec::new());
@@ -614,6 +641,11 @@ impl MultiTenantController {
                 .map(|&i| predicted_gap_of(i) / 1e3 * park_rates.get(i).copied().unwrap_or(0.0))
                 .sum();
             if gap_cost > breach_total {
+                // the only better joint plan needs gaps pricier than
+                // the fleet's breach: degrade the breachers in place
+                if breach_total > 0.0 && self.try_degrade(pressures, reason) {
+                    return Ok(Vec::new());
+                }
                 self.state.lock().unwrap().last_decision = format!(
                     "hold: predicted gaps would park ~{gap_cost:.0} requests, above \
                      the joint breach cost {breach_total:.0} ({reason})"
@@ -689,6 +721,137 @@ impl MultiTenantController {
         };
         st.last_swaps = swaps.clone();
         Ok(swaps)
+    }
+
+    /// Step every *breaching* tenant one rung down its own degradation
+    /// ladder (tenant-scoped masks — siblings keep their full
+    /// ensembles). A tenant is breaching when its pressure carries the
+    /// breach boost, i.e. its policy fired this tick. Returns `true`
+    /// when at least one tenant moved.
+    fn try_degrade(&self, pressures: &[f64], reason: &str) -> bool {
+        if !self.opts.degrade.enabled {
+            return false;
+        }
+        let mut moved = Vec::new();
+        for (i, t) in self.tenants.iter().enumerate() {
+            if pressures.get(i).copied().unwrap_or(1.0) < self.opts.breach_boost {
+                continue; // policy did not fire for this tenant
+            }
+            let (level, dwelling) = {
+                let st = self.state.lock().unwrap();
+                (
+                    st.degrade_levels[i],
+                    st.ladder_moves[i]
+                        .is_some_and(|m| m.elapsed() < self.opts.degrade.min_dwell),
+                )
+            };
+            if dwelling {
+                continue;
+            }
+            let ladder = match planner::plan_subsets(
+                t.system.ensemble(),
+                t.system.devices(),
+                &self.opts.planner,
+                None,
+            ) {
+                Ok(l) => l,
+                Err(e) => {
+                    log::warn!("tenant '{}': degradation ladder unavailable: {e:#}", t.name);
+                    continue;
+                }
+            };
+            let next = (level + 1)
+                .min(self.opts.degrade.max_level)
+                .min(ladder.len().saturating_sub(1));
+            if next <= level {
+                continue; // bottomed out
+            }
+            let rung = &ladder[next];
+            if let Err(e) = t.system.set_active_members(Some(rung.members.clone())) {
+                log::warn!("tenant '{}': cannot degrade to {:?}: {e:#}", t.name, rung.members);
+                continue;
+            }
+            let mut st = self.state.lock().unwrap();
+            st.degrade_levels[i] = next;
+            st.degrade_steps += 1;
+            st.ladder_moves[i] = Some(Instant::now());
+            moved.push(format!(
+                "'{}' to {}/{} members (level {next})",
+                t.name,
+                rung.members.len(),
+                t.system.ensemble().len()
+            ));
+        }
+        if moved.is_empty() {
+            return false;
+        }
+        self.state.lock().unwrap().last_decision =
+            format!("degraded: {} ({reason})", moved.join(", "));
+        true
+    }
+
+    /// Step each degraded tenant one rung back up when ITS window shows
+    /// headroom (p99 under `headroom_ratio × SLO`; an empty window
+    /// counts) and its dwell elapsed. Rung 0 clears the tenant's mask.
+    fn maybe_restore(&self, snapshots: &[Option<LoadSnapshot>]) {
+        if !self.opts.degrade.enabled {
+            return;
+        }
+        for (i, t) in self.tenants.iter().enumerate() {
+            let (level, dwelling) = {
+                let st = self.state.lock().unwrap();
+                (
+                    st.degrade_levels[i],
+                    st.ladder_moves[i]
+                        .is_some_and(|m| m.elapsed() < self.opts.degrade.min_dwell),
+                )
+            };
+            if level == 0 || dwelling {
+                continue;
+            }
+            let p99 = snapshots
+                .get(i)
+                .and_then(|s| s.as_ref())
+                .map(|s| s.p99_ms)
+                .unwrap_or(0.0);
+            if p99 > self.opts.degrade.headroom_ratio * self.opts.policy.p99_slo_ms {
+                continue;
+            }
+            let next = level - 1;
+            let mask = if next == 0 {
+                None
+            } else {
+                match planner::plan_subsets(
+                    t.system.ensemble(),
+                    t.system.devices(),
+                    &self.opts.planner,
+                    None,
+                ) {
+                    Ok(ladder) => {
+                        Some(ladder[next.min(ladder.len() - 1)].members.clone())
+                    }
+                    Err(e) => {
+                        log::warn!(
+                            "tenant '{}': degradation ladder unavailable: {e:#}",
+                            t.name
+                        );
+                        continue;
+                    }
+                }
+            };
+            if let Err(e) = t.system.set_active_members(mask) {
+                log::warn!("tenant '{}': cannot restore to level {next}: {e:#}", t.name);
+                continue;
+            }
+            let mut st = self.state.lock().unwrap();
+            st.degrade_levels[i] = next;
+            st.restore_steps += 1;
+            st.ladder_moves[i] = Some(Instant::now());
+            st.last_decision = format!(
+                "restored: tenant '{}' to ladder level {next}",
+                t.name
+            );
+        }
     }
 
     /// All-or-nothing device marking (see the single-tenant controller).
@@ -786,7 +949,8 @@ impl MultiTenantController {
         let tenants: Vec<Json> = self
             .tenant_statuses()
             .into_iter()
-            .map(|t| {
+            .enumerate()
+            .map(|(i, t)| {
                 let window = match &t.window {
                     None => Json::Null,
                     Some(w) => Json::from_pairs([
@@ -799,6 +963,12 @@ impl MultiTenantController {
                     None => Json::Null,
                     Some(f) => f.to_json(),
                 };
+                let active = match self.tenants[i].system.active_members() {
+                    None => Json::Null,
+                    Some(ms) => {
+                        Json::Arr(ms.iter().map(|&m| Json::Num(m as f64)).collect())
+                    }
+                };
                 Json::from_pairs([
                     ("name", Json::Str(t.name)),
                     ("generation", Json::Num(t.generation as f64)),
@@ -807,6 +977,13 @@ impl MultiTenantController {
                     ("weight", Json::Num(t.weight)),
                     ("window", window),
                     ("forecast", forecast),
+                    (
+                        "degrade",
+                        Json::from_pairs([
+                            ("level", Json::Num(st.degrade_levels[i] as f64)),
+                            ("active_members", active),
+                        ]),
+                    ),
                 ])
             })
             .collect();
@@ -832,6 +1009,8 @@ impl MultiTenantController {
             ("tenants", Json::Arr(tenants)),
             ("replans", Json::Num(st.replans as f64)),
             ("joint_swaps", Json::Num(st.joint_swaps as f64)),
+            ("degrade_steps", Json::Num(st.degrade_steps as f64)),
+            ("restore_steps", Json::Num(st.restore_steps as f64)),
             ("last_swaps", Json::Arr(last_swaps)),
             (
                 "failed_devices",
@@ -997,6 +1176,65 @@ mod tests {
         // calibrated in this fixture)
         assert_eq!(last.get("predicted_gap_ms").unwrap().as_f64(),
                    Some(crate::cost::analytic_gap_ms(1)));
+    }
+
+    #[test]
+    fn degrade_is_tenant_scoped_and_restores() {
+        let d = DeviceSet::hgx(3);
+        let ex = SimExecutor::new(d.clone(), 50_000.0);
+        // tenant a: 4 members (a real ladder); tenant b: single member
+        let e4 = ensemble(EnsembleId::Imn4);
+        let mut ma = AllocationMatrix::zeroed(d.len(), e4.len());
+        for m in 0..e4.len() {
+            ma.set(m % 2, m, 8);
+        }
+        let mut mb = AllocationMatrix::zeroed(d.len(), 1);
+        mb.set(2, 0, 8);
+        let sys_a = Arc::new(
+            InferenceSystem::build(&ma, &e4, Arc::clone(&ex) as _,
+                                   EngineOptions::default())
+                .unwrap(),
+        );
+        let sys_b = build(&mb, EnsembleId::Imn1, ex);
+        let mut opts = test_opts();
+        opts.degrade = DegradeConfig {
+            enabled: true,
+            max_level: 2,
+            headroom_ratio: 0.5,
+            min_dwell: Duration::ZERO,
+        };
+        let ctrl = MultiTenantController::start(
+            vec![
+                Tenant::new("a", Arc::clone(&sys_a)),
+                Tenant::new("b", Arc::clone(&sys_b)),
+            ],
+            opts,
+        )
+        .unwrap();
+        ctrl.stop();
+
+        // tenant a carries the breach boost, b does not
+        assert!(ctrl.try_degrade(&[3.0, 1.0], "unit: tenant a breaching"));
+        assert_eq!(sys_a.active_members().unwrap().len(), e4.len() - 1);
+        assert!(sys_b.active_members().is_none(), "sibling must stay full");
+        let x = vec![0.1; 2 * e4.members[0].input_elems_per_image()];
+        assert_eq!(sys_a.predict(x, 2).unwrap().len(), 2 * e4.classes());
+
+        let j = ctrl.status_json();
+        let tenants = j.get("tenants").unwrap().as_arr().unwrap();
+        let level = |t: &Json| {
+            t.get("degrade").unwrap().get("level").and_then(Json::as_usize)
+        };
+        assert_eq!(level(&tenants[0]), Some(1));
+        assert_eq!(level(&tenants[1]), Some(0));
+        assert_eq!(j.get("degrade_steps").and_then(Json::as_usize), Some(1));
+        assert!(ctrl.last_decision().starts_with("degraded:"), "{}", ctrl.last_decision());
+
+        // empty windows = headroom: tenant a climbs back, mask cleared
+        ctrl.maybe_restore(&[None, None]);
+        assert!(sys_a.active_members().is_none());
+        let j = ctrl.status_json();
+        assert_eq!(j.get("restore_steps").and_then(Json::as_usize), Some(1));
     }
 
     #[test]

@@ -58,6 +58,11 @@
 //!   per-node liveness, member assignment and engine stats, the dead
 //!   set, survivors and replan/request counters. `404` when the
 //!   server fronts a single-process engine.
+//! * `GET /v1/cascade` — cascade deployments only
+//!   ([`ApiServer::start_cascade`]): the confidence gate's policy and
+//!   threshold plus per-tier membership, row counters
+//!   (in/replied/escalated/NaN-escalated) and engine state. `404`
+//!   when the server fronts a plain engine.
 //!
 //! Under a cluster router, `POST /v1/predict` scatter/gathers over the
 //! cluster transports instead of a local engine, `/v1/health` reports
@@ -74,6 +79,7 @@ use std::collections::BTreeMap;
 use std::sync::{Arc, RwLock};
 use std::time::{Duration, Instant};
 
+use crate::cascade::{CascadeSystem, TierStats};
 use crate::cluster::ClusterRouter;
 use crate::cost::ProfileStore;
 use crate::engine::arena::Rows;
@@ -117,6 +123,12 @@ struct ApiState {
     /// Cluster deployments: the scatter/gather router replaces the
     /// local engine behind `/v1/predict` and adds `GET /v1/cluster`.
     cluster: Option<Arc<ClusterRouter>>,
+    /// Cascade deployments: confidence-gated tier escalation replaces
+    /// the single engine behind `/v1/predict` and adds
+    /// `GET /v1/cascade`. The tier engines are also registered as
+    /// tenants (`<name>#t0`, `<name>#t1`, …) so every per-tenant
+    /// route reports per-tier state.
+    cascade: Option<Arc<CascadeSystem>>,
 }
 
 impl ApiState {
@@ -136,7 +148,7 @@ impl ApiServer {
     pub fn start(system: Arc<InferenceSystem>, addr: &str, threads: usize)
         -> anyhow::Result<ApiServer> {
         Self::start_opts(Self::singleton(system), addr, threads, None,
-                         AdminController::None, None, None)
+                         AdminController::None, None, None, None)
     }
 
     /// Start with a prediction cache of `cache_capacity` entries (and
@@ -145,7 +157,7 @@ impl ApiServer {
                         cache_capacity: usize) -> anyhow::Result<ApiServer> {
         Self::start_opts(Self::singleton(system), addr, threads,
                          Some(PredictionCache::new(cache_capacity)),
-                         AdminController::None, None, None)
+                         AdminController::None, None, None, None)
     }
 
     /// The general single-tenant entry point: optional prediction
@@ -161,7 +173,8 @@ impl ApiServer {
             None => AdminController::None,
         };
         Self::start_opts(Self::singleton(system), addr, threads,
-                         cache.map(PredictionCache::with_config), admin, profiles, None)
+                         cache.map(PredictionCache::with_config), admin, profiles, None,
+                         None)
     }
 
     /// Start over a (possibly multi-tenant) registry; `x-ensemble`
@@ -180,7 +193,8 @@ impl ApiServer {
             None => AdminController::None,
         };
         Self::start_opts(registry, addr, threads,
-                         cache.map(PredictionCache::with_config), admin, profiles, None)
+                         cache.map(PredictionCache::with_config), admin, profiles, None,
+                         None)
     }
 
     /// Serve a cluster deployment. `POST /v1/predict` scatter/gathers
@@ -192,7 +206,25 @@ impl ApiServer {
     pub fn start_cluster(router: Arc<ClusterRouter>, addr: &str, threads: usize)
         -> anyhow::Result<ApiServer> {
         Self::start_opts(SystemRegistry::new(), addr, threads, None,
-                         AdminController::None, None, Some(router))
+                         AdminController::None, None, Some(router), None)
+    }
+
+    /// Serve a cascade deployment ([`crate::cascade`]). `POST
+    /// /v1/predict` runs the confidence-gated tier escalation and `GET
+    /// /v1/cascade` reports the gate parameters and per-tier counters.
+    /// Each tier's engine registers as a tenant (`<name>#t0`, …), so
+    /// the per-tenant routes (`/v1/stats`, `/v1/metrics`, `/v1/stages`,
+    /// the trace routes) report per-tier engine state — `/v1/metrics`
+    /// without an `x-ensemble` header exports every tier
+    /// tenant-labeled.
+    pub fn start_cascade(cascade: Arc<CascadeSystem>, addr: &str, threads: usize)
+        -> anyhow::Result<ApiServer> {
+        let registry = SystemRegistry::new();
+        for sys in cascade.tier_systems() {
+            registry.register(&sys.ensemble().name, Arc::clone(sys));
+        }
+        Self::start_opts(registry, addr, threads, None, AdminController::None, None,
+                         None, Some(cascade))
     }
 
     fn singleton(system: Arc<InferenceSystem>) -> Arc<SystemRegistry> {
@@ -206,7 +238,8 @@ impl ApiServer {
                   cache: Option<PredictionCache>,
                   controller: AdminController,
                   profiles: Option<Arc<ProfileStore>>,
-                  cluster: Option<Arc<ClusterRouter>>) -> anyhow::Result<ApiServer> {
+                  cluster: Option<Arc<ClusterRouter>>,
+                  cascade: Option<Arc<CascadeSystem>>) -> anyhow::Result<ApiServer> {
         let state = Arc::new(ApiState {
             registry,
             latencies: RwLock::new(BTreeMap::new()),
@@ -214,6 +247,7 @@ impl ApiServer {
             controller,
             profiles,
             cluster,
+            cascade,
         });
         let h_state = Arc::clone(&state);
         let handler: Handler = Arc::new(move |req: &Request| route(&h_state, req));
@@ -265,6 +299,7 @@ fn route(state: &ApiState, req: &Request) -> Response {
         ("POST", "/v1/trace/capture") => trace_capture(state, req),
         ("GET", "/v1/profiles") => profiles_report(state, req),
         ("GET", "/v1/cluster") => cluster_status(state),
+        ("GET", "/v1/cascade") => cascade_status(state),
         ("POST", "/v1/reconfigure") => reconfigure(state, req),
         ("GET", "/v1/reconfig/status") => reconfig_status(state),
         ("POST", _) | ("GET", _) => Response::text(404, "unknown route"),
@@ -471,6 +506,22 @@ fn prometheus(state: &ApiState, req: &Request) -> Response {
             body: out.into_bytes(),
         };
     }
+    if let Some(cascade) = &state.cascade {
+        // every tier engine's series, tenant="<name>#t<i>"-labeled,
+        // plus the cascade's own gate counters tier="<i>"-labeled
+        let tiers: Vec<(String, Arc<InferenceSystem>)> = cascade
+            .tier_systems()
+            .iter()
+            .map(|s| (s.ensemble().name.clone(), Arc::clone(s)))
+            .collect();
+        let mut out = tenant_exposition(&tiers, &|n| state.tenant_latency(n), Some("tenant"));
+        out.push_str(&cascade_exposition(cascade));
+        return Response {
+            status: 200,
+            content_type: "text/plain; version=0.0.4",
+            body: out.into_bytes(),
+        };
+    }
     let explicit = req.headers.contains_key("x-ensemble");
     if explicit || state.registry.len() <= 1 {
         let (name, system) = match select_tenant(state, req) {
@@ -499,6 +550,34 @@ fn prometheus(state: &ApiState, req: &Request) -> Response {
         out.push_str(&cache_exposition(cache, None, true));
     }
     Response { status: 200, content_type: "text/plain; version=0.0.4", body: out.into_bytes() }
+}
+
+/// The cascade gate's counters in exposition format: the request
+/// counter plus per-tier row routing, `tier="<index>"`-labeled.
+fn cascade_exposition(cascade: &CascadeSystem) -> String {
+    use std::sync::atomic::Ordering::Relaxed;
+    let mut out = String::new();
+    out.push_str("# TYPE ensemble_serve_cascade_requests_total counter\n");
+    out.push_str(&format!(
+        "ensemble_serve_cascade_requests_total {}\n",
+        cascade.requests()
+    ));
+    let fields: [(&str, fn(&TierStats) -> u64); 4] = [
+        ("cascade_tier_rows_in", |t| t.rows_in.load(Relaxed)),
+        ("cascade_tier_replied", |t| t.replied.load(Relaxed)),
+        ("cascade_tier_escalated", |t| t.escalated.load(Relaxed)),
+        ("cascade_tier_nan_escalations", |t| t.nan_escalations.load(Relaxed)),
+    ];
+    for (k, get) in fields {
+        out.push_str(&format!("# TYPE ensemble_serve_{k}_total counter\n"));
+        for (i, stats) in cascade.tier_stats().iter().enumerate() {
+            out.push_str(&format!(
+                "ensemble_serve_{k}_total{{tier=\"{i}\"}} {}\n",
+                get(stats)
+            ));
+        }
+    }
+    out
 }
 
 /// Cache counters in exposition format. `only` restricts to one
@@ -563,6 +642,7 @@ fn tenant_exposition(
             "lingering_generations",
             "forecast_req_rate_milli",
             "predicted_gap_us",
+            "active_members",
         ];
         let (suffix, kind) = if gauges.contains(&k) {
             ("", "gauge")
@@ -1174,9 +1254,42 @@ fn cluster_predict(state: &ApiState, router: &ClusterRouter, req: &Request) -> R
     }
 }
 
+/// Cascade predict: every row starts in the cheapest tier; rows whose
+/// confidence clears the gate reply immediately, the rest escalate to
+/// the next tier's batcher. The e2e latency records under the full
+/// ensemble's name (the tier tenants keep their own engine-side
+/// histograms).
+fn cascade_predict(state: &ApiState, cascade: &CascadeSystem, req: &Request) -> Response {
+    let t0 = Instant::now();
+    let (x, n, binary) = match parse_predict_body(req) {
+        Ok(parts) => parts,
+        Err(resp) => return resp,
+    };
+    let latency = state.tenant_latency(cascade.ensemble().name.as_str());
+    match cascade.predict(x, n) {
+        Ok(y) => {
+            latency.record(t0.elapsed());
+            encode_predictions(&y, n, binary)
+        }
+        Err(e) => Response::text(503, &format!("prediction failed: {e:#}")),
+    }
+}
+
+/// The cascade's gate parameters and per-tier membership, counters and
+/// engine state.
+fn cascade_status(state: &ApiState) -> Response {
+    match &state.cascade {
+        Some(cascade) => Response::json(200, cascade.status_json().to_string()),
+        None => Response::text(404, "no cascade running (serve --cascade)"),
+    }
+}
+
 fn predict(state: &ApiState, req: &Request) -> Response {
     if let Some(router) = &state.cluster {
         return cluster_predict(state, router, req);
+    }
+    if let Some(cascade) = &state.cascade {
+        return cascade_predict(state, cascade, req);
     }
     let t0 = Instant::now();
     let (tenant, system) = match select_tenant(state, req) {
@@ -1197,6 +1310,24 @@ fn predict(state: &ApiState, req: &Request) -> Response {
     // answer is a refcounted `Rows` stored and served without copies.
     if let Some(cache) = &state.cache {
         let key = request_key(&tenant, system.serving_fingerprint(), &x, n);
+        // degradation guard: while the engine serves a member subset
+        // (controller degrade ladder), an older full-ensemble hit is
+        // still the best available answer — serve it — but a degraded
+        // answer must NOT be inserted, or it would keep poisoning the
+        // cache after the mask is lifted.
+        if system.active_members().is_some() {
+            if let Some(y) = cache.get(&tenant, &key) {
+                latency.record(t0.elapsed());
+                return encode_predictions(&y, n, binary);
+            }
+            return match system.predict_rows(Rows::from_vec(x), n) {
+                Ok(y) => {
+                    latency.record(t0.elapsed());
+                    encode_predictions(&y, n, binary)
+                }
+                Err(e) => Response::text(503, &format!("prediction failed: {e:#}")),
+            };
+        }
         let trace_start = system.metrics().trace.now_us();
         let sys = Arc::clone(&system);
         let result =
@@ -1862,6 +1993,140 @@ mod tests {
         let j = Json::parse(std::str::from_utf8(&body_h).unwrap()).unwrap();
         assert_eq!(j.get("status").unwrap().as_str(), Some("degraded"));
         assert_eq!(j.get("dead").unwrap().as_arr().unwrap().len(), 1);
+    }
+
+    #[test]
+    fn cascade_route_predict_and_metrics() {
+        use crate::cascade::{CascadeSpec, ConfidencePolicy};
+        // no cascade configured: 404
+        let srv = api();
+        let (code, _) = http_request(srv.addr(), "GET", "/v1/cascade", "", b"").unwrap();
+        assert_eq!(code, 404);
+
+        let e = ensemble(EnsembleId::Imn4);
+        let d = DeviceSet::hgx(2);
+        let mut a = AllocationMatrix::zeroed(d.len(), e.len());
+        for m in 0..e.len() {
+            a.set(m % 2, m, 8);
+        }
+        let spec = CascadeSpec {
+            tiers: vec![vec![0], vec![1, 2, 3]],
+            policy: ConfidencePolicy::Margin,
+            threshold: 0.0, // always escalate: deterministic full fold
+        };
+        let cascade = Arc::new(
+            crate::cascade::CascadeSystem::build(
+                &a,
+                &e,
+                Arc::new(FakeExecutor::new(d)),
+                EngineOptions::default(),
+                spec,
+            )
+            .unwrap(),
+        );
+        let srv = ApiServer::start_cascade(cascade, "127.0.0.1:0", 2).unwrap();
+
+        let elems = e.members[0].input_elems_per_image();
+        let row = format!("[{}]", vec!["0.5"; elems].join(","));
+        let body = format!("{{\"images\":[{row},{row}]}}");
+        let (code, resp) = http_request(srv.addr(), "POST", "/v1/predict",
+                                        "application/json", body.as_bytes())
+            .unwrap();
+        assert_eq!(code, 200, "{}", String::from_utf8_lossy(&resp));
+        let j = Json::parse(std::str::from_utf8(&resp).unwrap()).unwrap();
+        let preds = j.get("predictions").unwrap().as_arr().unwrap();
+        assert_eq!(preds.len(), 2);
+        assert_eq!(preds[0].as_arr().unwrap().len(), e.classes());
+
+        let (code, body) = http_request(srv.addr(), "GET", "/v1/cascade", "", b"").unwrap();
+        assert_eq!(code, 200);
+        let j = Json::parse(std::str::from_utf8(&body).unwrap()).unwrap();
+        assert_eq!(j.get("ensemble").unwrap().as_str(), Some("IMN4"));
+        assert_eq!(j.get("policy").unwrap().as_str(), Some("margin"));
+        assert_eq!(j.get("requests").unwrap().as_usize(), Some(1));
+        let tiers = j.get("tiers").unwrap().as_arr().unwrap();
+        assert_eq!(tiers.len(), 2);
+        // threshold 0 escalates every row: tier 0 replied none
+        assert_eq!(tiers[0].get("rows_in").unwrap().as_usize(), Some(2));
+        assert_eq!(tiers[0].get("escalated").unwrap().as_usize(), Some(2));
+        assert_eq!(tiers[1].get("replied").unwrap().as_usize(), Some(2));
+
+        // the tier engines are tenants: listed, and tenant-labeled in
+        // the exposition next to the cascade's tier counters
+        let (_, body) = http_request(srv.addr(), "GET", "/v1/ensembles", "", b"").unwrap();
+        let j = Json::parse(std::str::from_utf8(&body).unwrap()).unwrap();
+        let rows = j.get("ensembles").unwrap().as_arr().unwrap();
+        assert_eq!(rows.len(), 2);
+        assert_eq!(rows[0].get("name").unwrap().as_str(), Some("IMN4#t0"));
+
+        let (code, body) = http_request(srv.addr(), "GET", "/v1/metrics", "", b"").unwrap();
+        assert_eq!(code, 200);
+        let text = String::from_utf8(body).unwrap();
+        assert!(text.contains("tenant=\"IMN4#t0\""), "{text}");
+        assert!(text.contains("tenant=\"IMN4#t1\""), "{text}");
+        assert!(text.contains("ensemble_serve_cascade_requests_total 1"), "{text}");
+        assert!(text.contains(
+            "ensemble_serve_cascade_tier_escalated_total{tier=\"0\"} 2"), "{text}");
+        assert!(text.contains(
+            "ensemble_serve_cascade_tier_replied_total{tier=\"1\"} 2"), "{text}");
+    }
+
+    #[test]
+    fn degraded_engine_serves_cache_hits_but_never_inserts() {
+        let e = ensemble(EnsembleId::Imn4);
+        let d = DeviceSet::hgx(2);
+        let mut a = AllocationMatrix::zeroed(d.len(), e.len());
+        for m in 0..e.len() {
+            a.set(m % 2, m, 8);
+        }
+        let sys = Arc::new(
+            InferenceSystem::build(&a, &e, Arc::new(FakeExecutor::new(d)),
+                                   EngineOptions::default())
+                .unwrap(),
+        );
+        let srv = ApiServer::start_cached(Arc::clone(&sys), "127.0.0.1:0", 2, 16).unwrap();
+        let elems = e.members[0].input_elems_per_image();
+        let row = format!("[{}]", vec!["0.5"; elems].join(","));
+        let body = format!("{{\"images\":[{row}]}}");
+
+        // degraded from the start: the miss computes but must not insert
+        sys.set_active_members(Some(vec![0, 1])).unwrap();
+        let (code, degraded_first) = http_request(srv.addr(), "POST", "/v1/predict",
+                                                  "application/json", body.as_bytes())
+            .unwrap();
+        assert_eq!(code, 200, "{}", String::from_utf8_lossy(&degraded_first));
+        let (_, cache_body) = http_request(srv.addr(), "GET", "/v1/cache", "", b"").unwrap();
+        let j = Json::parse(std::str::from_utf8(&cache_body).unwrap()).unwrap();
+        assert_eq!(j.get("entries").unwrap().as_usize(), Some(0),
+                   "degraded answer was inserted");
+
+        // restored: the same request misses and inserts the full answer
+        sys.set_active_members(None).unwrap();
+        let (code, _) = http_request(srv.addr(), "POST", "/v1/predict",
+                                     "application/json", body.as_bytes())
+            .unwrap();
+        assert_eq!(code, 200);
+        let (_, cache_body) = http_request(srv.addr(), "GET", "/v1/cache", "", b"").unwrap();
+        let j = Json::parse(std::str::from_utf8(&cache_body).unwrap()).unwrap();
+        assert_eq!(j.get("entries").unwrap().as_usize(), Some(1));
+
+        // degraded again: the stored full-ensemble answer still serves
+        sys.set_active_members(Some(vec![0, 1])).unwrap();
+        let (code, hit) = http_request(srv.addr(), "POST", "/v1/predict",
+                                       "application/json", body.as_bytes())
+            .unwrap();
+        assert_eq!(code, 200);
+        let (_, cache_body) = http_request(srv.addr(), "GET", "/v1/cache", "", b"").unwrap();
+        let j = Json::parse(std::str::from_utf8(&cache_body).unwrap()).unwrap();
+        assert_eq!(j.get("hits").unwrap().as_usize(), Some(1), "hit not served");
+        assert_eq!(j.get("entries").unwrap().as_usize(), Some(1));
+        assert!(!hit.is_empty());
+
+        // the degraded requests flowed through the masked engine
+        let (_, body) = http_request(srv.addr(), "GET", "/v1/stats", "", b"").unwrap();
+        let j = Json::parse(std::str::from_utf8(&body).unwrap()).unwrap();
+        assert_eq!(j.get("degraded_requests").unwrap().as_usize(), Some(1));
+        assert_eq!(j.get("active_members").unwrap().as_usize(), Some(2));
     }
 
     #[test]

@@ -14,8 +14,9 @@
 use std::io::{Read, Write};
 use std::net::TcpStream;
 use std::sync::Arc;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
+use ensemble_serve::alloc::greedy::GreedyConfig;
 use ensemble_serve::alloc::matrix::AllocationMatrix;
 use ensemble_serve::alloc::memory::device_usage_mb;
 use ensemble_serve::device::DeviceSet;
@@ -23,8 +24,8 @@ use ensemble_serve::engine::{EngineOptions, InferenceSystem};
 use ensemble_serve::exec::sim::SimExecutor;
 use ensemble_serve::model::{ensemble, Ensemble, EnsembleId};
 use ensemble_serve::reconfig::{
-    plan_joint, MultiTenantController, MultiTenantOptions, PlannerConfig, PolicyConfig,
-    Tenant, TenantSpec,
+    plan_joint, DegradeConfig, MultiTenantController, MultiTenantOptions, PlannerConfig,
+    PolicyConfig, Tenant, TenantSpec,
 };
 use ensemble_serve::server::cache::CacheConfig;
 use ensemble_serve::server::http::http_request;
@@ -288,4 +289,149 @@ fn slo_breach_on_one_tenant_steals_capacity_from_idle_tenant() {
     assert_eq!(code, 200, "{}", String::from_utf8_lossy(&body));
     let j = Json::parse(std::str::from_utf8(&body).unwrap()).unwrap();
     assert!(j.get("swapped").and_then(Json::as_bool).is_some());
+}
+
+#[test]
+fn degrade_under_breach_is_tenant_scoped_and_restores() {
+    // both tenants packed on ONE GPU with greedy exploration off: the
+    // joint planner deterministically reproduces both serving matrices,
+    // so the only move left under a breach is the degradation ladder
+    let d = DeviceSet::hgx(1);
+    let ex = SimExecutor::new(d.clone(), 20_000.0);
+    let pcfg = PlannerConfig {
+        greedy: GreedyConfig {
+            max_iter: 0,
+            devices_minus_models_rule: false,
+            ..GreedyConfig::default()
+        },
+        ..PlannerConfig::default()
+    };
+    let specs = vec![
+        TenantSpec::new("gold", ensemble(EnsembleId::Imn4)),
+        TenantSpec::new("econ", ensemble(EnsembleId::Imn1)),
+    ];
+    let plan = plan_joint(&specs, &d, &[], &[], &pcfg).unwrap();
+    let systems: Vec<Arc<InferenceSystem>> = specs
+        .iter()
+        .zip(&plan.matrices)
+        .map(|(spec, m)| {
+            Arc::new(
+                InferenceSystem::build(m, &spec.ensemble, Arc::clone(&ex),
+                                       EngineOptions::default())
+                    .unwrap(),
+            )
+        })
+        .collect();
+    let (gold, econ) = (Arc::clone(&systems[0]), Arc::clone(&systems[1]));
+    let opts = MultiTenantOptions {
+        poll_interval: Duration::from_millis(10),
+        window: Duration::from_millis(500),
+        failure_backoff: Duration::from_millis(50),
+        policy: PolicyConfig {
+            p99_slo_ms: 0.01, // any completed traffic breaches
+            min_window_requests: 5,
+            cooldown: Duration::from_secs(60),
+            ..PolicyConfig::default()
+        },
+        planner: pcfg,
+        degrade: DegradeConfig {
+            enabled: true,
+            max_level: 2,
+            min_dwell: Duration::ZERO,
+            ..DegradeConfig::default()
+        },
+        ..MultiTenantOptions::default()
+    };
+    let ctrl = MultiTenantController::start(
+        vec![
+            Tenant::new("gold", Arc::clone(&gold)),
+            Tenant::new("econ", Arc::clone(&econ)),
+        ],
+        opts,
+    )
+    .unwrap();
+    ctrl.stop(); // deterministic: drive ticks by hand
+    let registry = SystemRegistry::new();
+    registry.register("gold", Arc::clone(&gold));
+    registry.register("econ", Arc::clone(&econ));
+    let api = ApiServer::start_registry(registry, "127.0.0.1:0", 2, None,
+                                        Some(Arc::clone(&ctrl)), None)
+        .unwrap();
+
+    // traffic on gold only: its policy fires, econ idles
+    let e_gold = gold.ensemble().clone();
+    let x = vec![0.1; 8 * e_gold.members[0].input_elems_per_image()];
+    let deadline = Instant::now() + Duration::from_secs(60);
+    while gold.active_members().is_none() && Instant::now() < deadline {
+        for _ in 0..8 {
+            gold.predict(x.clone(), 8).unwrap();
+        }
+        ctrl.tick();
+    }
+
+    // the BREACHING tenant stepped down its own ladder...
+    let masked = gold
+        .active_members()
+        .unwrap_or_else(|| panic!("gold never degraded: {}", ctrl.last_decision()));
+    assert!(
+        !masked.is_empty() && masked.len() < e_gold.len(),
+        "mask {masked:?} is not a strict subset"
+    );
+    // ...as a warm mask, not a swap; the idle sibling keeps its full
+    // ensemble
+    assert_eq!(gold.generation(), 1, "degradation must not swap generations");
+    assert!(econ.active_members().is_none(), "idle tenant degraded too");
+    assert_eq!(econ.generation(), 1);
+
+    // both tenants still answer; no request dropped or double-answered
+    assert!(gold.predict(x.clone(), 4).is_ok());
+    let x_econ = vec![0.1; 4 * econ.ensemble().members[0].input_elems_per_image()];
+    assert!(econ.predict(x_econ, 4).is_ok());
+    for sys in [&gold, &econ] {
+        let m = sys.metrics();
+        assert_eq!(
+            m.requests.load(std::sync::atomic::Ordering::Relaxed),
+            m.requests_completed.load(std::sync::atomic::Ordering::Relaxed),
+            "a request was dropped or double-answered while degrading"
+        );
+    }
+
+    // the per-tenant degradation surfaces on the admin route
+    let (code, body) =
+        http_request(api.addr(), "GET", "/v1/reconfig/status", "", b"").unwrap();
+    assert_eq!(code, 200);
+    let j = Json::parse(std::str::from_utf8(&body).unwrap()).unwrap();
+    let tenants = j.get("tenants").unwrap().as_arr().unwrap();
+    let deg_of = |name: &str| {
+        tenants
+            .iter()
+            .find(|t| t.get("name").and_then(Json::as_str) == Some(name))
+            .unwrap()
+            .get("degrade")
+            .unwrap()
+            .clone()
+    };
+    let deg_gold = deg_of("gold");
+    assert!(deg_gold.get("level").and_then(Json::as_usize).unwrap() >= 1);
+    assert_eq!(
+        deg_gold.get("active_members").unwrap().as_arr().unwrap().len(),
+        masked.len()
+    );
+    let deg_econ = deg_of("econ");
+    assert_eq!(deg_econ.get("level").and_then(Json::as_usize), Some(0));
+    assert_eq!(deg_econ.get("active_members"), Some(&Json::Null));
+
+    // headroom returns: gold climbs back to the full ensemble
+    std::thread::sleep(Duration::from_millis(600)); // > the 500 ms window
+    let deadline = Instant::now() + Duration::from_secs(30);
+    while gold.active_members().is_some() && Instant::now() < deadline {
+        ctrl.tick();
+        std::thread::sleep(Duration::from_millis(20));
+    }
+    assert!(
+        gold.active_members().is_none(),
+        "gold never restored: {}",
+        ctrl.last_decision()
+    );
+    assert!(gold.predict(x, 8).is_ok());
 }

@@ -27,7 +27,7 @@ use ensemble_serve::exec::{Executor, ModelInstance};
 use ensemble_serve::model::{ensemble, EnsembleId, ModelSpec};
 use ensemble_serve::cost::{analytic_gap_ms, Calibrator, ProfileStore, ProfiledCost};
 use ensemble_serve::reconfig::{
-    planner, ForecastConfig, PlannerConfig, PolicyConfig, ReconfigBusy,
+    planner, DegradeConfig, ForecastConfig, PlannerConfig, PolicyConfig, ReconfigBusy,
     ReconfigController, ReconfigOptions,
 };
 use ensemble_serve::server::http::http_request;
@@ -72,7 +72,7 @@ fn throughput_shift_triggers_live_swap_mid_workload() {
         InferenceSystem::build(&a, &e, ex, EngineOptions::default()).unwrap(),
     );
     let ctrl = ReconfigController::start(Arc::clone(&sys), reactive_opts());
-    let api = ApiServer::start_single(Arc::clone(&sys), "127.0.0.1:0", 2,
+    let api = ApiServer::start_single(Arc::clone(&sys), "127.0.0.1:0", 2, None,
                                       Some(Arc::clone(&ctrl)), None)
         .unwrap();
 
@@ -377,7 +377,7 @@ fn tight_memory_swap_completes_via_auto_drain_then_build() {
     opts.calibration = Some(Calibrator::new(Arc::clone(&store)));
     let ctrl = ReconfigController::start(Arc::clone(&sys), opts);
     ctrl.stop(); // deterministic: operator-driven
-    let api = ApiServer::start_single(Arc::clone(&sys), "127.0.0.1:0", 2,
+    let api = ApiServer::start_single(Arc::clone(&sys), "127.0.0.1:0", 2, None,
                                       Some(Arc::clone(&ctrl)), Some(Arc::clone(&store)))
         .unwrap();
 
@@ -739,4 +739,115 @@ fn parked_requests_record_gate_wait_spans_across_the_gap() {
     let doc = trace.export_chrome();
     assert!(doc.contains("\"name\":\"gap\""), "{doc}");
     assert!(doc.contains("\"name\":\"swap\""), "{doc}");
+}
+
+// ---------------------------------------------------------------------------
+// Degrade-don't-breach: overload the best matrix the device supports.
+
+/// Planner knobs with no greedy exploration: Algorithm 1's packing at
+/// the default batch is adopted verbatim, so a replan of an unchanged
+/// device set deterministically reproduces the active matrix — the
+/// controller's only remaining move is the degradation ladder.
+fn pinned_planner() -> PlannerConfig {
+    PlannerConfig {
+        greedy: GreedyConfig {
+            max_iter: 0,
+            devices_minus_models_rule: false,
+            ..GreedyConfig::default()
+        },
+        ..PlannerConfig::default()
+    }
+}
+
+#[test]
+fn overload_ramp_degrades_to_a_subset_and_restores_with_zero_drops() {
+    // the whole Imn4 ensemble on ONE GPU: under breach, the planner has
+    // nowhere to scale to and reproduces this exact matrix
+    let e = ensemble(EnsembleId::Imn4);
+    let d = DeviceSet::hgx(1);
+    let a = planner::plan(&e, &d, &[], &[], &pinned_planner()).unwrap().matrix;
+    let ex = SimExecutor::new(d, 20_000.0);
+    let sys = Arc::new(
+        InferenceSystem::build(&a, &e, ex, EngineOptions::default()).unwrap(),
+    );
+    let mut opts = reactive_opts(); // p99 SLO 0.05 ms: any traffic breaches
+    opts.planner = pinned_planner();
+    opts.degrade = DegradeConfig {
+        enabled: true,
+        max_level: 2,
+        min_dwell: Duration::ZERO,
+        ..DegradeConfig::default()
+    };
+    let ctrl = ReconfigController::start(Arc::clone(&sys), opts);
+    ctrl.stop(); // deterministic: drive ticks by hand
+    let api = ApiServer::start_single(Arc::clone(&sys), "127.0.0.1:0", 2, None,
+                                      Some(Arc::clone(&ctrl)), None)
+        .unwrap();
+
+    // overload ramp: bursts until the controller concedes the replan
+    // cannot help and sheds accuracy instead of traffic
+    let deadline = Instant::now() + Duration::from_secs(60);
+    let mut seed = 0u64;
+    while ctrl.status().degrade_level == 0 && Instant::now() < deadline {
+        let r = closed_loop(&sys, 2, 5, 16, seed);
+        assert_eq!(r.failed, 0, "requests failed during the ramp");
+        seed += 1;
+        ctrl.tick();
+    }
+    let st = ctrl.status();
+    assert_eq!(
+        st.degrade_level, 1,
+        "controller never stepped down the ladder; status: {}",
+        st.last_decision
+    );
+    assert!(st.degrade_steps >= 1);
+    assert!(st.last_decision.starts_with("degraded:"), "{}", st.last_decision);
+    // the step down is a warm mask, not a generation swap: same
+    // generation, no swap, no outage
+    assert_eq!(sys.generation(), 1, "degradation must not swap generations");
+    assert_eq!(sys.swap_count(), 0);
+    let masked = sys.active_members().expect("engine mask installed");
+    assert!(
+        !masked.is_empty() && masked.len() < e.len(),
+        "mask {masked:?} is not a strict subset"
+    );
+
+    // degraded serving still answers at full output width
+    let r = closed_loop(&sys, 2, 4, 16, 1_000);
+    assert_eq!(r.failed, 0, "requests failed while degraded");
+    let m = sys.metrics();
+    assert!(m.degraded_requests.load(Ordering::Relaxed) > 0);
+    // zero dropped or double-answered requests across the whole ramp
+    assert_eq!(
+        m.requests.load(Ordering::Relaxed),
+        m.requests_completed.load(Ordering::Relaxed),
+        "a request was dropped or double-answered while degrading"
+    );
+
+    // the degradation surfaces on the HTTP control plane
+    let (code, body) =
+        http_request(api.addr(), "GET", "/v1/reconfig/status", "", b"").unwrap();
+    assert_eq!(code, 200);
+    let j = Json::parse(std::str::from_utf8(&body).unwrap()).unwrap();
+    let deg = j.get("degrade").expect("degrade object on the status route");
+    assert_eq!(deg.get("level").and_then(Json::as_usize), Some(1));
+    assert!(deg.get("steps_down").and_then(Json::as_usize).unwrap() >= 1);
+    let active = deg.get("active_members").unwrap().as_arr().unwrap();
+    assert_eq!(active.len(), masked.len());
+
+    // headroom returns (the window drains empty): the controller steps
+    // back up and clears the mask
+    std::thread::sleep(Duration::from_millis(700)); // > the 600 ms window
+    let deadline = Instant::now() + Duration::from_secs(30);
+    while ctrl.status().degrade_level > 0 && Instant::now() < deadline {
+        ctrl.tick();
+        std::thread::sleep(Duration::from_millis(20));
+    }
+    let st = ctrl.status();
+    assert_eq!(st.degrade_level, 0, "never restored; status: {}", st.last_decision);
+    assert!(st.restore_steps >= 1);
+    assert!(sys.active_members().is_none(), "mask must clear at ladder level 0");
+    // full-ensemble serving resumes
+    let r = closed_loop(&sys, 2, 3, 16, 2_000);
+    assert_eq!(r.failed, 0);
 }

@@ -1,0 +1,233 @@
+//! Property tests of the cascade serving path (util::quick mini
+//! framework): threshold-0 cascades pinned bit-identical to
+//! full-ensemble serving across random matrices and tier splits,
+//! escalation routing invariant under shard/worker churn, and the NaN
+//! poisoning contract (a NaN confidence never passes the reply gate).
+
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+
+use ensemble_serve::alloc::matrix::AllocationMatrix;
+use ensemble_serve::cascade::{
+    confidence, gate_replies, CascadeSpec, CascadeSystem, ConfidencePolicy,
+};
+use ensemble_serve::device::DeviceSet;
+use ensemble_serve::engine::combine::{Average, CombineRule, MajorityVote};
+use ensemble_serve::engine::{EngineOptions, InferenceSystem};
+use ensemble_serve::exec::sim::SimExecutor;
+use ensemble_serve::model::{ensemble, Ensemble, EnsembleId};
+use ensemble_serve::util::quick::{check, Gen};
+
+const POLICIES: [ConfidencePolicy; 3] = [
+    ConfidencePolicy::Margin,
+    ConfidencePolicy::Entropy,
+    ConfidencePolicy::VoteAgreement,
+];
+
+/// A random allocation: every member gets a worker on a random device
+/// (occasionally two, on distinct devices) at a random batch size.
+fn random_matrix(g: &mut Gen, e: &Ensemble, d: &DeviceSet) -> AllocationMatrix {
+    let mut a = AllocationMatrix::zeroed(d.len(), e.len());
+    let batches = [4u32, 8, 16];
+    for m in 0..e.len() {
+        let dev = g.usize_in(0, d.len() - 1);
+        a.set(dev, m, batches[g.usize_in(0, batches.len() - 1)]);
+        if g.bool() && d.len() > 1 {
+            // a second replica worker on another device: same member,
+            // different shard
+            let other = (dev + 1 + g.usize_in(0, d.len() - 2)) % d.len();
+            a.set(other, m, batches[g.usize_in(0, batches.len() - 1)]);
+        }
+    }
+    a
+}
+
+/// A random partition of `m` members into 1..=3 non-empty tiers (each
+/// sorted ascending, disjoint, covering).
+fn random_tiers(g: &mut Gen, m: usize) -> Vec<Vec<usize>> {
+    let n_tiers = g.usize_in(1, m.min(3));
+    loop {
+        let mut tiers: Vec<Vec<usize>> = vec![Vec::new(); n_tiers];
+        for member in 0..m {
+            tiers[g.usize_in(0, n_tiers - 1)].push(member);
+        }
+        if tiers.iter().all(|t| !t.is_empty()) {
+            return tiers; // members pushed in order: already sorted
+        }
+    }
+}
+
+fn random_combine(g: &mut Gen) -> Arc<dyn CombineRule> {
+    if g.bool() {
+        Arc::new(Average)
+    } else {
+        Arc::new(MajorityVote)
+    }
+}
+
+fn random_input(g: &mut Gen, e: &Ensemble, nb_images: usize) -> Vec<f32> {
+    let elems = e.members[0].input_elems_per_image();
+    (0..nb_images * elems)
+        .map(|_| (g.f64_unit() as f32) * 2.0 - 1.0)
+        .collect()
+}
+
+/// Threshold 0 disables early replies, so every row runs the full
+/// ensemble — the cascade's answer must be bit-identical to the plain
+/// engine serving the same matrix with the same combine rule,
+/// whatever the tier split.
+#[test]
+fn threshold_zero_is_bit_identical_to_full_ensemble() {
+    check("cascade threshold-0 bit-identity", 10, |g| {
+        let e = ensemble(EnsembleId::Imn4);
+        let d = DeviceSet::hgx(2);
+        let a = random_matrix(g, &e, &d);
+        let combine = random_combine(g);
+        let opts = EngineOptions { combine, ..EngineOptions::default() };
+        let spec = CascadeSpec {
+            tiers: random_tiers(g, e.len()),
+            policy: POLICIES[g.usize_in(0, POLICIES.len() - 1)],
+            threshold: 0.0,
+        };
+        let n_tiers = spec.tiers.len();
+
+        let full = InferenceSystem::build(
+            &a,
+            &e,
+            SimExecutor::new(d.clone(), 50_000.0),
+            opts.clone(),
+        )
+        .unwrap();
+        let cascade =
+            CascadeSystem::build(&a, &e, SimExecutor::new(d.clone(), 50_000.0), opts, spec)
+                .unwrap();
+
+        let nb = g.usize_in(1, 5);
+        let x = random_input(g, &e, nb);
+        let want = full.predict(x.clone(), nb).unwrap();
+        let got = cascade.predict(x, nb).unwrap();
+        assert_eq!(want.len(), got.len());
+        for (i, (w, v)) in want.iter().zip(&got).enumerate() {
+            assert_eq!(
+                w.to_bits(),
+                v.to_bits(),
+                "element {i} diverged: full={w} cascade={v}"
+            );
+        }
+        // threshold 0 escalated every row through every non-final tier
+        for (t, st) in cascade.tier_stats().iter().enumerate() {
+            assert_eq!(st.rows_in.load(Ordering::Relaxed), nb as u64, "tier {t} rows_in");
+            if t + 1 < n_tiers {
+                assert_eq!(st.escalated.load(Ordering::Relaxed), nb as u64);
+                assert_eq!(st.replied.load(Ordering::Relaxed), 0);
+            } else {
+                assert_eq!(st.replied.load(Ordering::Relaxed), nb as u64);
+            }
+        }
+    });
+}
+
+/// Escalation is a per-row function of the row's member outputs, not
+/// of how the tiers happen to be sharded: two cascades with the same
+/// spec but different worker placements route every row identically
+/// and answer bit-identically.
+#[test]
+fn escalation_is_deterministic_under_shard_and_worker_churn() {
+    check("cascade escalation determinism", 8, |g| {
+        let e = ensemble(EnsembleId::Imn4);
+        let d = DeviceSet::hgx(3);
+        let spec = CascadeSpec {
+            tiers: random_tiers(g, e.len()),
+            policy: POLICIES[g.usize_in(0, POLICIES.len() - 1)],
+            // a live gate (mixed reply/escalate decisions are possible)
+            threshold: 0.25 + g.f64_unit() * 0.75,
+        };
+        let combine = random_combine(g);
+        let opts = EngineOptions { combine, ..EngineOptions::default() };
+
+        // same members, two different placements: device assignment,
+        // replica count and batch sizes all differ between the builds
+        let a1 = random_matrix(g, &e, &d);
+        let a2 = random_matrix(g, &e, &d);
+        let c1 = CascadeSystem::build(
+            &a1,
+            &e,
+            SimExecutor::new(d.clone(), 50_000.0),
+            opts.clone(),
+            spec.clone(),
+        )
+        .unwrap();
+        let c2 =
+            CascadeSystem::build(&a2, &e, SimExecutor::new(d.clone(), 50_000.0), opts, spec)
+                .unwrap();
+
+        let nb = g.usize_in(1, 5);
+        let x = random_input(g, &e, nb);
+        let y1 = c1.predict(x.clone(), nb).unwrap();
+        let y2 = c2.predict(x, nb).unwrap();
+        for (i, (a, b)) in y1.iter().zip(&y2).enumerate() {
+            assert_eq!(a.to_bits(), b.to_bits(), "element {i} diverged across placements");
+        }
+        for (t, (s1, s2)) in c1.tier_stats().iter().zip(c2.tier_stats()).enumerate() {
+            for (what, v1, v2) in [
+                ("rows_in", &s1.rows_in, &s2.rows_in),
+                ("replied", &s1.replied, &s2.replied),
+                ("escalated", &s1.escalated, &s2.escalated),
+            ] {
+                assert_eq!(
+                    v1.load(Ordering::Relaxed),
+                    v2.load(Ordering::Relaxed),
+                    "tier {t} {what} diverged across placements"
+                );
+            }
+        }
+    });
+}
+
+/// NaN poisoning: any NaN anywhere in any seen member's distribution
+/// makes the row's confidence NaN, and a NaN confidence never passes
+/// the gate at any threshold — a broken member escalates instead of
+/// replying garbage.
+#[test]
+fn nan_confidence_always_escalates() {
+    check("cascade NaN escalation", 60, |g| {
+        let members = g.usize_in(1, 5);
+        let classes = g.usize_in(1, 8);
+        let mut rows: Vec<Vec<f32>> = (0..members)
+            .map(|_| (0..classes).map(|_| g.f64_unit() as f32).collect())
+            .collect();
+        let policy = POLICIES[g.usize_in(0, POLICIES.len() - 1)];
+
+        // finite inputs: some real confidence in [0, 1]
+        let refs: Vec<&[f32]> = rows.iter().map(Vec::as_slice).collect();
+        let clean = confidence(policy, &refs);
+        assert!(
+            (0.0..=1.0).contains(&clean),
+            "{policy:?}: finite inputs gave confidence {clean}"
+        );
+
+        // poison one element anywhere: confidence must go NaN
+        rows[g.usize_in(0, members - 1)][g.usize_in(0, classes - 1)] = f32::NAN;
+        let refs: Vec<&[f32]> = rows.iter().map(Vec::as_slice).collect();
+        let poisoned = confidence(policy, &refs);
+        assert!(poisoned.is_nan(), "{policy:?}: NaN input gave confidence {poisoned}");
+
+        // and a NaN confidence fails the gate everywhere — including
+        // the degenerate thresholds
+        for threshold in [0.0, f64::MIN_POSITIVE, g.f64_unit(), 1.0] {
+            assert!(
+                !gate_replies(threshold, poisoned),
+                "NaN confidence replied at threshold {threshold}"
+            );
+        }
+        // threshold 0 is the always-escalate sentinel even for real
+        // confidences
+        assert!(!gate_replies(0.0, clean));
+        // the gate is monotone: replying at t implies replying at any
+        // live t' <= t
+        let t = 0.1 + g.f64_unit() * 0.9;
+        if gate_replies(t, clean) {
+            assert!(gate_replies(t / 2.0, clean), "gate not monotone in threshold");
+        }
+    });
+}

@@ -39,9 +39,14 @@ GATED = [
 
 # reported for trend visibility, never gated (p99 is too noisy on shared
 # CI runners; arena counters are workload-shape, not speed; the zipf hit
-# rate is a workload property, not a latency)
+# rate is a workload property, not a latency; the cascade numbers compare
+# serving modes within one run, so they are advisory until a measured
+# baseline pins them)
 REPORTED = ["e2e_1024_s", "small_req_p99_ms", "arena_allocs", "arena_reuses",
-            "cache_hit_p99_ms", "cache_zipf_hit_rate"]
+            "cache_hit_p99_ms", "cache_zipf_hit_rate",
+            "cascade_full_p50_ms", "cascade_gate_p50_ms",
+            "cascade_escalate_p50_ms", "cascade_full_img_s",
+            "cascade_gate_img_s"]
 
 
 def load(path):
